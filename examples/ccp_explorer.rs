@@ -1,0 +1,86 @@
+//! CCP explorer: how the cache configuration parameters of §4.3 react to
+//! the architecture, and what they cost on real DL workload shapes.
+//!
+//! ```bash
+//! cargo run --release --example ccp_explorer
+//! ```
+
+use versal_gemm::arch::{vc1902, MemLevel};
+use versal_gemm::dl::{model_trace, ModelKind};
+use versal_gemm::gemm::{Ccp, GemmConfig, ParallelGemm};
+use versal_gemm::util::tabulate::{Align, Table};
+
+fn main() {
+    let arch = vc1902();
+
+    // 1. The paper's derivation, and how it moves with local memory size.
+    println!("§4.3 CCP derivation vs AIE local-memory capacity:\n");
+    let mut t = Table::new(&["local memory", "kc", "mc", "nc", "Br bytes", "feasible"]);
+    for local_kb in [8u64, 16, 32, 64, 128] {
+        let mut a = arch.clone();
+        for m in a.mem.iter_mut() {
+            if m.level == MemLevel::LocalMemory {
+                m.capacity_bytes = local_kb * 1024;
+            }
+        }
+        if local_kb * 1024 <= 2560 {
+            continue;
+        }
+        let ccp = Ccp::derive_aligned(&a, 1);
+        let feasible = ccp.check(&a, 1).is_ok();
+        t.row(&[
+            format!("{local_kb} KB"),
+            ccp.kc.to_string(),
+            ccp.mc.to_string(),
+            ccp.nc.to_string(),
+            (ccp.kc * 8).to_string(),
+            feasible.to_string(),
+        ]);
+    }
+    println!("{}", t.to_text());
+    println!("(VC1902 row: 32 KB — paper quotes kc ≤ 3750, mc ≈ 4500, nc ≈ 1200)\n");
+
+    // 2. Sweep kc on the paper problem: the compute-to-communication
+    //    ratio argument of §4.5 made concrete.
+    println!("kc sweep on (m, n, k) = (256, 256, 2048), 8 tiles:\n");
+    let engine = ParallelGemm::new(&arch);
+    let mut t = Table::new(&["kc", "MACs/byte", "block cycles", "MACs/cycle"]);
+    for kc in [256usize, 512, 1024, 2048] {
+        let ccp = Ccp { mc: 256, nc: 256, kc };
+        let mut cfg = GemmConfig::paper_table2(8);
+        cfg.ccp = ccp;
+        // One (mc, nc, kc) block schedule; k/kc blocks make the problem.
+        let blocks = 2048 / kc;
+        let sched =
+            engine.block_schedule(&cfg, 256 / 8, 256 / 8, kc, (kc * 8) as u64);
+        let total = sched.total * blocks as u64;
+        let macs = 256u64 * 256 * 2048;
+        t.row(&[
+            kc.to_string(),
+            format!("{:.2}", ccp.compute_to_comm_ratio()),
+            total.to_string(),
+            format!("{:.1}", macs as f64 / total as f64),
+        ]);
+    }
+    println!("{}", t.to_text());
+    println!("(larger kc ⇒ better Cr amortisation — §4.2/§4.5's argument)\n");
+
+    // 3. Real model GEMM shapes: which ones fit a single block?
+    println!("DL workload shapes vs the derived CCPs:\n");
+    let ccp = Ccp::derive_aligned(&arch, 1);
+    let mut t = Table::new(&["layer", "m", "k", "n", "fits one block", "MMACs"])
+        .align(0, Align::Left);
+    for kind in [ModelKind::Vgg16, ModelKind::BertBase { seq: 128 }] {
+        for s in model_trace(kind).into_iter().take(4) {
+            t.row(&[
+                s.label.clone(),
+                s.m.to_string(),
+                s.k.to_string(),
+                s.n.to_string(),
+                (s.m <= ccp.mc && s.k <= ccp.kc && s.n <= ccp.nc).to_string(),
+                format!("{:.1}", s.macs() as f64 / 1e6),
+            ]);
+        }
+    }
+    println!("{}", t.to_text());
+}

@@ -1,0 +1,75 @@
+//! Mixed-precision inference: quantisation error analysis across the
+//! GEMM engine — the paper's "adaptive-precision inference" motivation
+//! made measurable.
+//!
+//! ```bash
+//! cargo run --release --example mixed_precision
+//! ```
+
+use versal_gemm::arch::vc1902;
+use versal_gemm::dl::linear::{Activation, QuantLinear};
+use versal_gemm::gemm::{GemmConfig, ParallelGemm};
+use versal_gemm::quant::QTensor;
+use versal_gemm::util::tabulate::{Align, Table};
+use versal_gemm::util::Pcg32;
+
+fn main() -> anyhow::Result<()> {
+    let arch = vc1902();
+    let engine = ParallelGemm::new(&arch);
+    let mut cfg = GemmConfig::paper_table2(4);
+    cfg.ccp = versal_gemm::gemm::Ccp { mc: 128, nc: 128, kc: 256 };
+
+    // 1. Quantisation error of a single tensor across value ranges.
+    println!("per-tensor quantisation error (u8, range-fit):\n");
+    let mut t = Table::new(&["range", "scale", "max |err|", "err/scale"]);
+    let mut rng = Pcg32::new(0xF1);
+    for half_range in [0.5f32, 1.0, 4.0, 16.0] {
+        let x: Vec<f32> =
+            (0..4096).map(|_| (rng.f64() as f32 * 2.0 - 1.0) * half_range).collect();
+        let q = QTensor::from_f32(64, 64, &x);
+        let err = q.max_error(&x);
+        t.row(&[
+            format!("±{half_range}"),
+            format!("{:.5}", q.params.scale),
+            format!("{err:.5}"),
+            format!("{:.2}", err / q.params.scale),
+        ]);
+    }
+    println!("{}", t.to_text());
+    println!("(error ≤ scale/2 — the affine-quantisation guarantee)\n");
+
+    // 2. End-to-end layer error: quantised GEMM on the simulated Versal
+    //    vs the f32 reference, across layer widths.
+    println!("quantised linear layer vs f32 reference (batch 16):\n");
+    let mut t = Table::new(&["layer", "k", "max |err|", "rel err", "sim cycles"])
+        .align(0, Align::Left);
+    for (name, k, n) in [("narrow", 64usize, 32usize), ("mid", 256, 128), ("wide", 1024, 256)] {
+        let layer = QuantLinear::random(k, n, Activation::None, &mut rng);
+        let x: Vec<f32> = (0..16 * k).map(|_| rng.f64() as f32 * 2.0 - 1.0).collect();
+        let mut sim_cycles = 0u64;
+        let got = layer.forward(16, &x, |a, b, c| {
+            let (cy, _) = engine.run(&cfg, a, b, c).expect("gemm");
+            sim_cycles += cy.total;
+        });
+        let want = layer.forward_f32(16, &x);
+        let scale: f32 =
+            want.iter().fold(0.0f32, |m, &v| m.max(v.abs())).max(1e-6);
+        let err = got
+            .iter()
+            .zip(&want)
+            .fold(0.0f32, |m, (g, w)| m.max((g - w).abs()));
+        t.row(&[
+            name.to_string(),
+            k.to_string(),
+            format!("{err:.4}"),
+            format!("{:.3}%", err / scale * 100.0),
+            sim_cycles.to_string(),
+        ]);
+    }
+    println!("{}", t.to_text());
+    println!(
+        "(absolute error grows ~√k with random data; relative error stays \
+         small — why u8 inference works, §1/§4.2)"
+    );
+    Ok(())
+}

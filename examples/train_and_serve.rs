@@ -1,0 +1,97 @@
+//! Train → quantise → serve: the full deployment story on a real (small)
+//! learned task, with accuracy accounted at every step.
+//!
+//! ```bash
+//! cargo run --release --example train_and_serve
+//! ```
+//!
+//! 1. Generate a synthetic 4-class gaussian-blob dataset (train + test).
+//! 2. Train a float MLP with SGD on the host; log the loss curve.
+//! 3. Quantise the trained weights to u8 (the paper's inference dtype).
+//! 4. Serve the *test set* through the coordinator, every MAC running on
+//!    the simulated Versal parallel GEMM engine.
+//! 5. Report float vs quantised-served accuracy, latency, throughput and
+//!    simulated AIE cycles.
+
+use std::time::{Duration, Instant};
+use versal_gemm::arch::vc1902;
+use versal_gemm::coordinator::{
+    BatcherConfig, Coordinator, CoordinatorConfig, RustGemmBackend,
+};
+use versal_gemm::dl::train::{Dataset, FloatMlp};
+use versal_gemm::dl::MlpSpec;
+
+fn main() {
+    let dim = 32;
+    let classes = 4;
+    let spec = MlpSpec { dims: vec![dim, 48, classes] };
+
+    // 1. Data.
+    let train = Dataset::gaussian_blobs_split(800, dim, classes, 0.55, 42, 1);
+    let test = Dataset::gaussian_blobs_split(400, dim, classes, 0.55, 42, 2);
+    println!("dataset: {} train / {} test, {dim}-d, {classes} classes", train.n, test.n);
+
+    // 2. Train.
+    let mut model = FloatMlp::random(spec.clone(), 7);
+    let t0 = Instant::now();
+    let curve = model.train(&train, 15, 0.05, 1);
+    println!("trained {} params in {:.2?}; loss curve:", spec.n_params(), t0.elapsed());
+    for (e, l) in curve.iter().enumerate() {
+        if e % 3 == 0 || e + 1 == curve.len() {
+            println!("  epoch {:2}: loss {:.4}", e + 1, l);
+        }
+    }
+    let float_acc = model.accuracy(&test);
+    println!("float test accuracy: {:.1}%", float_acc * 100.0);
+
+    // 3. Quantise.
+    let qmodel = model.quantize();
+
+    // 4. Serve the test set through the coordinator.
+    let arch = vc1902();
+    let qm = qmodel.clone();
+    let coordinator = Coordinator::start(
+        CoordinatorConfig {
+            batcher: BatcherConfig {
+                max_batch: 16,
+                max_wait: Duration::from_millis(1),
+                queue_cap: 4096,
+            },
+            n_workers: 2,
+            in_dim: dim,
+        },
+        move |_| Box::new(RustGemmBackend::with_mlp(vc1902(), qm.clone(), 8)),
+    );
+    let _ = &arch;
+
+    let t1 = Instant::now();
+    let rxs: Vec<_> = (0..test.n)
+        .map(|i| coordinator.submit(test.sample(i).0.to_vec()).expect("submit"))
+        .collect();
+    coordinator.flush();
+    let mut ok = 0usize;
+    let mut sim_cycles = 0u64;
+    let mut latencies: Vec<f64> = Vec::new();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let resp = rx.recv().expect("response");
+        if resp.predicted_class == test.sample(i).1 {
+            ok += 1;
+        }
+        sim_cycles += resp.simulated_cycles;
+        latencies.push(resp.latency.as_secs_f64() * 1e6);
+    }
+    let wall = t1.elapsed();
+    let metrics = coordinator.shutdown();
+
+    // 5. Report.
+    let served_acc = ok as f64 / test.n as f64;
+    let s = versal_gemm::util::Summary::of(&latencies);
+    println!("\nserved {} test samples in {wall:.2?} ({:.0} req/s)", test.n, test.n as f64 / wall.as_secs_f64());
+    println!("quantised-served accuracy: {:.1}%  (float: {:.1}%, Δ {:+.1} pts)",
+        served_acc * 100.0, float_acc * 100.0, (served_acc - float_acc) * 100.0);
+    println!("latency µs: p50 {:.0}  p95 {:.0}  p99 {:.0}", s.median, s.p95, s.p99);
+    println!("mean batch {:.2}; simulated Versal cycles total {sim_cycles}", metrics.mean_batch_size());
+    assert!(served_acc > 0.9, "served accuracy should stay high");
+    assert!(served_acc >= float_acc - 0.05, "quantisation must not crater accuracy");
+    println!("\nOK: quantised deployment preserves the learned model.");
+}

@@ -1,0 +1,124 @@
+"""L2 profiling: static analysis of the lowered HLO artifacts.
+
+The perf methodology for the build-time layers (see EXPERIMENTS.md §Perf)
+is structural: interpret-mode wallclock is not a TPU proxy, so we count
+what the compiler will actually execute — dot ops and their shapes (MXU
+work), while-loops (grid cells), fusions, and the parameter/constant
+footprint (VMEM pressure). `python -m compile.analysis artifacts/*.hlo.txt`
+prints the report; `make artifacts` invokes it after lowering.
+"""
+
+import re
+import sys
+
+
+DEF_RE = re.compile(r"^%?([\w.\-]+)\s*=\s*([a-z][a-z0-9]*)\[([0-9,]*)\]")
+DTYPE_BYTES = {
+    "u8": 1, "s8": 1, "pred": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "f32": 4, "s32": 4, "u32": 4, "f64": 8, "s64": 8, "u64": 8,
+}
+
+
+def parse_shapes(line):
+    """All tensor shapes mentioned on an HLO line: [(dtype, dims), ...]."""
+    out = []
+    for dtype, dims in re.findall(r"([a-z][a-z0-9]*)\[([0-9,]*)\]", line):
+        if dims:
+            out.append((dtype, tuple(int(d) for d in dims.split(","))))
+        else:
+            out.append((dtype, ()))
+    return out
+
+
+def dot_flops(line, symbols=None):
+    """Estimate multiply-adds of a `dot` HLO op: macs = M*N*K.
+
+    M, N come from the result shape on the line; K comes from the lhs
+    operand, whose shape lives on its *definition* line — resolved via
+    the `symbols` table (name → dims) when given, falling back to shapes
+    inline on the line (test convenience).
+    """
+    shapes = parse_shapes(line)
+    if not shapes or len(shapes[0][1]) < 2:
+        return 0
+    result = shapes[0][1]
+    m, n = result[-2], result[-1]
+    k = 0
+    args = re.search(r"\bdot\(([^)]*)\)", line)
+    if symbols and args:
+        lhs_name = args.group(1).split(",")[0].strip().lstrip("%")
+        lhs_name = lhs_name.split(" ")[-1].lstrip("%")
+        dims = symbols.get(lhs_name)
+        if dims and len(dims) >= 1:
+            k = dims[-1]
+    if k == 0 and len(shapes) >= 2 and len(shapes[1][1]) >= 1:
+        k = shapes[1][1][-1]
+    return m * n * k
+
+
+def analyze(text):
+    """Analyse HLO text; returns a dict of structural metrics."""
+    stats = {
+        "dot_ops": 0,
+        "dot_macs": 0,
+        "while_loops": 0,
+        "fusions": 0,
+        "constants_bytes": 0,
+        "parameters": 0,
+        "computations": 0,
+    }
+    # Pass 1: symbol table name -> dims (across all computations; HLO
+    # names are unique module-wide).
+    symbols = {}
+    for line in text.splitlines():
+        m = DEF_RE.match(line.strip())
+        if m and m.group(3):
+            symbols[m.group(1)] = tuple(int(d) for d in m.group(3).split(","))
+    # Pass 2: counts.
+    for line in text.splitlines():
+        s = line.strip()
+        if re.search(r"\bdot\(", s) and "= " in s and "custom-call" not in s:
+            stats["dot_ops"] += 1
+            stats["dot_macs"] += dot_flops(s, symbols)
+        if re.search(r"\bwhile\(", s):
+            stats["while_loops"] += 1
+        if re.search(r"\bfusion\(", s):
+            stats["fusions"] += 1
+        if s.startswith("%") and "(" in s and s.endswith("{"):
+            stats["computations"] += 1
+        m = re.search(r"=\s*([a-z][a-z0-9]*)\[([0-9,]+)\]\S*\s+constant\(", s)
+        if m:
+            dtype, dims = m.group(1), m.group(2)
+            elems = 1
+            for d in dims.split(","):
+                elems *= int(d)
+            stats["constants_bytes"] += elems * DTYPE_BYTES.get(dtype, 4)
+        if re.search(r"\bparameter\(\d+\)", s):
+            stats["parameters"] += 1
+    return stats
+
+
+def report(path):
+    text = open(path).read()
+    s = analyze(text)
+    print(f"{path}:")
+    print(f"  dot ops        : {s['dot_ops']}  (~{s['dot_macs'] / 1e6:.1f} MMACs)")
+    print(f"  while loops    : {s['while_loops']}  (grid cells / scans)")
+    print(f"  fusions        : {s['fusions']}")
+    print(f"  parameters     : {s['parameters']}")
+    print(f"  baked constants: {s['constants_bytes'] / 1024:.1f} KiB")
+    return s
+
+
+def main(argv=None):
+    argv = list(sys.argv[1:] if argv is None else argv)
+    if not argv:
+        print("usage: python -m compile.analysis artifacts/*.hlo.txt", file=sys.stderr)
+        return 1
+    for path in argv:
+        report(path)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,92 @@
+"""AOT driver: lower the L2/L1 computations to HLO text artifacts.
+
+Run once at build time (`make artifacts`); the Rust runtime loads the
+outputs. Interchange is HLO *text*, not `.serialize()`: jax >= 0.5 emits
+HloModuleProtos with 64-bit instruction ids that the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifact ids and signatures mirror rust/src/runtime/artifact.rs exactly;
+`python/tests/test_aot.py` and `rust/tests/pjrt_integration.rs` pin the
+contract from both sides.
+"""
+
+import argparse
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered):
+    """jax lowered -> XlaComputation -> HLO text (return_tuple=True, so the
+    Rust side unwraps with to_tuple1)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+# Artifact registry: stem -> (function, example argument specs).
+# Wrap in tuple-returning lambdas so every artifact is a 1-tuple.
+ARTIFACTS = {
+    "gemm_u8_64": (
+        lambda a, b: (model.gemm_u8_64(a, b),),
+        (_spec((64, 64), jnp.uint8), _spec((64, 64), jnp.uint8)),
+    ),
+    "gemm_u8_paper": (
+        lambda a, b: (model.gemm_u8_paper(a, b),),
+        (_spec((256, 2048), jnp.uint8), _spec((2048, 256), jnp.uint8)),
+    ),
+    "mlp_u8_b8": (
+        lambda x: (model.mlp_forward(x),),
+        (_spec((model.MLP_BATCH, model.MLP_DIMS[0]), jnp.float32),),
+    ),
+}
+
+
+def build(outdir, only=None):
+    os.makedirs(outdir, exist_ok=True)
+    written = []
+    for stem, (fn, specs) in ARTIFACTS.items():
+        if only and stem not in only:
+            continue
+        path = os.path.join(outdir, f"{stem}.hlo.txt")
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+        written.append(path)
+    return written
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--outdir", default=None, help="artifacts directory")
+    p.add_argument("--out", default=None, help="(legacy) single-file output: ignored stem, writes all next to it")
+    p.add_argument("--only", nargs="*", default=None, help="subset of artifact stems")
+    args = p.parse_args(argv)
+    outdir = args.outdir
+    if outdir is None and args.out is not None:
+        outdir = os.path.dirname(os.path.abspath(args.out)) or "."
+    if outdir is None:
+        outdir = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    written = build(outdir, only=args.only)
+    if not written:
+        print("nothing to build", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,13 @@
+"""L1 Pallas kernels: the paper's 8x8 UINT8 micro-kernel and the blocked
+GEMM schedule, plus the pure-jnp correctness oracle (ref.py).
+
+All kernels run with interpret=True: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, and interpret-mode lowering produces plain HLO that
+the Rust runtime loads. See DESIGN.md section "Hardware adaptation".
+"""
+
+from .gemm_blocked import blocked_gemm_u8
+from .microkernel import MR, NR, microkernel_gemm_u8
+from . import ref
+
+__all__ = ["microkernel_gemm_u8", "blocked_gemm_u8", "ref", "MR", "NR"]

@@ -1,0 +1,61 @@
+"""Blocked GEMM as a Pallas kernel — the five-loop GotoBLAS2 schedule
+(paper Figure 1) expressed as a pallas_call grid.
+
+Hardware adaptation: loops L1/L3/L2 (the jc/ic/pc blocking that stages Bc
+in Block RAM and Ac in Ultra RAM) become the three grid dimensions with
+(mc, kc)/(kc, nc) BlockSpecs — the BlockSpec index_map *is* the packing
+schedule, with VMEM playing the role of the FPGA RAMs. The reduction
+dimension accumulates in-place across grid steps (revisiting the output
+block), which is how Pallas expresses the paper's running Cc update.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _blocked_kernel(a_ref, b_ref, o_ref):
+    # First visit of this (i, j) output block: clear the accumulator
+    # (the paper's Cr load is an accumulate-into-DDR; in-VMEM we zero on
+    # the first k-step instead and add the result once at the end).
+    @pl.when(pl.program_id(2) == 0)
+    def _():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...].astype(jnp.int32),
+        b_ref[...].astype(jnp.int32),
+        preferred_element_type=jnp.int32,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("mc", "nc", "kc"))
+def blocked_gemm_u8(a, b, *, mc=128, nc=128, kc=512):
+    """u8[m,k] @ u8[k,n] -> i32[m,n] with the (mc, nc, kc) blocking.
+
+    m % mc == 0, n % nc == 0, k % kc == 0 (paper section 2 assumption).
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"inner dims {k} != {k2}"
+    assert m % mc == 0 and n % nc == 0 and k % kc == 0, (
+        f"(m, n, k) = ({m}, {n}, {k}) not multiples of ({mc}, {nc}, {kc})"
+    )
+    assert a.dtype == jnp.uint8 and b.dtype == jnp.uint8
+
+    return pl.pallas_call(
+        _blocked_kernel,
+        # Grid order (i, j, p): p innermost = the paper's L2 ordering that
+        # keeps Bc resident while the ic loop sweeps — here it keeps the
+        # (i, j) output block resident across the reduction.
+        grid=(m // mc, n // nc, k // kc),
+        in_specs=[
+            pl.BlockSpec((mc, kc), lambda i, j, p: (i, p)),  # Ac in "URAM"
+            pl.BlockSpec((kc, nc), lambda i, j, p: (p, j)),  # Bc in "BRAM"
+        ],
+        out_specs=pl.BlockSpec((mc, nc), lambda i, j, p: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        interpret=True,
+    )(a, b)

@@ -1,0 +1,79 @@
+"""The 8x8 UINT8 micro-kernel as a Pallas kernel (paper section 4.2).
+
+Hardware adaptation (DESIGN.md section 2): the AIE tile's explicit staging
+becomes Pallas BlockSpecs —
+
+  AIE concept (paper)                    Pallas realisation here
+  -------------------------------------  --------------------------------
+  micro-tile Cr in accumulator regs      the (MR, NR) output block
+  micro-panel Ar streamed from Ultra RAM the (MR, K) A BlockSpec
+  micro-panel Br in tile local memory    the (K, NR) B BlockSpec
+  loop L6 over kc, unroll 16, mac16()    fori_loop over K in UNROLL-steps,
+                                         each a rank-UNROLL update in i32
+
+The grid is (m/MR, n/NR) — one grid cell per micro-tile, exactly the
+iteration space the paper's loops L4/L5 enumerate. interpret=True keeps
+the lowering executable on the CPU PJRT client.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Micro-tile dimensions: fixed by the AIE accumulator file in the paper.
+MR = 8
+NR = 8
+# Loop L6 unroll factor (Figure 4: i += 16).
+UNROLL = 16
+
+
+def _microkernel(a_ref, b_ref, o_ref, *, k_steps):
+    """One micro-tile: Cr = sum over p of Ar[:, p] x Br[p, :] in i32."""
+
+    def body(step, acc):
+        p0 = step * UNROLL
+        # A 16-deep slab of the micro-panels — the paper's unrolled body
+        # (two v64 reads of Ar, four v32 reads of Br, eight mac16 calls).
+        a_slab = jax.lax.dynamic_slice(a_ref[...], (0, p0), (MR, UNROLL))
+        b_slab = jax.lax.dynamic_slice(b_ref[...], (p0, 0), (UNROLL, NR))
+        return acc + jnp.dot(
+            a_slab.astype(jnp.int32),
+            b_slab.astype(jnp.int32),
+            preferred_element_type=jnp.int32,
+        )
+
+    acc = jnp.zeros((MR, NR), jnp.int32)
+    o_ref[...] = jax.lax.fori_loop(0, k_steps, body, acc)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def microkernel_gemm_u8(a, b):
+    """u8[m,k] @ u8[k,n] -> i32[m,n] via the 8x8 micro-kernel grid.
+
+    m, n must be multiples of (MR, NR) and k a multiple of UNROLL —
+    the alignment the paper assumes (section 2: "for simplicity, we shall
+    assume that m, n, k are integer multiples of mc, nc, kc").
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"inner dims {k} != {k2}"
+    assert m % MR == 0 and n % NR == 0, f"(m, n) = ({m}, {n}) not multiples of 8"
+    assert k % UNROLL == 0, f"k = {k} not a multiple of {UNROLL}"
+    assert a.dtype == jnp.uint8 and b.dtype == jnp.uint8
+
+    kernel = functools.partial(_microkernel, k_steps=k // UNROLL)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // MR, n // NR),
+        in_specs=[
+            # Ar: row-panel i of A, full depth (streams from "Ultra RAM").
+            pl.BlockSpec((MR, k), lambda i, j: (i, 0)),
+            # Br: column-panel j of B, full depth (lives in "local memory").
+            pl.BlockSpec((k, NR), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((MR, NR), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        interpret=True,
+    )(a, b)

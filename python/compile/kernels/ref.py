@@ -1,0 +1,63 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+These are the ground truth every kernel (and, transitively, the Rust GEMM
+engine through the PJRT integration tests) is validated against.
+"""
+
+import jax.numpy as jnp
+
+
+def gemm_u8_ref(a, b):
+    """Exact u8 x u8 -> i32 GEMM: the semantics of the paper's micro-kernel
+    (mac16 accumulates into 48-bit lanes; i32 is exact for kc <= 2^16)."""
+    assert a.dtype == jnp.uint8 and b.dtype == jnp.uint8, (a.dtype, b.dtype)
+    return jnp.dot(
+        a.astype(jnp.int32), b.astype(jnp.int32), preferred_element_type=jnp.int32
+    )
+
+
+def quantize_ref(x, scale, zero_point):
+    """Affine quantisation q = clip(round(x/scale) + zp, 0, 255) as u8."""
+    q = jnp.round(x / scale) + zero_point
+    return jnp.clip(q, 0, 255).astype(jnp.uint8)
+
+
+def quantized_matmul_ref(x, wq, w_scale, w_zp, x_scale, x_zp):
+    """Real-valued product reconstructed from quantised operands:
+
+    y = sx*sw * (QX - zx)(QW - zw), expanded into the integer GEMM plus
+    zero-point corrections (the form the Rust quant module and the L2
+    model both implement).
+    """
+    xq = quantize_ref(x, x_scale, x_zp)
+    k = x.shape[-1]
+    qc = gemm_u8_ref(xq, wq)
+    row_sums = jnp.sum(xq.astype(jnp.int32), axis=1, keepdims=True)  # m x 1
+    col_sums = jnp.sum(wq.astype(jnp.int32), axis=0, keepdims=True)  # 1 x n
+    corr = -x_zp * col_sums - w_zp * row_sums + k * x_zp * w_zp
+    return x_scale * w_scale * (qc + corr).astype(jnp.float32)
+
+
+def dynamic_qparams(x):
+    """Range-fit quantisation parameters over a tensor (zero included so
+    zero_point lands in [0, 255] — mirrors rust quant::QParams::fit)."""
+    lo = jnp.minimum(jnp.min(x), 0.0)
+    hi = jnp.maximum(jnp.max(x), 0.0)
+    scale = jnp.where(hi > lo, (hi - lo) / 255.0, 1.0)
+    zp = jnp.clip(jnp.round(-lo / scale), 0, 255)
+    return scale, zp
+
+
+def mlp_ref(x, layers):
+    """Reference quantised-MLP forward.
+
+    layers: list of (wq, w_scale, w_zp, bias, relu) tuples; activations are
+    dynamically quantised per batch with a range fit over the tensor.
+    """
+    h = x
+    for wq, w_scale, w_zp, bias, relu in layers:
+        scale, zp = dynamic_qparams(h)
+        h = quantized_matmul_ref(h, wq, w_scale, w_zp, scale, zp) + bias
+        if relu:
+            h = jnp.maximum(h, 0.0)
+    return h

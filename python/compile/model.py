@@ -1,0 +1,126 @@
+"""L2: the quantised-MLP compute graph, built on the L1 Pallas kernels.
+
+This is the build-time model definition. `aot.py` lowers the functions
+here to HLO text once; the Rust coordinator executes the artifacts at
+request time. Weights are generated deterministically (numpy, fixed seed)
+and baked into the graph as u8 constants together with their quantisation
+parameters, so the artifact is self-contained.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .kernels import blocked_gemm_u8, microkernel_gemm_u8
+from .kernels.ref import dynamic_qparams
+
+# The classifier served by the end-to-end example: 784 -> 512 -> 512 -> 10.
+MLP_DIMS = (784, 512, 512, 10)
+MLP_SEED = 2024
+MLP_BATCH = 8
+
+
+def quantize_weights(w):
+    """Affine-quantise an f32 weight matrix to u8 (range-fit, zero exact).
+
+    Returns (wq, scale, zero_point) with python-float params.
+    """
+    lo = min(float(w.min()), 0.0)
+    hi = max(float(w.max()), 0.0)
+    scale = (hi - lo) / 255.0 if hi > lo else 1.0
+    zp = int(np.clip(round(-lo / scale), 0, 255))
+    wq = np.clip(np.round(w / scale) + zp, 0, 255).astype(np.uint8)
+    return wq, scale, zp
+
+
+def make_mlp_params(dims=MLP_DIMS, seed=MLP_SEED):
+    """Deterministic He-init weights, quantised per layer."""
+    rng = np.random.RandomState(seed)
+    layers = []
+    for i, (din, dout) in enumerate(zip(dims[:-1], dims[1:])):
+        w = (rng.rand(din, dout).astype(np.float32) * 2 - 1) * np.sqrt(2.0 / din)
+        b = (rng.rand(dout).astype(np.float32) * 2 - 1) * 0.01
+        wq, scale, zp = quantize_weights(w)
+        relu = i + 1 < len(dims) - 1
+        layers.append(dict(wq=wq, scale=scale, zp=zp, bias=b, relu=relu))
+    return layers
+
+
+def _pad_to(x, multiple, axis):
+    """Zero-pad an axis up to the next multiple (for kernel alignment)."""
+    size = x.shape[axis]
+    target = -(-size // multiple) * multiple
+    if target == size:
+        return x, size
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, target - size)
+    return jnp.pad(x, pad), size
+
+
+def quantized_matmul(x, wq, w_scale, w_zp, use_microkernel=False):
+    """f32[m,k] x u8-quantised-weight[k,n] -> f32[m,n].
+
+    Dynamically quantises x, runs the integer GEMM through a Pallas
+    kernel, and applies the zero-point corrections. Padding lanes of the
+    quantised operands are zero, so qc and the correction sums are
+    unaffected and the result is cropped back.
+
+    By default the GEMM runs through the *blocked* schedule (the paper's
+    full five-loop algorithm) with serving-friendly block sizes — the
+    micro-kernel-grain grid (`use_microkernel=True`) is semantically
+    identical but lowers to one interpret-mode grid cell per 8x8 tile,
+    which is needlessly slow for the MLP artifact's shapes.
+    """
+    m, k = x.shape
+    k2, n = wq.shape
+    assert k == k2
+    scale, zp = dynamic_qparams(x)
+    xq = jnp.clip(jnp.round(x / scale) + zp, 0, 255).astype(jnp.uint8)
+
+    if use_microkernel:
+        xq_p, _ = _pad_to(xq, 8, 0)
+        xq_p, _ = _pad_to(xq_p, 16, 1)
+        wq_p, _ = _pad_to(jnp.asarray(wq), 16, 0)
+        wq_p, _ = _pad_to(wq_p, 8, 1)
+        qc = microkernel_gemm_u8(xq_p, wq_p)[:m, :n]
+    else:
+        # Blocked schedule: pad to (mc, kc, nc) multiples sized for small
+        # serving batches (mc = padded m), kc = 256, nc = 128.
+        kc, nc = 256, 128
+        xq_p, _ = _pad_to(xq, 8, 0)
+        xq_p, _ = _pad_to(xq_p, kc, 1)
+        wq_p, _ = _pad_to(jnp.asarray(wq), kc, 0)
+        wq_p, _ = _pad_to(wq_p, nc, 1)
+        mc = xq_p.shape[0]
+        qc = blocked_gemm_u8(xq_p, wq_p, mc=mc, nc=nc, kc=kc)[:m, :n]
+    # Zero-point corrections over the TRUE depth k: padded k-lanes are zero
+    # in both operands, so they contribute nothing to qc nor to the sums —
+    # the correction identity holds with the unpadded sums and true k.
+    row_sums = jnp.sum(xq.astype(jnp.int32), axis=1, keepdims=True)
+    col_sums = jnp.sum(jnp.asarray(wq).astype(jnp.int32), axis=0, keepdims=True)
+    corr = -zp.astype(jnp.int32) * col_sums - w_zp * row_sums + k * zp.astype(jnp.int32) * w_zp
+    return scale * w_scale * (qc + corr).astype(jnp.float32)
+
+
+def mlp_forward(x, layers=None):
+    """Quantised MLP forward: f32[batch, 784] -> f32[batch, 10]."""
+    if layers is None:
+        layers = make_mlp_params()
+    h = x
+    for layer in layers:
+        y = quantized_matmul(h, layer["wq"], layer["scale"], layer["zp"])
+        h = y + layer["bias"]
+        if layer["relu"]:
+            h = jnp.maximum(h, 0.0)
+    return h
+
+
+def gemm_u8_64(a, b):
+    """Fixed-shape integration-test GEMM: u8[64,64] x u8[64,64] -> i32."""
+    return microkernel_gemm_u8(a, b)
+
+
+def gemm_u8_paper(a, b):
+    """The paper's Table 2 problem: u8[256,2048] x u8[2048,256] -> i32,
+    through the blocked (mc, nc, kc) schedule."""
+    return blocked_gemm_u8(a, b, mc=128, nc=128, kc=512)

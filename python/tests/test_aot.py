@@ -1,0 +1,77 @@
+"""AOT contract tests: artifact generation, HLO-text validity, and the
+stem registry agreement with rust/src/runtime/artifact.rs."""
+
+import os
+import re
+import tempfile
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, model
+
+# Must mirror ArtifactId::ALL stems in rust/src/runtime/artifact.rs.
+RUST_STEMS = {"gemm_u8_64", "gemm_u8_paper", "mlp_u8_b8"}
+
+
+def test_registry_matches_rust_side():
+    assert set(aot.ARTIFACTS.keys()) == RUST_STEMS
+
+
+def test_build_writes_parseable_hlo_text(tmp_path):
+    written = aot.build(str(tmp_path), only=["gemm_u8_64"])
+    assert len(written) == 1
+    text = open(written[0]).read()
+    assert "HloModule" in text
+    assert "ENTRY" in text
+    # Signature: two u8[64,64] params, i32[64,64] in the result tuple.
+    assert re.search(r"u8\[64,64\]", text), "u8 parameters present"
+    assert re.search(r"s32\[64,64\]", text), "i32 result present"
+
+
+def test_artifact_signatures_match_rust_contract():
+    # gemm_u8_64: (u8[64,64], u8[64,64]) -> (i32[64,64],)
+    _, specs = aot.ARTIFACTS["gemm_u8_64"]
+    assert [tuple(s.shape) for s in specs] == [(64, 64), (64, 64)]
+    # gemm_u8_paper: the paper's (m, n, k) = (256, 256, 2048).
+    _, specs = aot.ARTIFACTS["gemm_u8_paper"]
+    assert [tuple(s.shape) for s in specs] == [(256, 2048), (2048, 256)]
+    # mlp_u8_b8: f32[8, 784].
+    _, specs = aot.ARTIFACTS["mlp_u8_b8"]
+    assert [tuple(s.shape) for s in specs] == [(model.MLP_BATCH, 784)]
+    assert specs[0].dtype == jnp.float32
+
+
+def test_lowered_artifact_executes_like_eager():
+    """The jitted/lowered function and the eager function agree — i.e. the
+    artifact we ship computes what the tests above validated."""
+    fn, specs = aot.ARTIFACTS["gemm_u8_64"]
+    rng = np.random.RandomState(0)
+    a = rng.randint(0, 256, (64, 64), np.uint8)
+    b = rng.randint(0, 256, (64, 64), np.uint8)
+    eager = np.asarray(fn(jnp.asarray(a), jnp.asarray(b))[0])
+    jitted = np.asarray(jax.jit(fn)(jnp.asarray(a), jnp.asarray(b))[0])
+    np.testing.assert_array_equal(eager, jitted)
+    np.testing.assert_array_equal(eager, a.astype(np.int32) @ b.astype(np.int32))
+
+
+def test_build_all_into_fresh_dir():
+    with tempfile.TemporaryDirectory() as d:
+        written = aot.build(d)
+        assert len(written) == 3
+        for p in written:
+            assert os.path.getsize(p) > 1000, f"{p} suspiciously small"
+
+
+def test_main_legacy_out_flag(tmp_path):
+    out = tmp_path / "model.hlo.txt"
+    rc = aot.main(["--out", str(out), "--only", "gemm_u8_64"])
+    assert rc == 0
+    assert (tmp_path / "gemm_u8_64.hlo.txt").exists()
+
+
+def test_main_rejects_empty_selection(tmp_path):
+    rc = aot.main(["--outdir", str(tmp_path), "--only", "nonexistent"])
+    assert rc == 1

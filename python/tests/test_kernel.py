@@ -1,0 +1,106 @@
+"""L1 kernel correctness: Pallas micro-kernel & blocked GEMM vs the
+pure-jnp oracle, including hypothesis sweeps over shapes and contents."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import MR, NR, blocked_gemm_u8, microkernel_gemm_u8
+from compile.kernels.ref import gemm_u8_ref
+
+
+def rand_u8(rng, shape):
+    return rng.randint(0, 256, shape, dtype=np.uint8)
+
+
+@pytest.mark.parametrize(
+    "m,k,n",
+    [
+        (8, 16, 8),      # single micro-tile, minimal depth
+        (8, 2048, 8),    # the paper's kc
+        (16, 32, 24),
+        (64, 64, 64),    # the integration artifact shape
+        (40, 48, 32),
+    ],
+)
+def test_microkernel_matches_ref(m, k, n):
+    rng = np.random.RandomState(m * 1000 + k + n)
+    a, b = rand_u8(rng, (m, k)), rand_u8(rng, (k, n))
+    got = np.asarray(microkernel_gemm_u8(jnp.asarray(a), jnp.asarray(b)))
+    want = np.asarray(gemm_u8_ref(jnp.asarray(a), jnp.asarray(b)))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_microkernel_extreme_values_no_overflow():
+    # 255*255*2048 = 133M < 2^31: the i32 accumulator is exact at paper kc.
+    a = np.full((8, 2048), 255, np.uint8)
+    b = np.full((2048, 8), 255, np.uint8)
+    got = np.asarray(microkernel_gemm_u8(jnp.asarray(a), jnp.asarray(b)))
+    assert (got == 255 * 255 * 2048).all()
+
+
+def test_microkernel_rejects_misaligned_shapes():
+    a = jnp.zeros((7, 16), jnp.uint8)
+    b = jnp.zeros((16, 8), jnp.uint8)
+    with pytest.raises(AssertionError):
+        microkernel_gemm_u8(a, b)
+    with pytest.raises(AssertionError):
+        microkernel_gemm_u8(jnp.zeros((8, 17), jnp.uint8), jnp.zeros((17, 8), jnp.uint8))
+
+
+@pytest.mark.parametrize(
+    "m,k,n,mc,nc,kc",
+    [
+        (128, 512, 128, 128, 128, 512),   # single block
+        (256, 1024, 256, 128, 128, 256),  # multi-block in all dims
+        (256, 2048, 256, 128, 128, 512),  # the paper artifact blocking
+    ],
+)
+def test_blocked_gemm_matches_ref(m, k, n, mc, nc, kc):
+    rng = np.random.RandomState(k)
+    a, b = rand_u8(rng, (m, k)), rand_u8(rng, (k, n))
+    got = np.asarray(blocked_gemm_u8(jnp.asarray(a), jnp.asarray(b), mc=mc, nc=nc, kc=kc))
+    want = np.asarray(gemm_u8_ref(jnp.asarray(a), jnp.asarray(b)))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_blocked_vs_microkernel_same_result():
+    rng = np.random.RandomState(9)
+    a, b = rand_u8(rng, (64, 128)), rand_u8(rng, (128, 64))
+    g1 = np.asarray(blocked_gemm_u8(jnp.asarray(a), jnp.asarray(b), mc=32, nc=32, kc=64))
+    g2 = np.asarray(microkernel_gemm_u8(jnp.asarray(a), jnp.asarray(b)))
+    np.testing.assert_array_equal(g1, g2)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    mi=st.integers(1, 6),
+    ki=st.integers(1, 8),
+    ni=st.integers(1, 6),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_microkernel_shapes(mi, ki, ni, seed):
+    """Sweep aligned shapes (m = 8*mi, k = 16*ki, n = 8*ni)."""
+    m, k, n = MR * mi, 16 * ki, NR * ni
+    rng = np.random.RandomState(seed)
+    a, b = rand_u8(rng, (m, k)), rand_u8(rng, (k, n))
+    got = np.asarray(microkernel_gemm_u8(jnp.asarray(a), jnp.asarray(b)))
+    want = a.astype(np.int32) @ b.astype(np.int32)
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    blocks=st.tuples(st.integers(1, 2), st.integers(1, 2), st.integers(1, 3)),
+    ccp=st.sampled_from([(16, 16, 32), (32, 16, 16), (16, 32, 48)]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_blocked_gemm(blocks, ccp, seed):
+    (bm, bn, bk), (mc, nc, kc) = blocks, ccp
+    m, n, k = bm * mc, bn * nc, bk * kc
+    rng = np.random.RandomState(seed)
+    a, b = rand_u8(rng, (m, k)), rand_u8(rng, (k, n))
+    got = np.asarray(blocked_gemm_u8(jnp.asarray(a), jnp.asarray(b), mc=mc, nc=nc, kc=kc))
+    want = a.astype(np.int32) @ b.astype(np.int32)
+    np.testing.assert_array_equal(got, want)

@@ -1,0 +1,119 @@
+"""L2 model correctness: the quantised matmul and MLP forward vs the
+reference implementations and a float baseline."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels.ref import dynamic_qparams, mlp_ref, quantized_matmul_ref
+
+
+def test_quantize_weights_roundtrip():
+    rng = np.random.RandomState(1)
+    w = (rng.rand(64, 32).astype(np.float32) - 0.5) * 2
+    wq, scale, zp = model.quantize_weights(w)
+    assert wq.dtype == np.uint8
+    deq = scale * (wq.astype(np.int32) - zp)
+    assert np.abs(deq - w).max() <= scale * 0.5 + 1e-6
+
+
+def test_quantize_weights_zero_exact():
+    w = np.array([[-1.0, 0.0, 2.0]], np.float32)
+    wq, scale, zp = model.quantize_weights(w)
+    assert scale * (int(wq[0, 1]) - zp) == 0.0
+
+
+def test_quantized_matmul_matches_ref_path():
+    rng = np.random.RandomState(2)
+    x = (rng.rand(8, 48).astype(np.float32) - 0.5) * 4
+    w = (rng.rand(48, 24).astype(np.float32) - 0.5) * 2
+    wq, ws, wz = model.quantize_weights(w)
+    got = np.asarray(model.quantized_matmul(jnp.asarray(x), wq, ws, wz))
+    xs, xz = dynamic_qparams(jnp.asarray(x))
+    want = np.asarray(
+        quantized_matmul_ref(jnp.asarray(x), jnp.asarray(wq), ws, wz, xs, xz)
+    )
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+
+
+def test_quantized_matmul_close_to_float():
+    rng = np.random.RandomState(3)
+    x = (rng.rand(4, 64).astype(np.float32) - 0.5) * 2
+    w = (rng.rand(64, 16).astype(np.float32) - 0.5) * 2
+    wq, ws, wz = model.quantize_weights(w)
+    got = np.asarray(model.quantized_matmul(jnp.asarray(x), wq, ws, wz))
+    want = x @ w
+    # Error budget: k * (sx*|w|/2 + sw*|x|/2) per entry, well under 0.1
+    # for these magnitudes.
+    assert np.abs(got - want).max() < 0.1, np.abs(got - want).max()
+
+
+def test_quantized_matmul_ragged_shapes_padded_correctly():
+    # 5x37 @ 37x11 exercises every padding path (m, k, n all misaligned).
+    rng = np.random.RandomState(4)
+    x = (rng.rand(5, 37).astype(np.float32) - 0.5) * 2
+    w = (rng.rand(37, 11).astype(np.float32) - 0.5) * 2
+    wq, ws, wz = model.quantize_weights(w)
+    got = np.asarray(model.quantized_matmul(jnp.asarray(x), wq, ws, wz))
+    assert got.shape == (5, 11)
+    assert np.abs(got - x @ w).max() < 0.1
+
+
+def test_mlp_forward_matches_ref():
+    layers = model.make_mlp_params(dims=(32, 16, 8), seed=7)
+    rng = np.random.RandomState(5)
+    x = rng.rand(4, 32).astype(np.float32)
+    got = np.asarray(model.mlp_forward(jnp.asarray(x), layers))
+    ref_layers = [
+        (jnp.asarray(l["wq"]), l["scale"], l["zp"], jnp.asarray(l["bias"]), l["relu"])
+        for l in layers
+    ]
+    want = np.asarray(mlp_ref(jnp.asarray(x), ref_layers))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)
+
+
+def test_mlp_default_shapes_and_determinism():
+    x = np.zeros((model.MLP_BATCH, model.MLP_DIMS[0]), np.float32)
+    y1 = np.asarray(model.mlp_forward(jnp.asarray(x)))
+    y2 = np.asarray(model.mlp_forward(jnp.asarray(x)))
+    assert y1.shape == (model.MLP_BATCH, model.MLP_DIMS[-1])
+    np.testing.assert_array_equal(y1, y2)
+    assert np.isfinite(y1).all()
+
+
+def test_mlp_predictions_track_float_model():
+    layers = model.make_mlp_params(dims=(64, 32, 10), seed=11)
+    rng = np.random.RandomState(6)
+    x = rng.rand(16, 64).astype(np.float32) * 2 - 1
+    q = np.asarray(model.mlp_forward(jnp.asarray(x), layers))
+    # Float path: dequantised weights.
+    h = x
+    for l in layers:
+        w = l["scale"] * (l["wq"].astype(np.float32) - l["zp"])
+        h = h @ w + l["bias"]
+        if l["relu"]:
+            h = np.maximum(h, 0.0)
+    agree = (q.argmax(1) == h.argmax(1)).mean()
+    assert agree >= 0.875, f"only {agree:.0%} predictions agree"
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(1, 12),
+    k=st.integers(1, 60),
+    n=st.integers(1, 20),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_quantized_matmul_error_bound(m, k, n, seed):
+    rng = np.random.RandomState(seed)
+    x = (rng.rand(m, k).astype(np.float32) - 0.5) * 4
+    w = (rng.rand(k, n).astype(np.float32) - 0.5) * 4
+    wq, ws, wz = model.quantize_weights(w)
+    got = np.asarray(model.quantized_matmul(jnp.asarray(x), wq, ws, wz))
+    want = x @ w
+    xs, _ = dynamic_qparams(jnp.asarray(x))
+    bound = k * (float(xs) * 0.5 * np.abs(w).max() + ws * 0.5 * np.abs(x).max()
+                 + float(xs) * ws * 0.25) + 1e-3
+    assert np.abs(got - want).max() <= bound

@@ -1,0 +1,81 @@
+//! Bench: **host micro-kernel performance** — the perf-pass harness for
+//! the Rust numeric hot path (EXPERIMENTS.md §Perf).
+//!
+//! Measures the packed 8×8 micro-kernel, the packing routines, and the
+//! full engines against the naive and ikj baselines.
+//!
+//! ```bash
+//! cargo bench --bench bench_microkernel
+//! ```
+
+use versal_gemm::arch::vc1902;
+use versal_gemm::gemm::baseline::{ikj_gemm, naive_gemm};
+use versal_gemm::gemm::{
+    pack_a, pack_b, Ccp, GemmConfig, MatI32, MatU8, MicroKernel, ParallelGemm, MR, NR,
+};
+use versal_gemm::util::benchkit::{bench, black_box, BenchCfg};
+use versal_gemm::util::Pcg32;
+
+fn main() {
+    let cfg = BenchCfg::from_env();
+    let mut rng = Pcg32::new(0xBE);
+
+    // 1. The micro-kernel itself: 8×8×2048 (the paper's kc).
+    let kc = 2048;
+    let a = MatU8::random(MR, kc, &mut rng);
+    let b = MatU8::random(kc, NR, &mut rng);
+    let pa = pack_a(&a, 0, 0, MR, kc);
+    let pb = pack_b(&b, 0, 0, kc, NR);
+    let r = bench("microkernel/8x8xkc2048", &cfg, || {
+        let mut cr = [0i32; MR * NR];
+        MicroKernel.run(kc, pa.panel(0), pb.panel(0), &mut cr);
+        black_box(cr)
+    });
+    let macs = (MR * NR * kc) as f64;
+    println!("{}   {:.2} GMAC/s", r.human(), r.throughput(macs) / 1e9);
+
+    // 2. Packing routines.
+    let big = MatU8::random(256, 2048, &mut rng);
+    let r = bench("pack_a/256x2048", &cfg, || black_box(pack_a(&big, 0, 0, 256, 2048)));
+    println!("{}   {:.2} GB/s", r.human(), r.throughput(256.0 * 2048.0) / 1e9);
+    let bigb = MatU8::random(2048, 256, &mut rng);
+    let r = bench("pack_b/2048x256", &cfg, || black_box(pack_b(&bigb, 0, 0, 2048, 256)));
+    println!("{}   {:.2} GB/s", r.human(), r.throughput(2048.0 * 256.0) / 1e9);
+
+    // 3. Full engines on a mid-size problem, vs baselines.
+    let (m, k, n) = (256usize, 512, 256);
+    let macs = (m * k * n) as f64;
+    let a = MatU8::random(m, k, &mut rng);
+    let b = MatU8::random(k, n, &mut rng);
+    let arch = vc1902();
+    let engine = ParallelGemm::new(&arch);
+    let mut gcfg = GemmConfig::paper_table2(8);
+    gcfg.ccp = Ccp { mc: 128, nc: 128, kc: 512 };
+
+    let r = bench("naive_gemm/256x512x256", &cfg, || {
+        let mut c = MatI32::zeros(m, n);
+        naive_gemm(&a, &b, &mut c);
+        black_box(c)
+    });
+    let naive_t = r.per_iter.median;
+    println!("{}   {:.2} GMAC/s", r.human(), r.throughput(macs) / 1e9);
+
+    let r = bench("ikj_gemm/256x512x256", &cfg, || {
+        let mut c = MatI32::zeros(m, n);
+        ikj_gemm(&a, &b, &mut c);
+        black_box(c)
+    });
+    println!("{}   {:.2} GMAC/s", r.human(), r.throughput(macs) / 1e9);
+
+    let r = bench("blocked_engine/256x512x256", &cfg, || {
+        let mut c = MatI32::zeros(m, n);
+        engine.run(&gcfg, &a, &b, &mut c).unwrap();
+        black_box(c)
+    });
+    println!(
+        "{}   {:.2} GMAC/s  ({:.1}× vs naive)",
+        r.human(),
+        r.throughput(macs) / 1e9,
+        naive_t / r.per_iter.median
+    );
+}

@@ -1,0 +1,62 @@
+//! Bench: regenerate **Table 2** of the paper — strong scaling of the
+//! parallel GEMM design from 1 to 32 AIE tiles on the fixed problem
+//! (m, n, k) = (mc, nc, kc) = (256, 256, 2048).
+//!
+//! Two parts:
+//!  1. the cycle table (simulated platform — the paper's actual metric),
+//!     printed next to the published values with per-row deltas;
+//!  2. host-side wall-time of the full engine (numerics + schedule), so
+//!     the harness also measures *this* implementation's speed.
+//!
+//! ```bash
+//! cargo bench --bench bench_table2
+//! ```
+
+use versal_gemm::arch::vc1902;
+use versal_gemm::gemm::{GemmConfig, MatI32, MatU8, ParallelGemm};
+use versal_gemm::report;
+use versal_gemm::util::benchkit::{bench, BenchCfg};
+use versal_gemm::util::Pcg32;
+
+fn main() {
+    let arch = vc1902();
+    let tiles = [1usize, 2, 4, 8, 16, 32];
+
+    println!("=== Table 2 (simulated cycles, model vs paper) ===\n");
+    let t2 = report::table2(&arch, &tiles);
+    println!("{}", t2.to_text());
+    if let Ok(path) = report::save_csv("table2", &t2) {
+        println!("(csv: {})\n", path.display());
+    }
+
+    // §5.4 summary row.
+    let g = ParallelGemm::new(&arch);
+    let r1 = g.table2_row(1);
+    let r32 = g.table2_row(32);
+    println!(
+        "parallel efficiency 1→32 tiles: per-tile perf −{:.1}% (paper −5.7%), speedup {:.1}×\n",
+        (1.0 - r32.perf_per_tile / r1.perf_per_tile) * 100.0,
+        r1.total_cycles as f64 / r32.total_cycles as f64
+    );
+
+    // Host-side timing of the full engine (numerics included).
+    println!("=== host wall-time of the Rust engine on the same problem ===\n");
+    let cfg_bench = BenchCfg::from_env();
+    let mut rng = Pcg32::new(0xB2);
+    let a = MatU8::random(256, 2048, &mut rng);
+    let b = MatU8::random(2048, 256, &mut rng);
+    for &t in &[1usize, 8, 32] {
+        let cfg = GemmConfig::paper_table2(t);
+        let engine = ParallelGemm::new(&arch);
+        let r = bench(&format!("parallel_gemm/256x256x2048/tiles={t}"), &cfg_bench, || {
+            let mut c = MatI32::zeros(256, 256);
+            engine.run(&cfg, &a, &b, &mut c).unwrap()
+        });
+        let macs = 256.0 * 256.0 * 2048.0;
+        println!(
+            "{}   {:.2} GMAC/s host",
+            r.human(),
+            r.throughput(macs) / 1e9
+        );
+    }
+}

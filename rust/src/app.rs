@@ -1,0 +1,416 @@
+//! CLI driver for the `versal-gemm` binary (the L3 leader entrypoint).
+
+use crate::arch::{vc1902, VersalArch};
+use crate::coordinator::{
+    ArrivalGen, ArrivalProcess, BatcherConfig, Coordinator, CoordinatorConfig, FeatureGen,
+    RustGemmBackend,
+};
+use crate::dl::MlpSpec;
+use crate::gemm::ablation::{evaluate, LoopChoice};
+use crate::gemm::{Ccp, GemmConfig, MatI32, MatU8, ParallelGemm};
+use crate::util::cli::Args;
+use crate::util::ini::Ini;
+use crate::util::tabulate::{Align, Table};
+use crate::util::Pcg32;
+use std::time::{Duration, Instant};
+
+const HELP: &str = "\
+versal-gemm — GotoBLAS2 GEMM on a simulated AMD Versal ACAP (paper repro)
+
+USAGE: versal-gemm <command> [options]
+
+COMMANDS:
+  inspect                      print the architecture (paper Table 1)
+  table2   [--tiles 1,2,...]   regenerate Table 2 (strong scaling)
+  table3                       regenerate Table 3 (micro-kernel ablations)
+  gemm     --m M --n N --k K [--tiles T] [--seed S]
+                               run a parallel GEMM, verify vs naive,
+                               report cycles + MACs/cycle
+  ccp      [--elem-bytes B]    derive cache configuration parameters (§4.3)
+  tune     --m M --n N --k K [--tiles T]
+                               auto-tune CCPs for a problem shape (model-
+                               driven search; extension of §4.3)
+  energy   [--tiles T]         energy estimate of the paper problem
+                               (extension; pJ model over the breakdown)
+  noc      [--tiles T]         NoC placement + multicast/fan-out costs
+  trace    [--tiles T] [--width W]
+                               render the block schedule as a text gantt
+                               chart (the §5.3 overlap, visualised)
+  ablation [--tiles T]         compare parallelising L1/L3/L4/L5 (§4.4)
+  serve    --requests R [--rate Q] [--batch B] [--workers W] [--tiles T]
+                               run the batching inference coordinator on a
+                               synthetic workload; report latency/throughput
+  help                         show this text
+
+GLOBAL OPTIONS:
+  --arch-config FILE           INI overrides for the architecture preset
+";
+
+fn load_arch(args: &Args) -> Result<VersalArch, String> {
+    let base = vc1902();
+    match args.get("arch-config") {
+        None => Ok(base),
+        Some(path) => {
+            let ini = Ini::load(std::path::Path::new(path))?;
+            base.with_overrides(&ini)
+        }
+    }
+}
+
+/// Entry point for the `versal-gemm` binary. Returns the process exit code.
+pub fn cli_main(argv: Vec<String>) -> i32 {
+    match run(argv) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            2
+        }
+    }
+}
+
+fn run(argv: Vec<String>) -> Result<(), String> {
+    let args = Args::default()
+        .opt("arch-config")
+        .opt("tiles")
+        .opt("m")
+        .opt("n")
+        .opt("k")
+        .opt("seed")
+        .opt("elem-bytes")
+        .opt("requests")
+        .opt("rate")
+        .opt("batch")
+        .opt("workers")
+        .opt("mc")
+        .opt("nc")
+        .opt("kc")
+        .opt("width")
+        .opt("arrivals")
+        .flag("count-packing")
+        .parse(&argv)?;
+    let cmd = args.positional().first().map(|s| s.as_str()).unwrap_or("help");
+    let arch = load_arch(&args)?;
+
+    match cmd {
+        "help" | "--help" | "-h" => {
+            print!("{HELP}");
+            Ok(())
+        }
+        "inspect" => cmd_inspect(&arch),
+        "table2" => {
+            let tiles = args.get_list::<usize>("tiles", &[1, 2, 4, 8, 16, 32])?;
+            println!("{}", crate::report::table2(&arch, &tiles).to_text());
+            Ok(())
+        }
+        "table3" => {
+            println!("{}", crate::report::table3(&arch).to_text());
+            Ok(())
+        }
+        "gemm" => cmd_gemm(&arch, &args),
+        "ccp" => cmd_ccp(&arch, &args),
+        "tune" => cmd_tune(&arch, &args),
+        "energy" => cmd_energy(&arch, &args),
+        "noc" => cmd_noc(&arch, &args),
+        "trace" => cmd_trace(&arch, &args),
+        "ablation" => cmd_ablation(&arch, &args),
+        "serve" => cmd_serve(&arch, &args),
+        other => Err(format!("unknown command {other:?}; see `versal-gemm help`")),
+    }
+}
+
+fn cmd_inspect(arch: &VersalArch) -> Result<(), String> {
+    println!("{}", arch.name);
+    println!(
+        "AIE grid: {} tiles ({} x {}), peak {} MACs/cycle/tile (UINT8)\n",
+        arch.aie.n_tiles,
+        arch.aie.grid_rows,
+        arch.aie.grid_cols,
+        arch.peak_macs_per_cycle()
+    );
+    println!("{}", arch.table1().to_text());
+    println!("Operand mapping (Figure 3):");
+    println!("  DDR ──pack──► Bc in Block RAM ──stream──► Br in local memory");
+    println!("  DDR ──pack──► Ac in Ultra RAM ──multicast──► Ar to all tiles");
+    println!("  DDR ◄──GMIO──► Cr in tile vector registers");
+    Ok(())
+}
+
+fn cmd_gemm(arch: &VersalArch, args: &Args) -> Result<(), String> {
+    let m: usize = args.get_num("m", 256)?;
+    let n: usize = args.get_num("n", 256)?;
+    let k: usize = args.get_num("k", 2048)?;
+    let tiles: usize = args.get_num("tiles", 8)?;
+    let seed: u64 = args.get_num("seed", 0xC0FFEE)?;
+    let mut cfg = GemmConfig::paper_table2(tiles);
+    cfg.count_packing = args.has("count-packing");
+    cfg.ccp = Ccp {
+        mc: args.get_num("mc", cfg.ccp.mc)?,
+        nc: args.get_num("nc", cfg.ccp.nc)?,
+        kc: args.get_num("kc", cfg.ccp.kc)?,
+    };
+
+    let mut rng = Pcg32::new(seed);
+    let a = MatU8::random(m, k, &mut rng);
+    let b = MatU8::random(k, n, &mut rng);
+    let mut c = MatI32::zeros(m, n);
+    let engine = ParallelGemm::new(arch);
+    let t0 = Instant::now();
+    let (cycles, stats) = engine.run(&cfg, &a, &b, &mut c).map_err(|e| e.to_string())?;
+    let host = t0.elapsed();
+
+    // Verify against the naive oracle.
+    let mut want = MatI32::zeros(m, n);
+    crate::gemm::baseline::naive_gemm(&a, &b, &mut want);
+    let diff = c.max_abs_diff(&want);
+    let macs = m as u64 * n as u64 * k as u64;
+
+    println!("GEMM {m}x{k} · {k}x{n} on {tiles} AIE tiles, {}", cfg.ccp);
+    println!("  numerics: max |Δ| vs naive = {diff}  ({})", if diff == 0 { "EXACT" } else { "MISMATCH" });
+    println!("  simulated cycles: total {} ({})", cycles.total, crate::report::fmt_kcycles(cycles.total));
+    println!(
+        "    br_copy {}  ar_stream {}  arithmetic {}  copy_cr {}  orchestration {}  packing {}",
+        cycles.br_copy, cycles.ar_stream, cycles.arithmetic, cycles.copy_cr, cycles.orchestration, cycles.packing
+    );
+    println!(
+        "  throughput: {:.1} MACs/cycle total, {:.1} per tile",
+        cycles.macs_per_cycle(macs),
+        cycles.macs_per_cycle(macs) / tiles as f64
+    );
+    let busy = stats.iter().filter(|s| s.kernels > 0).count();
+    println!("  tiles busy: {busy}/{tiles}; host wall time {host:?}");
+    if diff != 0 {
+        return Err("numeric verification FAILED".into());
+    }
+    Ok(())
+}
+
+fn cmd_ccp(arch: &VersalArch, args: &Args) -> Result<(), String> {
+    let elem: u64 = args.get_num("elem-bytes", 1)?;
+    let raw = Ccp::derive(arch, elem);
+    let aligned = Ccp::derive_aligned(arch, elem);
+    println!("CCP derivation for {} ({}-byte elements):", arch.name, elem);
+    println!("  raw      {raw}");
+    println!("  aligned  {aligned}  (kc%16 = 0, mc%8 = 0, nc%8 = 0)");
+    println!("  paper §4.3: kc ≤ 3750, mc ≈ 4500, nc ≈ 1200");
+    aligned.check(arch, elem)?;
+    println!("  feasibility: OK (Br/Ac/Bc/Cr all fit their levels)");
+    println!("  compute-to-comm ratio at aligned kc: {:.2} MACs/byte", aligned.compute_to_comm_ratio());
+    Ok(())
+}
+
+fn cmd_tune(arch: &VersalArch, args: &Args) -> Result<(), String> {
+    let m: usize = args.get_num("m", 512)?;
+    let n: usize = args.get_num("n", 512)?;
+    let k: usize = args.get_num("k", 4096)?;
+    let tiles: usize = args.get_num("tiles", 8)?;
+    let t0 = Instant::now();
+    let tuned = crate::gemm::tuner::tune(arch, m, n, k, tiles);
+    println!("auto-tuned CCPs for ({m}, {n}, {k}) on {tiles} tiles:");
+    println!("  best     {}", tuned.ccp);
+    println!("  predicted {} cycles ({:.1} MACs/cycle)",
+        tuned.predicted_cycles,
+        (m as u64 * n as u64 * k as u64) as f64 / tuned.predicted_cycles as f64);
+    println!("  searched {} feasible candidates in {:?}", tuned.candidates_evaluated, t0.elapsed());
+    let derived = Ccp::derive_aligned(arch, 1);
+    let mut cfg = GemmConfig::paper_table2(tiles);
+    cfg.ccp = derived;
+    let derived_cost = crate::gemm::tuner::predict_cycles(arch, &cfg, m, n, k);
+    println!("  (§4.3 capacity-maximal {} would cost {} cycles)", derived, derived_cost);
+    Ok(())
+}
+
+fn cmd_energy(arch: &VersalArch, args: &Args) -> Result<(), String> {
+    use crate::sim::{energy_of, EnergyModel, Traffic};
+    let tiles: usize = args.get_num("tiles", 8)?;
+    let engine = ParallelGemm::new(arch);
+    let cfg = GemmConfig::paper_table2(tiles);
+    let sched = engine.block_schedule(&cfg, 32, 32, 2048, 2048 * 8);
+    let traffic = Traffic::for_block(256, 256, 2048, tiles);
+    let model = EnergyModel::default();
+    let e = energy_of(&model, &sched, &traffic, tiles);
+    println!("energy estimate, (256, 256, 2048) on {tiles} tiles (extension):");
+    println!("  arithmetic {:.2} µJ  ddr {:.2} µJ  fpga {:.2} µJ  local {:.2} µJ  static {:.2} µJ",
+        e.arithmetic_pj / 1e6, e.ddr_pj / 1e6, e.fpga_pj / 1e6, e.local_pj / 1e6, e.static_pj / 1e6);
+    println!("  total {:.2} µJ  ⇒  {:.1} MACs/nJ", e.total_pj() / 1e6, e.macs_per_nj(traffic.macs));
+    Ok(())
+}
+
+fn cmd_noc(arch: &VersalArch, args: &Args) -> Result<(), String> {
+    use crate::sim::Noc;
+    let tiles: usize = args.get_num("tiles", 32)?;
+    let noc = Noc::new(arch);
+    let placement = noc.place(tiles).map_err(|e| e.to_string())?;
+    let mc = noc.multicast_v64_cycles(&placement).map_err(|e| e.to_string())?;
+    let fo = noc.fanout_v64_cycles(&placement).map_err(|e| e.to_string())?;
+    let (rows, cols) = noc.dims();
+    println!("NoC placement of {tiles} tiles on the {rows}x{cols} AIE array:");
+    println!("  columns used: {}", placement.iter().map(|t| t.col).max().unwrap() + 1);
+    println!("  Ar multicast, one v64 vector : {mc} cycles (flat in tile count — §5.1)");
+    println!("  point-to-point fan-out would be: {fo} cycles (the design the paper avoided)");
+    Ok(())
+}
+
+fn cmd_trace(arch: &VersalArch, args: &Args) -> Result<(), String> {
+    let tiles: usize = args.get_num("tiles", 4)?;
+    let width: usize = args.get_num("width", 100)?;
+    let cfg = GemmConfig::paper_table2(tiles);
+    let trace = crate::sim::trace_block(arch, &cfg, 32, 32, 2048, 2048 * 8);
+    println!("block schedule trace, (mc, nc, kc) = (256, 256, 2048), {tiles} tiles:\n");
+    println!("{}", trace.gantt(width.max(10)));
+    Ok(())
+}
+
+fn cmd_ablation(arch: &VersalArch, args: &Args) -> Result<(), String> {
+    let tiles: usize = args.get_num("tiles", 8)?;
+    let cfg = GemmConfig::paper_table2(tiles);
+    let mut t = Table::new(&["Loop", "Total cycles", "MACs/cycle/tile", "Notes"])
+        .align(0, Align::Left)
+        .align(3, Align::Left);
+    for choice in [LoopChoice::L1, LoopChoice::L2, LoopChoice::L3, LoopChoice::L4, LoopChoice::L5, LoopChoice::L6] {
+        match evaluate(arch, &cfg, choice) {
+            Ok(r) => {
+                let note = if choice == LoopChoice::L4 { "paper's choice" } else { "" };
+                t.row(&[
+                    choice.name().to_string(),
+                    r.total_cycles.to_string(),
+                    format!("{:.1}", r.macs_per_cycle_per_tile),
+                    note.to_string(),
+                ]);
+            }
+            Err(e) => {
+                t.row(&[choice.name().to_string(), "-".into(), "-".into(), e.to_string()]);
+            }
+        }
+    }
+    println!("Loop-parallelisation ablation at {tiles} tiles, {}", cfg.ccp);
+    println!("{}", t.to_text());
+    Ok(())
+}
+
+fn cmd_serve(arch: &VersalArch, args: &Args) -> Result<(), String> {
+    let requests: usize = args.get_num("requests", 256)?;
+    let rate: f64 = args.get_num("rate", 2000.0)?;
+    let batch: usize = args.get_num("batch", 8)?;
+    let workers: usize = args.get_num("workers", 2)?;
+    let tiles: usize = args.get_num("tiles", 8)?;
+    let seed: u64 = args.get_num("seed", 7)?;
+
+    let spec = MlpSpec::default_classifier();
+    println!(
+        "serving quantised MLP {:?} ({} params) on {workers} workers × {tiles} AIE tiles",
+        spec.dims,
+        spec.n_params()
+    );
+    let arch2 = arch.clone();
+    let coordinator = Coordinator::start(
+        CoordinatorConfig {
+            batcher: BatcherConfig {
+                max_batch: batch,
+                max_wait: Duration::from_millis(2),
+                queue_cap: 8192,
+            },
+            n_workers: workers,
+            in_dim: spec.dims[0],
+        },
+        move |_| Box::new(RustGemmBackend::new(arch2.clone(), MlpSpec::default_classifier(), seed, tiles)),
+    );
+
+    // Open-loop workload: arrivals from the configured process, features
+    // from a reproducible generator.
+    let process = match args.get_or("arrivals", "poisson") {
+        "poisson" => ArrivalProcess::Poisson { rate },
+        "uniform" => ArrivalProcess::Uniform { rate },
+        "bursty" => ArrivalProcess::Bursty {
+            burst_rate: rate * 5.0,
+            idle_rate: rate / 5.0,
+            mean_phase_s: 0.05,
+        },
+        other => return Err(format!("unknown arrival process {other:?}")),
+    };
+    let mut arrivals = ArrivalGen::new(process, seed);
+    let mut features = FeatureGen::new(784, seed ^ 0xFEA7);
+    let t0 = Instant::now();
+    let mut pending = Vec::with_capacity(requests);
+    for _ in 0..requests {
+        pending.push(coordinator.submit(features.next()).map_err(|e| e.to_string())?);
+        let next = Duration::from_secs_f64(arrivals.next_arrival());
+        if let Some(sleep) = next.checked_sub(t0.elapsed()) {
+            std::thread::sleep(sleep);
+        }
+    }
+    coordinator.flush();
+    let mut ok = 0;
+    for rx in pending {
+        if rx.recv().is_ok() {
+            ok += 1;
+        }
+    }
+    let wall = t0.elapsed();
+    let metrics = coordinator.shutdown();
+    println!("  completed {ok}/{requests} in {wall:?} ({:.0} req/s)", ok as f64 / wall.as_secs_f64());
+    if let Some(l) = metrics.latency_stats() {
+        println!(
+            "  latency µs: mean {:.0}  p50 {:.0}  p95 {:.0}  p99 {:.0}  max {:.0}",
+            l.mean_us, l.p50_us, l.p95_us, l.p99_us, l.max_us
+        );
+    }
+    println!(
+        "  mean batch {:.2}, mean simulated Versal cycles/batch {:.0}",
+        metrics.mean_batch_size(),
+        metrics.mean_simulated_cycles()
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn help_succeeds() {
+        assert_eq!(cli_main(argv(&["help"])), 0);
+        assert_eq!(cli_main(argv(&[])), 0);
+    }
+
+    #[test]
+    fn unknown_command_fails() {
+        assert_eq!(cli_main(argv(&["frobnicate"])), 2);
+    }
+
+    #[test]
+    fn inspect_table2_table3_ccp_succeed() {
+        assert_eq!(cli_main(argv(&["inspect"])), 0);
+        assert_eq!(cli_main(argv(&["table2", "--tiles", "1,4"])), 0);
+        assert_eq!(cli_main(argv(&["table3"])), 0);
+        assert_eq!(cli_main(argv(&["ccp"])), 0);
+        assert_eq!(cli_main(argv(&["ablation", "--tiles", "4"])), 0);
+    }
+
+    #[test]
+    fn extension_subcommands_succeed() {
+        assert_eq!(cli_main(argv(&["tune", "--m", "128", "--n", "128", "--k", "512"])), 0);
+        assert_eq!(cli_main(argv(&["energy", "--tiles", "4"])), 0);
+        assert_eq!(cli_main(argv(&["noc", "--tiles", "16"])), 0);
+        // noc beyond the array is an error.
+        assert_eq!(cli_main(argv(&["noc", "--tiles", "401"])), 2);
+    }
+
+    #[test]
+    fn gemm_small_roundtrip() {
+        assert_eq!(
+            cli_main(argv(&["gemm", "--m", "32", "--n", "24", "--k", "40", "--tiles", "3",
+                            "--mc", "16", "--nc", "16", "--kc", "32"])),
+            0
+        );
+    }
+
+    #[test]
+    fn bad_option_reports_error() {
+        assert_eq!(cli_main(argv(&["table2", "--tiles", "xyz"])), 2);
+        assert_eq!(cli_main(argv(&["--no-such-flag"])), 2);
+    }
+}

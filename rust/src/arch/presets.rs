@@ -1,0 +1,125 @@
+//! Built-in architecture presets.
+
+use super::{AieSpec, InterconnectSpec, MemLevel, MemSpec, VersalArch};
+
+/// The AMD Versal VC1902 as characterised by the paper (Table 1, §3, §5).
+///
+/// Calibration notes (paper § references in parentheses):
+/// - 400 AIE tiles, up to 128 UINT8 MACs/cycle each (§3).
+/// - 64-element stream read ≈19 cycles; fused pair 32 cycles + 10 residual
+///   per kernel: 128·32+10 = 4106 (Table 3 row "read ar only").
+/// - loop-control overhead 18 cycles per 128-iteration kernel (Table 3
+///   row "execute mac16() only": 1042 = 1024 + 18).
+/// - Br copy: 16 KB in 3280 cycles (§5.1) ⇒ 5 B/cycle with a 3.2-cycle
+///   residue folded into the setup constant.
+/// - Cr GMIO round trip: 40 cycles at 1 tile, growing to 282 at 32 tiles
+///   (Table 2) via serial DDR arbitration.
+pub fn vc1902() -> VersalArch {
+    VersalArch {
+        name: "AMD Versal VC1902 (VCK190)".to_string(),
+        mem: [
+            MemSpec { level: MemLevel::VectorRegisters, capacity_bytes: 2 * 1024 },
+            MemSpec { level: MemLevel::LocalMemory, capacity_bytes: 32 * 1024 },
+            // 16.27 MB / 4.25 MB as printed in Table 1.
+            MemSpec { level: MemLevel::UltraRam, capacity_bytes: 17_059_430 },
+            MemSpec { level: MemLevel::BlockRam, capacity_bytes: 4_456_448 },
+            MemSpec { level: MemLevel::Ddr, capacity_bytes: 2 * 1024 * 1024 * 1024 },
+        ],
+        aie: AieSpec {
+            n_tiles: 400,
+            grid_rows: 8,
+            grid_cols: 50,
+            macs_per_mac16: 128,
+            cycles_per_mac16: 1,
+            vreg_bytes: 2 * 1024,
+            accum_lanes: 64,
+            loop_overhead_cycles: 18,
+            pipeline_drain_cycles: 4,
+        },
+        ic: InterconnectSpec {
+            stream_v64_cycles: 19,
+            stream_v64_fused_pair_cycles: 32,
+            stream_fused_residual_cycles: 10,
+            br_copy_bytes_per_cycle: 5.0,
+            br_copy_setup_cycles: 3,
+            gmio_cr_base_cycles: 40,
+            ddr_burst_service_cycles: 8,
+            gmio_ports: 16,
+            multicast_v64_cycles: 19,
+            stream_steady_pair_cycles: 28,
+            gmio_window_sync_cycles: 260,
+            orch_base_cycles: 34.0,
+            pack_bytes_per_cycle: 4.0,
+        },
+    }
+}
+
+/// Alias: the VCK190 evaluation board carries the VC1902 device.
+pub fn vck190_arch() -> VersalArch {
+    vc1902()
+}
+
+/// A hypothetical next-generation ACAP: 2× local memory, 2× FPGA RAMs,
+/// 2× DDR-burst service rate. Used by the sensitivity studies to show
+/// how the paper's derivations (CCPs, Table 2's contention growth)
+/// respond to the platform — the point of keeping them *derived*.
+pub fn scaled_acap_2x() -> VersalArch {
+    let mut a = vc1902();
+    a.name = "Scaled ACAP (2x memories, 2x DDR service)".to_string();
+    for m in a.mem.iter_mut() {
+        m.capacity_bytes *= match m.level {
+            MemLevel::LocalMemory | MemLevel::UltraRam | MemLevel::BlockRam => 2,
+            _ => 1,
+        };
+    }
+    a.ic.ddr_burst_service_cycles /= 2;
+    a
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_valid() {
+        vc1902().validate().unwrap();
+        vck190_arch().validate().unwrap();
+    }
+
+    #[test]
+    fn fused_read_budget_reproduces_table3_row1() {
+        // 128 iterations of a fused 2×64-B read must cost 4106 cycles.
+        let a = vc1902();
+        let cycles =
+            128 * a.ic.stream_v64_fused_pair_cycles + a.ic.stream_fused_residual_cycles;
+        assert_eq!(cycles, 4106);
+    }
+
+    #[test]
+    fn scaled_acap_sensitivity() {
+        use crate::gemm::Ccp;
+        use crate::sim::Gmio;
+        let base = vc1902();
+        let big = scaled_acap_2x();
+        big.validate().unwrap();
+        // 2× local memory ⇒ roughly 2× kc (minus the fixed reserve).
+        let c0 = Ccp::derive(&base, 1);
+        let c1 = Ccp::derive(&big, 1);
+        assert!(c1.kc > 2 * c0.kc, "kc {} vs {}", c1.kc, c0.kc);
+        // Faster DDR service ⇒ flatter Copy-Cr growth at 32 tiles.
+        let g0 = Gmio::new(&base);
+        let g1 = Gmio::new(&big);
+        assert_eq!(g0.cr_roundtrip_cycles(1), g1.cr_roundtrip_cycles(1));
+        assert!(g1.cr_roundtrip_cycles(32) < g0.cr_roundtrip_cycles(32));
+    }
+
+    #[test]
+    fn br_copy_budget_reproduces_5_1() {
+        // 16 KB Br (kc=2048 × nr=8 × 1 B) must cost ≈3280 cycles.
+        let a = vc1902();
+        let bytes = 2048.0 * 8.0;
+        let cycles = (bytes / a.ic.br_copy_bytes_per_cycle).round() as u64
+            + a.ic.br_copy_setup_cycles;
+        assert_eq!(cycles, 3280);
+    }
+}

@@ -1,0 +1,175 @@
+//! Dynamic batcher: groups requests into batches under a size cap and a
+//! latency deadline — the standard serving trade-off (larger batches
+//! amortise the per-batch GEMM setup exactly like larger kc amortises the
+//! Cr transfer in §4.2; the mechanism is the same amortisation argument).
+
+use super::request::InferenceRequest;
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct BatcherConfig {
+    /// Maximum requests per batch (the artifact's baked batch is the
+    /// natural choice: 8).
+    pub max_batch: usize,
+    /// Maximum time the oldest request may wait before the batch is
+    /// flushed even if not full.
+    pub max_wait: Duration,
+    /// Queue capacity; submits beyond it are rejected (backpressure).
+    pub queue_cap: usize,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(2),
+            queue_cap: 4096,
+        }
+    }
+}
+
+/// Accumulates requests and decides when a batch is ready.
+#[derive(Debug)]
+pub struct DynamicBatcher {
+    cfg: BatcherConfig,
+    queue: VecDeque<InferenceRequest>,
+}
+
+impl DynamicBatcher {
+    pub fn new(cfg: BatcherConfig) -> DynamicBatcher {
+        assert!(cfg.max_batch > 0, "max_batch must be positive");
+        DynamicBatcher { cfg, queue: VecDeque::new() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    pub fn config(&self) -> &BatcherConfig {
+        &self.cfg
+    }
+
+    /// Enqueue a request; `false` means the queue is full (backpressure —
+    /// caller should reject or retry).
+    pub fn push(&mut self, req: InferenceRequest) -> bool {
+        if self.queue.len() >= self.cfg.queue_cap {
+            return false;
+        }
+        self.queue.push_back(req);
+        true
+    }
+
+    /// Whether a batch should be cut *now*.
+    pub fn ready(&self, now: Instant) -> bool {
+        if self.queue.len() >= self.cfg.max_batch {
+            return true;
+        }
+        match self.queue.front() {
+            Some(oldest) => now.duration_since(oldest.submitted_at) >= self.cfg.max_wait,
+            None => false,
+        }
+    }
+
+    /// Cut a batch of up to `max_batch` oldest requests (FIFO order).
+    pub fn cut(&mut self) -> Vec<InferenceRequest> {
+        let n = self.cfg.max_batch.min(self.queue.len());
+        self.queue.drain(..n).collect()
+    }
+
+    /// Time until the deadline of the oldest request (for the scheduler's
+    /// sleep), if any.
+    pub fn next_deadline_in(&self, now: Instant) -> Option<Duration> {
+        self.queue.front().map(|oldest| {
+            let age = now.duration_since(oldest.submitted_at);
+            self.cfg.max_wait.saturating_sub(age)
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req() -> InferenceRequest {
+        InferenceRequest::new(vec![0.0])
+    }
+
+    fn cfg(max_batch: usize, max_wait_ms: u64, cap: usize) -> BatcherConfig {
+        BatcherConfig {
+            max_batch,
+            max_wait: Duration::from_millis(max_wait_ms),
+            queue_cap: cap,
+        }
+    }
+
+    #[test]
+    fn full_batch_is_ready_immediately() {
+        let mut b = DynamicBatcher::new(cfg(2, 1000, 100));
+        b.push(req());
+        assert!(!b.ready(Instant::now()));
+        b.push(req());
+        assert!(b.ready(Instant::now()));
+        let batch = b.cut();
+        assert_eq!(batch.len(), 2);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn deadline_flushes_partial_batch() {
+        let mut b = DynamicBatcher::new(cfg(8, 1, 100));
+        b.push(req());
+        let later = Instant::now() + Duration::from_millis(5);
+        assert!(b.ready(later));
+        assert_eq!(b.cut().len(), 1);
+    }
+
+    #[test]
+    fn fifo_order_preserved() {
+        let mut b = DynamicBatcher::new(cfg(3, 1000, 100));
+        let ids: Vec<_> = (0..3)
+            .map(|_| {
+                let r = req();
+                let id = r.id;
+                b.push(r);
+                id
+            })
+            .collect();
+        let batch = b.cut();
+        assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), ids);
+    }
+
+    #[test]
+    fn backpressure_rejects_beyond_cap() {
+        let mut b = DynamicBatcher::new(cfg(8, 1000, 2));
+        assert!(b.push(req()));
+        assert!(b.push(req()));
+        assert!(!b.push(req()), "third push must be rejected");
+        assert_eq!(b.len(), 2);
+    }
+
+    #[test]
+    fn cut_respects_max_batch() {
+        let mut b = DynamicBatcher::new(cfg(2, 1000, 100));
+        for _ in 0..5 {
+            b.push(req());
+        }
+        assert_eq!(b.cut().len(), 2);
+        assert_eq!(b.len(), 3);
+    }
+
+    #[test]
+    fn next_deadline_shrinks_with_age() {
+        let mut b = DynamicBatcher::new(cfg(8, 10, 100));
+        assert!(b.next_deadline_in(Instant::now()).is_none());
+        b.push(req());
+        let d1 = b.next_deadline_in(Instant::now()).unwrap();
+        assert!(d1 <= Duration::from_millis(10));
+        let later = Instant::now() + Duration::from_millis(20);
+        assert_eq!(b.next_deadline_in(later).unwrap(), Duration::ZERO);
+    }
+}

@@ -1,0 +1,125 @@
+//! Service metrics: latency distribution, throughput, batch shapes.
+
+use crate::util::stats::percentile_sorted;
+use std::time::Duration;
+
+/// Aggregated latency statistics (microseconds).
+#[derive(Debug, Clone)]
+pub struct LatencyStats {
+    pub count: u64,
+    pub mean_us: f64,
+    pub p50_us: f64,
+    pub p95_us: f64,
+    pub p99_us: f64,
+    pub max_us: f64,
+}
+
+/// Metrics sink. Not thread-safe by itself — the coordinator owns one per
+/// collector thread and merges on `snapshot`.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    latencies_us: Vec<f64>,
+    batch_sizes: Vec<f64>,
+    simulated_cycles: Vec<f64>,
+    rejected: u64,
+    completed: u64,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    pub fn record_completion(&mut self, latency: Duration, batch_size: usize, sim_cycles: u64) {
+        self.latencies_us.push(latency.as_secs_f64() * 1e6);
+        self.batch_sizes.push(batch_size as f64);
+        self.simulated_cycles.push(sim_cycles as f64);
+        self.completed += 1;
+    }
+
+    pub fn record_rejection(&mut self) {
+        self.rejected += 1;
+    }
+
+    /// Merge a disjoint collector's observations (exact — raw samples).
+    pub fn merge(&mut self, other: Metrics) {
+        self.latencies_us.extend(other.latencies_us);
+        self.batch_sizes.extend(other.batch_sizes);
+        self.simulated_cycles.extend(other.simulated_cycles);
+        self.rejected += other.rejected;
+        self.completed += other.completed;
+    }
+
+    pub fn completed(&self) -> u64 {
+        self.completed
+    }
+
+    pub fn rejected(&self) -> u64 {
+        self.rejected
+    }
+
+    pub fn mean_batch_size(&self) -> f64 {
+        if self.batch_sizes.is_empty() {
+            0.0
+        } else {
+            self.batch_sizes.iter().sum::<f64>() / self.batch_sizes.len() as f64
+        }
+    }
+
+    pub fn mean_simulated_cycles(&self) -> f64 {
+        if self.simulated_cycles.is_empty() {
+            0.0
+        } else {
+            self.simulated_cycles.iter().sum::<f64>() / self.simulated_cycles.len() as f64
+        }
+    }
+
+    pub fn latency_stats(&self) -> Option<LatencyStats> {
+        if self.latencies_us.is_empty() {
+            return None;
+        }
+        let mut sorted = self.latencies_us.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Some(LatencyStats {
+            count: self.completed,
+            mean_us: sorted.iter().sum::<f64>() / sorted.len() as f64,
+            p50_us: percentile_sorted(&sorted, 50.0),
+            p95_us: percentile_sorted(&sorted, 95.0),
+            p99_us: percentile_sorted(&sorted, 99.0),
+            max_us: *sorted.last().unwrap(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latency_percentiles() {
+        let mut m = Metrics::new();
+        for i in 1..=100 {
+            m.record_completion(Duration::from_micros(i), 8, 1000);
+        }
+        let s = m.latency_stats().unwrap();
+        assert_eq!(s.count, 100);
+        assert!((s.p50_us - 50.5).abs() < 1.0);
+        assert!(s.p99_us > 98.0);
+        assert_eq!(s.max_us, 100.0);
+        assert_eq!(m.mean_batch_size(), 8.0);
+    }
+
+    #[test]
+    fn empty_metrics_has_no_stats() {
+        assert!(Metrics::new().latency_stats().is_none());
+    }
+
+    #[test]
+    fn rejections_counted() {
+        let mut m = Metrics::new();
+        m.record_rejection();
+        m.record_rejection();
+        assert_eq!(m.rejected(), 2);
+        assert_eq!(m.completed(), 0);
+    }
+}

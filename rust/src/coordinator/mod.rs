@@ -1,0 +1,28 @@
+//! L3 serving coordinator: the deployment wrapper around the GEMM engine.
+//!
+//! The paper contributes a kernel + parallel schedule; a downstream user
+//! deploys it behind an inference service. This module is that service,
+//! in the style of a vLLM-like router scaled to the problem: a request
+//! queue with backpressure, a dynamic batcher (batch size / deadline), a
+//! pool of worker threads executing batches on a pluggable [`Backend`]
+//! (pure-Rust GEMM engine or the PJRT artifacts), and latency/throughput
+//! metrics. Every batch also carries a *simulated Versal cycle estimate*
+//! from the calibrated schedule model, so the service reports what the
+//! accelerator would have cost.
+//!
+//! Threading: std threads + mpsc (tokio is unavailable offline); the
+//! design is the usual leader/worker channel fabric.
+
+mod batcher;
+mod metrics;
+mod request;
+mod server;
+mod worker;
+mod workload;
+
+pub use batcher::{BatcherConfig, DynamicBatcher};
+pub use metrics::{LatencyStats, Metrics};
+pub use request::{InferenceRequest, InferenceResponse, RequestId};
+pub use server::{Coordinator, CoordinatorConfig, SubmitError};
+pub use worker::{Backend, EchoBackend, RustGemmBackend};
+pub use workload::{ArrivalGen, ArrivalProcess, FeatureGen};

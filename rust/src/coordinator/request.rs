@@ -1,0 +1,62 @@
+//! Request/response types of the inference service.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+/// Monotonically increasing request identifier.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct RequestId(pub u64);
+
+static NEXT_ID: AtomicU64 = AtomicU64::new(1);
+
+impl RequestId {
+    pub fn fresh() -> RequestId {
+        RequestId(NEXT_ID.fetch_add(1, Ordering::Relaxed))
+    }
+}
+
+/// One inference request: a feature vector for the classifier.
+#[derive(Debug, Clone)]
+pub struct InferenceRequest {
+    pub id: RequestId,
+    pub features: Vec<f32>,
+    pub submitted_at: Instant,
+}
+
+impl InferenceRequest {
+    pub fn new(features: Vec<f32>) -> InferenceRequest {
+        InferenceRequest { id: RequestId::fresh(), features, submitted_at: Instant::now() }
+    }
+}
+
+/// The service's answer.
+#[derive(Debug, Clone)]
+pub struct InferenceResponse {
+    pub id: RequestId,
+    pub logits: Vec<f32>,
+    pub predicted_class: usize,
+    /// Wall-clock latency from submit to completion.
+    pub latency: std::time::Duration,
+    /// Size of the batch this request was served in.
+    pub batch_size: usize,
+    /// Simulated Versal AIE cycles attributed to this request's batch.
+    pub simulated_cycles: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ids_are_unique_and_increasing() {
+        let a = RequestId::fresh();
+        let b = RequestId::fresh();
+        assert!(b > a);
+    }
+
+    #[test]
+    fn request_captures_features() {
+        let r = InferenceRequest::new(vec![1.0, 2.0]);
+        assert_eq!(r.features, vec![1.0, 2.0]);
+    }
+}

@@ -1,0 +1,359 @@
+//! The coordinator: router thread + worker pool over a channel fabric.
+//!
+//! ```text
+//! submit() ──► router thread ──► DynamicBatcher ──► batch channel ──► N workers
+//!     ▲                                                            │
+//!     └──────────────── response channel (per caller) ◄────────────┘
+//! ```
+//!
+//! The router owns the batcher and enforces backpressure; workers own a
+//! [`Backend`] each and execute batches independently (mirroring the
+//! paper's independent AIE tiles, with the router as the ARM host core).
+
+use super::batcher::{BatcherConfig, DynamicBatcher};
+use super::metrics::Metrics;
+use super::request::{InferenceRequest, InferenceResponse};
+use super::worker::Backend;
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+use thiserror::Error;
+
+#[derive(Debug, Error)]
+pub enum SubmitError {
+    #[error("queue full (backpressure): retry later")]
+    Backpressure,
+    #[error("coordinator is shut down")]
+    ShutDown,
+    #[error("feature vector has {got} elements, expected {want}")]
+    BadShape { got: usize, want: usize },
+}
+
+#[derive(Debug, Clone)]
+pub struct CoordinatorConfig {
+    pub batcher: BatcherConfig,
+    pub n_workers: usize,
+    /// Feature-vector length; submits with a different length are
+    /// rejected synchronously. Must match the backends' `in_dim`.
+    pub in_dim: usize,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig { batcher: BatcherConfig::default(), n_workers: 2, in_dim: 784 }
+    }
+}
+
+enum RouterMsg {
+    Request(InferenceRequest, Sender<InferenceResponse>),
+    Flush,
+    Stop,
+}
+
+struct Batch {
+    requests: Vec<(InferenceRequest, Sender<InferenceResponse>)>,
+}
+
+/// Handle to a running coordinator.
+pub struct Coordinator {
+    router_tx: Sender<RouterMsg>,
+    router: Option<JoinHandle<Metrics>>,
+    workers: Vec<JoinHandle<Metrics>>,
+    in_dim: usize,
+    rejected: Arc<Mutex<u64>>,
+}
+
+impl Coordinator {
+    /// Start the service: one router thread plus `n_workers` workers.
+    /// `make_backend(worker_idx)` runs *inside* each worker thread, so
+    /// backends holding non-`Send` state (e.g. a PJRT client) are fine.
+    pub fn start(
+        cfg: CoordinatorConfig,
+        make_backend: impl Fn(usize) -> Box<dyn Backend> + Send + Sync + 'static,
+    ) -> Coordinator {
+        assert!(cfg.n_workers >= 1, "need at least one worker");
+        let in_dim = cfg.in_dim;
+        let make_backend = Arc::new(make_backend);
+
+        let (router_tx, router_rx) = mpsc::channel::<RouterMsg>();
+        let (batch_tx, batch_rx) = mpsc::channel::<Batch>();
+        let batch_rx = Arc::new(Mutex::new(batch_rx));
+
+        // Workers.
+        let mut workers = Vec::new();
+        for w in 0..cfg.n_workers {
+            let rx = Arc::clone(&batch_rx);
+            let factory = Arc::clone(&make_backend);
+            workers.push(std::thread::spawn(move || {
+                let mut backend = factory(w);
+                assert_eq!(backend.in_dim(), in_dim, "backend in_dim mismatch");
+                let mut metrics = Metrics::new();
+                loop {
+                    let batch = {
+                        let guard = rx.lock().expect("batch channel poisoned");
+                        guard.recv()
+                    };
+                    let Ok(batch) = batch else { break };
+                    run_batch(&mut *backend, batch, &mut metrics);
+                }
+                metrics
+            }));
+        }
+
+        // Router.
+        let batcher_cfg = cfg.batcher.clone();
+        let rejected = Arc::new(Mutex::new(0u64));
+        let rejected_router = Arc::clone(&rejected);
+        let router = std::thread::spawn(move || {
+            let mut batcher = DynamicBatcher::new(batcher_cfg);
+            let mut waiters: std::collections::HashMap<u64, Sender<InferenceResponse>> =
+                std::collections::HashMap::new();
+            let metrics = Metrics::new();
+            let mut stopping = false;
+            loop {
+                let timeout = batcher
+                    .next_deadline_in(Instant::now())
+                    .unwrap_or(Duration::from_millis(50));
+                match router_rx.recv_timeout(timeout) {
+                    Ok(RouterMsg::Request(req, reply)) => {
+                        let id = req.id.0;
+                        if batcher.push(req) {
+                            waiters.insert(id, reply);
+                        } else {
+                            *rejected_router.lock().unwrap() += 1;
+                            drop(reply); // caller sees a closed channel
+                        }
+                    }
+                    Ok(RouterMsg::Flush) => {
+                        while !batcher.is_empty() {
+                            dispatch(&mut batcher, &mut waiters, &batch_tx);
+                        }
+                    }
+                    Ok(RouterMsg::Stop) => stopping = true,
+                    Err(RecvTimeoutError::Timeout) => {}
+                    Err(RecvTimeoutError::Disconnected) => stopping = true,
+                }
+                while batcher.ready(Instant::now()) {
+                    dispatch(&mut batcher, &mut waiters, &batch_tx);
+                }
+                if stopping {
+                    while !batcher.is_empty() {
+                        dispatch(&mut batcher, &mut waiters, &batch_tx);
+                    }
+                    break;
+                }
+            }
+            drop(batch_tx); // workers drain and exit
+            metrics
+        });
+
+        Coordinator { router_tx, router: Some(router), workers, in_dim, rejected }
+    }
+
+    /// Submit one request; returns a receiver for its response.
+    pub fn submit(
+        &self,
+        features: Vec<f32>,
+    ) -> Result<Receiver<InferenceResponse>, SubmitError> {
+        if features.len() != self.in_dim {
+            return Err(SubmitError::BadShape { got: features.len(), want: self.in_dim });
+        }
+        let (tx, rx) = mpsc::channel();
+        self.router_tx
+            .send(RouterMsg::Request(InferenceRequest::new(features), tx))
+            .map_err(|_| SubmitError::ShutDown)?;
+        Ok(rx)
+    }
+
+    /// Submit and wait (convenience). A closed reply channel reports
+    /// backpressure.
+    pub fn infer(&self, features: Vec<f32>) -> Result<InferenceResponse, SubmitError> {
+        let rx = self.submit(features)?;
+        rx.recv().map_err(|_| SubmitError::Backpressure)
+    }
+
+    /// Force the batcher to flush partial batches now.
+    pub fn flush(&self) {
+        let _ = self.router_tx.send(RouterMsg::Flush);
+    }
+
+    /// Requests rejected by backpressure so far.
+    pub fn rejected(&self) -> u64 {
+        *self.rejected.lock().unwrap()
+    }
+
+    /// Stop the service and return merged metrics from all threads.
+    pub fn shutdown(mut self) -> Metrics {
+        let _ = self.router_tx.send(RouterMsg::Stop);
+        let mut metrics = self
+            .router
+            .take()
+            .map(|h| h.join().expect("router panicked"))
+            .unwrap_or_default();
+        for w in self.workers.drain(..) {
+            metrics.merge(w.join().expect("worker panicked"));
+        }
+        metrics
+    }
+}
+
+fn dispatch(
+    batcher: &mut DynamicBatcher,
+    waiters: &mut std::collections::HashMap<u64, Sender<InferenceResponse>>,
+    batch_tx: &Sender<Batch>,
+) {
+    let cut = batcher.cut();
+    if cut.is_empty() {
+        return;
+    }
+    let requests = cut
+        .into_iter()
+        .filter_map(|r| waiters.remove(&r.id.0).map(|w| (r, w)))
+        .collect();
+    let _ = batch_tx.send(Batch { requests });
+}
+
+fn run_batch(backend: &mut dyn Backend, batch: Batch, metrics: &mut Metrics) {
+    let n = batch.requests.len();
+    if n == 0 {
+        return;
+    }
+    let in_dim = backend.in_dim();
+    let classes = backend.n_classes();
+    let mut x = vec![0.0f32; n * in_dim];
+    for (i, (req, _)) in batch.requests.iter().enumerate() {
+        x[i * in_dim..(i + 1) * in_dim].copy_from_slice(&req.features);
+    }
+    match backend.infer_batch(n, &x) {
+        Ok((logits, sim_cycles)) => {
+            for (i, (req, reply)) in batch.requests.into_iter().enumerate() {
+                let row = logits[i * classes..(i + 1) * classes].to_vec();
+                let predicted = row
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(j, _)| j)
+                    .unwrap_or(0);
+                let latency = req.submitted_at.elapsed();
+                metrics.record_completion(latency, n, sim_cycles);
+                let _ = reply.send(InferenceResponse {
+                    id: req.id,
+                    logits: row,
+                    predicted_class: predicted,
+                    latency,
+                    batch_size: n,
+                    simulated_cycles: sim_cycles,
+                });
+            }
+        }
+        Err(_) => {
+            // Batch failed: drop reply channels; callers observe the error.
+            for (_, reply) in batch.requests {
+                drop(reply);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use super::super::worker::EchoBackend;
+
+    fn echo_coordinator(max_batch: usize, workers: usize, cap: usize) -> Coordinator {
+        let cfg = CoordinatorConfig {
+            batcher: BatcherConfig {
+                max_batch,
+                max_wait: Duration::from_millis(1),
+                queue_cap: cap,
+            },
+            n_workers: workers,
+            in_dim: 4,
+        };
+        Coordinator::start(cfg, |_| Box::new(EchoBackend { in_dim: 4, n_classes: 2 }))
+    }
+
+    #[test]
+    fn single_request_roundtrip() {
+        let c = echo_coordinator(8, 1, 100);
+        let resp = c.infer(vec![3.5, 0.0, 0.0, 0.0]).unwrap();
+        assert_eq!(resp.logits[0], 3.5);
+        assert_eq!(resp.predicted_class, 0);
+        assert!(resp.batch_size >= 1);
+        let m = c.shutdown();
+        assert_eq!(m.completed(), 1);
+    }
+
+    #[test]
+    fn many_requests_all_answered_across_workers() {
+        let c = echo_coordinator(4, 3, 1000);
+        let rxs: Vec<_> =
+            (0..64).map(|i| c.submit(vec![i as f32, 0.0, 0.0, 0.0]).unwrap()).collect();
+        c.flush();
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let r = rx.recv().expect("response");
+            assert_eq!(r.logits[0], i as f32, "responses routed to the right caller");
+        }
+        let m = c.shutdown();
+        assert_eq!(m.completed(), 64);
+        assert!(m.mean_batch_size() >= 1.0);
+    }
+
+    #[test]
+    fn bad_shape_rejected_synchronously() {
+        let c = echo_coordinator(8, 1, 100);
+        match c.infer(vec![1.0]) {
+            Err(SubmitError::BadShape { got: 1, want: 4 }) => {}
+            other => panic!("expected BadShape, got {other:?}"),
+        }
+        c.shutdown();
+    }
+
+    #[test]
+    fn backpressure_drops_when_queue_full() {
+        // Tiny queue and big max_batch: pile on faster than the deadline.
+        let cfg = CoordinatorConfig {
+            batcher: BatcherConfig {
+                max_batch: 64,
+                max_wait: Duration::from_millis(200),
+                queue_cap: 4,
+            },
+            n_workers: 1,
+            in_dim: 4,
+        };
+        let c = Coordinator::start(cfg, |_| Box::new(EchoBackend { in_dim: 4, n_classes: 2 }));
+        let rxs: Vec<_> = (0..32).map(|_| c.submit(vec![0.0; 4]).unwrap()).collect();
+        // Give the router a moment to ingest, then flush.
+        std::thread::sleep(Duration::from_millis(20));
+        c.flush();
+        let answered = rxs.into_iter().filter(|rx| rx.recv().is_ok()).count();
+        assert!(answered >= 4, "at least the queue capacity is served: {answered}");
+        assert!(answered < 32, "some requests must have been shed: {answered}");
+        let rejected = c.rejected();
+        assert!(rejected > 0, "rejections counted");
+        c.shutdown();
+    }
+
+    #[test]
+    fn shutdown_drains_pending_requests() {
+        let c = echo_coordinator(100, 1, 1000);
+        let rxs: Vec<_> = (0..10).map(|_| c.submit(vec![0.0; 4]).unwrap()).collect();
+        let m = c.shutdown(); // no flush: shutdown must drain
+        assert_eq!(m.completed(), 10);
+        for rx in rxs {
+            assert!(rx.recv().is_ok());
+        }
+    }
+
+    #[test]
+    fn batching_actually_groups() {
+        let c = echo_coordinator(8, 1, 1000);
+        let rxs: Vec<_> = (0..8).map(|_| c.submit(vec![0.0; 4]).unwrap()).collect();
+        let sizes: Vec<usize> = rxs.into_iter().map(|rx| rx.recv().unwrap().batch_size).collect();
+        // All 8 arrived before the 1 ms deadline on any sane machine; the
+        // batcher must have grouped at least some of them.
+        assert!(sizes.iter().any(|&s| s >= 2), "sizes {sizes:?}");
+        c.shutdown();
+    }
+}

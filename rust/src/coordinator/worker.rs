@@ -1,0 +1,125 @@
+//! Worker backends: where a batch's MACs actually run.
+
+use crate::arch::VersalArch;
+use crate::dl::{Mlp, MlpSpec};
+use crate::gemm::{GemmConfig, ParallelGemm};
+use anyhow::Result;
+
+/// A batch-execution backend. `infer_batch` maps a `batch × in_dim`
+/// feature block to `batch × n_classes` logits and reports the simulated
+/// Versal cycle cost of the batch.
+///
+/// Backends are constructed *inside* their worker thread (the factory
+/// passed to [`super::Coordinator::start`] is `Send + Sync`, the backend
+/// itself need not be) — this is what lets a PJRT client, which holds
+/// non-`Send` internals, serve as a backend.
+pub trait Backend {
+    fn in_dim(&self) -> usize;
+    fn n_classes(&self) -> usize;
+    /// Returns (logits, simulated AIE cycles for the batch).
+    fn infer_batch(&mut self, batch: usize, x: &[f32]) -> Result<(Vec<f32>, u64)>;
+}
+
+/// Trivial backend for coordinator unit tests: "logits" echo the first
+/// feature into class 0.
+pub struct EchoBackend {
+    pub in_dim: usize,
+    pub n_classes: usize,
+}
+
+impl Backend for EchoBackend {
+    fn in_dim(&self) -> usize {
+        self.in_dim
+    }
+    fn n_classes(&self) -> usize {
+        self.n_classes
+    }
+    fn infer_batch(&mut self, batch: usize, x: &[f32]) -> Result<(Vec<f32>, u64)> {
+        let mut logits = vec![0.0f32; batch * self.n_classes];
+        for i in 0..batch {
+            logits[i * self.n_classes] = x[i * self.in_dim];
+        }
+        Ok((logits, 100 * batch as u64))
+    }
+}
+
+/// Production backend: the quantised MLP with every layer's MACs running
+/// through the parallel GEMM engine on the simulated Versal platform.
+pub struct RustGemmBackend {
+    arch: VersalArch,
+    mlp: Mlp,
+    cfg: GemmConfig,
+}
+
+impl RustGemmBackend {
+    pub fn new(arch: VersalArch, spec: MlpSpec, seed: u64, tiles: usize) -> RustGemmBackend {
+        Self::with_mlp(arch, Mlp::random(spec, seed), tiles)
+    }
+
+    /// Serve a specific (e.g. trained + quantised) model.
+    pub fn with_mlp(arch: VersalArch, mlp: Mlp, tiles: usize) -> RustGemmBackend {
+        let mut cfg = GemmConfig::paper_table2(tiles);
+        // Serving shapes are small; a modest CCP avoids degenerate blocks.
+        cfg.ccp = crate::gemm::Ccp { mc: 256, nc: 256, kc: 1024 };
+        RustGemmBackend { arch, mlp, cfg }
+    }
+
+    pub fn mlp(&self) -> &Mlp {
+        &self.mlp
+    }
+}
+
+impl Backend for RustGemmBackend {
+    fn in_dim(&self) -> usize {
+        self.mlp.spec.dims[0]
+    }
+    fn n_classes(&self) -> usize {
+        *self.mlp.spec.dims.last().unwrap()
+    }
+
+    fn infer_batch(&mut self, batch: usize, x: &[f32]) -> Result<(Vec<f32>, u64)> {
+        let engine = ParallelGemm::new(&self.arch);
+        let mut cycles = 0u64;
+        let mut err: Option<anyhow::Error> = None;
+        let logits = self.mlp.forward(batch, x, |a, b, c| {
+            match engine.run(&self.cfg, a, b, c) {
+                Ok((cy, _)) => cycles += cy.total,
+                Err(e) => err = Some(e),
+            }
+        });
+        if let Some(e) = err {
+            return Err(e);
+        }
+        Ok((logits, cycles))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::vc1902;
+    use crate::gemm::baseline::naive_gemm;
+
+    #[test]
+    fn echo_backend_shapes() {
+        let mut b = EchoBackend { in_dim: 4, n_classes: 3 };
+        let (logits, cy) = b.infer_batch(2, &[9.0, 0.0, 0.0, 0.0, 7.0, 0.0, 0.0, 0.0]).unwrap();
+        assert_eq!(logits.len(), 6);
+        assert_eq!(logits[0], 9.0);
+        assert_eq!(logits[3], 7.0);
+        assert_eq!(cy, 200);
+    }
+
+    #[test]
+    fn rust_backend_matches_direct_mlp_forward() {
+        let spec = MlpSpec { dims: vec![16, 12, 4] };
+        let mut backend = RustGemmBackend::new(vc1902(), spec.clone(), 99, 4);
+        let x: Vec<f32> = (0..2 * 16).map(|i| (i as f32 * 0.1).sin()).collect();
+        let (logits, cycles) = backend.infer_batch(2, &x).unwrap();
+        // Same model, same quantisation, naive GEMM — must match exactly
+        // (the parallel engine's integer numerics are exact).
+        let want = Mlp::random(spec, 99).forward(2, &x, naive_gemm);
+        assert_eq!(logits, want);
+        assert!(cycles > 0, "simulated cycles attached");
+    }
+}

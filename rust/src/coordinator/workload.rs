@@ -1,0 +1,142 @@
+//! Workload generation for the serving benches and examples: arrival
+//! processes and request mixes, so the coordinator is evaluated under
+//! realistic (and reproducible) traffic rather than closed-loop bursts.
+
+use crate::util::Pcg32;
+
+/// Inter-arrival process of a request stream.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ArrivalProcess {
+    /// Poisson arrivals at `rate` requests/second.
+    Poisson { rate: f64 },
+    /// Fixed-interval arrivals at `rate` requests/second.
+    Uniform { rate: f64 },
+    /// Markov-modulated Poisson: alternates `burst_rate` and `idle_rate`
+    /// phases with mean phase length `mean_phase_s` — the bursty traffic
+    /// that stresses the batcher's deadline logic.
+    Bursty { burst_rate: f64, idle_rate: f64, mean_phase_s: f64 },
+}
+
+/// Generator of arrival offsets (seconds from stream start).
+#[derive(Debug, Clone)]
+pub struct ArrivalGen {
+    process: ArrivalProcess,
+    rng: Pcg32,
+    clock: f64,
+    in_burst: bool,
+    phase_left: f64,
+}
+
+impl ArrivalGen {
+    pub fn new(process: ArrivalProcess, seed: u64) -> ArrivalGen {
+        ArrivalGen { process, rng: Pcg32::new(seed), clock: 0.0, in_burst: true, phase_left: 0.0 }
+    }
+
+    /// Next arrival time, in seconds since the stream start.
+    pub fn next_arrival(&mut self) -> f64 {
+        let dt = match self.process {
+            ArrivalProcess::Poisson { rate } => self.rng.exp(rate),
+            ArrivalProcess::Uniform { rate } => 1.0 / rate,
+            ArrivalProcess::Bursty { burst_rate, idle_rate, mean_phase_s } => {
+                if self.phase_left <= 0.0 {
+                    self.in_burst = !self.in_burst;
+                    self.phase_left = self.rng.exp(1.0 / mean_phase_s);
+                }
+                let rate = if self.in_burst { burst_rate } else { idle_rate };
+                let dt = self.rng.exp(rate);
+                self.phase_left -= dt;
+                dt
+            }
+        };
+        self.clock += dt;
+        self.clock
+    }
+
+    /// Generate the first `n` arrival offsets.
+    pub fn take(&mut self, n: usize) -> Vec<f64> {
+        (0..n).map(|_| self.next_arrival()).collect()
+    }
+}
+
+/// A reproducible feature-vector source for a given input width.
+#[derive(Debug, Clone)]
+pub struct FeatureGen {
+    rng: Pcg32,
+    dim: usize,
+}
+
+impl FeatureGen {
+    pub fn new(dim: usize, seed: u64) -> FeatureGen {
+        FeatureGen { rng: Pcg32::new(seed), dim }
+    }
+
+    pub fn next(&mut self) -> Vec<f32> {
+        (0..self.dim).map(|_| self.rng.f64() as f32).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_mean_rate() {
+        let mut g = ArrivalGen::new(ArrivalProcess::Poisson { rate: 100.0 }, 1);
+        let n = 20_000;
+        let last = g.take(n).pop().unwrap();
+        let rate = n as f64 / last;
+        assert!((rate - 100.0).abs() / 100.0 < 0.05, "empirical rate {rate}");
+    }
+
+    #[test]
+    fn uniform_is_evenly_spaced() {
+        let mut g = ArrivalGen::new(ArrivalProcess::Uniform { rate: 10.0 }, 2);
+        let a = g.take(5);
+        for (i, t) in a.iter().enumerate() {
+            assert!((t - 0.1 * (i + 1) as f64).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn arrivals_strictly_increasing() {
+        for p in [
+            ArrivalProcess::Poisson { rate: 50.0 },
+            ArrivalProcess::Uniform { rate: 50.0 },
+            ArrivalProcess::Bursty { burst_rate: 500.0, idle_rate: 5.0, mean_phase_s: 0.1 },
+        ] {
+            let mut g = ArrivalGen::new(p, 3);
+            let a = g.take(500);
+            for w in a.windows(2) {
+                assert!(w[1] > w[0], "{p:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn bursty_has_higher_variance_than_poisson() {
+        let cv2 = |xs: &[f64]| {
+            let d: Vec<f64> = xs.windows(2).map(|w| w[1] - w[0]).collect();
+            let m = d.iter().sum::<f64>() / d.len() as f64;
+            let v = d.iter().map(|x| (x - m).powi(2)).sum::<f64>() / d.len() as f64;
+            v / (m * m)
+        };
+        let mut pg = ArrivalGen::new(ArrivalProcess::Poisson { rate: 100.0 }, 4);
+        let mut bg = ArrivalGen::new(
+            ArrivalProcess::Bursty { burst_rate: 1000.0, idle_rate: 10.0, mean_phase_s: 0.05 },
+            4,
+        );
+        let p = pg.take(5000);
+        let b = bg.take(5000);
+        assert!(cv2(&b) > 2.0 * cv2(&p), "bursty CV² {} vs poisson {}", cv2(&b), cv2(&p));
+    }
+
+    #[test]
+    fn features_reproducible_and_sized() {
+        let mut a = FeatureGen::new(16, 9);
+        let mut b = FeatureGen::new(16, 9);
+        let fa = a.next();
+        assert_eq!(fa.len(), 16);
+        assert_eq!(fa, b.next());
+        assert!(fa.iter().all(|v| (0.0..1.0).contains(v)));
+    }
+}

@@ -1,0 +1,257 @@
+//! Transformer-encoder attention block on the quantised GEMM engine.
+//!
+//! The paper's intro names "modern transformer encoders" as a target
+//! workload (\[11\], \[12\]); this module realises one: multi-head
+//! self-attention + FFN where every projection and the attention
+//! products run through a caller-supplied u8 GEMM (the same engine /
+//! artifacts as everything else). Softmax and layernorm stay in f32 on
+//! the host — exactly the split an ACAP deployment would use (AIEs do
+//! GEMM, the ARM core does the cheap nonlinear glue).
+
+use super::linear::{Activation, QuantLinear};
+use crate::gemm::{MatI32, MatU8};
+use crate::util::Pcg32;
+
+/// Configuration of one encoder block.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AttentionSpec {
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+}
+
+impl AttentionSpec {
+    pub fn bert_base() -> AttentionSpec {
+        AttentionSpec { d_model: 768, n_heads: 12, d_ff: 3072 }
+    }
+
+    /// Small configuration for tests/examples.
+    pub fn tiny() -> AttentionSpec {
+        AttentionSpec { d_model: 32, n_heads: 4, d_ff: 64 }
+    }
+
+    pub fn d_head(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    /// GEMM shapes of one block at a given sequence length (the paper's
+    /// workload-characterisation view).
+    pub fn gemm_shapes(&self, seq: usize) -> Vec<(usize, usize, usize)> {
+        let d = self.d_model;
+        let dh = self.d_head();
+        let mut v = vec![(seq, d, 3 * d)]; // fused QKV projection
+        for _ in 0..self.n_heads {
+            v.push((seq, dh, seq)); // scores = Q Kᵀ
+            v.push((seq, seq, dh)); // context = P V
+        }
+        v.push((seq, d, d)); // output projection
+        v.push((seq, d, self.d_ff)); // FFN up
+        v.push((seq, self.d_ff, d)); // FFN down
+        v
+    }
+}
+
+/// One quantised encoder block.
+#[derive(Debug, Clone)]
+pub struct EncoderBlock {
+    pub spec: AttentionSpec,
+    qkv: QuantLinear,
+    out_proj: QuantLinear,
+    ffn_up: QuantLinear,
+    ffn_down: QuantLinear,
+}
+
+fn softmax_rows(x: &mut [f32], rows: usize, cols: usize) {
+    for r in 0..rows {
+        let row = &mut x[r * cols..(r + 1) * cols];
+        let max = row.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
+        let mut sum = 0.0;
+        for v in row.iter_mut() {
+            *v = (*v - max).exp();
+            sum += *v;
+        }
+        for v in row.iter_mut() {
+            *v /= sum;
+        }
+    }
+}
+
+fn layernorm_rows(x: &mut [f32], rows: usize, cols: usize) {
+    for r in 0..rows {
+        let row = &mut x[r * cols..(r + 1) * cols];
+        let mean = row.iter().sum::<f32>() / cols as f32;
+        let var = row.iter().map(|v| (v - mean).powi(2)).sum::<f32>() / cols as f32;
+        let inv = 1.0 / (var + 1e-5).sqrt();
+        for v in row.iter_mut() {
+            *v = (*v - mean) * inv;
+        }
+    }
+}
+
+/// f32 matmul helper for the small attention products when quantisation
+/// of dynamic activations x activations is not wanted (reference path).
+fn f32_matmul(m: usize, k: usize, n: usize, a: &[f32], b: &[f32]) -> Vec<f32> {
+    let mut c = vec![0.0f32; m * n];
+    for i in 0..m {
+        for p in 0..k {
+            let av = a[i * k + p];
+            if av == 0.0 {
+                continue;
+            }
+            for j in 0..n {
+                c[i * n + j] += av * b[p * n + j];
+            }
+        }
+    }
+    c
+}
+
+impl EncoderBlock {
+    pub fn random(spec: AttentionSpec, seed: u64) -> EncoderBlock {
+        assert_eq!(spec.d_model % spec.n_heads, 0, "d_model must divide by heads");
+        let mut rng = Pcg32::new(seed);
+        EncoderBlock {
+            spec,
+            qkv: QuantLinear::random(spec.d_model, 3 * spec.d_model, Activation::None, &mut rng),
+            out_proj: QuantLinear::random(spec.d_model, spec.d_model, Activation::None, &mut rng),
+            ffn_up: QuantLinear::random(spec.d_model, spec.d_ff, Activation::Relu, &mut rng),
+            ffn_down: QuantLinear::random(spec.d_ff, spec.d_model, Activation::None, &mut rng),
+        }
+    }
+
+    /// Forward `seq × d_model` activations. Projections/FFN run on the
+    /// quantised GEMM closure; attention products (activation ×
+    /// activation) run in f32 on the host reference path.
+    pub fn forward(
+        &self,
+        seq: usize,
+        x: &[f32],
+        mut gemm: impl FnMut(&MatU8, &MatU8, &mut MatI32),
+    ) -> Vec<f32> {
+        let d = self.spec.d_model;
+        let h = self.spec.n_heads;
+        let dh = self.spec.d_head();
+        assert_eq!(x.len(), seq * d, "input shape");
+
+        // QKV projection (quantised GEMM).
+        let qkv = self.qkv.forward(seq, x, &mut gemm); // seq × 3d
+        let scale = 1.0 / (dh as f32).sqrt();
+
+        // Per-head attention.
+        let mut context = vec![0.0f32; seq * d];
+        for head in 0..h {
+            // Slice Q, K, V for this head out of the fused projection.
+            let mut q = vec![0.0f32; seq * dh];
+            let mut kx = vec![0.0f32; seq * dh];
+            let mut vx = vec![0.0f32; seq * dh];
+            for s in 0..seq {
+                for e in 0..dh {
+                    q[s * dh + e] = qkv[s * 3 * d + head * dh + e];
+                    kx[s * dh + e] = qkv[s * 3 * d + d + head * dh + e];
+                    vx[s * dh + e] = qkv[s * 3 * d + 2 * d + head * dh + e];
+                }
+            }
+            // scores = Q Kᵀ / sqrt(dh); softmax; context = P V.
+            let mut kt = vec![0.0f32; dh * seq];
+            for s in 0..seq {
+                for e in 0..dh {
+                    kt[e * seq + s] = kx[s * dh + e];
+                }
+            }
+            let mut scores = f32_matmul(seq, dh, seq, &q, &kt);
+            for v in scores.iter_mut() {
+                *v *= scale;
+            }
+            softmax_rows(&mut scores, seq, seq);
+            let ctx = f32_matmul(seq, seq, dh, &scores, &vx);
+            for s in 0..seq {
+                for e in 0..dh {
+                    context[s * d + head * dh + e] = ctx[s * dh + e];
+                }
+            }
+        }
+
+        // Output projection + residual + norm (quantised GEMM).
+        let proj = self.out_proj.forward(seq, &context, &mut gemm);
+        let mut hidden: Vec<f32> = proj.iter().zip(x).map(|(p, xi)| p + xi).collect();
+        layernorm_rows(&mut hidden, seq, d);
+
+        // FFN + residual + norm (quantised GEMMs).
+        let up = self.ffn_up.forward(seq, &hidden, &mut gemm);
+        let down = self.ffn_down.forward(seq, &up, &mut gemm);
+        let mut out: Vec<f32> = down.iter().zip(&hidden).map(|(a, b)| a + b).collect();
+        layernorm_rows(&mut out, seq, d);
+        out
+    }
+
+    /// Total MACs of one forward at sequence length `seq`.
+    pub fn macs(&self, seq: usize) -> u64 {
+        self.spec
+            .gemm_shapes(seq)
+            .iter()
+            .map(|&(m, k, n)| (m * k * n) as u64)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::baseline::naive_gemm;
+
+    #[test]
+    fn forward_shapes_and_finiteness() {
+        let block = EncoderBlock::random(AttentionSpec::tiny(), 1);
+        let seq = 6;
+        let x: Vec<f32> = (0..seq * 32).map(|i| ((i as f32) * 0.13).sin()).collect();
+        let y = block.forward(seq, &x, naive_gemm);
+        assert_eq!(y.len(), seq * 32);
+        assert!(y.iter().all(|v| v.is_finite()));
+        // Layernormed output: each row ~zero mean, unit variance.
+        let row = &y[..32];
+        let mean: f32 = row.iter().sum::<f32>() / 32.0;
+        assert!(mean.abs() < 1e-3, "mean {mean}");
+    }
+
+    #[test]
+    fn deterministic() {
+        let b1 = EncoderBlock::random(AttentionSpec::tiny(), 9);
+        let b2 = EncoderBlock::random(AttentionSpec::tiny(), 9);
+        let x = vec![0.25f32; 4 * 32];
+        assert_eq!(b1.forward(4, &x, naive_gemm), b2.forward(4, &x, naive_gemm));
+    }
+
+    #[test]
+    fn gemm_shapes_cover_all_products() {
+        let s = AttentionSpec::bert_base();
+        let shapes = s.gemm_shapes(128);
+        // QKV + 12 heads × 2 + proj + 2 FFN = 1 + 24 + 1 + 2 = 28.
+        assert_eq!(shapes.len(), 28);
+        assert_eq!(shapes[0], (128, 768, 2304));
+        assert_eq!(*shapes.last().unwrap(), (128, 3072, 768));
+    }
+
+    #[test]
+    fn macs_scale_quadratically_in_seq_for_attention() {
+        let b = EncoderBlock::random(AttentionSpec::tiny(), 2);
+        let m1 = b.macs(8) as f64;
+        let m2 = b.macs(16) as f64;
+        // Projections scale linearly, attention quadratically ⇒ ratio
+        // strictly between 2× and 4×.
+        assert!(m2 / m1 > 2.0 && m2 / m1 < 4.0, "ratio {}", m2 / m1);
+    }
+
+    #[test]
+    fn attention_varies_with_input() {
+        let block = EncoderBlock::random(AttentionSpec::tiny(), 3);
+        let x1 = vec![0.1f32; 4 * 32];
+        let x2: Vec<f32> = (0..4 * 32).map(|i| (i as f32 * 0.31).cos()).collect();
+        assert_ne!(block.forward(4, &x1, naive_gemm), block.forward(4, &x2, naive_gemm));
+    }
+
+    #[test]
+    #[should_panic(expected = "d_model must divide")]
+    fn bad_head_count_panics() {
+        EncoderBlock::random(AttentionSpec { d_model: 30, n_heads: 4, d_ff: 8 }, 1);
+    }
+}

@@ -1,0 +1,196 @@
+//! Convolution as GEMM via im2col (Chellapilla et al., the paper's \[10\]).
+//!
+//! A convolution of a `C_in × H × W` input with `C_out` kernels of size
+//! `C_in × KH × KW` (stride s, no padding) lowers to the GEMM
+//!
+//! ```text
+//! (C_out) × (C_in·KH·KW)  ·  (C_in·KH·KW) × (OH·OW)  =  C_out × (OH·OW)
+//! ```
+//!
+//! which is how CNN layers reach the paper's micro-kernel.
+
+use crate::gemm::{MatI32, MatU8};
+
+/// Convolution geometry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ConvSpec {
+    pub c_in: usize,
+    pub h: usize,
+    pub w: usize,
+    pub c_out: usize,
+    pub kh: usize,
+    pub kw: usize,
+    pub stride: usize,
+}
+
+impl ConvSpec {
+    pub fn out_h(&self) -> usize {
+        (self.h - self.kh) / self.stride + 1
+    }
+    pub fn out_w(&self) -> usize {
+        (self.w - self.kw) / self.stride + 1
+    }
+
+    /// The (m, k, n) GEMM shape this convolution lowers to.
+    pub fn gemm_shape(&self) -> (usize, usize, usize) {
+        (self.c_out, self.c_in * self.kh * self.kw, self.out_h() * self.out_w())
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.kh > self.h || self.kw > self.w {
+            return Err(format!("kernel {}x{} larger than input {}x{}", self.kh, self.kw, self.h, self.w));
+        }
+        if self.stride == 0 {
+            return Err("stride must be positive".into());
+        }
+        Ok(())
+    }
+}
+
+/// im2col: unfold input patches into the columns of a (C_in·KH·KW) ×
+/// (OH·OW) matrix. Input layout: channel-major `x[c][i][j]`.
+pub fn im2col(spec: &ConvSpec, x: &MatU8) -> MatU8 {
+    spec.validate().expect("invalid conv spec");
+    assert_eq!(x.rows, spec.c_in, "input rows must be channels");
+    assert_eq!(x.cols, spec.h * spec.w, "input cols must be H*W");
+    let (oh, ow) = (spec.out_h(), spec.out_w());
+    let k = spec.c_in * spec.kh * spec.kw;
+    let n = oh * ow;
+    let mut out = MatU8::zeros(k, n);
+    for c in 0..spec.c_in {
+        for ki in 0..spec.kh {
+            for kj in 0..spec.kw {
+                let krow = (c * spec.kh + ki) * spec.kw + kj;
+                for oi in 0..oh {
+                    for oj in 0..ow {
+                        let ii = oi * spec.stride + ki;
+                        let jj = oj * spec.stride + kj;
+                        out.set(krow, oi * ow + oj, x.at(c, ii * spec.w + jj));
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Direct (sliding-window) integer convolution — the correctness oracle
+/// for the im2col + GEMM path.
+pub fn direct_conv(spec: &ConvSpec, x: &MatU8, kernels: &MatU8) -> MatI32 {
+    spec.validate().expect("invalid conv spec");
+    let (oh, ow) = (spec.out_h(), spec.out_w());
+    assert_eq!(kernels.rows, spec.c_out);
+    assert_eq!(kernels.cols, spec.c_in * spec.kh * spec.kw);
+    let mut y = MatI32::zeros(spec.c_out, oh * ow);
+    for co in 0..spec.c_out {
+        for oi in 0..oh {
+            for oj in 0..ow {
+                let mut acc = 0i32;
+                for c in 0..spec.c_in {
+                    for ki in 0..spec.kh {
+                        for kj in 0..spec.kw {
+                            let ii = oi * spec.stride + ki;
+                            let jj = oj * spec.stride + kj;
+                            let kidx = (c * spec.kh + ki) * spec.kw + kj;
+                            acc += kernels.at(co, kidx) as i32
+                                * x.at(c, ii * spec.w + jj) as i32;
+                        }
+                    }
+                }
+                y.add(co, oi * ow + oj, acc);
+            }
+        }
+    }
+    y
+}
+
+/// Convolution through im2col + a caller-provided GEMM.
+pub fn conv_as_gemm(
+    spec: &ConvSpec,
+    x: &MatU8,
+    kernels: &MatU8,
+    gemm: impl FnOnce(&MatU8, &MatU8, &mut MatI32),
+) -> MatI32 {
+    let cols = im2col(spec, x);
+    let mut y = MatI32::zeros(spec.c_out, cols.cols);
+    gemm(kernels, &cols, &mut y);
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::baseline::naive_gemm;
+    use crate::util::quickcheck::prop;
+    use crate::util::Pcg32;
+
+    fn spec(c_in: usize, h: usize, w: usize, c_out: usize, k: usize, s: usize) -> ConvSpec {
+        ConvSpec { c_in, h, w, c_out, kh: k, kw: k, stride: s }
+    }
+
+    #[test]
+    fn identity_kernel_extracts_pixels() {
+        // 1×1 kernel, stride 1: output == input per channel map.
+        let s = spec(1, 3, 3, 1, 1, 1);
+        let x = MatU8::from_vec(1, 9, (1..=9).collect());
+        let k = MatU8::from_vec(1, 1, vec![1]);
+        let y = conv_as_gemm(&s, &x, &k, naive_gemm);
+        assert_eq!(y.data, (1..=9).map(|v| v as i32).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn gemm_shape_formula() {
+        let s = spec(3, 32, 32, 16, 3, 1);
+        assert_eq!(s.gemm_shape(), (16, 27, 30 * 30));
+        assert_eq!(s.out_h(), 30);
+    }
+
+    #[test]
+    fn im2col_matches_direct_conv() {
+        let mut rng = Pcg32::new(60);
+        let s = spec(2, 8, 8, 3, 3, 1);
+        let x = MatU8::random(2, 64, &mut rng);
+        let k = MatU8::random(3, 18, &mut rng);
+        let via_gemm = conv_as_gemm(&s, &x, &k, naive_gemm);
+        let direct = direct_conv(&s, &x, &k);
+        assert_eq!(via_gemm.max_abs_diff(&direct), 0);
+    }
+
+    #[test]
+    fn strided_conv_matches_direct() {
+        let mut rng = Pcg32::new(61);
+        let s = spec(1, 9, 9, 2, 3, 2);
+        let x = MatU8::random(1, 81, &mut rng);
+        let k = MatU8::random(2, 9, &mut rng);
+        assert_eq!(s.out_h(), 4);
+        let via_gemm = conv_as_gemm(&s, &x, &k, naive_gemm);
+        assert_eq!(via_gemm.max_abs_diff(&direct_conv(&s, &x, &k)), 0);
+    }
+
+    #[test]
+    fn invalid_specs_rejected() {
+        assert!(spec(1, 2, 2, 1, 3, 1).validate().is_err()); // kernel > input
+        assert!(spec(1, 4, 4, 1, 2, 0).validate().is_err()); // zero stride
+    }
+
+    #[test]
+    fn prop_im2col_gemm_equals_direct() {
+        prop("conv-im2col", 0xC0, 25, |g| {
+            let c_in = g.rng.range(1, 4);
+            let k = g.rng.range(1, 4);
+            let h = k + g.rng.range(0, 8);
+            let w = k + g.rng.range(0, 8);
+            let c_out = g.rng.range(1, 5);
+            let stride = g.rng.range(1, 3);
+            let s = ConvSpec { c_in, h, w, c_out, kh: k, kw: k, stride };
+            let x = MatU8::random(c_in, h * w, &mut g.rng);
+            let kern = MatU8::random(c_out, c_in * k * k, &mut g.rng);
+            let a = conv_as_gemm(&s, &x, &kern, naive_gemm);
+            let b = direct_conv(&s, &x, &kern);
+            if a.max_abs_diff(&b) != 0 {
+                return Err(format!("mismatch for {s:?}"));
+            }
+            Ok(())
+        });
+    }
+}

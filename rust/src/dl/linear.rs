@@ -1,0 +1,149 @@
+//! Quantised fully-connected layer.
+
+use crate::gemm::{MatI32, MatU8};
+use crate::quant::{quantized_linear, QTensor};
+
+/// Activation function applied after the affine transform.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Activation {
+    None,
+    Relu,
+}
+
+/// A linear layer `y = act(x·W + b)` with u8-quantised weights.
+///
+/// Weights are quantised once at construction; activations are quantised
+/// per batch (dynamic quantisation), matching the deployment style the
+/// paper's adaptive-precision motivation describes.
+#[derive(Debug, Clone)]
+pub struct QuantLinear {
+    pub in_dim: usize,
+    pub out_dim: usize,
+    pub weight: QTensor, // in_dim × out_dim
+    pub bias: Vec<f32>,
+    pub activation: Activation,
+}
+
+impl QuantLinear {
+    pub fn new(
+        in_dim: usize,
+        out_dim: usize,
+        weight_f32: &[f32],
+        bias: Vec<f32>,
+        activation: Activation,
+    ) -> QuantLinear {
+        assert_eq!(weight_f32.len(), in_dim * out_dim);
+        assert_eq!(bias.len(), out_dim);
+        QuantLinear {
+            in_dim,
+            out_dim,
+            weight: QTensor::from_f32(in_dim, out_dim, weight_f32),
+            bias,
+            activation,
+        }
+    }
+
+    /// Random init (He-style scale) for synthetic models.
+    pub fn random(
+        in_dim: usize,
+        out_dim: usize,
+        activation: Activation,
+        rng: &mut crate::util::Pcg32,
+    ) -> QuantLinear {
+        let scale = (2.0 / in_dim as f64).sqrt() as f32;
+        let w: Vec<f32> =
+            (0..in_dim * out_dim).map(|_| (rng.f64() as f32 * 2.0 - 1.0) * scale).collect();
+        let b: Vec<f32> = (0..out_dim).map(|_| (rng.f64() as f32 * 2.0 - 1.0) * 0.01).collect();
+        QuantLinear::new(in_dim, out_dim, &w, b, activation)
+    }
+
+    /// Forward a batch (`batch × in_dim`, row-major f32) through the
+    /// layer, running the integer MACs in the supplied GEMM closure.
+    pub fn forward(
+        &self,
+        batch: usize,
+        x: &[f32],
+        gemm: impl FnOnce(&MatU8, &MatU8, &mut MatI32),
+    ) -> Vec<f32> {
+        assert_eq!(x.len(), batch * self.in_dim, "input shape mismatch");
+        let qx = QTensor::from_f32(batch, self.in_dim, x);
+        let mut y = quantized_linear(
+            &qx.data,
+            &self.weight.data,
+            qx.params,
+            self.weight.params,
+            Some(&self.bias),
+            gemm,
+        );
+        if self.activation == Activation::Relu {
+            for v in &mut y {
+                *v = v.max(0.0);
+            }
+        }
+        y
+    }
+
+    /// The GEMM shape this layer induces for a given batch size.
+    pub fn gemm_shape(&self, batch: usize) -> (usize, usize, usize) {
+        (batch, self.in_dim, self.out_dim) // (m, k, n)
+    }
+
+    /// f32 reference forward (no quantisation) for error analysis.
+    pub fn forward_f32(&self, batch: usize, x: &[f32]) -> Vec<f32> {
+        let w = self.weight.to_f32();
+        let mut y = vec![0.0f32; batch * self.out_dim];
+        for i in 0..batch {
+            for j in 0..self.out_dim {
+                let mut acc = self.bias[j];
+                for p in 0..self.in_dim {
+                    acc += x[i * self.in_dim + p] * w[p * self.out_dim + j];
+                }
+                y[i * self.out_dim + j] =
+                    if self.activation == Activation::Relu { acc.max(0.0) } else { acc };
+            }
+        }
+        y
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::baseline::naive_gemm;
+    use crate::util::Pcg32;
+
+    #[test]
+    fn forward_matches_f32_reference_within_quant_error() {
+        let mut rng = Pcg32::new(50);
+        let layer = QuantLinear::random(32, 16, Activation::None, &mut rng);
+        let x: Vec<f32> = (0..4 * 32).map(|_| rng.f64() as f32 * 2.0 - 1.0).collect();
+        let got = layer.forward(4, &x, naive_gemm);
+        let want = layer.forward_f32(4, &x);
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() < 0.05, "{g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn relu_clamps_negatives() {
+        let layer = QuantLinear::new(1, 2, &[1.0, -1.0], vec![0.0, 0.0], Activation::Relu);
+        let y = layer.forward(1, &[1.0], naive_gemm);
+        assert!(y[0] > 0.9, "{y:?}");
+        assert_eq!(y[1], 0.0, "{y:?}");
+    }
+
+    #[test]
+    fn gemm_shape_is_batch_by_dims() {
+        let mut rng = Pcg32::new(51);
+        let layer = QuantLinear::random(784, 512, Activation::Relu, &mut rng);
+        assert_eq!(layer.gemm_shape(8), (8, 784, 512));
+    }
+
+    #[test]
+    #[should_panic(expected = "input shape mismatch")]
+    fn wrong_input_panics() {
+        let mut rng = Pcg32::new(52);
+        let layer = QuantLinear::random(4, 4, Activation::None, &mut rng);
+        layer.forward(2, &[0.0; 4], naive_gemm);
+    }
+}

@@ -1,0 +1,154 @@
+//! Quantised multi-layer perceptron — the model behind the end-to-end
+//! serving example and the `bench_e2e_serving` harness.
+
+use super::linear::{Activation, QuantLinear};
+use crate::gemm::{MatI32, MatU8};
+use crate::util::Pcg32;
+
+/// Model architecture: layer widths, e.g. `[784, 512, 512, 10]`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MlpSpec {
+    pub dims: Vec<usize>,
+}
+
+impl MlpSpec {
+    /// The classifier used throughout the examples: 784→512→512→10.
+    pub fn default_classifier() -> MlpSpec {
+        MlpSpec { dims: vec![784, 512, 512, 10] }
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.dims.len() - 1
+    }
+
+    /// Total parameters (weights + biases).
+    pub fn n_params(&self) -> usize {
+        self.dims.windows(2).map(|w| w[0] * w[1] + w[1]).sum()
+    }
+
+    /// GEMM shapes induced by a batch of the given size.
+    pub fn gemm_shapes(&self, batch: usize) -> Vec<(usize, usize, usize)> {
+        self.dims.windows(2).map(|w| (batch, w[0], w[1])).collect()
+    }
+}
+
+/// The model: a stack of quantised linear layers (ReLU between, linear
+/// head).
+#[derive(Debug, Clone)]
+pub struct Mlp {
+    pub spec: MlpSpec,
+    pub layers: Vec<QuantLinear>,
+}
+
+impl Mlp {
+    /// Deterministic random init.
+    pub fn random(spec: MlpSpec, seed: u64) -> Mlp {
+        assert!(spec.dims.len() >= 2, "need at least one layer");
+        let mut rng = Pcg32::new(seed);
+        let n = spec.n_layers();
+        let layers = spec
+            .dims
+            .windows(2)
+            .enumerate()
+            .map(|(i, w)| {
+                let act = if i + 1 == n { Activation::None } else { Activation::Relu };
+                QuantLinear::random(w[0], w[1], act, &mut rng)
+            })
+            .collect();
+        Mlp { spec, layers }
+    }
+
+    /// Forward a batch through all layers; `gemm` runs each layer's MACs.
+    pub fn forward(
+        &self,
+        batch: usize,
+        x: &[f32],
+        mut gemm: impl FnMut(&MatU8, &MatU8, &mut MatI32),
+    ) -> Vec<f32> {
+        let mut h = x.to_vec();
+        for layer in &self.layers {
+            h = layer.forward(batch, &h, &mut gemm);
+        }
+        h
+    }
+
+    /// f32 reference forward.
+    pub fn forward_f32(&self, batch: usize, x: &[f32]) -> Vec<f32> {
+        let mut h = x.to_vec();
+        for layer in &self.layers {
+            h = layer.forward_f32(batch, &h);
+        }
+        h
+    }
+
+    /// Argmax class per batch row.
+    pub fn predict(&self, batch: usize, logits: &[f32]) -> Vec<usize> {
+        let classes = *self.spec.dims.last().unwrap();
+        (0..batch)
+            .map(|i| {
+                let row = &logits[i * classes..(i + 1) * classes];
+                row.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(j, _)| j)
+                    .unwrap()
+            })
+            .collect()
+    }
+
+    /// Total MACs per sample (sum of layer GEMMs at batch 1).
+    pub fn macs_per_sample(&self) -> u64 {
+        self.spec.dims.windows(2).map(|w| (w[0] * w[1]) as u64).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::baseline::naive_gemm;
+
+    #[test]
+    fn spec_accounting() {
+        let s = MlpSpec::default_classifier();
+        assert_eq!(s.n_layers(), 3);
+        assert_eq!(s.n_params(), 784 * 512 + 512 + 512 * 512 + 512 + 512 * 10 + 10);
+        assert_eq!(s.gemm_shapes(8), vec![(8, 784, 512), (8, 512, 512), (8, 512, 10)]);
+    }
+
+    #[test]
+    fn quantized_forward_agrees_with_f32_on_predictions() {
+        let mlp = Mlp::random(MlpSpec { dims: vec![32, 24, 8] }, 7);
+        let mut rng = Pcg32::new(70);
+        let batch = 16;
+        let x: Vec<f32> = (0..batch * 32).map(|_| rng.f64() as f32 * 2.0 - 1.0).collect();
+        let q = mlp.forward(batch, &x, naive_gemm);
+        let f = mlp.forward_f32(batch, &x);
+        let pq = mlp.predict(batch, &q);
+        let pf = mlp.predict(batch, &f);
+        // Quantisation may flip rare near-ties; demand ≥ 14/16 agreement.
+        let agree = pq.iter().zip(&pf).filter(|(a, b)| a == b).count();
+        assert!(agree >= 14, "only {agree}/16 predictions agree");
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let a = Mlp::random(MlpSpec { dims: vec![8, 4] }, 3);
+        let b = Mlp::random(MlpSpec { dims: vec![8, 4] }, 3);
+        let x = vec![0.5f32; 8];
+        assert_eq!(a.forward(1, &x, naive_gemm), b.forward(1, &x, naive_gemm));
+    }
+
+    #[test]
+    fn macs_per_sample_formula() {
+        let s = MlpSpec::default_classifier();
+        let mlp = Mlp::random(s, 1);
+        assert_eq!(mlp.macs_per_sample(), (784 * 512 + 512 * 512 + 512 * 10) as u64);
+    }
+
+    #[test]
+    fn predict_picks_argmax() {
+        let mlp = Mlp::random(MlpSpec { dims: vec![2, 3] }, 1);
+        let p = mlp.predict(2, &[0.1, 0.9, 0.3, 5.0, -1.0, 2.0]);
+        assert_eq!(p, vec![1, 0]);
+    }
+}

@@ -1,0 +1,27 @@
+//! Deep-learning substrate: the workloads that motivate the paper.
+//!
+//! §1: "DL training and inference with well-known convolutional neural
+//! networks (CNNs), as well as modern transformer encoders, cast a
+//! significant portion of their arithmetic cost in terms of this
+//! computational kernel \[GEMM\]". This module realises that claim:
+//!
+//! - [`linear`] — a quantised fully-connected layer whose MACs run
+//!   through any u8 GEMM implementation (blocked/parallel/PJRT).
+//! - [`conv`]   — im2col lowering: convolution as GEMM, the classical
+//!   Chellapilla et al. construction the paper cites (\[10\]).
+//! - [`mlp`]    — a quantised multi-layer perceptron: the model served by
+//!   the end-to-end example (`examples/dl_inference.rs`).
+//! - [`traces`] — GEMM shape traces of representative CNN/transformer
+//!   models, used by the serving benches and the CCP explorer.
+
+pub mod attention;
+pub mod conv;
+pub mod linear;
+pub mod mlp;
+pub mod traces;
+pub mod train;
+
+pub use attention::{AttentionSpec, EncoderBlock};
+pub use linear::QuantLinear;
+pub use mlp::{Mlp, MlpSpec};
+pub use traces::{model_trace, GemmShape, ModelKind};

@@ -1,0 +1,141 @@
+//! GEMM shape traces of representative deep-learning models.
+//!
+//! The serving benches and the CCP explorer sweep over the GEMM shapes
+//! that real inference workloads produce — CNN layers via im2col and
+//! transformer-encoder projections — rather than cubes only. Shapes
+//! follow the standard published architectures (VGG16, ResNet-50 stage
+//! shapes via im2col; BERT-base projection/FFN shapes), which is what the
+//! paper's intro points at when it cites CNN and transformer inference.
+
+use super::conv::ConvSpec;
+
+/// A GEMM problem instance (m, k, n) with a human label.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct GemmShape {
+    pub label: String,
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+}
+
+impl GemmShape {
+    pub fn new(label: &str, m: usize, k: usize, n: usize) -> GemmShape {
+        GemmShape { label: label.to_string(), m, k, n }
+    }
+
+    pub fn macs(&self) -> u64 {
+        self.m as u64 * self.k as u64 * self.n as u64
+    }
+}
+
+/// Known workload families.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ModelKind {
+    /// VGG16 convolution layers lowered with im2col (224×224 input).
+    Vgg16,
+    /// ResNet-50 representative stage convolutions (224×224 input).
+    Resnet50,
+    /// BERT-base encoder projections and FFN (seq len parameterised).
+    BertBase { seq: usize },
+    /// The examples' MLP classifier at a given batch size.
+    MlpClassifier { batch: usize },
+}
+
+fn conv_shape(label: &str, c_in: usize, hw: usize, c_out: usize, k: usize, stride: usize) -> GemmShape {
+    let s = ConvSpec { c_in, h: hw, w: hw, c_out, kh: k, kw: k, stride };
+    let (m, kk, n) = s.gemm_shape();
+    GemmShape::new(label, m, kk, n)
+}
+
+/// The GEMM trace (ordered layer shapes) of a model.
+pub fn model_trace(kind: ModelKind) -> Vec<GemmShape> {
+    match kind {
+        ModelKind::Vgg16 => vec![
+            conv_shape("vgg16.conv1_1", 3, 224, 64, 3, 1),
+            conv_shape("vgg16.conv1_2", 64, 222, 64, 3, 1),
+            conv_shape("vgg16.conv2_1", 64, 112, 128, 3, 1),
+            conv_shape("vgg16.conv2_2", 128, 110, 128, 3, 1),
+            conv_shape("vgg16.conv3_1", 128, 56, 256, 3, 1),
+            conv_shape("vgg16.conv3_2", 256, 54, 256, 3, 1),
+            conv_shape("vgg16.conv4_1", 256, 28, 512, 3, 1),
+            conv_shape("vgg16.conv4_2", 512, 26, 512, 3, 1),
+            conv_shape("vgg16.conv5_1", 512, 14, 512, 3, 1),
+            GemmShape::new("vgg16.fc6", 1, 25088, 4096),
+            GemmShape::new("vgg16.fc7", 1, 4096, 4096),
+            GemmShape::new("vgg16.fc8", 1, 4096, 1000),
+        ],
+        ModelKind::Resnet50 => vec![
+            conv_shape("resnet50.conv1", 3, 224, 64, 7, 2),
+            conv_shape("resnet50.stage2.3x3", 64, 56, 64, 3, 1),
+            GemmShape::new("resnet50.stage2.1x1", 256, 64, 56 * 56),
+            conv_shape("resnet50.stage3.3x3", 128, 28, 128, 3, 1),
+            GemmShape::new("resnet50.stage3.1x1", 512, 128, 28 * 28),
+            conv_shape("resnet50.stage4.3x3", 256, 14, 256, 3, 1),
+            GemmShape::new("resnet50.stage4.1x1", 1024, 256, 14 * 14),
+            conv_shape("resnet50.stage5.3x3", 512, 7, 512, 3, 1),
+            GemmShape::new("resnet50.fc", 1, 2048, 1000),
+        ],
+        ModelKind::BertBase { seq } => {
+            let d = 768;
+            let ffn = 3072;
+            vec![
+                GemmShape::new("bert.qkv", seq, d, 3 * d),
+                GemmShape::new("bert.attn_scores", seq, d / 12, seq), // per head
+                GemmShape::new("bert.attn_out", seq, seq, d / 12),
+                GemmShape::new("bert.proj", seq, d, d),
+                GemmShape::new("bert.ffn_up", seq, d, ffn),
+                GemmShape::new("bert.ffn_down", seq, ffn, d),
+            ]
+        }
+        ModelKind::MlpClassifier { batch } => {
+            super::mlp::MlpSpec::default_classifier()
+                .gemm_shapes(batch)
+                .into_iter()
+                .enumerate()
+                .map(|(i, (m, k, n))| GemmShape::new(&format!("mlp.fc{}", i + 1), m, k, n))
+                .collect()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn traces_are_nonempty_and_positive() {
+        for kind in [
+            ModelKind::Vgg16,
+            ModelKind::Resnet50,
+            ModelKind::BertBase { seq: 128 },
+            ModelKind::MlpClassifier { batch: 8 },
+        ] {
+            let t = model_trace(kind);
+            assert!(!t.is_empty());
+            for s in &t {
+                assert!(s.m > 0 && s.k > 0 && s.n > 0, "{s:?}");
+                assert!(s.macs() > 0);
+            }
+        }
+    }
+
+    #[test]
+    fn vgg_first_layer_shape_is_canonical() {
+        // conv1_1: 64 kernels of 3×3×3 over 224×224 → (64, 27, 222·222).
+        let t = model_trace(ModelKind::Vgg16);
+        assert_eq!((t[0].m, t[0].k, t[0].n), (64, 27, 222 * 222));
+    }
+
+    #[test]
+    fn bert_qkv_shape() {
+        let t = model_trace(ModelKind::BertBase { seq: 128 });
+        assert_eq!((t[0].m, t[0].k, t[0].n), (128, 768, 2304));
+    }
+
+    #[test]
+    fn mlp_trace_tracks_batch() {
+        let t = model_trace(ModelKind::MlpClassifier { batch: 4 });
+        assert_eq!((t[0].m, t[0].k, t[0].n), (4, 784, 512));
+        assert_eq!(t.len(), 3);
+    }
+}

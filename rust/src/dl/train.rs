@@ -1,0 +1,346 @@
+//! Training substrate: a float MLP with SGD backprop, plus a synthetic
+//! classification dataset — so the serving examples run a model that has
+//! actually *learned* something and quantisation can be scored in
+//! accuracy points, not just logit error.
+//!
+//! (The paper targets inference; training here exists to produce
+//! realistic weights and an accuracy metric for the quantised pipeline —
+//! the standard way int8 deployments are evaluated.)
+
+use super::linear::{Activation, QuantLinear};
+use super::mlp::{Mlp, MlpSpec};
+use crate::util::Pcg32;
+
+/// A labelled dataset: row-major features plus class labels.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub n: usize,
+    pub dim: usize,
+    pub classes: usize,
+    pub x: Vec<f32>,
+    pub y: Vec<usize>,
+}
+
+impl Dataset {
+    /// Gaussian blobs: `classes` isotropic clusters with the given
+    /// center spread and noise — linearly separable-ish, learnable by a
+    /// small MLP in a few hundred SGD steps.
+    pub fn gaussian_blobs(
+        n: usize,
+        dim: usize,
+        classes: usize,
+        noise: f32,
+        seed: u64,
+    ) -> Dataset {
+        Self::gaussian_blobs_split(n, dim, classes, noise, seed, seed)
+    }
+
+    /// Like [`Dataset::gaussian_blobs`] but with independent seeds for
+    /// the cluster *centers* (the task) and the *noise* (the sampling) —
+    /// same `centers_seed` + different `noise_seed` gives a genuine
+    /// held-out test set for the same task.
+    pub fn gaussian_blobs_split(
+        n: usize,
+        dim: usize,
+        classes: usize,
+        noise: f32,
+        centers_seed: u64,
+        noise_seed: u64,
+    ) -> Dataset {
+        let mut crng = Pcg32::new(centers_seed);
+        // Class centers on a sphere-ish arrangement.
+        let centers: Vec<Vec<f32>> = (0..classes)
+            .map(|_| (0..dim).map(|_| crng.f64() as f32 * 2.0 - 1.0).collect())
+            .collect();
+        let mut rng = Pcg32::new(noise_seed.wrapping_mul(0x9E37_79B9).wrapping_add(1));
+        let mut x = Vec::with_capacity(n * dim);
+        let mut y = Vec::with_capacity(n);
+        for i in 0..n {
+            let c = i % classes;
+            y.push(c);
+            for d in 0..dim {
+                // Box-Muller-ish noise from two uniforms (sufficient here).
+                let u1 = rng.f64().max(1e-9);
+                let u2 = rng.f64();
+                let g = (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos();
+                x.push(centers[c][d] + noise * g as f32);
+            }
+        }
+        Dataset { n, dim, classes, x, y }
+    }
+
+    pub fn sample(&self, i: usize) -> (&[f32], usize) {
+        (&self.x[i * self.dim..(i + 1) * self.dim], self.y[i])
+    }
+}
+
+/// A float MLP for training (ReLU hidden layers, linear head).
+#[derive(Debug, Clone)]
+pub struct FloatMlp {
+    pub spec: MlpSpec,
+    /// Per layer: row-major `in × out` weights and `out` biases.
+    pub weights: Vec<Vec<f32>>,
+    pub biases: Vec<Vec<f32>>,
+}
+
+impl FloatMlp {
+    pub fn random(spec: MlpSpec, seed: u64) -> FloatMlp {
+        let mut rng = Pcg32::new(seed);
+        let mut weights = Vec::new();
+        let mut biases = Vec::new();
+        for w in spec.dims.windows(2) {
+            let (din, dout) = (w[0], w[1]);
+            let scale = (2.0 / din as f64).sqrt() as f32;
+            weights.push(
+                (0..din * dout).map(|_| (rng.f64() as f32 * 2.0 - 1.0) * scale).collect(),
+            );
+            biases.push(vec![0.0; dout]);
+        }
+        FloatMlp { spec, weights, biases }
+    }
+
+    /// Forward pass keeping pre/post activations for backprop.
+    fn forward_full(&self, x: &[f32]) -> (Vec<Vec<f32>>, Vec<f32>) {
+        let mut acts = vec![x.to_vec()];
+        let n_layers = self.weights.len();
+        for l in 0..n_layers {
+            let (din, dout) = (self.spec.dims[l], self.spec.dims[l + 1]);
+            let prev = acts.last().unwrap().clone();
+            let mut z = self.biases[l].clone();
+            for p in 0..din {
+                let a = prev[p];
+                if a == 0.0 {
+                    continue;
+                }
+                let wrow = &self.weights[l][p * dout..(p + 1) * dout];
+                for (j, zj) in z.iter_mut().enumerate() {
+                    *zj += a * wrow[j];
+                }
+            }
+            if l + 1 < n_layers {
+                for v in z.iter_mut() {
+                    *v = v.max(0.0);
+                }
+            }
+            acts.push(z);
+        }
+        let logits = acts.last().unwrap().clone();
+        (acts, logits)
+    }
+
+    pub fn forward(&self, x: &[f32]) -> Vec<f32> {
+        self.forward_full(x).1
+    }
+
+    /// One SGD step on a single sample with cross-entropy loss.
+    /// Returns the loss.
+    pub fn sgd_step(&mut self, x: &[f32], label: usize, lr: f32) -> f32 {
+        let (acts, logits) = self.forward_full(x);
+        // Softmax + CE gradient: p - onehot.
+        let max = logits.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
+        let exps: Vec<f32> = logits.iter().map(|v| (v - max).exp()).collect();
+        let sum: f32 = exps.iter().sum();
+        let probs: Vec<f32> = exps.iter().map(|e| e / sum).collect();
+        let loss = -probs[label].max(1e-9).ln();
+        let mut delta: Vec<f32> =
+            probs.iter().enumerate().map(|(j, &p)| p - if j == label { 1.0 } else { 0.0 }).collect();
+
+        // Backprop through layers.
+        for l in (0..self.weights.len()).rev() {
+            let (din, dout) = (self.spec.dims[l], self.spec.dims[l + 1]);
+            let a_in = &acts[l];
+            // Grad w.r.t. previous activation (before applying this
+            // layer's weight update).
+            let mut delta_prev = vec![0.0f32; din];
+            for p in 0..din {
+                let wrow = &self.weights[l][p * dout..(p + 1) * dout];
+                let mut acc = 0.0;
+                for j in 0..dout {
+                    acc += wrow[j] * delta[j];
+                }
+                delta_prev[p] = acc;
+            }
+            // Update weights/biases.
+            for p in 0..din {
+                let a = a_in[p];
+                if a != 0.0 {
+                    let wrow = &mut self.weights[l][p * dout..(p + 1) * dout];
+                    for j in 0..dout {
+                        wrow[j] -= lr * a * delta[j];
+                    }
+                }
+            }
+            for j in 0..dout {
+                self.biases[l][j] -= lr * delta[j];
+            }
+            // ReLU mask for the next (earlier) layer.
+            if l > 0 {
+                for (p, d) in delta_prev.iter_mut().enumerate() {
+                    if acts[l][p] <= 0.0 {
+                        *d = 0.0;
+                    }
+                }
+            }
+            delta = delta_prev;
+        }
+        loss
+    }
+
+    /// Train for `epochs` passes over the dataset; returns per-epoch
+    /// mean loss (the "loss curve" of the run log).
+    pub fn train(&mut self, data: &Dataset, epochs: usize, lr: f32, seed: u64) -> Vec<f32> {
+        let mut order: Vec<usize> = (0..data.n).collect();
+        let mut rng = Pcg32::new(seed);
+        let mut curve = Vec::with_capacity(epochs);
+        for _ in 0..epochs {
+            rng.shuffle(&mut order);
+            let mut total = 0.0;
+            for &i in &order {
+                let (x, y) = data.sample(i);
+                total += self.sgd_step(x, y, lr);
+            }
+            curve.push(total / data.n as f32);
+        }
+        curve
+    }
+
+    /// Classification accuracy on a dataset.
+    pub fn accuracy(&self, data: &Dataset) -> f64 {
+        let mut ok = 0;
+        for i in 0..data.n {
+            let (x, y) = data.sample(i);
+            let logits = self.forward(x);
+            let pred = logits
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(j, _)| j)
+                .unwrap();
+            if pred == y {
+                ok += 1;
+            }
+        }
+        ok as f64 / data.n as f64
+    }
+
+    /// Quantise the trained weights into the integer-GEMM [`Mlp`].
+    pub fn quantize(&self) -> Mlp {
+        let n = self.weights.len();
+        let layers = self
+            .weights
+            .iter()
+            .zip(&self.biases)
+            .enumerate()
+            .map(|(l, (w, b))| {
+                let act = if l + 1 == n { Activation::None } else { Activation::Relu };
+                QuantLinear::new(self.spec.dims[l], self.spec.dims[l + 1], w, b.clone(), act)
+            })
+            .collect();
+        Mlp { spec: self.spec.clone(), layers }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::baseline::naive_gemm;
+
+    fn blobs() -> Dataset {
+        Dataset::gaussian_blobs(240, 16, 4, 0.15, 42)
+    }
+
+    #[test]
+    fn dataset_shapes_and_balance() {
+        let d = blobs();
+        assert_eq!(d.x.len(), 240 * 16);
+        assert_eq!(d.y.len(), 240);
+        for c in 0..4 {
+            assert_eq!(d.y.iter().filter(|&&y| y == c).count(), 60);
+        }
+    }
+
+    #[test]
+    fn training_reduces_loss_and_learns() {
+        let d = blobs();
+        let mut m = FloatMlp::random(MlpSpec { dims: vec![16, 24, 4] }, 7);
+        let before = m.accuracy(&d);
+        let curve = m.train(&d, 12, 0.05, 1);
+        let after = m.accuracy(&d);
+        assert!(
+            curve.last().unwrap() < &(curve[0] * 0.5),
+            "loss should at least halve: {curve:?}"
+        );
+        assert!(after > 0.95, "train accuracy {after} (before {before})");
+        assert!(after > before);
+    }
+
+    #[test]
+    fn quantized_model_preserves_accuracy() {
+        let d = blobs();
+        let mut m = FloatMlp::random(MlpSpec { dims: vec![16, 24, 4] }, 7);
+        m.train(&d, 12, 0.05, 1);
+        let float_acc = m.accuracy(&d);
+        let q = m.quantize();
+        let mut ok = 0;
+        for i in 0..d.n {
+            let (x, y) = d.sample(i);
+            let logits = q.forward(1, x, naive_gemm);
+            if q.predict(1, &logits)[0] == y {
+                ok += 1;
+            }
+        }
+        let q_acc = ok as f64 / d.n as f64;
+        assert!(
+            q_acc >= float_acc - 0.03,
+            "quantisation cost too much accuracy: {q_acc} vs {float_acc}"
+        );
+    }
+
+    #[test]
+    fn sgd_step_returns_finite_positive_loss() {
+        let d = blobs();
+        let mut m = FloatMlp::random(MlpSpec { dims: vec![16, 8, 4] }, 3);
+        let (x, y) = d.sample(0);
+        let loss = m.sgd_step(x, y, 0.01);
+        assert!(loss.is_finite() && loss > 0.0);
+    }
+
+    #[test]
+    fn generalisation_to_held_out_noise() {
+        // Same centers (same task), independent noise draws: a real
+        // held-out set.
+        let train = Dataset::gaussian_blobs_split(400, 16, 4, 0.15, 42, 1);
+        let mut m = FloatMlp::random(MlpSpec { dims: vec![16, 24, 4] }, 7);
+        m.train(&train, 12, 0.05, 1);
+        let test = Dataset::gaussian_blobs_split(200, 16, 4, 0.15, 42, 2);
+        assert!(m.accuracy(&test) > 0.9);
+    }
+
+    #[test]
+    fn split_seeds_share_centers_not_noise() {
+        let a = Dataset::gaussian_blobs_split(40, 8, 2, 0.1, 5, 1);
+        let b = Dataset::gaussian_blobs_split(40, 8, 2, 0.1, 5, 2);
+        let c = Dataset::gaussian_blobs_split(40, 8, 2, 0.1, 6, 1);
+        assert_ne!(a.x, b.x, "different noise seeds differ");
+        // Same centers ⇒ per-class means close; different centers ⇒ far.
+        let mean0 = |d: &Dataset| -> Vec<f32> {
+            let mut m = vec![0.0f32; 8];
+            let mut n = 0;
+            for i in 0..d.n {
+                let (x, y) = d.sample(i);
+                if y == 0 {
+                    for (mm, &v) in m.iter_mut().zip(x) {
+                        *mm += v;
+                    }
+                    n += 1;
+                }
+            }
+            m.iter().map(|v| v / n as f32).collect()
+        };
+        let (ma, mb, mc) = (mean0(&a), mean0(&b), mean0(&c));
+        let dist = |p: &[f32], q: &[f32]| -> f32 {
+            p.iter().zip(q).map(|(x, y)| (x - y).powi(2)).sum::<f32>().sqrt()
+        };
+        assert!(dist(&ma, &mb) < dist(&ma, &mc), "same-task sets are closer");
+    }
+}

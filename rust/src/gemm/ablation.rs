@@ -1,0 +1,271 @@
+//! Loop-parallelisation ablation — §4.4 quantified.
+//!
+//! The paper *argues* the choice of loop L4 qualitatively: L1 suits
+//! multi-socket machines (private everything), L3 suits private-L2
+//! systems, L4/L5 suit private-L1 + shared-L2/L3 — which matches the
+//! Versal (private local memory, shared FPGA RAMs) — and L2/L6 race on C.
+//! This module puts cycle numbers on each option so the argument becomes
+//! an experiment (`bench_loop_ablation`).
+//!
+//! Cost mechanics per strategy (all reuse the same calibrated primitives):
+//!
+//! - **L4** (paper's choice): Br private per tile, Ar multicast (free in
+//!   tile count), Cr contends on DDR. The model of [`super::parallel`].
+//! - **L5**: tiles split the `ir` range, so every tile needs a *different*
+//!   Ar micro-panel simultaneously — Ar reads cannot multicast and
+//!   contend on the Ultra RAM port (stream cost scales with tile count);
+//!   Br is shared (multicast-able into each local memory once per L4
+//!   iteration).
+//! - **L3**: tiles work on different `ic` blocks: Ac must be split N ways
+//!   across the Ultra RAM (smaller effective mc ⇒ more L3 iterations and
+//!   more exposed Br copies per kernel), and Ar streams contend like L5.
+//! - **L1**: tiles work on different `jc` blocks: Bc splits the Block RAM
+//!   N ways (smaller effective nc), Br copies contend on the BRAM port,
+//!   Ar multicasts only if tiles stay in (pc, ic) lockstep — granted here
+//!   (best case for L1).
+//! - **L2 / L6**: concurrent updates of the same C entries — rejected
+//!   (`RaceCondition`), exactly the paper's reason.
+
+use super::ccp::Ccp;
+use super::microkernel::{MR, NR};
+use super::GemmConfig;
+use crate::arch::VersalArch;
+use crate::sim::{AieTileModel, Gmio, KernelMode, Stream};
+use thiserror::Error;
+
+/// Which GEMM loop the tiles split.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LoopChoice {
+    L1,
+    L2,
+    L3,
+    L4,
+    L5,
+    L6,
+}
+
+impl LoopChoice {
+    pub const PARALLELISABLE: [LoopChoice; 4] =
+        [LoopChoice::L1, LoopChoice::L3, LoopChoice::L4, LoopChoice::L5];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            LoopChoice::L1 => "L1 (jc)",
+            LoopChoice::L2 => "L2 (pc)",
+            LoopChoice::L3 => "L3 (ic)",
+            LoopChoice::L4 => "L4 (jr)",
+            LoopChoice::L5 => "L5 (ir)",
+            LoopChoice::L6 => "L6 (kc)",
+        }
+    }
+}
+
+#[derive(Debug, Error, PartialEq, Eq)]
+pub enum AblationError {
+    #[error("parallelising {0:?} races on concurrent updates of C (§4.4)")]
+    RaceCondition(LoopChoice),
+    #[error("infeasible split: {0}")]
+    Infeasible(String),
+}
+
+/// Cycle estimate for one strategy on the fixed single-block problem
+/// (m, n, k) = (mc, nc, kc).
+#[derive(Debug, Clone)]
+pub struct AblationResult {
+    pub choice: LoopChoice,
+    pub tiles: usize,
+    pub total_cycles: u64,
+    pub macs_per_cycle_per_tile: f64,
+}
+
+/// Evaluate a parallelisation strategy on one (mc, nc, kc) block.
+pub fn evaluate(
+    arch: &VersalArch,
+    cfg: &GemmConfig,
+    choice: LoopChoice,
+) -> Result<AblationResult, AblationError> {
+    let n = cfg.tiles;
+    let Ccp { mc, nc, kc } = cfg.ccp;
+    if matches!(choice, LoopChoice::L2 | LoopChoice::L6) {
+        return Err(AblationError::RaceCondition(choice));
+    }
+    let tile = AieTileModel::new(arch);
+    let stream = Stream::new(arch);
+    let gmio = Gmio::new(arch);
+    let panels_b = nc / NR;
+    let panels_a = mc / MR;
+    let br_bytes = (kc * NR) as u64;
+    let br_copy = stream.br_copy_cycles(br_bytes);
+    let kern = tile.kernel_cycles(kc, KernelMode::Baseline, cfg.steady_stream);
+    let orch = |active: usize| (arch.ic.orch_base_cycles * (active * active) as f64) as u64;
+    let total_macs = (mc * nc * kc) as u64;
+
+    let total = match choice {
+        LoopChoice::L4 => {
+            // Paper's design — same shape as parallel::block_schedule.
+            let rounds = panels_b.div_ceil(n);
+            let mut t = br_copy;
+            for r in 0..rounds {
+                let active = n.min(panels_b - r * n);
+                t += orch(active)
+                    + (kern.total + gmio.cr_roundtrip_cycles(active)) * panels_a as u64;
+            }
+            t
+        }
+        LoopChoice::L5 => {
+            // Tiles split ir: distinct Ar panels stream concurrently from
+            // the shared Ultra RAM port — the Ar stream serialises, so the
+            // effective kernel time scales with the active tile count.
+            let rounds_ir = panels_a.div_ceil(n);
+            let mut t = br_copy; // Br shared: one copy, multicast to all
+            for jr in 0..panels_b {
+                let _ = jr;
+                for r in 0..rounds_ir {
+                    let active = n.min(panels_a - r * n);
+                    let contended_stream = kern.ar_stream * active as u64;
+                    let loop_t = contended_stream.max(kern.arithmetic)
+                        + arch.aie.pipeline_drain_cycles;
+                    t += orch(active) + loop_t + gmio.cr_roundtrip_cycles(active);
+                }
+            }
+            t
+        }
+        LoopChoice::L3 => {
+            // Tiles split ic: Ac splits the Ultra RAM N ways. Feasibility:
+            // each slice must hold ≥ one mr-panel.
+            if panels_a < n {
+                return Err(AblationError::Infeasible(format!(
+                    "mc/mr = {panels_a} < {n} tiles"
+                )));
+            }
+            // Every tile streams a different Ar concurrently (contended),
+            // for every (jr, its-own-ir) pair; Br must now be replicated
+            // into each tile per jr iteration (still parallel copies).
+            let my_panels_a = panels_a.div_ceil(n);
+            let mut t = br_copy;
+            for _jr in 0..panels_b {
+                let contended_stream = kern.ar_stream * n as u64;
+                let loop_t =
+                    contended_stream.max(kern.arithmetic) + arch.aie.pipeline_drain_cycles;
+                t += orch(n) + (loop_t + gmio.cr_roundtrip_cycles(n)) * my_panels_a as u64;
+            }
+            t
+        }
+        LoopChoice::L1 => {
+            // Tiles split jc: Bc splits the Block RAM N ways; feasibility:
+            // each slice must hold ≥ one nr-panel of kc depth.
+            let my_panels_b = panels_b.div_ceil(n);
+            if my_panels_b == 0 || panels_b < n {
+                return Err(AblationError::Infeasible(format!(
+                    "nc/nr = {panels_b} < {n} tiles"
+                )));
+            }
+            let bc_slice = (kc as u64) * (my_panels_b * NR) as u64;
+            let bram = arch.mem_capacity(crate::arch::MemLevel::BlockRam);
+            if bc_slice * n as u64 > bram {
+                return Err(AblationError::Infeasible(format!(
+                    "Bc slices ({} B × {n}) exceed Block RAM",
+                    bc_slice
+                )));
+            }
+            // Br copies contend on the BRAM port (N simultaneous readers
+            // of *different* regions — no multicast), Ar multicasts
+            // (lockstep in (pc, ic)), Cr contends as usual.
+            let br_contended = br_copy * n as u64;
+            let mut t = br_contended;
+            for _jr in 0..my_panels_b {
+                t += orch(n) + (kern.total + gmio.cr_roundtrip_cycles(n)) * panels_a as u64;
+            }
+            t
+        }
+        LoopChoice::L2 | LoopChoice::L6 => unreachable!(),
+    };
+
+    Ok(AblationResult {
+        choice,
+        tiles: n,
+        total_cycles: total,
+        macs_per_cycle_per_tile: total_macs as f64 / (total as f64 * n as f64),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::vc1902;
+
+    fn cfg(tiles: usize) -> GemmConfig {
+        GemmConfig::paper_table2(tiles)
+    }
+
+    #[test]
+    fn l2_and_l6_race() {
+        let a = vc1902();
+        assert_eq!(
+            evaluate(&a, &cfg(4), LoopChoice::L2).unwrap_err(),
+            AblationError::RaceCondition(LoopChoice::L2)
+        );
+        assert!(matches!(
+            evaluate(&a, &cfg(4), LoopChoice::L6),
+            Err(AblationError::RaceCondition(_))
+        ));
+    }
+
+    #[test]
+    fn l4_wins_at_paper_scale() {
+        // The paper's architectural argument, quantified: at 8–32 tiles
+        // L4 beats L1, L3 and L5 on this memory organisation.
+        let a = vc1902();
+        for tiles in [8, 16, 32] {
+            let l4 = evaluate(&a, &cfg(tiles), LoopChoice::L4).unwrap().total_cycles;
+            for other in [LoopChoice::L1, LoopChoice::L3, LoopChoice::L5] {
+                let t = evaluate(&a, &cfg(tiles), other).unwrap().total_cycles;
+                assert!(
+                    l4 <= t,
+                    "tiles={tiles}: L4 {l4} should not lose to {other:?} {t}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn single_tile_strategies_agree_roughly() {
+        // With one tile every strategy degenerates to the sequential
+        // algorithm; totals should be within a few percent of each other.
+        let a = vc1902();
+        let totals: Vec<u64> = LoopChoice::PARALLELISABLE
+            .iter()
+            .map(|&c| evaluate(&a, &cfg(1), c).unwrap().total_cycles)
+            .collect();
+        let max = *totals.iter().max().unwrap() as f64;
+        let min = *totals.iter().min().unwrap() as f64;
+        assert!(max / min < 1.10, "1-tile spread too large: {totals:?}");
+    }
+
+    #[test]
+    fn l5_scales_worse_than_l4() {
+        let a = vc1902();
+        let s = |c, t| evaluate(&a, &cfg(t), c).unwrap().total_cycles as f64;
+        let l4_speedup = s(LoopChoice::L4, 1) / s(LoopChoice::L4, 16);
+        let l5_speedup = s(LoopChoice::L5, 1) / s(LoopChoice::L5, 16);
+        assert!(
+            l4_speedup > 2.0 * l5_speedup,
+            "L4 {l4_speedup:.1}x vs L5 {l5_speedup:.1}x"
+        );
+    }
+
+    #[test]
+    fn infeasible_splits_reported() {
+        let a = vc1902();
+        // 32 B-panels; 64 tiles cannot split L1.
+        assert!(matches!(
+            evaluate(&a, &cfg(64), LoopChoice::L1),
+            Err(AblationError::Infeasible(_))
+        ));
+        // 32 A-panels; 64 tiles cannot split L3.
+        assert!(matches!(
+            evaluate(&a, &cfg(64), LoopChoice::L3),
+            Err(AblationError::Infeasible(_))
+        ));
+    }
+}

@@ -1,0 +1,95 @@
+//! Reference GEMM implementations used to validate everything else.
+
+use super::types::{MatI32, MatU8};
+
+/// Naive triple-loop C += A·B (u8 · u8 → i32). The correctness oracle for
+/// the blocked and parallel drivers (and itself cross-checked against the
+/// JAX/Pallas reference through the PJRT runtime in `rust/tests/`).
+pub fn naive_gemm(a: &MatU8, b: &MatU8, c: &mut MatI32) {
+    assert_eq!(a.cols, b.rows, "inner dimensions differ");
+    assert_eq!((c.rows, c.cols), (a.rows, b.cols), "output shape mismatch");
+    for i in 0..a.rows {
+        for j in 0..b.cols {
+            let mut acc = 0i32;
+            for p in 0..a.cols {
+                acc += a.at(i, p) as i32 * b.at(p, j) as i32;
+            }
+            c.add(i, j, acc);
+        }
+    }
+}
+
+/// Cache-friendlier ikj-ordered reference (row of A broadcast over a row
+/// of B) — used by the perf benches as the "straightforward CPU code"
+/// baseline the optimised packed kernel is compared against.
+pub fn ikj_gemm(a: &MatU8, b: &MatU8, c: &mut MatI32) {
+    assert_eq!(a.cols, b.rows, "inner dimensions differ");
+    assert_eq!((c.rows, c.cols), (a.rows, b.cols), "output shape mismatch");
+    let n = b.cols;
+    for i in 0..a.rows {
+        let crow = &mut c.data[i * n..(i + 1) * n];
+        for p in 0..a.cols {
+            let av = a.at(i, p) as i32;
+            if av == 0 {
+                continue;
+            }
+            let brow = &b.data[p * n..(p + 1) * n];
+            for j in 0..n {
+                crow[j] += av * brow[j] as i32;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickcheck::prop;
+
+    #[test]
+    fn known_small_product() {
+        // [[1,2],[3,4]] · [[5,6],[7,8]] = [[19,22],[43,50]]
+        let a = MatU8::from_vec(2, 2, vec![1, 2, 3, 4]);
+        let b = MatU8::from_vec(2, 2, vec![5, 6, 7, 8]);
+        let mut c = MatI32::zeros(2, 2);
+        naive_gemm(&a, &b, &mut c);
+        assert_eq!(c.data, vec![19, 22, 43, 50]);
+    }
+
+    #[test]
+    fn accumulates_not_overwrites() {
+        let a = MatU8::from_vec(1, 1, vec![2]);
+        let b = MatU8::from_vec(1, 1, vec![3]);
+        let mut c = MatI32::from_vec(1, 1, vec![10]);
+        naive_gemm(&a, &b, &mut c);
+        assert_eq!(c.data, vec![16]);
+    }
+
+    #[test]
+    fn prop_ikj_equals_naive() {
+        prop("ikj-vs-naive", 0x1239, 60, |g| {
+            let m = g.dim(24);
+            let k = g.dim(24);
+            let n = g.dim(24);
+            let a = MatU8::random(m, k, &mut g.rng);
+            let b = MatU8::random(k, n, &mut g.rng);
+            let mut c1 = MatI32::zeros(m, n);
+            let mut c2 = MatI32::zeros(m, n);
+            naive_gemm(&a, &b, &mut c1);
+            ikj_gemm(&a, &b, &mut c2);
+            if c1.max_abs_diff(&c2) != 0 {
+                return Err(format!("ikj != naive for ({m},{k},{n})"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "inner dimensions differ")]
+    fn shape_mismatch_panics() {
+        let a = MatU8::zeros(2, 3);
+        let b = MatU8::zeros(2, 2);
+        let mut c = MatI32::zeros(2, 2);
+        naive_gemm(&a, &b, &mut c);
+    }
+}

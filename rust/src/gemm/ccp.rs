@@ -1,0 +1,197 @@
+//! Cache configuration parameter (CCP) selection — §4.3 of the paper.
+//!
+//! The CCPs (mc, nc, kc) must satisfy the capacity constraints of the
+//! explicit memory hierarchy:
+//!
+//! - **local memory** holds the Br micro-panel, kc × nr bytes, sparing
+//!   ~2.5 KB for other resident data ⇒ kc ≤ 3750 for nr = 8 (paper).
+//! - **Ultra RAM** holds Ac, mc × kc bytes ⇒ mc ≤ URAM / kc (≈4500 at
+//!   kc = 3750, paper).
+//! - **Block RAM** holds Bc, kc × nc bytes ⇒ nc ≤ BRAM / kc (≈1200,
+//!   paper — the paper computes this at kc = 3750 too).
+//!
+//! `Ccp::derive` reimplements that arithmetic from a [`VersalArch`], so an
+//! INI capacity override consistently moves the derived CCPs.
+
+use crate::arch::{MemLevel, VersalArch};
+use super::microkernel::{MR, NR};
+
+/// Local-memory bytes the paper reserves for non-Br data ("sparing about
+/// 2.5 KB for other data that also has to reside in the local memory").
+pub const LOCAL_RESERVED_BYTES: u64 = 2560;
+
+/// The three cache configuration parameters (strides of loops L1–L3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Ccp {
+    pub mc: usize,
+    pub nc: usize,
+    pub kc: usize,
+}
+
+impl Ccp {
+    /// Derive maximal feasible CCPs for a given architecture and element
+    /// size (1 B for UINT8), following §4.3's procedure literally.
+    pub fn derive(arch: &VersalArch, elem_bytes: u64) -> Ccp {
+        let local = arch.mem_capacity(MemLevel::LocalMemory);
+        let uram = arch.mem_capacity(MemLevel::UltraRam);
+        let bram = arch.mem_capacity(MemLevel::BlockRam);
+
+        // kc: local memory minus the reserved slice, over nr elements/row.
+        let kc = ((local - LOCAL_RESERVED_BYTES) / (NR as u64 * elem_bytes)) as usize;
+        // mc: Ultra RAM holds Ac = mc × kc.
+        let mc = (uram / (kc as u64 * elem_bytes)) as usize;
+        // nc: Block RAM holds Bc = kc × nc.
+        let nc = (bram / (kc as u64 * elem_bytes)) as usize;
+        Ccp { mc, nc, kc }
+    }
+
+    /// Like [`Ccp::derive`] but rounded down to hardware-friendly
+    /// multiples: kc to the micro-kernel unroll (16), mc to mr, nc to nr.
+    pub fn derive_aligned(arch: &VersalArch, elem_bytes: u64) -> Ccp {
+        let raw = Ccp::derive(arch, elem_bytes);
+        Ccp {
+            mc: raw.mc - raw.mc % MR,
+            nc: raw.nc - raw.nc % NR,
+            kc: raw.kc - raw.kc % crate::sim::AieTileModel::UNROLL,
+        }
+    }
+
+    /// Check feasibility of this CCP choice against an architecture:
+    /// every buffer of the operand mapping (Table 1 / Figure 3) must fit
+    /// its memory level.
+    pub fn check(&self, arch: &VersalArch, elem_bytes: u64) -> Result<(), String> {
+        let br_bytes = (self.kc * NR) as u64 * elem_bytes;
+        let local_avail = arch.mem_capacity(MemLevel::LocalMemory) - LOCAL_RESERVED_BYTES;
+        if br_bytes > local_avail {
+            return Err(format!(
+                "Br (kc*nr = {br_bytes} B) exceeds local memory budget {local_avail} B"
+            ));
+        }
+        let ac_bytes = (self.mc * self.kc) as u64 * elem_bytes;
+        let uram = arch.mem_capacity(MemLevel::UltraRam);
+        if ac_bytes > uram {
+            return Err(format!("Ac (mc*kc = {ac_bytes} B) exceeds Ultra RAM {uram} B"));
+        }
+        let bc_bytes = (self.kc * self.nc) as u64 * elem_bytes;
+        let bram = arch.mem_capacity(MemLevel::BlockRam);
+        if bc_bytes > bram {
+            return Err(format!("Bc (kc*nc = {bc_bytes} B) exceeds Block RAM {bram} B"));
+        }
+        // Cr: mr × nr accumulators must fit the register file (2 KB holds
+        // an 8×8 i32 tile four times over; pinned for completeness).
+        let cr_bytes = (MR * NR) as u64 * 4;
+        if cr_bytes > arch.aie.vreg_bytes {
+            return Err(format!("Cr ({cr_bytes} B) exceeds vector registers"));
+        }
+        if self.mc == 0 || self.nc == 0 || self.kc == 0 {
+            return Err("CCPs must be positive".into());
+        }
+        Ok(())
+    }
+
+    /// §4.5's compute-to-communication ratio for the micro-kernel:
+    /// 2·mr·nr·kc / (2·mr·nr + mr·kc + nr·kc) — grows with kc, which is
+    /// why streaming (larger kc) beats GMIO (§4.5).
+    pub fn compute_to_comm_ratio(&self) -> f64 {
+        let (mr, nr, kc) = (MR as f64, NR as f64, self.kc as f64);
+        2.0 * mr * nr * kc / (2.0 * mr * nr + mr * kc + nr * kc)
+    }
+}
+
+impl std::fmt::Display for Ccp {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "(mc, nc, kc) = ({}, {}, {})", self.mc, self.nc, self.kc)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::vc1902;
+    use crate::util::quickcheck::prop;
+
+    #[test]
+    fn derive_reproduces_paper_4_3() {
+        let ccp = Ccp::derive(&vc1902(), 1);
+        // "we ascertain an upper limit of 3,750 for kc, sparing about
+        //  2.5 KB" — (32768 − 2560) / 8 = 3776; the paper quotes 3750
+        // (it rounds the reserve slightly differently). Pin our exact
+        // arithmetic and its proximity to the paper's.
+        assert_eq!(ccp.kc, 3776);
+        assert!((ccp.kc as i64 - 3750).abs() <= 30);
+        // "the maximum value for mc is about 4,500".
+        assert!((4300..=4700).contains(&ccp.mc), "mc = {}", ccp.mc);
+        // "the maximum value for nc is derived as 1,200".
+        assert!((1100..=1300).contains(&ccp.nc), "nc = {}", ccp.nc);
+    }
+
+    #[test]
+    fn derived_ccps_are_feasible() {
+        let a = vc1902();
+        Ccp::derive(&a, 1).check(&a, 1).unwrap();
+        let al = Ccp::derive_aligned(&a, 1);
+        al.check(&a, 1).unwrap();
+        assert_eq!(al.kc % 16, 0);
+        assert_eq!(al.mc % MR, 0);
+        assert_eq!(al.nc % NR, 0);
+    }
+
+    #[test]
+    fn paper_table2_ccp_is_feasible() {
+        let a = vc1902();
+        Ccp { mc: 256, nc: 256, kc: 2048 }.check(&a, 1).unwrap();
+    }
+
+    #[test]
+    fn infeasible_choices_rejected_with_reason() {
+        let a = vc1902();
+        let e = Ccp { mc: 256, nc: 256, kc: 4096 }.check(&a, 1).unwrap_err();
+        assert!(e.contains("Br"), "{e}");
+        let e = Ccp { mc: 100_000, nc: 256, kc: 2048 }.check(&a, 1).unwrap_err();
+        assert!(e.contains("Ac"), "{e}");
+        let e = Ccp { mc: 256, nc: 100_000, kc: 2048 }.check(&a, 1).unwrap_err();
+        assert!(e.contains("Bc"), "{e}");
+        assert!(Ccp { mc: 0, nc: 1, kc: 16 }.check(&a, 1).is_err());
+    }
+
+    #[test]
+    fn ratio_grows_with_kc() {
+        let small = Ccp { mc: 1, nc: 1, kc: 256 }.compute_to_comm_ratio();
+        let large = Ccp { mc: 1, nc: 1, kc: 2048 }.compute_to_comm_ratio();
+        assert!(large > small);
+        // Asymptote: 2·mr·nr/(mr+nr) = 8 for mr = nr = 8.
+        assert!(large < 8.0);
+        assert!((Ccp { mc: 1, nc: 1, kc: 1 << 20 }.compute_to_comm_ratio() - 8.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn prop_derived_ccp_feasible_for_any_capacities() {
+        // Shrink/grow the memories arbitrarily; the derived CCPs must
+        // always pass their own feasibility check.
+        prop("ccp-feasible", 0xCC9, 60, |g| {
+            let mut a = vc1902();
+            // local ≥ reserve + one nr row; uram/bram ≥ one panel.
+            let local = LOCAL_RESERVED_BYTES + NR as u64 * (1 + g.rng.below(8192) as u64);
+            let uram = local * (1 + g.rng.below(64) as u64);
+            let bram = uram + 1 + g.rng.below(1 << 20) as u64;
+            let ddr = bram * 2 + (1 << 20);
+            let vreg = a.mem_capacity(crate::arch::MemLevel::VectorRegisters);
+            // keep ordering vreg < local < uram' … (swap uram/bram roles
+            // if needed to respect ordering: here uram < bram by constr.)
+            for m in a.mem.iter_mut() {
+                m.capacity_bytes = match m.level {
+                    crate::arch::MemLevel::VectorRegisters => vreg,
+                    crate::arch::MemLevel::LocalMemory => local.max(vreg + 1),
+                    crate::arch::MemLevel::BlockRam => uram.max(local + 2), // smaller FPGA RAM
+                    crate::arch::MemLevel::UltraRam => bram.max(local + 3),
+                    crate::arch::MemLevel::Ddr => ddr,
+                };
+            }
+            let ccp = Ccp::derive(&a, 1);
+            if ccp.kc == 0 || ccp.mc == 0 || ccp.nc == 0 {
+                return Ok(()); // degenerate arch: nothing to check
+            }
+            ccp.check(&a, 1).map_err(|e| format!("arch {a:?}: {e}"))
+        });
+    }
+}

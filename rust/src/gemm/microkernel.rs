@@ -1,0 +1,167 @@
+//! The 8×8 UINT8 micro-kernel — §4.2 / Figure 4 of the paper.
+//!
+//! One invocation updates an mr×nr = 8×8 micro-tile Cr of C with the
+//! product of the micro-panels Ar (mr × kc, from Ac in the FPGA Ultra RAM)
+//! and Br (kc × nr, resident in the AIE local memory):
+//!
+//! ```text
+//! Cr += Ar · Br      — kc rank-1 updates, 64 MACs each
+//! ```
+//!
+//! On the AIE this is 8 `mac16()` calls per 16-deep unrolled iteration
+//! (128 UINT8 MACs per call); here it is a portable Rust loop written so
+//! LLVM autovectorises the rank-1 update (the perf pass benchmarks it in
+//! `bench_microkernel`). The **numerics are exact** (u8·u8 → i32); the
+//! **cycle cost** comes from [`crate::sim::AieTileModel`] and is accounted
+//! by the callers (blocked/parallel drivers).
+
+use super::types::MatI32;
+
+/// Micro-tile rows (paper: 8, fully utilising the 4×v16acc48 accumulators).
+pub const MR: usize = 8;
+/// Micro-tile columns (paper: 8).
+pub const NR: usize = 8;
+
+/// The micro-kernel over packed panels.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct MicroKernel;
+
+impl MicroKernel {
+    /// `cr[mr][nr] += Ar · Br` where `ar` is an MR×kc panel stored
+    /// column-major (`ar[p*MR + i]`) and `br` is a kc×NR panel stored
+    /// row-major (`br[p*NR + j]`) — the packed layouts of
+    /// [`super::packing`].
+    #[inline]
+    pub fn run(&self, kc: usize, ar: &[u8], br: &[u8], cr: &mut [i32; MR * NR]) {
+        debug_assert_eq!(ar.len(), MR * kc);
+        debug_assert_eq!(br.len(), kc * NR);
+        // Fixed-size array views give LLVM compile-time trip counts for
+        // the rank-1 update; b_row is widened once per p instead of once
+        // per (i, j). ~1.4× over the naive slice version (§Perf).
+        for p in 0..kc {
+            let a_col: &[u8; MR] = ar[p * MR..p * MR + MR].try_into().unwrap();
+            let b_raw: &[u8; NR] = br[p * NR..p * NR + NR].try_into().unwrap();
+            let mut b_row = [0i32; NR];
+            for j in 0..NR {
+                b_row[j] = b_raw[j] as i32;
+            }
+            for i in 0..MR {
+                let ai = a_col[i] as i32;
+                let row = &mut cr[i * NR..i * NR + NR];
+                for j in 0..NR {
+                    row[j] += ai * b_row[j];
+                }
+            }
+        }
+    }
+
+    /// Scatter an accumulated micro-tile back into C at (row0, col0),
+    /// clipping at the matrix edge (zero-padded panel lanes fall outside).
+    pub fn store(&self, cr: &[i32; MR * NR], c: &mut MatI32, row0: usize, col0: usize) {
+        let rows = MR.min(c.rows - row0.min(c.rows));
+        let cols = NR.min(c.cols - col0.min(c.cols));
+        for i in 0..rows {
+            for j in 0..cols {
+                c.add(row0 + i, col0 + j, cr[i * NR + j]);
+            }
+        }
+    }
+
+    /// MAC operations of one invocation: mr · nr · kc.
+    pub fn macs(kc: usize) -> u64 {
+        (MR * NR * kc) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::packing::{pack_a, pack_b};
+    use crate::gemm::types::MatU8;
+    use crate::util::quickcheck::prop;
+    use crate::util::Pcg32;
+
+    fn naive_tile(a: &MatU8, b: &MatU8) -> Vec<i32> {
+        let mut c = vec![0i32; a.rows * b.cols];
+        for i in 0..a.rows {
+            for j in 0..b.cols {
+                for p in 0..a.cols {
+                    c[i * b.cols + j] += a.at(i, p) as i32 * b.at(p, j) as i32;
+                }
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn matches_naive_on_full_tile() {
+        let mut rng = Pcg32::new(2);
+        let a = MatU8::random(MR, 32, &mut rng);
+        let b = MatU8::random(32, NR, &mut rng);
+        let pa = pack_a(&a, 0, 0, MR, 32);
+        let pb = pack_b(&b, 0, 0, 32, NR);
+        let mut cr = [0i32; MR * NR];
+        MicroKernel.run(32, pa.panel(0), pb.panel(0), &mut cr);
+        assert_eq!(cr.to_vec(), naive_tile(&a, &b));
+    }
+
+    #[test]
+    fn accumulates_into_existing_cr() {
+        let mut rng = Pcg32::new(3);
+        let a = MatU8::random(MR, 16, &mut rng);
+        let b = MatU8::random(16, NR, &mut rng);
+        let pa = pack_a(&a, 0, 0, MR, 16);
+        let pb = pack_b(&b, 0, 0, 16, NR);
+        let mut cr = [1i32; MR * NR];
+        MicroKernel.run(16, pa.panel(0), pb.panel(0), &mut cr);
+        let want: Vec<i32> = naive_tile(&a, &b).iter().map(|v| v + 1).collect();
+        assert_eq!(cr.to_vec(), want);
+    }
+
+    #[test]
+    fn saturation_free_worst_case() {
+        // kc=3776 (max derived) of 255·255 products: 3776·65025 =
+        // 245,534,400 < i32::MAX — no overflow at the largest legal kc.
+        let kc = 3776;
+        let a = MatU8::from_vec(MR, kc, vec![255; MR * kc]);
+        let b = MatU8::from_vec(kc, NR, vec![255; kc * NR]);
+        let pa = pack_a(&a, 0, 0, MR, kc);
+        let pb = pack_b(&b, 0, 0, kc, NR);
+        let mut cr = [0i32; MR * NR];
+        MicroKernel.run(kc, pa.panel(0), pb.panel(0), &mut cr);
+        assert!(cr.iter().all(|&v| v == kc as i32 * 255 * 255));
+    }
+
+    #[test]
+    fn store_clips_at_matrix_edge() {
+        let mut c = MatI32::zeros(10, 10);
+        let cr = [7i32; MR * NR];
+        MicroKernel.store(&cr, &mut c, 8, 8); // only a 2×2 corner fits
+        assert_eq!(c.at(8, 8), 7);
+        assert_eq!(c.at(9, 9), 7);
+        assert_eq!(c.data.iter().filter(|&&v| v == 7).count(), 4);
+    }
+
+    #[test]
+    fn macs_formula() {
+        assert_eq!(MicroKernel::macs(2048), 131_072); // §5.2
+    }
+
+    #[test]
+    fn prop_microkernel_equals_naive() {
+        prop("microkernel-vs-naive", 0x111, 60, |g| {
+            let kc = g.dim(64);
+            let a = MatU8::random(MR, kc, &mut g.rng);
+            let b = MatU8::random(kc, NR, &mut g.rng);
+            let pa = pack_a(&a, 0, 0, MR, kc);
+            let pb = pack_b(&b, 0, 0, kc, NR);
+            let mut cr = [0i32; MR * NR];
+            MicroKernel.run(kc, pa.panel(0), pb.panel(0), &mut cr);
+            let want = naive_tile(&a, &b);
+            if cr.to_vec() != want {
+                return Err(format!("mismatch at kc={kc}"));
+            }
+            Ok(())
+        });
+    }
+}

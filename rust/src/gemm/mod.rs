@@ -1,0 +1,68 @@
+//! The GotoBLAS2 GEMM algorithm mapped to the (simulated) Versal ACAP.
+//!
+//! Structure mirrors the paper:
+//!
+//! - [`types`]       — dense row-major matrices (u8 inputs, i32 accumulate).
+//! - [`ccp`]         — §4.3: derivation of the cache configuration
+//!                     parameters (mc, nc, kc) from the memory capacities.
+//! - [`packing`]     — Figure 1 (bottom-left): packing A→Ac (mr-row panels,
+//!                     column-major inside a panel) and B→Bc (nr-column
+//!                     panels, row-major inside a panel).
+//! - [`microkernel`] — §4.2/Figure 4: the 8×8 UINT8 micro-kernel. Computes
+//!                     the *real* product (u8·u8→i32) and, through
+//!                     [`crate::sim`], the cycle cost of the AIE execution.
+//! - [`blocked`]     — Figure 1 (top-left): the sequential five-loop
+//!                     algorithm on one AIE tile.
+//! - [`parallel`]    — Figure 5/6: the parallel design distributing loop
+//!                     L4 across AIE tiles; produces Table 2.
+//! - [`ablation`]    — §4.4 quantified: what happens if L1/L3/L5 is
+//!                     parallelised instead (the paper argues this
+//!                     qualitatively; we put numbers on it).
+//! - [`baseline`]    — naive triple-loop reference used to validate every
+//!                     other path, plus an f32 reference for quantisation
+//!                     error analysis.
+
+pub mod ablation;
+pub mod baseline;
+pub mod blocked;
+pub mod ccp;
+pub mod microkernel;
+pub mod packing;
+pub mod parallel;
+pub mod tuner;
+pub mod types;
+
+pub use blocked::BlockedGemm;
+pub use ccp::Ccp;
+pub use microkernel::{MicroKernel, MR, NR};
+pub use packing::{pack_a, pack_b, PackedA, PackedB};
+pub use parallel::{ParallelGemm, TileStats};
+pub use types::{MatI32, MatU8};
+
+/// Problem + algorithm configuration shared by the drivers.
+#[derive(Debug, Clone)]
+pub struct GemmConfig {
+    /// Cache configuration parameters (mc, nc, kc).
+    pub ccp: Ccp,
+    /// Number of AIE tiles for the parallel design (1 = sequential).
+    pub tiles: usize,
+    /// Account packing cycles in the breakdown (the paper's measurements
+    /// exclude them via emulation; default mirrors the paper).
+    pub count_packing: bool,
+    /// Steady-state Ar streaming (full-GEMM regime) vs isolated-kernel
+    /// costs (Table 3 condition).
+    pub steady_stream: bool,
+}
+
+impl GemmConfig {
+    /// The paper's experimental configuration: (mc, nc, kc) =
+    /// (256, 256, 2048), packing excluded, steady-state streaming.
+    pub fn paper_table2(tiles: usize) -> GemmConfig {
+        GemmConfig {
+            ccp: Ccp { mc: 256, nc: 256, kc: 2048 },
+            tiles,
+            count_packing: false,
+            steady_stream: true,
+        }
+    }
+}

@@ -1,0 +1,240 @@
+//! Packing routines — Figure 1 (bottom-left) of the paper.
+//!
+//! On the Versal ACAP there is no cache controller: packing *is* the data
+//! movement. `pack_a` copies a block of A into the Ac buffer (FPGA Ultra
+//! RAM) in mr-row panels stored column-major within each panel, so the
+//! micro-kernel loads Ar columns with unit stride; `pack_b` copies a block
+//! of B into Bc (FPGA Block RAM) in nr-column panels stored row-major
+//! within each panel, so Br rows stream with unit stride.
+//!
+//! Edge panels (when the block dimension is not a multiple of mr/nr) are
+//! zero-padded — the zeros contribute nothing to the accumulation, which
+//! keeps the micro-kernel branch-free exactly like production BLIS.
+
+use super::microkernel::{MR, NR};
+use super::types::MatU8;
+
+/// A packed buffer for Ac: `ceil(mc/mr)` panels, each `mr × kc`,
+/// column-major inside the panel (element (i, p) of a panel at
+/// `panel_base + p*mr + i`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PackedA {
+    pub mc: usize,
+    pub kc: usize,
+    pub n_panels: usize,
+    pub data: Vec<u8>,
+}
+
+impl PackedA {
+    /// Borrow the micro-panel Ar for row-panel index `pi` (covers rows
+    /// `pi*mr .. pi*mr+mr` of the block).
+    pub fn panel(&self, pi: usize) -> &[u8] {
+        let len = MR * self.kc;
+        &self.data[pi * len..(pi + 1) * len]
+    }
+
+    pub fn bytes(&self) -> u64 {
+        self.data.len() as u64
+    }
+}
+
+/// A packed buffer for Bc: `ceil(nc/nr)` panels, each `kc × nr`,
+/// row-major inside the panel (element (p, j) at `panel_base + p*nr + j`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PackedB {
+    pub kc: usize,
+    pub nc: usize,
+    pub n_panels: usize,
+    pub data: Vec<u8>,
+}
+
+impl PackedB {
+    /// Borrow the micro-panel Br for column-panel index `pj` (covers
+    /// columns `pj*nr .. pj*nr+nr` of the block).
+    pub fn panel(&self, pj: usize) -> &[u8] {
+        let len = self.kc * NR;
+        &self.data[pj * len..(pj + 1) * len]
+    }
+
+    pub fn bytes(&self) -> u64 {
+        self.data.len() as u64
+    }
+
+    /// Bytes of one micro-panel Br — what a tile copies to local memory.
+    pub fn panel_bytes(&self) -> u64 {
+        (self.kc * NR) as u64
+    }
+}
+
+/// Pack `A(ic : ic+mc_eff, pc : pc+kc_eff)` into mr-row panels.
+///
+/// `mc_eff`/`kc_eff` may be edge-trimmed; panels are padded with zeros to
+/// full `mr × kc_eff` size.
+pub fn pack_a(a: &MatU8, ic: usize, pc: usize, mc_eff: usize, kc_eff: usize) -> PackedA {
+    assert!(ic + mc_eff <= a.rows && pc + kc_eff <= a.cols, "block out of range");
+    let n_panels = mc_eff.div_ceil(MR);
+    let mut data = vec![0u8; n_panels * MR * kc_eff];
+    for pi in 0..n_panels {
+        let base = pi * MR * kc_eff;
+        let rows_here = MR.min(mc_eff - pi * MR);
+        if rows_here == MR {
+            // Full panel: 8-row gather with *sequential* writes — the
+            // destination walks the panel linearly while eight read
+            // streams advance in lockstep (an 8×kc transpose). ~2× over
+            // the row-scatter order (§Perf).
+            let rows: [&[u8]; MR] = std::array::from_fn(|i| {
+                &a.data[(ic + pi * MR + i) * a.cols + pc..][..kc_eff]
+            });
+            let dst = &mut data[base..base + MR * kc_eff];
+            for (p, out) in dst.chunks_exact_mut(MR).enumerate() {
+                for i in 0..MR {
+                    out[i] = rows[i][p];
+                }
+            }
+        } else {
+            for i in 0..rows_here {
+                let src_row = &a.data[(ic + pi * MR + i) * a.cols + pc..][..kc_eff];
+                let dst = &mut data[base + i..];
+                for (p, &v) in src_row.iter().enumerate() {
+                    dst[p * MR] = v;
+                }
+            }
+        }
+    }
+    PackedA { mc: mc_eff, kc: kc_eff, n_panels, data }
+}
+
+/// Pack `B(pc : pc+kc_eff, jc : jc+nc_eff)` into nr-column panels.
+pub fn pack_b(b: &MatU8, pc: usize, jc: usize, kc_eff: usize, nc_eff: usize) -> PackedB {
+    assert!(pc + kc_eff <= b.rows && jc + nc_eff <= b.cols, "block out of range");
+    let n_panels = nc_eff.div_ceil(NR);
+    let mut data = vec![0u8; n_panels * kc_eff * NR];
+    for pj in 0..n_panels {
+        let base = pj * kc_eff * NR;
+        let cols_here = NR.min(nc_eff - pj * NR);
+        if cols_here == NR {
+            // Full panel: each destination row of NR bytes is contiguous
+            // in B too — straight memcpy per row (§Perf).
+            for p in 0..kc_eff {
+                let src = &b.data[(pc + p) * b.cols + jc + pj * NR..][..NR];
+                data[base + p * NR..base + p * NR + NR].copy_from_slice(src);
+            }
+        } else {
+            for p in 0..kc_eff {
+                let src = &b.data[(pc + p) * b.cols + jc + pj * NR..][..cols_here];
+                data[base + p * NR..base + p * NR + cols_here].copy_from_slice(src);
+            }
+        }
+    }
+    PackedB { kc: kc_eff, nc: nc_eff, n_panels, data }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickcheck::prop;
+    use crate::util::Pcg32;
+
+    #[test]
+    fn pack_a_layout_exact_multiple() {
+        // 4×4 block with MR=8 → one zero-padded panel.
+        let a = MatU8::from_vec(4, 4, (1..=16).collect());
+        let pa = pack_a(&a, 0, 0, 4, 4);
+        assert_eq!(pa.n_panels, 1);
+        // column-major within the panel: first MR entries = column 0 padded.
+        let p = pa.panel(0);
+        assert_eq!(&p[0..4], &[1, 5, 9, 13]); // col 0
+        assert_eq!(&p[4..8], &[0, 0, 0, 0]); // padding rows
+        assert_eq!(&p[8..12], &[2, 6, 10, 14]); // col 1
+    }
+
+    #[test]
+    fn pack_b_layout() {
+        // 2×8 B block, NR=8 → one panel, row-major inside.
+        let b = MatU8::from_vec(2, 8, (1..=16).collect());
+        let pb = pack_b(&b, 0, 0, 2, 8);
+        assert_eq!(pb.n_panels, 1);
+        let p = pb.panel(0);
+        assert_eq!(&p[0..8], &(1..=8).collect::<Vec<u8>>()); // row 0
+        assert_eq!(&p[8..16], &(9..=16).collect::<Vec<u8>>()); // row 1
+    }
+
+    #[test]
+    fn pack_b_pads_edge_columns() {
+        let b = MatU8::from_vec(2, 3, vec![1, 2, 3, 4, 5, 6]);
+        let pb = pack_b(&b, 0, 0, 2, 3);
+        let p = pb.panel(0);
+        assert_eq!(&p[0..8], &[1, 2, 3, 0, 0, 0, 0, 0]);
+        assert_eq!(&p[8..16], &[4, 5, 6, 0, 0, 0, 0, 0]);
+    }
+
+    #[test]
+    fn pack_a_subblock_offsets() {
+        let mut rng = Pcg32::new(1);
+        let a = MatU8::random(20, 20, &mut rng);
+        let pa = pack_a(&a, 8, 4, 8, 8);
+        // panel 0 column p, row i == A(8+i, 4+p)
+        for p in 0..8 {
+            for i in 0..8 {
+                assert_eq!(pa.panel(0)[p * MR + i], a.at(8 + i, 4 + p));
+            }
+        }
+    }
+
+    #[test]
+    fn prop_unpack_recovers_block() {
+        prop("pack-roundtrip", 0xA11, 80, |g| {
+            let rows = g.dim(40);
+            let cols = g.dim(40);
+            let a = MatU8::random(rows, cols, &mut g.rng);
+            let mc = g.rng.range(1, rows + 1);
+            let kc = g.rng.range(1, cols + 1);
+            let ic = g.rng.range(0, rows - mc + 1);
+            let pc = g.rng.range(0, cols - kc + 1);
+            let pa = pack_a(&a, ic, pc, mc, kc);
+            for pi in 0..pa.n_panels {
+                let rows_here = MR.min(mc - pi * MR);
+                for p in 0..kc {
+                    for i in 0..MR {
+                        let got = pa.panel(pi)[p * MR + i];
+                        let want = if i < rows_here { a.at(ic + pi * MR + i, pc + p) } else { 0 };
+                        if got != want {
+                            return Err(format!("A panel {pi} ({i},{p}): {got} != {want}"));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
+        prop("pack-b-roundtrip", 0xB22, 80, |g| {
+            let rows = g.dim(40);
+            let cols = g.dim(40);
+            let b = MatU8::random(rows, cols, &mut g.rng);
+            let kc = g.rng.range(1, rows + 1);
+            let nc = g.rng.range(1, cols + 1);
+            let pc = g.rng.range(0, rows - kc + 1);
+            let jc = g.rng.range(0, cols - nc + 1);
+            let pb = pack_b(&b, pc, jc, kc, nc);
+            for pj in 0..pb.n_panels {
+                let cols_here = NR.min(nc - pj * NR);
+                for p in 0..kc {
+                    for j in 0..NR {
+                        let got = pb.panel(pj)[p * NR + j];
+                        let want = if j < cols_here { b.at(pc + p, jc + pj * NR + j) } else { 0 };
+                        if got != want {
+                            return Err(format!("B panel {pj} ({p},{j}): {got} != {want}"));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "block out of range")]
+    fn out_of_range_block_panics() {
+        let a = MatU8::zeros(4, 4);
+        pack_a(&a, 2, 0, 4, 4);
+    }
+}

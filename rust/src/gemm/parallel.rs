@@ -1,0 +1,429 @@
+//! Parallel GEMM across multiple AIE tiles — §4.4 / Figure 5 / Figure 6.
+//!
+//! The parallelisation keeps loops L1–L3 as in the sequential algorithm
+//! and distributes the iteration space of **loop L4** (the `jr` loop over
+//! Bc's nr-column micro-panels) across `NUM_AIEs` tiles:
+//!
+//! - each tile copies a *distinct* micro-panel Br into its local memory
+//!   (all copies proceed simultaneously — §5.1);
+//! - all tiles read the *same* micro-panel Ar via stream multicast
+//!   (cost independent of the tile count — §5.1);
+//! - each tile round-trips a distinct micro-tile Cr over GMIO, which
+//!   contends on the serial DDR port (the growing "Copy Cr" column).
+//!
+//! The schedule model (see DESIGN.md §6 for the calibration derivation):
+//!
+//! ```text
+//! per L3 block:  br_copy                                 (first round; later
+//!                                                         copies prefetch)
+//!              + Σ_rounds [ orch(active)                  (leader programs
+//!                                                          GMIO descriptors)
+//!                         + panels_A · (kernel + crᵐᵃˣ) ] (lockstep L5)
+//! ```
+//!
+//! which reproduces Table 2's totals within ≈5 % at every tile count and
+//! its Performance/tile column to the printed precision.
+
+use super::ccp::Ccp;
+use super::microkernel::{MicroKernel, MR, NR};
+use super::packing::{pack_a, pack_b};
+use super::types::{MatI32, MatU8};
+use super::GemmConfig;
+use crate::arch::VersalArch;
+use crate::sim::{AieTileModel, CycleBreakdown, Gmio, KernelMode, Multicast, Stream};
+use anyhow::{ensure, Result};
+
+/// Per-tile execution statistics.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct TileStats {
+    pub tile: usize,
+    pub kernels: u64,
+    pub macs: u64,
+    pub br_copies: u64,
+}
+
+/// One row of Table 2 (plus the inputs that produced it).
+#[derive(Debug, Clone)]
+pub struct Table2Row {
+    pub tiles: usize,
+    pub copy_cr_cycles: u64,
+    pub arithmetic_cycles: u64,
+    pub total_cycles: u64,
+    /// MACs/cycle per tile — the paper's metric: micro-kernel MACs over
+    /// (isolated-kernel loop cycles + the contended Cr round trip).
+    pub perf_per_tile: f64,
+}
+
+/// Parallel GEMM bound to an architecture.
+pub struct ParallelGemm<'a> {
+    arch: &'a VersalArch,
+    tile: AieTileModel<'a>,
+}
+
+impl<'a> ParallelGemm<'a> {
+    pub fn new(arch: &'a VersalArch) -> ParallelGemm<'a> {
+        ParallelGemm { arch, tile: AieTileModel::new(arch) }
+    }
+
+    /// C += A·B on `cfg.tiles` AIE tiles. Exact numerics + schedule cycles.
+    pub fn run(
+        &self,
+        cfg: &GemmConfig,
+        a: &MatU8,
+        b: &MatU8,
+        c: &mut MatI32,
+    ) -> Result<(CycleBreakdown, Vec<TileStats>)> {
+        ensure!(a.cols == b.rows, "inner dimensions differ");
+        ensure!((c.rows, c.cols) == (a.rows, b.cols), "output shape mismatch");
+        ensure!(cfg.tiles >= 1, "need at least one tile");
+        ensure!(
+            cfg.tiles <= self.arch.aie.n_tiles,
+            "requested {} tiles, device has {}",
+            cfg.tiles,
+            self.arch.aie.n_tiles
+        );
+        cfg.ccp.check(self.arch, 1).map_err(anyhow::Error::msg)?;
+        // Multicast feasibility (Ar is shared by all active tiles).
+        Multicast::new(self.arch, cfg.tiles).map_err(|e| anyhow::anyhow!(e.to_string()))?;
+
+        let (m, n, k) = (a.rows, b.cols, a.cols);
+        let Ccp { mc, nc, kc } = cfg.ccp;
+        let kernel = MicroKernel;
+        let mut cycles = CycleBreakdown::zero();
+        let mut stats: Vec<TileStats> =
+            (0..cfg.tiles).map(|t| TileStats { tile: t, ..Default::default() }).collect();
+
+        let mut jc = 0;
+        while jc < n {
+            let nc_eff = nc.min(n - jc);
+            let mut pc = 0;
+            while pc < k {
+                let kc_eff = kc.min(k - pc);
+                let bc = pack_b(b, pc, jc, kc_eff, nc_eff);
+                if cfg.count_packing {
+                    cycles.packing +=
+                        (bc.bytes() as f64 / self.arch.ic.pack_bytes_per_cycle) as u64;
+                }
+                let mut ic = 0;
+                while ic < m {
+                    let mc_eff = mc.min(m - ic);
+                    let ac = pack_a(a, ic, pc, mc_eff, kc_eff);
+                    if cfg.count_packing {
+                        cycles.packing +=
+                            (ac.bytes() as f64 / self.arch.ic.pack_bytes_per_cycle) as u64;
+                    }
+
+                    // ----- numerics (host threads over pi row-panels) ----
+                    compute_block(&kernel, &ac, &bc, c, ic, jc, kc_eff);
+
+                    // ----- tile accounting: jr panels round-robin --------
+                    for pj in 0..bc.n_panels {
+                        let t = pj % cfg.tiles;
+                        stats[t].br_copies += 1;
+                        stats[t].kernels += ac.n_panels as u64;
+                        stats[t].macs += ac.n_panels as u64 * MicroKernel::macs(kc_eff);
+                    }
+
+                    // ----- schedule: lockstep rounds over the L4 space ---
+                    cycles += self.block_schedule(
+                        cfg,
+                        bc.n_panels,
+                        ac.n_panels,
+                        kc_eff,
+                        bc.panel_bytes(),
+                    );
+                    ic += mc_eff;
+                }
+                pc += kc_eff;
+            }
+            jc += nc_eff;
+        }
+        if cfg.count_packing {
+            cycles.total += cycles.packing;
+        }
+        Ok((cycles, stats))
+    }
+
+    /// Cycle schedule of one (mc, nc, kc) block on `cfg.tiles` tiles —
+    /// no numerics, so benches and capacity planning can sweep cheaply.
+    pub fn block_schedule(
+        &self,
+        cfg: &GemmConfig,
+        panels_b: usize,
+        panels_a: usize,
+        kc_eff: usize,
+        br_bytes: u64,
+    ) -> CycleBreakdown {
+        let stream = Stream::new(self.arch);
+        let gmio = Gmio::new(self.arch);
+        let kc_cycles = kc_eff.next_multiple_of(AieTileModel::UNROLL);
+        let kernel_cycles =
+            self.tile.kernel_cycles(kc_cycles, KernelMode::Baseline, cfg.steady_stream);
+
+        let mut cy = CycleBreakdown::zero();
+        let rounds = panels_b.div_ceil(cfg.tiles);
+        // First Br copy is exposed; subsequent rounds prefetch during
+        // compute (all tiles copy simultaneously — §5.1: constant 3280).
+        let br_cost = stream.br_copy_cycles(br_bytes);
+        cy.br_copy += br_cost * rounds as u64; // category time
+        cy.total += br_cost; // wall-clock: only the first is exposed
+
+        for r in 0..rounds {
+            let active = cfg.tiles.min(panels_b - r * cfg.tiles);
+            let orch = (self.arch.ic.orch_base_cycles * (active * active) as f64) as u64;
+            let cr_max = gmio.cr_roundtrip_cycles(active);
+            cy.orchestration += orch;
+            cy.copy_cr += cr_max * panels_a as u64;
+            cy.ar_stream += kernel_cycles.ar_stream * panels_a as u64;
+            cy.arithmetic += kernel_cycles.arithmetic * panels_a as u64;
+            cy.total += orch + (kernel_cycles.total + cr_max) * panels_a as u64;
+        }
+        cy
+    }
+
+    /// Produce one row of Table 2 for the paper's fixed problem
+    /// (m, n, k) = (mc, nc, kc) = (256, 256, 2048).
+    pub fn table2_row(&self, tiles: usize) -> Table2Row {
+        let cfg = GemmConfig::paper_table2(tiles);
+        let panels_b = cfg.ccp.nc / NR; // 32
+        let panels_a = cfg.ccp.mc / MR; // 32
+        let br_bytes = (cfg.ccp.kc * NR) as u64;
+        let sched = self.block_schedule(&cfg, panels_b, panels_a, cfg.ccp.kc, br_bytes);
+
+        // The paper's per-tile performance metric uses the *isolated*
+        // kernel cost (its micro-kernel instrumentation condition).
+        let gmio = Gmio::new(self.arch);
+        let isolated = self.tile.kernel_cycles(cfg.ccp.kc, KernelMode::Baseline, false).total;
+        let cr = gmio.cr_roundtrip_cycles(tiles);
+        let macs = MicroKernel::macs(cfg.ccp.kc);
+        Table2Row {
+            tiles,
+            copy_cr_cycles: cr,
+            // Table 2's "Arithmetic" column is the constant overlapped
+            // micro-kernel loop time (4,110 cycles for every row).
+            arithmetic_cycles: isolated,
+            total_cycles: sched.total,
+            perf_per_tile: macs as f64 / (isolated + cr) as f64,
+        }
+    }
+}
+
+/// Numerics of one (mc, nc, kc) block: every (pi, pj) micro-kernel.
+///
+/// Row-panels write disjoint row bands of C, so the band slices can be
+/// handed to host threads safely; threading engages only when the block
+/// carries enough MACs to amortise spawn cost (§Perf).
+fn compute_block(
+    kernel: &MicroKernel,
+    ac: &super::packing::PackedA,
+    bc: &super::packing::PackedB,
+    c: &mut MatI32,
+    ic: usize,
+    jc: usize,
+    kc_eff: usize,
+) {
+    const PARALLEL_MACS_THRESHOLD: u64 = 1 << 22;
+    let c_cols = c.cols;
+    let c_rows = c.rows;
+    let block_rows_end = (ic + ac.mc).min(c_rows);
+    let cblock = &mut c.data[ic * c_cols..block_rows_end * c_cols];
+    let total_macs = ac.n_panels as u64 * bc.n_panels as u64 * MicroKernel::macs(kc_eff);
+
+    // One row-panel's worth of work, writing into its private row band.
+    let do_panel = |pi: usize, band: &mut [i32]| {
+        let band_rows = band.len() / c_cols;
+        let ar = ac.panel(pi);
+        for pj in 0..bc.n_panels {
+            let br = bc.panel(pj);
+            let mut cr = [0i32; MR * NR];
+            kernel.run(kc_eff, ar, br, &mut cr);
+            // Scatter into the band, clipping at the matrix edges.
+            let col0 = jc + pj * NR;
+            let cols = NR.min(c_cols.saturating_sub(col0));
+            for i in 0..MR.min(band_rows) {
+                let row = &mut band[i * c_cols + col0..i * c_cols + col0 + cols];
+                for (j, r) in row.iter_mut().enumerate() {
+                    *r += cr[i * NR + j];
+                }
+            }
+        }
+    };
+
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    if total_macs < PARALLEL_MACS_THRESHOLD || threads < 2 || ac.n_panels < 2 {
+        for (pi, band) in cblock.chunks_mut(MR * c_cols).enumerate() {
+            do_panel(pi, band);
+        }
+    } else {
+        std::thread::scope(|s| {
+            let mut handles = Vec::new();
+            // Group row bands into `threads` contiguous chunks.
+            let bands: Vec<(usize, &mut [i32])> =
+                cblock.chunks_mut(MR * c_cols).enumerate().collect();
+            let per = bands.len().div_ceil(threads);
+            let mut it = bands.into_iter();
+            loop {
+                let group: Vec<(usize, &mut [i32])> = it.by_ref().take(per).collect();
+                if group.is_empty() {
+                    break;
+                }
+                let do_panel = &do_panel;
+                handles.push(s.spawn(move || {
+                    for (pi, band) in group {
+                        do_panel(pi, band);
+                    }
+                }));
+            }
+            for h in handles {
+                h.join().expect("panel worker panicked");
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::vc1902;
+    use crate::gemm::baseline::naive_gemm;
+    use crate::util::quickcheck::prop;
+    use crate::util::Pcg32;
+
+    fn cfg(tiles: usize, mc: usize, nc: usize, kc: usize) -> GemmConfig {
+        GemmConfig {
+            ccp: Ccp { mc, nc, kc },
+            tiles,
+            count_packing: false,
+            steady_stream: true,
+        }
+    }
+
+    #[test]
+    fn parallel_matches_naive_various_tiles() {
+        let arch = vc1902();
+        let g = ParallelGemm::new(&arch);
+        let mut rng = Pcg32::new(20);
+        let a = MatU8::random(40, 64, &mut rng);
+        let b = MatU8::random(64, 48, &mut rng);
+        let mut want = MatI32::zeros(40, 48);
+        naive_gemm(&a, &b, &mut want);
+        for tiles in [1, 2, 3, 4, 8] {
+            let mut c = MatI32::zeros(40, 48);
+            g.run(&cfg(tiles, 16, 16, 32), &a, &b, &mut c).unwrap();
+            assert_eq!(c.max_abs_diff(&want), 0, "tiles={tiles}");
+        }
+    }
+
+    #[test]
+    fn tiles_beyond_panels_are_idle_but_correct() {
+        let arch = vc1902();
+        let g = ParallelGemm::new(&arch);
+        let mut rng = Pcg32::new(21);
+        let a = MatU8::random(16, 16, &mut rng);
+        let b = MatU8::random(16, 16, &mut rng);
+        let mut want = MatI32::zeros(16, 16);
+        naive_gemm(&a, &b, &mut want);
+        let mut c = MatI32::zeros(16, 16);
+        // nc=16 → 2 B-panels, but 8 tiles requested.
+        let (_cy, stats) = g.run(&cfg(8, 16, 16, 16), &a, &b, &mut c).unwrap();
+        assert_eq!(c.max_abs_diff(&want), 0);
+        let busy = stats.iter().filter(|s| s.kernels > 0).count();
+        assert_eq!(busy, 2, "only 2 of 8 tiles should have work");
+    }
+
+    #[test]
+    fn work_distribution_is_balanced() {
+        let arch = vc1902();
+        let g = ParallelGemm::new(&arch);
+        let mut rng = Pcg32::new(22);
+        let a = MatU8::random(64, 32, &mut rng);
+        let b = MatU8::random(32, 64, &mut rng);
+        let mut c = MatI32::zeros(64, 64);
+        let (_cy, stats) = g.run(&cfg(4, 64, 64, 32), &a, &b, &mut c).unwrap();
+        // 8 B-panels over 4 tiles → 2 each; 8 A-panels → 16 kernels each.
+        for s in &stats {
+            assert_eq!(s.br_copies, 2);
+            assert_eq!(s.kernels, 16);
+        }
+    }
+
+    #[test]
+    fn table2_totals_match_paper_within_6pct() {
+        let arch = vc1902();
+        let g = ParallelGemm::new(&arch);
+        let paper: [(usize, f64, f64); 6] = [
+            (1, 3694.1e3, 31.5),
+            (2, 1916.0e3, 31.4),
+            (4, 958.1e3, 31.3),
+            (8, 498.9e3, 31.2),
+            (16, 275.3e3, 30.7),
+            (32, 162.9e3, 29.8),
+        ];
+        for &(tiles, total, perf) in &paper {
+            let row = g.table2_row(tiles);
+            let terr = (row.total_cycles as f64 - total).abs() / total;
+            assert!(terr < 0.06, "tiles={tiles}: total {} vs paper {total} ({terr:.3})", row.total_cycles);
+            let perr = (row.perf_per_tile - perf).abs() / perf;
+            assert!(perr < 0.01, "tiles={tiles}: perf {} vs paper {perf}", row.perf_per_tile);
+        }
+    }
+
+    #[test]
+    fn table2_scaling_shape_holds() {
+        // Strong-scaling: totals near-halve with tile doubling; per-tile
+        // performance degrades ≤ 6% from 1 → 32 tiles (paper: 5.7 %).
+        let arch = vc1902();
+        let g = ParallelGemm::new(&arch);
+        let r1 = g.table2_row(1);
+        let r32 = g.table2_row(32);
+        let degradation = 1.0 - r32.perf_per_tile / r1.perf_per_tile;
+        assert!((0.03..0.07).contains(&degradation), "degradation {degradation}");
+        let speedup = r1.total_cycles as f64 / r32.total_cycles as f64;
+        assert!(speedup > 20.0, "speedup {speedup} at 32 tiles");
+        let mut prev = r1.total_cycles;
+        for t in [2, 4, 8, 16, 32] {
+            let row = g.table2_row(t);
+            assert!(row.total_cycles < prev, "monotone total decrease");
+            prev = row.total_cycles;
+        }
+    }
+
+    #[test]
+    fn too_many_tiles_rejected() {
+        let arch = vc1902();
+        let g = ParallelGemm::new(&arch);
+        let a = MatU8::zeros(8, 8);
+        let b = MatU8::zeros(8, 8);
+        let mut c = MatI32::zeros(8, 8);
+        assert!(g.run(&cfg(401, 8, 8, 8), &a, &b, &mut c).is_err());
+        assert!(g.run(&cfg(0, 8, 8, 8), &a, &b, &mut c).is_err());
+    }
+
+    #[test]
+    fn prop_parallel_equals_naive() {
+        prop("parallel-vs-naive", 0x9A7, 30, |g| {
+            let arch = vc1902();
+            let gemm = ParallelGemm::new(&arch);
+            let m = g.dim(40);
+            let k = g.dim(40);
+            let n = g.dim(40);
+            let tiles = g.rng.range(1, 9);
+            let a = MatU8::random(m, k, &mut g.rng);
+            let b = MatU8::random(k, n, &mut g.rng);
+            let mut c1 = MatI32::zeros(m, n);
+            let mut c2 = MatI32::zeros(m, n);
+            let cfg = GemmConfig {
+                ccp: Ccp { mc: g.rng.range(1, 48), nc: g.rng.range(1, 48), kc: g.rng.range(1, 48) },
+                tiles,
+                count_packing: false,
+                steady_stream: true,
+            };
+            gemm.run(&cfg, &a, &b, &mut c1).map_err(|e| e.to_string())?;
+            naive_gemm(&a, &b, &mut c2);
+            if c1.max_abs_diff(&c2) != 0 {
+                return Err(format!("mismatch ({m},{k},{n}) tiles={tiles}"));
+            }
+            Ok(())
+        });
+    }
+}

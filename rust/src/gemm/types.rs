@@ -1,0 +1,129 @@
+//! Dense row-major matrix containers for the mixed-precision GEMM.
+//!
+//! The paper's data types: A, B are UINT8; the accumulators are 48-bit
+//! (`v16acc48`); C is updated in global memory. We accumulate in i32 —
+//! wide enough for any kc ≤ 2^16 of u8·u8 products (255·255·65536 < 2^31).
+
+/// Row-major u8 matrix (GEMM input operand).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MatU8 {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<u8>,
+}
+
+impl MatU8 {
+    pub fn zeros(rows: usize, cols: usize) -> MatU8 {
+        MatU8 { rows, cols, data: vec![0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<u8>) -> MatU8 {
+        assert_eq!(data.len(), rows * cols, "data length mismatch");
+        MatU8 { rows, cols, data }
+    }
+
+    /// Filled with a deterministic PRNG stream (tests, benches, examples).
+    pub fn random(rows: usize, cols: usize, rng: &mut crate::util::Pcg32) -> MatU8 {
+        MatU8 { rows, cols, data: rng.vec_u8(rows * cols) }
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> u8 {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: u8) {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c] = v;
+    }
+
+    pub fn bytes(&self) -> u64 {
+        (self.rows * self.cols) as u64
+    }
+}
+
+/// Row-major i32 matrix (GEMM accumulator / output operand).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MatI32 {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<i32>,
+}
+
+impl MatI32 {
+    pub fn zeros(rows: usize, cols: usize) -> MatI32 {
+        MatI32 { rows, cols, data: vec![0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<i32>) -> MatI32 {
+        assert_eq!(data.len(), rows * cols, "data length mismatch");
+        MatI32 { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> i32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn add(&mut self, r: usize, c: usize, v: i32) {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c] += v;
+    }
+
+    /// Max absolute elementwise difference (exact paths must give 0).
+    pub fn max_abs_diff(&self, other: &MatI32) -> i64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(&a, &b)| ((a as i64) - (b as i64)).abs())
+            .max()
+            .unwrap_or(0)
+    }
+
+    pub fn bytes(&self) -> u64 {
+        (self.rows * self.cols * 4) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg32;
+
+    #[test]
+    fn index_roundtrip_u8() {
+        let mut m = MatU8::zeros(3, 4);
+        m.set(2, 3, 77);
+        assert_eq!(m.at(2, 3), 77);
+        assert_eq!(m.at(0, 0), 0);
+        assert_eq!(m.bytes(), 12);
+    }
+
+    #[test]
+    fn random_is_deterministic() {
+        let mut r1 = Pcg32::new(5);
+        let mut r2 = Pcg32::new(5);
+        assert_eq!(MatU8::random(4, 4, &mut r1), MatU8::random(4, 4, &mut r2));
+    }
+
+    #[test]
+    fn i32_accumulate_and_diff() {
+        let mut a = MatI32::zeros(2, 2);
+        a.add(0, 1, 5);
+        a.add(0, 1, -2);
+        assert_eq!(a.at(0, 1), 3);
+        let b = MatI32::from_vec(2, 2, vec![0, 7, 0, 0]);
+        assert_eq!(a.max_abs_diff(&b), 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "data length mismatch")]
+    fn from_vec_checks_len() {
+        MatU8::from_vec(2, 2, vec![1, 2, 3]);
+    }
+}

@@ -1,0 +1,61 @@
+//! # versal-gemm
+//!
+//! A reproduction of *"Mapping Parallel Matrix Multiplication in GotoBLAS2
+//! to the AMD Versal ACAP for Deep Learning"* (Lei & Quintana-Ortí, 2024)
+//! as a three-layer Rust + JAX + Pallas stack.
+//!
+//! The paper's testbed — a physical AMD Versal VC1902 ACAP with 400 AI
+//! Engine (AIE) tiles, FPGA Ultra/Block RAM and an ARM host — is not
+//! available in this environment. Per the substitution rule documented in
+//! `DESIGN.md`, the platform is reproduced as a **cycle-approximate
+//! simulator** ([`sim`]) calibrated against every primitive cost the paper
+//! reports (mac16 throughput, streaming-interface read latency, GMIO/DDR
+//! contention, local-memory copy bandwidth), while the *numerics* of every
+//! GEMM run on the simulated platform are computed exactly (u8 × u8 → i32)
+//! and validated against both a naive reference and the JAX/Pallas oracle
+//! through the PJRT runtime ([`runtime`]).
+//!
+//! ## Crate layout
+//!
+//! - [`arch`]    — static description of the Versal VC1902 (memory levels,
+//!                 AIE grid, interconnect interfaces); Table 1 of the paper.
+//! - [`sim`]     — cycle-approximate platform simulator: memory modules,
+//!                 GMIO ping-pong protocol with a serial DDR arbiter,
+//!                 streaming + multicast interfaces, the AIE tile timing
+//!                 model (mac16, VLIW compute/transfer overlap).
+//! - [`gemm`]    — the GotoBLAS2 algorithm mapped onto the platform: CCP
+//!                 (cache configuration parameter) selection, packing
+//!                 routines, the 8×8 UINT8 micro-kernel, the sequential
+//!                 blocked driver and the parallel loop-L4 design, plus
+//!                 ablation drivers that parallelise L1/L3/L5 instead.
+//! - [`quant`]   — mixed-precision support: affine quantisation,
+//!                 requantisation, per-tensor scales.
+//! - [`dl`]      — deep-learning substrate: linear layers, im2col
+//!                 convolution lowering, a quantised MLP, GEMM shape traces
+//!                 of well-known CNN/transformer models.
+//! - [`coordinator`] — the L3 serving coordinator: request router, dynamic
+//!                 batcher, AIE worker pool, metrics and backpressure.
+//! - [`runtime`] — PJRT client wrapper that loads the AOT artifacts
+//!                 (`artifacts/*.hlo.txt`, produced by `python/compile/`)
+//!                 and executes them from Rust.
+//! - [`report`]  — table/CSV/markdown emitters used by the benches to
+//!                 regenerate the paper's tables.
+//! - [`util`]    — in-tree replacements for crates unavailable offline:
+//!                 PRNG, stats, CLI parser, mini property-testing harness,
+//!                 mini bench harness, INI config parser.
+
+pub mod arch;
+pub mod coordinator;
+pub mod dl;
+pub mod gemm;
+pub mod quant;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+
+pub use arch::VersalArch;
+pub use gemm::{Ccp, GemmConfig, ParallelGemm};
+
+mod app;
+pub use app::cli_main;

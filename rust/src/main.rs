@@ -1,0 +1,17 @@
+//! `versal-gemm` CLI — the L3 leader entrypoint.
+//!
+//! Subcommands (see `versal-gemm help`):
+//!   inspect   — print the architecture description (paper Table 1)
+//!   gemm      — run a parallel GEMM on the simulated platform
+//!   table2    — regenerate Table 2 (strong scaling 1–32 tiles)
+//!   table3    — regenerate Table 3 (micro-kernel ablations)
+//!   ccp       — derive and check cache configuration parameters
+//!   serve     — run the batching inference coordinator on a workload
+//!   ablation  — compare loop-parallelisation strategies (§4.4)
+
+use versal_gemm::cli_main;
+
+fn main() {
+    let code = cli_main(std::env::args().skip(1).collect());
+    std::process::exit(code);
+}

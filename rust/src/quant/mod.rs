@@ -1,0 +1,17 @@
+//! Mixed-precision support: affine quantisation for UINT8 inference.
+//!
+//! The paper motivates its UINT8 micro-kernel by "the strong demand for
+//! adaptive-precision inference in deep learning" (§1, §4.2). This module
+//! supplies the numerical machinery that makes a u8·u8→i32 GEMM usable as
+//! a *neural-network layer*: per-tensor affine quantisation
+//! (`q = round(x/scale) + zero_point`), the zero-point correction that
+//! turns an integer GEMM over quantised operands back into a real-valued
+//! product, and requantisation of i32 accumulators to u8 activations.
+
+mod per_channel;
+mod qgemm;
+mod qparams;
+
+pub use per_channel::{per_channel_matmul, PerChannelWeights};
+pub use qgemm::{dequantize_gemm_i32, quantized_linear, zero_point_correction};
+pub use qparams::{QParams, QTensor};

@@ -1,0 +1,184 @@
+//! Quantised GEMM: turning the integer kernel into a real-valued layer.
+//!
+//! For affine-quantised operands `a = sa·(qa − za)`, `b = sb·(qb − zb)`,
+//! the real product is
+//!
+//! ```text
+//! A·B = sa·sb · [ QA·QB − za·colsum(QB) − zb·rowsum(QA) + k·za·zb ]
+//! ```
+//!
+//! `QA·QB` is exactly the u8 GEMM the paper's micro-kernel computes; the
+//! three correction terms are O(m·n) and O(m·k + k·n) — negligible next
+//! to the O(m·n·k) product, which is why production int8 inference stacks
+//! (and this one) run them on the host/ARM core rather than the AIEs.
+
+use super::qparams::QParams;
+use crate::gemm::{MatI32, MatU8};
+
+/// The zero-point correction term for `C[i][j]`:
+/// `− za·colsum_j(QB) − zb·rowsum_i(QA) + k·za·zb`.
+pub fn zero_point_correction(
+    qa: &MatU8,
+    qb: &MatU8,
+    pa: QParams,
+    pb: QParams,
+) -> MatI32 {
+    assert_eq!(qa.cols, qb.rows);
+    let k = qa.cols as i32;
+    let row_sums: Vec<i32> = (0..qa.rows)
+        .map(|i| (0..qa.cols).map(|p| qa.at(i, p) as i32).sum())
+        .collect();
+    let col_sums: Vec<i32> = (0..qb.cols)
+        .map(|j| (0..qb.rows).map(|p| qb.at(p, j) as i32).sum())
+        .collect();
+    let mut corr = MatI32::zeros(qa.rows, qb.cols);
+    for i in 0..qa.rows {
+        for j in 0..qb.cols {
+            let c = -pa.zero_point * col_sums[j] - pb.zero_point * row_sums[i]
+                + k * pa.zero_point * pb.zero_point;
+            corr.add(i, j, c);
+        }
+    }
+    corr
+}
+
+/// Dequantise an integer GEMM result (`qc = QA·QB` plus correction) into
+/// real values: `sa·sb·qc`.
+pub fn dequantize_gemm_i32(qc: &MatI32, pa: QParams, pb: QParams) -> Vec<f32> {
+    let s = pa.scale * pb.scale;
+    qc.data.iter().map(|&v| v as f32 * s).collect()
+}
+
+/// Full quantised linear layer on top of an integer-GEMM closure:
+/// `Y = dequant(QA·QB + correction) + bias`, returning row-major f32.
+///
+/// The closure runs the actual u8 GEMM (blocked, parallel, or the PJRT
+/// artifact) so this module stays agnostic about *where* the MACs happen.
+pub fn quantized_linear(
+    qa: &MatU8,
+    qb: &MatU8,
+    pa: QParams,
+    pb: QParams,
+    bias: Option<&[f32]>,
+    gemm: impl FnOnce(&MatU8, &MatU8, &mut MatI32),
+) -> Vec<f32> {
+    let mut qc = MatI32::zeros(qa.rows, qb.cols);
+    gemm(qa, qb, &mut qc);
+    let corr = zero_point_correction(qa, qb, pa, pb);
+    for (c, &d) in qc.data.iter_mut().zip(&corr.data) {
+        *c += d;
+    }
+    let mut y = dequantize_gemm_i32(&qc, pa, pb);
+    if let Some(bias) = bias {
+        assert_eq!(bias.len(), qb.cols);
+        for i in 0..qa.rows {
+            for j in 0..qb.cols {
+                y[i * qb.cols + j] += bias[j];
+            }
+        }
+    }
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::baseline::naive_gemm;
+    use crate::quant::QTensor;
+    use crate::util::quickcheck::prop;
+    use crate::util::Pcg32;
+
+    /// f32 reference product.
+    fn f32_gemm(m: usize, k: usize, n: usize, a: &[f32], b: &[f32]) -> Vec<f32> {
+        let mut c = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                for p in 0..k {
+                    c[i * n + j] += a[i * k + p] * b[p * n + j];
+                }
+            }
+        }
+        c
+    }
+
+    fn random_f32(n: usize, lo: f32, hi: f32, rng: &mut Pcg32) -> Vec<f32> {
+        (0..n).map(|_| lo + (hi - lo) * rng.f64() as f32).collect()
+    }
+
+    #[test]
+    fn quantized_gemm_tracks_f32_reference() {
+        let (m, k, n) = (16, 32, 12);
+        let mut rng = Pcg32::new(40);
+        let a = random_f32(m * k, -1.0, 1.0, &mut rng);
+        let b = random_f32(k * n, -0.5, 0.5, &mut rng);
+        let qa = QTensor::from_f32(m, k, &a);
+        let qb = QTensor::from_f32(k, n, &b);
+        let y = quantized_linear(&qa.data, &qb.data, qa.params, qb.params, None, |a, b, c| {
+            naive_gemm(a, b, c)
+        });
+        let want = f32_gemm(m, k, n, &a, &b);
+        // Error bound: k · (sa/2·|b|max + sb/2·|a|max + sa·sb/4) per entry.
+        let bound = k as f32
+            * (qa.params.scale * 0.5 * 0.5
+                + qb.params.scale * 0.5 * 1.0
+                + qa.params.scale * qb.params.scale * 0.25)
+            + 1e-3;
+        for (i, (&got, &w)) in y.iter().zip(&want).enumerate() {
+            assert!((got - w).abs() <= bound, "entry {i}: {got} vs {w} (bound {bound})");
+        }
+    }
+
+    #[test]
+    fn bias_is_added_per_column() {
+        let qa = QTensor::from_f32(1, 1, &[1.0]);
+        let qb = QTensor::from_f32(1, 2, &[1.0, 1.0]);
+        let bias = [10.0f32, -10.0];
+        let y = quantized_linear(&qa.data, &qb.data, qa.params, qb.params, Some(&bias), |a, b, c| {
+            naive_gemm(a, b, c)
+        });
+        assert!((y[0] - 11.0).abs() < 0.1, "{y:?}");
+        assert!((y[1] + 9.0).abs() < 0.1, "{y:?}");
+    }
+
+    #[test]
+    fn correction_zero_when_zero_points_zero() {
+        // Non-negative data ⇒ zero_point = 0 ⇒ correction must vanish.
+        let mut rng = Pcg32::new(41);
+        let a = random_f32(4 * 8, 0.0, 1.0, &mut rng);
+        let b = random_f32(8 * 4, 0.0, 1.0, &mut rng);
+        let qa = QTensor::from_f32(4, 8, &a);
+        let qb = QTensor::from_f32(8, 4, &b);
+        assert_eq!(qa.params.zero_point, 0);
+        assert_eq!(qb.params.zero_point, 0);
+        let corr = zero_point_correction(&qa.data, &qb.data, qa.params, qb.params);
+        assert!(corr.data.iter().all(|&v| v == 0));
+    }
+
+    #[test]
+    fn prop_quantized_linear_error_scales_with_k() {
+        prop("qgemm-error-bound", 0x0E55, 25, |g| {
+            let m = g.dim(12);
+            let k = g.dim(24);
+            let n = g.dim(12);
+            let a = random_f32(m * k, -2.0, 2.0, &mut g.rng);
+            let b = random_f32(k * n, -2.0, 2.0, &mut g.rng);
+            let qa = QTensor::from_f32(m, k, &a);
+            let qb = QTensor::from_f32(k, n, &b);
+            let y =
+                quantized_linear(&qa.data, &qb.data, qa.params, qb.params, None, |a, b, c| {
+                    naive_gemm(a, b, c)
+                });
+            let want = f32_gemm(m, k, n, &a, &b);
+            let bound = k as f32
+                * (qa.params.scale * 2.0 + qb.params.scale * 2.0
+                    + qa.params.scale * qb.params.scale)
+                + 1e-3;
+            for (got, w) in y.iter().zip(&want) {
+                if (got - w).abs() > bound {
+                    return Err(format!("error {} > bound {bound} (k={k})", (got - w).abs()));
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,144 @@
+//! Affine quantisation parameters and quantised tensors.
+
+use crate::gemm::MatU8;
+
+/// Per-tensor affine quantisation: `real ≈ scale · (q − zero_point)`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QParams {
+    pub scale: f32,
+    pub zero_point: i32,
+}
+
+impl QParams {
+    /// Choose parameters covering `[lo, hi]` with the full u8 range,
+    /// following the standard asymmetric-quantisation recipe (zero is
+    /// exactly representable, as required for zero-padded packing to be
+    /// value-neutral after correction).
+    pub fn fit(lo: f32, hi: f32) -> QParams {
+        assert!(lo.is_finite() && hi.is_finite() && lo <= hi, "bad range [{lo}, {hi}]");
+        // Always include 0 in the range so zero_point ∈ [0, 255].
+        let lo = lo.min(0.0);
+        let hi = hi.max(0.0);
+        let scale = if hi > lo { (hi - lo) / 255.0 } else { 1.0 };
+        let zero_point = (-lo / scale).round().clamp(0.0, 255.0) as i32;
+        QParams { scale, zero_point }
+    }
+
+    #[inline]
+    pub fn quantize(&self, x: f32) -> u8 {
+        ((x / self.scale).round() as i32 + self.zero_point).clamp(0, 255) as u8
+    }
+
+    #[inline]
+    pub fn dequantize(&self, q: u8) -> f32 {
+        self.scale * (q as i32 - self.zero_point) as f32
+    }
+}
+
+/// A u8 tensor together with its quantisation parameters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QTensor {
+    pub data: MatU8,
+    pub params: QParams,
+}
+
+impl QTensor {
+    /// Quantise a row-major f32 matrix with range fit over its elements.
+    pub fn from_f32(rows: usize, cols: usize, x: &[f32]) -> QTensor {
+        assert_eq!(x.len(), rows * cols);
+        let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+        for &v in x {
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+        if !lo.is_finite() {
+            lo = 0.0;
+            hi = 0.0;
+        }
+        let params = QParams::fit(lo, hi);
+        let data = MatU8::from_vec(rows, cols, x.iter().map(|&v| params.quantize(v)).collect());
+        QTensor { data, params }
+    }
+
+    /// Dequantise back to f32 (row-major).
+    pub fn to_f32(&self) -> Vec<f32> {
+        self.data.data.iter().map(|&q| self.params.dequantize(q)).collect()
+    }
+
+    /// Max absolute quantisation error vs the original values.
+    pub fn max_error(&self, x: &[f32]) -> f32 {
+        self.to_f32()
+            .iter()
+            .zip(x)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickcheck::prop;
+
+    #[test]
+    fn zero_is_exact() {
+        for (lo, hi) in [(-1.0f32, 1.0), (0.0, 6.0), (-3.0, 0.5)] {
+            let p = QParams::fit(lo, hi);
+            assert_eq!(p.dequantize(p.quantize(0.0)), 0.0, "range [{lo},{hi}]");
+        }
+    }
+
+    #[test]
+    fn roundtrip_error_bounded_by_half_scale() {
+        let p = QParams::fit(-4.0, 4.0);
+        for i in 0..=800 {
+            let x = -4.0 + i as f32 * 0.01;
+            let err = (p.dequantize(p.quantize(x)) - x).abs();
+            assert!(err <= p.scale * 0.5 + 1e-6, "x={x} err={err}");
+        }
+    }
+
+    #[test]
+    fn clamps_out_of_range() {
+        let p = QParams::fit(0.0, 1.0);
+        assert_eq!(p.quantize(99.0), 255);
+        assert_eq!(p.quantize(-99.0), 0);
+    }
+
+    #[test]
+    fn degenerate_range_handled() {
+        let p = QParams::fit(0.0, 0.0);
+        assert_eq!(p.quantize(0.0), 0);
+        assert_eq!(p.dequantize(p.quantize(0.0)), 0.0);
+    }
+
+    #[test]
+    fn qtensor_roundtrip_small() {
+        let x = vec![-1.0f32, -0.5, 0.0, 0.5, 1.0, 2.0];
+        let t = QTensor::from_f32(2, 3, &x);
+        assert!(t.max_error(&x) <= t.params.scale * 0.5 + 1e-6);
+    }
+
+    #[test]
+    fn prop_quantize_monotone_and_bounded() {
+        prop("quant-monotone", 0x0A7, 60, |g| {
+            let lo = -(g.rng.f64() as f32) * 10.0;
+            let hi = g.rng.f64() as f32 * 10.0;
+            let p = QParams::fit(lo, hi);
+            let mut prev_q = 0u8;
+            for i in 0..=100 {
+                let x = lo + (hi - lo) * i as f32 / 100.0;
+                let q = p.quantize(x);
+                if i > 0 && q < prev_q {
+                    return Err(format!("non-monotone at x={x}"));
+                }
+                prev_q = q;
+                let err = (p.dequantize(q) - x).abs();
+                if err > p.scale * 0.5 + 1e-4 {
+                    return Err(format!("error {err} > half-scale at x={x}"));
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,150 @@
+//! Reporting: paper-shaped table emitters shared by the CLI and benches.
+
+use crate::arch::VersalArch;
+use crate::gemm::parallel::{ParallelGemm, Table2Row};
+use crate::sim::{AieTileModel, KernelMode};
+use crate::util::tabulate::{Align, Table};
+
+/// Format a cycle count like the paper's Table 2 ("3694.1 · 10^3").
+pub fn fmt_kcycles(cycles: u64) -> String {
+    format!("{:.1}e3", cycles as f64 / 1e3)
+}
+
+/// Paper reference values for Table 2 (for side-by-side printing).
+pub const PAPER_TABLE2: [(usize, u64, u64, f64, f64); 6] = [
+    // (tiles, copy_cr, arith, total, perf/tile)
+    (1, 40, 4110, 3694.1e3, 31.5),
+    (2, 58, 4110, 1916.0e3, 31.4),
+    (4, 63, 4110, 958.1e3, 31.3),
+    (8, 84, 4110, 498.9e3, 31.2),
+    (16, 157, 4110, 275.3e3, 30.7),
+    (32, 282, 4110, 162.9e3, 29.8),
+];
+
+/// Paper reference values for Table 3: (label, measured, theoretical).
+pub const PAPER_TABLE3: [(&str, u64, u64); 3] = [
+    ("read ar only", 4106, 4864),
+    ("execute mac16() only", 1042, 1024),
+    ("baseline", 4110, 5888),
+];
+
+/// Build Table 2 (model vs paper) for the given tile counts.
+pub fn table2(arch: &VersalArch, tile_counts: &[usize]) -> Table {
+    let g = ParallelGemm::new(arch);
+    let mut t = Table::new(&[
+        "#AIE tiles",
+        "Copy Cr",
+        "Arithmetic",
+        "Total",
+        "Perf/tile (MACs/cyc)",
+        "paper Total",
+        "paper Perf",
+        "Δtotal %",
+    ]);
+    for &n in tile_counts {
+        let row: Table2Row = g.table2_row(n);
+        let paper = PAPER_TABLE2.iter().find(|p| p.0 == n);
+        let (pt, pp, delta) = match paper {
+            Some(&(_, _, _, total, perf)) => (
+                fmt_kcycles(total as u64),
+                format!("{perf:.1}"),
+                format!("{:+.1}", (row.total_cycles as f64 - total) / total * 100.0),
+            ),
+            None => ("-".into(), "-".into(), "-".into()),
+        };
+        t.row(&[
+            n.to_string(),
+            row.copy_cr_cycles.to_string(),
+            row.arithmetic_cycles.to_string(),
+            fmt_kcycles(row.total_cycles),
+            format!("{:.1}", row.perf_per_tile),
+            pt,
+            pp,
+            delta,
+        ]);
+    }
+    t
+}
+
+/// Build Table 3 (model vs paper) for kc = 2048.
+pub fn table3(arch: &VersalArch) -> Table {
+    let m = AieTileModel::new(arch);
+    let mut t = Table::new(&[
+        "Experiment",
+        "Measured (model)",
+        "Theoretical",
+        "paper measured",
+        "paper theoretical",
+    ])
+    .align(0, Align::Left);
+    let rows = [
+        ("read ar only", KernelMode::ReadArOnly),
+        ("execute mac16() only", KernelMode::MacOnly),
+        ("baseline", KernelMode::Baseline),
+    ];
+    for (i, (label, mode)) in rows.iter().enumerate() {
+        let measured = m.kernel_cycles(2048, *mode, false).total;
+        let theory = m.kernel_cycles_theoretical(2048, *mode);
+        let (_, pm, pt) = PAPER_TABLE3[i];
+        t.row(&[
+            label.to_string(),
+            measured.to_string(),
+            theory.to_string(),
+            pm.to_string(),
+            pt.to_string(),
+        ]);
+    }
+    t
+}
+
+/// Save a table as CSV under `bench_results/<name>.csv` (directory
+/// created on demand) so bench runs leave machine-readable artifacts
+/// next to the printed output. Returns the written path.
+pub fn save_csv(name: &str, table: &Table) -> std::io::Result<std::path::PathBuf> {
+    let dir = std::path::PathBuf::from(
+        std::env::var_os("VERSAL_BENCH_RESULTS").unwrap_or_else(|| "bench_results".into()),
+    );
+    std::fs::create_dir_all(&dir)?;
+    let path = dir.join(format!("{name}.csv"));
+    std::fs::write(&path, table.to_csv())?;
+    Ok(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::vc1902;
+
+    #[test]
+    fn table2_has_row_per_tile_count() {
+        let t = table2(&vc1902(), &[1, 2, 4, 8, 16, 32]);
+        assert_eq!(t.n_rows(), 6);
+        let txt = t.to_text();
+        assert!(txt.contains("31.5") || txt.contains("31.6"), "{txt}");
+    }
+
+    #[test]
+    fn table3_reproduces_measured_column_exactly() {
+        let txt = table3(&vc1902()).to_text();
+        for v in ["4106", "1042", "4110", "4864", "1024", "5888"] {
+            assert!(txt.contains(v), "missing {v} in\n{txt}");
+        }
+    }
+
+    #[test]
+    fn kcycles_format() {
+        assert_eq!(fmt_kcycles(3_694_100), "3694.1e3");
+    }
+
+    #[test]
+    fn save_csv_writes_file() {
+        let tmp = std::env::temp_dir().join("versal_csv_test");
+        std::env::set_var("VERSAL_BENCH_RESULTS", &tmp);
+        let path = save_csv("t2", &table2(&vc1902(), &[1, 32])).unwrap();
+        std::env::remove_var("VERSAL_BENCH_RESULTS");
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("#AIE tiles,"));
+        assert_eq!(text.lines().count(), 3);
+        let _ = std::fs::remove_dir_all(&tmp);
+    }
+}

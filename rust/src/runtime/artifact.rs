@@ -1,0 +1,110 @@
+//! Artifact registry: the contract between `python/compile/aot.py` and
+//! the Rust runtime.
+//!
+//! Every artifact is an HLO-text file named `<id>.hlo.txt`. The IDs and
+//! their shapes are fixed here and mirrored by `aot.py`; integration
+//! tests assert both sides agree.
+
+use std::path::{Path, PathBuf};
+
+/// Known AOT artifacts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ArtifactId {
+    /// u8\[64,64\] · u8\[64,64\] → (i32\[64,64\],) through the Pallas blocked
+    /// GEMM kernel (micro-kernel + packing schedule in BlockSpec form).
+    GemmU8_64,
+    /// The paper's Table 2 problem: u8\[256,2048\] · u8\[2048,256\] →
+    /// (i32\[256,256\],).
+    GemmU8Paper,
+    /// Quantised MLP classifier forward at batch 8:
+    /// f32\[8,784\] → (f32\[8,10\],) with u8 weights baked in and every
+    /// matmul running through the Pallas micro-kernel.
+    MlpU8B8,
+}
+
+impl ArtifactId {
+    pub const ALL: [ArtifactId; 3] =
+        [ArtifactId::GemmU8_64, ArtifactId::GemmU8Paper, ArtifactId::MlpU8B8];
+
+    /// File stem (matches `python/compile/aot.py` `ARTIFACTS`).
+    pub fn stem(self) -> &'static str {
+        match self {
+            ArtifactId::GemmU8_64 => "gemm_u8_64",
+            ArtifactId::GemmU8Paper => "gemm_u8_paper",
+            ArtifactId::MlpU8B8 => "mlp_u8_b8",
+        }
+    }
+
+    pub fn file_name(self) -> String {
+        format!("{}.hlo.txt", self.stem())
+    }
+}
+
+/// Default artifacts directory: `$VERSAL_ARTIFACTS_DIR` or `./artifacts`.
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var_os("VERSAL_ARTIFACTS_DIR")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+/// Registry rooted at a directory.
+#[derive(Debug, Clone)]
+pub struct ArtifactRegistry {
+    root: PathBuf,
+}
+
+impl ArtifactRegistry {
+    pub fn new(root: impl Into<PathBuf>) -> ArtifactRegistry {
+        ArtifactRegistry { root: root.into() }
+    }
+
+    pub fn default_location() -> ArtifactRegistry {
+        ArtifactRegistry::new(artifacts_dir())
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    pub fn path(&self, id: ArtifactId) -> PathBuf {
+        self.root.join(id.file_name())
+    }
+
+    pub fn exists(&self, id: ArtifactId) -> bool {
+        self.path(id).is_file()
+    }
+
+    /// IDs that are missing on disk (for a helpful `make artifacts` hint).
+    pub fn missing(&self) -> Vec<ArtifactId> {
+        ArtifactId::ALL.iter().copied().filter(|&id| !self.exists(id)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stems_are_unique_and_stable() {
+        let stems: Vec<&str> = ArtifactId::ALL.iter().map(|a| a.stem()).collect();
+        let mut uniq = stems.clone();
+        uniq.sort();
+        uniq.dedup();
+        assert_eq!(uniq.len(), stems.len());
+        assert_eq!(ArtifactId::GemmU8_64.file_name(), "gemm_u8_64.hlo.txt");
+    }
+
+    #[test]
+    fn registry_paths_and_missing() {
+        let tmp = std::env::temp_dir().join("versal_artifact_test");
+        let _ = std::fs::create_dir_all(&tmp);
+        let reg = ArtifactRegistry::new(&tmp);
+        assert!(reg.path(ArtifactId::MlpU8B8).ends_with("mlp_u8_b8.hlo.txt"));
+        // Create one artifact; the other two must show as missing.
+        std::fs::write(reg.path(ArtifactId::GemmU8_64), "dummy").unwrap();
+        let missing = reg.missing();
+        assert!(!missing.contains(&ArtifactId::GemmU8_64));
+        assert!(missing.contains(&ArtifactId::GemmU8Paper));
+        let _ = std::fs::remove_dir_all(&tmp);
+    }
+}

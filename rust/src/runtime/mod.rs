@@ -1,0 +1,18 @@
+//! PJRT runtime: load and execute the AOT artifacts from Rust.
+//!
+//! The build-time Python layer (`python/compile/aot.py`) lowers the JAX/
+//! Pallas computations to **HLO text** under `artifacts/`; this module
+//! loads them with the `xla` crate (PJRT C API, CPU client), compiles them
+//! once, and executes them from the L3 hot path. Python never runs at
+//! request time.
+//!
+//! Interchange is HLO text rather than a serialized `HloModuleProto`
+//! because jax ≥ 0.5 emits 64-bit instruction ids that xla_extension
+//! 0.5.1 rejects; the text parser reassigns ids (see
+//! /opt/xla-example/README.md and DESIGN.md §3).
+
+mod artifact;
+mod pjrt;
+
+pub use artifact::{artifacts_dir, ArtifactId, ArtifactRegistry};
+pub use pjrt::Engine;

@@ -1,0 +1,136 @@
+//! PJRT execution engine.
+//!
+//! Wraps the `xla` crate: one CPU client, a cache of compiled executables
+//! keyed by [`ArtifactId`], and typed helpers for the artifact signatures.
+//! Compilation happens once per artifact per engine (the AOT property);
+//! execution is allocation-light and safe to call from the serving loop.
+
+use super::artifact::{ArtifactId, ArtifactRegistry};
+use crate::gemm::{MatI32, MatU8};
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+
+/// A PJRT engine bound to an artifact registry.
+pub struct Engine {
+    client: xla::PjRtClient,
+    registry: ArtifactRegistry,
+    cache: HashMap<ArtifactId, xla::PjRtLoadedExecutable>,
+}
+
+impl Engine {
+    /// Create a CPU engine over the given registry.
+    pub fn new(registry: ArtifactRegistry) -> Result<Engine> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine { client, registry, cache: HashMap::new() })
+    }
+
+    /// Create an engine over the default artifacts directory.
+    pub fn default_location() -> Result<Engine> {
+        Engine::new(ArtifactRegistry::default_location())
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn registry(&self) -> &ArtifactRegistry {
+        &self.registry
+    }
+
+    /// Load + compile an artifact (cached).
+    pub fn load(&mut self, id: ArtifactId) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.cache.contains_key(&id) {
+            let path = self.registry.path(id);
+            if !path.is_file() {
+                bail!(
+                    "artifact {:?} not found at {} — run `make artifacts` first",
+                    id,
+                    path.display()
+                );
+            }
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("artifact path not UTF-8")?,
+            )
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling artifact {:?}", id))?;
+            self.cache.insert(id, exe);
+        }
+        Ok(&self.cache[&id])
+    }
+
+    /// Execute a GEMM artifact: C = A·B (u8 inputs, i32 result).
+    /// Shapes must match the artifact's baked signature.
+    pub fn gemm_u8(&mut self, id: ArtifactId, a: &MatU8, b: &MatU8) -> Result<MatI32> {
+        let (m, n) = (a.rows, b.cols);
+        // u8 is not a NativeType in xla 0.1.6; build the literals from raw
+        // bytes (u8 data is its own byte representation).
+        let la = xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::U8,
+            &[a.rows, a.cols],
+            &a.data,
+        )
+        .context("creating A literal")?;
+        let lb = xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::U8,
+            &[b.rows, b.cols],
+            &b.data,
+        )
+        .context("creating B literal")?;
+        let exe = self.load(id)?;
+        let result = exe.execute::<xla::Literal>(&[la, lb]).context("executing GEMM artifact")?;
+        let tuple = result[0][0].to_literal_sync().context("fetching result literal")?;
+        // aot.py lowers with return_tuple=True ⇒ 1-tuple.
+        let out = tuple.to_tuple1().context("unwrapping result tuple")?;
+        let values = out.to_vec::<i32>().context("reading i32 result")?;
+        if values.len() != m * n {
+            bail!("artifact returned {} values, expected {}", values.len(), m * n);
+        }
+        Ok(MatI32::from_vec(m, n, values))
+    }
+
+    /// Execute the MLP artifact: logits = mlp(x), f32\[batch,784\] →
+    /// f32\[batch,10\] (batch baked to 8 in the artifact).
+    pub fn mlp_forward(&mut self, batch: usize, x: &[f32]) -> Result<Vec<f32>> {
+        anyhow::ensure!(x.len() == batch * 784, "expected {}, got {}", batch * 784, x.len());
+        let lx = xla::Literal::vec1(x)
+            .reshape(&[batch as i64, 784])
+            .context("reshaping MLP input")?;
+        let exe = self.load(ArtifactId::MlpU8B8)?;
+        let result = exe.execute::<xla::Literal>(&[lx]).context("executing MLP artifact")?;
+        let tuple = result[0][0].to_literal_sync()?;
+        let out = tuple.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+}
+
+// NOTE: correctness of these paths against the Rust GEMM engine and the
+// Python oracle is covered by `rust/tests/pjrt_integration.rs`, which
+// requires `make artifacts` to have run. Unit tests here stay
+// artifact-free so `cargo test` works on a clean checkout.
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn missing_artifact_gives_actionable_error() {
+        let reg = ArtifactRegistry::new("/nonexistent/dir");
+        let mut eng = Engine::new(reg).expect("CPU client");
+        let e = match eng.load(ArtifactId::GemmU8_64) {
+            Ok(_) => panic!("load must fail for a missing artifact"),
+            Err(e) => e,
+        };
+        let msg = format!("{e:#}");
+        assert!(msg.contains("make artifacts"), "{msg}");
+    }
+
+    #[test]
+    fn cpu_client_reports_platform() {
+        let eng = Engine::new(ArtifactRegistry::new("artifacts")).unwrap();
+        let p = eng.platform().to_lowercase();
+        assert!(p.contains("cpu") || p.contains("host"), "platform {p}");
+    }
+}

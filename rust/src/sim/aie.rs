@@ -1,0 +1,226 @@
+//! AIE tile timing model.
+//!
+//! Reproduces the micro-kernel cost structure of §4.2/§5.2/§5.3 and all
+//! three rows of Table 3:
+//!
+//! | experiment           | measured | theoretical |
+//! |----------------------|----------|-------------|
+//! | read ar only         | 4106     | 4864        |
+//! | execute mac16() only | 1042     | 1024        |
+//! | baseline             | 4110     | 5888        |
+//!
+//! Mechanics: the loop body (unroll 16) issues a fused pair of 64-element
+//! Ar stream reads and 8 `mac16()` calls; the VLIW tile overlaps the
+//! arithmetic (and the Br local-memory reads) with the Ar streaming, so
+//! the loop costs max(stream, arithmetic) plus a small pipeline drain —
+//! the "perfect overlap" §5.3 demonstrates (4110 ≈ 4106).
+
+use super::breakdown::CycleBreakdown;
+use super::stream::Stream;
+use crate::arch::VersalArch;
+
+/// What the kernel executes — full kernel or one of Table 3's ablations.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelMode {
+    /// Ar stream reads + arithmetic + Br reads (the shipping kernel).
+    Baseline,
+    /// Only the `ar0`/`ar1` stream reads (Table 3 row 1).
+    ReadArOnly,
+    /// Only the `mac16()` arithmetic (Table 3 row 2).
+    MacOnly,
+}
+
+/// How the Br micro-panel reaches local memory (§4.5).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BrTransport {
+    /// Streaming interface: no extra buffers, no sync stall (final design).
+    Streaming,
+    /// GMIO with ping/pong double-buffering: triple local-memory footprint
+    /// and a window-sync stall every swap (initial, rejected design).
+    GmioPingPong,
+}
+
+/// Timing model of one AIE tile executing the 8×8 UINT8 micro-kernel.
+#[derive(Debug, Clone)]
+pub struct AieTileModel<'a> {
+    arch: &'a VersalArch,
+    stream: Stream<'a>,
+}
+
+impl<'a> AieTileModel<'a> {
+    pub fn new(arch: &'a VersalArch) -> AieTileModel<'a> {
+        AieTileModel { arch, stream: Stream::new(arch) }
+    }
+
+    pub fn arch(&self) -> &VersalArch {
+        self.arch
+    }
+
+    /// Unroll factor of loop L6 (Figure 4: `i += 16`).
+    pub const UNROLL: usize = 16;
+
+    /// `mac16()` calls per unrolled iteration (Figure 4: 8 calls).
+    pub const MACS16_PER_ITER: u64 = 8;
+
+    /// MAC operations of one micro-kernel invocation: mr·nr·kc.
+    pub fn macs(&self, mr: usize, nr: usize, kc: usize) -> u64 {
+        (mr * nr * kc) as u64
+    }
+
+    /// Arithmetic cycles for a kernel over `kc` (mac16 issue + loop
+    /// control), the Table 3 "mac16 only" condition.
+    pub fn arith_cycles(&self, kc: usize) -> u64 {
+        let iters = (kc / Self::UNROLL) as u64;
+        iters * Self::MACS16_PER_ITER * self.arch.aie.cycles_per_mac16
+            + self.arch.aie.loop_overhead_cycles
+    }
+
+    /// Theoretical arithmetic cycles (no loop overhead): kc/16 · 8.
+    pub fn arith_cycles_theoretical(&self, kc: usize) -> u64 {
+        (kc / Self::UNROLL) as u64 * Self::MACS16_PER_ITER
+    }
+
+    /// Measured-model cycles of one micro-kernel invocation, *excluding*
+    /// the Cr GMIO round trip (reported separately in Table 2).
+    ///
+    /// `steady` selects the steady-state Ar stream regime of a full GEMM
+    /// run (see [`Stream::ar_stream_cycles`]); Table 3's measurements are
+    /// the isolated (`steady = false`) condition.
+    pub fn kernel_cycles(&self, kc: usize, mode: KernelMode, steady: bool) -> CycleBreakdown {
+        assert!(kc % Self::UNROLL == 0, "kc must be a multiple of 16");
+        let ar = self.stream.ar_stream_cycles(kc, steady);
+        let arith = self.arith_cycles(kc);
+        let drain = self.arch.aie.pipeline_drain_cycles;
+        match mode {
+            KernelMode::ReadArOnly => CycleBreakdown {
+                ar_stream: ar,
+                total: ar,
+                ..Default::default()
+            },
+            KernelMode::MacOnly => CycleBreakdown {
+                arithmetic: arith,
+                total: arith,
+                ..Default::default()
+            },
+            KernelMode::Baseline => CycleBreakdown {
+                ar_stream: ar,
+                arithmetic: arith,
+                // VLIW overlap: arithmetic and Br local reads hide behind
+                // the Ar stream (or vice versa when compute dominates).
+                total: ar.max(arith) + drain,
+                ..Default::default()
+            },
+        }
+    }
+
+    /// The paper's *theoretical* (no fusion, no overlap) cycle counts —
+    /// the right-hand column of Table 3.
+    pub fn kernel_cycles_theoretical(&self, kc: usize, mode: KernelMode) -> u64 {
+        let ar = self.stream.ar_stream_cycles_theoretical(kc);
+        let arith = self.arith_cycles_theoretical(kc);
+        match mode {
+            KernelMode::ReadArOnly => ar,
+            KernelMode::MacOnly => arith,
+            KernelMode::Baseline => ar + arith, // no overlap assumed
+        }
+    }
+
+    /// §5.3's rough performance estimate: 1024 MACs per iteration over the
+    /// unfused 38-cycle Ar read ⇒ 22.2 MACs/cycle (no overlap credit).
+    pub fn naive_macs_per_cycle_estimate(&self) -> f64 {
+        let macs_per_iter = Self::MACS16_PER_ITER as f64 * self.arch.aie.macs_per_mac16 as f64;
+        let unfused_pair = 2.0 * self.arch.ic.stream_v64_cycles as f64;
+        macs_per_iter / unfused_pair
+    }
+
+    /// §5.3's compute-to-communication ratio: 1024 MACs per 128 Ar bytes
+    /// ⇒ 8 MACs/byte.
+    pub fn macs_per_ar_byte(&self) -> f64 {
+        let macs_per_iter = Self::MACS16_PER_ITER as f64 * self.arch.aie.macs_per_mac16 as f64;
+        macs_per_iter / 128.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::vc1902;
+
+    fn model(a: &VersalArch) -> AieTileModel<'_> {
+        AieTileModel::new(a)
+    }
+
+    #[test]
+    fn table3_row1_read_ar_only() {
+        let a = vc1902();
+        let m = model(&a);
+        assert_eq!(m.kernel_cycles(2048, KernelMode::ReadArOnly, false).total, 4106);
+        assert_eq!(m.kernel_cycles_theoretical(2048, KernelMode::ReadArOnly), 4864);
+    }
+
+    #[test]
+    fn table3_row2_mac_only() {
+        let a = vc1902();
+        let m = model(&a);
+        assert_eq!(m.kernel_cycles(2048, KernelMode::MacOnly, false).total, 1042);
+        assert_eq!(m.kernel_cycles_theoretical(2048, KernelMode::MacOnly), 1024);
+    }
+
+    #[test]
+    fn table3_row3_baseline_shows_perfect_overlap() {
+        let a = vc1902();
+        let m = model(&a);
+        let b = m.kernel_cycles(2048, KernelMode::Baseline, false);
+        assert_eq!(b.total, 4110); // measured: max(4106, 1042) + 4
+        assert_eq!(m.kernel_cycles_theoretical(2048, KernelMode::Baseline), 5888);
+        // §5.3's check: combining components does NOT cost their sum.
+        assert!(b.total < b.serial_sum());
+    }
+
+    #[test]
+    fn single_tile_rate_matches_table2() {
+        // 131072 MACs / (4110 + 40 Cr cycles) = 31.58 ⇒ paper's 31.5.
+        let a = vc1902();
+        let m = model(&a);
+        let macs = m.macs(8, 8, 2048);
+        assert_eq!(macs, 131_072);
+        let loop_cycles = m.kernel_cycles(2048, KernelMode::Baseline, false).total;
+        let rate = macs as f64 / (loop_cycles + 40) as f64;
+        assert!((rate - 31.5).abs() < 0.1, "rate {rate}");
+    }
+
+    #[test]
+    fn naive_estimate_matches_5_3() {
+        let a = vc1902();
+        let m = model(&a);
+        assert!((m.naive_macs_per_cycle_estimate() - 1024.0 / 38.0).abs() < 1e-9); // 26.9…
+        // The paper rounds 1024/(19+19) to 22.2 using 1024/46.1?? — it
+        // actually quotes 22.2 = 1024/46. We pin the formula, not the
+        // paper's arithmetic slip; either way the estimate sits well
+        // below the measured 31.5, which is the point of §5.3.
+        assert!(m.naive_macs_per_cycle_estimate() < 31.5);
+        assert!((m.macs_per_ar_byte() - 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn compute_bound_regime_when_stream_is_fast() {
+        // If the stream were 4× faster the kernel would flip to
+        // compute-bound and total would track arithmetic.
+        let mut a = vc1902();
+        a.ic.stream_v64_fused_pair_cycles = 4;
+        a.ic.stream_fused_residual_cycles = 0;
+        let m = model(&a);
+        let b = m.kernel_cycles(2048, KernelMode::Baseline, false);
+        assert_eq!(b.total, m.arith_cycles(2048) + a.aie.pipeline_drain_cycles);
+    }
+
+    #[test]
+    fn kernel_scales_with_kc() {
+        let a = vc1902();
+        let m = model(&a);
+        let c1 = m.kernel_cycles(1024, KernelMode::Baseline, false).total;
+        let c2 = m.kernel_cycles(2048, KernelMode::Baseline, false).total;
+        assert!(c2 > c1);
+        assert!(c2 < 2 * c1 + 100, "roughly linear");
+    }
+}

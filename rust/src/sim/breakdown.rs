@@ -1,0 +1,95 @@
+//! Cycle accounting by category — the columns of the paper's Table 2.
+
+use std::ops::{Add, AddAssign};
+
+/// Cycles attributed to each activity of the GEMM execution. `total` is
+/// tracked separately from the sum of the parts because the AIE tile
+/// overlaps compute with Ar streaming (the whole point of §5.3): the
+/// category columns answer "how long would this take alone", `total`
+/// answers "how long did the schedule take".
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CycleBreakdown {
+    /// Cycles streaming Ar vectors from Ultra RAM (category time).
+    pub ar_stream: u64,
+    /// Cycles executing mac16 arithmetic + loop control (category time).
+    pub arithmetic: u64,
+    /// Cycles copying Br micro-panels BRAM → local memory.
+    pub br_copy: u64,
+    /// Cycles in GMIO round trips for Cr (load + store, incl. contention).
+    pub copy_cr: u64,
+    /// Cycles in packing Ac/Bc into the FPGA RAMs (amortised; §4.5 says
+    /// negligible for large problems — tracked so we can *show* that).
+    pub packing: u64,
+    /// Leader orchestration / synchronisation cycles.
+    pub orchestration: u64,
+    /// Wall-clock cycles of the schedule (with overlap).
+    pub total: u64,
+}
+
+impl CycleBreakdown {
+    pub fn zero() -> Self {
+        Self::default()
+    }
+
+    /// Sum of category times — an upper bound on `total` when nothing
+    /// overlaps; the gap `serial_sum() - total` measures overlap won.
+    pub fn serial_sum(&self) -> u64 {
+        self.ar_stream
+            + self.arithmetic
+            + self.br_copy
+            + self.copy_cr
+            + self.packing
+            + self.orchestration
+    }
+
+    /// MACs/cycle given a MAC count, using wall-clock cycles.
+    pub fn macs_per_cycle(&self, macs: u64) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            macs as f64 / self.total as f64
+        }
+    }
+}
+
+impl Add for CycleBreakdown {
+    type Output = CycleBreakdown;
+    fn add(self, o: CycleBreakdown) -> CycleBreakdown {
+        CycleBreakdown {
+            ar_stream: self.ar_stream + o.ar_stream,
+            arithmetic: self.arithmetic + o.arithmetic,
+            br_copy: self.br_copy + o.br_copy,
+            copy_cr: self.copy_cr + o.copy_cr,
+            packing: self.packing + o.packing,
+            orchestration: self.orchestration + o.orchestration,
+            total: self.total + o.total,
+        }
+    }
+}
+
+impl AddAssign for CycleBreakdown {
+    fn add_assign(&mut self, o: CycleBreakdown) {
+        *self = *self + o;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn add_accumulates_fields() {
+        let a = CycleBreakdown { ar_stream: 1, arithmetic: 2, br_copy: 3, copy_cr: 4, packing: 5, orchestration: 6, total: 7 };
+        let b = a + a;
+        assert_eq!(b.ar_stream, 2);
+        assert_eq!(b.total, 14);
+        assert_eq!(b.serial_sum(), 2 * (1 + 2 + 3 + 4 + 5 + 6));
+    }
+
+    #[test]
+    fn macs_per_cycle_handles_zero() {
+        assert_eq!(CycleBreakdown::zero().macs_per_cycle(100), 0.0);
+        let c = CycleBreakdown { total: 50, ..Default::default() };
+        assert!((c.macs_per_cycle(100) - 2.0).abs() < 1e-12);
+    }
+}

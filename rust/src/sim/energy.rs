@@ -1,0 +1,160 @@
+//! Energy model for the simulated GEMM execution (extension).
+//!
+//! The paper evaluates cycles only; energy is the natural companion
+//! metric for an embedded ACAP and follows the same breakdown: each
+//! [`CycleBreakdown`] category maps to data movement at a memory level
+//! (with a per-byte cost) or to arithmetic (per-MAC cost). Coefficients
+//! are order-of-magnitude figures for a 7 nm SoC (pJ scale), configurable
+//! for sensitivity studies; tests pin the *structure* (movement from DDR
+//! dominates per byte, arithmetic per MAC is cheapest), not the absolute
+//! joules.
+
+use super::breakdown::CycleBreakdown;
+
+/// Energy coefficients in picojoules.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EnergyModel {
+    /// pJ per UINT8 MAC in the AIE vector unit.
+    pub pj_per_mac: f64,
+    /// pJ per byte moved from DDR (GMIO traffic: Cr, packing).
+    pub pj_per_byte_ddr: f64,
+    /// pJ per byte streamed from the FPGA RAMs (Ar, Bc→Br).
+    pub pj_per_byte_fpga: f64,
+    /// pJ per byte read from tile local memory (Br inside the kernel).
+    pub pj_per_byte_local: f64,
+    /// Static/leakage power per active tile, pJ per cycle.
+    pub pj_static_per_tile_cycle: f64,
+}
+
+impl Default for EnergyModel {
+    fn default() -> Self {
+        // 7 nm-class figures (order of magnitude): int8 MAC ≈ 0.05 pJ,
+        // on-chip SRAM ≈ 1–2 pJ/B, off-chip DDR4 ≈ 20 pJ/B.
+        EnergyModel {
+            pj_per_mac: 0.05,
+            pj_per_byte_ddr: 20.0,
+            pj_per_byte_fpga: 2.0,
+            pj_per_byte_local: 1.0,
+            pj_static_per_tile_cycle: 5.0,
+        }
+    }
+}
+
+/// Itemised energy of a GEMM execution, in picojoules.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct EnergyBreakdown {
+    pub arithmetic_pj: f64,
+    pub ddr_pj: f64,
+    pub fpga_pj: f64,
+    pub local_pj: f64,
+    pub static_pj: f64,
+}
+
+impl EnergyBreakdown {
+    pub fn total_pj(&self) -> f64 {
+        self.arithmetic_pj + self.ddr_pj + self.fpga_pj + self.local_pj + self.static_pj
+    }
+
+    /// Energy efficiency in MACs per nanojoule.
+    pub fn macs_per_nj(&self, macs: u64) -> f64 {
+        macs as f64 / (self.total_pj() / 1e3)
+    }
+}
+
+/// Traffic volumes of a GEMM run (bytes per category), derivable from the
+/// problem shape and the schedule.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Traffic {
+    pub macs: u64,
+    /// Bytes over GMIO/DDR: Cr loads+stores and (if counted) packing.
+    pub ddr_bytes: u64,
+    /// Bytes streamed out of the FPGA RAMs: Ar multicast + Br copies.
+    pub fpga_bytes: u64,
+    /// Bytes read from local memory inside the kernel (Br reads).
+    pub local_bytes: u64,
+}
+
+impl Traffic {
+    /// Traffic of the paper's blocked GEMM on one (mc, nc, kc) block
+    /// with `tiles` AIE tiles (Figure 6's data-movement scheme).
+    pub fn for_block(mc: usize, nc: usize, kc: usize, tiles: usize) -> Traffic {
+        let panels_a = (mc / 8) as u64;
+        let panels_b = (nc / 8) as u64;
+        let kernels = panels_a * panels_b;
+        let kc = kc as u64;
+        Traffic {
+            macs: kernels * 64 * kc,
+            // Cr: 8×8 u8 load + 8×8 i16 store per kernel (Figure 4).
+            ddr_bytes: kernels * (64 + 128),
+            // Ar streamed once per kernel (multicast replicates on-chip,
+            // the FPGA port is read once per multicast group — divide by
+            // the group size, conservatively the active tile count).
+            fpga_bytes: kernels * 8 * kc / (tiles as u64).max(1)
+                + panels_b * kc * 8, // Br copies BRAM → local
+            local_bytes: kernels * 8 * kc, // Br read per kernel
+        }
+    }
+}
+
+/// Price a run: cycles (for static energy) + traffic (for dynamic).
+pub fn energy_of(model: &EnergyModel, cycles: &CycleBreakdown, traffic: &Traffic, tiles: usize) -> EnergyBreakdown {
+    EnergyBreakdown {
+        arithmetic_pj: traffic.macs as f64 * model.pj_per_mac,
+        ddr_pj: traffic.ddr_bytes as f64 * model.pj_per_byte_ddr,
+        fpga_pj: traffic.fpga_bytes as f64 * model.pj_per_byte_fpga,
+        local_pj: traffic.local_bytes as f64 * model.pj_per_byte_local,
+        static_pj: cycles.total as f64 * tiles as f64 * model.pj_static_per_tile_cycle,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn block_energy(tiles: usize) -> (EnergyBreakdown, u64) {
+        let t = Traffic::for_block(256, 256, 2048, tiles);
+        let cycles = CycleBreakdown { total: 3_700_000 / tiles as u64, ..Default::default() };
+        (energy_of(&EnergyModel::default(), &cycles, &t, tiles), t.macs)
+    }
+
+    #[test]
+    fn totals_are_positive_and_itemised() {
+        let (e, macs) = block_energy(8);
+        assert!(e.arithmetic_pj > 0.0 && e.ddr_pj > 0.0 && e.fpga_pj > 0.0);
+        assert!(e.total_pj() > e.arithmetic_pj);
+        assert!(e.macs_per_nj(macs) > 0.0);
+    }
+
+    #[test]
+    fn traffic_macs_match_problem() {
+        let t = Traffic::for_block(256, 256, 2048, 1);
+        assert_eq!(t.macs, 256 * 256 * 2048);
+        // Cr: 1024 kernels × 192 B.
+        assert_eq!(t.ddr_bytes, 1024 * 192);
+    }
+
+    #[test]
+    fn multicast_reduces_fpga_traffic_with_tiles() {
+        let t1 = Traffic::for_block(256, 256, 2048, 1);
+        let t8 = Traffic::for_block(256, 256, 2048, 8);
+        assert!(t8.fpga_bytes < t1.fpga_bytes, "multicast amortises Ar reads");
+        assert_eq!(t1.local_bytes, t8.local_bytes, "local reads are per kernel");
+    }
+
+    #[test]
+    fn onchip_movement_cheaper_per_byte_than_ddr() {
+        let m = EnergyModel::default();
+        assert!(m.pj_per_byte_local < m.pj_per_byte_fpga);
+        assert!(m.pj_per_byte_fpga < m.pj_per_byte_ddr);
+    }
+
+    #[test]
+    fn parallelism_saves_static_energy() {
+        // Same work, fewer wall cycles × more tiles: static energy equal;
+        // but the multicast saving shows in fpga_pj.
+        let (e1, macs) = block_energy(1);
+        let (e8, _) = block_energy(8);
+        assert!(e8.fpga_pj < e1.fpga_pj);
+        assert!(e8.macs_per_nj(macs) > e1.macs_per_nj(macs));
+    }
+}

@@ -1,0 +1,105 @@
+//! The GMIO interface: DDR ↔ AIE tile transfers.
+//!
+//! Two roles in the paper's design (§4.5):
+//!
+//! - **Cr round trips** — each micro-kernel loads its 8×8 micro-tile of C
+//!   from DDR and stores the updated tile back. These go through the
+//!   serial DDR arbiter, so their cost grows with the number of tiles
+//!   (Table 2's "Copy Cr" column).
+//! - **(rejected design) Br transport** — the initial design moved Br via
+//!   GMIO; the compiler then allocates a ping *and* a pong buffer of the
+//!   payload size in local memory, so a K-byte panel consumes 3K bytes,
+//!   capping `kc` and costing a window-synchronisation stall per swap.
+//!   §4.5 measures 30 MACs/cycle for that design vs 37.4 for streaming —
+//!   reproduced by `bench_gmio_stream`.
+
+use super::ddr::DdrArbiter;
+use super::memory::{MemError, MemPool};
+use crate::arch::VersalArch;
+
+/// GMIO cost + footprint model bound to an architecture.
+#[derive(Debug, Clone)]
+pub struct Gmio<'a> {
+    arch: &'a VersalArch,
+    arbiter: DdrArbiter,
+}
+
+impl<'a> Gmio<'a> {
+    pub fn new(arch: &'a VersalArch) -> Gmio<'a> {
+        Gmio { arch, arbiter: DdrArbiter::from_arch(arch) }
+    }
+
+    /// Local-memory bytes consumed by a GMIO channel with a `payload`-byte
+    /// window: payload + ping + pong. §4.5: "utilization of GMIO for
+    /// transferring 10 KB of data … necessitates an additional 20 KB".
+    pub fn local_footprint_bytes(&self, payload: u64) -> u64 {
+        3 * payload
+    }
+
+    /// Allocate the GMIO buffers for a `payload`-byte window in a local
+    /// memory pool — fails exactly when the real compiler would.
+    pub fn alloc_window(&self, pool: &mut MemPool, name: &str, payload: u64) -> Result<(), MemError> {
+        pool.alloc(&format!("{name}.window"), payload)?;
+        pool.alloc(&format!("{name}.ping"), payload)?;
+        pool.alloc(&format!("{name}.pong"), payload)?;
+        Ok(())
+    }
+
+    /// Per-swap synchronisation stall of the ping/pong protocol.
+    pub fn window_sync_cycles(&self) -> u64 {
+        self.arch.ic.gmio_window_sync_cycles
+    }
+
+    /// Slowest-tile cost of `tiles` concurrent Cr round trips (load 8×8 u8
+    /// + store 8×8 i16 through the serial DDR port).
+    pub fn cr_roundtrip_cycles(&self, tiles: usize) -> u64 {
+        self.arbiter.max_cost(tiles)
+    }
+
+    /// Per-tile distribution of the same (for fairness analyses).
+    pub fn cr_roundtrip_per_tile(&self, tiles: usize) -> Vec<u64> {
+        self.arbiter.contend(tiles).per_tile
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{vc1902, MemLevel};
+
+    #[test]
+    fn footprint_triples_payload() {
+        let a = vc1902();
+        let g = Gmio::new(&a);
+        assert_eq!(g.local_footprint_bytes(10 * 1024), 30 * 1024); // §4.5 example
+    }
+
+    #[test]
+    fn window_allocation_respects_local_memory() {
+        let a = vc1902();
+        let g = Gmio::new(&a);
+        let mut pool = MemPool::new(MemLevel::LocalMemory, a.mem_capacity(MemLevel::LocalMemory));
+        // 10 KB payload → 30 KB of the 32 KB local memory: fits.
+        g.alloc_window(&mut pool, "br", 10 * 1024).unwrap();
+        assert_eq!(pool.used(), 30 * 1024);
+        // A second window cannot fit.
+        assert!(g.alloc_window(&mut pool, "cr", 1024).is_err());
+    }
+
+    #[test]
+    fn eleven_kb_payload_overflows() {
+        let a = vc1902();
+        let g = Gmio::new(&a);
+        let mut pool = MemPool::new(MemLevel::LocalMemory, a.mem_capacity(MemLevel::LocalMemory));
+        assert!(g.alloc_window(&mut pool, "br", 11 * 1024).is_err());
+    }
+
+    #[test]
+    fn cr_costs_match_arbiter() {
+        let a = vc1902();
+        let g = Gmio::new(&a);
+        assert_eq!(g.cr_roundtrip_cycles(1), 40);
+        assert!(g.cr_roundtrip_cycles(32) > g.cr_roundtrip_cycles(16));
+        assert_eq!(g.cr_roundtrip_per_tile(4).len(), 4);
+    }
+}

@@ -1,0 +1,162 @@
+//! Capacity-tracked memory pools.
+//!
+//! The Versal ACAP has no cache controller: every buffer (Ac, Bc, Br,
+//! ping/pong GMIO buffers, …) is placed explicitly by the programmer and
+//! the placement fails if it does not fit (§4.1). `MemPool` reproduces
+//! that failure mode: the packing routines and the GMIO protocol allocate
+//! from pools sized by [`crate::arch::VersalArch`], so an infeasible CCP
+//! choice is a hard error here just as it is a synthesis/runtime error on
+//! the device.
+
+use crate::arch::MemLevel;
+use std::collections::BTreeMap;
+use thiserror::Error;
+
+#[derive(Debug, Error, PartialEq, Eq)]
+pub enum MemError {
+    #[error("{level:?}: allocation {name:?} of {requested} B exceeds free {free} B (capacity {capacity} B)")]
+    OutOfMemory { level: MemLevel, name: String, requested: u64, free: u64, capacity: u64 },
+    #[error("{level:?}: duplicate allocation name {name:?}")]
+    Duplicate { level: MemLevel, name: String },
+    #[error("{level:?}: no allocation named {name:?}")]
+    NotFound { level: MemLevel, name: String },
+}
+
+/// A named-allocation pool for one memory level.
+#[derive(Debug, Clone)]
+pub struct MemPool {
+    level: MemLevel,
+    capacity: u64,
+    allocs: BTreeMap<String, u64>,
+}
+
+impl MemPool {
+    pub fn new(level: MemLevel, capacity: u64) -> MemPool {
+        MemPool { level, capacity, allocs: BTreeMap::new() }
+    }
+
+    pub fn level(&self) -> MemLevel {
+        self.level
+    }
+    pub fn capacity(&self) -> u64 {
+        self.capacity
+    }
+    pub fn used(&self) -> u64 {
+        self.allocs.values().sum()
+    }
+    pub fn free(&self) -> u64 {
+        self.capacity - self.used()
+    }
+
+    /// Allocate `bytes` under `name`. Fails if the name exists or the pool
+    /// would overflow.
+    pub fn alloc(&mut self, name: &str, bytes: u64) -> Result<(), MemError> {
+        if self.allocs.contains_key(name) {
+            return Err(MemError::Duplicate { level: self.level, name: name.into() });
+        }
+        if bytes > self.free() {
+            return Err(MemError::OutOfMemory {
+                level: self.level,
+                name: name.into(),
+                requested: bytes,
+                free: self.free(),
+                capacity: self.capacity,
+            });
+        }
+        self.allocs.insert(name.into(), bytes);
+        Ok(())
+    }
+
+    /// Resize an existing allocation (used when a packing buffer is reused
+    /// with a different edge-case geometry).
+    pub fn realloc(&mut self, name: &str, bytes: u64) -> Result<(), MemError> {
+        let old = *self
+            .allocs
+            .get(name)
+            .ok_or_else(|| MemError::NotFound { level: self.level, name: name.into() })?;
+        let free_without = self.free() + old;
+        if bytes > free_without {
+            return Err(MemError::OutOfMemory {
+                level: self.level,
+                name: name.into(),
+                requested: bytes,
+                free: free_without,
+                capacity: self.capacity,
+            });
+        }
+        self.allocs.insert(name.into(), bytes);
+        Ok(())
+    }
+
+    pub fn freea(&mut self, name: &str) -> Result<u64, MemError> {
+        self.allocs
+            .remove(name)
+            .ok_or_else(|| MemError::NotFound { level: self.level, name: name.into() })
+    }
+
+    pub fn size_of(&self, name: &str) -> Option<u64> {
+        self.allocs.get(name).copied()
+    }
+
+    pub fn allocations(&self) -> impl Iterator<Item = (&str, u64)> {
+        self.allocs.iter().map(|(k, &v)| (k.as_str(), v))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pool() -> MemPool {
+        MemPool::new(MemLevel::LocalMemory, 32 * 1024)
+    }
+
+    #[test]
+    fn alloc_free_roundtrip() {
+        let mut p = pool();
+        p.alloc("br", 16 * 1024).unwrap();
+        assert_eq!(p.used(), 16 * 1024);
+        assert_eq!(p.free(), 16 * 1024);
+        assert_eq!(p.size_of("br"), Some(16 * 1024));
+        assert_eq!(p.freea("br").unwrap(), 16 * 1024);
+        assert_eq!(p.used(), 0);
+    }
+
+    #[test]
+    fn overflow_is_error_with_details() {
+        let mut p = pool();
+        p.alloc("a", 30 * 1024).unwrap();
+        let e = p.alloc("b", 4 * 1024).unwrap_err();
+        match e {
+            MemError::OutOfMemory { requested, free, capacity, .. } => {
+                assert_eq!(requested, 4 * 1024);
+                assert_eq!(free, 2 * 1024);
+                assert_eq!(capacity, 32 * 1024);
+            }
+            other => panic!("wrong error {other:?}"),
+        }
+    }
+
+    #[test]
+    fn duplicate_name_rejected() {
+        let mut p = pool();
+        p.alloc("x", 1).unwrap();
+        assert!(matches!(p.alloc("x", 1), Err(MemError::Duplicate { .. })));
+    }
+
+    #[test]
+    fn realloc_respects_capacity() {
+        let mut p = pool();
+        p.alloc("x", 1024).unwrap();
+        p.realloc("x", 32 * 1024).unwrap(); // exactly fits
+        assert_eq!(p.free(), 0);
+        assert!(p.realloc("x", 32 * 1024 + 1).is_err());
+        assert!(matches!(p.realloc("y", 1), Err(MemError::NotFound { .. })));
+    }
+
+    #[test]
+    fn free_unknown_is_error() {
+        let mut p = pool();
+        assert!(matches!(p.freea("ghost"), Err(MemError::NotFound { .. })));
+    }
+}

@@ -1,0 +1,46 @@
+//! Cycle-approximate simulator of the Versal ACAP platform.
+//!
+//! The paper's evaluation is entirely in AIE clock cycles (Tables 2–3);
+//! this module reproduces the platform mechanics those cycles come from:
+//!
+//! - [`memory`]    — capacity-tracked memory pools for each explicit level
+//!                   (DDR, Block RAM, Ultra RAM, local memory, registers);
+//!                   packing buffers are allocated here so overflows are
+//!                   *errors*, exactly as on the real device.
+//! - [`ddr`]       — the serial DDR port arbiter behind all GMIO traffic;
+//!                   the single mechanism that produces the growth of the
+//!                   Copy-Cr column in Table 2.
+//! - [`gmio`]      — GMIO interface: ping/pong buffer footprint accounting
+//!                   (§4.5) and Cr round-trips through the arbiter.
+//! - [`stream`]    — the streaming interface: 64-element vector reads,
+//!                   back-to-back fusion, steady-state pipelining, and the
+//!                   BRAM→local-memory Br copy.
+//! - [`multicast`] — stream-to-stream multicast of Ar rows (cost
+//!                   independent of the subscriber count).
+//! - [`aie`]       — the AIE tile timing model: mac16 arithmetic, VLIW
+//!                   overlap of compute with Ar streaming, loop overhead,
+//!                   ablation modes (read-Ar-only / mac16-only) and the
+//!                   paper's "theoretical" (no-overlap) counterparts.
+//! - [`breakdown`] — cycle accounting by category.
+
+pub mod aie;
+pub mod breakdown;
+pub mod ddr;
+pub mod energy;
+pub mod gmio;
+pub mod memory;
+pub mod multicast;
+pub mod noc;
+pub mod stream;
+pub mod trace;
+
+pub use aie::{AieTileModel, BrTransport, KernelMode};
+pub use breakdown::CycleBreakdown;
+pub use ddr::DdrArbiter;
+pub use energy::{energy_of, EnergyBreakdown, EnergyModel, Traffic};
+pub use gmio::Gmio;
+pub use memory::MemPool;
+pub use multicast::Multicast;
+pub use noc::{Noc, TileCoord};
+pub use stream::Stream;
+pub use trace::{trace_block, Activity, BlockTrace, Span};

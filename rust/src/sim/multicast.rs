@@ -1,0 +1,80 @@
+//! Stream-to-stream multicast of Ar.
+//!
+//! §4.5/§5.1: all AIE tiles execute their micro-kernels against the *same*
+//! micro-panel Ar, so its rows are multicast from the FPGA Ultra RAM. The
+//! measured cost of delivering one 64-element vector is ~19 cycles
+//! **independent of the number of subscriber tiles** — the defining
+//! property this model (and its tests) pin down.
+
+use crate::arch::VersalArch;
+use thiserror::Error;
+
+#[derive(Debug, Error, PartialEq, Eq)]
+pub enum MulticastError {
+    #[error("subscriber count {subscribers} exceeds AIE tiles {tiles}")]
+    TooManySubscribers { subscribers: usize, tiles: usize },
+    #[error("multicast group must have at least one subscriber")]
+    Empty,
+}
+
+/// A multicast group from Ultra RAM to a set of AIE tiles.
+#[derive(Debug, Clone)]
+pub struct Multicast {
+    subscribers: usize,
+    v64_cycles: u64,
+}
+
+impl Multicast {
+    pub fn new(arch: &VersalArch, subscribers: usize) -> Result<Multicast, MulticastError> {
+        if subscribers == 0 {
+            return Err(MulticastError::Empty);
+        }
+        if subscribers > arch.aie.n_tiles {
+            return Err(MulticastError::TooManySubscribers {
+                subscribers,
+                tiles: arch.aie.n_tiles,
+            });
+        }
+        Ok(Multicast { subscribers, v64_cycles: arch.ic.multicast_v64_cycles })
+    }
+
+    pub fn subscribers(&self) -> usize {
+        self.subscribers
+    }
+
+    /// Cycles to deliver one 64-B vector to every subscriber.
+    pub fn v64_cycles(&self) -> u64 {
+        self.v64_cycles // constant in self.subscribers by construction
+    }
+
+    /// Cycles to deliver `vectors` 64-B vectors.
+    pub fn deliver_cycles(&self, vectors: u64) -> u64 {
+        vectors * self.v64_cycles
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::vc1902;
+
+    #[test]
+    fn cost_independent_of_subscriber_count() {
+        let a = vc1902();
+        let one = Multicast::new(&a, 1).unwrap();
+        let thirty_two = Multicast::new(&a, 32).unwrap();
+        assert_eq!(one.v64_cycles(), thirty_two.v64_cycles());
+        assert_eq!(one.deliver_cycles(100), thirty_two.deliver_cycles(100));
+    }
+
+    #[test]
+    fn bounds_checked() {
+        let a = vc1902();
+        assert_eq!(Multicast::new(&a, 0).unwrap_err(), MulticastError::Empty);
+        assert!(matches!(
+            Multicast::new(&a, 401),
+            Err(MulticastError::TooManySubscribers { .. })
+        ));
+        assert!(Multicast::new(&a, 400).is_ok());
+    }
+}

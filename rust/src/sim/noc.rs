@@ -1,0 +1,179 @@
+//! AXI4-Stream network-on-chip topology model for the AIE array.
+//!
+//! The VC1902's 400 tiles form an 8×50 grid connected by AXI stream
+//! switches (one per tile) with nearest-neighbour links. The paper's
+//! interface costs (19-cycle v64 stream read, tile-count-independent
+//! multicast) are *endpoint* costs; this module adds the topology so
+//! placement questions become answerable: how far is a tile from the
+//! array interface, which columns should a job use, and why the
+//! stream-to-stream multicast stays flat while point-to-point fan-out
+//! would not.
+//!
+//! Model: packets enter the array at the bottom-row interface tiles
+//! (the PL/NoC boundary), hop through stream switches at one cycle per
+//! hop, and multicast duplicates packets in the switches (no extra
+//! serialisation on shared path segments).
+
+use crate::arch::VersalArch;
+use thiserror::Error;
+
+/// A tile coordinate in the AIE array: row 0 adjoins the PL interface.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct TileCoord {
+    pub row: usize,
+    pub col: usize,
+}
+
+#[derive(Debug, Error, PartialEq, Eq)]
+pub enum NocError {
+    #[error("tile ({0}, {1}) outside the {2}x{3} array")]
+    OutOfRange(usize, usize, usize, usize),
+    #[error("placement needs {needed} tiles but the array has {available}")]
+    TooMany { needed: usize, available: usize },
+}
+
+/// The stream NoC of an AIE array.
+#[derive(Debug, Clone)]
+pub struct Noc {
+    rows: usize,
+    cols: usize,
+    /// Cycles per switch hop (Versal AXI-S switches are single-cycle
+    /// per hop at the AIE clock).
+    hop_cycles: u64,
+    /// Fixed PL-boundary crossing cost, cycles. Calibrated so that a
+    /// bottom-row tile sees the paper's 19-cycle v64 endpoint latency:
+    /// boundary + 1 hop = 19.
+    boundary_cycles: u64,
+}
+
+impl Noc {
+    pub fn new(arch: &VersalArch) -> Noc {
+        let hop = 1;
+        Noc {
+            rows: arch.aie.grid_rows,
+            cols: arch.aie.grid_cols,
+            hop_cycles: hop,
+            boundary_cycles: arch.ic.stream_v64_cycles.saturating_sub(hop),
+        }
+    }
+
+    pub fn dims(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    pub fn check(&self, t: TileCoord) -> Result<(), NocError> {
+        if t.row >= self.rows || t.col >= self.cols {
+            return Err(NocError::OutOfRange(t.row, t.col, self.rows, self.cols));
+        }
+        Ok(())
+    }
+
+    /// Manhattan hop count from the PL boundary (below row 0) to a tile,
+    /// entering at the tile's own column.
+    pub fn hops_from_boundary(&self, t: TileCoord) -> Result<u64, NocError> {
+        self.check(t)?;
+        Ok(t.row as u64 + 1)
+    }
+
+    /// Unicast latency of one 64-B vector from the PL boundary to a tile.
+    pub fn unicast_v64_cycles(&self, t: TileCoord) -> Result<u64, NocError> {
+        Ok(self.boundary_cycles + self.hops_from_boundary(t)? * self.hop_cycles)
+    }
+
+    /// Multicast latency of one 64-B vector to a set of tiles: switches
+    /// replicate packets, so the cost is the *max* path, not the sum —
+    /// the topology-level reason the paper's Ar multicast cost is
+    /// independent of the tile count.
+    pub fn multicast_v64_cycles(&self, tiles: &[TileCoord]) -> Result<u64, NocError> {
+        let mut worst = 0;
+        for &t in tiles {
+            worst = worst.max(self.unicast_v64_cycles(t)?);
+        }
+        Ok(worst)
+    }
+
+    /// Serialised point-to-point fan-out (the design the paper avoided):
+    /// distinct payloads share the boundary port, so costs add.
+    pub fn fanout_v64_cycles(&self, tiles: &[TileCoord]) -> Result<u64, NocError> {
+        let mut sum = 0;
+        for &t in tiles {
+            sum += self.unicast_v64_cycles(t)?;
+        }
+        Ok(sum)
+    }
+
+    /// Compact placement for `n` tiles: fill columns bottom-up, nearest
+    /// columns first — minimises the worst boundary distance.
+    pub fn place(&self, n: usize) -> Result<Vec<TileCoord>, NocError> {
+        if n > self.rows * self.cols {
+            return Err(NocError::TooMany { needed: n, available: self.rows * self.cols });
+        }
+        let mut out = Vec::with_capacity(n);
+        'outer: for col in 0..self.cols {
+            for row in 0..self.rows {
+                if out.len() == n {
+                    break 'outer;
+                }
+                out.push(TileCoord { row, col });
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::vc1902;
+
+    fn noc() -> Noc {
+        Noc::new(&vc1902())
+    }
+
+    #[test]
+    fn bottom_row_matches_paper_endpoint_cost() {
+        let n = noc();
+        let t = TileCoord { row: 0, col: 0 };
+        assert_eq!(n.unicast_v64_cycles(t).unwrap(), 19);
+    }
+
+    #[test]
+    fn multicast_flat_fanout_linear() {
+        let n = noc();
+        let tiles = n.place(32).unwrap();
+        let mc = n.multicast_v64_cycles(&tiles).unwrap();
+        let fo = n.fanout_v64_cycles(&tiles).unwrap();
+        // Multicast ≈ endpoint cost (flat); fan-out grows with the count.
+        assert!(mc <= 19 + 8, "multicast {mc} stays near the endpoint cost");
+        assert!(fo > 32 * 19 / 2, "fan-out {fo} grows linearly");
+        // Adding tiles does not change multicast beyond the array height.
+        let more = n.place(64).unwrap();
+        assert_eq!(n.multicast_v64_cycles(&more).unwrap(), mc);
+    }
+
+    #[test]
+    fn placement_compact_and_bounded() {
+        let n = noc();
+        let p = n.place(10).unwrap();
+        assert_eq!(p.len(), 10);
+        // First 8 fill column 0 (8 rows), then column 1.
+        assert!(p[..8].iter().all(|t| t.col == 0));
+        assert!(p[8..].iter().all(|t| t.col == 1));
+        assert!(matches!(n.place(401), Err(NocError::TooMany { .. })));
+    }
+
+    #[test]
+    fn out_of_range_rejected() {
+        let n = noc();
+        assert!(n.unicast_v64_cycles(TileCoord { row: 8, col: 0 }).is_err());
+        assert!(n.unicast_v64_cycles(TileCoord { row: 0, col: 50 }).is_err());
+    }
+
+    #[test]
+    fn hops_increase_with_row() {
+        let n = noc();
+        let c0 = n.unicast_v64_cycles(TileCoord { row: 0, col: 3 }).unwrap();
+        let c7 = n.unicast_v64_cycles(TileCoord { row: 7, col: 3 }).unwrap();
+        assert_eq!(c7 - c0, 7);
+    }
+}

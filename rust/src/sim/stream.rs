@@ -1,0 +1,116 @@
+//! The streaming interface: Ar vector reads and the Br copy.
+//!
+//! Three regimes for reading 64-element (64 B) UINT8 vectors of Ar from
+//! the FPGA Ultra RAM (§5.1, §5.3, Table 3):
+//!
+//! 1. **isolated** — one v64 read: 19 cycles.
+//! 2. **fused pair** — the compiler/hardware rewrites two back-to-back
+//!    v64 reads (`ar0`, `ar1`) as one 128-element read: 32 cycles per
+//!    pair (+10 residual per kernel), reproducing Table 3's measured
+//!    4106 = 128·32 + 10 against the 4864 = 128·(19+19) theory.
+//! 3. **steady state** — across consecutive micro-kernels of a full GEMM
+//!    the stream never stops and pipelines at ≈28 cycles/pair (reverse-
+//!    engineered from Table 2's one-tile total; see DESIGN.md §6).
+
+use crate::arch::VersalArch;
+
+/// Streaming-interface cost model bound to an architecture.
+#[derive(Debug, Clone)]
+pub struct Stream<'a> {
+    arch: &'a VersalArch,
+}
+
+impl<'a> Stream<'a> {
+    pub fn new(arch: &'a VersalArch) -> Stream<'a> {
+        Stream { arch }
+    }
+
+    /// Cycles for one isolated 64-element vector read.
+    pub fn v64_cycles(&self) -> u64 {
+        self.arch.ic.stream_v64_cycles
+    }
+
+    /// Cycles for a fused pair of consecutive v64 reads (one iteration of
+    /// loop L6 reads ar0+ar1).
+    pub fn fused_pair_cycles(&self) -> u64 {
+        self.arch.ic.stream_v64_fused_pair_cycles
+    }
+
+    /// Cycles for a fused pair in the steady-state (uninterrupted stream
+    /// across micro-kernels).
+    pub fn steady_pair_cycles(&self) -> u64 {
+        self.arch.ic.stream_steady_pair_cycles
+    }
+
+    /// Total Ar streaming cycles for a micro-kernel over `kc` (unroll 16 ⇒
+    /// kc/16 iterations, each reading one fused pair).
+    ///
+    /// `steady` selects regime 3 (full-GEMM) vs regime 2 (isolated kernel,
+    /// the Table 3 measurement condition).
+    pub fn ar_stream_cycles(&self, kc: usize, steady: bool) -> u64 {
+        assert!(kc % 16 == 0, "kc must be a multiple of the unroll factor 16");
+        let iters = (kc / 16) as u64;
+        let per_pair = if steady { self.steady_pair_cycles() } else { self.fused_pair_cycles() };
+        iters * per_pair + self.arch.ic.stream_fused_residual_cycles
+    }
+
+    /// The paper's *theoretical* (unfused) Ar cost: kc/16 · 2 · 19.
+    pub fn ar_stream_cycles_theoretical(&self, kc: usize) -> u64 {
+        (kc as u64 / 16) * 2 * self.v64_cycles()
+    }
+
+    /// Cycles to copy a Br micro-panel (`bytes`) from Block RAM into the
+    /// AIE local memory over the streaming interface (§5.1: 16 KB in 3280
+    /// cycles, independent of the number of tiles doing it concurrently).
+    pub fn br_copy_cycles(&self, bytes: u64) -> u64 {
+        (bytes as f64 / self.arch.ic.br_copy_bytes_per_cycle).round() as u64
+            + self.arch.ic.br_copy_setup_cycles
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::vc1902;
+
+    #[test]
+    fn isolated_kernel_matches_table3_read_ar_row() {
+        let a = vc1902();
+        let s = Stream::new(&a);
+        assert_eq!(s.ar_stream_cycles(2048, false), 4106); // measured
+        assert_eq!(s.ar_stream_cycles_theoretical(2048), 4864); // theory
+    }
+
+    #[test]
+    fn steady_state_is_cheaper_than_isolated() {
+        let a = vc1902();
+        let s = Stream::new(&a);
+        assert!(s.ar_stream_cycles(2048, true) < s.ar_stream_cycles(2048, false));
+        // 128·28 + 10 = 3594
+        assert_eq!(s.ar_stream_cycles(2048, true), 3594);
+    }
+
+    #[test]
+    fn br_copy_matches_5_1() {
+        let a = vc1902();
+        let s = Stream::new(&a);
+        assert_eq!(s.br_copy_cycles(2048 * 8), 3280);
+    }
+
+    #[test]
+    fn ar_cycles_scale_linearly_in_kc() {
+        let a = vc1902();
+        let s = Stream::new(&a);
+        let base = s.ar_stream_cycles(1024, false);
+        let double = s.ar_stream_cycles(2048, false);
+        let resid = a.ic.stream_fused_residual_cycles;
+        assert_eq!(double - resid, 2 * (base - resid));
+    }
+
+    #[test]
+    #[should_panic(expected = "multiple of the unroll factor")]
+    fn kc_must_be_multiple_of_16() {
+        let a = vc1902();
+        Stream::new(&a).ar_stream_cycles(100, false);
+    }
+}

@@ -1,0 +1,305 @@
+//! Execution tracing: an event timeline of the parallel block schedule.
+//!
+//! Where [`super::breakdown`] aggregates cycles by category, this module
+//! records *when* each activity runs on each tile, so the overlap story
+//! of §5.3 (arithmetic hiding behind the Ar stream, Br prefetch hiding
+//! behind compute, Cr round trips serialising on the DDR port) becomes
+//! inspectable — `versal-gemm trace` renders it as a text gantt chart.
+
+use super::ddr::DdrArbiter;
+use super::gmio::Gmio;
+use super::stream::Stream;
+use super::aie::{AieTileModel, KernelMode};
+use crate::arch::VersalArch;
+use crate::gemm::GemmConfig;
+
+/// Kinds of activity on the timeline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Activity {
+    BrCopy,
+    Kernel,
+    CrRoundTrip,
+    Orchestration,
+}
+
+impl Activity {
+    pub fn glyph(self) -> char {
+        match self {
+            Activity::BrCopy => 'B',
+            Activity::Kernel => 'K',
+            Activity::CrRoundTrip => 'C',
+            Activity::Orchestration => 'o',
+        }
+    }
+}
+
+/// One traced interval on one tile (`tile == usize::MAX` = the leader).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Span {
+    pub tile: usize,
+    pub activity: Activity,
+    pub start: u64,
+    pub end: u64,
+}
+
+/// The trace of one (mc, nc, kc) block execution.
+#[derive(Debug, Clone, Default)]
+pub struct BlockTrace {
+    pub tiles: usize,
+    pub spans: Vec<Span>,
+    pub total_cycles: u64,
+}
+
+/// Trace the parallel-L4 schedule of one block (same mechanics and
+/// constants as `ParallelGemm::block_schedule`, expanded into per-tile
+/// spans rather than aggregated).
+pub fn trace_block(
+    arch: &VersalArch,
+    cfg: &GemmConfig,
+    panels_b: usize,
+    panels_a: usize,
+    kc: usize,
+    br_bytes: u64,
+) -> BlockTrace {
+    let stream = Stream::new(arch);
+    let gmio = Gmio::new(arch);
+    let tile_model = AieTileModel::new(arch);
+    let arb = DdrArbiter::from_arch(arch);
+    let kernel =
+        tile_model.kernel_cycles(kc.next_multiple_of(AieTileModel::UNROLL), KernelMode::Baseline, cfg.steady_stream);
+    let br_cost = stream.br_copy_cycles(br_bytes);
+    let _ = &gmio;
+
+    let mut spans = Vec::new();
+    let rounds = panels_b.div_ceil(cfg.tiles);
+    let mut clock = 0u64;
+
+    // First Br copies: all tiles simultaneously (exposed).
+    let first_active = cfg.tiles.min(panels_b);
+    for t in 0..first_active {
+        spans.push(Span { tile: t, activity: Activity::BrCopy, start: clock, end: clock + br_cost });
+    }
+    clock += br_cost;
+
+    for r in 0..rounds {
+        let active = cfg.tiles.min(panels_b - r * cfg.tiles);
+        let orch = (arch.ic.orch_base_cycles * (active * active) as f64) as u64;
+        spans.push(Span {
+            tile: usize::MAX,
+            activity: Activity::Orchestration,
+            start: clock,
+            end: clock + orch,
+        });
+        clock += orch;
+        for _p in 0..panels_a {
+            // Kernels run in lockstep on all active tiles.
+            for t in 0..active {
+                spans.push(Span {
+                    tile: t,
+                    activity: Activity::Kernel,
+                    start: clock,
+                    end: clock + kernel.total,
+                });
+            }
+            clock += kernel.total;
+            // Cr round trips: per-tile completion from the DDR arbiter.
+            let contention = arb.contend(active);
+            for (t, &cost) in contention.per_tile.iter().enumerate() {
+                spans.push(Span {
+                    tile: t,
+                    activity: Activity::CrRoundTrip,
+                    start: clock,
+                    end: clock + cost,
+                });
+            }
+            clock += contention.max;
+        }
+        // Next round's Br copies prefetch during the compute above —
+        // traced as overlapping spans in the *previous* round's window.
+        if r + 1 < rounds {
+            let next_active = cfg.tiles.min(panels_b - (r + 1) * cfg.tiles);
+            let start = clock.saturating_sub(br_cost);
+            for t in 0..next_active {
+                spans.push(Span { tile: t, activity: Activity::BrCopy, start, end: clock });
+            }
+        }
+    }
+
+    BlockTrace { tiles: cfg.tiles, spans, total_cycles: clock }
+}
+
+impl BlockTrace {
+    /// Busy cycles of one tile (union of its spans, overlaps merged).
+    pub fn tile_busy(&self, tile: usize) -> u64 {
+        let mut iv: Vec<(u64, u64)> = self
+            .spans
+            .iter()
+            .filter(|s| s.tile == tile)
+            .map(|s| (s.start, s.end))
+            .collect();
+        iv.sort_unstable();
+        let mut busy = 0;
+        let mut cur: Option<(u64, u64)> = None;
+        for (s, e) in iv {
+            match cur {
+                None => cur = Some((s, e)),
+                Some((cs, ce)) => {
+                    if s <= ce {
+                        cur = Some((cs, ce.max(e)));
+                    } else {
+                        busy += ce - cs;
+                        cur = Some((s, e));
+                    }
+                }
+            }
+        }
+        if let Some((cs, ce)) = cur {
+            busy += ce - cs;
+        }
+        busy
+    }
+
+    /// Utilisation of a tile: busy / total.
+    pub fn utilisation(&self, tile: usize) -> f64 {
+        if self.total_cycles == 0 {
+            0.0
+        } else {
+            self.tile_busy(tile) as f64 / self.total_cycles as f64
+        }
+    }
+
+    /// Render a text gantt chart, `width` characters across the timeline.
+    pub fn gantt(&self, width: usize) -> String {
+        assert!(width >= 10);
+        let scale = self.total_cycles.max(1) as f64 / width as f64;
+        let mut out = String::new();
+        out.push_str(&format!(
+            "timeline: {} cycles, {} cells/char ≈ {:.0} cycles\n",
+            self.total_cycles, width, scale
+        ));
+        let mut lanes: Vec<usize> = self
+            .spans
+            .iter()
+            .map(|s| s.tile)
+            .filter(|&t| t != usize::MAX)
+            .collect();
+        lanes.sort_unstable();
+        lanes.dedup();
+        for t in lanes {
+            let mut row = vec!['.'; width];
+            for s in self.spans.iter().filter(|s| s.tile == t) {
+                let a = ((s.start as f64 / scale) as usize).min(width - 1);
+                let b = ((s.end as f64 / scale).ceil() as usize).clamp(a + 1, width);
+                for cell in &mut row[a..b] {
+                    // Kernel dominates the glyph; transfers overwrite idle.
+                    if *cell == '.' || s.activity == Activity::Kernel {
+                        *cell = s.activity.glyph();
+                    }
+                }
+            }
+            out.push_str(&format!(
+                "tile {t:2} [{}] {:.0}%\n",
+                row.iter().collect::<String>(),
+                self.utilisation(t) * 100.0
+            ));
+        }
+        out.push_str("legend: K kernel (Ar stream ∥ mac16)  B Br copy  C Cr GMIO  . idle\n");
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::vc1902;
+
+    fn paper_trace(tiles: usize) -> BlockTrace {
+        let arch = vc1902();
+        let cfg = GemmConfig::paper_table2(tiles);
+        trace_block(&arch, &cfg, 32, 32, 2048, 2048 * 8)
+    }
+
+    #[test]
+    fn trace_total_matches_schedule_model() {
+        let arch = vc1902();
+        for tiles in [1usize, 4, 32] {
+            let cfg = GemmConfig::paper_table2(tiles);
+            let engine = crate::gemm::ParallelGemm::new(&arch);
+            let sched = engine.block_schedule(&cfg, 32, 32, 2048, 2048 * 8);
+            let trace = paper_trace(tiles);
+            assert_eq!(trace.total_cycles, sched.total, "tiles={tiles}");
+        }
+    }
+
+    #[test]
+    fn spans_are_well_formed() {
+        let t = paper_trace(8);
+        assert!(!t.spans.is_empty());
+        for s in &t.spans {
+            assert!(s.end > s.start, "{s:?}");
+            assert!(s.end <= t.total_cycles, "{s:?} beyond total");
+        }
+    }
+
+    #[test]
+    fn active_tiles_are_heavily_utilised() {
+        let t = paper_trace(8);
+        for tile in 0..8 {
+            let u = t.utilisation(tile);
+            assert!(u > 0.9, "tile {tile} utilisation {u}");
+        }
+    }
+
+    #[test]
+    fn kernel_cycles_dominate_the_timeline() {
+        let t = paper_trace(4);
+        let kernel: u64 = t
+            .spans
+            .iter()
+            .filter(|s| s.activity == Activity::Kernel && s.tile == 0)
+            .map(|s| s.end - s.start)
+            .sum();
+        assert!(kernel as f64 / t.total_cycles as f64 > 0.9);
+    }
+
+    #[test]
+    fn gantt_renders_all_lanes() {
+        let t = paper_trace(4);
+        let g = t.gantt(64);
+        assert_eq!(g.lines().filter(|l| l.starts_with("tile")).count(), 4);
+        assert!(g.contains('K'));
+        assert!(g.contains("legend"));
+    }
+
+    #[test]
+    fn prop_trace_total_equals_schedule_for_any_block() {
+        use crate::util::quickcheck::prop;
+        prop("trace-vs-schedule", 0x7AC3, 40, |g| {
+            let arch = vc1902();
+            let tiles = g.rng.range(1, 40);
+            let panels_b = g.rng.range(1, 64);
+            let panels_a = g.rng.range(1, 64);
+            let kc = 16 * g.rng.range(1, 200);
+            let br_bytes = (kc * 8) as u64;
+            let cfg = GemmConfig::paper_table2(tiles);
+            let engine = crate::gemm::ParallelGemm::new(&arch);
+            let sched = engine.block_schedule(&cfg, panels_b, panels_a, kc, br_bytes);
+            let trace = trace_block(&arch, &cfg, panels_b, panels_a, kc, br_bytes);
+            if trace.total_cycles != sched.total {
+                return Err(format!(
+                    "trace {} != schedule {} (tiles={tiles} pb={panels_b} pa={panels_a} kc={kc})",
+                    trace.total_cycles, sched.total
+                ));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn idle_tiles_absent_from_gantt() {
+        // 64 tiles but only 32 B-panels: tiles 32.. have no spans.
+        let t = paper_trace(64);
+        let g = t.gantt(40);
+        assert_eq!(g.lines().filter(|l| l.starts_with("tile")).count(), 32);
+    }
+}

@@ -1,0 +1,154 @@
+//! Mini-criterion: warmup + timed samples + robust summary (criterion is
+//! unavailable offline). Benches are `harness = false` binaries that print
+//! paper-shaped tables; this module provides their timing core.
+
+use super::stats::Summary;
+use std::time::{Duration, Instant};
+
+/// Configuration for a timed benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchCfg {
+    pub warmup: Duration,
+    pub samples: usize,
+    /// Minimum wall time per sample; iterations are batched to reach it so
+    /// timer resolution does not dominate fast routines.
+    pub min_sample_time: Duration,
+}
+
+impl Default for BenchCfg {
+    fn default() -> Self {
+        BenchCfg {
+            warmup: Duration::from_millis(200),
+            samples: 20,
+            min_sample_time: Duration::from_millis(10),
+        }
+    }
+}
+
+impl BenchCfg {
+    /// Fast configuration for CI / smoke runs (honours VERSAL_BENCH_FAST=1).
+    pub fn from_env() -> BenchCfg {
+        if std::env::var("VERSAL_BENCH_FAST").as_deref() == Ok("1") {
+            BenchCfg {
+                warmup: Duration::from_millis(20),
+                samples: 5,
+                min_sample_time: Duration::from_millis(2),
+            }
+        } else {
+            BenchCfg::default()
+        }
+    }
+}
+
+/// Result of one benchmark: per-iteration time statistics (seconds).
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters_per_sample: u64,
+    pub per_iter: Summary,
+}
+
+impl BenchResult {
+    pub fn throughput(&self, units_per_iter: f64) -> f64 {
+        units_per_iter / self.per_iter.median
+    }
+
+    pub fn human(&self) -> String {
+        format!(
+            "{:<40} {:>12}/iter  ±{:>10}  (n={}, {} iters/sample)",
+            self.name,
+            fmt_duration(self.per_iter.median),
+            fmt_duration(self.per_iter.mad),
+            self.per_iter.n,
+            self.iters_per_sample,
+        )
+    }
+}
+
+/// Format seconds human-readably (ns/µs/ms/s).
+pub fn fmt_duration(secs: f64) -> String {
+    if secs < 1e-6 {
+        format!("{:.1} ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:.2} µs", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.2} ms", secs * 1e3)
+    } else {
+        format!("{:.3} s", secs)
+    }
+}
+
+/// Run a benchmark: `f` is one iteration; its return value is black-boxed.
+pub fn bench<T>(name: &str, cfg: &BenchCfg, mut f: impl FnMut() -> T) -> BenchResult {
+    // Warmup + calibration: figure out how many iters fill min_sample_time.
+    let warm_start = Instant::now();
+    let mut warm_iters: u64 = 0;
+    while warm_start.elapsed() < cfg.warmup || warm_iters == 0 {
+        black_box(f());
+        warm_iters += 1;
+    }
+    let per_iter_est = warm_start.elapsed().as_secs_f64() / warm_iters as f64;
+    let iters = ((cfg.min_sample_time.as_secs_f64() / per_iter_est).ceil() as u64).max(1);
+
+    let mut samples = Vec::with_capacity(cfg.samples);
+    for _ in 0..cfg.samples {
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            black_box(f());
+        }
+        samples.push(t0.elapsed().as_secs_f64() / iters as f64);
+    }
+    BenchResult {
+        name: name.to_string(),
+        iters_per_sample: iters,
+        per_iter: Summary::of(&samples),
+    }
+}
+
+/// Prevent the optimizer from eliding a value (std::hint::black_box).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something_positive() {
+        let cfg = BenchCfg {
+            warmup: Duration::from_millis(5),
+            samples: 5,
+            min_sample_time: Duration::from_micros(200),
+        };
+        let r = bench("spin", &cfg, || {
+            let mut s = 0u64;
+            for i in 0..1000 {
+                s = s.wrapping_add(black_box(i));
+            }
+            s
+        });
+        assert!(r.per_iter.median > 0.0);
+        assert_eq!(r.per_iter.n, 5);
+        assert!(r.iters_per_sample >= 1);
+    }
+
+    #[test]
+    fn fmt_duration_units() {
+        assert!(fmt_duration(5e-9).ends_with("ns"));
+        assert!(fmt_duration(5e-6).ends_with("µs"));
+        assert!(fmt_duration(5e-3).ends_with("ms"));
+        assert!(fmt_duration(5.0).ends_with("s"));
+    }
+
+    #[test]
+    fn throughput_is_units_over_time() {
+        let r = BenchResult {
+            name: "t".into(),
+            iters_per_sample: 1,
+            per_iter: Summary::of(&[0.5, 0.5, 0.5]),
+        };
+        assert!((r.throughput(100.0) - 200.0).abs() < 1e-9);
+    }
+}

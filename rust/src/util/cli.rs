@@ -1,0 +1,183 @@
+//! Minimal command-line argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional
+//! arguments; subcommand dispatch is done by the caller on the first
+//! positional. Unknown flags are errors so typos do not silently pass.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments: named options plus positionals, in order.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+    /// Option/flag names the program declares (for unknown-option errors).
+    known: Vec<(String, bool)>, // (name, takes_value)
+}
+
+impl Args {
+    /// Declare a valued option (e.g. `--tiles 8`).
+    pub fn opt(mut self, name: &str) -> Self {
+        self.known.push((name.to_string(), true));
+        self
+    }
+
+    /// Declare a boolean flag (e.g. `--verbose`).
+    pub fn flag(mut self, name: &str) -> Self {
+        self.known.push((name.to_string(), false));
+        self
+    }
+
+    /// Parse a raw argv slice (excluding the program/subcommand name).
+    pub fn parse(mut self, argv: &[String]) -> Result<Self, String> {
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(name) = a.strip_prefix("--") {
+                let (name, inline_val) = match name.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (name, None),
+                };
+                let decl = self
+                    .known
+                    .iter()
+                    .find(|(n, _)| n == name)
+                    .cloned()
+                    .ok_or_else(|| format!("unknown option --{name}"))?;
+                if decl.1 {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| format!("--{name} requires a value"))?
+                        }
+                    };
+                    self.opts.insert(name.to_string(), val);
+                } else {
+                    if inline_val.is_some() {
+                        return Err(format!("--{name} does not take a value"));
+                    }
+                    self.flags.push(name.to_string());
+                }
+            } else {
+                self.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(self)
+    }
+
+    pub fn has(&self, flag: &str) -> bool {
+        self.flags.iter().any(|f| f == flag)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    /// Parse a numeric option, with a default.
+    pub fn get_num<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse::<T>()
+                .map_err(|_| format!("--{name}: cannot parse {s:?}")),
+        }
+    }
+
+    /// Parse a comma-separated list of numbers (e.g. `--tiles 1,2,4,8`).
+    pub fn get_list<T: std::str::FromStr>(
+        &self,
+        name: &str,
+        default: &[T],
+    ) -> Result<Vec<T>, String>
+    where
+        T: Clone,
+    {
+        match self.get(name) {
+            None => Ok(default.to_vec()),
+            Some(s) => s
+                .split(',')
+                .map(|p| {
+                    p.trim()
+                        .parse::<T>()
+                        .map_err(|_| format!("--{name}: cannot parse element {p:?}"))
+                })
+                .collect(),
+        }
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_opts_flags_positionals() {
+        let a = Args::default()
+            .opt("tiles")
+            .opt("size")
+            .flag("verbose")
+            .parse(&argv(&["--tiles", "8", "--verbose", "run", "--size=256"]))
+            .unwrap();
+        assert_eq!(a.get("tiles"), Some("8"));
+        assert_eq!(a.get("size"), Some("256"));
+        assert!(a.has("verbose"));
+        assert_eq!(a.positional(), &["run".to_string()]);
+    }
+
+    #[test]
+    fn unknown_option_is_error() {
+        let e = Args::default().parse(&argv(&["--nope"])).unwrap_err();
+        assert!(e.contains("unknown option"));
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        let e = Args::default().opt("k").parse(&argv(&["--k"])).unwrap_err();
+        assert!(e.contains("requires a value"));
+    }
+
+    #[test]
+    fn flag_with_value_is_error() {
+        let e = Args::default()
+            .flag("v")
+            .parse(&argv(&["--v=1"]))
+            .unwrap_err();
+        assert!(e.contains("does not take a value"));
+    }
+
+    #[test]
+    fn numeric_and_list_parsing() {
+        let a = Args::default()
+            .opt("n")
+            .opt("tiles")
+            .parse(&argv(&["--n", "42", "--tiles", "1,2,4"]))
+            .unwrap();
+        assert_eq!(a.get_num::<usize>("n", 0).unwrap(), 42);
+        assert_eq!(a.get_num::<usize>("m", 7).unwrap(), 7);
+        assert_eq!(a.get_list::<u32>("tiles", &[]).unwrap(), vec![1, 2, 4]);
+        assert_eq!(a.get_list::<u32>("absent", &[9]).unwrap(), vec![9]);
+    }
+
+    #[test]
+    fn bad_number_is_error() {
+        let a = Args::default().opt("n").parse(&argv(&["--n", "x"])).unwrap();
+        assert!(a.get_num::<usize>("n", 0).is_err());
+    }
+}

@@ -1,0 +1,102 @@
+//! Tiny INI-style config parser (serde/toml are unavailable offline).
+//!
+//! Format: `[section]` headers, `key = value` pairs, `#`/`;` comments,
+//! blank lines ignored. Used to override the built-in Versal architecture
+//! presets from a file (`versal-gemm --arch-config my.ini ...`).
+
+use std::collections::BTreeMap;
+
+/// Parsed INI document: section → key → value (all strings).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Ini {
+    sections: BTreeMap<String, BTreeMap<String, String>>,
+}
+
+impl Ini {
+    /// Parse INI text. Keys outside any `[section]` go to section `""`.
+    pub fn parse(text: &str) -> Result<Ini, String> {
+        let mut ini = Ini::default();
+        let mut current = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') || line.starts_with(';') {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| format!("line {}: unterminated section header", lineno + 1))?;
+                current = name.trim().to_string();
+                ini.sections.entry(current.clone()).or_default();
+            } else if let Some((k, v)) = line.split_once('=') {
+                ini.sections
+                    .entry(current.clone())
+                    .or_default()
+                    .insert(k.trim().to_string(), v.trim().to_string());
+            } else {
+                return Err(format!("line {}: expected `key = value`, got {raw:?}", lineno + 1));
+            }
+        }
+        Ok(ini)
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Ini, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("cannot read {}: {e}", path.display()))?;
+        Ini::parse(&text)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&str> {
+        self.sections.get(section)?.get(key).map(|s| s.as_str())
+    }
+
+    /// Get a numeric value, falling back to `default` if absent.
+    pub fn get_num<T: std::str::FromStr>(
+        &self,
+        section: &str,
+        key: &str,
+        default: T,
+    ) -> Result<T, String> {
+        match self.get(section, key) {
+            None => Ok(default),
+            Some(s) => s
+                .parse::<T>()
+                .map_err(|_| format!("[{section}] {key}: cannot parse {s:?}")),
+        }
+    }
+
+    pub fn sections(&self) -> impl Iterator<Item = &str> {
+        self.sections.keys().map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_pairs() {
+        let ini = Ini::parse(
+            "# comment\ntop = 1\n[mem]\nddr_bytes = 2147483648\nlocal_kb = 32\n; c\n[aie]\nrows=8\n",
+        )
+        .unwrap();
+        assert_eq!(ini.get("", "top"), Some("1"));
+        assert_eq!(ini.get("mem", "ddr_bytes"), Some("2147483648"));
+        assert_eq!(ini.get("aie", "rows"), Some("8"));
+        assert_eq!(ini.get("aie", "missing"), None);
+        assert_eq!(ini.get_num::<u64>("mem", "local_kb", 0).unwrap(), 32);
+        assert_eq!(ini.get_num::<u64>("mem", "absent", 5).unwrap(), 5);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Ini::parse("not a pair").is_err());
+        assert!(Ini::parse("[unterminated").is_err());
+    }
+
+    #[test]
+    fn values_keep_internal_spaces() {
+        let ini = Ini::parse("name = Versal VC1902").unwrap();
+        assert_eq!(ini.get("", "name"), Some("Versal VC1902"));
+    }
+}

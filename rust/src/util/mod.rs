@@ -1,0 +1,16 @@
+//! In-tree infrastructure replacing crates that are unavailable in this
+//! offline environment (rand, clap, criterion, proptest, serde/toml).
+//!
+//! Everything here is deliberately small, dependency-free and well-tested;
+//! the rest of the crate builds on these primitives.
+
+pub mod benchkit;
+pub mod cli;
+pub mod ini;
+pub mod quickcheck;
+pub mod rng;
+pub mod stats;
+pub mod tabulate;
+
+pub use rng::Pcg32;
+pub use stats::Summary;

@@ -1,0 +1,140 @@
+//! Mini property-testing harness (proptest is unavailable offline).
+//!
+//! A property is a closure over a seeded [`Pcg32`]; the harness runs it for
+//! `cases` seeds derived from a base seed and reports the first failing
+//! seed, so failures are reproducible with `prop_seeded`. A lightweight
+//! shrink pass retries the failing case with "smaller" generator budgets
+//! where the property opts in via [`Gen::size`].
+
+use super::rng::Pcg32;
+
+/// Generation context handed to properties: a PRNG plus a size budget that
+/// the shrinker reduces on failure.
+pub struct Gen {
+    pub rng: Pcg32,
+    size: usize,
+}
+
+impl Gen {
+    pub fn new(seed: u64, size: usize) -> Gen {
+        Gen { rng: Pcg32::new(seed), size }
+    }
+
+    /// Current size budget (≥1). Generators should scale dimensions by it.
+    pub fn size(&self) -> usize {
+        self.size.max(1)
+    }
+
+    /// A dimension in `[1, max]` scaled by the size budget.
+    pub fn dim(&mut self, max: usize) -> usize {
+        let cap = max.min(self.size()).max(1);
+        self.rng.range(1, cap + 1)
+    }
+
+    /// Random u8 matrix (row-major) of the given dims.
+    pub fn mat_u8(&mut self, rows: usize, cols: usize) -> Vec<u8> {
+        self.rng.vec_u8(rows * cols)
+    }
+}
+
+/// Outcome of a property run.
+#[derive(Debug)]
+pub struct PropResult {
+    pub cases: usize,
+    pub failure: Option<PropFailure>,
+}
+
+#[derive(Debug)]
+pub struct PropFailure {
+    pub seed: u64,
+    pub size: usize,
+    pub message: String,
+}
+
+/// Run `prop` for `cases` random cases derived from `base_seed`.
+/// Returns Err(description) on the first failure after shrinking.
+pub fn prop(name: &str, base_seed: u64, cases: usize, prop: impl Fn(&mut Gen) -> Result<(), String>) {
+    let default_size = 64;
+    for i in 0..cases {
+        let seed = base_seed.wrapping_add(i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ i as u64;
+        let mut g = Gen::new(seed, default_size);
+        if let Err(msg) = prop(&mut g) {
+            // Shrink: retry the same seed with smaller size budgets and
+            // report the smallest size that still fails.
+            let mut fail_size = default_size;
+            let mut fail_msg = msg;
+            let mut s = default_size / 2;
+            while s >= 1 {
+                let mut g2 = Gen::new(seed, s);
+                match prop(&mut g2) {
+                    Err(m) => {
+                        fail_size = s;
+                        fail_msg = m;
+                        s /= 2;
+                    }
+                    Ok(()) => break,
+                }
+            }
+            panic!(
+                "property {name:?} failed (case {i}, seed {seed:#x}, shrunk size {fail_size}): {fail_msg}"
+            );
+        }
+    }
+}
+
+/// Re-run a single case for debugging a reported failure.
+pub fn prop_seeded(
+    seed: u64,
+    size: usize,
+    prop: impl Fn(&mut Gen) -> Result<(), String>,
+) -> Result<(), String> {
+    let mut g = Gen::new(seed, size);
+    prop(&mut g)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        prop("add-commutes", 1, 50, |g| {
+            let a = g.rng.next_u32() as u64;
+            let b = g.rng.next_u32() as u64;
+            if a + b == b + a { Ok(()) } else { Err("math broke".into()) }
+        });
+    }
+
+    #[test]
+    fn failing_property_panics_with_seed() {
+        let r = std::panic::catch_unwind(|| {
+            prop("always-fails", 2, 10, |_g| Err("nope".to_string()));
+        });
+        let msg = *r.unwrap_err().downcast::<String>().unwrap();
+        assert!(msg.contains("seed"), "panic message should carry the seed: {msg}");
+        assert!(msg.contains("nope"));
+    }
+
+    #[test]
+    fn shrink_reduces_size() {
+        // Fails whenever size budget permits dim > 4; shrinker should
+        // land on a small failing size.
+        let r = std::panic::catch_unwind(|| {
+            prop("size-sensitive", 3, 5, |g| {
+                let n = g.size();
+                if n > 2 { Err(format!("n={n}")) } else { Ok(()) }
+            });
+        });
+        let msg = *r.unwrap_err().downcast::<String>().unwrap();
+        assert!(msg.contains("shrunk size 4") || msg.contains("shrunk size 3"), "{msg}");
+    }
+
+    #[test]
+    fn dim_respects_bounds() {
+        let mut g = Gen::new(5, 8);
+        for _ in 0..200 {
+            let d = g.dim(1000);
+            assert!((1..=8).contains(&d));
+        }
+    }
+}

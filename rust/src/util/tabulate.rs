@@ -1,0 +1,159 @@
+//! Plain-text / markdown / CSV table rendering for bench + report output.
+
+/// Column alignment.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Align {
+    Left,
+    Right,
+}
+
+/// A simple table builder. All cells are strings; numeric formatting is the
+/// caller's business (see `report::fmt`).
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    headers: Vec<String>,
+    aligns: Vec<Align>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            aligns: vec![Align::Right; headers.len()],
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn align(mut self, col: usize, a: Align) -> Table {
+        self.aligns[col] = a;
+        self
+    }
+
+    pub fn row<S: ToString>(&mut self, cells: &[S]) -> &mut Self {
+        assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        self.rows.push(cells.iter().map(|c| c.to_string()).collect());
+        self
+    }
+
+    fn widths(&self) -> Vec<usize> {
+        let mut w: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                w[i] = w[i].max(c.len());
+            }
+        }
+        w
+    }
+
+    /// Render as an aligned plain-text table.
+    pub fn to_text(&self) -> String {
+        let w = self.widths();
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], w: &[usize], aligns: &[Align]| -> String {
+            let mut line = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                if i > 0 {
+                    line.push_str("  ");
+                }
+                match aligns[i] {
+                    Align::Left => line.push_str(&format!("{:<width$}", c, width = w[i])),
+                    Align::Right => line.push_str(&format!("{:>width$}", c, width = w[i])),
+                }
+            }
+            line
+        };
+        out.push_str(&fmt_row(&self.headers, &w, &self.aligns));
+        out.push('\n');
+        out.push_str(&"-".repeat(w.iter().sum::<usize>() + 2 * (w.len().saturating_sub(1))));
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&fmt_row(r, &w, &self.aligns));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Render as a GitHub-markdown table.
+    pub fn to_markdown(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("| {} |\n", self.headers.join(" | ")));
+        out.push_str(&format!(
+            "|{}|\n",
+            self.aligns
+                .iter()
+                .map(|a| match a {
+                    Align::Left => ":---",
+                    Align::Right => "---:",
+                })
+                .collect::<Vec<_>>()
+                .join("|")
+        ));
+        for r in &self.rows {
+            out.push_str(&format!("| {} |\n", r.join(" | ")));
+        }
+        out
+    }
+
+    /// Render as CSV (no quoting needed for our numeric content; commas in
+    /// cells are replaced by semicolons defensively).
+    pub fn to_csv(&self) -> String {
+        let clean = |s: &str| s.replace(',', ";");
+        let mut out = String::new();
+        out.push_str(
+            &self.headers.iter().map(|h| clean(h)).collect::<Vec<_>>().join(","),
+        );
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&r.iter().map(|c| clean(c)).collect::<Vec<_>>().join(","));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.rows.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Table {
+        let mut t = Table::new(&["name", "cycles"]).align(0, Align::Left);
+        t.row(&["a", "12"]);
+        t.row(&["bb", "3456"]);
+        t
+    }
+
+    #[test]
+    fn text_aligns_columns() {
+        let txt = sample().to_text();
+        let lines: Vec<&str> = txt.lines().collect();
+        assert_eq!(lines[0], "name  cycles");
+        assert_eq!(lines[2], "a         12");
+        assert_eq!(lines[3], "bb      3456");
+    }
+
+    #[test]
+    fn markdown_shape() {
+        let md = sample().to_markdown();
+        assert!(md.starts_with("| name | cycles |\n|:---|---:|\n"));
+        assert!(md.contains("| bb | 3456 |"));
+    }
+
+    #[test]
+    fn csv_escapes_commas() {
+        let mut t = Table::new(&["a"]);
+        t.row(&["1,2"]);
+        assert_eq!(t.to_csv(), "a\n1;2\n");
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn row_width_checked() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["only-one"]);
+    }
+}

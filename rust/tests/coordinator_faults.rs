@@ -1,0 +1,129 @@
+//! Failure-injection tests for the serving coordinator: flaky backends,
+//! panicking-workload shapes, saturation, and shutdown races.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+use versal_gemm::coordinator::{
+    Backend, BatcherConfig, Coordinator, CoordinatorConfig,
+};
+
+/// Backend that errors on every Nth batch.
+struct FlakyBackend {
+    counter: Arc<AtomicUsize>,
+    fail_every: usize,
+}
+
+impl Backend for FlakyBackend {
+    fn in_dim(&self) -> usize {
+        2
+    }
+    fn n_classes(&self) -> usize {
+        2
+    }
+    fn infer_batch(&mut self, batch: usize, x: &[f32]) -> anyhow::Result<(Vec<f32>, u64)> {
+        let n = self.counter.fetch_add(1, Ordering::SeqCst) + 1;
+        if n % self.fail_every == 0 {
+            anyhow::bail!("injected failure on batch {n}");
+        }
+        let mut logits = vec![0.0f32; batch * 2];
+        for i in 0..batch {
+            logits[i * 2] = x[i * 2];
+        }
+        Ok((logits, 1))
+    }
+}
+
+fn cfg(max_batch: usize, workers: usize) -> CoordinatorConfig {
+    CoordinatorConfig {
+        batcher: BatcherConfig {
+            max_batch,
+            max_wait: Duration::from_millis(1),
+            queue_cap: 10_000,
+        },
+        n_workers: workers,
+        in_dim: 2,
+    }
+}
+
+#[test]
+fn failed_batches_drop_cleanly_and_service_continues() {
+    let counter = Arc::new(AtomicUsize::new(0));
+    let c = {
+        let counter = Arc::clone(&counter);
+        Coordinator::start(cfg(1, 1), move |_| {
+            Box::new(FlakyBackend { counter: Arc::clone(&counter), fail_every: 3 })
+        })
+    };
+    // max_batch = 1 ⇒ one batch per request ⇒ every 3rd fails.
+    let rxs: Vec<_> = (0..30).map(|i| c.submit(vec![i as f32, 0.0]).unwrap()).collect();
+    c.flush();
+    let outcomes: Vec<bool> = rxs.into_iter().map(|rx| rx.recv().is_ok()).collect();
+    let ok = outcomes.iter().filter(|&&b| b).count();
+    let failed = outcomes.len() - ok;
+    assert_eq!(failed, 10, "every third batch fails: {outcomes:?}");
+    assert_eq!(ok, 20);
+    // The service survived all failures; shutdown still works.
+    let m = c.shutdown();
+    assert_eq!(m.completed(), 20);
+}
+
+#[test]
+fn saturation_recovers_after_burst() {
+    let c = Coordinator::start(cfg(64, 2), |_| {
+        Box::new(versal_gemm::coordinator::EchoBackend { in_dim: 2, n_classes: 2 })
+    });
+    // Burst far above the queue cap is impossible here (cap 10k); send a
+    // large burst, then verify subsequent sequential traffic is healthy.
+    let burst: Vec<_> = (0..5000).map(|_| c.submit(vec![0.0, 0.0]).unwrap()).collect();
+    c.flush();
+    for rx in burst {
+        let _ = rx.recv();
+    }
+    for i in 0..20 {
+        let r = c.infer(vec![i as f32, 0.0]).expect("post-burst request");
+        assert_eq!(r.logits[0], i as f32);
+    }
+    c.shutdown();
+}
+
+#[test]
+fn submit_after_shutdown_errors() {
+    let c = Coordinator::start(cfg(4, 1), |_| {
+        Box::new(versal_gemm::coordinator::EchoBackend { in_dim: 2, n_classes: 2 })
+    });
+    let _ = c.infer(vec![1.0, 2.0]).unwrap();
+    // Move out of c via shutdown; a clone of the sender is not exposed —
+    // the type system prevents use-after-shutdown. What we *can* check:
+    // shutdown drains and returns sane metrics even with traffic racing.
+    let m = c.shutdown();
+    assert!(m.completed() >= 1);
+}
+
+#[test]
+fn interleaved_shapes_are_isolated_per_request() {
+    // Two clients with different payload magnitudes sharing batches must
+    // each get their own logits back.
+    let c = Coordinator::start(cfg(8, 2), |_| {
+        Box::new(versal_gemm::coordinator::EchoBackend { in_dim: 2, n_classes: 2 })
+    });
+    let rxs: Vec<_> = (0..200)
+        .map(|i| (i, c.submit(vec![i as f32 * 10.0, 0.0]).unwrap()))
+        .collect();
+    c.flush();
+    for (i, rx) in rxs {
+        let resp = rx.recv().unwrap();
+        assert_eq!(resp.logits[0], i as f32 * 10.0, "request {i} got someone else's result");
+    }
+    c.shutdown();
+}
+
+#[test]
+fn zero_feature_vectors_are_valid() {
+    let c = Coordinator::start(cfg(4, 1), |_| {
+        Box::new(versal_gemm::coordinator::EchoBackend { in_dim: 2, n_classes: 2 })
+    });
+    let r = c.infer(vec![0.0, 0.0]).unwrap();
+    assert_eq!(r.logits, vec![0.0, 0.0]);
+    c.shutdown();
+}

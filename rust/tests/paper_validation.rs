@@ -1,0 +1,222 @@
+//! Paper-validation suite: every quantitative claim of the paper that
+//! this reproduction targets, pinned in one place. This is the
+//! machine-checkable version of EXPERIMENTS.md.
+
+use versal_gemm::arch::{vc1902, MemLevel};
+use versal_gemm::gemm::ablation::{evaluate, LoopChoice};
+use versal_gemm::gemm::{Ccp, GemmConfig, ParallelGemm};
+use versal_gemm::sim::{AieTileModel, Gmio, KernelMode, Multicast, Stream};
+
+const PROBLEM: (usize, usize, usize) = (256, 256, 2048);
+
+// ---------------------------------------------------------------- Table 1
+#[test]
+fn table1_memory_hierarchy() {
+    let a = vc1902();
+    // Capacities as printed in Table 1.
+    assert_eq!(a.mem_capacity(MemLevel::VectorRegisters), 2 * 1024); // 2 KB
+    assert_eq!(a.mem_capacity(MemLevel::LocalMemory), 32 * 1024); // 32 KB
+    assert!((a.mem_capacity(MemLevel::UltraRam) as f64 / 1e6 - 17.06).abs() < 0.1); // 16.27 MiB
+    assert!((a.mem_capacity(MemLevel::BlockRam) as f64 / 1e6 - 4.46).abs() < 0.1); // 4.25 MiB
+    assert_eq!(a.mem_capacity(MemLevel::Ddr), 2 << 30); // 2 GB
+    // Operand mapping.
+    assert_eq!(MemLevel::VectorRegisters.operands(), "Cr");
+    assert_eq!(MemLevel::LocalMemory.operands(), "Br");
+    assert_eq!(MemLevel::UltraRam.operands(), "Ac, Ar");
+    assert_eq!(MemLevel::BlockRam.operands(), "Bc");
+    assert_eq!(MemLevel::Ddr.operands(), "A, B, C");
+}
+
+// ------------------------------------------------------------------- §3
+#[test]
+fn section3_platform_constants() {
+    let a = vc1902();
+    assert_eq!(a.aie.n_tiles, 400);
+    // "up to 128 (8-bit integer) GigaMAC ... at their peak" per tile at
+    // 1 GHz ⇔ 128 MACs/cycle.
+    assert_eq!(a.peak_macs_per_cycle(), 128.0);
+}
+
+// ------------------------------------------------------------------ §4.2
+#[test]
+fn section42_microkernel_geometry() {
+    use versal_gemm::gemm::{MR, NR};
+    assert_eq!((MR, NR), (8, 8));
+    // mac16: 128 MACs/cycle; 8 calls per unrolled iteration computing
+    // 1024 MACs over 256 fetched bytes.
+    let a = vc1902();
+    let m = AieTileModel::new(&a);
+    assert_eq!(AieTileModel::UNROLL, 16);
+    assert_eq!(AieTileModel::MACS16_PER_ITER, 8);
+    assert_eq!(m.macs(8, 8, 2048), 131_072); // §5.2
+    assert_eq!(m.macs_per_ar_byte(), 8.0); // §5.3
+}
+
+// ------------------------------------------------------------------ §4.3
+#[test]
+fn section43_ccp_derivation() {
+    let a = vc1902();
+    let ccp = Ccp::derive(&a, 1);
+    // kc upper limit ~3750 "sparing about 2.5 KB".
+    assert!((ccp.kc as f64 - 3750.0).abs() / 3750.0 < 0.01, "kc {}", ccp.kc);
+    // mc "about 4,500"; nc "derived as 1,200".
+    assert!((ccp.mc as f64 - 4500.0).abs() / 4500.0 < 0.05, "mc {}", ccp.mc);
+    assert!((ccp.nc as f64 - 1200.0).abs() / 1200.0 < 0.05, "nc {}", ccp.nc);
+}
+
+// ------------------------------------------------------------------ §4.4
+#[test]
+fn section44_loop_choice() {
+    let a = vc1902();
+    let cfg = GemmConfig::paper_table2(16);
+    // L2/L6 race; L4 beats L1/L3/L5 on this memory organisation.
+    assert!(evaluate(&a, &cfg, LoopChoice::L2).is_err());
+    assert!(evaluate(&a, &cfg, LoopChoice::L6).is_err());
+    let l4 = evaluate(&a, &cfg, LoopChoice::L4).unwrap().total_cycles;
+    for other in [LoopChoice::L1, LoopChoice::L3, LoopChoice::L5] {
+        assert!(l4 < evaluate(&a, &cfg, other).unwrap().total_cycles);
+    }
+}
+
+// ------------------------------------------------------------------ §4.5
+#[test]
+fn section45_gmio_footprint_and_rates() {
+    let a = vc1902();
+    let g = Gmio::new(&a);
+    // "transmitting 10 KB ... necessitates an additional 20 KB".
+    assert_eq!(g.local_footprint_bytes(10 * 1024) - 10 * 1024, 20 * 1024);
+    // Streaming frees the buffers ⇒ larger kc ⇒ §4.5's 30 → 37.4
+    // MACs/cycle improvement; here: the structural inequality.
+    let m = AieTileModel::new(&a);
+    let small = m.kernel_cycles(1024, KernelMode::Baseline, false).total + g.window_sync_cycles();
+    let large = m.kernel_cycles(3744, KernelMode::Baseline, true).total;
+    let rate_small = (8 * 8 * 1024) as f64 / small as f64;
+    let rate_large = (8 * 8 * 3744) as f64 / large as f64;
+    assert!(rate_large > rate_small * 1.15, "{rate_large} vs {rate_small}");
+}
+
+#[test]
+fn section45_reuse_factors() {
+    // "the same buffer Bc is accessed once per iteration of loop L3 (m/mc
+    // times); Ac once per iteration of L4 (nc/nr); Br once per L5 (kc)".
+    let (mc, nc, _kc) = (256, 256, 2048);
+    let (m, _n, _k) = (1024, 1024, 4096);
+    assert_eq!(m / mc, 4); // Bc reuse
+    assert_eq!(nc / 8, 32); // Ac reuse
+}
+
+// ------------------------------------------------------------------ §5.1
+#[test]
+fn section51_transfer_costs() {
+    let a = vc1902();
+    let s = Stream::new(&a);
+    // Br copy: constant 3280 cycles, independent of the tile count.
+    assert_eq!(s.br_copy_cycles(2048 * 8), 3280);
+    // Ar vector ≈ 19 cycles, independent of tile count (multicast).
+    let m1 = Multicast::new(&a, 1).unwrap();
+    let m32 = Multicast::new(&a, 32).unwrap();
+    assert_eq!(m1.v64_cycles(), 19);
+    assert_eq!(m1.v64_cycles(), m32.v64_cycles());
+    // Copy-Cr column: 40 cycles at one tile, growing to ≈282 at 32.
+    let g = Gmio::new(&a);
+    assert_eq!(g.cr_roundtrip_cycles(1), 40);
+    let c32 = g.cr_roundtrip_cycles(32);
+    assert!((c32 as f64 - 282.0).abs() / 282.0 < 0.05, "{c32}");
+}
+
+// ------------------------------------------------------------------ §5.2
+#[test]
+fn section52_arithmetic_cost() {
+    let a = vc1902();
+    let m = AieTileModel::new(&a);
+    // kc/16 iterations × 8 mac16 × 128 MACs = 131072 MACs; 1024 cycles of
+    // pure arithmetic; linear scaling once data is resident.
+    assert_eq!(m.arith_cycles_theoretical(2048), 1024);
+    assert_eq!(m.arith_cycles(2048), 1042); // with measured loop overhead
+}
+
+// ---------------------------------------------------------------- Table 3
+#[test]
+fn table3_all_rows() {
+    let a = vc1902();
+    let m = AieTileModel::new(&a);
+    let rows = [
+        (KernelMode::ReadArOnly, 4106u64, 4864u64),
+        (KernelMode::MacOnly, 1042, 1024),
+        (KernelMode::Baseline, 4110, 5888),
+    ];
+    for (mode, measured, theory) in rows {
+        assert_eq!(m.kernel_cycles(2048, mode, false).total, measured, "{mode:?}");
+        assert_eq!(m.kernel_cycles_theoretical(2048, mode), theory, "{mode:?}");
+    }
+}
+
+// ---------------------------------------------------------------- Table 2
+#[test]
+fn table2_full_reproduction() {
+    let a = vc1902();
+    let g = ParallelGemm::new(&a);
+    let paper: [(usize, u64, f64, f64); 6] = [
+        (1, 40, 3694.1e3, 31.5),
+        (2, 58, 1916.0e3, 31.4),
+        (4, 63, 958.1e3, 31.3),
+        (8, 84, 498.9e3, 31.2),
+        (16, 157, 275.3e3, 30.7),
+        (32, 282, 162.9e3, 29.8),
+    ];
+    for (tiles, cr, total, perf) in paper {
+        let row = g.table2_row(tiles);
+        // Copy Cr within 25% (the paper's own small-N values are noisy),
+        // exact at the endpoints.
+        let cr_err = (row.copy_cr_cycles as f64 - cr as f64).abs() / cr as f64;
+        assert!(cr_err < 0.25, "tiles={tiles} cr {} vs {cr}", row.copy_cr_cycles);
+        // Arithmetic column: constant 4110.
+        assert_eq!(row.arithmetic_cycles, 4110);
+        // Total within 6%.
+        let terr = (row.total_cycles as f64 - total).abs() / total;
+        assert!(terr < 0.06, "tiles={tiles} total {} vs {total}", row.total_cycles);
+        // Perf/tile near the printed precision (±0.15; the N=2 row
+        // inherits the arbiter's 48-vs-58-cycle Cr residual).
+        assert!((row.perf_per_tile - perf).abs() <= 0.15, "tiles={tiles} perf {}", row.perf_per_tile);
+    }
+}
+
+// ------------------------------------------------------------------ §5.3
+#[test]
+fn section53_overlap_and_memory_bound() {
+    let a = vc1902();
+    let m = AieTileModel::new(&a);
+    let read = m.kernel_cycles(2048, KernelMode::ReadArOnly, false).total;
+    let mac = m.kernel_cycles(2048, KernelMode::MacOnly, false).total;
+    let base = m.kernel_cycles(2048, KernelMode::Baseline, false).total;
+    // "the cost should then be 4106 + 1042 = 5148 ... the actual
+    // experiments show the cost matches that of reading Ar: 4110".
+    assert_eq!(read + mac, 5148);
+    assert!(base < read + mac);
+    assert!(base - read <= a.aie.pipeline_drain_cycles);
+    // Naive estimate below measured (the overlap's win) and both far
+    // below peak (communication-bound).
+    let naive = m.naive_macs_per_cycle_estimate();
+    let measured = 131072.0 / (base + 40) as f64;
+    assert!(naive < measured);
+    assert!(measured < a.peak_macs_per_cycle() / 3.0);
+}
+
+// ------------------------------------------------------------------ §5.4
+#[test]
+fn section54_strong_scaling_efficiency() {
+    let a = vc1902();
+    let g = ParallelGemm::new(&a);
+    let r1 = g.table2_row(1);
+    let r32 = g.table2_row(32);
+    let drop = 1.0 - r32.perf_per_tile / r1.perf_per_tile;
+    // Paper: 5.7% degradation from 1 → 32 tiles.
+    assert!((drop - 0.057).abs() < 0.01, "degradation {drop}");
+}
+
+// ------------------------------------------- whole-problem sanity check
+#[test]
+fn problem_constants() {
+    let (m, n, k) = PROBLEM;
+    assert_eq!(m * n * k, 134_217_728); // total MACs of the fixed problem
+}

@@ -1,0 +1,98 @@
+//! Integration tests across the three layers: the Rust GEMM engine, the
+//! PJRT runtime, and the JAX/Pallas artifacts produced by `make artifacts`.
+//!
+//! These tests are skipped (with a loud message) when the artifacts are
+//! missing so a clean checkout can still run `cargo test`; `make test`
+//! always builds artifacts first.
+
+use versal_gemm::arch::vc1902;
+use versal_gemm::gemm::baseline::naive_gemm;
+use versal_gemm::gemm::{GemmConfig, MatI32, MatU8, ParallelGemm};
+use versal_gemm::runtime::{ArtifactId, ArtifactRegistry, Engine};
+use versal_gemm::util::Pcg32;
+
+fn engine_or_skip() -> Option<Engine> {
+    let reg = ArtifactRegistry::default_location();
+    if !reg.missing().is_empty() {
+        eprintln!(
+            "SKIP: artifacts missing at {} — run `make artifacts`",
+            reg.root().display()
+        );
+        return None;
+    }
+    Some(Engine::new(reg).expect("PJRT CPU client"))
+}
+
+#[test]
+fn pallas_microkernel_artifact_matches_rust_engine_exactly() {
+    let Some(mut eng) = engine_or_skip() else { return };
+    let mut rng = Pcg32::new(0xA0);
+    let a = MatU8::random(64, 64, &mut rng);
+    let b = MatU8::random(64, 64, &mut rng);
+
+    // Layer 1/2: the Pallas micro-kernel via PJRT.
+    let from_pjrt = eng.gemm_u8(ArtifactId::GemmU8_64, &a, &b).expect("PJRT GEMM");
+
+    // Layer 3: the Rust engine (parallel, 4 simulated tiles).
+    let arch = vc1902();
+    let engine = ParallelGemm::new(&arch);
+    let mut cfg = GemmConfig::paper_table2(4);
+    cfg.ccp = versal_gemm::gemm::Ccp { mc: 32, nc: 32, kc: 64 };
+    let mut from_rust = MatI32::zeros(64, 64);
+    engine.run(&cfg, &a, &b, &mut from_rust).unwrap();
+
+    // And the naive oracle.
+    let mut from_naive = MatI32::zeros(64, 64);
+    naive_gemm(&a, &b, &mut from_naive);
+
+    assert_eq!(from_pjrt.max_abs_diff(&from_rust), 0, "PJRT vs Rust engine");
+    assert_eq!(from_pjrt.max_abs_diff(&from_naive), 0, "PJRT vs naive");
+}
+
+#[test]
+fn paper_problem_artifact_matches_rust_engine() {
+    let Some(mut eng) = engine_or_skip() else { return };
+    let mut rng = Pcg32::new(0xA1);
+    let a = MatU8::random(256, 2048, &mut rng);
+    let b = MatU8::random(2048, 256, &mut rng);
+
+    let from_pjrt = eng.gemm_u8(ArtifactId::GemmU8Paper, &a, &b).expect("PJRT GEMM");
+
+    let arch = vc1902();
+    let engine = ParallelGemm::new(&arch);
+    let cfg = GemmConfig::paper_table2(8);
+    let mut from_rust = MatI32::zeros(256, 256);
+    let (cycles, _) = engine.run(&cfg, &a, &b, &mut from_rust).unwrap();
+
+    assert_eq!(from_pjrt.max_abs_diff(&from_rust), 0, "paper-shape numerics");
+    assert!(cycles.total > 0);
+}
+
+#[test]
+fn mlp_artifact_runs_and_is_deterministic() {
+    let Some(mut eng) = engine_or_skip() else { return };
+    let mut rng = Pcg32::new(0xA2);
+    let x: Vec<f32> = (0..8 * 784).map(|_| rng.f64() as f32).collect();
+    let y1 = eng.mlp_forward(8, &x).expect("MLP forward");
+    let y2 = eng.mlp_forward(8, &x).expect("MLP forward");
+    assert_eq!(y1.len(), 8 * 10);
+    assert_eq!(y1, y2, "deterministic");
+    assert!(y1.iter().all(|v| v.is_finite()), "finite logits");
+    // Logits must not be all identical (the model computes something).
+    let spread = y1.iter().fold((f32::MAX, f32::MIN), |(lo, hi), &v| (lo.min(v), hi.max(v)));
+    assert!(spread.1 - spread.0 > 1e-3, "logit spread {spread:?}");
+}
+
+#[test]
+fn gemm_artifact_rejects_nothing_but_shapes_hold() {
+    // Contract check: the artifact registry's stems match what aot.py
+    // wrote (i.e. make artifacts produced exactly these files).
+    let reg = ArtifactRegistry::default_location();
+    if reg.missing().is_empty() {
+        for id in ArtifactId::ALL {
+            assert!(reg.path(id).is_file());
+            let text = std::fs::read_to_string(reg.path(id)).unwrap();
+            assert!(text.contains("HloModule") || text.contains("ENTRY"), "{id:?} looks like HLO text");
+        }
+    }
+}
