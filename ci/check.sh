@@ -1,0 +1,23 @@
+#!/usr/bin/env bash
+# CI gate for the rust/ workspace: tier-1 build + tests, lint, and the
+# quick cluster-scaling smoke (the bench asserts its acceptance gates).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+echo "==> cargo build --release"
+cargo build --release
+
+echo "==> cargo test -q"
+cargo test -q
+
+echo "==> cargo clippy -- -D warnings"
+if cargo clippy --version >/dev/null 2>&1; then
+    cargo clippy --all-targets -- -D warnings
+else
+    echo "    (clippy component not installed; skipping lint)"
+fi
+
+echo "==> bench_cluster_scaling --quick (smoke)"
+VERSAL_BENCH_FAST=1 cargo bench --bench bench_cluster_scaling -- --quick
+
+echo "CI checks passed."

@@ -37,6 +37,10 @@ COMMANDS:
                                render the block schedule as a text gantt
                                chart (the §5.3 overlap, visualised)
   ablation [--tiles T]         compare parallelising L1/L3/L4/L5 (§4.4)
+  cluster  [--devices 1,2,4,8] [--tiles T] [--fabric pcie|cxl|ethernet]
+                               device-level strong scaling: the Table-2
+                               problem sharded SUMMA-style across a pool
+                               of simulated devices (extension)
   serve    --requests R [--rate Q] [--batch B] [--workers W] [--tiles T]
                                run the batching inference coordinator on a
                                synthetic workload; report latency/throughput
@@ -86,6 +90,8 @@ fn run(argv: Vec<String>) -> Result<(), String> {
         .opt("kc")
         .opt("width")
         .opt("arrivals")
+        .opt("devices")
+        .opt("fabric")
         .flag("count-packing")
         .parse(&argv)?;
     let cmd = args.positional().first().map(|s| s.as_str()).unwrap_or("help");
@@ -113,6 +119,7 @@ fn run(argv: Vec<String>) -> Result<(), String> {
         "noc" => cmd_noc(&arch, &args),
         "trace" => cmd_trace(&arch, &args),
         "ablation" => cmd_ablation(&arch, &args),
+        "cluster" => cmd_cluster(&arch, &args),
         "serve" => cmd_serve(&arch, &args),
         other => Err(format!("unknown command {other:?}; see `versal-gemm help`")),
     }
@@ -287,6 +294,33 @@ fn cmd_ablation(arch: &VersalArch, args: &Args) -> Result<(), String> {
     Ok(())
 }
 
+fn cmd_cluster(arch: &VersalArch, args: &Args) -> Result<(), String> {
+    use crate::cluster::FabricSpec;
+    let devices = args.get_list::<usize>("devices", &[1, 2, 4, 8])?;
+    let tiles: usize = args.get_num("tiles", 8)?;
+    let fabric = FabricSpec::by_name(args.get_or("fabric", "pcie"))?;
+    let rows = crate::report::cluster_scaling_rows(arch, tiles, &devices, &fabric)
+        .map_err(|e| e.to_string())?;
+    let (m, n, k) = crate::report::TABLE2_PROBLEM;
+    println!(
+        "device-level strong scaling of ({m}, {n}, {k}) — SUMMA shards over ring-connected \
+         {} fabric, {tiles} AIE tiles/device:\n",
+        fabric.name
+    );
+    println!("{}", crate::report::cluster_table(&rows).to_text());
+    if let (Some(first), Some(last)) = (rows.first(), rows.last()) {
+        println!(
+            "aggregate {:.1} → {:.1} MACs/cycle over {}→{} devices (per-device efficiency {:.0}%)",
+            first.aggregate_macs_per_cycle,
+            last.aggregate_macs_per_cycle,
+            first.devices,
+            last.devices,
+            last.per_device_efficiency * 100.0
+        );
+    }
+    Ok(())
+}
+
 fn cmd_serve(arch: &VersalArch, args: &Args) -> Result<(), String> {
     let requests: usize = args.get_num("requests", 256)?;
     let rate: f64 = args.get_num("rate", 2000.0)?;
@@ -397,6 +431,18 @@ mod tests {
         assert_eq!(cli_main(argv(&["noc", "--tiles", "16"])), 0);
         // noc beyond the array is an error.
         assert_eq!(cli_main(argv(&["noc", "--tiles", "401"])), 2);
+    }
+
+    #[test]
+    fn cluster_subcommand_succeeds_and_validates() {
+        assert_eq!(cli_main(argv(&["cluster", "--devices", "1,2", "--tiles", "4"])), 0);
+        assert_eq!(
+            cli_main(argv(&["cluster", "--devices", "2", "--fabric", "cxl"])),
+            0
+        );
+        // Unknown fabric and infeasible tile budget are errors, not panics.
+        assert_eq!(cli_main(argv(&["cluster", "--fabric", "smoke-signals"])), 2);
+        assert_eq!(cli_main(argv(&["cluster", "--devices", "2", "--tiles", "500"])), 2);
     }
 
     #[test]

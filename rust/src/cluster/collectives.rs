@@ -1,0 +1,440 @@
+//! Device-level collectives: broadcast, scatter, all-gather,
+//! reduce-scatter, all-reduce.
+//!
+//! Each collective exists in two forms:
+//!
+//! - a **cycle model** (`*_cycles`) used by the sharded-GEMM schedule and
+//!   the serving backend — pure arithmetic over the fabric/topology;
+//! - a **data mover** operating on real matrices, bit-exact by
+//!   construction (integer adds commute), property-tested against the
+//!   algebraic identities (`all_gather ∘ scatter = id`, reduce-scatter =
+//!   serial reduction).
+//!
+//! Cycle models (ring algorithms for the symmetric collectives, egress
+//! serialisation for the rooted ones; see [`super::fabric`] for units):
+//!
+//! ```text
+//! broadcast(B, g)       = (g−1)·(setup + B/bw) + maxhop·lat     (rooted)
+//! scatter(B_i, g)       = Σ_{i≠root}(setup + B_i/bw) + maxhop·lat
+//! all_gather(S, g)      = (g−1)·(setup + S/bw + hop·lat)        (ring)
+//! reduce_scatter(S, g)  = (g−1)·(setup + S/bw + hop·lat)        (ring)
+//! all_reduce(B, g)      = reduce_scatter(B/g) + all_gather(B/g)
+//! ```
+//!
+//! The rooted costs grow with the group size because a device egress port
+//! is serial — the deliberate contrast with the on-chip Ar multicast,
+//! whose switch-level replication is flat in the subscriber count (§5.1).
+
+use super::fabric::Fabric;
+use super::{Cluster, ClusterError, DeviceId};
+use crate::gemm::{MatI32, MatU8};
+
+/// Collective engine bound to a cluster's fabric + topology.
+pub struct Collectives<'a> {
+    cluster: &'a Cluster,
+    fabric: Fabric,
+}
+
+impl<'a> Collectives<'a> {
+    pub fn new(cluster: &'a Cluster) -> Collectives<'a> {
+        Collectives { cluster, fabric: Fabric::new(&cluster.fabric) }
+    }
+
+    pub fn fabric(&self) -> &Fabric {
+        &self.fabric
+    }
+
+    fn validate_group(&self, group: &[DeviceId]) -> Result<(), ClusterError> {
+        if group.is_empty() {
+            return Err(ClusterError::BadGroup("empty group".into()));
+        }
+        let nd = self.cluster.n_devices();
+        for &d in group {
+            if d >= nd {
+                return Err(ClusterError::DeviceOutOfRange { device: d, n_devices: nd });
+            }
+        }
+        for (i, &d) in group.iter().enumerate() {
+            if group[..i].contains(&d) {
+                return Err(ClusterError::BadGroup(format!("duplicate device {d}")));
+            }
+        }
+        Ok(())
+    }
+
+    fn max_hops_from(&self, root: DeviceId, group: &[DeviceId]) -> Result<u64, ClusterError> {
+        let mut worst = 0;
+        for &d in group {
+            worst = worst.max(self.cluster.topology.hops(root, d)?);
+        }
+        Ok(worst)
+    }
+
+    /// Worst hop count between ring-adjacent group members (the per-step
+    /// distance of the ring algorithms).
+    fn ring_hop(&self, group: &[DeviceId]) -> Result<u64, ClusterError> {
+        if group.len() < 2 {
+            return Ok(0);
+        }
+        let mut worst = 0;
+        for i in 0..group.len() {
+            let j = (i + 1) % group.len();
+            worst = worst.max(self.cluster.topology.hops(group[i], group[j])?);
+        }
+        Ok(worst)
+    }
+
+    // ------------------------------------------------------ cycle models
+
+    /// Root sends the same `bytes` to every other group member.
+    pub fn broadcast_cycles(
+        &self,
+        bytes: u64,
+        root: DeviceId,
+        group: &[DeviceId],
+    ) -> Result<u64, ClusterError> {
+        self.validate_group(group)?;
+        if !group.contains(&root) {
+            return Err(ClusterError::BadGroup(format!("root {root} not in group")));
+        }
+        let receivers = group.len() - 1;
+        if receivers == 0 {
+            return Ok(0);
+        }
+        let payloads = vec![bytes; receivers];
+        Ok(self.fabric.serialized_cycles(&payloads, self.max_hops_from(root, group)?))
+    }
+
+    /// Root sends shard `i` (of `shard_bytes[i]` bytes) to group member
+    /// `i`; the root's own shard is free.
+    pub fn scatter_cycles(
+        &self,
+        shard_bytes: &[u64],
+        root: DeviceId,
+        group: &[DeviceId],
+    ) -> Result<u64, ClusterError> {
+        self.validate_group(group)?;
+        if shard_bytes.len() != group.len() {
+            return Err(ClusterError::BadGroup(format!(
+                "{} shards for a {}-member group",
+                shard_bytes.len(),
+                group.len()
+            )));
+        }
+        if !group.contains(&root) {
+            return Err(ClusterError::BadGroup(format!("root {root} not in group")));
+        }
+        let payloads: Vec<u64> = group
+            .iter()
+            .zip(shard_bytes)
+            .filter(|(&d, _)| d != root)
+            .map(|(_, &b)| b)
+            .collect();
+        Ok(self.fabric.serialized_cycles(&payloads, self.max_hops_from(root, group)?))
+    }
+
+    /// Ring all-gather: after `g−1` steps every member holds all `g`
+    /// shards of `shard_bytes` each.
+    pub fn all_gather_cycles(
+        &self,
+        shard_bytes: u64,
+        group: &[DeviceId],
+    ) -> Result<u64, ClusterError> {
+        self.validate_group(group)?;
+        let g = group.len() as u64;
+        if g == 1 {
+            return Ok(0);
+        }
+        let step = self.fabric.transfer_cycles(shard_bytes, self.ring_hop(group)?);
+        Ok((g - 1) * step)
+    }
+
+    /// Ring reduce-scatter: same step structure as all-gather (each step
+    /// also folds the local partial in, which the AIE/host overlap hides).
+    pub fn reduce_scatter_cycles(
+        &self,
+        shard_bytes: u64,
+        group: &[DeviceId],
+    ) -> Result<u64, ClusterError> {
+        self.all_gather_cycles(shard_bytes, group)
+    }
+
+    /// Ring all-reduce of a `bytes`-byte buffer: reduce-scatter then
+    /// all-gather of `bytes/g` shards.
+    pub fn all_reduce_cycles(&self, bytes: u64, group: &[DeviceId]) -> Result<u64, ClusterError> {
+        self.validate_group(group)?;
+        let g = group.len() as u64;
+        let shard = bytes.div_ceil(g.max(1));
+        Ok(self.reduce_scatter_cycles(shard, group)? + self.all_gather_cycles(shard, group)?)
+    }
+
+    // ------------------------------------------------- data + cycles
+
+    /// Split `m` into row bands and "send" band `i` to group member `i`.
+    /// Returns the shards (in group order) and the scatter cycles.
+    pub fn scatter_rows_u8(
+        &self,
+        m: &MatU8,
+        row_bands: &[usize],
+        root: DeviceId,
+        group: &[DeviceId],
+    ) -> Result<(Vec<MatU8>, u64), ClusterError> {
+        if row_bands.len() != group.len() {
+            return Err(ClusterError::BadGroup(format!(
+                "{} bands for a {}-member group",
+                row_bands.len(),
+                group.len()
+            )));
+        }
+        if row_bands.iter().sum::<usize>() != m.rows {
+            return Err(ClusterError::ShapeMismatch(format!(
+                "bands sum to {}, matrix has {} rows",
+                row_bands.iter().sum::<usize>(),
+                m.rows
+            )));
+        }
+        let bytes: Vec<u64> = row_bands.iter().map(|&r| (r * m.cols) as u64).collect();
+        let cycles = self.scatter_cycles(&bytes, root, group)?;
+        let mut shards = Vec::with_capacity(group.len());
+        let mut r0 = 0;
+        for &rows in row_bands {
+            shards.push(m.submatrix(r0, 0, rows, m.cols));
+            r0 += rows;
+        }
+        Ok((shards, cycles))
+    }
+
+    /// Concatenate per-member row shards back into one matrix (the
+    /// inverse of [`Collectives::scatter_rows_u8`]'s split), with ring
+    /// all-gather cycle accounting.
+    pub fn all_gather_rows_i32(
+        &self,
+        shards: &[MatI32],
+        group: &[DeviceId],
+    ) -> Result<(MatI32, u64), ClusterError> {
+        if shards.is_empty() || shards.len() != group.len() {
+            return Err(ClusterError::BadGroup(format!(
+                "{} shards for a {}-member group",
+                shards.len(),
+                group.len()
+            )));
+        }
+        let cols = shards[0].cols;
+        if shards.iter().any(|s| s.cols != cols) {
+            return Err(ClusterError::ShapeMismatch("ragged shard widths".into()));
+        }
+        let max_bytes = shards.iter().map(|s| s.bytes()).max().unwrap_or(0);
+        let cycles = self.all_gather_cycles(max_bytes, group)?;
+        let rows: usize = shards.iter().map(|s| s.rows).sum();
+        let mut out = MatI32::zeros(rows, cols);
+        let mut r0 = 0;
+        for s in shards {
+            out.add_block(r0, 0, s);
+            r0 += s.rows;
+        }
+        Ok((out, cycles))
+    }
+
+    /// Same-row-concatenation for u8 shards (used by tests to close the
+    /// scatter→gather identity on inputs).
+    pub fn concat_rows_u8(shards: &[MatU8]) -> Result<MatU8, ClusterError> {
+        if shards.is_empty() {
+            return Err(ClusterError::BadGroup("no shards".into()));
+        }
+        let cols = shards[0].cols;
+        if shards.iter().any(|s| s.cols != cols) {
+            return Err(ClusterError::ShapeMismatch("ragged shard widths".into()));
+        }
+        let rows: usize = shards.iter().map(|s| s.rows).sum();
+        let mut data = Vec::with_capacity(rows * cols);
+        for s in shards {
+            data.extend_from_slice(&s.data);
+        }
+        Ok(MatU8::from_vec(rows, cols, data))
+    }
+
+    /// Ring reduce-scatter over full-size per-member contributions:
+    /// member `i` receives row band `i` of the elementwise sum.
+    pub fn reduce_scatter_rows_i32(
+        &self,
+        contributions: &[MatI32],
+        row_bands: &[usize],
+        group: &[DeviceId],
+    ) -> Result<(Vec<MatI32>, u64), ClusterError> {
+        if contributions.is_empty()
+            || contributions.len() != group.len()
+            || row_bands.len() != group.len()
+        {
+            return Err(ClusterError::BadGroup(format!(
+                "{} contributions / {} bands for a {}-member group",
+                contributions.len(),
+                row_bands.len(),
+                group.len()
+            )));
+        }
+        let (rows, cols) = (contributions[0].rows, contributions[0].cols);
+        if contributions.iter().any(|c| (c.rows, c.cols) != (rows, cols)) {
+            return Err(ClusterError::ShapeMismatch("ragged contributions".into()));
+        }
+        if row_bands.iter().sum::<usize>() != rows {
+            return Err(ClusterError::ShapeMismatch(format!(
+                "bands sum to {}, contributions have {rows} rows",
+                row_bands.iter().sum::<usize>()
+            )));
+        }
+        // Serial reduction in group order — the exactness oracle the ring
+        // algorithm must (and does, for integer adds) agree with.
+        let mut sum = MatI32::zeros(rows, cols);
+        for c in contributions {
+            sum.add_block(0, 0, c);
+        }
+        let max_band_bytes =
+            row_bands.iter().map(|&r| (r * cols * 4) as u64).max().unwrap_or(0);
+        let cycles = self.reduce_scatter_cycles(max_band_bytes, group)?;
+        let mut shards = Vec::with_capacity(group.len());
+        let mut r0 = 0;
+        for &band in row_bands {
+            shards.push(sum.submatrix(r0, 0, band, cols));
+            r0 += band;
+        }
+        Ok((shards, cycles))
+    }
+
+    /// Ring all-reduce: every member ends with the full elementwise sum.
+    pub fn all_reduce_i32(
+        &self,
+        contributions: &[MatI32],
+        group: &[DeviceId],
+    ) -> Result<(MatI32, u64), ClusterError> {
+        let g = group.len();
+        if contributions.is_empty() || contributions.len() != g {
+            return Err(ClusterError::BadGroup(format!(
+                "{} contributions for a {g}-member group",
+                contributions.len()
+            )));
+        }
+        let rows = contributions[0].rows;
+        let bands = super::placement::partition(rows, &vec![1; g]);
+        let (shards, rs_cycles) =
+            self.reduce_scatter_rows_i32(contributions, &bands, group)?;
+        let (sum, ag_cycles) = self.all_gather_rows_i32(&shards, group)?;
+        Ok((sum, rs_cycles + ag_cycles))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Cluster;
+    use crate::util::quickcheck::prop;
+
+    fn cluster(n: usize) -> Cluster {
+        Cluster::vc1902_pool(n, 4).unwrap()
+    }
+
+    #[test]
+    fn broadcast_cost_grows_with_group_unlike_onchip_multicast() {
+        let c = cluster(8);
+        let coll = Collectives::new(&c);
+        let b2 = coll.broadcast_cycles(1 << 20, 0, &[0, 1]).unwrap();
+        let b8 = coll.broadcast_cycles(1 << 20, 0, &[0, 1, 2, 3, 4, 5, 6, 7]).unwrap();
+        assert!(b8 > 3 * b2, "egress serialisation: {b8} vs {b2}");
+        assert_eq!(coll.broadcast_cycles(1 << 20, 3, &[3]).unwrap(), 0);
+    }
+
+    #[test]
+    fn group_validation() {
+        let c = cluster(4);
+        let coll = Collectives::new(&c);
+        assert!(matches!(
+            coll.broadcast_cycles(10, 0, &[]),
+            Err(ClusterError::BadGroup(_))
+        ));
+        assert!(matches!(
+            coll.broadcast_cycles(10, 9, &[0, 1]),
+            Err(ClusterError::BadGroup(_))
+        ));
+        assert!(matches!(
+            coll.broadcast_cycles(10, 0, &[0, 0]),
+            Err(ClusterError::BadGroup(_))
+        ));
+        assert!(matches!(
+            coll.broadcast_cycles(10, 0, &[0, 17]),
+            Err(ClusterError::DeviceOutOfRange { .. })
+        ));
+    }
+
+    #[test]
+    fn all_reduce_twice_the_ring_steps_of_reduce_scatter() {
+        let c = cluster(4);
+        let coll = Collectives::new(&c);
+        let group = [0, 1, 2, 3];
+        let rs = coll.reduce_scatter_cycles(1 << 18, &group).unwrap();
+        let ar = coll.all_reduce_cycles(4 << 18, &group).unwrap();
+        assert_eq!(ar, 2 * rs, "all-reduce = RS + AG of quarter shards");
+    }
+
+    #[test]
+    fn prop_all_gather_undoes_scatter() {
+        prop("cluster-scatter-gather-id", 0x5CA7, 40, |g| {
+            let parts = g.rng.range(1, 5);
+            let rows = g.dim(32);
+            let cols = g.dim(24);
+            let c = cluster(parts);
+            let coll = Collectives::new(&c);
+            let group: Vec<usize> = (0..parts).collect();
+            let m = MatU8::random(rows, cols, &mut g.rng);
+            let bands = crate::cluster::partition(rows, &vec![1; parts]);
+            let (shards, _cy) = coll
+                .scatter_rows_u8(&m, &bands, 0, &group)
+                .map_err(|e| e.to_string())?;
+            let back = Collectives::concat_rows_u8(&shards).map_err(|e| e.to_string())?;
+            if back != m {
+                return Err(format!("scatter∘gather ≠ id for ({rows},{cols})×{parts}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_reduce_scatter_matches_serial_reduction() {
+        prop("cluster-reduce-scatter", 0x2ED5, 40, |g| {
+            let parts = g.rng.range(2, 5);
+            let rows = g.dim(24);
+            let cols = g.dim(16);
+            let c = cluster(parts);
+            let coll = Collectives::new(&c);
+            let group: Vec<usize> = (0..parts).collect();
+            let contributions: Vec<MatI32> = (0..parts)
+                .map(|_| {
+                    let data: Vec<i32> =
+                        (0..rows * cols).map(|_| g.rng.range(0, 1000) as i32 - 500).collect();
+                    MatI32::from_vec(rows, cols, data)
+                })
+                .collect();
+            let bands = crate::cluster::partition(rows, &vec![1; parts]);
+            let (shards, _cy) = coll
+                .reduce_scatter_rows_i32(&contributions, &bands, &group)
+                .map_err(|e| e.to_string())?;
+            // Serial oracle.
+            let mut want = MatI32::zeros(rows, cols);
+            for c in &contributions {
+                want.add_block(0, 0, c);
+            }
+            let mut r0 = 0;
+            for (i, s) in shards.iter().enumerate() {
+                if *s != want.submatrix(r0, 0, bands[i], cols) {
+                    return Err(format!("shard {i} disagrees with serial reduction"));
+                }
+                r0 += bands[i];
+            }
+            // And the all-reduce closes the loop.
+            let (sum, _cy) =
+                coll.all_reduce_i32(&contributions, &group).map_err(|e| e.to_string())?;
+            if sum != want {
+                return Err("all-reduce ≠ serial sum".into());
+            }
+            Ok(())
+        });
+    }
+}

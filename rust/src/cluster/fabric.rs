@@ -1,0 +1,176 @@
+//! The inter-device fabric cost model: link bandwidth, hop latency,
+//! message setup, and egress-port serialisation.
+//!
+//! ## Units and calibration assumptions
+//!
+//! Everything is expressed in **AIE clock cycles at 1 GHz** — the unit of
+//! every other cost in this repository (the paper's Tables 2–3 are AIE
+//! cycles), so device-level and tile-level costs add directly. At 1 GHz,
+//! 1 cycle = 1 ns and 1 byte/cycle = 1 GB/s; the presets translate
+//! familiar interconnect classes into those units:
+//!
+//! | preset            | bandwidth        | hop latency | setup | models                      |
+//! |-------------------|------------------|-------------|-------|-----------------------------|
+//! | `pcie_like`       | 32 B/cy (32 GB/s)| 500 cy      | 200 cy| PCIe 4.0 ×16 effective      |
+//! | `cxl_like`        | 64 B/cy (64 GB/s)| 250 cy      | 100 cy| CXL / NVLink-class links    |
+//! | `ethernet_like`   | 8 B/cy (8 GB/s)  | 2000 cy     |1000 cy| 100 GbE + NIC/stack latency |
+//!
+//! The cost of one `bytes`-byte message over `hops` links is
+//!
+//! ```text
+//! setup + hops · latency + ceil(bytes / bandwidth)
+//! ```
+//!
+//! i.e. store-and-forward latency is paid per hop while the payload
+//! streams at the link rate (wormhole-style, one serialisation).
+//!
+//! Like the on-chip DDR port ([`crate::sim::ddr`]), an egress port is
+//! serial: `n` distinct messages leaving the same device pay their
+//! payload times back to back ([`Fabric::serialized_cycles`]) while the
+//! hop latency of only the *last* message is exposed. This is the
+//! device-level mechanism that makes broadcast cost grow with the group
+//! size — in deliberate contrast to the on-chip stream *multicast*
+//! (§5.1), whose switches replicate packets for free.
+
+/// Parameters of one fabric class. All devices share one fabric spec
+/// (heterogeneity lives in the per-device tile counts, not the wiring).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FabricSpec {
+    pub name: String,
+    /// Payload streaming rate of one link, bytes per AIE cycle.
+    pub link_bytes_per_cycle: f64,
+    /// Store-and-forward latency per hop, cycles.
+    pub link_latency_cycles: u64,
+    /// Fixed per-message cost (descriptor programming, DMA setup), cycles.
+    pub message_setup_cycles: u64,
+}
+
+impl FabricSpec {
+    /// PCIe 4.0 ×16-class link: 32 GB/s effective, ~500 ns hop.
+    pub fn pcie_like() -> FabricSpec {
+        FabricSpec {
+            name: "pcie".to_string(),
+            link_bytes_per_cycle: 32.0,
+            link_latency_cycles: 500,
+            message_setup_cycles: 200,
+        }
+    }
+
+    /// CXL / NVLink-class link: 64 GB/s, ~250 ns hop.
+    pub fn cxl_like() -> FabricSpec {
+        FabricSpec {
+            name: "cxl".to_string(),
+            link_bytes_per_cycle: 64.0,
+            link_latency_cycles: 250,
+            message_setup_cycles: 100,
+        }
+    }
+
+    /// 100 GbE-class link: 8 GB/s effective after stack overheads, ~2 µs.
+    pub fn ethernet_like() -> FabricSpec {
+        FabricSpec {
+            name: "ethernet".to_string(),
+            link_bytes_per_cycle: 8.0,
+            link_latency_cycles: 2000,
+            message_setup_cycles: 1000,
+        }
+    }
+
+    /// Parse a preset by name (CLI: `--fabric pcie|cxl|ethernet`).
+    pub fn by_name(name: &str) -> Result<FabricSpec, String> {
+        match name {
+            "pcie" => Ok(FabricSpec::pcie_like()),
+            "cxl" => Ok(FabricSpec::cxl_like()),
+            "ethernet" => Ok(FabricSpec::ethernet_like()),
+            other => Err(format!("unknown fabric preset {other:?} (pcie|cxl|ethernet)")),
+        }
+    }
+}
+
+/// Cost evaluator bound to a fabric spec.
+#[derive(Debug, Clone)]
+pub struct Fabric {
+    spec: FabricSpec,
+}
+
+impl Fabric {
+    pub fn new(spec: &FabricSpec) -> Fabric {
+        assert!(spec.link_bytes_per_cycle > 0.0, "bandwidth must be positive");
+        Fabric { spec: spec.clone() }
+    }
+
+    pub fn spec(&self) -> &FabricSpec {
+        &self.spec
+    }
+
+    /// Cycles the payload occupies a link (serialisation time).
+    pub fn payload_cycles(&self, bytes: u64) -> u64 {
+        (bytes as f64 / self.spec.link_bytes_per_cycle).ceil() as u64
+    }
+
+    /// One point-to-point message of `bytes` over `hops` links.
+    pub fn transfer_cycles(&self, bytes: u64, hops: u64) -> u64 {
+        self.spec.message_setup_cycles
+            + hops * self.spec.link_latency_cycles
+            + self.payload_cycles(bytes)
+    }
+
+    /// `payloads` distinct messages leaving one egress port back to back;
+    /// `max_hops` is the worst path among them. Every message pays its
+    /// own setup and payload time on the port; only the last message's
+    /// hop latency is exposed (earlier ones overlap with later sends).
+    pub fn serialized_cycles(&self, payloads: &[u64], max_hops: u64) -> u64 {
+        if payloads.is_empty() {
+            return 0;
+        }
+        let stream: u64 = payloads.iter().map(|&b| self.payload_cycles(b)).sum();
+        self.spec.message_setup_cycles * payloads.len() as u64
+            + max_hops * self.spec.link_latency_cycles
+            + stream
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_order_by_speed() {
+        let f = |s: FabricSpec| Fabric::new(&s).transfer_cycles(1 << 20, 1);
+        let (p, c, e) = (
+            f(FabricSpec::pcie_like()),
+            f(FabricSpec::cxl_like()),
+            f(FabricSpec::ethernet_like()),
+        );
+        assert!(c < p && p < e, "cxl {c} < pcie {p} < ethernet {e}");
+    }
+
+    #[test]
+    fn transfer_decomposes() {
+        let f = Fabric::new(&FabricSpec::pcie_like());
+        // 256 KiB at 32 B/cycle = 8192 payload cycles.
+        assert_eq!(f.payload_cycles(262_144), 8192);
+        assert_eq!(f.transfer_cycles(262_144, 1), 200 + 500 + 8192);
+        assert_eq!(f.transfer_cycles(0, 0), 200);
+    }
+
+    #[test]
+    fn serialization_adds_payloads_not_latencies() {
+        let f = Fabric::new(&FabricSpec::pcie_like());
+        let one = f.transfer_cycles(32_000, 2);
+        let three = f.serialized_cycles(&[32_000, 32_000, 32_000], 2);
+        assert!(three > 2 * (one - 2 * 500), "payloads serialise");
+        assert!(
+            three < 3 * one,
+            "hop latencies overlap: {three} < {}",
+            3 * one
+        );
+        assert_eq!(f.serialized_cycles(&[], 5), 0);
+    }
+
+    #[test]
+    fn by_name_roundtrip() {
+        assert_eq!(FabricSpec::by_name("cxl").unwrap(), FabricSpec::cxl_like());
+        assert!(FabricSpec::by_name("carrier-pigeon").is_err());
+    }
+}

@@ -1,0 +1,258 @@
+//! Multi-device cluster layer: sharding GEMM across a pool of simulated
+//! Versal ACAPs.
+//!
+//! The paper scales GEMM *within* one VC1902 by distributing loop L4
+//! across up to 32 AIE tiles (§4.4, Table 2). This module adds the next
+//! level of the same hierarchy: a pool of simulated devices connected by
+//! a cycle-costed inter-device fabric, so the loop nest becomes
+//!
+//! ```text
+//! shards-across-devices (this module)
+//!   × L1–L3 blocking (gemm::blocked)
+//!     × L4-across-tiles (gemm::parallel)
+//!       × L5/L6 micro-kernel (gemm::microkernel)
+//! ```
+//!
+//! Structure (mirrors the single-device split of `arch` / `sim` / `gemm`):
+//!
+//! - [`topology`]    — who can talk to whom: ring / 2-D mesh / fully
+//!                     connected presets and hop counts.
+//! - [`fabric`]      — how much a transfer costs: bandwidth, per-hop
+//!                     latency, per-message setup, link serialisation
+//!                     (the device-level analogue of `sim::ddr`).
+//! - [`collectives`] — broadcast / scatter / all-gather / reduce-scatter
+//!                     / all-reduce, with cycle accounting and bit-exact
+//!                     data movement.
+//! - [`placement`]   — shard-to-device assignment: a 2-D device grid with
+//!                     row/column bands proportional to per-device tile
+//!                     counts (heterogeneous pools allowed).
+//! - [`sharded_gemm`] — the SUMMA-style 2-D partitioned GEMM driver; each
+//!                     shard runs the existing [`crate::gemm::ParallelGemm`]
+//!                     locally.
+//!
+//! Numerics are exact everywhere (u8·u8→i32, like the single-device
+//! engine); only the *schedule* is modelled. Every sharded result is
+//! validated bit-exactly against the single-device engine in
+//! `tests/cluster_integration.rs`.
+
+pub mod collectives;
+pub mod fabric;
+pub mod placement;
+pub mod sharded_gemm;
+pub mod topology;
+
+pub use collectives::Collectives;
+pub use fabric::{Fabric, FabricSpec};
+pub use placement::{partition, GridPlacement};
+pub use sharded_gemm::{
+    ClusterBreakdown, ClusterGemm, ClusterGemmConfig, DeviceStats,
+};
+pub use topology::{DeviceId, Topology};
+
+use crate::arch::VersalArch;
+
+/// Errors from the cluster layer. Deterministic and descriptive — the
+/// cluster mirrors the single-device policy that infeasible requests are
+/// errors, not panics.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ClusterError {
+    /// A cluster must contain at least one device.
+    Empty,
+    /// The topology's device count disagrees with the device list.
+    TopologySize { topology: usize, devices: usize },
+    /// A malformed topology (e.g. a 0×3 mesh).
+    BadTopology(String),
+    /// A device id outside `0..n_devices`.
+    DeviceOutOfRange { device: usize, n_devices: usize },
+    /// A placement grid that does not tile the device pool.
+    BadGrid { rows: usize, cols: usize, devices: usize },
+    /// A device configured with more tiles than its AIE array has.
+    TooManyTiles { device: usize, requested: usize, available: usize },
+    /// A device architecture that fails its own validation.
+    BadArch { device: usize, reason: String },
+    /// Mismatched operand shapes or a placement built for another shape.
+    ShapeMismatch(String),
+    /// A malformed collective group (empty, duplicate, or missing root).
+    BadGroup(String),
+    /// The per-shard single-device engine rejected its configuration.
+    LocalGemm(String),
+}
+
+impl std::fmt::Display for ClusterError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ClusterError::Empty => write!(f, "cluster must contain at least one device"),
+            ClusterError::TopologySize { topology, devices } => write!(
+                f,
+                "topology describes {topology} devices but the pool has {devices}"
+            ),
+            ClusterError::BadTopology(why) => write!(f, "bad topology: {why}"),
+            ClusterError::DeviceOutOfRange { device, n_devices } => {
+                write!(f, "device {device} outside the pool of {n_devices}")
+            }
+            ClusterError::BadGrid { rows, cols, devices } => {
+                write!(f, "grid {rows}x{cols} does not tile the {devices}-device pool")
+            }
+            ClusterError::TooManyTiles { device, requested, available } => write!(
+                f,
+                "device {device}: requested {requested} tiles, its array has {available}"
+            ),
+            ClusterError::BadArch { device, reason } => {
+                write!(f, "device {device}: invalid architecture: {reason}")
+            }
+            ClusterError::ShapeMismatch(why) => write!(f, "shape mismatch: {why}"),
+            ClusterError::BadGroup(why) => write!(f, "bad collective group: {why}"),
+            ClusterError::LocalGemm(why) => write!(f, "local GEMM failed: {why}"),
+        }
+    }
+}
+
+impl std::error::Error for ClusterError {}
+
+/// One device of the pool: an architecture plus the number of AIE tiles
+/// the job may use on it. Pools may be heterogeneous in both.
+#[derive(Debug, Clone)]
+pub struct DeviceSpec {
+    pub arch: VersalArch,
+    /// AIE tiles the parallel-L4 engine uses on this device.
+    pub tiles: usize,
+}
+
+/// A pool of simulated Versal devices plus the fabric connecting them.
+#[derive(Debug, Clone)]
+pub struct Cluster {
+    pub devices: Vec<DeviceSpec>,
+    pub topology: Topology,
+    pub fabric: FabricSpec,
+}
+
+impl Cluster {
+    /// A homogeneous pool: `n` copies of `arch`, each using
+    /// `tiles_per_device` AIE tiles, on the given topology and fabric.
+    pub fn homogeneous(
+        n: usize,
+        arch: VersalArch,
+        tiles_per_device: usize,
+        topology: Topology,
+        fabric: FabricSpec,
+    ) -> Result<Cluster, ClusterError> {
+        let cluster = Cluster {
+            devices: (0..n)
+                .map(|_| DeviceSpec { arch: arch.clone(), tiles: tiles_per_device })
+                .collect(),
+            topology,
+            fabric,
+        };
+        cluster.validate()?;
+        Ok(cluster)
+    }
+
+    /// The default pool preset: `n` VC1902s (8 tiles each) on a ring with
+    /// the PCIe-class fabric. Mirrors `arch::presets::vc1902`.
+    pub fn vc1902_pool(n: usize, tiles_per_device: usize) -> Result<Cluster, ClusterError> {
+        Cluster::homogeneous(
+            n,
+            crate::arch::vc1902(),
+            tiles_per_device,
+            Topology::Ring(n),
+            FabricSpec::pcie_like(),
+        )
+    }
+
+    pub fn n_devices(&self) -> usize {
+        self.devices.len()
+    }
+
+    /// Total AIE tiles the job may use across the pool.
+    pub fn total_tiles(&self) -> usize {
+        self.devices.iter().map(|d| d.tiles).sum()
+    }
+
+    /// Consistency check: non-empty pool, topology size matches, every
+    /// device's tile budget fits its array, every architecture is valid.
+    pub fn validate(&self) -> Result<(), ClusterError> {
+        if self.devices.is_empty() {
+            return Err(ClusterError::Empty);
+        }
+        self.topology.validate()?;
+        if self.topology.n_devices() != self.devices.len() {
+            return Err(ClusterError::TopologySize {
+                topology: self.topology.n_devices(),
+                devices: self.devices.len(),
+            });
+        }
+        for (i, d) in self.devices.iter().enumerate() {
+            d.arch
+                .validate()
+                .map_err(|reason| ClusterError::BadArch { device: i, reason })?;
+            if d.tiles == 0 || d.tiles > d.arch.aie.n_tiles {
+                return Err(ClusterError::TooManyTiles {
+                    device: i,
+                    requested: d.tiles,
+                    available: d.arch.aie.n_tiles,
+                });
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::vc1902;
+
+    #[test]
+    fn presets_validate() {
+        let c = Cluster::vc1902_pool(4, 8).unwrap();
+        assert_eq!(c.n_devices(), 4);
+        assert_eq!(c.total_tiles(), 32);
+    }
+
+    #[test]
+    fn empty_pool_rejected() {
+        assert_eq!(Cluster::vc1902_pool(0, 8).unwrap_err(), ClusterError::Empty);
+    }
+
+    #[test]
+    fn tile_budget_checked_per_device() {
+        let e = Cluster::vc1902_pool(2, 401).unwrap_err();
+        assert!(matches!(e, ClusterError::TooManyTiles { device: 0, .. }), "{e}");
+        assert!(Cluster::vc1902_pool(2, 400).is_ok());
+        assert!(matches!(
+            Cluster::vc1902_pool(2, 0),
+            Err(ClusterError::TooManyTiles { .. })
+        ));
+    }
+
+    #[test]
+    fn topology_size_mismatch_rejected() {
+        let mut c = Cluster::vc1902_pool(3, 4).unwrap();
+        c.topology = Topology::Ring(2);
+        assert_eq!(
+            c.validate().unwrap_err(),
+            ClusterError::TopologySize { topology: 2, devices: 3 }
+        );
+    }
+
+    #[test]
+    fn heterogeneous_pool_allowed() {
+        let c = Cluster {
+            devices: vec![
+                DeviceSpec { arch: vc1902(), tiles: 4 },
+                DeviceSpec { arch: vc1902(), tiles: 16 },
+            ],
+            topology: Topology::FullyConnected(2),
+            fabric: FabricSpec::cxl_like(),
+        };
+        c.validate().unwrap();
+        assert_eq!(c.total_tiles(), 20);
+    }
+
+    #[test]
+    fn errors_display() {
+        let e = ClusterError::TooManyTiles { device: 1, requested: 500, available: 400 };
+        assert!(e.to_string().contains("device 1"));
+        assert!(ClusterError::Empty.to_string().contains("at least one"));
+    }
+}

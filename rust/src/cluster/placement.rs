@@ -1,0 +1,167 @@
+//! Shard-to-device assignment: a 2-D device grid with capacity-weighted
+//! row/column bands.
+//!
+//! The sharded GEMM partitions C into an `rows × cols` grid of tiles;
+//! device `(i, j)` owns C-tile `(i, j)`, the A row-band `i` and the B
+//! column-band `j`. Band sizes are proportional to the aggregate AIE tile
+//! count of the devices in that grid row/column, so a heterogeneous pool
+//! (say a 4-tile and a 16-tile device) receives work in proportion to its
+//! compute — the device-level analogue of loop-L4's round-robin balance.
+
+use super::{Cluster, ClusterError, DeviceId};
+
+// The splitting arithmetic is shared with the tensor-parallel dl layers
+// and the serving backends, so it lives one level down in `util`.
+pub use crate::util::split::{offsets, partition};
+
+/// A 2-D assignment of C shards to devices for one `(m, n)` problem.
+#[derive(Debug, Clone)]
+pub struct GridPlacement {
+    pub rows: usize,
+    pub cols: usize,
+    /// Device at each grid cell, row-major (`rows × cols` entries).
+    pub devices: Vec<DeviceId>,
+    /// Heights of the m-bands (one per grid row, sums to m).
+    pub row_bands: Vec<usize>,
+    /// Widths of the n-bands (one per grid column, sums to n).
+    pub col_bands: Vec<usize>,
+}
+
+impl GridPlacement {
+    /// Place the pool on an explicit `rows × cols` grid (must tile the
+    /// pool exactly; devices are assigned in id order, row-major).
+    pub fn grid(
+        cluster: &Cluster,
+        rows: usize,
+        cols: usize,
+        m: usize,
+        n: usize,
+    ) -> Result<GridPlacement, ClusterError> {
+        cluster.validate()?;
+        let nd = cluster.n_devices();
+        if rows == 0 || cols == 0 || rows * cols != nd {
+            return Err(ClusterError::BadGrid { rows, cols, devices: nd });
+        }
+        let devices: Vec<DeviceId> = (0..nd).collect();
+        let tiles = |d: DeviceId| cluster.devices[d].tiles;
+        let row_weights: Vec<usize> = (0..rows)
+            .map(|i| (0..cols).map(|j| tiles(devices[i * cols + j])).sum())
+            .collect();
+        let col_weights: Vec<usize> = (0..cols)
+            .map(|j| (0..rows).map(|i| tiles(devices[i * cols + j])).sum())
+            .collect();
+        Ok(GridPlacement {
+            rows,
+            cols,
+            devices,
+            row_bands: partition(m, &row_weights),
+            col_bands: partition(n, &col_weights),
+        })
+    }
+
+    /// Near-square grid for the pool, oriented so the larger matrix
+    /// dimension is split more ways.
+    pub fn auto(cluster: &Cluster, m: usize, n: usize) -> Result<GridPlacement, ClusterError> {
+        cluster.validate()?;
+        let nd = cluster.n_devices();
+        let mut small = 1;
+        for r in 1..=nd {
+            if r * r > nd {
+                break;
+            }
+            if nd % r == 0 {
+                small = r;
+            }
+        }
+        let large = nd / small;
+        let (rows, cols) = if m >= n { (large, small) } else { (small, large) };
+        GridPlacement::grid(cluster, rows, cols, m, n)
+    }
+
+    pub fn n_cells(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    pub fn device_at(&self, i: usize, j: usize) -> DeviceId {
+        self.devices[i * self.cols + j]
+    }
+
+    /// Devices of grid row `i`, in column order.
+    pub fn row_group(&self, i: usize) -> Vec<DeviceId> {
+        (0..self.cols).map(|j| self.device_at(i, j)).collect()
+    }
+
+    /// Devices of grid column `j`, in row order.
+    pub fn col_group(&self, j: usize) -> Vec<DeviceId> {
+        (0..self.rows).map(|i| self.device_at(i, j)).collect()
+    }
+
+    pub fn row_offsets(&self) -> Vec<usize> {
+        offsets(&self.row_bands)
+    }
+
+    pub fn col_offsets(&self) -> Vec<usize> {
+        offsets(&self.col_bands)
+    }
+
+    /// Check this placement was built for an `(m, n)` problem.
+    pub fn check_shape(&self, m: usize, n: usize) -> Result<(), ClusterError> {
+        let bm: usize = self.row_bands.iter().sum();
+        let bn: usize = self.col_bands.iter().sum();
+        if bm != m || bn != n {
+            return Err(ClusterError::ShapeMismatch(format!(
+                "placement covers ({bm}, {bn}), problem is ({m}, {n})"
+            )));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::vc1902;
+    use crate::cluster::{DeviceSpec, FabricSpec, Topology};
+
+    #[test]
+    fn auto_grid_orientation_follows_shape() {
+        let c = crate::cluster::Cluster::vc1902_pool(2, 4).unwrap();
+        let tall = GridPlacement::auto(&c, 512, 64).unwrap();
+        assert_eq!((tall.rows, tall.cols), (2, 1), "split the larger m");
+        let wide = GridPlacement::auto(&c, 64, 512).unwrap();
+        assert_eq!((wide.rows, wide.cols), (1, 2), "split the larger n");
+        let c4 = crate::cluster::Cluster::vc1902_pool(4, 4).unwrap();
+        let sq = GridPlacement::auto(&c4, 256, 256).unwrap();
+        assert_eq!((sq.rows, sq.cols), (2, 2));
+    }
+
+    #[test]
+    fn heterogeneous_bands_track_tile_counts() {
+        let c = crate::cluster::Cluster {
+            devices: vec![
+                DeviceSpec { arch: vc1902(), tiles: 12 },
+                DeviceSpec { arch: vc1902(), tiles: 4 },
+            ],
+            topology: Topology::Ring(2),
+            fabric: FabricSpec::pcie_like(),
+        };
+        let p = GridPlacement::grid(&c, 2, 1, 128, 64).unwrap();
+        assert_eq!(p.row_bands, vec![96, 32], "3:1 tile ratio → 3:1 rows");
+        assert_eq!(p.col_bands, vec![64]);
+        assert_eq!(p.row_offsets(), vec![0, 96]);
+    }
+
+    #[test]
+    fn bad_grid_rejected() {
+        let c = crate::cluster::Cluster::vc1902_pool(4, 4).unwrap();
+        assert!(matches!(
+            GridPlacement::grid(&c, 3, 1, 64, 64),
+            Err(ClusterError::BadGrid { .. })
+        ));
+        let p = GridPlacement::grid(&c, 2, 2, 64, 64).unwrap();
+        assert!(p.check_shape(64, 64).is_ok());
+        assert!(p.check_shape(65, 64).is_err());
+        assert_eq!(p.row_group(0), vec![0, 1]);
+        assert_eq!(p.col_group(1), vec![1, 3]);
+    }
+}

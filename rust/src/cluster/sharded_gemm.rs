@@ -1,0 +1,642 @@
+//! SUMMA-style 2-D partitioned GEMM across the device pool.
+//!
+//! C is tiled on the placement grid; device `(i, j)` accumulates
+//! `C_ij += Σ_p A_ip · B_pj` over k-chunks of `kb` columns/rows. At each
+//! step the chunk's owner column broadcasts its A row-bands along the
+//! grid rows and the owner row broadcasts its B column-bands along the
+//! grid columns; every device then runs the chunk product **locally with
+//! the unmodified single-device engine** ([`crate::gemm::ParallelGemm`]),
+//! so the full hierarchy is shards-across-devices × L4-across-tiles.
+//!
+//! ## Schedule model
+//!
+//! Per step: `comm_s` (A broadcasts, then B broadcasts — grid rows and
+//! columns proceed concurrently, so each takes its worst group) and
+//! `compute_s` (the slowest device's local schedule — bulk-synchronous,
+//! like the lockstep L4 rounds one level down). Step `s+1`'s panels
+//! prefetch during step `s`'s compute, exactly the Br-prefetch idiom of
+//! the tile-level schedule, so the exposed communication is
+//!
+//! ```text
+//! exposed = comm_0 + Σ_{s≥1} max(0, comm_s − compute_{s−1})
+//! total   = Σ_s compute_s + exposed   (+ scatter/gather if counted)
+//! ```
+//!
+//! The initial distribution of the owned A/B shards and the final C
+//! gather are tracked separately and excluded from `total` by default —
+//! the same policy as the paper's packing exclusion (§4.5): in the
+//! serving deployment the weights are device-resident, and for large
+//! problems the one-time distribution amortises away.
+//!
+//! Numerics are exact: shard products run u8·u8→i32 and i32 accumulation
+//! is associative, so the sharded result is bit-identical to the
+//! single-device engine (asserted in `tests/cluster_integration.rs`).
+
+use super::collectives::Collectives;
+use super::fabric::Fabric;
+use super::placement::GridPlacement;
+use super::{Cluster, ClusterError, DeviceId};
+use crate::gemm::microkernel::{MR, NR};
+use crate::gemm::{Ccp, GemmConfig, MatI32, MatU8, ParallelGemm};
+use crate::sim::CycleBreakdown;
+
+/// Configuration of a sharded GEMM run.
+#[derive(Debug, Clone)]
+pub struct ClusterGemmConfig {
+    /// Cache configuration parameters applied on every device.
+    pub ccp: Ccp,
+    /// Account packing cycles inside each device (paper default: no).
+    pub count_packing: bool,
+    /// Steady-state Ar streaming on each device.
+    pub steady_stream: bool,
+    /// SUMMA k-chunk; `0` means a single step over the whole k.
+    pub kb: usize,
+    /// Include the initial A/B distribution and the final C gather in
+    /// `total` (excluded by default; see the module docs).
+    pub count_scatter_gather: bool,
+}
+
+impl ClusterGemmConfig {
+    /// The paper's Table-2 configuration, lifted to the cluster.
+    pub fn paper_table2() -> ClusterGemmConfig {
+        ClusterGemmConfig {
+            ccp: Ccp { mc: 256, nc: 256, kc: 2048 },
+            count_packing: false,
+            steady_stream: true,
+            kb: 0,
+            count_scatter_gather: false,
+        }
+    }
+
+    /// A run with explicit CCPs (tests and small problems).
+    pub fn with_ccp(ccp: Ccp) -> ClusterGemmConfig {
+        ClusterGemmConfig { ccp, ..ClusterGemmConfig::paper_table2() }
+    }
+}
+
+/// Per-device execution statistics.
+#[derive(Debug, Clone, Default)]
+pub struct DeviceStats {
+    pub device: DeviceId,
+    pub tiles: usize,
+    pub macs: u64,
+    pub kernels: u64,
+    /// Local schedule cycles summed over this device's SUMMA steps.
+    pub compute_cycles: u64,
+    /// Bytes received / sent in the per-step shard broadcasts.
+    pub rx_bytes: u64,
+    pub tx_bytes: u64,
+}
+
+/// Cluster-level cycle accounting.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct ClusterBreakdown {
+    /// Critical-path compute: Σ over steps of the slowest device.
+    pub compute: u64,
+    /// Total communication category time (all steps, before overlap).
+    pub comm: u64,
+    /// Communication left exposed after prefetch overlap.
+    pub exposed_comm: u64,
+    /// Initial A/B distribution + final C gather (leader egress/ingress).
+    pub scatter_gather: u64,
+    /// Wall-clock cycles of the cluster schedule.
+    pub total: u64,
+    /// Summed per-device category breakdown (the tile-level view).
+    pub local: CycleBreakdown,
+}
+
+impl ClusterBreakdown {
+    /// Aggregate throughput over the wall clock.
+    pub fn macs_per_cycle(&self, macs: u64) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            macs as f64 / self.total as f64
+        }
+    }
+}
+
+/// The sharded-GEMM driver bound to a cluster.
+pub struct ClusterGemm<'a> {
+    cluster: &'a Cluster,
+}
+
+impl<'a> ClusterGemm<'a> {
+    pub fn new(cluster: &'a Cluster) -> ClusterGemm<'a> {
+        ClusterGemm { cluster }
+    }
+
+    /// C += A·B, 2-D sharded over `placement`. Exact numerics + schedule.
+    pub fn run(
+        &self,
+        cfg: &ClusterGemmConfig,
+        placement: &GridPlacement,
+        a: &MatU8,
+        b: &MatU8,
+        c: &mut MatI32,
+    ) -> Result<(ClusterBreakdown, Vec<DeviceStats>), ClusterError> {
+        self.check(cfg, placement, a.rows, b.cols, a.cols, b.rows, c.rows, c.cols)?;
+        let k = a.cols;
+        let (rows, cols) = (placement.rows, placement.cols);
+        let row_off = placement.row_offsets();
+        let col_off = placement.col_offsets();
+
+        let mut shards: Vec<MatI32> = (0..rows * cols)
+            .map(|cell| {
+                MatI32::zeros(placement.row_bands[cell / cols], placement.col_bands[cell % cols])
+            })
+            .collect();
+
+        let coll = Collectives::new(self.cluster);
+        let mut stats = self.fresh_stats();
+        let mut acct = StepAccounts::new(self.cluster.n_devices());
+        let mut pc = 0;
+        let mut step = 0;
+        while pc < k || (k == 0 && step == 0) {
+            let kb_eff = effective_kb(cfg.kb, k, pc);
+            self.account_step_comm(&coll, placement, kb_eff, step, &mut stats, &mut acct)?;
+
+            let mut step_max = 0u64;
+            for i in 0..rows {
+                for j in 0..cols {
+                    let dev = placement.device_at(i, j);
+                    let dspec = &self.cluster.devices[dev];
+                    let cfg_local = local_cfg(cfg, dspec.tiles);
+                    let a_shard = a.submatrix(row_off[i], pc, placement.row_bands[i], kb_eff);
+                    let b_shard = b.submatrix(pc, col_off[j], kb_eff, placement.col_bands[j]);
+                    let engine = ParallelGemm::new(&dspec.arch);
+                    let (cy, tstats) = engine
+                        .run(&cfg_local, &a_shard, &b_shard, &mut shards[i * cols + j])
+                        .map_err(|e| ClusterError::LocalGemm(e.to_string()))?;
+                    step_max = step_max.max(cy.total);
+                    acct.local += cy;
+                    let s = &mut stats[dev];
+                    s.compute_cycles += cy.total;
+                    for t in &tstats {
+                        s.macs += t.macs;
+                        s.kernels += t.kernels;
+                    }
+                }
+            }
+            acct.compute_steps.push(step_max);
+            pc += kb_eff;
+            step += 1;
+            if k == 0 {
+                break;
+            }
+        }
+
+        for i in 0..rows {
+            for j in 0..cols {
+                c.add_block(row_off[i], col_off[j], &shards[i * cols + j]);
+            }
+        }
+        let breakdown = self.finish(cfg, placement, acct)?;
+        Ok((breakdown, stats))
+    }
+
+    /// Like [`ClusterGemm::run`] with an automatic near-square placement.
+    pub fn run_auto(
+        &self,
+        cfg: &ClusterGemmConfig,
+        a: &MatU8,
+        b: &MatU8,
+        c: &mut MatI32,
+    ) -> Result<(ClusterBreakdown, Vec<DeviceStats>), ClusterError> {
+        let placement = GridPlacement::auto(self.cluster, a.rows, b.cols)?;
+        self.run(cfg, &placement, a, b, c)
+    }
+
+    /// Schedule-only evaluation (no numerics) for an `(m, n, k)` problem —
+    /// what the benches and capacity tables sweep. Produces exactly the
+    /// cycle accounting of [`ClusterGemm::run`] (asserted in tests).
+    pub fn schedule(
+        &self,
+        cfg: &ClusterGemmConfig,
+        placement: &GridPlacement,
+        m: usize,
+        n: usize,
+        k: usize,
+    ) -> Result<ClusterBreakdown, ClusterError> {
+        self.check(cfg, placement, m, n, k, k, m, n)?;
+        let (rows, cols) = (placement.rows, placement.cols);
+        let coll = Collectives::new(self.cluster);
+        let mut stats = self.fresh_stats();
+        let mut acct = StepAccounts::new(self.cluster.n_devices());
+        let mut pc = 0;
+        let mut step = 0;
+        while pc < k || (k == 0 && step == 0) {
+            let kb_eff = effective_kb(cfg.kb, k, pc);
+            self.account_step_comm(&coll, placement, kb_eff, step, &mut stats, &mut acct)?;
+            let mut step_max = 0u64;
+            for i in 0..rows {
+                for j in 0..cols {
+                    let dev = placement.device_at(i, j);
+                    let dspec = &self.cluster.devices[dev];
+                    let cfg_local = local_cfg(cfg, dspec.tiles);
+                    let cy = shard_schedule(
+                        &dspec.arch,
+                        &cfg_local,
+                        placement.row_bands[i],
+                        placement.col_bands[j],
+                        kb_eff,
+                    );
+                    step_max = step_max.max(cy.total);
+                    acct.local += cy;
+                    stats[dev].compute_cycles += cy.total;
+                }
+            }
+            acct.compute_steps.push(step_max);
+            pc += kb_eff;
+            step += 1;
+            if k == 0 {
+                break;
+            }
+        }
+        self.finish(cfg, placement, acct)
+    }
+
+    /// Schedule with an automatic placement; returns it for reporting.
+    pub fn schedule_auto(
+        &self,
+        cfg: &ClusterGemmConfig,
+        m: usize,
+        n: usize,
+        k: usize,
+    ) -> Result<(ClusterBreakdown, GridPlacement), ClusterError> {
+        let placement = GridPlacement::auto(self.cluster, m, n)?;
+        let bd = self.schedule(cfg, &placement, m, n, k)?;
+        Ok((bd, placement))
+    }
+
+    // ------------------------------------------------------------ internals
+
+    #[allow(clippy::too_many_arguments)]
+    fn check(
+        &self,
+        cfg: &ClusterGemmConfig,
+        placement: &GridPlacement,
+        m: usize,
+        n: usize,
+        k: usize,
+        b_rows: usize,
+        c_rows: usize,
+        c_cols: usize,
+    ) -> Result<(), ClusterError> {
+        self.cluster.validate()?;
+        if k != b_rows {
+            return Err(ClusterError::ShapeMismatch(format!(
+                "inner dimensions differ: {k} vs {b_rows}"
+            )));
+        }
+        if (c_rows, c_cols) != (m, n) {
+            return Err(ClusterError::ShapeMismatch(format!(
+                "output is {c_rows}x{c_cols}, product is {m}x{n}"
+            )));
+        }
+        placement.check_shape(m, n)?;
+        if placement.rows * placement.cols != self.cluster.n_devices() {
+            return Err(ClusterError::BadGrid {
+                rows: placement.rows,
+                cols: placement.cols,
+                devices: self.cluster.n_devices(),
+            });
+        }
+        for &d in &placement.devices {
+            if d >= self.cluster.n_devices() {
+                return Err(ClusterError::DeviceOutOfRange {
+                    device: d,
+                    n_devices: self.cluster.n_devices(),
+                });
+            }
+        }
+        for (i, dspec) in self.cluster.devices.iter().enumerate() {
+            cfg.ccp
+                .check(&dspec.arch, 1)
+                .map_err(|e| ClusterError::LocalGemm(format!("device {i}: {e}")))?;
+        }
+        Ok(())
+    }
+
+    fn fresh_stats(&self) -> Vec<DeviceStats> {
+        self.cluster
+            .devices
+            .iter()
+            .enumerate()
+            .map(|(d, spec)| DeviceStats { device: d, tiles: spec.tiles, ..Default::default() })
+            .collect()
+    }
+
+    /// Communication of one SUMMA step: the owner column broadcasts A
+    /// row-bands along grid rows, the owner row broadcasts B column-bands
+    /// along grid columns. Rows (and columns) proceed concurrently, so
+    /// each phase costs its worst group; the two phases serialise.
+    fn account_step_comm(
+        &self,
+        coll: &Collectives<'_>,
+        placement: &GridPlacement,
+        kb_eff: usize,
+        step: usize,
+        stats: &mut [DeviceStats],
+        acct: &mut StepAccounts,
+    ) -> Result<(), ClusterError> {
+        let mut comm_a = 0u64;
+        for i in 0..placement.rows {
+            let group = placement.row_group(i);
+            let root = group[step % group.len()];
+            let bytes = (placement.row_bands[i] * kb_eff) as u64;
+            comm_a = comm_a.max(coll.broadcast_cycles(bytes, root, &group)?);
+            for &d in &group {
+                if d == root {
+                    stats[d].tx_bytes += bytes * (group.len() as u64 - 1);
+                    acct.owned_a[d] += bytes;
+                } else {
+                    stats[d].rx_bytes += bytes;
+                }
+            }
+        }
+        let mut comm_b = 0u64;
+        for j in 0..placement.cols {
+            let group = placement.col_group(j);
+            let root = group[step % group.len()];
+            let bytes = (kb_eff * placement.col_bands[j]) as u64;
+            comm_b = comm_b.max(coll.broadcast_cycles(bytes, root, &group)?);
+            for &d in &group {
+                if d == root {
+                    stats[d].tx_bytes += bytes * (group.len() as u64 - 1);
+                    acct.owned_b[d] += bytes;
+                } else {
+                    stats[d].rx_bytes += bytes;
+                }
+            }
+        }
+        acct.comm_steps.push(comm_a + comm_b);
+        Ok(())
+    }
+
+    /// Fold the per-step accounts into the wall-clock model.
+    fn finish(
+        &self,
+        cfg: &ClusterGemmConfig,
+        placement: &GridPlacement,
+        acct: StepAccounts,
+    ) -> Result<ClusterBreakdown, ClusterError> {
+        let compute: u64 = acct.compute_steps.iter().sum();
+        let comm: u64 = acct.comm_steps.iter().sum();
+        let mut exposed = *acct.comm_steps.first().unwrap_or(&0);
+        for s in 1..acct.comm_steps.len() {
+            exposed += acct.comm_steps[s].saturating_sub(acct.compute_steps[s - 1]);
+        }
+
+        // One-time distribution + gather through the leader (cell (0,0)).
+        let fabric = Fabric::new(&self.cluster.fabric);
+        let leader = placement.device_at(0, 0);
+        let mut scatter_gather = 0u64;
+        for i in 0..placement.rows {
+            for j in 0..placement.cols {
+                let dev = placement.device_at(i, j);
+                if dev == leader {
+                    continue;
+                }
+                let hops = self.cluster.topology.hops(leader, dev)?;
+                let owned = acct.owned_a[dev] + acct.owned_b[dev];
+                let c_bytes = (placement.row_bands[i] * placement.col_bands[j] * 4) as u64;
+                scatter_gather += fabric.transfer_cycles(owned, hops);
+                scatter_gather += fabric.transfer_cycles(c_bytes, hops);
+            }
+        }
+        let mut total = compute + exposed;
+        if cfg.count_scatter_gather {
+            total += scatter_gather;
+        }
+        Ok(ClusterBreakdown {
+            compute,
+            comm,
+            exposed_comm: exposed,
+            scatter_gather,
+            total,
+            local: acct.local,
+        })
+    }
+}
+
+/// Per-run accumulation shared by `run` and `schedule`.
+struct StepAccounts {
+    compute_steps: Vec<u64>,
+    comm_steps: Vec<u64>,
+    local: CycleBreakdown,
+    /// Bytes of A / B each device owns at step roots (indexed by id).
+    owned_a: Vec<u64>,
+    owned_b: Vec<u64>,
+}
+
+impl StepAccounts {
+    fn new(n_devices: usize) -> StepAccounts {
+        StepAccounts {
+            compute_steps: Vec::new(),
+            comm_steps: Vec::new(),
+            local: CycleBreakdown::zero(),
+            owned_a: vec![0; n_devices],
+            owned_b: vec![0; n_devices],
+        }
+    }
+}
+
+fn effective_kb(kb: usize, k: usize, pc: usize) -> usize {
+    if kb == 0 {
+        k - pc
+    } else {
+        kb.min(k - pc)
+    }
+}
+
+fn local_cfg(cfg: &ClusterGemmConfig, tiles: usize) -> GemmConfig {
+    GemmConfig {
+        ccp: cfg.ccp,
+        tiles,
+        count_packing: cfg.count_packing,
+        steady_stream: cfg.steady_stream,
+    }
+}
+
+/// Cycle accounting of one device's `(m, n, k)` shard, mirroring the
+/// loop structure of [`ParallelGemm::run`] exactly but without numerics
+/// (`ClusterGemm::schedule` must equal `ClusterGemm::run`'s cycles; a
+/// test pins that equality).
+fn shard_schedule(
+    arch: &crate::arch::VersalArch,
+    cfg: &GemmConfig,
+    m: usize,
+    n: usize,
+    k: usize,
+) -> CycleBreakdown {
+    let engine = ParallelGemm::new(arch);
+    let Ccp { mc, nc, kc } = cfg.ccp;
+    let mut cycles = CycleBreakdown::zero();
+    let mut jc = 0;
+    while jc < n {
+        let nc_eff = nc.min(n - jc);
+        let mut pc = 0;
+        while pc < k {
+            let kc_eff = kc.min(k - pc);
+            let panels_b = nc_eff.div_ceil(NR);
+            if cfg.count_packing {
+                let bc_bytes = (panels_b * kc_eff * NR) as u64;
+                cycles.packing += (bc_bytes as f64 / arch.ic.pack_bytes_per_cycle) as u64;
+            }
+            let mut ic = 0;
+            while ic < m {
+                let mc_eff = mc.min(m - ic);
+                let panels_a = mc_eff.div_ceil(MR);
+                if cfg.count_packing {
+                    let ac_bytes = (panels_a * MR * kc_eff) as u64;
+                    cycles.packing += (ac_bytes as f64 / arch.ic.pack_bytes_per_cycle) as u64;
+                }
+                cycles += engine.block_schedule(
+                    cfg,
+                    panels_b,
+                    panels_a,
+                    kc_eff,
+                    (kc_eff * NR) as u64,
+                );
+                ic += mc_eff;
+            }
+            pc += kc_eff;
+        }
+        jc += nc_eff;
+    }
+    if cfg.count_packing {
+        cycles.total += cycles.packing;
+    }
+    cycles
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Cluster;
+    use crate::gemm::baseline::naive_gemm;
+    use crate::util::Pcg32;
+
+    fn small_cfg() -> ClusterGemmConfig {
+        ClusterGemmConfig::with_ccp(Ccp { mc: 16, nc: 16, kc: 32 })
+    }
+
+    #[test]
+    fn two_device_product_matches_naive() {
+        let cluster = Cluster::vc1902_pool(2, 3).unwrap();
+        let g = ClusterGemm::new(&cluster);
+        let mut rng = Pcg32::new(0xC1);
+        let a = MatU8::random(24, 40, &mut rng);
+        let b = MatU8::random(40, 20, &mut rng);
+        let mut want = MatI32::zeros(24, 20);
+        naive_gemm(&a, &b, &mut want);
+        let mut c = MatI32::zeros(24, 20);
+        let (bd, stats) = g.run_auto(&small_cfg(), &a, &b, &mut c).unwrap();
+        assert_eq!(c.max_abs_diff(&want), 0);
+        assert!(bd.total > 0 && bd.compute > 0);
+        assert_eq!(stats.len(), 2);
+        assert!(stats.iter().all(|s| s.macs > 0), "both devices worked");
+    }
+
+    #[test]
+    fn accumulates_into_nonzero_c() {
+        let cluster = Cluster::vc1902_pool(2, 2).unwrap();
+        let g = ClusterGemm::new(&cluster);
+        let a = MatU8::from_vec(1, 1, vec![2]);
+        let b = MatU8::from_vec(1, 2, vec![3, 4]);
+        let mut c = MatI32::from_vec(1, 2, vec![10, 100]);
+        g.run_auto(&small_cfg(), &a, &b, &mut c).unwrap();
+        assert_eq!(c.data, vec![16, 108]);
+    }
+
+    #[test]
+    fn summa_chunking_is_exact_and_reduces_exposure() {
+        let cluster = Cluster::vc1902_pool(4, 2).unwrap();
+        let g = ClusterGemm::new(&cluster);
+        let mut rng = Pcg32::new(0xC2);
+        let a = MatU8::random(32, 96, &mut rng);
+        let b = MatU8::random(96, 32, &mut rng);
+        let mut want = MatI32::zeros(32, 32);
+        naive_gemm(&a, &b, &mut want);
+        let mut chunked_cfg = small_cfg();
+        chunked_cfg.kb = 32;
+        let mut c = MatI32::zeros(32, 32);
+        let (bd, _) = g.run_auto(&chunked_cfg, &a, &b, &mut c).unwrap();
+        assert_eq!(c.max_abs_diff(&want), 0, "3-step SUMMA stays exact");
+        assert!(bd.exposed_comm <= bd.comm, "prefetch hides later steps");
+        assert!(bd.comm > 0);
+    }
+
+    #[test]
+    fn schedule_equals_run_cycles() {
+        let cluster = Cluster::vc1902_pool(4, 3).unwrap();
+        let g = ClusterGemm::new(&cluster);
+        let mut rng = Pcg32::new(0xC3);
+        let (m, n, k) = (40, 36, 64);
+        let a = MatU8::random(m, k, &mut rng);
+        let b = MatU8::random(k, n, &mut rng);
+        for count_packing in [false, true] {
+            let mut cfg = small_cfg();
+            cfg.count_packing = count_packing;
+            cfg.kb = 24;
+            let placement = GridPlacement::auto(&cluster, m, n).unwrap();
+            let mut c = MatI32::zeros(m, n);
+            let (ran, _) = g.run(&cfg, &placement, &a, &b, &mut c).unwrap();
+            let planned = g.schedule(&cfg, &placement, m, n, k).unwrap();
+            assert_eq!(ran, planned, "count_packing={count_packing}");
+        }
+    }
+
+    #[test]
+    fn single_device_cluster_has_no_comm() {
+        let cluster = Cluster::vc1902_pool(1, 4).unwrap();
+        let g = ClusterGemm::new(&cluster);
+        let bd = g.schedule_auto(&small_cfg(), 32, 32, 64).unwrap().0;
+        assert_eq!(bd.comm, 0);
+        assert_eq!(bd.exposed_comm, 0);
+        assert_eq!(bd.scatter_gather, 0);
+        assert_eq!(bd.total, bd.compute);
+    }
+
+    #[test]
+    fn shape_and_config_errors_are_deterministic() {
+        let cluster = Cluster::vc1902_pool(2, 2).unwrap();
+        let g = ClusterGemm::new(&cluster);
+        let a = MatU8::zeros(8, 8);
+        let b = MatU8::zeros(9, 8);
+        let mut c = MatI32::zeros(8, 8);
+        assert!(matches!(
+            g.run_auto(&small_cfg(), &a, &b, &mut c),
+            Err(ClusterError::ShapeMismatch(_))
+        ));
+        let b2 = MatU8::zeros(8, 8);
+        let mut c_bad = MatI32::zeros(8, 9);
+        assert!(matches!(
+            g.run_auto(&small_cfg(), &a, &b2, &mut c_bad),
+            Err(ClusterError::ShapeMismatch(_))
+        ));
+        // Infeasible CCP surfaces as a local-GEMM error, not a panic.
+        let bad = ClusterGemmConfig::with_ccp(Ccp { mc: 16, nc: 16, kc: 1 << 20 });
+        let mut c_ok = MatI32::zeros(8, 8);
+        assert!(matches!(
+            g.run_auto(&bad, &a, &b2, &mut c_ok),
+            Err(ClusterError::LocalGemm(_))
+        ));
+    }
+
+    #[test]
+    fn stats_track_broadcast_traffic() {
+        let cluster = Cluster::vc1902_pool(4, 2).unwrap();
+        let g = ClusterGemm::new(&cluster);
+        let mut rng = Pcg32::new(0xC4);
+        let a = MatU8::random(16, 32, &mut rng);
+        let b = MatU8::random(32, 16, &mut rng);
+        let mut c = MatI32::zeros(16, 16);
+        let (_, stats) = g.run_auto(&small_cfg(), &a, &b, &mut c).unwrap();
+        let tx: u64 = stats.iter().map(|s| s.tx_bytes).sum();
+        let rx: u64 = stats.iter().map(|s| s.rx_bytes).sum();
+        assert_eq!(tx, rx, "every sent byte is received once");
+        assert!(tx > 0);
+    }
+}

@@ -1,0 +1,143 @@
+//! Inter-device topologies: who is wired to whom.
+//!
+//! The on-chip analogue is [`crate::sim::noc`] (the AXI-stream switch
+//! grid inside one device); this module plays the same role one level up,
+//! between devices. Presets mirror `arch::presets`: a [`Topology::Ring`]
+//! (the common multi-accelerator board layout, e.g. NVLink-style rings),
+//! a [`Topology::Mesh2D`] (pod/rack fabrics), and
+//! [`Topology::FullyConnected`] (a single switch).
+//!
+//! A topology only answers *hop counts*; all cycle costs live in
+//! [`super::fabric`], so a fabric preset can be swapped without touching
+//! the wiring model.
+
+use super::ClusterError;
+
+/// Index of a device in the pool (`0..n_devices`).
+pub type DeviceId = usize;
+
+/// Inter-device wiring presets.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Topology {
+    /// `n` devices on a bidirectional ring; hop count is the shorter arc.
+    Ring(usize),
+    /// `rows × cols` grid, device ids row-major; Manhattan hop counts.
+    Mesh2D { rows: usize, cols: usize },
+    /// Every pair one hop apart (a single crossbar/switch).
+    FullyConnected(usize),
+}
+
+impl Topology {
+    pub fn n_devices(&self) -> usize {
+        match *self {
+            Topology::Ring(n) => n,
+            Topology::Mesh2D { rows, cols } => rows * cols,
+            Topology::FullyConnected(n) => n,
+        }
+    }
+
+    pub fn name(&self) -> String {
+        match *self {
+            Topology::Ring(n) => format!("ring({n})"),
+            Topology::Mesh2D { rows, cols } => format!("mesh({rows}x{cols})"),
+            Topology::FullyConnected(n) => format!("full({n})"),
+        }
+    }
+
+    pub fn validate(&self) -> Result<(), ClusterError> {
+        match *self {
+            Topology::Ring(n) | Topology::FullyConnected(n) if n == 0 => {
+                Err(ClusterError::BadTopology("zero devices".into()))
+            }
+            Topology::Mesh2D { rows, cols } if rows == 0 || cols == 0 => Err(
+                ClusterError::BadTopology(format!("degenerate mesh {rows}x{cols}")),
+            ),
+            _ => Ok(()),
+        }
+    }
+
+    fn check(&self, d: DeviceId) -> Result<(), ClusterError> {
+        if d >= self.n_devices() {
+            return Err(ClusterError::DeviceOutOfRange {
+                device: d,
+                n_devices: self.n_devices(),
+            });
+        }
+        Ok(())
+    }
+
+    /// Link hops on the shortest path from `a` to `b` (0 when `a == b`).
+    pub fn hops(&self, a: DeviceId, b: DeviceId) -> Result<u64, ClusterError> {
+        self.check(a)?;
+        self.check(b)?;
+        if a == b {
+            return Ok(0);
+        }
+        Ok(match *self {
+            Topology::Ring(n) => {
+                let d = a.abs_diff(b);
+                d.min(n - d) as u64
+            }
+            Topology::Mesh2D { cols, .. } => {
+                let (ra, ca) = (a / cols, a % cols);
+                let (rb, cb) = (b / cols, b % cols);
+                (ra.abs_diff(rb) + ca.abs_diff(cb)) as u64
+            }
+            Topology::FullyConnected(_) => 1,
+        })
+    }
+
+    /// Worst-case hop count over all device pairs.
+    pub fn diameter(&self) -> u64 {
+        match *self {
+            Topology::Ring(n) => (n / 2) as u64,
+            Topology::Mesh2D { rows, cols } => (rows - 1 + cols - 1) as u64,
+            Topology::FullyConnected(n) => u64::from(n > 1),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_hops_take_shorter_arc() {
+        let t = Topology::Ring(8);
+        assert_eq!(t.hops(0, 1).unwrap(), 1);
+        assert_eq!(t.hops(0, 4).unwrap(), 4);
+        assert_eq!(t.hops(0, 7).unwrap(), 1);
+        assert_eq!(t.hops(2, 2).unwrap(), 0);
+        assert_eq!(t.diameter(), 4);
+    }
+
+    #[test]
+    fn mesh_hops_are_manhattan() {
+        let t = Topology::Mesh2D { rows: 2, cols: 4 };
+        assert_eq!(t.n_devices(), 8);
+        // id 1 = (0,1); id 6 = (1,2)
+        assert_eq!(t.hops(1, 6).unwrap(), 2);
+        assert_eq!(t.hops(0, 7).unwrap(), 4);
+        assert_eq!(t.diameter(), 4);
+    }
+
+    #[test]
+    fn fully_connected_is_one_hop() {
+        let t = Topology::FullyConnected(5);
+        assert_eq!(t.hops(0, 4).unwrap(), 1);
+        assert_eq!(t.hops(3, 3).unwrap(), 0);
+        assert_eq!(t.diameter(), 1);
+    }
+
+    #[test]
+    fn out_of_range_and_degenerate_rejected() {
+        let t = Topology::Ring(3);
+        assert!(matches!(
+            t.hops(0, 3),
+            Err(ClusterError::DeviceOutOfRange { device: 3, n_devices: 3 })
+        ));
+        assert!(Topology::Ring(0).validate().is_err());
+        assert!(Topology::Mesh2D { rows: 0, cols: 3 }.validate().is_err());
+        assert!(Topology::Mesh2D { rows: 2, cols: 2 }.validate().is_ok());
+    }
+}

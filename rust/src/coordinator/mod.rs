@@ -24,5 +24,5 @@ pub use batcher::{BatcherConfig, DynamicBatcher};
 pub use metrics::{LatencyStats, Metrics};
 pub use request::{InferenceRequest, InferenceResponse, RequestId};
 pub use server::{Coordinator, CoordinatorConfig, SubmitError};
-pub use worker::{Backend, EchoBackend, RustGemmBackend};
+pub use worker::{Backend, ClusterGemmBackend, EchoBackend, RustGemmBackend};
 pub use workload::{ArrivalGen, ArrivalProcess, FeatureGen};

@@ -18,17 +18,27 @@ use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
-use thiserror::Error;
 
-#[derive(Debug, Error)]
+#[derive(Debug)]
 pub enum SubmitError {
-    #[error("queue full (backpressure): retry later")]
     Backpressure,
-    #[error("coordinator is shut down")]
     ShutDown,
-    #[error("feature vector has {got} elements, expected {want}")]
     BadShape { got: usize, want: usize },
 }
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::Backpressure => write!(f, "queue full (backpressure): retry later"),
+            SubmitError::ShutDown => write!(f, "coordinator is shut down"),
+            SubmitError::BadShape { got, want } => {
+                write!(f, "feature vector has {got} elements, expected {want}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
 
 #[derive(Debug, Clone)]
 pub struct CoordinatorConfig {

@@ -1,8 +1,9 @@
 //! Worker backends: where a batch's MACs actually run.
 
 use crate::arch::VersalArch;
-use crate::dl::{Mlp, MlpSpec};
-use crate::gemm::{GemmConfig, ParallelGemm};
+use crate::cluster::{Cluster, ClusterError, Collectives, DeviceId};
+use crate::dl::{Mlp, MlpSpec, TpMode};
+use crate::gemm::{Ccp, GemmConfig, ParallelGemm};
 use anyhow::Result;
 
 /// A batch-execution backend. `infer_batch` maps a `batch × in_dim`
@@ -94,6 +95,109 @@ impl Backend for RustGemmBackend {
     }
 }
 
+/// Cluster serving backend: the quantised MLP runs **tensor-parallel**
+/// across a pool of simulated devices — layer weights are column/row
+/// sharded (Megatron alternation, see [`crate::dl::TpMode`]), each shard
+/// executes on its device's parallel-L4 engine, and the layer boundary
+/// pays the matching collective (all-gather after column shards,
+/// all-reduce after row shards) on the cluster fabric.
+///
+/// The reported cycle count per batch is the cluster critical path:
+/// `Σ_layers (slowest shard's schedule + collective)`.
+pub struct ClusterGemmBackend {
+    cluster: Cluster,
+    mlp: Mlp,
+    ccp: Ccp,
+}
+
+impl ClusterGemmBackend {
+    pub fn new(
+        cluster: Cluster,
+        spec: MlpSpec,
+        seed: u64,
+    ) -> Result<ClusterGemmBackend, ClusterError> {
+        Self::with_mlp(cluster, Mlp::random(spec, seed))
+    }
+
+    /// Serve a specific (e.g. trained + quantised) model on the cluster.
+    pub fn with_mlp(cluster: Cluster, mlp: Mlp) -> Result<ClusterGemmBackend, ClusterError> {
+        cluster.validate()?;
+        // Serving shapes are small; a modest CCP avoids degenerate blocks
+        // (same choice as the single-device backend).
+        Ok(ClusterGemmBackend { cluster, mlp, ccp: Ccp { mc: 256, nc: 256, kc: 1024 } })
+    }
+
+    pub fn mlp(&self) -> &Mlp {
+        &self.mlp
+    }
+
+    pub fn cluster(&self) -> &Cluster {
+        &self.cluster
+    }
+}
+
+impl Backend for ClusterGemmBackend {
+    fn in_dim(&self) -> usize {
+        self.mlp.spec.dims[0]
+    }
+    fn n_classes(&self) -> usize {
+        *self.mlp.spec.dims.last().unwrap()
+    }
+
+    fn infer_batch(&mut self, batch: usize, x: &[f32]) -> Result<(Vec<f32>, u64)> {
+        let weights: Vec<usize> = self.cluster.devices.iter().map(|d| d.tiles).collect();
+        let n_layers = self.mlp.spec.n_layers();
+        let mut layer_compute = vec![0u64; n_layers];
+        let mut layer_mode: Vec<Option<TpMode>> = vec![None; n_layers];
+        // Widest output shard the forward actually produced per layer
+        // (for column sharding, `c` is the shard; the all-gather below
+        // must price the sharding that ran, not a re-derived one).
+        let mut layer_band = vec![0usize; n_layers];
+        let mut err: Option<anyhow::Error> = None;
+        let logits = self.mlp.forward_tp(batch, x, &weights, |l, mode, s, a, b, c| {
+            layer_mode[l] = Some(mode);
+            layer_band[l] = layer_band[l].max(c.cols);
+            let dspec = &self.cluster.devices[s];
+            let cfg = GemmConfig {
+                ccp: self.ccp,
+                tiles: dspec.tiles,
+                count_packing: false,
+                steady_stream: true,
+            };
+            let engine = ParallelGemm::new(&dspec.arch);
+            match engine.run(&cfg, a, b, c) {
+                // Shards run concurrently: the layer costs its slowest.
+                Ok((cy, _)) => layer_compute[l] = layer_compute[l].max(cy.total),
+                Err(e) => err = Some(e),
+            }
+        });
+        if let Some(e) = err {
+            return Err(e);
+        }
+
+        // Layer-boundary collectives on the cluster fabric.
+        let coll = Collectives::new(&self.cluster);
+        let group: Vec<DeviceId> = (0..self.cluster.n_devices()).collect();
+        let mut cycles = 0u64;
+        for (l, &compute) in layer_compute.iter().enumerate() {
+            let out_dim = self.mlp.spec.dims[l + 1];
+            // The mode the forward actually used (recorded by the closure),
+            // so the collective cost cannot desync from the sharding.
+            let mode = layer_mode[l].expect("every layer runs at least one shard");
+            let collective = match mode {
+                TpMode::Column => {
+                    coll.all_gather_cycles((batch * layer_band[l] * 4) as u64, &group)?
+                }
+                TpMode::Row => {
+                    coll.all_reduce_cycles((batch * out_dim * 4) as u64, &group)?
+                }
+            };
+            cycles += compute + collective;
+        }
+        Ok((logits, cycles))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -121,5 +225,31 @@ mod tests {
         let want = Mlp::random(spec, 99).forward(2, &x, naive_gemm);
         assert_eq!(logits, want);
         assert!(cycles > 0, "simulated cycles attached");
+    }
+
+    #[test]
+    fn cluster_backend_matches_single_device_logits_exactly() {
+        let spec = MlpSpec { dims: vec![16, 12, 4] };
+        let cluster = Cluster::vc1902_pool(2, 4).unwrap();
+        let mut tp = ClusterGemmBackend::new(cluster, spec.clone(), 99).unwrap();
+        let mut single = RustGemmBackend::new(vc1902(), spec, 99, 4);
+        let x: Vec<f32> = (0..3 * 16).map(|i| (i as f32 * 0.17).cos()).collect();
+        let (tp_logits, tp_cycles) = tp.infer_batch(3, &x).unwrap();
+        let (logits, _) = single.infer_batch(3, &x).unwrap();
+        assert_eq!(tp_logits, logits, "tensor-parallel serving is bit-exact");
+        assert!(tp_cycles > 0);
+        assert_eq!(tp.in_dim(), 16);
+        assert_eq!(tp.n_classes(), 4);
+    }
+
+    #[test]
+    fn cluster_backend_rejects_invalid_pool() {
+        let bad = Cluster::vc1902_pool(2, 4).unwrap();
+        let mut bad = bad;
+        bad.devices[1].tiles = 0;
+        assert!(matches!(
+            ClusterGemmBackend::new(bad, MlpSpec { dims: vec![4, 2] }, 1),
+            Err(ClusterError::TooManyTiles { .. })
+        ));
     }
 }

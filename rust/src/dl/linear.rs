@@ -1,6 +1,7 @@
 //! Quantised fully-connected layer.
 
 use crate::gemm::{MatI32, MatU8};
+use crate::util::split::partition;
 use crate::quant::{quantized_linear, QTensor};
 
 /// Activation function applied after the affine transform.
@@ -8,6 +9,21 @@ use crate::quant::{quantized_linear, QTensor};
 pub enum Activation {
     None,
     Relu,
+}
+
+/// How a linear layer's weight matrix is sharded for tensor parallelism.
+///
+/// Megatron-style: `Column` splits the output features (each shard
+/// computes a slice of the output columns, gathered afterwards); `Row`
+/// splits the input features (each shard computes a partial product over
+/// its k-slice, summed afterwards — an all-reduce on the cluster).
+/// Both are **bit-exact** against the unsharded layer: the integer GEMM
+/// is exact and i32 accumulation is associative, so the dequantisation
+/// sees an identical accumulator either way.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TpMode {
+    Column,
+    Row,
 }
 
 /// A linear layer `y = act(x·W + b)` with u8-quantised weights.
@@ -88,6 +104,55 @@ impl QuantLinear {
         (batch, self.in_dim, self.out_dim) // (m, k, n)
     }
 
+    /// Tensor-parallel forward: the layer's single GEMM is split into
+    /// `weights.len()` shards (sizes proportional to `weights`, e.g. the
+    /// per-device AIE tile counts) and each shard's integer MACs run in
+    /// the supplied closure with its shard index — on a cluster, shard
+    /// `s` runs on device `s`. Quantisation, zero-point correction, bias
+    /// and activation are identical to [`QuantLinear::forward`], so the
+    /// result is bit-exact against the unsharded path.
+    pub fn forward_tp(
+        &self,
+        batch: usize,
+        x: &[f32],
+        mode: TpMode,
+        weights: &[usize],
+        mut gemm_shard: impl FnMut(usize, &MatU8, &MatU8, &mut MatI32),
+    ) -> Vec<f32> {
+        self.forward(batch, x, |qa, qb, qc| match mode {
+            TpMode::Column => {
+                // Split the n = out_dim columns of W; shard outputs land
+                // in disjoint column bands of the shared accumulator.
+                let bands = partition(qb.cols, weights);
+                let mut c0 = 0;
+                for (s, &band) in bands.iter().enumerate() {
+                    if band > 0 {
+                        let b_s = qb.submatrix(0, c0, qb.rows, band);
+                        let mut c_s = MatI32::zeros(qa.rows, band);
+                        gemm_shard(s, qa, &b_s, &mut c_s);
+                        qc.add_block(0, c0, &c_s);
+                    }
+                    c0 += band;
+                }
+            }
+            TpMode::Row => {
+                // Split the k = in_dim dimension; every shard accumulates
+                // its partial product into the shared accumulator (the
+                // cluster realises this sum as an all-reduce).
+                let bands = partition(qb.rows, weights);
+                let mut k0 = 0;
+                for (s, &band) in bands.iter().enumerate() {
+                    if band > 0 {
+                        let a_s = qa.submatrix(0, k0, qa.rows, band);
+                        let b_s = qb.submatrix(k0, 0, band, qb.cols);
+                        gemm_shard(s, &a_s, &b_s, qc);
+                    }
+                    k0 += band;
+                }
+            }
+        })
+    }
+
     /// f32 reference forward (no quantisation) for error analysis.
     pub fn forward_f32(&self, batch: usize, x: &[f32]) -> Vec<f32> {
         let w = self.weight.to_f32();
@@ -145,5 +210,45 @@ mod tests {
         let mut rng = Pcg32::new(52);
         let layer = QuantLinear::random(4, 4, Activation::None, &mut rng);
         layer.forward(2, &[0.0; 4], naive_gemm);
+    }
+
+    #[test]
+    fn tensor_parallel_modes_are_bit_exact() {
+        let mut rng = Pcg32::new(53);
+        let layer = QuantLinear::random(33, 21, Activation::Relu, &mut rng);
+        let batch = 5;
+        let x: Vec<f32> = (0..batch * 33).map(|_| rng.f64() as f32 * 2.0 - 1.0).collect();
+        let want = layer.forward(batch, &x, naive_gemm);
+        for mode in [TpMode::Column, TpMode::Row] {
+            for weights in [vec![1, 1], vec![3, 1, 2], vec![1; 7]] {
+                let mut shards_run = 0;
+                let got = layer.forward_tp(batch, &x, mode, &weights, |_s, a, b, c| {
+                    shards_run += 1;
+                    naive_gemm(a, b, c);
+                });
+                assert_eq!(got, want, "{mode:?} {weights:?} must be bit-exact");
+                assert!(shards_run >= 2, "{mode:?} actually sharded");
+            }
+        }
+    }
+
+    #[test]
+    fn tensor_parallel_shard_shapes() {
+        // Column splits n; Row splits k — verify via the closure's view.
+        let mut rng = Pcg32::new(54);
+        let layer = QuantLinear::random(16, 12, Activation::None, &mut rng);
+        let x = vec![0.25f32; 2 * 16];
+        let mut col_ns = Vec::new();
+        layer.forward_tp(2, &x, TpMode::Column, &[1, 2], |_s, _a, b, c| {
+            col_ns.push(b.cols);
+            naive_gemm(_a, b, c);
+        });
+        assert_eq!(col_ns, vec![4, 8]);
+        let mut row_ks = Vec::new();
+        layer.forward_tp(2, &x, TpMode::Row, &[1, 3], |_s, a, _b, c| {
+            row_ks.push(a.cols);
+            naive_gemm(a, _b, c);
+        });
+        assert_eq!(row_ks, vec![4, 12]);
     }
 }

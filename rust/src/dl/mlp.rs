@@ -1,7 +1,7 @@
 //! Quantised multi-layer perceptron — the model behind the end-to-end
 //! serving example and the `bench_e2e_serving` harness.
 
-use super::linear::{Activation, QuantLinear};
+use super::linear::{Activation, QuantLinear, TpMode};
 use crate::gemm::{MatI32, MatU8};
 use crate::util::Pcg32;
 
@@ -68,6 +68,29 @@ impl Mlp {
         let mut h = x.to_vec();
         for layer in &self.layers {
             h = layer.forward(batch, &h, &mut gemm);
+        }
+        h
+    }
+
+    /// Tensor-parallel forward in the Megatron pattern: layers alternate
+    /// [`TpMode::Column`] / [`TpMode::Row`], with shard sizes
+    /// proportional to `weights` (e.g. per-device AIE tile counts). The
+    /// closure receives `(layer, mode, shard, a, b, c)` and runs that
+    /// shard's integer MACs — on a cluster, shard `s` on device `s`.
+    /// Bit-exact against [`Mlp::forward`] by construction.
+    pub fn forward_tp(
+        &self,
+        batch: usize,
+        x: &[f32],
+        weights: &[usize],
+        mut gemm_shard: impl FnMut(usize, TpMode, usize, &MatU8, &MatU8, &mut MatI32),
+    ) -> Vec<f32> {
+        let mut h = x.to_vec();
+        for (l, layer) in self.layers.iter().enumerate() {
+            let mode = if l % 2 == 0 { TpMode::Column } else { TpMode::Row };
+            h = layer.forward_tp(batch, &h, mode, weights, |s, a, b, c| {
+                gemm_shard(l, mode, s, a, b, c)
+            });
         }
         h
     }
@@ -150,5 +173,28 @@ mod tests {
         let mlp = Mlp::random(MlpSpec { dims: vec![2, 3] }, 1);
         let p = mlp.predict(2, &[0.1, 0.9, 0.3, 5.0, -1.0, 2.0]);
         assert_eq!(p, vec![1, 0]);
+    }
+
+    #[test]
+    fn tensor_parallel_forward_is_bit_exact_and_alternates_modes() {
+        use crate::dl::linear::TpMode;
+        let mlp = Mlp::random(MlpSpec { dims: vec![24, 20, 16, 6] }, 9);
+        let mut rng = Pcg32::new(90);
+        let batch = 4;
+        let x: Vec<f32> = (0..batch * 24).map(|_| rng.f64() as f32 * 2.0 - 1.0).collect();
+        let want = mlp.forward(batch, &x, naive_gemm);
+        let mut seen: Vec<(usize, TpMode)> = Vec::new();
+        let got = mlp.forward_tp(batch, &x, &[2, 1, 1], |l, mode, _s, a, b, c| {
+            if seen.last() != Some(&(l, mode)) {
+                seen.push((l, mode));
+            }
+            naive_gemm(a, b, c);
+        });
+        assert_eq!(got, want, "TP forward must match the unsharded path exactly");
+        assert_eq!(
+            seen,
+            vec![(0, TpMode::Column), (1, TpMode::Row), (2, TpMode::Column)],
+            "Megatron alternation"
+        );
     }
 }

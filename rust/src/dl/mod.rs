@@ -6,7 +6,9 @@
 //! computational kernel \[GEMM\]". This module realises that claim:
 //!
 //! - [`linear`] — a quantised fully-connected layer whose MACs run
-//!   through any u8 GEMM implementation (blocked/parallel/PJRT).
+//!   through any u8 GEMM implementation (blocked/parallel/PJRT), with
+//!   Megatron-style column/row tensor-parallel sharding for the
+//!   multi-device cluster ([`crate::cluster`]).
 //! - [`conv`]   — im2col lowering: convolution as GEMM, the classical
 //!   Chellapilla et al. construction the paper cites (\[10\]).
 //! - [`mlp`]    — a quantised multi-layer perceptron: the model served by
@@ -22,6 +24,6 @@ pub mod traces;
 pub mod train;
 
 pub use attention::{AttentionSpec, EncoderBlock};
-pub use linear::QuantLinear;
+pub use linear::{QuantLinear, TpMode};
 pub use mlp::{Mlp, MlpSpec};
 pub use traces::{model_trace, GemmShape, ModelKind};

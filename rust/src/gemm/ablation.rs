@@ -31,7 +31,6 @@ use super::microkernel::{MR, NR};
 use super::GemmConfig;
 use crate::arch::VersalArch;
 use crate::sim::{AieTileModel, Gmio, KernelMode, Stream};
-use thiserror::Error;
 
 /// Which GEMM loop the tiles split.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -60,13 +59,24 @@ impl LoopChoice {
     }
 }
 
-#[derive(Debug, Error, PartialEq, Eq)]
+#[derive(Debug, PartialEq, Eq)]
 pub enum AblationError {
-    #[error("parallelising {0:?} races on concurrent updates of C (§4.4)")]
     RaceCondition(LoopChoice),
-    #[error("infeasible split: {0}")]
     Infeasible(String),
 }
+
+impl std::fmt::Display for AblationError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AblationError::RaceCondition(c) => {
+                write!(f, "parallelising {c:?} races on concurrent updates of C (§4.4)")
+            }
+            AblationError::Infeasible(why) => write!(f, "infeasible split: {why}"),
+        }
+    }
+}
+
+impl std::error::Error for AblationError {}
 
 /// Cycle estimate for one strategy on the fixed single-block problem
 /// (m, n, k) = (mc, nc, kc).

@@ -237,4 +237,44 @@ mod tests {
         let a = MatU8::zeros(4, 4);
         pack_a(&a, 2, 0, 4, 4);
     }
+
+    /// Edge shapes (m/k/n not multiples of MR/NR/kc): the full
+    /// pack → compute → unpack pipeline must be bit-exact against the
+    /// naive baseline through both the sequential and parallel drivers —
+    /// the zero-padded panels must contribute nothing.
+    #[test]
+    fn edge_shapes_pack_compute_unpack_bit_exact_vs_baseline() {
+        use crate::arch::vc1902;
+        use crate::gemm::baseline::naive_gemm;
+        use crate::gemm::blocked::BlockedGemm;
+        use crate::gemm::parallel::ParallelGemm;
+        use crate::gemm::{Ccp, GemmConfig, MatI32};
+
+        let arch = vc1902();
+        let blocked = BlockedGemm::new(&arch);
+        let parallel = ParallelGemm::new(&arch);
+        let mut rng = Pcg32::new(0xED6E);
+        // Deliberately awkward: below one panel, just over a panel,
+        // prime-sized, and kc-straddling shapes.
+        let shapes =
+            [(13, 17, 9), (7, 64, 5), (41, 23, 31), (9, 15, 8), (3, 3, 3), (19, 100, 25)];
+        for &(m, k, n) in &shapes {
+            let a = MatU8::random(m, k, &mut rng);
+            let b = MatU8::random(k, n, &mut rng);
+            let mut want = MatI32::zeros(m, n);
+            naive_gemm(&a, &b, &mut want);
+            let cfg = GemmConfig {
+                ccp: Ccp { mc: 24, nc: 24, kc: 40 },
+                tiles: 3,
+                count_packing: false,
+                steady_stream: true,
+            };
+            let mut c1 = MatI32::zeros(m, n);
+            blocked.run(&cfg, &a, &b, &mut c1).unwrap();
+            assert_eq!(c1.max_abs_diff(&want), 0, "blocked ({m},{k},{n})");
+            let mut c2 = MatI32::zeros(m, n);
+            parallel.run(&cfg, &a, &b, &mut c2).unwrap();
+            assert_eq!(c2.max_abs_diff(&want), 0, "parallel ({m},{k},{n})");
+        }
+    }
 }

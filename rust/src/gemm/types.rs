@@ -42,6 +42,21 @@ impl MatU8 {
     pub fn bytes(&self) -> u64 {
         (self.rows * self.cols) as u64
     }
+
+    /// Copy out the `rows × cols` sub-block starting at `(r0, c0)` — the
+    /// shard extraction primitive of the cluster layer.
+    pub fn submatrix(&self, r0: usize, c0: usize, rows: usize, cols: usize) -> MatU8 {
+        assert!(
+            r0 + rows <= self.rows && c0 + cols <= self.cols,
+            "submatrix out of range"
+        );
+        let mut data = Vec::with_capacity(rows * cols);
+        for r in 0..rows {
+            let base = (r0 + r) * self.cols + c0;
+            data.extend_from_slice(&self.data[base..base + cols]);
+        }
+        MatU8 { rows, cols, data }
+    }
 }
 
 /// Row-major i32 matrix (GEMM accumulator / output operand).
@@ -88,6 +103,36 @@ impl MatI32 {
     pub fn bytes(&self) -> u64 {
         (self.rows * self.cols * 4) as u64
     }
+
+    /// Copy out the `rows × cols` sub-block starting at `(r0, c0)`.
+    pub fn submatrix(&self, r0: usize, c0: usize, rows: usize, cols: usize) -> MatI32 {
+        assert!(
+            r0 + rows <= self.rows && c0 + cols <= self.cols,
+            "submatrix out of range"
+        );
+        let mut data = Vec::with_capacity(rows * cols);
+        for r in 0..rows {
+            let base = (r0 + r) * self.cols + c0;
+            data.extend_from_slice(&self.data[base..base + cols]);
+        }
+        MatI32 { rows, cols, data }
+    }
+
+    /// Accumulate `block` into this matrix at offset `(r0, c0)` — the
+    /// shard write-back primitive of the cluster layer.
+    pub fn add_block(&mut self, r0: usize, c0: usize, block: &MatI32) {
+        assert!(
+            r0 + block.rows <= self.rows && c0 + block.cols <= self.cols,
+            "block out of range"
+        );
+        for r in 0..block.rows {
+            let dst = &mut self.data[(r0 + r) * self.cols + c0..][..block.cols];
+            let src = &block.data[r * block.cols..(r + 1) * block.cols];
+            for (d, &s) in dst.iter_mut().zip(src) {
+                *d += s;
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -125,5 +170,31 @@ mod tests {
     #[should_panic(expected = "data length mismatch")]
     fn from_vec_checks_len() {
         MatU8::from_vec(2, 2, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn submatrix_extracts_block() {
+        let m = MatU8::from_vec(3, 4, (0..12).collect());
+        let s = m.submatrix(1, 1, 2, 2);
+        assert_eq!(s.data, vec![5, 6, 9, 10]);
+        // Degenerate shards (the cluster layer allows zero-sized bands).
+        assert_eq!(m.submatrix(0, 0, 0, 4).data.len(), 0);
+        assert_eq!(m.submatrix(0, 0, 3, 0).data.len(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "submatrix out of range")]
+    fn submatrix_bounds_checked() {
+        MatU8::zeros(2, 2).submatrix(1, 0, 2, 1);
+    }
+
+    #[test]
+    fn add_block_accumulates_at_offset() {
+        let mut c = MatI32::from_vec(2, 3, vec![1, 1, 1, 1, 1, 1]);
+        let b = MatI32::from_vec(1, 2, vec![10, 20]);
+        c.add_block(1, 1, &b);
+        assert_eq!(c.data, vec![1, 1, 1, 1, 11, 21]);
+        let s = c.submatrix(1, 1, 1, 2);
+        assert_eq!(s.data, vec![11, 21]);
     }
 }

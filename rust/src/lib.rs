@@ -28,6 +28,13 @@
 //!                 routines, the 8×8 UINT8 micro-kernel, the sequential
 //!                 blocked driver and the parallel loop-L4 design, plus
 //!                 ablation drivers that parallelise L1/L3/L5 instead.
+//! - [`cluster`] — the multi-device layer: a pool of simulated Versal
+//!                 devices behind a cycle-costed inter-device fabric
+//!                 (ring / mesh / fully-connected), device collectives
+//!                 (broadcast, scatter, all-gather, reduce-scatter), and
+//!                 a SUMMA-style 2-D sharded GEMM where every shard runs
+//!                 the single-device parallel engine locally — the
+//!                 paper's memory/compute hierarchy extended one level up.
 //! - [`quant`]   — mixed-precision support: affine quantisation,
 //!                 requantisation, per-tensor scales.
 //! - [`dl`]      — deep-learning substrate: linear layers, im2col
@@ -45,6 +52,7 @@
 //!                 mini bench harness, INI config parser.
 
 pub mod arch;
+pub mod cluster;
 pub mod coordinator;
 pub mod dl;
 pub mod gemm;
@@ -55,6 +63,7 @@ pub mod sim;
 pub mod util;
 
 pub use arch::VersalArch;
+pub use cluster::{Cluster, ClusterGemm};
 pub use gemm::{Ccp, GemmConfig, ParallelGemm};
 
 mod app;

@@ -1,6 +1,9 @@
 //! Reporting: paper-shaped table emitters shared by the CLI and benches.
 
 use crate::arch::VersalArch;
+use crate::cluster::{
+    Cluster, ClusterError, ClusterGemm, ClusterGemmConfig, FabricSpec, Topology,
+};
 use crate::gemm::parallel::{ParallelGemm, Table2Row};
 use crate::sim::{AieTileModel, KernelMode};
 use crate::util::tabulate::{Align, Table};
@@ -97,6 +100,95 @@ pub fn table3(arch: &VersalArch) -> Table {
     t
 }
 
+/// The paper's fixed Table-2 problem, reused by the cluster scaling
+/// table: (m, n, k) = (256, 256, 2048) ⇒ 2^27 MACs.
+pub const TABLE2_PROBLEM: (usize, usize, usize) = (256, 256, 2048);
+
+/// One row of the device-level scaling table (Table 2, one level up).
+#[derive(Debug, Clone)]
+pub struct ClusterScalingRow {
+    pub devices: usize,
+    pub tiles_per_device: usize,
+    pub grid: (usize, usize),
+    pub compute_cycles: u64,
+    pub exposed_comm_cycles: u64,
+    pub total_cycles: u64,
+    /// Aggregate MACs/cycle over the cluster wall clock.
+    pub aggregate_macs_per_cycle: f64,
+    /// Per-device throughput as a fraction of the 1-device figure.
+    pub per_device_efficiency: f64,
+}
+
+/// Compute the Table-2-style strong-scaling rows for homogeneous ring
+/// clusters of the given sizes on the paper's reference problem.
+pub fn cluster_scaling_rows(
+    arch: &VersalArch,
+    tiles_per_device: usize,
+    device_counts: &[usize],
+    fabric: &FabricSpec,
+) -> Result<Vec<ClusterScalingRow>, ClusterError> {
+    let (m, n, k) = TABLE2_PROBLEM;
+    let macs = (m * n * k) as u64;
+    let cfg = ClusterGemmConfig::paper_table2();
+    let row = |d: usize| -> Result<ClusterScalingRow, ClusterError> {
+        let cluster = Cluster::homogeneous(
+            d,
+            arch.clone(),
+            tiles_per_device,
+            Topology::Ring(d),
+            fabric.clone(),
+        )?;
+        let engine = ClusterGemm::new(&cluster);
+        let (bd, placement) = engine.schedule_auto(&cfg, m, n, k)?;
+        Ok(ClusterScalingRow {
+            devices: d,
+            tiles_per_device,
+            grid: (placement.rows, placement.cols),
+            compute_cycles: bd.compute,
+            exposed_comm_cycles: bd.exposed_comm,
+            total_cycles: bd.total,
+            aggregate_macs_per_cycle: bd.macs_per_cycle(macs),
+            per_device_efficiency: 0.0, // filled below
+        })
+    };
+    let base_row = row(1)?;
+    let base = base_row.aggregate_macs_per_cycle;
+    let mut rows = Vec::with_capacity(device_counts.len());
+    for &d in device_counts {
+        let mut r = if d == 1 { base_row.clone() } else { row(d)? };
+        r.per_device_efficiency = r.aggregate_macs_per_cycle / r.devices as f64 / base;
+        rows.push(r);
+    }
+    Ok(rows)
+}
+
+/// Render the cluster scaling rows as a printable table.
+pub fn cluster_table(rows: &[ClusterScalingRow]) -> Table {
+    let mut t = Table::new(&[
+        "#devices",
+        "grid",
+        "tiles/dev",
+        "Compute",
+        "Exposed comm",
+        "Total",
+        "Aggregate MACs/cyc",
+        "Eff/dev %",
+    ]);
+    for r in rows {
+        t.row(&[
+            r.devices.to_string(),
+            format!("{}x{}", r.grid.0, r.grid.1),
+            r.tiles_per_device.to_string(),
+            fmt_kcycles(r.compute_cycles),
+            fmt_kcycles(r.exposed_comm_cycles),
+            fmt_kcycles(r.total_cycles),
+            format!("{:.1}", r.aggregate_macs_per_cycle),
+            format!("{:.1}", r.per_device_efficiency * 100.0),
+        ]);
+    }
+    t
+}
+
 /// Save a table as CSV under `bench_results/<name>.csv` (directory
 /// created on demand) so bench runs leave machine-readable artifacts
 /// next to the printed output. Returns the written path.
@@ -134,6 +226,40 @@ mod tests {
     #[test]
     fn kcycles_format() {
         assert_eq!(fmt_kcycles(3_694_100), "3694.1e3");
+    }
+
+    #[test]
+    fn cluster_scaling_rows_meet_acceptance_shape() {
+        // The bench's acceptance criteria, pinned as a tier-1 test:
+        // aggregate MACs/cycle strictly increases 1 → 4 devices and the
+        // per-device efficiency stays ≥ 70% of the 1-device figure.
+        let rows = cluster_scaling_rows(
+            &vc1902(),
+            8,
+            &[1, 2, 4],
+            &FabricSpec::pcie_like(),
+        )
+        .unwrap();
+        assert_eq!(rows.len(), 3);
+        assert!((rows[0].per_device_efficiency - 1.0).abs() < 1e-9);
+        for w in rows.windows(2) {
+            assert!(
+                w[1].aggregate_macs_per_cycle > w[0].aggregate_macs_per_cycle,
+                "aggregate throughput must rise: {} → {}",
+                w[0].aggregate_macs_per_cycle,
+                w[1].aggregate_macs_per_cycle
+            );
+        }
+        for r in &rows {
+            assert!(
+                r.per_device_efficiency >= 0.70,
+                "devices={}: efficiency {:.2}",
+                r.devices,
+                r.per_device_efficiency
+            );
+        }
+        let t = cluster_table(&rows);
+        assert_eq!(t.n_rows(), 3);
     }
 
     #[test]

@@ -10,9 +10,16 @@
 //! because jax ≥ 0.5 emits 64-bit instruction ids that xla_extension
 //! 0.5.1 rejects; the text parser reassigns ids (see
 //! /opt/xla-example/README.md and DESIGN.md §3).
+//!
+//! The PJRT engine itself is gated behind the `pjrt` cargo feature: the
+//! `xla` crate needs network access and a libxla install, neither of
+//! which exists in the offline build environment. The artifact registry
+//! (pure filesystem) is always available.
 
 mod artifact;
+#[cfg(feature = "pjrt")]
 mod pjrt;
 
 pub use artifact::{artifacts_dir, ArtifactId, ArtifactRegistry};
+#[cfg(feature = "pjrt")]
 pub use pjrt::Engine;

@@ -10,17 +10,32 @@
 
 use crate::arch::MemLevel;
 use std::collections::BTreeMap;
-use thiserror::Error;
 
-#[derive(Debug, Error, PartialEq, Eq)]
+#[derive(Debug, PartialEq, Eq)]
 pub enum MemError {
-    #[error("{level:?}: allocation {name:?} of {requested} B exceeds free {free} B (capacity {capacity} B)")]
     OutOfMemory { level: MemLevel, name: String, requested: u64, free: u64, capacity: u64 },
-    #[error("{level:?}: duplicate allocation name {name:?}")]
     Duplicate { level: MemLevel, name: String },
-    #[error("{level:?}: no allocation named {name:?}")]
     NotFound { level: MemLevel, name: String },
 }
+
+impl std::fmt::Display for MemError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            MemError::OutOfMemory { level, name, requested, free, capacity } => write!(
+                f,
+                "{level:?}: allocation {name:?} of {requested} B exceeds free {free} B (capacity {capacity} B)"
+            ),
+            MemError::Duplicate { level, name } => {
+                write!(f, "{level:?}: duplicate allocation name {name:?}")
+            }
+            MemError::NotFound { level, name } => {
+                write!(f, "{level:?}: no allocation named {name:?}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for MemError {}
 
 /// A named-allocation pool for one memory level.
 #[derive(Debug, Clone)]

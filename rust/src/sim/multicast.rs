@@ -7,15 +7,25 @@
 //! property this model (and its tests) pin down.
 
 use crate::arch::VersalArch;
-use thiserror::Error;
 
-#[derive(Debug, Error, PartialEq, Eq)]
+#[derive(Debug, PartialEq, Eq)]
 pub enum MulticastError {
-    #[error("subscriber count {subscribers} exceeds AIE tiles {tiles}")]
     TooManySubscribers { subscribers: usize, tiles: usize },
-    #[error("multicast group must have at least one subscriber")]
     Empty,
 }
+
+impl std::fmt::Display for MulticastError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            MulticastError::TooManySubscribers { subscribers, tiles } => {
+                write!(f, "subscriber count {subscribers} exceeds AIE tiles {tiles}")
+            }
+            MulticastError::Empty => write!(f, "multicast group must have at least one subscriber"),
+        }
+    }
+}
+
+impl std::error::Error for MulticastError {}
 
 /// A multicast group from Ultra RAM to a set of AIE tiles.
 #[derive(Debug, Clone)]

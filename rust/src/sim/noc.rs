@@ -15,7 +15,6 @@
 //! serialisation on shared path segments).
 
 use crate::arch::VersalArch;
-use thiserror::Error;
 
 /// A tile coordinate in the AIE array: row 0 adjoins the PL interface.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -24,13 +23,26 @@ pub struct TileCoord {
     pub col: usize,
 }
 
-#[derive(Debug, Error, PartialEq, Eq)]
+#[derive(Debug, PartialEq, Eq)]
 pub enum NocError {
-    #[error("tile ({0}, {1}) outside the {2}x{3} array")]
     OutOfRange(usize, usize, usize, usize),
-    #[error("placement needs {needed} tiles but the array has {available}")]
     TooMany { needed: usize, available: usize },
 }
+
+impl std::fmt::Display for NocError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            NocError::OutOfRange(r, c, rows, cols) => {
+                write!(f, "tile ({r}, {c}) outside the {rows}x{cols} array")
+            }
+            NocError::TooMany { needed, available } => {
+                write!(f, "placement needs {needed} tiles but the array has {available}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for NocError {}
 
 /// The stream NoC of an AIE array.
 #[derive(Debug, Clone)]
@@ -167,6 +179,26 @@ mod tests {
         let n = noc();
         assert!(n.unicast_v64_cycles(TileCoord { row: 8, col: 0 }).is_err());
         assert!(n.unicast_v64_cycles(TileCoord { row: 0, col: 50 }).is_err());
+    }
+
+    #[test]
+    fn place_over_subscription_is_deterministic_error_not_panic() {
+        // 8×50 array = 400 tiles; anything beyond must surface as a
+        // typed, displayable error (no panic, no truncated placement).
+        let n = noc();
+        for over in [401usize, 1000, usize::MAX] {
+            match n.place(over) {
+                Err(NocError::TooMany { needed, available }) => {
+                    assert_eq!(needed, over);
+                    assert_eq!(available, 400);
+                }
+                other => panic!("place({over}) must fail with TooMany, got {other:?}"),
+            }
+        }
+        let msg = NocError::TooMany { needed: 401, available: 400 }.to_string();
+        assert!(msg.contains("401") && msg.contains("400"), "{msg}");
+        // The boundary itself still succeeds.
+        assert_eq!(n.place(400).unwrap().len(), 400);
     }
 
     #[test]

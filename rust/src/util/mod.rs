@@ -9,8 +9,10 @@ pub mod cli;
 pub mod ini;
 pub mod quickcheck;
 pub mod rng;
+pub mod split;
 pub mod stats;
 pub mod tabulate;
 
 pub use rng::Pcg32;
+pub use split::{offsets, partition};
 pub use stats::Summary;

@@ -1,0 +1,70 @@
+//! Proportional work splitting, shared by the tensor-parallel layers
+//! ([`crate::dl`]), the serving backends ([`crate::coordinator`]) and the
+//! cluster placement ([`crate::cluster::placement`]).
+
+/// Split `total` into `weights.len()` contiguous parts proportional to
+/// `weights` (largest-remainder rounding, deterministic index tie-break).
+/// Parts may be zero when `total < weights.len()`; the sum is always
+/// exactly `total`. All-zero weights are treated as uniform.
+pub fn partition(total: usize, weights: &[usize]) -> Vec<usize> {
+    assert!(!weights.is_empty(), "partition into zero parts");
+    let uniform = vec![1usize; weights.len()];
+    let w = if weights.iter().all(|&x| x == 0) { &uniform[..] } else { weights };
+    let wsum: usize = w.iter().sum();
+    let mut parts: Vec<usize> = w.iter().map(|&wi| total * wi / wsum).collect();
+    let assigned: usize = parts.iter().sum();
+    let mut rem = total - assigned;
+    // Hand out the remainder by descending fractional part, then index.
+    let mut order: Vec<(usize, usize)> =
+        w.iter().enumerate().map(|(i, &wi)| (total * wi % wsum, i)).collect();
+    order.sort_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
+    for &(_, i) in &order {
+        if rem == 0 {
+            break;
+        }
+        parts[i] += 1;
+        rem -= 1;
+    }
+    parts
+}
+
+/// Exclusive prefix sums of band sizes: the shard offsets.
+pub fn offsets(bands: &[usize]) -> Vec<usize> {
+    let mut out = Vec::with_capacity(bands.len());
+    let mut acc = 0;
+    for &b in bands {
+        out.push(acc);
+        acc += b;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn partition_is_exact_and_proportional() {
+        assert_eq!(partition(100, &[1, 1, 1, 1]), vec![25, 25, 25, 25]);
+        assert_eq!(partition(90, &[2, 1]), vec![60, 30]);
+        assert_eq!(partition(10, &[3, 1]).iter().sum::<usize>(), 10);
+        // Remainders are handed out deterministically.
+        assert_eq!(partition(7, &[1, 1, 1]), vec![3, 2, 2]);
+        // Degenerate: fewer units than parts → zero-size parts allowed.
+        assert_eq!(partition(1, &[1, 1, 1]).iter().sum::<usize>(), 1);
+        // All-zero weights fall back to uniform.
+        assert_eq!(partition(4, &[0, 0]), vec![2, 2]);
+    }
+
+    #[test]
+    fn offsets_are_prefix_sums() {
+        assert_eq!(offsets(&[3, 4, 5]), vec![0, 3, 7]);
+        assert_eq!(offsets(&[7]), vec![0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "partition into zero parts")]
+    fn empty_weights_panic() {
+        partition(5, &[]);
+    }
+}

@@ -1,0 +1,185 @@
+//! Minimal offline drop-in for the `anyhow` crate.
+//!
+//! The real `anyhow` is unavailable in this offline build environment, so
+//! this shim provides the (small) API surface the workspace actually
+//! uses: [`Error`], [`Result`], [`Context`], and the `anyhow!` / `bail!`
+//! / `ensure!` macros. Errors are string-backed with an ordered context
+//! chain; `{}` displays the outermost context (like anyhow), `{:#}`
+//! displays the whole chain outermost-first.
+//!
+//! Swapping in the real crate (delete the `path` key in the dependent's
+//! `Cargo.toml`) requires no code changes in the workspace.
+
+use std::fmt;
+
+/// A string-backed error with an ordered chain of context messages.
+///
+/// Deliberately does **not** implement `std::error::Error`, mirroring the
+/// real `anyhow::Error` — that is what makes the blanket
+/// `From<E: std::error::Error>` conversion below coherent.
+pub struct Error {
+    msg: String,
+    /// Context messages, innermost first (push order).
+    context: Vec<String>,
+}
+
+/// `anyhow::Result<T>`: a `Result` defaulting to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Build an error from anything displayable.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { msg: message.to_string(), context: Vec::new() }
+    }
+
+    /// Attach a higher-level context message (outermost-last).
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.context.push(context.to_string());
+        self
+    }
+
+    /// The root (innermost) message.
+    pub fn root_cause(&self) -> &str {
+        &self.msg
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() || self.context.is_empty() {
+            // `{:#}`: the whole chain, outermost context first.
+            for c in self.context.iter().rev() {
+                write!(f, "{c}: ")?;
+            }
+            write!(f, "{}", self.msg)
+        } else {
+            // `{}`: the outermost context only (anyhow's behaviour).
+            write!(f, "{}", self.context.last().unwrap())
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{self:#}")
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(e)
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to
+/// `Result` and `Option`, as in the real `anyhow`.
+pub trait Context<T>: Sized {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| Error::msg(e).context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| Error::msg(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or any displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:literal, $($arg:tt)+) => {
+        $crate::Error::msg(format!($fmt, $($arg)+))
+    };
+}
+
+/// Return early with an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)+) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)+))
+    };
+}
+
+/// Return early with an [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::Error::msg(concat!(
+                "condition failed: ",
+                stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($arg:tt)+) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!($($arg)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails(flag: bool) -> Result<u32> {
+        ensure!(flag, "flag was {}", flag);
+        Ok(7)
+    }
+
+    #[test]
+    fn ensure_and_bail_roundtrip() {
+        assert_eq!(fails(true).unwrap(), 7);
+        let e = fails(false).unwrap_err();
+        assert_eq!(e.to_string(), "flag was false");
+    }
+
+    #[test]
+    fn context_chain_display() {
+        let base: std::result::Result<(), String> = Err("root".to_string());
+        let e = base.context("mid").map_err(|e| e.context("outer")).unwrap_err();
+        assert_eq!(format!("{e}"), "outer");
+        assert_eq!(format!("{e:#}"), "outer: mid: root");
+        assert_eq!(e.root_cause(), "root");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("missing value").unwrap_err();
+        assert_eq!(e.to_string(), "missing value");
+        assert_eq!(Some(3).context("unused").unwrap(), 3);
+    }
+
+    #[test]
+    fn from_std_error_and_single_expr_anyhow() {
+        let io = std::io::Error::new(std::io::ErrorKind::Other, "disk on fire");
+        let e: Error = io.into();
+        assert!(e.to_string().contains("disk on fire"));
+        let s = String::from("plain message");
+        let e2 = anyhow!(s);
+        assert_eq!(e2.to_string(), "plain message");
+        let e3 = anyhow!("x = {}", 42);
+        assert_eq!(e3.to_string(), "x = 42");
+    }
+}
