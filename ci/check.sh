@@ -20,4 +20,13 @@ fi
 echo "==> bench_cluster_scaling --quick (smoke)"
 VERSAL_BENCH_FAST=1 cargo bench --bench bench_cluster_scaling -- --quick
 
+echo "==> precision conformance matrix (per-precision, so a failure names the precision)"
+for prec in u8 i8 i16 bf16; do
+    echo "    -- VERSAL_PRECISION=${prec}"
+    VERSAL_PRECISION="${prec}" cargo test -q --test precision_conformance
+done
+
+echo "==> bench_mixed_precision --quick (smoke)"
+VERSAL_BENCH_FAST=1 cargo bench --bench bench_mixed_precision -- --quick
+
 echo "CI checks passed."

@@ -8,7 +8,7 @@
 
 use versal_gemm::arch::vc1902;
 use versal_gemm::dl::linear::{Activation, QuantLinear};
-use versal_gemm::gemm::{GemmConfig, ParallelGemm};
+use versal_gemm::gemm::{GemmConfig, ParallelGemm, Precision, PrecisionPolicy};
 use versal_gemm::quant::QTensor;
 use versal_gemm::util::tabulate::{Align, Table};
 use versal_gemm::util::Pcg32;
@@ -69,7 +69,31 @@ fn main() -> anyhow::Result<()> {
     println!("{}", t.to_text());
     println!(
         "(absolute error grows ~√k with random data; relative error stays \
-         small — why u8 inference works, §1/§4.2)"
+         small — why u8 inference works, §1/§4.2)\n"
     );
+
+    // 3. The full §4.2 kernel suite on one layer: accuracy vs cycles per
+    //    precision, plus what the adaptive tuner would pick.
+    println!("one layer (k=512, n=128, batch 16) across the kernel suite:\n");
+    let layer = QuantLinear::random(512, 128, Activation::None, &mut rng);
+    let x: Vec<f32> = (0..16 * 512).map(|_| rng.f64() as f32 * 2.0 - 1.0).collect();
+    let want = layer.forward_f32(16, &x);
+    let mut t = Table::new(&["precision", "max |err|", "sim cycles"]).align(0, Align::Left);
+    for prec in Precision::ALL {
+        let (got, cycles) = layer.forward_prec(16, &x, prec, &arch, &cfg)?;
+        let err = got.iter().zip(&want).fold(0.0f32, |m, (g, w)| m.max((g - w).abs()));
+        t.row(&[prec.to_string(), format!("{err:.5}"), cycles.to_string()]);
+    }
+    println!("{}", t.to_text());
+    for budget in [0.5f64, 1e-2, 1e-5] {
+        let p = layer.resolve_precision(
+            &arch,
+            &cfg,
+            16,
+            PrecisionPolicy::Adaptive { max_rel_error: budget },
+        );
+        println!("  adaptive @ budget {budget:.0e} → {p}");
+    }
+    println!("(the tuner trades cycles for accuracy: u8 when the budget is loose, bf16 when tight)");
     Ok(())
 }

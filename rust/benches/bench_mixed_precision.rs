@@ -1,0 +1,134 @@
+//! Bench: the mixed-precision micro-kernel suite on the Table-2 problem.
+//!
+//! Evaluates all four precisions (u8, i8, i16, bf16) of the §4.2 kernel
+//! family on the paper's fixed problem (m, n, k) = (256, 256, 2048),
+//! each under its own feasible paper-shaped CCP, and prints a
+//! Table-2-style comparison (per-kernel and whole-problem MACs/cycle),
+//! plus a numerics spot-check of every precision against the golden
+//! reference and the tuner's adaptive selection across accuracy budgets.
+//!
+//! Acceptance gates (asserted, not just printed):
+//!  - throughput ordering u8 ≥ i16 ≥ bf16, exactly what the per-precision
+//!    cycle model predicts (128/32/16 MACs per vector op, 1-byte vs
+//!    2-byte Ar streams);
+//!  - integer precisions bit-exact vs the naive reference on an edge
+//!    shape; bf16 within the f32 forward-error bound;
+//!  - the adaptive tuner picks u8 at loose budgets and bf16 at tight
+//!    ones, deterministically.
+//!
+//! ```bash
+//! cargo bench --bench bench_mixed_precision            # full run
+//! cargo bench --bench bench_mixed_precision -- --quick # CI smoke
+//! ```
+
+use versal_gemm::arch::vc1902;
+use versal_gemm::gemm::baseline::naive_gemm_p;
+use versal_gemm::gemm::{
+    bf16_forward_error_bound, select_precision, Bf16, Ccp, Element, GemmConfig, Mat,
+    ParallelGemm, Precision,
+};
+use versal_gemm::report;
+use versal_gemm::util::Pcg32;
+
+fn numerics_spot_check<T: Element>(engine: &ParallelGemm<'_>, cfg: &GemmConfig) -> f64 {
+    let (m, k, n) = (21, 37, 13); // edge shape: nothing divides MR/NR/kc
+    let mut rng = Pcg32::new(0xBE7C);
+    let a = Mat::<T>::random(m, k, &mut rng);
+    let b = Mat::<T>::random(k, n, &mut rng);
+    let mut c = Mat::<T::Acc>::zeros(m, n);
+    let mut want = Mat::<T::Acc>::zeros(m, n);
+    engine.run_p::<T>(cfg, &a, &b, &mut c).expect("run_p");
+    naive_gemm_p::<T>(&a, &b, &mut want);
+    c.max_abs_diff_f64(&want)
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick")
+        || std::env::var("VERSAL_BENCH_FAST").as_deref() == Ok("1");
+    let arch = vc1902();
+    let tiles = 8;
+
+    // ---- numerics: every precision vs the golden reference ----------
+    println!("=== per-precision numerics (edge shape (21, 37, 13) vs golden reference) ===\n");
+    let engine = ParallelGemm::new(&arch);
+    let mut cfg = GemmConfig::paper_table2(4);
+    cfg.ccp = Ccp { mc: 16, nc: 16, kc: 32 };
+    let d_u8 = numerics_spot_check::<u8>(&engine, &cfg);
+    let d_i8 = numerics_spot_check::<i8>(&engine, &cfg);
+    let d_i16 = numerics_spot_check::<i16>(&engine, &cfg);
+    let d_bf16 = numerics_spot_check::<Bf16>(&engine, &cfg);
+    println!("  u8   max |Δ| = {d_u8}   {}", if d_u8 == 0.0 { "EXACT" } else { "MISMATCH" });
+    println!("  i8   max |Δ| = {d_i8}   {}", if d_i8 == 0.0 { "EXACT" } else { "MISMATCH" });
+    println!("  i16  max |Δ| = {d_i16}   {}", if d_i16 == 0.0 { "EXACT" } else { "MISMATCH" });
+    // bf16: |Δ| vs the *f32-association* reference is itself f32-rounding
+    // noise; the proven f64 bound lives in tests/precision_conformance.rs.
+    // Values are in [-1, 1], so Σ|a·b| ≤ k; both sides compute in f32,
+    // hence the two-sided factor.
+    let bf16_bound = 2.0 * bf16_forward_error_bound(37, 37.0);
+    println!("  bf16 max |Δ| = {d_bf16:.3e} (bound {bf16_bound:.3e})");
+    assert_eq!(d_u8, 0.0, "u8 must be bit-exact");
+    assert_eq!(d_i8, 0.0, "i8 must be bit-exact");
+    assert_eq!(d_i16, 0.0, "i16 must be bit-exact");
+    assert!(d_bf16 <= bf16_bound, "bf16 out of bound: {d_bf16} > {bf16_bound}");
+
+    // ---- the precision comparison table ------------------------------
+    let (m, n, k) = report::TABLE2_PROBLEM;
+    println!("\n=== mixed-precision suite, ({m}, {n}, {k}) on {tiles} AIE tiles ===\n");
+    let rows = report::precision_rows(&arch, tiles);
+    let table = report::precision_table(&rows);
+    println!("{}", table.to_text());
+    if let Ok(path) = report::save_csv("mixed_precision", &table) {
+        println!("(csv: {})\n", path.display());
+    }
+
+    // ---- acceptance gate: the cycle model's throughput ordering ------
+    let get = |p: Precision| {
+        rows.iter().find(|r| r.precision == p).expect("row").aggregate_macs_per_cycle
+    };
+    let (t_u8, t_i16, t_bf16) =
+        (get(Precision::U8), get(Precision::I16), get(Precision::Bf16));
+    assert!(
+        t_u8 >= t_i16 && t_i16 >= t_bf16,
+        "throughput ordering violated: u8 {t_u8:.1} / i16 {t_i16:.1} / bf16 {t_bf16:.1}"
+    );
+    println!(
+        "PASS: throughput ordering u8 ({t_u8:.1}) ≥ i16 ({t_i16:.1}) ≥ bf16 ({t_bf16:.1}) \
+         MACs/cycle on the Table-2 problem"
+    );
+
+    // ---- adaptive selection ------------------------------------------
+    println!("\n=== adaptive precision selection (accuracy budget sweep) ===\n");
+    let loose = select_precision(&arch, m, n, k, tiles, 0.5).expect("loose budget");
+    let tight = select_precision(&arch, m, n, k, tiles, 1e-4).expect("tight budget");
+    for (budget, c) in [(0.5, &loose), (1e-4, &tight)] {
+        println!(
+            "  budget {budget:<7.0e} → {:<5} ({} cycles, rel err {:.1e})",
+            c.precision.to_string(),
+            c.predicted_cycles,
+            c.predicted_rel_error
+        );
+    }
+    assert_eq!(loose.precision, Precision::U8, "loose budget must pick u8");
+    assert_eq!(tight.precision, Precision::Bf16, "tight budget must pick bf16");
+    let again = select_precision(&arch, m, n, k, tiles, 1e-4).expect("tight budget, rerun");
+    assert_eq!(again.precision, tight.precision, "selection must be deterministic");
+    assert_eq!(again.predicted_cycles, tight.predicted_cycles);
+    println!("\nPASS: u8 at loose budgets, bf16 at tight budgets, deterministically");
+
+    // ---- full sweep: tile scaling per precision (skipped in quick) ---
+    if !quick {
+        println!("\n=== aggregate MACs/cycle vs tiles, per precision ===\n");
+        for t in [1usize, 4, 16, 32] {
+            let rows = report::precision_rows(&arch, t);
+            let line: Vec<String> = rows
+                .iter()
+                .map(|r| format!("{} {:.1}", r.precision, r.aggregate_macs_per_cycle))
+                .collect();
+            println!("  tiles {t:>2}: {}", line.join("   "));
+        }
+        println!(
+            "\n(the integer/bf16 gap narrows with tiles — the serial Cr port\n\
+             hurts wide accumulators most at high tile counts.)"
+        );
+    }
+}

@@ -37,6 +37,11 @@ COMMANDS:
                                render the block schedule as a text gantt
                                chart (the §5.3 overlap, visualised)
   ablation [--tiles T]         compare parallelising L1/L3/L4/L5 (§4.4)
+  precision [--tiles T] [--budget E]
+                               mixed-precision suite (§4.2): per-precision
+                               MACs/cycle on the Table-2 problem, numeric
+                               conformance spot-check, and the adaptive
+                               precision the tuner picks for budget E
   cluster  [--devices 1,2,4,8] [--tiles T] [--fabric pcie|cxl|ethernet]
                                device-level strong scaling: the Table-2
                                problem sharded SUMMA-style across a pool
@@ -92,6 +97,7 @@ fn run(argv: Vec<String>) -> Result<(), String> {
         .opt("arrivals")
         .opt("devices")
         .opt("fabric")
+        .opt("budget")
         .flag("count-packing")
         .parse(&argv)?;
     let cmd = args.positional().first().map(|s| s.as_str()).unwrap_or("help");
@@ -119,6 +125,7 @@ fn run(argv: Vec<String>) -> Result<(), String> {
         "noc" => cmd_noc(&arch, &args),
         "trace" => cmd_trace(&arch, &args),
         "ablation" => cmd_ablation(&arch, &args),
+        "precision" => cmd_precision(&arch, &args),
         "cluster" => cmd_cluster(&arch, &args),
         "serve" => cmd_serve(&arch, &args),
         other => Err(format!("unknown command {other:?}; see `versal-gemm help`")),
@@ -294,6 +301,93 @@ fn cmd_ablation(arch: &VersalArch, args: &Args) -> Result<(), String> {
     Ok(())
 }
 
+fn cmd_precision(arch: &VersalArch, args: &Args) -> Result<(), String> {
+    use crate::gemm::baseline::naive_gemm_p;
+    use crate::gemm::precision::{Bf16, Element};
+    use crate::gemm::{Mat, Precision};
+
+    let tiles: usize = args.get_num("tiles", 8)?;
+    let budget: f64 = args.get_num("budget", 1e-2)?;
+    let (m, n, k) = crate::report::TABLE2_PROBLEM;
+
+    println!("mixed-precision micro-kernel suite (§4.2), ({m}, {n}, {k}) on {tiles} tiles:\n");
+    let rows = crate::report::precision_rows(arch, tiles);
+    println!("{}", crate::report::precision_table(&rows).to_text());
+
+    // Numeric conformance spot-check on a small edge shape: integers
+    // bit-exact, bf16 within the f32 forward-error bound.
+    let engine = ParallelGemm::new(arch);
+    let mut cfg = GemmConfig::paper_table2(tiles.min(4));
+    cfg.ccp = Ccp { mc: 16, nc: 16, kc: 32 };
+    let (sm, sk, sn) = (21, 37, 13);
+    fn check_exact<T: Element>(
+        engine: &ParallelGemm<'_>,
+        cfg: &GemmConfig,
+        m: usize,
+        k: usize,
+        n: usize,
+        seed: u64,
+    ) -> Result<f64, String> {
+        let mut rng = Pcg32::new(seed);
+        let a = Mat::<T>::random(m, k, &mut rng);
+        let b = Mat::<T>::random(k, n, &mut rng);
+        let mut c = Mat::<T::Acc>::zeros(m, n);
+        let mut want = Mat::<T::Acc>::zeros(m, n);
+        engine.run_p::<T>(cfg, &a, &b, &mut c).map_err(|e| e.to_string())?;
+        naive_gemm_p::<T>(&a, &b, &mut want);
+        Ok(c.max_abs_diff_f64(&want))
+    }
+    println!("numeric conformance, ({sm}, {sk}, {sn}) edge shape vs golden reference:");
+    for prec in Precision::ALL {
+        let diff = match prec {
+            Precision::U8 => check_exact::<u8>(&engine, &cfg, sm, sk, sn, 1)?,
+            Precision::I8 => check_exact::<i8>(&engine, &cfg, sm, sk, sn, 2)?,
+            Precision::I16 => check_exact::<i16>(&engine, &cfg, sm, sk, sn, 3)?,
+            Precision::Bf16 => check_exact::<Bf16>(&engine, &cfg, sm, sk, sn, 4)?,
+        };
+        // bf16 is judged against the proven forward-error bound (both the
+        // driver and the reference compute in f32 → two-sided); inputs
+        // are in [−1, 1], so Σ|a·b| ≤ k. Integers must be bit-exact.
+        let bound = match prec {
+            Precision::Bf16 => {
+                2.0 * crate::gemm::bf16_forward_error_bound(sk, sk as f64)
+            }
+            _ => 0.0,
+        };
+        let ok = diff <= bound;
+        let verdict = match prec {
+            Precision::Bf16 if ok => format!("ULP-BOUNDED (|Δ| {diff:.2e} ≤ {bound:.2e})"),
+            Precision::Bf16 => format!("OUT OF BOUND (|Δ| {diff:.2e} > {bound:.2e})"),
+            _ if ok => "EXACT".to_string(),
+            _ => format!("MISMATCH |Δ| = {diff}"),
+        };
+        println!("  {:<5} {verdict}", prec.to_string());
+        if !ok {
+            return Err(format!("{prec} conformance failed: {verdict}"));
+        }
+    }
+
+    // Adaptive selection across budgets, the requested one highlighted.
+    println!("\nadaptive precision selection for ({m}, {n}, {k}):");
+    let mut budgets = vec![0.5, 1e-2, 1e-4];
+    if !budgets.contains(&budget) {
+        budgets.push(budget);
+    }
+    for b in budgets {
+        match crate::gemm::select_precision(arch, m, n, k, tiles, b) {
+            Some(c) => println!(
+                "  budget {b:<8.1e} → {:<5} ({} predicted cycles, rel err {:.1e}){}",
+                c.precision.to_string(),
+                c.predicted_cycles,
+                c.predicted_rel_error,
+                if b == budget { "   ← --budget" } else { "" }
+            ),
+            None => println!("  budget {b:<8.1e} → none feasible (fall back to bf16)"),
+        }
+    }
+    Ok(())
+}
+
 fn cmd_cluster(arch: &VersalArch, args: &Args) -> Result<(), String> {
     use crate::cluster::FabricSpec;
     let devices = args.get_list::<usize>("devices", &[1, 2, 4, 8])?;
@@ -431,6 +525,14 @@ mod tests {
         assert_eq!(cli_main(argv(&["noc", "--tiles", "16"])), 0);
         // noc beyond the array is an error.
         assert_eq!(cli_main(argv(&["noc", "--tiles", "401"])), 2);
+    }
+
+    #[test]
+    fn precision_subcommand_succeeds() {
+        assert_eq!(cli_main(argv(&["precision", "--tiles", "4"])), 0);
+        assert_eq!(cli_main(argv(&["precision", "--budget", "1e-4"])), 0);
+        // Garbage budget is a parse error, not a panic.
+        assert_eq!(cli_main(argv(&["precision", "--budget", "tight"])), 2);
     }
 
     #[test]

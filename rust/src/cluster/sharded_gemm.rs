@@ -28,16 +28,21 @@
 //! serving deployment the weights are device-resident, and for large
 //! problems the one-time distribution amortises away.
 //!
-//! Numerics are exact: shard products run u8·u8→i32 and i32 accumulation
-//! is associative, so the sharded result is bit-identical to the
-//! single-device engine (asserted in `tests/cluster_integration.rs`).
+//! Numerics are exact for the integer precisions: shard products run
+//! u8·u8→i32, i8·i8→i32 or i16·i16→i64 and integer accumulation is
+//! associative, so the sharded result is bit-identical to the
+//! single-device engine (asserted in `tests/cluster_integration.rs` and
+//! `tests/precision_conformance.rs`). The bf16 path accumulates in f32,
+//! whose re-association across shards the conformance suite bounds
+//! against an f64 reference.
 
 use super::collectives::Collectives;
 use super::fabric::Fabric;
 use super::placement::GridPlacement;
 use super::{Cluster, ClusterError, DeviceId};
 use crate::gemm::microkernel::{MR, NR};
-use crate::gemm::{Ccp, GemmConfig, MatI32, MatU8, ParallelGemm};
+use crate::gemm::precision::{Element, Precision};
+use crate::gemm::{Ccp, GemmConfig, Mat, MatI32, MatU8, ParallelGemm};
 use crate::sim::CycleBreakdown;
 
 /// Configuration of a sharded GEMM run.
@@ -126,7 +131,8 @@ impl<'a> ClusterGemm<'a> {
         ClusterGemm { cluster }
     }
 
-    /// C += A·B, 2-D sharded over `placement`. Exact numerics + schedule.
+    /// C += A·B, 2-D sharded over `placement` (the paper's u8 pipeline).
+    /// Exact numerics + schedule.
     pub fn run(
         &self,
         cfg: &ClusterGemmConfig,
@@ -135,15 +141,32 @@ impl<'a> ClusterGemm<'a> {
         b: &MatU8,
         c: &mut MatI32,
     ) -> Result<(ClusterBreakdown, Vec<DeviceStats>), ClusterError> {
-        self.check(cfg, placement, a.rows, b.cols, a.cols, b.rows, c.rows, c.cols)?;
+        self.run_p::<u8>(cfg, placement, a, b, c)
+    }
+
+    /// C += A·B, 2-D sharded, at any precision of the mixed-precision
+    /// suite: every shard product runs the single-device engine's
+    /// [`ParallelGemm::run_p`], the broadcast byte counts scale with the
+    /// element width, and the per-device CCP feasibility check uses the
+    /// precision's element bytes.
+    pub fn run_p<T: Element>(
+        &self,
+        cfg: &ClusterGemmConfig,
+        placement: &GridPlacement,
+        a: &Mat<T>,
+        b: &Mat<T>,
+        c: &mut Mat<T::Acc>,
+    ) -> Result<(ClusterBreakdown, Vec<DeviceStats>), ClusterError> {
+        let prec = T::PRECISION;
+        self.check(cfg, placement, a.rows, b.cols, a.cols, b.rows, c.rows, c.cols, prec)?;
         let k = a.cols;
         let (rows, cols) = (placement.rows, placement.cols);
         let row_off = placement.row_offsets();
         let col_off = placement.col_offsets();
 
-        let mut shards: Vec<MatI32> = (0..rows * cols)
+        let mut shards: Vec<Mat<T::Acc>> = (0..rows * cols)
             .map(|cell| {
-                MatI32::zeros(placement.row_bands[cell / cols], placement.col_bands[cell % cols])
+                Mat::zeros(placement.row_bands[cell / cols], placement.col_bands[cell % cols])
             })
             .collect();
 
@@ -154,7 +177,7 @@ impl<'a> ClusterGemm<'a> {
         let mut step = 0;
         while pc < k || (k == 0 && step == 0) {
             let kb_eff = effective_kb(cfg.kb, k, pc);
-            self.account_step_comm(&coll, placement, kb_eff, step, &mut stats, &mut acct)?;
+            self.account_step_comm(&coll, placement, kb_eff, step, prec, &mut stats, &mut acct)?;
 
             let mut step_max = 0u64;
             for i in 0..rows {
@@ -166,7 +189,7 @@ impl<'a> ClusterGemm<'a> {
                     let b_shard = b.submatrix(pc, col_off[j], kb_eff, placement.col_bands[j]);
                     let engine = ParallelGemm::new(&dspec.arch);
                     let (cy, tstats) = engine
-                        .run(&cfg_local, &a_shard, &b_shard, &mut shards[i * cols + j])
+                        .run_p::<T>(&cfg_local, &a_shard, &b_shard, &mut shards[i * cols + j])
                         .map_err(|e| ClusterError::LocalGemm(e.to_string()))?;
                     step_max = step_max.max(cy.total);
                     acct.local += cy;
@@ -191,7 +214,7 @@ impl<'a> ClusterGemm<'a> {
                 c.add_block(row_off[i], col_off[j], &shards[i * cols + j]);
             }
         }
-        let breakdown = self.finish(cfg, placement, acct)?;
+        let breakdown = self.finish(cfg, placement, acct, prec)?;
         Ok((breakdown, stats))
     }
 
@@ -203,8 +226,19 @@ impl<'a> ClusterGemm<'a> {
         b: &MatU8,
         c: &mut MatI32,
     ) -> Result<(ClusterBreakdown, Vec<DeviceStats>), ClusterError> {
+        self.run_auto_p::<u8>(cfg, a, b, c)
+    }
+
+    /// Like [`ClusterGemm::run_p`] with an automatic placement.
+    pub fn run_auto_p<T: Element>(
+        &self,
+        cfg: &ClusterGemmConfig,
+        a: &Mat<T>,
+        b: &Mat<T>,
+        c: &mut Mat<T::Acc>,
+    ) -> Result<(ClusterBreakdown, Vec<DeviceStats>), ClusterError> {
         let placement = GridPlacement::auto(self.cluster, a.rows, b.cols)?;
-        self.run(cfg, &placement, a, b, c)
+        self.run_p::<T>(cfg, &placement, a, b, c)
     }
 
     /// Schedule-only evaluation (no numerics) for an `(m, n, k)` problem —
@@ -218,7 +252,21 @@ impl<'a> ClusterGemm<'a> {
         n: usize,
         k: usize,
     ) -> Result<ClusterBreakdown, ClusterError> {
-        self.check(cfg, placement, m, n, k, k, m, n)?;
+        self.schedule_p(cfg, placement, m, n, k, Precision::U8)
+    }
+
+    /// [`ClusterGemm::schedule`] at any precision: exactly the cycle
+    /// accounting of [`ClusterGemm::run_p`] at the same precision.
+    pub fn schedule_p(
+        &self,
+        cfg: &ClusterGemmConfig,
+        placement: &GridPlacement,
+        m: usize,
+        n: usize,
+        k: usize,
+        prec: Precision,
+    ) -> Result<ClusterBreakdown, ClusterError> {
+        self.check(cfg, placement, m, n, k, k, m, n, prec)?;
         let (rows, cols) = (placement.rows, placement.cols);
         let coll = Collectives::new(self.cluster);
         let mut stats = self.fresh_stats();
@@ -227,7 +275,7 @@ impl<'a> ClusterGemm<'a> {
         let mut step = 0;
         while pc < k || (k == 0 && step == 0) {
             let kb_eff = effective_kb(cfg.kb, k, pc);
-            self.account_step_comm(&coll, placement, kb_eff, step, &mut stats, &mut acct)?;
+            self.account_step_comm(&coll, placement, kb_eff, step, prec, &mut stats, &mut acct)?;
             let mut step_max = 0u64;
             for i in 0..rows {
                 for j in 0..cols {
@@ -240,6 +288,7 @@ impl<'a> ClusterGemm<'a> {
                         placement.row_bands[i],
                         placement.col_bands[j],
                         kb_eff,
+                        prec,
                     );
                     step_max = step_max.max(cy.total);
                     acct.local += cy;
@@ -253,7 +302,7 @@ impl<'a> ClusterGemm<'a> {
                 break;
             }
         }
-        self.finish(cfg, placement, acct)
+        self.finish(cfg, placement, acct, prec)
     }
 
     /// Schedule with an automatic placement; returns it for reporting.
@@ -282,6 +331,7 @@ impl<'a> ClusterGemm<'a> {
         b_rows: usize,
         c_rows: usize,
         c_cols: usize,
+        prec: Precision,
     ) -> Result<(), ClusterError> {
         self.cluster.validate()?;
         if k != b_rows {
@@ -312,7 +362,7 @@ impl<'a> ClusterGemm<'a> {
         }
         for (i, dspec) in self.cluster.devices.iter().enumerate() {
             cfg.ccp
-                .check(&dspec.arch, 1)
+                .check(&dspec.arch, prec.elem_bytes())
                 .map_err(|e| ClusterError::LocalGemm(format!("device {i}: {e}")))?;
         }
         Ok(())
@@ -331,12 +381,15 @@ impl<'a> ClusterGemm<'a> {
     /// row-bands along grid rows, the owner row broadcasts B column-bands
     /// along grid columns. Rows (and columns) proceed concurrently, so
     /// each phase costs its worst group; the two phases serialise.
+    /// Byte counts scale with the precision's element width.
+    #[allow(clippy::too_many_arguments)]
     fn account_step_comm(
         &self,
         coll: &Collectives<'_>,
         placement: &GridPlacement,
         kb_eff: usize,
         step: usize,
+        prec: Precision,
         stats: &mut [DeviceStats],
         acct: &mut StepAccounts,
     ) -> Result<(), ClusterError> {
@@ -344,7 +397,7 @@ impl<'a> ClusterGemm<'a> {
         for i in 0..placement.rows {
             let group = placement.row_group(i);
             let root = group[step % group.len()];
-            let bytes = (placement.row_bands[i] * kb_eff) as u64;
+            let bytes = (placement.row_bands[i] * kb_eff) as u64 * prec.elem_bytes();
             comm_a = comm_a.max(coll.broadcast_cycles(bytes, root, &group)?);
             for &d in &group {
                 if d == root {
@@ -359,7 +412,7 @@ impl<'a> ClusterGemm<'a> {
         for j in 0..placement.cols {
             let group = placement.col_group(j);
             let root = group[step % group.len()];
-            let bytes = (kb_eff * placement.col_bands[j]) as u64;
+            let bytes = (kb_eff * placement.col_bands[j]) as u64 * prec.elem_bytes();
             comm_b = comm_b.max(coll.broadcast_cycles(bytes, root, &group)?);
             for &d in &group {
                 if d == root {
@@ -380,6 +433,7 @@ impl<'a> ClusterGemm<'a> {
         cfg: &ClusterGemmConfig,
         placement: &GridPlacement,
         acct: StepAccounts,
+        prec: Precision,
     ) -> Result<ClusterBreakdown, ClusterError> {
         let compute: u64 = acct.compute_steps.iter().sum();
         let comm: u64 = acct.comm_steps.iter().sum();
@@ -400,7 +454,8 @@ impl<'a> ClusterGemm<'a> {
                 }
                 let hops = self.cluster.topology.hops(leader, dev)?;
                 let owned = acct.owned_a[dev] + acct.owned_b[dev];
-                let c_bytes = (placement.row_bands[i] * placement.col_bands[j] * 4) as u64;
+                let c_bytes = (placement.row_bands[i] * placement.col_bands[j]) as u64
+                    * prec.acc_bytes();
                 scatter_gather += fabric.transfer_cycles(owned, hops);
                 scatter_gather += fabric.transfer_cycles(c_bytes, hops);
             }
@@ -469,9 +524,11 @@ fn shard_schedule(
     m: usize,
     n: usize,
     k: usize,
+    prec: Precision,
 ) -> CycleBreakdown {
     let engine = ParallelGemm::new(arch);
     let Ccp { mc, nc, kc } = cfg.ccp;
+    let elem = prec.elem_bytes();
     let mut cycles = CycleBreakdown::zero();
     let mut jc = 0;
     while jc < n {
@@ -481,7 +538,7 @@ fn shard_schedule(
             let kc_eff = kc.min(k - pc);
             let panels_b = nc_eff.div_ceil(NR);
             if cfg.count_packing {
-                let bc_bytes = (panels_b * kc_eff * NR) as u64;
+                let bc_bytes = (panels_b * kc_eff * NR) as u64 * elem;
                 cycles.packing += (bc_bytes as f64 / arch.ic.pack_bytes_per_cycle) as u64;
             }
             let mut ic = 0;
@@ -489,15 +546,16 @@ fn shard_schedule(
                 let mc_eff = mc.min(m - ic);
                 let panels_a = mc_eff.div_ceil(MR);
                 if cfg.count_packing {
-                    let ac_bytes = (panels_a * MR * kc_eff) as u64;
+                    let ac_bytes = (panels_a * MR * kc_eff) as u64 * elem;
                     cycles.packing += (ac_bytes as f64 / arch.ic.pack_bytes_per_cycle) as u64;
                 }
-                cycles += engine.block_schedule(
+                cycles += engine.block_schedule_p(
                     cfg,
                     panels_b,
                     panels_a,
                     kc_eff,
-                    (kc_eff * NR) as u64,
+                    (kc_eff * NR) as u64 * elem,
+                    prec,
                 );
                 ic += mc_eff;
             }
@@ -621,6 +679,77 @@ mod tests {
         let mut c_ok = MatI32::zeros(8, 8);
         assert!(matches!(
             g.run_auto(&bad, &a, &b2, &mut c_ok),
+            Err(ClusterError::LocalGemm(_))
+        ));
+    }
+
+    #[test]
+    fn sharded_i16_matches_naive_and_costs_more_comm() {
+        use crate::gemm::baseline::naive_gemm_p;
+        let cluster = Cluster::vc1902_pool(4, 2).unwrap();
+        let g = ClusterGemm::new(&cluster);
+        let mut rng = Pcg32::new(0xC5);
+        let (m, n, k) = (24, 20, 40);
+        let a = Mat::<i16>::random(m, k, &mut rng);
+        let b = Mat::<i16>::random(k, n, &mut rng);
+        let mut want = Mat::<i64>::zeros(m, n);
+        naive_gemm_p::<i16>(&a, &b, &mut want);
+        let mut c = Mat::<i64>::zeros(m, n);
+        let (bd16, stats) = g.run_auto_p::<i16>(&small_cfg(), &a, &b, &mut c).unwrap();
+        assert_eq!(c.max_abs_diff_f64(&want), 0.0, "sharded i16 stays exact");
+        assert!(stats.iter().all(|s| s.macs > 0));
+        // Same shape at u8: the 2-byte shards must move twice the bytes.
+        let a8 = MatU8::random(m, k, &mut rng);
+        let b8 = MatU8::random(k, n, &mut rng);
+        let mut c8 = MatI32::zeros(m, n);
+        let (bd8, stats8) = g.run_auto(&small_cfg(), &a8, &b8, &mut c8).unwrap();
+        let tx16: u64 = stats.iter().map(|s| s.tx_bytes).sum();
+        let tx8: u64 = stats8.iter().map(|s| s.tx_bytes).sum();
+        assert_eq!(tx16, 2 * tx8, "element width doubles broadcast bytes");
+        assert!(bd16.comm >= bd8.comm);
+    }
+
+    #[test]
+    fn schedule_p_equals_run_p_cycles_per_precision() {
+        use crate::gemm::baseline::naive_gemm_p;
+        use crate::gemm::Precision;
+        let cluster = Cluster::vc1902_pool(2, 3).unwrap();
+        let g = ClusterGemm::new(&cluster);
+        let mut rng = Pcg32::new(0xC6);
+        let (m, n, k) = (32, 24, 48);
+        let placement = GridPlacement::auto(&cluster, m, n).unwrap();
+        let mut cfg = small_cfg();
+        cfg.kb = 16;
+        // i8: exact numerics, and run/schedule cycle parity.
+        let a = Mat::<i8>::random(m, k, &mut rng);
+        let b = Mat::<i8>::random(k, n, &mut rng);
+        let mut want = Mat::<i32>::zeros(m, n);
+        naive_gemm_p::<i8>(&a, &b, &mut want);
+        let mut c = Mat::<i32>::zeros(m, n);
+        let (ran, _) = g.run_p::<i8>(&cfg, &placement, &a, &b, &mut c).unwrap();
+        assert_eq!(c.max_abs_diff_f64(&want), 0.0);
+        let planned = g.schedule_p(&cfg, &placement, m, n, k, Precision::I8).unwrap();
+        assert_eq!(ran, planned, "i8 schedule == run");
+        // bf16 parity too (cycle model is numerics-independent).
+        use crate::gemm::precision::Bf16;
+        let a = Mat::<Bf16>::random(m, k, &mut rng);
+        let b = Mat::<Bf16>::random(k, n, &mut rng);
+        let mut c = Mat::<f32>::zeros(m, n);
+        let (ran, _) = g.run_p::<Bf16>(&cfg, &placement, &a, &b, &mut c).unwrap();
+        let planned = g.schedule_p(&cfg, &placement, m, n, k, Precision::Bf16).unwrap();
+        assert_eq!(ran, planned, "bf16 schedule == run");
+    }
+
+    #[test]
+    fn infeasible_wide_ccp_is_rejected_per_precision() {
+        // kc=2048 fits a 1-byte Br panel but not a 2-byte one.
+        let cluster = Cluster::vc1902_pool(2, 2).unwrap();
+        let g = ClusterGemm::new(&cluster);
+        let cfg = ClusterGemmConfig::with_ccp(Ccp { mc: 16, nc: 16, kc: 2048 });
+        let placement = GridPlacement::auto(&cluster, 16, 16).unwrap();
+        assert!(g.schedule(&cfg, &placement, 16, 16, 32).is_ok(), "u8 fits");
+        assert!(matches!(
+            g.schedule_p(&cfg, &placement, 16, 16, 32, crate::gemm::Precision::I16),
             Err(ClusterError::LocalGemm(_))
         ));
     }

@@ -3,7 +3,7 @@
 use crate::arch::VersalArch;
 use crate::cluster::{Cluster, ClusterError, Collectives, DeviceId};
 use crate::dl::{Mlp, MlpSpec, TpMode};
-use crate::gemm::{Ccp, GemmConfig, ParallelGemm};
+use crate::gemm::{Ccp, GemmConfig, ParallelGemm, PrecisionPolicy};
 use anyhow::Result;
 
 /// A batch-execution backend. `infer_batch` maps a `batch × in_dim`
@@ -46,10 +46,16 @@ impl Backend for EchoBackend {
 
 /// Production backend: the quantised MLP with every layer's MACs running
 /// through the parallel GEMM engine on the simulated Versal platform.
+///
+/// The backend carries a per-layer [`PrecisionPolicy`]: the default is
+/// the paper's fixed-u8 pipeline; [`RustGemmBackend::with_policy`]
+/// switches serving to another precision or to adaptive selection
+/// (cheapest precision meeting an accuracy budget, per layer).
 pub struct RustGemmBackend {
     arch: VersalArch,
     mlp: Mlp,
     cfg: GemmConfig,
+    policy: PrecisionPolicy,
 }
 
 impl RustGemmBackend {
@@ -62,7 +68,13 @@ impl RustGemmBackend {
         let mut cfg = GemmConfig::paper_table2(tiles);
         // Serving shapes are small; a modest CCP avoids degenerate blocks.
         cfg.ccp = crate::gemm::Ccp { mc: 256, nc: 256, kc: 1024 };
-        RustGemmBackend { arch, mlp, cfg }
+        RustGemmBackend { arch, mlp, cfg, policy: PrecisionPolicy::default() }
+    }
+
+    /// Builder: serve every layer under `policy` instead of fixed u8.
+    pub fn with_policy(mut self, policy: PrecisionPolicy) -> RustGemmBackend {
+        self.policy = policy;
+        self
     }
 
     pub fn mlp(&self) -> &Mlp {
@@ -79,18 +91,12 @@ impl Backend for RustGemmBackend {
     }
 
     fn infer_batch(&mut self, batch: usize, x: &[f32]) -> Result<(Vec<f32>, u64)> {
-        let engine = ParallelGemm::new(&self.arch);
-        let mut cycles = 0u64;
-        let mut err: Option<anyhow::Error> = None;
-        let logits = self.mlp.forward(batch, x, |a, b, c| {
-            match engine.run(&self.cfg, a, b, c) {
-                Ok((cy, _)) => cycles += cy.total,
-                Err(e) => err = Some(e),
-            }
-        });
-        if let Some(e) = err {
-            return Err(e);
-        }
+        // One code path for every policy: the Fixed(U8) default is
+        // bit-identical to the seed-era closure path (pinned by
+        // dl::linear's u8_forward_prec_matches_closure_forward and the
+        // rust_backend_matches_direct_mlp_forward test below).
+        let (logits, cycles, _chosen) =
+            self.mlp.forward_uniform_policy(batch, x, self.policy, &self.arch, &self.cfg)?;
         Ok((logits, cycles))
     }
 }
@@ -225,6 +231,32 @@ mod tests {
         let want = Mlp::random(spec, 99).forward(2, &x, naive_gemm);
         assert_eq!(logits, want);
         assert!(cycles > 0, "simulated cycles attached");
+    }
+
+    #[test]
+    fn backend_policy_changes_cost_not_correctness() {
+        use crate::gemm::Precision;
+        let spec = MlpSpec { dims: vec![16, 12, 4] };
+        let x: Vec<f32> = (0..2 * 16).map(|i| (i as f32 * 0.1).sin()).collect();
+        let mut u8_backend = RustGemmBackend::new(vc1902(), spec.clone(), 99, 4);
+        let (u8_logits, u8_cycles) = u8_backend.infer_batch(2, &x).unwrap();
+        let mut bf16_backend = RustGemmBackend::new(vc1902(), spec.clone(), 99, 4)
+            .with_policy(PrecisionPolicy::Fixed(Precision::Bf16));
+        let (bf_logits, bf_cycles) = bf16_backend.infer_batch(2, &x).unwrap();
+        assert!(bf_cycles > u8_cycles, "bf16 serving costs more cycles");
+        // bf16 logits sit on the f32 reference far tighter than u8's
+        // quantisation noise (no integer quantisation anywhere).
+        let mlp = Mlp::random(spec, 99);
+        let want = mlp.forward_f32(2, &x);
+        let bf_err =
+            bf_logits.iter().zip(&want).fold(0.0f32, |m, (g, w)| m.max((g - w).abs()));
+        assert!(bf_err < 0.05, "bf16 max |err| {bf_err}");
+        assert_eq!(u8_logits.len(), bf_logits.len());
+        // Adaptive policy with a loose budget serves at u8 cost.
+        let mut adaptive = RustGemmBackend::new(vc1902(), MlpSpec { dims: vec![16, 12, 4] }, 99, 4)
+            .with_policy(PrecisionPolicy::Adaptive { max_rel_error: 0.9 });
+        let (_, ad_cycles) = adaptive.infer_batch(2, &x).unwrap();
+        assert!(ad_cycles <= bf_cycles);
     }
 
     #[test]

@@ -9,8 +9,10 @@
 //! GEMM, the ARM core does the cheap nonlinear glue).
 
 use super::linear::{Activation, QuantLinear};
-use crate::gemm::{MatI32, MatU8};
+use crate::arch::VersalArch;
+use crate::gemm::{GemmConfig, MatI32, MatU8, Precision, PrecisionPolicy};
 use crate::util::Pcg32;
+use anyhow::Result;
 
 /// Configuration of one encoder block.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -119,25 +121,14 @@ impl EncoderBlock {
         }
     }
 
-    /// Forward `seq × d_model` activations. Projections/FFN run on the
-    /// quantised GEMM closure; attention products (activation ×
-    /// activation) run in f32 on the host reference path.
-    pub fn forward(
-        &self,
-        seq: usize,
-        x: &[f32],
-        mut gemm: impl FnMut(&MatU8, &MatU8, &mut MatI32),
-    ) -> Vec<f32> {
+    /// Per-head attention over a fused `seq × 3d` QKV projection:
+    /// scores = Q Kᵀ / √dh, softmax, context = P V — the f32 host glue
+    /// shared by every precision path.
+    fn attention_core(&self, seq: usize, qkv: &[f32]) -> Vec<f32> {
         let d = self.spec.d_model;
         let h = self.spec.n_heads;
         let dh = self.spec.d_head();
-        assert_eq!(x.len(), seq * d, "input shape");
-
-        // QKV projection (quantised GEMM).
-        let qkv = self.qkv.forward(seq, x, &mut gemm); // seq × 3d
         let scale = 1.0 / (dh as f32).sqrt();
-
-        // Per-head attention.
         let mut context = vec![0.0f32; seq * d];
         for head in 0..h {
             // Slice Q, K, V for this head out of the fused projection.
@@ -151,7 +142,6 @@ impl EncoderBlock {
                     vx[s * dh + e] = qkv[s * 3 * d + 2 * d + head * dh + e];
                 }
             }
-            // scores = Q Kᵀ / sqrt(dh); softmax; context = P V.
             let mut kt = vec![0.0f32; dh * seq];
             for s in 0..seq {
                 for e in 0..dh {
@@ -170,6 +160,24 @@ impl EncoderBlock {
                 }
             }
         }
+        context
+    }
+
+    /// Forward `seq × d_model` activations. Projections/FFN run on the
+    /// quantised GEMM closure; attention products (activation ×
+    /// activation) run in f32 on the host reference path.
+    pub fn forward(
+        &self,
+        seq: usize,
+        x: &[f32],
+        mut gemm: impl FnMut(&MatU8, &MatU8, &mut MatI32),
+    ) -> Vec<f32> {
+        let d = self.spec.d_model;
+        assert_eq!(x.len(), seq * d, "input shape");
+
+        // QKV projection (quantised GEMM) + per-head attention.
+        let qkv = self.qkv.forward(seq, x, &mut gemm); // seq × 3d
+        let context = self.attention_core(seq, &qkv);
 
         // Output projection + residual + norm (quantised GEMM).
         let proj = self.out_proj.forward(seq, &context, &mut gemm);
@@ -182,6 +190,46 @@ impl EncoderBlock {
         let mut out: Vec<f32> = down.iter().zip(&hidden).map(|(a, b)| a + b).collect();
         layernorm_rows(&mut out, seq, d);
         out
+    }
+
+    /// Forward with a per-layer [`PrecisionPolicy`] applied to all four
+    /// projection GEMMs (QKV, output, FFN up/down) on the simulated
+    /// Versal engine. Returns the activations, the summed simulated
+    /// cycles, and the precision each projection ran at; the attention
+    /// products stay in f32 on the host, as in [`EncoderBlock::forward`].
+    pub fn forward_policy(
+        &self,
+        seq: usize,
+        x: &[f32],
+        policy: PrecisionPolicy,
+        arch: &VersalArch,
+        cfg: &GemmConfig,
+    ) -> Result<(Vec<f32>, u64, Vec<Precision>)> {
+        let d = self.spec.d_model;
+        assert_eq!(x.len(), seq * d, "input shape");
+        let mut cycles = 0u64;
+        let mut chosen = Vec::with_capacity(4);
+
+        let (qkv, cy, p) = self.qkv.forward_policy(seq, x, policy, arch, cfg)?;
+        cycles += cy;
+        chosen.push(p);
+        let context = self.attention_core(seq, &qkv);
+
+        let (proj, cy, p) = self.out_proj.forward_policy(seq, &context, policy, arch, cfg)?;
+        cycles += cy;
+        chosen.push(p);
+        let mut hidden: Vec<f32> = proj.iter().zip(x).map(|(pv, xi)| pv + xi).collect();
+        layernorm_rows(&mut hidden, seq, d);
+
+        let (up, cy, p) = self.ffn_up.forward_policy(seq, &hidden, policy, arch, cfg)?;
+        cycles += cy;
+        chosen.push(p);
+        let (down, cy, p) = self.ffn_down.forward_policy(seq, &up, policy, arch, cfg)?;
+        cycles += cy;
+        chosen.push(p);
+        let mut out: Vec<f32> = down.iter().zip(&hidden).map(|(a, b)| a + b).collect();
+        layernorm_rows(&mut out, seq, d);
+        Ok((out, cycles, chosen))
     }
 
     /// Total MACs of one forward at sequence length `seq`.
@@ -253,5 +301,36 @@ mod tests {
     #[should_panic(expected = "d_model must divide")]
     fn bad_head_count_panics() {
         EncoderBlock::random(AttentionSpec { d_model: 30, n_heads: 4, d_ff: 8 }, 1);
+    }
+
+    #[test]
+    fn policy_forward_tracks_u8_closure_path() {
+        use crate::arch::vc1902;
+        use crate::gemm::{Ccp, GemmConfig};
+        let arch = vc1902();
+        let block = EncoderBlock::random(AttentionSpec::tiny(), 4);
+        let seq = 5;
+        let x: Vec<f32> = (0..seq * 32).map(|i| ((i as f32) * 0.17).sin()).collect();
+        let mut cfg = GemmConfig::paper_table2(2);
+        cfg.ccp = Ccp { mc: 64, nc: 64, kc: 64 };
+        let want = block.forward(seq, &x, naive_gemm);
+        // u8 must agree bit-for-bit with the closure path (same integer
+        // GEMM, same f32 glue); i16/bf16 differ only by the *reference's*
+        // u8 quantisation noise, layernorm-bounded.
+        for (policy, tol) in [
+            (PrecisionPolicy::Fixed(Precision::U8), 1e-6f32),
+            (PrecisionPolicy::Fixed(Precision::I16), 0.6),
+            (PrecisionPolicy::Fixed(Precision::Bf16), 0.6),
+        ] {
+            let (got, cycles, chosen) =
+                block.forward_policy(seq, &x, policy, &arch, &cfg).unwrap();
+            assert_eq!(chosen.len(), 4, "QKV + out + FFN up/down");
+            assert!(cycles > 0);
+            assert_eq!(got.len(), want.len());
+            let worst =
+                got.iter().zip(&want).fold(0.0f32, |m, (g, w)| m.max((g - w).abs()));
+            assert!(worst <= tol, "{policy:?}: max |Δ| {worst} > {tol}");
+            assert!(got.iter().all(|v| v.is_finite()));
+        }
     }
 }

@@ -1,8 +1,14 @@
-//! Quantised fully-connected layer.
+//! Quantised fully-connected layer, with per-layer precision selection
+//! across the mixed-precision suite (u8 affine, i8/i16 symmetric, bf16).
 
-use crate::gemm::{MatI32, MatU8};
+use crate::arch::VersalArch;
+use crate::gemm::precision::Bf16;
+use crate::gemm::{
+    Ccp, GemmConfig, Mat, MatI32, MatU8, ParallelGemm, Precision, PrecisionPolicy,
+};
+use crate::quant::{quantized_linear, sym_dequantize, QTensor, SymQTensor};
 use crate::util::split::partition;
-use crate::quant::{quantized_linear, QTensor};
+use anyhow::Result;
 
 /// Activation function applied after the affine transform.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -35,7 +41,13 @@ pub enum TpMode {
 pub struct QuantLinear {
     pub in_dim: usize,
     pub out_dim: usize,
-    pub weight: QTensor, // in_dim × out_dim
+    pub weight: QTensor, // in_dim × out_dim, u8-affine (the default path)
+    /// Master f32 weights, kept so the i8/i16/bf16 paths quantise from
+    /// the source rather than compounding the u8 quantisation error.
+    /// Costs 4 bytes/param next to the 1-byte QTensor; a deployment that
+    /// is permanently Fixed(U8) could drop this field, but the adaptive
+    /// policies re-quantise per resolved precision and need the source.
+    pub weight_f32: Vec<f32>,
     pub bias: Vec<f32>,
     pub activation: Activation,
 }
@@ -54,6 +66,7 @@ impl QuantLinear {
             in_dim,
             out_dim,
             weight: QTensor::from_f32(in_dim, out_dim, weight_f32),
+            weight_f32: weight_f32.to_vec(),
             bias,
             activation,
         }
@@ -102,6 +115,120 @@ impl QuantLinear {
     /// The GEMM shape this layer induces for a given batch size.
     pub fn gemm_shape(&self, batch: usize) -> (usize, usize, usize) {
         (batch, self.in_dim, self.out_dim) // (m, k, n)
+    }
+
+    /// Resolve a [`PrecisionPolicy`] for this layer's GEMM shape: fixed
+    /// policies pass through; adaptive ones ask the tuner for the
+    /// cheapest precision meeting the budget (falling back to bf16, the
+    /// most accurate path, when nothing qualifies).
+    pub fn resolve_precision(
+        &self,
+        arch: &VersalArch,
+        cfg: &GemmConfig,
+        batch: usize,
+        policy: PrecisionPolicy,
+    ) -> Precision {
+        match policy {
+            PrecisionPolicy::Fixed(p) => p,
+            PrecisionPolicy::Adaptive { max_rel_error } => {
+                let (m, k, n) = self.gemm_shape(batch);
+                crate::gemm::select_precision(arch, m, n, k, cfg.tiles, max_rel_error)
+                    .map(|c| c.precision)
+                    .unwrap_or(Precision::Bf16)
+            }
+        }
+    }
+
+    /// Forward a batch at an explicit precision on the simulated Versal
+    /// parallel engine. Returns the activations and the simulated cycle
+    /// cost of the layer's GEMM. `cfg.ccp.kc` is clamped to the element
+    /// width's local-memory budget, so one serving config drives every
+    /// precision.
+    pub fn forward_prec(
+        &self,
+        batch: usize,
+        x: &[f32],
+        prec: Precision,
+        arch: &VersalArch,
+        cfg: &GemmConfig,
+    ) -> Result<(Vec<f32>, u64)> {
+        assert_eq!(x.len(), batch * self.in_dim, "input shape mismatch");
+        let engine = ParallelGemm::new(arch);
+        let mut cfg = cfg.clone();
+        let max = Ccp::derive_aligned(arch, prec.elem_bytes());
+        cfg.ccp.kc = cfg.ccp.kc.min(max.kc.max(16));
+        let mut cycles = 0u64;
+        let mut y: Vec<f32> = match prec {
+            Precision::U8 => {
+                // Affine path: unsigned GEMM + zero-point correction.
+                let qx = QTensor::from_f32(batch, self.in_dim, x);
+                let mut qc = MatI32::zeros(batch, self.out_dim);
+                let (cy, _) = engine.run(&cfg, &qx.data, &self.weight.data, &mut qc)?;
+                cycles += cy.total;
+                let corr = crate::quant::zero_point_correction(
+                    &qx.data,
+                    &self.weight.data,
+                    qx.params,
+                    self.weight.params,
+                );
+                for (c, &d) in qc.data.iter_mut().zip(&corr.data) {
+                    *c += d;
+                }
+                crate::quant::dequantize_gemm_i32(&qc, qx.params, self.weight.params)
+            }
+            Precision::I8 => {
+                // Symmetric path: no correction term.
+                let qx = SymQTensor::<i8>::from_f32(batch, self.in_dim, x);
+                let qw = SymQTensor::<i8>::from_f32(self.in_dim, self.out_dim, &self.weight_f32);
+                let mut qc = Mat::<i32>::zeros(batch, self.out_dim);
+                let (cy, _) = engine.run_p::<i8>(&cfg, &qx.data, &qw.data, &mut qc)?;
+                cycles += cy.total;
+                sym_dequantize(&qc, qx.params.scale, qw.params.scale)
+            }
+            Precision::I16 => {
+                let qx = SymQTensor::<i16>::from_f32(batch, self.in_dim, x);
+                let qw = SymQTensor::<i16>::from_f32(self.in_dim, self.out_dim, &self.weight_f32);
+                let mut qc = Mat::<i64>::zeros(batch, self.out_dim);
+                let (cy, _) = engine.run_p::<i16>(&cfg, &qx.data, &qw.data, &mut qc)?;
+                cycles += cy.total;
+                sym_dequantize(&qc, qx.params.scale, qw.params.scale)
+            }
+            Precision::Bf16 => {
+                // Native-cast path: no quantisation, f32 accumulation.
+                let qx = Mat::<Bf16>::from_f32_slice(batch, self.in_dim, x);
+                let qw = Mat::<Bf16>::from_f32_slice(self.in_dim, self.out_dim, &self.weight_f32);
+                let mut c = Mat::<f32>::zeros(batch, self.out_dim);
+                let (cy, _) = engine.run_p::<Bf16>(&cfg, &qx, &qw, &mut c)?;
+                cycles += cy.total;
+                c.data
+            }
+        };
+        for i in 0..batch {
+            for (j, &b) in self.bias.iter().enumerate() {
+                y[i * self.out_dim + j] += b;
+            }
+        }
+        if self.activation == Activation::Relu {
+            for v in &mut y {
+                *v = v.max(0.0);
+            }
+        }
+        Ok((y, cycles))
+    }
+
+    /// Forward under a [`PrecisionPolicy`]: resolve, run, and report the
+    /// precision that was actually used.
+    pub fn forward_policy(
+        &self,
+        batch: usize,
+        x: &[f32],
+        policy: PrecisionPolicy,
+        arch: &VersalArch,
+        cfg: &GemmConfig,
+    ) -> Result<(Vec<f32>, u64, Precision)> {
+        let prec = self.resolve_precision(arch, cfg, batch, policy);
+        let (y, cycles) = self.forward_prec(batch, x, prec, arch, cfg)?;
+        Ok((y, cycles, prec))
     }
 
     /// Tensor-parallel forward: the layer's single GEMM is split into
@@ -210,6 +337,91 @@ mod tests {
         let mut rng = Pcg32::new(52);
         let layer = QuantLinear::random(4, 4, Activation::None, &mut rng);
         layer.forward(2, &[0.0; 4], naive_gemm);
+    }
+
+    #[test]
+    fn every_precision_tracks_the_f32_reference() {
+        use crate::arch::vc1902;
+        let arch = vc1902();
+        let mut rng = Pcg32::new(55);
+        let layer = QuantLinear::random(48, 24, Activation::None, &mut rng);
+        let batch = 6;
+        let x: Vec<f32> = (0..batch * 48).map(|_| rng.f64() as f32 * 2.0 - 1.0).collect();
+        let want = layer.forward_f32(batch, &x);
+        let mut cfg = GemmConfig::paper_table2(4);
+        cfg.ccp = Ccp { mc: 64, nc: 64, kc: 64 };
+        // Tolerances follow the per-precision error model: integer paths
+        // carry quantisation noise, bf16 only rounding.
+        for (prec, tol) in [
+            (Precision::U8, 0.12f32),
+            (Precision::I8, 0.2),
+            (Precision::I16, 1e-3),
+            (Precision::Bf16, 0.05),
+        ] {
+            let (got, cycles) = layer.forward_prec(batch, &x, prec, &arch, &cfg).unwrap();
+            assert!(cycles > 0, "{prec}: no cycles accounted");
+            let worst = got
+                .iter()
+                .zip(&want)
+                .fold(0.0f32, |m, (g, w)| m.max((g - w).abs()));
+            assert!(worst <= tol, "{prec}: max |err| {worst} > {tol}");
+        }
+        // i16 must be far more accurate than i8 on the same layer.
+        let (y8, _) = layer.forward_prec(batch, &x, Precision::I8, &arch, &cfg).unwrap();
+        let (y16, _) = layer.forward_prec(batch, &x, Precision::I16, &arch, &cfg).unwrap();
+        let e8 = y8.iter().zip(&want).fold(0.0f32, |m, (g, w)| m.max((g - w).abs()));
+        let e16 = y16.iter().zip(&want).fold(0.0f32, |m, (g, w)| m.max((g - w).abs()));
+        assert!(e16 < e8, "i16 err {e16} !< i8 err {e8}");
+    }
+
+    #[test]
+    fn u8_forward_prec_matches_closure_forward() {
+        use crate::arch::vc1902;
+        let arch = vc1902();
+        let mut rng = Pcg32::new(56);
+        let layer = QuantLinear::random(32, 16, Activation::Relu, &mut rng);
+        let x: Vec<f32> = (0..4 * 32).map(|_| rng.f64() as f32 * 2.0 - 1.0).collect();
+        let mut cfg = GemmConfig::paper_table2(2);
+        cfg.ccp = Ccp { mc: 32, nc: 32, kc: 32 };
+        let engine = ParallelGemm::new(&arch);
+        let via_closure = layer.forward(4, &x, |a, b, c| {
+            engine.run(&cfg, a, b, c).unwrap();
+        });
+        let (via_prec, _) = layer.forward_prec(4, &x, Precision::U8, &arch, &cfg).unwrap();
+        assert_eq!(via_closure, via_prec, "same u8 numerics either way");
+    }
+
+    #[test]
+    fn policy_resolution_adapts_to_budget() {
+        use crate::arch::vc1902;
+        let arch = vc1902();
+        let mut rng = Pcg32::new(57);
+        let layer = QuantLinear::random(512, 64, Activation::None, &mut rng);
+        let cfg = GemmConfig::paper_table2(4);
+        let fixed = layer.resolve_precision(&arch, &cfg, 8, PrecisionPolicy::Fixed(Precision::I16));
+        assert_eq!(fixed, Precision::I16);
+        let loose = layer.resolve_precision(
+            &arch,
+            &cfg,
+            8,
+            PrecisionPolicy::Adaptive { max_rel_error: 0.5 },
+        );
+        assert_eq!(loose, Precision::U8, "loose budget → cheapest precision");
+        let tight = layer.resolve_precision(
+            &arch,
+            &cfg,
+            8,
+            PrecisionPolicy::Adaptive { max_rel_error: 1e-5 },
+        );
+        assert_eq!(tight, Precision::Bf16, "tight budget → bf16");
+        // Impossible budget falls back to bf16 rather than failing.
+        let impossible = layer.resolve_precision(
+            &arch,
+            &cfg,
+            8,
+            PrecisionPolicy::Adaptive { max_rel_error: 1e-12 },
+        );
+        assert_eq!(impossible, Precision::Bf16);
     }
 
     #[test]

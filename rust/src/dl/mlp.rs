@@ -2,8 +2,10 @@
 //! serving example and the `bench_e2e_serving` harness.
 
 use super::linear::{Activation, QuantLinear, TpMode};
-use crate::gemm::{MatI32, MatU8};
+use crate::arch::VersalArch;
+use crate::gemm::{GemmConfig, MatI32, MatU8, Precision, PrecisionPolicy};
 use crate::util::Pcg32;
+use anyhow::Result;
 
 /// Model architecture: layer widths, e.g. `[784, 512, 512, 10]`.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -95,6 +97,44 @@ impl Mlp {
         h
     }
 
+    /// Forward a batch with a per-layer [`PrecisionPolicy`] on the
+    /// simulated Versal engine. Returns the logits, the summed simulated
+    /// cycles, and the precision each layer actually ran at — the
+    /// adaptive-precision serving path of §1.
+    pub fn forward_policy(
+        &self,
+        batch: usize,
+        x: &[f32],
+        policies: &[PrecisionPolicy],
+        arch: &VersalArch,
+        cfg: &GemmConfig,
+    ) -> Result<(Vec<f32>, u64, Vec<Precision>)> {
+        assert_eq!(policies.len(), self.layers.len(), "one policy per layer");
+        let mut h = x.to_vec();
+        let mut cycles = 0u64;
+        let mut chosen = Vec::with_capacity(self.layers.len());
+        for (layer, &policy) in self.layers.iter().zip(policies) {
+            let (y, cy, prec) = layer.forward_policy(batch, &h, policy, arch, cfg)?;
+            h = y;
+            cycles += cy;
+            chosen.push(prec);
+        }
+        Ok((h, cycles, chosen))
+    }
+
+    /// [`Mlp::forward_policy`] with one policy applied to every layer.
+    pub fn forward_uniform_policy(
+        &self,
+        batch: usize,
+        x: &[f32],
+        policy: PrecisionPolicy,
+        arch: &VersalArch,
+        cfg: &GemmConfig,
+    ) -> Result<(Vec<f32>, u64, Vec<Precision>)> {
+        let policies = vec![policy; self.layers.len()];
+        self.forward_policy(batch, x, &policies, arch, cfg)
+    }
+
     /// f32 reference forward.
     pub fn forward_f32(&self, batch: usize, x: &[f32]) -> Vec<f32> {
         let mut h = x.to_vec();
@@ -173,6 +213,59 @@ mod tests {
         let mlp = Mlp::random(MlpSpec { dims: vec![2, 3] }, 1);
         let p = mlp.predict(2, &[0.1, 0.9, 0.3, 5.0, -1.0, 2.0]);
         assert_eq!(p, vec![1, 0]);
+    }
+
+    #[test]
+    fn mixed_per_layer_policies_run_and_agree_on_predictions() {
+        use crate::arch::vc1902;
+        use crate::gemm::Ccp;
+        let arch = vc1902();
+        let mlp = Mlp::random(MlpSpec { dims: vec![48, 32, 8] }, 11);
+        let mut rng = Pcg32::new(110);
+        let batch = 8;
+        let x: Vec<f32> = (0..batch * 48).map(|_| rng.f64() as f32 * 2.0 - 1.0).collect();
+        let mut cfg = GemmConfig::paper_table2(4);
+        cfg.ccp = Ccp { mc: 64, nc: 64, kc: 64 };
+        // Heterogeneous per-layer precisions: i16 body, u8 head.
+        let policies = vec![
+            PrecisionPolicy::Fixed(Precision::I16),
+            PrecisionPolicy::Fixed(Precision::U8),
+        ];
+        let (y, cycles, chosen) =
+            mlp.forward_policy(batch, &x, &policies, &arch, &cfg).unwrap();
+        assert_eq!(chosen, vec![Precision::I16, Precision::U8]);
+        assert!(cycles > 0);
+        // Predictions should almost always match the f32 reference.
+        let want = mlp.forward_f32(batch, &x);
+        let pq = mlp.predict(batch, &y);
+        let pf = mlp.predict(batch, &want);
+        let agree = pq.iter().zip(&pf).filter(|(a, b)| a == b).count();
+        assert!(agree >= batch - 1, "only {agree}/{batch} predictions agree");
+        // A uniform bf16 pass costs more cycles than uniform u8.
+        let (_, cy_u8, _) = mlp
+            .forward_uniform_policy(batch, &x, PrecisionPolicy::Fixed(Precision::U8), &arch, &cfg)
+            .unwrap();
+        let (_, cy_bf16, _) = mlp
+            .forward_uniform_policy(
+                batch,
+                &x,
+                PrecisionPolicy::Fixed(Precision::Bf16),
+                &arch,
+                &cfg,
+            )
+            .unwrap();
+        assert!(cy_bf16 > cy_u8, "bf16 {cy_bf16} !> u8 {cy_u8}");
+    }
+
+    #[test]
+    #[should_panic(expected = "one policy per layer")]
+    fn policy_count_must_match_layers() {
+        use crate::arch::vc1902;
+        let arch = vc1902();
+        let mlp = Mlp::random(MlpSpec { dims: vec![8, 4, 2] }, 1);
+        let cfg = GemmConfig::paper_table2(1);
+        let x = vec![0.0f32; 8];
+        let _ = mlp.forward_policy(1, &x, &[PrecisionPolicy::default()], &arch, &cfg);
     }
 
     #[test]

@@ -1,22 +1,33 @@
 //! Reference GEMM implementations used to validate everything else.
 
-use super::types::{MatI32, MatU8};
+use super::precision::{Accum, Element};
+use super::types::{Mat, MatI32, MatU8};
+
+/// Naive triple-loop C += A·B in the accumulator domain of any precision
+/// — the golden model of the mixed-precision conformance suite. Products
+/// are exact at every precision; accumulation is sequential in p, which
+/// for the integer precisions is bit-identical to any other association
+/// and for bf16 defines the reference association the drivers are
+/// error-bounded against (see `tests/precision_conformance.rs`).
+pub fn naive_gemm_p<T: Element>(a: &Mat<T>, b: &Mat<T>, c: &mut Mat<T::Acc>) {
+    assert_eq!(a.cols, b.rows, "inner dimensions differ");
+    assert_eq!((c.rows, c.cols), (a.rows, b.cols), "output shape mismatch");
+    for i in 0..a.rows {
+        for j in 0..b.cols {
+            let mut acc = T::Acc::zero();
+            for p in 0..a.cols {
+                acc = acc.acc_add(a.at(i, p).widen().acc_mul(b.at(p, j).widen()));
+            }
+            c.add(i, j, acc);
+        }
+    }
+}
 
 /// Naive triple-loop C += A·B (u8 · u8 → i32). The correctness oracle for
 /// the blocked and parallel drivers (and itself cross-checked against the
 /// JAX/Pallas reference through the PJRT runtime in `rust/tests/`).
 pub fn naive_gemm(a: &MatU8, b: &MatU8, c: &mut MatI32) {
-    assert_eq!(a.cols, b.rows, "inner dimensions differ");
-    assert_eq!((c.rows, c.cols), (a.rows, b.cols), "output shape mismatch");
-    for i in 0..a.rows {
-        for j in 0..b.cols {
-            let mut acc = 0i32;
-            for p in 0..a.cols {
-                acc += a.at(i, p) as i32 * b.at(p, j) as i32;
-            }
-            c.add(i, j, acc);
-        }
-    }
+    naive_gemm_p::<u8>(a, b, c);
 }
 
 /// Cache-friendlier ikj-ordered reference (row of A broadcast over a row

@@ -8,9 +8,10 @@
 //! reality of the device (§4.1).
 
 use super::ccp::Ccp;
-use super::microkernel::{MicroKernel, MR, NR};
+use super::microkernel::{ElemKernel, MR, NR};
 use super::packing::{pack_a, pack_b};
-use super::types::{MatI32, MatU8};
+use super::precision::{Accum, Element};
+use super::types::{Mat, MatI32, MatU8};
 use super::GemmConfig;
 use crate::arch::{MemLevel, VersalArch};
 use crate::sim::{AieTileModel, CycleBreakdown, Gmio, KernelMode, MemPool, Stream};
@@ -27,8 +28,8 @@ impl<'a> BlockedGemm<'a> {
         BlockedGemm { arch, tile: AieTileModel::new(arch) }
     }
 
-    /// C += A·B with the given configuration. Returns the cycle breakdown
-    /// of the simulated single-tile execution.
+    /// C += A·B with the given configuration (the paper's u8 pipeline).
+    /// Returns the cycle breakdown of the simulated single-tile execution.
     pub fn run(
         &self,
         cfg: &GemmConfig,
@@ -36,19 +37,46 @@ impl<'a> BlockedGemm<'a> {
         b: &MatU8,
         c: &mut MatI32,
     ) -> Result<CycleBreakdown> {
+        self.run_p::<u8>(cfg, a, b, c)
+    }
+
+    /// C += A·B at any precision of the mixed-precision suite: identical
+    /// five-loop structure, with buffer footprints, stream traffic,
+    /// vector-op counts and the Cr round trip all scaled by
+    /// `T::PRECISION` (see [`crate::sim::AieTileModel::kernel_cycles_p`]).
+    pub fn run_p<T: Element>(
+        &self,
+        cfg: &GemmConfig,
+        a: &Mat<T>,
+        b: &Mat<T>,
+        c: &mut Mat<T::Acc>,
+    ) -> Result<CycleBreakdown> {
         ensure!(a.cols == b.rows, "inner dimensions differ: {} vs {}", a.cols, b.rows);
         ensure!(
             (c.rows, c.cols) == (a.rows, b.cols),
             "output shape mismatch: C is {}x{}, want {}x{}",
             c.rows, c.cols, a.rows, b.cols
         );
-        cfg.ccp.check(self.arch, 1).map_err(anyhow::Error::msg)?;
+        let prec = T::PRECISION;
+        cfg.ccp.check(self.arch, prec.elem_bytes()).map_err(anyhow::Error::msg)?;
+        // Worst-case accumulator feasibility (documented per precision in
+        // `Precision::max_safe_k`; adversarial operands pinned in
+        // tests/precision_conformance.rs).
+        debug_assert!(
+            match prec.max_safe_k() {
+                Some(kb) => a.cols as u64 <= kb,
+                None => true,
+            },
+            "k={} exceeds the safe accumulation bound {:?} for {prec}",
+            a.cols,
+            prec.max_safe_k()
+        );
 
         let (m, n, k) = (a.rows, b.cols, a.cols);
         let Ccp { mc, nc, kc } = cfg.ccp;
         let stream = Stream::new(self.arch);
         let gmio = Gmio::new(self.arch);
-        let kernel = MicroKernel;
+        let kernel = ElemKernel::<T>::new();
         let mut cycles = CycleBreakdown::zero();
 
         // Memory feasibility is enforced by live pools, not just the CCP
@@ -87,9 +115,13 @@ impl<'a> BlockedGemm<'a> {
                     // The kernel needs kc aligned to the unroll for the
                     // cycle model; numerics handle any kc.
                     let kc_cycles = kc_eff.next_multiple_of(AieTileModel::UNROLL);
-                    let loop_cycles =
-                        self.tile.kernel_cycles(kc_cycles, KernelMode::Baseline, cfg.steady_stream);
-                    let cr_cycles = gmio.cr_roundtrip_cycles(1);
+                    let loop_cycles = self.tile.kernel_cycles_p(
+                        kc_cycles,
+                        KernelMode::Baseline,
+                        cfg.steady_stream,
+                        prec,
+                    );
+                    let cr_cycles = gmio.cr_roundtrip_cycles_p(1, prec);
 
                     for pj in 0..bc.n_panels {
                         // Loop L4: copy the micro-panel Br to local memory.
@@ -102,7 +134,7 @@ impl<'a> BlockedGemm<'a> {
                         for pi in 0..ac.n_panels {
                             // Loop L5 + micro-kernel (loop L6).
                             let ar = ac.panel(pi);
-                            let mut cr = [0i32; MR * NR];
+                            let mut cr = [T::Acc::zero(); MR * NR];
                             kernel.run(kc_eff, ar, br, &mut cr);
                             kernel.store(&cr, c, ic + pi * MR, jc + pj * NR);
 
@@ -249,6 +281,49 @@ mod tests {
         assert_eq!(without.packing, 0);
         assert_eq!(with.total, without.total + with.packing);
         assert_eq!(c1.max_abs_diff(&c2), 0);
+    }
+
+    #[test]
+    fn generic_driver_handles_signed_and_wide_elements() {
+        use crate::gemm::baseline::naive_gemm_p;
+        use crate::gemm::types::Mat;
+        let a9 = vc1902();
+        let g = BlockedGemm::new(&a9);
+        let mut rng = Pcg32::new(14);
+        // i8: signed products, i32 accumulate — must be bit-exact.
+        let a = Mat::<i8>::random(21, 19, &mut rng);
+        let b = Mat::<i8>::random(19, 17, &mut rng);
+        let mut c = Mat::<i32>::zeros(21, 17);
+        let mut want = Mat::<i32>::zeros(21, 17);
+        g.run_p::<i8>(&cfg(16, 16, 16), &a, &b, &mut c).unwrap();
+        naive_gemm_p::<i8>(&a, &b, &mut want);
+        assert_eq!(c.max_abs_diff_f64(&want), 0.0);
+        // i16: i64 accumulate, 2-byte buffers — bit-exact too.
+        let a = Mat::<i16>::random(13, 23, &mut rng);
+        let b = Mat::<i16>::random(23, 11, &mut rng);
+        let mut c = Mat::<i64>::zeros(13, 11);
+        let mut want = Mat::<i64>::zeros(13, 11);
+        g.run_p::<i16>(&cfg(16, 16, 16), &a, &b, &mut c).unwrap();
+        naive_gemm_p::<i16>(&a, &b, &mut want);
+        assert_eq!(c.max_abs_diff_f64(&want), 0.0);
+    }
+
+    #[test]
+    fn wide_elements_cost_more_cycles_than_u8() {
+        use crate::gemm::types::Mat;
+        let a9 = vc1902();
+        let g = BlockedGemm::new(&a9);
+        let mut rng = Pcg32::new(15);
+        let a8 = MatU8::random(16, 32, &mut rng);
+        let b8 = MatU8::random(32, 16, &mut rng);
+        let mut c8 = MatI32::zeros(16, 16);
+        let cy8 = g.run(&cfg(16, 16, 32), &a8, &b8, &mut c8).unwrap();
+        let a16 = Mat::<i16>::random(16, 32, &mut rng);
+        let b16 = Mat::<i16>::random(32, 16, &mut rng);
+        let mut c16 = Mat::<i64>::zeros(16, 16);
+        let cy16 = g.run_p::<i16>(&cfg(16, 16, 32), &a16, &b16, &mut c16).unwrap();
+        assert!(cy16.total > cy8.total, "i16 {} !> u8 {}", cy16.total, cy8.total);
+        assert!(cy16.br_copy > cy8.br_copy, "2-byte Br panels cost more");
     }
 
     #[test]

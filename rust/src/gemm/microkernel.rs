@@ -1,4 +1,5 @@
-//! The 8×8 UINT8 micro-kernel — §4.2 / Figure 4 of the paper.
+//! The 8×8 micro-kernel family — §4.2 / Figure 4 of the paper, generalised
+//! over the mixed-precision suite.
 //!
 //! One invocation updates an mr×nr = 8×8 micro-tile Cr of C with the
 //! product of the micro-panels Ar (mr × kc, from Ac in the FPGA Ultra RAM)
@@ -8,48 +9,67 @@
 //! Cr += Ar · Br      — kc rank-1 updates, 64 MACs each
 //! ```
 //!
-//! On the AIE this is 8 `mac16()` calls per 16-deep unrolled iteration
-//! (128 UINT8 MACs per call); here it is a portable Rust loop written so
-//! LLVM autovectorises the rank-1 update (the perf pass benchmarks it in
-//! `bench_microkernel`). The **numerics are exact** (u8·u8 → i32); the
-//! **cycle cost** comes from [`crate::sim::AieTileModel`] and is accounted
-//! by the callers (blocked/parallel drivers).
+//! [`ElemKernel<T>`] is the generic kernel over any [`Element`]: the
+//! MR×NR geometry is shared by every precision (it is set by the 64
+//! accumulator lanes, not the operand width), while the AIE intrinsic mix
+//! differs — u8/i8 use 8 `mac16()` calls per 16-deep unrolled iteration
+//! (128 8-bit MACs per call), i16 needs 32 vector ops (32 MACs each) and
+//! bf16 needs 64 (≈16 MACs each); see
+//! [`crate::gemm::Precision::macs_per_vec_op`]. Here every kernel is a
+//! portable Rust loop written so LLVM autovectorises the rank-1 update
+//! (the perf pass benchmarks the u8 instance in `bench_microkernel`).
+//! The **numerics are exact per product** (u8·u8→i32, i8·i8→i32,
+//! i16·i16→i64, bf16·bf16 exact in f32); only the bf16 *accumulation*
+//! rounds, which the conformance suite bounds against an f64 reference.
+//! The **cycle cost** comes from [`crate::sim::AieTileModel`] and is
+//! accounted by the callers (blocked/parallel drivers).
+//!
+//! [`MicroKernel`] is the seed-era u8 instance, kept as a thin wrapper so
+//! the original paper-validation call sites read unchanged.
 
-use super::types::MatI32;
+use super::precision::{Accum, Element};
+use super::types::{Mat, MatI32};
+use std::marker::PhantomData;
 
 /// Micro-tile rows (paper: 8, fully utilising the 4×v16acc48 accumulators).
 pub const MR: usize = 8;
 /// Micro-tile columns (paper: 8).
 pub const NR: usize = 8;
 
-/// The micro-kernel over packed panels.
+/// The micro-kernel over packed panels of any element precision.
 #[derive(Debug, Clone, Copy, Default)]
-pub struct MicroKernel;
+pub struct ElemKernel<T: Element> {
+    _elem: PhantomData<T>,
+}
 
-impl MicroKernel {
+impl<T: Element> ElemKernel<T> {
+    pub fn new() -> ElemKernel<T> {
+        ElemKernel { _elem: PhantomData }
+    }
+
     /// `cr[mr][nr] += Ar · Br` where `ar` is an MR×kc panel stored
     /// column-major (`ar[p*MR + i]`) and `br` is a kc×NR panel stored
     /// row-major (`br[p*NR + j]`) — the packed layouts of
     /// [`super::packing`].
     #[inline]
-    pub fn run(&self, kc: usize, ar: &[u8], br: &[u8], cr: &mut [i32; MR * NR]) {
+    pub fn run(&self, kc: usize, ar: &[T], br: &[T], cr: &mut [T::Acc; MR * NR]) {
         debug_assert_eq!(ar.len(), MR * kc);
         debug_assert_eq!(br.len(), kc * NR);
         // Fixed-size array views give LLVM compile-time trip counts for
         // the rank-1 update; b_row is widened once per p instead of once
         // per (i, j). ~1.4× over the naive slice version (§Perf).
         for p in 0..kc {
-            let a_col: &[u8; MR] = ar[p * MR..p * MR + MR].try_into().unwrap();
-            let b_raw: &[u8; NR] = br[p * NR..p * NR + NR].try_into().unwrap();
-            let mut b_row = [0i32; NR];
+            let a_col: &[T; MR] = ar[p * MR..p * MR + MR].try_into().unwrap();
+            let b_raw: &[T; NR] = br[p * NR..p * NR + NR].try_into().unwrap();
+            let mut b_row = [T::Acc::zero(); NR];
             for j in 0..NR {
-                b_row[j] = b_raw[j] as i32;
+                b_row[j] = b_raw[j].widen();
             }
             for i in 0..MR {
-                let ai = a_col[i] as i32;
+                let ai = a_col[i].widen();
                 let row = &mut cr[i * NR..i * NR + NR];
                 for j in 0..NR {
-                    row[j] += ai * b_row[j];
+                    row[j] = row[j].acc_add(ai.acc_mul(b_row[j]));
                 }
             }
         }
@@ -57,7 +77,7 @@ impl MicroKernel {
 
     /// Scatter an accumulated micro-tile back into C at (row0, col0),
     /// clipping at the matrix edge (zero-padded panel lanes fall outside).
-    pub fn store(&self, cr: &[i32; MR * NR], c: &mut MatI32, row0: usize, col0: usize) {
+    pub fn store(&self, cr: &[T::Acc; MR * NR], c: &mut Mat<T::Acc>, row0: usize, col0: usize) {
         let rows = MR.min(c.rows - row0.min(c.rows));
         let cols = NR.min(c.cols - col0.min(c.cols));
         for i in 0..rows {
@@ -67,9 +87,32 @@ impl MicroKernel {
         }
     }
 
-    /// MAC operations of one invocation: mr · nr · kc.
+    /// MAC operations of one invocation: mr · nr · kc (precision-independent).
     pub fn macs(kc: usize) -> u64 {
         (MR * NR * kc) as u64
+    }
+}
+
+/// The seed-era 8×8 UINT8 micro-kernel — the [`ElemKernel<u8>`] instance
+/// behind the paper's Table 2/3 validation call sites.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct MicroKernel;
+
+impl MicroKernel {
+    /// See [`ElemKernel::run`].
+    #[inline]
+    pub fn run(&self, kc: usize, ar: &[u8], br: &[u8], cr: &mut [i32; MR * NR]) {
+        ElemKernel::<u8>::new().run(kc, ar, br, cr);
+    }
+
+    /// See [`ElemKernel::store`].
+    pub fn store(&self, cr: &[i32; MR * NR], c: &mut MatI32, row0: usize, col0: usize) {
+        ElemKernel::<u8>::new().store(cr, c, row0, col0);
+    }
+
+    /// MAC operations of one invocation: mr · nr · kc.
+    pub fn macs(kc: usize) -> u64 {
+        ElemKernel::<u8>::macs(kc)
     }
 }
 
@@ -77,6 +120,7 @@ impl MicroKernel {
 mod tests {
     use super::*;
     use crate::gemm::packing::{pack_a, pack_b};
+    use crate::gemm::precision::Bf16;
     use crate::gemm::types::MatU8;
     use crate::util::quickcheck::prop;
     use crate::util::Pcg32;
@@ -145,23 +189,74 @@ mod tests {
     #[test]
     fn macs_formula() {
         assert_eq!(MicroKernel::macs(2048), 131_072); // §5.2
+        assert_eq!(ElemKernel::<i16>::macs(2048), 131_072); // geometry-shared
+    }
+
+    /// Generic micro-kernel-vs-naive property, instantiated per element
+    /// width; the naive reference runs in the accumulator domain with the
+    /// same (sequential-in-p) association, so even bf16 compares exactly.
+    fn kernel_matches_naive<T: crate::gemm::precision::Element>(
+        g: &mut crate::util::quickcheck::Gen,
+    ) -> Result<(), String> {
+        let kc = g.dim(64);
+        let a = Mat::<T>::random(MR, kc, &mut g.rng);
+        let b = Mat::<T>::random(kc, NR, &mut g.rng);
+        let pa = pack_a(&a, 0, 0, MR, kc);
+        let pb = pack_b(&b, 0, 0, kc, NR);
+        let mut cr = [T::Acc::zero(); MR * NR];
+        ElemKernel::<T>::new().run(kc, pa.panel(0), pb.panel(0), &mut cr);
+        for i in 0..MR {
+            for j in 0..NR {
+                let mut want = T::Acc::zero();
+                for p in 0..kc {
+                    want = want.acc_add(a.at(i, p).widen().acc_mul(b.at(p, j).widen()));
+                }
+                if cr[i * NR + j] != want {
+                    return Err(format!(
+                        "({i},{j}) at kc={kc}: {:?} != {want:?}",
+                        cr[i * NR + j]
+                    ));
+                }
+            }
+        }
+        Ok(())
     }
 
     #[test]
     fn prop_microkernel_equals_naive() {
-        prop("microkernel-vs-naive", 0x111, 60, |g| {
-            let kc = g.dim(64);
-            let a = MatU8::random(MR, kc, &mut g.rng);
-            let b = MatU8::random(kc, NR, &mut g.rng);
-            let pa = pack_a(&a, 0, 0, MR, kc);
-            let pb = pack_b(&b, 0, 0, kc, NR);
-            let mut cr = [0i32; MR * NR];
-            MicroKernel.run(kc, pa.panel(0), pb.panel(0), &mut cr);
-            let want = naive_tile(&a, &b);
-            if cr.to_vec() != want {
-                return Err(format!("mismatch at kc={kc}"));
-            }
-            Ok(())
-        });
+        prop("microkernel-vs-naive-u8", 0x111, 60, kernel_matches_naive::<u8>);
+        prop("microkernel-vs-naive-i8", 0x112, 40, kernel_matches_naive::<i8>);
+        prop("microkernel-vs-naive-i16", 0x113, 40, kernel_matches_naive::<i16>);
+        prop("microkernel-vs-naive-bf16", 0x114, 40, kernel_matches_naive::<Bf16>);
+    }
+
+    #[test]
+    fn i16_kernel_uses_i64_accumulator() {
+        // 32 products of 32767·32767 overflow i32 but not i64.
+        let kc = 32;
+        let a = Mat::<i16>::from_vec(MR, kc, vec![32767; MR * kc]);
+        let b = Mat::<i16>::from_vec(kc, NR, vec![32767; kc * NR]);
+        let pa = pack_a(&a, 0, 0, MR, kc);
+        let pb = pack_b(&b, 0, 0, kc, NR);
+        let mut cr = [0i64; MR * NR];
+        ElemKernel::<i16>::new().run(kc, pa.panel(0), pb.panel(0), &mut cr);
+        let want = kc as i64 * 32767 * 32767;
+        assert!(want > i32::MAX as i64);
+        assert!(cr.iter().all(|&v| v == want));
+    }
+
+    #[test]
+    fn bf16_kernel_sums_representable_values_exactly() {
+        // Powers of two survive bf16 rounding and sum exactly in f32.
+        let kc = 16;
+        let halves = vec![0.5f32; MR * kc];
+        let twos = vec![2.0f32; kc * NR];
+        let a = Mat::<Bf16>::from_f32_slice(MR, kc, &halves);
+        let b = Mat::<Bf16>::from_f32_slice(kc, NR, &twos);
+        let pa = pack_a(&a, 0, 0, MR, kc);
+        let pb = pack_b(&b, 0, 0, kc, NR);
+        let mut cr = [0.0f32; MR * NR];
+        ElemKernel::<Bf16>::new().run(kc, pa.panel(0), pb.panel(0), &mut cr);
+        assert!(cr.iter().all(|&v| v == kc as f32));
     }
 }

@@ -2,15 +2,24 @@
 //!
 //! Structure mirrors the paper:
 //!
-//! - [`types`]       — dense row-major matrices (u8 inputs, i32 accumulate).
+//! - [`precision`]   — §4.2's mixed-precision family: the [`Precision`]
+//!                     enum (u8/i8/i16/bf16), the [`Element`]/[`Accum`]
+//!                     traits and the [`Bf16`] storage type. Every layer
+//!                     below is generic over it.
+//! - [`types`]       — dense row-major matrices, generic over the element
+//!                     ([`Mat<T>`]; the u8/i32 aliases are the paper's
+//!                     original operands).
 //! - [`ccp`]         — §4.3: derivation of the cache configuration
-//!                     parameters (mc, nc, kc) from the memory capacities.
+//!                     parameters (mc, nc, kc) from the memory capacities
+//!                     and the element width.
 //! - [`packing`]     — Figure 1 (bottom-left): packing A→Ac (mr-row panels,
 //!                     column-major inside a panel) and B→Bc (nr-column
-//!                     panels, row-major inside a panel).
-//! - [`microkernel`] — §4.2/Figure 4: the 8×8 UINT8 micro-kernel. Computes
-//!                     the *real* product (u8·u8→i32) and, through
-//!                     [`crate::sim`], the cycle cost of the AIE execution.
+//!                     panels, row-major inside a panel), per element width.
+//! - [`microkernel`] — §4.2/Figure 4: the 8×8 micro-kernel family
+//!                     ([`ElemKernel<T>`]); computes the *real* product
+//!                     (u8·u8→i32, i8·i8→i32, i16·i16→i64, bf16·bf16→f32)
+//!                     and, through [`crate::sim`], the per-precision cycle
+//!                     cost of the AIE execution.
 //! - [`blocked`]     — Figure 1 (top-left): the sequential five-loop
 //!                     algorithm on one AIE tile.
 //! - [`parallel`]    — Figure 5/6: the parallel design distributing loop
@@ -29,15 +38,20 @@ pub mod ccp;
 pub mod microkernel;
 pub mod packing;
 pub mod parallel;
+pub mod precision;
 pub mod tuner;
 pub mod types;
 
 pub use blocked::BlockedGemm;
 pub use ccp::Ccp;
-pub use microkernel::{MicroKernel, MR, NR};
+pub use microkernel::{ElemKernel, MicroKernel, MR, NR};
 pub use packing::{pack_a, pack_b, PackedA, PackedB};
 pub use parallel::{ParallelGemm, TileStats};
-pub use types::{MatI32, MatU8};
+pub use precision::{
+    bf16_forward_error_bound, Accum, Bf16, Element, Precision, PrecisionPolicy,
+};
+pub use tuner::{select_precision, PrecisionChoice};
+pub use types::{Mat, MatI32, MatU8};
 
 /// Problem + algorithm configuration shared by the drivers.
 #[derive(Debug, Clone)]

@@ -7,62 +7,70 @@
 //! of B into Bc (FPGA Block RAM) in nr-column panels stored row-major
 //! within each panel, so Br rows stream with unit stride.
 //!
+//! Both routines are generic over the [`Element`] width: the panel
+//! *layout* (mr/nr geometry) is identical for every precision of the
+//! mixed-precision suite, while the byte footprints — what the memory
+//! pools and the Br-copy cycle model consume — scale with
+//! `size_of::<T>()`, so a 2-byte i16/bf16 panel occupies and streams
+//! twice the bytes of the u8 panel automatically.
+//!
 //! Edge panels (when the block dimension is not a multiple of mr/nr) are
-//! zero-padded — the zeros contribute nothing to the accumulation, which
-//! keeps the micro-kernel branch-free exactly like production BLIS.
+//! zero-padded (`T::default()`) — the zeros contribute nothing to the
+//! accumulation, which keeps the micro-kernel branch-free exactly like
+//! production BLIS.
 
 use super::microkernel::{MR, NR};
-use super::types::MatU8;
+use super::types::Mat;
 
 /// A packed buffer for Ac: `ceil(mc/mr)` panels, each `mr × kc`,
 /// column-major inside the panel (element (i, p) of a panel at
-/// `panel_base + p*mr + i`).
+/// `panel_base + p*mr + i`). Defaults to the paper's u8 element.
 #[derive(Debug, Clone, PartialEq, Eq)]
-pub struct PackedA {
+pub struct PackedA<T = u8> {
     pub mc: usize,
     pub kc: usize,
     pub n_panels: usize,
-    pub data: Vec<u8>,
+    pub data: Vec<T>,
 }
 
-impl PackedA {
+impl<T: Copy> PackedA<T> {
     /// Borrow the micro-panel Ar for row-panel index `pi` (covers rows
     /// `pi*mr .. pi*mr+mr` of the block).
-    pub fn panel(&self, pi: usize) -> &[u8] {
+    pub fn panel(&self, pi: usize) -> &[T] {
         let len = MR * self.kc;
         &self.data[pi * len..(pi + 1) * len]
     }
 
     pub fn bytes(&self) -> u64 {
-        self.data.len() as u64
+        (self.data.len() * std::mem::size_of::<T>()) as u64
     }
 }
 
 /// A packed buffer for Bc: `ceil(nc/nr)` panels, each `kc × nr`,
 /// row-major inside the panel (element (p, j) at `panel_base + p*nr + j`).
 #[derive(Debug, Clone, PartialEq, Eq)]
-pub struct PackedB {
+pub struct PackedB<T = u8> {
     pub kc: usize,
     pub nc: usize,
     pub n_panels: usize,
-    pub data: Vec<u8>,
+    pub data: Vec<T>,
 }
 
-impl PackedB {
+impl<T: Copy> PackedB<T> {
     /// Borrow the micro-panel Br for column-panel index `pj` (covers
     /// columns `pj*nr .. pj*nr+nr` of the block).
-    pub fn panel(&self, pj: usize) -> &[u8] {
+    pub fn panel(&self, pj: usize) -> &[T] {
         let len = self.kc * NR;
         &self.data[pj * len..(pj + 1) * len]
     }
 
     pub fn bytes(&self) -> u64 {
-        self.data.len() as u64
+        (self.data.len() * std::mem::size_of::<T>()) as u64
     }
 
     /// Bytes of one micro-panel Br — what a tile copies to local memory.
     pub fn panel_bytes(&self) -> u64 {
-        (self.kc * NR) as u64
+        (self.kc * NR * std::mem::size_of::<T>()) as u64
     }
 }
 
@@ -70,10 +78,16 @@ impl PackedB {
 ///
 /// `mc_eff`/`kc_eff` may be edge-trimmed; panels are padded with zeros to
 /// full `mr × kc_eff` size.
-pub fn pack_a(a: &MatU8, ic: usize, pc: usize, mc_eff: usize, kc_eff: usize) -> PackedA {
+pub fn pack_a<T: Copy + Default>(
+    a: &Mat<T>,
+    ic: usize,
+    pc: usize,
+    mc_eff: usize,
+    kc_eff: usize,
+) -> PackedA<T> {
     assert!(ic + mc_eff <= a.rows && pc + kc_eff <= a.cols, "block out of range");
     let n_panels = mc_eff.div_ceil(MR);
-    let mut data = vec![0u8; n_panels * MR * kc_eff];
+    let mut data = vec![T::default(); n_panels * MR * kc_eff];
     for pi in 0..n_panels {
         let base = pi * MR * kc_eff;
         let rows_here = MR.min(mc_eff - pi * MR);
@@ -82,7 +96,7 @@ pub fn pack_a(a: &MatU8, ic: usize, pc: usize, mc_eff: usize, kc_eff: usize) -> 
             // destination walks the panel linearly while eight read
             // streams advance in lockstep (an 8×kc transpose). ~2× over
             // the row-scatter order (§Perf).
-            let rows: [&[u8]; MR] = std::array::from_fn(|i| {
+            let rows: [&[T]; MR] = std::array::from_fn(|i| {
                 &a.data[(ic + pi * MR + i) * a.cols + pc..][..kc_eff]
             });
             let dst = &mut data[base..base + MR * kc_eff];
@@ -105,16 +119,22 @@ pub fn pack_a(a: &MatU8, ic: usize, pc: usize, mc_eff: usize, kc_eff: usize) -> 
 }
 
 /// Pack `B(pc : pc+kc_eff, jc : jc+nc_eff)` into nr-column panels.
-pub fn pack_b(b: &MatU8, pc: usize, jc: usize, kc_eff: usize, nc_eff: usize) -> PackedB {
+pub fn pack_b<T: Copy + Default>(
+    b: &Mat<T>,
+    pc: usize,
+    jc: usize,
+    kc_eff: usize,
+    nc_eff: usize,
+) -> PackedB<T> {
     assert!(pc + kc_eff <= b.rows && jc + nc_eff <= b.cols, "block out of range");
     let n_panels = nc_eff.div_ceil(NR);
-    let mut data = vec![0u8; n_panels * kc_eff * NR];
+    let mut data = vec![T::default(); n_panels * kc_eff * NR];
     for pj in 0..n_panels {
         let base = pj * kc_eff * NR;
         let cols_here = NR.min(nc_eff - pj * NR);
         if cols_here == NR {
-            // Full panel: each destination row of NR bytes is contiguous
-            // in B too — straight memcpy per row (§Perf).
+            // Full panel: each destination row of NR elements is
+            // contiguous in B too — straight memcpy per row (§Perf).
             for p in 0..kc_eff {
                 let src = &b.data[(pc + p) * b.cols + jc + pj * NR..][..NR];
                 data[base + p * NR..base + p * NR + NR].copy_from_slice(src);
@@ -132,6 +152,8 @@ pub fn pack_b(b: &MatU8, pc: usize, jc: usize, kc_eff: usize, nc_eff: usize) -> 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::gemm::precision::{Bf16, Element};
+    use crate::gemm::types::MatU8;
     use crate::util::quickcheck::prop;
     use crate::util::Pcg32;
 
@@ -182,53 +204,76 @@ mod tests {
     }
 
     #[test]
+    fn packed_bytes_scale_with_element_width() {
+        let mut rng = Pcg32::new(2);
+        let a8 = MatU8::random(16, 16, &mut rng);
+        let a16 = Mat::<i16>::random(16, 16, &mut rng);
+        let abf = Mat::<Bf16>::random(16, 16, &mut rng);
+        assert_eq!(pack_a(&a8, 0, 0, 16, 16).bytes(), 256);
+        assert_eq!(pack_a(&a16, 0, 0, 16, 16).bytes(), 512);
+        assert_eq!(pack_a(&abf, 0, 0, 16, 16).bytes(), 512);
+        let b16 = Mat::<i16>::random(16, 16, &mut rng);
+        let pb = pack_b(&b16, 0, 0, 16, 16);
+        assert_eq!(pb.panel_bytes(), 16 * 8 * 2);
+        assert_eq!(pb.bytes(), 2 * pb.panel_bytes());
+    }
+
+    /// Per-element-width pack→unpack round trip: every in-range panel
+    /// lane equals the source element, every padding lane is the additive
+    /// zero. Mirrors the u8 edge-shape property below for the full suite.
+    fn roundtrip_case<T: Element>(g: &mut crate::util::quickcheck::Gen) -> Result<(), String> {
+        let rows = g.dim(40);
+        let cols = g.dim(40);
+        let a = Mat::<T>::random(rows, cols, &mut g.rng);
+        let mc = g.rng.range(1, rows + 1);
+        let kc = g.rng.range(1, cols + 1);
+        let ic = g.rng.range(0, rows - mc + 1);
+        let pc = g.rng.range(0, cols - kc + 1);
+        let pa = pack_a(&a, ic, pc, mc, kc);
+        if pa.data.len() != pa.n_panels * MR * kc {
+            return Err(format!("A panel buffer sized {} != {}", pa.data.len(), pa.n_panels * MR * kc));
+        }
+        for pi in 0..pa.n_panels {
+            let rows_here = MR.min(mc - pi * MR);
+            for p in 0..kc {
+                for i in 0..MR {
+                    let got = pa.panel(pi)[p * MR + i];
+                    let want =
+                        if i < rows_here { a.at(ic + pi * MR + i, pc + p) } else { T::default() };
+                    if got != want {
+                        return Err(format!("A panel {pi} ({i},{p}): {got:?} != {want:?}"));
+                    }
+                }
+            }
+        }
+        let b = Mat::<T>::random(rows, cols, &mut g.rng);
+        let kcb = g.rng.range(1, rows + 1);
+        let nc = g.rng.range(1, cols + 1);
+        let pcb = g.rng.range(0, rows - kcb + 1);
+        let jc = g.rng.range(0, cols - nc + 1);
+        let pb = pack_b(&b, pcb, jc, kcb, nc);
+        for pj in 0..pb.n_panels {
+            let cols_here = NR.min(nc - pj * NR);
+            for p in 0..kcb {
+                for j in 0..NR {
+                    let got = pb.panel(pj)[p * NR + j];
+                    let want =
+                        if j < cols_here { b.at(pcb + p, jc + pj * NR + j) } else { T::default() };
+                    if got != want {
+                        return Err(format!("B panel {pj} ({p},{j}): {got:?} != {want:?}"));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    #[test]
     fn prop_unpack_recovers_block() {
-        prop("pack-roundtrip", 0xA11, 80, |g| {
-            let rows = g.dim(40);
-            let cols = g.dim(40);
-            let a = MatU8::random(rows, cols, &mut g.rng);
-            let mc = g.rng.range(1, rows + 1);
-            let kc = g.rng.range(1, cols + 1);
-            let ic = g.rng.range(0, rows - mc + 1);
-            let pc = g.rng.range(0, cols - kc + 1);
-            let pa = pack_a(&a, ic, pc, mc, kc);
-            for pi in 0..pa.n_panels {
-                let rows_here = MR.min(mc - pi * MR);
-                for p in 0..kc {
-                    for i in 0..MR {
-                        let got = pa.panel(pi)[p * MR + i];
-                        let want = if i < rows_here { a.at(ic + pi * MR + i, pc + p) } else { 0 };
-                        if got != want {
-                            return Err(format!("A panel {pi} ({i},{p}): {got} != {want}"));
-                        }
-                    }
-                }
-            }
-            Ok(())
-        });
-        prop("pack-b-roundtrip", 0xB22, 80, |g| {
-            let rows = g.dim(40);
-            let cols = g.dim(40);
-            let b = MatU8::random(rows, cols, &mut g.rng);
-            let kc = g.rng.range(1, rows + 1);
-            let nc = g.rng.range(1, cols + 1);
-            let pc = g.rng.range(0, rows - kc + 1);
-            let jc = g.rng.range(0, cols - nc + 1);
-            let pb = pack_b(&b, pc, jc, kc, nc);
-            for pj in 0..pb.n_panels {
-                let cols_here = NR.min(nc - pj * NR);
-                for p in 0..kc {
-                    for j in 0..NR {
-                        let got = pb.panel(pj)[p * NR + j];
-                        let want = if j < cols_here { b.at(pc + p, jc + pj * NR + j) } else { 0 };
-                        if got != want {
-                            return Err(format!("B panel {pj} ({p},{j}): {got} != {want}"));
-                        }
-                    }
-                }
-            }
-            Ok(())
-        });
+        prop("pack-roundtrip-u8", 0xA11, 80, roundtrip_case::<u8>);
+        prop("pack-roundtrip-i8", 0xA12, 50, roundtrip_case::<i8>);
+        prop("pack-roundtrip-i16", 0xA13, 50, roundtrip_case::<i16>);
+        prop("pack-roundtrip-bf16", 0xA14, 50, roundtrip_case::<Bf16>);
     }
 
     #[test]

@@ -25,9 +25,10 @@
 //! its Performance/tile column to the printed precision.
 
 use super::ccp::Ccp;
-use super::microkernel::{MicroKernel, MR, NR};
+use super::microkernel::{ElemKernel, MicroKernel, MR, NR};
 use super::packing::{pack_a, pack_b};
-use super::types::{MatI32, MatU8};
+use super::precision::{Accum, Element, Precision};
+use super::types::{Mat, MatI32, MatU8};
 use super::GemmConfig;
 use crate::arch::VersalArch;
 use crate::sim::{AieTileModel, CycleBreakdown, Gmio, KernelMode, Multicast, Stream};
@@ -65,13 +66,28 @@ impl<'a> ParallelGemm<'a> {
         ParallelGemm { arch, tile: AieTileModel::new(arch) }
     }
 
-    /// C += A·B on `cfg.tiles` AIE tiles. Exact numerics + schedule cycles.
+    /// C += A·B on `cfg.tiles` AIE tiles (the paper's u8 pipeline).
+    /// Exact numerics + schedule cycles.
     pub fn run(
         &self,
         cfg: &GemmConfig,
         a: &MatU8,
         b: &MatU8,
         c: &mut MatI32,
+    ) -> Result<(CycleBreakdown, Vec<TileStats>)> {
+        self.run_p::<u8>(cfg, a, b, c)
+    }
+
+    /// C += A·B on `cfg.tiles` AIE tiles at any precision of the suite.
+    /// The loop-L4 distribution is precision-independent; buffer bytes,
+    /// vector-op counts, Ar stream traffic and the Cr round trip scale
+    /// with `T::PRECISION`.
+    pub fn run_p<T: Element>(
+        &self,
+        cfg: &GemmConfig,
+        a: &Mat<T>,
+        b: &Mat<T>,
+        c: &mut Mat<T::Acc>,
     ) -> Result<(CycleBreakdown, Vec<TileStats>)> {
         ensure!(a.cols == b.rows, "inner dimensions differ");
         ensure!((c.rows, c.cols) == (a.rows, b.cols), "output shape mismatch");
@@ -82,13 +98,24 @@ impl<'a> ParallelGemm<'a> {
             cfg.tiles,
             self.arch.aie.n_tiles
         );
-        cfg.ccp.check(self.arch, 1).map_err(anyhow::Error::msg)?;
+        let prec = T::PRECISION;
+        cfg.ccp.check(self.arch, prec.elem_bytes()).map_err(anyhow::Error::msg)?;
         // Multicast feasibility (Ar is shared by all active tiles).
         Multicast::new(self.arch, cfg.tiles).map_err(|e| anyhow::anyhow!(e.to_string()))?;
+        // Worst-case accumulator feasibility (see `Precision::max_safe_k`).
+        debug_assert!(
+            match prec.max_safe_k() {
+                Some(kb) => a.cols as u64 <= kb,
+                None => true,
+            },
+            "k={} exceeds the safe accumulation bound {:?} for {prec}",
+            a.cols,
+            prec.max_safe_k()
+        );
 
         let (m, n, k) = (a.rows, b.cols, a.cols);
         let Ccp { mc, nc, kc } = cfg.ccp;
-        let kernel = MicroKernel;
+        let kernel = ElemKernel::<T>::new();
         let mut cycles = CycleBreakdown::zero();
         let mut stats: Vec<TileStats> =
             (0..cfg.tiles).map(|t| TileStats { tile: t, ..Default::default() }).collect();
@@ -121,16 +148,17 @@ impl<'a> ParallelGemm<'a> {
                         let t = pj % cfg.tiles;
                         stats[t].br_copies += 1;
                         stats[t].kernels += ac.n_panels as u64;
-                        stats[t].macs += ac.n_panels as u64 * MicroKernel::macs(kc_eff);
+                        stats[t].macs += ac.n_panels as u64 * ElemKernel::<T>::macs(kc_eff);
                     }
 
                     // ----- schedule: lockstep rounds over the L4 space ---
-                    cycles += self.block_schedule(
+                    cycles += self.block_schedule_p(
                         cfg,
                         bc.n_panels,
                         ac.n_panels,
                         kc_eff,
                         bc.panel_bytes(),
+                        prec,
                     );
                     ic += mc_eff;
                 }
@@ -154,11 +182,26 @@ impl<'a> ParallelGemm<'a> {
         kc_eff: usize,
         br_bytes: u64,
     ) -> CycleBreakdown {
+        self.block_schedule_p(cfg, panels_b, panels_a, kc_eff, br_bytes, Precision::U8)
+    }
+
+    /// [`ParallelGemm::block_schedule`] at any precision. `br_bytes` is
+    /// the *byte* size of one Br micro-panel (kc · nr · elem width) — the
+    /// numeric drivers pass the packed panel's real footprint.
+    pub fn block_schedule_p(
+        &self,
+        cfg: &GemmConfig,
+        panels_b: usize,
+        panels_a: usize,
+        kc_eff: usize,
+        br_bytes: u64,
+        prec: Precision,
+    ) -> CycleBreakdown {
         let stream = Stream::new(self.arch);
         let gmio = Gmio::new(self.arch);
         let kc_cycles = kc_eff.next_multiple_of(AieTileModel::UNROLL);
         let kernel_cycles =
-            self.tile.kernel_cycles(kc_cycles, KernelMode::Baseline, cfg.steady_stream);
+            self.tile.kernel_cycles_p(kc_cycles, KernelMode::Baseline, cfg.steady_stream, prec);
 
         let mut cy = CycleBreakdown::zero();
         let rounds = panels_b.div_ceil(cfg.tiles);
@@ -171,7 +214,7 @@ impl<'a> ParallelGemm<'a> {
         for r in 0..rounds {
             let active = cfg.tiles.min(panels_b - r * cfg.tiles);
             let orch = (self.arch.ic.orch_base_cycles * (active * active) as f64) as u64;
-            let cr_max = gmio.cr_roundtrip_cycles(active);
+            let cr_max = gmio.cr_roundtrip_cycles_p(active, prec);
             cy.orchestration += orch;
             cy.copy_cr += cr_max * panels_a as u64;
             cy.ar_stream += kernel_cycles.ar_stream * panels_a as u64;
@@ -208,16 +251,17 @@ impl<'a> ParallelGemm<'a> {
     }
 }
 
-/// Numerics of one (mc, nc, kc) block: every (pi, pj) micro-kernel.
+/// Numerics of one (mc, nc, kc) block: every (pi, pj) micro-kernel, at
+/// any element precision.
 ///
 /// Row-panels write disjoint row bands of C, so the band slices can be
 /// handed to host threads safely; threading engages only when the block
 /// carries enough MACs to amortise spawn cost (§Perf).
-fn compute_block(
-    kernel: &MicroKernel,
-    ac: &super::packing::PackedA,
-    bc: &super::packing::PackedB,
-    c: &mut MatI32,
+fn compute_block<T: Element>(
+    kernel: &ElemKernel<T>,
+    ac: &super::packing::PackedA<T>,
+    bc: &super::packing::PackedB<T>,
+    c: &mut Mat<T::Acc>,
     ic: usize,
     jc: usize,
     kc_eff: usize,
@@ -227,15 +271,15 @@ fn compute_block(
     let c_rows = c.rows;
     let block_rows_end = (ic + ac.mc).min(c_rows);
     let cblock = &mut c.data[ic * c_cols..block_rows_end * c_cols];
-    let total_macs = ac.n_panels as u64 * bc.n_panels as u64 * MicroKernel::macs(kc_eff);
+    let total_macs = ac.n_panels as u64 * bc.n_panels as u64 * ElemKernel::<T>::macs(kc_eff);
 
     // One row-panel's worth of work, writing into its private row band.
-    let do_panel = |pi: usize, band: &mut [i32]| {
+    let do_panel = |pi: usize, band: &mut [T::Acc]| {
         let band_rows = band.len() / c_cols;
         let ar = ac.panel(pi);
         for pj in 0..bc.n_panels {
             let br = bc.panel(pj);
-            let mut cr = [0i32; MR * NR];
+            let mut cr = [T::Acc::zero(); MR * NR];
             kernel.run(kc_eff, ar, br, &mut cr);
             // Scatter into the band, clipping at the matrix edges.
             let col0 = jc + pj * NR;
@@ -243,7 +287,7 @@ fn compute_block(
             for i in 0..MR.min(band_rows) {
                 let row = &mut band[i * c_cols + col0..i * c_cols + col0 + cols];
                 for (j, r) in row.iter_mut().enumerate() {
-                    *r += cr[i * NR + j];
+                    *r = r.acc_add(cr[i * NR + j]);
                 }
             }
         }
@@ -258,12 +302,12 @@ fn compute_block(
         std::thread::scope(|s| {
             let mut handles = Vec::new();
             // Group row bands into `threads` contiguous chunks.
-            let bands: Vec<(usize, &mut [i32])> =
+            let bands: Vec<(usize, &mut [T::Acc])> =
                 cblock.chunks_mut(MR * c_cols).enumerate().collect();
             let per = bands.len().div_ceil(threads);
             let mut it = bands.into_iter();
             loop {
-                let group: Vec<(usize, &mut [i32])> = it.by_ref().take(per).collect();
+                let group: Vec<(usize, &mut [T::Acc])> = it.by_ref().take(per).collect();
                 if group.is_empty() {
                     break;
                 }
@@ -397,6 +441,65 @@ mod tests {
         let mut c = MatI32::zeros(8, 8);
         assert!(g.run(&cfg(401, 8, 8, 8), &a, &b, &mut c).is_err());
         assert!(g.run(&cfg(0, 8, 8, 8), &a, &b, &mut c).is_err());
+    }
+
+    #[test]
+    fn generic_parallel_matches_naive_per_precision() {
+        use crate::gemm::baseline::naive_gemm_p;
+        use crate::gemm::precision::Bf16;
+        let arch = vc1902();
+        let g = ParallelGemm::new(&arch);
+        let mut rng = Pcg32::new(23);
+        // i8 and i16 across several tile counts: bit-exact.
+        let a = Mat::<i8>::random(24, 40, &mut rng);
+        let b = Mat::<i8>::random(40, 24, &mut rng);
+        let mut want = Mat::<i32>::zeros(24, 24);
+        naive_gemm_p::<i8>(&a, &b, &mut want);
+        for tiles in [1, 3, 8] {
+            let mut c = Mat::<i32>::zeros(24, 24);
+            g.run_p::<i8>(&cfg(tiles, 16, 16, 32), &a, &b, &mut c).unwrap();
+            assert_eq!(c.max_abs_diff_f64(&want), 0.0, "i8 tiles={tiles}");
+        }
+        let a = Mat::<i16>::random(20, 33, &mut rng);
+        let b = Mat::<i16>::random(33, 19, &mut rng);
+        let mut want = Mat::<i64>::zeros(20, 19);
+        naive_gemm_p::<i16>(&a, &b, &mut want);
+        let mut c = Mat::<i64>::zeros(20, 19);
+        g.run_p::<i16>(&cfg(4, 16, 16, 16), &a, &b, &mut c).unwrap();
+        assert_eq!(c.max_abs_diff_f64(&want), 0.0, "i16");
+        // bf16 runs and stays finite; tight error bounds live in the
+        // conformance suite (tests/precision_conformance.rs).
+        let a = Mat::<Bf16>::random(16, 24, &mut rng);
+        let b = Mat::<Bf16>::random(24, 16, &mut rng);
+        let mut c = Mat::<f32>::zeros(16, 16);
+        let (cy, _) = g.run_p::<Bf16>(&cfg(2, 16, 16, 16), &a, &b, &mut c).unwrap();
+        assert!(cy.total > 0);
+        assert!(c.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn per_precision_schedule_ordering_on_table2_block() {
+        // The cycle model's headline prediction, at the block level:
+        // u8 throughput ≥ i16 ≥ bf16 for the same (feasible) geometry.
+        let arch = vc1902();
+        let g = ParallelGemm::new(&arch);
+        let cfg = cfg(8, 256, 256, 1024);
+        let macs = (256 * 256 * 1024) as f64;
+        let total = |prec: Precision| {
+            let br = (1024 * NR) as u64 * prec.elem_bytes();
+            g.block_schedule_p(&cfg, 32, 32, 1024, br, prec).total as f64
+        };
+        let (u8t, i16t, bf16t) =
+            (total(Precision::U8), total(Precision::I16), total(Precision::Bf16));
+        assert!(
+            macs / u8t >= macs / i16t && macs / i16t >= macs / bf16t,
+            "u8 {u8t} i16 {i16t} bf16 {bf16t}"
+        );
+        // And the u8 instance is unchanged from the seed model.
+        assert_eq!(
+            g.block_schedule(&cfg, 32, 32, 1024, (1024 * NR) as u64),
+            g.block_schedule_p(&cfg, 32, 32, 1024, (1024 * NR) as u64, Precision::U8)
+        );
     }
 
     #[test]

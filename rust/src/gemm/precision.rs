@@ -1,0 +1,446 @@
+//! Mixed-precision element types — the paper's §4.2 micro-kernel family.
+//!
+//! §1/§4.2 motivate an "architecture-specific micro-kernel for mixed
+//! precision arithmetic to address the strong demand for adaptive-precision
+//! inference in deep learning". The seed repo implemented only the UINT8
+//! kernel; this module generalises the whole GEMM stack over a [`Precision`]
+//! enum and an [`Element`] trait so the same packing routines, drivers and
+//! schedule models serve four datapaths:
+//!
+//! | precision | operands      | accumulator | AIE MACs per vector op |
+//! |-----------|---------------|-------------|------------------------|
+//! | `U8`      | u8 · u8       | i32         | 128 (`mac16()`, §4.2)  |
+//! | `I8`      | i8 · i8       | i32         | 128                    |
+//! | `I16`     | i16 · i16     | i64         | 32                     |
+//! | `Bf16`    | bf16 · bf16   | f32         | 16                     |
+//!
+//! The MACs-per-vector-op column follows the AIE vector unit widths of §2:
+//! the 1024-bit datapath retires 128 8-bit MACs per `mac16()` call, 32
+//! 16-bit MACs, and ≈16 bf16 MACs per floating-point vector op. The bf16
+//! kernel is *emulated*: operands are bf16-rounded (round-to-nearest-even)
+//! and every product/accumulation runs in f32 — exactly the numerics of an
+//! AIE bf16 MAC with an fp32 accumulator, so the conformance suite can
+//! bound its error against an f64 reference.
+//!
+//! [`Element`] carries the storage type, its accumulator ([`Accum`]) and the
+//! exact widening product; [`PrecisionPolicy`] is the per-layer knob the dl
+//! substrate and the tuner use to trade accuracy for cycles.
+
+use crate::util::Pcg32;
+
+/// The four kernel datapaths of the mixed-precision suite.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Precision {
+    /// u8 · u8 → i32 — the paper's shipping kernel (§4.2, Figure 4).
+    U8,
+    /// i8 · i8 → i32 — symmetric signed quantisation (no zero point).
+    I8,
+    /// i16 · i16 → i64 — high-accuracy integer inference.
+    I16,
+    /// bf16 · bf16 → f32 — emulated via f32 with bf16 input rounding.
+    Bf16,
+}
+
+impl Precision {
+    /// All precisions in the canonical (cheapest-first) order.
+    pub const ALL: [Precision; 4] =
+        [Precision::U8, Precision::I8, Precision::I16, Precision::Bf16];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Precision::U8 => "u8",
+            Precision::I8 => "i8",
+            Precision::I16 => "i16",
+            Precision::Bf16 => "bf16",
+        }
+    }
+
+    /// Parse a CLI/env spelling (`u8`, `i8`, `i16`, `bf16`).
+    pub fn parse(s: &str) -> Result<Precision, String> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "u8" | "uint8" => Ok(Precision::U8),
+            "i8" | "int8" => Ok(Precision::I8),
+            "i16" | "int16" => Ok(Precision::I16),
+            "bf16" | "bfloat16" => Ok(Precision::Bf16),
+            other => Err(format!("unknown precision {other:?} (want u8|i8|i16|bf16)")),
+        }
+    }
+
+    /// Bytes of one input operand element (A/B panels, Br copies).
+    pub fn elem_bytes(self) -> u64 {
+        match self {
+            Precision::U8 | Precision::I8 => 1,
+            Precision::I16 | Precision::Bf16 => 2,
+        }
+    }
+
+    /// Bytes of one accumulator element (the Cr GMIO round trip).
+    pub fn acc_bytes(self) -> u64 {
+        match self {
+            Precision::U8 | Precision::I8 | Precision::Bf16 => 4,
+            Precision::I16 => 8,
+        }
+    }
+
+    /// MACs retired by one AIE vector op at this precision (§2: the
+    /// 1024-bit vector unit does 128 8-bit, 32 16-bit, ≈16 bf16 MACs).
+    pub fn macs_per_vec_op(self) -> u64 {
+        match self {
+            Precision::U8 | Precision::I8 => 128,
+            Precision::I16 => 32,
+            Precision::Bf16 => 16,
+        }
+    }
+
+    /// Largest reduction dimension k for which the worst-case operand
+    /// streams cannot overflow the accumulator:
+    ///
+    /// - u8:  k · 255²  ≤ i32::MAX ⇒ k ≤ 33 025
+    /// - i8:  k · 128²  ≤ i32::MAX ⇒ k ≤ 131 071
+    /// - i16: k · 32768² ≤ i64::MAX ⇒ k ≤ 8 589 934 591
+    /// - bf16: `None` — f32 saturates to ±inf, it cannot wrap.
+    ///
+    /// The drivers enforce this with a debug assertion; the conformance
+    /// suite pins the u8 bound with all-255 adversarial operands.
+    pub fn max_safe_k(self) -> Option<u64> {
+        match self {
+            Precision::U8 => Some(i32::MAX as u64 / (255 * 255)),
+            Precision::I8 => Some(i32::MAX as u64 / (128 * 128)),
+            Precision::I16 => Some(i64::MAX as u64 / (32_768 * 32_768)),
+            Precision::Bf16 => None,
+        }
+    }
+
+    /// Predicted relative error of a length-`k` dot product at this
+    /// precision — the accuracy side of the tuner's precision selection.
+    ///
+    /// Model: integer operands are quantised from f32, so each element
+    /// carries a quantisation step of `1/2^bits` of the operand range and
+    /// the errors accumulate as a √k random walk. bf16 operands are
+    /// assumed *natively stored* (DL weights trained and shipped in bf16 —
+    /// no input quantisation error); products of bf16 values are exact in
+    /// f32, so only the f32 accumulation rounding (unit roundoff 2⁻²⁴)
+    /// remains. This makes bf16 the high-accuracy end of the suite and u8
+    /// the cheap end, which is the adaptive-precision trade §1 describes.
+    pub fn quant_rel_error(self, k: usize) -> f64 {
+        let sk = (k.max(1) as f64).sqrt();
+        match self {
+            Precision::U8 => sk / 256.0,
+            Precision::I8 => sk / 128.0,
+            Precision::I16 => sk / 32_768.0,
+            Precision::Bf16 => sk * 2f64.powi(-24),
+        }
+    }
+}
+
+impl std::fmt::Display for Precision {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// First-order forward-error bound of the bf16 path against an exact
+/// reference: every bf16·bf16 product is exact in f32, and a chain of at
+/// most 2k+4 f32 additions (in-kernel, per-kc-chunk store-accumulates,
+/// shard write-backs) rounds by at most
+///
+/// ```text
+/// |ŝ − s| ≤ (2k + 4) · 2⁻²⁴ · Σ|aᵢ·bᵢ|
+/// ```
+///
+/// (derivation in `tests/precision_conformance.rs`). `sum_abs` is
+/// Σ|aᵢ·bᵢ| for the element being bounded — for inputs in [−1, 1] it is
+/// at most k. Comparing two *f32* computations (e.g. a driver against
+/// the naive f32 reference) doubles the bound, one sided-error per side.
+pub fn bf16_forward_error_bound(k: usize, sum_abs: f64) -> f64 {
+    (2 * k + 4) as f64 * 2f64.powi(-24) * sum_abs
+}
+
+/// How a dl layer chooses its GEMM precision.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum PrecisionPolicy {
+    /// Always run at the given precision.
+    Fixed(Precision),
+    /// Let the tuner pick the cheapest precision whose predicted relative
+    /// error (see [`Precision::quant_rel_error`]) meets the budget; falls
+    /// back to bf16 when no precision qualifies.
+    Adaptive { max_rel_error: f64 },
+}
+
+impl Default for PrecisionPolicy {
+    fn default() -> PrecisionPolicy {
+        PrecisionPolicy::Fixed(Precision::U8)
+    }
+}
+
+/// An accumulator scalar: i32 (u8/i8), i64 (i16) or f32 (bf16).
+pub trait Accum:
+    Copy + Clone + Default + PartialEq + Send + Sync + std::fmt::Debug + 'static
+{
+    fn zero() -> Self;
+    fn acc_add(self, rhs: Self) -> Self;
+    fn acc_mul(self, rhs: Self) -> Self;
+    /// |self − rhs| in f64 (exact integer paths must give 0.0).
+    fn abs_diff_f64(self, rhs: Self) -> f64;
+    fn to_f64(self) -> f64;
+}
+
+impl Accum for i32 {
+    fn zero() -> i32 {
+        0
+    }
+    fn acc_add(self, rhs: i32) -> i32 {
+        self + rhs
+    }
+    fn acc_mul(self, rhs: i32) -> i32 {
+        self * rhs
+    }
+    fn abs_diff_f64(self, rhs: i32) -> f64 {
+        ((self as i64) - (rhs as i64)).abs() as f64
+    }
+    fn to_f64(self) -> f64 {
+        self as f64
+    }
+}
+
+impl Accum for i64 {
+    fn zero() -> i64 {
+        0
+    }
+    fn acc_add(self, rhs: i64) -> i64 {
+        self + rhs
+    }
+    fn acc_mul(self, rhs: i64) -> i64 {
+        self * rhs
+    }
+    fn abs_diff_f64(self, rhs: i64) -> f64 {
+        (self - rhs).abs() as f64
+    }
+    fn to_f64(self) -> f64 {
+        self as f64
+    }
+}
+
+impl Accum for f32 {
+    fn zero() -> f32 {
+        0.0
+    }
+    fn acc_add(self, rhs: f32) -> f32 {
+        self + rhs
+    }
+    fn acc_mul(self, rhs: f32) -> f32 {
+        self * rhs
+    }
+    fn abs_diff_f64(self, rhs: f32) -> f64 {
+        ((self as f64) - (rhs as f64)).abs()
+    }
+    fn to_f64(self) -> f64 {
+        self as f64
+    }
+}
+
+/// A GEMM input element. Padding uses `Default` (which must be an additive
+/// zero so the zero-padded panel lanes of [`super::packing`] contribute
+/// nothing to the accumulation).
+pub trait Element:
+    Copy + Clone + Default + PartialEq + Send + Sync + std::fmt::Debug + 'static
+{
+    type Acc: Accum;
+    const PRECISION: Precision;
+    /// Exact widening into the accumulator domain (products of widened
+    /// elements are exact: u8/i8 fit i32, i16 fits i64, bf16 fits f32).
+    fn widen(self) -> Self::Acc;
+    /// Uniform random element (the conformance-suite input generator).
+    fn random(rng: &mut Pcg32) -> Self;
+}
+
+impl Element for u8 {
+    type Acc = i32;
+    const PRECISION: Precision = Precision::U8;
+    fn widen(self) -> i32 {
+        self as i32
+    }
+    fn random(rng: &mut Pcg32) -> u8 {
+        rng.u8()
+    }
+}
+
+impl Element for i8 {
+    type Acc = i32;
+    const PRECISION: Precision = Precision::I8;
+    fn widen(self) -> i32 {
+        self as i32
+    }
+    fn random(rng: &mut Pcg32) -> i8 {
+        rng.u8() as i8
+    }
+}
+
+impl Element for i16 {
+    type Acc = i64;
+    const PRECISION: Precision = Precision::I16;
+    fn widen(self) -> i64 {
+        self as i64
+    }
+    fn random(rng: &mut Pcg32) -> i16 {
+        (rng.next_u32() & 0xFFFF) as u16 as i16
+    }
+}
+
+/// bfloat16: the upper 16 bits of an IEEE-754 f32 (1 sign, 8 exponent,
+/// 7 mantissa bits), stored as raw bits. Conversion from f32 rounds to
+/// nearest-even; conversion to f32 is exact (bit-shift).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq, Hash)]
+pub struct Bf16(pub u16);
+
+impl Bf16 {
+    /// Round an f32 to bf16 (round-to-nearest, ties-to-even). Finite
+    /// values that overflow bf16's range round to ±inf, as in hardware.
+    pub fn from_f32(x: f32) -> Bf16 {
+        let bits = x.to_bits();
+        if x.is_nan() {
+            // Quiet the NaN and keep its sign; never round a NaN to inf.
+            return Bf16(((bits >> 16) as u16) | 0x0040);
+        }
+        let round_bias = 0x7FFF + ((bits >> 16) & 1);
+        Bf16((bits.wrapping_add(round_bias) >> 16) as u16)
+    }
+
+    /// Exact conversion back to f32.
+    pub fn to_f32(self) -> f32 {
+        f32::from_bits((self.0 as u32) << 16)
+    }
+}
+
+impl Element for Bf16 {
+    type Acc = f32;
+    const PRECISION: Precision = Precision::Bf16;
+    fn widen(self) -> f32 {
+        self.to_f32()
+    }
+    fn random(rng: &mut Pcg32) -> Bf16 {
+        // Uniform in [-1, 1): keeps conformance sums well away from f32
+        // overflow while exercising signs, exponents and rounding.
+        Bf16::from_f32(rng.f64() as f32 * 2.0 - 1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn per_precision_constants() {
+        assert_eq!(Precision::U8.elem_bytes(), 1);
+        assert_eq!(Precision::I16.elem_bytes(), 2);
+        assert_eq!(Precision::Bf16.elem_bytes(), 2);
+        assert_eq!(Precision::U8.macs_per_vec_op(), 128);
+        assert_eq!(Precision::I8.macs_per_vec_op(), 128);
+        assert_eq!(Precision::I16.macs_per_vec_op(), 32);
+        assert_eq!(Precision::Bf16.macs_per_vec_op(), 16);
+        assert_eq!(Precision::I16.acc_bytes(), 8);
+    }
+
+    #[test]
+    fn safe_k_bounds_are_tight() {
+        // u8: 33025·255² ≤ i32::MAX < 33026·255².
+        let k = Precision::U8.max_safe_k().unwrap();
+        assert_eq!(k, 33_025);
+        assert!(k * 255 * 255 <= i32::MAX as u64);
+        assert!((k + 1) * 255 * 255 > i32::MAX as u64);
+        // i8: worst product is (−128)² = 16384.
+        let k = Precision::I8.max_safe_k().unwrap();
+        assert!(k * 128 * 128 <= i32::MAX as u64);
+        assert!((k + 1) * 128 * 128 > i32::MAX as u64);
+        assert!(Precision::I16.max_safe_k().unwrap() > 8_000_000_000);
+        assert!(Precision::Bf16.max_safe_k().is_none());
+    }
+
+    #[test]
+    fn parse_roundtrip_and_errors() {
+        for p in Precision::ALL {
+            assert_eq!(Precision::parse(p.name()).unwrap(), p);
+        }
+        assert_eq!(Precision::parse("BF16").unwrap(), Precision::Bf16);
+        assert!(Precision::parse("fp64").is_err());
+    }
+
+    #[test]
+    fn error_model_orders_precisions() {
+        // At any k: bf16 most accurate, then i16, then u8, then i8.
+        for k in [64usize, 512, 2048, 8192] {
+            let e: Vec<f64> =
+                [Precision::Bf16, Precision::I16, Precision::U8, Precision::I8]
+                    .iter()
+                    .map(|p| p.quant_rel_error(k))
+                    .collect();
+            assert!(e[0] < e[1] && e[1] < e[2] && e[2] < e[3], "k={k}: {e:?}");
+        }
+    }
+
+    #[test]
+    fn bf16_roundtrip_exact_for_representable_values() {
+        for x in [0.0f32, -0.0, 1.0, -1.0, 0.5, 2.0, 96.0, -0.15625] {
+            let b = Bf16::from_f32(x);
+            assert_eq!(b.to_f32(), x, "{x} should be bf16-representable");
+        }
+    }
+
+    #[test]
+    fn bf16_rounds_to_nearest_even() {
+        // 1.0 + 2⁻⁸ is exactly halfway between 1.0 and the next bf16
+        // (1.0 + 2⁻⁷); ties-to-even keeps the even mantissa (1.0).
+        let halfway = 1.0f32 + 2f32.powi(-8);
+        assert_eq!(Bf16::from_f32(halfway).to_f32(), 1.0);
+        // Just above the tie rounds up.
+        let above = 1.0f32 + 2f32.powi(-8) + 2f32.powi(-12);
+        assert_eq!(Bf16::from_f32(above).to_f32(), 1.0 + 2f32.powi(-7));
+    }
+
+    #[test]
+    fn bf16_relative_error_bounded_by_2pow8() {
+        let mut rng = Pcg32::new(0xBF16);
+        for _ in 0..2000 {
+            let x = (rng.f64() as f32 - 0.5) * 100.0;
+            let r = Bf16::from_f32(x).to_f32();
+            if x != 0.0 {
+                assert!(
+                    ((r - x) / x).abs() <= 2f32.powi(-8),
+                    "x={x} rounded to {r}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn bf16_special_values() {
+        assert!(Bf16::from_f32(f32::NAN).to_f32().is_nan());
+        assert_eq!(Bf16::from_f32(f32::INFINITY).to_f32(), f32::INFINITY);
+        assert_eq!(Bf16::from_f32(f32::NEG_INFINITY).to_f32(), f32::NEG_INFINITY);
+        // Finite overflow saturates to inf, as the hardware rounding does.
+        assert_eq!(Bf16::from_f32(f32::MAX).to_f32(), f32::INFINITY);
+        assert_eq!(Bf16::default().to_f32(), 0.0);
+    }
+
+    #[test]
+    fn widen_is_exact() {
+        assert_eq!(<u8 as Element>::widen(255), 255i32);
+        assert_eq!(<i8 as Element>::widen(-128), -128i32);
+        assert_eq!(<i16 as Element>::widen(-32768), -32768i64);
+        assert_eq!(<Bf16 as Element>::widen(Bf16::from_f32(1.5)), 1.5f32);
+    }
+
+    #[test]
+    fn accum_ops() {
+        assert_eq!(3i32.acc_add(4).acc_mul(2), 14);
+        assert_eq!(3i64.acc_mul(-4), -12);
+        assert_eq!(2.0f32.acc_add(0.5), 2.5);
+        assert_eq!(5i32.abs_diff_f64(7), 2.0);
+        assert_eq!((-1.5f32).to_f64(), -1.5);
+    }
+
+    #[test]
+    fn policy_default_is_u8() {
+        assert_eq!(PrecisionPolicy::default(), PrecisionPolicy::Fixed(Precision::U8));
+    }
+}

@@ -11,6 +11,7 @@
 use super::ccp::Ccp;
 use super::microkernel::{MR, NR};
 use super::parallel::ParallelGemm;
+use super::precision::Precision;
 use super::GemmConfig;
 use crate::arch::VersalArch;
 use crate::sim::AieTileModel;
@@ -23,13 +24,26 @@ pub struct Tuned {
     pub candidates_evaluated: usize,
 }
 
-/// Predicted wall cycles for a full (m, n, k) problem under `ccp`.
+/// Predicted wall cycles for a full (m, n, k) problem under `ccp` (the
+/// paper's u8 pipeline).
 pub fn predict_cycles(
     arch: &VersalArch,
     cfg: &GemmConfig,
     m: usize,
     n: usize,
     k: usize,
+) -> u64 {
+    predict_cycles_p(arch, cfg, m, n, k, Precision::U8)
+}
+
+/// Predicted wall cycles for a full (m, n, k) problem at any precision.
+pub fn predict_cycles_p(
+    arch: &VersalArch,
+    cfg: &GemmConfig,
+    m: usize,
+    n: usize,
+    k: usize,
+    prec: Precision,
 ) -> u64 {
     let engine = ParallelGemm::new(arch);
     let Ccp { mc, nc, kc } = cfg.ccp;
@@ -44,12 +58,13 @@ pub fn predict_cycles(
             let mut ic = 0;
             while ic < m {
                 let mc_eff = mc.min(m - ic);
-                let sched = engine.block_schedule(
+                let sched = engine.block_schedule_p(
                     cfg,
                     nc_eff.div_ceil(NR),
                     mc_eff.div_ceil(MR),
                     kc_eff.max(1),
-                    (kc_eff * NR) as u64,
+                    (kc_eff * NR) as u64 * prec.elem_bytes(),
+                    prec,
                 );
                 total += sched.total;
                 ic += mc_eff;
@@ -59,6 +74,72 @@ pub fn predict_cycles(
         jc += nc_eff;
     }
     total
+}
+
+/// A feasible paper-shaped CCP for a precision: the Table-2 geometry with
+/// kc clamped to the element width's local-memory budget (a 2-byte Br
+/// panel halves the admissible kc — §4.3 with `elem_bytes` = 2).
+pub fn ccp_for_precision(arch: &VersalArch, prec: Precision) -> Ccp {
+    let max = Ccp::derive_aligned(arch, prec.elem_bytes());
+    Ccp {
+        mc: max.mc.max(MR).min(256),
+        nc: max.nc.max(NR).min(256),
+        kc: max.kc.max(AieTileModel::UNROLL).min(2048),
+    }
+}
+
+/// The tuner's precision selection: the cheapest precision whose
+/// predicted relative error meets the accuracy budget.
+#[derive(Debug, Clone)]
+pub struct PrecisionChoice {
+    pub precision: Precision,
+    /// The (feasible, paper-shaped) CCP the cost was predicted under.
+    pub ccp: Ccp,
+    pub predicted_cycles: u64,
+    /// [`Precision::quant_rel_error`] at the problem's k.
+    pub predicted_rel_error: f64,
+}
+
+/// Pick the cheapest precision whose predicted relative error (see
+/// [`Precision::quant_rel_error`] for the model) stays within
+/// `max_rel_error` for an (m, n, k) problem on `tiles` tiles.
+///
+/// Deterministic: precisions are scanned in [`Precision::ALL`] order and
+/// a candidate replaces the incumbent only on a *strictly* cheaper
+/// predicted schedule, so cost ties (u8 vs i8) resolve to the earlier,
+/// more accurate entry. Returns `None` when no precision meets the
+/// budget (callers typically fall back to bf16, the most accurate path).
+pub fn select_precision(
+    arch: &VersalArch,
+    m: usize,
+    n: usize,
+    k: usize,
+    tiles: usize,
+    max_rel_error: f64,
+) -> Option<PrecisionChoice> {
+    let mut best: Option<PrecisionChoice> = None;
+    for prec in Precision::ALL {
+        let err = prec.quant_rel_error(k);
+        if err > max_rel_error {
+            continue;
+        }
+        let ccp = ccp_for_precision(arch, prec);
+        if ccp.check(arch, prec.elem_bytes()).is_err() {
+            continue;
+        }
+        let mut cfg = GemmConfig::paper_table2(tiles);
+        cfg.ccp = ccp;
+        let cycles = predict_cycles_p(arch, &cfg, m, n, k, prec);
+        if best.as_ref().map(|b| cycles < b.predicted_cycles).unwrap_or(true) {
+            best = Some(PrecisionChoice {
+                precision: prec,
+                ccp,
+                predicted_cycles: cycles,
+                predicted_rel_error: err,
+            });
+        }
+    }
+    best
 }
 
 /// Search the feasible CCP lattice for the cheapest predicted schedule.
@@ -149,5 +230,78 @@ mod tests {
         let tuned = tune(&arch, 256, 256, 2048, 8);
         let paper_cost = predict_cycles(&arch, &GemmConfig::paper_table2(8), 256, 256, 2048);
         assert!(tuned.predicted_cycles <= paper_cost);
+    }
+
+    #[test]
+    fn predict_cycles_u8_equals_precision_instance() {
+        let arch = vc1902();
+        let cfg = GemmConfig::paper_table2(8);
+        assert_eq!(
+            predict_cycles(&arch, &cfg, 256, 256, 2048),
+            predict_cycles_p(&arch, &cfg, 256, 256, 2048, Precision::U8)
+        );
+    }
+
+    #[test]
+    fn ccp_for_precision_is_feasible_and_width_aware() {
+        let arch = vc1902();
+        for prec in Precision::ALL {
+            let ccp = ccp_for_precision(&arch, prec);
+            ccp.check(&arch, prec.elem_bytes()).unwrap();
+        }
+        // 2-byte elements halve the admissible kc (§4.3's arithmetic).
+        let kc8 = ccp_for_precision(&arch, Precision::U8).kc;
+        let kc16 = ccp_for_precision(&arch, Precision::I16).kc;
+        assert_eq!(kc8, 2048);
+        assert!(kc16 < kc8, "i16 kc {kc16} must shrink below u8 kc {kc8}");
+    }
+
+    #[test]
+    fn precision_selection_tight_budget_picks_bf16() {
+        // At k=2048, predicted errors: u8 ≈ 0.18, i8 ≈ 0.35, i16 ≈ 1.4e-3,
+        // bf16 ≈ 2.7e-6 — a 1e-4 budget leaves only bf16.
+        let arch = vc1902();
+        let c = select_precision(&arch, 256, 256, 2048, 8, 1e-4).unwrap();
+        assert_eq!(c.precision, Precision::Bf16);
+        assert!(c.predicted_rel_error <= 1e-4);
+    }
+
+    #[test]
+    fn precision_selection_loose_budget_picks_u8() {
+        // A loose budget admits everything; u8 is the cheapest schedule
+        // (and beats the equal-cost i8 by scan order / lower error).
+        let arch = vc1902();
+        let c = select_precision(&arch, 256, 256, 2048, 8, 0.5).unwrap();
+        assert_eq!(c.precision, Precision::U8);
+        // Mid budget: integers u8/i8 fail, i16 qualifies and is cheaper
+        // than bf16.
+        let c = select_precision(&arch, 256, 256, 2048, 8, 1e-2).unwrap();
+        assert_eq!(c.precision, Precision::I16);
+        // Impossible budget: nothing qualifies.
+        assert!(select_precision(&arch, 256, 256, 2048, 8, 1e-9).is_none());
+    }
+
+    #[test]
+    fn precision_selection_is_deterministic() {
+        let arch = vc1902();
+        for budget in [0.5, 1e-2, 1e-4] {
+            let a = select_precision(&arch, 512, 384, 1024, 4, budget).unwrap();
+            let b = select_precision(&arch, 512, 384, 1024, 4, budget).unwrap();
+            assert_eq!(a.precision, b.precision, "budget {budget}");
+            assert_eq!(a.predicted_cycles, b.predicted_cycles);
+            assert_eq!(a.ccp, b.ccp);
+        }
+    }
+
+    #[test]
+    fn selected_cycles_order_with_cost_not_accuracy() {
+        // Tighter budgets can only cost more cycles: the selection's
+        // predicted schedule is monotone as the budget shrinks.
+        let arch = vc1902();
+        let loose = select_precision(&arch, 256, 256, 2048, 8, 0.5).unwrap();
+        let mid = select_precision(&arch, 256, 256, 2048, 8, 1e-2).unwrap();
+        let tight = select_precision(&arch, 256, 256, 2048, 8, 1e-4).unwrap();
+        assert!(loose.predicted_cycles <= mid.predicted_cycles);
+        assert!(mid.predicted_cycles <= tight.predicted_cycles);
     }
 }

@@ -1,51 +1,61 @@
 //! Dense row-major matrix containers for the mixed-precision GEMM.
 //!
-//! The paper's data types: A, B are UINT8; the accumulators are 48-bit
-//! (`v16acc48`); C is updated in global memory. We accumulate in i32 —
-//! wide enough for any kc ≤ 2^16 of u8·u8 products (255·255·65536 < 2^31).
+//! [`Mat<T>`] is generic over the element: GEMM inputs are any
+//! [`Element`] (u8, i8, i16, bf16) and outputs are the matching
+//! [`Accum`] scalar (i32, i64, f32). The paper's original data types are
+//! the `U8` instance — A, B in UINT8, 48-bit accumulators (`v16acc48`)
+//! modelled as i32, wide enough for any k ≤ 33 025 of u8·u8 products
+//! (see [`super::Precision::max_safe_k`]). [`MatU8`] and [`MatI32`] are
+//! aliases so the seed-era u8 API is unchanged.
 
-/// Row-major u8 matrix (GEMM input operand).
+use super::precision::{Accum, Bf16, Element};
+
+/// Row-major matrix over any scalar.
 #[derive(Debug, Clone, PartialEq, Eq)]
-pub struct MatU8 {
+pub struct Mat<T> {
     pub rows: usize,
     pub cols: usize,
-    pub data: Vec<u8>,
+    pub data: Vec<T>,
 }
 
-impl MatU8 {
-    pub fn zeros(rows: usize, cols: usize) -> MatU8 {
-        MatU8 { rows, cols, data: vec![0; rows * cols] }
-    }
+/// Row-major u8 matrix (the paper's GEMM input operand).
+pub type MatU8 = Mat<u8>;
 
-    pub fn from_vec(rows: usize, cols: usize, data: Vec<u8>) -> MatU8 {
+/// Row-major i32 matrix (the paper's GEMM accumulator / output operand).
+pub type MatI32 = Mat<i32>;
+
+impl<T> Mat<T> {
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<T>) -> Mat<T> {
         assert_eq!(data.len(), rows * cols, "data length mismatch");
-        MatU8 { rows, cols, data }
+        Mat { rows, cols, data }
     }
+}
 
-    /// Filled with a deterministic PRNG stream (tests, benches, examples).
-    pub fn random(rows: usize, cols: usize, rng: &mut crate::util::Pcg32) -> MatU8 {
-        MatU8 { rows, cols, data: rng.vec_u8(rows * cols) }
+impl<T: Copy + Default> Mat<T> {
+    pub fn zeros(rows: usize, cols: usize) -> Mat<T> {
+        Mat { rows, cols, data: vec![T::default(); rows * cols] }
     }
 
     #[inline]
-    pub fn at(&self, r: usize, c: usize) -> u8 {
+    pub fn at(&self, r: usize, c: usize) -> T {
         debug_assert!(r < self.rows && c < self.cols);
         self.data[r * self.cols + c]
     }
 
     #[inline]
-    pub fn set(&mut self, r: usize, c: usize, v: u8) {
+    pub fn set(&mut self, r: usize, c: usize, v: T) {
         debug_assert!(r < self.rows && c < self.cols);
         self.data[r * self.cols + c] = v;
     }
 
+    /// Storage footprint in bytes (elements × element width).
     pub fn bytes(&self) -> u64 {
-        (self.rows * self.cols) as u64
+        (self.data.len() * std::mem::size_of::<T>()) as u64
     }
 
     /// Copy out the `rows × cols` sub-block starting at `(r0, c0)` — the
     /// shard extraction primitive of the cluster layer.
-    pub fn submatrix(&self, r0: usize, c0: usize, rows: usize, cols: usize) -> MatU8 {
+    pub fn submatrix(&self, r0: usize, c0: usize, rows: usize, cols: usize) -> Mat<T> {
         assert!(
             r0 + rows <= self.rows && c0 + cols <= self.cols,
             "submatrix out of range"
@@ -55,41 +65,56 @@ impl MatU8 {
             let base = (r0 + r) * self.cols + c0;
             data.extend_from_slice(&self.data[base..base + cols]);
         }
-        MatU8 { rows, cols, data }
+        Mat { rows, cols, data }
     }
 }
 
-/// Row-major i32 matrix (GEMM accumulator / output operand).
-#[derive(Debug, Clone, PartialEq, Eq)]
-pub struct MatI32 {
-    pub rows: usize,
-    pub cols: usize,
-    pub data: Vec<i32>,
+impl<T: Element> Mat<T> {
+    /// Filled with a deterministic PRNG stream (tests, benches, examples).
+    pub fn random(rows: usize, cols: usize, rng: &mut crate::util::Pcg32) -> Mat<T> {
+        Mat { rows, cols, data: (0..rows * cols).map(|_| T::random(rng)).collect() }
+    }
 }
 
-impl MatI32 {
-    pub fn zeros(rows: usize, cols: usize) -> MatI32 {
-        MatI32 { rows, cols, data: vec![0; rows * cols] }
-    }
-
-    pub fn from_vec(rows: usize, cols: usize, data: Vec<i32>) -> MatI32 {
-        assert_eq!(data.len(), rows * cols, "data length mismatch");
-        MatI32 { rows, cols, data }
-    }
-
+impl<A: Accum> Mat<A> {
     #[inline]
-    pub fn at(&self, r: usize, c: usize) -> i32 {
+    pub fn add(&mut self, r: usize, c: usize, v: A) {
         debug_assert!(r < self.rows && c < self.cols);
-        self.data[r * self.cols + c]
+        let idx = r * self.cols + c;
+        self.data[idx] = self.data[idx].acc_add(v);
     }
 
-    #[inline]
-    pub fn add(&mut self, r: usize, c: usize, v: i32) {
-        debug_assert!(r < self.rows && c < self.cols);
-        self.data[r * self.cols + c] += v;
+    /// Max absolute elementwise difference in f64 (exact integer paths
+    /// must give 0.0; the bf16 path is bounded by the conformance suite).
+    pub fn max_abs_diff_f64(&self, other: &Mat<A>) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(&a, &b)| a.abs_diff_f64(b))
+            .fold(0.0, f64::max)
     }
 
-    /// Max absolute elementwise difference (exact paths must give 0).
+    /// Accumulate `block` into this matrix at offset `(r0, c0)` — the
+    /// shard write-back primitive of the cluster layer.
+    pub fn add_block(&mut self, r0: usize, c0: usize, block: &Mat<A>) {
+        assert!(
+            r0 + block.rows <= self.rows && c0 + block.cols <= self.cols,
+            "block out of range"
+        );
+        for r in 0..block.rows {
+            let dst = &mut self.data[(r0 + r) * self.cols + c0..][..block.cols];
+            let src = &block.data[r * block.cols..(r + 1) * block.cols];
+            for (d, &s) in dst.iter_mut().zip(src) {
+                *d = d.acc_add(s);
+            }
+        }
+    }
+}
+
+impl Mat<i32> {
+    /// Max absolute elementwise difference (exact paths must give 0) —
+    /// the seed-era i32 comparison kept for the u8 pipeline's callers.
     pub fn max_abs_diff(&self, other: &MatI32) -> i64 {
         assert_eq!((self.rows, self.cols), (other.rows, other.cols));
         self.data
@@ -99,39 +124,18 @@ impl MatI32 {
             .max()
             .unwrap_or(0)
     }
+}
 
-    pub fn bytes(&self) -> u64 {
-        (self.rows * self.cols * 4) as u64
+impl Mat<Bf16> {
+    /// Round a row-major f32 buffer into bf16 storage.
+    pub fn from_f32_slice(rows: usize, cols: usize, x: &[f32]) -> Mat<Bf16> {
+        assert_eq!(x.len(), rows * cols, "data length mismatch");
+        Mat { rows, cols, data: x.iter().map(|&v| Bf16::from_f32(v)).collect() }
     }
 
-    /// Copy out the `rows × cols` sub-block starting at `(r0, c0)`.
-    pub fn submatrix(&self, r0: usize, c0: usize, rows: usize, cols: usize) -> MatI32 {
-        assert!(
-            r0 + rows <= self.rows && c0 + cols <= self.cols,
-            "submatrix out of range"
-        );
-        let mut data = Vec::with_capacity(rows * cols);
-        for r in 0..rows {
-            let base = (r0 + r) * self.cols + c0;
-            data.extend_from_slice(&self.data[base..base + cols]);
-        }
-        MatI32 { rows, cols, data }
-    }
-
-    /// Accumulate `block` into this matrix at offset `(r0, c0)` — the
-    /// shard write-back primitive of the cluster layer.
-    pub fn add_block(&mut self, r0: usize, c0: usize, block: &MatI32) {
-        assert!(
-            r0 + block.rows <= self.rows && c0 + block.cols <= self.cols,
-            "block out of range"
-        );
-        for r in 0..block.rows {
-            let dst = &mut self.data[(r0 + r) * self.cols + c0..][..block.cols];
-            let src = &block.data[r * block.cols..(r + 1) * block.cols];
-            for (d, &s) in dst.iter_mut().zip(src) {
-                *d += s;
-            }
-        }
+    /// Exact widening back to f32 (row-major).
+    pub fn to_f32_vec(&self) -> Vec<f32> {
+        self.data.iter().map(|b| b.to_f32()).collect()
     }
 }
 
@@ -164,6 +168,7 @@ mod tests {
         assert_eq!(a.at(0, 1), 3);
         let b = MatI32::from_vec(2, 2, vec![0, 7, 0, 0]);
         assert_eq!(a.max_abs_diff(&b), 4);
+        assert_eq!(a.max_abs_diff_f64(&b), 4.0);
     }
 
     #[test]
@@ -196,5 +201,39 @@ mod tests {
         assert_eq!(c.data, vec![1, 1, 1, 1, 11, 21]);
         let s = c.submatrix(1, 1, 1, 2);
         assert_eq!(s.data, vec![11, 21]);
+    }
+
+    #[test]
+    fn wide_element_bytes_account_width() {
+        let m16: Mat<i16> = Mat::zeros(3, 4);
+        assert_eq!(m16.bytes(), 24);
+        let acc: Mat<i64> = Mat::zeros(3, 4);
+        assert_eq!(acc.bytes(), 96);
+        let bf: Mat<Bf16> = Mat::zeros(3, 4);
+        assert_eq!(bf.bytes(), 24);
+    }
+
+    #[test]
+    fn accumulator_generics_cover_i64_and_f32() {
+        let mut c: Mat<i64> = Mat::zeros(1, 2);
+        c.add(0, 0, 1 << 40);
+        c.add(0, 0, 1);
+        assert_eq!(c.at(0, 0), (1i64 << 40) + 1);
+        let mut f: Mat<f32> = Mat::zeros(1, 1);
+        f.add(0, 0, 0.5);
+        f.add(0, 0, 0.25);
+        assert_eq!(f.at(0, 0), 0.75);
+        let g = Mat::<f32>::from_vec(1, 1, vec![1.0]);
+        assert!((f.max_abs_diff_f64(&g) - 0.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bf16_matrix_roundtrip() {
+        let x = vec![0.5f32, -1.0, 2.0, 0.0];
+        let m = Mat::<Bf16>::from_f32_slice(2, 2, &x);
+        assert_eq!(m.to_f32_vec(), x, "representable values survive exactly");
+        let mut rng = Pcg32::new(9);
+        let r = Mat::<Bf16>::random(4, 4, &mut rng);
+        assert!(r.to_f32_vec().iter().all(|v| v.abs() <= 1.0));
     }
 }

@@ -25,9 +25,12 @@
 //!                 model (mac16, VLIW compute/transfer overlap).
 //! - [`gemm`]    — the GotoBLAS2 algorithm mapped onto the platform: CCP
 //!                 (cache configuration parameter) selection, packing
-//!                 routines, the 8×8 UINT8 micro-kernel, the sequential
-//!                 blocked driver and the parallel loop-L4 design, plus
-//!                 ablation drivers that parallelise L1/L3/L5 instead.
+//!                 routines, the 8×8 **mixed-precision micro-kernel
+//!                 suite** (u8/i8/i16/bf16, generic over
+//!                 [`gemm::Element`]), the sequential blocked driver and
+//!                 the parallel loop-L4 design, plus ablation drivers
+//!                 that parallelise L1/L3/L5 instead, and the CCP +
+//!                 precision auto-tuner.
 //! - [`cluster`] — the multi-device layer: a pool of simulated Versal
 //!                 devices behind a cycle-costed inter-device fabric
 //!                 (ring / mesh / fully-connected), device collectives
@@ -35,7 +38,8 @@
 //!                 a SUMMA-style 2-D sharded GEMM where every shard runs
 //!                 the single-device parallel engine locally — the
 //!                 paper's memory/compute hierarchy extended one level up.
-//! - [`quant`]   — mixed-precision support: affine quantisation,
+//! - [`quant`]   — mixed-precision support: affine u8 quantisation with
+//!                 zero-point correction, symmetric i8/i16 quantisation,
 //!                 requantisation, per-tensor scales.
 //! - [`dl`]      — deep-learning substrate: linear layers, im2col
 //!                 convolution lowering, a quantised MLP, GEMM shape traces
@@ -64,7 +68,7 @@ pub mod util;
 
 pub use arch::VersalArch;
 pub use cluster::{Cluster, ClusterGemm};
-pub use gemm::{Ccp, GemmConfig, ParallelGemm};
+pub use gemm::{Ccp, GemmConfig, ParallelGemm, Precision, PrecisionPolicy};
 
 mod app;
 pub use app::cli_main;

@@ -1,17 +1,24 @@
-//! Mixed-precision support: affine quantisation for UINT8 inference.
+//! Mixed-precision support: quantisation for the u8/i8/i16 integer paths.
 //!
-//! The paper motivates its UINT8 micro-kernel by "the strong demand for
+//! The paper motivates its micro-kernels by "the strong demand for
 //! adaptive-precision inference in deep learning" (§1, §4.2). This module
-//! supplies the numerical machinery that makes a u8·u8→i32 GEMM usable as
-//! a *neural-network layer*: per-tensor affine quantisation
-//! (`q = round(x/scale) + zero_point`), the zero-point correction that
-//! turns an integer GEMM over quantised operands back into a real-valued
-//! product, and requantisation of i32 accumulators to u8 activations.
+//! supplies the numerical machinery that makes the integer GEMMs usable
+//! as *neural-network layers*:
+//!
+//! - [`qparams`]/[`qgemm`] — per-tensor *affine* quantisation for the u8
+//!   kernel (`q = round(x/scale) + zero_point`) and the zero-point
+//!   correction that turns the unsigned GEMM back into a real product.
+//! - [`sym`] — *symmetric* signed quantisation for the i8 and i16
+//!   kernels (`real ≈ scale · q`, no zero point, no correction term).
+//! - the bf16 path needs no quantisation at all: operands are
+//!   bf16-rounded casts (see [`crate::gemm::Bf16`]).
 
 mod per_channel;
 mod qgemm;
 mod qparams;
+mod sym;
 
 pub use per_channel::{per_channel_matmul, PerChannelWeights};
 pub use qgemm::{dequantize_gemm_i32, quantized_linear, zero_point_correction};
 pub use qparams::{QParams, QTensor};
+pub use sym::{sym_dequantize, IntElement, SymQParams, SymQTensor};

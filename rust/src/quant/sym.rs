@@ -1,0 +1,183 @@
+//! Symmetric signed quantisation — the i8 and i16 paths of the
+//! mixed-precision suite.
+//!
+//! Symmetric quantisation maps `real ≈ scale · q` with `q` a signed
+//! integer and **no zero point**, so the integer GEMM needs *no*
+//! correction term at all: `A·B = sa·sb · (QA·QB)`. That is why
+//! production int8 stacks quantise weights symmetrically — and why the
+//! i8/i16 layers here are a straight [`crate::gemm::ParallelGemm::run_p`]
+//! plus one scalar multiply, with the zero-point machinery of
+//! [`super::qgemm`] reserved for the asymmetric u8 path.
+
+use crate::gemm::precision::Element;
+use crate::gemm::types::Mat;
+use crate::gemm::Accum;
+
+/// A signed integer element usable for symmetric quantisation.
+pub trait IntElement: Element {
+    /// Largest representable magnitude (symmetric range: ±QMAX).
+    const QMAX: i32;
+    fn from_i32_clamped(v: i32) -> Self;
+}
+
+impl IntElement for i8 {
+    const QMAX: i32 = 127;
+    fn from_i32_clamped(v: i32) -> i8 {
+        v.clamp(-Self::QMAX, Self::QMAX) as i8
+    }
+}
+
+impl IntElement for i16 {
+    const QMAX: i32 = 32767;
+    fn from_i32_clamped(v: i32) -> i16 {
+        v.clamp(-Self::QMAX, Self::QMAX) as i16
+    }
+}
+
+/// Symmetric quantisation parameters: `real ≈ scale · q`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SymQParams {
+    pub scale: f32,
+}
+
+impl SymQParams {
+    /// Fit the scale so ±`max_abs` covers the full ±`qmax` range.
+    pub fn fit(max_abs: f32, qmax: i32) -> SymQParams {
+        assert!(max_abs.is_finite() && max_abs >= 0.0, "bad range {max_abs}");
+        let scale = if max_abs > 0.0 { max_abs / qmax as f32 } else { 1.0 };
+        SymQParams { scale }
+    }
+}
+
+/// A symmetric-quantised tensor at i8 or i16 storage.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SymQTensor<T: IntElement> {
+    pub data: Mat<T>,
+    pub params: SymQParams,
+}
+
+impl<T: IntElement> SymQTensor<T> {
+    /// Quantise a row-major f32 matrix with scale fit over its elements.
+    pub fn from_f32(rows: usize, cols: usize, x: &[f32]) -> SymQTensor<T> {
+        assert_eq!(x.len(), rows * cols, "data length mismatch");
+        let max_abs = x.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        let params = SymQParams::fit(if max_abs.is_finite() { max_abs } else { 0.0 }, T::QMAX);
+        let data = Mat::from_vec(
+            rows,
+            cols,
+            x.iter()
+                .map(|&v| T::from_i32_clamped((v / params.scale).round() as i32))
+                .collect(),
+        );
+        SymQTensor { data, params }
+    }
+
+    /// Dequantise back to f32 (row-major).
+    pub fn to_f32(&self) -> Vec<f32> {
+        self.data.data.iter().map(|&q| q.widen().to_f64() as f32 * self.params.scale).collect()
+    }
+
+    /// Max absolute quantisation error vs the original values.
+    pub fn max_error(&self, x: &[f32]) -> f32 {
+        self.to_f32().iter().zip(x).map(|(a, b)| (a - b).abs()).fold(0.0, f32::max)
+    }
+}
+
+/// Dequantise a symmetric integer GEMM accumulator: `sa·sb·qc`,
+/// row-major f32. Works for both the i32 (i8 GEMM) and i64 (i16 GEMM)
+/// accumulators.
+pub fn sym_dequantize<A: Accum>(qc: &Mat<A>, sa: f32, sb: f32) -> Vec<f32> {
+    let s = (sa as f64) * (sb as f64);
+    qc.data.iter().map(|&v| (v.to_f64() * s) as f32).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::baseline::naive_gemm_p;
+    use crate::util::quickcheck::prop;
+    use crate::util::Pcg32;
+
+    fn random_f32(n: usize, half_range: f32, rng: &mut Pcg32) -> Vec<f32> {
+        (0..n).map(|_| (rng.f64() as f32 * 2.0 - 1.0) * half_range).collect()
+    }
+
+    #[test]
+    fn i8_roundtrip_error_bounded_by_half_scale() {
+        let mut rng = Pcg32::new(0x51);
+        let x = random_f32(64, 4.0, &mut rng);
+        let q = SymQTensor::<i8>::from_f32(8, 8, &x);
+        assert!(q.max_error(&x) <= q.params.scale * 0.5 + 1e-6);
+    }
+
+    #[test]
+    fn i16_is_much_finer_than_i8() {
+        let mut rng = Pcg32::new(0x52);
+        let x = random_f32(256, 2.0, &mut rng);
+        let q8 = SymQTensor::<i8>::from_f32(16, 16, &x);
+        let q16 = SymQTensor::<i16>::from_f32(16, 16, &x);
+        assert!(q16.params.scale < q8.params.scale / 100.0);
+        assert!(q16.max_error(&x) < q8.max_error(&x).max(1e-9));
+    }
+
+    #[test]
+    fn zero_is_exact_and_sign_symmetric() {
+        let x = [-1.0f32, 0.0, 1.0, -0.5];
+        let q = SymQTensor::<i8>::from_f32(2, 2, &x);
+        let back = q.to_f32();
+        assert_eq!(back[1], 0.0, "zero must be exactly representable");
+        assert_eq!(back[0], -back[2], "symmetric range");
+    }
+
+    #[test]
+    fn degenerate_all_zero_tensor() {
+        let x = [0.0f32; 4];
+        let q = SymQTensor::<i16>::from_f32(2, 2, &x);
+        assert_eq!(q.params.scale, 1.0);
+        assert!(q.to_f32().iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn symmetric_gemm_needs_no_correction() {
+        // Quantise, run the integer GEMM, rescale — and land within the
+        // accumulated quantisation error of the f32 product, with no
+        // zero-point correction anywhere.
+        let (m, k, n) = (8, 32, 6);
+        let mut rng = Pcg32::new(0x53);
+        let a = random_f32(m * k, 1.0, &mut rng);
+        let b = random_f32(k * n, 0.5, &mut rng);
+        let qa = SymQTensor::<i8>::from_f32(m, k, &a);
+        let qb = SymQTensor::<i8>::from_f32(k, n, &b);
+        let mut qc = Mat::<i32>::zeros(m, n);
+        naive_gemm_p::<i8>(&qa.data, &qb.data, &mut qc);
+        let y = sym_dequantize(&qc, qa.params.scale, qb.params.scale);
+        let mut want = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                for p in 0..k {
+                    want[i * n + j] += a[i * k + p] * b[p * n + j];
+                }
+            }
+        }
+        let bound = k as f32
+            * (qa.params.scale * 0.5 * 0.5 + qb.params.scale * 0.5 * 1.0)
+            + 1e-3;
+        for (got, w) in y.iter().zip(&want) {
+            assert!((got - w).abs() <= bound, "{got} vs {w} (bound {bound})");
+        }
+    }
+
+    #[test]
+    fn prop_sym_quantize_bounded_and_monotone() {
+        prop("sym-quant-bounded", 0x54, 40, |g| {
+            let n = g.dim(32);
+            let x = random_f32(n * n, 1.0 + g.rng.f64() as f32 * 8.0, &mut g.rng);
+            let q = SymQTensor::<i16>::from_f32(n, n, &x);
+            let err = q.max_error(&x);
+            if err > q.params.scale * 0.5 + 1e-4 {
+                return Err(format!("error {err} > half-scale {}", q.params.scale));
+            }
+            Ok(())
+        });
+    }
+}

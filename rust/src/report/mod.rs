@@ -5,7 +5,8 @@ use crate::cluster::{
     Cluster, ClusterError, ClusterGemm, ClusterGemmConfig, FabricSpec, Topology,
 };
 use crate::gemm::parallel::{ParallelGemm, Table2Row};
-use crate::sim::{AieTileModel, KernelMode};
+use crate::gemm::{tuner, GemmConfig, Precision, MR, NR};
+use crate::sim::{AieTileModel, Gmio, KernelMode};
 use crate::util::tabulate::{Align, Table};
 
 /// Format a cycle count like the paper's Table 2 ("3694.1 · 10^3").
@@ -162,6 +163,97 @@ pub fn cluster_scaling_rows(
     Ok(rows)
 }
 
+/// One row of the mixed-precision comparison table: the Table-2 problem
+/// evaluated at one precision of the §4.2 kernel family.
+#[derive(Debug, Clone)]
+pub struct PrecisionRow {
+    pub precision: Precision,
+    pub elem_bytes: u64,
+    /// MACs per AIE vector op (§2 datapath widths).
+    pub macs_per_vec_op: u64,
+    /// kc the precision's Br panel admits (≤ the paper's 2048).
+    pub kc: usize,
+    /// Isolated micro-kernel loop cycles at that kc (Table-3 condition).
+    pub kernel_cycles: u64,
+    /// Contended Cr round trip at the row's tile count.
+    pub copy_cr_cycles: u64,
+    /// Paper-style per-tile metric: kernel MACs / (kernel + Cr cycles).
+    pub kernel_macs_per_cycle: f64,
+    /// Full Table-2-problem schedule at the row's tile count.
+    pub total_cycles: u64,
+    pub aggregate_macs_per_cycle: f64,
+    /// Predicted relative error at the problem's k (the tuner's model).
+    pub rel_error: f64,
+}
+
+/// Evaluate the Table-2 problem across the whole precision suite on
+/// `tiles` tiles. Each precision runs under its own feasible
+/// paper-shaped CCP ([`tuner::ccp_for_precision`]); the u8 row is the
+/// paper's configuration exactly.
+pub fn precision_rows(arch: &VersalArch, tiles: usize) -> Vec<PrecisionRow> {
+    let (m, n, k) = TABLE2_PROBLEM;
+    let macs = (m * n * k) as u64;
+    let model = AieTileModel::new(arch);
+    let gmio = Gmio::new(arch);
+    Precision::ALL
+        .iter()
+        .map(|&prec| {
+            let ccp = tuner::ccp_for_precision(arch, prec);
+            let mut cfg = GemmConfig::paper_table2(tiles);
+            cfg.ccp = ccp;
+            let kernel =
+                model.kernel_cycles_p(ccp.kc, KernelMode::Baseline, false, prec).total;
+            let cr = gmio.cr_roundtrip_cycles_p(tiles, prec);
+            let kernel_macs = (MR * NR * ccp.kc) as f64;
+            let total = tuner::predict_cycles_p(arch, &cfg, m, n, k, prec);
+            PrecisionRow {
+                precision: prec,
+                elem_bytes: prec.elem_bytes(),
+                macs_per_vec_op: prec.macs_per_vec_op(),
+                kc: ccp.kc,
+                kernel_cycles: kernel,
+                copy_cr_cycles: cr,
+                kernel_macs_per_cycle: kernel_macs / (kernel + cr) as f64,
+                total_cycles: total,
+                aggregate_macs_per_cycle: macs as f64 / total as f64,
+                rel_error: prec.quant_rel_error(k),
+            }
+        })
+        .collect()
+}
+
+/// Render the precision rows as a printable table.
+pub fn precision_table(rows: &[PrecisionRow]) -> Table {
+    let mut t = Table::new(&[
+        "precision",
+        "B/elem",
+        "MACs/op",
+        "kc",
+        "kernel cyc",
+        "Copy Cr",
+        "MACs/cyc/tile",
+        "Total",
+        "Aggregate MACs/cyc",
+        "rel err @k",
+    ])
+    .align(0, Align::Left);
+    for r in rows {
+        t.row(&[
+            r.precision.to_string(),
+            r.elem_bytes.to_string(),
+            r.macs_per_vec_op.to_string(),
+            r.kc.to_string(),
+            r.kernel_cycles.to_string(),
+            r.copy_cr_cycles.to_string(),
+            format!("{:.1}", r.kernel_macs_per_cycle),
+            fmt_kcycles(r.total_cycles),
+            format!("{:.1}", r.aggregate_macs_per_cycle),
+            format!("{:.1e}", r.rel_error),
+        ]);
+    }
+    t
+}
+
 /// Render the cluster scaling rows as a printable table.
 pub fn cluster_table(rows: &[ClusterScalingRow]) -> Table {
     let mut t = Table::new(&[
@@ -260,6 +352,30 @@ mod tests {
         }
         let t = cluster_table(&rows);
         assert_eq!(t.n_rows(), 3);
+    }
+
+    #[test]
+    fn precision_rows_cover_suite_and_order_by_throughput() {
+        let rows = precision_rows(&vc1902(), 8);
+        assert_eq!(rows.len(), 4);
+        // u8 row is the paper's configuration: kc 2048, 128 MACs/op.
+        assert_eq!(rows[0].precision, Precision::U8);
+        assert_eq!(rows[0].kc, 2048);
+        assert_eq!(rows[0].macs_per_vec_op, 128);
+        // The cycle model's throughput ordering: u8 ≥ i16 ≥ bf16.
+        let get = |p: Precision| {
+            rows.iter().find(|r| r.precision == p).unwrap().aggregate_macs_per_cycle
+        };
+        assert!(get(Precision::U8) >= get(Precision::I16), "u8 < i16");
+        assert!(get(Precision::I16) >= get(Precision::Bf16), "i16 < bf16");
+        // And the accuracy ordering runs the other way.
+        let err = |p: Precision| rows.iter().find(|r| r.precision == p).unwrap().rel_error;
+        assert!(err(Precision::Bf16) < err(Precision::I16));
+        assert!(err(Precision::I16) < err(Precision::U8));
+        let table = precision_table(&rows);
+        assert_eq!(table.n_rows(), 4);
+        let txt = table.to_text();
+        assert!(txt.contains("bf16") && txt.contains("i16"), "{txt}");
     }
 
     #[test]

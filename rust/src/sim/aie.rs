@@ -18,6 +18,8 @@
 use super::breakdown::CycleBreakdown;
 use super::stream::Stream;
 use crate::arch::VersalArch;
+use crate::gemm::microkernel::{MR, NR};
+use crate::gemm::Precision;
 
 /// What the kernel executes — full kernel or one of Table 3's ablations.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -67,11 +69,24 @@ impl<'a> AieTileModel<'a> {
         (mr * nr * kc) as u64
     }
 
+    /// Vector ops per unrolled iteration at a given precision: one
+    /// iteration retires mr·nr·16 = 1024 MACs, and the AIE vector unit
+    /// does [`Precision::macs_per_vec_op`] of them per op — 8 `mac16()`
+    /// calls for u8/i8 (Figure 4), 32 ops for i16, 64 for bf16 (§2).
+    pub fn vec_ops_per_iter(prec: Precision) -> u64 {
+        (MR * NR * Self::UNROLL) as u64 / prec.macs_per_vec_op()
+    }
+
     /// Arithmetic cycles for a kernel over `kc` (mac16 issue + loop
     /// control), the Table 3 "mac16 only" condition.
     pub fn arith_cycles(&self, kc: usize) -> u64 {
+        self.arith_cycles_p(kc, Precision::U8)
+    }
+
+    /// [`AieTileModel::arith_cycles`] at any precision of the suite.
+    pub fn arith_cycles_p(&self, kc: usize, prec: Precision) -> u64 {
         let iters = (kc / Self::UNROLL) as u64;
-        iters * Self::MACS16_PER_ITER * self.arch.aie.cycles_per_mac16
+        iters * Self::vec_ops_per_iter(prec) * self.arch.aie.cycles_per_mac16
             + self.arch.aie.loop_overhead_cycles
     }
 
@@ -87,9 +102,24 @@ impl<'a> AieTileModel<'a> {
     /// run (see [`Stream::ar_stream_cycles`]); Table 3's measurements are
     /// the isolated (`steady = false`) condition.
     pub fn kernel_cycles(&self, kc: usize, mode: KernelMode, steady: bool) -> CycleBreakdown {
+        self.kernel_cycles_p(kc, mode, steady, Precision::U8)
+    }
+
+    /// [`AieTileModel::kernel_cycles`] at any precision: 2-byte elements
+    /// double the Ar streaming, narrow vector ops multiply the arithmetic
+    /// (u8/i8 → 8 ops/iter, i16 → 32, bf16 → 64); the VLIW overlap
+    /// structure (max of stream and compute, plus drain) is unchanged.
+    /// The u8 instance reproduces Table 3 exactly.
+    pub fn kernel_cycles_p(
+        &self,
+        kc: usize,
+        mode: KernelMode,
+        steady: bool,
+        prec: Precision,
+    ) -> CycleBreakdown {
         assert!(kc % Self::UNROLL == 0, "kc must be a multiple of 16");
-        let ar = self.stream.ar_stream_cycles(kc, steady);
-        let arith = self.arith_cycles(kc);
+        let ar = self.stream.ar_stream_cycles_p(kc, steady, prec);
+        let arith = self.arith_cycles_p(kc, prec);
         let drain = self.arch.aie.pipeline_drain_cycles;
         match mode {
             KernelMode::ReadArOnly => CycleBreakdown {
@@ -222,5 +252,46 @@ mod tests {
         let c2 = m.kernel_cycles(2048, KernelMode::Baseline, false).total;
         assert!(c2 > c1);
         assert!(c2 < 2 * c1 + 100, "roughly linear");
+    }
+
+    #[test]
+    fn vec_ops_per_iter_follow_datapath_widths() {
+        assert_eq!(AieTileModel::vec_ops_per_iter(Precision::U8), 8); // Figure 4
+        assert_eq!(AieTileModel::vec_ops_per_iter(Precision::I8), 8);
+        assert_eq!(AieTileModel::vec_ops_per_iter(Precision::I16), 32);
+        assert_eq!(AieTileModel::vec_ops_per_iter(Precision::Bf16), 64);
+    }
+
+    #[test]
+    fn u8_precision_instance_reproduces_table3() {
+        let a = vc1902();
+        let m = model(&a);
+        for mode in [KernelMode::ReadArOnly, KernelMode::MacOnly, KernelMode::Baseline] {
+            assert_eq!(
+                m.kernel_cycles_p(2048, mode, false, Precision::U8),
+                m.kernel_cycles(2048, mode, false),
+                "{mode:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn per_precision_kernel_throughput_ordering() {
+        // MACs per total-cycle of one isolated kernel must order
+        // u8 ≥ i16 ≥ bf16 — the cycle-model prediction the
+        // bench_mixed_precision gate asserts end to end.
+        let a = vc1902();
+        let m = model(&a);
+        // mr·nr·kc MACs are precision-independent; only the cycles move.
+        let macs = (MR * NR * 1024) as f64;
+        let rate = |p: Precision| {
+            macs / m.kernel_cycles_p(1024, KernelMode::Baseline, false, p).total as f64
+        };
+        let (r_u8, r_i16, r_bf16) =
+            (rate(Precision::U8), rate(Precision::I16), rate(Precision::Bf16));
+        assert!(r_u8 >= r_i16 && r_i16 >= r_bf16, "{r_u8} {r_i16} {r_bf16}");
+        // i16 is stream-bound (2-byte Ar), bf16 is compute-bound (64 ops).
+        let b16 = m.kernel_cycles_p(1024, KernelMode::Baseline, false, Precision::Bf16);
+        assert!(b16.arithmetic > b16.ar_stream, "bf16 flips to compute-bound");
     }
 }

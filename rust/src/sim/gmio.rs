@@ -56,6 +56,14 @@ impl<'a> Gmio<'a> {
         self.arbiter.max_cost(tiles)
     }
 
+    /// [`Gmio::cr_roundtrip_cycles`] for any precision: the DDR burst is
+    /// sized for the 8×8 i32 micro-tile (4-byte accumulators), so the
+    /// i16 kernel's i64 accumulators double the round trip while the
+    /// bf16 kernel's f32 accumulators match the u8 cost.
+    pub fn cr_roundtrip_cycles_p(&self, tiles: usize, prec: crate::gemm::Precision) -> u64 {
+        self.arbiter.max_cost(tiles) * prec.acc_bytes() / 4
+    }
+
     /// Per-tile distribution of the same (for fairness analyses).
     pub fn cr_roundtrip_per_tile(&self, tiles: usize) -> Vec<u64> {
         self.arbiter.contend(tiles).per_tile
@@ -101,5 +109,16 @@ mod tests {
         assert_eq!(g.cr_roundtrip_cycles(1), 40);
         assert!(g.cr_roundtrip_cycles(32) > g.cr_roundtrip_cycles(16));
         assert_eq!(g.cr_roundtrip_per_tile(4).len(), 4);
+    }
+
+    #[test]
+    fn cr_cost_scales_with_accumulator_width() {
+        use crate::gemm::Precision;
+        let a = vc1902();
+        let g = Gmio::new(&a);
+        assert_eq!(g.cr_roundtrip_cycles_p(1, Precision::U8), 40);
+        assert_eq!(g.cr_roundtrip_cycles_p(1, Precision::I8), 40);
+        assert_eq!(g.cr_roundtrip_cycles_p(1, Precision::I16), 80); // i64 Cr
+        assert_eq!(g.cr_roundtrip_cycles_p(1, Precision::Bf16), 40); // f32 Cr
     }
 }

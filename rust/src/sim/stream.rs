@@ -48,10 +48,23 @@ impl<'a> Stream<'a> {
     /// `steady` selects regime 3 (full-GEMM) vs regime 2 (isolated kernel,
     /// the Table 3 measurement condition).
     pub fn ar_stream_cycles(&self, kc: usize, steady: bool) -> u64 {
+        self.ar_stream_cycles_p(kc, steady, crate::gemm::Precision::U8)
+    }
+
+    /// [`Stream::ar_stream_cycles`] for any element precision: one
+    /// unrolled iteration streams mr·16 = 128 *elements* of Ar, i.e. one
+    /// fused 128-byte pair per byte of element width — 2-byte elements
+    /// (i16/bf16) issue two fused pairs per iteration.
+    pub fn ar_stream_cycles_p(
+        &self,
+        kc: usize,
+        steady: bool,
+        prec: crate::gemm::Precision,
+    ) -> u64 {
         assert!(kc % 16 == 0, "kc must be a multiple of the unroll factor 16");
         let iters = (kc / 16) as u64;
         let per_pair = if steady { self.steady_pair_cycles() } else { self.fused_pair_cycles() };
-        iters * per_pair + self.arch.ic.stream_fused_residual_cycles
+        iters * per_pair * prec.elem_bytes() + self.arch.ic.stream_fused_residual_cycles
     }
 
     /// The paper's *theoretical* (unfused) Ar cost: kc/16 · 2 · 19.
@@ -112,5 +125,22 @@ mod tests {
     fn kc_must_be_multiple_of_16() {
         let a = vc1902();
         Stream::new(&a).ar_stream_cycles(100, false);
+    }
+
+    #[test]
+    fn wide_elements_double_the_pair_traffic() {
+        use crate::gemm::Precision;
+        let a = vc1902();
+        let s = Stream::new(&a);
+        // u8 instance must equal the seed-era model exactly.
+        assert_eq!(s.ar_stream_cycles_p(2048, false, Precision::U8), 4106);
+        assert_eq!(s.ar_stream_cycles_p(2048, false, Precision::I8), 4106);
+        // 2-byte elements: twice the fused pairs, same residual.
+        let resid = a.ic.stream_fused_residual_cycles;
+        assert_eq!(s.ar_stream_cycles_p(2048, false, Precision::I16), 2 * (4106 - resid) + resid);
+        assert_eq!(
+            s.ar_stream_cycles_p(2048, true, Precision::Bf16),
+            2 * (3594 - resid) + resid
+        );
     }
 }

@@ -1,0 +1,303 @@
+//! Golden-model conformance suite for the mixed-precision kernel family.
+//!
+//! Every precision of the suite (u8, i8, i16, bf16) is driven through the
+//! whole engine stack — micro-kernel, sequential blocked driver, parallel
+//! loop-L4 driver, and the SUMMA-sharded cluster driver — on randomized
+//! shapes *including edge shapes* (m, n, k not multiples of MR/NR/kc) and
+//! compared against a naive golden reference:
+//!
+//! - **u8 / i8 / i16** — bit-exact. Products are exact in the widened
+//!   accumulator and integer addition is associative, so any blocking or
+//!   sharding must reproduce the reference to the last bit.
+//! - **bf16** — checked against an **f64 reference** with a *proven*
+//!   forward-error bound. Each bf16·bf16 product is exact in f32 (8-bit
+//!   mantissas ⇒ ≤16 product mantissa bits < 24), so the only rounding is
+//!   f32 accumulation. A length-L chain of f32 additions of exactly
+//!   representable terms satisfies |ŝ − s| ≤ L·u·Σ|terms| with unit
+//!   roundoff u = 2⁻²⁴. Along one output element the drivers perform at
+//!   most (k−1) in-kernel additions, plus one store-accumulate per
+//!   kc-chunk (≤ ⌈k/kc⌉ ≤ k), plus ≤ 2 shard write-backs — bounded by
+//!   2k + 4 additions total, giving the bound asserted below.
+//!
+//! Filtering: set `VERSAL_PRECISION=u8|i8|i16|bf16` (comma-separated) to
+//! run one precision's conformance only — CI uses this to make a
+//! regression name the offending precision directly.
+
+use versal_gemm::arch::vc1902;
+use versal_gemm::cluster::{Cluster, ClusterGemm, ClusterGemmConfig};
+use versal_gemm::gemm::baseline::naive_gemm_p;
+use versal_gemm::gemm::blocked::BlockedGemm;
+use versal_gemm::gemm::{
+    bf16_forward_error_bound, Bf16, Ccp, Element, GemmConfig, Mat, ParallelGemm, Precision,
+};
+use versal_gemm::util::Pcg32;
+
+/// Is `p` selected by the VERSAL_PRECISION env filter (default: all)?
+fn enabled(p: Precision) -> bool {
+    match std::env::var("VERSAL_PRECISION") {
+        Err(_) => true,
+        Ok(s) if s.trim().is_empty() => true,
+        Ok(s) => s.split(',').any(|t| t.trim().eq_ignore_ascii_case(p.name())),
+    }
+}
+
+/// Edge shapes: below one panel, just over a panel, primes, kc-straddling.
+const EDGE_SHAPES: [(usize, usize, usize); 6] =
+    [(13, 17, 9), (7, 64, 5), (41, 23, 31), (1, 1, 1), (3, 3, 3), (19, 100, 25)];
+
+fn cfg(tiles: usize, mc: usize, nc: usize, kc: usize) -> GemmConfig {
+    GemmConfig {
+        ccp: Ccp { mc, nc, kc },
+        tiles,
+        count_packing: false,
+        steady_stream: true,
+    }
+}
+
+/// Run one (m, k, n) case at an integer precision T through blocked +
+/// parallel + cluster under randomized CCPs and demand bit-exact
+/// agreement (|Δ| = 0) with the golden reference. bf16 cases go through
+/// `bf16_case` instead, which carries the f64 reference and error bound.
+fn integer_case<T: Element>(m: usize, k: usize, n: usize, seed: u64) {
+    let arch = vc1902();
+    let mut rng = Pcg32::new(seed);
+    let a = Mat::<T>::random(m, k, &mut rng);
+    let b = Mat::<T>::random(k, n, &mut rng);
+    let mut want = Mat::<T::Acc>::zeros(m, n);
+    naive_gemm_p::<T>(&a, &b, &mut want);
+
+    // Randomised CCP, deliberately unaligned with the shape.
+    let ccp = (rng.range(1, 48), rng.range(1, 48), rng.range(1, 48));
+
+    let blocked = BlockedGemm::new(&arch);
+    let mut c1 = Mat::<T::Acc>::zeros(m, n);
+    blocked.run_p::<T>(&cfg(1, ccp.0, ccp.1, ccp.2), &a, &b, &mut c1).unwrap();
+    assert_eq!(
+        c1.max_abs_diff_f64(&want),
+        0.0,
+        "{} blocked ({m},{k},{n}) ccp {ccp:?}",
+        T::PRECISION
+    );
+
+    let parallel = ParallelGemm::new(&arch);
+    let tiles = rng.range(1, 9);
+    let mut c2 = Mat::<T::Acc>::zeros(m, n);
+    parallel.run_p::<T>(&cfg(tiles, ccp.0, ccp.1, ccp.2), &a, &b, &mut c2).unwrap();
+    assert_eq!(
+        c2.max_abs_diff_f64(&want),
+        0.0,
+        "{} parallel ({m},{k},{n}) tiles {tiles}",
+        T::PRECISION
+    );
+
+    // Cluster: 2 devices, small shards, SUMMA chunking.
+    let cluster = Cluster::vc1902_pool(2, 3).unwrap();
+    let engine = ClusterGemm::new(&cluster);
+    let mut ccfg = ClusterGemmConfig::with_ccp(Ccp { mc: 16, nc: 16, kc: 32 });
+    ccfg.kb = 16;
+    let mut c3 = Mat::<T::Acc>::zeros(m, n);
+    engine.run_auto_p::<T>(&ccfg, &a, &b, &mut c3).unwrap();
+    assert_eq!(
+        c3.max_abs_diff_f64(&want),
+        0.0,
+        "{} cluster ({m},{k},{n})",
+        T::PRECISION
+    );
+}
+
+fn integer_conformance<T: Element>() {
+    if !enabled(T::PRECISION) {
+        eprintln!("(skipped: VERSAL_PRECISION filters out {})", T::PRECISION);
+        return;
+    }
+    for (i, &(m, k, n)) in EDGE_SHAPES.iter().enumerate() {
+        integer_case::<T>(m, k, n, 0x5EED + i as u64);
+    }
+    // Randomised shapes.
+    let mut rng = Pcg32::new(0xC0DE ^ T::PRECISION.elem_bytes());
+    for round in 0..12 {
+        let m = rng.range(1, 44);
+        let k = rng.range(1, 44);
+        let n = rng.range(1, 44);
+        integer_case::<T>(m, k, n, 0xAB00 + round);
+    }
+}
+
+#[test]
+fn conformance_u8() {
+    integer_conformance::<u8>();
+}
+
+#[test]
+fn conformance_i8() {
+    integer_conformance::<i8>();
+}
+
+#[test]
+fn conformance_i16() {
+    integer_conformance::<i16>();
+}
+
+/// bf16: f64 golden reference with the proven forward-error bound.
+/// Returns (worst observed |Δ|, worst bound) over all elements.
+fn bf16_case(m: usize, k: usize, n: usize, seed: u64) {
+    let arch = vc1902();
+    let mut rng = Pcg32::new(seed);
+    let a = Mat::<Bf16>::random(m, k, &mut rng);
+    let b = Mat::<Bf16>::random(k, n, &mut rng);
+    // f64 reference over the *bf16-rounded* inputs (exact: every bf16
+    // value and every product of two is exactly representable in f64),
+    // plus the per-element Σ|a·b| the error bound scales with.
+    let mut ref64 = vec![0.0f64; m * n];
+    let mut sum_abs = vec![0.0f64; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            for p in 0..k {
+                let prod = a.at(i, p).to_f32() as f64 * b.at(p, j).to_f32() as f64;
+                ref64[i * n + j] += prod;
+                sum_abs[i * n + j] += prod.abs();
+            }
+        }
+    }
+    let check = |c: &Mat<f32>, label: &str| {
+        for i in 0..m {
+            for j in 0..n {
+                let got = c.at(i, j) as f64;
+                let want = ref64[i * n + j];
+                let bound = bf16_forward_error_bound(k, sum_abs[i * n + j]) + 1e-30;
+                assert!(
+                    (got - want).abs() <= bound,
+                    "bf16 {label} ({m},{k},{n}) [{i},{j}]: |{got} − {want}| > {bound:.3e}"
+                );
+            }
+        }
+    };
+
+    let mut rng2 = Pcg32::new(seed ^ 0xF00D);
+    let ccp = (rng2.range(1, 48), rng2.range(1, 48), rng2.range(1, 48));
+    let blocked = BlockedGemm::new(&arch);
+    let mut c1 = Mat::<f32>::zeros(m, n);
+    blocked.run_p::<Bf16>(&cfg(1, ccp.0, ccp.1, ccp.2), &a, &b, &mut c1).unwrap();
+    check(&c1, "blocked");
+
+    let parallel = ParallelGemm::new(&arch);
+    let mut c2 = Mat::<f32>::zeros(m, n);
+    parallel.run_p::<Bf16>(&cfg(4, ccp.0, ccp.1, ccp.2), &a, &b, &mut c2).unwrap();
+    check(&c2, "parallel");
+
+    let cluster = Cluster::vc1902_pool(2, 3).unwrap();
+    let engine = ClusterGemm::new(&cluster);
+    let mut ccfg = ClusterGemmConfig::with_ccp(Ccp { mc: 16, nc: 16, kc: 32 });
+    ccfg.kb = 16;
+    let mut c3 = Mat::<f32>::zeros(m, n);
+    engine.run_auto_p::<Bf16>(&ccfg, &a, &b, &mut c3).unwrap();
+    check(&c3, "cluster");
+}
+
+#[test]
+fn conformance_bf16() {
+    if !enabled(Precision::Bf16) {
+        eprintln!("(skipped: VERSAL_PRECISION filters out bf16)");
+        return;
+    }
+    for (i, &(m, k, n)) in EDGE_SHAPES.iter().enumerate() {
+        bf16_case(m, k, n, 0xBF00 + i as u64);
+    }
+    let mut rng = Pcg32::new(0xBF16);
+    for round in 0..10 {
+        let m = rng.range(1, 40);
+        let k = rng.range(1, 40);
+        let n = rng.range(1, 40);
+        bf16_case(m, k, n, 0xBFAB + round);
+    }
+}
+
+/// The drivers are deterministic at every precision: two identical runs
+/// (including the host-threaded parallel path) produce identical bits.
+#[test]
+fn conformance_runs_are_deterministic() {
+    let arch = vc1902();
+    let parallel = ParallelGemm::new(&arch);
+    if enabled(Precision::I8) {
+        let mut rng = Pcg32::new(77);
+        let a = Mat::<i8>::random(33, 29, &mut rng);
+        let b = Mat::<i8>::random(29, 21, &mut rng);
+        let mut c1 = Mat::<i32>::zeros(33, 21);
+        let mut c2 = Mat::<i32>::zeros(33, 21);
+        parallel.run_p::<i8>(&cfg(4, 16, 16, 16), &a, &b, &mut c1).unwrap();
+        parallel.run_p::<i8>(&cfg(4, 16, 16, 16), &a, &b, &mut c2).unwrap();
+        assert_eq!(c1, c2);
+    }
+    if enabled(Precision::Bf16) {
+        let mut rng = Pcg32::new(78);
+        let a = Mat::<Bf16>::random(24, 31, &mut rng);
+        let b = Mat::<Bf16>::random(31, 18, &mut rng);
+        let mut c1 = Mat::<f32>::zeros(24, 18);
+        let mut c2 = Mat::<f32>::zeros(24, 18);
+        parallel.run_p::<Bf16>(&cfg(3, 16, 16, 16), &a, &b, &mut c1).unwrap();
+        parallel.run_p::<Bf16>(&cfg(3, 16, 16, 16), &a, &b, &mut c2).unwrap();
+        assert_eq!(c1.data, c2.data, "bf16 float path must still be deterministic");
+    }
+}
+
+/// Satellite: the latent i32 accumulator overflow risk, pinned.
+///
+/// The safe bound for u8 is k ≤ ⌊i32::MAX / 255²⌋ = 33 025
+/// ([`Precision::max_safe_k`]): all-255 operands at exactly that k reach
+/// 2 147 450 625 = within 33 022 of i32::MAX without wrapping. The
+/// drivers enforce the bound with a debug assertion (test below).
+#[test]
+fn u8_adversarial_all_255_at_safe_k_bound_is_exact() {
+    if !enabled(Precision::U8) {
+        return;
+    }
+    let k = Precision::U8.max_safe_k().unwrap() as usize;
+    assert_eq!(k, 33_025);
+    let arch = vc1902();
+    let a = Mat::<u8>::from_vec(4, k, vec![255; 4 * k]);
+    let b = Mat::<u8>::from_vec(k, 4, vec![255; 4 * k]);
+    let mut c = Mat::<i32>::zeros(4, 4);
+    // kc at the derived maximum (3776): the accumulation crosses many
+    // kc-chunks, exercising the store-accumulate path near i32::MAX.
+    let blocked = BlockedGemm::new(&arch);
+    blocked.run_p::<u8>(&cfg(1, 8, 8, 3776), &a, &b, &mut c).unwrap();
+    let want = k as i64 * 255 * 255;
+    assert!(want <= i32::MAX as i64);
+    assert!(c.data.iter().all(|&v| v as i64 == want), "worst-case sum must not wrap");
+}
+
+/// Beyond the safe bound the drivers refuse (debug builds): the debug
+/// assertion names the precision and the bound instead of letting the
+/// accumulator wrap silently.
+#[cfg(debug_assertions)]
+#[test]
+#[should_panic(expected = "safe accumulation bound")]
+fn u8_beyond_safe_k_bound_trips_debug_assertion() {
+    if !enabled(Precision::U8) {
+        panic!("safe accumulation bound (skipped by VERSAL_PRECISION filter)");
+    }
+    let k = Precision::U8.max_safe_k().unwrap() as usize + 1;
+    let arch = vc1902();
+    let a = Mat::<u8>::zeros(4, k);
+    let b = Mat::<u8>::zeros(k, 4);
+    let mut c = Mat::<i32>::zeros(4, 4);
+    let _ = BlockedGemm::new(&arch).run_p::<u8>(&cfg(1, 8, 8, 3776), &a, &b, &mut c);
+}
+
+/// i16's worst case overflows i32 by construction but sits far inside
+/// the i64 accumulator: the reason the wide path exists.
+#[test]
+fn i16_adversarial_min_operands_stay_exact_in_i64() {
+    if !enabled(Precision::I16) {
+        return;
+    }
+    let k = 4096;
+    let arch = vc1902();
+    let a = Mat::<i16>::from_vec(8, k, vec![-32768; 8 * k]);
+    let b = Mat::<i16>::from_vec(k, 8, vec![-32768; 8 * k]);
+    let mut c = Mat::<i64>::zeros(8, 8);
+    BlockedGemm::new(&arch).run_p::<i16>(&cfg(1, 8, 8, 1024), &a, &b, &mut c).unwrap();
+    let want = k as i64 * 32768 * 32768; // 2^42: > i32::MAX, ≪ i64::MAX
+    assert!(want > i32::MAX as i64);
+    assert!(c.data.iter().all(|&v| v == want));
+}
