@@ -12,10 +12,22 @@ cargo test -q
 
 echo "==> cargo clippy -- -D warnings"
 if cargo clippy --version >/dev/null 2>&1; then
-    cargo clippy --all-targets -- -D warnings
+    # missing_docs stays advisory while the long tail of pre-existing
+    # public items gains docs. --force-warn (not -A) is required: the
+    # crate's own #![warn(missing_docs)] would override a plain -A, and
+    # -D warnings would then promote it to a hard error; --force-warn
+    # pins the lint at warn level against both.
+    cargo clippy --all-targets -- -D warnings --force-warn missing_docs
 else
     echo "    (clippy component not installed; skipping lint)"
 fi
+
+echo "==> cargo doc --no-deps (rustdoc lints denied)"
+RUSTDOCFLAGS="-D rustdoc::broken-intra-doc-links -D rustdoc::invalid-codeblock-attributes" \
+    cargo doc --no-deps --quiet
+
+echo "==> cargo test --doc"
+cargo test -q --doc
 
 echo "==> bench_cluster_scaling --quick (smoke)"
 VERSAL_BENCH_FAST=1 cargo bench --bench bench_cluster_scaling -- --quick
@@ -28,5 +40,8 @@ done
 
 echo "==> bench_mixed_precision --quick (smoke)"
 VERSAL_BENCH_FAST=1 cargo bench --bench bench_mixed_precision -- --quick
+
+echo "==> bench_serving --quick (smoke: batched+cached beats sequential, hits bit-exact)"
+VERSAL_BENCH_FAST=1 cargo bench --bench bench_serving -- --quick
 
 echo "CI checks passed."

@@ -36,10 +36,12 @@ pub struct Collectives<'a> {
 }
 
 impl<'a> Collectives<'a> {
+    /// Collective primitives over the cluster's fabric.
     pub fn new(cluster: &'a Cluster) -> Collectives<'a> {
         Collectives { cluster, fabric: Fabric::new(&cluster.fabric) }
     }
 
+    /// The instantiated fabric cost model.
     pub fn fabric(&self) -> &Fabric {
         &self.fabric
     }

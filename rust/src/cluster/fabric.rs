@@ -36,6 +36,7 @@
 /// (heterogeneity lives in the per-device tile counts, not the wiring).
 #[derive(Debug, Clone, PartialEq)]
 pub struct FabricSpec {
+    /// Display name of the fabric class (e.g. `pcie`).
     pub name: String,
     /// Payload streaming rate of one link, bytes per AIE cycle.
     pub link_bytes_per_cycle: f64,
@@ -94,11 +95,13 @@ pub struct Fabric {
 }
 
 impl Fabric {
+    /// Instantiate the cost model for a fabric class.
     pub fn new(spec: &FabricSpec) -> Fabric {
         assert!(spec.link_bytes_per_cycle > 0.0, "bandwidth must be positive");
         Fabric { spec: spec.clone() }
     }
 
+    /// The class parameters this model was built from.
     pub fn spec(&self) -> &FabricSpec {
         &self.spec
     }

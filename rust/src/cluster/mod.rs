@@ -113,6 +113,7 @@ impl std::error::Error for ClusterError {}
 /// the job may use on it. Pools may be heterogeneous in both.
 #[derive(Debug, Clone)]
 pub struct DeviceSpec {
+    /// The device's architecture description (Table-1 style).
     pub arch: VersalArch,
     /// AIE tiles the parallel-L4 engine uses on this device.
     pub tiles: usize,
@@ -121,8 +122,11 @@ pub struct DeviceSpec {
 /// A pool of simulated Versal devices plus the fabric connecting them.
 #[derive(Debug, Clone)]
 pub struct Cluster {
+    /// The device pool (possibly heterogeneous).
     pub devices: Vec<DeviceSpec>,
+    /// Who can talk to whom.
     pub topology: Topology,
+    /// What a transfer costs.
     pub fabric: FabricSpec,
 }
 
@@ -159,6 +163,7 @@ impl Cluster {
         )
     }
 
+    /// Devices in the pool.
     pub fn n_devices(&self) -> usize {
         self.devices.len()
     }

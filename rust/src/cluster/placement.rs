@@ -17,7 +17,9 @@ pub use crate::util::split::{offsets, partition};
 /// A 2-D assignment of C shards to devices for one `(m, n)` problem.
 #[derive(Debug, Clone)]
 pub struct GridPlacement {
+    /// Grid rows (m-bands).
     pub rows: usize,
+    /// Grid columns (n-bands).
     pub cols: usize,
     /// Device at each grid cell, row-major (`rows × cols` entries).
     pub devices: Vec<DeviceId>,
@@ -78,10 +80,12 @@ impl GridPlacement {
         GridPlacement::grid(cluster, rows, cols, m, n)
     }
 
+    /// Grid cells (`rows * cols`).
     pub fn n_cells(&self) -> usize {
         self.rows * self.cols
     }
 
+    /// Device owning grid cell `(i, j)`.
     pub fn device_at(&self, i: usize, j: usize) -> DeviceId {
         self.devices[i * self.cols + j]
     }
@@ -96,10 +100,12 @@ impl GridPlacement {
         (0..self.rows).map(|i| self.device_at(i, j)).collect()
     }
 
+    /// Starting m-offset of each grid row's band.
     pub fn row_offsets(&self) -> Vec<usize> {
         offsets(&self.row_bands)
     }
 
+    /// Starting n-offset of each grid column's band.
     pub fn col_offsets(&self) -> Vec<usize> {
         offsets(&self.col_bands)
     }

@@ -82,14 +82,19 @@ impl ClusterGemmConfig {
 /// Per-device execution statistics.
 #[derive(Debug, Clone, Default)]
 pub struct DeviceStats {
+    /// The device these counters belong to.
     pub device: DeviceId,
+    /// AIE tiles the device's local engine used.
     pub tiles: usize,
+    /// MACs the device retired across its shards.
     pub macs: u64,
+    /// Micro-kernel invocations across its shards.
     pub kernels: u64,
     /// Local schedule cycles summed over this device's SUMMA steps.
     pub compute_cycles: u64,
-    /// Bytes received / sent in the per-step shard broadcasts.
+    /// Bytes received in the per-step shard broadcasts.
     pub rx_bytes: u64,
+    /// Bytes sent in the per-step shard broadcasts.
     pub tx_bytes: u64,
 }
 
@@ -122,11 +127,35 @@ impl ClusterBreakdown {
 }
 
 /// The sharded-GEMM driver bound to a cluster.
+///
+/// # Example
+///
+/// ```
+/// use versal_gemm::cluster::{Cluster, ClusterGemm, ClusterGemmConfig};
+/// use versal_gemm::gemm::{Ccp, Mat};
+///
+/// // Two simulated VC1902s (4 AIE tiles each) on a PCIe-class ring.
+/// let cluster = Cluster::vc1902_pool(2, 4).unwrap();
+/// let engine = ClusterGemm::new(&cluster);
+/// let cfg = ClusterGemmConfig::with_ccp(Ccp { mc: 16, nc: 16, kc: 16 });
+///
+/// let a = Mat::<u8>::from_vec(4, 4, (1..=16).collect());
+/// let mut b = Mat::<u8>::zeros(4, 4);
+/// for i in 0..4 {
+///     b.set(i, i, 1); // identity, so C == A
+/// }
+/// let mut c = Mat::<i32>::zeros(4, 4);
+/// let (bd, stats) = engine.run_auto(&cfg, &a, &b, &mut c).unwrap();
+/// assert_eq!(c.data, (1..=16i32).collect::<Vec<i32>>());
+/// assert!(bd.total > 0, "cluster schedule cycles attached");
+/// assert_eq!(stats.len(), 2, "one stat row per device");
+/// ```
 pub struct ClusterGemm<'a> {
     cluster: &'a Cluster,
 }
 
 impl<'a> ClusterGemm<'a> {
+    /// A driver bound to (and borrowing) the cluster.
     pub fn new(cluster: &'a Cluster) -> ClusterGemm<'a> {
         ClusterGemm { cluster }
     }

@@ -28,6 +28,7 @@ pub enum Topology {
 }
 
 impl Topology {
+    /// Devices the topology wires together.
     pub fn n_devices(&self) -> usize {
         match *self {
             Topology::Ring(n) => n,
@@ -36,6 +37,7 @@ impl Topology {
         }
     }
 
+    /// Display label (`ring(4)`, `mesh(2x2)`, `full(8)`).
     pub fn name(&self) -> String {
         match *self {
             Topology::Ring(n) => format!("ring({n})"),
@@ -44,6 +46,7 @@ impl Topology {
         }
     }
 
+    /// Reject degenerate topologies (zero devices, 0×k meshes).
     pub fn validate(&self) -> Result<(), ClusterError> {
         match *self {
             Topology::Ring(n) | Topology::FullyConnected(n) if n == 0 => {

@@ -1,0 +1,238 @@
+//! Admission queue of the continuous-batching runtime: per-request SLO
+//! deadlines, deadline-expiry eviction, and precision-aware FIFO pops.
+//!
+//! The runtime works in a **logical microsecond clock** supplied by the
+//! caller (the CLI replay derives it from the synthetic trace's arrival
+//! offsets; tests pass literals), so admission, expiry and batch forming
+//! are fully deterministic — no wall-clock reads anywhere in the core.
+
+use super::request::RequestId;
+use crate::gemm::Precision;
+use std::collections::VecDeque;
+
+/// One request of the serving runtime: a feature row for the model, the
+/// precision it must be served at, and an absolute SLO deadline on the
+/// runtime's logical clock.
+#[derive(Debug, Clone)]
+pub struct ServeRequest {
+    /// Unique request id (shared generator with the threaded coordinator).
+    pub id: RequestId,
+    /// The activation row (`in_dim` f32 features).
+    pub features: Vec<f32>,
+    /// Precision this request must be served at — the batch-compatibility
+    /// key: requests only coalesce with same-precision peers.
+    pub precision: Precision,
+    /// Logical arrival time (µs).
+    pub arrival_us: u64,
+    /// Absolute deadline (µs): the request is evicted un-served once the
+    /// clock passes this.
+    pub deadline_us: u64,
+}
+
+/// Why a submit was turned away at the door.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdmitError {
+    /// The queue is at capacity (backpressure — retry later).
+    QueueFull,
+    /// The feature row does not match the model's input width.
+    BadShape {
+        /// Features supplied.
+        got: usize,
+        /// Features the backend expects.
+        want: usize,
+    },
+    /// The deadline already lies in the past at submit time.
+    DeadlinePassed,
+}
+
+impl std::fmt::Display for AdmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AdmitError::QueueFull => write!(f, "admission queue full (backpressure)"),
+            AdmitError::BadShape { got, want } => {
+                write!(f, "feature row has {got} elements, expected {want}")
+            }
+            AdmitError::DeadlinePassed => write!(f, "deadline already expired at submit"),
+        }
+    }
+}
+
+impl std::error::Error for AdmitError {}
+
+/// FIFO admission queue with a capacity cap and deadline eviction.
+#[derive(Debug)]
+pub struct AdmissionQueue {
+    cap: usize,
+    queue: VecDeque<ServeRequest>,
+}
+
+impl AdmissionQueue {
+    /// An empty queue admitting at most `cap` concurrent requests.
+    pub fn new(cap: usize) -> AdmissionQueue {
+        assert!(cap > 0, "queue capacity must be positive");
+        AdmissionQueue { cap, queue: VecDeque::new() }
+    }
+
+    /// Requests currently waiting.
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Whether the queue is empty.
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Admit a request; rejects on backpressure or an already-expired
+    /// deadline (both are synchronous, so the caller can shed load).
+    pub fn admit(&mut self, req: ServeRequest, now_us: u64) -> Result<(), AdmitError> {
+        if req.deadline_us <= now_us {
+            return Err(AdmitError::DeadlinePassed);
+        }
+        if self.queue.len() >= self.cap {
+            return Err(AdmitError::QueueFull);
+        }
+        self.queue.push_back(req);
+        Ok(())
+    }
+
+    /// Evict every request whose deadline has passed, in arrival order.
+    /// An SLO-expired request is *worse* than a shed one — it consumed
+    /// queue residency and still failed — so the runtime evicts eagerly
+    /// at the top of every tick.
+    pub fn expire(&mut self, now_us: u64) -> Vec<ServeRequest> {
+        let mut expired = Vec::new();
+        let mut rest = VecDeque::with_capacity(self.queue.len());
+        for r in self.queue.drain(..) {
+            if r.deadline_us <= now_us {
+                expired.push(r);
+            } else {
+                rest.push_back(r);
+            }
+        }
+        self.queue = rest;
+        expired
+    }
+
+    /// Precision of the oldest waiting request — the anchor of the next
+    /// batch.
+    pub fn head_precision(&self) -> Option<Precision> {
+        self.queue.front().map(|r| r.precision)
+    }
+
+    /// Arrival time of the oldest waiting request.
+    pub fn head_arrival_us(&self) -> Option<u64> {
+        self.queue.front().map(|r| r.arrival_us)
+    }
+
+    /// Earliest deadline among waiting requests.
+    pub fn earliest_deadline_us(&self) -> Option<u64> {
+        self.queue.iter().map(|r| r.deadline_us).min()
+    }
+
+    /// How many waiting requests are compatible with the head request
+    /// (same precision) — what the batch former sizes its cut against.
+    pub fn compatible_with_head(&self) -> usize {
+        match self.head_precision() {
+            None => 0,
+            Some(p) => self.queue.iter().filter(|r| r.precision == p).count(),
+        }
+    }
+
+    /// Remove up to `max` requests compatible with the head request (the
+    /// head always included), preserving arrival order. Later-arriving
+    /// requests of *other* precisions stay queued untouched — mixed
+    /// precisions must never coalesce into one fused GEMM — and cannot
+    /// starve: the head anchors every cut, so each precision class
+    /// reaches the front in FIFO order.
+    pub fn take_compatible(&mut self, max: usize) -> Vec<ServeRequest> {
+        let Some(prec) = self.head_precision() else {
+            return Vec::new();
+        };
+        let mut taken = Vec::new();
+        let mut rest = VecDeque::with_capacity(self.queue.len());
+        for r in self.queue.drain(..) {
+            if taken.len() < max && r.precision == prec {
+                taken.push(r);
+            } else {
+                rest.push_back(r);
+            }
+        }
+        self.queue = rest;
+        taken
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(prec: Precision, arrival: u64, deadline: u64) -> ServeRequest {
+        ServeRequest {
+            id: RequestId::fresh(),
+            features: vec![0.0; 4],
+            precision: prec,
+            arrival_us: arrival,
+            deadline_us: deadline,
+        }
+    }
+
+    #[test]
+    fn admit_and_backpressure() {
+        let mut q = AdmissionQueue::new(2);
+        assert!(q.admit(req(Precision::U8, 0, 100), 0).is_ok());
+        assert!(q.admit(req(Precision::U8, 1, 100), 1).is_ok());
+        assert_eq!(q.admit(req(Precision::U8, 2, 100), 2), Err(AdmitError::QueueFull));
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn past_deadline_rejected_at_the_door() {
+        let mut q = AdmissionQueue::new(8);
+        assert_eq!(
+            q.admit(req(Precision::U8, 50, 40), 50),
+            Err(AdmitError::DeadlinePassed)
+        );
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn expire_evicts_only_past_deadlines_in_order() {
+        let mut q = AdmissionQueue::new(8);
+        q.admit(req(Precision::U8, 0, 10), 0).unwrap();
+        q.admit(req(Precision::U8, 1, 100), 1).unwrap();
+        q.admit(req(Precision::I16, 2, 10), 2).unwrap();
+        let expired = q.expire(10);
+        assert_eq!(expired.len(), 2, "both deadline-10 requests evicted");
+        assert!(expired[0].arrival_us < expired[1].arrival_us);
+        assert_eq!(q.len(), 1);
+        assert_eq!(q.head_precision(), Some(Precision::U8));
+    }
+
+    #[test]
+    fn take_compatible_skips_other_precisions_without_reordering() {
+        let mut q = AdmissionQueue::new(8);
+        q.admit(req(Precision::U8, 0, 1000), 0).unwrap();
+        q.admit(req(Precision::Bf16, 1, 1000), 1).unwrap();
+        q.admit(req(Precision::U8, 2, 1000), 2).unwrap();
+        q.admit(req(Precision::U8, 3, 1000), 3).unwrap();
+        assert_eq!(q.compatible_with_head(), 3);
+        let cut = q.take_compatible(2);
+        assert_eq!(cut.len(), 2);
+        assert!(cut.iter().all(|r| r.precision == Precision::U8));
+        assert_eq!(cut[0].arrival_us, 0);
+        assert_eq!(cut[1].arrival_us, 2);
+        // The bf16 request moved to the head; the leftover u8 behind it.
+        assert_eq!(q.head_precision(), Some(Precision::Bf16));
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn empty_queue_is_inert() {
+        let mut q = AdmissionQueue::new(4);
+        assert!(q.expire(1_000_000).is_empty());
+        assert!(q.take_compatible(8).is_empty());
+        assert_eq!(q.head_precision(), None);
+        assert_eq!(q.earliest_deadline_us(), None);
+    }
+}

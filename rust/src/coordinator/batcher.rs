@@ -7,6 +7,7 @@ use super::request::InferenceRequest;
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};
 
+/// Batching policy of the threaded coordinator.
 #[derive(Debug, Clone)]
 pub struct BatcherConfig {
     /// Maximum requests per batch (the artifact's baked batch is the
@@ -37,19 +38,23 @@ pub struct DynamicBatcher {
 }
 
 impl DynamicBatcher {
+    /// An empty batcher under the given policy.
     pub fn new(cfg: BatcherConfig) -> DynamicBatcher {
         assert!(cfg.max_batch > 0, "max_batch must be positive");
         DynamicBatcher { cfg, queue: VecDeque::new() }
     }
 
+    /// Requests currently queued.
     pub fn len(&self) -> usize {
         self.queue.len()
     }
 
+    /// Whether nothing is queued.
     pub fn is_empty(&self) -> bool {
         self.queue.is_empty()
     }
 
+    /// The policy in force.
     pub fn config(&self) -> &BatcherConfig {
         &self.cfg
     }

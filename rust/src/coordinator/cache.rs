@@ -1,0 +1,256 @@
+//! Weight-stationary packed-operand cache: resident [`PackedWeights`]
+//! keyed by (layer, precision), LRU-evicted under an L4/DDR byte budget.
+//!
+//! On the real platform the packed Bc blocks live in FPGA Block RAM and
+//! spill to DDR; keeping a layer's packed weights resident across
+//! requests is what lets a repeat request skip `pack_b` (and the weight
+//! re-quantisation) entirely — the amortisation that NPU serving
+//! studies identify as the main lever for sustained GEMM throughput.
+//! The budget models that residency capacity: entries are charged their
+//! packed byte footprint and the least-recently-used entry is evicted
+//! when an insert would overflow it. An entry bigger than the whole
+//! budget is *uncacheable*: it is refused (and handed back to the
+//! caller to use transiently) rather than wiping the cache for a single
+//! request.
+
+use crate::dl::PackedWeights;
+use crate::gemm::Precision;
+use std::collections::HashMap;
+
+/// Cache key: which layer's weights, packed for which precision.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct CacheKey {
+    /// Layer index within the served model.
+    pub layer: usize,
+    /// Precision the weights were quantised + packed for.
+    pub precision: Precision,
+}
+
+/// Counters the cache accumulates over its lifetime.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Lookups that found a resident entry.
+    pub hits: u64,
+    /// Lookups that missed (cold or evicted).
+    pub misses: u64,
+    /// Entries evicted to make room under the budget.
+    pub evictions: u64,
+    /// Inserts refused because a single entry exceeded the whole budget.
+    pub uncacheable: u64,
+    /// Bytes currently resident.
+    pub bytes: u64,
+    /// The residency budget.
+    pub budget_bytes: u64,
+}
+
+impl CacheStats {
+    /// Hit fraction of all lookups (0.0 when nothing was looked up).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+struct Entry {
+    weights: PackedWeights,
+    bytes: u64,
+    last_used: u64,
+}
+
+/// The LRU cache itself. Lookup order: [`PackedBCache::touch`] (counts
+/// hit/miss, bumps recency) then [`PackedBCache::peek`] to borrow the
+/// entry without touching statistics.
+pub struct PackedBCache {
+    budget: u64,
+    seq: u64,
+    bytes: u64,
+    entries: HashMap<CacheKey, Entry>,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+    uncacheable: u64,
+}
+
+impl PackedBCache {
+    /// An empty cache with the given residency budget in bytes. A zero
+    /// budget is legal and caches nothing — the "sequential uncached"
+    /// baseline of `bench_serving`.
+    pub fn new(budget_bytes: u64) -> PackedBCache {
+        PackedBCache {
+            budget: budget_bytes,
+            seq: 0,
+            bytes: 0,
+            entries: HashMap::new(),
+            hits: 0,
+            misses: 0,
+            evictions: 0,
+            uncacheable: 0,
+        }
+    }
+
+    /// Resident entries.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Whether nothing is resident.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// The configured residency budget in bytes.
+    pub fn budget_bytes(&self) -> u64 {
+        self.budget
+    }
+
+    /// Record a lookup: `true` (and a recency bump) if the key is
+    /// resident, `false` (and a miss count) otherwise.
+    pub fn touch(&mut self, key: &CacheKey) -> bool {
+        self.seq += 1;
+        match self.entries.get_mut(key) {
+            Some(e) => {
+                e.last_used = self.seq;
+                self.hits += 1;
+                true
+            }
+            None => {
+                self.misses += 1;
+                false
+            }
+        }
+    }
+
+    /// Borrow a resident entry without counting a lookup or bumping
+    /// recency (used right after [`PackedBCache::touch`]/insert).
+    pub fn peek(&self, key: &CacheKey) -> Option<&PackedWeights> {
+        self.entries.get(key).map(|e| &e.weights)
+    }
+
+    /// Insert an entry, evicting least-recently-used entries until it
+    /// fits the budget. If the entry alone exceeds the budget it is
+    /// refused and handed back (`Err`) so the caller can use it
+    /// transiently — a single oversize request must not wipe the cache.
+    pub fn insert(&mut self, key: CacheKey, weights: PackedWeights) -> Result<(), PackedWeights> {
+        let bytes = weights.bytes();
+        if bytes > self.budget {
+            self.uncacheable += 1;
+            return Err(weights);
+        }
+        // Replace any stale entry under the same key first.
+        if let Some(old) = self.entries.remove(&key) {
+            self.bytes -= old.bytes;
+        }
+        while self.bytes + bytes > self.budget {
+            let lru = self
+                .entries
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| *k)
+                .expect("bytes > 0 implies a resident entry");
+            let evicted = self.entries.remove(&lru).expect("lru key resident");
+            self.bytes -= evicted.bytes;
+            self.evictions += 1;
+        }
+        self.seq += 1;
+        self.entries.insert(key, Entry { weights, bytes, last_used: self.seq });
+        self.bytes += bytes;
+        Ok(())
+    }
+
+    /// Snapshot of the counters.
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits,
+            misses: self.misses,
+            evictions: self.evictions,
+            uncacheable: self.uncacheable,
+            bytes: self.bytes,
+            budget_bytes: self.budget,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::vc1902;
+    use crate::dl::{Activation, QuantLinear};
+    use crate::gemm::GemmConfig;
+    use crate::util::Pcg32;
+
+    fn packed(in_dim: usize, out_dim: usize, seed: u64) -> PackedWeights {
+        let mut rng = Pcg32::new(seed);
+        let layer = QuantLinear::random(in_dim, out_dim, Activation::None, &mut rng);
+        layer.prepack(Precision::U8, &vc1902(), &GemmConfig::paper_table2(2))
+    }
+
+    fn key(layer: usize) -> CacheKey {
+        CacheKey { layer, precision: Precision::U8 }
+    }
+
+    #[test]
+    fn hit_after_insert_miss_before() {
+        let mut c = PackedBCache::new(1 << 20);
+        assert!(!c.touch(&key(0)), "cold lookup misses");
+        c.insert(key(0), packed(16, 8, 1)).unwrap();
+        assert!(c.touch(&key(0)), "resident lookup hits");
+        assert!(c.peek(&key(0)).is_some());
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses), (1, 1));
+        assert!((s.hit_rate() - 0.5).abs() < 1e-12);
+        assert!(s.bytes > 0 && s.bytes <= s.budget_bytes);
+    }
+
+    #[test]
+    fn lru_eviction_under_budget() {
+        // Three equal entries, budget for two: inserting the third must
+        // evict the least recently used (entry 0 after 1 is touched...).
+        let w0 = packed(16, 8, 1);
+        let per = w0.bytes();
+        let mut c = PackedBCache::new(2 * per);
+        c.insert(key(0), w0).unwrap();
+        c.insert(key(1), packed(16, 8, 2)).unwrap();
+        assert!(c.touch(&key(0)), "bump 0 so 1 is LRU");
+        c.insert(key(2), packed(16, 8, 3)).unwrap();
+        assert_eq!(c.len(), 2);
+        assert!(c.peek(&key(0)).is_some(), "recently used survives");
+        assert!(c.peek(&key(1)).is_none(), "LRU evicted");
+        assert!(c.peek(&key(2)).is_some(), "new entry resident");
+        assert_eq!(c.stats().evictions, 1);
+        assert!(c.stats().bytes <= c.budget_bytes());
+    }
+
+    #[test]
+    fn oversize_entry_refused_not_cached() {
+        let w = packed(64, 32, 4);
+        let mut c = PackedBCache::new(w.bytes() - 1);
+        match c.insert(key(9), w) {
+            Err(back) => assert_eq!(back.precision(), Precision::U8),
+            Ok(()) => panic!("oversize entry must be refused"),
+        }
+        assert!(c.is_empty());
+        assert_eq!(c.stats().uncacheable, 1);
+    }
+
+    #[test]
+    fn zero_budget_caches_nothing() {
+        let mut c = PackedBCache::new(0);
+        assert!(c.insert(key(0), packed(16, 8, 1)).is_err());
+        assert!(c.is_empty());
+        assert!(!c.touch(&key(0)));
+    }
+
+    #[test]
+    fn same_key_reinsert_replaces_without_leaking_bytes() {
+        let mut c = PackedBCache::new(1 << 20);
+        c.insert(key(0), packed(16, 8, 1)).unwrap();
+        let b1 = c.stats().bytes;
+        c.insert(key(0), packed(16, 8, 2)).unwrap();
+        assert_eq!(c.stats().bytes, b1, "replacement, not accumulation");
+        assert_eq!(c.len(), 1);
+    }
+}

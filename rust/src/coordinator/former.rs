@@ -1,0 +1,192 @@
+//! Dynamic batch former of the continuous-batching runtime: coalesces
+//! compatible waiting requests into one **fused GEMM** batch.
+//!
+//! Compatibility = same weight set and precision (here: same model, so
+//! the precision is the key); compatible feature rows are concatenated
+//! along the GEMM's free dimension — the batch axis of the activation
+//! operand — so `r` single-row requests become one `(r × k) · (k × n)`
+//! product. One fused GEMM amortises the per-block overheads (exposed
+//! Br copy, orchestration rounds, Cr round trips) over every row in the
+//! batch, the same amortisation argument as §4.2's kc scaling; requests
+//! at different precisions must never fuse (different kernels,
+//! accumulators and packed-operand widths).
+
+use super::admission::{AdmissionQueue, ServeRequest};
+use crate::gemm::Precision;
+
+/// Batch-forming policy.
+#[derive(Debug, Clone, Copy)]
+pub struct FormerConfig {
+    /// Maximum fused rows per batch.
+    pub max_batch: usize,
+    /// Maximum time (µs, logical clock) the oldest compatible request
+    /// may wait before a partial batch is cut anyway.
+    pub max_wait_us: u64,
+}
+
+impl Default for FormerConfig {
+    fn default() -> Self {
+        FormerConfig { max_batch: 8, max_wait_us: 2_000 }
+    }
+}
+
+/// One fused batch: same-precision requests plus their concatenated
+/// activation rows, ready for a backend's fused entry point.
+#[derive(Debug)]
+pub struct FusedBatch {
+    /// The common precision of every member request.
+    pub precision: Precision,
+    /// Member requests in arrival order.
+    pub requests: Vec<ServeRequest>,
+    /// Concatenated activation rows (`rows() × in_dim`, row-major).
+    pub features: Vec<f32>,
+}
+
+impl FusedBatch {
+    /// Fused batch rows (= member requests; each contributes one row).
+    pub fn rows(&self) -> usize {
+        self.requests.len()
+    }
+}
+
+/// Decides when a batch is ready and cuts it from the admission queue.
+#[derive(Debug, Clone)]
+pub struct BatchFormer {
+    cfg: FormerConfig,
+}
+
+impl BatchFormer {
+    /// A former with the given policy.
+    pub fn new(cfg: FormerConfig) -> BatchFormer {
+        assert!(cfg.max_batch > 0, "max_batch must be positive");
+        BatchFormer { cfg }
+    }
+
+    /// The policy in force.
+    pub fn config(&self) -> &FormerConfig {
+        &self.cfg
+    }
+
+    /// Whether a batch should be cut now: enough compatible requests for
+    /// a full batch, the head request has waited out `max_wait_us`, or
+    /// some waiting request's SLO deadline would pass before the
+    /// wait-based flush — a request whose slack is shorter than
+    /// `max_wait_us` must be served early, not grouped into expiry.
+    /// (Cutting head-first batches until the urgent request is reached
+    /// trades batch size for the SLO, which is the right direction.)
+    pub fn ready(&self, queue: &AdmissionQueue, now_us: u64) -> bool {
+        if queue.compatible_with_head() >= self.cfg.max_batch {
+            return true;
+        }
+        let Some(arrival) = queue.head_arrival_us() else {
+            return false;
+        };
+        if now_us.saturating_sub(arrival) >= self.cfg.max_wait_us {
+            return true;
+        }
+        match queue.earliest_deadline_us() {
+            Some(deadline) => deadline < arrival + self.cfg.max_wait_us,
+            None => false,
+        }
+    }
+
+    /// Cut the next fused batch: up to `max_batch` requests compatible
+    /// with the head, rows concatenated in arrival order. `None` on an
+    /// empty queue.
+    pub fn form(&self, queue: &mut AdmissionQueue, in_dim: usize) -> Option<FusedBatch> {
+        let requests = queue.take_compatible(self.cfg.max_batch);
+        if requests.is_empty() {
+            return None;
+        }
+        let precision = requests[0].precision;
+        let mut features = Vec::with_capacity(requests.len() * in_dim);
+        for r in &requests {
+            debug_assert_eq!(r.features.len(), in_dim, "admission checked the shape");
+            features.extend_from_slice(&r.features);
+        }
+        Some(FusedBatch { precision, requests, features })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::RequestId;
+
+    fn req(prec: Precision, arrival: u64, f: f32) -> ServeRequest {
+        ServeRequest {
+            id: RequestId::fresh(),
+            features: vec![f, 0.0],
+            precision: prec,
+            arrival_us: arrival,
+            deadline_us: u64::MAX,
+        }
+    }
+
+    #[test]
+    fn full_compatible_batch_is_ready() {
+        let former = BatchFormer::new(FormerConfig { max_batch: 2, max_wait_us: 1_000_000 });
+        let mut q = AdmissionQueue::new(16);
+        q.admit(req(Precision::U8, 0, 1.0), 0).unwrap();
+        assert!(!former.ready(&q, 1), "one of two: not ready");
+        q.admit(req(Precision::U8, 1, 2.0), 1).unwrap();
+        assert!(former.ready(&q, 1));
+        let batch = former.form(&mut q, 2).unwrap();
+        assert_eq!(batch.rows(), 2);
+        assert_eq!(batch.features, vec![1.0, 0.0, 2.0, 0.0], "rows concatenated in order");
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn deadline_cuts_partial_batch() {
+        let former = BatchFormer::new(FormerConfig { max_batch: 8, max_wait_us: 100 });
+        let mut q = AdmissionQueue::new(16);
+        q.admit(req(Precision::U8, 0, 1.0), 0).unwrap();
+        assert!(!former.ready(&q, 50));
+        assert!(former.ready(&q, 100), "head waited out max_wait");
+        assert_eq!(former.form(&mut q, 2).unwrap().rows(), 1);
+    }
+
+    #[test]
+    fn imminent_deadline_cuts_before_max_wait() {
+        // SLO slack shorter than max_wait: the request must be cut as
+        // soon as a tick sees it, not held for the wait-based flush it
+        // would never survive.
+        let former = BatchFormer::new(FormerConfig { max_batch: 8, max_wait_us: 2_000 });
+        let mut q = AdmissionQueue::new(16);
+        let mut r = req(Precision::U8, 0, 1.0);
+        r.deadline_us = 1_000; // < arrival + max_wait
+        q.admit(r, 0).unwrap();
+        assert!(former.ready(&q, 100), "urgent deadline forces an early cut");
+        assert_eq!(former.form(&mut q, 2).unwrap().rows(), 1);
+        // A comfortable deadline does not.
+        let mut r = req(Precision::U8, 0, 1.0);
+        r.deadline_us = 10_000;
+        q.admit(r, 0).unwrap();
+        assert!(!former.ready(&q, 100));
+    }
+
+    #[test]
+    fn mixed_precisions_never_fuse() {
+        let former = BatchFormer::new(FormerConfig { max_batch: 8, max_wait_us: 0 });
+        let mut q = AdmissionQueue::new(16);
+        q.admit(req(Precision::U8, 0, 1.0), 0).unwrap();
+        q.admit(req(Precision::Bf16, 1, 2.0), 1).unwrap();
+        q.admit(req(Precision::U8, 2, 3.0), 2).unwrap();
+        let first = former.form(&mut q, 2).unwrap();
+        assert_eq!(first.precision, Precision::U8);
+        assert_eq!(first.rows(), 2, "both u8 rows fused, bf16 skipped");
+        let second = former.form(&mut q, 2).unwrap();
+        assert_eq!(second.precision, Precision::Bf16);
+        assert_eq!(second.rows(), 1);
+        assert!(former.form(&mut q, 2).is_none(), "queue drained");
+    }
+
+    #[test]
+    fn empty_queue_forms_nothing() {
+        let former = BatchFormer::new(FormerConfig::default());
+        let mut q = AdmissionQueue::new(4);
+        assert!(!former.ready(&q, 0));
+        assert!(former.form(&mut q, 2).is_none());
+    }
+}

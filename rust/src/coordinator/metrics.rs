@@ -6,12 +6,39 @@ use std::time::Duration;
 /// Aggregated latency statistics (microseconds).
 #[derive(Debug, Clone)]
 pub struct LatencyStats {
+    /// Completions the distribution was computed over.
     pub count: u64,
+    /// Mean latency (µs).
     pub mean_us: f64,
+    /// Median latency (µs).
     pub p50_us: f64,
+    /// 95th-percentile latency (µs).
     pub p95_us: f64,
+    /// 99th-percentile latency (µs).
     pub p99_us: f64,
+    /// Worst observed latency (µs).
     pub max_us: f64,
+}
+
+impl LatencyStats {
+    /// Percentile summary of raw µs samples (`None` when empty). Shared
+    /// by the threaded coordinator's metrics and the continuous-batching
+    /// runtime's logical-clock latencies.
+    pub fn from_us_samples(samples: &[f64]) -> Option<LatencyStats> {
+        if samples.is_empty() {
+            return None;
+        }
+        let mut sorted = samples.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Some(LatencyStats {
+            count: sorted.len() as u64,
+            mean_us: sorted.iter().sum::<f64>() / sorted.len() as f64,
+            p50_us: percentile_sorted(&sorted, 50.0),
+            p95_us: percentile_sorted(&sorted, 95.0),
+            p99_us: percentile_sorted(&sorted, 99.0),
+            max_us: *sorted.last().unwrap(),
+        })
+    }
 }
 
 /// Metrics sink. Not thread-safe by itself — the coordinator owns one per
@@ -26,10 +53,12 @@ pub struct Metrics {
 }
 
 impl Metrics {
+    /// An empty sink.
     pub fn new() -> Metrics {
         Metrics::default()
     }
 
+    /// Record one answered request and the batch it rode in.
     pub fn record_completion(&mut self, latency: Duration, batch_size: usize, sim_cycles: u64) {
         self.latencies_us.push(latency.as_secs_f64() * 1e6);
         self.batch_sizes.push(batch_size as f64);
@@ -37,6 +66,7 @@ impl Metrics {
         self.completed += 1;
     }
 
+    /// Record one request shed by backpressure.
     pub fn record_rejection(&mut self) {
         self.rejected += 1;
     }
@@ -50,14 +80,17 @@ impl Metrics {
         self.completed += other.completed;
     }
 
+    /// Requests answered.
     pub fn completed(&self) -> u64 {
         self.completed
     }
 
+    /// Requests shed.
     pub fn rejected(&self) -> u64 {
         self.rejected
     }
 
+    /// Mean batch size across completions.
     pub fn mean_batch_size(&self) -> f64 {
         if self.batch_sizes.is_empty() {
             0.0
@@ -66,6 +99,7 @@ impl Metrics {
         }
     }
 
+    /// Mean simulated Versal cycles per batch.
     pub fn mean_simulated_cycles(&self) -> f64 {
         if self.simulated_cycles.is_empty() {
             0.0
@@ -74,20 +108,9 @@ impl Metrics {
         }
     }
 
+    /// Percentile summary of the recorded latencies.
     pub fn latency_stats(&self) -> Option<LatencyStats> {
-        if self.latencies_us.is_empty() {
-            return None;
-        }
-        let mut sorted = self.latencies_us.clone();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        Some(LatencyStats {
-            count: self.completed,
-            mean_us: sorted.iter().sum::<f64>() / sorted.len() as f64,
-            p50_us: percentile_sorted(&sorted, 50.0),
-            p95_us: percentile_sorted(&sorted, 95.0),
-            p99_us: percentile_sorted(&sorted, 99.0),
-            max_us: *sorted.last().unwrap(),
-        })
+        LatencyStats::from_us_samples(&self.latencies_us)
     }
 }
 

@@ -2,27 +2,49 @@
 //!
 //! The paper contributes a kernel + parallel schedule; a downstream user
 //! deploys it behind an inference service. This module is that service,
-//! in the style of a vLLM-like router scaled to the problem: a request
-//! queue with backpressure, a dynamic batcher (batch size / deadline), a
-//! pool of worker threads executing batches on a pluggable [`Backend`]
-//! (pure-Rust GEMM engine or the PJRT artifacts), and latency/throughput
-//! metrics. Every batch also carries a *simulated Versal cycle estimate*
-//! from the calibrated schedule model, so the service reports what the
-//! accelerator would have cost.
+//! in two complementary halves:
 //!
-//! Threading: std threads + mpsc (tokio is unavailable offline); the
-//! design is the usual leader/worker channel fabric.
+//! **The threaded coordinator** ([`Coordinator`]) — a vLLM-style router
+//! scaled to the problem: a request queue with backpressure, a dynamic
+//! batcher (batch size / deadline), a pool of worker threads executing
+//! batches on a pluggable [`Backend`] (pure-Rust GEMM engine or the PJRT
+//! artifacts), and latency/throughput metrics. Threading: std threads +
+//! mpsc (tokio is unavailable offline).
+//!
+//! **The continuous-batching runtime** ([`ServingRuntime`]) — the
+//! deterministic, cycle-domain engine behind the `serve` CLI: an
+//! admission queue with per-request SLO deadlines ([`admission`]), a
+//! batch former that coalesces compatible same-precision requests into
+//! fused GEMMs ([`former`]), a weight-stationary packed-operand cache
+//! keyed by (layer, precision) with LRU eviction under an L4/DDR byte
+//! budget ([`cache`]), and a pipelined executor overlapping pack /
+//! transfer / compute across simulated devices ([`pipeline`]). Every
+//! batch carries a *simulated Versal cycle estimate* from the calibrated
+//! schedule model, so the service reports what the accelerator would
+//! have cost — deterministically enough for CI to assert on.
 
+pub mod admission;
 mod batcher;
+pub mod cache;
+pub mod former;
 mod metrics;
+pub mod pipeline;
 mod request;
 mod server;
+pub mod serving;
 mod worker;
 mod workload;
 
+pub use admission::{AdmissionQueue, AdmitError, ServeRequest};
 pub use batcher::{BatcherConfig, DynamicBatcher};
+pub use cache::{CacheKey, CacheStats, PackedBCache};
+pub use former::{BatchFormer, FormerConfig, FusedBatch};
 pub use metrics::{LatencyStats, Metrics};
+pub use pipeline::{PipelinedExecutor, StageCost};
 pub use request::{InferenceRequest, InferenceResponse, RequestId};
 pub use server::{Coordinator, CoordinatorConfig, SubmitError};
-pub use worker::{Backend, ClusterGemmBackend, EchoBackend, RustGemmBackend};
-pub use workload::{ArrivalGen, ArrivalProcess, FeatureGen};
+pub use serving::{ServeOutcome, ServingConfig, ServingReport, ServingRuntime};
+pub use worker::{
+    Backend, BatchedBackend, ClusterGemmBackend, EchoBackend, RustGemmBackend,
+};
+pub use workload::{ArrivalGen, ArrivalProcess, FeatureGen, PrecisionMix};

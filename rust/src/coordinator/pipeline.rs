@@ -1,0 +1,187 @@
+//! Pipelined batch executor: overlaps pack / transfer / compute across
+//! simulated devices, in the cycle domain of the existing models.
+//!
+//! A fused batch passes through three stages whose costs come from the
+//! calibrated simulator:
+//!
+//! 1. **pack** — quantise + pack the activation block (and, on a cache
+//!    miss, the weight blocks) at the interconnect's pack bandwidth;
+//! 2. **transfer** — the data-movement categories of the schedule
+//!    (Br copies, Ar streaming, Cr GMIO round trips);
+//! 3. **compute** — arithmetic + orchestration.
+//!
+//! The pack engine (host/PL side) and the transfer path (the serial DDR
+//! port — the same single-arbiter assumption as [`crate::sim::ddr`])
+//! are single-server; the compute stage fans out over `devices`
+//! simulated accelerators. While batch *i* computes, batch *i+1* packs
+//! and transfers — the standard software-pipelining recurrence, applied
+//! one level above §5.3's in-tile compute/stream overlap. The runtime
+//! reports both the overlapped makespan and the sequential sum, so the
+//! benefit of the overlap is a measured number, not an assumption.
+
+/// Simulated cycle cost of one fused batch, split by pipeline stage.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct StageCost {
+    /// Packing cycles (activations; plus weights when the cache missed).
+    pub pack: u64,
+    /// Data-movement cycles (Br copy + Ar stream + Cr round trips).
+    pub transfer: u64,
+    /// Arithmetic + orchestration cycles.
+    pub compute: u64,
+}
+
+impl StageCost {
+    /// Unoverlapped cost of the batch.
+    pub fn total(self) -> u64 {
+        self.pack + self.transfer + self.compute
+    }
+}
+
+/// The executor model: single pack engine, single transfer path,
+/// `devices` compute servers — a **stateful busy clock**. The serving
+/// runtime owns two instances of the same recurrence: one stepped in
+/// logical µs (anchored to request arrival times, so per-request
+/// completion — and therefore latency — includes queueing delay) and
+/// one stepped in simulated cycles from time 0 (the report's pipelined
+/// makespan). One implementation, two unit domains.
+#[derive(Debug, Clone)]
+pub struct PipelinedExecutor {
+    devices: usize,
+    pack_free: u64,
+    xfer_free: u64,
+    device_free: Vec<u64>,
+    last_completion: u64,
+}
+
+impl PipelinedExecutor {
+    /// An idle executor over `devices` simulated compute devices.
+    pub fn new(devices: usize) -> PipelinedExecutor {
+        assert!(devices >= 1, "need at least one compute device");
+        PipelinedExecutor {
+            devices,
+            pack_free: 0,
+            xfer_free: 0,
+            device_free: vec![0; devices],
+            last_completion: 0,
+        }
+    }
+
+    /// Compute devices the executor schedules over.
+    pub fn devices(&self) -> usize {
+        self.devices
+    }
+
+    /// Advance the busy clock by one batch whose inputs are ready at
+    /// `ready_at` (same time unit as the costs). Each stage starts as
+    /// soon as its input is ready *and* its server is free; compute
+    /// picks the earliest-free device. Returns the batch's completion
+    /// time.
+    pub fn step(&mut self, ready_at: u64, cost: StageCost) -> u64 {
+        self.pack_free = self.pack_free.max(ready_at) + cost.pack;
+        self.xfer_free = self.xfer_free.max(self.pack_free) + cost.transfer;
+        let dev = self
+            .device_free
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, &t)| t)
+            .map(|(i, _)| i)
+            .expect("devices >= 1");
+        let done = self.device_free[dev].max(self.xfer_free) + cost.compute;
+        self.device_free[dev] = done;
+        self.last_completion = self.last_completion.max(done);
+        done
+    }
+
+    /// Latest completion time stepped so far (0 when idle).
+    pub fn busy_until(&self) -> u64 {
+        self.last_completion
+    }
+
+    /// Makespan of a standalone batch sequence, all ready at time 0 —
+    /// a pure replay of [`PipelinedExecutor::step`] on a fresh clock.
+    pub fn makespan(&self, batches: &[StageCost]) -> u64 {
+        let mut ex = PipelinedExecutor::new(self.devices);
+        for b in batches {
+            ex.step(0, *b);
+        }
+        ex.busy_until()
+    }
+
+    /// Makespan with no overlap at all — every stage of every batch
+    /// strictly serialised. The baseline the overlap is measured against.
+    pub fn sequential(batches: &[StageCost]) -> u64 {
+        batches.iter().map(|b| b.total()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn b(pack: u64, transfer: u64, compute: u64) -> StageCost {
+        StageCost { pack, transfer, compute }
+    }
+
+    #[test]
+    fn empty_and_single_batch() {
+        let ex = PipelinedExecutor::new(2);
+        assert_eq!(ex.makespan(&[]), 0);
+        // One batch cannot overlap with anything: makespan == total.
+        assert_eq!(ex.makespan(&[b(10, 20, 30)]), 60);
+        assert_eq!(PipelinedExecutor::sequential(&[b(10, 20, 30)]), 60);
+    }
+
+    #[test]
+    fn pipeline_overlaps_streams() {
+        let ex = PipelinedExecutor::new(1);
+        let batches = vec![b(10, 10, 100); 4];
+        let piped = ex.makespan(&batches);
+        let seq = PipelinedExecutor::sequential(&batches);
+        assert!(piped < seq, "overlap must win: {piped} vs {seq}");
+        // Compute-bound steady state: pack/transfer of batch i+1 hide
+        // behind compute of batch i, so makespan ≈ fill + Σ compute.
+        assert_eq!(piped, 10 + 10 + 4 * 100);
+        assert_eq!(seq, 4 * 120);
+    }
+
+    #[test]
+    fn more_devices_shorten_compute_bound_sequences() {
+        let batches = vec![b(1, 1, 1000); 4];
+        let one = PipelinedExecutor::new(1).makespan(&batches);
+        let two = PipelinedExecutor::new(2).makespan(&batches);
+        assert!(two < one, "{two} !< {one}");
+        // Four 1000-cycle computes over two devices: two per device.
+        assert!(two >= 2000);
+    }
+
+    #[test]
+    fn incremental_steps_match_makespan_replay() {
+        let batches = vec![b(7, 13, 50), b(3, 9, 40), b(11, 2, 60)];
+        let mut ex = PipelinedExecutor::new(2);
+        let mut last = 0;
+        for batch in &batches {
+            last = last.max(ex.step(0, *batch));
+        }
+        assert_eq!(ex.busy_until(), last);
+        assert_eq!(PipelinedExecutor::new(2).makespan(&batches), last);
+    }
+
+    #[test]
+    fn step_respects_ready_time() {
+        // A batch arriving long after the clock went idle starts at its
+        // ready time, not at the stale busy horizon.
+        let mut ex = PipelinedExecutor::new(1);
+        ex.step(0, b(1, 1, 1));
+        let done = ex.step(1_000, b(1, 1, 1));
+        assert_eq!(done, 1_003);
+    }
+
+    #[test]
+    fn stage_order_is_respected() {
+        // A transfer can never start before its pack finished: with a
+        // huge first pack, even an empty-compute second batch waits.
+        let ex = PipelinedExecutor::new(4);
+        let span = ex.makespan(&[b(1000, 1, 1), b(1, 1, 1)]);
+        assert!(span >= 1003, "second batch packs only after the first: {span}");
+    }
+}

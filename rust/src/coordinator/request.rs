@@ -10,6 +10,7 @@ pub struct RequestId(pub u64);
 static NEXT_ID: AtomicU64 = AtomicU64::new(1);
 
 impl RequestId {
+    /// The next unique id (process-wide atomic counter).
     pub fn fresh() -> RequestId {
         RequestId(NEXT_ID.fetch_add(1, Ordering::Relaxed))
     }
@@ -18,12 +19,16 @@ impl RequestId {
 /// One inference request: a feature vector for the classifier.
 #[derive(Debug, Clone)]
 pub struct InferenceRequest {
+    /// Unique request id.
     pub id: RequestId,
+    /// The feature row.
     pub features: Vec<f32>,
+    /// Wall-clock submit time (latency measurement anchor).
     pub submitted_at: Instant,
 }
 
 impl InferenceRequest {
+    /// A request stamped with a fresh id and the current instant.
     pub fn new(features: Vec<f32>) -> InferenceRequest {
         InferenceRequest { id: RequestId::fresh(), features, submitted_at: Instant::now() }
     }
@@ -32,8 +37,11 @@ impl InferenceRequest {
 /// The service's answer.
 #[derive(Debug, Clone)]
 pub struct InferenceResponse {
+    /// The request this answers.
     pub id: RequestId,
+    /// Class logits.
     pub logits: Vec<f32>,
+    /// Argmax class.
     pub predicted_class: usize,
     /// Wall-clock latency from submit to completion.
     pub latency: std::time::Duration,

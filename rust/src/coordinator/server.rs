@@ -19,11 +19,20 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
+/// Why a submit to the threaded coordinator failed.
 #[derive(Debug)]
 pub enum SubmitError {
+    /// The router queue is full; retry later.
     Backpressure,
+    /// The coordinator has been shut down.
     ShutDown,
-    BadShape { got: usize, want: usize },
+    /// The feature vector length does not match the model.
+    BadShape {
+        /// Features supplied.
+        got: usize,
+        /// Features expected.
+        want: usize,
+    },
 }
 
 impl std::fmt::Display for SubmitError {
@@ -40,9 +49,12 @@ impl std::fmt::Display for SubmitError {
 
 impl std::error::Error for SubmitError {}
 
+/// Configuration of the threaded coordinator.
 #[derive(Debug, Clone)]
 pub struct CoordinatorConfig {
+    /// Batching policy of the router.
     pub batcher: BatcherConfig,
+    /// Worker threads (each owns one backend).
     pub n_workers: usize,
     /// Feature-vector length; submits with a different length are
     /// rejected synchronously. Must match the backends' `in_dim`.

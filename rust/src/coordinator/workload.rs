@@ -2,7 +2,86 @@
 //! processes and request mixes, so the coordinator is evaluated under
 //! realistic (and reproducible) traffic rather than closed-loop bursts.
 
+use crate::gemm::Precision;
 use crate::util::Pcg32;
+
+/// A weighted mix of request precisions — the "mixed-shape" dimension of
+/// the synthetic serving traces: requests drawn from different precision
+/// classes exercise the batch former's no-coalescing rule and populate
+/// distinct (layer, precision) entries of the packed-operand cache.
+#[derive(Debug, Clone)]
+pub struct PrecisionMix {
+    entries: Vec<(Precision, f64)>,
+}
+
+impl PrecisionMix {
+    /// A mix from explicit (precision, weight) pairs.
+    pub fn new(entries: Vec<(Precision, f64)>) -> Result<PrecisionMix, String> {
+        if entries.is_empty() {
+            return Err("precision mix must not be empty".into());
+        }
+        // Every listed class must be sampleable: a zero weight would make
+        // `precisions()` advertise a phantom class (to disable a class,
+        // leave it out of the mix).
+        if entries.iter().any(|(_, w)| !w.is_finite() || *w <= 0.0) {
+            return Err("precision mix weights must be finite and positive".into());
+        }
+        Ok(PrecisionMix { entries })
+    }
+
+    /// Parse a CLI spelling like `u8:8,i16:3,bf16:1` (weights optional:
+    /// `u8,i16` weighs every class equally).
+    pub fn parse(s: &str) -> Result<PrecisionMix, String> {
+        let mut entries = Vec::new();
+        for part in s.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (name, weight) = match part.split_once(':') {
+                Some((n, w)) => {
+                    let w: f64 = w
+                        .trim()
+                        .parse()
+                        .map_err(|_| format!("bad weight in mix entry {part:?}"))?;
+                    (n.trim(), w)
+                }
+                None => (part, 1.0),
+            };
+            entries.push((Precision::parse(name)?, weight));
+        }
+        PrecisionMix::new(entries)
+    }
+
+    /// The default serving mix: mostly u8 traffic with i16 and bf16
+    /// minorities (8 : 3 : 1).
+    pub fn default_serving() -> PrecisionMix {
+        PrecisionMix::new(vec![
+            (Precision::U8, 8.0),
+            (Precision::I16, 3.0),
+            (Precision::Bf16, 1.0),
+        ])
+        .expect("static mix is valid")
+    }
+
+    /// The precision classes in the mix, in declaration order.
+    pub fn precisions(&self) -> Vec<Precision> {
+        self.entries.iter().map(|(p, _)| *p).collect()
+    }
+
+    /// Draw one precision, weight-proportionally.
+    pub fn sample(&self, rng: &mut Pcg32) -> Precision {
+        let total: f64 = self.entries.iter().map(|(_, w)| w).sum();
+        let mut draw = rng.f64() * total;
+        for (p, w) in &self.entries {
+            if draw < *w {
+                return *p;
+            }
+            draw -= w;
+        }
+        self.entries.last().expect("mix non-empty").0
+    }
+}
 
 /// Inter-arrival process of a request stream.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -28,6 +107,7 @@ pub struct ArrivalGen {
 }
 
 impl ArrivalGen {
+    /// A reproducible generator for the given process.
     pub fn new(process: ArrivalProcess, seed: u64) -> ArrivalGen {
         ArrivalGen { process, rng: Pcg32::new(seed), clock: 0.0, in_burst: true, phase_left: 0.0 }
     }
@@ -66,10 +146,12 @@ pub struct FeatureGen {
 }
 
 impl FeatureGen {
+    /// A reproducible source of `dim`-wide feature rows.
     pub fn new(dim: usize, seed: u64) -> FeatureGen {
         FeatureGen { rng: Pcg32::new(seed), dim }
     }
 
+    /// The next feature row (values in `[0, 1)`).
     pub fn next(&mut self) -> Vec<f32> {
         (0..self.dim).map(|_| self.rng.f64() as f32).collect()
     }
@@ -128,6 +210,36 @@ mod tests {
         let p = pg.take(5000);
         let b = bg.take(5000);
         assert!(cv2(&b) > 2.0 * cv2(&p), "bursty CV² {} vs poisson {}", cv2(&b), cv2(&p));
+    }
+
+    #[test]
+    fn precision_mix_parse_and_sample() {
+        let mix = PrecisionMix::parse("u8:8,i16:3,bf16:1").unwrap();
+        assert_eq!(
+            mix.precisions(),
+            vec![Precision::U8, Precision::I16, Precision::Bf16]
+        );
+        let mut rng = Pcg32::new(11);
+        let mut counts = std::collections::HashMap::new();
+        for _ in 0..6000 {
+            *counts.entry(mix.sample(&mut rng)).or_insert(0u32) += 1;
+        }
+        let u8s = counts[&Precision::U8];
+        let i16s = counts[&Precision::I16];
+        let bf = counts[&Precision::Bf16];
+        assert!(u8s > i16s && i16s > bf, "weights respected: {u8s} {i16s} {bf}");
+        // Unweighted spelling defaults every class to weight 1.
+        let even = PrecisionMix::parse("u8,i8").unwrap();
+        assert_eq!(even.precisions().len(), 2);
+        // Errors are reported, not panicked.
+        assert!(PrecisionMix::parse("").is_err());
+        assert!(PrecisionMix::parse("fp64:1").is_err());
+        assert!(PrecisionMix::parse("u8:-1").is_err());
+        assert!(PrecisionMix::parse("u8:0").is_err(), "zero weights rejected");
+        assert!(
+            PrecisionMix::parse("u8:0,i16:1").is_err(),
+            "a zero-weight class among positive ones is rejected, not kept as a phantom"
+        );
     }
 
     #[test]

@@ -17,12 +17,16 @@ use anyhow::Result;
 /// Configuration of one encoder block.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct AttentionSpec {
+    /// Model (embedding) width.
     pub d_model: usize,
+    /// Attention heads (`d_model % n_heads == 0`).
     pub n_heads: usize,
+    /// Feed-forward hidden width.
     pub d_ff: usize,
 }
 
 impl AttentionSpec {
+    /// The BERT-base configuration (768 / 12 / 3072).
     pub fn bert_base() -> AttentionSpec {
         AttentionSpec { d_model: 768, n_heads: 12, d_ff: 3072 }
     }
@@ -32,6 +36,7 @@ impl AttentionSpec {
         AttentionSpec { d_model: 32, n_heads: 4, d_ff: 64 }
     }
 
+    /// Per-head width (`d_model / n_heads`).
     pub fn d_head(&self) -> usize {
         self.d_model / self.n_heads
     }
@@ -56,6 +61,7 @@ impl AttentionSpec {
 /// One quantised encoder block.
 #[derive(Debug, Clone)]
 pub struct EncoderBlock {
+    /// The block architecture.
     pub spec: AttentionSpec,
     qkv: QuantLinear,
     out_proj: QuantLinear,
@@ -109,6 +115,7 @@ fn f32_matmul(m: usize, k: usize, n: usize, a: &[f32], b: &[f32]) -> Vec<f32> {
 }
 
 impl EncoderBlock {
+    /// Deterministic random init.
     pub fn random(spec: AttentionSpec, seed: u64) -> EncoderBlock {
         assert_eq!(spec.d_model % spec.n_heads, 0, "d_model must divide by heads");
         let mut rng = Pcg32::new(seed);

@@ -14,19 +14,28 @@ use crate::gemm::{MatI32, MatU8};
 /// Convolution geometry.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct ConvSpec {
+    /// Input channels.
     pub c_in: usize,
+    /// Input height.
     pub h: usize,
+    /// Input width.
     pub w: usize,
+    /// Output channels.
     pub c_out: usize,
+    /// Kernel height.
     pub kh: usize,
+    /// Kernel width.
     pub kw: usize,
+    /// Stride (both spatial dims; no padding).
     pub stride: usize,
 }
 
 impl ConvSpec {
+    /// Output height after the valid convolution.
     pub fn out_h(&self) -> usize {
         (self.h - self.kh) / self.stride + 1
     }
+    /// Output width after the valid convolution.
     pub fn out_w(&self) -> usize {
         (self.w - self.kw) / self.stride + 1
     }
@@ -36,6 +45,7 @@ impl ConvSpec {
         (self.c_out, self.c_in * self.kh * self.kw, self.out_h() * self.out_w())
     }
 
+    /// Reject degenerate geometries (zero dims, kernel larger than input).
     pub fn validate(&self) -> Result<(), String> {
         if self.kh > self.h || self.kw > self.w {
             return Err(format!("kernel {}x{} larger than input {}x{}", self.kh, self.kw, self.h, self.w));

@@ -4,9 +4,11 @@
 use crate::arch::VersalArch;
 use crate::gemm::precision::Bf16;
 use crate::gemm::{
-    Ccp, GemmConfig, Mat, MatI32, MatU8, ParallelGemm, Precision, PrecisionPolicy,
+    prepack_b, Ccp, GemmConfig, Mat, MatI32, MatU8, ParallelGemm, Precision, PrecisionPolicy,
+    PrepackedB,
 };
 use crate::quant::{quantized_linear, sym_dequantize, QTensor, SymQTensor};
+use crate::sim::CycleBreakdown;
 use crate::util::split::partition;
 use anyhow::Result;
 
@@ -32,6 +34,59 @@ pub enum TpMode {
     Row,
 }
 
+/// One layer's weight operand, quantised for a precision of the suite
+/// and packed block-by-block ([`PrepackedB`]) for the weight-stationary
+/// serving cache: a cache hit hands the GEMM driver these resident
+/// blocks and skips `pack_b` (and, for the integer paths, the weight
+/// re-quantisation) entirely. The symmetric integer variants carry the
+/// dequantisation scale their forward needs; the u8-affine path reuses
+/// the layer's own [`QTensor`] parameters.
+#[derive(Debug, Clone)]
+pub enum PackedWeights {
+    /// u8-affine weights (the layer's own quantisation, zero-point
+    /// corrected at forward time).
+    U8(PrepackedB<u8>),
+    /// Symmetric i8 weights plus their dequantisation scale.
+    I8 {
+        /// The packed weight blocks.
+        packed: PrepackedB<i8>,
+        /// Symmetric quantisation scale of the packed weights.
+        scale: f32,
+    },
+    /// Symmetric i16 weights plus their dequantisation scale.
+    I16 {
+        /// The packed weight blocks.
+        packed: PrepackedB<i16>,
+        /// Symmetric quantisation scale of the packed weights.
+        scale: f32,
+    },
+    /// bf16-rounded weights (no quantisation parameters needed).
+    Bf16(PrepackedB<Bf16>),
+}
+
+impl PackedWeights {
+    /// The precision these weights were packed for.
+    pub fn precision(&self) -> Precision {
+        match self {
+            PackedWeights::U8(_) => Precision::U8,
+            PackedWeights::I8 { .. } => Precision::I8,
+            PackedWeights::I16 { .. } => Precision::I16,
+            PackedWeights::Bf16(_) => Precision::Bf16,
+        }
+    }
+
+    /// Byte footprint of the packed blocks — what the serving cache
+    /// charges against its residency budget.
+    pub fn bytes(&self) -> u64 {
+        match self {
+            PackedWeights::U8(p) => p.bytes(),
+            PackedWeights::I8 { packed, .. } => packed.bytes(),
+            PackedWeights::I16 { packed, .. } => packed.bytes(),
+            PackedWeights::Bf16(p) => p.bytes(),
+        }
+    }
+}
+
 /// A linear layer `y = act(x·W + b)` with u8-quantised weights.
 ///
 /// Weights are quantised once at construction; activations are quantised
@@ -39,20 +94,26 @@ pub enum TpMode {
 /// paper's adaptive-precision motivation describes.
 #[derive(Debug, Clone)]
 pub struct QuantLinear {
+    /// Input features.
     pub in_dim: usize,
+    /// Output features.
     pub out_dim: usize,
-    pub weight: QTensor, // in_dim × out_dim, u8-affine (the default path)
+    /// u8-affine quantised weights, `in_dim × out_dim` (the default path).
+    pub weight: QTensor,
     /// Master f32 weights, kept so the i8/i16/bf16 paths quantise from
     /// the source rather than compounding the u8 quantisation error.
     /// Costs 4 bytes/param next to the 1-byte QTensor; a deployment that
     /// is permanently Fixed(U8) could drop this field, but the adaptive
     /// policies re-quantise per resolved precision and need the source.
     pub weight_f32: Vec<f32>,
+    /// Per-output-feature bias, added after dequantisation.
     pub bias: Vec<f32>,
+    /// Activation applied after the affine transform.
     pub activation: Activation,
 }
 
 impl QuantLinear {
+    /// A layer from f32 weights (quantised once here) and a bias.
     pub fn new(
         in_dim: usize,
         out_dim: usize,
@@ -155,8 +216,7 @@ impl QuantLinear {
         assert_eq!(x.len(), batch * self.in_dim, "input shape mismatch");
         let engine = ParallelGemm::new(arch);
         let mut cfg = cfg.clone();
-        let max = Ccp::derive_aligned(arch, prec.elem_bytes());
-        cfg.ccp.kc = cfg.ccp.kc.min(max.kc.max(16));
+        cfg.ccp = Self::serving_ccp(arch, &cfg, prec);
         let mut cycles = 0u64;
         let mut y: Vec<f32> = match prec {
             Precision::U8 => {
@@ -200,6 +260,119 @@ impl QuantLinear {
                 let mut c = Mat::<f32>::zeros(batch, self.out_dim);
                 let (cy, _) = engine.run_p::<Bf16>(&cfg, &qx, &qw, &mut c)?;
                 cycles += cy.total;
+                c.data
+            }
+        };
+        for i in 0..batch {
+            for (j, &b) in self.bias.iter().enumerate() {
+                y[i * self.out_dim + j] += b;
+            }
+        }
+        if self.activation == Activation::Relu {
+            for v in &mut y {
+                *v = v.max(0.0);
+            }
+        }
+        Ok((y, cycles))
+    }
+
+    /// The CCP a serving forward actually uses at `prec` under `cfg`:
+    /// `kc` is clamped to the element width's local-memory budget so one
+    /// serving config drives every precision. [`QuantLinear::prepack`]
+    /// and the forward paths must agree on this geometry — block shape
+    /// is part of the packed format.
+    pub fn serving_ccp(arch: &VersalArch, cfg: &GemmConfig, prec: Precision) -> Ccp {
+        let max = Ccp::derive_aligned(arch, prec.elem_bytes());
+        let mut ccp = cfg.ccp;
+        ccp.kc = ccp.kc.min(max.kc.max(16));
+        ccp
+    }
+
+    /// Quantise (if needed) and pack this layer's weight matrix for
+    /// serving at `prec` — the cold half of the weight-stationary cache.
+    /// The result feeds [`QuantLinear::forward_prepacked`], which is
+    /// bit-exact with [`QuantLinear::forward_prec`] at the same precision.
+    pub fn prepack(&self, prec: Precision, arch: &VersalArch, cfg: &GemmConfig) -> PackedWeights {
+        let ccp = Self::serving_ccp(arch, cfg, prec);
+        match prec {
+            Precision::U8 => PackedWeights::U8(prepack_b(&self.weight.data, ccp.kc, ccp.nc)),
+            Precision::I8 => {
+                let qw = SymQTensor::<i8>::from_f32(self.in_dim, self.out_dim, &self.weight_f32);
+                PackedWeights::I8 {
+                    packed: prepack_b(&qw.data, ccp.kc, ccp.nc),
+                    scale: qw.params.scale,
+                }
+            }
+            Precision::I16 => {
+                let qw = SymQTensor::<i16>::from_f32(self.in_dim, self.out_dim, &self.weight_f32);
+                PackedWeights::I16 {
+                    packed: prepack_b(&qw.data, ccp.kc, ccp.nc),
+                    scale: qw.params.scale,
+                }
+            }
+            Precision::Bf16 => {
+                let qw = Mat::<Bf16>::from_f32_slice(self.in_dim, self.out_dim, &self.weight_f32);
+                PackedWeights::Bf16(prepack_b(&qw, ccp.kc, ccp.nc))
+            }
+        }
+    }
+
+    /// Forward a batch against **resident packed weights** — the warm
+    /// half of the serving cache. Numerics are bit-exact with
+    /// [`QuantLinear::forward_prec`] at the packed precision (same
+    /// quantisation, same block geometry, same accumulation order); the
+    /// cycle breakdown simply omits the weight pack the cold path would
+    /// pay, which is exactly the amortisation the cache exists for.
+    pub fn forward_prepacked(
+        &self,
+        batch: usize,
+        x: &[f32],
+        packed: &PackedWeights,
+        arch: &VersalArch,
+        cfg: &GemmConfig,
+    ) -> Result<(Vec<f32>, CycleBreakdown)> {
+        assert_eq!(x.len(), batch * self.in_dim, "input shape mismatch");
+        let prec = packed.precision();
+        let engine = ParallelGemm::new(arch);
+        let mut cfg = cfg.clone();
+        cfg.ccp = Self::serving_ccp(arch, &cfg, prec);
+        let mut cycles = CycleBreakdown::zero();
+        let mut y: Vec<f32> = match packed {
+            PackedWeights::U8(pb) => {
+                let qx = QTensor::from_f32(batch, self.in_dim, x);
+                let mut qc = MatI32::zeros(batch, self.out_dim);
+                let (cy, _) = engine.run_prepacked(&cfg, &qx.data, pb, &mut qc)?;
+                cycles += cy;
+                let corr = crate::quant::zero_point_correction(
+                    &qx.data,
+                    &self.weight.data,
+                    qx.params,
+                    self.weight.params,
+                );
+                for (c, &d) in qc.data.iter_mut().zip(&corr.data) {
+                    *c += d;
+                }
+                crate::quant::dequantize_gemm_i32(&qc, qx.params, self.weight.params)
+            }
+            PackedWeights::I8 { packed, scale } => {
+                let qx = SymQTensor::<i8>::from_f32(batch, self.in_dim, x);
+                let mut qc = Mat::<i32>::zeros(batch, self.out_dim);
+                let (cy, _) = engine.run_prepacked_p::<i8>(&cfg, &qx.data, packed, &mut qc)?;
+                cycles += cy;
+                sym_dequantize(&qc, qx.params.scale, *scale)
+            }
+            PackedWeights::I16 { packed, scale } => {
+                let qx = SymQTensor::<i16>::from_f32(batch, self.in_dim, x);
+                let mut qc = Mat::<i64>::zeros(batch, self.out_dim);
+                let (cy, _) = engine.run_prepacked_p::<i16>(&cfg, &qx.data, packed, &mut qc)?;
+                cycles += cy;
+                sym_dequantize(&qc, qx.params.scale, *scale)
+            }
+            PackedWeights::Bf16(pb) => {
+                let qx = Mat::<Bf16>::from_f32_slice(batch, self.in_dim, x);
+                let mut c = Mat::<f32>::zeros(batch, self.out_dim);
+                let (cy, _) = engine.run_prepacked_p::<Bf16>(&cfg, &qx, pb, &mut c)?;
+                cycles += cy;
                 c.data
             }
         };
@@ -389,6 +562,48 @@ mod tests {
         });
         let (via_prec, _) = layer.forward_prec(4, &x, Precision::U8, &arch, &cfg).unwrap();
         assert_eq!(via_closure, via_prec, "same u8 numerics either way");
+    }
+
+    #[test]
+    fn prepacked_forward_bit_exact_with_cold_path_per_precision() {
+        // The serving cache's end-to-end contract at the layer level: a
+        // warm (prepacked) forward returns the *same bits* as the cold
+        // path that quantises + packs the weights per call.
+        use crate::arch::vc1902;
+        let arch = vc1902();
+        let mut rng = Pcg32::new(58);
+        let layer = QuantLinear::random(48, 24, Activation::Relu, &mut rng);
+        let batch = 5;
+        let x: Vec<f32> = (0..batch * 48).map(|_| rng.f64() as f32 * 2.0 - 1.0).collect();
+        let mut cfg = GemmConfig::paper_table2(4);
+        cfg.ccp = Ccp { mc: 64, nc: 64, kc: 64 };
+        for prec in Precision::ALL {
+            let (cold, cold_cycles) = layer.forward_prec(batch, &x, prec, &arch, &cfg).unwrap();
+            let packed = layer.prepack(prec, &arch, &cfg);
+            assert_eq!(packed.precision(), prec);
+            assert!(packed.bytes() > 0);
+            let (warm, warm_cycles) =
+                layer.forward_prepacked(batch, &x, &packed, &arch, &cfg).unwrap();
+            assert_eq!(cold, warm, "{prec}: cache hit must be bit-exact with cold pack");
+            assert_eq!(
+                cold_cycles, warm_cycles.total,
+                "{prec}: same schedule when packing is uncounted"
+            );
+        }
+    }
+
+    #[test]
+    fn prepack_bytes_scale_with_precision_width() {
+        use crate::arch::vc1902;
+        let arch = vc1902();
+        let mut rng = Pcg32::new(59);
+        let layer = QuantLinear::random(64, 32, Activation::None, &mut rng);
+        let cfg = GemmConfig::paper_table2(2);
+        let b1 = layer.prepack(Precision::U8, &arch, &cfg).bytes();
+        let b2 = layer.prepack(Precision::I16, &arch, &cfg).bytes();
+        // Same panel geometry, 2-byte elements → exactly twice the bytes
+        // (both widths fit one (kc, nc) block at this layer size).
+        assert_eq!(b2, 2 * b1, "i16 weights occupy twice the u8 residency");
     }
 
     #[test]

@@ -1,15 +1,17 @@
 //! Quantised multi-layer perceptron — the model behind the end-to-end
 //! serving example and the `bench_e2e_serving` harness.
 
-use super::linear::{Activation, QuantLinear, TpMode};
+use super::linear::{Activation, PackedWeights, QuantLinear, TpMode};
 use crate::arch::VersalArch;
 use crate::gemm::{GemmConfig, MatI32, MatU8, Precision, PrecisionPolicy};
+use crate::sim::CycleBreakdown;
 use crate::util::Pcg32;
 use anyhow::Result;
 
 /// Model architecture: layer widths, e.g. `[784, 512, 512, 10]`.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct MlpSpec {
+    /// Layer widths, input first (e.g. `[784, 512, 512, 10]`).
     pub dims: Vec<usize>,
 }
 
@@ -19,6 +21,7 @@ impl MlpSpec {
         MlpSpec { dims: vec![784, 512, 512, 10] }
     }
 
+    /// Number of linear layers (`dims.len() - 1`).
     pub fn n_layers(&self) -> usize {
         self.dims.len() - 1
     }
@@ -38,7 +41,9 @@ impl MlpSpec {
 /// head).
 #[derive(Debug, Clone)]
 pub struct Mlp {
+    /// The architecture.
     pub spec: MlpSpec,
+    /// The quantised layers, input to head.
     pub layers: Vec<QuantLinear>,
 }
 
@@ -120,6 +125,42 @@ impl Mlp {
             chosen.push(prec);
         }
         Ok((h, cycles, chosen))
+    }
+
+    /// Quantise + pack every layer's weights for serving at `prec` —
+    /// the whole model's weight-stationary working set, ready for the
+    /// packed-operand cache (one [`PackedWeights`] per layer).
+    pub fn prepack(
+        &self,
+        prec: Precision,
+        arch: &VersalArch,
+        cfg: &GemmConfig,
+    ) -> Vec<PackedWeights> {
+        self.layers.iter().map(|l| l.prepack(prec, arch, cfg)).collect()
+    }
+
+    /// Forward a batch of activations against resident packed weights
+    /// (one entry per layer, from [`Mlp::prepack`] or the serving
+    /// cache). Bit-exact with [`Mlp::forward_uniform_policy`] at the
+    /// packed precision; the returned breakdown contains no weight-pack
+    /// cycles — the caller charges those where the pack happened.
+    pub fn forward_prepacked(
+        &self,
+        batch: usize,
+        x: &[f32],
+        packed: &[PackedWeights],
+        arch: &VersalArch,
+        cfg: &GemmConfig,
+    ) -> Result<(Vec<f32>, CycleBreakdown)> {
+        assert_eq!(packed.len(), self.layers.len(), "one packed weight set per layer");
+        let mut h = x.to_vec();
+        let mut cycles = CycleBreakdown::zero();
+        for (layer, pw) in self.layers.iter().zip(packed) {
+            let (y, cy) = layer.forward_prepacked(batch, &h, pw, arch, cfg)?;
+            h = y;
+            cycles += cy;
+        }
+        Ok((h, cycles))
     }
 
     /// [`Mlp::forward_policy`] with one policy applied to every layer.
@@ -255,6 +296,30 @@ mod tests {
             )
             .unwrap();
         assert!(cy_bf16 > cy_u8, "bf16 {cy_bf16} !> u8 {cy_u8}");
+    }
+
+    #[test]
+    fn prepacked_model_forward_bit_exact_with_policy_path() {
+        use crate::arch::vc1902;
+        use crate::gemm::Ccp;
+        let arch = vc1902();
+        let mlp = Mlp::random(MlpSpec { dims: vec![32, 24, 8] }, 13);
+        let mut rng = Pcg32::new(130);
+        let batch = 6;
+        let x: Vec<f32> = (0..batch * 32).map(|_| rng.f64() as f32 * 2.0 - 1.0).collect();
+        let mut cfg = GemmConfig::paper_table2(4);
+        cfg.ccp = Ccp { mc: 64, nc: 64, kc: 64 };
+        for prec in [Precision::U8, Precision::I16] {
+            let (cold, cold_cycles, _) = mlp
+                .forward_uniform_policy(batch, &x, PrecisionPolicy::Fixed(prec), &arch, &cfg)
+                .unwrap();
+            let packed = mlp.prepack(prec, &arch, &cfg);
+            assert_eq!(packed.len(), mlp.spec.n_layers());
+            let (warm, warm_cycles) =
+                mlp.forward_prepacked(batch, &x, &packed, &arch, &cfg).unwrap();
+            assert_eq!(cold, warm, "{prec}: model-level cache hit is bit-exact");
+            assert_eq!(cold_cycles, warm_cycles.total, "{prec}: same schedule");
+        }
     }
 
     #[test]

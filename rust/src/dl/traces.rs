@@ -12,17 +12,23 @@ use super::conv::ConvSpec;
 /// A GEMM problem instance (m, k, n) with a human label.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct GemmShape {
+    /// Human-readable layer label.
     pub label: String,
+    /// GEMM rows (batch × spatial positions).
     pub m: usize,
+    /// Reduction depth.
     pub k: usize,
+    /// GEMM columns (output features).
     pub n: usize,
 }
 
 impl GemmShape {
+    /// A labelled (m, k, n) shape.
     pub fn new(label: &str, m: usize, k: usize, n: usize) -> GemmShape {
         GemmShape { label: label.to_string(), m, k, n }
     }
 
+    /// MACs of the shape (`m · k · n`).
     pub fn macs(&self) -> u64 {
         self.m as u64 * self.k as u64 * self.n as u64
     }

@@ -14,10 +14,15 @@ use crate::util::Pcg32;
 /// A labelled dataset: row-major features plus class labels.
 #[derive(Debug, Clone)]
 pub struct Dataset {
+    /// Samples in the set.
     pub n: usize,
+    /// Feature width.
     pub dim: usize,
+    /// Label classes.
     pub classes: usize,
+    /// Features, row-major `n × dim`.
     pub x: Vec<f32>,
+    /// Labels, one per sample.
     pub y: Vec<usize>,
 }
 
@@ -69,6 +74,7 @@ impl Dataset {
         Dataset { n, dim, classes, x, y }
     }
 
+    /// Borrow sample `i` (features, label).
     pub fn sample(&self, i: usize) -> (&[f32], usize) {
         (&self.x[i * self.dim..(i + 1) * self.dim], self.y[i])
     }
@@ -77,13 +83,16 @@ impl Dataset {
 /// A float MLP for training (ReLU hidden layers, linear head).
 #[derive(Debug, Clone)]
 pub struct FloatMlp {
+    /// The architecture.
     pub spec: MlpSpec,
     /// Per layer: row-major `in × out` weights and `out` biases.
     pub weights: Vec<Vec<f32>>,
+    /// Per-layer biases.
     pub biases: Vec<Vec<f32>>,
 }
 
 impl FloatMlp {
+    /// Deterministic random init.
     pub fn random(spec: MlpSpec, seed: u64) -> FloatMlp {
         let mut rng = Pcg32::new(seed);
         let mut weights = Vec::new();
@@ -128,6 +137,7 @@ impl FloatMlp {
         (acts, logits)
     }
 
+    /// Single-sample forward pass (f32 throughout).
     pub fn forward(&self, x: &[f32]) -> Vec<f32> {
         self.forward_full(x).1
     }

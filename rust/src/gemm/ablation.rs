@@ -44,9 +44,11 @@ pub enum LoopChoice {
 }
 
 impl LoopChoice {
+    /// Loops that can be distributed without racing on C (§4.4).
     pub const PARALLELISABLE: [LoopChoice; 4] =
         [LoopChoice::L1, LoopChoice::L3, LoopChoice::L4, LoopChoice::L5];
 
+    /// Display label, with the index variable the paper uses.
     pub fn name(self) -> &'static str {
         match self {
             LoopChoice::L1 => "L1 (jc)",
@@ -59,9 +61,12 @@ impl LoopChoice {
     }
 }
 
+/// Why a parallelisation strategy cannot be evaluated.
 #[derive(Debug, PartialEq, Eq)]
 pub enum AblationError {
+    /// The loop's iterations race on concurrent updates of C (§4.4).
     RaceCondition(LoopChoice),
+    /// The split is geometrically infeasible (reason attached).
     Infeasible(String),
 }
 
@@ -82,9 +87,13 @@ impl std::error::Error for AblationError {}
 /// (m, n, k) = (mc, nc, kc).
 #[derive(Debug, Clone)]
 pub struct AblationResult {
+    /// The loop that was parallelised.
     pub choice: LoopChoice,
+    /// Tiles the strategy spread over.
     pub tiles: usize,
+    /// Wall-clock cycles of the block under the strategy.
     pub total_cycles: u64,
+    /// The paper's per-tile throughput metric.
     pub macs_per_cycle_per_tile: f64,
 }
 

@@ -24,6 +24,7 @@ pub struct BlockedGemm<'a> {
 }
 
 impl<'a> BlockedGemm<'a> {
+    /// A driver bound to (and borrowing) an architecture description.
     pub fn new(arch: &'a VersalArch) -> BlockedGemm<'a> {
         BlockedGemm { arch, tile: AieTileModel::new(arch) }
     }

@@ -23,8 +23,11 @@ pub const LOCAL_RESERVED_BYTES: u64 = 2560;
 /// The three cache configuration parameters (strides of loops L1–L3).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Ccp {
+    /// Rows of the Ac block (loop-L3 stride).
     pub mc: usize,
+    /// Columns of the Bc block (loop-L1 stride).
     pub nc: usize,
+    /// Shared reduction depth of Ac/Bc (loop-L2 stride).
     pub kc: usize,
 }
 

@@ -43,6 +43,7 @@ pub struct ElemKernel<T: Element> {
 }
 
 impl<T: Element> ElemKernel<T> {
+    /// A kernel instance for the element type (stateless; zero-sized).
     pub fn new() -> ElemKernel<T> {
         ElemKernel { _elem: PhantomData }
     }

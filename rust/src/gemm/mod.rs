@@ -45,7 +45,7 @@ pub mod types;
 pub use blocked::BlockedGemm;
 pub use ccp::Ccp;
 pub use microkernel::{ElemKernel, MicroKernel, MR, NR};
-pub use packing::{pack_a, pack_b, PackedA, PackedB};
+pub use packing::{pack_a, pack_b, prepack_b, PackedA, PackedB, PrepackedB};
 pub use parallel::{ParallelGemm, TileStats};
 pub use precision::{
     bf16_forward_error_bound, Accum, Bf16, Element, Precision, PrecisionPolicy,

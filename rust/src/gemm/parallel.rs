@@ -26,7 +26,7 @@
 
 use super::ccp::Ccp;
 use super::microkernel::{ElemKernel, MicroKernel, MR, NR};
-use super::packing::{pack_a, pack_b};
+use super::packing::{pack_a, pack_b, PrepackedB};
 use super::precision::{Accum, Element, Precision};
 use super::types::{Mat, MatI32, MatU8};
 use super::GemmConfig;
@@ -37,18 +37,26 @@ use anyhow::{ensure, Result};
 /// Per-tile execution statistics.
 #[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct TileStats {
+    /// Tile index (0-based within the active set).
     pub tile: usize,
+    /// Micro-kernel invocations this tile executed.
     pub kernels: u64,
+    /// MACs this tile retired.
     pub macs: u64,
+    /// Br micro-panels this tile copied to local memory.
     pub br_copies: u64,
 }
 
 /// One row of Table 2 (plus the inputs that produced it).
 #[derive(Debug, Clone)]
 pub struct Table2Row {
+    /// Active AIE tiles.
     pub tiles: usize,
+    /// Contended Cr round-trip cycles (the paper's "Copy Cr" column).
     pub copy_cr_cycles: u64,
+    /// Overlapped micro-kernel loop cycles (constant 4,110 per row).
     pub arithmetic_cycles: u64,
+    /// Wall-clock cycles of the whole Table-2 problem.
     pub total_cycles: u64,
     /// MACs/cycle per tile — the paper's metric: micro-kernel MACs over
     /// (isolated-kernel loop cycles + the contended Cr round trip).
@@ -62,6 +70,7 @@ pub struct ParallelGemm<'a> {
 }
 
 impl<'a> ParallelGemm<'a> {
+    /// A driver bound to (and borrowing) an architecture description.
     pub fn new(arch: &'a VersalArch) -> ParallelGemm<'a> {
         ParallelGemm { arch, tile: AieTileModel::new(arch) }
     }
@@ -82,6 +91,28 @@ impl<'a> ParallelGemm<'a> {
     /// The loop-L4 distribution is precision-independent; buffer bytes,
     /// vector-op counts, Ar stream traffic and the Cr round trip scale
     /// with `T::PRECISION`.
+    ///
+    /// # Example
+    ///
+    /// ```
+    /// use versal_gemm::arch::vc1902;
+    /// use versal_gemm::gemm::{Ccp, GemmConfig, Mat, ParallelGemm};
+    ///
+    /// let arch = vc1902();
+    /// let engine = ParallelGemm::new(&arch);
+    /// let cfg = GemmConfig {
+    ///     ccp: Ccp { mc: 16, nc: 16, kc: 16 },
+    ///     tiles: 2,
+    ///     count_packing: false,
+    ///     steady_stream: true,
+    /// };
+    /// let a = Mat::<i8>::from_vec(2, 3, vec![1, 2, 3, 4, 5, 6]);
+    /// let b = Mat::<i8>::from_vec(3, 2, vec![1, 0, 0, 1, 1, 1]);
+    /// let mut c = Mat::<i32>::zeros(2, 2);
+    /// let (cycles, _stats) = engine.run_p::<i8>(&cfg, &a, &b, &mut c).unwrap();
+    /// assert_eq!(c.data, vec![4, 5, 10, 11]); // exact integer numerics
+    /// assert!(cycles.total > 0); // plus the simulated Versal schedule
+    /// ```
     pub fn run_p<T: Element>(
         &self,
         cfg: &GemmConfig,
@@ -152,6 +183,121 @@ impl<'a> ParallelGemm<'a> {
                     }
 
                     // ----- schedule: lockstep rounds over the L4 space ---
+                    cycles += self.block_schedule_p(
+                        cfg,
+                        bc.n_panels,
+                        ac.n_panels,
+                        kc_eff,
+                        bc.panel_bytes(),
+                        prec,
+                    );
+                    ic += mc_eff;
+                }
+                pc += kc_eff;
+            }
+            jc += nc_eff;
+        }
+        if cfg.count_packing {
+            cycles.total += cycles.packing;
+        }
+        Ok((cycles, stats))
+    }
+
+    /// [`ParallelGemm::run`] with a pre-packed B operand (the paper's u8
+    /// pipeline) — see [`ParallelGemm::run_prepacked_p`].
+    pub fn run_prepacked(
+        &self,
+        cfg: &GemmConfig,
+        a: &MatU8,
+        pb: &PrepackedB<u8>,
+        c: &mut MatI32,
+    ) -> Result<(CycleBreakdown, Vec<TileStats>)> {
+        self.run_prepacked_p::<u8>(cfg, a, pb, c)
+    }
+
+    /// C += A·B where B was packed ahead of time ([`super::prepack_b`]).
+    ///
+    /// The serving layer's weight-stationary path: the loop nest, tile
+    /// distribution and numerics are identical to
+    /// [`ParallelGemm::run_p`] — the Bc blocks are simply fetched from
+    /// `pb` instead of being packed inside the `pc` loop, so a resident
+    /// weight matrix pays its `pack_b` cost once across any number of
+    /// requests. `cfg.count_packing` therefore accounts only the Ac
+    /// (activation) packing here; the B pack cost is charged where the
+    /// prepack happened (the cache-miss path of the serving runtime).
+    ///
+    /// `pb` must have been built with the same (kc, nc) as `cfg.ccp` —
+    /// block geometry is part of the packed format — and results are
+    /// bit-exact against the on-the-fly path for every precision.
+    pub fn run_prepacked_p<T: Element>(
+        &self,
+        cfg: &GemmConfig,
+        a: &Mat<T>,
+        pb: &PrepackedB<T>,
+        c: &mut Mat<T::Acc>,
+    ) -> Result<(CycleBreakdown, Vec<TileStats>)> {
+        ensure!(a.cols == pb.rows, "inner dimensions differ");
+        ensure!((c.rows, c.cols) == (a.rows, pb.cols), "output shape mismatch");
+        ensure!(
+            pb.kc == cfg.ccp.kc && pb.nc == cfg.ccp.nc,
+            "prepacked B built for (kc, nc) = ({}, {}), cfg wants ({}, {})",
+            pb.kc,
+            pb.nc,
+            cfg.ccp.kc,
+            cfg.ccp.nc
+        );
+        ensure!(cfg.tiles >= 1, "need at least one tile");
+        ensure!(
+            cfg.tiles <= self.arch.aie.n_tiles,
+            "requested {} tiles, device has {}",
+            cfg.tiles,
+            self.arch.aie.n_tiles
+        );
+        let prec = T::PRECISION;
+        cfg.ccp.check(self.arch, prec.elem_bytes()).map_err(anyhow::Error::msg)?;
+        Multicast::new(self.arch, cfg.tiles).map_err(|e| anyhow::anyhow!(e.to_string()))?;
+        debug_assert!(
+            match prec.max_safe_k() {
+                Some(kb) => a.cols as u64 <= kb,
+                None => true,
+            },
+            "k={} exceeds the safe accumulation bound {:?} for {prec}",
+            a.cols,
+            prec.max_safe_k()
+        );
+
+        let (m, n, k) = (a.rows, pb.cols, a.cols);
+        let Ccp { mc, nc, kc } = cfg.ccp;
+        let kernel = ElemKernel::<T>::new();
+        let mut cycles = CycleBreakdown::zero();
+        let mut stats: Vec<TileStats> =
+            (0..cfg.tiles).map(|t| TileStats { tile: t, ..Default::default() }).collect();
+
+        let mut jc = 0;
+        while jc < n {
+            let nc_eff = nc.min(n - jc);
+            let mut pc = 0;
+            while pc < k {
+                let kc_eff = kc.min(k - pc);
+                let bc = pb.block(pc / kc, jc / nc);
+                let mut ic = 0;
+                while ic < m {
+                    let mc_eff = mc.min(m - ic);
+                    let ac = pack_a(a, ic, pc, mc_eff, kc_eff);
+                    if cfg.count_packing {
+                        cycles.packing +=
+                            (ac.bytes() as f64 / self.arch.ic.pack_bytes_per_cycle) as u64;
+                    }
+
+                    compute_block(&kernel, &ac, bc, c, ic, jc, kc_eff);
+
+                    for pj in 0..bc.n_panels {
+                        let t = pj % cfg.tiles;
+                        stats[t].br_copies += 1;
+                        stats[t].kernels += ac.n_panels as u64;
+                        stats[t].macs += ac.n_panels as u64 * ElemKernel::<T>::macs(kc_eff);
+                    }
+
                     cycles += self.block_schedule_p(
                         cfg,
                         bc.n_panels,
@@ -500,6 +646,79 @@ mod tests {
             g.block_schedule(&cfg, 32, 32, 1024, (1024 * NR) as u64),
             g.block_schedule_p(&cfg, 32, 32, 1024, (1024 * NR) as u64, Precision::U8)
         );
+    }
+
+    #[test]
+    fn prepacked_run_matches_on_the_fly_packing() {
+        // The serving cache's correctness contract: a GEMM over a
+        // prepacked (resident) B must be bit-exact with the driver that
+        // packs B inside the loop — same cycles, same stats, same C.
+        use crate::gemm::packing::prepack_b;
+        use crate::gemm::precision::Bf16;
+        let arch = vc1902();
+        let g = ParallelGemm::new(&arch);
+        let mut rng = Pcg32::new(0x5E);
+        // Edge shape: m/k/n not multiples of the block sizes.
+        let (m, k, n) = (21, 45, 27);
+        let cfg = cfg(3, 16, 16, 32);
+        let a = MatU8::random(m, k, &mut rng);
+        let b = MatU8::random(k, n, &mut rng);
+        let pb = prepack_b(&b, cfg.ccp.kc, cfg.ccp.nc);
+        let mut c1 = MatI32::zeros(m, n);
+        let mut c2 = MatI32::zeros(m, n);
+        let (cy1, st1) = g.run(&cfg, &a, &b, &mut c1).unwrap();
+        let (cy2, st2) = g.run_prepacked(&cfg, &a, &pb, &mut c2).unwrap();
+        assert_eq!(c1.max_abs_diff(&c2), 0, "prepacked numerics must be bit-exact");
+        assert_eq!(cy1, cy2, "identical schedule when packing is uncounted");
+        assert_eq!(st1, st2, "identical tile distribution");
+        // And for a 2-byte precision.
+        let a = Mat::<Bf16>::random(16, 24, &mut rng);
+        let b = Mat::<Bf16>::random(24, 16, &mut rng);
+        let pbf = prepack_b(&b, 16, 16);
+        let mut c1 = Mat::<f32>::zeros(16, 16);
+        let mut c2 = Mat::<f32>::zeros(16, 16);
+        let cfg2 = cfg(2, 16, 16, 16);
+        g.run_p::<Bf16>(&cfg2, &a, &b, &mut c1).unwrap();
+        g.run_prepacked_p::<Bf16>(&cfg2, &a, &pbf, &mut c2).unwrap();
+        assert_eq!(c1.max_abs_diff_f64(&c2), 0.0, "bit-identical f32 accumulation order");
+    }
+
+    #[test]
+    fn prepacked_run_skips_b_pack_cycles() {
+        use crate::gemm::packing::prepack_b;
+        let arch = vc1902();
+        let g = ParallelGemm::new(&arch);
+        let mut rng = Pcg32::new(0x5F);
+        let a = MatU8::random(32, 32, &mut rng);
+        let b = MatU8::random(32, 32, &mut rng);
+        let mut cfg = cfg(2, 16, 16, 16);
+        cfg.count_packing = true;
+        let pb = prepack_b(&b, 16, 16);
+        let mut c1 = MatI32::zeros(32, 32);
+        let mut c2 = MatI32::zeros(32, 32);
+        let (cold, _) = g.run(&cfg, &a, &b, &mut c1).unwrap();
+        let (warm, _) = g.run_prepacked(&cfg, &a, &pb, &mut c2).unwrap();
+        assert_eq!(c1.max_abs_diff(&c2), 0);
+        assert!(
+            warm.packing < cold.packing,
+            "resident B must not re-pay pack_b: warm {} vs cold {}",
+            warm.packing,
+            cold.packing
+        );
+    }
+
+    #[test]
+    fn prepacked_geometry_mismatch_rejected() {
+        use crate::gemm::packing::prepack_b;
+        let arch = vc1902();
+        let g = ParallelGemm::new(&arch);
+        let b = MatU8::zeros(16, 16);
+        let pb = prepack_b(&b, 8, 8);
+        let a = MatU8::zeros(16, 16);
+        let mut c = MatI32::zeros(16, 16);
+        // cfg kc/nc differ from the prepack geometry: error, not UB.
+        let e = g.run_prepacked(&cfg(1, 16, 16, 16), &a, &pb, &mut c).unwrap_err();
+        assert!(e.to_string().contains("prepacked B"), "{e}");
     }
 
     #[test]

@@ -29,6 +29,21 @@
 use crate::util::Pcg32;
 
 /// The four kernel datapaths of the mixed-precision suite.
+///
+/// # Example
+///
+/// ```
+/// use versal_gemm::gemm::Precision;
+///
+/// // §2 vector widths: 128 8-bit MACs per op, 32 16-bit, 16 bf16.
+/// assert_eq!(Precision::U8.macs_per_vec_op(), 128);
+/// assert_eq!(Precision::I16.macs_per_vec_op(), 32);
+/// // u8 accumulates in i32, so k is bounded; bf16 saturates instead.
+/// assert_eq!(Precision::U8.max_safe_k(), Some(33_025));
+/// assert_eq!(Precision::Bf16.max_safe_k(), None);
+/// // CLI/env spellings round-trip.
+/// assert_eq!(Precision::parse("bf16").unwrap(), Precision::Bf16);
+/// ```
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Precision {
     /// u8 · u8 → i32 — the paper's shipping kernel (§4.2, Figure 4).
@@ -46,6 +61,7 @@ impl Precision {
     pub const ALL: [Precision; 4] =
         [Precision::U8, Precision::I8, Precision::I16, Precision::Bf16];
 
+    /// Canonical lower-case spelling (`u8`, `i8`, `i16`, `bf16`).
     pub fn name(self) -> &'static str {
         match self {
             Precision::U8 => "u8",

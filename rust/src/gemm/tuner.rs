@@ -19,8 +19,11 @@ use crate::sim::AieTileModel;
 /// Tuning result: the chosen CCPs and the predicted cost.
 #[derive(Debug, Clone)]
 pub struct Tuned {
+    /// The winning cache configuration parameters.
     pub ccp: Ccp,
+    /// Model-predicted wall cycles under the winner.
     pub predicted_cycles: u64,
+    /// Feasible candidates the search scored.
     pub candidates_evaluated: usize,
 }
 
@@ -92,9 +95,11 @@ pub fn ccp_for_precision(arch: &VersalArch, prec: Precision) -> Ccp {
 /// predicted relative error meets the accuracy budget.
 #[derive(Debug, Clone)]
 pub struct PrecisionChoice {
+    /// The selected precision.
     pub precision: Precision,
     /// The (feasible, paper-shaped) CCP the cost was predicted under.
     pub ccp: Ccp,
+    /// Model-predicted wall cycles at that precision.
     pub predicted_cycles: u64,
     /// [`Precision::quant_rel_error`] at the problem's k.
     pub predicted_rel_error: f64,

@@ -13,8 +13,11 @@ use super::precision::{Accum, Bf16, Element};
 /// Row-major matrix over any scalar.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Mat<T> {
+    /// Number of rows.
     pub rows: usize,
+    /// Number of columns.
     pub cols: usize,
+    /// Row-major storage, `rows * cols` elements.
     pub data: Vec<T>,
 }
 
@@ -25,6 +28,7 @@ pub type MatU8 = Mat<u8>;
 pub type MatI32 = Mat<i32>;
 
 impl<T> Mat<T> {
+    /// Wrap a row-major buffer; `data.len()` must equal `rows * cols`.
     pub fn from_vec(rows: usize, cols: usize, data: Vec<T>) -> Mat<T> {
         assert_eq!(data.len(), rows * cols, "data length mismatch");
         Mat { rows, cols, data }
@@ -32,16 +36,19 @@ impl<T> Mat<T> {
 }
 
 impl<T: Copy + Default> Mat<T> {
+    /// A matrix of additive zeros (`T::default()`).
     pub fn zeros(rows: usize, cols: usize) -> Mat<T> {
         Mat { rows, cols, data: vec![T::default(); rows * cols] }
     }
 
+    /// Element at `(r, c)` (bounds checked in debug builds).
     #[inline]
     pub fn at(&self, r: usize, c: usize) -> T {
         debug_assert!(r < self.rows && c < self.cols);
         self.data[r * self.cols + c]
     }
 
+    /// Store `v` at `(r, c)` (bounds checked in debug builds).
     #[inline]
     pub fn set(&mut self, r: usize, c: usize, v: T) {
         debug_assert!(r < self.rows && c < self.cols);
@@ -77,6 +84,7 @@ impl<T: Element> Mat<T> {
 }
 
 impl<A: Accum> Mat<A> {
+    /// Accumulate `v` into `(r, c)` with the accumulator's addition.
     #[inline]
     pub fn add(&mut self, r: usize, c: usize, v: A) {
         debug_assert!(r < self.rows && c < self.cols);

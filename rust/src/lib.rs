@@ -44,8 +44,14 @@
 //! - [`dl`]      — deep-learning substrate: linear layers, im2col
 //!                 convolution lowering, a quantised MLP, GEMM shape traces
 //!                 of well-known CNN/transformer models.
-//! - [`coordinator`] — the L3 serving coordinator: request router, dynamic
-//!                 batcher, AIE worker pool, metrics and backpressure.
+//! - [`coordinator`] — the serving layer: the wall-clock threaded
+//!                 coordinator (request router, dynamic batcher, AIE
+//!                 worker pool, metrics, backpressure) **and** the
+//!                 deterministic continuous-batching runtime (admission
+//!                 SLOs, fused same-precision batches, the
+//!                 weight-stationary packed-operand cache with LRU
+//!                 eviction, and the pipelined pack/transfer/compute
+//!                 executor over the cycle models).
 //! - [`runtime`] — PJRT client wrapper that loads the AOT artifacts
 //!                 (`artifacts/*.hlo.txt`, produced by `python/compile/`)
 //!                 and executes them from Rust.
@@ -54,6 +60,15 @@
 //! - [`util`]    — in-tree replacements for crates unavailable offline:
 //!                 PRNG, stats, CLI parser, mini property-testing harness,
 //!                 mini bench harness, INI config parser.
+//!
+//! `docs/ARCHITECTURE.md` is the narrative companion: the module map,
+//! the request/data flow through the layers, and a table mapping each
+//! module to the paper section it reproduces.
+
+// Public API should explain itself; new undocumented items surface as
+// warnings here (the doc gate in ci/check.sh keeps rustdoc's own lints
+// hard errors).
+#![warn(missing_docs)]
 
 pub mod arch;
 pub mod cluster;

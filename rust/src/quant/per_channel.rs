@@ -14,7 +14,9 @@ use crate::gemm::{MatI32, MatU8};
 /// A u8 weight matrix quantised with per-output-column parameters.
 #[derive(Debug, Clone, PartialEq)]
 pub struct PerChannelWeights {
+    /// The quantised codes.
     pub data: MatU8,
+    /// Affine parameters, one per output column.
     pub params: Vec<QParams>, // one per column
 }
 

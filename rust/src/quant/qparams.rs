@@ -5,7 +5,9 @@ use crate::gemm::MatU8;
 /// Per-tensor affine quantisation: `real ≈ scale · (q − zero_point)`.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct QParams {
+    /// Step size between adjacent quantised values.
     pub scale: f32,
+    /// The u8 code representing real 0.0.
     pub zero_point: i32,
 }
 
@@ -24,11 +26,13 @@ impl QParams {
         QParams { scale, zero_point }
     }
 
+    /// Real → u8 code (round, clamp to \[0, 255\]).
     #[inline]
     pub fn quantize(&self, x: f32) -> u8 {
         ((x / self.scale).round() as i32 + self.zero_point).clamp(0, 255) as u8
     }
 
+    /// u8 code → real.
     #[inline]
     pub fn dequantize(&self, q: u8) -> f32 {
         self.scale * (q as i32 - self.zero_point) as f32
@@ -38,7 +42,9 @@ impl QParams {
 /// A u8 tensor together with its quantisation parameters.
 #[derive(Debug, Clone, PartialEq)]
 pub struct QTensor {
+    /// The quantised codes.
     pub data: MatU8,
+    /// The affine parameters shared by every element.
     pub params: QParams,
 }
 

@@ -37,6 +37,7 @@ impl IntElement for i16 {
 /// Symmetric quantisation parameters: `real ≈ scale · q`.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct SymQParams {
+    /// Step size (symmetric: no zero point).
     pub scale: f32,
 }
 
@@ -52,7 +53,9 @@ impl SymQParams {
 /// A symmetric-quantised tensor at i8 or i16 storage.
 #[derive(Debug, Clone, PartialEq)]
 pub struct SymQTensor<T: IntElement> {
+    /// The quantised codes.
     pub data: Mat<T>,
+    /// The symmetric scale shared by every element.
     pub params: SymQParams,
 }
 

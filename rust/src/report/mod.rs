@@ -4,6 +4,7 @@ use crate::arch::VersalArch;
 use crate::cluster::{
     Cluster, ClusterError, ClusterGemm, ClusterGemmConfig, FabricSpec, Topology,
 };
+use crate::coordinator::{LatencyStats, ServingReport};
 use crate::gemm::parallel::{ParallelGemm, Table2Row};
 use crate::gemm::{tuner, GemmConfig, Precision, MR, NR};
 use crate::sim::{AieTileModel, Gmio, KernelMode};
@@ -108,11 +109,17 @@ pub const TABLE2_PROBLEM: (usize, usize, usize) = (256, 256, 2048);
 /// One row of the device-level scaling table (Table 2, one level up).
 #[derive(Debug, Clone)]
 pub struct ClusterScalingRow {
+    /// Devices in the pool.
     pub devices: usize,
+    /// AIE tiles per device.
     pub tiles_per_device: usize,
+    /// Placement grid (rows, cols).
     pub grid: (usize, usize),
+    /// Critical-path compute cycles.
     pub compute_cycles: u64,
+    /// Communication left exposed after prefetch overlap.
     pub exposed_comm_cycles: u64,
+    /// Wall-clock cycles of the cluster schedule.
     pub total_cycles: u64,
     /// Aggregate MACs/cycle over the cluster wall clock.
     pub aggregate_macs_per_cycle: f64,
@@ -167,7 +174,9 @@ pub fn cluster_scaling_rows(
 /// evaluated at one precision of the §4.2 kernel family.
 #[derive(Debug, Clone)]
 pub struct PrecisionRow {
+    /// The row’s precision.
     pub precision: Precision,
+    /// Bytes per input element.
     pub elem_bytes: u64,
     /// MACs per AIE vector op (§2 datapath widths).
     pub macs_per_vec_op: u64,
@@ -181,6 +190,7 @@ pub struct PrecisionRow {
     pub kernel_macs_per_cycle: f64,
     /// Full Table-2-problem schedule at the row's tile count.
     pub total_cycles: u64,
+    /// Aggregate MACs/cycle over the whole problem.
     pub aggregate_macs_per_cycle: f64,
     /// Predicted relative error at the problem's k (the tuner's model).
     pub rel_error: f64,
@@ -281,6 +291,73 @@ pub fn cluster_table(rows: &[ClusterScalingRow]) -> Table {
     t
 }
 
+/// Render a continuous-batching runtime report as a summary table:
+/// request accounting, fused-batch shape, packed-cache behaviour, the
+/// stage cycle split and the pipelined-vs-sequential makespans.
+pub fn serving_table(r: &ServingReport) -> Table {
+    let mut t = Table::new(&["metric", "value"]).align(0, Align::Left).align(1, Align::Left);
+    let mut kv = |k: &str, v: String| {
+        t.row(&[k.to_string(), v]);
+    };
+    kv("requests completed", r.completed.to_string());
+    kv("requests expired (SLO)", r.expired.to_string());
+    kv("requests rejected", r.rejected.to_string());
+    kv("requests failed (backend)", r.failed.to_string());
+    kv("fused batches", r.batches.to_string());
+    kv("mean rows/batch", format!("{:.2}", r.mean_batch));
+    kv(
+        "cache hits / misses",
+        format!(
+            "{} / {} ({:.0}% hit rate)",
+            r.cache.hits,
+            r.cache.misses,
+            r.cache.hit_rate() * 100.0
+        ),
+    );
+    kv(
+        "cache evictions / uncacheable",
+        format!("{} / {}", r.cache.evictions, r.cache.uncacheable),
+    );
+    kv(
+        "cache residency",
+        format!(
+            "{:.2} / {:.2} MiB",
+            r.cache.bytes as f64 / (1u64 << 20) as f64,
+            r.cache.budget_bytes as f64 / (1u64 << 20) as f64
+        ),
+    );
+    kv("pack cycles", fmt_kcycles(r.pack_cycles));
+    kv("transfer cycles", fmt_kcycles(r.transfer_cycles));
+    kv("compute cycles", fmt_kcycles(r.compute_cycles));
+    kv("sequential makespan", fmt_kcycles(r.sequential_cycles));
+    kv("pipelined makespan", fmt_kcycles(r.pipelined_cycles));
+    if r.pipelined_cycles > 0 {
+        kv(
+            "pipeline overlap win",
+            format!(
+                "{:.1}%",
+                (1.0 - r.pipelined_cycles as f64 / r.sequential_cycles as f64) * 100.0
+            ),
+        );
+        kv("requests / Mcycle", format!("{:.1}", r.requests_per_mcycle()));
+    }
+    t
+}
+
+/// Render a latency distribution (µs) as a one-row percentile table.
+pub fn latency_table(l: &LatencyStats) -> Table {
+    let mut t = Table::new(&["count", "mean µs", "p50 µs", "p95 µs", "p99 µs", "max µs"]);
+    t.row(&[
+        l.count.to_string(),
+        format!("{:.0}", l.mean_us),
+        format!("{:.0}", l.p50_us),
+        format!("{:.0}", l.p95_us),
+        format!("{:.0}", l.p99_us),
+        format!("{:.0}", l.max_us),
+    ]);
+    t
+}
+
 /// Save a table as CSV under `bench_results/<name>.csv` (directory
 /// created on demand) so bench runs leave machine-readable artifacts
 /// next to the printed output. Returns the written path.
@@ -376,6 +453,49 @@ mod tests {
         assert_eq!(table.n_rows(), 4);
         let txt = table.to_text();
         assert!(txt.contains("bf16") && txt.contains("i16"), "{txt}");
+    }
+
+    #[test]
+    fn serving_and_latency_tables_render() {
+        use crate::coordinator::CacheStats;
+        let report = ServingReport {
+            completed: 10,
+            expired: 1,
+            rejected: 2,
+            failed: 0,
+            batches: 3,
+            mean_batch: 3.33,
+            cache: CacheStats {
+                hits: 6,
+                misses: 3,
+                evictions: 1,
+                uncacheable: 0,
+                bytes: 1 << 20,
+                budget_bytes: 4 << 20,
+            },
+            pack_cycles: 1000,
+            transfer_cycles: 2000,
+            compute_cycles: 3000,
+            pipelined_cycles: 4500,
+            sequential_cycles: 6000,
+            latency: None,
+        };
+        let txt = serving_table(&report).to_text();
+        assert!(txt.contains("requests completed"), "{txt}");
+        assert!(txt.contains("67% hit rate"), "{txt}");
+        assert!(txt.contains("pipelined makespan"), "{txt}");
+        assert!(txt.contains("25.0%"), "overlap win rendered: {txt}");
+        let l = LatencyStats {
+            count: 10,
+            mean_us: 10.0,
+            p50_us: 9.0,
+            p95_us: 19.0,
+            p99_us: 29.0,
+            max_us: 30.0,
+        };
+        let lt = latency_table(&l).to_text();
+        assert!(lt.contains("p99"), "{lt}");
+        assert!(lt.contains("30"), "{lt}");
     }
 
     #[test]

@@ -1,0 +1,164 @@
+//! Integration tests of the continuous-batching serving runtime over
+//! the real GEMM backend: batcher edge cases (empty tick, oversize
+//! cache entries, mixed precisions, deadline expiry) and the cache's
+//! bit-exactness contract, end to end.
+
+use versal_gemm::arch::vc1902;
+use versal_gemm::coordinator::{
+    AdmitError, RustGemmBackend, ServingConfig, ServingRuntime,
+};
+use versal_gemm::dl::MlpSpec;
+use versal_gemm::gemm::Precision;
+use versal_gemm::util::Pcg32;
+
+fn small_runtime(cfg: ServingConfig) -> ServingRuntime<RustGemmBackend> {
+    let spec = MlpSpec { dims: vec![16, 12, 4] };
+    ServingRuntime::new(RustGemmBackend::new(vc1902(), spec, 99, 4), cfg)
+}
+
+fn features(n: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Pcg32::new(seed);
+    (0..n)
+        .map(|_| (0..16).map(|_| rng.f64() as f32 * 2.0 - 1.0).collect())
+        .collect()
+}
+
+#[test]
+fn empty_queue_tick_with_real_backend() {
+    let mut rt = small_runtime(ServingConfig::default());
+    assert!(rt.tick(0).is_empty());
+    assert!(rt.drain(0).is_empty());
+    let r = rt.report();
+    assert_eq!(r.batches, 0);
+    assert_eq!(r.cache.misses, 0, "no batch, no cache traffic");
+}
+
+#[test]
+fn oversize_weights_served_transiently_without_wiping_cache() {
+    // A budget below one layer's packed footprint: every batch misses,
+    // nothing is ever resident, the uncacheable counter grows — but the
+    // requests are still answered, and correctly.
+    let mut rt = small_runtime(ServingConfig {
+        max_batch: 4,
+        cache_budget_bytes: 8, // smaller than any packed layer
+        ..Default::default()
+    });
+    let fs = features(4, 1);
+    for (i, f) in fs.iter().enumerate() {
+        rt.submit(f.clone(), Precision::U8, i as u64).unwrap();
+    }
+    let out = rt.drain(10);
+    assert_eq!(out.len(), 4, "oversize weights must not drop requests");
+    let r = rt.report();
+    assert_eq!(r.cache.bytes, 0, "nothing resident under a tiny budget");
+    assert_eq!(r.cache.uncacheable, 2, "both layers refused: {:?}", r.cache);
+    assert_eq!(r.cache.hits, 0);
+
+    // And the logits equal a comfortably-cached runtime's on the same
+    // fused batch — the transient path is the same numerics.
+    let mut cached = small_runtime(ServingConfig {
+        max_batch: 4,
+        cache_budget_bytes: 64 << 20,
+        ..Default::default()
+    });
+    for (i, f) in fs.iter().enumerate() {
+        cached.submit(f.clone(), Precision::U8, i as u64).unwrap();
+    }
+    let want = cached.drain(10);
+    for (a, b) in out.iter().zip(&want) {
+        assert_eq!(a.logits, b.logits, "transient pack is bit-exact with cached");
+    }
+}
+
+#[test]
+fn mixed_precision_requests_do_not_coalesce_end_to_end() {
+    let mut rt = small_runtime(ServingConfig { max_batch: 8, ..Default::default() });
+    let fs = features(6, 2);
+    let precisions = [
+        Precision::U8,
+        Precision::Bf16,
+        Precision::U8,
+        Precision::I16,
+        Precision::Bf16,
+        Precision::U8,
+    ];
+    for (i, (f, p)) in fs.iter().zip(precisions).enumerate() {
+        rt.submit(f.clone(), p, i as u64).unwrap();
+    }
+    let out = rt.drain(100);
+    assert_eq!(out.len(), 6);
+    for o in &out {
+        let expect = match o.precision {
+            Precision::U8 => 3,
+            Precision::Bf16 => 2,
+            Precision::I16 => 1,
+            Precision::I8 => unreachable!("no i8 requests in the trace"),
+        };
+        assert_eq!(
+            o.batch_size, expect,
+            "{} batch must contain exactly the same-precision requests",
+            o.precision
+        );
+    }
+    let r = rt.report();
+    assert_eq!(r.batches, 3, "one fused batch per precision class");
+    // Distinct (layer, precision) cache entries: 2 layers × 3 precisions.
+    assert_eq!(r.cache.misses, 6);
+}
+
+#[test]
+fn deadline_expired_requests_evicted_with_real_backend() {
+    let mut rt = small_runtime(ServingConfig {
+        max_batch: 8,
+        max_wait_us: 10_000,
+        default_slo_us: 100,
+        ..Default::default()
+    });
+    let fs = features(3, 3);
+    rt.submit(fs[0].clone(), Precision::U8, 0).unwrap(); // deadline 100
+    rt.submit(fs[1].clone(), Precision::U8, 50).unwrap(); // deadline 150
+    // Past both deadlines: both evicted, nothing served.
+    let out = rt.tick(200);
+    assert!(out.is_empty());
+    let r = rt.report();
+    assert_eq!(r.expired, 2);
+    assert_eq!(r.completed, 0);
+    // A fresh request after the purge is served normally.
+    rt.submit(fs[2].clone(), Precision::U8, 300).unwrap();
+    let out = rt.drain(300);
+    assert_eq!(out.len(), 1);
+    assert_eq!(rt.report().expired, 2, "no further expiries");
+    // Submitting with an already-passed deadline is rejected at the door.
+    assert_eq!(
+        rt.submit_with_deadline(fs[2].clone(), Precision::U8, 400, 399),
+        Err(AdmitError::DeadlinePassed)
+    );
+}
+
+#[test]
+fn warm_cache_replay_bit_exact_and_cheaper() {
+    let mut rt = small_runtime(ServingConfig { max_batch: 4, ..Default::default() });
+    let fs = features(4, 4);
+    for f in &fs {
+        rt.submit(f.clone(), Precision::I16, 0).unwrap();
+    }
+    let cold = rt.drain(0);
+    let cold_pack = rt.report().pack_cycles;
+    for f in &fs {
+        rt.submit(f.clone(), Precision::I16, 1_000).unwrap();
+    }
+    let warm = rt.drain(1_000);
+    let total_pack = rt.report().pack_cycles;
+    assert_eq!(cold.len(), warm.len());
+    for (a, b) in cold.iter().zip(&warm) {
+        assert_eq!(a.logits, b.logits, "i16 cache hit bit-exact with cold pack");
+    }
+    assert!(
+        total_pack - cold_pack < cold_pack,
+        "warm wave packs strictly less than the cold wave: {} vs {}",
+        total_pack - cold_pack,
+        cold_pack
+    );
+    let r = rt.report();
+    assert_eq!(r.cache.hits, 2, "both layers hit on the warm wave");
+}
