@@ -4,6 +4,17 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
+echo "==> cargo fmt --check (advisory)"
+if cargo fmt --version >/dev/null 2>&1; then
+    # Advisory until the tree is formatted once (the authoring container
+    # ships no rustfmt — see ROADMAP "Open items"); make it a hard gate
+    # in the same commit that runs `cargo fmt --all`.
+    cargo fmt --all -- --check \
+        || echo "    (format drift — advisory until the one-shot cargo fmt commit lands)"
+else
+    echo "    (rustfmt component not installed; skipping format gate)"
+fi
+
 echo "==> cargo build --release"
 cargo build --release
 
@@ -43,5 +54,8 @@ VERSAL_BENCH_FAST=1 cargo bench --bench bench_mixed_precision -- --quick
 
 echo "==> bench_serving --quick (smoke: batched+cached beats sequential, hits bit-exact)"
 VERSAL_BENCH_FAST=1 cargo bench --bench bench_serving -- --quick
+
+echo "==> bench_plan --quick (smoke: plan predicted == executed, emits BENCH_plan.json)"
+VERSAL_BENCH_FAST=1 cargo bench --bench bench_plan -- --quick
 
 echo "CI checks passed."

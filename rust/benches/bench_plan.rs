@@ -1,0 +1,193 @@
+//! Bench: **plan-IR parity** — the unified execution plan's predicted
+//! schedule against the cycles the drivers actually execute, plus the
+//! per-level footprint accounting, emitted machine-readably as
+//! `BENCH_plan.json` so CI accumulates a perf trajectory.
+//!
+//! Acceptance gates (asserted, not just printed):
+//!
+//! 1. for every case, `GemmPlan::cost` **equals** the executed
+//!    [`ParallelGemm::run_p`] cycles bit-for-bit — predicted and
+//!    executed schedules are the same plan by construction;
+//! 2. plan-effective MAC totals equal `BlockedGemm::total_macs`
+//!    (`m·n·k`) — the lowered extents partition the iteration space;
+//! 3. every per-level peak footprint fits its budget (the plan
+//!    validated it; the JSON records the utilisations).
+//!
+//! ```bash
+//! cargo bench --bench bench_plan            # full (incl. Table-2 shape)
+//! cargo bench --bench bench_plan -- --quick # CI smoke
+//! ```
+
+use versal_gemm::arch::vc1902;
+use versal_gemm::gemm::precision::Bf16;
+use versal_gemm::gemm::{
+    BlockedGemm, Ccp, Element, GemmConfig, Mat, ParallelGemm, Precision,
+};
+use versal_gemm::plan::GemmPlan;
+use versal_gemm::util::Pcg32;
+
+struct Case {
+    m: usize,
+    n: usize,
+    k: usize,
+    precision: Precision,
+    ccp: Ccp,
+    tiles: usize,
+    predicted: u64,
+    executed: u64,
+    macs: u64,
+    footprints: String,
+}
+
+fn run_case<T: Element>(
+    arch: &versal_gemm::VersalArch,
+    m: usize,
+    n: usize,
+    k: usize,
+    ccp: Ccp,
+    tiles: usize,
+    seed: u64,
+) -> Case {
+    let prec = T::PRECISION;
+    let mut cfg = GemmConfig::paper_table2(tiles);
+    cfg.ccp = ccp;
+    let plan = GemmPlan::lower(arch, &cfg, m, n, k, prec, false)
+        .expect("bench case must lower (feasible by construction)");
+    let predicted = plan.cost(arch);
+
+    let mut rng = Pcg32::new(seed);
+    let a = Mat::<T>::random(m, k, &mut rng);
+    let b = Mat::<T>::random(k, n, &mut rng);
+    let mut c = Mat::<T::Acc>::zeros(m, n);
+    let engine = ParallelGemm::new(arch);
+    let (executed, _) = engine.run_p::<T>(&cfg, &a, &b, &mut c).expect("bench case runs");
+
+    // --- gate 1: predicted == executed, bit-for-bit ------------------
+    assert_eq!(
+        predicted, executed,
+        "GATE: plan cost must equal executed cycles for ({m}, {n}, {k}) {prec}"
+    );
+    // --- gate 2: effective MACs are conserved ------------------------
+    assert_eq!(
+        plan.total_macs(),
+        BlockedGemm::total_macs(m, n, k),
+        "GATE: plan MACs must equal m*n*k"
+    );
+    // --- gate 3: footprints fit (lowering validated; record them) ----
+    let footprints = plan
+        .footprints()
+        .iter()
+        .map(|fp| {
+            assert!(
+                fp.peak_bytes <= fp.budget_bytes(),
+                "GATE: {:?} oversubscribed after lowering",
+                fp.level
+            );
+            format!(
+                "{{\"level\":\"{}\",\"peak_bytes\":{},\"budget_bytes\":{},\"capacity_bytes\":{},\"utilisation\":{:.6}}}",
+                fp.level.cache_analogue(),
+                fp.peak_bytes,
+                fp.budget_bytes(),
+                fp.capacity_bytes,
+                fp.utilisation()
+            )
+        })
+        .collect::<Vec<_>>()
+        .join(",");
+
+    Case {
+        m,
+        n,
+        k,
+        precision: prec,
+        ccp,
+        tiles,
+        predicted: predicted.total,
+        executed: executed.total,
+        macs: plan.total_macs(),
+        footprints,
+    }
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let quick = args.iter().any(|a| a == "--quick")
+        || std::env::var("VERSAL_BENCH_FAST").as_deref() == Ok("1");
+    let arch = vc1902();
+
+    println!("=== plan IR: predicted vs executed schedule parity ===");
+    println!("(every row asserts plan.cost == ParallelGemm cycles bit-for-bit{})\n",
+        if quick { " [quick]" } else { "" });
+
+    let small = Ccp { mc: 32, nc: 32, kc: 64 };
+    let mut cases = vec![
+        run_case::<u8>(&arch, 96, 80, 160, small, 4, 0xB1),
+        run_case::<i8>(&arch, 63, 49, 97, small, 3, 0xB2),
+        run_case::<i16>(&arch, 48, 40, 80, small, 2, 0xB3),
+        run_case::<Bf16>(&arch, 40, 33, 65, small, 2, 0xB4),
+    ];
+    if !quick {
+        // The paper's Table-2 problem, at the paper's CCP.
+        cases.push(run_case::<u8>(
+            &arch,
+            256,
+            256,
+            2048,
+            Ccp { mc: 256, nc: 256, kc: 2048 },
+            8,
+            0xB5,
+        ));
+    }
+
+    println!(
+        "{:<28} {:>6} {:>14} {:>14} {:>12}",
+        "case", "tiles", "predicted", "executed", "MACs/cycle"
+    );
+    for c in &cases {
+        println!(
+            "{:<28} {:>6} {:>14} {:>14} {:>12.1}",
+            format!("({}, {}, {}) {}", c.m, c.n, c.k, c.precision),
+            c.tiles,
+            c.predicted,
+            c.executed,
+            c.macs as f64 / c.executed as f64
+        );
+    }
+
+    // --- machine-readable artifact: BENCH_plan.json ------------------
+    let json_cases = cases
+        .iter()
+        .map(|c| {
+            format!(
+                "{{\"m\":{},\"n\":{},\"k\":{},\"precision\":\"{}\",\"mc\":{},\"nc\":{},\"kc\":{},\
+                 \"tiles\":{},\"predicted_cycles\":{},\"executed_cycles\":{},\"macs\":{},\
+                 \"macs_per_cycle\":{:.4},\"footprints\":[{}]}}",
+                c.m,
+                c.n,
+                c.k,
+                c.precision,
+                c.ccp.mc,
+                c.ccp.nc,
+                c.ccp.kc,
+                c.tiles,
+                c.predicted,
+                c.executed,
+                c.macs,
+                c.macs as f64 / c.executed as f64,
+                c.footprints
+            )
+        })
+        .collect::<Vec<_>>()
+        .join(",");
+    let json = format!(
+        "{{\"bench\":\"plan\",\"quick\":{quick},\"parity\":\"exact\",\"cases\":[{json_cases}]}}\n"
+    );
+    let dir = std::path::PathBuf::from(
+        std::env::var_os("VERSAL_BENCH_RESULTS").unwrap_or_else(|| "bench_results".into()),
+    );
+    std::fs::create_dir_all(&dir).expect("create bench results dir");
+    let path = dir.join("BENCH_plan.json");
+    std::fs::write(&path, &json).expect("write BENCH_plan.json");
+    println!("\nwrote {}", path.display());
+    println!("all plan gates passed (predicted == executed on every case).");
+}

@@ -30,6 +30,15 @@ COMMANDS:
   tune     --m M --n N --k K [--tiles T]
                                auto-tune CCPs for a problem shape (model-
                                driven search; extension of §4.3)
+  plan     --m M --n N --k K [--precision u8|i8|i16|bf16] [--tiles T]
+           [--mc MC --nc NC --kc KC] [--count-packing] [--prepacked]
+                               lower the problem to the unified execution
+                               plan: the explicit L1/L2/L3 loop nest with
+                               edge-trimmed extents, the packing steps and
+                               their memory-level destinations, the per-
+                               level footprint/residency table (validated
+                               against Table 1's capacities), and the
+                               predicted schedule the drivers will execute
   energy   [--tiles T]         energy estimate of the paper problem
                                (extension; pJ model over the breakdown)
   noc      [--tiles T]         NoC placement + multicast/fan-out costs
@@ -111,7 +120,9 @@ fn run(argv: Vec<String>) -> Result<(), String> {
         .opt("slo-ms")
         .opt("cache-mb")
         .opt("engine")
+        .opt("precision")
         .flag("count-packing")
+        .flag("prepacked")
         .parse(&argv)?;
     let cmd = args.positional().first().map(|s| s.as_str()).unwrap_or("help");
     let arch = load_arch(&args)?;
@@ -134,6 +145,7 @@ fn run(argv: Vec<String>) -> Result<(), String> {
         "gemm" => cmd_gemm(&arch, &args),
         "ccp" => cmd_ccp(&arch, &args),
         "tune" => cmd_tune(&arch, &args),
+        "plan" => cmd_plan(&arch, &args),
         "energy" => cmd_energy(&arch, &args),
         "noc" => cmd_noc(&arch, &args),
         "trace" => cmd_trace(&arch, &args),
@@ -230,6 +242,13 @@ fn cmd_tune(arch: &VersalArch, args: &Args) -> Result<(), String> {
     let n: usize = args.get_num("n", 512)?;
     let k: usize = args.get_num("k", 4096)?;
     let tiles: usize = args.get_num("tiles", 8)?;
+    // The problem must admit at least one lowerable plan (the DDR
+    // residency check is shape-dependent, CCP-independent): surface an
+    // error instead of letting the search panic on an empty lattice.
+    let mut probe = GemmConfig::paper_table2(tiles);
+    probe.ccp = Ccp::derive_aligned(arch, 1);
+    crate::plan::GemmPlan::lower(arch, &probe, m, n, k, crate::gemm::Precision::U8, false)
+        .map_err(|e| format!("({m}, {n}, {k}) does not fit the device: {e}"))?;
     let t0 = Instant::now();
     let tuned = crate::gemm::tuner::tune(arch, m, n, k, tiles);
     println!("auto-tuned CCPs for ({m}, {n}, {k}) on {tiles} tiles:");
@@ -243,6 +262,121 @@ fn cmd_tune(arch: &VersalArch, args: &Args) -> Result<(), String> {
     cfg.ccp = derived;
     let derived_cost = crate::gemm::tuner::predict_cycles(arch, &cfg, m, n, k);
     println!("  (§4.3 capacity-maximal {} would cost {} cycles)", derived, derived_cost);
+    Ok(())
+}
+
+fn cmd_plan(arch: &VersalArch, args: &Args) -> Result<(), String> {
+    use crate::gemm::Precision;
+    use crate::plan::{Buffer, GemmPlan, PlanStep};
+
+    let m: usize = args.get_num("m", 256)?;
+    let n: usize = args.get_num("n", 256)?;
+    let k: usize = args.get_num("k", 2048)?;
+    let tiles: usize = args.get_num("tiles", 8)?;
+    let prec = Precision::parse(args.get_or("precision", "u8"))?;
+    if m == 0 || n == 0 || k == 0 {
+        return Err("--m/--n/--k must be positive".into());
+    }
+    if tiles == 0 || tiles > arch.aie.n_tiles {
+        return Err(format!(
+            "--tiles must be in 1..={} for {}",
+            arch.aie.n_tiles, arch.name
+        ));
+    }
+
+    // Default geometry: the precision's feasible paper-shaped CCP, so
+    // `plan --precision i16` works out of the box; --mc/--nc/--kc override.
+    let mut cfg = GemmConfig::paper_table2(tiles);
+    cfg.ccp = crate::gemm::tuner::ccp_for_precision(arch, prec);
+    cfg.ccp = Ccp {
+        mc: args.get_num("mc", cfg.ccp.mc)?,
+        nc: args.get_num("nc", cfg.ccp.nc)?,
+        kc: args.get_num("kc", cfg.ccp.kc)?,
+    };
+    cfg.count_packing = args.has("count-packing");
+
+    let plan = GemmPlan::lower(arch, &cfg, m, n, k, prec, args.has("prepacked"))
+        .map_err(|e| e.to_string())?;
+
+    println!(
+        "execution plan: ({m}, {n}, {k}) {prec} on {tiles} AIE tiles, {}{}",
+        cfg.ccp,
+        if plan.prepacked_b { ", B prepacked (weight-stationary)" } else { "" }
+    );
+    println!("\nlowered loop nest (GotoBLAS L1/L2/L3 with edge-trimmed extents):");
+    // Edge extents come from the lowered steps themselves — the plan is
+    // the loop nest; the CLI must not re-derive it.
+    let (mut edge_m, mut edge_n, mut edge_k) =
+        (cfg.ccp.mc.min(m), cfg.ccp.nc.min(n), cfg.ccp.kc.min(k));
+    for s in plan.steps() {
+        if let PlanStep::Compute(c) = s {
+            if c.ic + c.mc_eff == m {
+                edge_m = c.mc_eff;
+            }
+            if c.jc + c.nc_eff == n {
+                edge_n = c.nc_eff;
+            }
+            if c.pc + c.kc_eff == k {
+                edge_k = c.kc_eff;
+            }
+        }
+    }
+    println!(
+        "  L1 jc: {:>4} block(s) x nc = {:<5} (edge block {edge_n})",
+        plan.jc_blocks(),
+        cfg.ccp.nc,
+    );
+    println!(
+        "  L2 pc: {:>4} block(s) x kc = {:<5} (edge block {edge_k}) -> pack Bc into Block RAM",
+        plan.pc_blocks(),
+        cfg.ccp.kc,
+    );
+    println!(
+        "  L3 ic: {:>4} block(s) x mc = {:<5} (edge block {edge_m}) -> pack Ac into Ultra RAM",
+        plan.ic_blocks(),
+        cfg.ccp.mc,
+    );
+    let (mut packs_a, mut packs_b, mut releases) = (0usize, 0usize, 0usize);
+    for s in plan.steps() {
+        match s {
+            PlanStep::Pack(p) if p.buffer == Buffer::Ac => packs_a += 1,
+            PlanStep::Pack(_) => packs_b += 1,
+            PlanStep::Release(_) => releases += 1,
+            PlanStep::Compute(_) => {}
+        }
+    }
+    println!(
+        "  steps: {} total — {} Bc pack(s) ({}), {} Ac pack(s) ({}), {} compute block(s) \
+         ({} micro-kernels), {} release(s)",
+        plan.steps().len(),
+        packs_b,
+        crate::arch::human_bytes(plan.pack_bytes(Buffer::Bc)),
+        packs_a,
+        crate::arch::human_bytes(plan.pack_bytes(Buffer::Ac)),
+        plan.n_compute_steps(),
+        plan.micro_kernels(),
+        releases,
+    );
+
+    println!("\nper-level footprint / residency (validated at plan time):");
+    println!("{}", crate::report::footprint_table(&plan).to_text());
+
+    let cost = plan.cost(arch);
+    let macs = plan.total_macs();
+    println!("predicted schedule (the drivers execute this same plan):");
+    println!(
+        "  total {} cycles ({})  —  {:.1} MACs/cycle aggregate, {:.1} per tile",
+        cost.total,
+        crate::report::fmt_kcycles(cost.total),
+        cost.macs_per_cycle(macs),
+        cost.macs_per_cycle(macs) / tiles as f64
+    );
+    println!(
+        "    br_copy {}  ar_stream {}  arithmetic {}  copy_cr {}  orchestration {}  packing {}",
+        cost.br_copy, cost.ar_stream, cost.arithmetic, cost.copy_cr, cost.orchestration,
+        cost.packing
+    );
+    println!("  effective MACs {macs} (= m*n*k; padded panel lanes retire no useful work)");
     Ok(())
 }
 
@@ -636,10 +770,36 @@ mod tests {
     #[test]
     fn extension_subcommands_succeed() {
         assert_eq!(cli_main(argv(&["tune", "--m", "128", "--n", "128", "--k", "512"])), 0);
+        // A problem whose operands exceed the simulated DDR is an error
+        // (exit 2), never a panic in the search.
+        assert_eq!(
+            cli_main(argv(&["tune", "--m", "40000", "--n", "40000", "--k", "40000"])),
+            2
+        );
         assert_eq!(cli_main(argv(&["energy", "--tiles", "4"])), 0);
         assert_eq!(cli_main(argv(&["noc", "--tiles", "16"])), 0);
         // noc beyond the array is an error.
         assert_eq!(cli_main(argv(&["noc", "--tiles", "401"])), 2);
+    }
+
+    #[test]
+    fn plan_subcommand_succeeds_and_validates() {
+        assert_eq!(cli_main(argv(&["plan"])), 0);
+        assert_eq!(
+            cli_main(argv(&["plan", "--m", "100", "--n", "37", "--k", "513", "--tiles", "4"])),
+            0
+        );
+        assert_eq!(cli_main(argv(&["plan", "--precision", "i16"])), 0);
+        assert_eq!(cli_main(argv(&["plan", "--prepacked", "--count-packing"])), 0);
+        // Validation consistent with the other subcommands: bad
+        // precision, zero dims, tile overcommit and an infeasible CCP
+        // are errors, not panics.
+        assert_eq!(cli_main(argv(&["plan", "--precision", "fp64"])), 2);
+        assert_eq!(cli_main(argv(&["plan", "--m", "0"])), 2);
+        assert_eq!(cli_main(argv(&["plan", "--tiles", "401"])), 2);
+        assert_eq!(cli_main(argv(&["plan", "--kc", "8192"])), 2);
+        // 2-byte elements: the u8-feasible kc=2048 Br panel no longer fits.
+        assert_eq!(cli_main(argv(&["plan", "--precision", "i16", "--kc", "2048"])), 2);
     }
 
     #[test]

@@ -40,9 +40,9 @@ use super::collectives::Collectives;
 use super::fabric::Fabric;
 use super::placement::GridPlacement;
 use super::{Cluster, ClusterError, DeviceId};
-use crate::gemm::microkernel::{MR, NR};
 use crate::gemm::precision::{Element, Precision};
 use crate::gemm::{Ccp, GemmConfig, Mat, MatI32, MatU8, ParallelGemm};
+use crate::plan::GemmPlan;
 use crate::sim::CycleBreakdown;
 
 /// Configuration of a sharded GEMM run.
@@ -318,7 +318,7 @@ impl<'a> ClusterGemm<'a> {
                         placement.col_bands[j],
                         kb_eff,
                         prec,
-                    );
+                    )?;
                     step_max = step_max.max(cy.total);
                     acct.local += cy;
                     stats[dev].compute_cycles += cy.total;
@@ -543,10 +543,11 @@ fn local_cfg(cfg: &ClusterGemmConfig, tiles: usize) -> GemmConfig {
     }
 }
 
-/// Cycle accounting of one device's `(m, n, k)` shard, mirroring the
-/// loop structure of [`ParallelGemm::run`] exactly but without numerics
-/// (`ClusterGemm::schedule` must equal `ClusterGemm::run`'s cycles; a
-/// test pins that equality).
+/// Cycle accounting of one device's `(m, n, k)` shard: lower the same
+/// [`GemmPlan`] the device's [`ParallelGemm::run_p`] would execute and
+/// price it with [`GemmPlan::cost`] — schedule/run parity is structural,
+/// not re-implemented (`ClusterGemm::schedule` must equal
+/// `ClusterGemm::run`'s cycles; a test pins that equality).
 fn shard_schedule(
     arch: &crate::arch::VersalArch,
     cfg: &GemmConfig,
@@ -554,48 +555,10 @@ fn shard_schedule(
     n: usize,
     k: usize,
     prec: Precision,
-) -> CycleBreakdown {
-    let engine = ParallelGemm::new(arch);
-    let Ccp { mc, nc, kc } = cfg.ccp;
-    let elem = prec.elem_bytes();
-    let mut cycles = CycleBreakdown::zero();
-    let mut jc = 0;
-    while jc < n {
-        let nc_eff = nc.min(n - jc);
-        let mut pc = 0;
-        while pc < k {
-            let kc_eff = kc.min(k - pc);
-            let panels_b = nc_eff.div_ceil(NR);
-            if cfg.count_packing {
-                let bc_bytes = (panels_b * kc_eff * NR) as u64 * elem;
-                cycles.packing += (bc_bytes as f64 / arch.ic.pack_bytes_per_cycle) as u64;
-            }
-            let mut ic = 0;
-            while ic < m {
-                let mc_eff = mc.min(m - ic);
-                let panels_a = mc_eff.div_ceil(MR);
-                if cfg.count_packing {
-                    let ac_bytes = (panels_a * MR * kc_eff) as u64 * elem;
-                    cycles.packing += (ac_bytes as f64 / arch.ic.pack_bytes_per_cycle) as u64;
-                }
-                cycles += engine.block_schedule_p(
-                    cfg,
-                    panels_b,
-                    panels_a,
-                    kc_eff,
-                    (kc_eff * NR) as u64 * elem,
-                    prec,
-                );
-                ic += mc_eff;
-            }
-            pc += kc_eff;
-        }
-        jc += nc_eff;
-    }
-    if cfg.count_packing {
-        cycles.total += cycles.packing;
-    }
-    cycles
+) -> Result<CycleBreakdown, ClusterError> {
+    let plan = GemmPlan::lower(arch, cfg, m, n, k, prec, false)
+        .map_err(|e| ClusterError::LocalGemm(e.to_string()))?;
+    Ok(plan.cost(arch))
 }
 
 #[cfg(test)]

@@ -35,6 +35,21 @@ impl StageCost {
     pub fn total(self) -> u64 {
         self.pack + self.transfer + self.compute
     }
+
+    /// Split a plan-executed schedule breakdown into the pipeline's
+    /// stage domains: the data-movement categories (Br copies, Ar
+    /// streaming, Cr GMIO round trips) become **transfer**, arithmetic +
+    /// orchestration become **compute**, and any counted packing becomes
+    /// **pack**. This is the single mapping from the drivers'
+    /// [`crate::sim::CycleBreakdown`] to the serving pipeline's stages —
+    /// backends must not re-derive it.
+    pub fn from_breakdown(cy: &crate::sim::CycleBreakdown) -> StageCost {
+        StageCost {
+            pack: cy.packing,
+            transfer: cy.br_copy + cy.ar_stream + cy.copy_cr,
+            compute: cy.arithmetic + cy.orchestration,
+        }
+    }
 }
 
 /// The executor model: single pack engine, single transfer path,
@@ -120,6 +135,24 @@ mod tests {
 
     fn b(pack: u64, transfer: u64, compute: u64) -> StageCost {
         StageCost { pack, transfer, compute }
+    }
+
+    #[test]
+    fn from_breakdown_maps_categories_to_stages() {
+        use crate::sim::CycleBreakdown;
+        let cy = CycleBreakdown {
+            ar_stream: 10,
+            arithmetic: 20,
+            br_copy: 30,
+            copy_cr: 40,
+            packing: 50,
+            orchestration: 60,
+            total: 999,
+        };
+        let s = StageCost::from_breakdown(&cy);
+        assert_eq!(s.pack, 50);
+        assert_eq!(s.transfer, 10 + 30 + 40);
+        assert_eq!(s.compute, 20 + 60);
     }
 
     #[test]

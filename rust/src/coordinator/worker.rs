@@ -6,13 +6,19 @@ use crate::arch::VersalArch;
 use crate::cluster::{Cluster, ClusterError, Collectives, DeviceId};
 use crate::dl::{Mlp, MlpSpec, PackedWeights, QuantLinear, TpMode};
 use crate::gemm::{Ccp, GemmConfig, ParallelGemm, Precision, PrecisionPolicy};
+use crate::plan::{Buffer, GemmPlan};
 use anyhow::Result;
 
-/// Per-layer pack accounting shared by the fused serving backends:
-/// charge the activation-block pack (always paid, width-scaled), then
-/// fetch-or-pack the layer's weights — a cache miss quantises + packs
-/// and pays those cycles; an entry bigger than the whole budget is
-/// handed back (`Some`) for transient use instead of wiping the cache.
+/// Per-layer pack accounting shared by the fused serving backends: the
+/// layer's serving GEMM is lowered to the same [`GemmPlan`] the drivers
+/// execute and the pack charges come from its step footprints — the
+/// activation block is the plan's `Ac` pack bytes (always paid,
+/// panel-padded and width-scaled exactly as the drivers pack it), a
+/// cache miss quantises + packs the weights and pays the plan's `Bc`
+/// pack bytes (identical to [`PackedWeights::bytes`] by construction);
+/// an entry bigger than the whole budget is handed back (`Some`) for
+/// transient use instead of wiping the cache.
+#[allow(clippy::too_many_arguments)]
 fn charge_layer_pack(
     layer: &QuantLinear,
     layer_idx: usize,
@@ -23,18 +29,34 @@ fn charge_layer_pack(
     rate: f64,
     cache: &mut PackedBCache,
     cost: &mut StageCost,
-) -> Option<PackedWeights> {
-    let act_bytes = (rows * layer.in_dim) as u64 * precision.elem_bytes();
-    cost.pack += (act_bytes as f64 / rate) as u64;
+) -> Result<Option<PackedWeights>> {
+    let mut serve_cfg = cfg.clone();
+    serve_cfg.ccp = QuantLinear::serving_ccp(arch, cfg, precision);
+    let plan = GemmPlan::lower(
+        arch,
+        &serve_cfg,
+        rows,
+        layer.out_dim,
+        layer.in_dim,
+        precision,
+        false,
+    )
+    .map_err(|e| anyhow::anyhow!("layer {layer_idx} serving plan: {e}"))?;
+    cost.pack += (plan.pack_bytes(Buffer::Ac) as f64 / rate) as u64;
     let key = CacheKey { layer: layer_idx, precision };
     if !cache.touch(&key) {
         let pw = layer.prepack(precision, arch, cfg);
-        cost.pack += (pw.bytes() as f64 / rate) as u64;
+        debug_assert_eq!(
+            pw.bytes(),
+            plan.pack_bytes(Buffer::Bc),
+            "prepacked weights and plan Bc footprints must agree"
+        );
+        cost.pack += (plan.pack_bytes(Buffer::Bc) as f64 / rate) as u64;
         if let Err(back) = cache.insert(key, pw) {
-            return Some(back);
+            return Ok(Some(back));
         }
     }
-    None
+    Ok(None)
 }
 
 /// A batch-execution backend. `infer_batch` maps a `batch × in_dim`
@@ -197,7 +219,7 @@ impl BatchedBackend for RustGemmBackend {
         for (l, layer) in self.mlp.layers.iter().enumerate() {
             let transient = charge_layer_pack(
                 layer, l, rows, precision, &self.arch, &self.cfg, rate, cache, &mut cost,
-            );
+            )?;
             let key = CacheKey { layer: l, precision };
             let pw = transient
                 .as_ref()
@@ -205,8 +227,12 @@ impl BatchedBackend for RustGemmBackend {
                 .expect("miss path inserted or handed the weights back");
             let (y, cy) = layer.forward_prepacked(rows, &h, pw, &self.arch, &self.cfg)?;
             h = y;
-            cost.transfer += cy.br_copy + cy.ar_stream + cy.copy_cr;
-            cost.compute += cy.arithmetic + cy.orchestration;
+            // One mapping from the plan-executed breakdown to the
+            // pipeline stages, shared with every other backend.
+            let split = StageCost::from_breakdown(&cy);
+            cost.pack += split.pack;
+            cost.transfer += split.transfer;
+            cost.compute += split.compute;
         }
         Ok((h, cost))
     }
@@ -362,6 +388,12 @@ impl BatchedBackend for ClusterGemmBackend {
         for (l, layer) in self.mlp.layers.iter().enumerate() {
             // Residency accounting only: a transient (oversize) weight
             // set is dropped — the shards stage their own blocks anyway.
+            // And a layer whose *single-device* plan does not lower
+            // (e.g. the full operands oversubscribe one device's DDR)
+            // must not fail the batch: the tensor-parallel path shards
+            // it across devices, each holding only its band, so serve
+            // without the accounting rather than refusing work the
+            // cluster exists to handle.
             let _ = charge_layer_pack(
                 layer, l, rows, precision, &dev0.arch, &gcfg, rate, cache, &mut cost,
             );

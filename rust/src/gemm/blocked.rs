@@ -1,19 +1,22 @@
 //! Sequential blocked GEMM — the baseline algorithm of Figure 1.
 //!
-//! Five nested loops + two packing routines + the micro-kernel, executing
-//! on one AIE tile of the simulated platform. Every invocation computes
-//! the exact numeric result *and* the cycle breakdown; memory-capacity
-//! violations (a CCP choice whose buffers do not fit the FPGA RAMs or the
-//! local memory) are hard errors, mirroring the explicit-placement
-//! reality of the device (§4.1).
+//! The loop nest itself lives in the plan IR: the driver lowers its
+//! configuration to a [`GemmPlan`] (which validates every buffer
+//! footprint against the memory hierarchy at plan time) and *executes
+//! the plan's step stream* on one AIE tile of the simulated platform.
+//! Every invocation computes the exact numeric result *and* the cycle
+//! breakdown; memory-capacity violations (a CCP choice whose buffers do
+//! not fit the FPGA RAMs or the local memory) are hard errors — at plan
+//! construction and again in the live [`MemPool`]s — mirroring the
+//! explicit-placement reality of the device (§4.1).
 
-use super::ccp::Ccp;
 use super::microkernel::{ElemKernel, MR, NR};
-use super::packing::{pack_a, pack_b};
+use super::packing::{pack_a, pack_b, PackedA, PackedB};
 use super::precision::{Accum, Element};
 use super::types::{Mat, MatI32, MatU8};
 use super::GemmConfig;
 use crate::arch::{MemLevel, VersalArch};
+use crate::plan::{Buffer, GemmPlan, PlanStep};
 use crate::sim::{AieTileModel, CycleBreakdown, Gmio, KernelMode, MemPool, Stream};
 use anyhow::{ensure, Result};
 
@@ -73,49 +76,53 @@ impl<'a> BlockedGemm<'a> {
             prec.max_safe_k()
         );
 
-        let (m, n, k) = (a.rows, b.cols, a.cols);
-        let Ccp { mc, nc, kc } = cfg.ccp;
+        // Lower the loop nest once; footprints are validated against the
+        // hierarchy at plan time (an oversubscribing CCP never executes).
+        let plan = GemmPlan::lower(self.arch, cfg, a.rows, b.cols, a.cols, prec, false)
+            .map_err(|e| anyhow::anyhow!(e.to_string()))?;
         let stream = Stream::new(self.arch);
         let gmio = Gmio::new(self.arch);
         let kernel = ElemKernel::<T>::new();
         let mut cycles = CycleBreakdown::zero();
 
-        // Memory feasibility is enforced by live pools, not just the CCP
-        // pre-check: buffers are allocated/freed as the loops run.
+        // Memory feasibility is enforced by live pools on top of the
+        // plan-time check: buffers are allocated/freed as the plan runs.
         let mut bram = MemPool::new(MemLevel::BlockRam, self.arch.mem_capacity(MemLevel::BlockRam));
         let mut uram = MemPool::new(MemLevel::UltraRam, self.arch.mem_capacity(MemLevel::UltraRam));
         let mut local =
             MemPool::new(MemLevel::LocalMemory, self.arch.mem_capacity(MemLevel::LocalMemory));
 
-        let mut jc = 0;
-        while jc < n {
-            // Loop L1
-            let nc_eff = nc.min(n - jc);
-            let mut pc = 0;
-            while pc < k {
-                // Loop L2: pack Bc into Block RAM.
-                let kc_eff = kc.min(k - pc);
-                let bc = pack_b(b, pc, jc, kc_eff, nc_eff);
-                bram.alloc("Bc", bc.bytes()).map_err(anyhow::Error::msg)?;
-                if cfg.count_packing {
-                    cycles.packing +=
-                        (bc.bytes() as f64 / self.arch.ic.pack_bytes_per_cycle) as u64;
-                }
-
-                let mut ic = 0;
-                while ic < m {
-                    // Loop L3: pack Ac into Ultra RAM.
-                    let mc_eff = mc.min(m - ic);
-                    let ac = pack_a(a, ic, pc, mc_eff, kc_eff);
-                    uram.alloc("Ac", ac.bytes()).map_err(anyhow::Error::msg)?;
-                    if cfg.count_packing {
-                        cycles.packing +=
-                            (ac.bytes() as f64 / self.arch.ic.pack_bytes_per_cycle) as u64;
+        let mut bc: Option<PackedB<T>> = None;
+        let mut ac: Option<PackedA<T>> = None;
+        for step in plan.steps() {
+            match step {
+                PlanStep::Pack(p) => {
+                    if cfg.count_packing && p.charged {
+                        cycles.packing += p.cycles(self.arch);
                     }
-
+                    match p.buffer {
+                        Buffer::Bc => {
+                            // Loop L2: pack Bc into Block RAM.
+                            let packed = pack_b(b, p.row_off, p.col_off, p.rows, p.cols);
+                            debug_assert_eq!(packed.bytes(), p.bytes);
+                            bram.alloc("Bc", packed.bytes()).map_err(anyhow::Error::msg)?;
+                            bc = Some(packed);
+                        }
+                        Buffer::Ac => {
+                            // Loop L3: pack Ac into Ultra RAM.
+                            let packed = pack_a(a, p.row_off, p.col_off, p.rows, p.cols);
+                            debug_assert_eq!(packed.bytes(), p.bytes);
+                            uram.alloc("Ac", packed.bytes()).map_err(anyhow::Error::msg)?;
+                            ac = Some(packed);
+                        }
+                    }
+                }
+                PlanStep::Compute(cs) => {
+                    let bcr = bc.as_ref().expect("plan packs Bc before computing");
+                    let acr = ac.as_ref().expect("plan packs Ac before computing");
                     // The kernel needs kc aligned to the unroll for the
                     // cycle model; numerics handle any kc.
-                    let kc_cycles = kc_eff.next_multiple_of(AieTileModel::UNROLL);
+                    let kc_cycles = cs.kc_eff.next_multiple_of(AieTileModel::UNROLL);
                     let loop_cycles = self.tile.kernel_cycles_p(
                         kc_cycles,
                         KernelMode::Baseline,
@@ -124,20 +131,20 @@ impl<'a> BlockedGemm<'a> {
                     );
                     let cr_cycles = gmio.cr_roundtrip_cycles_p(1, prec);
 
-                    for pj in 0..bc.n_panels {
+                    for pj in 0..bcr.n_panels {
                         // Loop L4: copy the micro-panel Br to local memory.
-                        local.alloc("Br", bc.panel_bytes()).map_err(anyhow::Error::msg)?;
-                        let br_cost = stream.br_copy_cycles(bc.panel_bytes());
+                        local.alloc("Br", bcr.panel_bytes()).map_err(anyhow::Error::msg)?;
+                        let br_cost = stream.br_copy_cycles(bcr.panel_bytes());
                         cycles.br_copy += br_cost;
                         cycles.total += br_cost;
-                        let br = bc.panel(pj);
+                        let br = bcr.panel(pj);
 
-                        for pi in 0..ac.n_panels {
+                        for pi in 0..acr.n_panels {
                             // Loop L5 + micro-kernel (loop L6).
-                            let ar = ac.panel(pi);
+                            let ar = acr.panel(pi);
                             let mut cr = [T::Acc::zero(); MR * NR];
-                            kernel.run(kc_eff, ar, br, &mut cr);
-                            kernel.store(&cr, c, ic + pi * MR, jc + pj * NR);
+                            kernel.run(cs.kc_eff, ar, br, &mut cr);
+                            kernel.store(&cr, c, cs.ic + pi * MR, cs.jc + pj * NR);
 
                             cycles.ar_stream += loop_cycles.ar_stream;
                             cycles.arithmetic += loop_cycles.arithmetic;
@@ -146,13 +153,18 @@ impl<'a> BlockedGemm<'a> {
                         }
                         local.freea("Br").map_err(anyhow::Error::msg)?;
                     }
-                    uram.freea("Ac").map_err(anyhow::Error::msg)?;
-                    ic += mc_eff;
                 }
-                bram.freea("Bc").map_err(anyhow::Error::msg)?;
-                pc += kc_eff;
+                PlanStep::Release(r) => match r.buffer {
+                    Buffer::Bc => {
+                        bram.freea("Bc").map_err(anyhow::Error::msg)?;
+                        bc = None;
+                    }
+                    Buffer::Ac => {
+                        uram.freea("Ac").map_err(anyhow::Error::msg)?;
+                        ac = None;
+                    }
+                },
             }
-            jc += nc_eff;
         }
         if cfg.count_packing {
             cycles.total += cycles.packing;
@@ -171,6 +183,7 @@ mod tests {
     use super::*;
     use crate::arch::vc1902;
     use crate::gemm::baseline::naive_gemm;
+    use crate::gemm::Ccp;
     use crate::util::quickcheck::prop;
     use crate::util::Pcg32;
 

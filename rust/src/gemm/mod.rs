@@ -21,15 +21,24 @@
 //!                     and, through [`crate::sim`], the per-precision cycle
 //!                     cost of the AIE execution.
 //! - [`blocked`]     — Figure 1 (top-left): the sequential five-loop
-//!                     algorithm on one AIE tile.
+//!                     algorithm on one AIE tile, executing the lowered
+//!                     [`crate::plan::GemmPlan`] step stream.
 //! - [`parallel`]    — Figure 5/6: the parallel design distributing loop
-//!                     L4 across AIE tiles; produces Table 2.
+//!                     L4 across AIE tiles; produces Table 2. Executes
+//!                     the same [`crate::plan::GemmPlan`] the tuner and
+//!                     the cluster scheduler cost (dense and prepacked
+//!                     B operands are one walk).
 //! - [`ablation`]    — §4.4 quantified: what happens if L1/L3/L5 is
 //!                     parallelised instead (the paper argues this
 //!                     qualitatively; we put numbers on it).
 //! - [`baseline`]    — naive triple-loop reference used to validate every
 //!                     other path, plus an f32 reference for quantisation
 //!                     error analysis.
+//!
+//! The loop nest itself — block iteration, packing destinations, and
+//! per-level footprint accounting — lives in [`crate::plan`]: drivers
+//! *execute* a lowered [`crate::plan::GemmPlan`], the tuner *costs* one,
+//! and the two can never structurally diverge.
 
 pub mod ablation;
 pub mod baseline;

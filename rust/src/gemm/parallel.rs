@@ -24,13 +24,13 @@
 //! which reproduces Table 2's totals within ≈5 % at every tile count and
 //! its Performance/tile column to the printed precision.
 
-use super::ccp::Ccp;
 use super::microkernel::{ElemKernel, MicroKernel, MR, NR};
-use super::packing::{pack_a, pack_b, PrepackedB};
+use super::packing::{pack_a, pack_b, PackedA, PackedB, PrepackedB};
 use super::precision::{Accum, Element, Precision};
 use super::types::{Mat, MatI32, MatU8};
 use super::GemmConfig;
 use crate::arch::VersalArch;
+use crate::plan::{Buffer, GemmPlan, PlanStep};
 use crate::sim::{AieTileModel, CycleBreakdown, Gmio, KernelMode, Multicast, Stream};
 use anyhow::{ensure, Result};
 
@@ -144,63 +144,9 @@ impl<'a> ParallelGemm<'a> {
             prec.max_safe_k()
         );
 
-        let (m, n, k) = (a.rows, b.cols, a.cols);
-        let Ccp { mc, nc, kc } = cfg.ccp;
-        let kernel = ElemKernel::<T>::new();
-        let mut cycles = CycleBreakdown::zero();
-        let mut stats: Vec<TileStats> =
-            (0..cfg.tiles).map(|t| TileStats { tile: t, ..Default::default() }).collect();
-
-        let mut jc = 0;
-        while jc < n {
-            let nc_eff = nc.min(n - jc);
-            let mut pc = 0;
-            while pc < k {
-                let kc_eff = kc.min(k - pc);
-                let bc = pack_b(b, pc, jc, kc_eff, nc_eff);
-                if cfg.count_packing {
-                    cycles.packing +=
-                        (bc.bytes() as f64 / self.arch.ic.pack_bytes_per_cycle) as u64;
-                }
-                let mut ic = 0;
-                while ic < m {
-                    let mc_eff = mc.min(m - ic);
-                    let ac = pack_a(a, ic, pc, mc_eff, kc_eff);
-                    if cfg.count_packing {
-                        cycles.packing +=
-                            (ac.bytes() as f64 / self.arch.ic.pack_bytes_per_cycle) as u64;
-                    }
-
-                    // ----- numerics (host threads over pi row-panels) ----
-                    compute_block(&kernel, &ac, &bc, c, ic, jc, kc_eff);
-
-                    // ----- tile accounting: jr panels round-robin --------
-                    for pj in 0..bc.n_panels {
-                        let t = pj % cfg.tiles;
-                        stats[t].br_copies += 1;
-                        stats[t].kernels += ac.n_panels as u64;
-                        stats[t].macs += ac.n_panels as u64 * ElemKernel::<T>::macs(kc_eff);
-                    }
-
-                    // ----- schedule: lockstep rounds over the L4 space ---
-                    cycles += self.block_schedule_p(
-                        cfg,
-                        bc.n_panels,
-                        ac.n_panels,
-                        kc_eff,
-                        bc.panel_bytes(),
-                        prec,
-                    );
-                    ic += mc_eff;
-                }
-                pc += kc_eff;
-            }
-            jc += nc_eff;
-        }
-        if cfg.count_packing {
-            cycles.total += cycles.packing;
-        }
-        Ok((cycles, stats))
+        let plan = GemmPlan::lower(self.arch, cfg, a.rows, b.cols, a.cols, prec, false)
+            .map_err(|e| anyhow::anyhow!(e.to_string()))?;
+        Ok(self.run_plan(cfg, &plan, a, BOperand::Dense(b), c))
     }
 
     /// [`ParallelGemm::run`] with a pre-packed B operand (the paper's u8
@@ -266,56 +212,92 @@ impl<'a> ParallelGemm<'a> {
             prec.max_safe_k()
         );
 
-        let (m, n, k) = (a.rows, pb.cols, a.cols);
-        let Ccp { mc, nc, kc } = cfg.ccp;
+        let plan = GemmPlan::lower(self.arch, cfg, a.rows, pb.cols, a.cols, prec, true)
+            .map_err(|e| anyhow::anyhow!(e.to_string()))?;
+        Ok(self.run_plan(cfg, &plan, a, BOperand::Prepacked(pb), c))
+    }
+
+    /// Execute a lowered plan: numerics + tile accounting + the lockstep
+    /// loop-L4 schedule, one step at a time. This is the single
+    /// execution walk behind [`ParallelGemm::run_p`] (dense B) and
+    /// [`ParallelGemm::run_prepacked_p`] (resident B): the step stream,
+    /// the per-block schedule primitive and the packing charges are all
+    /// shared with [`GemmPlan::cost`], so executed cycles equal the
+    /// plan's predicted cycles by construction (pinned in
+    /// `tests/plan_conformance.rs`).
+    fn run_plan<'b, T: Element>(
+        &self,
+        cfg: &GemmConfig,
+        plan: &GemmPlan,
+        a: &Mat<T>,
+        bop: BOperand<'b, T>,
+        c: &mut Mat<T::Acc>,
+    ) -> (CycleBreakdown, Vec<TileStats>) {
+        let prec = T::PRECISION;
         let kernel = ElemKernel::<T>::new();
         let mut cycles = CycleBreakdown::zero();
         let mut stats: Vec<TileStats> =
             (0..cfg.tiles).map(|t| TileStats { tile: t, ..Default::default() }).collect();
 
-        let mut jc = 0;
-        while jc < n {
-            let nc_eff = nc.min(n - jc);
-            let mut pc = 0;
-            while pc < k {
-                let kc_eff = kc.min(k - pc);
-                let bc = pb.block(pc / kc, jc / nc);
-                let mut ic = 0;
-                while ic < m {
-                    let mc_eff = mc.min(m - ic);
-                    let ac = pack_a(a, ic, pc, mc_eff, kc_eff);
-                    if cfg.count_packing {
-                        cycles.packing +=
-                            (ac.bytes() as f64 / self.arch.ic.pack_bytes_per_cycle) as u64;
+        let mut bc: BcSlot<'b, T> = BcSlot::Empty;
+        let mut ac: Option<PackedA<T>> = None;
+        for step in plan.steps() {
+            match step {
+                PlanStep::Pack(p) => {
+                    if cfg.count_packing && p.charged {
+                        cycles.packing += p.cycles(self.arch);
                     }
+                    match p.buffer {
+                        Buffer::Bc => {
+                            bc = match bop {
+                                BOperand::Dense(b) => BcSlot::Owned(pack_b(
+                                    b, p.row_off, p.col_off, p.rows, p.cols,
+                                )),
+                                BOperand::Prepacked(pb) => BcSlot::Resident(
+                                    pb.block(p.row_off / cfg.ccp.kc, p.col_off / cfg.ccp.nc),
+                                ),
+                            };
+                        }
+                        Buffer::Ac => {
+                            ac = Some(pack_a(a, p.row_off, p.col_off, p.rows, p.cols));
+                        }
+                    }
+                }
+                PlanStep::Compute(cs) => {
+                    let bcr = bc.get().expect("plan packs Bc before computing");
+                    let acr = ac.as_ref().expect("plan packs Ac before computing");
 
-                    compute_block(&kernel, &ac, bc, c, ic, jc, kc_eff);
+                    // ----- numerics (host threads over pi row-panels) ----
+                    compute_block(&kernel, acr, bcr, c, cs.ic, cs.jc, cs.kc_eff);
 
-                    for pj in 0..bc.n_panels {
+                    // ----- tile accounting: jr panels round-robin --------
+                    for pj in 0..bcr.n_panels {
                         let t = pj % cfg.tiles;
                         stats[t].br_copies += 1;
-                        stats[t].kernels += ac.n_panels as u64;
-                        stats[t].macs += ac.n_panels as u64 * ElemKernel::<T>::macs(kc_eff);
+                        stats[t].kernels += acr.n_panels as u64;
+                        stats[t].macs += acr.n_panels as u64 * ElemKernel::<T>::macs(cs.kc_eff);
                     }
 
+                    // ----- schedule: lockstep rounds over the L4 space ---
                     cycles += self.block_schedule_p(
                         cfg,
-                        bc.n_panels,
-                        ac.n_panels,
-                        kc_eff,
-                        bc.panel_bytes(),
+                        bcr.n_panels,
+                        acr.n_panels,
+                        cs.kc_eff,
+                        bcr.panel_bytes(),
                         prec,
                     );
-                    ic += mc_eff;
                 }
-                pc += kc_eff;
+                PlanStep::Release(r) => match r.buffer {
+                    Buffer::Bc => bc = BcSlot::Empty,
+                    Buffer::Ac => ac = None,
+                },
             }
-            jc += nc_eff;
         }
         if cfg.count_packing {
             cycles.total += cycles.packing;
         }
-        Ok((cycles, stats))
+        (cycles, stats)
     }
 
     /// Cycle schedule of one (mc, nc, kc) block on `cfg.tiles` tiles —
@@ -393,6 +375,40 @@ impl<'a> ParallelGemm<'a> {
             arithmetic_cycles: isolated,
             total_cycles: sched.total,
             perf_per_tile: macs as f64 / (isolated + cr) as f64,
+        }
+    }
+}
+
+/// The B operand source of a plan execution: packed on the fly from the
+/// dense matrix (the plan's Bc pack steps), or fetched from a prepacked
+/// weight-stationary image (the steps become fetches, never charged).
+enum BOperand<'b, T: Element> {
+    Dense(&'b Mat<T>),
+    Prepacked(&'b PrepackedB<T>),
+}
+
+impl<T: Element> Clone for BOperand<'_, T> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+
+impl<T: Element> Copy for BOperand<'_, T> {}
+
+/// The currently-resident Bc of a plan walk: owned when packed on the
+/// fly, borrowed when fetched from a prepacked image.
+enum BcSlot<'b, T: Element> {
+    Empty,
+    Owned(PackedB<T>),
+    Resident(&'b PackedB<T>),
+}
+
+impl<T: Element> BcSlot<'_, T> {
+    fn get(&self) -> Option<&PackedB<T>> {
+        match self {
+            BcSlot::Empty => None,
+            BcSlot::Owned(p) => Some(p),
+            BcSlot::Resident(p) => Some(*p),
         }
     }
 }
@@ -476,6 +492,7 @@ mod tests {
     use super::*;
     use crate::arch::vc1902;
     use crate::gemm::baseline::naive_gemm;
+    use crate::gemm::Ccp;
     use crate::util::quickcheck::prop;
     use crate::util::Pcg32;
 

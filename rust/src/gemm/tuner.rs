@@ -6,14 +6,17 @@
 //! don't divide the problem) and the amortisation terms of the schedule.
 //! The tuner searches the feasible CCP lattice with the calibrated
 //! schedule model as its cost function — no hardware runs needed, same
-//! spirit as analytical-model-driven BLIS tuning.
+//! spirit as analytical-model-driven BLIS tuning. Every candidate is
+//! scored by lowering and costing the same [`crate::plan::GemmPlan`]
+//! the drivers execute, so the search optimises exactly the schedule
+//! that will run.
 
 use super::ccp::Ccp;
 use super::microkernel::{MR, NR};
-use super::parallel::ParallelGemm;
 use super::precision::Precision;
 use super::GemmConfig;
 use crate::arch::VersalArch;
+use crate::plan::GemmPlan;
 use crate::sim::AieTileModel;
 
 /// Tuning result: the chosen CCPs and the predicted cost.
@@ -40,6 +43,20 @@ pub fn predict_cycles(
 }
 
 /// Predicted wall cycles for a full (m, n, k) problem at any precision.
+///
+/// The prediction is not a private re-walk of the loop nest: the tuner
+/// lowers the *same* [`GemmPlan`] the drivers execute and prices it with
+/// [`GemmPlan::cost`], so a predicted schedule is structurally identical
+/// to the executed one by construction (`tests/plan_conformance.rs`
+/// pins `predict == run` per precision). A problem/CCP combination whose
+/// plan cannot be constructed (oversubscribed hierarchy) predicts
+/// `u64::MAX` — infeasible candidates never win a search.
+///
+/// Lowering materializes the plan's step stream (O(block count) memory,
+/// freed after costing); for the repo's shapes this is at most a few
+/// MB per candidate. Sweeps over huge problems with tiny candidate
+/// strides should bound their stride grids (see ROADMAP: a lazy step
+/// iterator is the planned fix).
 pub fn predict_cycles_p(
     arch: &VersalArch,
     cfg: &GemmConfig,
@@ -48,35 +65,10 @@ pub fn predict_cycles_p(
     k: usize,
     prec: Precision,
 ) -> u64 {
-    let engine = ParallelGemm::new(arch);
-    let Ccp { mc, nc, kc } = cfg.ccp;
-    let mut total = 0u64;
-    // Iterate the L1/L2/L3 block structure with edge-trimmed blocks.
-    let mut jc = 0;
-    while jc < n {
-        let nc_eff = nc.min(n - jc);
-        let mut pc = 0;
-        while pc < k {
-            let kc_eff = kc.min(k - pc);
-            let mut ic = 0;
-            while ic < m {
-                let mc_eff = mc.min(m - ic);
-                let sched = engine.block_schedule_p(
-                    cfg,
-                    nc_eff.div_ceil(NR),
-                    mc_eff.div_ceil(MR),
-                    kc_eff.max(1),
-                    (kc_eff * NR) as u64 * prec.elem_bytes(),
-                    prec,
-                );
-                total += sched.total;
-                ic += mc_eff;
-            }
-            pc += kc_eff;
-        }
-        jc += nc_eff;
+    match GemmPlan::lower(arch, cfg, m, n, k, prec, false) {
+        Ok(plan) => plan.cost(arch).total,
+        Err(_) => u64::MAX,
     }
-    total
 }
 
 /// A feasible paper-shaped CCP for a precision: the Table-2 geometry with
@@ -135,6 +127,11 @@ pub fn select_precision(
         let mut cfg = GemmConfig::paper_table2(tiles);
         cfg.ccp = ccp;
         let cycles = predict_cycles_p(arch, &cfg, m, n, k, prec);
+        if cycles == u64::MAX {
+            // No lowerable plan at this precision (e.g. the operands
+            // oversubscribe DDR): not a candidate, not a prediction.
+            continue;
+        }
         if best.as_ref().map(|b| cycles < b.predicted_cycles).unwrap_or(true) {
             best = Some(PrecisionChoice {
                 precision: prec,
@@ -173,6 +170,12 @@ pub fn tune(arch: &VersalArch, m: usize, n: usize, k: usize, tiles: usize) -> Tu
                 let mut cfg = GemmConfig::paper_table2(tiles);
                 cfg.ccp = ccp;
                 let cycles = predict_cycles(arch, &cfg, m, n, k);
+                if cycles == u64::MAX {
+                    // Unlowerable plan (problem itself oversubscribes a
+                    // level, e.g. DDR): skip, never report the sentinel
+                    // as a schedule.
+                    continue;
+                }
                 evaluated += 1;
                 if best.as_ref().map(|b| cycles < b.predicted_cycles).unwrap_or(true) {
                     best = Some(Tuned { ccp, predicted_cycles: cycles, candidates_evaluated: 0 });
@@ -180,7 +183,10 @@ pub fn tune(arch: &VersalArch, m: usize, n: usize, k: usize, tiles: usize) -> Tu
             }
         }
     }
-    let mut out = best.expect("at least one feasible CCP");
+    let mut out = best.expect(
+        "no CCP candidate admits a lowerable plan — the problem's operands \
+         exceed the device's memory hierarchy (see GemmPlan::lower)",
+    );
     out.candidates_evaluated = evaluated;
     out
 }
@@ -189,6 +195,7 @@ pub fn tune(arch: &VersalArch, m: usize, n: usize, k: usize, tiles: usize) -> Tu
 mod tests {
     use super::*;
     use crate::arch::vc1902;
+    use crate::gemm::parallel::ParallelGemm;
 
     #[test]
     fn predict_matches_block_schedule_on_single_block() {
@@ -284,6 +291,29 @@ mod tests {
         assert_eq!(c.precision, Precision::I16);
         // Impossible budget: nothing qualifies.
         assert!(select_precision(&arch, 256, 256, 2048, 8, 1e-9).is_none());
+    }
+
+    #[test]
+    fn unlowerable_problems_never_surface_the_sentinel() {
+        // Shrink DDR below the operands' footprint: no plan lowers, so
+        // prediction reports the u64::MAX sentinel — and the selectors
+        // must skip it, never hand it to a caller as a schedule.
+        let mut arch = vc1902();
+        for m in arch.mem.iter_mut() {
+            if m.level == crate::arch::MemLevel::Ddr {
+                m.capacity_bytes = 8 * 1024 * 1024;
+            }
+        }
+        let cfg = GemmConfig::paper_table2(8);
+        // 4096³ u8: A + B + C ≈ 96 MB ≫ the 8 MB DDR.
+        assert_eq!(predict_cycles(&arch, &cfg, 4096, 4096, 4096), u64::MAX);
+        assert!(
+            select_precision(&arch, 4096, 4096, 4096, 8, 0.5).is_none(),
+            "no precision admits a lowerable plan, selection must refuse"
+        );
+        // The same shapes on the real device lower and predict finitely.
+        let real = vc1902();
+        assert_ne!(predict_cycles(&real, &cfg, 4096, 4096, 4096), u64::MAX);
     }
 
     #[test]

@@ -31,6 +31,13 @@
 //!                 the parallel loop-L4 design, plus ablation drivers
 //!                 that parallelise L1/L3/L5 instead, and the CCP +
 //!                 precision auto-tuner.
+//! - [`plan`]    — the unified GEMM execution-plan IR: one lowered
+//!                 loop nest + memory-residency plan, validated against
+//!                 the architecture's capacities at construction, that
+//!                 every driver executes and the tuner / cluster
+//!                 scheduler / serving pipeline cost — predicted and
+//!                 executed schedules are structurally identical by
+//!                 construction.
 //! - [`cluster`] — the multi-device layer: a pool of simulated Versal
 //!                 devices behind a cycle-costed inter-device fabric
 //!                 (ring / mesh / fully-connected), device collectives
@@ -75,6 +82,7 @@ pub mod cluster;
 pub mod coordinator;
 pub mod dl;
 pub mod gemm;
+pub mod plan;
 pub mod quant;
 pub mod report;
 pub mod runtime;
@@ -84,6 +92,7 @@ pub mod util;
 pub use arch::VersalArch;
 pub use cluster::{Cluster, ClusterGemm};
 pub use gemm::{Ccp, GemmConfig, ParallelGemm, Precision, PrecisionPolicy};
+pub use plan::GemmPlan;
 
 mod app;
 pub use app::cli_main;

@@ -1,0 +1,106 @@
+//! Pricing a lowered plan with the calibrated schedule model.
+//!
+//! [`GemmPlan::cost`] is the single cost function behind the tuner's
+//! CCP search ([`crate::gemm::tuner::predict_cycles_p`]) and the
+//! cluster's shard scheduler ([`crate::cluster::ClusterGemm`]): it walks
+//! the same step stream the drivers execute and charges each
+//! [`ComputeStep`](super::ComputeStep) through
+//! [`ParallelGemm::block_schedule_p`] — the same per-block primitive the
+//! executing drivers call — so a predicted schedule can never diverge
+//! structurally from an executed one.
+
+use super::ir::{GemmPlan, PlanStep};
+use crate::arch::VersalArch;
+use crate::gemm::ParallelGemm;
+use crate::sim::CycleBreakdown;
+
+impl GemmPlan {
+    /// Price the plan on `arch` with the parallel loop-L4 schedule model
+    /// (the drivers' own accounting: [`crate::gemm::ParallelGemm::run_p`]
+    /// produces exactly this breakdown, pinned in
+    /// `tests/plan_conformance.rs`). Pack steps are charged at the pack
+    /// bandwidth only when the plan counts packing, and only for steps
+    /// the execution would really pay (`charged` — a prepacked plan's Bc
+    /// fetches are free here, like the serving runtime's cache hits).
+    pub fn cost(&self, arch: &VersalArch) -> CycleBreakdown {
+        let engine = ParallelGemm::new(arch);
+        let cfg = self.gemm_config();
+        let mut cy = CycleBreakdown::zero();
+        for step in self.steps() {
+            match step {
+                PlanStep::Pack(p) => {
+                    if self.count_packing && p.charged {
+                        cy.packing += p.cycles(arch);
+                    }
+                }
+                PlanStep::Compute(c) => {
+                    cy += engine.block_schedule_p(
+                        &cfg,
+                        c.panels_b,
+                        c.panels_a,
+                        c.kc_eff,
+                        c.br_panel_bytes,
+                        self.precision,
+                    );
+                }
+                PlanStep::Release(_) => {}
+            }
+        }
+        if self.count_packing {
+            cy.total += cy.packing;
+        }
+        cy
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::arch::vc1902;
+    use crate::gemm::{GemmConfig, ParallelGemm, Precision};
+    use crate::plan::GemmPlan;
+
+    #[test]
+    fn single_block_cost_is_the_block_schedule() {
+        let arch = vc1902();
+        let cfg = GemmConfig::paper_table2(8);
+        let plan =
+            GemmPlan::lower(&arch, &cfg, 256, 256, 2048, Precision::U8, false).unwrap();
+        let engine = ParallelGemm::new(&arch);
+        let direct = engine.block_schedule(&cfg, 32, 32, 2048, 2048 * 8);
+        assert_eq!(plan.cost(&arch), direct);
+    }
+
+    #[test]
+    fn packing_charged_only_when_counted() {
+        let arch = vc1902();
+        let mut cfg = GemmConfig::paper_table2(2);
+        cfg.ccp = crate::gemm::Ccp { mc: 16, nc: 16, kc: 16 };
+        let uncounted =
+            GemmPlan::lower(&arch, &cfg, 32, 32, 32, Precision::U8, false).unwrap();
+        assert_eq!(uncounted.cost(&arch).packing, 0);
+        cfg.count_packing = true;
+        let counted = GemmPlan::lower(&arch, &cfg, 32, 32, 32, Precision::U8, false).unwrap();
+        let cy = counted.cost(&arch);
+        assert!(cy.packing > 0);
+        assert_eq!(cy.total, uncounted.cost(&arch).total + cy.packing);
+        // A prepacked plan keeps the Ac (activation) packs but drops the
+        // resident-weights Bc packs.
+        let pre = GemmPlan::lower(&arch, &cfg, 32, 32, 32, Precision::U8, true).unwrap();
+        let pre_cy = pre.cost(&arch);
+        assert!(pre_cy.packing > 0 && pre_cy.packing < cy.packing);
+    }
+
+    #[test]
+    fn wider_elements_cost_more() {
+        let arch = vc1902();
+        let mut cfg = GemmConfig::paper_table2(4);
+        cfg.ccp = crate::gemm::Ccp { mc: 16, nc: 16, kc: 32 };
+        let u8c = GemmPlan::lower(&arch, &cfg, 64, 64, 64, Precision::U8, false)
+            .unwrap()
+            .cost(&arch);
+        let i16c = GemmPlan::lower(&arch, &cfg, 64, 64, 64, Precision::I16, false)
+            .unwrap()
+            .cost(&arch);
+        assert!(i16c.total > u8c.total, "i16 {} !> u8 {}", i16c.total, u8c.total);
+    }
+}

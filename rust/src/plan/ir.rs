@@ -1,0 +1,286 @@
+//! The plan IR types: steps, buffers, footprints, and the [`GemmPlan`]
+//! container with its structural accessors.
+
+use crate::arch::MemLevel;
+use crate::gemm::{Ccp, GemmConfig, Precision};
+
+/// A packed operand buffer of the GotoBLAS mapping (Table 1 / Figure 3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Buffer {
+    /// The packed A block (mr-row panels) resident in FPGA Ultra RAM.
+    Ac,
+    /// The packed B block (nr-column panels) resident in FPGA Block RAM.
+    Bc,
+}
+
+impl Buffer {
+    /// The memory level the operand mapping assigns this buffer to.
+    pub fn level(self) -> MemLevel {
+        match self {
+            Buffer::Ac => MemLevel::UltraRam,
+            Buffer::Bc => MemLevel::BlockRam,
+        }
+    }
+
+    /// Operand name as the paper writes it.
+    pub fn name(self) -> &'static str {
+        match self {
+            Buffer::Ac => "Ac",
+            Buffer::Bc => "Bc",
+        }
+    }
+}
+
+/// One packing step: copy a (possibly edge-trimmed) operand block into
+/// its memory level. `bytes` is the *packed* footprint — panels are
+/// zero-padded to full mr/nr width, so this is what the level actually
+/// holds (and what [`crate::sim::MemPool`] allocates).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PackStep {
+    /// Which operand buffer this step fills.
+    pub buffer: Buffer,
+    /// Destination memory level (always `buffer.level()`).
+    pub level: MemLevel,
+    /// Row offset of the block in the source operand (`ic` for Ac,
+    /// `pc` for Bc).
+    pub row_off: usize,
+    /// Column offset of the block in the source operand (`pc` for Ac,
+    /// `jc` for Bc).
+    pub col_off: usize,
+    /// Rows of the block (edge-trimmed `mc_eff` for Ac, `kc_eff` for Bc).
+    pub rows: usize,
+    /// Columns of the block (edge-trimmed `kc_eff` for Ac, `nc_eff` for Bc).
+    pub cols: usize,
+    /// Packed byte footprint (panel-padded), charged at the DDR→FPGA
+    /// pack bandwidth when packing is counted.
+    pub bytes: u64,
+    /// Whether executing the plan pays this pack. `false` for the Bc
+    /// steps of a prepacked (weight-stationary) plan: the blocks are
+    /// fetched from a resident [`crate::gemm::PrepackedB`], and the pack
+    /// cost was charged where the prepack happened (the serving cache's
+    /// miss path).
+    pub charged: bool,
+}
+
+impl PackStep {
+    /// Cycles this pack costs at the architecture's DDR→FPGA pack
+    /// bandwidth (what the drivers charge when `count_packing` is set).
+    pub fn cycles(&self, arch: &crate::arch::VersalArch) -> u64 {
+        (self.bytes as f64 / arch.ic.pack_bytes_per_cycle) as u64
+    }
+}
+
+/// One (mc, nc, kc) block product: every (pi, pj) micro-kernel of the
+/// resident Ac × Bc pair, with loop L4 distributed over the tiles.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ComputeStep {
+    /// Loop-L1 offset (column of C / B).
+    pub jc: usize,
+    /// Loop-L2 offset (the reduction dimension).
+    pub pc: usize,
+    /// Loop-L3 offset (row of C / A).
+    pub ic: usize,
+    /// Edge-trimmed L1 extent.
+    pub nc_eff: usize,
+    /// Edge-trimmed L2 extent.
+    pub kc_eff: usize,
+    /// Edge-trimmed L3 extent.
+    pub mc_eff: usize,
+    /// mr-row panels of the resident Ac (`ceil(mc_eff / mr)`).
+    pub panels_a: usize,
+    /// nr-column panels of the resident Bc (`ceil(nc_eff / nr)`).
+    pub panels_b: usize,
+    /// Bytes of one Br micro-panel — the block's local-memory residency
+    /// per tile and the Br-copy stream traffic.
+    pub br_panel_bytes: u64,
+}
+
+impl ComputeStep {
+    /// Effective MACs of the block product: `mc_eff · nc_eff · kc_eff`.
+    /// Summed over a plan this is exactly `m · n · k`
+    /// ([`crate::gemm::BlockedGemm::total_macs`]) — the padded panel
+    /// lanes multiply zeros and retire no useful work.
+    pub fn macs(&self) -> u64 {
+        self.mc_eff as u64 * self.nc_eff as u64 * self.kc_eff as u64
+    }
+
+    /// Micro-kernel invocations of the block: `panels_a · panels_b`.
+    pub fn micro_kernels(&self) -> u64 {
+        self.panels_a as u64 * self.panels_b as u64
+    }
+}
+
+/// Release a resident buffer (its level's bytes become free again).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ReleaseStep {
+    /// Which buffer is released.
+    pub buffer: Buffer,
+    /// The level it leaves (always `buffer.level()`).
+    pub level: MemLevel,
+    /// Bytes freed.
+    pub bytes: u64,
+}
+
+/// One step of the lowered loop nest, in execution order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlanStep {
+    /// Pack an operand block into its memory level.
+    Pack(PackStep),
+    /// Run one block product against the resident buffers.
+    Compute(ComputeStep),
+    /// Release a resident buffer.
+    Release(ReleaseStep),
+}
+
+/// Peak residency of one memory level under a plan, next to the level's
+/// capacity — the row of the CLI/report footprint table.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LevelFootprint {
+    /// The memory level.
+    pub level: MemLevel,
+    /// Peak bytes the plan keeps resident at this level.
+    pub peak_bytes: u64,
+    /// The architecture's capacity at this level.
+    pub capacity_bytes: u64,
+    /// Bytes reserved for other resident data (non-zero only for the
+    /// AIE local memory — the paper's "sparing about 2.5 KB", §4.3).
+    pub reserved_bytes: u64,
+}
+
+impl LevelFootprint {
+    /// Bytes actually available to the plan at this level.
+    pub fn budget_bytes(&self) -> u64 {
+        self.capacity_bytes.saturating_sub(self.reserved_bytes)
+    }
+
+    /// Peak residency as a fraction of the level's capacity.
+    pub fn utilisation(&self) -> f64 {
+        if self.capacity_bytes == 0 {
+            0.0
+        } else {
+            self.peak_bytes as f64 / self.capacity_bytes as f64
+        }
+    }
+}
+
+/// A lowered GEMM execution plan: the explicit loop nest plus its
+/// memory-residency accounting. Construct with [`GemmPlan::lower`];
+/// execute by walking [`GemmPlan::steps`] (the drivers do) or price
+/// with [`GemmPlan::cost`] (the tuner and the cluster scheduler do).
+#[derive(Debug, Clone)]
+pub struct GemmPlan {
+    /// Rows of A / C.
+    pub m: usize,
+    /// Columns of B / C.
+    pub n: usize,
+    /// The reduction dimension.
+    pub k: usize,
+    /// Element precision the plan was lowered for.
+    pub precision: Precision,
+    /// Cache configuration parameters (loop strides).
+    pub ccp: Ccp,
+    /// AIE tiles loop L4 distributes over.
+    pub tiles: usize,
+    /// Whether executing/costing the plan charges pack cycles.
+    pub count_packing: bool,
+    /// Steady-state Ar streaming (full-GEMM regime) vs isolated kernels.
+    pub steady_stream: bool,
+    /// Whether the B operand is prepacked (weight-stationary serving):
+    /// Bc pack steps are fetches, not charged packs.
+    pub prepacked_b: bool,
+    pub(crate) steps: Vec<PlanStep>,
+    pub(crate) footprints: Vec<LevelFootprint>,
+}
+
+impl GemmPlan {
+    /// The lowered step stream, in execution order.
+    pub fn steps(&self) -> &[PlanStep] {
+        &self.steps
+    }
+
+    /// Peak per-level residency, in [`MemLevel::ALL`] order.
+    pub fn footprints(&self) -> &[LevelFootprint] {
+        &self.footprints
+    }
+
+    /// The footprint row of one level.
+    pub fn footprint(&self, level: MemLevel) -> &LevelFootprint {
+        self.footprints
+            .iter()
+            .find(|f| f.level == level)
+            .expect("all levels accounted at lowering")
+    }
+
+    /// The driver configuration this plan was lowered from.
+    pub fn gemm_config(&self) -> GemmConfig {
+        GemmConfig {
+            ccp: self.ccp,
+            tiles: self.tiles,
+            count_packing: self.count_packing,
+            steady_stream: self.steady_stream,
+        }
+    }
+
+    /// Number of (jc, pc, ic) block products in the plan.
+    pub fn n_compute_steps(&self) -> usize {
+        self.steps
+            .iter()
+            .filter(|s| matches!(s, PlanStep::Compute(_)))
+            .count()
+    }
+
+    /// Loop-L1 iterations (`ceil(n / nc)`).
+    pub fn jc_blocks(&self) -> usize {
+        self.n.div_ceil(self.ccp.nc.max(1))
+    }
+
+    /// Loop-L2 iterations (`ceil(k / kc)`).
+    pub fn pc_blocks(&self) -> usize {
+        self.k.div_ceil(self.ccp.kc.max(1))
+    }
+
+    /// Loop-L3 iterations (`ceil(m / mc)`).
+    pub fn ic_blocks(&self) -> usize {
+        self.m.div_ceil(self.ccp.mc.max(1))
+    }
+
+    /// Effective MACs the plan's compute steps retire:
+    /// `Σ mc_eff · nc_eff · kc_eff = m · n · k`, exactly
+    /// [`crate::gemm::BlockedGemm::total_macs`] (property-pinned in
+    /// `tests/plan_conformance.rs`).
+    pub fn total_macs(&self) -> u64 {
+        self.steps
+            .iter()
+            .filter_map(|s| match s {
+                PlanStep::Compute(c) => Some(c.macs()),
+                _ => None,
+            })
+            .sum()
+    }
+
+    /// Micro-kernel invocations across the plan.
+    pub fn micro_kernels(&self) -> u64 {
+        self.steps
+            .iter()
+            .filter_map(|s| match s {
+                PlanStep::Compute(c) => Some(c.micro_kernels()),
+                _ => None,
+            })
+            .sum()
+    }
+
+    /// Total packed bytes of one buffer across the plan's pack steps —
+    /// what the serving layer charges at the pack bandwidth (`Ac` is the
+    /// activation block, `Bc` the weights; for a resident weight matrix
+    /// the `Bc` sum equals
+    /// [`crate::dl::PackedWeights::bytes`](crate::dl::PackedWeights)).
+    pub fn pack_bytes(&self, buffer: Buffer) -> u64 {
+        self.steps
+            .iter()
+            .filter_map(|s| match s {
+                PlanStep::Pack(p) if p.buffer == buffer => Some(p.bytes),
+                _ => None,
+            })
+            .sum()
+    }
+}

@@ -1,0 +1,391 @@
+//! Lowering `(m, n, k, precision, ccp, tiles, prepacked?)` into a
+//! [`GemmPlan`], with plan-time memory-feasibility validation.
+
+use super::ir::{
+    Buffer, ComputeStep, GemmPlan, LevelFootprint, PackStep, PlanStep, ReleaseStep,
+};
+use crate::arch::{MemLevel, VersalArch};
+use crate::gemm::ccp::LOCAL_RESERVED_BYTES;
+use crate::gemm::{Ccp, GemmConfig, Precision, MR, NR};
+
+/// Why a plan could not be constructed. Both variants are *capacity*
+/// failures: the loop nest itself always lowers, but a plan whose
+/// buffers do not fit the explicit hierarchy is rejected here — the
+/// drivers never start executing a schedule the device could not hold.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum PlanError {
+    /// The CCP fails the §4.3 feasibility arithmetic
+    /// ([`Ccp::check`]); the message names the offending buffer
+    /// (Br / Ac / Bc / Cr).
+    Infeasible(String),
+    /// A lowered buffer's peak residency exceeds its level's budget
+    /// (capacity minus the level's reserved bytes).
+    Oversubscribed {
+        /// The operands resident at the level (Table 1 naming).
+        operands: &'static str,
+        /// The oversubscribed level.
+        level: MemLevel,
+        /// Peak bytes the plan needs resident.
+        need: u64,
+        /// Bytes the level can actually hold.
+        budget: u64,
+    },
+}
+
+impl std::fmt::Display for PlanError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PlanError::Infeasible(msg) => write!(f, "{msg}"),
+            PlanError::Oversubscribed { operands, level, need, budget } => write!(
+                f,
+                "{operands} peak residency ({need} B) oversubscribes {} (budget {budget} B)",
+                level.name()
+            ),
+        }
+    }
+}
+
+impl std::error::Error for PlanError {}
+
+impl GemmPlan {
+    /// Lower a GEMM problem into its explicit loop-nest plan.
+    ///
+    /// The step stream follows the paper's Figure-1 nest exactly: loop
+    /// L1 over `jc` (stride `nc`), loop L2 over `pc` (stride `kc`,
+    /// packing Bc into Block RAM), loop L3 over `ic` (stride `mc`,
+    /// packing Ac into Ultra RAM), one [`ComputeStep`] per resident
+    /// (Ac, Bc) pair, and a [`ReleaseStep`] when a buffer's last
+    /// consumer has run. Edge blocks carry trimmed extents; packed byte
+    /// footprints are panel-padded, i.e. what the memory levels really
+    /// hold.
+    ///
+    /// Validation happens here, not at execution time: the CCP must
+    /// pass [`Ccp::check`] and every level's peak residency (including
+    /// the whole-operand DDR footprint) must fit its budget, else the
+    /// plan is a [`PlanError`] and no driver ever runs it.
+    pub fn lower(
+        arch: &VersalArch,
+        cfg: &GemmConfig,
+        m: usize,
+        n: usize,
+        k: usize,
+        precision: Precision,
+        prepacked_b: bool,
+    ) -> Result<GemmPlan, PlanError> {
+        let elem = precision.elem_bytes();
+        cfg.ccp.check(arch, elem).map_err(PlanError::Infeasible)?;
+        let Ccp { mc, nc, kc } = cfg.ccp;
+
+        let mut steps = Vec::new();
+        // Peak residency per level, indexed in MemLevel::ALL order:
+        // [vreg, local, uram, bram, ddr].
+        let mut peak = [0u64; 5];
+        // Cr: one mr × nr accumulator tile per tile, resident throughout.
+        peak[0] = (MR * NR) as u64 * precision.acc_bytes();
+        // DDR holds the whole operands A, B and C for the duration.
+        // Shape-only and CCP-independent, so reject before generating
+        // any steps — an impossible problem fails in O(1), not after
+        // materializing a huge step stream.
+        peak[4] = (m * k + k * n) as u64 * elem + (m * n) as u64 * precision.acc_bytes();
+        let ddr = arch.mem_capacity(MemLevel::Ddr);
+        if peak[4] > ddr {
+            return Err(PlanError::Oversubscribed {
+                operands: MemLevel::Ddr.operands(),
+                level: MemLevel::Ddr,
+                need: peak[4],
+                budget: ddr,
+            });
+        }
+
+        let mut jc = 0;
+        while jc < n {
+            let nc_eff = nc.min(n - jc);
+            let panels_b = nc_eff.div_ceil(NR);
+            let mut pc = 0;
+            while pc < k {
+                let kc_eff = kc.min(k - pc);
+                let bc_bytes = (panels_b * kc_eff * NR) as u64 * elem;
+                let br_panel_bytes = (kc_eff * NR) as u64 * elem;
+                peak[3] = peak[3].max(bc_bytes);
+                peak[1] = peak[1].max(br_panel_bytes);
+                steps.push(PlanStep::Pack(PackStep {
+                    buffer: Buffer::Bc,
+                    level: MemLevel::BlockRam,
+                    row_off: pc,
+                    col_off: jc,
+                    rows: kc_eff,
+                    cols: nc_eff,
+                    bytes: bc_bytes,
+                    charged: !prepacked_b,
+                }));
+                let mut ic = 0;
+                while ic < m {
+                    let mc_eff = mc.min(m - ic);
+                    let panels_a = mc_eff.div_ceil(MR);
+                    let ac_bytes = (panels_a * MR * kc_eff) as u64 * elem;
+                    peak[2] = peak[2].max(ac_bytes);
+                    steps.push(PlanStep::Pack(PackStep {
+                        buffer: Buffer::Ac,
+                        level: MemLevel::UltraRam,
+                        row_off: ic,
+                        col_off: pc,
+                        rows: mc_eff,
+                        cols: kc_eff,
+                        bytes: ac_bytes,
+                        charged: true,
+                    }));
+                    steps.push(PlanStep::Compute(ComputeStep {
+                        jc,
+                        pc,
+                        ic,
+                        nc_eff,
+                        kc_eff,
+                        mc_eff,
+                        panels_a,
+                        panels_b,
+                        br_panel_bytes,
+                    }));
+                    steps.push(PlanStep::Release(ReleaseStep {
+                        buffer: Buffer::Ac,
+                        level: MemLevel::UltraRam,
+                        bytes: ac_bytes,
+                    }));
+                    ic += mc_eff;
+                }
+                steps.push(PlanStep::Release(ReleaseStep {
+                    buffer: Buffer::Bc,
+                    level: MemLevel::BlockRam,
+                    bytes: bc_bytes,
+                }));
+                pc += kc_eff;
+            }
+            jc += nc_eff;
+        }
+
+        let mut footprints = Vec::with_capacity(MemLevel::ALL.len());
+        for (i, &level) in MemLevel::ALL.iter().enumerate() {
+            let capacity_bytes = arch.mem_capacity(level);
+            let reserved_bytes =
+                if level == MemLevel::LocalMemory { LOCAL_RESERVED_BYTES } else { 0 };
+            let fp = LevelFootprint { level, peak_bytes: peak[i], capacity_bytes, reserved_bytes };
+            if fp.peak_bytes > fp.budget_bytes() {
+                return Err(PlanError::Oversubscribed {
+                    operands: level.operands(),
+                    level,
+                    need: fp.peak_bytes,
+                    budget: fp.budget_bytes(),
+                });
+            }
+            footprints.push(fp);
+        }
+
+        Ok(GemmPlan {
+            m,
+            n,
+            k,
+            precision,
+            ccp: cfg.ccp,
+            tiles: cfg.tiles,
+            count_packing: cfg.count_packing,
+            steady_stream: cfg.steady_stream,
+            prepacked_b,
+            steps,
+            footprints,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::vc1902;
+
+    fn cfg(mc: usize, nc: usize, kc: usize, tiles: usize) -> GemmConfig {
+        GemmConfig {
+            ccp: Ccp { mc, nc, kc },
+            tiles,
+            count_packing: false,
+            steady_stream: true,
+        }
+    }
+
+    #[test]
+    fn paper_problem_lowers_to_one_block() {
+        let arch = vc1902();
+        let plan = GemmPlan::lower(
+            &arch,
+            &GemmConfig::paper_table2(8),
+            256,
+            256,
+            2048,
+            Precision::U8,
+            false,
+        )
+        .unwrap();
+        assert_eq!(plan.n_compute_steps(), 1);
+        assert_eq!((plan.jc_blocks(), plan.pc_blocks(), plan.ic_blocks()), (1, 1, 1));
+        // Steps: PackB, PackA, Compute, ReleaseA, ReleaseB.
+        assert_eq!(plan.steps().len(), 5);
+        assert_eq!(plan.total_macs(), 256 * 256 * 2048);
+        assert_eq!(plan.micro_kernels(), 32 * 32);
+        // Table-1 residency: Bc = kc·nc = 512 KB, Ac = mc·kc = 512 KB,
+        // Br = kc·nr = 16 KB, Cr = 8·8·4 B.
+        assert_eq!(plan.footprint(MemLevel::BlockRam).peak_bytes, 512 * 1024);
+        assert_eq!(plan.footprint(MemLevel::UltraRam).peak_bytes, 512 * 1024);
+        assert_eq!(plan.footprint(MemLevel::LocalMemory).peak_bytes, 16 * 1024);
+        assert_eq!(plan.footprint(MemLevel::VectorRegisters).peak_bytes, 256);
+    }
+
+    #[test]
+    fn edge_blocks_partition_the_iteration_space() {
+        // Prime shape with non-dividing strides: extents must tile the
+        // problem exactly and effective MACs must sum to m·n·k.
+        let arch = vc1902();
+        let plan =
+            GemmPlan::lower(&arch, &cfg(16, 16, 32, 2), 37, 29, 53, Precision::U8, false)
+                .unwrap();
+        assert_eq!(plan.total_macs(), 37 * 29 * 53);
+        assert_eq!(
+            plan.n_compute_steps(),
+            plan.jc_blocks() * plan.pc_blocks() * plan.ic_blocks()
+        );
+        let mut covered = 0u64;
+        for s in plan.steps() {
+            if let PlanStep::Compute(c) = s {
+                assert!(c.ic + c.mc_eff <= 37 && c.jc + c.nc_eff <= 29 && c.pc + c.kc_eff <= 53);
+                assert!(c.mc_eff >= 1 && c.nc_eff >= 1 && c.kc_eff >= 1);
+                covered += c.macs();
+            }
+        }
+        assert_eq!(covered, 37 * 29 * 53);
+    }
+
+    #[test]
+    fn infeasible_ccp_is_a_construction_error() {
+        let arch = vc1902();
+        let e = GemmPlan::lower(&arch, &cfg(8, 8, 8192, 1), 8, 8, 8, Precision::U8, false)
+            .unwrap_err();
+        assert!(e.to_string().contains("Br"), "{e}");
+        // A 2-byte precision halves the admissible kc: 2048 fits u8 Br
+        // but not i16 Br.
+        assert!(GemmPlan::lower(&arch, &cfg(8, 8, 2048, 1), 8, 8, 8, Precision::U8, false)
+            .is_ok());
+        let e = GemmPlan::lower(&arch, &cfg(8, 8, 2048, 1), 8, 8, 8, Precision::I16, false)
+            .unwrap_err();
+        assert!(e.to_string().contains("Br"), "{e}");
+    }
+
+    #[test]
+    fn ddr_oversubscription_is_a_construction_error() {
+        // Shrink DDR below the operands' footprint: the plan must refuse.
+        let mut arch = vc1902();
+        for mem in arch.mem.iter_mut() {
+            if mem.level == MemLevel::Ddr {
+                mem.capacity_bytes = 16 * 1024 * 1024;
+            }
+        }
+        // 4096² u8 operands + 4096² i32 C ≈ 96 MB > 16 MB.
+        let e = GemmPlan::lower(
+            &arch,
+            &cfg(256, 256, 1024, 8),
+            4096,
+            4096,
+            4096,
+            Precision::U8,
+            false,
+        )
+        .unwrap_err();
+        match &e {
+            PlanError::Oversubscribed { level, .. } => assert_eq!(*level, MemLevel::Ddr),
+            other => panic!("want Oversubscribed(Ddr), got {other:?}"),
+        }
+        assert!(e.to_string().contains("A, B, C"), "{e}");
+    }
+
+    #[test]
+    fn prepacked_plans_do_not_charge_bc_packs() {
+        let arch = vc1902();
+        let dense =
+            GemmPlan::lower(&arch, &cfg(16, 16, 16, 2), 32, 32, 32, Precision::U8, false)
+                .unwrap();
+        let pre = GemmPlan::lower(&arch, &cfg(16, 16, 16, 2), 32, 32, 32, Precision::U8, true)
+            .unwrap();
+        assert_eq!(dense.steps().len(), pre.steps().len(), "same geometry");
+        for (d, p) in dense.steps().iter().zip(pre.steps()) {
+            match (d, p) {
+                (PlanStep::Pack(dp), PlanStep::Pack(pp)) => {
+                    assert_eq!(dp.bytes, pp.bytes);
+                    if dp.buffer == Buffer::Bc {
+                        assert!(dp.charged && !pp.charged);
+                    } else {
+                        assert!(dp.charged && pp.charged);
+                    }
+                }
+                _ => assert_eq!(d, p),
+            }
+        }
+    }
+
+    #[test]
+    fn footprints_scale_with_element_width() {
+        let arch = vc1902();
+        let p8 = GemmPlan::lower(&arch, &cfg(16, 16, 32, 1), 32, 32, 32, Precision::U8, false)
+            .unwrap();
+        let p16 =
+            GemmPlan::lower(&arch, &cfg(16, 16, 32, 1), 32, 32, 32, Precision::I16, false)
+                .unwrap();
+        for level in [MemLevel::LocalMemory, MemLevel::UltraRam, MemLevel::BlockRam] {
+            assert_eq!(
+                p16.footprint(level).peak_bytes,
+                2 * p8.footprint(level).peak_bytes,
+                "{level:?}"
+            );
+        }
+        // i16 accumulates in i64: Cr and the C operand double too.
+        assert_eq!(p16.footprint(MemLevel::VectorRegisters).peak_bytes, 512);
+        assert!(
+            p16.footprint(MemLevel::Ddr).peak_bytes > p8.footprint(MemLevel::Ddr).peak_bytes
+        );
+    }
+
+    #[test]
+    fn degenerate_dims_lower_to_packs_only_or_nothing() {
+        let arch = vc1902();
+        // n = 0: loop L1 never runs.
+        let plan = GemmPlan::lower(&arch, &cfg(8, 8, 8, 1), 8, 0, 8, Precision::U8, false)
+            .unwrap();
+        assert!(plan.steps().is_empty());
+        assert_eq!(plan.total_macs(), 0);
+        // m = 0: Bc is still packed per (jc, pc) block (mirroring the
+        // historical drivers), but nothing computes.
+        let plan = GemmPlan::lower(&arch, &cfg(8, 8, 8, 1), 0, 8, 8, Precision::U8, false)
+            .unwrap();
+        assert_eq!(plan.n_compute_steps(), 0);
+        assert!(plan.steps().iter().any(|s| matches!(s, PlanStep::Pack(_))));
+    }
+
+    #[test]
+    fn pack_bytes_sum_per_buffer() {
+        let arch = vc1902();
+        let plan = GemmPlan::lower(&arch, &cfg(16, 16, 16, 1), 24, 24, 24, Precision::U8, false)
+            .unwrap();
+        // k splits into 16 + 8; n into 16 + 8; m into 16 + 8.
+        // Bc blocks: 4 of (kc_eff × padded nc); panels pad nc_eff to 8s.
+        let bc_expect: u64 = [(16, 16), (8, 16), (16, 8), (8, 8)]
+            .iter()
+            .map(|&(kc_eff, nc_eff): &(usize, usize)| {
+                (nc_eff.div_ceil(8) * kc_eff * 8) as u64
+            })
+            .sum();
+        assert_eq!(plan.pack_bytes(Buffer::Bc), bc_expect);
+        // Ac blocks: one per (jc, pc, ic) — 8 of them.
+        let ac_expect: u64 = (0..8)
+            .map(|i| {
+                let kc_eff = if (i / 2) % 2 == 0 { 16u64 } else { 8 };
+                let mc_eff: u64 = if i % 2 == 0 { 16 } else { 8 };
+                mc_eff.div_ceil(8) * 8 * kc_eff
+            })
+            .sum();
+        assert_eq!(plan.pack_bytes(Buffer::Ac), ac_expect);
+    }
+}

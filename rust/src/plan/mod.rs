@@ -1,0 +1,55 @@
+//! The unified GEMM execution-plan IR — one lowered loop nest shared by
+//! every driver, the tuner, and the serving runtime.
+//!
+//! The paper's first contribution is the *flexible exploitation of the
+//! Versal multi-level memory hierarchy* (§3, Table 1). Before this
+//! module existed the repo encoded that hierarchy implicitly, in half a
+//! dozen hand-rolled copies of the GotoBLAS loop nest (the blocked and
+//! parallel drivers, the prepacked serving path, the cluster shard
+//! scheduler, and the tuner's private block walk). A declarative
+//! [`GemmPlan`] replaces all of them:
+//!
+//! - [`GemmPlan::lower`] turns `(m, n, k, Precision, Ccp, tiles,
+//!   prepacked?)` into an explicit step stream — per-level block
+//!   iterations of loops L1 (`jc`), L2 (`pc`) and L3 (`ic`) with
+//!   edge-trimmed extents, packing steps tagged with their
+//!   [`MemLevel`](crate::arch::MemLevel) destination, and buffer
+//!   releases — plus per-level **byte-footprint accounting** validated
+//!   against the [`VersalArch`](crate::arch::VersalArch) capacities at
+//!   plan time. A plan that would oversubscribe the local memory, the
+//!   FPGA RAMs or DDR is a *construction error*
+//!   ([`PlanError::Oversubscribed`]), not a silent model drift.
+//! - [`GemmPlan::cost`] prices the plan with the calibrated schedule
+//!   model ([`crate::gemm::ParallelGemm::block_schedule_p`]) — the
+//!   tuner's cost function and the cluster's shard scheduler are this
+//!   one call.
+//! - [`crate::gemm::BlockedGemm::run_p`],
+//!   [`crate::gemm::ParallelGemm::run_p`] and
+//!   [`crate::gemm::ParallelGemm::run_prepacked_p`] *execute* the same
+//!   step stream, so predicted and executed schedules are structurally
+//!   identical by construction (pinned in `tests/plan_conformance.rs`
+//!   and asserted every CI run by `bench_plan`).
+//!
+//! ```
+//! use versal_gemm::arch::vc1902;
+//! use versal_gemm::gemm::{GemmConfig, Precision};
+//! use versal_gemm::plan::GemmPlan;
+//!
+//! let arch = vc1902();
+//! let cfg = GemmConfig::paper_table2(8);
+//! let plan = GemmPlan::lower(&arch, &cfg, 256, 256, 2048, Precision::U8, false).unwrap();
+//! // One (jc, pc, ic) block: pack Bc, pack Ac, compute, release both.
+//! assert_eq!(plan.n_compute_steps(), 1);
+//! assert_eq!(plan.total_macs(), 256 * 256 * 2048);
+//! // The plan prices exactly what the drivers execute.
+//! assert!(plan.cost(&arch).total > 0);
+//! ```
+
+mod cost;
+mod ir;
+mod lower;
+
+pub use ir::{
+    Buffer, ComputeStep, GemmPlan, LevelFootprint, PackStep, PlanStep, ReleaseStep,
+};
+pub use lower::PlanError;

@@ -1,12 +1,13 @@
 //! Reporting: paper-shaped table emitters shared by the CLI and benches.
 
-use crate::arch::VersalArch;
+use crate::arch::{human_bytes, VersalArch};
 use crate::cluster::{
     Cluster, ClusterError, ClusterGemm, ClusterGemmConfig, FabricSpec, Topology,
 };
 use crate::coordinator::{LatencyStats, ServingReport};
 use crate::gemm::parallel::{ParallelGemm, Table2Row};
 use crate::gemm::{tuner, GemmConfig, Precision, MR, NR};
+use crate::plan::GemmPlan;
 use crate::sim::{AieTileModel, Gmio, KernelMode};
 use crate::util::tabulate::{Align, Table};
 
@@ -291,6 +292,39 @@ pub fn cluster_table(rows: &[ClusterScalingRow]) -> Table {
     t
 }
 
+/// Render a lowered plan's per-level footprint/residency accounting as
+/// a table: Table 1's rows (memory, cache analogue, operands) extended
+/// with the plan's peak residency, the level's budget (capacity minus
+/// any reserved slice) and the resulting utilisation — the §3/Table-1
+/// "flexible exploitation of the memory hierarchy", as numbers for one
+/// concrete plan.
+pub fn footprint_table(plan: &GemmPlan) -> Table {
+    let mut t = Table::new(&[
+        "Memory",
+        "Cache",
+        "Operands",
+        "Peak resident",
+        "Budget",
+        "Capacity",
+        "Util %",
+    ])
+    .align(0, Align::Left)
+    .align(1, Align::Left)
+    .align(2, Align::Left);
+    for fp in plan.footprints() {
+        t.row(&[
+            fp.level.name().to_string(),
+            fp.level.cache_analogue().to_string(),
+            fp.level.operands().to_string(),
+            human_bytes(fp.peak_bytes),
+            human_bytes(fp.budget_bytes()),
+            human_bytes(fp.capacity_bytes),
+            format!("{:.1}", fp.utilisation() * 100.0),
+        ]);
+    }
+    t
+}
+
 /// Render a continuous-batching runtime report as a summary table:
 /// request accounting, fused-batch shape, packed-cache behaviour, the
 /// stage cycle split and the pipelined-vs-sequential makespans.
@@ -496,6 +530,30 @@ mod tests {
         let lt = latency_table(&l).to_text();
         assert!(lt.contains("p99"), "{lt}");
         assert!(lt.contains("30"), "{lt}");
+    }
+
+    #[test]
+    fn footprint_table_covers_all_levels() {
+        let arch = vc1902();
+        let plan = GemmPlan::lower(
+            &arch,
+            &GemmConfig::paper_table2(8),
+            256,
+            256,
+            2048,
+            Precision::U8,
+            false,
+        )
+        .unwrap();
+        let t = footprint_table(&plan);
+        assert_eq!(t.n_rows(), 5, "one row per memory level");
+        let txt = t.to_text();
+        // Table-1 residency of the paper problem: 512 KB Ac and Bc,
+        // 16 KB Br, next to their level names.
+        assert!(txt.contains("FPGA Ultra RAM"), "{txt}");
+        assert!(txt.contains("512 KB"), "{txt}");
+        assert!(txt.contains("16 KB"), "{txt}");
+        assert!(txt.contains("Bc"), "{txt}");
     }
 
     #[test]
