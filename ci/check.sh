@@ -52,10 +52,20 @@ done
 echo "==> bench_mixed_precision --quick (smoke)"
 VERSAL_BENCH_FAST=1 cargo bench --bench bench_mixed_precision -- --quick
 
-echo "==> bench_serving --quick (smoke: batched+cached beats sequential, hits bit-exact)"
+echo "==> bench_serving --quick (smoke: batched+cached beats sequential, hits bit-exact, plan cache lowers once)"
 VERSAL_BENCH_FAST=1 cargo bench --bench bench_serving -- --quick
 
-echo "==> bench_plan --quick (smoke: plan predicted == executed, emits BENCH_plan.json)"
+echo "==> bench_plan --quick (smoke: plan predicted == executed, streaming == materialized)"
 VERSAL_BENCH_FAST=1 cargo bench --bench bench_plan -- --quick
+
+echo "==> bench artifacts present (uploaded by the workflow for the BENCH trajectory)"
+# cargo runs bench binaries with the package dir (rust/) as cwd, so the
+# artifacts land in rust/bench_results — the same paths the workflow
+# uploads.
+for artifact in BENCH_plan.json BENCH_serving.json; do
+    test -s "rust/bench_results/${artifact}" \
+        || { echo "missing bench artifact rust/bench_results/${artifact}" >&2; exit 1; }
+    echo "    rust/bench_results/${artifact}: $(wc -c < "rust/bench_results/${artifact}") bytes"
+done
 
 echo "CI checks passed."

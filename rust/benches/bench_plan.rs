@@ -11,7 +11,16 @@
 //! 2. plan-effective MAC totals equal `BlockedGemm::total_macs`
 //!    (`m·n·k`) — the lowered extents partition the iteration space;
 //! 3. every per-level peak footprint fits its budget (the plan
-//!    validated it; the JSON records the utilisations).
+//!    validated it; the JSON records the utilisations);
+//! 4. the streaming `PlanSpec::cost_streaming` fold prices the same
+//!    schedule as the materialized plan, bit-for-bit — the tuner's
+//!    allocation-free path cannot drift from what executes.
+//!
+//! Each JSON case additionally records `lower_ns` (host wall-time of
+//! the materializing lowering) and `step_bytes` (the transient step
+//! vector's byte footprint — exactly what the streaming path avoids),
+//! so CI artifacts track the lowering cost the plan cache and the
+//! streaming fold exist to kill.
 //!
 //! ```bash
 //! cargo bench --bench bench_plan            # full (incl. Table-2 shape)
@@ -23,7 +32,7 @@ use versal_gemm::gemm::precision::Bf16;
 use versal_gemm::gemm::{
     BlockedGemm, Ccp, Element, GemmConfig, Mat, ParallelGemm, Precision,
 };
-use versal_gemm::plan::GemmPlan;
+use versal_gemm::plan::{GemmPlan, PlanSpec};
 use versal_gemm::util::Pcg32;
 
 struct Case {
@@ -36,6 +45,8 @@ struct Case {
     predicted: u64,
     executed: u64,
     macs: u64,
+    lower_ns: u64,
+    step_bytes: u64,
     footprints: String,
 }
 
@@ -51,9 +62,21 @@ fn run_case<T: Element>(
     let prec = T::PRECISION;
     let mut cfg = GemmConfig::paper_table2(tiles);
     cfg.ccp = ccp;
+    let t0 = std::time::Instant::now();
     let plan = GemmPlan::lower(arch, &cfg, m, n, k, prec, false)
         .expect("bench case must lower (feasible by construction)");
+    let lower_ns = t0.elapsed().as_nanos() as u64;
+    let step_bytes = plan.step_bytes();
     let predicted = plan.cost(arch);
+
+    // --- gate 4: the streaming fold prices the identical schedule -----
+    let spec = PlanSpec::new(arch, &cfg, m, n, k, prec, false)
+        .expect("spec validates whenever lowering succeeds");
+    assert_eq!(
+        spec.cost_streaming(arch),
+        predicted,
+        "GATE: streaming cost must equal materialized cost for ({m}, {n}, {k}) {prec}"
+    );
 
     let mut rng = Pcg32::new(seed);
     let a = Mat::<T>::random(m, k, &mut rng);
@@ -105,6 +128,8 @@ fn run_case<T: Element>(
         predicted: predicted.total,
         executed: executed.total,
         macs: plan.total_macs(),
+        lower_ns,
+        step_bytes,
         footprints,
     }
 }
@@ -140,17 +165,19 @@ fn main() {
     }
 
     println!(
-        "{:<28} {:>6} {:>14} {:>14} {:>12}",
-        "case", "tiles", "predicted", "executed", "MACs/cycle"
+        "{:<28} {:>6} {:>14} {:>14} {:>12} {:>12} {:>12}",
+        "case", "tiles", "predicted", "executed", "MACs/cycle", "lower µs", "step bytes"
     );
     for c in &cases {
         println!(
-            "{:<28} {:>6} {:>14} {:>14} {:>12.1}",
+            "{:<28} {:>6} {:>14} {:>14} {:>12.1} {:>12.1} {:>12}",
             format!("({}, {}, {}) {}", c.m, c.n, c.k, c.precision),
             c.tiles,
             c.predicted,
             c.executed,
-            c.macs as f64 / c.executed as f64
+            c.macs as f64 / c.executed as f64,
+            c.lower_ns as f64 / 1e3,
+            c.step_bytes,
         );
     }
 
@@ -161,7 +188,7 @@ fn main() {
             format!(
                 "{{\"m\":{},\"n\":{},\"k\":{},\"precision\":\"{}\",\"mc\":{},\"nc\":{},\"kc\":{},\
                  \"tiles\":{},\"predicted_cycles\":{},\"executed_cycles\":{},\"macs\":{},\
-                 \"macs_per_cycle\":{:.4},\"footprints\":[{}]}}",
+                 \"macs_per_cycle\":{:.4},\"lower_ns\":{},\"step_bytes\":{},\"footprints\":[{}]}}",
                 c.m,
                 c.n,
                 c.k,
@@ -174,6 +201,8 @@ fn main() {
                 c.executed,
                 c.macs,
                 c.macs as f64 / c.executed as f64,
+                c.lower_ns,
+                c.step_bytes,
                 c.footprints
             )
         })
@@ -189,5 +218,8 @@ fn main() {
     let path = dir.join("BENCH_plan.json");
     std::fs::write(&path, &json).expect("write BENCH_plan.json");
     println!("\nwrote {}", path.display());
-    println!("all plan gates passed (predicted == executed on every case).");
+    println!(
+        "all plan gates passed (predicted == executed and streaming == materialized \
+         on every case)."
+    );
 }

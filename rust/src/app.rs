@@ -32,13 +32,17 @@ COMMANDS:
                                driven search; extension of §4.3)
   plan     --m M --n N --k K [--precision u8|i8|i16|bf16] [--tiles T]
            [--mc MC --nc NC --kc KC] [--count-packing] [--prepacked]
+           [--cost-only]
                                lower the problem to the unified execution
                                plan: the explicit L1/L2/L3 loop nest with
                                edge-trimmed extents, the packing steps and
                                their memory-level destinations, the per-
                                level footprint/residency table (validated
                                against Table 1's capacities), and the
-                               predicted schedule the drivers will execute
+                               predicted schedule the drivers will execute.
+                               --cost-only prices the shape through the
+                               streaming path (no step vector is ever
+                               materialized — O(1) memory per shape)
   energy   [--tiles T]         energy estimate of the paper problem
                                (extension; pJ model over the breakdown)
   noc      [--tiles T]         NoC placement + multicast/fan-out costs
@@ -57,16 +61,18 @@ COMMANDS:
                                of simulated devices (extension)
   serve    --requests R [--rate Q] [--batch B] [--tiles T] [--seed S]
            [--mix u8:8,i16:3,bf16:1] [--slo-ms M] [--cache-mb MB]
-           [--devices D] [--arrivals poisson|uniform|bursty]
+           [--plan-cache-mb MB] [--devices D]
+           [--arrivals poisson|uniform|bursty]
            [--engine runtime|threads] [--workers W]
                                replay a synthetic mixed-precision request
                                trace through the continuous-batching
                                runtime (admission SLOs, fused same-
                                precision batches, weight-stationary packed
-                               cache, pipelined pack/transfer/compute);
-                               report latency percentiles + cache hit
-                               rates. --engine threads runs the wall-clock
-                               threaded coordinator instead
+                               cache, lowered-plan cache, pipelined
+                               pack/transfer/compute); report latency
+                               percentiles + cache hit rates. --engine
+                               threads runs the wall-clock threaded
+                               coordinator instead
   help                         show this text
 
 GLOBAL OPTIONS:
@@ -119,10 +125,12 @@ fn run(argv: Vec<String>) -> Result<(), String> {
         .opt("mix")
         .opt("slo-ms")
         .opt("cache-mb")
+        .opt("plan-cache-mb")
         .opt("engine")
         .opt("precision")
         .flag("count-packing")
         .flag("prepacked")
+        .flag("cost-only")
         .parse(&argv)?;
     let cmd = args.positional().first().map(|s| s.as_str()).unwrap_or("help");
     let arch = load_arch(&args)?;
@@ -245,9 +253,10 @@ fn cmd_tune(arch: &VersalArch, args: &Args) -> Result<(), String> {
     // The problem must admit at least one lowerable plan (the DDR
     // residency check is shape-dependent, CCP-independent): surface an
     // error instead of letting the search panic on an empty lattice.
+    // PlanSpec validates in O(1) — no steps are generated for the probe.
     let mut probe = GemmConfig::paper_table2(tiles);
     probe.ccp = Ccp::derive_aligned(arch, 1);
-    crate::plan::GemmPlan::lower(arch, &probe, m, n, k, crate::gemm::Precision::U8, false)
+    crate::plan::PlanSpec::new(arch, &probe, m, n, k, crate::gemm::Precision::U8, false)
         .map_err(|e| format!("({m}, {n}, {k}) does not fit the device: {e}"))?;
     let t0 = Instant::now();
     let tuned = crate::gemm::tuner::tune(arch, m, n, k, tiles);
@@ -267,7 +276,7 @@ fn cmd_tune(arch: &VersalArch, args: &Args) -> Result<(), String> {
 
 fn cmd_plan(arch: &VersalArch, args: &Args) -> Result<(), String> {
     use crate::gemm::Precision;
-    use crate::plan::{Buffer, GemmPlan, PlanStep};
+    use crate::plan::{Buffer, PlanSpec, PlanStep};
 
     let m: usize = args.get_num("m", 256)?;
     let n: usize = args.get_num("n", 256)?;
@@ -294,75 +303,134 @@ fn cmd_plan(arch: &VersalArch, args: &Args) -> Result<(), String> {
         kc: args.get_num("kc", cfg.ccp.kc)?,
     };
     cfg.count_packing = args.has("count-packing");
+    let cost_only = args.has("cost-only");
 
-    let plan = GemmPlan::lower(arch, &cfg, m, n, k, prec, args.has("prepacked"))
+    let spec = PlanSpec::new(arch, &cfg, m, n, k, prec, args.has("prepacked"))
         .map_err(|e| e.to_string())?;
 
     println!(
-        "execution plan: ({m}, {n}, {k}) {prec} on {tiles} AIE tiles, {}{}",
+        "execution plan{}: ({m}, {n}, {k}) {prec} on {tiles} AIE tiles, {}{}",
+        if cost_only { " (cost-only, streaming — no step vector)" } else { "" },
         cfg.ccp,
-        if plan.prepacked_b { ", B prepacked (weight-stationary)" } else { "" }
+        if spec.prepacked_b { ", B prepacked (weight-stationary)" } else { "" }
     );
     println!("\nlowered loop nest (GotoBLAS L1/L2/L3 with edge-trimmed extents):");
-    // Edge extents come from the lowered steps themselves — the plan is
-    // the loop nest; the CLI must not re-derive it.
-    let (mut edge_m, mut edge_n, mut edge_k) =
-        (cfg.ccp.mc.min(m), cfg.ccp.nc.min(n), cfg.ccp.kc.min(k));
-    for s in plan.steps() {
-        if let PlanStep::Compute(c) = s {
-            if c.ic + c.mc_eff == m {
-                edge_m = c.mc_eff;
-            }
-            if c.jc + c.nc_eff == n {
-                edge_n = c.nc_eff;
-            }
-            if c.pc + c.kc_eff == k {
-                edge_k = c.kc_eff;
-            }
+    // Edge extents of the last block of each loop: `dim % stride`, or a
+    // full stride when it divides (what the step stream's final blocks
+    // carry; the --cost-only debug block below asserts this against the
+    // materialized plan's actual compute steps).
+    let edge = |dim: usize, stride: usize| -> usize {
+        if dim % stride == 0 {
+            stride.min(dim)
+        } else {
+            dim % stride
         }
-    }
+    };
+    let (edge_m, edge_n, edge_k) =
+        (edge(m, cfg.ccp.mc), edge(n, cfg.ccp.nc), edge(k, cfg.ccp.kc));
     println!(
         "  L1 jc: {:>4} block(s) x nc = {:<5} (edge block {edge_n})",
-        plan.jc_blocks(),
+        spec.jc_blocks(),
         cfg.ccp.nc,
     );
     println!(
         "  L2 pc: {:>4} block(s) x kc = {:<5} (edge block {edge_k}) -> pack Bc into Block RAM",
-        plan.pc_blocks(),
+        spec.pc_blocks(),
         cfg.ccp.kc,
     );
     println!(
         "  L3 ic: {:>4} block(s) x mc = {:<5} (edge block {edge_m}) -> pack Ac into Ultra RAM",
-        plan.ic_blocks(),
+        spec.ic_blocks(),
         cfg.ccp.mc,
     );
-    let (mut packs_a, mut packs_b, mut releases) = (0usize, 0usize, 0usize);
-    for s in plan.steps() {
-        match s {
-            PlanStep::Pack(p) if p.buffer == Buffer::Ac => packs_a += 1,
-            PlanStep::Pack(_) => packs_b += 1,
-            PlanStep::Release(_) => releases += 1,
-            PlanStep::Compute(_) => {}
+
+    let cost = if cost_only {
+        // The streaming path: cost the step stream as it is generated —
+        // no step vector for however many blocks the nest has. The
+        // step-count line comes from the closed forms.
+        println!(
+            "  steps: {} total — {} Bc pack(s), {} Ac pack(s), {} compute block(s), \
+             {} release(s)   [streamed, not materialized]",
+            spec.n_steps(),
+            spec.jc_blocks() * spec.pc_blocks(),
+            spec.n_compute_steps(),
+            spec.n_compute_steps(),
+            spec.n_compute_steps() + spec.jc_blocks() * spec.pc_blocks(),
+        );
+        let cost = spec.cost_streaming(arch);
+        if cfg!(debug_assertions) {
+            // Debug builds verify the streaming fold against the
+            // materialized plan — the two must agree to the cycle.
+            let plan = crate::plan::GemmPlan::lower(
+                arch,
+                &cfg,
+                m,
+                n,
+                k,
+                prec,
+                args.has("prepacked"),
+            )
+            .expect("spec validated, lowering cannot fail");
+            debug_assert_eq!(
+                plan.cost(arch),
+                cost,
+                "streaming and materialized costs must agree"
+            );
+            debug_assert_eq!(plan.steps().len(), spec.n_steps());
+            // The closed-form edge extents printed above must be the
+            // extents the lowered steps actually carry (all dims are
+            // positive here, so every loop's last block computes).
+            let (mut pm, mut pn, mut pk) = (0usize, 0usize, 0usize);
+            for s in plan.steps() {
+                if let PlanStep::Compute(c) = s {
+                    if c.ic + c.mc_eff == m {
+                        pm = c.mc_eff;
+                    }
+                    if c.jc + c.nc_eff == n {
+                        pn = c.nc_eff;
+                    }
+                    if c.pc + c.kc_eff == k {
+                        pk = c.kc_eff;
+                    }
+                }
+            }
+            debug_assert_eq!(
+                (pm, pn, pk),
+                (edge_m, edge_n, edge_k),
+                "closed-form edge extents drifted from the lowered steps"
+            );
         }
-    }
-    println!(
-        "  steps: {} total — {} Bc pack(s) ({}), {} Ac pack(s) ({}), {} compute block(s) \
-         ({} micro-kernels), {} release(s)",
-        plan.steps().len(),
-        packs_b,
-        crate::arch::human_bytes(plan.pack_bytes(Buffer::Bc)),
-        packs_a,
-        crate::arch::human_bytes(plan.pack_bytes(Buffer::Ac)),
-        plan.n_compute_steps(),
-        plan.micro_kernels(),
-        releases,
-    );
+        cost
+    } else {
+        let plan = spec.clone().materialize();
+        let (mut packs_a, mut packs_b, mut releases) = (0usize, 0usize, 0usize);
+        for s in plan.steps() {
+            match s {
+                PlanStep::Pack(p) if p.buffer == Buffer::Ac => packs_a += 1,
+                PlanStep::Pack(_) => packs_b += 1,
+                PlanStep::Release(_) => releases += 1,
+                PlanStep::Compute(_) => {}
+            }
+        }
+        println!(
+            "  steps: {} total — {} Bc pack(s) ({}), {} Ac pack(s) ({}), {} compute block(s) \
+             ({} micro-kernels), {} release(s)",
+            plan.steps().len(),
+            packs_b,
+            crate::arch::human_bytes(plan.pack_bytes(Buffer::Bc)),
+            packs_a,
+            crate::arch::human_bytes(plan.pack_bytes(Buffer::Ac)),
+            plan.n_compute_steps(),
+            plan.micro_kernels(),
+            releases,
+        );
+        plan.cost(arch)
+    };
 
     println!("\nper-level footprint / residency (validated at plan time):");
-    println!("{}", crate::report::footprint_table(&plan).to_text());
+    println!("{}", crate::report::footprint_table(spec.footprints()).to_text());
 
-    let cost = plan.cost(arch);
-    let macs = plan.total_macs();
+    let macs = spec.total_macs();
     println!("predicted schedule (the drivers execute this same plan):");
     println!(
         "  total {} cycles ({})  —  {:.1} MACs/cycle aggregate, {:.1} per tile",
@@ -593,6 +661,7 @@ fn cmd_serve_runtime(arch: &VersalArch, args: &Args) -> Result<(), String> {
     let seed: u64 = args.get_num("seed", 7)?;
     let slo_ms: f64 = args.get_num("slo-ms", 50.0)?;
     let cache_mb: f64 = args.get_num("cache-mb", 64.0)?;
+    let plan_cache_mb: f64 = args.get_num("plan-cache-mb", 8.0)?;
     let devices: usize = args.get_num("devices", 2)?;
     let mix = match args.get("mix") {
         Some(s) => PrecisionMix::parse(s)?,
@@ -610,6 +679,9 @@ fn cmd_serve_runtime(arch: &VersalArch, args: &Args) -> Result<(), String> {
     if cache_mb.is_nan() || cache_mb < 0.0 {
         return Err("--cache-mb must be non-negative".into());
     }
+    if plan_cache_mb.is_nan() || plan_cache_mb < 0.0 {
+        return Err("--plan-cache-mb must be non-negative (0 re-lowers per batch)".into());
+    }
     if args.get("workers").is_some() {
         eprintln!("note: --workers applies to --engine threads; the runtime engine ignores it");
     }
@@ -622,7 +694,7 @@ fn cmd_serve_runtime(arch: &VersalArch, args: &Args) -> Result<(), String> {
     );
     println!(
         "  {requests} requests @ {rate}/s ({}), max batch {batch}, SLO {slo_ms} ms, \
-         cache {cache_mb} MiB, {devices} pipeline devices",
+         cache {cache_mb} MiB, plan cache {plan_cache_mb} MiB, {devices} pipeline devices",
         args.get_or("arrivals", "poisson")
     );
     let backend = RustGemmBackend::new(arch.clone(), spec.clone(), seed, tiles);
@@ -634,6 +706,7 @@ fn cmd_serve_runtime(arch: &VersalArch, args: &Args) -> Result<(), String> {
             queue_cap: 8_192,
             default_slo_us: (slo_ms * 1_000.0) as u64,
             cache_budget_bytes: (cache_mb * (1u64 << 20) as f64) as u64,
+            plan_cache_budget_bytes: (plan_cache_mb * (1u64 << 20) as f64) as u64,
             pipeline_devices: devices,
         },
     );
@@ -674,7 +747,7 @@ fn cmd_serve_threads(arch: &VersalArch, args: &Args) -> Result<(), String> {
     let workers: usize = args.get_num("workers", 2)?;
     let tiles: usize = args.get_num("tiles", 8)?;
     let seed: u64 = args.get_num("seed", 7)?;
-    for flag in ["mix", "slo-ms", "cache-mb", "devices"] {
+    for flag in ["mix", "slo-ms", "cache-mb", "plan-cache-mb", "devices"] {
         if args.get(flag).is_some() {
             eprintln!(
                 "note: --{flag} applies to --engine runtime; the threads engine ignores it"
@@ -791,6 +864,21 @@ mod tests {
         );
         assert_eq!(cli_main(argv(&["plan", "--precision", "i16"])), 0);
         assert_eq!(cli_main(argv(&["plan", "--prepacked", "--count-packing"])), 0);
+        // Streaming pricing: same validation surface, no step vector
+        // (debug builds also assert streaming == materialized cost).
+        assert_eq!(cli_main(argv(&["plan", "--cost-only"])), 0);
+        assert_eq!(
+            cli_main(argv(&[
+                "plan", "--cost-only", "--m", "100", "--n", "37", "--k", "513", "--tiles",
+                "4", "--precision", "bf16",
+            ])),
+            0
+        );
+        assert_eq!(
+            cli_main(argv(&["plan", "--cost-only", "--prepacked", "--count-packing"])),
+            0
+        );
+        assert_eq!(cli_main(argv(&["plan", "--cost-only", "--kc", "8192"])), 2);
         // Validation consistent with the other subcommands: bad
         // precision, zero dims, tile overcommit and an infeasible CCP
         // are errors, not panics.
@@ -855,6 +943,23 @@ mod tests {
         assert_eq!(cli_main(argv(&["serve", "--requests", "2", "--batch", "0"])), 2);
         assert_eq!(cli_main(argv(&["serve", "--requests", "2", "--slo-ms", "0"])), 2);
         assert_eq!(cli_main(argv(&["serve", "--requests", "2", "--cache-mb", "-1"])), 2);
+        assert_eq!(
+            cli_main(argv(&["serve", "--requests", "2", "--plan-cache-mb", "-1"])),
+            2
+        );
+    }
+
+    #[test]
+    fn serve_plan_cache_off_still_serves() {
+        // --plan-cache-mb 0 is the re-lower-per-batch baseline, not an
+        // error: every request must still be answered.
+        assert_eq!(
+            cli_main(argv(&[
+                "serve", "--requests", "4", "--batch", "2", "--tiles", "2", "--rate",
+                "100000", "--plan-cache-mb", "0", "--slo-ms", "200",
+            ])),
+            0
+        );
     }
 
     #[test]

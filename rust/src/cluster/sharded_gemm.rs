@@ -42,7 +42,7 @@ use super::placement::GridPlacement;
 use super::{Cluster, ClusterError, DeviceId};
 use crate::gemm::precision::{Element, Precision};
 use crate::gemm::{Ccp, GemmConfig, Mat, MatI32, MatU8, ParallelGemm};
-use crate::plan::GemmPlan;
+use crate::plan::PlanSpec;
 use crate::sim::CycleBreakdown;
 
 /// Configuration of a sharded GEMM run.
@@ -543,11 +543,13 @@ fn local_cfg(cfg: &ClusterGemmConfig, tiles: usize) -> GemmConfig {
     }
 }
 
-/// Cycle accounting of one device's `(m, n, k)` shard: lower the same
-/// [`GemmPlan`] the device's [`ParallelGemm::run_p`] would execute and
-/// price it with [`GemmPlan::cost`] — schedule/run parity is structural,
-/// not re-implemented (`ClusterGemm::schedule` must equal
-/// `ClusterGemm::run`'s cycles; a test pins that equality).
+/// Cycle accounting of one device's `(m, n, k)` shard: validate the
+/// same [`PlanSpec`] the device's [`ParallelGemm::run_p`] would execute
+/// and price it with the streaming [`PlanSpec::cost_streaming`] fold —
+/// schedule/run parity is structural, not re-implemented
+/// (`ClusterGemm::schedule` must equal `ClusterGemm::run`'s cycles; a
+/// test pins that equality), and a cluster-wide capacity sweep never
+/// materializes per-shard step vectors.
 fn shard_schedule(
     arch: &crate::arch::VersalArch,
     cfg: &GemmConfig,
@@ -556,9 +558,9 @@ fn shard_schedule(
     k: usize,
     prec: Precision,
 ) -> Result<CycleBreakdown, ClusterError> {
-    let plan = GemmPlan::lower(arch, cfg, m, n, k, prec, false)
+    let spec = PlanSpec::new(arch, cfg, m, n, k, prec, false)
         .map_err(|e| ClusterError::LocalGemm(e.to_string()))?;
-    Ok(plan.cost(arch))
+    Ok(spec.cost_streaming(arch))
 }
 
 #[cfg(test)]

@@ -1,5 +1,10 @@
-//! Weight-stationary packed-operand cache: resident [`PackedWeights`]
-//! keyed by (layer, precision), LRU-evicted under an L4/DDR byte budget.
+//! Serving-side residency caches: the weight-stationary packed-operand
+//! cache ([`PackedBCache`], resident [`PackedWeights`] keyed by
+//! (layer, precision)) and its sibling the lowered-plan cache
+//! ([`PlanCache`], resident [`GemmPlan`]s keyed by
+//! (layer, precision, rows, prepacked)), both LRU-evicted under byte
+//! budgets and bundled as [`ServingCaches`] for the fused-batch
+//! backends.
 //!
 //! On the real platform the packed Bc blocks live in FPGA Block RAM and
 //! spill to DDR; keeping a layer's packed weights resident across
@@ -13,9 +18,13 @@
 //! caller to use transiently) rather than wiping the cache for a single
 //! request.
 
+use super::metrics::PlanCacheStats;
 use crate::dl::PackedWeights;
 use crate::gemm::Precision;
+use crate::plan::{GemmPlan, PlanError};
 use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Instant;
 
 /// Cache key: which layer's weights, packed for which precision.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -174,6 +183,215 @@ impl PackedBCache {
     }
 }
 
+/// Cache key of a lowered serving plan: the GEMM a fused batch of
+/// `rows` activation rows induces against one layer's weights at one
+/// precision. `prepacked` distinguishes dense plans (charged Bc packs)
+/// from weight-stationary ones (Bc steps are fetches) — the two have
+/// different pack accounting, so they must never share an entry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct PlanKey {
+    /// Layer index within the served model.
+    pub layer: usize,
+    /// Precision the plan was lowered for.
+    pub precision: Precision,
+    /// Fused activation rows (the GEMM's m).
+    pub rows: usize,
+    /// Whether the plan treats B as prepacked (weight-stationary).
+    pub prepacked: bool,
+}
+
+/// A resident lowered plan plus the per-buffer pack-byte sums the
+/// serving charge path needs every batch. The sums are precomputed at
+/// insert so a warm batch charges in O(1) instead of re-scanning the
+/// plan's step vector per batch — the exact work class the cache exists
+/// to remove.
+#[derive(Clone)]
+pub struct CachedPlan {
+    /// The resident lowered plan (shared handle).
+    pub plan: Arc<GemmPlan>,
+    /// `Σ` Ac pack bytes of the plan — the always-paid activation
+    /// charge ([`crate::plan::GemmPlan::pack_bytes`] of `Ac`).
+    pub ac_pack_bytes: u64,
+    /// `Σ` Bc pack bytes of the plan — the weight charge paid on a
+    /// packed-operand cache miss.
+    pub bc_pack_bytes: u64,
+}
+
+impl CachedPlan {
+    fn new(plan: Arc<GemmPlan>) -> CachedPlan {
+        let ac_pack_bytes = plan.pack_bytes(crate::plan::Buffer::Ac);
+        let bc_pack_bytes = plan.pack_bytes(crate::plan::Buffer::Bc);
+        CachedPlan { plan, ac_pack_bytes, bc_pack_bytes }
+    }
+}
+
+struct PlanEntry {
+    cached: CachedPlan,
+    bytes: u64,
+    last_used: u64,
+}
+
+/// LRU cache of lowered [`GemmPlan`]s — the sibling of [`PackedBCache`]
+/// on the serving hot path. Serving traffic repeats a handful of
+/// (layer, precision, rows) shapes, so the per-batch plan lowering
+/// `charge_layer_pack` used to pay on *every* fused batch collapses to
+/// one lowering per distinct shape; entries are charged their
+/// [`GemmPlan::step_bytes`] footprint and evicted least-recently-used
+/// under the byte budget. A zero budget caches nothing (every lookup
+/// lowers — the re-lower-per-batch baseline `bench_serving` measures
+/// against); an entry bigger than the whole budget is returned uncached
+/// rather than wiping the cache.
+pub struct PlanCache {
+    budget: u64,
+    seq: u64,
+    bytes: u64,
+    entries: HashMap<PlanKey, PlanEntry>,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+    uncacheable: u64,
+    lowered: u64,
+    lower_ns: u64,
+}
+
+impl PlanCache {
+    /// An empty cache with the given residency budget in bytes.
+    pub fn new(budget_bytes: u64) -> PlanCache {
+        PlanCache {
+            budget: budget_bytes,
+            seq: 0,
+            bytes: 0,
+            entries: HashMap::new(),
+            hits: 0,
+            misses: 0,
+            evictions: 0,
+            uncacheable: 0,
+            lowered: 0,
+            lower_ns: 0,
+        }
+    }
+
+    /// Resident entries.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Whether nothing is resident.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// The configured residency budget in bytes.
+    pub fn budget_bytes(&self) -> u64 {
+        self.budget
+    }
+
+    /// Record a lookup: the resident plan (and a recency bump) if the
+    /// key is cached, `None` (and a miss count) otherwise.
+    pub fn get(&mut self, key: &PlanKey) -> Option<CachedPlan> {
+        self.seq += 1;
+        match self.entries.get_mut(key) {
+            Some(e) => {
+                e.last_used = self.seq;
+                self.hits += 1;
+                Some(e.cached.clone())
+            }
+            None => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Insert a freshly lowered plan, evicting least-recently-used
+    /// entries until it fits the budget, and hand back a shared handle
+    /// with the pack-byte sums precomputed. A plan bigger than the
+    /// whole budget is returned uncached (and counted) — one oversize
+    /// shape must not wipe the cache.
+    pub fn insert(&mut self, key: PlanKey, plan: GemmPlan) -> CachedPlan {
+        let bytes = plan.step_bytes();
+        let cached = CachedPlan::new(Arc::new(plan));
+        if bytes > self.budget {
+            self.uncacheable += 1;
+            return cached;
+        }
+        // Replace any stale entry under the same key first.
+        if let Some(old) = self.entries.remove(&key) {
+            self.bytes -= old.bytes;
+        }
+        while self.bytes + bytes > self.budget {
+            let lru = self
+                .entries
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| *k)
+                .expect("bytes > 0 implies a resident entry");
+            let evicted = self.entries.remove(&lru).expect("lru key resident");
+            self.bytes -= evicted.bytes;
+            self.evictions += 1;
+        }
+        self.seq += 1;
+        self.entries
+            .insert(key, PlanEntry { cached: cached.clone(), bytes, last_used: self.seq });
+        self.bytes += bytes;
+        cached
+    }
+
+    /// The serving hot path: return the resident plan for `key`, or
+    /// lower it once (timed, counted) and cache it. Lowering errors
+    /// propagate — an unlowerable serving shape is the caller's error,
+    /// not a cache state.
+    pub fn get_or_lower(
+        &mut self,
+        key: PlanKey,
+        lower: impl FnOnce() -> Result<GemmPlan, PlanError>,
+    ) -> Result<CachedPlan, PlanError> {
+        if let Some(cached) = self.get(&key) {
+            return Ok(cached);
+        }
+        let t0 = Instant::now();
+        let plan = lower()?;
+        self.lowered += 1;
+        self.lower_ns += t0.elapsed().as_nanos() as u64;
+        Ok(self.insert(key, plan))
+    }
+
+    /// Snapshot of the counters.
+    pub fn stats(&self) -> PlanCacheStats {
+        PlanCacheStats {
+            hits: self.hits,
+            misses: self.misses,
+            evictions: self.evictions,
+            uncacheable: self.uncacheable,
+            bytes: self.bytes,
+            budget_bytes: self.budget,
+            lowered: self.lowered,
+            lower_ns: self.lower_ns,
+        }
+    }
+}
+
+/// The residency caches a fused-batch backend serves against: packed
+/// weights ([`PackedBCache`]) and lowered plans ([`PlanCache`]). Bundled
+/// so [`super::BatchedBackend::serve_fused`] threads one handle through
+/// the stack.
+pub struct ServingCaches {
+    /// Weight-stationary packed-operand cache.
+    pub packed: PackedBCache,
+    /// Lowered-plan cache.
+    pub plans: PlanCache,
+}
+
+impl ServingCaches {
+    /// Fresh caches with the given byte budgets.
+    pub fn new(packed_budget_bytes: u64, plan_budget_bytes: u64) -> ServingCaches {
+        ServingCaches {
+            packed: PackedBCache::new(packed_budget_bytes),
+            plans: PlanCache::new(plan_budget_bytes),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -252,5 +470,99 @@ mod tests {
         c.insert(key(0), packed(16, 8, 2)).unwrap();
         assert_eq!(c.stats().bytes, b1, "replacement, not accumulation");
         assert_eq!(c.len(), 1);
+    }
+
+    // ------------------------------------------------------ plan cache
+
+    use crate::gemm::{Ccp, Precision as P};
+    use crate::plan::GemmPlan;
+
+    fn lowered(rows: usize) -> GemmPlan {
+        let arch = vc1902();
+        let mut cfg = GemmConfig::paper_table2(2);
+        cfg.ccp = Ccp { mc: 16, nc: 16, kc: 16 };
+        GemmPlan::lower(&arch, &cfg, rows, 24, 24, P::U8, false).unwrap()
+    }
+
+    fn pkey(layer: usize, rows: usize) -> PlanKey {
+        PlanKey { layer, precision: P::U8, rows, prepacked: false }
+    }
+
+    #[test]
+    fn plan_cache_hit_after_lower_miss_before() {
+        let mut c = PlanCache::new(1 << 20);
+        assert!(c.get(&pkey(0, 4)).is_none(), "cold lookup misses");
+        let p1 = c.get_or_lower(pkey(0, 4), || Ok(lowered(4))).unwrap();
+        let p2 = c.get_or_lower(pkey(0, 4), || panic!("resident key must not re-lower")).unwrap();
+        assert_eq!(p1.plan.steps(), p2.plan.steps(), "same resident plan");
+        // The pack-byte sums are precomputed and match the plan's own.
+        use crate::plan::Buffer;
+        assert_eq!(p1.ac_pack_bytes, p1.plan.pack_bytes(Buffer::Ac));
+        assert_eq!(p1.bc_pack_bytes, p1.plan.pack_bytes(Buffer::Bc));
+        assert!(p1.ac_pack_bytes > 0 && p1.bc_pack_bytes > 0);
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses), (1, 2), "get + two get_or_lower lookups");
+        assert_eq!(s.lowered, 1, "exactly one lowering for two serves");
+        assert!(s.bytes > 0 && s.bytes <= s.budget_bytes);
+        assert!((s.hit_rate() - 1.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn plan_cache_lru_eviction_under_byte_budget() {
+        let per = lowered(4).step_bytes();
+        let mut c = PlanCache::new(2 * per);
+        c.get_or_lower(pkey(0, 4), || Ok(lowered(4))).unwrap();
+        c.get_or_lower(pkey(1, 4), || Ok(lowered(4))).unwrap();
+        assert!(c.get(&pkey(0, 4)).is_some(), "bump 0 so 1 is LRU");
+        c.get_or_lower(pkey(2, 4), || Ok(lowered(4))).unwrap();
+        assert_eq!(c.len(), 2);
+        assert!(c.get(&pkey(0, 4)).is_some(), "recently used survives");
+        assert!(c.get(&pkey(1, 4)).is_none(), "LRU evicted");
+        assert_eq!(c.stats().evictions, 1);
+        assert!(c.stats().bytes <= c.budget_bytes());
+    }
+
+    #[test]
+    fn plan_cache_distinct_rows_and_prepacked_get_distinct_entries() {
+        let mut c = PlanCache::new(1 << 20);
+        c.get_or_lower(pkey(0, 4), || Ok(lowered(4))).unwrap();
+        c.get_or_lower(pkey(0, 8), || Ok(lowered(8))).unwrap();
+        let pre = PlanKey { layer: 0, precision: P::U8, rows: 4, prepacked: true };
+        c.get_or_lower(pre, || {
+            let arch = vc1902();
+            let mut cfg = GemmConfig::paper_table2(2);
+            cfg.ccp = Ccp { mc: 16, nc: 16, kc: 16 };
+            GemmPlan::lower(&arch, &cfg, 4, 24, 24, P::U8, true)
+        })
+        .unwrap();
+        assert_eq!(c.len(), 3, "rows and prepacked are part of the key");
+        assert_eq!(c.stats().lowered, 3);
+    }
+
+    #[test]
+    fn plan_cache_zero_budget_lowers_every_time() {
+        // The re-lower-per-batch baseline: nothing is ever resident.
+        let mut c = PlanCache::new(0);
+        c.get_or_lower(pkey(0, 4), || Ok(lowered(4))).unwrap();
+        c.get_or_lower(pkey(0, 4), || Ok(lowered(4))).unwrap();
+        assert!(c.is_empty());
+        let s = c.stats();
+        assert_eq!(s.hits, 0);
+        assert_eq!(s.lowered, 2, "every batch re-lowers under a zero budget");
+        assert_eq!(s.uncacheable, 2);
+    }
+
+    #[test]
+    fn plan_cache_lowering_error_propagates_and_caches_nothing() {
+        let mut c = PlanCache::new(1 << 20);
+        let err = c.get_or_lower(pkey(0, 4), || {
+            let arch = vc1902();
+            let mut cfg = GemmConfig::paper_table2(2);
+            cfg.ccp = Ccp { mc: 16, nc: 16, kc: 1 << 20 };
+            GemmPlan::lower(&arch, &cfg, 4, 24, 24, P::U8, false)
+        });
+        assert!(err.is_err(), "infeasible CCP surfaces, not cached");
+        assert!(c.is_empty());
+        assert_eq!(c.stats().lowered, 0, "failed lowerings are not counted as work");
     }
 }

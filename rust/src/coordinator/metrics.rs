@@ -41,6 +41,44 @@ impl LatencyStats {
     }
 }
 
+/// Counters of the lowered-plan LRU cache ([`super::cache::PlanCache`])
+/// — the serving-side view of how often a fused batch reused a resident
+/// [`crate::plan::GemmPlan`] instead of re-lowering it. Shape mirrors
+/// the packed-operand cache's [`super::cache::CacheStats`]; the extra
+/// `lowered`/`lower_ns` pair measures the host-side lowering work the
+/// cache exists to amortise (what `bench_serving` gates on).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PlanCacheStats {
+    /// Lookups that found a resident plan.
+    pub hits: u64,
+    /// Lookups that missed (cold or evicted).
+    pub misses: u64,
+    /// Entries evicted to make room under the budget.
+    pub evictions: u64,
+    /// Inserts refused because a single plan exceeded the whole budget.
+    pub uncacheable: u64,
+    /// Bytes of lowered steps currently resident.
+    pub bytes: u64,
+    /// The residency budget.
+    pub budget_bytes: u64,
+    /// Plans lowered from scratch (the cache's miss-path work).
+    pub lowered: u64,
+    /// Host nanoseconds spent lowering on the miss path.
+    pub lower_ns: u64,
+}
+
+impl PlanCacheStats {
+    /// Hit fraction of all lookups (0.0 when nothing was looked up).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
 /// Metrics sink. Not thread-safe by itself — the coordinator owns one per
 /// collector thread and merges on `snapshot`.
 #[derive(Debug, Default)]
@@ -135,6 +173,15 @@ mod tests {
     #[test]
     fn empty_metrics_has_no_stats() {
         assert!(Metrics::new().latency_stats().is_none());
+    }
+
+    #[test]
+    fn plan_cache_stats_hit_rate() {
+        let mut s = PlanCacheStats::default();
+        assert_eq!(s.hit_rate(), 0.0, "no lookups, no rate");
+        s.hits = 3;
+        s.misses = 1;
+        assert!((s.hit_rate() - 0.75).abs() < 1e-12);
     }
 
     #[test]

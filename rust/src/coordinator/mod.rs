@@ -17,8 +17,10 @@
 //! batch former that coalesces compatible same-precision requests into
 //! fused GEMMs ([`former`]), a weight-stationary packed-operand cache
 //! keyed by (layer, precision) with LRU eviction under an L4/DDR byte
-//! budget ([`cache`]), and a pipelined executor overlapping pack /
-//! transfer / compute across simulated devices ([`pipeline`]). Every
+//! budget plus its sibling lowered-plan cache keyed by
+//! (layer, precision, rows, prepacked) ([`cache`]), and a pipelined
+//! executor overlapping pack / transfer / compute across simulated
+//! devices ([`pipeline`]). Every
 //! batch carries a *simulated Versal cycle estimate* from the calibrated
 //! schedule model, so the service reports what the accelerator would
 //! have cost — deterministically enough for CI to assert on.
@@ -37,9 +39,9 @@ mod workload;
 
 pub use admission::{AdmissionQueue, AdmitError, ServeRequest};
 pub use batcher::{BatcherConfig, DynamicBatcher};
-pub use cache::{CacheKey, CacheStats, PackedBCache};
+pub use cache::{CacheKey, CacheStats, CachedPlan, PackedBCache, PlanCache, PlanKey, ServingCaches};
 pub use former::{BatchFormer, FormerConfig, FusedBatch};
-pub use metrics::{LatencyStats, Metrics};
+pub use metrics::{LatencyStats, Metrics, PlanCacheStats};
 pub use pipeline::{PipelinedExecutor, StageCost};
 pub use request::{InferenceRequest, InferenceResponse, RequestId};
 pub use server::{Coordinator, CoordinatorConfig, SubmitError};

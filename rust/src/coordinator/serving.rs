@@ -9,9 +9,11 @@
 //!                              BatchFormer (coalesce same-precision
 //!                                        │  rows into one fused GEMM)
 //!                                        ▼
-//!                    BatchedBackend::serve_fused ──► PackedBCache
-//!                                        │   (weight-stationary hits
-//!                                        ▼    skip pack_b entirely)
+//!                    BatchedBackend::serve_fused ──► ServingCaches
+//!                                        │   (PackedBCache: weight hits
+//!                                        │    skip pack_b entirely;
+//!                                        │    PlanCache: repeated shapes
+//!                                        ▼    skip re-lowering the plan)
 //!                        StageCost (pack/transfer/compute)
 //!                                        │
 //!                                        ▼
@@ -42,9 +44,9 @@
 //! ```
 
 use super::admission::{AdmissionQueue, AdmitError, ServeRequest};
-use super::cache::{CacheStats, PackedBCache};
+use super::cache::{CacheStats, PackedBCache, PlanCache, ServingCaches};
 use super::former::{BatchFormer, FormerConfig, FusedBatch};
-use super::metrics::LatencyStats;
+use super::metrics::{LatencyStats, PlanCacheStats};
 use super::pipeline::{PipelinedExecutor, StageCost};
 use super::request::RequestId;
 use super::worker::BatchedBackend;
@@ -65,6 +67,9 @@ pub struct ServingConfig {
     pub default_slo_us: u64,
     /// Byte budget of the weight-stationary packed-operand cache.
     pub cache_budget_bytes: u64,
+    /// Byte budget of the lowered-plan cache (0 re-lowers every batch —
+    /// the pre-cache baseline `bench_serving` measures against).
+    pub plan_cache_budget_bytes: u64,
     /// Simulated compute devices the pipelined executor overlaps across.
     pub pipeline_devices: usize,
 }
@@ -77,6 +82,7 @@ impl Default for ServingConfig {
             queue_cap: 4_096,
             default_slo_us: 50_000,
             cache_budget_bytes: 64 << 20,
+            plan_cache_budget_bytes: 8 << 20,
             pipeline_devices: 2,
         }
     }
@@ -123,6 +129,9 @@ pub struct ServingReport {
     pub mean_batch: f64,
     /// Packed-operand cache counters.
     pub cache: CacheStats,
+    /// Lowered-plan cache counters (how often a batch reused a resident
+    /// plan instead of re-lowering it).
+    pub plan_cache: PlanCacheStats,
     /// Total pack cycles across all batches.
     pub pack_cycles: u64,
     /// Total transfer cycles across all batches.
@@ -157,7 +166,7 @@ pub struct ServingRuntime<B: BatchedBackend> {
     n_classes: usize,
     queue: AdmissionQueue,
     former: BatchFormer,
-    cache: PackedBCache,
+    caches: ServingCaches,
     // One pipeline recurrence, two unit domains: `busy_us` is stepped in
     // logical µs anchored to batch ready times (per-request completion —
     // and therefore latency — includes occupancy, not just the batch's
@@ -192,7 +201,7 @@ impl<B: BatchedBackend> ServingRuntime<B> {
                 max_batch: cfg.max_batch,
                 max_wait_us: cfg.max_wait_us,
             }),
-            cache: PackedBCache::new(cfg.cache_budget_bytes),
+            caches: ServingCaches::new(cfg.cache_budget_bytes, cfg.plan_cache_budget_bytes),
             busy_us: PipelinedExecutor::new(cfg.pipeline_devices),
             busy_cycles: PipelinedExecutor::new(cfg.pipeline_devices),
             cfg,
@@ -287,7 +296,7 @@ impl<B: BatchedBackend> ServingRuntime<B> {
             rows,
             &batch.features,
             batch.precision,
-            &mut self.cache,
+            &mut self.caches,
         ) {
             Ok(r) => r,
             Err(_) => {
@@ -346,7 +355,12 @@ impl<B: BatchedBackend> ServingRuntime<B> {
 
     /// The packed-operand cache (its stats drive the report tables).
     pub fn cache(&self) -> &PackedBCache {
-        &self.cache
+        &self.caches.packed
+    }
+
+    /// The lowered-plan cache (its stats drive the report tables).
+    pub fn plan_cache(&self) -> &PlanCache {
+        &self.caches.plans
     }
 
     /// Aggregate view of everything served so far.
@@ -362,7 +376,8 @@ impl<B: BatchedBackend> ServingRuntime<B> {
             } else {
                 self.batch_rows as f64 / self.batches as f64
             },
-            cache: self.cache.stats(),
+            cache: self.caches.packed.stats(),
+            plan_cache: self.caches.plans.stats(),
             pack_cycles: self.pack_cycles,
             transfer_cycles: self.transfer_cycles,
             compute_cycles: self.compute_cycles,
@@ -404,7 +419,7 @@ mod tests {
             rows: usize,
             x: &[f32],
             precision: Precision,
-            _cache: &mut PackedBCache,
+            _caches: &mut ServingCaches,
         ) -> anyhow::Result<(Vec<f32>, StageCost)> {
             anyhow::ensure!(precision == Precision::U8, "u8 only");
             let (logits, cycles) = self.0.infer_batch(rows, x)?;

@@ -1,23 +1,30 @@
 //! Worker backends: where a batch's MACs actually run.
 
-use super::cache::{CacheKey, PackedBCache};
+use super::cache::{CacheKey, PlanKey, ServingCaches};
 use super::pipeline::StageCost;
 use crate::arch::VersalArch;
 use crate::cluster::{Cluster, ClusterError, Collectives, DeviceId};
 use crate::dl::{Mlp, MlpSpec, PackedWeights, QuantLinear, TpMode};
-use crate::gemm::{Ccp, GemmConfig, ParallelGemm, Precision, PrecisionPolicy};
+use crate::gemm::{prepack_b, Ccp, GemmConfig, ParallelGemm, Precision, PrecisionPolicy, PrepackedB};
 use crate::plan::{Buffer, GemmPlan};
 use anyhow::Result;
+use std::collections::HashMap;
 
 /// Per-layer pack accounting shared by the fused serving backends: the
-/// layer's serving GEMM is lowered to the same [`GemmPlan`] the drivers
-/// execute and the pack charges come from its step footprints — the
-/// activation block is the plan's `Ac` pack bytes (always paid,
-/// panel-padded and width-scaled exactly as the drivers pack it), a
-/// cache miss quantises + packs the weights and pays the plan's `Bc`
-/// pack bytes (identical to [`PackedWeights::bytes`] by construction);
-/// an entry bigger than the whole budget is handed back (`Some`) for
-/// transient use instead of wiping the cache.
+/// layer's serving GEMM is the same [`GemmPlan`] the drivers execute
+/// and the pack charges come from its step footprints — the activation
+/// block is the plan's `Ac` pack bytes (always paid, panel-padded and
+/// width-scaled exactly as the drivers pack it), a cache miss quantises
+/// + packs the weights and pays the plan's `Bc` pack bytes (identical
+/// to [`PackedWeights::bytes`] by construction); an entry bigger than
+/// the whole budget is handed back (`Some`) for transient use instead
+/// of wiping the cache.
+///
+/// The plan itself comes from the **lowered-plan cache**: serving
+/// traffic repeats a handful of (layer, precision, rows) shapes, so a
+/// warm batch reuses the resident plan instead of re-lowering it
+/// (counted in [`super::PlanCacheStats`]; the `bench_serving`
+/// gate asserts the warm path lowers strictly fewer plans).
 #[allow(clippy::too_many_arguments)]
 fn charge_layer_pack(
     layer: &QuantLinear,
@@ -27,32 +34,34 @@ fn charge_layer_pack(
     arch: &VersalArch,
     cfg: &GemmConfig,
     rate: f64,
-    cache: &mut PackedBCache,
+    caches: &mut ServingCaches,
     cost: &mut StageCost,
 ) -> Result<Option<PackedWeights>> {
     let mut serve_cfg = cfg.clone();
     serve_cfg.ccp = QuantLinear::serving_ccp(arch, cfg, precision);
-    let plan = GemmPlan::lower(
-        arch,
-        &serve_cfg,
-        rows,
-        layer.out_dim,
-        layer.in_dim,
-        precision,
-        false,
-    )
-    .map_err(|e| anyhow::anyhow!("layer {layer_idx} serving plan: {e}"))?;
-    cost.pack += (plan.pack_bytes(Buffer::Ac) as f64 / rate) as u64;
+    let plan_key = PlanKey { layer: layer_idx, precision, rows, prepacked: false };
+    let (out_dim, in_dim) = (layer.out_dim, layer.in_dim);
+    // The cache precomputes the Ac/Bc pack-byte sums at insert, so a
+    // warm batch charges in O(1) — no per-batch re-scan of the resident
+    // plan's step vector.
+    let cached = caches
+        .plans
+        .get_or_lower(plan_key, || {
+            GemmPlan::lower(arch, &serve_cfg, rows, out_dim, in_dim, precision, false)
+        })
+        .map_err(|e| anyhow::anyhow!("layer {layer_idx} serving plan: {e}"))?;
+    debug_assert_eq!(cached.ac_pack_bytes, cached.plan.pack_bytes(Buffer::Ac));
+    cost.pack += (cached.ac_pack_bytes as f64 / rate) as u64;
     let key = CacheKey { layer: layer_idx, precision };
-    if !cache.touch(&key) {
+    if !caches.packed.touch(&key) {
         let pw = layer.prepack(precision, arch, cfg);
         debug_assert_eq!(
             pw.bytes(),
-            plan.pack_bytes(Buffer::Bc),
+            cached.bc_pack_bytes,
             "prepacked weights and plan Bc footprints must agree"
         );
-        cost.pack += (plan.pack_bytes(Buffer::Bc) as f64 / rate) as u64;
-        if let Err(back) = cache.insert(key, pw) {
+        cost.pack += (cached.bc_pack_bytes as f64 / rate) as u64;
+        if let Err(back) = caches.packed.insert(key, pw) {
             return Ok(Some(back));
         }
     }
@@ -79,26 +88,28 @@ pub trait Backend {
 /// A backend with a **fused-batch serving entry point** — what the
 /// continuous-batching runtime ([`super::ServingRuntime`]) dispatches
 /// to. On top of the plain [`Backend`] contract it executes a batch of
-/// concatenated same-precision activation rows against the
-/// weight-stationary packed-operand cache and reports the simulated cost
-/// split by pipeline stage (pack / transfer / compute), so the runtime
-/// can overlap batches with [`super::PipelinedExecutor`].
+/// concatenated same-precision activation rows against the serving
+/// residency caches (weight-stationary packed operands + lowered plans,
+/// [`ServingCaches`]) and reports the simulated cost split by pipeline
+/// stage (pack / transfer / compute), so the runtime can overlap
+/// batches with [`super::PipelinedExecutor`].
 ///
 /// The default implementation falls back to [`Backend::infer_batch`]
 /// with every cycle attributed to compute and no cache use — correct
 /// for toy backends; real backends override it.
 pub trait BatchedBackend: Backend {
     /// Serve one fused batch: `rows × in_dim` concatenated activation
-    /// rows at `precision`, packed weights resident in `cache`.
+    /// rows at `precision`, packed weights and lowered plans resident
+    /// in `caches`.
     fn serve_fused(
         &mut self,
         rows: usize,
         x: &[f32],
         precision: Precision,
-        cache: &mut PackedBCache,
+        caches: &mut ServingCaches,
     ) -> Result<(Vec<f32>, StageCost)> {
         let _ = precision;
-        let _ = cache;
+        let _ = caches;
         let (logits, cycles) = self.infer_batch(rows, x)?;
         Ok((logits, StageCost { pack: 0, transfer: 0, compute: cycles }))
     }
@@ -205,7 +216,7 @@ impl BatchedBackend for RustGemmBackend {
         rows: usize,
         x: &[f32],
         precision: Precision,
-        cache: &mut PackedBCache,
+        caches: &mut ServingCaches,
     ) -> Result<(Vec<f32>, StageCost)> {
         anyhow::ensure!(
             x.len() == rows * self.mlp.spec.dims[0],
@@ -218,12 +229,12 @@ impl BatchedBackend for RustGemmBackend {
         let mut h = x.to_vec();
         for (l, layer) in self.mlp.layers.iter().enumerate() {
             let transient = charge_layer_pack(
-                layer, l, rows, precision, &self.arch, &self.cfg, rate, cache, &mut cost,
+                layer, l, rows, precision, &self.arch, &self.cfg, rate, caches, &mut cost,
             )?;
             let key = CacheKey { layer: l, precision };
             let pw = transient
                 .as_ref()
-                .or_else(|| cache.peek(&key))
+                .or_else(|| caches.packed.peek(&key))
                 .expect("miss path inserted or handed the weights back");
             let (y, cy) = layer.forward_prepacked(rows, &h, pw, &self.arch, &self.cfg)?;
             h = y;
@@ -251,6 +262,13 @@ pub struct ClusterGemmBackend {
     cluster: Cluster,
     mlp: Mlp,
     ccp: Ccp,
+    /// Per-(layer, shard) prepacked weight blocks the fused serving path
+    /// executes from ([`ParallelGemm::run_prepacked`]). Built on first
+    /// use and reused forever: the served weights are immutable, so a
+    /// rebuild after a residency eviction would produce bit-identical
+    /// blocks — the *cycle* cost of re-packing after an eviction is
+    /// charged by the packed-operand cache's miss path, not here.
+    shard_packs: HashMap<(usize, usize), PrepackedB<u8>>,
 }
 
 impl ClusterGemmBackend {
@@ -268,7 +286,12 @@ impl ClusterGemmBackend {
         cluster.validate()?;
         // Serving shapes are small; a modest CCP avoids degenerate blocks
         // (same choice as the single-device backend).
-        Ok(ClusterGemmBackend { cluster, mlp, ccp: Ccp { mc: 256, nc: 256, kc: 1024 } })
+        Ok(ClusterGemmBackend {
+            cluster,
+            mlp,
+            ccp: Ccp { mc: 256, nc: 256, kc: 1024 },
+            shard_packs: HashMap::new(),
+        })
     }
 
     /// The model being served.
@@ -280,19 +303,20 @@ impl ClusterGemmBackend {
     pub fn cluster(&self) -> &Cluster {
         &self.cluster
     }
-}
 
-impl Backend for ClusterGemmBackend {
-    fn in_dim(&self) -> usize {
-        self.mlp.spec.dims[0]
-    }
-    fn n_classes(&self) -> usize {
-        *self.mlp.spec.dims.last().unwrap()
-    }
-
-    fn infer_batch(&mut self, batch: usize, x: &[f32]) -> Result<(Vec<f32>, u64)> {
-        let weights: Vec<usize> = self.cluster.devices.iter().map(|d| d.tiles).collect();
-        let n_layers = self.mlp.spec.n_layers();
+    /// The tensor-parallel forward shared by [`Backend::infer_batch`]
+    /// (dense shards: each device packs its Bc blocks inside the loop
+    /// nest) and [`BatchedBackend::serve_fused`] (`prepacked` — each
+    /// shard lowers a *prepacked* plan and executes from the resident
+    /// [`PrepackedB`] blocks, the weight-stationary hot path). The two
+    /// are bit-exact: [`ParallelGemm::run_prepacked`] is pinned against
+    /// the on-the-fly path, and with packing uncounted the schedules are
+    /// identical too.
+    fn tp_forward(&mut self, batch: usize, x: &[f32], prepacked: bool) -> Result<(Vec<f32>, u64)> {
+        let ClusterGemmBackend { cluster, mlp, ccp, shard_packs } = self;
+        let ccp = *ccp;
+        let weights: Vec<usize> = cluster.devices.iter().map(|d| d.tiles).collect();
+        let n_layers = mlp.spec.n_layers();
         let mut layer_compute = vec![0u64; n_layers];
         let mut layer_mode: Vec<Option<TpMode>> = vec![None; n_layers];
         // Widest output shard the forward actually produced per layer
@@ -300,18 +324,29 @@ impl Backend for ClusterGemmBackend {
         // must price the sharding that ran, not a re-derived one).
         let mut layer_band = vec![0usize; n_layers];
         let mut err: Option<anyhow::Error> = None;
-        let logits = self.mlp.forward_tp(batch, x, &weights, |l, mode, s, a, b, c| {
+        let logits = mlp.forward_tp(batch, x, &weights, |l, mode, s, a, b, c| {
             layer_mode[l] = Some(mode);
             layer_band[l] = layer_band[l].max(c.cols);
-            let dspec = &self.cluster.devices[s];
+            let dspec = &cluster.devices[s];
             let cfg = GemmConfig {
-                ccp: self.ccp,
+                ccp,
                 tiles: dspec.tiles,
                 count_packing: false,
                 steady_stream: true,
             };
             let engine = ParallelGemm::new(&dspec.arch);
-            match engine.run(&cfg, a, b, c) {
+            let run = if prepacked {
+                // Weight-stationary: the shard's Bc blocks were packed
+                // once (the weights are immutable) and the driver lowers
+                // a prepacked plan whose Bc steps fetch them.
+                let pb = shard_packs
+                    .entry((l, s))
+                    .or_insert_with(|| prepack_b(b, ccp.kc, ccp.nc));
+                engine.run_prepacked(&cfg, a, pb, c)
+            } else {
+                engine.run(&cfg, a, b, c)
+            };
+            match run {
                 // Shards run concurrently: the layer costs its slowest.
                 Ok((cy, _)) => layer_compute[l] = layer_compute[l].max(cy.total),
                 Err(e) => err = Some(e),
@@ -322,11 +357,11 @@ impl Backend for ClusterGemmBackend {
         }
 
         // Layer-boundary collectives on the cluster fabric.
-        let coll = Collectives::new(&self.cluster);
-        let group: Vec<DeviceId> = (0..self.cluster.n_devices()).collect();
+        let coll = Collectives::new(cluster);
+        let group: Vec<DeviceId> = (0..cluster.n_devices()).collect();
         let mut cycles = 0u64;
         for (l, &compute) in layer_compute.iter().enumerate() {
-            let out_dim = self.mlp.spec.dims[l + 1];
+            let out_dim = mlp.spec.dims[l + 1];
             // The mode the forward actually used (recorded by the closure),
             // so the collective cost cannot desync from the sharding.
             let mode = layer_mode[l].expect("every layer runs at least one shard");
@@ -344,32 +379,42 @@ impl Backend for ClusterGemmBackend {
     }
 }
 
+impl Backend for ClusterGemmBackend {
+    fn in_dim(&self) -> usize {
+        self.mlp.spec.dims[0]
+    }
+    fn n_classes(&self) -> usize {
+        *self.mlp.spec.dims.last().unwrap()
+    }
+
+    fn infer_batch(&mut self, batch: usize, x: &[f32]) -> Result<(Vec<f32>, u64)> {
+        self.tp_forward(batch, x, false)
+    }
+}
+
 impl BatchedBackend for ClusterGemmBackend {
-    /// Batched entry point for the tensor-parallel pool. The fused rows
-    /// run the existing sharded forward (bit-exact u8 numerics); the
-    /// cache tracks weight **residency** so repeated batches skip the
-    /// quantise + pack cycles, which is where the cluster's serving
-    /// amortisation lives — the per-shard engines still stage their own
-    /// local Bc blocks (prepacked shard execution is future work, noted
-    /// in `docs/ARCHITECTURE.md`). Only the paper's u8 pipeline is
-    /// sharded today, so other precisions are rejected rather than
-    /// silently served unsharded.
+    /// Batched entry point for the tensor-parallel pool — the
+    /// weight-stationary cluster hot path. The fused rows run the
+    /// sharded forward with every shard **executing a prepacked plan
+    /// from resident [`PrepackedB`] blocks** (bit-exact u8 numerics,
+    /// pinned against the dense path); the packed-operand cache tracks
+    /// the layers' weight residency, so a warm batch skips the quantise
+    /// + pack cycles it already charged on the miss, and the shards no
+    /// longer re-stage local Bc blocks the model said were resident —
+    /// the shard plans' `prepacked_b` flag makes those steps fetches.
+    /// Only the paper's u8 pipeline is sharded today, so other
+    /// precisions are rejected rather than silently served unsharded.
     ///
-    /// Trade-off, on purpose: the miss path inserts a really-packed
-    /// [`PackedWeights`] whose execution blocks are (for now) never
-    /// read here. The byte footprint is the same as the shards' staged
-    /// copies combined, so residency/eviction behave identically to the
-    /// single-device path through one shared LRU and helper — and the
-    /// entries become directly executable the day the shards learn to
-    /// run prepacked. A byte-count-only tracker would save the one-time
-    /// pack per (layer, precision) miss at the price of a second cache
-    /// implementation.
+    /// The miss path still inserts the really-packed single-device
+    /// [`PackedWeights`]: its byte footprint equals the shards' resident
+    /// blocks combined, so residency/eviction behave identically to the
+    /// single-device path through one shared LRU and helper.
     fn serve_fused(
         &mut self,
         rows: usize,
         x: &[f32],
         precision: Precision,
-        cache: &mut PackedBCache,
+        caches: &mut ServingCaches,
     ) -> Result<(Vec<f32>, StageCost)> {
         anyhow::ensure!(
             precision == Precision::U8,
@@ -386,8 +431,8 @@ impl BatchedBackend for ClusterGemmBackend {
             steady_stream: true,
         };
         for (l, layer) in self.mlp.layers.iter().enumerate() {
-            // Residency accounting only: a transient (oversize) weight
-            // set is dropped — the shards stage their own blocks anyway.
+            // Residency accounting: a transient (oversize) weight set is
+            // dropped — the shard blocks are backend-resident anyway.
             // And a layer whose *single-device* plan does not lower
             // (e.g. the full operands oversubscribe one device's DDR)
             // must not fail the batch: the tensor-parallel path shards
@@ -395,10 +440,10 @@ impl BatchedBackend for ClusterGemmBackend {
             // without the accounting rather than refusing work the
             // cluster exists to handle.
             let _ = charge_layer_pack(
-                layer, l, rows, precision, &dev0.arch, &gcfg, rate, cache, &mut cost,
+                layer, l, rows, precision, &dev0.arch, &gcfg, rate, caches, &mut cost,
             );
         }
-        let (logits, cycles) = self.infer_batch(rows, x)?;
+        let (logits, cycles) = self.tp_forward(rows, x, true)?;
         cost.compute = cycles;
         Ok((logits, cost))
     }
@@ -480,13 +525,13 @@ mod tests {
         let mut backend = RustGemmBackend::new(vc1902(), spec.clone(), 99, 4);
         let x: Vec<f32> = (0..3 * 16).map(|i| (i as f32 * 0.1).sin()).collect();
         let (want, _) = backend.infer_batch(3, &x).unwrap();
-        let mut cache = PackedBCache::new(1 << 24);
+        let mut caches = ServingCaches::new(1 << 24, 1 << 20);
         let (cold, cold_cost) =
-            backend.serve_fused(3, &x, Precision::U8, &mut cache).unwrap();
+            backend.serve_fused(3, &x, Precision::U8, &mut caches).unwrap();
         assert_eq!(cold, want, "fused u8 path matches the plain backend bit-exactly");
-        assert_eq!(cache.len(), 2, "both layers resident after the cold batch");
+        assert_eq!(caches.packed.len(), 2, "both layers resident after the cold batch");
         let (warm, warm_cost) =
-            backend.serve_fused(3, &x, Precision::U8, &mut cache).unwrap();
+            backend.serve_fused(3, &x, Precision::U8, &mut caches).unwrap();
         assert_eq!(warm, cold, "cache hit is bit-exact with the cold pack");
         assert!(
             warm_cost.pack < cold_cost.pack,
@@ -495,9 +540,31 @@ mod tests {
             cold_cost.pack
         );
         assert_eq!(warm_cost.compute, cold_cost.compute, "identical GEMM schedule");
-        let s = cache.stats();
+        let s = caches.packed.stats();
         assert_eq!(s.hits, 2, "one hit per layer on the warm batch");
         assert_eq!(s.misses, 2);
+        // The plan cache amortised the lowering the same way: one plan
+        // per layer on the cold batch, pure hits on the warm one.
+        let p = caches.plans.stats();
+        assert_eq!(p.lowered, 2, "one lowering per layer, not per batch");
+        assert_eq!((p.hits, p.misses), (2, 2));
+    }
+
+    #[test]
+    fn serve_fused_distinct_batch_shapes_get_distinct_plans() {
+        // The plan key carries the fused row count: a different batch
+        // shape is a different GEMM and must not reuse a stale plan.
+        let spec = MlpSpec { dims: vec![16, 12, 4] };
+        let mut backend = RustGemmBackend::new(vc1902(), spec, 99, 4);
+        let mut caches = ServingCaches::new(1 << 24, 1 << 20);
+        let x2: Vec<f32> = (0..2 * 16).map(|i| (i as f32 * 0.2).cos()).collect();
+        let x3: Vec<f32> = (0..3 * 16).map(|i| (i as f32 * 0.2).cos()).collect();
+        backend.serve_fused(2, &x2, Precision::U8, &mut caches).unwrap();
+        backend.serve_fused(3, &x3, Precision::U8, &mut caches).unwrap();
+        backend.serve_fused(2, &x2, Precision::U8, &mut caches).unwrap();
+        let p = caches.plans.stats();
+        assert_eq!(p.lowered, 4, "2 layers × 2 distinct row counts");
+        assert_eq!(p.hits, 2, "the repeated shape reuses both layer plans");
     }
 
     #[test]
@@ -505,10 +572,11 @@ mod tests {
         let spec = MlpSpec { dims: vec![16, 12, 4] };
         let mut backend = RustGemmBackend::new(vc1902(), spec, 99, 4);
         let x: Vec<f32> = (0..2 * 16).map(|i| (i as f32 * 0.2).cos()).collect();
-        let mut cache = PackedBCache::new(1 << 24);
-        backend.serve_fused(2, &x, Precision::U8, &mut cache).unwrap();
-        backend.serve_fused(2, &x, Precision::I16, &mut cache).unwrap();
-        assert_eq!(cache.len(), 4, "per-(layer, precision) residency");
+        let mut caches = ServingCaches::new(1 << 24, 1 << 20);
+        backend.serve_fused(2, &x, Precision::U8, &mut caches).unwrap();
+        backend.serve_fused(2, &x, Precision::I16, &mut caches).unwrap();
+        assert_eq!(caches.packed.len(), 4, "per-(layer, precision) residency");
+        assert_eq!(caches.plans.len(), 4, "per-(layer, precision, rows) plans");
     }
 
     #[test]
@@ -518,13 +586,42 @@ mod tests {
         let mut tp = ClusterGemmBackend::new(cluster, spec, 99).unwrap();
         let x: Vec<f32> = (0..2 * 16).map(|i| (i as f32 * 0.17).cos()).collect();
         let (want, _) = tp.infer_batch(2, &x).unwrap();
-        let mut cache = PackedBCache::new(1 << 24);
-        let (got, cost) = tp.serve_fused(2, &x, Precision::U8, &mut cache).unwrap();
-        assert_eq!(got, want);
+        let mut caches = ServingCaches::new(1 << 24, 1 << 20);
+        let (got, cost) = tp.serve_fused(2, &x, Precision::U8, &mut caches).unwrap();
+        assert_eq!(got, want, "prepacked shard execution is bit-exact with dense");
         assert!(cost.pack > 0 && cost.compute > 0);
-        let (_, warm_cost) = tp.serve_fused(2, &x, Precision::U8, &mut cache).unwrap();
+        let (_, warm_cost) = tp.serve_fused(2, &x, Precision::U8, &mut caches).unwrap();
         assert!(warm_cost.pack < cost.pack, "residency skips the weight pack");
-        assert!(tp.serve_fused(2, &x, Precision::Bf16, &mut cache).is_err());
+        assert!(tp.serve_fused(2, &x, Precision::Bf16, &mut caches).is_err());
+    }
+
+    #[test]
+    fn cluster_prepacked_warm_path_bit_exact_and_same_schedule_as_cold() {
+        // The finished residency hot path: every warm fused batch must
+        // return the cold cluster path's bits, and (packing uncounted)
+        // the prepacked shard plans must cost exactly the dense shard
+        // schedule — the only difference is *where* Bc comes from.
+        let spec = MlpSpec { dims: vec![16, 12, 4] };
+        let cluster = Cluster::vc1902_pool(4, 2).unwrap();
+        let mut tp = ClusterGemmBackend::new(cluster, spec.clone(), 7).unwrap();
+        let mut caches = ServingCaches::new(1 << 24, 1 << 20);
+        let x: Vec<f32> = (0..3 * 16).map(|i| (i as f32 * 0.23).sin()).collect();
+        let (dense, dense_cycles) = tp.infer_batch(3, &x).unwrap();
+        let (cold, cold_cost) = tp.serve_fused(3, &x, Precision::U8, &mut caches).unwrap();
+        let (warm, warm_cost) = tp.serve_fused(3, &x, Precision::U8, &mut caches).unwrap();
+        let (warm2, _) = tp.serve_fused(3, &x, Precision::U8, &mut caches).unwrap();
+        assert_eq!(cold, dense, "cold prepacked batch == dense cluster path");
+        assert_eq!(warm, dense, "warm prepacked batch == dense cluster path");
+        assert_eq!(warm2, dense, "stays bit-exact across repeated warm batches");
+        assert_eq!(
+            cold_cost.compute, dense_cycles,
+            "prepacked shard plans price the dense schedule (packing uncounted)"
+        );
+        assert_eq!(warm_cost.compute, cold_cost.compute, "identical warm schedule");
+        // And the single-device reference agrees bit-for-bit.
+        let mut single = RustGemmBackend::new(vc1902(), spec, 7, 2);
+        let (single_logits, _) = single.infer_batch(3, &x).unwrap();
+        assert_eq!(warm, single_logits, "cluster warm path == single device");
     }
 
     #[test]

@@ -1,9 +1,10 @@
 //! Sequential blocked GEMM — the baseline algorithm of Figure 1.
 //!
-//! The loop nest itself lives in the plan IR: the driver lowers its
-//! configuration to a [`GemmPlan`] (which validates every buffer
-//! footprint against the memory hierarchy at plan time) and *executes
-//! the plan's step stream* on one AIE tile of the simulated platform.
+//! The loop nest itself lives in the plan IR: the driver validates its
+//! configuration as a [`crate::plan::PlanSpec`] (which checks every
+//! buffer footprint against the memory hierarchy at plan time) and
+//! *executes the lazily generated step stream* on one AIE tile of the
+//! simulated platform.
 //! Every invocation computes the exact numeric result *and* the cycle
 //! breakdown; memory-capacity violations (a CCP choice whose buffers do
 //! not fit the FPGA RAMs or the local memory) are hard errors — at plan
@@ -16,7 +17,7 @@ use super::precision::{Accum, Element};
 use super::types::{Mat, MatI32, MatU8};
 use super::GemmConfig;
 use crate::arch::{MemLevel, VersalArch};
-use crate::plan::{Buffer, GemmPlan, PlanStep};
+use crate::plan::{Buffer, PlanSpec, PlanStep};
 use crate::sim::{AieTileModel, CycleBreakdown, Gmio, KernelMode, MemPool, Stream};
 use anyhow::{ensure, Result};
 
@@ -76,9 +77,11 @@ impl<'a> BlockedGemm<'a> {
             prec.max_safe_k()
         );
 
-        // Lower the loop nest once; footprints are validated against the
-        // hierarchy at plan time (an oversubscribing CCP never executes).
-        let plan = GemmPlan::lower(self.arch, cfg, a.rows, b.cols, a.cols, prec, false)
+        // Validate the loop nest once (O(1)); footprints are checked
+        // against the hierarchy at plan time (an oversubscribing CCP
+        // never executes) and the step stream is generated lazily — the
+        // driver never materializes a step vector.
+        let spec = PlanSpec::new(self.arch, cfg, a.rows, b.cols, a.cols, prec, false)
             .map_err(|e| anyhow::anyhow!(e.to_string()))?;
         let stream = Stream::new(self.arch);
         let gmio = Gmio::new(self.arch);
@@ -94,7 +97,7 @@ impl<'a> BlockedGemm<'a> {
 
         let mut bc: Option<PackedB<T>> = None;
         let mut ac: Option<PackedA<T>> = None;
-        for step in plan.steps() {
+        for step in spec.walk() {
             match step {
                 PlanStep::Pack(p) => {
                     if cfg.count_packing && p.charged {

@@ -30,7 +30,7 @@ use super::precision::{Accum, Element, Precision};
 use super::types::{Mat, MatI32, MatU8};
 use super::GemmConfig;
 use crate::arch::VersalArch;
-use crate::plan::{Buffer, GemmPlan, PlanStep};
+use crate::plan::{Buffer, PlanSpec, PlanStep};
 use crate::sim::{AieTileModel, CycleBreakdown, Gmio, KernelMode, Multicast, Stream};
 use anyhow::{ensure, Result};
 
@@ -144,9 +144,9 @@ impl<'a> ParallelGemm<'a> {
             prec.max_safe_k()
         );
 
-        let plan = GemmPlan::lower(self.arch, cfg, a.rows, b.cols, a.cols, prec, false)
+        let spec = PlanSpec::new(self.arch, cfg, a.rows, b.cols, a.cols, prec, false)
             .map_err(|e| anyhow::anyhow!(e.to_string()))?;
-        Ok(self.run_plan(cfg, &plan, a, BOperand::Dense(b), c))
+        Ok(self.run_plan(cfg, spec.walk(), a, BOperand::Dense(b), c))
     }
 
     /// [`ParallelGemm::run`] with a pre-packed B operand (the paper's u8
@@ -212,23 +212,26 @@ impl<'a> ParallelGemm<'a> {
             prec.max_safe_k()
         );
 
-        let plan = GemmPlan::lower(self.arch, cfg, a.rows, pb.cols, a.cols, prec, true)
+        let spec = PlanSpec::new(self.arch, cfg, a.rows, pb.cols, a.cols, prec, true)
             .map_err(|e| anyhow::anyhow!(e.to_string()))?;
-        Ok(self.run_plan(cfg, &plan, a, BOperand::Prepacked(pb), c))
+        Ok(self.run_plan(cfg, spec.walk(), a, BOperand::Prepacked(pb), c))
     }
 
-    /// Execute a lowered plan: numerics + tile accounting + the lockstep
-    /// loop-L4 schedule, one step at a time. This is the single
+    /// Execute a plan's step stream: numerics + tile accounting + the
+    /// lockstep loop-L4 schedule, one step at a time. This is the single
     /// execution walk behind [`ParallelGemm::run_p`] (dense B) and
-    /// [`ParallelGemm::run_prepacked_p`] (resident B): the step stream,
-    /// the per-block schedule primitive and the packing charges are all
-    /// shared with [`GemmPlan::cost`], so executed cycles equal the
-    /// plan's predicted cycles by construction (pinned in
+    /// [`ParallelGemm::run_prepacked_p`] (resident B): the step stream
+    /// arrives lazily from [`PlanSpec::walk`] (no step vector is ever
+    /// materialized on the execution hot path), and the per-block
+    /// schedule primitive and packing charges are shared with
+    /// [`crate::plan::GemmPlan::cost`] /
+    /// [`PlanSpec::cost_streaming`], so executed cycles equal the plan's
+    /// predicted cycles by construction (pinned in
     /// `tests/plan_conformance.rs`).
     fn run_plan<'b, T: Element>(
         &self,
         cfg: &GemmConfig,
-        plan: &GemmPlan,
+        steps: impl Iterator<Item = PlanStep>,
         a: &Mat<T>,
         bop: BOperand<'b, T>,
         c: &mut Mat<T::Acc>,
@@ -241,7 +244,7 @@ impl<'a> ParallelGemm<'a> {
 
         let mut bc: BcSlot<'b, T> = BcSlot::Empty;
         let mut ac: Option<PackedA<T>> = None;
-        for step in plan.steps() {
+        for step in steps {
             match step {
                 PlanStep::Pack(p) => {
                     if cfg.count_packing && p.charged {

@@ -7,16 +7,19 @@
 //! The tuner searches the feasible CCP lattice with the calibrated
 //! schedule model as its cost function — no hardware runs needed, same
 //! spirit as analytical-model-driven BLIS tuning. Every candidate is
-//! scored by lowering and costing the same [`crate::plan::GemmPlan`]
-//! the drivers execute, so the search optimises exactly the schedule
-//! that will run.
+//! scored by validating a [`PlanSpec`] and folding its lazy step stream
+//! through [`PlanSpec::cost_streaming`] — the *same* loop nest the
+//! drivers execute (their [`crate::plan::GemmPlan`] collects this very
+//! stream), so the search optimises exactly the schedule that will run,
+//! at O(1) memory per candidate: a sweep never materializes a step
+//! vector, however large the problem or tiny the strides.
 
 use super::ccp::Ccp;
 use super::microkernel::{MR, NR};
 use super::precision::Precision;
 use super::GemmConfig;
 use crate::arch::VersalArch;
-use crate::plan::GemmPlan;
+use crate::plan::PlanSpec;
 use crate::sim::AieTileModel;
 
 /// Tuning result: the chosen CCPs and the predicted cost.
@@ -45,18 +48,20 @@ pub fn predict_cycles(
 /// Predicted wall cycles for a full (m, n, k) problem at any precision.
 ///
 /// The prediction is not a private re-walk of the loop nest: the tuner
-/// lowers the *same* [`GemmPlan`] the drivers execute and prices it with
-/// [`GemmPlan::cost`], so a predicted schedule is structurally identical
-/// to the executed one by construction (`tests/plan_conformance.rs`
-/// pins `predict == run` per precision). A problem/CCP combination whose
-/// plan cannot be constructed (oversubscribed hierarchy) predicts
-/// `u64::MAX` — infeasible candidates never win a search.
+/// validates the *same* [`PlanSpec`] the drivers execute (their lowered
+/// [`crate::plan::GemmPlan`] collects this spec's step stream) and
+/// prices it with the streaming [`PlanSpec::cost_streaming`] fold, so a
+/// predicted schedule is structurally identical to the executed one by
+/// construction (`tests/plan_conformance.rs` pins `predict == run` per
+/// precision). A problem/CCP combination whose plan cannot be
+/// constructed (oversubscribed hierarchy) predicts `u64::MAX` —
+/// infeasible candidates never win a search.
 ///
-/// Lowering materializes the plan's step stream (O(block count) memory,
-/// freed after costing); for the repo's shapes this is at most a few
-/// MB per candidate. Sweeps over huge problems with tiny candidate
-/// strides should bound their stride grids (see ROADMAP: a lazy step
-/// iterator is the planned fix).
+/// Costing is **allocation-free**: no step vector is materialized, so a
+/// `tune()` sweep over a huge problem with tiny candidate strides stays
+/// O(1) in memory per candidate (`tests/tuner_streaming.rs` pins this
+/// with a counting allocator) where the pre-streaming path allocated
+/// O(block count) — hundreds of MB for adversarial sweeps.
 pub fn predict_cycles_p(
     arch: &VersalArch,
     cfg: &GemmConfig,
@@ -65,8 +70,8 @@ pub fn predict_cycles_p(
     k: usize,
     prec: Precision,
 ) -> u64 {
-    match GemmPlan::lower(arch, cfg, m, n, k, prec, false) {
-        Ok(plan) => plan.cost(arch).total,
+    match PlanSpec::new(arch, cfg, m, n, k, prec, false) {
+        Ok(spec) => spec.cost_streaming(arch).total,
         Err(_) => u64::MAX,
     }
 }
@@ -144,19 +149,31 @@ pub fn select_precision(
     best
 }
 
-/// Search the feasible CCP lattice for the cheapest predicted schedule.
-pub fn tune(arch: &VersalArch, m: usize, n: usize, k: usize, tiles: usize) -> Tuned {
+/// The `tune()` search grids: powers of two clipped to the §4.3 derived
+/// maxima, plus each problem dimension itself (the single-block
+/// candidate). One definition, shared with the winner-parity test so
+/// the streaming and materialized sweeps can never diverge on the
+/// lattice they search.
+fn candidate_grids(
+    arch: &VersalArch,
+    m: usize,
+    n: usize,
+    k: usize,
+) -> (Vec<usize>, Vec<usize>, Vec<usize>) {
     let max = Ccp::derive_aligned(arch, 1);
     let unroll = AieTileModel::UNROLL;
-
-    // Candidate grids: powers of two clipped to the derived maxima, plus
-    // the problem dimension itself (single-block case).
     let mut mcs: Vec<usize> = (5..=13).map(|s| 1usize << s).filter(|&v| v <= max.mc).collect();
     mcs.push(m.next_multiple_of(MR).min(max.mc));
     let mut ncs: Vec<usize> = (5..=11).map(|s| 1usize << s).filter(|&v| v <= max.nc).collect();
     ncs.push(n.next_multiple_of(NR).min(max.nc));
     let mut kcs: Vec<usize> = (6..=12).map(|s| 1usize << s).filter(|&v| v <= max.kc).collect();
     kcs.push(k.next_multiple_of(unroll).min(max.kc));
+    (mcs, ncs, kcs)
+}
+
+/// Search the feasible CCP lattice for the cheapest predicted schedule.
+pub fn tune(arch: &VersalArch, m: usize, n: usize, k: usize, tiles: usize) -> Tuned {
+    let (mcs, ncs, kcs) = candidate_grids(arch, m, n, k);
 
     let mut best: Option<Tuned> = None;
     let mut evaluated = 0;
@@ -314,6 +331,47 @@ mod tests {
         // The same shapes on the real device lower and predict finitely.
         let real = vc1902();
         assert_ne!(predict_cycles(&real, &cfg, 4096, 4096, 4096), u64::MAX);
+    }
+
+    #[test]
+    fn tune_winner_matches_materialized_sweep() {
+        // The streaming refactor must not move the search optimum: replay
+        // tune()'s exact candidate grid, scoring each candidate by
+        // materializing and costing the full GemmPlan (the PR-4 path),
+        // and require the same winning CCP and predicted cycles.
+        use crate::plan::GemmPlan;
+        let arch = vc1902();
+        let (m, n, k, tiles) = (512, 384, 4096, 8);
+        let tuned = tune(&arch, m, n, k, tiles);
+
+        // The identical lattice tune() searched, from the shared helper.
+        let (mcs, ncs, kcs) = candidate_grids(&arch, m, n, k);
+
+        let mut best: Option<(Ccp, u64)> = None;
+        for &mc in &mcs {
+            for &nc in &ncs {
+                for &kc in &kcs {
+                    let ccp = Ccp { mc, nc, kc };
+                    if ccp.check(&arch, 1).is_err() {
+                        continue;
+                    }
+                    let mut cfg = GemmConfig::paper_table2(tiles);
+                    cfg.ccp = ccp;
+                    let Ok(plan) =
+                        GemmPlan::lower(&arch, &cfg, m, n, k, Precision::U8, false)
+                    else {
+                        continue;
+                    };
+                    let cycles = plan.cost(&arch).total;
+                    if best.as_ref().map(|b| cycles < b.1).unwrap_or(true) {
+                        best = Some((ccp, cycles));
+                    }
+                }
+            }
+        }
+        let (want_ccp, want_cycles) = best.expect("materialized sweep found a winner");
+        assert_eq!(tuned.ccp, want_ccp, "streaming sweep picked a different CCP");
+        assert_eq!(tuned.predicted_cycles, want_cycles, "predicted cost drifted");
     }
 
     #[test]

@@ -31,13 +31,17 @@
 //!                 the parallel loop-L4 design, plus ablation drivers
 //!                 that parallelise L1/L3/L5 instead, and the CCP +
 //!                 precision auto-tuner.
-//! - [`plan`]    — the unified GEMM execution-plan IR: one lowered
-//!                 loop nest + memory-residency plan, validated against
-//!                 the architecture's capacities at construction, that
+//! - [`plan`]    — the unified GEMM execution-plan IR: one loop nest +
+//!                 memory-residency plan, validated against the
+//!                 architecture's capacities at construction, that
 //!                 every driver executes and the tuner / cluster
 //!                 scheduler / serving pipeline cost — predicted and
 //!                 executed schedules are structurally identical by
-//!                 construction.
+//!                 construction. The streaming face ([`plan::PlanSpec`]
+//!                 + the lazy [`plan::PlanSteps`] generator) validates
+//!                 in O(1) and walks/costs the identical step stream
+//!                 with no step vector — the drivers and every sweep
+//!                 are allocation-free per candidate.
 //! - [`cluster`] — the multi-device layer: a pool of simulated Versal
 //!                 devices behind a cycle-costed inter-device fabric
 //!                 (ring / mesh / fully-connected), device collectives

@@ -1,55 +1,93 @@
-//! Pricing a lowered plan with the calibrated schedule model.
+//! Pricing a plan with the calibrated schedule model.
 //!
-//! [`GemmPlan::cost`] is the single cost function behind the tuner's
-//! CCP search ([`crate::gemm::tuner::predict_cycles_p`]) and the
-//! cluster's shard scheduler ([`crate::cluster::ClusterGemm`]): it walks
-//! the same step stream the drivers execute and charges each
-//! [`ComputeStep`](super::ComputeStep) through
+//! [`GemmPlan::cost`] and the allocation-free
+//! [`PlanSpec::cost_streaming`] are one fold ([`cost_steps`]) over the
+//! same step stream the drivers execute: each
+//! [`ComputeStep`](super::ComputeStep) is charged through
 //! [`ParallelGemm::block_schedule_p`] — the same per-block primitive the
 //! executing drivers call — so a predicted schedule can never diverge
-//! structurally from an executed one.
+//! structurally from an executed one. The streaming variant is the cost
+//! function behind the tuner's CCP search
+//! ([`crate::gemm::tuner::predict_cycles_p`]) and the cluster's shard
+//! scheduler ([`crate::cluster::ClusterGemm`]): O(1) memory per
+//! candidate, no step vector ever materialized.
 
 use super::ir::{GemmPlan, PlanStep};
+use super::stream::PlanSpec;
 use crate::arch::VersalArch;
-use crate::gemm::ParallelGemm;
+use crate::gemm::{GemmConfig, ParallelGemm, Precision};
 use crate::sim::CycleBreakdown;
+
+/// The one cost fold: charge a step stream through the drivers' own
+/// per-block schedule primitive. Pack steps are charged at the pack
+/// bandwidth only when the plan counts packing, and only for steps the
+/// execution would really pay (`charged` — a prepacked plan's Bc fetches
+/// are free here, like the serving runtime's cache hits).
+pub(super) fn cost_steps(
+    arch: &VersalArch,
+    cfg: &GemmConfig,
+    precision: Precision,
+    count_packing: bool,
+    steps: impl Iterator<Item = PlanStep>,
+) -> CycleBreakdown {
+    let engine = ParallelGemm::new(arch);
+    let mut cy = CycleBreakdown::zero();
+    for step in steps {
+        match step {
+            PlanStep::Pack(p) => {
+                if count_packing && p.charged {
+                    cy.packing += p.cycles(arch);
+                }
+            }
+            PlanStep::Compute(c) => {
+                cy += engine.block_schedule_p(
+                    cfg,
+                    c.panels_b,
+                    c.panels_a,
+                    c.kc_eff,
+                    c.br_panel_bytes,
+                    precision,
+                );
+            }
+            PlanStep::Release(_) => {}
+        }
+    }
+    if count_packing {
+        cy.total += cy.packing;
+    }
+    cy
+}
 
 impl GemmPlan {
     /// Price the plan on `arch` with the parallel loop-L4 schedule model
     /// (the drivers' own accounting: [`crate::gemm::ParallelGemm::run_p`]
     /// produces exactly this breakdown, pinned in
-    /// `tests/plan_conformance.rs`). Pack steps are charged at the pack
-    /// bandwidth only when the plan counts packing, and only for steps
-    /// the execution would really pay (`charged` — a prepacked plan's Bc
-    /// fetches are free here, like the serving runtime's cache hits).
+    /// `tests/plan_conformance.rs`).
     pub fn cost(&self, arch: &VersalArch) -> CycleBreakdown {
-        let engine = ParallelGemm::new(arch);
-        let cfg = self.gemm_config();
-        let mut cy = CycleBreakdown::zero();
-        for step in self.steps() {
-            match step {
-                PlanStep::Pack(p) => {
-                    if self.count_packing && p.charged {
-                        cy.packing += p.cycles(arch);
-                    }
-                }
-                PlanStep::Compute(c) => {
-                    cy += engine.block_schedule_p(
-                        &cfg,
-                        c.panels_b,
-                        c.panels_a,
-                        c.kc_eff,
-                        c.br_panel_bytes,
-                        self.precision,
-                    );
-                }
-                PlanStep::Release(_) => {}
-            }
-        }
-        if self.count_packing {
-            cy.total += cy.packing;
-        }
-        cy
+        cost_steps(
+            arch,
+            &self.gemm_config(),
+            self.precision,
+            self.count_packing,
+            self.steps().iter().copied(),
+        )
+    }
+}
+
+impl PlanSpec {
+    /// Price the spec without materializing a single step: the same fold
+    /// as [`GemmPlan::cost`] over the lazy [`PlanSpec::walk`] stream —
+    /// bit-identical result (pinned in `tests/plan_conformance.rs`),
+    /// O(1) memory however many blocks the loop nest has. This is the
+    /// tuner's per-candidate cost function.
+    pub fn cost_streaming(&self, arch: &VersalArch) -> CycleBreakdown {
+        cost_steps(
+            arch,
+            &self.gemm_config(),
+            self.precision,
+            self.count_packing,
+            self.walk(),
+        )
     }
 }
 
@@ -57,7 +95,7 @@ impl GemmPlan {
 mod tests {
     use crate::arch::vc1902;
     use crate::gemm::{GemmConfig, ParallelGemm, Precision};
-    use crate::plan::GemmPlan;
+    use crate::plan::{GemmPlan, PlanSpec};
 
     #[test]
     fn single_block_cost_is_the_block_schedule() {
@@ -68,6 +106,9 @@ mod tests {
         let engine = ParallelGemm::new(&arch);
         let direct = engine.block_schedule(&cfg, 32, 32, 2048, 2048 * 8);
         assert_eq!(plan.cost(&arch), direct);
+        // And the streaming fold prices the identical schedule.
+        let spec = PlanSpec::new(&arch, &cfg, 256, 256, 2048, Precision::U8, false).unwrap();
+        assert_eq!(spec.cost_streaming(&arch), direct);
     }
 
     #[test]
@@ -88,6 +129,20 @@ mod tests {
         let pre = GemmPlan::lower(&arch, &cfg, 32, 32, 32, Precision::U8, true).unwrap();
         let pre_cy = pre.cost(&arch);
         assert!(pre_cy.packing > 0 && pre_cy.packing < cy.packing);
+        // Streaming agrees on every variant, including charged packing.
+        for (plan, want) in [(&counted, cy), (&pre, pre_cy)] {
+            let spec = PlanSpec::new(
+                &arch,
+                &plan.gemm_config(),
+                plan.m,
+                plan.n,
+                plan.k,
+                plan.precision,
+                plan.prepacked_b,
+            )
+            .unwrap();
+            assert_eq!(spec.cost_streaming(&arch), want);
+        }
     }
 
     #[test]

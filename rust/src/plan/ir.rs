@@ -198,6 +198,32 @@ impl GemmPlan {
         &self.steps
     }
 
+    /// Regenerate the step stream lazily from the plan's parameters —
+    /// bit-identical to [`GemmPlan::steps`] (the materialized vector was
+    /// collected from this very generator; property-pinned in
+    /// `tests/plan_conformance.rs`), with no allocation. Cost-only
+    /// consumers that never held a plan should use
+    /// [`super::PlanSpec::walk`] instead and skip materialization
+    /// entirely.
+    pub fn steps_iter(&self) -> super::PlanSteps {
+        super::stream::PlanSteps::new(
+            self.m,
+            self.n,
+            self.k,
+            self.ccp,
+            self.precision,
+            self.prepacked_b,
+        )
+    }
+
+    /// Resident byte footprint of the lowered plan (steps + footprint
+    /// rows) — what the serving layer's plan cache charges against its
+    /// budget.
+    pub fn step_bytes(&self) -> u64 {
+        (self.steps.len() * std::mem::size_of::<PlanStep>()
+            + self.footprints.len() * std::mem::size_of::<LevelFootprint>()) as u64
+    }
+
     /// Peak per-level residency, in [`MemLevel::ALL`] order.
     pub fn footprints(&self) -> &[LevelFootprint] {
         &self.footprints

@@ -1,12 +1,17 @@
 //! Lowering `(m, n, k, precision, ccp, tiles, prepacked?)` into a
 //! [`GemmPlan`], with plan-time memory-feasibility validation.
+//!
+//! Since the streaming refactor this is a thin materializing wrapper:
+//! validation and footprint accounting live in
+//! [`PlanSpec::new`](super::PlanSpec), the step stream comes from the
+//! one lazy generator ([`super::PlanSteps`]), and `lower` simply
+//! collects it — so the materialized and streaming paths are the same
+//! loop nest by construction.
 
-use super::ir::{
-    Buffer, ComputeStep, GemmPlan, LevelFootprint, PackStep, PlanStep, ReleaseStep,
-};
+use super::ir::GemmPlan;
+use super::stream::PlanSpec;
 use crate::arch::{MemLevel, VersalArch};
-use crate::gemm::ccp::LOCAL_RESERVED_BYTES;
-use crate::gemm::{Ccp, GemmConfig, Precision, MR, NR};
+use crate::gemm::{GemmConfig, Precision};
 
 /// Why a plan could not be constructed. Both variants are *capacity*
 /// failures: the loop nest itself always lowers, but a plan whose
@@ -15,8 +20,8 @@ use crate::gemm::{Ccp, GemmConfig, Precision, MR, NR};
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum PlanError {
     /// The CCP fails the §4.3 feasibility arithmetic
-    /// ([`Ccp::check`]); the message names the offending buffer
-    /// (Br / Ac / Bc / Cr).
+    /// ([`crate::gemm::Ccp::check`]); the message names the offending
+    /// buffer (Br / Ac / Bc / Cr).
     Infeasible(String),
     /// A lowered buffer's peak residency exceeds its level's budget
     /// (capacity minus the level's reserved bytes).
@@ -53,16 +58,17 @@ impl GemmPlan {
     /// The step stream follows the paper's Figure-1 nest exactly: loop
     /// L1 over `jc` (stride `nc`), loop L2 over `pc` (stride `kc`,
     /// packing Bc into Block RAM), loop L3 over `ic` (stride `mc`,
-    /// packing Ac into Ultra RAM), one [`ComputeStep`] per resident
-    /// (Ac, Bc) pair, and a [`ReleaseStep`] when a buffer's last
-    /// consumer has run. Edge blocks carry trimmed extents; packed byte
-    /// footprints are panel-padded, i.e. what the memory levels really
-    /// hold.
+    /// packing Ac into Ultra RAM), one [`super::ComputeStep`] per
+    /// resident (Ac, Bc) pair, and a [`super::ReleaseStep`] when a
+    /// buffer's last consumer has run. Edge blocks carry trimmed
+    /// extents; packed byte footprints are panel-padded, i.e. what the
+    /// memory levels really hold.
     ///
-    /// Validation happens here, not at execution time: the CCP must
-    /// pass [`Ccp::check`] and every level's peak residency (including
-    /// the whole-operand DDR footprint) must fit its budget, else the
-    /// plan is a [`PlanError`] and no driver ever runs it.
+    /// Validation happens in [`PlanSpec::new`], not at execution time:
+    /// the CCP must pass [`crate::gemm::Ccp::check`] and every level's
+    /// peak residency (including the whole-operand DDR footprint) must
+    /// fit its budget, else the plan is a [`PlanError`] and no driver
+    /// ever runs it.
     pub fn lower(
         arch: &VersalArch,
         cfg: &GemmConfig,
@@ -72,126 +78,7 @@ impl GemmPlan {
         precision: Precision,
         prepacked_b: bool,
     ) -> Result<GemmPlan, PlanError> {
-        let elem = precision.elem_bytes();
-        cfg.ccp.check(arch, elem).map_err(PlanError::Infeasible)?;
-        let Ccp { mc, nc, kc } = cfg.ccp;
-
-        let mut steps = Vec::new();
-        // Peak residency per level, indexed in MemLevel::ALL order:
-        // [vreg, local, uram, bram, ddr].
-        let mut peak = [0u64; 5];
-        // Cr: one mr × nr accumulator tile per tile, resident throughout.
-        peak[0] = (MR * NR) as u64 * precision.acc_bytes();
-        // DDR holds the whole operands A, B and C for the duration.
-        // Shape-only and CCP-independent, so reject before generating
-        // any steps — an impossible problem fails in O(1), not after
-        // materializing a huge step stream.
-        peak[4] = (m * k + k * n) as u64 * elem + (m * n) as u64 * precision.acc_bytes();
-        let ddr = arch.mem_capacity(MemLevel::Ddr);
-        if peak[4] > ddr {
-            return Err(PlanError::Oversubscribed {
-                operands: MemLevel::Ddr.operands(),
-                level: MemLevel::Ddr,
-                need: peak[4],
-                budget: ddr,
-            });
-        }
-
-        let mut jc = 0;
-        while jc < n {
-            let nc_eff = nc.min(n - jc);
-            let panels_b = nc_eff.div_ceil(NR);
-            let mut pc = 0;
-            while pc < k {
-                let kc_eff = kc.min(k - pc);
-                let bc_bytes = (panels_b * kc_eff * NR) as u64 * elem;
-                let br_panel_bytes = (kc_eff * NR) as u64 * elem;
-                peak[3] = peak[3].max(bc_bytes);
-                peak[1] = peak[1].max(br_panel_bytes);
-                steps.push(PlanStep::Pack(PackStep {
-                    buffer: Buffer::Bc,
-                    level: MemLevel::BlockRam,
-                    row_off: pc,
-                    col_off: jc,
-                    rows: kc_eff,
-                    cols: nc_eff,
-                    bytes: bc_bytes,
-                    charged: !prepacked_b,
-                }));
-                let mut ic = 0;
-                while ic < m {
-                    let mc_eff = mc.min(m - ic);
-                    let panels_a = mc_eff.div_ceil(MR);
-                    let ac_bytes = (panels_a * MR * kc_eff) as u64 * elem;
-                    peak[2] = peak[2].max(ac_bytes);
-                    steps.push(PlanStep::Pack(PackStep {
-                        buffer: Buffer::Ac,
-                        level: MemLevel::UltraRam,
-                        row_off: ic,
-                        col_off: pc,
-                        rows: mc_eff,
-                        cols: kc_eff,
-                        bytes: ac_bytes,
-                        charged: true,
-                    }));
-                    steps.push(PlanStep::Compute(ComputeStep {
-                        jc,
-                        pc,
-                        ic,
-                        nc_eff,
-                        kc_eff,
-                        mc_eff,
-                        panels_a,
-                        panels_b,
-                        br_panel_bytes,
-                    }));
-                    steps.push(PlanStep::Release(ReleaseStep {
-                        buffer: Buffer::Ac,
-                        level: MemLevel::UltraRam,
-                        bytes: ac_bytes,
-                    }));
-                    ic += mc_eff;
-                }
-                steps.push(PlanStep::Release(ReleaseStep {
-                    buffer: Buffer::Bc,
-                    level: MemLevel::BlockRam,
-                    bytes: bc_bytes,
-                }));
-                pc += kc_eff;
-            }
-            jc += nc_eff;
-        }
-
-        let mut footprints = Vec::with_capacity(MemLevel::ALL.len());
-        for (i, &level) in MemLevel::ALL.iter().enumerate() {
-            let capacity_bytes = arch.mem_capacity(level);
-            let reserved_bytes =
-                if level == MemLevel::LocalMemory { LOCAL_RESERVED_BYTES } else { 0 };
-            let fp = LevelFootprint { level, peak_bytes: peak[i], capacity_bytes, reserved_bytes };
-            if fp.peak_bytes > fp.budget_bytes() {
-                return Err(PlanError::Oversubscribed {
-                    operands: level.operands(),
-                    level,
-                    need: fp.peak_bytes,
-                    budget: fp.budget_bytes(),
-                });
-            }
-            footprints.push(fp);
-        }
-
-        Ok(GemmPlan {
-            m,
-            n,
-            k,
-            precision,
-            ccp: cfg.ccp,
-            tiles: cfg.tiles,
-            count_packing: cfg.count_packing,
-            steady_stream: cfg.steady_stream,
-            prepacked_b,
-            steps,
-            footprints,
-        })
+        Ok(PlanSpec::new(arch, cfg, m, n, k, precision, prepacked_b)?.materialize())
     }
 }
 
@@ -199,6 +86,8 @@ impl GemmPlan {
 mod tests {
     use super::*;
     use crate::arch::vc1902;
+    use crate::gemm::Ccp;
+    use crate::plan::{Buffer, PlanStep};
 
     fn cfg(mc: usize, nc: usize, kc: usize, tiles: usize) -> GemmConfig {
         GemmConfig {

@@ -19,10 +19,16 @@
 //!   plan time. A plan that would oversubscribe the local memory, the
 //!   FPGA RAMs or DDR is a *construction error*
 //!   ([`PlanError::Oversubscribed`]), not a silent model drift.
-//! - [`GemmPlan::cost`] prices the plan with the calibrated schedule
-//!   model ([`crate::gemm::ParallelGemm::block_schedule_p`]) — the
-//!   tuner's cost function and the cluster's shard scheduler are this
-//!   one call.
+//! - [`GemmPlan::cost`] prices a materialized plan with the calibrated
+//!   schedule model ([`crate::gemm::ParallelGemm::block_schedule_p`]).
+//! - [`PlanSpec`] is the **streaming** face of the same plan: O(1)
+//!   validation + footprints, a lazy [`PlanSpec::walk`] step generator
+//!   (bit-identical to the materialized stream — `lower` collects it),
+//!   and an allocation-free [`PlanSpec::cost_streaming`] fold sharing
+//!   the same per-block primitive — the tuner's per-candidate cost
+//!   function and the cluster's shard scheduler are this one call, so
+//!   a CCP sweep or cluster capacity sweep never materializes a step
+//!   vector.
 //! - [`crate::gemm::BlockedGemm::run_p`],
 //!   [`crate::gemm::ParallelGemm::run_p`] and
 //!   [`crate::gemm::ParallelGemm::run_prepacked_p`] *execute* the same
@@ -48,8 +54,10 @@
 mod cost;
 mod ir;
 mod lower;
+mod stream;
 
 pub use ir::{
     Buffer, ComputeStep, GemmPlan, LevelFootprint, PackStep, PlanStep, ReleaseStep,
 };
 pub use lower::PlanError;
+pub use stream::{PlanSpec, PlanSteps};

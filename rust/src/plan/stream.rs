@@ -1,0 +1,501 @@
+//! Streaming plan evaluation: the validated [`PlanSpec`] descriptor and
+//! the lazy [`PlanSteps`] iterator that generates the loop-nest step
+//! stream on the fly.
+//!
+//! [`GemmPlan::lower`] materializes the full step vector (~88 B/step),
+//! which is fine for executing drivers (they walk every step anyway) but
+//! wasteful for *cost-only* consumers: a `tune()` sweep over a huge
+//! problem with tiny candidate strides would allocate hundreds of MB of
+//! transient steps per candidate just to fold them into one
+//! [`CycleBreakdown`](crate::sim::CycleBreakdown). A [`PlanSpec`] is the
+//! O(1) alternative: the same plan-time validation (CCP feasibility,
+//! per-level peak-residency budgets — peaks are closed-form, reached at
+//! the first full block of each loop), the same footprint table, and a
+//! [`PlanSpec::walk`] iterator whose step stream is **bit-identical** to
+//! the materialized [`GemmPlan::steps`] (property-pinned in
+//! `tests/plan_conformance.rs`). [`GemmPlan::lower`] itself is now a
+//! thin wrapper that collects this iterator, so the two paths cannot
+//! drift: there is one loop-nest generator in the crate.
+
+use super::ir::{
+    Buffer, ComputeStep, GemmPlan, LevelFootprint, PackStep, PlanStep, ReleaseStep,
+};
+use super::lower::PlanError;
+use crate::arch::{MemLevel, VersalArch};
+use crate::gemm::ccp::LOCAL_RESERVED_BYTES;
+use crate::gemm::{Ccp, GemmConfig, Precision, MR, NR};
+
+/// A validated GEMM plan *descriptor*: everything [`GemmPlan`] knows
+/// except the materialized step vector. Construction performs the same
+/// feasibility checks as [`GemmPlan::lower`] (same errors, same order)
+/// in O(1) time and memory; the step stream is generated lazily by
+/// [`PlanSpec::walk`] and priced allocation-free by
+/// [`PlanSpec::cost_streaming`](PlanSpec::cost_streaming).
+#[derive(Debug, Clone)]
+pub struct PlanSpec {
+    /// Rows of A / C.
+    pub m: usize,
+    /// Columns of B / C.
+    pub n: usize,
+    /// The reduction dimension.
+    pub k: usize,
+    /// Element precision the spec was validated for.
+    pub precision: Precision,
+    /// Cache configuration parameters (loop strides).
+    pub ccp: Ccp,
+    /// AIE tiles loop L4 distributes over.
+    pub tiles: usize,
+    /// Whether costing the plan charges pack cycles.
+    pub count_packing: bool,
+    /// Steady-state Ar streaming (full-GEMM regime) vs isolated kernels.
+    pub steady_stream: bool,
+    /// Whether the B operand is prepacked (weight-stationary serving).
+    pub prepacked_b: bool,
+    pub(crate) footprints: Vec<LevelFootprint>,
+}
+
+impl PlanSpec {
+    /// Validate a GEMM problem in O(1) — the exact checks of
+    /// [`GemmPlan::lower`], without generating a single step.
+    ///
+    /// Peak residencies are closed-form: every loop's largest effective
+    /// extent occurs at its first block (`min(stride, dim)`), and every
+    /// combination of loop positions occurs, so the per-level maxima are
+    /// products of per-loop maxima — no walk needed.
+    pub fn new(
+        arch: &VersalArch,
+        cfg: &GemmConfig,
+        m: usize,
+        n: usize,
+        k: usize,
+        precision: Precision,
+        prepacked_b: bool,
+    ) -> Result<PlanSpec, PlanError> {
+        let elem = precision.elem_bytes();
+        cfg.ccp.check(arch, elem).map_err(PlanError::Infeasible)?;
+        let Ccp { mc, nc, kc } = cfg.ccp;
+
+        // Peak residency per level, indexed in MemLevel::ALL order:
+        // [vreg, local, uram, bram, ddr].
+        let mut peak = [0u64; 5];
+        // Cr: one mr × nr accumulator tile per tile, resident throughout.
+        peak[0] = (MR * NR) as u64 * precision.acc_bytes();
+        // DDR holds the whole operands A, B and C for the duration;
+        // shape-only and CCP-independent, checked first so an impossible
+        // problem fails before anything else (same order as `lower`).
+        peak[4] = (m * k + k * n) as u64 * elem + (m * n) as u64 * precision.acc_bytes();
+        let ddr = arch.mem_capacity(MemLevel::Ddr);
+        if peak[4] > ddr {
+            return Err(PlanError::Oversubscribed {
+                operands: MemLevel::Ddr.operands(),
+                level: MemLevel::Ddr,
+                need: peak[4],
+                budget: ddr,
+            });
+        }
+        // Bc / Br / Ac peaks: the first (jc, pc, ic) block is the
+        // largest — effective extents only shrink at the edges.
+        if n > 0 && k > 0 {
+            let nc_max = nc.min(n);
+            let kc_max = kc.min(k);
+            peak[3] = (nc_max.div_ceil(NR) * kc_max * NR) as u64 * elem;
+            peak[1] = (kc_max * NR) as u64 * elem;
+            if m > 0 {
+                let mc_max = mc.min(m);
+                peak[2] = (mc_max.div_ceil(MR) * MR * kc_max) as u64 * elem;
+            }
+        }
+
+        let mut footprints = Vec::with_capacity(MemLevel::ALL.len());
+        for (i, &level) in MemLevel::ALL.iter().enumerate() {
+            let capacity_bytes = arch.mem_capacity(level);
+            let reserved_bytes =
+                if level == MemLevel::LocalMemory { LOCAL_RESERVED_BYTES } else { 0 };
+            let fp = LevelFootprint { level, peak_bytes: peak[i], capacity_bytes, reserved_bytes };
+            if fp.peak_bytes > fp.budget_bytes() {
+                return Err(PlanError::Oversubscribed {
+                    operands: level.operands(),
+                    level,
+                    need: fp.peak_bytes,
+                    budget: fp.budget_bytes(),
+                });
+            }
+            footprints.push(fp);
+        }
+
+        Ok(PlanSpec {
+            m,
+            n,
+            k,
+            precision,
+            ccp: cfg.ccp,
+            tiles: cfg.tiles,
+            count_packing: cfg.count_packing,
+            steady_stream: cfg.steady_stream,
+            prepacked_b,
+            footprints,
+        })
+    }
+
+    /// The lazy step stream — bit-identical to the materialized
+    /// [`GemmPlan::steps`] of the same problem, generated on the fly.
+    pub fn walk(&self) -> PlanSteps {
+        PlanSteps::new(self.m, self.n, self.k, self.ccp, self.precision, self.prepacked_b)
+    }
+
+    /// Peak per-level residency, in [`MemLevel::ALL`] order (identical
+    /// to the lowered plan's [`GemmPlan::footprints`]).
+    pub fn footprints(&self) -> &[LevelFootprint] {
+        &self.footprints
+    }
+
+    /// The footprint row of one level.
+    pub fn footprint(&self, level: MemLevel) -> &LevelFootprint {
+        self.footprints
+            .iter()
+            .find(|f| f.level == level)
+            .expect("all levels accounted at validation")
+    }
+
+    /// The driver configuration this spec was validated from.
+    pub fn gemm_config(&self) -> GemmConfig {
+        GemmConfig {
+            ccp: self.ccp,
+            tiles: self.tiles,
+            count_packing: self.count_packing,
+            steady_stream: self.steady_stream,
+        }
+    }
+
+    /// Loop-L1 iterations (`ceil(n / nc)`).
+    pub fn jc_blocks(&self) -> usize {
+        self.n.div_ceil(self.ccp.nc.max(1))
+    }
+
+    /// Loop-L2 iterations (`ceil(k / kc)`).
+    pub fn pc_blocks(&self) -> usize {
+        self.k.div_ceil(self.ccp.kc.max(1))
+    }
+
+    /// Loop-L3 iterations (`ceil(m / mc)`).
+    pub fn ic_blocks(&self) -> usize {
+        self.m.div_ceil(self.ccp.mc.max(1))
+    }
+
+    /// Number of (jc, pc, ic) block products the stream will emit.
+    pub fn n_compute_steps(&self) -> usize {
+        self.jc_blocks() * self.pc_blocks() * self.ic_blocks()
+    }
+
+    /// Length of the step stream, closed-form: per (jc, pc) block one
+    /// Bc pack + one Bc release plus three steps (pack Ac, compute,
+    /// release Ac) per ic block. What `walk().count()` would return,
+    /// without walking.
+    pub fn n_steps(&self) -> usize {
+        self.jc_blocks() * self.pc_blocks() * (2 + 3 * self.ic_blocks())
+    }
+
+    /// Effective MACs of the plan: `Σ mc_eff · nc_eff · kc_eff = m·n·k`
+    /// (the edge-trimmed extents partition the iteration space).
+    pub fn total_macs(&self) -> u64 {
+        self.m as u64 * self.n as u64 * self.k as u64
+    }
+
+    /// Materialize into a [`GemmPlan`] by collecting the step stream —
+    /// the body of [`GemmPlan::lower`].
+    pub(crate) fn materialize(self) -> GemmPlan {
+        let steps: Vec<PlanStep> = self.walk().collect();
+        debug_assert_eq!(steps.len(), self.n_steps(), "closed-form step count drifted");
+        GemmPlan {
+            m: self.m,
+            n: self.n,
+            k: self.k,
+            precision: self.precision,
+            ccp: self.ccp,
+            tiles: self.tiles,
+            count_packing: self.count_packing,
+            steady_stream: self.steady_stream,
+            prepacked_b: self.prepacked_b,
+            steps,
+            footprints: self.footprints,
+        }
+    }
+}
+
+/// Where the step generator stands inside the L1/L2/L3 nest.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Phase {
+    /// About to test/enter a loop-L1 (`jc`) iteration.
+    EnterJc,
+    /// About to test/enter a loop-L2 (`pc`) iteration (emits `Pack(Bc)`).
+    EnterPc,
+    /// About to test/enter a loop-L3 (`ic`) iteration (emits `Pack(Ac)`).
+    EnterIc,
+    /// The resident (Ac, Bc) pair's block product is next.
+    EmitCompute,
+    /// The Ac release closing the current ic iteration is next.
+    EmitReleaseA,
+    /// The Bc release closing the current pc iteration is next.
+    EmitReleaseB,
+    /// Stream exhausted.
+    Done,
+}
+
+/// Lazy generator of the lowered loop-nest step stream — the exact
+/// sequence [`GemmPlan::steps`] holds, produced one step at a time with
+/// no allocation. Obtain via [`PlanSpec::walk`] or
+/// [`GemmPlan::steps_iter`]; the backing geometry has always been
+/// validated by then (unvalidated zero strides would not terminate).
+#[derive(Debug, Clone)]
+pub struct PlanSteps {
+    m: usize,
+    n: usize,
+    k: usize,
+    mc: usize,
+    nc: usize,
+    kc: usize,
+    elem: u64,
+    prepacked_b: bool,
+    jc: usize,
+    pc: usize,
+    ic: usize,
+    nc_eff: usize,
+    kc_eff: usize,
+    mc_eff: usize,
+    panels_b: usize,
+    panels_a: usize,
+    bc_bytes: u64,
+    ac_bytes: u64,
+    br_panel_bytes: u64,
+    phase: Phase,
+}
+
+impl PlanSteps {
+    pub(crate) fn new(
+        m: usize,
+        n: usize,
+        k: usize,
+        ccp: Ccp,
+        precision: Precision,
+        prepacked_b: bool,
+    ) -> PlanSteps {
+        // Validation (Ccp::check) rejects zero strides long before a
+        // generator is built, but a caller mutating a plan's pub fields
+        // could reintroduce one — make the would-be infinite walk loud.
+        debug_assert!(
+            ccp.mc > 0 && ccp.nc > 0 && ccp.kc > 0,
+            "zero CCP stride would not terminate: {:?}",
+            ccp
+        );
+        PlanSteps {
+            m,
+            n,
+            k,
+            mc: ccp.mc,
+            nc: ccp.nc,
+            kc: ccp.kc,
+            elem: precision.elem_bytes(),
+            prepacked_b,
+            jc: 0,
+            pc: 0,
+            ic: 0,
+            nc_eff: 0,
+            kc_eff: 0,
+            mc_eff: 0,
+            panels_b: 0,
+            panels_a: 0,
+            bc_bytes: 0,
+            ac_bytes: 0,
+            br_panel_bytes: 0,
+            phase: Phase::EnterJc,
+        }
+    }
+}
+
+impl Iterator for PlanSteps {
+    type Item = PlanStep;
+
+    fn next(&mut self) -> Option<PlanStep> {
+        loop {
+            match self.phase {
+                Phase::EnterJc => {
+                    if self.jc >= self.n {
+                        self.phase = Phase::Done;
+                        continue;
+                    }
+                    self.nc_eff = self.nc.min(self.n - self.jc);
+                    self.panels_b = self.nc_eff.div_ceil(NR);
+                    self.pc = 0;
+                    self.phase = Phase::EnterPc;
+                }
+                Phase::EnterPc => {
+                    if self.pc >= self.k {
+                        self.jc += self.nc_eff;
+                        self.phase = Phase::EnterJc;
+                        continue;
+                    }
+                    self.kc_eff = self.kc.min(self.k - self.pc);
+                    self.bc_bytes = (self.panels_b * self.kc_eff * NR) as u64 * self.elem;
+                    self.br_panel_bytes = (self.kc_eff * NR) as u64 * self.elem;
+                    self.ic = 0;
+                    self.phase = Phase::EnterIc;
+                    return Some(PlanStep::Pack(PackStep {
+                        buffer: Buffer::Bc,
+                        level: MemLevel::BlockRam,
+                        row_off: self.pc,
+                        col_off: self.jc,
+                        rows: self.kc_eff,
+                        cols: self.nc_eff,
+                        bytes: self.bc_bytes,
+                        charged: !self.prepacked_b,
+                    }));
+                }
+                Phase::EnterIc => {
+                    if self.ic >= self.m {
+                        self.phase = Phase::EmitReleaseB;
+                        continue;
+                    }
+                    self.mc_eff = self.mc.min(self.m - self.ic);
+                    self.panels_a = self.mc_eff.div_ceil(MR);
+                    self.ac_bytes = (self.panels_a * MR * self.kc_eff) as u64 * self.elem;
+                    self.phase = Phase::EmitCompute;
+                    return Some(PlanStep::Pack(PackStep {
+                        buffer: Buffer::Ac,
+                        level: MemLevel::UltraRam,
+                        row_off: self.ic,
+                        col_off: self.pc,
+                        rows: self.mc_eff,
+                        cols: self.kc_eff,
+                        bytes: self.ac_bytes,
+                        charged: true,
+                    }));
+                }
+                Phase::EmitCompute => {
+                    self.phase = Phase::EmitReleaseA;
+                    return Some(PlanStep::Compute(ComputeStep {
+                        jc: self.jc,
+                        pc: self.pc,
+                        ic: self.ic,
+                        nc_eff: self.nc_eff,
+                        kc_eff: self.kc_eff,
+                        mc_eff: self.mc_eff,
+                        panels_a: self.panels_a,
+                        panels_b: self.panels_b,
+                        br_panel_bytes: self.br_panel_bytes,
+                    }));
+                }
+                Phase::EmitReleaseA => {
+                    self.ic += self.mc_eff;
+                    self.phase = Phase::EnterIc;
+                    return Some(PlanStep::Release(ReleaseStep {
+                        buffer: Buffer::Ac,
+                        level: MemLevel::UltraRam,
+                        bytes: self.ac_bytes,
+                    }));
+                }
+                Phase::EmitReleaseB => {
+                    self.pc += self.kc_eff;
+                    self.phase = Phase::EnterPc;
+                    return Some(PlanStep::Release(ReleaseStep {
+                        buffer: Buffer::Bc,
+                        level: MemLevel::BlockRam,
+                        bytes: self.bc_bytes,
+                    }));
+                }
+                Phase::Done => return None,
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::vc1902;
+
+    fn cfg(mc: usize, nc: usize, kc: usize, tiles: usize) -> GemmConfig {
+        GemmConfig {
+            ccp: Ccp { mc, nc, kc },
+            tiles,
+            count_packing: false,
+            steady_stream: true,
+        }
+    }
+
+    #[test]
+    fn stream_equals_materialized_on_edge_shape() {
+        let arch = vc1902();
+        let c = cfg(16, 16, 32, 2);
+        for prepacked in [false, true] {
+            let plan =
+                GemmPlan::lower(&arch, &c, 37, 29, 53, Precision::U8, prepacked).unwrap();
+            let spec = PlanSpec::new(&arch, &c, 37, 29, 53, Precision::U8, prepacked).unwrap();
+            let streamed: Vec<PlanStep> = spec.walk().collect();
+            assert_eq!(streamed, plan.steps(), "prepacked={prepacked}");
+            assert_eq!(spec.n_steps(), plan.steps().len());
+            assert_eq!(spec.n_compute_steps(), plan.n_compute_steps());
+            assert_eq!(spec.footprints(), plan.footprints());
+        }
+    }
+
+    #[test]
+    fn spec_validation_matches_lower_errors() {
+        let arch = vc1902();
+        // Infeasible CCP: same error either way.
+        let e1 = PlanSpec::new(&arch, &cfg(8, 8, 8192, 1), 8, 8, 8, Precision::U8, false)
+            .unwrap_err();
+        let e2 = GemmPlan::lower(&arch, &cfg(8, 8, 8192, 1), 8, 8, 8, Precision::U8, false)
+            .unwrap_err();
+        assert_eq!(e1, e2);
+        // DDR oversubscription: same error either way.
+        let mut small = vc1902();
+        for mem in small.mem.iter_mut() {
+            if mem.level == MemLevel::Ddr {
+                mem.capacity_bytes = 16 * 1024 * 1024;
+            }
+        }
+        let e1 = PlanSpec::new(&small, &cfg(256, 256, 1024, 8), 4096, 4096, 4096, Precision::U8, false)
+            .unwrap_err();
+        let e2 = GemmPlan::lower(&small, &cfg(256, 256, 1024, 8), 4096, 4096, 4096, Precision::U8, false)
+            .unwrap_err();
+        assert_eq!(e1, e2);
+    }
+
+    #[test]
+    fn degenerate_dims_stream_like_the_lowered_plan() {
+        let arch = vc1902();
+        let c = cfg(8, 8, 8, 1);
+        for (m, n, k) in [(8, 0, 8), (0, 8, 8), (8, 8, 0), (0, 0, 0)] {
+            let plan = GemmPlan::lower(&arch, &c, m, n, k, Precision::U8, false).unwrap();
+            let spec = PlanSpec::new(&arch, &c, m, n, k, Precision::U8, false).unwrap();
+            let streamed: Vec<PlanStep> = spec.walk().collect();
+            assert_eq!(streamed, plan.steps(), "({m}, {n}, {k})");
+            assert_eq!(spec.n_steps(), plan.steps().len(), "({m}, {n}, {k})");
+            assert_eq!(spec.footprints(), plan.footprints(), "({m}, {n}, {k})");
+        }
+    }
+
+    #[test]
+    fn closed_form_peaks_scale_with_element_width() {
+        let arch = vc1902();
+        let c = cfg(16, 16, 32, 1);
+        let s8 = PlanSpec::new(&arch, &c, 32, 32, 32, Precision::U8, false).unwrap();
+        let s16 = PlanSpec::new(&arch, &c, 32, 32, 32, Precision::I16, false).unwrap();
+        for level in [MemLevel::LocalMemory, MemLevel::UltraRam, MemLevel::BlockRam] {
+            assert_eq!(
+                s16.footprint(level).peak_bytes,
+                2 * s8.footprint(level).peak_bytes,
+                "{level:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn steps_iter_on_a_lowered_plan_replays_its_steps() {
+        let arch = vc1902();
+        let plan =
+            GemmPlan::lower(&arch, &cfg(16, 16, 16, 2), 24, 24, 24, Precision::I8, true).unwrap();
+        let replay: Vec<PlanStep> = plan.steps_iter().collect();
+        assert_eq!(replay, plan.steps());
+    }
+}

@@ -7,7 +7,7 @@ use crate::cluster::{
 use crate::coordinator::{LatencyStats, ServingReport};
 use crate::gemm::parallel::{ParallelGemm, Table2Row};
 use crate::gemm::{tuner, GemmConfig, Precision, MR, NR};
-use crate::plan::GemmPlan;
+use crate::plan::LevelFootprint;
 use crate::sim::{AieTileModel, Gmio, KernelMode};
 use crate::util::tabulate::{Align, Table};
 
@@ -292,13 +292,15 @@ pub fn cluster_table(rows: &[ClusterScalingRow]) -> Table {
     t
 }
 
-/// Render a lowered plan's per-level footprint/residency accounting as
-/// a table: Table 1's rows (memory, cache analogue, operands) extended
+/// Render a plan's per-level footprint/residency accounting as a
+/// table: Table 1's rows (memory, cache analogue, operands) extended
 /// with the plan's peak residency, the level's budget (capacity minus
 /// any reserved slice) and the resulting utilisation — the §3/Table-1
 /// "flexible exploitation of the memory hierarchy", as numbers for one
-/// concrete plan.
-pub fn footprint_table(plan: &GemmPlan) -> Table {
+/// concrete plan. Takes the footprint rows themselves so both the
+/// materialized [`crate::plan::GemmPlan::footprints`] and the streaming
+/// [`crate::plan::PlanSpec::footprints`] render through one table.
+pub fn footprint_table(footprints: &[LevelFootprint]) -> Table {
     let mut t = Table::new(&[
         "Memory",
         "Cache",
@@ -311,7 +313,7 @@ pub fn footprint_table(plan: &GemmPlan) -> Table {
     .align(0, Align::Left)
     .align(1, Align::Left)
     .align(2, Align::Left);
-    for fp in plan.footprints() {
+    for fp in footprints {
         t.row(&[
             fp.level.name().to_string(),
             fp.level.cache_analogue().to_string(),
@@ -358,6 +360,23 @@ pub fn serving_table(r: &ServingReport) -> Table {
             "{:.2} / {:.2} MiB",
             r.cache.bytes as f64 / (1u64 << 20) as f64,
             r.cache.budget_bytes as f64 / (1u64 << 20) as f64
+        ),
+    );
+    kv(
+        "plan cache hits / misses",
+        format!(
+            "{} / {} ({:.0}% hit rate)",
+            r.plan_cache.hits,
+            r.plan_cache.misses,
+            r.plan_cache.hit_rate() * 100.0
+        ),
+    );
+    kv(
+        "plans lowered (miss path)",
+        format!(
+            "{} ({:.2} ms host lowering)",
+            r.plan_cache.lowered,
+            r.plan_cache.lower_ns as f64 / 1e6
         ),
     );
     kv("pack cycles", fmt_kcycles(r.pack_cycles));
@@ -491,7 +510,7 @@ mod tests {
 
     #[test]
     fn serving_and_latency_tables_render() {
-        use crate::coordinator::CacheStats;
+        use crate::coordinator::{CacheStats, PlanCacheStats};
         let report = ServingReport {
             completed: 10,
             expired: 1,
@@ -507,6 +526,16 @@ mod tests {
                 bytes: 1 << 20,
                 budget_bytes: 4 << 20,
             },
+            plan_cache: PlanCacheStats {
+                hits: 4,
+                misses: 2,
+                evictions: 0,
+                uncacheable: 0,
+                bytes: 2048,
+                budget_bytes: 1 << 20,
+                lowered: 2,
+                lower_ns: 1_500_000,
+            },
             pack_cycles: 1000,
             transfer_cycles: 2000,
             compute_cycles: 3000,
@@ -517,6 +546,10 @@ mod tests {
         let txt = serving_table(&report).to_text();
         assert!(txt.contains("requests completed"), "{txt}");
         assert!(txt.contains("67% hit rate"), "{txt}");
+        assert!(txt.contains("plan cache hits / misses"), "{txt}");
+        assert!(txt.contains("4 / 2"), "plan cache counters rendered: {txt}");
+        assert!(txt.contains("plans lowered"), "{txt}");
+        assert!(txt.contains("1.50 ms"), "lowering time rendered: {txt}");
         assert!(txt.contains("pipelined makespan"), "{txt}");
         assert!(txt.contains("25.0%"), "overlap win rendered: {txt}");
         let l = LatencyStats {
@@ -534,6 +567,7 @@ mod tests {
 
     #[test]
     fn footprint_table_covers_all_levels() {
+        use crate::plan::{GemmPlan, PlanSpec};
         let arch = vc1902();
         let plan = GemmPlan::lower(
             &arch,
@@ -545,7 +579,7 @@ mod tests {
             false,
         )
         .unwrap();
-        let t = footprint_table(&plan);
+        let t = footprint_table(plan.footprints());
         assert_eq!(t.n_rows(), 5, "one row per memory level");
         let txt = t.to_text();
         // Table-1 residency of the paper problem: 512 KB Ac and Bc,
@@ -554,6 +588,19 @@ mod tests {
         assert!(txt.contains("512 KB"), "{txt}");
         assert!(txt.contains("16 KB"), "{txt}");
         assert!(txt.contains("Bc"), "{txt}");
+        // The streaming spec's footprints render the identical table —
+        // what `plan --cost-only` prints without materializing steps.
+        let spec = PlanSpec::new(
+            &arch,
+            &GemmConfig::paper_table2(8),
+            256,
+            256,
+            2048,
+            Precision::U8,
+            false,
+        )
+        .unwrap();
+        assert_eq!(footprint_table(spec.footprints()).to_text(), txt);
     }
 
     #[test]

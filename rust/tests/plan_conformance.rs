@@ -27,7 +27,7 @@ use versal_gemm::gemm::precision::Bf16;
 use versal_gemm::gemm::{
     tuner, BlockedGemm, Ccp, Element, GemmConfig, Mat, MatI32, MatU8, ParallelGemm, Precision,
 };
-use versal_gemm::plan::{Buffer, GemmPlan, PlanStep};
+use versal_gemm::plan::{Buffer, GemmPlan, PlanSpec, PlanStep};
 use versal_gemm::util::quickcheck::prop;
 use versal_gemm::util::Pcg32;
 
@@ -304,6 +304,134 @@ fn prop_executed_equals_predicted_random_geometry() {
                 executed,
                 plan.cost(&arch)
             ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_streamed_steps_equal_materialized_steps() {
+    // The streaming refactor's headline property: for arbitrary shapes,
+    // CCPs, precisions and the prepacked flag, across every arch
+    // preset, the lazy PlanSteps generator emits the *bit-identical*
+    // stream the materialized plan holds — and the O(1)-validated spec
+    // carries the same footprints and closed-form step counts.
+    let presets: [(&str, fn() -> VersalArch); 3] = [
+        ("vc1902", vc1902),
+        ("vck190", vck190_arch),
+        ("scaled_2x", scaled_acap_2x),
+    ];
+    for (preset_name, preset) in presets {
+        for prec in Precision::ALL {
+            let arch = preset();
+            prop(
+                &format!("plan-stream-eq-{preset_name}-{prec}"),
+                0x57AE ^ prec.elem_bytes(),
+                25,
+                |g| {
+                    let m = g.dim(64);
+                    let n = g.dim(64);
+                    let k = g.dim(64);
+                    let cfg = cfg(
+                        g.rng.range(1, 64),
+                        g.rng.range(1, 64),
+                        g.rng.range(1, 64),
+                        g.rng.range(1, 9),
+                    );
+                    let prepacked = g.rng.range(0, 2) == 1;
+                    let spec = match PlanSpec::new(&arch, &cfg, m, n, k, prec, prepacked) {
+                        Ok(s) => s,
+                        // Infeasible geometry must refuse identically on
+                        // both paths.
+                        Err(e) => {
+                            let lowered =
+                                GemmPlan::lower(&arch, &cfg, m, n, k, prec, prepacked);
+                            return match lowered {
+                                Err(e2) if e2 == e => Ok(()),
+                                Err(e2) => {
+                                    Err(format!("error drift: spec {e} vs lower {e2}"))
+                                }
+                                Ok(_) => Err(format!("spec refused ({e}) but lower ran")),
+                            };
+                        }
+                    };
+                    let plan = GemmPlan::lower(&arch, &cfg, m, n, k, prec, prepacked)
+                        .map_err(|e| format!("spec validated but lower failed: {e}"))?;
+                    let streamed: Vec<PlanStep> = spec.walk().collect();
+                    if streamed != plan.steps() {
+                        return Err(format!(
+                            "({m},{n},{k}) {} prepacked={prepacked}: streamed steps \
+                             diverge from materialized",
+                            cfg.ccp
+                        ));
+                    }
+                    let replay: Vec<PlanStep> = plan.steps_iter().collect();
+                    if replay != plan.steps() {
+                        return Err("steps_iter() diverges from steps()".into());
+                    }
+                    if spec.footprints() != plan.footprints() {
+                        return Err("spec footprints diverge from lowered".into());
+                    }
+                    if spec.n_steps() != plan.steps().len() {
+                        return Err(format!(
+                            "closed-form n_steps {} != {}",
+                            spec.n_steps(),
+                            plan.steps().len()
+                        ));
+                    }
+                    if spec.n_compute_steps() != plan.n_compute_steps() {
+                        return Err("closed-form compute count drifted".into());
+                    }
+                    if spec.total_macs() != plan.total_macs() {
+                        return Err("closed-form MACs drifted".into());
+                    }
+                    Ok(())
+                },
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_streaming_cost_equals_materialized_cost() {
+    // The tuner's allocation-free fold prices bit-identically to the
+    // materialized plan, across shapes, CCPs, tile counts, the packing
+    // flag and the prepacked flag.
+    let arch = vc1902();
+    prop("plan-streaming-cost-eq", 0xC057, 50, |g| {
+        let m = g.dim(48);
+        let n = g.dim(48);
+        let k = g.dim(48);
+        let mut cfg = cfg(
+            g.rng.range(1, 48),
+            g.rng.range(1, 48),
+            g.rng.range(1, 48),
+            g.rng.range(1, 9),
+        );
+        cfg.count_packing = g.rng.range(0, 2) == 1;
+        let prepacked = g.rng.range(0, 2) == 1;
+        let prec = Precision::ALL[g.rng.range(0, 4)];
+        let spec = match PlanSpec::new(&arch, &cfg, m, n, k, prec, prepacked) {
+            Ok(s) => s,
+            Err(_) => return Ok(()),
+        };
+        let plan = GemmPlan::lower(&arch, &cfg, m, n, k, prec, prepacked)
+            .map_err(|e| e.to_string())?;
+        let streaming = spec.cost_streaming(&arch);
+        let materialized = plan.cost(&arch);
+        if streaming != materialized {
+            return Err(format!(
+                "({m},{n},{k}) {prec} {} count_packing={} prepacked={prepacked}: \
+                 streaming {streaming:?} != materialized {materialized:?}",
+                cfg.ccp, cfg.count_packing
+            ));
+        }
+        // And the tuner's public entry point reports the same total for
+        // the dense case it predicts.
+        if !prepacked
+            && tuner::predict_cycles_p(&arch, &cfg, m, n, k, prec) != materialized.total
+        {
+            return Err("tuner prediction drifted from plan cost".into());
         }
         Ok(())
     });

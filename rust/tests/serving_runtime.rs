@@ -161,4 +161,49 @@ fn warm_cache_replay_bit_exact_and_cheaper() {
     );
     let r = rt.report();
     assert_eq!(r.cache.hits, 2, "both layers hit on the warm wave");
+    // The plan cache amortised the lowering identically: one plan per
+    // layer on the cold wave, pure hits on the warm replay.
+    assert_eq!(r.plan_cache.lowered, 2, "plans lowered once, not per wave");
+    assert_eq!(r.plan_cache.hits, 2, "warm wave reused both layer plans");
+}
+
+#[test]
+fn plan_cache_off_is_bit_exact_and_same_cycles_as_on() {
+    // The lowered-plan cache is a host-side optimisation: switching it
+    // off (budget 0 ⇒ re-lower per batch, the pre-cache behaviour) must
+    // change *nothing* in the simulated cycle domain or the logits —
+    // only the lowering counters.
+    let run = |plan_budget: u64| {
+        let mut rt = small_runtime(ServingConfig {
+            max_batch: 4,
+            plan_cache_budget_bytes: plan_budget,
+            ..Default::default()
+        });
+        let fs = features(4, 5);
+        for now in [0u64, 1_000] {
+            for f in &fs {
+                rt.submit(f.clone(), Precision::U8, now).unwrap();
+            }
+            rt.drain(now);
+        }
+        let logits: Vec<Vec<f32>> = {
+            // Re-serve a third identical wave and collect its outcomes.
+            for f in &fs {
+                rt.submit(f.clone(), Precision::U8, 2_000).unwrap();
+            }
+            rt.drain(2_000).into_iter().map(|o| o.logits).collect()
+        };
+        (logits, rt.report())
+    };
+    let (on_logits, on) = run(8 << 20);
+    let (off_logits, off) = run(0);
+    assert_eq!(on_logits, off_logits, "plan cache must not change numerics");
+    assert_eq!(on.pack_cycles, off.pack_cycles, "same simulated pack charges");
+    assert_eq!(on.pipelined_cycles, off.pipelined_cycles, "same makespan");
+    // Three waves × 2 layers: the cache lowers once per layer, the
+    // re-lower-per-batch baseline lowers on every wave.
+    assert_eq!(on.plan_cache.lowered, 2);
+    assert_eq!(off.plan_cache.lowered, 6);
+    assert_eq!(off.plan_cache.hits, 0);
+    assert!(on.plan_cache.hits >= 4, "warm waves hit the resident plans");
 }

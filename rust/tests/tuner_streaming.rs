@@ -1,0 +1,83 @@
+//! The tuner's streaming-cost contract: predicting a schedule allocates
+//! O(1) memory — **no per-candidate step vector** — however many blocks
+//! the candidate's loop nest has.
+//!
+//! Pinned with a counting global allocator: the bytes allocated while
+//! pricing a huge many-block problem must not exceed (a small slack
+//! over) the bytes allocated while pricing a single-block one. The
+//! pre-streaming path materialized ~88 B per step, so the big problem
+//! below (32 768 compute blocks, ~100 k steps ≈ 8.6 MB of transient
+//! steps) would fail the bound by three orders of magnitude.
+//!
+//! This file deliberately holds a single `#[test]`: the harness runs
+//! tests of one binary concurrently, and a second test would race the
+//! global allocation counter.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use versal_gemm::arch::vc1902;
+use versal_gemm::gemm::{tuner, Ccp, GemmConfig, Precision};
+
+struct CountingAlloc;
+
+static BYTES: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        BYTES.fetch_add(new_size as u64, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+fn allocated_during(f: impl FnOnce() -> u64) -> (u64, u64) {
+    let before = BYTES.load(Ordering::SeqCst);
+    let out = f();
+    (out, BYTES.load(Ordering::SeqCst) - before)
+}
+
+#[test]
+fn predict_cycles_allocates_o1_not_per_step() {
+    let arch = vc1902();
+    // Tiny-stride candidate on a small problem: 8 compute blocks.
+    let mut small = GemmConfig::paper_table2(4);
+    small.ccp = Ccp { mc: 32, nc: 32, kc: 64 };
+    // The same tiny strides on a big problem: 32 × 32 × 32 = 32 768
+    // compute blocks — ~100 k steps if anything materializes them.
+    let big = small.clone();
+
+    // Warm up once so lazily-initialised runtime state (thread locals,
+    // stdio, ...) does not land in either measurement.
+    let _ = tuner::predict_cycles_p(&arch, &small, 64, 64, 128, Precision::U8);
+
+    let (small_cycles, small_bytes) = allocated_during(|| {
+        tuner::predict_cycles_p(&arch, &small, 64, 64, 128, Precision::U8)
+    });
+    let (big_cycles, big_bytes) = allocated_during(|| {
+        tuner::predict_cycles_p(&arch, &big, 1024, 1024, 2048, Precision::U8)
+    });
+    assert!(small_cycles > 0 && small_cycles != u64::MAX);
+    assert!(big_cycles > small_cycles, "4096× the MACs must cost more");
+
+    // O(1): the 4096×-bigger plan may not allocate step-proportional
+    // memory. Allow generous constant slack (footprint rows, error
+    // paths), but nothing near the ~8.6 MB a materialized step vector
+    // would cost — or even one step vector of the small problem.
+    assert!(
+        big_bytes <= small_bytes + 4096,
+        "streaming cost must be O(1) memory: big candidate allocated {big_bytes} B \
+         vs small candidate's {small_bytes} B"
+    );
+}
