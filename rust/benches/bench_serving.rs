@@ -77,13 +77,18 @@ fn two_waves(
 }
 
 fn json_row(label: &str, r: &ServingReport) -> String {
+    // The flat fields are the historical trend surface (what
+    // `versal-gemm bench-trend` diffs against older artifacts); the
+    // nested "metrics" object is the full unified registry snapshot —
+    // the same one `serve --trace-out` prints — so new metrics join the
+    // artifact without another hand-rolled field list.
     format!(
         "{{\"mode\":\"{label}\",\"completed\":{},\"batches\":{},\
          \"pack_cycles\":{},\"transfer_cycles\":{},\"compute_cycles\":{},\
          \"pipelined_cycles\":{},\"sequential_cycles\":{},\
          \"cache_hits\":{},\"cache_misses\":{},\
          \"plan_cache_hits\":{},\"plan_cache_misses\":{},\
-         \"plans_lowered\":{},\"plan_lower_ns\":{}}}",
+         \"plans_lowered\":{},\"plan_lower_ns\":{},\"metrics\":{}}}",
         r.completed,
         r.batches,
         r.pack_cycles,
@@ -97,6 +102,7 @@ fn json_row(label: &str, r: &ServingReport) -> String {
         r.plan_cache.misses,
         r.plan_cache.lowered,
         r.plan_cache.lower_ns,
+        r.metrics().to_json(),
     )
 }
 

@@ -32,7 +32,7 @@ COMMANDS:
                                driven search; extension of §4.3)
   plan     --m M --n N --k K [--precision u8|i8|i16|bf16] [--tiles T]
            [--mc MC --nc NC --kc KC] [--count-packing] [--prepacked]
-           [--cost-only]
+           [--cost-only] [--trace-out FILE]
                                lower the problem to the unified execution
                                plan: the explicit L1/L2/L3 loop nest with
                                edge-trimmed extents, the packing steps and
@@ -42,7 +42,10 @@ COMMANDS:
                                predicted schedule the drivers will execute.
                                --cost-only prices the shape through the
                                streaming path (no step vector is ever
-                               materialized — O(1) memory per shape)
+                               materialized — O(1) memory per shape);
+                               --trace-out writes the lowered plan's
+                               pack/compute/release timeline as Chrome
+                               trace-event JSON (Perfetto-loadable)
   energy   [--tiles T]         energy estimate of the paper problem
                                (extension; pJ model over the breakdown)
   noc      [--tiles T]         NoC placement + multicast/fan-out costs
@@ -63,7 +66,7 @@ COMMANDS:
            [--mix u8:8,i16:3,bf16:1] [--slo-ms M] [--cache-mb MB]
            [--plan-cache-mb MB] [--devices D]
            [--arrivals poisson|uniform|bursty]
-           [--engine runtime|threads] [--workers W]
+           [--engine runtime|threads] [--workers W] [--trace-out FILE]
                                replay a synthetic mixed-precision request
                                trace through the continuous-batching
                                runtime (admission SLOs, fused same-
@@ -72,7 +75,17 @@ COMMANDS:
                                pack/transfer/compute); report latency
                                percentiles + cache hit rates. --engine
                                threads runs the wall-clock threaded
-                               coordinator instead
+                               coordinator instead; --trace-out writes
+                               the end-to-end request spans + pipeline
+                               stage spans as Chrome trace-event JSON
+                               and prints the unified metrics registry
+  bench-trend PREV CURR [--threshold PCT] [--fail-on-regress]
+                               diff two BENCH_*.json artifacts metric by
+                               metric (flattened numeric paths): delta
+                               table, with cycle-domain metrics that
+                               grew more than PCT% (default 5) flagged
+                               as regressions. Advisory by default;
+                               --fail-on-regress makes them exit 2
   help                         show this text
 
 GLOBAL OPTIONS:
@@ -128,9 +141,12 @@ fn run(argv: Vec<String>) -> Result<(), String> {
         .opt("plan-cache-mb")
         .opt("engine")
         .opt("precision")
+        .opt("trace-out")
+        .opt("threshold")
         .flag("count-packing")
         .flag("prepacked")
         .flag("cost-only")
+        .flag("fail-on-regress")
         .parse(&argv)?;
     let cmd = args.positional().first().map(|s| s.as_str()).unwrap_or("help");
     let arch = load_arch(&args)?;
@@ -161,6 +177,7 @@ fn run(argv: Vec<String>) -> Result<(), String> {
         "precision" => cmd_precision(&arch, &args),
         "cluster" => cmd_cluster(&arch, &args),
         "serve" => cmd_serve(&arch, &args),
+        "bench-trend" => cmd_bench_trend(&args),
         other => Err(format!("unknown command {other:?}; see `versal-gemm help`")),
     }
 }
@@ -445,6 +462,19 @@ fn cmd_plan(arch: &VersalArch, args: &Args) -> Result<(), String> {
         cost.packing
     );
     println!("  effective MACs {macs} (= m*n*k; padded panel lanes retire no useful work)");
+
+    if let Some(path) = args.get("trace-out") {
+        let plan = crate::plan::GemmPlan::lower(arch, &cfg, m, n, k, prec, args.has("prepacked"))
+            .map_err(|e| e.to_string())?;
+        let tracer = crate::obs::Tracer::recording();
+        let traced = crate::obs::trace_plan(arch, &plan, &tracer);
+        std::fs::write(path, crate::obs::to_chrome_json(&tracer.snapshot()))
+            .map_err(|e| format!("cannot write {path}: {e}"))?;
+        println!(
+            "wrote Chrome trace to {path} ({traced} traced cycles) — open in Perfetto \
+             (ui.perfetto.dev) or chrome://tracing"
+        );
+    }
     Ok(())
 }
 
@@ -698,6 +728,12 @@ fn cmd_serve_runtime(arch: &VersalArch, args: &Args) -> Result<(), String> {
         args.get_or("arrivals", "poisson")
     );
     let backend = RustGemmBackend::new(arch.clone(), spec.clone(), seed, tiles);
+    // A disabled tracer is a no-op through the whole runtime, so the
+    // wiring is unconditional and only --trace-out pays for recording.
+    let tracer = match args.get("trace-out") {
+        Some(_) => crate::obs::Tracer::recording(),
+        None => crate::obs::Tracer::disabled(),
+    };
     let mut rt = ServingRuntime::new(
         backend,
         ServingConfig {
@@ -709,7 +745,8 @@ fn cmd_serve_runtime(arch: &VersalArch, args: &Args) -> Result<(), String> {
             plan_cache_budget_bytes: (plan_cache_mb * (1u64 << 20) as f64) as u64,
             pipeline_devices: devices,
         },
-    );
+    )
+    .with_tracer(tracer.clone());
 
     let process = arrival_process(args, rate)?;
     let mut arrivals = ArrivalGen::new(process, seed);
@@ -730,6 +767,16 @@ fn cmd_serve_runtime(arch: &VersalArch, args: &Args) -> Result<(), String> {
     if let Some(l) = &report.latency {
         println!("latency (logical µs, batch completion − arrival):");
         println!("{}", crate::report::latency_table(l).to_text());
+    }
+    if let Some(path) = args.get("trace-out") {
+        std::fs::write(path, crate::obs::to_chrome_json(&tracer.snapshot()))
+            .map_err(|e| format!("cannot write {path}: {e}"))?;
+        println!(
+            "wrote Chrome trace to {path} — open in Perfetto (ui.perfetto.dev) or \
+             chrome://tracing"
+        );
+        println!("\nunified metrics registry:");
+        println!("{}", crate::report::metrics_table(&report.metrics()).to_text());
     }
     println!(
         "served {served}/{requests}; fused same-precision batches amortise packing \
@@ -810,6 +857,112 @@ fn cmd_serve_threads(arch: &VersalArch, args: &Args) -> Result<(), String> {
         metrics.mean_simulated_cycles()
     );
     Ok(())
+}
+
+/// `bench-trend PREV CURR`: diff two BENCH artifacts metric by metric.
+///
+/// Both artifacts are parsed with the crate's own JSON reader and
+/// flattened to `path → number` rows (`rows[1].compute_cycles`, …).
+/// Cycle-domain metrics (paths ending in `cycles`) that grew more than
+/// `--threshold` percent (default 5) are flagged as regressions; the
+/// throughput gauge `requests_per_mcycle` and wall-clock fields like
+/// `lower_ns` are deliberately not gated. Advisory by default — CI runs
+/// it with `--fail-on-regress` to turn flagged rows into exit code 2.
+fn cmd_bench_trend(args: &Args) -> Result<(), String> {
+    use crate::util::json::Json;
+
+    let pos = args.positional();
+    let (prev_path, curr_path) = match (pos.get(1), pos.get(2)) {
+        (Some(p), Some(c)) => (p.as_str(), c.as_str()),
+        _ => {
+            return Err(
+                "usage: bench-trend PREV.json CURR.json [--threshold PCT] [--fail-on-regress]"
+                    .into(),
+            )
+        }
+    };
+    let threshold: f64 = args.get_num("threshold", 5.0)?;
+    if threshold.is_nan() || threshold < 0.0 {
+        return Err("--threshold must be a non-negative percentage".into());
+    }
+
+    let load = |path: &str| -> Result<std::collections::BTreeMap<String, f64>, String> {
+        let text =
+            std::fs::read_to_string(path).map_err(|e| format!("cannot read {path}: {e}"))?;
+        Ok(Json::parse(&text).map_err(|e| format!("{path}: {e}"))?.flatten_numbers())
+    };
+    let prev = load(prev_path)?;
+    let curr = load(curr_path)?;
+
+    // Counters and cycles print without a fraction; rates keep theirs.
+    let fmt = |v: f64| {
+        if v.fract() == 0.0 && v.abs() < 1e15 {
+            format!("{v:.0}")
+        } else {
+            format!("{v:.3}")
+        }
+    };
+
+    let mut t = Table::new(&["Metric", "Prev", "Curr", "Δ%", "Flag"])
+        .align(0, Align::Left)
+        .align(4, Align::Left);
+    let mut regressions: Vec<String> = Vec::new();
+    for (key, curr_v) in &curr {
+        let Some(prev_v) = prev.get(key) else {
+            t.row(&[key.clone(), "-".into(), fmt(*curr_v), "-".into(), "new".into()]);
+            continue;
+        };
+        let delta_pct = if *prev_v == 0.0 {
+            if *curr_v == 0.0 {
+                0.0
+            } else {
+                f64::INFINITY
+            }
+        } else {
+            (curr_v - prev_v) / prev_v.abs() * 100.0
+        };
+        let gated = key.ends_with("cycles");
+        let regressed = gated && delta_pct > threshold;
+        if regressed {
+            regressions.push(format!(
+                "{key} {} → {} ({delta_pct:+.1}%)",
+                fmt(*prev_v),
+                fmt(*curr_v)
+            ));
+        }
+        let delta_txt = if delta_pct.is_infinite() {
+            "+inf".to_string()
+        } else {
+            format!("{delta_pct:+.1}")
+        };
+        let flag = if regressed { "REGRESSED" } else { "" };
+        t.row(&[key.clone(), fmt(*prev_v), fmt(*curr_v), delta_txt, flag.into()]);
+    }
+    for key in prev.keys().filter(|k| !curr.contains_key(*k)) {
+        t.row(&[key.clone(), fmt(prev[key]), "-".into(), "-".into(), "dropped".into()]);
+    }
+    println!("bench trend: {prev_path} → {curr_path} (threshold {threshold}% on *cycles metrics)");
+    println!("{}", t.to_text());
+
+    if regressions.is_empty() {
+        println!("no cycle regressions above {threshold}%");
+        Ok(())
+    } else if args.has("fail-on-regress") {
+        Err(format!(
+            "{} cycle regression(s) above {threshold}%:\n  {}",
+            regressions.len(),
+            regressions.join("\n  ")
+        ))
+    } else {
+        println!(
+            "{} cycle regression(s) above {threshold}% (advisory; --fail-on-regress gates):",
+            regressions.len()
+        );
+        for r in &regressions {
+            println!("  {r}");
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -975,5 +1128,111 @@ mod tests {
     fn bad_option_reports_error() {
         assert_eq!(cli_main(argv(&["table2", "--tiles", "xyz"])), 2);
         assert_eq!(cli_main(argv(&["--no-such-flag"])), 2);
+    }
+
+    use crate::util::json::Json;
+
+    fn tmp_path(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("versal_gemm_cli_{}_{name}", std::process::id()))
+    }
+
+    #[test]
+    fn plan_trace_out_writes_chrome_json() {
+        let path = tmp_path("plan_trace.json");
+        let p = path.to_str().unwrap();
+        assert_eq!(
+            cli_main(argv(&[
+                "plan", "--m", "100", "--n", "37", "--k", "513", "--tiles", "4",
+                "--trace-out", p,
+            ])),
+            0
+        );
+        let doc = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(doc.get("displayTimeUnit").and_then(Json::as_str), Some("ns"));
+        let events = doc.get("traceEvents").and_then(Json::as_arr).unwrap();
+        assert!(
+            events
+                .iter()
+                .any(|e| e.get("ph").and_then(Json::as_str) == Some("X")),
+            "plan trace must contain complete (X) spans"
+        );
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn serve_trace_out_writes_chrome_json() {
+        let path = tmp_path("serve_trace.json");
+        let p = path.to_str().unwrap();
+        assert_eq!(
+            cli_main(argv(&[
+                "serve", "--requests", "6", "--batch", "2", "--tiles", "2", "--rate",
+                "100000", "--slo-ms", "200", "--trace-out", p,
+            ])),
+            0
+        );
+        let doc = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        let events = doc.get("traceEvents").and_then(Json::as_arr).unwrap();
+        let names: Vec<String> = events
+            .iter()
+            .filter_map(|e| e.get("name").and_then(Json::as_str).map(String::from))
+            .collect();
+        for want in ["admitted", "batch formed", "compute", "completed", "queue depth"] {
+            assert!(
+                names.iter().any(|n| n == want),
+                "serve trace must contain a {want:?} event"
+            );
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn bench_trend_diffs_and_gates() {
+        let prev = tmp_path("trend_prev.json");
+        let curr = tmp_path("trend_curr.json");
+        std::fs::write(
+            &prev,
+            "{\"rows\":[{\"compute_cycles\":1000,\"pack_cycles\":100,\"requests\":5}]}",
+        )
+        .unwrap();
+        std::fs::write(
+            &curr,
+            "{\"rows\":[{\"compute_cycles\":1200,\"pack_cycles\":100,\"requests\":7}]}",
+        )
+        .unwrap();
+        let (p, c) = (prev.to_str().unwrap(), curr.to_str().unwrap());
+        // Advisory by default: the 20% compute regression prints, exit 0.
+        assert_eq!(cli_main(argv(&["bench-trend", p, c])), 0);
+        // --fail-on-regress turns it into exit 2.
+        assert_eq!(cli_main(argv(&["bench-trend", p, c, "--fail-on-regress"])), 2);
+        // A generous threshold passes even when gated; non-cycle growth
+        // (requests 5 → 7) never gates.
+        assert_eq!(
+            cli_main(argv(&[
+                "bench-trend", p, c, "--threshold", "25", "--fail-on-regress",
+            ])),
+            0
+        );
+        // Identical artifacts never regress.
+        assert_eq!(cli_main(argv(&["bench-trend", p, p, "--fail-on-regress"])), 0);
+        // A NaN threshold is a usage error, not a vacuous pass.
+        assert_eq!(cli_main(argv(&["bench-trend", p, p, "--threshold", "nan"])), 2);
+        std::fs::remove_file(&prev).ok();
+        std::fs::remove_file(&curr).ok();
+    }
+
+    #[test]
+    fn bench_trend_validates_usage() {
+        // Missing operands and unreadable / malformed artifacts are
+        // errors (exit 2), never panics.
+        assert_eq!(cli_main(argv(&["bench-trend"])), 2);
+        assert_eq!(
+            cli_main(argv(&["bench-trend", "/no/such/prev.json", "/no/such/curr.json"])),
+            2
+        );
+        let bad = tmp_path("trend_bad.json");
+        std::fs::write(&bad, "{not json").unwrap();
+        let b = bad.to_str().unwrap();
+        assert_eq!(cli_main(argv(&["bench-trend", b, b])), 2);
+        std::fs::remove_file(&bad).ok();
     }
 }

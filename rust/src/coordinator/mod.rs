@@ -42,7 +42,7 @@ pub use batcher::{BatcherConfig, DynamicBatcher};
 pub use cache::{CacheKey, CacheStats, CachedPlan, PackedBCache, PlanCache, PlanKey, ServingCaches};
 pub use former::{BatchFormer, FormerConfig, FusedBatch};
 pub use metrics::{LatencyStats, Metrics, PlanCacheStats};
-pub use pipeline::{PipelinedExecutor, StageCost};
+pub use pipeline::{PipelinedExecutor, StageCost, StageTiming};
 pub use request::{InferenceRequest, InferenceResponse, RequestId};
 pub use server::{Coordinator, CoordinatorConfig, SubmitError};
 pub use serving::{ServeOutcome, ServingConfig, ServingReport, ServingRuntime};

@@ -52,6 +52,23 @@ impl StageCost {
     }
 }
 
+/// Where one batch's stages landed on the executor's busy clock —
+/// returned by [`PipelinedExecutor::step_timed`] so the trace exporter
+/// can draw each stage as a span on its engine/device track.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StageTiming {
+    /// Index of the compute device the batch ran on.
+    pub device: usize,
+    /// `[start, end)` of the pack stage on the pack engine.
+    pub pack: (u64, u64),
+    /// `[start, end)` of the transfer stage on the transfer path.
+    pub transfer: (u64, u64),
+    /// `[start, end)` of the compute stage on `device`.
+    pub compute: (u64, u64),
+    /// Completion time of the batch (`compute.1`).
+    pub done: u64,
+}
+
 /// The executor model: single pack engine, single transfer path,
 /// `devices` compute servers — a **stateful busy clock**. The serving
 /// runtime owns two instances of the same recurrence: one stepped in
@@ -92,19 +109,37 @@ impl PipelinedExecutor {
     /// picks the earliest-free device. Returns the batch's completion
     /// time.
     pub fn step(&mut self, ready_at: u64, cost: StageCost) -> u64 {
-        self.pack_free = self.pack_free.max(ready_at) + cost.pack;
-        self.xfer_free = self.xfer_free.max(self.pack_free) + cost.transfer;
-        let dev = self
+        self.step_timed(ready_at, cost).done
+    }
+
+    /// [`PipelinedExecutor::step`], also reporting where each stage
+    /// landed on the busy clock — the per-stage `[start, end)` intervals
+    /// and the chosen compute device. This is what the serving runtime's
+    /// trace exporter draws its pipeline gantt from; `step` delegates
+    /// here so the two can never disagree.
+    pub fn step_timed(&mut self, ready_at: u64, cost: StageCost) -> StageTiming {
+        let pack_start = self.pack_free.max(ready_at);
+        self.pack_free = pack_start + cost.pack;
+        let xfer_start = self.xfer_free.max(self.pack_free);
+        self.xfer_free = xfer_start + cost.transfer;
+        let device = self
             .device_free
             .iter()
             .enumerate()
             .min_by_key(|(_, &t)| t)
             .map(|(i, _)| i)
             .expect("devices >= 1");
-        let done = self.device_free[dev].max(self.xfer_free) + cost.compute;
-        self.device_free[dev] = done;
+        let compute_start = self.device_free[device].max(self.xfer_free);
+        let done = compute_start + cost.compute;
+        self.device_free[device] = done;
         self.last_completion = self.last_completion.max(done);
-        done
+        StageTiming {
+            device,
+            pack: (pack_start, self.pack_free),
+            transfer: (xfer_start, self.xfer_free),
+            compute: (compute_start, done),
+            done,
+        }
     }
 
     /// Latest completion time stepped so far (0 when idle).
@@ -207,6 +242,25 @@ mod tests {
         ex.step(0, b(1, 1, 1));
         let done = ex.step(1_000, b(1, 1, 1));
         assert_eq!(done, 1_003);
+    }
+
+    #[test]
+    fn step_timed_intervals_are_ordered_and_consistent_with_step() {
+        let mut a = PipelinedExecutor::new(2);
+        let mut b_ex = PipelinedExecutor::new(2);
+        for (ready, cost) in [(0, b(7, 13, 50)), (5, b(3, 9, 40)), (5, b(11, 2, 60))] {
+            let t = a.step_timed(ready, cost);
+            assert_eq!(t.done, b_ex.step(ready, cost), "step must delegate to step_timed");
+            assert!(t.pack.0 >= ready);
+            assert!(t.pack.1 <= t.transfer.0 || cost.transfer == 0);
+            assert!(t.transfer.1 <= t.compute.0 || cost.compute == 0);
+            assert_eq!(t.pack.1 - t.pack.0, cost.pack);
+            assert_eq!(t.transfer.1 - t.transfer.0, cost.transfer);
+            assert_eq!(t.compute.1 - t.compute.0, cost.compute);
+            assert_eq!(t.done, t.compute.1);
+            assert!(t.device < 2);
+        }
+        assert_eq!(a.busy_until(), b_ex.busy_until());
     }
 
     #[test]

@@ -51,6 +51,11 @@ use super::pipeline::{PipelinedExecutor, StageCost};
 use super::request::RequestId;
 use super::worker::BatchedBackend;
 use crate::gemm::Precision;
+use crate::obs::{
+    HistogramSummary, MetricsRegistry, TrackId, Tracer, SERVING_ADMISSION_TRACK,
+    SERVING_PIPELINE_PID, SERVING_REQUEST_PID,
+};
+use std::collections::HashMap;
 
 /// Policy knobs of the serving runtime.
 #[derive(Debug, Clone, Copy)]
@@ -144,6 +149,28 @@ pub struct ServingReport {
     pub sequential_cycles: u64,
     /// Latency distribution (logical µs), if anything completed.
     pub latency: Option<LatencyStats>,
+    /// Queue-wait leg of the latency: arrival → the batch's last member
+    /// arriving (how long a request waited for company).
+    pub queue_wait: Option<LatencyStats>,
+    /// Batch-wait leg: last member's arrival → the former cutting the
+    /// batch (the `max_wait_us` policy cost).
+    pub batch_wait: Option<LatencyStats>,
+    /// Execute leg: batch cut → pipeline completion (occupancy +
+    /// service). Per request the three legs sum to its latency exactly.
+    pub execute: Option<LatencyStats>,
+}
+
+/// Map a µs-domain percentile summary into the registry's histogram
+/// shape (same fields, unit carried by the metric name).
+fn histo(s: &LatencyStats) -> HistogramSummary {
+    HistogramSummary {
+        count: s.count,
+        mean: s.mean_us,
+        p50: s.p50_us,
+        p95: s.p95_us,
+        p99: s.p99_us,
+        max: s.max_us,
+    }
 }
 
 impl ServingReport {
@@ -155,6 +182,54 @@ impl ServingReport {
         } else {
             self.completed as f64 * 1e6 / self.pipelined_cycles as f64
         }
+    }
+
+    /// Fold the whole report into one unified [`MetricsRegistry`]
+    /// snapshot — the single schema `report::serving_table` and
+    /// `BENCH_serving.json` consume instead of reaching into
+    /// [`CacheStats`] / [`PlanCacheStats`] / [`LatencyStats`]
+    /// separately. Deterministic: same report, same rows, same JSON.
+    pub fn metrics(&self) -> MetricsRegistry {
+        let mut m = MetricsRegistry::new();
+        m.set_counter("requests_completed", self.completed);
+        m.set_counter("requests_expired", self.expired);
+        m.set_counter("requests_rejected", self.rejected);
+        m.set_counter("requests_failed", self.failed);
+        m.set_counter("batches", self.batches);
+        m.set_counter("cache_hits", self.cache.hits);
+        m.set_counter("cache_misses", self.cache.misses);
+        m.set_counter("cache_evictions", self.cache.evictions);
+        m.set_counter("cache_uncacheable", self.cache.uncacheable);
+        m.set_counter("cache_bytes", self.cache.bytes);
+        m.set_counter("cache_budget_bytes", self.cache.budget_bytes);
+        m.set_counter("plan_cache_hits", self.plan_cache.hits);
+        m.set_counter("plan_cache_misses", self.plan_cache.misses);
+        m.set_counter("plan_cache_evictions", self.plan_cache.evictions);
+        m.set_counter("plan_cache_uncacheable", self.plan_cache.uncacheable);
+        m.set_counter("plan_cache_bytes", self.plan_cache.bytes);
+        m.set_counter("plan_cache_budget_bytes", self.plan_cache.budget_bytes);
+        m.set_counter("plan_lowered", self.plan_cache.lowered);
+        m.set_counter("plan_lower_ns", self.plan_cache.lower_ns);
+        m.set_counter("pack_cycles", self.pack_cycles);
+        m.set_counter("transfer_cycles", self.transfer_cycles);
+        m.set_counter("compute_cycles", self.compute_cycles);
+        m.set_counter("pipelined_cycles", self.pipelined_cycles);
+        m.set_counter("sequential_cycles", self.sequential_cycles);
+        m.set_gauge("mean_batch_rows", self.mean_batch);
+        m.set_gauge("cache_hit_rate", self.cache.hit_rate());
+        m.set_gauge("plan_cache_hit_rate", self.plan_cache.hit_rate());
+        m.set_gauge("requests_per_mcycle", self.requests_per_mcycle());
+        for (name, stats) in [
+            ("latency_us", &self.latency),
+            ("queue_wait_us", &self.queue_wait),
+            ("batch_wait_us", &self.batch_wait),
+            ("execute_us", &self.execute),
+        ] {
+            if let Some(s) = stats {
+                m.set_histogram(name, histo(s));
+            }
+        }
+        m
     }
 }
 
@@ -179,6 +254,16 @@ pub struct ServingRuntime<B: BatchedBackend> {
     compute_cycles: u64,
     sequential_cycles: u64,
     latencies_us: Vec<f64>,
+    queue_waits: Vec<f64>,
+    batch_waits: Vec<f64>,
+    executes: Vec<f64>,
+    // Trace state: the request-track allocator is a *local* sequence
+    // (assigned at admit), never the process-global RequestId counter —
+    // that keeps identically-seeded runs byte-identical even when other
+    // runtimes in the process consumed ids first.
+    tracer: Tracer,
+    next_track: u64,
+    track_ids: HashMap<RequestId, u64>,
     completed: u64,
     expired: u64,
     rejected: u64,
@@ -210,6 +295,12 @@ impl<B: BatchedBackend> ServingRuntime<B> {
             compute_cycles: 0,
             sequential_cycles: 0,
             latencies_us: Vec::new(),
+            queue_waits: Vec::new(),
+            batch_waits: Vec::new(),
+            executes: Vec::new(),
+            tracer: Tracer::disabled(),
+            next_track: 1,
+            track_ids: HashMap::new(),
             completed: 0,
             expired: 0,
             rejected: 0,
@@ -217,6 +308,30 @@ impl<B: BatchedBackend> ServingRuntime<B> {
             batches: 0,
             batch_rows: 0,
         }
+    }
+
+    /// Builder: record every serving event — admission instants,
+    /// per-request span trees (queue wait → batch wait → execute on the
+    /// logical-µs clock), pipeline stage spans (cycles), cache activity
+    /// and queue-depth counters — into `tracer`'s shared buffer. The
+    /// backend gets a clone ([`BatchedBackend::set_tracer`]) so e.g. the
+    /// cluster's collective spans land in the same recording. The
+    /// disabled default records nothing and costs nothing.
+    pub fn with_tracer(mut self, tracer: Tracer) -> ServingRuntime<B> {
+        tracer.name_process(SERVING_REQUEST_PID, "serving requests (µs)");
+        tracer.name_track(SERVING_ADMISSION_TRACK, "admission / cache");
+        tracer.name_process(SERVING_PIPELINE_PID, "serving pipeline (cycles)");
+        tracer.name_track(TrackId::new(SERVING_PIPELINE_PID, 0), "pack engine");
+        tracer.name_track(TrackId::new(SERVING_PIPELINE_PID, 1), "transfer");
+        for d in 0..self.cfg.pipeline_devices {
+            tracer.name_track(
+                TrackId::new(SERVING_PIPELINE_PID, 2 + d as u64),
+                &format!("device {d}"),
+            );
+        }
+        self.backend.set_tracer(tracer.clone());
+        self.tracer = tracer;
+        self
     }
 
     /// Submit with the default SLO (`now + default_slo_us`).
@@ -253,11 +368,46 @@ impl<B: BatchedBackend> ServingRuntime<B> {
             deadline_us,
         };
         match self.queue.admit(req, now_us) {
-            Ok(()) => Ok(id),
+            Ok(()) => {
+                if self.tracer.enabled() {
+                    let tid = self.next_track;
+                    self.next_track += 1;
+                    self.track_ids.insert(id, tid);
+                    let track = TrackId::new(SERVING_REQUEST_PID, tid);
+                    self.tracer.name_track(track, &format!("req {tid}"));
+                    self.tracer.instant(track, "admitted", now_us);
+                    self.tracer.counter(
+                        SERVING_ADMISSION_TRACK,
+                        "queue depth",
+                        now_us,
+                        self.queue.len() as i64,
+                    );
+                }
+                Ok(id)
+            }
             Err(e) => {
                 self.rejected += 1;
                 Err(e)
             }
+        }
+    }
+
+    /// Evict SLO-expired requests, marking each on its request track.
+    fn evict_expired(&mut self, now_us: u64) {
+        let expired = self.queue.expire(now_us);
+        self.expired += expired.len() as u64;
+        if self.tracer.enabled() && !expired.is_empty() {
+            for req in &expired {
+                if let Some(tid) = self.track_ids.remove(&req.id) {
+                    self.tracer.instant(TrackId::new(SERVING_REQUEST_PID, tid), "expired", now_us);
+                }
+            }
+            self.tracer.counter(
+                SERVING_ADMISSION_TRACK,
+                "queue depth",
+                now_us,
+                self.queue.len() as i64,
+            );
         }
     }
 
@@ -268,7 +418,7 @@ impl<B: BatchedBackend> ServingRuntime<B> {
     /// [`ServingReport::failed`] rather than aborting the tick, so one
     /// unservable batch cannot lose the accounting of its neighbours.
     pub fn tick(&mut self, now_us: u64) -> Vec<ServeOutcome> {
-        self.expired += self.queue.expire(now_us).len() as u64;
+        self.evict_expired(now_us);
         let mut out = Vec::new();
         while self.former.ready(&self.queue, now_us) {
             let Some(batch) = self.former.form(&mut self.queue, self.in_dim) else {
@@ -282,7 +432,7 @@ impl<B: BatchedBackend> ServingRuntime<B> {
     /// Evict expired requests, then serve everything left regardless of
     /// batch-forming deadlines (shutdown / end-of-trace).
     pub fn drain(&mut self, now_us: u64) -> Vec<ServeOutcome> {
-        self.expired += self.queue.expire(now_us).len() as u64;
+        self.evict_expired(now_us);
         let mut out = Vec::new();
         while let Some(batch) = self.former.form(&mut self.queue, self.in_dim) {
             out.extend(self.execute(batch, now_us));
@@ -292,6 +442,10 @@ impl<B: BatchedBackend> ServingRuntime<B> {
 
     fn execute(&mut self, batch: FusedBatch, now_us: u64) -> Vec<ServeOutcome> {
         let rows = batch.rows();
+        // Stats snapshots bracket the backend call so cache activity can
+        // be attributed to this batch as admission-track instants.
+        let cache0 = self.caches.packed.stats();
+        let plans0 = self.caches.plans.stats();
         let (logits, cost) = match self.backend.serve_fused(
             rows,
             &batch.features,
@@ -304,16 +458,47 @@ impl<B: BatchedBackend> ServingRuntime<B> {
                 // account them as failed so they are visible in the
                 // report instead of silently vanishing.
                 self.failed += rows as u64;
+                for req in &batch.requests {
+                    if let Some(tid) = self.track_ids.remove(&req.id) {
+                        self.tracer
+                            .instant(TrackId::new(SERVING_REQUEST_PID, tid), "failed", now_us);
+                    }
+                }
                 return Vec::new();
             }
         };
+        self.trace_batch_cache_events(now_us, rows, cache0, plans0);
         self.batches += 1;
         self.batch_rows += rows as u64;
         self.pack_cycles += cost.pack;
         self.transfer_cycles += cost.transfer;
         self.compute_cycles += cost.compute;
         self.sequential_cycles += cost.total();
-        self.busy_cycles.step(0, cost);
+        let timing = self.busy_cycles.step_timed(0, cost);
+        if self.tracer.enabled() {
+            let args = [("batch", self.batches as i64), ("rows", rows as i64)];
+            self.tracer.span_args(
+                TrackId::new(SERVING_PIPELINE_PID, 0),
+                "pack",
+                timing.pack.0,
+                timing.pack.1,
+                &args,
+            );
+            self.tracer.span_args(
+                TrackId::new(SERVING_PIPELINE_PID, 1),
+                "transfer",
+                timing.transfer.0,
+                timing.transfer.1,
+                &args,
+            );
+            self.tracer.span_args(
+                TrackId::new(SERVING_PIPELINE_PID, 2 + timing.device as u64),
+                "compute",
+                timing.compute.0,
+                timing.compute.1,
+                &args,
+            );
+        }
         // The µs busy clock (1 GHz AIE clock: 1 000 cycles per logical
         // µs, rounded up; compute never takes zero time): a batch
         // behind other batches completes later, so its requests'
@@ -324,6 +509,10 @@ impl<B: BatchedBackend> ServingRuntime<B> {
             compute: cost.compute.div_ceil(1_000).max(1),
         };
         let completion_us = self.busy_us.step(now_us, cost_us);
+        // The batch formed when its *last* member arrived; that instant
+        // splits each request's wait into a queue-wait leg (waiting for
+        // company) and a batch-wait leg (the former's cut policy).
+        let last_arrival = batch.requests.iter().map(|r| r.arrival_us).max().unwrap_or(now_us);
         let mut outcomes = Vec::with_capacity(rows);
         for (i, req) in batch.requests.into_iter().enumerate() {
             let row = logits[i * self.n_classes..(i + 1) * self.n_classes].to_vec();
@@ -334,6 +523,24 @@ impl<B: BatchedBackend> ServingRuntime<B> {
                 .map(|(j, _)| j)
                 .unwrap_or(0);
             let latency_us = completion_us.saturating_sub(req.arrival_us);
+            // The three legs sum to latency_us exactly (arrival ≤
+            // last_arrival ≤ now ≤ completion on the logical clock).
+            let queue_wait = last_arrival.saturating_sub(req.arrival_us);
+            let batch_wait = now_us.saturating_sub(last_arrival);
+            let execute_us = completion_us.saturating_sub(now_us);
+            self.queue_waits.push(queue_wait as f64);
+            self.batch_waits.push(batch_wait as f64);
+            self.executes.push(execute_us as f64);
+            if let Some(tid) = self.track_ids.remove(&req.id) {
+                let track = TrackId::new(SERVING_REQUEST_PID, tid);
+                self.tracer.span(track, "queue wait", req.arrival_us, last_arrival);
+                self.tracer.span(track, "batch wait", last_arrival, now_us);
+                self.tracer.span_args(track, "execute", now_us, completion_us, &[(
+                    "batch_rows",
+                    rows as i64,
+                )]);
+                self.tracer.instant(track, "completed", completion_us);
+            }
             self.latencies_us.push(latency_us as f64);
             self.completed += 1;
             outcomes.push(ServeOutcome {
@@ -346,6 +553,48 @@ impl<B: BatchedBackend> ServingRuntime<B> {
             });
         }
         outcomes
+    }
+
+    /// Admission-track instants for one executed batch: the forming
+    /// event plus the cache activity observed across the backend call
+    /// (hits/misses/evictions show up as counted instants at the
+    /// batch's tick time).
+    fn trace_batch_cache_events(
+        &self,
+        now_us: u64,
+        rows: usize,
+        cache0: CacheStats,
+        plans0: PlanCacheStats,
+    ) {
+        if !self.tracer.enabled() {
+            return;
+        }
+        self.tracer.instant_args(
+            SERVING_ADMISSION_TRACK,
+            "batch formed",
+            now_us,
+            &[("rows", rows as i64)],
+        );
+        let c = self.caches.packed.stats();
+        let p = self.caches.plans.stats();
+        let deltas = [
+            ("cache hit", c.hits - cache0.hits),
+            ("cache miss", c.misses - cache0.misses),
+            ("cache evict", c.evictions - cache0.evictions),
+            ("plan hit", p.hits - plans0.hits),
+            ("plan miss", p.misses - plans0.misses),
+        ];
+        for (name, n) in deltas {
+            for _ in 0..n {
+                self.tracer.instant(SERVING_ADMISSION_TRACK, name, now_us);
+            }
+        }
+        self.tracer.counter(
+            SERVING_ADMISSION_TRACK,
+            "queue depth",
+            now_us,
+            self.queue.len() as i64,
+        );
     }
 
     /// Requests currently waiting for a batch.
@@ -384,6 +633,9 @@ impl<B: BatchedBackend> ServingRuntime<B> {
             pipelined_cycles: self.busy_cycles.busy_until(),
             sequential_cycles: self.sequential_cycles,
             latency: LatencyStats::from_us_samples(&self.latencies_us),
+            queue_wait: LatencyStats::from_us_samples(&self.queue_waits),
+            batch_wait: LatencyStats::from_us_samples(&self.batch_waits),
+            execute: LatencyStats::from_us_samples(&self.executes),
         }
     }
 }
@@ -564,6 +816,104 @@ mod tests {
             "same-arrival requests served later must report larger latency: {:?}",
             out.iter().map(|o| o.latency_us).collect::<Vec<_>>()
         );
+    }
+
+    #[test]
+    fn latency_breakdown_legs_sum_to_latency() {
+        let mut rt = runtime(ServingConfig { max_batch: 2, ..Default::default() });
+        rt.submit(feat(1.0), Precision::U8, 0).unwrap();
+        rt.submit(feat(2.0), Precision::U8, 40).unwrap();
+        let out = rt.tick(40);
+        assert_eq!(out.len(), 2);
+        let r = rt.report();
+        let (q, b, e, l) = (
+            r.queue_wait.unwrap(),
+            r.batch_wait.unwrap(),
+            r.execute.unwrap(),
+            r.latency.unwrap(),
+        );
+        assert_eq!(q.count, 2);
+        // Row 0 waited 40 µs for its batch mate; row 1 waited 0.
+        assert_eq!(q.max_us, 40.0);
+        assert_eq!(b.max_us, 0.0, "batch cut the instant the second row arrived");
+        assert!(e.max_us >= 1.0, "compute never takes zero logical time");
+        // Both rows share batch/execute legs, so the decomposition sums
+        // exactly — in the mean and at the max (small-int f64s).
+        assert_eq!(q.mean_us + b.mean_us + e.mean_us, l.mean_us);
+        assert_eq!(q.max_us + b.max_us + e.max_us, l.max_us);
+    }
+
+    #[test]
+    fn traced_runtime_records_request_span_trees() {
+        use crate::obs::{EventKind, Tracer, TrackId, SERVING_REQUEST_PID};
+        let tracer = Tracer::recording();
+        let mut rt = runtime(ServingConfig { max_batch: 2, ..Default::default() })
+            .with_tracer(tracer.clone());
+        rt.submit(feat(1.0), Precision::U8, 0).unwrap();
+        rt.submit(feat(2.0), Precision::U8, 40).unwrap();
+        assert_eq!(rt.tick(40).len(), 2);
+        let data = tracer.snapshot();
+        // First admitted request rides track tid 1.
+        let req1 = data.on_track(TrackId::new(SERVING_REQUEST_PID, 1));
+        let names: Vec<&str> = req1.iter().map(|e| e.name.as_str()).collect();
+        assert_eq!(
+            names,
+            vec!["admitted", "queue wait", "batch wait", "execute", "completed"]
+        );
+        // Queue-wait leg spans arrival → the batch mate's arrival; the
+        // completion instant sits exactly at the execute span's end.
+        assert_eq!(req1[1].ts, 0);
+        assert_eq!(req1[1].end(), 40);
+        assert!(matches!(req1[3].kind, EventKind::Span { .. }));
+        assert_eq!(req1[4].ts, req1[3].end());
+        // The shared admission track saw both admits and the batch cut.
+        let adm = data.on_track(crate::obs::SERVING_ADMISSION_TRACK);
+        assert!(adm.iter().any(|e| e.name == "batch formed"));
+        assert!(adm.iter().filter(|e| e.name == "queue depth").count() >= 3);
+        // Pipeline stage spans landed on the cycle-domain process.
+        let dev0 = data.on_track(TrackId::new(crate::obs::SERVING_PIPELINE_PID, 2));
+        assert_eq!(dev0.len(), 1, "one compute span for the one batch");
+        assert_eq!(dev0[0].name, "compute");
+    }
+
+    #[test]
+    fn expired_request_marked_on_its_track() {
+        use crate::obs::{Tracer, TrackId, SERVING_REQUEST_PID};
+        let tracer = Tracer::recording();
+        let mut rt = runtime(ServingConfig {
+            max_batch: 8,
+            default_slo_us: 10,
+            ..Default::default()
+        })
+        .with_tracer(tracer.clone());
+        rt.submit(feat(1.0), Precision::U8, 0).unwrap();
+        assert!(rt.tick(10).is_empty());
+        let data = tracer.snapshot();
+        let req1 = data.on_track(TrackId::new(SERVING_REQUEST_PID, 1));
+        let names: Vec<&str> = req1.iter().map(|e| e.name.as_str()).collect();
+        assert_eq!(names, vec!["admitted", "expired"]);
+        assert_eq!(req1[1].ts, 10);
+    }
+
+    #[test]
+    fn report_metrics_mirror_report_fields() {
+        let mut rt = runtime(ServingConfig { max_batch: 1, ..Default::default() });
+        for i in 0..3 {
+            rt.submit(feat(i as f32), Precision::U8, i).unwrap();
+            rt.tick(i);
+        }
+        let r = rt.report();
+        let m = r.metrics();
+        assert_eq!(m.counter("requests_completed"), Some(3));
+        assert_eq!(m.counter("batches"), Some(3));
+        assert_eq!(m.counter("pipelined_cycles"), Some(r.pipelined_cycles));
+        assert_eq!(m.gauge("mean_batch_rows"), Some(1.0));
+        let lat = m.histogram("latency_us").unwrap();
+        assert_eq!(lat.count, 3);
+        assert_eq!(lat.max, r.latency.as_ref().unwrap().max_us);
+        assert!(m.histogram("queue_wait_us").is_some());
+        // The registry's JSON is self-consistent and deterministic.
+        assert_eq!(m.to_json(), r.metrics().to_json());
     }
 
     #[test]

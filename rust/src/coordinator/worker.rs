@@ -1,14 +1,20 @@
 //! Worker backends: where a batch's MACs actually run.
 
-use super::cache::{CacheKey, PlanKey, ServingCaches};
+use super::cache::{CacheKey, CachedPlan, PlanKey, ServingCaches};
 use super::pipeline::StageCost;
 use crate::arch::VersalArch;
 use crate::cluster::{Cluster, ClusterError, Collectives, DeviceId};
 use crate::dl::{Mlp, MlpSpec, PackedWeights, QuantLinear, TpMode};
 use crate::gemm::{prepack_b, Ccp, GemmConfig, ParallelGemm, Precision, PrecisionPolicy, PrepackedB};
+use crate::obs::{TrackId, Tracer, CLUSTER_PID};
 use crate::plan::{Buffer, GemmPlan};
 use anyhow::Result;
 use std::collections::HashMap;
+
+/// Single cluster-critical-path track: shard compute and the layer
+/// boundary collectives interleave on one timeline, mirroring how
+/// [`ClusterGemmBackend::tp_forward`] sums `compute + collective`.
+const CLUSTER_TRACK: TrackId = TrackId::new(CLUSTER_PID, 0);
 
 /// Per-layer pack accounting shared by the fused serving backends: the
 /// layer's serving GEMM is the same [`GemmPlan`] the drivers execute
@@ -36,10 +42,15 @@ fn charge_layer_pack(
     rate: f64,
     caches: &mut ServingCaches,
     cost: &mut StageCost,
-) -> Result<Option<PackedWeights>> {
+) -> Result<(Option<PackedWeights>, CachedPlan)> {
     let mut serve_cfg = cfg.clone();
     serve_cfg.ccp = QuantLinear::serving_ccp(arch, cfg, precision);
-    let plan_key = PlanKey { layer: layer_idx, precision, rows, prepacked: false };
+    // The serving GEMM executes from resident weight blocks, so the
+    // resident plan is the *prepacked* lowering — the very handle
+    // `forward_prepacked_with_plan` replays. Byte accounting is
+    // unchanged: `pack_bytes` sums step footprints whether or not a
+    // step is charged.
+    let plan_key = PlanKey { layer: layer_idx, precision, rows, prepacked: true };
     let (out_dim, in_dim) = (layer.out_dim, layer.in_dim);
     // The cache precomputes the Ac/Bc pack-byte sums at insert, so a
     // warm batch charges in O(1) — no per-batch re-scan of the resident
@@ -47,7 +58,7 @@ fn charge_layer_pack(
     let cached = caches
         .plans
         .get_or_lower(plan_key, || {
-            GemmPlan::lower(arch, &serve_cfg, rows, out_dim, in_dim, precision, false)
+            GemmPlan::lower(arch, &serve_cfg, rows, out_dim, in_dim, precision, true)
         })
         .map_err(|e| anyhow::anyhow!("layer {layer_idx} serving plan: {e}"))?;
     debug_assert_eq!(cached.ac_pack_bytes, cached.plan.pack_bytes(Buffer::Ac));
@@ -62,10 +73,10 @@ fn charge_layer_pack(
         );
         cost.pack += (cached.bc_pack_bytes as f64 / rate) as u64;
         if let Err(back) = caches.packed.insert(key, pw) {
-            return Ok(Some(back));
+            return Ok((Some(back), cached));
         }
     }
-    Ok(None)
+    Ok((None, cached))
 }
 
 /// A batch-execution backend. `infer_batch` maps a `batch × in_dim`
@@ -112,6 +123,14 @@ pub trait BatchedBackend: Backend {
         let _ = caches;
         let (logits, cycles) = self.infer_batch(rows, x)?;
         Ok((logits, StageCost { pack: 0, transfer: 0, compute: cycles }))
+    }
+
+    /// Attach a tracer so the backend can emit its own cycle-domain
+    /// events (e.g. the cluster backend's collective spans). The default
+    /// drops it — most backends have nothing extra to report beyond the
+    /// stage costs the runtime already traces.
+    fn set_tracer(&mut self, tracer: Tracer) {
+        let _ = tracer;
     }
 }
 
@@ -228,7 +247,7 @@ impl BatchedBackend for RustGemmBackend {
         let mut cost = StageCost::default();
         let mut h = x.to_vec();
         for (l, layer) in self.mlp.layers.iter().enumerate() {
-            let transient = charge_layer_pack(
+            let (transient, cached) = charge_layer_pack(
                 layer, l, rows, precision, &self.arch, &self.cfg, rate, caches, &mut cost,
             )?;
             let key = CacheKey { layer: l, precision };
@@ -236,7 +255,11 @@ impl BatchedBackend for RustGemmBackend {
                 .as_ref()
                 .or_else(|| caches.packed.peek(&key))
                 .expect("miss path inserted or handed the weights back");
-            let (y, cy) = layer.forward_prepacked(rows, &h, pw, &self.arch, &self.cfg)?;
+            // The cached plan IS the executed schedule: the walk replays
+            // the resident handle's step stream, no per-batch spec
+            // re-validation or re-lowering.
+            let (y, cy) =
+                layer.forward_prepacked_with_plan(rows, &h, pw, &cached.plan, &self.arch)?;
             h = y;
             // One mapping from the plan-executed breakdown to the
             // pipeline stages, shared with every other backend.
@@ -269,6 +292,13 @@ pub struct ClusterGemmBackend {
     /// blocks — the *cycle* cost of re-packing after an eviction is
     /// charged by the packed-operand cache's miss path, not here.
     shard_packs: HashMap<(usize, usize), PrepackedB<u8>>,
+    /// Cluster-domain tracer (disabled unless the serving runtime hands
+    /// one down via [`BatchedBackend::set_tracer`]).
+    tracer: Tracer,
+    /// Running cycle cursor on the cluster critical-path track: batches
+    /// are serialised end to end there, so each batch's spans start
+    /// where the previous batch finished.
+    trace_cycle: u64,
 }
 
 impl ClusterGemmBackend {
@@ -291,6 +321,8 @@ impl ClusterGemmBackend {
             mlp,
             ccp: Ccp { mc: 256, nc: 256, kc: 1024 },
             shard_packs: HashMap::new(),
+            tracer: Tracer::disabled(),
+            trace_cycle: 0,
         })
     }
 
@@ -313,7 +345,7 @@ impl ClusterGemmBackend {
     /// the on-the-fly path, and with packing uncounted the schedules are
     /// identical too.
     fn tp_forward(&mut self, batch: usize, x: &[f32], prepacked: bool) -> Result<(Vec<f32>, u64)> {
-        let ClusterGemmBackend { cluster, mlp, ccp, shard_packs } = self;
+        let ClusterGemmBackend { cluster, mlp, ccp, shard_packs, tracer, trace_cycle } = self;
         let ccp = *ccp;
         let weights: Vec<usize> = cluster.devices.iter().map(|d| d.tiles).collect();
         let n_layers = mlp.spec.n_layers();
@@ -365,16 +397,37 @@ impl ClusterGemmBackend {
             // The mode the forward actually used (recorded by the closure),
             // so the collective cost cannot desync from the sharding.
             let mode = layer_mode[l].expect("every layer runs at least one shard");
-            let collective = match mode {
+            let (collective, coll_name, coll_bytes) = match mode {
                 TpMode::Column => {
-                    coll.all_gather_cycles((batch * layer_band[l] * 4) as u64, &group)?
+                    let bytes = (batch * layer_band[l] * 4) as u64;
+                    (coll.all_gather_cycles(bytes, &group)?, "all-gather", bytes)
                 }
                 TpMode::Row => {
-                    coll.all_reduce_cycles((batch * out_dim * 4) as u64, &group)?
+                    let bytes = (batch * out_dim * 4) as u64;
+                    (coll.all_reduce_cycles(bytes, &group)?, "all-reduce", bytes)
                 }
             };
+            // Spans sit on the critical-path cursor: shard compute for
+            // this layer, then the boundary collective, back to back.
+            let t0 = *trace_cycle + cycles;
+            tracer.span_args(CLUSTER_TRACK, "shard compute", t0, t0 + compute, &[(
+                "layer",
+                l as i64,
+            )]);
+            tracer.span_args(
+                CLUSTER_TRACK,
+                coll_name,
+                t0 + compute,
+                t0 + compute + collective,
+                &[
+                    ("layer", l as i64),
+                    ("bytes", coll_bytes as i64),
+                    ("devices", group.len() as i64),
+                ],
+            );
             cycles += compute + collective;
         }
+        *trace_cycle += cycles;
         Ok((logits, cycles))
     }
 }
@@ -393,6 +446,12 @@ impl Backend for ClusterGemmBackend {
 }
 
 impl BatchedBackend for ClusterGemmBackend {
+    fn set_tracer(&mut self, tracer: Tracer) {
+        tracer.name_process(CLUSTER_PID, "cluster collectives (cycles)");
+        tracer.name_track(CLUSTER_TRACK, "critical path");
+        self.tracer = tracer;
+    }
+
     /// Batched entry point for the tensor-parallel pool — the
     /// weight-stationary cluster hot path. The fused rows run the
     /// sharded forward with every shard **executing a prepacked plan

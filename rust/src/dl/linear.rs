@@ -7,6 +7,7 @@ use crate::gemm::{
     prepack_b, Ccp, GemmConfig, Mat, MatI32, MatU8, ParallelGemm, Precision, PrecisionPolicy,
     PrepackedB,
 };
+use crate::plan::GemmPlan;
 use crate::quant::{quantized_linear, sym_dequantize, QTensor, SymQTensor};
 use crate::sim::CycleBreakdown;
 use crate::util::split::partition;
@@ -389,6 +390,81 @@ impl QuantLinear {
         Ok((y, cycles))
     }
 
+    /// [`QuantLinear::forward_prepacked`] driven by an **already-lowered
+    /// serving plan** — the plan-cache hot path. The serving runtime
+    /// caches the lowered [`GemmPlan`] per (layer, precision, rows); a
+    /// warm batch hands that exact handle here and the execution walk
+    /// replays its step stream directly
+    /// ([`ParallelGemm::run_prepacked_plan_p`]) instead of re-validating
+    /// a fresh spec per call. Numerics and cycles are bit-exact with
+    /// [`QuantLinear::forward_prepacked`] when the plan was lowered for
+    /// the serving geometry ([`QuantLinear::serving_ccp`]); mismatched
+    /// plans (wrong shape / precision / geometry) are rejected up front.
+    pub fn forward_prepacked_with_plan(
+        &self,
+        batch: usize,
+        x: &[f32],
+        packed: &PackedWeights,
+        plan: &GemmPlan,
+        arch: &VersalArch,
+    ) -> Result<(Vec<f32>, CycleBreakdown)> {
+        assert_eq!(x.len(), batch * self.in_dim, "input shape mismatch");
+        let engine = ParallelGemm::new(arch);
+        let mut cycles = CycleBreakdown::zero();
+        let mut y: Vec<f32> = match packed {
+            PackedWeights::U8(pb) => {
+                let qx = QTensor::from_f32(batch, self.in_dim, x);
+                let mut qc = MatI32::zeros(batch, self.out_dim);
+                let (cy, _) = engine.run_prepacked_plan_p::<u8>(plan, &qx.data, pb, &mut qc)?;
+                cycles += cy;
+                let corr = crate::quant::zero_point_correction(
+                    &qx.data,
+                    &self.weight.data,
+                    qx.params,
+                    self.weight.params,
+                );
+                for (c, &d) in qc.data.iter_mut().zip(&corr.data) {
+                    *c += d;
+                }
+                crate::quant::dequantize_gemm_i32(&qc, qx.params, self.weight.params)
+            }
+            PackedWeights::I8 { packed, scale } => {
+                let qx = SymQTensor::<i8>::from_f32(batch, self.in_dim, x);
+                let mut qc = Mat::<i32>::zeros(batch, self.out_dim);
+                let (cy, _) =
+                    engine.run_prepacked_plan_p::<i8>(plan, &qx.data, packed, &mut qc)?;
+                cycles += cy;
+                sym_dequantize(&qc, qx.params.scale, *scale)
+            }
+            PackedWeights::I16 { packed, scale } => {
+                let qx = SymQTensor::<i16>::from_f32(batch, self.in_dim, x);
+                let mut qc = Mat::<i64>::zeros(batch, self.out_dim);
+                let (cy, _) =
+                    engine.run_prepacked_plan_p::<i16>(plan, &qx.data, packed, &mut qc)?;
+                cycles += cy;
+                sym_dequantize(&qc, qx.params.scale, *scale)
+            }
+            PackedWeights::Bf16(pb) => {
+                let qx = Mat::<Bf16>::from_f32_slice(batch, self.in_dim, x);
+                let mut c = Mat::<f32>::zeros(batch, self.out_dim);
+                let (cy, _) = engine.run_prepacked_plan_p::<Bf16>(plan, &qx, pb, &mut c)?;
+                cycles += cy;
+                c.data
+            }
+        };
+        for i in 0..batch {
+            for (j, &b) in self.bias.iter().enumerate() {
+                y[i * self.out_dim + j] += b;
+            }
+        }
+        if self.activation == Activation::Relu {
+            for v in &mut y {
+                *v = v.max(0.0);
+            }
+        }
+        Ok((y, cycles))
+    }
+
     /// Forward under a [`PrecisionPolicy`]: resolve, run, and report the
     /// precision that was actually used.
     pub fn forward_policy(
@@ -590,6 +666,46 @@ mod tests {
                 "{prec}: same schedule when packing is uncounted"
             );
         }
+    }
+
+    #[test]
+    fn prepacked_with_plan_matches_spec_path_per_precision() {
+        // Satellite contract of the plan-handle hot path: executing the
+        // layer against a cached lowered plan must reproduce the
+        // spec-lowering path bit-for-bit — logits and cycle breakdown.
+        use crate::arch::vc1902;
+        let arch = vc1902();
+        let mut rng = Pcg32::new(60);
+        let layer = QuantLinear::random(48, 24, Activation::Relu, &mut rng);
+        let batch = 5;
+        let x: Vec<f32> = (0..batch * 48).map(|_| rng.f64() as f32 * 2.0 - 1.0).collect();
+        let mut cfg = GemmConfig::paper_table2(4);
+        cfg.ccp = Ccp { mc: 64, nc: 64, kc: 64 };
+        for prec in Precision::ALL {
+            let packed = layer.prepack(prec, &arch, &cfg);
+            let (want, want_cy) =
+                layer.forward_prepacked(batch, &x, &packed, &arch, &cfg).unwrap();
+            let mut serve_cfg = cfg.clone();
+            serve_cfg.ccp = QuantLinear::serving_ccp(&arch, &cfg, prec);
+            let plan = GemmPlan::lower(
+                &arch, &serve_cfg, batch, layer.out_dim, layer.in_dim, prec, true,
+            )
+            .unwrap();
+            let (got, got_cy) = layer
+                .forward_prepacked_with_plan(batch, &x, &packed, &plan, &arch)
+                .unwrap();
+            assert_eq!(got, want, "{prec}: plan-handle logits must be bit-exact");
+            assert_eq!(got_cy, want_cy, "{prec}: plan-handle schedule must be identical");
+        }
+        // A plan for the wrong shape is rejected, not silently executed.
+        let bad = GemmPlan::lower(
+            &arch, &cfg, batch + 1, layer.out_dim, layer.in_dim, Precision::U8, true,
+        )
+        .unwrap();
+        let packed = layer.prepack(Precision::U8, &arch, &cfg);
+        assert!(layer
+            .forward_prepacked_with_plan(batch, &x, &packed, &bad, &arch)
+            .is_err());
     }
 
     #[test]

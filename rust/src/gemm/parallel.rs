@@ -30,7 +30,8 @@ use super::precision::{Accum, Element, Precision};
 use super::types::{Mat, MatI32, MatU8};
 use super::GemmConfig;
 use crate::arch::VersalArch;
-use crate::plan::{Buffer, PlanSpec, PlanStep};
+use crate::obs::{PlanSpanEmitter, Tracer};
+use crate::plan::{Buffer, GemmPlan, PlanSpec, PlanStep};
 use crate::sim::{AieTileModel, CycleBreakdown, Gmio, KernelMode, Multicast, Stream};
 use anyhow::{ensure, Result};
 
@@ -67,12 +68,23 @@ pub struct Table2Row {
 pub struct ParallelGemm<'a> {
     arch: &'a VersalArch,
     tile: AieTileModel<'a>,
+    tracer: Tracer,
 }
 
 impl<'a> ParallelGemm<'a> {
     /// A driver bound to (and borrowing) an architecture description.
     pub fn new(arch: &'a VersalArch) -> ParallelGemm<'a> {
-        ParallelGemm { arch, tile: AieTileModel::new(arch) }
+        ParallelGemm { arch, tile: AieTileModel::new(arch), tracer: Tracer::disabled() }
+    }
+
+    /// Attach a tracer: every plan execution then emits its step span
+    /// stream (see [`crate::obs::PlanSpanEmitter`]) in the cycle domain.
+    /// The default [`Tracer::disabled`] records nothing and costs
+    /// nothing on the execution hot path (pinned allocation-free in
+    /// `tests/obs_zero_alloc.rs`).
+    pub fn with_tracer(mut self, tracer: Tracer) -> ParallelGemm<'a> {
+        self.tracer = tracer;
+        self
     }
 
     /// C += A·B on `cfg.tiles` AIE tiles (the paper's u8 pipeline).
@@ -217,6 +229,50 @@ impl<'a> ParallelGemm<'a> {
         Ok(self.run_plan(cfg, spec.walk(), a, BOperand::Prepacked(pb), c))
     }
 
+    /// [`ParallelGemm::run_prepacked_p`] driven by an already-lowered
+    /// [`GemmPlan`] handle instead of a fresh [`PlanSpec`]: the serving
+    /// layer's plan-cache hot path, where the cached plan object is the
+    /// exact schedule executed — no per-request re-validation, no spec
+    /// re-lowering. Only O(1) operand/geometry agreement is checked; the
+    /// plan itself was validated against the architecture when lowered.
+    pub fn run_prepacked_plan_p<T: Element>(
+        &self,
+        plan: &GemmPlan,
+        a: &Mat<T>,
+        pb: &PrepackedB<T>,
+        c: &mut Mat<T::Acc>,
+    ) -> Result<(CycleBreakdown, Vec<TileStats>)> {
+        ensure!(plan.prepacked_b, "plan was lowered for on-the-fly B packing");
+        ensure!(
+            plan.precision == T::PRECISION,
+            "plan lowered for {}, operands are {}",
+            plan.precision,
+            T::PRECISION
+        );
+        ensure!(
+            (plan.m, plan.n, plan.k) == (a.rows, pb.cols, a.cols),
+            "plan lowered for ({}, {}, {}), operands are ({}, {}, {})",
+            plan.m,
+            plan.n,
+            plan.k,
+            a.rows,
+            pb.cols,
+            a.cols
+        );
+        ensure!(a.cols == pb.rows, "inner dimensions differ");
+        ensure!((c.rows, c.cols) == (a.rows, pb.cols), "output shape mismatch");
+        ensure!(
+            pb.kc == plan.ccp.kc && pb.nc == plan.ccp.nc,
+            "prepacked B built for (kc, nc) = ({}, {}), plan wants ({}, {})",
+            pb.kc,
+            pb.nc,
+            plan.ccp.kc,
+            plan.ccp.nc
+        );
+        let cfg = plan.gemm_config();
+        Ok(self.run_plan(&cfg, plan.steps_iter(), a, BOperand::Prepacked(pb), c))
+    }
+
     /// Execute a plan's step stream: numerics + tile accounting + the
     /// lockstep loop-L4 schedule, one step at a time. This is the single
     /// execution walk behind [`ParallelGemm::run_p`] (dense B) and
@@ -244,7 +300,36 @@ impl<'a> ParallelGemm<'a> {
 
         let mut bc: BcSlot<'b, T> = BcSlot::Empty;
         let mut ac: Option<PackedA<T>> = None;
+        // Span emission rides along only when a recording tracer is
+        // attached; the default disabled tracer keeps this `None` and the
+        // hot path allocation-free.
+        let mut em = self
+            .tracer
+            .enabled()
+            .then(|| PlanSpanEmitter::new(&self.tracer, self.arch, cfg.count_packing));
         for step in steps {
+            if let Some(em) = em.as_mut() {
+                // The emitter needs the block's scheduled cycles up
+                // front; the step carries the same panel geometry the
+                // resident buffers will have (pinned by the plan/driver
+                // parity gates), so the model call here reproduces the
+                // accounting below bit-for-bit.
+                let compute_cycles = match &step {
+                    PlanStep::Compute(cs) => {
+                        self.block_schedule_p(
+                            cfg,
+                            cs.panels_b,
+                            cs.panels_a,
+                            cs.kc_eff,
+                            cs.br_panel_bytes,
+                            prec,
+                        )
+                        .total
+                    }
+                    _ => 0,
+                };
+                em.step(&step, compute_cycles);
+            }
             match step {
                 PlanStep::Pack(p) => {
                     if cfg.count_packing && p.charged {
@@ -299,6 +384,13 @@ impl<'a> ParallelGemm<'a> {
         }
         if cfg.count_packing {
             cycles.total += cycles.packing;
+        }
+        if let Some(em) = em {
+            let traced = em.finish();
+            debug_assert_eq!(
+                traced, cycles.total,
+                "traced span stream must account every executed cycle"
+            );
         }
         (cycles, stats)
     }
@@ -739,6 +831,55 @@ mod tests {
         // cfg kc/nc differ from the prepack geometry: error, not UB.
         let e = g.run_prepacked(&cfg(1, 16, 16, 16), &a, &pb, &mut c).unwrap_err();
         assert!(e.to_string().contains("prepacked B"), "{e}");
+    }
+
+    #[test]
+    fn traced_run_is_bit_identical_to_untraced() {
+        use crate::obs::{Tracer, PLAN_STEPS_TRACK};
+        let arch = vc1902();
+        let mut rng = Pcg32::new(0x7A);
+        let a = MatU8::random(33, 40, &mut rng);
+        let b = MatU8::random(40, 21, &mut rng);
+        let mut cfg = cfg(3, 16, 16, 16);
+        cfg.count_packing = true;
+        let mut c1 = MatI32::zeros(33, 21);
+        let mut c2 = MatI32::zeros(33, 21);
+        let (cy1, st1) = ParallelGemm::new(&arch).run(&cfg, &a, &b, &mut c1).unwrap();
+        let tracer = Tracer::recording();
+        let traced = ParallelGemm::new(&arch).with_tracer(tracer.clone());
+        let (cy2, st2) = traced.run(&cfg, &a, &b, &mut c2).unwrap();
+        assert_eq!(cy1, cy2, "tracing must not perturb the schedule");
+        assert_eq!(st1, st2);
+        assert_eq!(c1.max_abs_diff(&c2), 0);
+        let data = tracer.snapshot();
+        assert!(!data.spans_on(PLAN_STEPS_TRACK).is_empty());
+        let end = data.events.iter().map(|e| e.end()).max().unwrap();
+        assert_eq!(end, cy2.total, "spans cover exactly the executed schedule");
+    }
+
+    #[test]
+    fn plan_handle_execution_matches_spec_path() {
+        use crate::gemm::packing::prepack_b;
+        let arch = vc1902();
+        let g = ParallelGemm::new(&arch);
+        let mut rng = Pcg32::new(0x60);
+        let (m, k, n) = (21, 45, 27);
+        let mut cfg = cfg(3, 16, 16, 32);
+        cfg.count_packing = true;
+        let a = MatU8::random(m, k, &mut rng);
+        let b = MatU8::random(k, n, &mut rng);
+        let pb = prepack_b(&b, cfg.ccp.kc, cfg.ccp.nc);
+        let plan = GemmPlan::lower(&arch, &cfg, m, n, k, Precision::U8, true).unwrap();
+        let mut c1 = MatI32::zeros(m, n);
+        let mut c2 = MatI32::zeros(m, n);
+        let (cy1, st1) = g.run_prepacked(&cfg, &a, &pb, &mut c1).unwrap();
+        let (cy2, st2) = g.run_prepacked_plan_p(&plan, &a, &pb, &mut c2).unwrap();
+        assert_eq!(c1.max_abs_diff(&c2), 0, "plan-handle numerics must be bit-exact");
+        assert_eq!(cy1, cy2, "plan-handle schedule must match the spec path");
+        assert_eq!(st1, st2);
+        // A plan lowered for on-the-fly packing is rejected up front.
+        let dense = GemmPlan::lower(&arch, &cfg, m, n, k, Precision::U8, false).unwrap();
+        assert!(g.run_prepacked_plan_p(&dense, &a, &pb, &mut c2).is_err());
     }
 
     #[test]

@@ -63,6 +63,11 @@
 //!                 weight-stationary packed-operand cache with LRU
 //!                 eviction, and the pipelined pack/transfer/compute
 //!                 executor over the cycle models).
+//! - [`obs`]     — cycle-domain observability: the tracer (hierarchical
+//!                 spans / instants / counters over the deterministic
+//!                 clocks), Chrome trace-event + text-gantt exporters,
+//!                 and the unified metrics registry the serving report
+//!                 snapshots into.
 //! - [`runtime`] — PJRT client wrapper that loads the AOT artifacts
 //!                 (`artifacts/*.hlo.txt`, produced by `python/compile/`)
 //!                 and executes them from Rust.
@@ -86,6 +91,7 @@ pub mod cluster;
 pub mod coordinator;
 pub mod dl;
 pub mod gemm;
+pub mod obs;
 pub mod plan;
 pub mod quant;
 pub mod report;

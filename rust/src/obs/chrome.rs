@@ -1,0 +1,188 @@
+//! Chrome trace-event JSON export — the format Perfetto and
+//! `chrome://tracing` load directly.
+//!
+//! The emitted document is the classic `{"traceEvents": [...]}` array
+//! form: `"M"` metadata records name processes/tracks, `"X"` complete
+//! events carry spans, `"i"` instants and `"C"` counters the rest. The
+//! writer is fully deterministic: events are ordered by
+//! (pid, tid, ts, emission order) with a stable sort, names are escaped
+//! by hand, and no wall-clock data ever enters the output — identical
+//! recordings serialize to identical bytes.
+
+use super::tracer::{EventKind, TraceData};
+use std::fmt::Write as _;
+
+/// Escape a string for a JSON string literal.
+fn escape_into(out: &mut String, s: &str) {
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+}
+
+fn push_args(out: &mut String, args: &[(String, i64)]) {
+    out.push_str(",\"args\":{");
+    for (i, (k, v)) in args.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push('"');
+        escape_into(out, k);
+        let _ = write!(out, "\":{v}");
+    }
+    out.push('}');
+}
+
+/// Serialize a recorded trace to Chrome trace-event JSON.
+///
+/// Load the result in [Perfetto](https://ui.perfetto.dev) ("Open trace
+/// file") or `chrome://tracing`; the `displayTimeUnit` is nanoseconds so
+/// the viewer shows raw cycle / logical-µs numbers without rescaling.
+pub fn to_chrome_json(data: &TraceData) -> String {
+    let mut out = String::with_capacity(256 + data.events.len() * 96);
+    out.push_str("{\"displayTimeUnit\":\"ns\",\"traceEvents\":[");
+    let mut first = true;
+    let mut sep = |out: &mut String| {
+        if first {
+            first = false;
+        } else {
+            out.push(',');
+        }
+        out.push('\n');
+    };
+
+    // Metadata first: process and track display names (BTreeMap order).
+    for (pid, name) in &data.process_names {
+        sep(&mut out);
+        out.push_str("{\"ph\":\"M\",\"name\":\"process_name\",\"pid\":");
+        let _ = write!(out, "{pid},\"tid\":0,\"args\":{{\"name\":\"");
+        escape_into(&mut out, name);
+        out.push_str("\"}}");
+    }
+    for ((pid, tid), name) in &data.track_names {
+        sep(&mut out);
+        out.push_str("{\"ph\":\"M\",\"name\":\"thread_name\",\"pid\":");
+        let _ = write!(out, "{pid},\"tid\":{tid},\"args\":{{\"name\":\"");
+        escape_into(&mut out, name);
+        out.push_str("\"}}");
+    }
+
+    // Events ordered by track then time; the sort is stable, so events
+    // sharing a timestamp keep their deterministic emission order.
+    let mut order: Vec<usize> = (0..data.events.len()).collect();
+    order.sort_by_key(|&i| {
+        let e = &data.events[i];
+        (e.track.pid, e.track.tid, e.ts)
+    });
+    for i in order {
+        let e = &data.events[i];
+        sep(&mut out);
+        out.push_str("{\"name\":\"");
+        escape_into(&mut out, &e.name);
+        match e.kind {
+            EventKind::Span { dur } => {
+                let _ = write!(
+                    out,
+                    "\",\"ph\":\"X\",\"ts\":{},\"dur\":{dur},\"pid\":{},\"tid\":{}",
+                    e.ts, e.track.pid, e.track.tid
+                );
+            }
+            EventKind::Instant => {
+                let _ = write!(
+                    out,
+                    "\",\"ph\":\"i\",\"s\":\"t\",\"ts\":{},\"pid\":{},\"tid\":{}",
+                    e.ts, e.track.pid, e.track.tid
+                );
+            }
+            EventKind::Counter { value } => {
+                let _ = write!(
+                    out,
+                    "\",\"ph\":\"C\",\"ts\":{},\"pid\":{},\"tid\":{}",
+                    e.ts, e.track.pid, e.track.tid
+                );
+                out.push_str(",\"args\":{\"value\":");
+                let _ = write!(out, "{value}}}}}");
+                continue;
+            }
+        }
+        if e.args.is_empty() {
+            out.push('}');
+        } else {
+            push_args(&mut out, &e.args);
+            out.push('}');
+        }
+    }
+    out.push_str("\n]}\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::{TrackId, Tracer};
+    use crate::util::json::Json;
+
+    fn sample() -> TraceData {
+        let t = Tracer::recording();
+        t.name_process(1, "plan (cycles)");
+        t.name_track(TrackId::new(1, 0), "steps");
+        t.span_args(TrackId::new(1, 0), "compute jc0", 10, 30, &[("panels", 4)]);
+        t.instant(TrackId::new(1, 0), "release \"Bc\"", 30);
+        t.counter(TrackId::new(1, 1), "queue_depth", 5, 2);
+        t.snapshot()
+    }
+
+    #[test]
+    fn exports_valid_json_with_all_phases() {
+        let json = to_chrome_json(&sample());
+        let doc = Json::parse(&json).expect("exporter emits valid JSON");
+        let events = doc.get("traceEvents").and_then(Json::as_arr).unwrap();
+        // 2 metadata + 3 events.
+        assert_eq!(events.len(), 5);
+        let phases: Vec<&str> = events
+            .iter()
+            .map(|e| e.get("ph").and_then(Json::as_str).unwrap())
+            .collect();
+        assert_eq!(phases, vec!["M", "M", "X", "i", "C"]);
+        let span = &events[2];
+        assert_eq!(span.get("ts").and_then(Json::as_num), Some(10.0));
+        assert_eq!(span.get("dur").and_then(Json::as_num), Some(20.0));
+        assert_eq!(
+            span.get("args").and_then(|a| a.get("panels")).and_then(Json::as_num),
+            Some(4.0)
+        );
+        let counter = &events[4];
+        assert_eq!(
+            counter.get("args").and_then(|a| a.get("value")).and_then(Json::as_num),
+            Some(2.0)
+        );
+    }
+
+    #[test]
+    fn escapes_quotes_in_names() {
+        let json = to_chrome_json(&sample());
+        assert!(json.contains("release \\\"Bc\\\""), "{json}");
+        Json::parse(&json).expect("escaped names still parse");
+    }
+
+    #[test]
+    fn identical_data_exports_identical_bytes() {
+        assert_eq!(to_chrome_json(&sample()), to_chrome_json(&sample()));
+    }
+
+    #[test]
+    fn empty_trace_is_still_valid() {
+        let json = to_chrome_json(&TraceData::default());
+        let doc = Json::parse(&json).unwrap();
+        assert_eq!(doc.get("traceEvents").and_then(Json::as_arr).unwrap().len(), 0);
+    }
+}

@@ -1,0 +1,124 @@
+//! Multi-track text gantt rendering of a recorded trace — the
+//! generalisation of `sim/trace.rs`'s single-block chart to any traced
+//! timeline (a whole serving run's pack/transfer/compute pipeline, a
+//! plan execution's loop levels).
+
+use super::tracer::{EventKind, TraceData, TrackId};
+
+/// Render the spans of one process as a text gantt chart, one row per
+/// track, `width` characters across the timeline. Each span is drawn
+/// with the first character of its name (spans later in emission order
+/// win ties); instants render as `|`. Tracks with no events are
+/// omitted. Returns a note line when the process recorded no spans.
+pub fn gantt(data: &TraceData, pid: u64, width: usize) -> String {
+    let width = width.max(10);
+    let events: Vec<_> = data.events.iter().filter(|e| e.track.pid == pid).collect();
+    let t0 = events.iter().map(|e| e.ts).min().unwrap_or(0);
+    let t1 = events.iter().map(|e| e.end()).max().unwrap_or(0);
+    if t1 <= t0 {
+        return format!("(no spans recorded for process {pid})\n");
+    }
+    let total = t1 - t0;
+    let scale = total as f64 / width as f64;
+
+    let mut out = String::new();
+    let pname = data
+        .process_names
+        .get(&pid)
+        .map(String::as_str)
+        .unwrap_or("trace");
+    out.push_str(&format!(
+        "{pname}: [{t0}, {t1}] — {total} units, 1 char ≈ {scale:.0}\n"
+    ));
+
+    let mut tids: Vec<u64> = events.iter().map(|e| e.track.tid).collect();
+    tids.sort_unstable();
+    tids.dedup();
+    let label_w = tids
+        .iter()
+        .map(|tid| track_label(data, pid, *tid).len())
+        .max()
+        .unwrap_or(0);
+    for tid in tids {
+        let mut row = vec!['.'; width];
+        let mut busy = 0u64;
+        for e in events.iter().filter(|e| e.track.tid == tid) {
+            let a = (((e.ts - t0) as f64 / scale) as usize).min(width - 1);
+            match e.kind {
+                EventKind::Span { dur } => {
+                    let b = (((e.end() - t0) as f64 / scale).ceil() as usize)
+                        .clamp(a + 1, width);
+                    let glyph = e.name.chars().next().unwrap_or('#');
+                    for cell in &mut row[a..b] {
+                        *cell = glyph;
+                    }
+                    busy += dur;
+                }
+                EventKind::Instant => {
+                    if row[a] == '.' {
+                        row[a] = '|';
+                    }
+                }
+                EventKind::Counter { .. } => {}
+            }
+        }
+        let label = track_label(data, pid, tid);
+        out.push_str(&format!(
+            "{label:<label_w$} [{}] {:.0}%\n",
+            row.iter().collect::<String>(),
+            busy as f64 / total as f64 * 100.0,
+        ));
+    }
+    out.push_str("legend: span = first letter of its name, | instant, . idle\n");
+    out
+}
+
+fn track_label(data: &TraceData, pid: u64, tid: u64) -> String {
+    match data.track_names.get(&(pid, tid)) {
+        Some(name) => name.clone(),
+        None => format!("track {tid}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::Tracer;
+
+    fn sample() -> TraceData {
+        let t = Tracer::recording();
+        t.name_process(2, "pipeline (cycles)");
+        t.name_track(TrackId::new(2, 0), "pack");
+        t.name_track(TrackId::new(2, 1), "device 0");
+        t.span(TrackId::new(2, 0), "pack b0", 0, 40);
+        t.span(TrackId::new(2, 1), "compute b0", 40, 200);
+        t.instant(TrackId::new(2, 1), "done", 200);
+        // A counter on another process must not leak into pid 2's chart.
+        t.counter(TrackId::new(3, 0), "depth", 10, 1);
+        t.snapshot()
+    }
+
+    #[test]
+    fn renders_one_row_per_active_track() {
+        let g = gantt(&sample(), 2, 50);
+        assert_eq!(g.lines().filter(|l| l.contains('[')).count(), 2, "{g}");
+        assert!(g.contains("pack"), "{g}");
+        assert!(g.contains("device 0"), "{g}");
+        assert!(g.contains('p') && g.contains('c'), "span glyphs drawn: {g}");
+        assert!(g.contains("legend"), "{g}");
+    }
+
+    #[test]
+    fn utilisation_reflects_span_coverage() {
+        let g = gantt(&sample(), 2, 50);
+        // device 0 is busy 160 of 200 units = 80%.
+        let dev = g.lines().find(|l| l.starts_with("device 0")).unwrap();
+        assert!(dev.trim_end().ends_with("80%"), "{dev}");
+    }
+
+    #[test]
+    fn empty_process_renders_a_note() {
+        let g = gantt(&TraceData::default(), 9, 50);
+        assert!(g.contains("no spans"), "{g}");
+    }
+}

@@ -1,0 +1,195 @@
+//! The unified metrics registry: one snapshot for counters, gauges and
+//! histogram summaries, replacing ad-hoc per-subsystem stat structs at
+//! the reporting boundary.
+//!
+//! The serving runtime folds its `CacheStats` / `PlanCacheStats` /
+//! `LatencyStats` into one registry
+//! ([`crate::coordinator::ServingReport::metrics`]); `report::serving_table`
+//! and `BENCH_serving.json` consume that snapshot instead of reaching
+//! into each struct. Everything is `BTreeMap`-backed so iteration,
+//! rendering and JSON serialisation are deterministic.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// Percentile summary of one distribution (µs, cycles, rows — the unit
+/// is part of the metric's name).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HistogramSummary {
+    /// Samples the summary was computed over.
+    pub count: u64,
+    /// Mean of the samples.
+    pub mean: f64,
+    /// Median.
+    pub p50: f64,
+    /// 95th percentile.
+    pub p95: f64,
+    /// 99th percentile.
+    pub p99: f64,
+    /// Largest sample.
+    pub max: f64,
+}
+
+/// A unified snapshot of counters, gauges and histogram summaries.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct MetricsRegistry {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+    histograms: BTreeMap<String, HistogramSummary>,
+}
+
+impl MetricsRegistry {
+    /// An empty registry.
+    pub fn new() -> MetricsRegistry {
+        MetricsRegistry::default()
+    }
+
+    /// Set a monotonic counter.
+    pub fn set_counter(&mut self, name: &str, value: u64) {
+        self.counters.insert(name.to_string(), value);
+    }
+
+    /// Set a point-in-time gauge.
+    pub fn set_gauge(&mut self, name: &str, value: f64) {
+        self.gauges.insert(name.to_string(), value);
+    }
+
+    /// Set a histogram summary.
+    pub fn set_histogram(&mut self, name: &str, summary: HistogramSummary) {
+        self.histograms.insert(name.to_string(), summary);
+    }
+
+    /// Read a counter back.
+    pub fn counter(&self, name: &str) -> Option<u64> {
+        self.counters.get(name).copied()
+    }
+
+    /// Read a gauge back.
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        self.gauges.get(name).copied()
+    }
+
+    /// Read a histogram summary back.
+    pub fn histogram(&self, name: &str) -> Option<&HistogramSummary> {
+        self.histograms.get(name)
+    }
+
+    /// Whether nothing has been recorded.
+    pub fn is_empty(&self) -> bool {
+        self.counters.is_empty() && self.gauges.is_empty() && self.histograms.is_empty()
+    }
+
+    /// Every metric as `(name, rendered value)` rows in deterministic
+    /// (kind, name) order — what table emitters consume.
+    pub fn rows(&self) -> Vec<(String, String)> {
+        let mut rows = Vec::new();
+        for (k, v) in &self.counters {
+            rows.push((k.clone(), v.to_string()));
+        }
+        for (k, v) in &self.gauges {
+            rows.push((k.clone(), format!("{v:.3}")));
+        }
+        for (k, h) in &self.histograms {
+            rows.push((
+                k.clone(),
+                format!(
+                    "n={} mean={:.1} p50={:.1} p95={:.1} p99={:.1} max={:.1}",
+                    h.count, h.mean, h.p50, h.p95, h.p99, h.max
+                ),
+            ));
+        }
+        rows
+    }
+
+    /// Serialize the registry as one deterministic JSON object:
+    /// `{"counters":{…},"gauges":{…},"histograms":{…}}`.
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{\"counters\":{");
+        for (i, (k, v)) in self.counters.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            let _ = write!(out, "\"{k}\":{v}");
+        }
+        out.push_str("},\"gauges\":{");
+        for (i, (k, v)) in self.gauges.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            let _ = write!(out, "\"{k}\":{v:.6}");
+        }
+        out.push_str("},\"histograms\":{");
+        for (i, (k, h)) in self.histograms.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            let _ = write!(
+                out,
+                "\"{k}\":{{\"count\":{},\"mean\":{:.3},\"p50\":{:.3},\"p95\":{:.3},\
+                 \"p99\":{:.3},\"max\":{:.3}}}",
+                h.count, h.mean, h.p50, h.p95, h.p99, h.max
+            );
+        }
+        out.push_str("}}");
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    fn sample() -> MetricsRegistry {
+        let mut m = MetricsRegistry::new();
+        m.set_counter("requests_completed", 10);
+        m.set_counter("cache_hits", 6);
+        m.set_gauge("cache_hit_rate", 2.0 / 3.0);
+        m.set_histogram(
+            "latency_us",
+            HistogramSummary { count: 10, mean: 12.0, p50: 11.0, p95: 20.0, p99: 29.0, max: 30.0 },
+        );
+        m
+    }
+
+    #[test]
+    fn accessors_round_trip() {
+        let m = sample();
+        assert_eq!(m.counter("requests_completed"), Some(10));
+        assert_eq!(m.counter("missing"), None);
+        assert!((m.gauge("cache_hit_rate").unwrap() - 2.0 / 3.0).abs() < 1e-12);
+        assert_eq!(m.histogram("latency_us").unwrap().count, 10);
+        assert!(!m.is_empty());
+        assert!(MetricsRegistry::new().is_empty());
+    }
+
+    #[test]
+    fn rows_are_sorted_within_kind() {
+        let rows = sample().rows();
+        let names: Vec<&str> = rows.iter().map(|(k, _)| k.as_str()).collect();
+        assert_eq!(
+            names,
+            vec!["cache_hits", "requests_completed", "cache_hit_rate", "latency_us"]
+        );
+        assert!(rows[3].1.contains("p99=29.0"), "{:?}", rows[3]);
+    }
+
+    #[test]
+    fn json_is_valid_and_deterministic() {
+        let m = sample();
+        let json = m.to_json();
+        assert_eq!(json, sample().to_json(), "same registry, same bytes");
+        let doc = Json::parse(&json).expect("registry JSON parses");
+        assert_eq!(
+            doc.get("counters").and_then(|c| c.get("cache_hits")).and_then(Json::as_num),
+            Some(6.0)
+        );
+        assert_eq!(
+            doc.get("histograms")
+                .and_then(|h| h.get("latency_us"))
+                .and_then(|l| l.get("max"))
+                .and_then(Json::as_num),
+            Some(30.0)
+        );
+    }
+}

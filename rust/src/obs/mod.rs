@@ -1,0 +1,60 @@
+//! Cycle-domain observability: the tracer, its exporters, and the
+//! unified metrics registry.
+//!
+//! The paper's §5.3 argument is a *profile* — knowing when each
+//! activity runs is what explains the scalability numbers. This module
+//! gives the whole stack that capability: a [`Tracer`] with
+//! hierarchical spans, instant events and counters over the runtime's
+//! deterministic clocks (simulated cycles, the logical-µs serving
+//! clock), threaded through the plan executor
+//! ([`crate::gemm::ParallelGemm::with_tracer`]), the serving runtime
+//! ([`crate::coordinator::ServingRuntime::with_tracer`]) and the
+//! cluster backend. Two exporters render a recording: Chrome
+//! trace-event JSON ([`to_chrome_json`], loadable in Perfetto /
+//! `chrome://tracing` via `serve --trace-out` / `plan --trace-out`) and
+//! a multi-track text [`gantt`] generalising `sim/trace.rs`'s
+//! single-block chart.
+//!
+//! Everything stays in the deterministic domain: events carry
+//! caller-supplied logical timestamps only, so identically-seeded runs
+//! export byte-identical traces, and a traced plan execution's spans
+//! sum to [`crate::plan::GemmPlan::cost`] bit-for-bit — both pinned in
+//! `tests/trace_conformance.rs`. The disabled tracer is allocation-free
+//! on the hot path (pinned in `tests/obs_zero_alloc.rs`).
+//!
+//! Process-id map of the exported traces:
+//!
+//! | pid | process | clock |
+//! |-----|---------|-------|
+//! | [`PLAN_PID`] | plan execution (steps + L1/L2/L3 level spans) | cycles |
+//! | [`SERVING_REQUEST_PID`] | per-request span trees + admission/cache events | logical µs |
+//! | [`SERVING_PIPELINE_PID`] | pack/transfer/per-device compute stages | cycles |
+//! | [`CLUSTER_PID`] | per-link collective transfers | cycles |
+
+mod chrome;
+mod gantt;
+mod metrics;
+mod plan_trace;
+mod tracer;
+
+pub use chrome::to_chrome_json;
+pub use gantt::gantt;
+pub use metrics::{HistogramSummary, MetricsRegistry};
+pub use plan_trace::{
+    trace_plan, PlanSpanEmitter, PLAN_IC_TRACK, PLAN_JC_TRACK, PLAN_PC_TRACK, PLAN_PID,
+    PLAN_STEPS_TRACK,
+};
+pub use tracer::{EventKind, TraceData, TraceEvent, TrackId, Tracer};
+
+/// Process id of the per-request serving timeline (logical µs): one
+/// track per admitted request plus the shared admission track.
+pub const SERVING_REQUEST_PID: u64 = 10;
+/// Process id of the serving pipeline stage timeline (cycles): the
+/// pack engine, the transfer engine and one track per compute device.
+pub const SERVING_PIPELINE_PID: u64 = 11;
+/// Process id of the cluster collective timeline (cycles).
+pub const CLUSTER_PID: u64 = 12;
+
+/// The shared admission/former/cache track of
+/// [`SERVING_REQUEST_PID`] (tid 0; request tracks start at 1).
+pub const SERVING_ADMISSION_TRACK: TrackId = TrackId::new(SERVING_REQUEST_PID, 0);

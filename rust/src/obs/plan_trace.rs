@@ -1,0 +1,272 @@
+//! Plan-execution tracing: the span emitter `ParallelGemm::run_plan`
+//! drives while executing, and the model-only walker behind
+//! `plan --trace-out`.
+//!
+//! Both paths emit through one [`PlanSpanEmitter`], so an executed
+//! trace and a model-predicted trace of the same plan are *identical* —
+//! span for span, cycle for cycle (pinned in
+//! `tests/trace_conformance.rs`). The emitter advances a serial cycle
+//! cursor exactly as the drivers' accounting does: a pack span lasts
+//! [`PackStep::cycles`] only when the plan counts packing and the step
+//! is charged (uncharged Bc fetches of a prepacked plan are instants),
+//! a compute span lasts the block's
+//! [`ParallelGemm::block_schedule_p`] total, releases are instants —
+//! so the final cursor equals [`GemmPlan::cost`]`.total` bit-for-bit.
+//!
+//! Span taxonomy (all on [`PLAN_PID`]):
+//!
+//! | track | spans |
+//! |-------|-------|
+//! | `steps` | `pack Bc` / `fetch Bc` / `pack Ac` / `compute` / `release *` |
+//! | `L3 ic` | one span per resident Ac block (loop L3 body) |
+//! | `L2 pc` | one span per resident Bc block (loop L2 body) |
+//! | `L1 jc` | one span per jc iteration (loop L1 body) |
+//!
+//! Every `steps` span nests inside its `L2 pc` parent, every `compute`
+//! inside its `L3 ic` parent — the hierarchy viewers reconstruct by
+//! interval containment.
+
+use super::tracer::{TrackId, Tracer};
+use crate::arch::VersalArch;
+use crate::gemm::ParallelGemm;
+use crate::plan::{Buffer, ComputeStep, GemmPlan, PackStep, PlanStep, ReleaseStep};
+
+/// Process id of the plan-execution (cycle-domain) timeline.
+pub const PLAN_PID: u64 = 1;
+/// The serial step track: packs, computes, releases.
+pub const PLAN_STEPS_TRACK: TrackId = TrackId::new(PLAN_PID, 0);
+/// Loop-L3 (ic / resident Ac) level spans.
+pub const PLAN_IC_TRACK: TrackId = TrackId::new(PLAN_PID, 1);
+/// Loop-L2 (pc / resident Bc) level spans.
+pub const PLAN_PC_TRACK: TrackId = TrackId::new(PLAN_PID, 2);
+/// Loop-L1 (jc) level spans.
+pub const PLAN_JC_TRACK: TrackId = TrackId::new(PLAN_PID, 3);
+
+/// Emits the per-step span stream of one plan execution, keeping the
+/// cycle cursor in lockstep with the drivers' cost accounting.
+pub struct PlanSpanEmitter<'a> {
+    tracer: &'a Tracer,
+    arch: &'a VersalArch,
+    count_packing: bool,
+    clock: u64,
+    jc: Option<usize>,
+    jc_start: u64,
+    pc_start: u64,
+    ic_start: u64,
+}
+
+impl<'a> PlanSpanEmitter<'a> {
+    /// An emitter at cycle 0. Names the plan process/tracks once.
+    pub fn new(
+        tracer: &'a Tracer,
+        arch: &'a VersalArch,
+        count_packing: bool,
+    ) -> PlanSpanEmitter<'a> {
+        tracer.name_process(PLAN_PID, "plan execution (cycles)");
+        tracer.name_track(PLAN_STEPS_TRACK, "steps");
+        tracer.name_track(PLAN_IC_TRACK, "L3 ic (Ac resident)");
+        tracer.name_track(PLAN_PC_TRACK, "L2 pc (Bc resident)");
+        tracer.name_track(PLAN_JC_TRACK, "L1 jc");
+        PlanSpanEmitter {
+            tracer,
+            arch,
+            count_packing,
+            clock: 0,
+            jc: None,
+            jc_start: 0,
+            pc_start: 0,
+            ic_start: 0,
+        }
+    }
+
+    /// The cycle cursor (equals the accumulated schedule total).
+    pub fn clock(&self) -> u64 {
+        self.clock
+    }
+
+    /// Record one step. Compute steps must pass the block's scheduled
+    /// cycles (`block_schedule_p(...).total`) as `compute_cycles`; it is
+    /// ignored for the other step kinds.
+    pub fn step(&mut self, step: &PlanStep, compute_cycles: u64) {
+        match step {
+            PlanStep::Pack(p) => self.pack(p),
+            PlanStep::Compute(c) => self.compute(c, compute_cycles),
+            PlanStep::Release(r) => self.release(r),
+        }
+    }
+
+    fn pack(&mut self, p: &PackStep) {
+        if p.buffer == Buffer::Bc {
+            // A new resident Bc opens a pc-level span; a new jc column
+            // also opens a jc-level span (closing the previous one).
+            if self.jc != Some(p.col_off) {
+                self.close_jc();
+                self.jc = Some(p.col_off);
+                self.jc_start = self.clock;
+            }
+            self.pc_start = self.clock;
+        } else {
+            self.ic_start = self.clock;
+        }
+        let charged = self.count_packing && p.charged;
+        let dur = if charged { p.cycles(self.arch) } else { 0 };
+        let name = match (p.buffer, p.charged) {
+            (Buffer::Bc, true) => "pack Bc",
+            (Buffer::Bc, false) => "fetch Bc",
+            (Buffer::Ac, _) => "pack Ac",
+        };
+        self.tracer.span_args(
+            PLAN_STEPS_TRACK,
+            name,
+            self.clock,
+            self.clock + dur,
+            &[
+                ("row_off", p.row_off as i64),
+                ("col_off", p.col_off as i64),
+                ("bytes", p.bytes as i64),
+            ],
+        );
+        self.clock += dur;
+    }
+
+    fn compute(&mut self, c: &ComputeStep, cycles: u64) {
+        self.tracer.span_args(
+            PLAN_STEPS_TRACK,
+            "compute",
+            self.clock,
+            self.clock + cycles,
+            &[
+                ("jc", c.jc as i64),
+                ("pc", c.pc as i64),
+                ("ic", c.ic as i64),
+                ("panels_a", c.panels_a as i64),
+                ("panels_b", c.panels_b as i64),
+                ("macs", c.macs() as i64),
+            ],
+        );
+        self.clock += cycles;
+    }
+
+    fn release(&mut self, r: &ReleaseStep) {
+        match r.buffer {
+            Buffer::Ac => {
+                self.tracer.instant(PLAN_STEPS_TRACK, "release Ac", self.clock);
+                self.tracer.span(PLAN_IC_TRACK, "ic block", self.ic_start, self.clock);
+            }
+            Buffer::Bc => {
+                self.tracer.instant(PLAN_STEPS_TRACK, "release Bc", self.clock);
+                self.tracer.span(PLAN_PC_TRACK, "pc block", self.pc_start, self.clock);
+            }
+        }
+    }
+
+    fn close_jc(&mut self) {
+        if self.jc.take().is_some() {
+            self.tracer.span(PLAN_JC_TRACK, "jc block", self.jc_start, self.clock);
+        }
+    }
+
+    /// Close any open level span and return the final cycle cursor.
+    pub fn finish(mut self) -> u64 {
+        self.close_jc();
+        self.clock
+    }
+}
+
+/// Walk a plan through the schedule *model* (no data is touched) and
+/// emit the span stream it predicts — what `plan --trace-out` exports.
+/// Returns the traced total, which equals `plan.cost(arch).total`
+/// bit-for-bit, and equals the trace an actual execution of the same
+/// plan emits (both pinned in `tests/trace_conformance.rs`).
+pub fn trace_plan(arch: &VersalArch, plan: &GemmPlan, tracer: &Tracer) -> u64 {
+    let engine = ParallelGemm::new(arch);
+    let cfg = plan.gemm_config();
+    let mut em = PlanSpanEmitter::new(tracer, arch, cfg.count_packing);
+    for step in plan.steps_iter() {
+        let compute_cycles = match &step {
+            PlanStep::Compute(c) => {
+                engine
+                    .block_schedule_p(&cfg, c.panels_b, c.panels_a, c.kc_eff, c.br_panel_bytes, plan.precision)
+                    .total
+            }
+            _ => 0,
+        };
+        em.step(&step, compute_cycles);
+    }
+    em.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{vc1902, VersalArch};
+    use crate::gemm::{Ccp, GemmConfig, Precision};
+    use crate::obs::tracer::EventKind;
+
+    fn small_plan(count_packing: bool, prepacked: bool) -> (VersalArch, GemmPlan) {
+        let arch = vc1902();
+        let mut cfg = GemmConfig::paper_table2(2);
+        cfg.ccp = Ccp { mc: 16, nc: 16, kc: 16 };
+        cfg.count_packing = count_packing;
+        let plan =
+            GemmPlan::lower(&arch, &cfg, 32, 32, 48, Precision::U8, prepacked).unwrap();
+        (arch, plan)
+    }
+
+    #[test]
+    fn traced_total_equals_plan_cost_bit_for_bit() {
+        for (count_packing, prepacked) in
+            [(false, false), (true, false), (true, true), (false, true)]
+        {
+            let (arch, plan) = small_plan(count_packing, prepacked);
+            let tracer = Tracer::recording();
+            let total = trace_plan(&arch, &plan, &tracer);
+            assert_eq!(
+                total,
+                plan.cost(&arch).total,
+                "count_packing={count_packing} prepacked={prepacked}"
+            );
+            let data = tracer.snapshot();
+            let end = data.events.iter().map(|e| e.end()).max().unwrap();
+            assert_eq!(end, total, "no span outlives the schedule");
+        }
+    }
+
+    #[test]
+    fn level_spans_cover_the_timeline_and_count_the_loop_nest() {
+        let (arch, plan) = small_plan(true, false);
+        let tracer = Tracer::recording();
+        let total = trace_plan(&arch, &plan, &tracer);
+        let data = tracer.snapshot();
+        assert_eq!(data.spans_on(PLAN_JC_TRACK).len(), plan.jc_blocks());
+        assert_eq!(
+            data.spans_on(PLAN_PC_TRACK).len(),
+            plan.jc_blocks() * plan.pc_blocks()
+        );
+        assert_eq!(
+            data.spans_on(PLAN_IC_TRACK).len(),
+            plan.jc_blocks() * plan.pc_blocks() * plan.ic_blocks()
+        );
+        // The jc spans tile [0, total) exactly.
+        let jc = data.spans_on(PLAN_JC_TRACK);
+        assert_eq!(jc.first().unwrap().ts, 0);
+        assert_eq!(jc.last().unwrap().end(), total);
+    }
+
+    #[test]
+    fn prepacked_bc_steps_are_uncharged_fetch_instants() {
+        let (arch, plan) = small_plan(true, true);
+        let tracer = Tracer::recording();
+        trace_plan(&arch, &plan, &tracer);
+        let data = tracer.snapshot();
+        let fetches: Vec<_> =
+            data.events.iter().filter(|e| e.name == "fetch Bc").collect();
+        assert!(!fetches.is_empty());
+        assert!(
+            fetches.iter().all(|e| matches!(e.kind, EventKind::Instant)),
+            "uncharged fetches must not advance the clock"
+        );
+        assert!(data.events.iter().any(|e| e.name == "pack Ac"));
+        assert!(!data.events.iter().any(|e| e.name == "pack Bc"));
+    }
+}

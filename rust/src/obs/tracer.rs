@@ -1,0 +1,292 @@
+//! The cycle-domain tracer: hierarchical spans, instant events and
+//! counters over the runtime's deterministic clocks.
+//!
+//! Two design rules keep the tracer honest:
+//!
+//! 1. **Caller-supplied timestamps only.** Every event carries a
+//!    timestamp from the deterministic domain that produced it
+//!    (simulated cycles or the logical-µs serving clock) — the tracer
+//!    never reads a wall clock, so the same seed yields a byte-identical
+//!    exported trace (pinned in `tests/trace_conformance.rs`).
+//! 2. **The disabled tracer is free.** [`Tracer::disabled`] holds no
+//!    buffer; every emit method is a `None` check that touches nothing
+//!    and allocates nothing (pinned allocation-free in
+//!    `tests/obs_zero_alloc.rs`), so the execution drivers can thread a
+//!    tracer unconditionally.
+//!
+//! The recording tracer is `Arc<Mutex<…>>` inside, so clones share one
+//! buffer and the handle stays `Send + Sync` for the threaded
+//! coordinator. Event names arrive as `&str` and are only turned into
+//! owned strings when a buffer actually records them.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+/// A timeline an event lands on: Chrome trace-event (pid, tid)
+/// coordinates. Processes group related tracks (e.g. the cycle-domain
+/// pipeline vs the µs-domain request timelines); tracks order events
+/// within a process. Constructed directly by emitters — there is no
+/// registration round trip, so the disabled path stays allocation-free.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct TrackId {
+    /// Process id in the exported trace.
+    pub pid: u64,
+    /// Track (thread) id within the process.
+    pub tid: u64,
+}
+
+impl TrackId {
+    /// A track id from its (pid, tid) coordinates.
+    pub const fn new(pid: u64, tid: u64) -> TrackId {
+        TrackId { pid, tid }
+    }
+}
+
+/// What kind of event a [`TraceEvent`] is.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    /// A complete span `[ts, ts + dur)`.
+    Span {
+        /// Span duration in the emitting clock's units.
+        dur: u64,
+    },
+    /// A point-in-time marker.
+    Instant,
+    /// A sampled counter value (queue depths, resident bytes).
+    Counter {
+        /// The sampled value.
+        value: i64,
+    },
+}
+
+/// One recorded event.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TraceEvent {
+    /// The timeline the event belongs to.
+    pub track: TrackId,
+    /// Event name (span label / instant marker / counter series).
+    pub name: String,
+    /// Start timestamp in the emitting clock's units.
+    pub ts: u64,
+    /// Span / instant / counter.
+    pub kind: EventKind,
+    /// Key–value annotations (`args` in the Chrome trace format).
+    pub args: Vec<(String, i64)>,
+}
+
+impl TraceEvent {
+    /// Exclusive end of the event (`ts` itself for instants/counters).
+    pub fn end(&self) -> u64 {
+        match self.kind {
+            EventKind::Span { dur } => self.ts + dur,
+            _ => self.ts,
+        }
+    }
+}
+
+/// Everything a recording tracer captured: the event list in emission
+/// order plus the process/track display names.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct TraceData {
+    /// Events in emission order.
+    pub events: Vec<TraceEvent>,
+    /// Display names of processes (`pid → name`).
+    pub process_names: BTreeMap<u64, String>,
+    /// Display names of tracks (`(pid, tid) → name`).
+    pub track_names: BTreeMap<(u64, u64), String>,
+}
+
+impl TraceData {
+    /// Events on one track, in emission order.
+    pub fn on_track(&self, track: TrackId) -> Vec<&TraceEvent> {
+        self.events.iter().filter(|e| e.track == track).collect()
+    }
+
+    /// Spans on one track, in emission order.
+    pub fn spans_on(&self, track: TrackId) -> Vec<&TraceEvent> {
+        self.events
+            .iter()
+            .filter(|e| e.track == track && matches!(e.kind, EventKind::Span { .. }))
+            .collect()
+    }
+}
+
+/// The tracer handle the execution stack threads around. Cheap to
+/// clone; [`Tracer::disabled`] is the zero-cost default.
+#[derive(Debug, Clone, Default)]
+pub struct Tracer {
+    buf: Option<Arc<Mutex<TraceData>>>,
+}
+
+impl Tracer {
+    /// The no-op tracer: records nothing, allocates nothing.
+    pub fn disabled() -> Tracer {
+        Tracer { buf: None }
+    }
+
+    /// A recording tracer with a fresh shared buffer.
+    pub fn recording() -> Tracer {
+        Tracer { buf: Some(Arc::new(Mutex::new(TraceData::default()))) }
+    }
+
+    /// Whether events are being recorded. Emitters may use this to skip
+    /// building expensive labels.
+    pub fn enabled(&self) -> bool {
+        self.buf.is_some()
+    }
+
+    /// Set the display name of a process.
+    pub fn name_process(&self, pid: u64, name: &str) {
+        if let Some(buf) = &self.buf {
+            buf.lock().unwrap().process_names.insert(pid, name.to_string());
+        }
+    }
+
+    /// Set the display name of a track.
+    pub fn name_track(&self, track: TrackId, name: &str) {
+        if let Some(buf) = &self.buf {
+            buf.lock()
+                .unwrap()
+                .track_names
+                .insert((track.pid, track.tid), name.to_string());
+        }
+    }
+
+    /// Record a complete span `[start, end)`. Zero-length spans are
+    /// recorded as instants so every stored span has `end > start`.
+    pub fn span(&self, track: TrackId, name: &str, start: u64, end: u64) {
+        self.span_args(track, name, start, end, &[]);
+    }
+
+    /// [`Tracer::span`] with key–value annotations.
+    pub fn span_args(
+        &self,
+        track: TrackId,
+        name: &str,
+        start: u64,
+        end: u64,
+        args: &[(&str, i64)],
+    ) {
+        let Some(buf) = &self.buf else { return };
+        let args = args.iter().map(|(k, v)| (k.to_string(), *v)).collect();
+        let kind = if end > start {
+            EventKind::Span { dur: end - start }
+        } else {
+            EventKind::Instant
+        };
+        buf.lock().unwrap().events.push(TraceEvent {
+            track,
+            name: name.to_string(),
+            ts: start,
+            kind,
+            args,
+        });
+    }
+
+    /// Record an instant marker.
+    pub fn instant(&self, track: TrackId, name: &str, ts: u64) {
+        self.instant_args(track, name, ts, &[]);
+    }
+
+    /// [`Tracer::instant`] with key–value annotations.
+    pub fn instant_args(&self, track: TrackId, name: &str, ts: u64, args: &[(&str, i64)]) {
+        let Some(buf) = &self.buf else { return };
+        let args = args.iter().map(|(k, v)| (k.to_string(), *v)).collect();
+        buf.lock().unwrap().events.push(TraceEvent {
+            track,
+            name: name.to_string(),
+            ts,
+            kind: EventKind::Instant,
+            args,
+        });
+    }
+
+    /// Sample a counter series (queue depth, resident bytes, …).
+    pub fn counter(&self, track: TrackId, name: &str, ts: u64, value: i64) {
+        let Some(buf) = &self.buf else { return };
+        buf.lock().unwrap().events.push(TraceEvent {
+            track,
+            name: name.to_string(),
+            ts,
+            kind: EventKind::Counter { value },
+            args: Vec::new(),
+        });
+    }
+
+    /// Snapshot everything recorded so far. The disabled tracer
+    /// snapshots empty data.
+    pub fn snapshot(&self) -> TraceData {
+        match &self.buf {
+            Some(buf) => buf.lock().unwrap().clone(),
+            None => TraceData::default(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_tracer_records_nothing() {
+        let t = Tracer::disabled();
+        assert!(!t.enabled());
+        t.span(TrackId::new(1, 1), "x", 0, 10);
+        t.instant(TrackId::new(1, 1), "y", 5);
+        t.counter(TrackId::new(1, 1), "z", 5, 3);
+        t.name_process(1, "p");
+        assert_eq!(t.snapshot(), TraceData::default());
+    }
+
+    #[test]
+    fn recording_tracer_shares_one_buffer_across_clones() {
+        let t = Tracer::recording();
+        assert!(t.enabled());
+        let track = TrackId::new(7, 3);
+        t.span_args(track, "compute", 100, 250, &[("jc", 0)]);
+        let clone = t.clone();
+        clone.instant(track, "done", 250);
+        let data = t.snapshot();
+        assert_eq!(data.events.len(), 2);
+        assert_eq!(data.events[0].name, "compute");
+        assert_eq!(data.events[0].kind, EventKind::Span { dur: 150 });
+        assert_eq!(data.events[0].args, vec![("jc".to_string(), 0)]);
+        assert_eq!(data.events[1].kind, EventKind::Instant);
+        assert_eq!(data.events[0].end(), 250);
+    }
+
+    #[test]
+    fn zero_length_span_degrades_to_instant() {
+        let t = Tracer::recording();
+        t.span(TrackId::new(1, 1), "empty", 42, 42);
+        let data = t.snapshot();
+        assert_eq!(data.events[0].kind, EventKind::Instant);
+    }
+
+    #[test]
+    fn names_land_in_the_snapshot() {
+        let t = Tracer::recording();
+        t.name_process(2, "pipeline");
+        t.name_track(TrackId::new(2, 1), "device 0");
+        let data = t.snapshot();
+        assert_eq!(data.process_names.get(&2).map(String::as_str), Some("pipeline"));
+        assert_eq!(
+            data.track_names.get(&(2, 1)).map(String::as_str),
+            Some("device 0")
+        );
+    }
+
+    #[test]
+    fn track_filters_select_by_track_and_kind() {
+        let t = Tracer::recording();
+        let a = TrackId::new(1, 1);
+        let b = TrackId::new(1, 2);
+        t.span(a, "s", 0, 5);
+        t.instant(a, "i", 5);
+        t.span(b, "other", 0, 1);
+        let data = t.snapshot();
+        assert_eq!(data.on_track(a).len(), 2);
+        assert_eq!(data.spans_on(a).len(), 1);
+        assert_eq!(data.spans_on(b).len(), 1);
+    }
+}

@@ -394,6 +394,30 @@ pub fn serving_table(r: &ServingReport) -> Table {
         );
         kv("requests / Mcycle", format!("{:.1}", r.requests_per_mcycle()));
     }
+    // The end-to-end latency decomposition (tracer-independent: the
+    // runtime always records the three legs; per request they sum to
+    // the latency exactly).
+    let legs: [(&str, &Option<LatencyStats>); 3] = [
+        ("queue wait µs (mean/p95)", &r.queue_wait),
+        ("batch wait µs (mean/p95)", &r.batch_wait),
+        ("execute µs (mean/p95)", &r.execute),
+    ];
+    for (label, leg) in legs {
+        if let Some(s) = leg {
+            kv(label, format!("{:.1} / {:.1}", s.mean_us, s.p95_us));
+        }
+    }
+    t
+}
+
+/// Render a unified metrics registry snapshot
+/// ([`crate::coordinator::ServingReport::metrics`]) as a two-column
+/// table — every counter, gauge and histogram in deterministic order.
+pub fn metrics_table(m: &crate::obs::MetricsRegistry) -> Table {
+    let mut t = Table::new(&["metric", "value"]).align(0, Align::Left).align(1, Align::Left);
+    for (k, v) in m.rows() {
+        t.row(&[k, v]);
+    }
     t
 }
 
@@ -542,9 +566,27 @@ mod tests {
             pipelined_cycles: 4500,
             sequential_cycles: 6000,
             latency: None,
+            queue_wait: Some(LatencyStats {
+                count: 10,
+                mean_us: 12.0,
+                p50_us: 11.0,
+                p95_us: 20.0,
+                p99_us: 29.0,
+                max_us: 30.0,
+            }),
+            batch_wait: None,
+            execute: None,
         };
         let txt = serving_table(&report).to_text();
         assert!(txt.contains("requests completed"), "{txt}");
+        assert!(txt.contains("queue wait µs"), "{txt}");
+        assert!(txt.contains("12.0 / 20.0"), "leg percentiles rendered: {txt}");
+        assert!(!txt.contains("batch wait µs"), "absent legs are skipped: {txt}");
+        // The same report folds into the unified registry and renders.
+        let mt = metrics_table(&report.metrics()).to_text();
+        assert!(mt.contains("requests_completed"), "{mt}");
+        assert!(mt.contains("cache_hit_rate"), "{mt}");
+        assert!(mt.contains("queue_wait_us"), "{mt}");
         assert!(txt.contains("67% hit rate"), "{txt}");
         assert!(txt.contains("plan cache hits / misses"), "{txt}");
         assert!(txt.contains("4 / 2"), "plan cache counters rendered: {txt}");

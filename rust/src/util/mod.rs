@@ -7,6 +7,7 @@
 pub mod benchkit;
 pub mod cli;
 pub mod ini;
+pub mod json;
 pub mod quickcheck;
 pub mod rng;
 pub mod split;

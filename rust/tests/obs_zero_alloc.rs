@@ -1,0 +1,97 @@
+//! The disabled tracer's zero-cost contract: executing a plan through
+//! an engine holding the default [`Tracer::disabled`] allocates exactly
+//! the same bytes as an engine that was never handed a tracer — only a
+//! recording tracer pays for span buffering — and neither moves the
+//! simulated cycle domain.
+//!
+//! Pinned with a counting global allocator, like the tuner's streaming
+//! O(1)-memory gate in `tuner_streaming.rs`. This file deliberately
+//! holds a single `#[test]`: the harness runs tests of one binary
+//! concurrently, and a second test would race the global counter.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use versal_gemm::arch::vc1902;
+use versal_gemm::gemm::{Ccp, GemmConfig, Mat, ParallelGemm};
+use versal_gemm::obs::Tracer;
+use versal_gemm::util::Pcg32;
+
+struct CountingAlloc;
+
+static BYTES: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        BYTES.fetch_add(new_size as u64, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+fn allocated_during(f: impl FnOnce() -> u64) -> (u64, u64) {
+    let before = BYTES.load(Ordering::SeqCst);
+    let out = f();
+    (out, BYTES.load(Ordering::SeqCst) - before)
+}
+
+#[test]
+fn disabled_tracer_adds_zero_allocations_to_run_plan() {
+    let arch = vc1902();
+    let mut cfg = GemmConfig::paper_table2(2);
+    cfg.ccp = Ccp { mc: 32, nc: 32, kc: 64 };
+    let (m, n, k) = (64, 48, 128);
+    let mut rng = Pcg32::new(0xA110C);
+    let a = Mat::<u8>::random(m, k, &mut rng);
+    let b = Mat::<u8>::random(k, n, &mut rng);
+
+    let run = |engine: &ParallelGemm<'_>| -> u64 {
+        let mut c = Mat::<i32>::zeros(m, n);
+        engine.run_p::<u8>(&cfg, &a, &b, &mut c).expect("run").0.total
+    };
+
+    let baseline_engine = ParallelGemm::new(&arch);
+    let disabled_engine = ParallelGemm::new(&arch).with_tracer(Tracer::disabled());
+    let recording = Tracer::recording();
+    let recording_engine = ParallelGemm::new(&arch).with_tracer(recording.clone());
+
+    // Warm up lazily-initialised runtime state (thread locals, stdio,
+    // ...) so it lands in no measurement.
+    let warm = run(&baseline_engine);
+
+    let (base_cycles, base_bytes) = allocated_during(|| run(&baseline_engine));
+    let (dis_cycles, dis_bytes) = allocated_during(|| run(&disabled_engine));
+    assert_eq!(warm, base_cycles, "the engine is deterministic");
+    assert_eq!(base_cycles, dis_cycles, "a tracer must not move the cycle domain");
+    assert_eq!(
+        dis_bytes, base_bytes,
+        "a disabled tracer must be allocation-free on the run_plan hot path: \
+         {dis_bytes} B with it vs {base_bytes} B without"
+    );
+
+    let (rec_cycles, rec_bytes) = allocated_during(|| run(&recording_engine));
+    assert_eq!(
+        rec_cycles, base_cycles,
+        "a recording tracer must not move the cycle domain either"
+    );
+    assert!(
+        rec_bytes > base_bytes,
+        "sanity: recording does buffer spans ({rec_bytes} B !> {base_bytes} B), \
+         so the zero-cost comparison above is not vacuous"
+    );
+    assert!(
+        !recording.snapshot().events.is_empty(),
+        "the recording run must actually have captured the span stream"
+    );
+}

@@ -1,0 +1,189 @@
+//! Trace conformance: the telemetry layer's cross-cutting contracts.
+//!
+//! 1. `trace_plan`'s traced total equals [`GemmPlan::cost`] bit-for-bit
+//!    for every precision — the trace *is* the schedule model's own
+//!    timeline, not a parallel estimate that can drift.
+//! 2. An actual execution with a recording tracer attached exports
+//!    byte-identical Chrome JSON to the pure plan walk — predicted and
+//!    executed span streams are the same stream by construction.
+//! 3. Serving span trees are well-formed: one track per admitted
+//!    request bracketed by `admitted` … `completed`, contiguous
+//!    non-overlapping legs, and serialised pipeline stage tracks.
+//! 4. Two identically-seeded serving runs export byte-identical traces
+//!    (the logical clock and cycle models are the only time sources —
+//!    no wall-clock ever reaches the trace bytes).
+//! 5. The Chrome export parses with the crate's own JSON reader and
+//!    carries all four phases (M metadata, X spans, i instants,
+//!    C counters).
+
+use versal_gemm::arch::vc1902;
+use versal_gemm::coordinator::{FeatureGen, RustGemmBackend, ServingConfig, ServingRuntime};
+use versal_gemm::dl::MlpSpec;
+use versal_gemm::gemm::{Ccp, GemmConfig, Mat, ParallelGemm, Precision};
+use versal_gemm::obs::{
+    to_chrome_json, trace_plan, TraceData, TrackId, Tracer, SERVING_PIPELINE_PID,
+    SERVING_REQUEST_PID,
+};
+use versal_gemm::plan::GemmPlan;
+use versal_gemm::util::json::Json;
+use versal_gemm::util::Pcg32;
+
+#[test]
+fn traced_plan_total_equals_plan_cost_per_precision() {
+    let arch = vc1902();
+    let mut cfg = GemmConfig::paper_table2(2);
+    cfg.ccp = Ccp { mc: 32, nc: 32, kc: 64 };
+    for prec in Precision::ALL {
+        let plan = GemmPlan::lower(&arch, &cfg, 48, 40, 80, prec, false)
+            .expect("small shape lowers at the small CCP for every precision");
+        let tracer = Tracer::recording();
+        let traced = trace_plan(&arch, &plan, &tracer);
+        assert_eq!(
+            traced,
+            plan.cost(&arch).total,
+            "{prec}: traced cycles must equal GemmPlan::cost bit-for-bit"
+        );
+        let data = tracer.snapshot();
+        assert!(!data.events.is_empty(), "{prec}: the walk must emit spans");
+        for e in &data.events {
+            assert!(e.end() >= e.ts, "{prec}: malformed event {e:?}");
+        }
+    }
+}
+
+#[test]
+fn executed_trace_matches_plan_trace_byte_for_byte() {
+    let arch = vc1902();
+    let mut cfg = GemmConfig::paper_table2(2);
+    cfg.ccp = Ccp { mc: 32, nc: 32, kc: 64 };
+    let (m, n, k) = (96, 80, 160);
+    let plan = GemmPlan::lower(&arch, &cfg, m, n, k, Precision::U8, false).expect("lowers");
+    let predicted = Tracer::recording();
+    let traced = trace_plan(&arch, &plan, &predicted);
+
+    let executed = Tracer::recording();
+    let engine = ParallelGemm::new(&arch).with_tracer(executed.clone());
+    let mut rng = Pcg32::new(0x7ACE);
+    let a = Mat::<u8>::random(m, k, &mut rng);
+    let b = Mat::<u8>::random(k, n, &mut rng);
+    let mut c = Mat::<i32>::zeros(m, n);
+    let (cycles, _) = engine.run_p::<u8>(&cfg, &a, &b, &mut c).expect("runs");
+
+    assert_eq!(traced, cycles.total, "traced total must equal executed cycles");
+    assert_eq!(
+        to_chrome_json(&predicted.snapshot()),
+        to_chrome_json(&executed.snapshot()),
+        "the plan walk and the execution must emit the identical span stream"
+    );
+}
+
+/// Drive one deterministic serving session with a recording tracer:
+/// 8 single-row requests (a u8/i16 mix) at 50 µs spacing, immediate
+/// batch formation, 2 pipeline devices. Returns the captured data and
+/// its Chrome export.
+fn traced_serve_run(seed: u64) -> (TraceData, String) {
+    let spec = MlpSpec { dims: vec![64, 16] };
+    let in_dim = spec.dims[0];
+    let backend = RustGemmBackend::new(vc1902(), spec, seed, 2);
+    let tracer = Tracer::recording();
+    let mut rt = ServingRuntime::new(
+        backend,
+        ServingConfig {
+            max_batch: 4,
+            max_wait_us: 0,
+            queue_cap: 64,
+            default_slo_us: 1 << 40,
+            cache_budget_bytes: 32 << 20,
+            plan_cache_budget_bytes: 4 << 20,
+            pipeline_devices: 2,
+        },
+    )
+    .with_tracer(tracer.clone());
+
+    let mut gen = FeatureGen::new(in_dim, seed);
+    let mut completed = 0usize;
+    for i in 0..8u64 {
+        let prec = if i % 3 == 0 { Precision::I16 } else { Precision::U8 };
+        rt.submit(gen.next(), prec, i * 50).expect("admit");
+        completed += rt.tick(i * 50).len();
+    }
+    completed += rt.drain(1_000).len();
+    assert_eq!(completed, 8, "every request must complete");
+    let data = tracer.snapshot();
+    let json = to_chrome_json(&data);
+    (data, json)
+}
+
+#[test]
+fn serving_span_trees_are_well_formed() {
+    let (data, json) = traced_serve_run(11);
+
+    // One request track per admitted request (tid 0 is the shared
+    // admission/cache track), each bracketed admitted … completed with
+    // contiguous, non-overlapping latency legs.
+    let req_tids: std::collections::BTreeSet<u64> = data
+        .events
+        .iter()
+        .filter(|e| e.track.pid == SERVING_REQUEST_PID && e.track.tid >= 1)
+        .map(|e| e.track.tid)
+        .collect();
+    assert_eq!(req_tids.len(), 8, "one request track per admitted request");
+    for tid in req_tids {
+        let track = TrackId::new(SERVING_REQUEST_PID, tid);
+        let events = data.on_track(track);
+        let names: Vec<&str> = events.iter().map(|e| e.name.as_str()).collect();
+        assert_eq!(names.first(), Some(&"admitted"), "track {tid}: {names:?}");
+        assert_eq!(names.last(), Some(&"completed"), "track {tid}: {names:?}");
+        let spans = data.spans_on(track);
+        for pair in spans.windows(2) {
+            assert!(
+                pair[1].ts >= pair[0].end(),
+                "track {tid}: request legs must not overlap: {pair:?}"
+            );
+        }
+        let completed_ts = events.last().expect("non-empty").ts;
+        if let Some(exec) = spans.iter().find(|e| e.name == "execute") {
+            assert_eq!(
+                exec.end(),
+                completed_ts,
+                "track {tid}: the execute leg ends at the completion marker"
+            );
+        }
+    }
+
+    // Pipeline stage tracks (pack engine, transfer, one per device) are
+    // serialised timelines: later batches start at or after the stage's
+    // previous occupancy ends.
+    for tid in [0u64, 1, 2, 3] {
+        let spans = data.spans_on(TrackId::new(SERVING_PIPELINE_PID, tid));
+        for pair in spans.windows(2) {
+            assert!(
+                pair[1].ts >= pair[0].end(),
+                "pipeline stage tid {tid} overlaps itself: {pair:?}"
+            );
+        }
+    }
+
+    // The export parses with the crate's own JSON reader and carries
+    // all four Chrome phases.
+    let doc = Json::parse(&json).expect("chrome export must be valid JSON");
+    assert_eq!(doc.get("displayTimeUnit").and_then(Json::as_str), Some("ns"));
+    let events = doc.get("traceEvents").and_then(Json::as_arr).expect("traceEvents");
+    for ph in ["M", "X", "i", "C"] {
+        assert!(
+            events.iter().any(|e| e.get("ph").and_then(Json::as_str) == Some(ph)),
+            "exported trace must contain a {ph:?} phase event"
+        );
+    }
+}
+
+#[test]
+fn identically_seeded_serving_runs_export_identical_traces() {
+    let (_, first) = traced_serve_run(7);
+    let (_, second) = traced_serve_run(7);
+    assert_eq!(
+        first, second,
+        "the trace bytes must be a pure function of the seed — any wall-clock \
+         or address-dependent value leaking into the trace breaks this"
+    );
+}
