@@ -21,6 +21,11 @@ cargo build --release
 echo "==> cargo test -q"
 cargo test -q
 
+echo "==> overload invariant battery (tests/serving_overload.rs, named so a failure is attributable)"
+# Also covered by the blanket `cargo test -q` above; the dedicated run
+# keeps the overload invariants visible as their own gate in CI logs.
+cargo test -q --test serving_overload
+
 echo "==> cargo clippy -- -D warnings"
 if cargo clippy --version >/dev/null 2>&1; then
     # missing_docs stays advisory while the long tail of pre-existing
@@ -52,7 +57,7 @@ done
 echo "==> bench_mixed_precision --quick (smoke)"
 VERSAL_BENCH_FAST=1 cargo bench --bench bench_mixed_precision -- --quick
 
-echo "==> bench_serving --quick (smoke: batched+cached beats sequential, hits bit-exact, plan cache lowers once)"
+echo "==> bench_serving --quick (smoke: batched+cached beats sequential, hits bit-exact, plan cache lowers once, goodput knee past overload)"
 VERSAL_BENCH_FAST=1 cargo bench --bench bench_serving -- --quick
 
 echo "==> bench_plan --quick (smoke: plan predicted == executed, streaming == materialized)"
@@ -89,16 +94,17 @@ else
     echo "    (python3 unavailable; cross-validation skipped — covered by cargo tests)"
 fi
 
-echo "==> bench-trend vs previous artifacts (advisory)"
+echo "==> bench-trend vs previous artifacts (blocking: >5% cycle growth fails)"
 # When a previous run's artifacts are present (the workflow downloads
-# them best-effort), diff them metric by metric; >5% cycle growth is
-# reported but does not fail the gate — flip on --fail-on-regress once
-# the trajectory is curated.
+# them best-effort), diff them metric by metric; >5% growth on any
+# *_cycles metric fails the gate. Artifacts carry a top-level "schema"
+# tag — when it changes (metric rename / resize), bench-trend resets
+# the baseline instead of failing, so schema migrations stay one-commit.
 for artifact in BENCH_plan.json BENCH_serving.json; do
     prev="bench_baseline/${artifact}"
     if [ -s "${prev}" ]; then
-        target/release/versal-gemm bench-trend "${prev}" "rust/bench_results/${artifact}" \
-            || echo "    (trend diff for ${artifact} reported issues — advisory)"
+        target/release/versal-gemm bench-trend --fail-on-regress \
+            "${prev}" "rust/bench_results/${artifact}"
     else
         echo "    (no previous ${artifact} at ${prev}; skipping trend diff)"
     fi

@@ -14,7 +14,12 @@
 //!    re-lower-per-batch path: identical logits and identical simulated
 //!    cycles (the cache is a host-side optimisation and must not move
 //!    the cycle domain), with strictly fewer plans lowered — the
-//!    repeated Table-2 shape lowers once, not once per batch.
+//!    repeated Table-2 shape lowers once, not once per batch;
+//! 4. the multi-tenant goodput-vs-offered-load sweep degrades
+//!    **gracefully**: near-unity goodput under light load, a collapsed
+//!    goodput fraction far past the saturation knee, shedding ordered
+//!    lowest-priority-first, and the gold tenant's p99 within its SLO
+//!    even at 16x the calibrated capacity.
 //!
 //! The runtime is deterministic (logical clock + calibrated cycle
 //! models), so these gates are CI-stable; the lowering *wall-time* is
@@ -28,7 +33,8 @@
 
 use versal_gemm::arch::vc1902;
 use versal_gemm::coordinator::{
-    FeatureGen, RustGemmBackend, ServingConfig, ServingReport, ServingRuntime,
+    generate, ArrivalKind, FeatureGen, RustGemmBackend, ServingConfig, ServingReport,
+    ServingRuntime, TenantClass, WorkloadSpec,
 };
 use versal_gemm::dl::MlpSpec;
 use versal_gemm::gemm::Precision;
@@ -55,8 +61,117 @@ fn runtime(
             cache_budget_bytes: cache_bytes,
             plan_cache_budget_bytes: plan_cache_bytes,
             pipeline_devices: devices,
+            max_backlog_us: u64::MAX,
         },
     )
+}
+
+/// One point of the goodput-vs-offered-load sweep.
+struct SweepPoint {
+    load_x: f64,
+    offered_rps: f64,
+    submitted: u64,
+    completed: u64,
+    completed_in_slo: u64,
+    shed: u64,
+    goodput_frac: f64,
+    gold_p99_us: f64,
+    gold_slo_us: u64,
+    shed_rates: [f64; 3], // gold, silver, free
+}
+
+/// Goodput-vs-offered-load sweep: a gold/silver/free tenant mix driven
+/// at multiples of the runtime's calibrated capacity through priority
+/// admission control. Returns the sweep points plus the knee (the last
+/// load multiplier whose aggregate goodput fraction stays ≥ 0.85).
+fn goodput_sweep(spec: &MlpSpec, tiles: usize, quick: bool) -> (Vec<SweepPoint>, f64) {
+    // Calibrate the per-row service time from one full batch on a
+    // scratch runtime: at the 1 GHz model clock a simulated cycle is a
+    // nanosecond, so capacity (rows/second, batch-amortised) falls
+    // straight out of the pipelined makespan.
+    let max_batch = 16;
+    let mut scratch = runtime(spec, tiles, max_batch, 256 << 20, 8 << 20, 2, 4 * max_batch);
+    let mut gen = FeatureGen::new(spec.dims[0], 7);
+    for _ in 0..max_batch {
+        scratch.submit(gen.next(), Precision::U8, 0).expect("admit");
+    }
+    scratch.drain(0);
+    let cal = scratch.report();
+    let per_row_cycles = cal.pipelined_cycles as f64 / cal.completed as f64;
+    let per_row_us = per_row_cycles / 1_000.0;
+    let capacity_rps = 1e9 / per_row_cycles;
+
+    let max_wait_us = 500;
+    let max_backlog_us = 2_000;
+    // The gold SLO covers forming wait + the bounded backlog + one
+    // batch of service with 4x slack; silver and free relax it.
+    let gold_slo_us = (4.0 * (max_wait_us as f64 + max_backlog_us as f64
+        + max_batch as f64 * per_row_us)) as u64;
+    let classes = vec![
+        TenantClass::new("gold", 1.0, 3, gold_slo_us),
+        TenantClass::new("silver", 8.0, 2, 4 * gold_slo_us),
+        TenantClass::new("free", 23.0, 1, 16 * gold_slo_us),
+    ];
+
+    let loads = [0.05, 0.25, 1.0, 4.0, 16.0];
+    let requests = if quick { 256 } else { 768 };
+    let mut points = Vec::new();
+    for &load_x in &loads {
+        let offered_rps = load_x * capacity_rps;
+        let backend = RustGemmBackend::new(vc1902(), spec.clone(), 9, tiles);
+        let mut rt = ServingRuntime::with_tenants(
+            backend,
+            ServingConfig {
+                max_batch,
+                max_wait_us,
+                queue_cap: 256,
+                default_slo_us: gold_slo_us,
+                cache_budget_bytes: 256 << 20,
+                plan_cache_budget_bytes: 8 << 20,
+                pipeline_devices: 2,
+                max_backlog_us,
+            },
+            classes.clone(),
+        );
+        let trace = generate(
+            &WorkloadSpec {
+                tenants: classes.clone(),
+                kind: ArrivalKind::Poisson,
+                offered_rate: offered_rps,
+                burst: 1.0,
+                requests,
+                seed: 1717,
+            },
+            spec.dims[0],
+        );
+        rt.replay(&trace);
+        let rep = rt.report();
+        let submitted: u64 = rep.tenants.iter().map(|t| t.submitted).sum();
+        let in_slo: u64 = rep.tenants.iter().map(|t| t.completed_in_slo).sum();
+        let shed: u64 = rep.tenants.iter().map(|t| t.shed).sum();
+        points.push(SweepPoint {
+            load_x,
+            offered_rps,
+            submitted,
+            completed: rep.completed,
+            completed_in_slo: in_slo,
+            shed,
+            goodput_frac: if submitted == 0 { 0.0 } else { in_slo as f64 / submitted as f64 },
+            gold_p99_us: rep.tenants[0].latency.as_ref().map(|l| l.p99_us).unwrap_or(0.0),
+            gold_slo_us,
+            shed_rates: [
+                rep.tenants[0].shed_rate(),
+                rep.tenants[1].shed_rate(),
+                rep.tenants[2].shed_rate(),
+            ],
+        });
+    }
+    let knee = points
+        .iter()
+        .filter(|p| p.goodput_frac >= 0.85)
+        .map(|p| p.load_x)
+        .fold(loads[0], f64::max);
+    (points, knee)
 }
 
 /// Drive two identical waves through a runtime; returns the outcomes'
@@ -210,12 +325,95 @@ fn main() {
         rep_c.plan_cache.lower_ns as f64 / 1e6,
     );
 
+    // --- D: goodput vs offered load (multi-tenant overload) ----------
+    let (sweep, knee) = goodput_sweep(&spec, tiles, quick);
+    println!("\ngoodput vs offered load (gold:silver:free = 1:8:23 by weight):");
+    println!("  load   offered/s   submitted  in-SLO  shed   goodput%   gold p99 µs  shed% g/s/f");
+    for p in &sweep {
+        println!(
+            "  {:>5.2}x {:>10.0}  {:>9}  {:>6}  {:>5}  {:>7.1}%  {:>11.0}  {:.0}/{:.0}/{:.0}",
+            p.load_x,
+            p.offered_rps,
+            p.submitted,
+            p.completed_in_slo,
+            p.shed,
+            p.goodput_frac * 100.0,
+            p.gold_p99_us,
+            p.shed_rates[0] * 100.0,
+            p.shed_rates[1] * 100.0,
+            p.shed_rates[2] * 100.0,
+        );
+    }
+    println!("  saturation knee: {knee}x calibrated capacity");
+
+    // --- the overload gates -------------------------------------------
+    let first = sweep.first().expect("sweep is non-empty");
+    let last = sweep.last().expect("sweep is non-empty");
+    assert!(
+        first.goodput_frac >= 0.85,
+        "GATE: under light load ({}x) nearly all traffic must be goodput: {:.3}",
+        first.load_x,
+        first.goodput_frac
+    );
+    assert!(
+        last.goodput_frac <= 0.5,
+        "GATE: far past the knee ({}x) the goodput fraction must collapse: {:.3}",
+        last.load_x,
+        last.goodput_frac
+    );
+    assert!(
+        last.shed_rates[0] <= last.shed_rates[1] && last.shed_rates[1] <= last.shed_rates[2],
+        "GATE: shedding must hit the lowest priority hardest: gold {:.3} silver {:.3} free {:.3}",
+        last.shed_rates[0],
+        last.shed_rates[1],
+        last.shed_rates[2]
+    );
+    assert!(
+        last.shed_rates[2] > 0.0,
+        "GATE: overload at {}x must shed free-tier traffic",
+        last.load_x
+    );
+    assert!(
+        last.gold_p99_us <= last.gold_slo_us as f64,
+        "GATE: graceful degradation — gold p99 {:.0} µs must stay within its {} µs SLO \
+         even at {}x load",
+        last.gold_p99_us,
+        last.gold_slo_us,
+        last.load_x
+    );
+
     // --- machine-readable artifact: BENCH_serving.json ----------------
+    let sweep_rows: Vec<String> = sweep
+        .iter()
+        .map(|p| {
+            format!(
+                "{{\"load_x\":{},\"offered_rps\":{:.0},\"submitted\":{},\
+                 \"completed\":{},\"completed_in_slo\":{},\"shed\":{},\
+                 \"goodput_frac\":{:.4},\"gold_p99_us\":{:.1},\
+                 \"gold_shed_rate\":{:.4},\"silver_shed_rate\":{:.4},\
+                 \"free_shed_rate\":{:.4}}}",
+                p.load_x,
+                p.offered_rps,
+                p.submitted,
+                p.completed,
+                p.completed_in_slo,
+                p.shed,
+                p.goodput_frac,
+                p.gold_p99_us,
+                p.shed_rates[0],
+                p.shed_rates[1],
+                p.shed_rates[2],
+            )
+        })
+        .collect();
     let json = format!(
-        "{{\"bench\":\"serving\",\"quick\":{quick},\"wave_rows\":{wave},\"rows\":[{},{},{}]}}\n",
+        "{{\"bench\":\"serving\",\"schema\":\"serving-v2\",\"quick\":{quick},\
+         \"wave_rows\":{wave},\"rows\":[{},{},{}],\
+         \"goodput_sweep\":{{\"knee_load\":{knee},\"points\":[{}]}}}}\n",
         json_row("batched_cached_plan_cache_on", &rep_a),
         json_row("sequential_uncached", &rep_b),
         json_row("batched_cached_plan_cache_off", &rep_c),
+        sweep_rows.join(","),
     );
     let dir = std::path::PathBuf::from(
         std::env::var_os("VERSAL_BENCH_RESULTS").unwrap_or_else(|| "bench_results".into()),

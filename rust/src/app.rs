@@ -2,8 +2,9 @@
 
 use crate::arch::{vc1902, VersalArch};
 use crate::coordinator::{
-    ArrivalGen, ArrivalProcess, BatcherConfig, Coordinator, CoordinatorConfig, FeatureGen,
-    PrecisionMix, RustGemmBackend, ServingConfig, ServingRuntime,
+    generate, ArrivalGen, ArrivalKind, ArrivalProcess, BatcherConfig, Coordinator,
+    CoordinatorConfig, FeatureGen, PrecisionMix, RustGemmBackend, ServingConfig, ServingRuntime,
+    TenantClass, WorkloadSpec,
 };
 use crate::dl::MlpSpec;
 use crate::gemm::ablation::{evaluate, LoopChoice};
@@ -65,7 +66,9 @@ COMMANDS:
   serve    --requests R [--rate Q] [--batch B] [--tiles T] [--seed S]
            [--mix u8:8,i16:3,bf16:1] [--slo-ms M] [--cache-mb MB]
            [--plan-cache-mb MB] [--devices D]
-           [--arrivals poisson|uniform|bursty]
+           [--arrival poisson|uniform|bursty|pareto|diurnal] [--burst F]
+           [--tenants gold:1:3:20,silver:2:2:60,free:4:1:200]
+           [--offered-load Q]
            [--engine runtime|threads] [--workers W] [--trace-out FILE]
                                replay a synthetic mixed-precision request
                                trace through the continuous-batching
@@ -73,19 +76,31 @@ COMMANDS:
                                precision batches, weight-stationary packed
                                cache, lowered-plan cache, pipelined
                                pack/transfer/compute); report latency
-                               percentiles + cache hit rates. --engine
-                               threads runs the wall-clock threaded
-                               coordinator instead; --trace-out writes
-                               the end-to-end request spans + pipeline
-                               stage spans as Chrome trace-event JSON
-                               and prints the unified metrics registry
+                               percentiles + cache hit rates. --tenants
+                               (name:weight:priority:slo_ms entries)
+                               switches to the multi-tenant workload
+                               generator: offered traffic is split by
+                               weight, cache budgets are partitioned per
+                               tenant, admission sheds lowest-priority
+                               first, and a per-tenant goodput/shed table
+                               is printed. --offered-load aliases --rate;
+                               --burst sets the bursty process's
+                               burst:idle rate ratio. --engine threads
+                               runs the wall-clock threaded coordinator
+                               instead; --trace-out writes the
+                               end-to-end request spans + pipeline stage
+                               spans as Chrome trace-event JSON and
+                               prints the unified metrics registry
   bench-trend PREV CURR [--threshold PCT] [--fail-on-regress]
                                diff two BENCH_*.json artifacts metric by
                                metric (flattened numeric paths): delta
                                table, with cycle-domain metrics that
                                grew more than PCT% (default 5) flagged
                                as regressions. Advisory by default;
-                               --fail-on-regress makes them exit 2
+                               --fail-on-regress makes them exit 2.
+                               Artifacts whose top-level \"schema\" tags
+                               differ reset the baseline: the diff is
+                               skipped and the run exits 0
   help                         show this text
 
 GLOBAL OPTIONS:
@@ -132,6 +147,10 @@ fn run(argv: Vec<String>) -> Result<(), String> {
         .opt("kc")
         .opt("width")
         .opt("arrivals")
+        .opt("arrival")
+        .opt("tenants")
+        .opt("offered-load")
+        .opt("burst")
         .opt("devices")
         .opt("fabric")
         .opt("budget")
@@ -660,17 +679,21 @@ fn cmd_cluster(arch: &VersalArch, args: &Args) -> Result<(), String> {
     Ok(())
 }
 
-fn arrival_process(args: &Args, rate: f64) -> Result<ArrivalProcess, String> {
-    match args.get_or("arrivals", "poisson") {
-        "poisson" => Ok(ArrivalProcess::Poisson { rate }),
-        "uniform" => Ok(ArrivalProcess::Uniform { rate }),
-        "bursty" => Ok(ArrivalProcess::Bursty {
-            burst_rate: rate * 5.0,
-            idle_rate: rate / 5.0,
-            mean_phase_s: 0.05,
-        }),
-        other => Err(format!("unknown arrival process {other:?}")),
+/// The arrival-process family from the CLI (`--arrival`, with the
+/// historical `--arrivals` spelling as a fallback).
+fn arrival_kind(args: &Args) -> Result<ArrivalKind, String> {
+    match args.get("arrival") {
+        Some(name) => ArrivalKind::parse(name),
+        None => ArrivalKind::parse(args.get_or("arrivals", "poisson")),
     }
+}
+
+fn arrival_process(args: &Args, rate: f64) -> Result<ArrivalProcess, String> {
+    let burst: f64 = args.get_num("burst", 5.0)?;
+    if burst.is_nan() || burst < 1.0 {
+        return Err("--burst must be a ratio of at least 1".into());
+    }
+    Ok(arrival_kind(args)?.process(rate, burst))
 }
 
 fn cmd_serve(arch: &VersalArch, args: &Args) -> Result<(), String> {
@@ -686,6 +709,8 @@ fn cmd_serve(arch: &VersalArch, args: &Args) -> Result<(), String> {
 fn cmd_serve_runtime(arch: &VersalArch, args: &Args) -> Result<(), String> {
     let requests: usize = args.get_num("requests", 256)?;
     let rate: f64 = args.get_num("rate", 2000.0)?;
+    let offered: f64 = args.get_num("offered-load", rate)?;
+    let burst: f64 = args.get_num("burst", 5.0)?;
     let batch: usize = args.get_num("batch", 8)?;
     let tiles: usize = args.get_num("tiles", 8)?;
     let seed: u64 = args.get_num("seed", 7)?;
@@ -697,8 +722,18 @@ fn cmd_serve_runtime(arch: &VersalArch, args: &Args) -> Result<(), String> {
         Some(s) => PrecisionMix::parse(s)?,
         None => PrecisionMix::default_serving(),
     };
+    let classes = match args.get("tenants") {
+        Some(s) => Some(TenantClass::parse_list(s)?),
+        None => None,
+    };
     if batch == 0 {
         return Err("--batch must be at least 1".into());
+    }
+    if offered.is_nan() || offered <= 0.0 {
+        return Err("--offered-load must be a positive rate (requests/second)".into());
+    }
+    if burst.is_nan() || burst < 1.0 {
+        return Err("--burst must be a ratio of at least 1".into());
     }
     if devices == 0 {
         return Err("--devices must be at least 1".into());
@@ -715,6 +750,12 @@ fn cmd_serve_runtime(arch: &VersalArch, args: &Args) -> Result<(), String> {
     if args.get("workers").is_some() {
         eprintln!("note: --workers applies to --engine threads; the runtime engine ignores it");
     }
+    if classes.is_some() && args.get("mix").is_some() {
+        eprintln!(
+            "note: --mix applies to the single-tenant trace; tenant classes draw from \
+             the default serving mix"
+        );
+    }
 
     let spec = MlpSpec::default_classifier();
     println!(
@@ -723,10 +764,17 @@ fn cmd_serve_runtime(arch: &VersalArch, args: &Args) -> Result<(), String> {
         spec.n_params()
     );
     println!(
-        "  {requests} requests @ {rate}/s ({}), max batch {batch}, SLO {slo_ms} ms, \
+        "  {requests} requests @ {offered}/s ({}), max batch {batch}, SLO {slo_ms} ms, \
          cache {cache_mb} MiB, plan cache {plan_cache_mb} MiB, {devices} pipeline devices",
-        args.get_or("arrivals", "poisson")
+        arrival_kind(args)?.name()
     );
+    if let Some(cs) = &classes {
+        let shares: Vec<String> = cs
+            .iter()
+            .map(|c| format!("{} (w {}, prio {}, SLO {} ms)", c.name, c.weight, c.priority, c.slo_us as f64 / 1e3))
+            .collect();
+        println!("  tenants: {}", shares.join(", "));
+    }
     let backend = RustGemmBackend::new(arch.clone(), spec.clone(), seed, tiles);
     // A disabled tracer is a no-op through the whole runtime, so the
     // wiring is unconditional and only --trace-out pays for recording.
@@ -734,36 +782,65 @@ fn cmd_serve_runtime(arch: &VersalArch, args: &Args) -> Result<(), String> {
         Some(_) => crate::obs::Tracer::recording(),
         None => crate::obs::Tracer::disabled(),
     };
-    let mut rt = ServingRuntime::new(
-        backend,
-        ServingConfig {
-            max_batch: batch,
-            max_wait_us: 2_000,
-            queue_cap: 8_192,
-            default_slo_us: (slo_ms * 1_000.0) as u64,
-            cache_budget_bytes: (cache_mb * (1u64 << 20) as f64) as u64,
-            plan_cache_budget_bytes: (plan_cache_mb * (1u64 << 20) as f64) as u64,
-            pipeline_devices: devices,
-        },
-    )
+    let cfg = ServingConfig {
+        max_batch: batch,
+        max_wait_us: 2_000,
+        queue_cap: 8_192,
+        default_slo_us: (slo_ms * 1_000.0) as u64,
+        cache_budget_bytes: (cache_mb * (1u64 << 20) as f64) as u64,
+        plan_cache_budget_bytes: (plan_cache_mb * (1u64 << 20) as f64) as u64,
+        pipeline_devices: devices,
+        max_backlog_us: u64::MAX,
+    };
+    let mut rt = match &classes {
+        Some(cs) => ServingRuntime::with_tenants(backend, cfg, cs.clone()),
+        None => ServingRuntime::new(backend, cfg),
+    }
     .with_tracer(tracer.clone());
 
-    let process = arrival_process(args, rate)?;
-    let mut arrivals = ArrivalGen::new(process, seed);
-    let mut features = FeatureGen::new(spec.dims[0], seed ^ 0xFEA7);
-    let mut mix_rng = Pcg32::new(seed ^ 0x5E17E);
-    let mut served = 0usize;
-    let mut last_us = 0u64;
-    for _ in 0..requests {
-        last_us = (arrivals.next_arrival() * 1e6) as u64;
-        let prec = mix.sample(&mut mix_rng);
-        let _ = rt.submit(features.next(), prec, last_us);
-        served += rt.tick(last_us).len();
-    }
-    served += rt.drain(last_us + 2_000).len();
+    let served = match &classes {
+        // Multi-tenant: the workload generator splits the offered rate
+        // across the classes by weight and the runtime replays the
+        // merged trace (priority admission, per-tenant partitions).
+        Some(cs) => {
+            let trace = generate(
+                &WorkloadSpec {
+                    tenants: cs.clone(),
+                    kind: arrival_kind(args)?,
+                    offered_rate: offered,
+                    burst,
+                    requests,
+                    seed,
+                },
+                spec.dims[0],
+            );
+            let (out, _end) = rt.replay(&trace);
+            out.len()
+        }
+        // Single-tenant: the historical open-loop drive.
+        None => {
+            let process = arrival_process(args, offered)?;
+            let mut arrivals = ArrivalGen::new(process, seed);
+            let mut features = FeatureGen::new(spec.dims[0], seed ^ 0xFEA7);
+            let mut mix_rng = Pcg32::new(seed ^ 0x5E17E);
+            let mut served = 0usize;
+            let mut last_us = 0u64;
+            for _ in 0..requests {
+                last_us = (arrivals.next_arrival() * 1e6) as u64;
+                let prec = mix.sample(&mut mix_rng);
+                let _ = rt.submit(features.next(), prec, last_us);
+                served += rt.tick(last_us).len();
+            }
+            served + rt.drain(last_us + 2_000).len()
+        }
+    };
 
     let report = rt.report();
     println!("\n{}", crate::report::serving_table(&report).to_text());
+    if report.tenants.len() > 1 {
+        println!("\nper-tenant accounting:");
+        println!("{}", crate::report::tenant_table(&report).to_text());
+    }
     if let Some(l) = &report.latency {
         println!("latency (logical µs, batch completion − arrival):");
         println!("{}", crate::report::latency_table(l).to_text());
@@ -886,13 +963,31 @@ fn cmd_bench_trend(args: &Args) -> Result<(), String> {
         return Err("--threshold must be a non-negative percentage".into());
     }
 
-    let load = |path: &str| -> Result<std::collections::BTreeMap<String, f64>, String> {
+    let load = |path: &str| -> Result<Json, String> {
         let text =
             std::fs::read_to_string(path).map_err(|e| format!("cannot read {path}: {e}"))?;
-        Ok(Json::parse(&text).map_err(|e| format!("{path}: {e}"))?.flatten_numbers())
+        Json::parse(&text).map_err(|e| format!("{path}: {e}"))
     };
-    let prev = load(prev_path)?;
-    let curr = load(curr_path)?;
+    let prev_doc = load(prev_path)?;
+    let curr_doc = load(curr_path)?;
+
+    // Artifacts self-describe their layout with a top-level "schema"
+    // tag. When the tag changes (a bench reshapes its rows), the old
+    // baseline is meaningless: comparing it row by row would flag
+    // phantom regressions and mask real ones. Treat it as a baseline
+    // reset — report, skip the gate, exit 0 — so a schema bump never
+    // needs a hand-edited baseline to get through CI.
+    let schema = |d: &Json| d.get("schema").and_then(Json::as_str).unwrap_or("").to_string();
+    let (prev_schema, curr_schema) = (schema(&prev_doc), schema(&curr_doc));
+    if prev_schema != curr_schema {
+        println!(
+            "bench trend: schema changed ({prev_schema:?} → {curr_schema:?}); baseline \
+             reset — skipping cycle gate"
+        );
+        return Ok(());
+    }
+    let prev = prev_doc.flatten_numbers();
+    let curr = curr_doc.flatten_numbers();
 
     // Counters and cycles print without a fraction; rates keep theirs.
     let fmt = |v: f64| {
@@ -1075,6 +1170,56 @@ mod tests {
     }
 
     #[test]
+    fn serve_new_arrival_families_succeed() {
+        for family in ["pareto", "diurnal"] {
+            assert_eq!(
+                cli_main(argv(&[
+                    "serve", "--requests", "6", "--batch", "2", "--tiles", "2", "--rate",
+                    "100000", "--slo-ms", "200", "--arrival", family,
+                ])),
+                0
+            );
+        }
+        // The bursty family honours --burst; a sub-unit ratio is a
+        // usage error, not a silently clamped run.
+        assert_eq!(
+            cli_main(argv(&[
+                "serve", "--requests", "4", "--batch", "2", "--tiles", "2", "--rate",
+                "100000", "--slo-ms", "200", "--arrival", "bursty", "--burst", "8",
+            ])),
+            0
+        );
+        assert_eq!(
+            cli_main(argv(&["serve", "--requests", "2", "--burst", "0.5"])),
+            2
+        );
+    }
+
+    #[test]
+    fn serve_multi_tenant_succeeds_and_validates() {
+        assert_eq!(
+            cli_main(argv(&[
+                "serve", "--requests", "24", "--batch", "2", "--tiles", "2",
+                "--offered-load", "100000", "--tenants",
+                "gold:1:3:200,free:3:1:200",
+            ])),
+            0
+        );
+        // Malformed tenant specs and degenerate rates are errors.
+        assert_eq!(
+            cli_main(argv(&["serve", "--requests", "2", "--tenants", "gold:1:3"])),
+            2
+        );
+        assert_eq!(
+            cli_main(argv(&[
+                "serve", "--requests", "2", "--tenants", "gold:1:3:200",
+                "--offered-load", "0",
+            ])),
+            2
+        );
+    }
+
+    #[test]
     fn serve_threads_engine_succeeds() {
         assert_eq!(
             cli_main(argv(&[
@@ -1216,6 +1361,27 @@ mod tests {
         assert_eq!(cli_main(argv(&["bench-trend", p, p, "--fail-on-regress"])), 0);
         // A NaN threshold is a usage error, not a vacuous pass.
         assert_eq!(cli_main(argv(&["bench-trend", p, p, "--threshold", "nan"])), 2);
+        std::fs::remove_file(&prev).ok();
+        std::fs::remove_file(&curr).ok();
+    }
+
+    #[test]
+    fn bench_trend_schema_change_resets_baseline() {
+        // A schema bump makes row-by-row comparison meaningless; the
+        // trend run reports the reset and exits 0 even under
+        // --fail-on-regress and even when the numbers regressed.
+        let prev = tmp_path("trend_schema_prev.json");
+        let curr = tmp_path("trend_schema_curr.json");
+        std::fs::write(&prev, "{\"rows\":[{\"compute_cycles\":1000}]}").unwrap();
+        std::fs::write(
+            &curr,
+            "{\"schema\":\"serving-v2\",\"rows\":[{\"compute_cycles\":9000}]}",
+        )
+        .unwrap();
+        let (p, c) = (prev.to_str().unwrap(), curr.to_str().unwrap());
+        assert_eq!(cli_main(argv(&["bench-trend", p, c, "--fail-on-regress"])), 0);
+        // Same schema tag on both sides gates as usual.
+        assert_eq!(cli_main(argv(&["bench-trend", c, c, "--fail-on-regress"])), 0);
         std::fs::remove_file(&prev).ok();
         std::fs::remove_file(&curr).ok();
     }

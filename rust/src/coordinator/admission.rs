@@ -1,27 +1,45 @@
 //! Admission queue of the continuous-batching runtime: per-request SLO
-//! deadlines, deadline-expiry eviction, and precision-aware FIFO pops.
+//! deadlines, deadline-expiry eviction, priority-aware load shedding and
+//! (tenant, precision) group selection for the batch former.
 //!
 //! The runtime works in a **logical microsecond clock** supplied by the
 //! caller (the CLI replay derives it from the synthetic trace's arrival
 //! offsets; tests pass literals), so admission, expiry and batch forming
 //! are fully deterministic — no wall-clock reads anywhere in the core.
+//!
+//! Overload policy: the queue is bounded (`cap`). When it is full, an
+//! arriving request **displaces** the lowest-priority queued request —
+//! youngest-first within that priority class — provided the arrival's
+//! priority is strictly higher; otherwise the arrival itself is refused.
+//! Either way exactly one request is shed per overflow, predictably the
+//! least important one ("shed-lowest-priority-first"), which is what
+//! keeps a high-priority tenant's goodput intact past the saturation
+//! knee instead of blowing every deadline uniformly.
 
 use super::request::RequestId;
 use crate::gemm::Precision;
 use std::collections::VecDeque;
 
 /// One request of the serving runtime: a feature row for the model, the
-/// precision it must be served at, and an absolute SLO deadline on the
-/// runtime's logical clock.
+/// precision it must be served at, the tenant it belongs to, and an
+/// absolute SLO deadline on the runtime's logical clock.
 #[derive(Debug, Clone)]
 pub struct ServeRequest {
     /// Unique request id (shared generator with the threaded coordinator).
     pub id: RequestId,
     /// The activation row (`in_dim` f32 features).
     pub features: Vec<f32>,
-    /// Precision this request must be served at — the batch-compatibility
-    /// key: requests only coalesce with same-precision peers.
+    /// Precision this request must be served at — half of the
+    /// batch-compatibility key: requests only coalesce with
+    /// same-precision peers of the same tenant.
     pub precision: Precision,
+    /// Tenant index (0 in single-tenant configurations) — the other
+    /// half of the batch-compatibility key, and the cache partition the
+    /// batch executes against.
+    pub tenant: usize,
+    /// Scheduling priority inherited from the tenant class: higher is
+    /// served first and shed last.
+    pub priority: u8,
     /// Logical arrival time (µs).
     pub arrival_us: u64,
     /// Absolute deadline (µs): the request is evicted un-served once the
@@ -32,7 +50,8 @@ pub struct ServeRequest {
 /// Why a submit was turned away at the door.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum AdmitError {
-    /// The queue is at capacity (backpressure — retry later).
+    /// The queue is at capacity and no queued request has lower priority
+    /// than the arrival (backpressure — the arrival is the shed load).
     QueueFull,
     /// The feature row does not match the model's input width.
     BadShape {
@@ -43,6 +62,13 @@ pub enum AdmitError {
     },
     /// The deadline already lies in the past at submit time.
     DeadlinePassed,
+    /// The tenant index does not name a configured tenant class.
+    UnknownTenant {
+        /// Tenant index supplied.
+        got: usize,
+        /// Tenant classes configured.
+        tenants: usize,
+    },
 }
 
 impl std::fmt::Display for AdmitError {
@@ -53,13 +79,43 @@ impl std::fmt::Display for AdmitError {
                 write!(f, "feature row has {got} elements, expected {want}")
             }
             AdmitError::DeadlinePassed => write!(f, "deadline already expired at submit"),
+            AdmitError::UnknownTenant { got, tenants } => {
+                write!(f, "tenant {got} out of range ({tenants} configured)")
+            }
         }
     }
 }
 
 impl std::error::Error for AdmitError {}
 
-/// FIFO admission queue with a capacity cap and deadline eviction.
+/// Batch-compatibility key: requests coalesce into one fused GEMM only
+/// within the same tenant (cache partition, accounting) and the same
+/// precision (kernel, accumulator, packed widths).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GroupKey {
+    /// Tenant index.
+    pub tenant: usize,
+    /// Request precision.
+    pub precision: Precision,
+}
+
+/// Aggregate view of one waiting (tenant, precision) group.
+#[derive(Debug, Clone, Copy)]
+pub struct GroupStat {
+    /// The group's compatibility key.
+    pub key: GroupKey,
+    /// The group's scheduling priority (all members share the tenant's).
+    pub priority: u8,
+    /// Waiting members.
+    pub count: usize,
+    /// Arrival time of the group's oldest member (µs).
+    pub oldest_arrival_us: u64,
+    /// Earliest SLO deadline among members (µs).
+    pub earliest_deadline_us: u64,
+}
+
+/// Bounded admission queue with deadline eviction, priority shedding
+/// and (tenant, precision) group selection.
 #[derive(Debug)]
 pub struct AdmissionQueue {
     cap: usize,
@@ -83,17 +139,40 @@ impl AdmissionQueue {
         self.queue.is_empty()
     }
 
-    /// Admit a request; rejects on backpressure or an already-expired
-    /// deadline (both are synchronous, so the caller can shed load).
-    pub fn admit(&mut self, req: ServeRequest, now_us: u64) -> Result<(), AdmitError> {
+    /// Admit a request. On success returns the request displaced to make
+    /// room, if any (`Ok(None)` when the queue had a free slot). Errors
+    /// are synchronous so the caller can account shed load:
+    /// an already-expired deadline is refused, and a full queue whose
+    /// every member has priority ≥ the arrival's refuses the arrival
+    /// itself ([`AdmitError::QueueFull`]).
+    pub fn admit(
+        &mut self,
+        req: ServeRequest,
+        now_us: u64,
+    ) -> Result<Option<ServeRequest>, AdmitError> {
         if req.deadline_us <= now_us {
             return Err(AdmitError::DeadlinePassed);
         }
+        let mut displaced = None;
         if self.queue.len() >= self.cap {
-            return Err(AdmitError::QueueFull);
+            // Victim: lowest priority, youngest within that class (the
+            // youngest has invested the least queue residency). The
+            // arrival must be strictly more important than the victim,
+            // else the arrival is the one refused — ties never displace.
+            let victim = self
+                .queue
+                .iter()
+                .enumerate()
+                .min_by_key(|(i, r)| (r.priority, std::cmp::Reverse(*i)))
+                .map(|(i, r)| (i, r.priority))
+                .expect("cap > 0 and queue full implies a resident request");
+            if req.priority <= victim.1 {
+                return Err(AdmitError::QueueFull);
+            }
+            displaced = self.queue.remove(victim.0);
         }
         self.queue.push_back(req);
-        Ok(())
+        Ok(displaced)
     }
 
     /// Evict every request whose deadline has passed, in arrival order.
@@ -114,45 +193,84 @@ impl AdmissionQueue {
         expired
     }
 
-    /// Precision of the oldest waiting request — the anchor of the next
-    /// batch.
-    pub fn head_precision(&self) -> Option<Precision> {
-        self.queue.front().map(|r| r.precision)
-    }
-
-    /// Arrival time of the oldest waiting request.
-    pub fn head_arrival_us(&self) -> Option<u64> {
-        self.queue.front().map(|r| r.arrival_us)
-    }
-
-    /// Earliest deadline among waiting requests.
-    pub fn earliest_deadline_us(&self) -> Option<u64> {
-        self.queue.iter().map(|r| r.deadline_us).min()
-    }
-
-    /// How many waiting requests are compatible with the head request
-    /// (same precision) — what the batch former sizes its cut against.
-    pub fn compatible_with_head(&self) -> usize {
-        match self.head_precision() {
-            None => 0,
-            Some(p) => self.queue.iter().filter(|r| r.precision == p).count(),
+    /// Aggregate stats of every waiting (tenant, precision) group, in
+    /// first-seen (queue) order — deterministic, no hash iteration.
+    pub fn group_stats(&self) -> Vec<GroupStat> {
+        let mut stats: Vec<GroupStat> = Vec::new();
+        for r in &self.queue {
+            let key = GroupKey { tenant: r.tenant, precision: r.precision };
+            match stats.iter_mut().find(|g| g.key == key) {
+                Some(g) => {
+                    g.count += 1;
+                    g.oldest_arrival_us = g.oldest_arrival_us.min(r.arrival_us);
+                    g.earliest_deadline_us = g.earliest_deadline_us.min(r.deadline_us);
+                }
+                None => stats.push(GroupStat {
+                    key,
+                    priority: r.priority,
+                    count: 1,
+                    oldest_arrival_us: r.arrival_us,
+                    earliest_deadline_us: r.deadline_us,
+                }),
+            }
         }
+        stats
     }
 
-    /// Remove up to `max` requests compatible with the head request (the
-    /// head always included), preserving arrival order. Later-arriving
-    /// requests of *other* precisions stay queued untouched — mixed
-    /// precisions must never coalesce into one fused GEMM — and cannot
-    /// starve: the head anchors every cut, so each precision class
-    /// reaches the front in FIFO order.
-    pub fn take_compatible(&mut self, max: usize) -> Vec<ServeRequest> {
-        let Some(prec) = self.head_precision() else {
-            return Vec::new();
-        };
+    /// The group the former should cut next, ignoring readiness:
+    /// highest priority first, oldest member first within a priority,
+    /// first-seen order as the final tie-break. `None` on empty.
+    pub fn next_group(&self) -> Option<GroupKey> {
+        Self::best(self.group_stats().into_iter())
+    }
+
+    /// The group the former should cut next among **ready** groups: a
+    /// group is ready when it fills a batch, when its oldest member has
+    /// waited out `max_wait_us`, or when a member's deadline would pass
+    /// before the wait-based flush (urgency cuts early — trading batch
+    /// size for the SLO). Selection order matches [`Self::next_group`].
+    pub fn ready_group(
+        &self,
+        max_batch: usize,
+        max_wait_us: u64,
+        now_us: u64,
+    ) -> Option<GroupKey> {
+        Self::best(self.group_stats().into_iter().filter(|g| {
+            g.count >= max_batch
+                || now_us.saturating_sub(g.oldest_arrival_us) >= max_wait_us
+                || g.earliest_deadline_us < g.oldest_arrival_us + max_wait_us
+        }))
+    }
+
+    fn best(stats: impl Iterator<Item = GroupStat>) -> Option<GroupKey> {
+        let mut best: Option<GroupStat> = None;
+        for g in stats {
+            let better = match &best {
+                None => true,
+                Some(b) => {
+                    g.priority > b.priority
+                        || (g.priority == b.priority
+                            && g.oldest_arrival_us < b.oldest_arrival_us)
+                }
+            };
+            if better {
+                best = Some(g);
+            }
+        }
+        best.map(|g| g.key)
+    }
+
+    /// Remove up to `max` requests of the given group, preserving
+    /// arrival order. Requests of other groups stay queued untouched —
+    /// mixed precisions (or tenants) must never coalesce into one fused
+    /// GEMM — and cannot starve: group selection is priority-then-age,
+    /// so every group reaches the front of its priority class in FIFO
+    /// order.
+    pub fn take_group(&mut self, key: GroupKey, max: usize) -> Vec<ServeRequest> {
         let mut taken = Vec::new();
         let mut rest = VecDeque::with_capacity(self.queue.len());
         for r in self.queue.drain(..) {
-            if taken.len() < max && r.precision == prec {
+            if taken.len() < max && r.tenant == key.tenant && r.precision == key.precision {
                 taken.push(r);
             } else {
                 rest.push_back(r);
@@ -168,22 +286,50 @@ mod tests {
     use super::*;
 
     fn req(prec: Precision, arrival: u64, deadline: u64) -> ServeRequest {
+        req_pri(prec, arrival, deadline, 1)
+    }
+
+    fn req_pri(prec: Precision, arrival: u64, deadline: u64, priority: u8) -> ServeRequest {
         ServeRequest {
             id: RequestId::fresh(),
             features: vec![0.0; 4],
             precision: prec,
+            tenant: 0,
+            priority,
             arrival_us: arrival,
             deadline_us: deadline,
         }
     }
 
     #[test]
-    fn admit_and_backpressure() {
+    fn admit_and_backpressure_among_equal_priorities() {
         let mut q = AdmissionQueue::new(2);
-        assert!(q.admit(req(Precision::U8, 0, 100), 0).is_ok());
-        assert!(q.admit(req(Precision::U8, 1, 100), 1).is_ok());
+        assert_eq!(q.admit(req(Precision::U8, 0, 100), 0), Ok(None));
+        assert_eq!(q.admit(req(Precision::U8, 1, 100), 1), Ok(None));
+        // Equal priority never displaces: the arrival is refused.
         assert_eq!(q.admit(req(Precision::U8, 2, 100), 2), Err(AdmitError::QueueFull));
         assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn higher_priority_arrival_displaces_youngest_lowest_priority() {
+        let mut q = AdmissionQueue::new(3);
+        q.admit(req_pri(Precision::U8, 0, 1000, 2), 0).unwrap();
+        q.admit(req_pri(Precision::U8, 1, 1000, 1), 1).unwrap();
+        q.admit(req_pri(Precision::U8, 2, 1000, 1), 2).unwrap();
+        // Two priority-1 requests queued; the *younger* one (arrival 2)
+        // is the victim, and only a strictly higher-priority arrival
+        // may displace it.
+        let shed = q.admit(req_pri(Precision::U8, 3, 1000, 3), 3).unwrap();
+        let shed = shed.expect("a victim was displaced");
+        assert_eq!(shed.priority, 1);
+        assert_eq!(shed.arrival_us, 2, "youngest of the lowest class sheds first");
+        assert_eq!(q.len(), 3);
+        // A lower-priority arrival cannot displace anything.
+        assert_eq!(
+            q.admit(req_pri(Precision::U8, 4, 1000, 1), 4),
+            Err(AdmitError::QueueFull)
+        );
     }
 
     #[test]
@@ -206,33 +352,95 @@ mod tests {
         assert_eq!(expired.len(), 2, "both deadline-10 requests evicted");
         assert!(expired[0].arrival_us < expired[1].arrival_us);
         assert_eq!(q.len(), 1);
-        assert_eq!(q.head_precision(), Some(Precision::U8));
+        assert_eq!(
+            q.next_group(),
+            Some(GroupKey { tenant: 0, precision: Precision::U8 })
+        );
     }
 
     #[test]
-    fn take_compatible_skips_other_precisions_without_reordering() {
+    fn take_group_skips_other_groups_without_reordering() {
         let mut q = AdmissionQueue::new(8);
         q.admit(req(Precision::U8, 0, 1000), 0).unwrap();
         q.admit(req(Precision::Bf16, 1, 1000), 1).unwrap();
         q.admit(req(Precision::U8, 2, 1000), 2).unwrap();
         q.admit(req(Precision::U8, 3, 1000), 3).unwrap();
-        assert_eq!(q.compatible_with_head(), 3);
-        let cut = q.take_compatible(2);
+        let u8_group = GroupKey { tenant: 0, precision: Precision::U8 };
+        let stats = q.group_stats();
+        assert_eq!(stats.len(), 2);
+        assert_eq!(stats[0].key, u8_group, "first-seen order");
+        assert_eq!(stats[0].count, 3);
+        assert_eq!(stats[0].oldest_arrival_us, 0);
+        let cut = q.take_group(u8_group, 2);
         assert_eq!(cut.len(), 2);
         assert!(cut.iter().all(|r| r.precision == Precision::U8));
         assert_eq!(cut[0].arrival_us, 0);
         assert_eq!(cut[1].arrival_us, 2);
-        // The bf16 request moved to the head; the leftover u8 behind it.
-        assert_eq!(q.head_precision(), Some(Precision::Bf16));
+        // The bf16 request is now the oldest group; the leftover u8
+        // queues behind it.
+        assert_eq!(
+            q.next_group(),
+            Some(GroupKey { tenant: 0, precision: Precision::Bf16 })
+        );
         assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn group_selection_is_priority_then_age() {
+        let mut q = AdmissionQueue::new(8);
+        q.admit(req_pri(Precision::U8, 0, 10_000, 1), 0).unwrap();
+        let mut hi = req_pri(Precision::Bf16, 5, 10_000, 3);
+        hi.tenant = 1;
+        q.admit(hi, 5).unwrap();
+        // Despite arriving later, the priority-3 tenant's group is next.
+        assert_eq!(
+            q.next_group(),
+            Some(GroupKey { tenant: 1, precision: Precision::Bf16 })
+        );
+        // Within a priority class, the older group wins.
+        let mut also_hi = req_pri(Precision::U8, 9, 10_000, 3);
+        also_hi.tenant = 2;
+        q.admit(also_hi, 9).unwrap();
+        assert_eq!(
+            q.next_group(),
+            Some(GroupKey { tenant: 1, precision: Precision::Bf16 })
+        );
+    }
+
+    #[test]
+    fn ready_group_honours_fill_wait_and_deadline_rules() {
+        let mut q = AdmissionQueue::new(16);
+        // A lone request with a comfortable deadline: not ready until
+        // its wait runs out.
+        q.admit(req(Precision::U8, 0, 100_000), 0).unwrap();
+        assert!(q.ready_group(4, 2_000, 100).is_none());
+        assert!(q.ready_group(4, 2_000, 2_000).is_some(), "waited out max_wait");
+        // A full group is ready immediately.
+        for t in 1..4 {
+            q.admit(req(Precision::U8, t, 100_000), t).unwrap();
+        }
+        assert_eq!(
+            q.ready_group(4, 2_000, 100),
+            Some(GroupKey { tenant: 0, precision: Precision::U8 })
+        );
+        // An urgent deadline cuts early even when the group is small.
+        let mut q2 = AdmissionQueue::new(16);
+        q2.admit(req(Precision::I16, 0, 1_000), 0).unwrap();
+        assert!(
+            q2.ready_group(8, 2_000, 100).is_some(),
+            "deadline < oldest + max_wait forces an early cut"
+        );
     }
 
     #[test]
     fn empty_queue_is_inert() {
         let mut q = AdmissionQueue::new(4);
         assert!(q.expire(1_000_000).is_empty());
-        assert!(q.take_compatible(8).is_empty());
-        assert_eq!(q.head_precision(), None);
-        assert_eq!(q.earliest_deadline_us(), None);
+        assert!(q
+            .take_group(GroupKey { tenant: 0, precision: Precision::U8 }, 8)
+            .is_empty());
+        assert_eq!(q.next_group(), None);
+        assert_eq!(q.ready_group(1, 0, 0), None);
+        assert!(q.group_stats().is_empty());
     }
 }

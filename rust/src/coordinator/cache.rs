@@ -4,7 +4,9 @@
 //! ([`PlanCache`], resident [`GemmPlan`]s keyed by
 //! (layer, precision, rows, prepacked)), both LRU-evicted under byte
 //! budgets and bundled as [`ServingCaches`] for the fused-batch
-//! backends.
+//! backends. Both are thin typed wrappers over the one generic
+//! [`ByteBudgetLru`] (`util::lru`), so eviction/refusal/zero-budget
+//! semantics are defined exactly once.
 //!
 //! On the real platform the packed Bc blocks live in FPGA Block RAM and
 //! spill to DDR; keeping a layer's packed weights resident across
@@ -22,7 +24,7 @@ use super::metrics::PlanCacheStats;
 use crate::dl::PackedWeights;
 use crate::gemm::Precision;
 use crate::plan::{GemmPlan, PlanError};
-use std::collections::HashMap;
+use crate::util::lru::{ByteBudgetLru, LruCounters};
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -62,26 +64,41 @@ impl CacheStats {
             self.hits as f64 / total as f64
         }
     }
+
+    /// Element-wise sum of two counter snapshots — how the multi-tenant
+    /// runtime folds its per-partition caches into the aggregate report
+    /// rows (budgets add too: the partitions split one physical budget).
+    pub fn merged(&self, other: &CacheStats) -> CacheStats {
+        CacheStats {
+            hits: self.hits + other.hits,
+            misses: self.misses + other.misses,
+            evictions: self.evictions + other.evictions,
+            uncacheable: self.uncacheable + other.uncacheable,
+            bytes: self.bytes + other.bytes,
+            budget_bytes: self.budget_bytes + other.budget_bytes,
+        }
+    }
 }
 
-struct Entry {
-    weights: PackedWeights,
-    bytes: u64,
-    last_used: u64,
+impl From<LruCounters> for CacheStats {
+    fn from(c: LruCounters) -> CacheStats {
+        CacheStats {
+            hits: c.hits,
+            misses: c.misses,
+            evictions: c.evictions,
+            uncacheable: c.uncacheable,
+            bytes: c.bytes,
+            budget_bytes: c.budget_bytes,
+        }
+    }
 }
 
-/// The LRU cache itself. Lookup order: [`PackedBCache::touch`] (counts
-/// hit/miss, bumps recency) then [`PackedBCache::peek`] to borrow the
-/// entry without touching statistics.
+/// The weight-stationary packed-operand LRU cache. Lookup order:
+/// [`PackedBCache::touch`] (counts hit/miss, bumps recency) then
+/// [`PackedBCache::peek`] to borrow the entry without touching
+/// statistics.
 pub struct PackedBCache {
-    budget: u64,
-    seq: u64,
-    bytes: u64,
-    entries: HashMap<CacheKey, Entry>,
-    hits: u64,
-    misses: u64,
-    evictions: u64,
-    uncacheable: u64,
+    lru: ByteBudgetLru<CacheKey, PackedWeights>,
 }
 
 impl PackedBCache {
@@ -89,54 +106,34 @@ impl PackedBCache {
     /// budget is legal and caches nothing — the "sequential uncached"
     /// baseline of `bench_serving`.
     pub fn new(budget_bytes: u64) -> PackedBCache {
-        PackedBCache {
-            budget: budget_bytes,
-            seq: 0,
-            bytes: 0,
-            entries: HashMap::new(),
-            hits: 0,
-            misses: 0,
-            evictions: 0,
-            uncacheable: 0,
-        }
+        PackedBCache { lru: ByteBudgetLru::new(budget_bytes) }
     }
 
     /// Resident entries.
     pub fn len(&self) -> usize {
-        self.entries.len()
+        self.lru.len()
     }
 
     /// Whether nothing is resident.
     pub fn is_empty(&self) -> bool {
-        self.entries.is_empty()
+        self.lru.is_empty()
     }
 
     /// The configured residency budget in bytes.
     pub fn budget_bytes(&self) -> u64 {
-        self.budget
+        self.lru.budget_bytes()
     }
 
     /// Record a lookup: `true` (and a recency bump) if the key is
     /// resident, `false` (and a miss count) otherwise.
     pub fn touch(&mut self, key: &CacheKey) -> bool {
-        self.seq += 1;
-        match self.entries.get_mut(key) {
-            Some(e) => {
-                e.last_used = self.seq;
-                self.hits += 1;
-                true
-            }
-            None => {
-                self.misses += 1;
-                false
-            }
-        }
+        self.lru.touch(key)
     }
 
     /// Borrow a resident entry without counting a lookup or bumping
     /// recency (used right after [`PackedBCache::touch`]/insert).
     pub fn peek(&self, key: &CacheKey) -> Option<&PackedWeights> {
-        self.entries.get(key).map(|e| &e.weights)
+        self.lru.peek(key)
     }
 
     /// Insert an entry, evicting least-recently-used entries until it
@@ -145,41 +142,12 @@ impl PackedBCache {
     /// transiently — a single oversize request must not wipe the cache.
     pub fn insert(&mut self, key: CacheKey, weights: PackedWeights) -> Result<(), PackedWeights> {
         let bytes = weights.bytes();
-        if bytes > self.budget {
-            self.uncacheable += 1;
-            return Err(weights);
-        }
-        // Replace any stale entry under the same key first.
-        if let Some(old) = self.entries.remove(&key) {
-            self.bytes -= old.bytes;
-        }
-        while self.bytes + bytes > self.budget {
-            let lru = self
-                .entries
-                .iter()
-                .min_by_key(|(_, e)| e.last_used)
-                .map(|(k, _)| *k)
-                .expect("bytes > 0 implies a resident entry");
-            let evicted = self.entries.remove(&lru).expect("lru key resident");
-            self.bytes -= evicted.bytes;
-            self.evictions += 1;
-        }
-        self.seq += 1;
-        self.entries.insert(key, Entry { weights, bytes, last_used: self.seq });
-        self.bytes += bytes;
-        Ok(())
+        self.lru.insert(key, weights, bytes)
     }
 
     /// Snapshot of the counters.
     pub fn stats(&self) -> CacheStats {
-        CacheStats {
-            hits: self.hits,
-            misses: self.misses,
-            evictions: self.evictions,
-            uncacheable: self.uncacheable,
-            bytes: self.bytes,
-            budget_bytes: self.budget,
-        }
+        self.lru.counters().into()
     }
 }
 
@@ -225,12 +193,6 @@ impl CachedPlan {
     }
 }
 
-struct PlanEntry {
-    cached: CachedPlan,
-    bytes: u64,
-    last_used: u64,
-}
-
 /// LRU cache of lowered [`GemmPlan`]s — the sibling of [`PackedBCache`]
 /// on the serving hot path. Serving traffic repeats a handful of
 /// (layer, precision, rows) shapes, so the per-batch plan lowering
@@ -242,14 +204,7 @@ struct PlanEntry {
 /// against); an entry bigger than the whole budget is returned uncached
 /// rather than wiping the cache.
 pub struct PlanCache {
-    budget: u64,
-    seq: u64,
-    bytes: u64,
-    entries: HashMap<PlanKey, PlanEntry>,
-    hits: u64,
-    misses: u64,
-    evictions: u64,
-    uncacheable: u64,
+    lru: ByteBudgetLru<PlanKey, CachedPlan>,
     lowered: u64,
     lower_ns: u64,
 }
@@ -257,50 +212,28 @@ pub struct PlanCache {
 impl PlanCache {
     /// An empty cache with the given residency budget in bytes.
     pub fn new(budget_bytes: u64) -> PlanCache {
-        PlanCache {
-            budget: budget_bytes,
-            seq: 0,
-            bytes: 0,
-            entries: HashMap::new(),
-            hits: 0,
-            misses: 0,
-            evictions: 0,
-            uncacheable: 0,
-            lowered: 0,
-            lower_ns: 0,
-        }
+        PlanCache { lru: ByteBudgetLru::new(budget_bytes), lowered: 0, lower_ns: 0 }
     }
 
     /// Resident entries.
     pub fn len(&self) -> usize {
-        self.entries.len()
+        self.lru.len()
     }
 
     /// Whether nothing is resident.
     pub fn is_empty(&self) -> bool {
-        self.entries.is_empty()
+        self.lru.is_empty()
     }
 
     /// The configured residency budget in bytes.
     pub fn budget_bytes(&self) -> u64 {
-        self.budget
+        self.lru.budget_bytes()
     }
 
     /// Record a lookup: the resident plan (and a recency bump) if the
     /// key is cached, `None` (and a miss count) otherwise.
     pub fn get(&mut self, key: &PlanKey) -> Option<CachedPlan> {
-        self.seq += 1;
-        match self.entries.get_mut(key) {
-            Some(e) => {
-                e.last_used = self.seq;
-                self.hits += 1;
-                Some(e.cached.clone())
-            }
-            None => {
-                self.misses += 1;
-                None
-            }
-        }
+        self.lru.get(key).cloned()
     }
 
     /// Insert a freshly lowered plan, evicting least-recently-used
@@ -311,30 +244,10 @@ impl PlanCache {
     pub fn insert(&mut self, key: PlanKey, plan: GemmPlan) -> CachedPlan {
         let bytes = plan.step_bytes();
         let cached = CachedPlan::new(Arc::new(plan));
-        if bytes > self.budget {
-            self.uncacheable += 1;
-            return cached;
+        match self.lru.insert(key, cached.clone(), bytes) {
+            Ok(()) => cached,
+            Err(back) => back,
         }
-        // Replace any stale entry under the same key first.
-        if let Some(old) = self.entries.remove(&key) {
-            self.bytes -= old.bytes;
-        }
-        while self.bytes + bytes > self.budget {
-            let lru = self
-                .entries
-                .iter()
-                .min_by_key(|(_, e)| e.last_used)
-                .map(|(k, _)| *k)
-                .expect("bytes > 0 implies a resident entry");
-            let evicted = self.entries.remove(&lru).expect("lru key resident");
-            self.bytes -= evicted.bytes;
-            self.evictions += 1;
-        }
-        self.seq += 1;
-        self.entries
-            .insert(key, PlanEntry { cached: cached.clone(), bytes, last_used: self.seq });
-        self.bytes += bytes;
-        cached
     }
 
     /// The serving hot path: return the resident plan for `key`, or
@@ -358,13 +271,14 @@ impl PlanCache {
 
     /// Snapshot of the counters.
     pub fn stats(&self) -> PlanCacheStats {
+        let c = self.lru.counters();
         PlanCacheStats {
-            hits: self.hits,
-            misses: self.misses,
-            evictions: self.evictions,
-            uncacheable: self.uncacheable,
-            bytes: self.bytes,
-            budget_bytes: self.budget,
+            hits: c.hits,
+            misses: c.misses,
+            evictions: c.evictions,
+            uncacheable: c.uncacheable,
+            bytes: c.bytes,
+            budget_bytes: c.budget_bytes,
             lowered: self.lowered,
             lower_ns: self.lower_ns,
         }
@@ -374,7 +288,9 @@ impl PlanCache {
 /// The residency caches a fused-batch backend serves against: packed
 /// weights ([`PackedBCache`]) and lowered plans ([`PlanCache`]). Bundled
 /// so [`super::BatchedBackend::serve_fused`] threads one handle through
-/// the stack.
+/// the stack. In the multi-tenant runtime each tenant owns one
+/// `ServingCaches` partition (its slice of the physical budgets), so a
+/// tenant's working set can never evict another tenant's residency.
 pub struct ServingCaches {
     /// Weight-stationary packed-operand cache.
     pub packed: PackedBCache,
@@ -470,6 +386,17 @@ mod tests {
         c.insert(key(0), packed(16, 8, 2)).unwrap();
         assert_eq!(c.stats().bytes, b1, "replacement, not accumulation");
         assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn stats_merge_adds_fields() {
+        let a = CacheStats { hits: 1, misses: 2, evictions: 3, uncacheable: 4, bytes: 5, budget_bytes: 6 };
+        let b = CacheStats { hits: 10, misses: 20, evictions: 30, uncacheable: 40, bytes: 50, budget_bytes: 60 };
+        let m = a.merged(&b);
+        assert_eq!(
+            m,
+            CacheStats { hits: 11, misses: 22, evictions: 33, uncacheable: 44, bytes: 55, budget_bytes: 66 }
+        );
     }
 
     // ------------------------------------------------------ plan cache

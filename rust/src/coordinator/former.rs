@@ -1,17 +1,27 @@
 //! Dynamic batch former of the continuous-batching runtime: coalesces
 //! compatible waiting requests into one **fused GEMM** batch.
 //!
-//! Compatibility = same weight set and precision (here: same model, so
-//! the precision is the key); compatible feature rows are concatenated
-//! along the GEMM's free dimension — the batch axis of the activation
-//! operand — so `r` single-row requests become one `(r × k) · (k × n)`
-//! product. One fused GEMM amortises the per-block overheads (exposed
-//! Br copy, orchestration rounds, Cr round trips) over every row in the
-//! batch, the same amortisation argument as §4.2's kc scaling; requests
-//! at different precisions must never fuse (different kernels,
-//! accumulators and packed-operand widths).
+//! Compatibility = same tenant and precision ([`GroupKey`]): compatible
+//! feature rows are concatenated along the GEMM's free dimension — the
+//! batch axis of the activation operand — so `r` single-row requests
+//! become one `(r × k) · (k × n)` product. One fused GEMM amortises the
+//! per-block overheads (exposed Br copy, orchestration rounds, Cr round
+//! trips) over every row in the batch, the same amortisation argument
+//! as §4.2's kc scaling; requests at different precisions must never
+//! fuse (different kernels, accumulators and packed-operand widths) and
+//! requests of different tenants must never fuse (separate cache
+//! partitions and accounting).
+//!
+//! Forming is **group-based**: each (tenant, precision) group becomes
+//! ready independently (full batch / oldest member waited out
+//! `max_wait_us` / imminent member deadline), and among ready groups
+//! the highest-priority one is cut first, oldest first within a
+//! priority. A late high-priority arrival therefore jumps the service
+//! order without blocking other groups' readiness — raising a tenant's
+//! priority can only move its groups earlier, which is the
+//! priority-monotonicity invariant the overload battery pins.
 
-use super::admission::{AdmissionQueue, ServeRequest};
+use super::admission::{AdmissionQueue, GroupKey, ServeRequest};
 use crate::gemm::Precision;
 
 /// Batch-forming policy.
@@ -19,7 +29,7 @@ use crate::gemm::Precision;
 pub struct FormerConfig {
     /// Maximum fused rows per batch.
     pub max_batch: usize,
-    /// Maximum time (µs, logical clock) the oldest compatible request
+    /// Maximum time (µs, logical clock) the oldest member of a group
     /// may wait before a partial batch is cut anyway.
     pub max_wait_us: u64,
 }
@@ -30,12 +40,16 @@ impl Default for FormerConfig {
     }
 }
 
-/// One fused batch: same-precision requests plus their concatenated
-/// activation rows, ready for a backend's fused entry point.
+/// One fused batch: same-(tenant, precision) requests plus their
+/// concatenated activation rows, ready for a backend's fused entry
+/// point.
 #[derive(Debug)]
 pub struct FusedBatch {
     /// The common precision of every member request.
     pub precision: Precision,
+    /// The common tenant of every member request (selects the cache
+    /// partition the batch executes against).
+    pub tenant: usize,
     /// Member requests in arrival order.
     pub requests: Vec<ServeRequest>,
     /// Concatenated activation rows (`rows() × in_dim`, row-major).
@@ -67,44 +81,54 @@ impl BatchFormer {
         &self.cfg
     }
 
-    /// Whether a batch should be cut now: enough compatible requests for
-    /// a full batch, the head request has waited out `max_wait_us`, or
-    /// some waiting request's SLO deadline would pass before the
-    /// wait-based flush — a request whose slack is shorter than
-    /// `max_wait_us` must be served early, not grouped into expiry.
-    /// (Cutting head-first batches until the urgent request is reached
-    /// trades batch size for the SLO, which is the right direction.)
+    /// Whether some group should be cut now: a group has enough members
+    /// for a full batch, its oldest member has waited out `max_wait_us`,
+    /// or a member's SLO deadline would pass before the wait-based flush
+    /// — a request whose slack is shorter than `max_wait_us` must be
+    /// served early, not grouped into expiry.
     pub fn ready(&self, queue: &AdmissionQueue, now_us: u64) -> bool {
-        if queue.compatible_with_head() >= self.cfg.max_batch {
-            return true;
-        }
-        let Some(arrival) = queue.head_arrival_us() else {
-            return false;
-        };
-        if now_us.saturating_sub(arrival) >= self.cfg.max_wait_us {
-            return true;
-        }
-        match queue.earliest_deadline_us() {
-            Some(deadline) => deadline < arrival + self.cfg.max_wait_us,
-            None => false,
-        }
+        queue
+            .ready_group(self.cfg.max_batch, self.cfg.max_wait_us, now_us)
+            .is_some()
     }
 
-    /// Cut the next fused batch: up to `max_batch` requests compatible
-    /// with the head, rows concatenated in arrival order. `None` on an
-    /// empty queue.
+    /// Cut the highest-priority **ready** group (oldest first within a
+    /// priority): up to `max_batch` of its requests, rows concatenated
+    /// in arrival order. `None` when no group is ready.
+    pub fn form_ready(
+        &self,
+        queue: &mut AdmissionQueue,
+        now_us: u64,
+        in_dim: usize,
+    ) -> Option<FusedBatch> {
+        let key = queue.ready_group(self.cfg.max_batch, self.cfg.max_wait_us, now_us)?;
+        self.cut(queue, key, in_dim)
+    }
+
+    /// Cut the next group regardless of readiness (drain /
+    /// end-of-trace): highest priority first, oldest first within a
+    /// priority. `None` on an empty queue.
     pub fn form(&self, queue: &mut AdmissionQueue, in_dim: usize) -> Option<FusedBatch> {
-        let requests = queue.take_compatible(self.cfg.max_batch);
+        let key = queue.next_group()?;
+        self.cut(queue, key, in_dim)
+    }
+
+    fn cut(
+        &self,
+        queue: &mut AdmissionQueue,
+        key: GroupKey,
+        in_dim: usize,
+    ) -> Option<FusedBatch> {
+        let requests = queue.take_group(key, self.cfg.max_batch);
         if requests.is_empty() {
             return None;
         }
-        let precision = requests[0].precision;
         let mut features = Vec::with_capacity(requests.len() * in_dim);
         for r in &requests {
             debug_assert_eq!(r.features.len(), in_dim, "admission checked the shape");
             features.extend_from_slice(&r.features);
         }
-        Some(FusedBatch { precision, requests, features })
+        Some(FusedBatch { precision: key.precision, tenant: key.tenant, requests, features })
     }
 }
 
@@ -118,6 +142,8 @@ mod tests {
             id: RequestId::fresh(),
             features: vec![f, 0.0],
             precision: prec,
+            tenant: 0,
+            priority: 1,
             arrival_us: arrival,
             deadline_us: u64::MAX,
         }
@@ -131,9 +157,10 @@ mod tests {
         assert!(!former.ready(&q, 1), "one of two: not ready");
         q.admit(req(Precision::U8, 1, 2.0), 1).unwrap();
         assert!(former.ready(&q, 1));
-        let batch = former.form(&mut q, 2).unwrap();
+        let batch = former.form_ready(&mut q, 1, 2).unwrap();
         assert_eq!(batch.rows(), 2);
         assert_eq!(batch.features, vec![1.0, 0.0, 2.0, 0.0], "rows concatenated in order");
+        assert_eq!(batch.tenant, 0);
         assert!(q.is_empty());
     }
 
@@ -143,8 +170,8 @@ mod tests {
         let mut q = AdmissionQueue::new(16);
         q.admit(req(Precision::U8, 0, 1.0), 0).unwrap();
         assert!(!former.ready(&q, 50));
-        assert!(former.ready(&q, 100), "head waited out max_wait");
-        assert_eq!(former.form(&mut q, 2).unwrap().rows(), 1);
+        assert!(former.ready(&q, 100), "oldest member waited out max_wait");
+        assert_eq!(former.form_ready(&mut q, 100, 2).unwrap().rows(), 1);
     }
 
     #[test]
@@ -158,7 +185,7 @@ mod tests {
         r.deadline_us = 1_000; // < arrival + max_wait
         q.admit(r, 0).unwrap();
         assert!(former.ready(&q, 100), "urgent deadline forces an early cut");
-        assert_eq!(former.form(&mut q, 2).unwrap().rows(), 1);
+        assert_eq!(former.form_ready(&mut q, 100, 2).unwrap().rows(), 1);
         // A comfortable deadline does not.
         let mut r = req(Precision::U8, 0, 1.0);
         r.deadline_us = 10_000;
@@ -183,10 +210,43 @@ mod tests {
     }
 
     #[test]
+    fn mixed_tenants_never_fuse() {
+        let former = BatchFormer::new(FormerConfig { max_batch: 8, max_wait_us: 0 });
+        let mut q = AdmissionQueue::new(16);
+        q.admit(req(Precision::U8, 0, 1.0), 0).unwrap();
+        let mut other = req(Precision::U8, 1, 2.0);
+        other.tenant = 1;
+        q.admit(other, 1).unwrap();
+        let first = former.form(&mut q, 2).unwrap();
+        assert_eq!(first.rows(), 1, "same precision, different tenant: no fuse");
+        assert_eq!(first.tenant, 0);
+        let second = former.form(&mut q, 2).unwrap();
+        assert_eq!(second.tenant, 1);
+    }
+
+    #[test]
+    fn ready_high_priority_group_cuts_first() {
+        let former = BatchFormer::new(FormerConfig { max_batch: 1, max_wait_us: 1_000 });
+        let mut q = AdmissionQueue::new(16);
+        q.admit(req(Precision::U8, 0, 1.0), 0).unwrap();
+        let mut hi = req(Precision::U8, 5, 2.0);
+        hi.tenant = 1;
+        hi.priority = 3;
+        q.admit(hi, 5).unwrap();
+        // Both groups are "full" at max_batch 1; the later-arriving
+        // high-priority tenant is served first.
+        let first = former.form_ready(&mut q, 5, 2).unwrap();
+        assert_eq!(first.tenant, 1);
+        let second = former.form_ready(&mut q, 5, 2).unwrap();
+        assert_eq!(second.tenant, 0);
+    }
+
+    #[test]
     fn empty_queue_forms_nothing() {
         let former = BatchFormer::new(FormerConfig::default());
         let mut q = AdmissionQueue::new(4);
         assert!(!former.ready(&q, 0));
         assert!(former.form(&mut q, 2).is_none());
+        assert!(former.form_ready(&mut q, 0, 2).is_none());
     }
 }

@@ -24,6 +24,11 @@ impl LatencyStats {
     /// Percentile summary of raw µs samples (`None` when empty). Shared
     /// by the threaded coordinator's metrics and the continuous-batching
     /// runtime's logical-clock latencies.
+    ///
+    /// Edge cases are pinned: an empty sample yields `None` (never a
+    /// zero-filled summary, never a panic), and a single sample pins
+    /// every percentile — p50 = p95 = p99 = max = the sample — because
+    /// linear interpolation over one point degenerates to that point.
     pub fn from_us_samples(samples: &[f64]) -> Option<LatencyStats> {
         if samples.is_empty() {
             return None;
@@ -75,6 +80,23 @@ impl PlanCacheStats {
             0.0
         } else {
             self.hits as f64 / total as f64
+        }
+    }
+
+    /// Element-wise sum of two counter snapshots — how the multi-tenant
+    /// runtime folds its per-partition plan caches into the aggregate
+    /// report rows (budgets add: the partitions split one physical
+    /// budget).
+    pub fn merged(&self, other: &PlanCacheStats) -> PlanCacheStats {
+        PlanCacheStats {
+            hits: self.hits + other.hits,
+            misses: self.misses + other.misses,
+            evictions: self.evictions + other.evictions,
+            uncacheable: self.uncacheable + other.uncacheable,
+            bytes: self.bytes + other.bytes,
+            budget_bytes: self.budget_bytes + other.budget_bytes,
+            lowered: self.lowered + other.lowered,
+            lower_ns: self.lower_ns + other.lower_ns,
         }
     }
 }
@@ -173,6 +195,50 @@ mod tests {
     #[test]
     fn empty_metrics_has_no_stats() {
         assert!(Metrics::new().latency_stats().is_none());
+    }
+
+    #[test]
+    fn empty_samples_yield_none_not_zeroes() {
+        assert!(LatencyStats::from_us_samples(&[]).is_none());
+    }
+
+    #[test]
+    fn single_sample_pins_every_percentile() {
+        let s = LatencyStats::from_us_samples(&[42.0]).unwrap();
+        assert_eq!(s.count, 1);
+        assert_eq!(s.mean_us, 42.0);
+        assert_eq!(s.p50_us, 42.0);
+        assert_eq!(s.p95_us, 42.0);
+        assert_eq!(s.p99_us, 42.0);
+        assert_eq!(s.max_us, 42.0);
+    }
+
+    #[test]
+    fn plan_cache_stats_merge_adds_every_field() {
+        let a = PlanCacheStats {
+            hits: 1,
+            misses: 2,
+            evictions: 3,
+            uncacheable: 4,
+            bytes: 5,
+            budget_bytes: 6,
+            lowered: 7,
+            lower_ns: 8,
+        };
+        let m = a.merged(&a);
+        assert_eq!(
+            m,
+            PlanCacheStats {
+                hits: 2,
+                misses: 4,
+                evictions: 6,
+                uncacheable: 8,
+                bytes: 10,
+                budget_bytes: 12,
+                lowered: 14,
+                lower_ns: 16,
+            }
+        );
     }
 
     #[test]

@@ -34,10 +34,11 @@ pub mod pipeline;
 mod request;
 mod server;
 pub mod serving;
+pub mod tenant;
 mod worker;
-mod workload;
+pub mod workload;
 
-pub use admission::{AdmissionQueue, AdmitError, ServeRequest};
+pub use admission::{AdmissionQueue, AdmitError, GroupKey, GroupStat, ServeRequest};
 pub use batcher::{BatcherConfig, DynamicBatcher};
 pub use cache::{CacheKey, CacheStats, CachedPlan, PackedBCache, PlanCache, PlanKey, ServingCaches};
 pub use former::{BatchFormer, FormerConfig, FusedBatch};
@@ -46,7 +47,11 @@ pub use pipeline::{PipelinedExecutor, StageCost, StageTiming};
 pub use request::{InferenceRequest, InferenceResponse, RequestId};
 pub use server::{Coordinator, CoordinatorConfig, SubmitError};
 pub use serving::{ServeOutcome, ServingConfig, ServingReport, ServingRuntime};
+pub use tenant::{TenantClass, TenantReport};
 pub use worker::{
     Backend, BatchedBackend, ClusterGemmBackend, EchoBackend, RustGemmBackend,
 };
-pub use workload::{ArrivalGen, ArrivalProcess, FeatureGen, PrecisionMix};
+pub use workload::{
+    generate, ArrivalGen, ArrivalKind, ArrivalProcess, FeatureGen, GenRequest, PrecisionMix,
+    WorkloadSpec,
+};

@@ -1,15 +1,18 @@
 //! The continuous-batching serving runtime: admission → batch forming →
 //! fused execution against the packed-operand cache, with pipelined
-//! cycle accounting.
+//! cycle accounting and per-tenant fairness.
 //!
 //! ```text
-//! submit(features, precision, now) ──► AdmissionQueue (SLO deadlines,
-//!        backpressure, expiry)           │
-//!                                        ▼ tick(now)
-//!                              BatchFormer (coalesce same-precision
-//!                                        │  rows into one fused GEMM)
-//!                                        ▼
-//!                    BatchedBackend::serve_fused ──► ServingCaches
+//! submit_for(tenant, features, ...) ──► AdmissionQueue (SLO deadlines,
+//!        │                               priority shedding, expiry)
+//!        │ tenant class: priority,          │
+//!        │ SLO, cache-budget share          ▼ tick(now)
+//!        │                      BatchFormer (coalesce same-(tenant,
+//!        │                               │   precision) rows into one
+//!        │                               │   fused GEMM; highest-
+//!        │                               ▼   priority ready group first)
+//!        └────────► BatchedBackend::serve_fused ──► the tenant's
+//!                                        │   ServingCaches partition
 //!                                        │   (PackedBCache: weight hits
 //!                                        │    skip pack_b entirely;
 //!                                        │    PlanCache: repeated shapes
@@ -26,6 +29,28 @@
 //! bit-stably in CI. The wall-clock, thread-pooled service around the
 //! same backends is [`super::Coordinator`]; this runtime is the
 //! cycle-domain engine the `serve` CLI replays traces through.
+//!
+//! # Overload behaviour
+//!
+//! Three mechanisms keep the runtime's behaviour graceful past its
+//! saturation knee, and the `serving_overload` property battery pins
+//! each one:
+//!
+//! 1. **Priority shedding** at the bounded admission queue: a full
+//!    queue sheds the lowest-priority, youngest queued request to admit
+//!    a strictly higher-priority arrival, else refuses the arrival
+//!    (see [`AdmissionQueue::admit`]). Shed work is *counted*, per
+//!    tenant, in [`TenantReport::shed`].
+//! 2. **Execution backpressure**: [`ServingConfig::max_backlog_us`]
+//!    bounds how far the pipelined executor may run ahead of the
+//!    logical clock. When the backlog exceeds it, ticks stop cutting
+//!    batches, overload piles into the bounded queue, and the
+//!    queue's expiry + shedding triage it — so the execute leg of
+//!    latency stays bounded and a high-priority tenant's p99 survives
+//!    the knee.
+//! 3. **Per-tenant cache partitions**: each tenant owns a
+//!    weight-proportional slice of the physical cache budgets, so a
+//!    storming tenant cannot evict a well-behaved tenant's residency.
 //!
 //! # Example
 //!
@@ -49,7 +74,9 @@ use super::former::{BatchFormer, FormerConfig, FusedBatch};
 use super::metrics::{LatencyStats, PlanCacheStats};
 use super::pipeline::{PipelinedExecutor, StageCost};
 use super::request::RequestId;
+use super::tenant::{TenantClass, TenantReport};
 use super::worker::BatchedBackend;
+use super::workload::GenRequest;
 use crate::gemm::Precision;
 use crate::obs::{
     HistogramSummary, MetricsRegistry, TrackId, Tracer, SERVING_ADMISSION_TRACK,
@@ -65,18 +92,28 @@ pub struct ServingConfig {
     /// Maximum logical µs the oldest request waits before a partial
     /// batch is cut.
     pub max_wait_us: u64,
-    /// Admission queue capacity (backpressure beyond it).
+    /// Admission queue capacity (priority shedding beyond it).
     pub queue_cap: usize,
     /// Default SLO: requests submitted without an explicit deadline get
-    /// `arrival + default_slo_us`.
+    /// `arrival + default_slo_us` (also the default tenant's class SLO).
     pub default_slo_us: u64,
-    /// Byte budget of the weight-stationary packed-operand cache.
+    /// Byte budget of the weight-stationary packed-operand cache,
+    /// split weight-proportionally across the tenant partitions.
     pub cache_budget_bytes: u64,
     /// Byte budget of the lowered-plan cache (0 re-lowers every batch —
-    /// the pre-cache baseline `bench_serving` measures against).
+    /// the pre-cache baseline `bench_serving` measures against), split
+    /// like the packed budget.
     pub plan_cache_budget_bytes: u64,
     /// Simulated compute devices the pipelined executor overlaps across.
     pub pipeline_devices: usize,
+    /// Execution backpressure bound: a tick refuses to cut new batches
+    /// while the pipelined executor's backlog (busy-until minus the
+    /// logical clock) exceeds this, pushing overload into the bounded
+    /// queue where expiry and priority shedding triage it. `u64::MAX`
+    /// (the default) disables the bound — the pre-backpressure
+    /// behaviour, where `drain`-style workloads may run the executor
+    /// arbitrarily far ahead.
+    pub max_backlog_us: u64,
 }
 
 impl Default for ServingConfig {
@@ -89,6 +126,7 @@ impl Default for ServingConfig {
             cache_budget_bytes: 64 << 20,
             plan_cache_budget_bytes: 8 << 20,
             pipeline_devices: 2,
+            max_backlog_us: u64::MAX,
         }
     }
 }
@@ -106,6 +144,8 @@ pub struct ServeOutcome {
     pub batch_size: usize,
     /// Precision the batch executed at.
     pub precision: Precision,
+    /// Tenant the request belonged to.
+    pub tenant: usize,
     /// Logical latency: batch completion − request arrival (µs). The
     /// completion time comes from the pipelined executor's busy clock —
     /// stage costs convert from simulated cycles at the AIE clock
@@ -122,8 +162,12 @@ pub struct ServingReport {
     pub completed: u64,
     /// Requests evicted after their SLO deadline passed.
     pub expired: u64,
-    /// Requests shed at admission (backpressure / bad shape / past
-    /// deadline).
+    /// Requests shed by admission control under overload: queue-full
+    /// refusals plus queued requests displaced by a higher-priority
+    /// arrival.
+    pub shed: u64,
+    /// Requests refused for caller errors (bad shape / already-passed
+    /// deadline / unknown tenant).
     pub rejected: u64,
     /// Requests dropped because their batch's backend execution failed
     /// (e.g. a precision the backend cannot serve).
@@ -132,10 +176,10 @@ pub struct ServingReport {
     pub batches: u64,
     /// Mean fused rows per batch.
     pub mean_batch: f64,
-    /// Packed-operand cache counters.
+    /// Packed-operand cache counters, summed across tenant partitions.
     pub cache: CacheStats,
     /// Lowered-plan cache counters (how often a batch reused a resident
-    /// plan instead of re-lowering it).
+    /// plan instead of re-lowering it), summed across tenant partitions.
     pub plan_cache: PlanCacheStats,
     /// Total pack cycles across all batches.
     pub pack_cycles: u64,
@@ -158,6 +202,9 @@ pub struct ServingReport {
     /// Execute leg: batch cut → pipeline completion (occupancy +
     /// service). Per request the three legs sum to its latency exactly.
     pub execute: Option<LatencyStats>,
+    /// Per-tenant accounting rows, in tenant-index order (one row, named
+    /// "default", in single-tenant configurations).
+    pub tenants: Vec<TenantReport>,
 }
 
 /// Map a µs-domain percentile summary into the registry's histogram
@@ -171,6 +218,15 @@ fn histo(s: &LatencyStats) -> HistogramSummary {
         p99: s.p99_us,
         max: s.max_us,
     }
+}
+
+/// Metric-name fragment for a tenant: lowercase alphanumerics, all else
+/// folded to `_` (deterministic, collision-tolerant — the index prefix
+/// disambiguates).
+fn sanitize(name: &str) -> String {
+    name.chars()
+        .map(|c| if c.is_ascii_alphanumeric() { c.to_ascii_lowercase() } else { '_' })
+        .collect()
 }
 
 impl ServingReport {
@@ -189,10 +245,13 @@ impl ServingReport {
     /// `BENCH_serving.json` consume instead of reaching into
     /// [`CacheStats`] / [`PlanCacheStats`] / [`LatencyStats`]
     /// separately. Deterministic: same report, same rows, same JSON.
+    /// Multi-tenant configurations additionally emit
+    /// `tenant{i}_{name}_*` rows per class.
     pub fn metrics(&self) -> MetricsRegistry {
         let mut m = MetricsRegistry::new();
         m.set_counter("requests_completed", self.completed);
         m.set_counter("requests_expired", self.expired);
+        m.set_counter("requests_shed", self.shed);
         m.set_counter("requests_rejected", self.rejected);
         m.set_counter("requests_failed", self.failed);
         m.set_counter("batches", self.batches);
@@ -229,7 +288,75 @@ impl ServingReport {
                 m.set_histogram(name, histo(s));
             }
         }
+        if self.tenants.len() > 1 {
+            for (i, t) in self.tenants.iter().enumerate() {
+                let p = format!("tenant{i}_{}", sanitize(&t.name));
+                m.set_counter(&format!("{p}_submitted"), t.submitted);
+                m.set_counter(&format!("{p}_completed"), t.completed);
+                m.set_counter(&format!("{p}_completed_in_slo"), t.completed_in_slo);
+                m.set_counter(&format!("{p}_shed"), t.shed);
+                m.set_counter(&format!("{p}_expired"), t.expired);
+                m.set_counter(&format!("{p}_rejected"), t.rejected);
+                m.set_counter(&format!("{p}_failed"), t.failed);
+                m.set_counter(&format!("{p}_slo_us"), t.slo_us);
+                m.set_gauge(&format!("{p}_goodput_rate"), t.goodput_rate());
+                m.set_gauge(&format!("{p}_shed_rate"), t.shed_rate());
+                if let Some(s) = &t.latency {
+                    m.set_histogram(&format!("{p}_latency_us"), histo(s));
+                }
+            }
+        }
         m
+    }
+}
+
+/// Per-tenant runtime state: the class policy, the tenant's private
+/// cache partition, and its lifetime accounting.
+struct TenantState {
+    class: TenantClass,
+    caches: ServingCaches,
+    submitted: u64,
+    completed: u64,
+    completed_in_slo: u64,
+    shed: u64,
+    expired: u64,
+    rejected: u64,
+    failed: u64,
+    latencies_us: Vec<f64>,
+}
+
+impl TenantState {
+    fn new(class: TenantClass, cache_budget: u64, plan_budget: u64) -> TenantState {
+        TenantState {
+            class,
+            caches: ServingCaches::new(cache_budget, plan_budget),
+            submitted: 0,
+            completed: 0,
+            completed_in_slo: 0,
+            shed: 0,
+            expired: 0,
+            rejected: 0,
+            failed: 0,
+            latencies_us: Vec::new(),
+        }
+    }
+
+    fn report(&self) -> TenantReport {
+        TenantReport {
+            name: self.class.name.clone(),
+            priority: self.class.priority,
+            slo_us: self.class.slo_us,
+            submitted: self.submitted,
+            completed: self.completed,
+            completed_in_slo: self.completed_in_slo,
+            shed: self.shed,
+            expired: self.expired,
+            rejected: self.rejected,
+            failed: self.failed,
+            latency: LatencyStats::from_us_samples(&self.latencies_us),
+            cache: self.caches.packed.stats(),
+            plan_cache: self.caches.plans.stats(),
+        }
     }
 }
 
@@ -241,7 +368,7 @@ pub struct ServingRuntime<B: BatchedBackend> {
     n_classes: usize,
     queue: AdmissionQueue,
     former: BatchFormer,
-    caches: ServingCaches,
+    tenants: Vec<TenantState>,
     // One pipeline recurrence, two unit domains: `busy_us` is stepped in
     // logical µs anchored to batch ready times (per-request completion —
     // and therefore latency — includes occupancy, not just the batch's
@@ -266,6 +393,7 @@ pub struct ServingRuntime<B: BatchedBackend> {
     track_ids: HashMap<RequestId, u64>,
     completed: u64,
     expired: u64,
+    shed: u64,
     rejected: u64,
     failed: u64,
     batches: u64,
@@ -273,8 +401,30 @@ pub struct ServingRuntime<B: BatchedBackend> {
 }
 
 impl<B: BatchedBackend> ServingRuntime<B> {
-    /// A runtime around `backend` with the given policy.
+    /// A single-tenant runtime around `backend` with the given policy:
+    /// one class named "default" (weight 1, priority 1, SLO
+    /// `default_slo_us`) owning the full cache budgets.
     pub fn new(backend: B, cfg: ServingConfig) -> ServingRuntime<B> {
+        let default = TenantClass::new("default", 1.0, 1, cfg.default_slo_us);
+        Self::with_tenants(backend, cfg, vec![default])
+    }
+
+    /// A multi-tenant runtime: one cache partition per class, the
+    /// physical budgets split weight-proportionally
+    /// ([`TenantClass::split_budget`]).
+    pub fn with_tenants(
+        backend: B,
+        cfg: ServingConfig,
+        classes: Vec<TenantClass>,
+    ) -> ServingRuntime<B> {
+        assert!(!classes.is_empty(), "at least one tenant class");
+        let cache_split = TenantClass::split_budget(&classes, cfg.cache_budget_bytes);
+        let plan_split = TenantClass::split_budget(&classes, cfg.plan_cache_budget_bytes);
+        let tenants = classes
+            .into_iter()
+            .zip(cache_split.iter().zip(plan_split.iter()))
+            .map(|(class, (&cb, &pb))| TenantState::new(class, cb, pb))
+            .collect();
         let in_dim = backend.in_dim();
         let n_classes = backend.n_classes();
         ServingRuntime {
@@ -286,7 +436,7 @@ impl<B: BatchedBackend> ServingRuntime<B> {
                 max_batch: cfg.max_batch,
                 max_wait_us: cfg.max_wait_us,
             }),
-            caches: ServingCaches::new(cfg.cache_budget_bytes, cfg.plan_cache_budget_bytes),
+            tenants,
             busy_us: PipelinedExecutor::new(cfg.pipeline_devices),
             busy_cycles: PipelinedExecutor::new(cfg.pipeline_devices),
             cfg,
@@ -303,6 +453,7 @@ impl<B: BatchedBackend> ServingRuntime<B> {
             track_ids: HashMap::new(),
             completed: 0,
             expired: 0,
+            shed: 0,
             rejected: 0,
             failed: 0,
             batches: 0,
@@ -334,7 +485,13 @@ impl<B: BatchedBackend> ServingRuntime<B> {
         self
     }
 
-    /// Submit with the default SLO (`now + default_slo_us`).
+    /// Configured tenant classes.
+    pub fn tenant_count(&self) -> usize {
+        self.tenants.len()
+    }
+
+    /// Submit to the default tenant (index 0) with the default SLO
+    /// (`now + default_slo_us`).
     pub fn submit(
         &mut self,
         features: Vec<f32>,
@@ -345,9 +502,8 @@ impl<B: BatchedBackend> ServingRuntime<B> {
         self.submit_with_deadline(features, precision, now_us, deadline)
     }
 
-    /// Submit with an explicit absolute deadline on the logical clock.
-    /// Shape errors, backpressure and already-passed deadlines are
-    /// rejected synchronously (and counted as shed load).
+    /// Submit to the default tenant (index 0) with an explicit absolute
+    /// deadline on the logical clock.
     pub fn submit_with_deadline(
         &mut self,
         features: Vec<f32>,
@@ -355,8 +511,41 @@ impl<B: BatchedBackend> ServingRuntime<B> {
         now_us: u64,
         deadline_us: u64,
     ) -> Result<RequestId, AdmitError> {
+        self.submit_inner(0, features, precision, now_us, deadline_us)
+    }
+
+    /// Submit for a tenant class: the request inherits the class's
+    /// priority and gets deadline `now + class.slo_us`. Caller errors
+    /// (unknown tenant, bad shape, an SLO that already passed) are
+    /// counted as `rejected`; overload refusals and displacement victims
+    /// as `shed` — per tenant and in the aggregate.
+    pub fn submit_for(
+        &mut self,
+        tenant: usize,
+        features: Vec<f32>,
+        precision: Precision,
+        now_us: u64,
+    ) -> Result<RequestId, AdmitError> {
+        if tenant >= self.tenants.len() {
+            self.rejected += 1;
+            return Err(AdmitError::UnknownTenant { got: tenant, tenants: self.tenants.len() });
+        }
+        let deadline = now_us + self.tenants[tenant].class.slo_us;
+        self.submit_inner(tenant, features, precision, now_us, deadline)
+    }
+
+    fn submit_inner(
+        &mut self,
+        tenant: usize,
+        features: Vec<f32>,
+        precision: Precision,
+        now_us: u64,
+        deadline_us: u64,
+    ) -> Result<RequestId, AdmitError> {
+        self.tenants[tenant].submitted += 1;
         if features.len() != self.in_dim {
             self.rejected += 1;
+            self.tenants[tenant].rejected += 1;
             return Err(AdmitError::BadShape { got: features.len(), want: self.in_dim });
         }
         let id = RequestId::fresh();
@@ -364,11 +553,13 @@ impl<B: BatchedBackend> ServingRuntime<B> {
             id,
             features,
             precision,
+            tenant,
+            priority: self.tenants[tenant].class.priority,
             arrival_us: now_us,
             deadline_us,
         };
         match self.queue.admit(req, now_us) {
-            Ok(()) => {
+            Ok(displaced) => {
                 if self.tracer.enabled() {
                     let tid = self.next_track;
                     self.next_track += 1;
@@ -376,6 +567,22 @@ impl<B: BatchedBackend> ServingRuntime<B> {
                     let track = TrackId::new(SERVING_REQUEST_PID, tid);
                     self.tracer.name_track(track, &format!("req {tid}"));
                     self.tracer.instant(track, "admitted", now_us);
+                }
+                if let Some(victim) = displaced {
+                    // One-in-one-out: the arrival took the slot of the
+                    // lowest-priority youngest queued request, which is
+                    // the shed load of this overflow.
+                    self.shed += 1;
+                    self.tenants[victim.tenant].shed += 1;
+                    if let Some(tid) = self.track_ids.remove(&victim.id) {
+                        self.tracer.instant(
+                            TrackId::new(SERVING_REQUEST_PID, tid),
+                            "shed",
+                            now_us,
+                        );
+                    }
+                }
+                if self.tracer.enabled() {
                     self.tracer.counter(
                         SERVING_ADMISSION_TRACK,
                         "queue depth",
@@ -385,8 +592,14 @@ impl<B: BatchedBackend> ServingRuntime<B> {
                 }
                 Ok(id)
             }
+            Err(AdmitError::QueueFull) => {
+                self.shed += 1;
+                self.tenants[tenant].shed += 1;
+                Err(AdmitError::QueueFull)
+            }
             Err(e) => {
                 self.rejected += 1;
+                self.tenants[tenant].rejected += 1;
                 Err(e)
             }
         }
@@ -396,6 +609,9 @@ impl<B: BatchedBackend> ServingRuntime<B> {
     fn evict_expired(&mut self, now_us: u64) {
         let expired = self.queue.expire(now_us);
         self.expired += expired.len() as u64;
+        for req in &expired {
+            self.tenants[req.tenant].expired += 1;
+        }
         if self.tracer.enabled() && !expired.is_empty() {
             for req in &expired {
                 if let Some(tid) = self.track_ids.remove(&req.id) {
@@ -411,17 +627,25 @@ impl<B: BatchedBackend> ServingRuntime<B> {
         }
     }
 
+    /// Whether the executor backlog permits cutting another batch now
+    /// (see [`ServingConfig::max_backlog_us`]).
+    fn backlog_allows(&self, now_us: u64) -> bool {
+        self.busy_us.busy_until().saturating_sub(now_us) <= self.cfg.max_backlog_us
+    }
+
     /// Advance the runtime to `now_us`: evict SLO-expired requests, then
-    /// cut and execute every batch the former considers ready. An empty
-    /// queue ticks to an empty outcome list — ticking is always safe.
+    /// cut and execute ready groups — highest priority first — while the
+    /// executor backlog stays under `max_backlog_us`. An empty queue
+    /// ticks to an empty outcome list — ticking is always safe.
     /// A batch whose backend execution fails is dropped and counted in
     /// [`ServingReport::failed`] rather than aborting the tick, so one
     /// unservable batch cannot lose the accounting of its neighbours.
     pub fn tick(&mut self, now_us: u64) -> Vec<ServeOutcome> {
         self.evict_expired(now_us);
         let mut out = Vec::new();
-        while self.former.ready(&self.queue, now_us) {
-            let Some(batch) = self.former.form(&mut self.queue, self.in_dim) else {
+        while self.backlog_allows(now_us) {
+            let Some(batch) = self.former.form_ready(&mut self.queue, now_us, self.in_dim)
+            else {
                 break;
             };
             out.extend(self.execute(batch, now_us));
@@ -430,7 +654,8 @@ impl<B: BatchedBackend> ServingRuntime<B> {
     }
 
     /// Evict expired requests, then serve everything left regardless of
-    /// batch-forming deadlines (shutdown / end-of-trace).
+    /// batch-forming deadlines or the backlog bound (shutdown /
+    /// end-of-trace).
     pub fn drain(&mut self, now_us: u64) -> Vec<ServeOutcome> {
         self.evict_expired(now_us);
         let mut out = Vec::new();
@@ -440,17 +665,38 @@ impl<B: BatchedBackend> ServingRuntime<B> {
         out
     }
 
+    /// Replay a generated trace ([`super::workload::generate`]) through
+    /// the runtime: tick at each arrival, submit the request for its
+    /// tenant, then drain one `max_wait_us` past the last arrival.
+    /// Returns every outcome plus the logical end time — the shared
+    /// driver of the `serve` CLI, `bench_serving`'s sweep and the
+    /// overload property battery.
+    pub fn replay(&mut self, trace: &[GenRequest]) -> (Vec<ServeOutcome>, u64) {
+        let mut out = Vec::new();
+        let mut last = 0u64;
+        for r in trace {
+            out.extend(self.tick(r.arrival_us));
+            let _ = self.submit_for(r.tenant, r.features.clone(), r.precision, r.arrival_us);
+            last = last.max(r.arrival_us);
+        }
+        let end = last + self.cfg.max_wait_us;
+        out.extend(self.tick(end));
+        out.extend(self.drain(end));
+        (out, end)
+    }
+
     fn execute(&mut self, batch: FusedBatch, now_us: u64) -> Vec<ServeOutcome> {
         let rows = batch.rows();
+        let tenant = batch.tenant;
         // Stats snapshots bracket the backend call so cache activity can
         // be attributed to this batch as admission-track instants.
-        let cache0 = self.caches.packed.stats();
-        let plans0 = self.caches.plans.stats();
+        let cache0 = self.tenants[tenant].caches.packed.stats();
+        let plans0 = self.tenants[tenant].caches.plans.stats();
         let (logits, cost) = match self.backend.serve_fused(
             rows,
             &batch.features,
             batch.precision,
-            &mut self.caches,
+            &mut self.tenants[tenant].caches,
         ) {
             Ok(r) => r,
             Err(_) => {
@@ -458,6 +704,7 @@ impl<B: BatchedBackend> ServingRuntime<B> {
                 // account them as failed so they are visible in the
                 // report instead of silently vanishing.
                 self.failed += rows as u64;
+                self.tenants[tenant].failed += rows as u64;
                 for req in &batch.requests {
                     if let Some(tid) = self.track_ids.remove(&req.id) {
                         self.tracer
@@ -467,7 +714,7 @@ impl<B: BatchedBackend> ServingRuntime<B> {
                 return Vec::new();
             }
         };
-        self.trace_batch_cache_events(now_us, rows, cache0, plans0);
+        self.trace_batch_cache_events(now_us, rows, tenant, cache0, plans0);
         self.batches += 1;
         self.batch_rows += rows as u64;
         self.pack_cycles += cost.pack;
@@ -543,12 +790,19 @@ impl<B: BatchedBackend> ServingRuntime<B> {
             }
             self.latencies_us.push(latency_us as f64);
             self.completed += 1;
+            let t = &mut self.tenants[tenant];
+            t.completed += 1;
+            t.latencies_us.push(latency_us as f64);
+            if completion_us <= req.deadline_us {
+                t.completed_in_slo += 1;
+            }
             outcomes.push(ServeOutcome {
                 id: req.id,
                 logits: row,
                 predicted_class: predicted,
                 batch_size: rows,
                 precision: batch.precision,
+                tenant,
                 latency_us,
             });
         }
@@ -563,6 +817,7 @@ impl<B: BatchedBackend> ServingRuntime<B> {
         &self,
         now_us: u64,
         rows: usize,
+        tenant: usize,
         cache0: CacheStats,
         plans0: PlanCacheStats,
     ) {
@@ -575,8 +830,8 @@ impl<B: BatchedBackend> ServingRuntime<B> {
             now_us,
             &[("rows", rows as i64)],
         );
-        let c = self.caches.packed.stats();
-        let p = self.caches.plans.stats();
+        let c = self.tenants[tenant].caches.packed.stats();
+        let p = self.tenants[tenant].caches.plans.stats();
         let deltas = [
             ("cache hit", c.hits - cache0.hits),
             ("cache miss", c.misses - cache0.misses),
@@ -602,21 +857,33 @@ impl<B: BatchedBackend> ServingRuntime<B> {
         self.queue.len()
     }
 
-    /// The packed-operand cache (its stats drive the report tables).
+    /// The default tenant's packed-operand cache partition (its stats
+    /// drive the single-tenant report tables).
     pub fn cache(&self) -> &PackedBCache {
-        &self.caches.packed
+        &self.tenants[0].caches.packed
     }
 
-    /// The lowered-plan cache (its stats drive the report tables).
+    /// The default tenant's lowered-plan cache partition.
     pub fn plan_cache(&self) -> &PlanCache {
-        &self.caches.plans
+        &self.tenants[0].caches.plans
     }
 
-    /// Aggregate view of everything served so far.
+    /// Aggregate view of everything served so far: fleet totals plus one
+    /// [`TenantReport`] row per class (cache counters are the sum of the
+    /// tenant partitions).
     pub fn report(&self) -> ServingReport {
+        let cache = self
+            .tenants
+            .iter()
+            .fold(CacheStats::default(), |acc, t| acc.merged(&t.caches.packed.stats()));
+        let plan_cache = self
+            .tenants
+            .iter()
+            .fold(PlanCacheStats::default(), |acc, t| acc.merged(&t.caches.plans.stats()));
         ServingReport {
             completed: self.completed,
             expired: self.expired,
+            shed: self.shed,
             rejected: self.rejected,
             failed: self.failed,
             batches: self.batches,
@@ -625,8 +892,8 @@ impl<B: BatchedBackend> ServingRuntime<B> {
             } else {
                 self.batch_rows as f64 / self.batches as f64
             },
-            cache: self.caches.packed.stats(),
-            plan_cache: self.caches.plans.stats(),
+            cache,
+            plan_cache,
             pack_cycles: self.pack_cycles,
             transfer_cycles: self.transfer_cycles,
             compute_cycles: self.compute_cycles,
@@ -636,7 +903,20 @@ impl<B: BatchedBackend> ServingRuntime<B> {
             queue_wait: LatencyStats::from_us_samples(&self.queue_waits),
             batch_wait: LatencyStats::from_us_samples(&self.batch_waits),
             execute: LatencyStats::from_us_samples(&self.executes),
+            tenants: self.tenants.iter().map(TenantState::report).collect(),
         }
+    }
+
+    /// Deterministic digest of the runtime's observable state: the
+    /// report's metrics JSON with the one wall-clock-tainted counter
+    /// (`plan_lower_ns` — host nanoseconds spent lowering) pinned to
+    /// zero. Identically-seeded runs must produce byte-identical
+    /// fingerprints — the determinism invariant the overload battery
+    /// asserts.
+    pub fn fingerprint(&self) -> String {
+        let mut m = self.report().metrics();
+        m.set_counter("plan_lower_ns", 0);
+        m.to_json()
     }
 }
 
@@ -696,6 +976,7 @@ mod tests {
         let r = rt.report();
         assert_eq!(r.completed, 2, "report matches what the caller received");
         assert_eq!(r.failed, 1, "the unservable request is accounted, not lost");
+        assert_eq!(r.tenants[0].failed, 1, "and attributed to its tenant");
         assert_eq!(r.expired, 0);
         assert_eq!(rt.queued(), 0);
     }
@@ -715,6 +996,8 @@ mod tests {
         assert_eq!((r.completed, r.expired, r.rejected, r.batches), (0, 0, 0, 0));
         assert!(r.latency.is_none());
         assert_eq!(r.pipelined_cycles, 0);
+        assert_eq!(r.tenants.len(), 1, "single default tenant");
+        assert_eq!(r.tenants[0].name, "default");
     }
 
     #[test]
@@ -758,6 +1041,7 @@ mod tests {
         assert!(out.is_empty(), "expired request must not be served");
         let r = rt.report();
         assert_eq!(r.expired, 1);
+        assert_eq!(r.tenants[0].expired, 1);
         assert_eq!(r.completed, 0);
         assert_eq!(rt.queued(), 0);
     }
@@ -780,10 +1064,11 @@ mod tests {
     }
 
     #[test]
-    fn backpressure_counts_rejections() {
+    fn backpressure_sheds_and_caller_errors_reject() {
         let mut rt = runtime(ServingConfig { queue_cap: 2, ..Default::default() });
         rt.submit(feat(1.0), Precision::U8, 0).unwrap();
         rt.submit(feat(2.0), Precision::U8, 0).unwrap();
+        // Same priority everywhere: the arrival is the shed load.
         assert_eq!(
             rt.submit(feat(3.0), Precision::U8, 0),
             Err(AdmitError::QueueFull)
@@ -792,7 +1077,130 @@ mod tests {
             rt.submit(vec![0.0; 3], Precision::U8, 0),
             Err(AdmitError::BadShape { got: 3, want: 4 })
         );
-        assert_eq!(rt.report().rejected, 2);
+        let r = rt.report();
+        assert_eq!(r.shed, 1, "overload refusal is shed, not a caller error");
+        assert_eq!(r.rejected, 1, "bad shape is a caller error, not shed");
+        assert_eq!(r.tenants[0].shed, 1);
+        assert_eq!(r.tenants[0].rejected, 1);
+        // Conservation at the door: everything submitted is accounted.
+        assert_eq!(r.tenants[0].submitted, 4);
+    }
+
+    #[test]
+    fn unknown_tenant_is_rejected_synchronously() {
+        let mut rt = runtime(ServingConfig::default());
+        assert_eq!(
+            rt.submit_for(7, feat(1.0), Precision::U8, 0),
+            Err(AdmitError::UnknownTenant { got: 7, tenants: 1 })
+        );
+        assert_eq!(rt.report().rejected, 1);
+    }
+
+    #[test]
+    fn higher_priority_tenant_displaces_queued_lower_priority() {
+        let classes = vec![
+            TenantClass::new("free", 1.0, 1, 50_000),
+            TenantClass::new("gold", 1.0, 3, 50_000),
+        ];
+        let mut rt = ServingRuntime::with_tenants(
+            EchoBackend { in_dim: 4, n_classes: 2 },
+            ServingConfig { queue_cap: 2, max_batch: 8, ..Default::default() },
+            classes,
+        );
+        rt.submit_for(0, feat(1.0), Precision::U8, 0).unwrap();
+        rt.submit_for(0, feat(2.0), Precision::U8, 1).unwrap();
+        // Queue full of free-tier requests: a gold arrival displaces the
+        // youngest free request rather than being refused.
+        rt.submit_for(1, feat(3.0), Precision::U8, 2).unwrap();
+        let r = rt.report();
+        assert_eq!(r.shed, 1);
+        assert_eq!(r.tenants[0].shed, 1, "the victim's tenant is charged");
+        assert_eq!(r.tenants[1].shed, 0);
+        // A second gold arrival now displaces the remaining free one.
+        rt.submit_for(1, feat(4.0), Precision::U8, 3).unwrap();
+        assert_eq!(rt.report().tenants[0].shed, 2);
+        // Gold-on-gold at capacity: equal priority never displaces.
+        assert_eq!(
+            rt.submit_for(1, feat(5.0), Precision::U8, 4),
+            Err(AdmitError::QueueFull)
+        );
+        assert_eq!(rt.report().tenants[1].shed, 1, "the refused gold arrival is shed");
+    }
+
+    #[test]
+    fn tenants_execute_against_private_cache_partitions() {
+        let classes = vec![
+            TenantClass::new("a", 1.0, 1, 50_000),
+            TenantClass::new("b", 3.0, 1, 50_000),
+        ];
+        let rt = ServingRuntime::with_tenants(
+            EchoBackend { in_dim: 4, n_classes: 2 },
+            ServingConfig { cache_budget_bytes: 4_000, ..Default::default() },
+            classes,
+        );
+        let r = rt.report();
+        assert_eq!(r.tenants[0].cache.budget_bytes, 1_000, "weight-proportional split");
+        assert_eq!(r.tenants[1].cache.budget_bytes, 3_000);
+        assert_eq!(r.cache.budget_bytes, 4_000, "aggregate sums the partitions");
+    }
+
+    #[test]
+    fn backlog_bound_defers_forming_to_later_ticks() {
+        // EchoBackend costs 100·batch cycles ⇒ 1 µs per single-row batch
+        // on the µs clock. With a zero backlog allowance, the second
+        // batch cannot be cut while the first still occupies the
+        // executor at the same tick instant.
+        let mut rt = runtime(ServingConfig {
+            max_batch: 1,
+            pipeline_devices: 1,
+            max_backlog_us: 0,
+            ..Default::default()
+        });
+        rt.submit(feat(1.0), Precision::U8, 0).unwrap();
+        rt.submit(feat(2.0), Precision::U8, 0).unwrap();
+        let out = rt.tick(0);
+        assert_eq!(out.len(), 1, "backlog veto holds the second batch");
+        assert_eq!(rt.queued(), 1);
+        // Once the clock passes the busy horizon the veto lifts.
+        let out = rt.tick(10);
+        assert_eq!(out.len(), 1);
+        assert_eq!(rt.queued(), 0);
+        // Drain ignores the bound entirely.
+        rt.submit(feat(3.0), Precision::U8, 11).unwrap();
+        rt.submit(feat(4.0), Precision::U8, 11).unwrap();
+        assert_eq!(rt.drain(11).len(), 2);
+    }
+
+    #[test]
+    fn replay_drives_trace_to_completion() {
+        use crate::coordinator::workload::GenRequest;
+        let mut rt = runtime(ServingConfig { max_batch: 2, ..Default::default() });
+        let trace: Vec<GenRequest> = (0..4)
+            .map(|i| GenRequest {
+                tenant: 0,
+                arrival_us: i * 10,
+                precision: Precision::U8,
+                features: feat(i as f32),
+            })
+            .collect();
+        let (out, end) = rt.replay(&trace);
+        assert_eq!(out.len(), 4, "every request answered");
+        assert_eq!(end, 30 + rt.cfg.max_wait_us);
+        let r = rt.report();
+        assert_eq!(r.tenants[0].submitted, 4);
+        assert_eq!(r.completed, 4);
+    }
+
+    #[test]
+    fn fingerprint_is_stable_across_identical_runs() {
+        let run = || {
+            let mut rt = runtime(ServingConfig { max_batch: 2, ..Default::default() });
+            rt.submit(feat(1.0), Precision::U8, 0).unwrap();
+            rt.submit(feat(2.0), Precision::U8, 5).unwrap();
+            rt.drain(10);
+            rt.fingerprint()
+        };
+        assert_eq!(run(), run(), "byte-identical metrics for identical runs");
     }
 
     #[test]
@@ -896,6 +1304,29 @@ mod tests {
     }
 
     #[test]
+    fn shed_victim_marked_on_its_track() {
+        use crate::obs::{Tracer, TrackId, SERVING_REQUEST_PID};
+        let tracer = Tracer::recording();
+        let classes = vec![
+            TenantClass::new("free", 1.0, 1, 50_000),
+            TenantClass::new("gold", 1.0, 3, 50_000),
+        ];
+        let mut rt = ServingRuntime::with_tenants(
+            EchoBackend { in_dim: 4, n_classes: 2 },
+            ServingConfig { queue_cap: 1, max_batch: 8, ..Default::default() },
+            classes,
+        )
+        .with_tracer(tracer.clone());
+        rt.submit_for(0, feat(1.0), Precision::U8, 0).unwrap();
+        rt.submit_for(1, feat(2.0), Precision::U8, 5).unwrap();
+        let data = tracer.snapshot();
+        let req1 = data.on_track(TrackId::new(SERVING_REQUEST_PID, 1));
+        let names: Vec<&str> = req1.iter().map(|e| e.name.as_str()).collect();
+        assert_eq!(names, vec!["admitted", "shed"], "the displaced victim is marked");
+        assert_eq!(req1[1].ts, 5);
+    }
+
+    #[test]
     fn report_metrics_mirror_report_fields() {
         let mut rt = runtime(ServingConfig { max_batch: 1, ..Default::default() });
         for i in 0..3 {
@@ -905,6 +1336,7 @@ mod tests {
         let r = rt.report();
         let m = r.metrics();
         assert_eq!(m.counter("requests_completed"), Some(3));
+        assert_eq!(m.counter("requests_shed"), Some(0));
         assert_eq!(m.counter("batches"), Some(3));
         assert_eq!(m.counter("pipelined_cycles"), Some(r.pipelined_cycles));
         assert_eq!(m.gauge("mean_batch_rows"), Some(1.0));
@@ -912,8 +1344,30 @@ mod tests {
         assert_eq!(lat.count, 3);
         assert_eq!(lat.max, r.latency.as_ref().unwrap().max_us);
         assert!(m.histogram("queue_wait_us").is_some());
+        // Single-tenant reports emit no per-tenant rows.
+        assert_eq!(m.counter("tenant0_default_submitted"), None);
         // The registry's JSON is self-consistent and deterministic.
         assert_eq!(m.to_json(), r.metrics().to_json());
+    }
+
+    #[test]
+    fn multi_tenant_metrics_emit_per_class_rows() {
+        let classes = vec![
+            TenantClass::new("gold", 1.0, 3, 50_000),
+            TenantClass::new("free tier", 1.0, 1, 50_000),
+        ];
+        let mut rt = ServingRuntime::with_tenants(
+            EchoBackend { in_dim: 4, n_classes: 2 },
+            ServingConfig { max_batch: 1, ..Default::default() },
+            classes,
+        );
+        rt.submit_for(0, feat(1.0), Precision::U8, 0).unwrap();
+        rt.tick(0);
+        let m = rt.report().metrics();
+        assert_eq!(m.counter("tenant0_gold_submitted"), Some(1));
+        assert_eq!(m.counter("tenant0_gold_completed"), Some(1));
+        assert_eq!(m.counter("tenant1_free_tier_submitted"), Some(0), "names sanitized");
+        assert_eq!(m.gauge("tenant0_gold_goodput_rate"), Some(1.0));
     }
 
     #[test]

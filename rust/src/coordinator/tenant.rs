@@ -1,0 +1,219 @@
+//! Tenant classes of the multi-tenant serving runtime: per-class SLO,
+//! priority, traffic weight and precision mix, plus the per-tenant
+//! accounting rows ([`TenantReport`]) the report tables and the overload
+//! property tests consume.
+//!
+//! A *tenant class* models one customer tier of a production fleet
+//! ("gold / silver / free"): its **weight** is both its share of offered
+//! traffic in the workload generator and its share of the physical cache
+//! budgets (each tenant gets a private [`super::ServingCaches`]
+//! partition, so one tenant's working set cannot evict another's); its
+//! **priority** orders batch forming and picks load-shedding victims
+//! under overload (lowest priority is shed first); its **SLO** sets the
+//! admission deadline of every request it submits.
+
+use super::cache::CacheStats;
+use super::metrics::{LatencyStats, PlanCacheStats};
+use super::workload::PrecisionMix;
+
+/// One tenant class of the serving runtime.
+#[derive(Debug, Clone)]
+pub struct TenantClass {
+    /// Display name ("gold", "silver", ...).
+    pub name: String,
+    /// Traffic + cache-budget weight relative to the other classes.
+    pub weight: f64,
+    /// Scheduling priority: higher is served first and shed last.
+    pub priority: u8,
+    /// Per-request SLO (µs): a submit gets deadline `arrival + slo_us`.
+    pub slo_us: u64,
+    /// Precision mix this tenant's requests are drawn from.
+    pub mix: PrecisionMix,
+}
+
+impl TenantClass {
+    /// A class with the default serving precision mix.
+    pub fn new(name: &str, weight: f64, priority: u8, slo_us: u64) -> TenantClass {
+        TenantClass {
+            name: name.to_string(),
+            weight,
+            priority,
+            slo_us,
+            mix: PrecisionMix::default_serving(),
+        }
+    }
+
+    /// Parse a CLI tenant list: comma-separated
+    /// `name:weight:priority:slo_ms` entries, e.g.
+    /// `gold:1:3:20,silver:2:2:60,free:4:1:200`.
+    pub fn parse_list(s: &str) -> Result<Vec<TenantClass>, String> {
+        let mut classes = Vec::new();
+        for part in s.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let fields: Vec<&str> = part.split(':').map(str::trim).collect();
+            if fields.len() != 4 {
+                return Err(format!(
+                    "bad tenant spec {part:?}: expected name:weight:priority:slo_ms"
+                ));
+            }
+            let weight: f64 = fields[1]
+                .parse()
+                .map_err(|_| format!("bad tenant weight in {part:?}"))?;
+            if !weight.is_finite() || weight <= 0.0 {
+                return Err(format!("tenant weight must be positive in {part:?}"));
+            }
+            let priority: u8 = fields[2]
+                .parse()
+                .map_err(|_| format!("bad tenant priority in {part:?}"))?;
+            let slo_ms: f64 = fields[3]
+                .parse()
+                .map_err(|_| format!("bad tenant slo_ms in {part:?}"))?;
+            if !slo_ms.is_finite() || slo_ms <= 0.0 {
+                return Err(format!("tenant slo_ms must be positive in {part:?}"));
+            }
+            classes.push(TenantClass::new(
+                fields[0],
+                weight,
+                priority,
+                (slo_ms * 1_000.0) as u64,
+            ));
+        }
+        if classes.is_empty() {
+            return Err("tenant list must not be empty".into());
+        }
+        Ok(classes)
+    }
+
+    /// Split `budget` across `classes` proportionally to weight (floor
+    /// division per class; deterministic).
+    pub fn split_budget(classes: &[TenantClass], budget: u64) -> Vec<u64> {
+        let total: f64 = classes.iter().map(|c| c.weight).sum();
+        classes
+            .iter()
+            .map(|c| (budget as f64 * c.weight / total) as u64)
+            .collect()
+    }
+}
+
+/// Per-tenant accounting over a runtime's lifetime — one row of the
+/// report's tenant table and the unit the overload invariants are
+/// asserted against.
+#[derive(Debug, Clone)]
+pub struct TenantReport {
+    /// Tenant display name.
+    pub name: String,
+    /// Scheduling priority of the class.
+    pub priority: u8,
+    /// The class SLO (µs).
+    pub slo_us: u64,
+    /// Requests this tenant submitted (admitted or not).
+    pub submitted: u64,
+    /// Requests answered.
+    pub completed: u64,
+    /// Requests answered within their SLO deadline — the tenant's
+    /// **goodput** (late answers are throughput, not goodput).
+    pub completed_in_slo: u64,
+    /// Requests shed by admission control: queue-full door rejections
+    /// plus queued requests displaced by a higher-priority arrival.
+    pub shed: u64,
+    /// Requests evicted in-queue after their deadline passed.
+    pub expired: u64,
+    /// Requests refused for caller errors (bad shape / past deadline).
+    pub rejected: u64,
+    /// Requests lost to backend execution failures.
+    pub failed: u64,
+    /// Latency distribution of this tenant's completions (logical µs).
+    pub latency: Option<LatencyStats>,
+    /// This tenant's packed-operand cache partition counters.
+    pub cache: CacheStats,
+    /// This tenant's plan-cache partition counters.
+    pub plan_cache: PlanCacheStats,
+}
+
+impl TenantReport {
+    /// Goodput fraction of submitted traffic (0.0 when nothing was
+    /// submitted).
+    pub fn goodput_rate(&self) -> f64 {
+        if self.submitted == 0 {
+            0.0
+        } else {
+            self.completed_in_slo as f64 / self.submitted as f64
+        }
+    }
+
+    /// Shed fraction of submitted traffic (0.0 when nothing was
+    /// submitted).
+    pub fn shed_rate(&self) -> f64 {
+        if self.submitted == 0 {
+            0.0
+        } else {
+            self.shed as f64 / self.submitted as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::Precision;
+
+    #[test]
+    fn parse_list_roundtrips_fields() {
+        let ts = TenantClass::parse_list("gold:1:3:20,silver:2.5:2:60.5,free:4:1:200").unwrap();
+        assert_eq!(ts.len(), 3);
+        assert_eq!(ts[0].name, "gold");
+        assert_eq!(ts[0].weight, 1.0);
+        assert_eq!(ts[0].priority, 3);
+        assert_eq!(ts[0].slo_us, 20_000);
+        assert_eq!(ts[1].slo_us, 60_500);
+        assert_eq!(ts[2].priority, 1);
+        assert_eq!(ts[0].mix.precisions(), PrecisionMix::default_serving().precisions());
+    }
+
+    #[test]
+    fn parse_list_rejects_malformed_specs() {
+        assert!(TenantClass::parse_list("").is_err());
+        assert!(TenantClass::parse_list("gold:1:3").is_err(), "missing slo field");
+        assert!(TenantClass::parse_list("gold:zero:3:20").is_err());
+        assert!(TenantClass::parse_list("gold:-1:3:20").is_err(), "negative weight");
+        assert!(TenantClass::parse_list("gold:1:300:20").is_err(), "priority > u8");
+        assert!(TenantClass::parse_list("gold:1:3:0").is_err(), "zero slo");
+    }
+
+    #[test]
+    fn split_budget_is_weight_proportional() {
+        let ts = vec![
+            TenantClass::new("a", 1.0, 1, 1000),
+            TenantClass::new("b", 3.0, 1, 1000),
+        ];
+        let split = TenantClass::split_budget(&ts, 4000);
+        assert_eq!(split, vec![1000, 3000]);
+        // Floor division never over-allocates.
+        let split = TenantClass::split_budget(&ts, 4001);
+        assert!(split.iter().sum::<u64>() <= 4001);
+    }
+
+    #[test]
+    fn rates_handle_zero_submissions() {
+        let r = TenantReport {
+            name: "t".into(),
+            priority: 1,
+            slo_us: 1000,
+            submitted: 0,
+            completed: 0,
+            completed_in_slo: 0,
+            shed: 0,
+            expired: 0,
+            rejected: 0,
+            failed: 0,
+            latency: None,
+            cache: CacheStats::default(),
+            plan_cache: PlanCacheStats::default(),
+        };
+        assert_eq!(r.goodput_rate(), 0.0);
+        assert_eq!(r.shed_rate(), 0.0);
+    }
+}

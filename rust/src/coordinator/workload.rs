@@ -2,7 +2,9 @@
 //! processes and request mixes, so the coordinator is evaluated under
 //! realistic (and reproducible) traffic rather than closed-loop bursts.
 
+use super::tenant::TenantClass;
 use crate::gemm::Precision;
+use crate::util::rng::splitmix64;
 use crate::util::Pcg32;
 
 /// A weighted mix of request precisions — the "mixed-shape" dimension of
@@ -94,6 +96,79 @@ pub enum ArrivalProcess {
     /// phases with mean phase length `mean_phase_s` — the bursty traffic
     /// that stresses the batcher's deadline logic.
     Bursty { burst_rate: f64, idle_rate: f64, mean_phase_s: f64 },
+    /// Heavy-tailed Pareto inter-arrivals with mean `1/rate` and shape
+    /// `alpha` (> 1): most gaps are short but the tail is unboundedly
+    /// long — the "millions of independent users" arrival pattern whose
+    /// rare long gaps drain the queue and whose clustered bursts
+    /// overflow it.
+    Pareto { rate: f64, alpha: f64 },
+    /// Sinusoidally rate-modulated Poisson: instantaneous rate
+    /// `rate · (1 + depth · sin(2πt / period_s))` — the diurnal
+    /// peak/trough cycle, compressed onto the bench's time scale.
+    /// `depth` must lie in `[0, 1)` so the rate stays positive.
+    Diurnal { rate: f64, period_s: f64, depth: f64 },
+}
+
+/// CLI-facing name of an arrival process family; [`ArrivalKind::process`]
+/// instantiates it at a concrete rate (the per-family shape parameters
+/// are fixed so a traffic sweep varies *load*, not shape).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArrivalKind {
+    /// Memoryless Poisson arrivals.
+    Poisson,
+    /// Fixed-interval arrivals.
+    Uniform,
+    /// Markov-modulated (bursty) Poisson.
+    Bursty,
+    /// Heavy-tailed Pareto inter-arrivals.
+    Pareto,
+    /// Sinusoidally rate-modulated (diurnal) Poisson.
+    Diurnal,
+}
+
+impl ArrivalKind {
+    /// Parse the CLI spelling (`poisson|uniform|bursty|pareto|diurnal`).
+    pub fn parse(s: &str) -> Result<ArrivalKind, String> {
+        match s {
+            "poisson" => Ok(ArrivalKind::Poisson),
+            "uniform" => Ok(ArrivalKind::Uniform),
+            "bursty" => Ok(ArrivalKind::Bursty),
+            "pareto" => Ok(ArrivalKind::Pareto),
+            "diurnal" => Ok(ArrivalKind::Diurnal),
+            other => Err(format!(
+                "unknown arrival process {other:?} (poisson|uniform|bursty|pareto|diurnal)"
+            )),
+        }
+    }
+
+    /// The CLI spelling.
+    pub fn name(self) -> &'static str {
+        match self {
+            ArrivalKind::Poisson => "poisson",
+            ArrivalKind::Uniform => "uniform",
+            ArrivalKind::Bursty => "bursty",
+            ArrivalKind::Pareto => "pareto",
+            ArrivalKind::Diurnal => "diurnal",
+        }
+    }
+
+    /// Instantiate the process at `rate` requests/second. `burst` (≥ 1)
+    /// sets the burst-to-idle rate ratio of the bursty process and is
+    /// ignored by the others.
+    pub fn process(self, rate: f64, burst: f64) -> ArrivalProcess {
+        let burst = burst.max(1.0);
+        match self {
+            ArrivalKind::Poisson => ArrivalProcess::Poisson { rate },
+            ArrivalKind::Uniform => ArrivalProcess::Uniform { rate },
+            ArrivalKind::Bursty => ArrivalProcess::Bursty {
+                burst_rate: rate * burst,
+                idle_rate: rate / burst,
+                mean_phase_s: 0.05,
+            },
+            ArrivalKind::Pareto => ArrivalProcess::Pareto { rate, alpha: 1.5 },
+            ArrivalKind::Diurnal => ArrivalProcess::Diurnal { rate, period_s: 0.5, depth: 0.8 },
+        }
+    }
 }
 
 /// Generator of arrival offsets (seconds from stream start).
@@ -127,6 +202,22 @@ impl ArrivalGen {
                 self.phase_left -= dt;
                 dt
             }
+            ArrivalProcess::Pareto { rate, alpha } => {
+                // Pareto(xm, α) has mean α·xm/(α−1); pick xm so the mean
+                // inter-arrival is 1/rate. Inverse-CDF sampling:
+                // dt = xm · (1−U)^(−1/α), U ∈ [0,1) so 1−U ∈ (0,1].
+                let xm = (alpha - 1.0) / (alpha * rate);
+                let u = self.rng.f64();
+                xm * (1.0 - u).powf(-1.0 / alpha)
+            }
+            ArrivalProcess::Diurnal { rate, period_s, depth } => {
+                // Exponential gap at the instantaneous modulated rate —
+                // a cheap deterministic approximation of inhomogeneous
+                // Poisson sampling, accurate while gaps ≪ period.
+                let phase = 2.0 * std::f64::consts::PI * self.clock / period_s;
+                let inst = rate * (1.0 + depth * phase.sin());
+                self.rng.exp(inst)
+            }
         };
         self.clock += dt;
         self.clock
@@ -157,6 +248,96 @@ impl FeatureGen {
     }
 }
 
+/// A multi-tenant traffic specification: tenant classes sharing one
+/// offered aggregate rate (split weight-proportionally), one arrival
+/// process family, and a seed. [`generate`] turns it into a
+/// deterministic merged trace the runtime replays.
+#[derive(Debug, Clone)]
+pub struct WorkloadSpec {
+    /// The tenant classes (weights set each tenant's traffic share and
+    /// mixes set its precisions).
+    pub tenants: Vec<TenantClass>,
+    /// The arrival process family every tenant stream draws from.
+    pub kind: ArrivalKind,
+    /// Aggregate offered rate across all tenants (requests/second).
+    pub offered_rate: f64,
+    /// Burst factor for the bursty family (ignored by the others).
+    pub burst: f64,
+    /// Total requests to generate across all tenants.
+    pub requests: usize,
+    /// Base seed; every derived per-tenant stream is seeded from it.
+    pub seed: u64,
+}
+
+/// One generated request of a multi-tenant trace.
+#[derive(Debug, Clone)]
+pub struct GenRequest {
+    /// Index of the tenant (into the spec's class list).
+    pub tenant: usize,
+    /// Arrival time on the runtime's logical clock (µs).
+    pub arrival_us: u64,
+    /// Precision drawn from the tenant's mix.
+    pub precision: Precision,
+    /// Feature row (`in_dim` wide).
+    pub features: Vec<f32>,
+}
+
+/// Generate a deterministic multi-tenant trace: per-tenant arrival /
+/// feature / mix streams (independently seeded from `spec.seed`) merged
+/// in arrival order until `spec.requests` requests exist. Identical
+/// specs produce byte-identical traces — the determinism the overload
+/// property battery pins end to end.
+pub fn generate(spec: &WorkloadSpec, in_dim: usize) -> Vec<GenRequest> {
+    assert!(!spec.tenants.is_empty(), "workload needs at least one tenant");
+    assert!(spec.offered_rate > 0.0, "offered rate must be positive");
+    let total_w: f64 = spec.tenants.iter().map(|t| t.weight).sum();
+    struct Stream {
+        arrivals: ArrivalGen,
+        features: FeatureGen,
+        mix_rng: Pcg32,
+        next_s: f64,
+    }
+    let mut streams: Vec<Stream> = spec
+        .tenants
+        .iter()
+        .enumerate()
+        .map(|(i, t)| {
+            let mut s = spec
+                .seed
+                .wrapping_add((i as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+            let rate = spec.offered_rate * t.weight / total_w;
+            let mut arrivals =
+                ArrivalGen::new(spec.kind.process(rate, spec.burst), splitmix64(&mut s));
+            let features = FeatureGen::new(in_dim, splitmix64(&mut s));
+            let mix_rng = Pcg32::new(splitmix64(&mut s));
+            let next_s = arrivals.next_arrival();
+            Stream { arrivals, features, mix_rng, next_s }
+        })
+        .collect();
+    let mut out = Vec::with_capacity(spec.requests);
+    while out.len() < spec.requests {
+        // Earliest next arrival wins; ties break on the lower tenant
+        // index, so the merge is total and deterministic.
+        let t = (0..streams.len())
+            .min_by(|&a, &b| {
+                streams[a]
+                    .next_s
+                    .partial_cmp(&streams[b].next_s)
+                    .expect("arrival times are finite")
+            })
+            .expect("at least one tenant");
+        let s = &mut streams[t];
+        out.push(GenRequest {
+            tenant: t,
+            arrival_us: (s.next_s * 1e6).round() as u64,
+            precision: spec.tenants[t].mix.sample(&mut s.mix_rng),
+            features: s.features.next(),
+        });
+        s.next_s = s.arrivals.next_arrival();
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -185,6 +366,8 @@ mod tests {
             ArrivalProcess::Poisson { rate: 50.0 },
             ArrivalProcess::Uniform { rate: 50.0 },
             ArrivalProcess::Bursty { burst_rate: 500.0, idle_rate: 5.0, mean_phase_s: 0.1 },
+            ArrivalProcess::Pareto { rate: 50.0, alpha: 1.5 },
+            ArrivalProcess::Diurnal { rate: 50.0, period_s: 0.5, depth: 0.8 },
         ] {
             let mut g = ArrivalGen::new(p, 3);
             let a = g.take(500);
@@ -240,6 +423,108 @@ mod tests {
             PrecisionMix::parse("u8:0,i16:1").is_err(),
             "a zero-weight class among positive ones is rejected, not kept as a phantom"
         );
+    }
+
+    #[test]
+    fn pareto_is_heavier_tailed_than_poisson_at_the_same_mean() {
+        let gaps = |p, seed| {
+            let mut g = ArrivalGen::new(p, seed);
+            let a = g.take(20_000);
+            let d: Vec<f64> = std::iter::once(a[0])
+                .chain(a.windows(2).map(|w| w[1] - w[0]))
+                .collect();
+            d
+        };
+        let cv2 = |d: &[f64]| {
+            let m = d.iter().sum::<f64>() / d.len() as f64;
+            let v = d.iter().map(|x| (x - m).powi(2)).sum::<f64>() / d.len() as f64;
+            (v / (m * m), m)
+        };
+        let (pareto_cv2, pareto_mean) = cv2(&gaps(ArrivalProcess::Pareto { rate: 100.0, alpha: 1.5 }, 7));
+        let (poisson_cv2, _) = cv2(&gaps(ArrivalProcess::Poisson { rate: 100.0 }, 7));
+        // The mean is calibrated to 1/rate; the dispersion is far above
+        // the exponential's CV² = 1 (α = 1.5 has infinite variance, so
+        // any finite sample shows a fat tail).
+        assert!((pareto_mean - 0.01).abs() / 0.01 < 0.25, "mean gap {pareto_mean}");
+        assert!(pareto_cv2 > 2.0 * poisson_cv2, "{pareto_cv2} vs {poisson_cv2}");
+    }
+
+    #[test]
+    fn diurnal_rate_oscillates_with_the_period() {
+        // Count arrivals in the peak half-period vs the trough
+        // half-period of the first cycle: depth 0.8 makes the peak
+        // carry several times the trough's traffic.
+        let mut g = ArrivalGen::new(
+            ArrivalProcess::Diurnal { rate: 2_000.0, period_s: 1.0, depth: 0.8 },
+            11,
+        );
+        let (mut peak, mut trough) = (0u32, 0u32);
+        loop {
+            let t = g.next_arrival();
+            if t >= 1.0 {
+                break;
+            }
+            if t < 0.5 {
+                peak += 1;
+            } else {
+                trough += 1;
+            }
+        }
+        assert!(
+            peak as f64 > 1.5 * trough as f64,
+            "peak half {peak} vs trough half {trough}"
+        );
+    }
+
+    #[test]
+    fn arrival_kind_parses_and_names_roundtrip() {
+        for k in [
+            ArrivalKind::Poisson,
+            ArrivalKind::Uniform,
+            ArrivalKind::Bursty,
+            ArrivalKind::Pareto,
+            ArrivalKind::Diurnal,
+        ] {
+            assert_eq!(ArrivalKind::parse(k.name()).unwrap(), k);
+        }
+        assert!(ArrivalKind::parse("fractal").is_err());
+    }
+
+    #[test]
+    fn generated_trace_is_deterministic_sorted_and_weight_shared() {
+        let spec = WorkloadSpec {
+            tenants: vec![
+                TenantClass::new("gold", 1.0, 3, 20_000),
+                TenantClass::new("free", 3.0, 1, 200_000),
+            ],
+            kind: ArrivalKind::Poisson,
+            offered_rate: 4_000.0,
+            burst: 4.0,
+            requests: 2_000,
+            seed: 42,
+        };
+        let a = generate(&spec, 8);
+        let b = generate(&spec, 8);
+        assert_eq!(a.len(), 2_000);
+        // Byte-identical across runs of the same spec.
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.tenant, y.tenant);
+            assert_eq!(x.arrival_us, y.arrival_us);
+            assert_eq!(x.precision, y.precision);
+            assert_eq!(x.features, y.features);
+        }
+        // Merged in arrival order.
+        for w in a.windows(2) {
+            assert!(w[1].arrival_us >= w[0].arrival_us);
+        }
+        // Traffic split ≈ 1:3 by weight.
+        let gold = a.iter().filter(|r| r.tenant == 0).count() as f64;
+        let share = gold / a.len() as f64;
+        assert!((share - 0.25).abs() < 0.05, "gold share {share}");
+        // Features sized to in_dim; different seed, different trace.
+        assert!(a.iter().all(|r| r.features.len() == 8));
+        let c = generate(&WorkloadSpec { seed: 43, ..spec.clone() }, 8);
+        assert!(a.iter().zip(&c).any(|(x, y)| x.arrival_us != y.arrival_us));
     }
 
     #[test]

@@ -337,6 +337,7 @@ pub fn serving_table(r: &ServingReport) -> Table {
     };
     kv("requests completed", r.completed.to_string());
     kv("requests expired (SLO)", r.expired.to_string());
+    kv("requests shed (overload)", r.shed.to_string());
     kv("requests rejected", r.rejected.to_string());
     kv("requests failed (backend)", r.failed.to_string());
     kv("fused batches", r.batches.to_string());
@@ -406,6 +407,44 @@ pub fn serving_table(r: &ServingReport) -> Table {
         if let Some(s) = leg {
             kv(label, format!("{:.1} / {:.1}", s.mean_us, s.p95_us));
         }
+    }
+    t
+}
+
+/// Render the per-tenant fairness rows of a multi-tenant serving report:
+/// one row per class with goodput, in-SLO fraction, shed fraction and
+/// the latency percentiles the overload invariants are asserted against.
+pub fn tenant_table(r: &ServingReport) -> Table {
+    let mut t = Table::new(&[
+        "tenant",
+        "prio",
+        "slo ms",
+        "submitted",
+        "completed",
+        "in-SLO %",
+        "shed %",
+        "expired",
+        "p50 µs",
+        "p99 µs",
+    ])
+    .align(0, Align::Left);
+    for tr in &r.tenants {
+        let (p50, p99) = match &tr.latency {
+            Some(l) => (format!("{:.0}", l.p50_us), format!("{:.0}", l.p99_us)),
+            None => ("-".to_string(), "-".to_string()),
+        };
+        t.row(&[
+            tr.name.clone(),
+            tr.priority.to_string(),
+            format!("{:.1}", tr.slo_us as f64 / 1_000.0),
+            tr.submitted.to_string(),
+            tr.completed.to_string(),
+            format!("{:.1}", tr.goodput_rate() * 100.0),
+            format!("{:.1}", tr.shed_rate() * 100.0),
+            tr.expired.to_string(),
+            p50,
+            p99,
+        ]);
     }
     t
 }
@@ -534,10 +573,11 @@ mod tests {
 
     #[test]
     fn serving_and_latency_tables_render() {
-        use crate::coordinator::{CacheStats, PlanCacheStats};
+        use crate::coordinator::{CacheStats, PlanCacheStats, TenantReport};
         let report = ServingReport {
             completed: 10,
             expired: 1,
+            shed: 4,
             rejected: 2,
             failed: 0,
             batches: 3,
@@ -576,9 +616,55 @@ mod tests {
             }),
             batch_wait: None,
             execute: None,
+            tenants: vec![
+                TenantReport {
+                    name: "gold".into(),
+                    priority: 3,
+                    slo_us: 20_000,
+                    submitted: 8,
+                    completed: 7,
+                    completed_in_slo: 6,
+                    shed: 1,
+                    expired: 0,
+                    rejected: 0,
+                    failed: 0,
+                    latency: Some(LatencyStats {
+                        count: 7,
+                        mean_us: 100.0,
+                        p50_us: 90.0,
+                        p95_us: 180.0,
+                        p99_us: 200.0,
+                        max_us: 210.0,
+                    }),
+                    cache: CacheStats::default(),
+                    plan_cache: PlanCacheStats::default(),
+                },
+                TenantReport {
+                    name: "free".into(),
+                    priority: 1,
+                    slo_us: 200_000,
+                    submitted: 6,
+                    completed: 3,
+                    completed_in_slo: 3,
+                    shed: 3,
+                    expired: 1,
+                    rejected: 2,
+                    failed: 0,
+                    latency: None,
+                    cache: CacheStats::default(),
+                    plan_cache: PlanCacheStats::default(),
+                },
+            ],
         };
         let txt = serving_table(&report).to_text();
         assert!(txt.contains("requests completed"), "{txt}");
+        assert!(txt.contains("requests shed (overload)"), "{txt}");
+        // The per-tenant fairness rows render one line per class.
+        let tt = tenant_table(&report).to_text();
+        assert!(tt.contains("gold") && tt.contains("free"), "{tt}");
+        assert!(tt.contains("75.0"), "gold in-SLO % = 6/8: {tt}");
+        assert!(tt.contains("50.0"), "free shed % = 3/6: {tt}");
+        assert!(tt.contains("-"), "no-latency tenant renders dashes: {tt}");
         assert!(txt.contains("queue wait µs"), "{txt}");
         assert!(txt.contains("12.0 / 20.0"), "leg percentiles rendered: {txt}");
         assert!(!txt.contains("batch wait µs"), "absent legs are skipped: {txt}");

@@ -1,0 +1,331 @@
+//! Generic byte-budgeted LRU map — the one residency policy shared by
+//! every serving cache ([`crate::coordinator::PackedBCache`],
+//! [`crate::coordinator::PlanCache`], and the per-tenant partitions the
+//! multi-tenant runtime hands out).
+//!
+//! Semantics (pinned by the unit tests below and by the cache tests in
+//! `coordinator/cache.rs`, which predate the extraction):
+//!
+//! - Every entry is charged an explicit byte weight; the map never holds
+//!   more than `budget_bytes` of weight.
+//! - Inserting past the budget evicts least-recently-used entries until
+//!   the newcomer fits. Recency is a strictly increasing sequence number
+//!   bumped on every lookup *and* insert, so eviction order is total and
+//!   deterministic (no hash-iteration tie-breaks are ever observable).
+//! - An entry whose weight alone exceeds the whole budget is **refused**
+//!   and handed back to the caller (`Err`) instead of wiping the cache —
+//!   one oversize request must not destroy everyone else's residency.
+//! - A zero budget is legal and caches nothing: every insert is refused,
+//!   every lookup misses. That is the "uncached baseline" configuration
+//!   the serving benches measure against.
+//! - Lookups count hits/misses; re-inserting an existing key replaces
+//!   the entry without double-charging its bytes.
+
+use std::collections::HashMap;
+use std::hash::Hash;
+
+/// Lifetime counters of one [`ByteBudgetLru`] — the shared shape behind
+/// `CacheStats` / `PlanCacheStats`.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct LruCounters {
+    /// Lookups that found a resident entry.
+    pub hits: u64,
+    /// Lookups that missed (cold or evicted).
+    pub misses: u64,
+    /// Entries evicted to make room under the budget.
+    pub evictions: u64,
+    /// Inserts refused because a single entry exceeded the whole budget.
+    pub uncacheable: u64,
+    /// Bytes currently resident.
+    pub bytes: u64,
+    /// The residency budget.
+    pub budget_bytes: u64,
+}
+
+struct Slot<V> {
+    value: V,
+    bytes: u64,
+    last_used: u64,
+}
+
+/// A byte-budgeted LRU map from `K` to `V`.
+pub struct ByteBudgetLru<K, V> {
+    budget: u64,
+    seq: u64,
+    bytes: u64,
+    entries: HashMap<K, Slot<V>>,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+    uncacheable: u64,
+}
+
+impl<K: Eq + Hash + Copy, V> ByteBudgetLru<K, V> {
+    /// An empty map with the given residency budget in bytes.
+    pub fn new(budget_bytes: u64) -> ByteBudgetLru<K, V> {
+        ByteBudgetLru {
+            budget: budget_bytes,
+            seq: 0,
+            bytes: 0,
+            entries: HashMap::new(),
+            hits: 0,
+            misses: 0,
+            evictions: 0,
+            uncacheable: 0,
+        }
+    }
+
+    /// Resident entries.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Whether nothing is resident.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// The configured residency budget in bytes.
+    pub fn budget_bytes(&self) -> u64 {
+        self.budget
+    }
+
+    /// Bytes currently resident.
+    pub fn bytes(&self) -> u64 {
+        self.bytes
+    }
+
+    /// Record a lookup: `true` (and a recency bump) if the key is
+    /// resident, `false` (and a miss count) otherwise. Use
+    /// [`ByteBudgetLru::peek`] afterwards to borrow without re-counting.
+    pub fn touch(&mut self, key: &K) -> bool {
+        self.seq += 1;
+        match self.entries.get_mut(key) {
+            Some(slot) => {
+                slot.last_used = self.seq;
+                self.hits += 1;
+                true
+            }
+            None => {
+                self.misses += 1;
+                false
+            }
+        }
+    }
+
+    /// Record a lookup and borrow the resident value (recency bump +
+    /// hit), or count a miss.
+    pub fn get(&mut self, key: &K) -> Option<&V> {
+        if self.touch(key) {
+            self.entries.get(key).map(|slot| &slot.value)
+        } else {
+            None
+        }
+    }
+
+    /// Borrow a resident value without counting a lookup or bumping
+    /// recency.
+    pub fn peek(&self, key: &K) -> Option<&V> {
+        self.entries.get(key).map(|slot| &slot.value)
+    }
+
+    /// Insert `value` charged at `bytes`, evicting least-recently-used
+    /// entries until it fits the budget. If `bytes` alone exceeds the
+    /// budget the value is refused and handed back (`Err`) so the caller
+    /// can use it transiently. Re-inserting an existing key replaces the
+    /// old entry first (no byte double-charge).
+    pub fn insert(&mut self, key: K, value: V, bytes: u64) -> Result<(), V> {
+        if bytes > self.budget {
+            self.uncacheable += 1;
+            return Err(value);
+        }
+        if let Some(old) = self.entries.remove(&key) {
+            self.bytes -= old.bytes;
+        }
+        while self.bytes + bytes > self.budget {
+            let lru = self
+                .entries
+                .iter()
+                .min_by_key(|(_, slot)| slot.last_used)
+                .map(|(k, _)| *k)
+                .expect("bytes > 0 implies a resident entry");
+            let evicted = self.entries.remove(&lru).expect("lru key resident");
+            self.bytes -= evicted.bytes;
+            self.evictions += 1;
+        }
+        self.seq += 1;
+        self.entries.insert(key, Slot { value, bytes, last_used: self.seq });
+        self.bytes += bytes;
+        Ok(())
+    }
+
+    /// Snapshot of the lifetime counters.
+    pub fn counters(&self) -> LruCounters {
+        LruCounters {
+            hits: self.hits,
+            misses: self.misses,
+            evictions: self.evictions,
+            uncacheable: self.uncacheable,
+            bytes: self.bytes,
+            budget_bytes: self.budget,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickcheck::prop;
+
+    #[test]
+    fn hit_after_insert_miss_before() {
+        let mut c: ByteBudgetLru<u32, &str> = ByteBudgetLru::new(100);
+        assert!(!c.touch(&1), "cold lookup misses");
+        c.insert(1, "a", 10).unwrap();
+        assert!(c.touch(&1), "resident lookup hits");
+        assert_eq!(c.peek(&1), Some(&"a"));
+        assert_eq!(c.get(&1), Some(&"a"));
+        let s = c.counters();
+        assert_eq!((s.hits, s.misses), (2, 1));
+        assert_eq!(s.bytes, 10);
+        assert_eq!(s.budget_bytes, 100);
+    }
+
+    #[test]
+    fn eviction_is_least_recently_used_with_touch_bumps() {
+        // Budget for two equal entries; touching 0 makes 1 the victim.
+        let mut c: ByteBudgetLru<u32, u32> = ByteBudgetLru::new(20);
+        c.insert(0, 100, 10).unwrap();
+        c.insert(1, 101, 10).unwrap();
+        assert!(c.touch(&0));
+        c.insert(2, 102, 10).unwrap();
+        assert_eq!(c.len(), 2);
+        assert!(c.peek(&0).is_some(), "recently used survives");
+        assert!(c.peek(&1).is_none(), "LRU evicted");
+        assert!(c.peek(&2).is_some(), "new entry resident");
+        assert_eq!(c.counters().evictions, 1);
+    }
+
+    #[test]
+    fn eviction_cascades_until_the_newcomer_fits() {
+        let mut c: ByteBudgetLru<u32, u32> = ByteBudgetLru::new(30);
+        c.insert(0, 0, 10).unwrap();
+        c.insert(1, 0, 10).unwrap();
+        c.insert(2, 0, 10).unwrap();
+        // A 25-byte entry over a full 30-byte budget: 30+25, 20+25 and
+        // 10+25 all overflow, so all three residents must go.
+        c.insert(3, 0, 25).unwrap();
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.counters().evictions, 3);
+        assert!(c.peek(&0).is_none() && c.peek(&1).is_none() && c.peek(&2).is_none());
+        assert!(c.peek(&3).is_some());
+        assert_eq!(c.counters().bytes, 25);
+    }
+
+    #[test]
+    fn zero_budget_caches_nothing() {
+        let mut c: ByteBudgetLru<u32, u32> = ByteBudgetLru::new(0);
+        assert_eq!(c.insert(0, 7, 1), Err(7));
+        assert!(c.is_empty());
+        assert!(!c.touch(&0));
+        let s = c.counters();
+        assert_eq!(s.uncacheable, 1);
+        assert_eq!(s.bytes, 0);
+    }
+
+    #[test]
+    fn oversize_entry_refused_and_handed_back() {
+        let mut c: ByteBudgetLru<u32, String> = ByteBudgetLru::new(10);
+        c.insert(0, "keep".into(), 5).unwrap();
+        assert_eq!(c.insert(1, "big".into(), 11), Err("big".to_string()));
+        assert_eq!(c.len(), 1, "an oversize insert must not wipe residents");
+        assert_eq!(c.counters().uncacheable, 1);
+        assert_eq!(c.counters().evictions, 0);
+    }
+
+    #[test]
+    fn reinsert_replaces_without_leaking_bytes() {
+        let mut c: ByteBudgetLru<u32, u32> = ByteBudgetLru::new(100);
+        c.insert(0, 1, 30).unwrap();
+        c.insert(0, 2, 40).unwrap();
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.counters().bytes, 40, "replacement, not accumulation");
+        assert_eq!(c.peek(&0), Some(&2));
+    }
+
+    /// Property: the LRU agrees lookup-for-lookup and evict-for-evict
+    /// with a naive reference model (linear scan, same recency rules)
+    /// under random operation streams — the refactored caches inherit
+    /// exactly the pre-extraction behaviour.
+    #[test]
+    fn matches_naive_reference_model() {
+        struct Model {
+            budget: u64,
+            seq: u64,
+            entries: Vec<(u32, u64, u64)>, // (key, bytes, last_used)
+        }
+        impl Model {
+            fn touch(&mut self, key: u32) -> bool {
+                self.seq += 1;
+                for e in &mut self.entries {
+                    if e.0 == key {
+                        e.2 = self.seq;
+                        return true;
+                    }
+                }
+                false
+            }
+            fn insert(&mut self, key: u32, bytes: u64) -> bool {
+                if bytes > self.budget {
+                    return false;
+                }
+                self.entries.retain(|e| e.0 != key);
+                while self.entries.iter().map(|e| e.1).sum::<u64>() + bytes > self.budget {
+                    let lru = self
+                        .entries
+                        .iter()
+                        .min_by_key(|e| e.2)
+                        .map(|e| e.0)
+                        .expect("non-empty");
+                    self.entries.retain(|e| e.0 != lru);
+                }
+                self.seq += 1;
+                self.entries.push((key, bytes, self.seq));
+                true
+            }
+        }
+        prop("lru-matches-model", 0xBEEF, 40, |g| {
+            let budget = g.rng.range(0, 64) as u64;
+            let mut lru: ByteBudgetLru<u32, ()> = ByteBudgetLru::new(budget);
+            let mut model = Model { budget, seq: 0, entries: Vec::new() };
+            for step in 0..g.size() * 4 {
+                let key = g.rng.range(0, 8) as u32;
+                if g.rng.f64() < 0.5 {
+                    let got = lru.touch(&key);
+                    let want = model.touch(key);
+                    if got != want {
+                        return Err(format!("step {step}: touch({key}) {got} vs model {want}"));
+                    }
+                } else {
+                    let bytes = g.rng.range(1, 24) as u64;
+                    let got = lru.insert(key, (), bytes).is_ok();
+                    let want = model.insert(key, bytes);
+                    if got != want {
+                        return Err(format!("step {step}: insert({key},{bytes}) {got} vs {want}"));
+                    }
+                }
+                let resident: u64 = model.entries.iter().map(|e| e.1).sum();
+                if lru.bytes() != resident || lru.len() != model.entries.len() {
+                    return Err(format!(
+                        "step {step}: {} bytes / {} entries vs model {} / {}",
+                        lru.bytes(),
+                        lru.len(),
+                        resident,
+                        model.entries.len()
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -8,12 +8,14 @@ pub mod benchkit;
 pub mod cli;
 pub mod ini;
 pub mod json;
+pub mod lru;
 pub mod quickcheck;
 pub mod rng;
 pub mod split;
 pub mod stats;
 pub mod tabulate;
 
+pub use lru::{ByteBudgetLru, LruCounters};
 pub use rng::Pcg32;
 pub use split::{offsets, partition};
 pub use stats::Summary;

@@ -1,0 +1,435 @@
+//! Overload property battery for the multi-tenant serving runtime.
+//!
+//! Every invariant the stress lab depends on is pinned here, mostly as
+//! randomized properties over the mini harness
+//! (`versal_gemm::util::quickcheck`):
+//!
+//! 1. **Determinism** — identical workload specs replay to
+//!    byte-identical report fingerprints and byte-identical Chrome
+//!    traces, across every arrival-process family;
+//! 2. **Conservation** — per tenant, every submitted request is
+//!    accounted exactly once: completed + failed + expired + shed +
+//!    rejected;
+//! 3. **Priority monotonicity** — with identical arrivals, the
+//!    higher-priority of two otherwise-identical tenants never ends up
+//!    with less goodput, regardless of tenant index;
+//! 4. **Graceful degradation** — far past the saturation knee, shedding
+//!    hits the lowest priority hardest and the gold tenant's p99 stays
+//!    within its SLO (execution backpressure keeps the execute leg
+//!    bounded);
+//! 5. **Cache-partition isolation** — a storming tenant's evictions
+//!    never touch another tenant's partition counters or residency.
+
+use versal_gemm::coordinator::{
+    generate, ArrivalKind, Backend, BatchedBackend, EchoBackend, GenRequest, RustGemmBackend,
+    ServingConfig, ServingRuntime, TenantClass, WorkloadSpec,
+};
+use versal_gemm::dl::MlpSpec;
+use versal_gemm::gemm::Precision;
+use versal_gemm::obs::{to_chrome_json, Tracer};
+use versal_gemm::util::quickcheck::{prop, Gen};
+
+const IN_DIM: usize = 4;
+
+/// A deterministic backend with a tunable per-row service time, for
+/// driving the runtime deep into overload without real GEMM work.
+struct SlowBackend {
+    cycles_per_row: u64,
+}
+
+impl Backend for SlowBackend {
+    fn in_dim(&self) -> usize {
+        IN_DIM
+    }
+    fn n_classes(&self) -> usize {
+        2
+    }
+    fn infer_batch(&mut self, batch: usize, x: &[f32]) -> anyhow::Result<(Vec<f32>, u64)> {
+        let mut logits = vec![0.0f32; batch * 2];
+        for i in 0..batch {
+            logits[i * 2] = x[i * IN_DIM];
+        }
+        Ok((logits, self.cycles_per_row * batch as u64))
+    }
+}
+
+impl BatchedBackend for SlowBackend {}
+
+fn echo() -> EchoBackend {
+    EchoBackend { in_dim: IN_DIM, n_classes: 2 }
+}
+
+fn all_kinds() -> [ArrivalKind; 5] {
+    [
+        ArrivalKind::Poisson,
+        ArrivalKind::Uniform,
+        ArrivalKind::Bursty,
+        ArrivalKind::Pareto,
+        ArrivalKind::Diurnal,
+    ]
+}
+
+/// Property 1: identical specs ⇒ byte-identical fingerprints and
+/// byte-identical Chrome traces, for every arrival family. The
+/// fingerprint covers the full metrics registry (wall-clock taint
+/// zeroed), so any nondeterminism anywhere in admission, forming,
+/// execution or accounting trips this.
+#[test]
+fn determinism_identical_seeds_fingerprint_and_trace() {
+    prop("overload-determinism", 0xD57E_2211, 3, |g: &mut Gen| {
+        let kind = all_kinds()[g.rng.range(0, 5)];
+        let spec = WorkloadSpec {
+            tenants: vec![
+                TenantClass::new("gold", 1.0, 3, 5_000 + g.rng.range(0, 20_000) as u64),
+                TenantClass::new("free", 3.0, 1, 20_000 + g.rng.range(0, 80_000) as u64),
+            ],
+            kind,
+            offered_rate: 500.0 + g.rng.f64() * 50_000.0,
+            burst: 4.0,
+            requests: 120,
+            seed: g.rng.next_u64(),
+        };
+        let trace = generate(&spec, IN_DIM);
+        let run = |trace: &[GenRequest]| {
+            let tracer = Tracer::recording();
+            let mut rt = ServingRuntime::with_tenants(
+                echo(),
+                ServingConfig {
+                    max_batch: 4,
+                    max_wait_us: 500,
+                    queue_cap: 32,
+                    default_slo_us: 50_000,
+                    cache_budget_bytes: 1 << 20,
+                    plan_cache_budget_bytes: 1 << 20,
+                    pipeline_devices: 2,
+                    max_backlog_us: 10_000,
+                },
+                spec.tenants.clone(),
+            )
+            .with_tracer(tracer.clone());
+            rt.replay(trace);
+            (rt.fingerprint(), to_chrome_json(&tracer.snapshot()))
+        };
+        let (fp_a, trace_a) = run(&trace);
+        let (fp_b, trace_b) = run(&trace);
+        if fp_a != fp_b {
+            return Err(format!("{kind:?}: fingerprints diverged:\n{fp_a}\nvs\n{fp_b}"));
+        }
+        if trace_a != trace_b {
+            return Err(format!("{kind:?}: chrome traces diverged"));
+        }
+        // The trace itself must also regenerate byte-identically.
+        let regen = generate(&spec, IN_DIM);
+        if trace.len() != regen.len()
+            || trace
+                .iter()
+                .zip(&regen)
+                .any(|(x, y)| x.arrival_us != y.arrival_us || x.tenant != y.tenant)
+        {
+            return Err(format!("{kind:?}: regenerated trace diverged"));
+        }
+        Ok(())
+    });
+}
+
+/// Property 2: per tenant, submitted = completed + failed + expired +
+/// shed + rejected after a drain — nothing is double-counted and
+/// nothing vanishes, across randomized queue caps, batch policies,
+/// tenant sets and overload levels, with caller errors mixed in.
+#[test]
+fn conservation_every_submission_accounted_once() {
+    prop("overload-conservation", 0xC0_5E4E, 8, |g: &mut Gen| {
+        let n_tenants = g.rng.range(1, 4);
+        let classes: Vec<TenantClass> = (0..n_tenants)
+            .map(|i| {
+                TenantClass::new(
+                    &format!("t{i}"),
+                    0.5 + g.rng.f64() * 4.0,
+                    g.rng.range(1, 4) as u8,
+                    // Some SLOs tight enough to expire in-queue work.
+                    500 + g.rng.range(0, 30_000) as u64,
+                )
+            })
+            .collect();
+        let spec = WorkloadSpec {
+            tenants: classes.clone(),
+            kind: all_kinds()[g.rng.range(0, 5)],
+            offered_rate: 2_000.0 + g.rng.f64() * 200_000.0,
+            burst: 1.0 + g.rng.f64() * 7.0,
+            requests: 150,
+            seed: g.rng.next_u64(),
+        };
+        let trace = generate(&spec, IN_DIM);
+        let mut rt = ServingRuntime::with_tenants(
+            echo(),
+            ServingConfig {
+                max_batch: g.rng.range(1, 9),
+                max_wait_us: g.rng.range(0, 2_001) as u64,
+                queue_cap: g.rng.range(4, 33),
+                default_slo_us: 50_000,
+                cache_budget_bytes: 1 << 20,
+                plan_cache_budget_bytes: 1 << 20,
+                pipeline_devices: 1 + g.rng.range(0, 3),
+                max_backlog_us: [u64::MAX, 2_000][g.rng.range(0, 2)],
+            },
+            classes,
+        );
+        let (_, end) = rt.replay(&trace);
+        // Caller errors must join the ledger too: a bad shape counts as
+        // rejected for its tenant; an unknown tenant is rejected only in
+        // the aggregate (no tenant row exists to charge).
+        let _ = rt.submit_for(0, vec![0.0; IN_DIM + 1], Precision::U8, end);
+        let _ = rt.submit_for(n_tenants + 5, vec![0.0; IN_DIM], Precision::U8, end);
+        rt.drain(end);
+
+        let rep = rt.report();
+        if rt.queued() != 0 {
+            return Err(format!("{} requests still queued after drain", rt.queued()));
+        }
+        let mut total_submitted = 0u64;
+        for t in &rep.tenants {
+            let accounted = t.completed + t.failed + t.expired + t.shed + t.rejected;
+            if t.submitted != accounted {
+                return Err(format!(
+                    "tenant {}: submitted {} != completed {} + failed {} + expired {} + \
+                     shed {} + rejected {}",
+                    t.name, t.submitted, t.completed, t.failed, t.expired, t.shed, t.rejected
+                ));
+            }
+            total_submitted += t.submitted;
+        }
+        // The aggregate ledger closes as well, including the
+        // unknown-tenant rejection no tenant row saw.
+        let aggregate = rep.completed + rep.failed + rep.expired + rep.shed + rep.rejected;
+        if total_submitted + 1 != aggregate {
+            return Err(format!(
+                "aggregate: tenants submitted {total_submitted} + 1 unknown-tenant != \
+                 completed {} + failed {} + expired {} + shed {} + rejected {}",
+                rep.completed, rep.failed, rep.expired, rep.shed, rep.rejected
+            ));
+        }
+        Ok(())
+    });
+}
+
+/// Replay a hand-built trace of paired arrivals (both tenants get a
+/// request at the same instant) through a two-tenant runtime and return
+/// each tenant's goodput (completions within SLO).
+fn paired_overload_run(priorities: [u8; 2], seed: u64, requests: usize) -> [u64; 2] {
+    let slo_us = 60_000;
+    let classes = vec![
+        TenantClass::new("a", 1.0, priorities[0], slo_us),
+        TenantClass::new("b", 1.0, priorities[1], slo_us),
+    ];
+    // ~6x overload: 0.2 ms/row service against paired arrivals every
+    // 65 µs (≈ 30k rows/s offered vs ≈ 5k rows/s capacity).
+    let backend = SlowBackend { cycles_per_row: 200_000 };
+    let mut rt = ServingRuntime::with_tenants(
+        backend,
+        ServingConfig {
+            max_batch: 4,
+            max_wait_us: 500,
+            queue_cap: 24,
+            default_slo_us: slo_us,
+            cache_budget_bytes: 1 << 20,
+            plan_cache_budget_bytes: 1 << 20,
+            pipeline_devices: 2,
+            max_backlog_us: 10_000,
+        },
+        classes,
+    );
+    let mut now = 0u64;
+    let mut phase = seed;
+    let trace: Vec<GenRequest> = (0..requests)
+        .flat_map(|_| {
+            // Deterministic jittered gap from the seed (splitmix-style),
+            // identical whichever tenant holds the higher priority.
+            phase = phase.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            now += 40 + (phase >> 59); // 40..72 µs
+            let f = (phase >> 32) as f32 / u32::MAX as f32;
+            [0usize, 1usize].map(|t| GenRequest {
+                tenant: t,
+                arrival_us: now,
+                precision: Precision::U8,
+                features: vec![f; IN_DIM],
+            })
+        })
+        .collect();
+    rt.replay(&trace);
+    let rep = rt.report();
+    [rep.tenants[0].completed_in_slo, rep.tenants[1].completed_in_slo]
+}
+
+/// Property 3: under identical arrivals, raising a tenant's priority
+/// never lowers its goodput — in either tenant-index orientation, so
+/// the queue's index tie-break cannot masquerade as priority.
+#[test]
+fn priority_monotonicity_under_overload() {
+    prop("overload-priority-monotonicity", 0x9121_07, 5, |g: &mut Gen| {
+        let seed = g.rng.next_u64();
+        let requests = 120 + g.rng.range(0, 80);
+        // Orientation 1: tenant 0 holds the high priority.
+        let hi_first = paired_overload_run([3, 1], seed, requests);
+        if hi_first[0] < hi_first[1] {
+            return Err(format!(
+                "tenant 0 at priority 3 got less goodput than tenant 1 at 1: {hi_first:?}"
+            ));
+        }
+        // Orientation 2: tenant 1 holds it (beats the index tie-break).
+        let hi_second = paired_overload_run([1, 3], seed, requests);
+        if hi_second[1] < hi_second[0] {
+            return Err(format!(
+                "tenant 1 at priority 3 got less goodput than tenant 0 at 1: {hi_second:?}"
+            ));
+        }
+        // And the high-priority seat itself is worth something: in at
+        // least one orientation it strictly beats the low seat (a
+        // scheduler that ignored priority entirely would tie both).
+        if hi_first[0] == hi_first[1] && hi_second[0] == hi_second[1] {
+            return Err(format!(
+                "priority never changed goodput under 6x overload: {hi_first:?} / {hi_second:?}"
+            ));
+        }
+        Ok(())
+    });
+}
+
+/// Invariant 4: far past the knee, degradation is graceful — shedding
+/// is ordered lowest-priority-first and the gold tenant's p99 stays
+/// within its SLO because execution backpressure bounds the execute
+/// leg. Deterministic scenario (gold:silver:free = 1:8:23 at ~6x the
+/// backend's capacity), the same shape as `bench_serving`'s sweep.
+#[test]
+fn graceful_degradation_past_the_knee() {
+    let gold_slo_us = 100_000;
+    let classes = vec![
+        TenantClass::new("gold", 1.0, 3, gold_slo_us),
+        TenantClass::new("silver", 8.0, 2, 4 * gold_slo_us),
+        TenantClass::new("free", 23.0, 1, 16 * gold_slo_us),
+    ];
+    // 1 ms/row ⇒ capacity ≈ 1 000 rows/s; offered 6 000/s.
+    let backend = SlowBackend { cycles_per_row: 1_000_000 };
+    let mut rt = ServingRuntime::with_tenants(
+        backend,
+        ServingConfig {
+            max_batch: 8,
+            max_wait_us: 1_000,
+            queue_cap: 64,
+            default_slo_us: gold_slo_us,
+            cache_budget_bytes: 1 << 20,
+            plan_cache_budget_bytes: 1 << 20,
+            pipeline_devices: 2,
+            max_backlog_us: 20_000,
+        },
+        classes.clone(),
+    );
+    let trace = generate(
+        &WorkloadSpec {
+            tenants: classes,
+            kind: ArrivalKind::Poisson,
+            offered_rate: 6_000.0,
+            burst: 1.0,
+            requests: 400,
+            seed: 20_26,
+        },
+        IN_DIM,
+    );
+    rt.replay(&trace);
+    let rep = rt.report();
+    let [gold, silver, free] = [&rep.tenants[0], &rep.tenants[1], &rep.tenants[2]];
+
+    assert!(rep.shed > 0, "6x overload against a 64-deep queue must shed");
+    assert!(
+        gold.shed_rate() <= silver.shed_rate() && silver.shed_rate() <= free.shed_rate(),
+        "shedding must hit the lowest priority hardest: gold {:.3} silver {:.3} free {:.3}",
+        gold.shed_rate(),
+        silver.shed_rate(),
+        free.shed_rate()
+    );
+    assert!(free.shed_rate() > 0.0, "the free tier must carry shed load");
+    let gold_p99 = gold.latency.as_ref().expect("gold completed work").p99_us;
+    assert!(
+        gold_p99 <= gold_slo_us as f64,
+        "gold p99 {gold_p99:.0} µs must stay within its {gold_slo_us} µs SLO past the knee"
+    );
+    assert!(
+        gold.goodput_rate() > 0.9,
+        "gold demand (≈ 0.2x capacity) fits; its goodput must survive overload: {:.3}",
+        gold.goodput_rate()
+    );
+}
+
+/// Invariant 5: cache partitions isolate tenants — a storming tenant
+/// churning its own partition leaves the other tenant's counters,
+/// residency and hit path untouched.
+#[test]
+fn cache_partition_isolation_under_storm() {
+    let spec = MlpSpec { dims: vec![16, 12, 4] };
+    let classes = vec![
+        TenantClass::new("steady", 1.0, 2, 1_000_000),
+        TenantClass::new("stormy", 1.0, 1, 1_000_000),
+    ];
+    // Partition budgets sized so the storm overflows its own packed
+    // partition: each tenant gets 1 KiB; the steady tenant's u8 set
+    // (two packed layers, ≈ 350 B) fits, the storm's three-precision
+    // set (≈ 1.7 KiB) cannot co-reside.
+    let backend = RustGemmBackend::new(versal_gemm::arch::vc1902(), spec.clone(), 5, 4);
+    let mut rt = ServingRuntime::with_tenants(
+        backend,
+        ServingConfig {
+            max_batch: 2,
+            max_wait_us: 0,
+            queue_cap: 64,
+            default_slo_us: 1_000_000,
+            cache_budget_bytes: 2 << 10,
+            plan_cache_budget_bytes: 1 << 20,
+            pipeline_devices: 1,
+            max_backlog_us: u64::MAX,
+        },
+        classes,
+    );
+    let x = vec![0.25f32; 16];
+
+    // Warm the steady tenant and snapshot its partition.
+    rt.submit_for(0, x.clone(), Precision::U8, 0).unwrap();
+    rt.drain(0);
+    rt.submit_for(0, x.clone(), Precision::U8, 10).unwrap();
+    rt.drain(10);
+    let before = rt.report().tenants[0].cache;
+    assert!(before.hits > 0, "warm steady tenant hits its own partition");
+    assert_eq!(before.evictions, 0, "steady working set fits its partition");
+
+    // Storm the other tenant across precisions to force evictions in
+    // its partition only.
+    for (i, prec) in [Precision::U8, Precision::I16, Precision::Bf16, Precision::U8]
+        .iter()
+        .cycle()
+        .take(12)
+        .enumerate()
+    {
+        rt.submit_for(1, x.clone(), *prec, 100 + i as u64).unwrap();
+        rt.drain(100 + i as u64);
+    }
+    let after = rt.report();
+    assert!(
+        after.tenants[1].cache.evictions > 0,
+        "the storm must overflow the stormy partition (else the test proves nothing): {:?}",
+        after.tenants[1].cache
+    );
+    let steady = after.tenants[0].cache;
+    assert_eq!(
+        (steady.hits, steady.misses, steady.evictions, steady.bytes),
+        (before.hits, before.misses, before.evictions, before.bytes),
+        "the storm must not touch the steady tenant's partition counters"
+    );
+
+    // And the steady tenant's residency survived: the next request
+    // still hits.
+    rt.submit_for(0, x, Precision::U8, 1_000).unwrap();
+    rt.drain(1_000);
+    let final_steady = rt.report().tenants[0].cache;
+    assert!(
+        final_steady.hits > before.hits && final_steady.misses == before.misses,
+        "steady tenant still hits after the storm: {final_steady:?} vs {before:?}"
+    );
+}
