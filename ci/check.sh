@@ -26,6 +26,14 @@ echo "==> overload invariant battery (tests/serving_overload.rs, named so a fail
 # keeps the overload invariants visible as their own gate in CI logs.
 cargo test -q --test serving_overload
 
+echo "==> cross-engine parity battery (tests/engine_parity.rs across the PALLAS_POOL_SIZE matrix)"
+# The threads engine must be bit-identical to the sequential walk at
+# every pool width; each leg pins one width so a failure names it.
+for ps in 1 2 8; do
+    echo "    -- PALLAS_POOL_SIZE=${ps}"
+    PALLAS_POOL_SIZE="${ps}" cargo test -q --test engine_parity
+done
+
 echo "==> cargo clippy -- -D warnings"
 if cargo clippy --version >/dev/null 2>&1; then
     # missing_docs stays advisory while the long tail of pre-existing
@@ -119,5 +127,16 @@ for artifact in BENCH_plan.json BENCH_serving.json TRACE_serving.json; do
         || { echo "missing bench artifact rust/bench_results/${artifact}" >&2; exit 1; }
     echo "    rust/bench_results/${artifact}: $(wc -c < "rust/bench_results/${artifact}") bytes"
 done
+
+echo "==> wall-time columns present in bench artifacts (wall_ns next to the cycle metrics)"
+# The wall-time fields are first-class in the uploaded JSON but named
+# so bench-trend's cycle-domain gate never fires on machine noise.
+for artifact in BENCH_plan.json BENCH_serving.json; do
+    grep -q '"wall_ns"' "rust/bench_results/${artifact}" \
+        || { echo "missing wall_ns field in rust/bench_results/${artifact}" >&2; exit 1; }
+    echo "    rust/bench_results/${artifact}: wall_ns present"
+done
+grep -q '"goodput_sweep"' rust/bench_results/BENCH_serving.json \
+    || { echo "BENCH_serving.json must carry the goodput_sweep block in quick mode too" >&2; exit 1; }
 
 echo "CI checks passed."

@@ -2,17 +2,24 @@
 //! the Rust numeric hot path (EXPERIMENTS.md §Perf).
 //!
 //! Measures the packed 8×8 micro-kernel, the packing routines, and the
-//! full engines against the naive and ikj baselines.
+//! full engines (sequential reference and the work-stealing thread
+//! pool) against the naive and ikj baselines. Each timed row that has
+//! a cycle-model counterpart prints the **model cycles next to the
+//! host wall time** — the wall numbers are machine-dependent, the
+//! model cycles are not (and are identical across host engines).
 //!
 //! ```bash
 //! cargo bench --bench bench_microkernel
 //! ```
 
+use std::sync::Arc;
 use versal_gemm::arch::vc1902;
 use versal_gemm::gemm::baseline::{ikj_gemm, naive_gemm};
 use versal_gemm::gemm::{
     pack_a, pack_b, Ccp, GemmConfig, MatI32, MatU8, MicroKernel, ParallelGemm, MR, NR,
 };
+use versal_gemm::runtime::ThreadPool;
+use versal_gemm::sim::{AieTileModel, KernelMode};
 use versal_gemm::util::benchkit::{bench, black_box, BenchCfg};
 use versal_gemm::util::Pcg32;
 
@@ -32,7 +39,17 @@ fn main() {
         black_box(cr)
     });
     let macs = (MR * NR * kc) as f64;
-    println!("{}   {:.2} GMAC/s", r.human(), r.throughput(macs) / 1e9);
+    // The AIE model's cycle count for the same invocation — the
+    // machine-independent column next to the host wall time.
+    let arch = vc1902();
+    let model_cycles = AieTileModel::new(&arch)
+        .kernel_cycles(kc, KernelMode::Baseline, false)
+        .total;
+    println!(
+        "{}   {:.2} GMAC/s   [model: {model_cycles} AIE cycles]",
+        r.human(),
+        r.throughput(macs) / 1e9
+    );
 
     // 2. Packing routines.
     let big = MatU8::random(256, 2048, &mut rng);
@@ -47,10 +64,15 @@ fn main() {
     let macs = (m * k * n) as f64;
     let a = MatU8::random(m, k, &mut rng);
     let b = MatU8::random(k, n, &mut rng);
-    let arch = vc1902();
     let engine = ParallelGemm::new(&arch);
     let mut gcfg = GemmConfig::paper_table2(8);
     gcfg.ccp = Ccp { mc: 128, nc: 128, kc: 512 };
+    // Model cycles of the full problem at this CCP (identical for the
+    // sequential and pooled engines — the accounting is engine-free).
+    let engine_model_cycles = {
+        let mut c = MatI32::zeros(m, n);
+        engine.run(&gcfg, &a, &b, &mut c).unwrap().0.total
+    };
 
     let r = bench("naive_gemm/256x512x256", &cfg, || {
         let mut c = MatI32::zeros(m, n);
@@ -73,9 +95,27 @@ fn main() {
         black_box(c)
     });
     println!(
-        "{}   {:.2} GMAC/s  ({:.1}× vs naive)",
+        "{}   {:.2} GMAC/s  ({:.1}× vs naive)  [model: {engine_model_cycles} AIE cycles]",
         r.human(),
         r.throughput(macs) / 1e9,
         naive_t / r.per_iter.median
+    );
+
+    // 4. The same engine on the work-stealing host pool: bit-identical
+    // results and cycles, only the wall column moves.
+    let pooled = ParallelGemm::new(&arch).with_pool(Arc::new(ThreadPool::from_env()));
+    let seq_t = r.per_iter.median;
+    let r = bench("pooled_engine/256x512x256", &cfg, || {
+        let mut c = MatI32::zeros(m, n);
+        let (cy, _) = pooled.run(&gcfg, &a, &b, &mut c).unwrap();
+        assert_eq!(cy.total, engine_model_cycles, "pooled cycles must match sequential");
+        black_box(c)
+    });
+    println!(
+        "{}   {:.2} GMAC/s  ({:.1}× vs sequential engine)  [model: {engine_model_cycles} AIE \
+         cycles — unchanged]",
+        r.human(),
+        r.throughput(macs) / 1e9,
+        seq_t / r.per_iter.median
     );
 }

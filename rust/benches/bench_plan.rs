@@ -17,22 +17,33 @@
 //!    allocation-free path cannot drift from what executes.
 //!
 //! Each JSON case additionally records `lower_ns` (host wall-time of
-//! the materializing lowering) and `step_bytes` (the transient step
-//! vector's byte footprint — exactly what the streaming path avoids),
-//! so CI artifacts track the lowering cost the plan cache and the
-//! streaming fold exist to kill.
+//! the materializing lowering), `wall_ns` (host wall-time of the
+//! executed run — first-class next to model cycles, never gated by
+//! bench-trend) and `step_bytes` (the transient step vector's byte
+//! footprint — exactly what the streaming path avoids), so CI
+//! artifacts track the lowering cost the plan cache and the streaming
+//! fold exist to kill.
+//!
+//! A final `engine_speedup` block runs the same shape through the
+//! sequential reference engine and the 8-worker work-stealing pool:
+//! gate 5 asserts the pooled result is **bit-identical** (C, cycles)
+//! — the deterministic-reduction invariant — and, on machines with
+//! at least 4 hardware threads in full mode, that the pooled wall
+//! time beats sequential by >1.5×.
 //!
 //! ```bash
 //! cargo bench --bench bench_plan            # full (incl. Table-2 shape)
 //! cargo bench --bench bench_plan -- --quick # CI smoke
 //! ```
 
+use std::sync::Arc;
 use versal_gemm::arch::vc1902;
 use versal_gemm::gemm::precision::Bf16;
 use versal_gemm::gemm::{
     BlockedGemm, Ccp, Element, GemmConfig, Mat, ParallelGemm, Precision,
 };
 use versal_gemm::plan::{GemmPlan, PlanSpec};
+use versal_gemm::runtime::ThreadPool;
 use versal_gemm::util::Pcg32;
 
 struct Case {
@@ -46,6 +57,7 @@ struct Case {
     executed: u64,
     macs: u64,
     lower_ns: u64,
+    wall_ns: u64,
     step_bytes: u64,
     footprints: String,
 }
@@ -83,7 +95,9 @@ fn run_case<T: Element>(
     let b = Mat::<T>::random(k, n, &mut rng);
     let mut c = Mat::<T::Acc>::zeros(m, n);
     let engine = ParallelGemm::new(arch);
+    let t1 = std::time::Instant::now();
     let (executed, _) = engine.run_p::<T>(&cfg, &a, &b, &mut c).expect("bench case runs");
+    let wall_ns = t1.elapsed().as_nanos() as u64;
 
     // --- gate 1: predicted == executed, bit-for-bit ------------------
     assert_eq!(
@@ -129,9 +143,69 @@ fn run_case<T: Element>(
         executed: executed.total,
         macs: plan.total_macs(),
         lower_ns,
+        wall_ns,
         step_bytes,
         footprints,
     }
+}
+
+/// Gate 5: sequential vs 8-worker pooled engine on one shape — the
+/// pooled walk must be bit-identical in C and cycles; wall times are
+/// recorded (and, in full mode on ≥4-thread machines, gated >1.5×).
+struct EngineSpeedup {
+    m: usize,
+    n: usize,
+    k: usize,
+    workers: usize,
+    seq_wall_ns: u64,
+    pool_wall_ns: u64,
+}
+
+impl EngineSpeedup {
+    fn speedup(&self) -> f64 {
+        self.seq_wall_ns as f64 / self.pool_wall_ns.max(1) as f64
+    }
+}
+
+fn run_engine_speedup(
+    arch: &versal_gemm::VersalArch,
+    m: usize,
+    n: usize,
+    k: usize,
+    ccp: Ccp,
+    tiles: usize,
+    seed: u64,
+) -> EngineSpeedup {
+    let workers = 8;
+    let mut cfg = GemmConfig::paper_table2(tiles);
+    cfg.ccp = ccp;
+    let mut rng = Pcg32::new(seed);
+    let a = Mat::<u8>::random(m, k, &mut rng);
+    let b = Mat::<u8>::random(k, n, &mut rng);
+
+    let mut c_seq = Mat::<i32>::zeros(m, n);
+    let seq = ParallelGemm::new(arch);
+    let t0 = std::time::Instant::now();
+    let (cy_seq, st_seq) = seq.run_p::<u8>(&cfg, &a, &b, &mut c_seq).expect("seq runs");
+    let seq_wall_ns = t0.elapsed().as_nanos() as u64;
+
+    let mut c_pool = Mat::<i32>::zeros(m, n);
+    let pooled = ParallelGemm::new(arch).with_pool(Arc::new(ThreadPool::new(workers)));
+    let t1 = std::time::Instant::now();
+    let (cy_pool, st_pool) =
+        pooled.run_p::<u8>(&cfg, &a, &b, &mut c_pool).expect("pooled runs");
+    let pool_wall_ns = t1.elapsed().as_nanos() as u64;
+
+    // The deterministic-reduction invariant, asserted where the perf
+    // number is produced: a speedup that changes bits is no speedup.
+    assert_eq!(
+        c_seq.data, c_pool.data,
+        "GATE: pooled engine must be bit-identical to sequential on ({m}, {n}, {k})"
+    );
+    assert_eq!(cy_seq, cy_pool, "GATE: pooled cycle accounting must match sequential");
+    assert_eq!(st_seq, st_pool, "GATE: pooled tile stats must match sequential");
+
+    EngineSpeedup { m, n, k, workers, seq_wall_ns, pool_wall_ns }
 }
 
 fn main() {
@@ -165,19 +239,52 @@ fn main() {
     }
 
     println!(
-        "{:<28} {:>6} {:>14} {:>14} {:>12} {:>12} {:>12}",
-        "case", "tiles", "predicted", "executed", "MACs/cycle", "lower µs", "step bytes"
+        "{:<28} {:>6} {:>14} {:>14} {:>12} {:>12} {:>12} {:>12}",
+        "case", "tiles", "predicted", "executed", "MACs/cycle", "lower µs", "wall µs", "step bytes"
     );
     for c in &cases {
         println!(
-            "{:<28} {:>6} {:>14} {:>14} {:>12.1} {:>12.1} {:>12}",
+            "{:<28} {:>6} {:>14} {:>14} {:>12.1} {:>12.1} {:>12.1} {:>12}",
             format!("({}, {}, {}) {}", c.m, c.n, c.k, c.precision),
             c.tiles,
             c.predicted,
             c.executed,
             c.macs as f64 / c.executed as f64,
             c.lower_ns as f64 / 1e3,
+            c.wall_ns as f64 / 1e3,
             c.step_bytes,
+        );
+    }
+
+    // --- gate 5: cross-engine bit-exactness + wall-time speedup -------
+    // Quick mode keeps the block (and the bit-exactness gate) on a
+    // smaller shape so the JSON schema is identical; the >1.5× wall
+    // gate only arms on the full run's Table-2 shape, and only when
+    // the machine has the hardware threads to make it meaningful.
+    let sp = if quick {
+        run_engine_speedup(&arch, 96, 80, 160, small, 4, 0xE5)
+    } else {
+        run_engine_speedup(&arch, 256, 256, 2048, Ccp { mc: 256, nc: 256, kc: 2048 }, 8, 0xE5)
+    };
+    let hw_threads = std::thread::available_parallelism().map_or(1, |p| p.get());
+    println!(
+        "\nengine speedup ({}, {}, {}): sequential {:.2} ms, {}-worker pool {:.2} ms \
+         — {:.2}x (bit-identical C, cycles, stats)",
+        sp.m,
+        sp.n,
+        sp.k,
+        sp.seq_wall_ns as f64 / 1e6,
+        sp.workers,
+        sp.pool_wall_ns as f64 / 1e6,
+        sp.speedup()
+    );
+    if !quick && hw_threads >= 4 {
+        assert!(
+            sp.speedup() > 1.5,
+            "GATE: {}-worker pool must beat sequential by >1.5x on the Table-2 shape \
+             (got {:.2}x on a {hw_threads}-thread host)",
+            sp.workers,
+            sp.speedup()
         );
     }
 
@@ -188,7 +295,8 @@ fn main() {
             format!(
                 "{{\"m\":{},\"n\":{},\"k\":{},\"precision\":\"{}\",\"mc\":{},\"nc\":{},\"kc\":{},\
                  \"tiles\":{},\"predicted_cycles\":{},\"executed_cycles\":{},\"macs\":{},\
-                 \"macs_per_cycle\":{:.4},\"lower_ns\":{},\"step_bytes\":{},\"footprints\":[{}]}}",
+                 \"macs_per_cycle\":{:.4},\"lower_ns\":{},\"wall_ns\":{},\"step_bytes\":{},\
+                 \"footprints\":[{}]}}",
                 c.m,
                 c.n,
                 c.k,
@@ -202,14 +310,21 @@ fn main() {
                 c.macs,
                 c.macs as f64 / c.executed as f64,
                 c.lower_ns,
+                c.wall_ns,
                 c.step_bytes,
                 c.footprints
             )
         })
         .collect::<Vec<_>>()
         .join(",");
+    // Wall-time fields deliberately do not end in "cycles": bench-trend
+    // gates the cycle domain only, and host wall time is machine-noise.
     let json = format!(
-        "{{\"bench\":\"plan\",\"quick\":{quick},\"parity\":\"exact\",\"cases\":[{json_cases}]}}\n"
+        "{{\"bench\":\"plan\",\"schema\":\"plan-v2\",\"quick\":{quick},\"parity\":\"exact\",\
+         \"engine_speedup\":{{\"m\":{},\"n\":{},\"k\":{},\"workers\":{},\
+         \"seq_wall_ns\":{},\"pool_wall_ns\":{},\"speedup\":{:.4},\"bit_exact\":true}},\
+         \"cases\":[{json_cases}]}}\n",
+        sp.m, sp.n, sp.k, sp.workers, sp.seq_wall_ns, sp.pool_wall_ns, sp.speedup()
     );
     let dir = std::path::PathBuf::from(
         std::env::var_os("VERSAL_BENCH_RESULTS").unwrap_or_else(|| "bench_results".into()),
@@ -219,7 +334,7 @@ fn main() {
     std::fs::write(&path, &json).expect("write BENCH_plan.json");
     println!("\nwrote {}", path.display());
     println!(
-        "all plan gates passed (predicted == executed and streaming == materialized \
-         on every case)."
+        "all plan gates passed (predicted == executed, streaming == materialized, \
+         pooled engine bit-identical on every case)."
     );
 }

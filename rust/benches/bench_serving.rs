@@ -22,9 +22,16 @@
 //!    even at 16x the calibrated capacity.
 //!
 //! The runtime is deterministic (logical clock + calibrated cycle
-//! models), so these gates are CI-stable; the lowering *wall-time* is
-//! reported in `BENCH_serving.json` but gated on the deterministic
-//! lowering counts.
+//! models), so these gates are CI-stable; host *wall-time* (`wall_ns`
+//! per mode, plus the lowering `plan_lower_ns`) is reported in
+//! `BENCH_serving.json` but gated on the deterministic counts only.
+//!
+//! `--quick` runs a **one-point** goodput sweep (the light-load point)
+//! instead of the five-point overload curve, so the `goodput_sweep`
+//! block — and the whole JSON schema — is identical between quick and
+//! full runs; the overload-shape gates (collapse, shed ordering, gold
+//! p99) only arm on the full sweep, which is the only run that drives
+//! past the knee.
 //!
 //! ```bash
 //! cargo bench --bench bench_serving            # full (wave = 256 rows)
@@ -113,10 +120,13 @@ fn goodput_sweep(spec: &MlpSpec, tiles: usize, quick: bool) -> (Vec<SweepPoint>,
         TenantClass::new("free", 23.0, 1, 16 * gold_slo_us),
     ];
 
-    let loads = [0.05, 0.25, 1.0, 4.0, 16.0];
+    // Quick keeps only the light-load point: the sweep block (and the
+    // JSON schema) stays identical, while the overload points — the
+    // expensive ones — run in full mode only.
+    let loads: &[f64] = if quick { &[0.05] } else { &[0.05, 0.25, 1.0, 4.0, 16.0] };
     let requests = if quick { 256 } else { 768 };
     let mut points = Vec::new();
-    for &load_x in &loads {
+    for &load_x in loads {
         let offered_rps = load_x * capacity_rps;
         let backend = RustGemmBackend::new(vc1902(), spec.clone(), 9, tiles);
         let mut rt = ServingRuntime::with_tenants(
@@ -175,11 +185,13 @@ fn goodput_sweep(spec: &MlpSpec, tiles: usize, quick: bool) -> (Vec<SweepPoint>,
 }
 
 /// Drive two identical waves through a runtime; returns the outcomes'
-/// logits per wave plus the final report.
+/// logits per wave plus the final report and the host wall time of
+/// the whole replay (first-class next to the simulated cycles).
 fn two_waves(
     rt: &mut ServingRuntime<RustGemmBackend>,
     wave_features: &[Vec<f32>],
-) -> (Vec<Vec<f32>>, Vec<Vec<f32>>, ServingReport) {
+) -> (Vec<Vec<f32>>, Vec<Vec<f32>>, ServingReport, u64) {
+    let t0 = std::time::Instant::now();
     let mut serve_wave = |now: u64| -> Vec<Vec<f32>> {
         for f in wave_features {
             rt.submit(f.clone(), Precision::U8, now).expect("admit");
@@ -188,10 +200,11 @@ fn two_waves(
     };
     let w1 = serve_wave(0);
     let w2 = serve_wave(1_000);
-    (w1, w2, rt.report())
+    let wall_ns = t0.elapsed().as_nanos() as u64;
+    (w1, w2, rt.report(), wall_ns)
 }
 
-fn json_row(label: &str, r: &ServingReport) -> String {
+fn json_row(label: &str, r: &ServingReport, wall_ns: u64) -> String {
     // The flat fields are the historical trend surface (what
     // `versal-gemm bench-trend` diffs against older artifacts); the
     // nested "metrics" object is the full unified registry snapshot —
@@ -203,7 +216,7 @@ fn json_row(label: &str, r: &ServingReport) -> String {
          \"pipelined_cycles\":{},\"sequential_cycles\":{},\
          \"cache_hits\":{},\"cache_misses\":{},\
          \"plan_cache_hits\":{},\"plan_cache_misses\":{},\
-         \"plans_lowered\":{},\"plan_lower_ns\":{},\"metrics\":{}}}",
+         \"plans_lowered\":{},\"plan_lower_ns\":{},\"wall_ns\":{wall_ns},\"metrics\":{}}}",
         r.completed,
         r.batches,
         r.pack_cycles,
@@ -245,7 +258,7 @@ fn main() {
 
     // --- A: continuous batching, packed + plan caches on --------------
     let mut batched = runtime(&spec, tiles, wave, 256 << 20, 8 << 20, 2, 4 * wave);
-    let (wave1, wave2, rep_a) = two_waves(&mut batched, &wave_features);
+    let (wave1, wave2, rep_a, wall_a) = two_waves(&mut batched, &wave_features);
     assert_eq!(wave1.len(), wave);
     assert_eq!(wave2.len(), wave);
     for (a, b) in wave1.iter().zip(&wave2) {
@@ -259,19 +272,22 @@ fn main() {
 
     // --- B: sequential uncached dispatch of the identical trace ------
     let mut sequential = runtime(&spec, tiles, 1, 0, 0, 1, 4 * wave);
-    let (_, _, rep_b) = two_waves(&mut sequential, &wave_features);
+    let (_, _, rep_b, wall_b) = two_waves(&mut sequential, &wave_features);
     assert_eq!(rep_b.completed, rep_a.completed, "same request count both sides");
     assert_eq!(rep_b.cache.hits, 0, "budget 0 ⇒ nothing is ever resident");
 
     // --- C: caches as in A, but the plan cache off (re-lower/batch) --
     let mut relower = runtime(&spec, tiles, wave, 256 << 20, 0, 2, 4 * wave);
-    let (wave1_c, wave2_c, rep_c) = two_waves(&mut relower, &wave_features);
+    let (wave1_c, wave2_c, rep_c, wall_c) = two_waves(&mut relower, &wave_features);
 
-    println!("batched + cached (pipelined makespan):");
+    println!("batched + cached (pipelined makespan, host wall {:.2} ms):", wall_a as f64 / 1e6);
     println!("{}", report::serving_table(&rep_a).to_text());
-    println!("sequential uncached (serialised makespan):");
+    println!("sequential uncached (serialised makespan, host wall {:.2} ms):", wall_b as f64 / 1e6);
     println!("{}", report::serving_table(&rep_b).to_text());
-    println!("batched + cached, plan cache OFF (re-lower per batch):");
+    println!(
+        "batched + cached, plan cache OFF (re-lower per batch, host wall {:.2} ms):",
+        wall_c as f64 / 1e6
+    );
     println!("{}", report::serving_table(&rep_c).to_text());
 
     // --- the throughput gate -----------------------------------------
@@ -347,6 +363,9 @@ fn main() {
     println!("  saturation knee: {knee}x calibrated capacity");
 
     // --- the overload gates -------------------------------------------
+    // The light-load gate holds on both sweeps; the overload-shape
+    // gates need the points past the knee, which only the full sweep
+    // drives (quick's one-point sweep is the light-load point).
     let first = sweep.first().expect("sweep is non-empty");
     let last = sweep.last().expect("sweep is non-empty");
     assert!(
@@ -355,32 +374,34 @@ fn main() {
         first.load_x,
         first.goodput_frac
     );
-    assert!(
-        last.goodput_frac <= 0.5,
-        "GATE: far past the knee ({}x) the goodput fraction must collapse: {:.3}",
-        last.load_x,
-        last.goodput_frac
-    );
-    assert!(
-        last.shed_rates[0] <= last.shed_rates[1] && last.shed_rates[1] <= last.shed_rates[2],
-        "GATE: shedding must hit the lowest priority hardest: gold {:.3} silver {:.3} free {:.3}",
-        last.shed_rates[0],
-        last.shed_rates[1],
-        last.shed_rates[2]
-    );
-    assert!(
-        last.shed_rates[2] > 0.0,
-        "GATE: overload at {}x must shed free-tier traffic",
-        last.load_x
-    );
-    assert!(
-        last.gold_p99_us <= last.gold_slo_us as f64,
-        "GATE: graceful degradation — gold p99 {:.0} µs must stay within its {} µs SLO \
-         even at {}x load",
-        last.gold_p99_us,
-        last.gold_slo_us,
-        last.load_x
-    );
+    if !quick {
+        assert!(
+            last.goodput_frac <= 0.5,
+            "GATE: far past the knee ({}x) the goodput fraction must collapse: {:.3}",
+            last.load_x,
+            last.goodput_frac
+        );
+        assert!(
+            last.shed_rates[0] <= last.shed_rates[1] && last.shed_rates[1] <= last.shed_rates[2],
+            "GATE: shedding must hit the lowest priority hardest: gold {:.3} silver {:.3} free {:.3}",
+            last.shed_rates[0],
+            last.shed_rates[1],
+            last.shed_rates[2]
+        );
+        assert!(
+            last.shed_rates[2] > 0.0,
+            "GATE: overload at {}x must shed free-tier traffic",
+            last.load_x
+        );
+        assert!(
+            last.gold_p99_us <= last.gold_slo_us as f64,
+            "GATE: graceful degradation — gold p99 {:.0} µs must stay within its {} µs SLO \
+             even at {}x load",
+            last.gold_p99_us,
+            last.gold_slo_us,
+            last.load_x
+        );
+    }
 
     // --- machine-readable artifact: BENCH_serving.json ----------------
     let sweep_rows: Vec<String> = sweep
@@ -406,13 +427,15 @@ fn main() {
             )
         })
         .collect();
+    // Wall-time fields end in "_ns", never "cycles": bench-trend gates
+    // the cycle domain only, and host wall time is machine-noise.
     let json = format!(
-        "{{\"bench\":\"serving\",\"schema\":\"serving-v2\",\"quick\":{quick},\
+        "{{\"bench\":\"serving\",\"schema\":\"serving-v3\",\"quick\":{quick},\
          \"wave_rows\":{wave},\"rows\":[{},{},{}],\
          \"goodput_sweep\":{{\"knee_load\":{knee},\"points\":[{}]}}}}\n",
-        json_row("batched_cached_plan_cache_on", &rep_a),
-        json_row("sequential_uncached", &rep_b),
-        json_row("batched_cached_plan_cache_off", &rep_c),
+        json_row("batched_cached_plan_cache_on", &rep_a, wall_a),
+        json_row("sequential_uncached", &rep_b, wall_b),
+        json_row("batched_cached_plan_cache_off", &rep_c, wall_c),
         sweep_rows.join(","),
     );
     let dir = std::path::PathBuf::from(

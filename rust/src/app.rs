@@ -9,10 +9,12 @@ use crate::coordinator::{
 use crate::dl::MlpSpec;
 use crate::gemm::ablation::{evaluate, LoopChoice};
 use crate::gemm::{Ccp, GemmConfig, MatI32, MatU8, ParallelGemm};
+use crate::runtime::ThreadPool;
 use crate::util::cli::Args;
 use crate::util::ini::Ini;
 use crate::util::tabulate::{Align, Table};
 use crate::util::Pcg32;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 const HELP: &str = "\
@@ -25,15 +27,22 @@ COMMANDS:
   table2   [--tiles 1,2,...]   regenerate Table 2 (strong scaling)
   table3                       regenerate Table 3 (micro-kernel ablations)
   gemm     --m M --n N --k K [--tiles T] [--seed S]
+           [--engine sequential|threads] [--workers W]
                                run a parallel GEMM, verify vs naive,
-                               report cycles + MACs/cycle
+                               report cycles + MACs/cycle. --engine
+                               threads executes the plan's independent
+                               blocks on a work-stealing host pool
+                               (--workers W; 0 = auto) with a pinned
+                               reduction order, so results and cycles
+                               are bit-identical to sequential — only
+                               host wall time changes
   ccp      [--elem-bytes B]    derive cache configuration parameters (§4.3)
   tune     --m M --n N --k K [--tiles T]
                                auto-tune CCPs for a problem shape (model-
                                driven search; extension of §4.3)
   plan     --m M --n N --k K [--precision u8|i8|i16|bf16] [--tiles T]
            [--mc MC --nc NC --kc KC] [--count-packing] [--prepacked]
-           [--cost-only] [--trace-out FILE]
+           [--cost-only] [--trace-out FILE] [--engine sequential|threads]
                                lower the problem to the unified execution
                                plan: the explicit L1/L2/L3 loop nest with
                                edge-trimmed extents, the packing steps and
@@ -46,7 +55,10 @@ COMMANDS:
                                materialized — O(1) memory per shape);
                                --trace-out writes the lowered plan's
                                pack/compute/release timeline as Chrome
-                               trace-event JSON (Perfetto-loadable)
+                               trace-event JSON (Perfetto-loadable).
+                               The plan and its predicted cycles are
+                               engine-independent (--engine is accepted
+                               for flag compatibility with gemm/serve)
   energy   [--tiles T]         energy estimate of the paper problem
                                (extension; pJ model over the breakdown)
   noc      [--tiles T]         NoC placement + multicast/fan-out costs
@@ -69,7 +81,8 @@ COMMANDS:
            [--arrival poisson|uniform|bursty|pareto|diurnal] [--burst F]
            [--tenants gold:1:3:20,silver:2:2:60,free:4:1:200]
            [--offered-load Q]
-           [--engine runtime|threads] [--workers W] [--trace-out FILE]
+           [--engine runtime|threads|coordinator] [--workers W]
+           [--trace-out FILE]
                                replay a synthetic mixed-precision request
                                trace through the continuous-batching
                                runtime (admission SLOs, fused same-
@@ -86,8 +99,13 @@ COMMANDS:
                                is printed. --offered-load aliases --rate;
                                --burst sets the bursty process's
                                burst:idle rate ratio. --engine threads
-                               runs the wall-clock threaded coordinator
-                               instead; --trace-out writes the
+                               runs the same deterministic runtime with
+                               GEMM numerics on the work-stealing host
+                               pool (--workers W; 0 = auto) — reports
+                               and traces are bit-identical to runtime;
+                               --engine coordinator runs the wall-clock
+                               threaded coordinator instead;
+                               --trace-out writes the
                                end-to-end request spans + pipeline stage
                                spans as Chrome trace-event JSON and
                                prints the unified metrics registry
@@ -106,6 +124,15 @@ COMMANDS:
 GLOBAL OPTIONS:
   --arch-config FILE           INI overrides for the architecture preset
 ";
+
+/// The host thread pool behind `--engine threads`: `--workers W` pins
+/// the crew size; `--workers 0` (the default) falls back to the
+/// `PALLAS_POOL_SIZE` environment variable, then to the machine's
+/// available parallelism.
+fn host_pool(args: &Args) -> Result<Arc<ThreadPool>, String> {
+    let workers: usize = args.get_num("workers", 0)?;
+    Ok(Arc::new(if workers == 0 { ThreadPool::from_env() } else { ThreadPool::new(workers) }))
+}
 
 fn load_arch(args: &Args) -> Result<VersalArch, String> {
     let base = vc1902();
@@ -236,7 +263,19 @@ fn cmd_gemm(arch: &VersalArch, args: &Args) -> Result<(), String> {
     let a = MatU8::random(m, k, &mut rng);
     let b = MatU8::random(k, n, &mut rng);
     let mut c = MatI32::zeros(m, n);
-    let engine = ParallelGemm::new(arch);
+    let (engine, engine_desc) = match args.get_or("engine", "sequential") {
+        "sequential" => (ParallelGemm::new(arch), "sequential".to_string()),
+        "threads" => {
+            let pool = host_pool(args)?;
+            let desc = format!("threads ({} pool workers)", pool.workers());
+            (ParallelGemm::new(arch).with_pool(pool), desc)
+        }
+        other => {
+            return Err(format!(
+                "unknown gemm engine {other:?} (want sequential|threads)"
+            ))
+        }
+    };
     let t0 = Instant::now();
     let (cycles, stats) = engine.run(&cfg, &a, &b, &mut c).map_err(|e| e.to_string())?;
     let host = t0.elapsed();
@@ -248,6 +287,7 @@ fn cmd_gemm(arch: &VersalArch, args: &Args) -> Result<(), String> {
     let macs = m as u64 * n as u64 * k as u64;
 
     println!("GEMM {m}x{k} · {k}x{n} on {tiles} AIE tiles, {}", cfg.ccp);
+    println!("  host engine: {engine_desc}  (cycle model is engine-independent)");
     println!("  numerics: max |Δ| vs naive = {diff}  ({})", if diff == 0 { "EXACT" } else { "MISMATCH" });
     println!("  simulated cycles: total {} ({})", cycles.total, crate::report::fmt_kcycles(cycles.total));
     println!(
@@ -327,6 +367,23 @@ fn cmd_plan(arch: &VersalArch, args: &Args) -> Result<(), String> {
             "--tiles must be in 1..={} for {}",
             arch.aie.n_tiles, arch.name
         ));
+    }
+
+    // The plan and its predicted schedule are engine-independent: both
+    // host engines execute this identical step stream and charge the
+    // identical cycle model. Accept (and validate) --engine anyway so
+    // `plan`/`gemm` invocations stay flag-compatible.
+    let plan_engine = args.get_or("engine", "sequential");
+    if !matches!(plan_engine, "sequential" | "threads") {
+        return Err(format!(
+            "unknown plan engine {plan_engine:?} (want sequential|threads)"
+        ));
+    }
+    if plan_engine == "threads" {
+        println!(
+            "note: the lowered plan and predicted cycles are engine-independent; \
+             --engine threads only changes host wall time at execution"
+        );
     }
 
     // Default geometry: the precision's feasible paper-shaped CCP, so
@@ -698,15 +755,24 @@ fn arrival_process(args: &Args, rate: f64) -> Result<ArrivalProcess, String> {
 
 fn cmd_serve(arch: &VersalArch, args: &Args) -> Result<(), String> {
     match args.get_or("engine", "runtime") {
-        "runtime" => cmd_serve_runtime(arch, args),
-        "threads" => cmd_serve_threads(arch, args),
-        other => Err(format!("unknown serve engine {other:?} (want runtime|threads)")),
+        "runtime" => cmd_serve_runtime(arch, args, false),
+        "threads" => cmd_serve_runtime(arch, args, true),
+        "coordinator" => cmd_serve_coordinator(arch, args),
+        other => Err(format!(
+            "unknown serve engine {other:?} (want runtime|threads|coordinator)"
+        )),
     }
 }
 
 /// Replay a synthetic mixed-precision trace through the deterministic
 /// continuous-batching runtime (logical clock, simulated cycles).
-fn cmd_serve_runtime(arch: &VersalArch, args: &Args) -> Result<(), String> {
+///
+/// `pooled` selects `--engine threads`: the same runtime, but fused
+/// batches execute their GEMM numerics on the work-stealing host pool.
+/// The deterministic-reduction invariant makes results, cycle
+/// accounting, reports and traces bit-identical to the sequential
+/// engine — only host wall time changes.
+fn cmd_serve_runtime(arch: &VersalArch, args: &Args, pooled: bool) -> Result<(), String> {
     let requests: usize = args.get_num("requests", 256)?;
     let rate: f64 = args.get_num("rate", 2000.0)?;
     let offered: f64 = args.get_num("offered-load", rate)?;
@@ -747,7 +813,7 @@ fn cmd_serve_runtime(arch: &VersalArch, args: &Args) -> Result<(), String> {
     if plan_cache_mb.is_nan() || plan_cache_mb < 0.0 {
         return Err("--plan-cache-mb must be non-negative (0 re-lowers per batch)".into());
     }
-    if args.get("workers").is_some() {
+    if !pooled && args.get("workers").is_some() {
         eprintln!("note: --workers applies to --engine threads; the runtime engine ignores it");
     }
     if classes.is_some() && args.get("mix").is_some() {
@@ -775,7 +841,16 @@ fn cmd_serve_runtime(arch: &VersalArch, args: &Args) -> Result<(), String> {
             .collect();
         println!("  tenants: {}", shares.join(", "));
     }
-    let backend = RustGemmBackend::new(arch.clone(), spec.clone(), seed, tiles);
+    let mut backend = RustGemmBackend::new(arch.clone(), spec.clone(), seed, tiles);
+    if pooled {
+        let pool = host_pool(args)?;
+        println!(
+            "  engine: threads ({} pool workers; deterministic reduction — results and \
+             cycles match --engine runtime bit for bit)",
+            pool.workers()
+        );
+        backend = backend.with_pool(pool);
+    }
     // A disabled tracer is a no-op through the whole runtime, so the
     // wiring is unconditional and only --trace-out pays for recording.
     let tracer = match args.get("trace-out") {
@@ -864,7 +939,12 @@ fn cmd_serve_runtime(arch: &VersalArch, args: &Args) -> Result<(), String> {
 }
 
 /// The wall-clock threaded coordinator (router + worker pool).
-fn cmd_serve_threads(arch: &VersalArch, args: &Args) -> Result<(), String> {
+///
+/// Unlike `runtime`/`threads`, this engine schedules on real time
+/// (arrival sleeps, channel hand-offs), so its numbers are
+/// machine-dependent — it demonstrates the serving topology rather
+/// than the deterministic cycle model.
+fn cmd_serve_coordinator(arch: &VersalArch, args: &Args) -> Result<(), String> {
     let requests: usize = args.get_num("requests", 256)?;
     let rate: f64 = args.get_num("rate", 2000.0)?;
     let batch: usize = args.get_num("batch", 8)?;
@@ -874,7 +954,8 @@ fn cmd_serve_threads(arch: &VersalArch, args: &Args) -> Result<(), String> {
     for flag in ["mix", "slo-ms", "cache-mb", "plan-cache-mb", "devices"] {
         if args.get(flag).is_some() {
             eprintln!(
-                "note: --{flag} applies to --engine runtime; the threads engine ignores it"
+                "note: --{flag} applies to --engine runtime|threads; the coordinator \
+                 engine ignores it"
             );
         }
     }
@@ -1221,9 +1302,31 @@ mod tests {
 
     #[test]
     fn serve_threads_engine_succeeds() {
+        // The pooled deterministic runtime: same report surface as
+        // --engine runtime, numerics on the host pool.
         assert_eq!(
             cli_main(argv(&[
                 "serve", "--engine", "threads", "--requests", "4", "--batch", "2",
+                "--workers", "1", "--tiles", "2", "--rate", "100000",
+            ])),
+            0
+        );
+        // Multi-worker pool and auto sizing (--workers 0) also serve.
+        assert_eq!(
+            cli_main(argv(&[
+                "serve", "--engine", "threads", "--requests", "4", "--batch", "2",
+                "--workers", "3", "--tiles", "2", "--rate", "100000",
+            ])),
+            0
+        );
+    }
+
+    #[test]
+    fn serve_coordinator_engine_succeeds() {
+        // The wall-clock router + worker-pool topology demo.
+        assert_eq!(
+            cli_main(argv(&[
+                "serve", "--engine", "coordinator", "--requests", "4", "--batch", "2",
                 "--workers", "1", "--tiles", "2", "--rate", "100000",
             ])),
             0
@@ -1267,6 +1370,29 @@ mod tests {
                             "--mc", "16", "--nc", "16", "--kc", "32"])),
             0
         );
+    }
+
+    #[test]
+    fn gemm_threads_engine_roundtrip_and_validates() {
+        // The pooled engine passes the same naive-oracle verification
+        // (exit 0 requires max |Δ| == 0), across a ragged shape.
+        assert_eq!(
+            cli_main(argv(&["gemm", "--m", "37", "--n", "29", "--k", "70", "--tiles", "3",
+                            "--mc", "16", "--nc", "16", "--kc", "32",
+                            "--engine", "threads", "--workers", "4"])),
+            0
+        );
+        // --workers 0 sizes the pool from the environment/machine.
+        assert_eq!(
+            cli_main(argv(&["gemm", "--m", "16", "--n", "16", "--k", "32", "--tiles", "2",
+                            "--mc", "16", "--nc", "16", "--kc", "32",
+                            "--engine", "threads", "--workers", "0"])),
+            0
+        );
+        // Unknown engines are usage errors for gemm and plan alike.
+        assert_eq!(cli_main(argv(&["gemm", "--engine", "warp"])), 2);
+        assert_eq!(cli_main(argv(&["plan", "--engine", "warp"])), 2);
+        assert_eq!(cli_main(argv(&["plan", "--engine", "threads"])), 0);
     }
 
     #[test]

@@ -8,8 +8,10 @@ use crate::dl::{Mlp, MlpSpec, PackedWeights, QuantLinear, TpMode};
 use crate::gemm::{prepack_b, Ccp, GemmConfig, ParallelGemm, Precision, PrecisionPolicy, PrepackedB};
 use crate::obs::{TrackId, Tracer, CLUSTER_PID};
 use crate::plan::{Buffer, GemmPlan};
+use crate::runtime::ThreadPool;
 use anyhow::Result;
 use std::collections::HashMap;
+use std::sync::Arc;
 
 /// Single cluster-critical-path track: shard compute and the layer
 /// boundary collectives interleave on one timeline, mirroring how
@@ -175,6 +177,7 @@ pub struct RustGemmBackend {
     mlp: Mlp,
     cfg: GemmConfig,
     policy: PrecisionPolicy,
+    pool: Option<Arc<ThreadPool>>,
 }
 
 impl RustGemmBackend {
@@ -188,12 +191,22 @@ impl RustGemmBackend {
         let mut cfg = GemmConfig::paper_table2(tiles);
         // Serving shapes are small; a modest CCP avoids degenerate blocks.
         cfg.ccp = crate::gemm::Ccp { mc: 256, nc: 256, kc: 1024 };
-        RustGemmBackend { arch, mlp, cfg, policy: PrecisionPolicy::default() }
+        RustGemmBackend { arch, mlp, cfg, policy: PrecisionPolicy::default(), pool: None }
     }
 
     /// Builder: serve every layer under `policy` instead of fixed u8.
     pub fn with_policy(mut self, policy: PrecisionPolicy) -> RustGemmBackend {
         self.policy = policy;
+        self
+    }
+
+    /// Builder: run every fused batch's GEMM numerics on a host
+    /// [`ThreadPool`] (the `--engine threads` serving path). Logits,
+    /// cycle accounting and therefore the report fingerprint are
+    /// bit-identical to the sequential default — pinned by the serving
+    /// determinism test in `tests/serving_overload.rs`.
+    pub fn with_pool(mut self, pool: Arc<ThreadPool>) -> RustGemmBackend {
+        self.pool = Some(pool);
         self
     }
 
@@ -258,8 +271,14 @@ impl BatchedBackend for RustGemmBackend {
             // The cached plan IS the executed schedule: the walk replays
             // the resident handle's step stream, no per-batch spec
             // re-validation or re-lowering.
-            let (y, cy) =
-                layer.forward_prepacked_with_plan(rows, &h, pw, &cached.plan, &self.arch)?;
+            let (y, cy) = layer.forward_prepacked_with_plan_pooled(
+                rows,
+                &h,
+                pw,
+                &cached.plan,
+                &self.arch,
+                self.pool.as_ref(),
+            )?;
             h = y;
             // One mapping from the plan-executed breakdown to the
             // pipeline stages, shared with every other backend.

@@ -9,9 +9,21 @@ use crate::gemm::{
 };
 use crate::plan::GemmPlan;
 use crate::quant::{quantized_linear, sym_dequantize, QTensor, SymQTensor};
+use crate::runtime::ThreadPool;
 use crate::sim::CycleBreakdown;
 use crate::util::split::partition;
 use anyhow::Result;
+use std::sync::Arc;
+
+/// The GEMM engine a serving forward runs on: sequential by default,
+/// pool-backed when the caller threads a host [`ThreadPool`] through
+/// (bit-exact either way — the engine contract).
+fn engine<'a>(arch: &'a VersalArch, pool: Option<&Arc<ThreadPool>>) -> ParallelGemm<'a> {
+    match pool {
+        Some(p) => ParallelGemm::new(arch).with_pool(Arc::clone(p)),
+        None => ParallelGemm::new(arch),
+    }
+}
 
 /// Activation function applied after the affine transform.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -214,8 +226,24 @@ impl QuantLinear {
         arch: &VersalArch,
         cfg: &GemmConfig,
     ) -> Result<(Vec<f32>, u64)> {
+        self.forward_prec_pooled(batch, x, prec, arch, cfg, None)
+    }
+
+    /// [`QuantLinear::forward_prec`] with an optional host [`ThreadPool`]:
+    /// `Some` runs the layer's GEMM on the threaded engine (bit-exact
+    /// with the sequential default, same cycle accounting), `None` is
+    /// exactly `forward_prec`.
+    pub fn forward_prec_pooled(
+        &self,
+        batch: usize,
+        x: &[f32],
+        prec: Precision,
+        arch: &VersalArch,
+        cfg: &GemmConfig,
+        pool: Option<&Arc<ThreadPool>>,
+    ) -> Result<(Vec<f32>, u64)> {
         assert_eq!(x.len(), batch * self.in_dim, "input shape mismatch");
-        let engine = ParallelGemm::new(arch);
+        let engine = engine(arch, pool);
         let mut cfg = cfg.clone();
         cfg.ccp = Self::serving_ccp(arch, &cfg, prec);
         let mut cycles = 0u64;
@@ -332,9 +360,25 @@ impl QuantLinear {
         arch: &VersalArch,
         cfg: &GemmConfig,
     ) -> Result<(Vec<f32>, CycleBreakdown)> {
+        self.forward_prepacked_pooled(batch, x, packed, arch, cfg, None)
+    }
+
+    /// [`QuantLinear::forward_prepacked`] with an optional host
+    /// [`ThreadPool`]: `Some` runs the warm-cache GEMM on the threaded
+    /// engine (bit-exact, identical breakdown), `None` is exactly
+    /// `forward_prepacked`.
+    pub fn forward_prepacked_pooled(
+        &self,
+        batch: usize,
+        x: &[f32],
+        packed: &PackedWeights,
+        arch: &VersalArch,
+        cfg: &GemmConfig,
+        pool: Option<&Arc<ThreadPool>>,
+    ) -> Result<(Vec<f32>, CycleBreakdown)> {
         assert_eq!(x.len(), batch * self.in_dim, "input shape mismatch");
         let prec = packed.precision();
-        let engine = ParallelGemm::new(arch);
+        let engine = engine(arch, pool);
         let mut cfg = cfg.clone();
         cfg.ccp = Self::serving_ccp(arch, &cfg, prec);
         let mut cycles = CycleBreakdown::zero();
@@ -408,8 +452,27 @@ impl QuantLinear {
         plan: &GemmPlan,
         arch: &VersalArch,
     ) -> Result<(Vec<f32>, CycleBreakdown)> {
+        self.forward_prepacked_with_plan_pooled(batch, x, packed, plan, arch, None)
+    }
+
+    /// [`QuantLinear::forward_prepacked_with_plan`] with an optional host
+    /// [`ThreadPool`] — the serving runtime's `--engine threads` hot
+    /// path. `Some` replays the cached plan's numerics on the pool while
+    /// the cycle accounting stays the engine-independent sequential fold,
+    /// so logits, cycle breakdown and (therefore) the serving report
+    /// fingerprint are bit-identical to the sequential engine; `None` is
+    /// exactly `forward_prepacked_with_plan`.
+    pub fn forward_prepacked_with_plan_pooled(
+        &self,
+        batch: usize,
+        x: &[f32],
+        packed: &PackedWeights,
+        plan: &GemmPlan,
+        arch: &VersalArch,
+        pool: Option<&Arc<ThreadPool>>,
+    ) -> Result<(Vec<f32>, CycleBreakdown)> {
         assert_eq!(x.len(), batch * self.in_dim, "input shape mismatch");
-        let engine = ParallelGemm::new(arch);
+        let engine = engine(arch, pool);
         let mut cycles = CycleBreakdown::zero();
         let mut y: Vec<f32> = match packed {
             PackedWeights::U8(pb) => {

@@ -13,24 +13,42 @@
 
 use super::microkernel::{ElemKernel, MR, NR};
 use super::packing::{pack_a, pack_b, PackedA, PackedB};
-use super::precision::{Accum, Element};
+use super::parallel::{pooled_plan_numerics, BOperand};
+use super::precision::{Accum, Element, Precision};
 use super::types::{Mat, MatI32, MatU8};
 use super::GemmConfig;
 use crate::arch::{MemLevel, VersalArch};
 use crate::plan::{Buffer, PlanSpec, PlanStep};
+use crate::runtime::ThreadPool;
 use crate::sim::{AieTileModel, CycleBreakdown, Gmio, KernelMode, MemPool, Stream};
 use anyhow::{ensure, Result};
+use std::sync::Arc;
 
 /// Sequential blocked GEMM bound to an architecture.
 pub struct BlockedGemm<'a> {
     arch: &'a VersalArch,
     tile: AieTileModel<'a>,
+    pool: Option<Arc<ThreadPool>>,
 }
 
 impl<'a> BlockedGemm<'a> {
     /// A driver bound to (and borrowing) an architecture description.
+    /// The default engine walks the plan sequentially on the calling
+    /// thread — the bit-exact reference.
     pub fn new(arch: &'a VersalArch) -> BlockedGemm<'a> {
-        BlockedGemm { arch, tile: AieTileModel::new(arch) }
+        BlockedGemm { arch, tile: AieTileModel::new(arch), pool: None }
+    }
+
+    /// Attach a host [`ThreadPool`]: numerics run as disjoint row-band
+    /// tasks (shared with [`super::ParallelGemm`] — both engines execute
+    /// the same plan IR), while the single-tile cycle accounting and the
+    /// live [`MemPool`] feasibility checks walk the step stream on the
+    /// calling thread, driven by the geometry each step carries. Results
+    /// and cycles are bit-exact with the sequential walk (pinned by
+    /// `tests/engine_parity.rs`).
+    pub fn with_pool(mut self, pool: Arc<ThreadPool>) -> BlockedGemm<'a> {
+        self.pool = Some(pool);
+        self
     }
 
     /// C += A·B with the given configuration (the paper's u8 pipeline).
@@ -83,6 +101,12 @@ impl<'a> BlockedGemm<'a> {
         // driver never materializes a step vector.
         let spec = PlanSpec::new(self.arch, cfg, a.rows, b.cols, a.cols, prec, false)
             .map_err(|e| anyhow::anyhow!(e.to_string()))?;
+        if let Some(pool) = &self.pool {
+            let steps: Vec<PlanStep> = spec.walk().collect();
+            let cycles = self.account_steps(cfg, &steps, prec)?;
+            pooled_plan_numerics(pool, cfg.ccp.kc, cfg.ccp.nc, &steps, a, BOperand::Dense(b), c)?;
+            return Ok(cycles);
+        }
         let stream = Stream::new(self.arch);
         let gmio = Gmio::new(self.arch);
         let kernel = ElemKernel::<T>::new();
@@ -166,6 +190,73 @@ impl<'a> BlockedGemm<'a> {
                         uram.freea("Ac").map_err(anyhow::Error::msg)?;
                         ac = None;
                     }
+                },
+            }
+        }
+        if cfg.count_packing {
+            cycles.total += cycles.packing;
+        }
+        Ok(cycles)
+    }
+
+    /// The single-tile cycle accounting and live memory-feasibility walk
+    /// of a plan, with no numerics: the same fold as the sequential
+    /// driver above, driven entirely by step-carried geometry (`p.bytes`,
+    /// `panels_a`, `panels_b`, `kc_eff`, `br_panel_bytes` — each pinned
+    /// equal to the real packed-buffer values by the sequential walk's
+    /// `debug_assert`s). The threaded engine runs this on the calling
+    /// thread while the pool executes the numerics, so the breakdown is
+    /// engine-independent by construction.
+    fn account_steps(
+        &self,
+        cfg: &GemmConfig,
+        steps: &[PlanStep],
+        prec: Precision,
+    ) -> Result<CycleBreakdown> {
+        let stream = Stream::new(self.arch);
+        let gmio = Gmio::new(self.arch);
+        let mut cycles = CycleBreakdown::zero();
+        let mut bram = MemPool::new(MemLevel::BlockRam, self.arch.mem_capacity(MemLevel::BlockRam));
+        let mut uram = MemPool::new(MemLevel::UltraRam, self.arch.mem_capacity(MemLevel::UltraRam));
+        let mut local =
+            MemPool::new(MemLevel::LocalMemory, self.arch.mem_capacity(MemLevel::LocalMemory));
+        for &step in steps {
+            match step {
+                PlanStep::Pack(p) => {
+                    if cfg.count_packing && p.charged {
+                        cycles.packing += p.cycles(self.arch);
+                    }
+                    match p.buffer {
+                        Buffer::Bc => bram.alloc("Bc", p.bytes).map_err(anyhow::Error::msg)?,
+                        Buffer::Ac => uram.alloc("Ac", p.bytes).map_err(anyhow::Error::msg)?,
+                    }
+                }
+                PlanStep::Compute(cs) => {
+                    let kc_cycles = cs.kc_eff.next_multiple_of(AieTileModel::UNROLL);
+                    let loop_cycles = self.tile.kernel_cycles_p(
+                        kc_cycles,
+                        KernelMode::Baseline,
+                        cfg.steady_stream,
+                        prec,
+                    );
+                    let cr_cycles = gmio.cr_roundtrip_cycles_p(1, prec);
+                    for _pj in 0..cs.panels_b {
+                        local.alloc("Br", cs.br_panel_bytes).map_err(anyhow::Error::msg)?;
+                        let br_cost = stream.br_copy_cycles(cs.br_panel_bytes);
+                        cycles.br_copy += br_cost;
+                        cycles.total += br_cost;
+                        for _pi in 0..cs.panels_a {
+                            cycles.ar_stream += loop_cycles.ar_stream;
+                            cycles.arithmetic += loop_cycles.arithmetic;
+                            cycles.copy_cr += cr_cycles;
+                            cycles.total += loop_cycles.total + cr_cycles;
+                        }
+                        local.freea("Br").map_err(anyhow::Error::msg)?;
+                    }
+                }
+                PlanStep::Release(r) => match r.buffer {
+                    Buffer::Bc => bram.freea("Bc").map_err(anyhow::Error::msg)?,
+                    Buffer::Ac => uram.freea("Ac").map_err(anyhow::Error::msg)?,
                 },
             }
         }
@@ -341,6 +432,32 @@ mod tests {
         let cy16 = g.run_p::<i16>(&cfg(16, 16, 32), &a16, &b16, &mut c16).unwrap();
         assert!(cy16.total > cy8.total, "i16 {} !> u8 {}", cy16.total, cy8.total);
         assert!(cy16.br_copy > cy8.br_copy, "2-byte Br panels cost more");
+    }
+
+    #[test]
+    fn pooled_engine_matches_sequential_bit_exactly() {
+        // Threaded-engine contract for the single-tile driver: same C,
+        // same cycle breakdown, ragged shape, packing charges counted.
+        let a9 = vc1902();
+        let pool = Arc::new(ThreadPool::new(4));
+        let seq = BlockedGemm::new(&a9);
+        let par = BlockedGemm::new(&a9).with_pool(pool);
+        let mut rng = Pcg32::new(16);
+        let a = MatU8::random(37, 53, &mut rng);
+        let b = MatU8::random(53, 29, &mut rng);
+        let mut cfg_on = cfg(16, 16, 32);
+        cfg_on.count_packing = true;
+        let mut c1 = MatI32::zeros(37, 29);
+        let mut c2 = MatI32::zeros(37, 29);
+        let cy1 = seq.run(&cfg_on, &a, &b, &mut c1).unwrap();
+        let cy2 = par.run(&cfg_on, &a, &b, &mut c2).unwrap();
+        assert_eq!(c1.max_abs_diff(&c2), 0, "pooled numerics must be bit-exact");
+        assert_eq!(cy1, cy2, "cycle accounting is engine-independent");
+        // Infeasible CCPs still fail up front on the pooled path.
+        let mut c3 = MatI32::zeros(8, 8);
+        assert!(par
+            .run(&cfg(8, 8, 8192), &MatU8::zeros(8, 8), &MatU8::zeros(8, 8), &mut c3)
+            .is_err());
     }
 
     #[test]

@@ -31,9 +31,12 @@ use super::types::{Mat, MatI32, MatU8};
 use super::GemmConfig;
 use crate::arch::VersalArch;
 use crate::obs::{PlanSpanEmitter, Tracer};
-use crate::plan::{Buffer, GemmPlan, PlanSpec, PlanStep};
+use crate::plan::{Buffer, ComputeStep, GemmPlan, PlanSpec, PlanStep};
+use crate::runtime::ThreadPool;
 use crate::sim::{AieTileModel, CycleBreakdown, Gmio, KernelMode, Multicast, Stream};
 use anyhow::{ensure, Result};
+use std::collections::{BTreeMap, HashMap};
+use std::sync::Arc;
 
 /// Per-tile execution statistics.
 #[derive(Debug, Clone, Default, PartialEq, Eq)]
@@ -69,12 +72,37 @@ pub struct ParallelGemm<'a> {
     arch: &'a VersalArch,
     tile: AieTileModel<'a>,
     tracer: Tracer,
+    pool: Option<Arc<ThreadPool>>,
 }
 
 impl<'a> ParallelGemm<'a> {
     /// A driver bound to (and borrowing) an architecture description.
+    /// The default host execution engine is **sequential**: one plan
+    /// walk on the calling thread, the bit-exact reference every other
+    /// engine is pinned against. Opt into the threaded engine with
+    /// [`ParallelGemm::with_pool`].
     pub fn new(arch: &'a VersalArch) -> ParallelGemm<'a> {
-        ParallelGemm { arch, tile: AieTileModel::new(arch), tracer: Tracer::disabled() }
+        ParallelGemm {
+            arch,
+            tile: AieTileModel::new(arch),
+            tracer: Tracer::disabled(),
+            pool: None,
+        }
+    }
+
+    /// Attach a host [`ThreadPool`]: plan numerics then execute as
+    /// independent row-band tasks on the pool (`--engine threads`),
+    /// while the cycle-domain accounting stays the engine-independent
+    /// sequential fold — results, cycles and tile stats are bit-exact
+    /// with the sequential engine for every precision (pinned by
+    /// `tests/engine_parity.rs`). The deterministic-reduction invariant:
+    /// each C element is owned by exactly one band task, and every task
+    /// applies its pc-blocks in ascending plan order, so bf16/f32
+    /// accumulation order is fixed by block index, never by completion
+    /// order.
+    pub fn with_pool(mut self, pool: Arc<ThreadPool>) -> ParallelGemm<'a> {
+        self.pool = Some(pool);
+        self
     }
 
     /// Attach a tracer: every plan execution then emits its step span
@@ -158,7 +186,15 @@ impl<'a> ParallelGemm<'a> {
 
         let spec = PlanSpec::new(self.arch, cfg, a.rows, b.cols, a.cols, prec, false)
             .map_err(|e| anyhow::anyhow!(e.to_string()))?;
-        Ok(self.run_plan(cfg, spec.walk(), a, BOperand::Dense(b), c))
+        match &self.pool {
+            Some(pool) => {
+                let steps: Vec<PlanStep> = spec.walk().collect();
+                let acct = self.account_plan(cfg, steps.iter().copied(), prec);
+                pooled_plan_numerics(pool, cfg.ccp.kc, cfg.ccp.nc, &steps, a, BOperand::Dense(b), c)?;
+                Ok(acct)
+            }
+            None => Ok(self.run_plan(cfg, spec.walk(), a, BOperand::Dense(b), c)),
+        }
     }
 
     /// [`ParallelGemm::run`] with a pre-packed B operand (the paper's u8
@@ -226,7 +262,23 @@ impl<'a> ParallelGemm<'a> {
 
         let spec = PlanSpec::new(self.arch, cfg, a.rows, pb.cols, a.cols, prec, true)
             .map_err(|e| anyhow::anyhow!(e.to_string()))?;
-        Ok(self.run_plan(cfg, spec.walk(), a, BOperand::Prepacked(pb), c))
+        match &self.pool {
+            Some(pool) => {
+                let steps: Vec<PlanStep> = spec.walk().collect();
+                let acct = self.account_plan(cfg, steps.iter().copied(), prec);
+                pooled_plan_numerics(
+                    pool,
+                    cfg.ccp.kc,
+                    cfg.ccp.nc,
+                    &steps,
+                    a,
+                    BOperand::Prepacked(pb),
+                    c,
+                )?;
+                Ok(acct)
+            }
+            None => Ok(self.run_plan(cfg, spec.walk(), a, BOperand::Prepacked(pb), c)),
+        }
     }
 
     /// [`ParallelGemm::run_prepacked_p`] driven by an already-lowered
@@ -270,7 +322,22 @@ impl<'a> ParallelGemm<'a> {
             plan.ccp.nc
         );
         let cfg = plan.gemm_config();
-        Ok(self.run_plan(&cfg, plan.steps_iter(), a, BOperand::Prepacked(pb), c))
+        match &self.pool {
+            Some(pool) => {
+                let acct = self.account_plan(&cfg, plan.steps_iter(), T::PRECISION);
+                pooled_plan_numerics(
+                    pool,
+                    cfg.ccp.kc,
+                    cfg.ccp.nc,
+                    plan.steps(),
+                    a,
+                    BOperand::Prepacked(pb),
+                    c,
+                )?;
+                Ok(acct)
+            }
+            None => Ok(self.run_plan(&cfg, plan.steps_iter(), a, BOperand::Prepacked(pb), c)),
+        }
     }
 
     /// Execute a plan's step stream: numerics + tile accounting + the
@@ -355,7 +422,7 @@ impl<'a> ParallelGemm<'a> {
                     let bcr = bc.get().expect("plan packs Bc before computing");
                     let acr = ac.as_ref().expect("plan packs Ac before computing");
 
-                    // ----- numerics (host threads over pi row-panels) ----
+                    // ----- numerics (sequential reference walk) ----------
                     compute_block(&kernel, acr, bcr, c, cs.ic, cs.jc, cs.kc_eff);
 
                     // ----- tile accounting: jr panels round-robin --------
@@ -380,6 +447,85 @@ impl<'a> ParallelGemm<'a> {
                     Buffer::Bc => bc = BcSlot::Empty,
                     Buffer::Ac => ac = None,
                 },
+            }
+        }
+        if cfg.count_packing {
+            cycles.total += cycles.packing;
+        }
+        if let Some(em) = em {
+            let traced = em.finish();
+            debug_assert_eq!(
+                traced, cycles.total,
+                "traced span stream must account every executed cycle"
+            );
+        }
+        (cycles, stats)
+    }
+
+    /// The cycle-domain accounting of a plan walk, with no numerics: the
+    /// same fold as [`ParallelGemm::run_plan`] — packing charges, tile
+    /// stats, the lockstep loop-L4 schedule and the span stream — driven
+    /// entirely by the geometry each step carries (`panels_a`,
+    /// `panels_b`, `kc_eff`, `br_panel_bytes`). The step-carried fields
+    /// equal the packed buffers' real geometry (pinned by the plan/driver
+    /// parity gates), so this fold is bit-identical to the sequential
+    /// walk's accounting. The threaded engine runs it on the calling
+    /// thread while the pool executes the numerics — which is why cycle
+    /// accounting is engine-independent by construction.
+    fn account_plan(
+        &self,
+        cfg: &GemmConfig,
+        steps: impl Iterator<Item = PlanStep>,
+        prec: Precision,
+    ) -> (CycleBreakdown, Vec<TileStats>) {
+        let mut cycles = CycleBreakdown::zero();
+        let mut stats: Vec<TileStats> =
+            (0..cfg.tiles).map(|t| TileStats { tile: t, ..Default::default() }).collect();
+        let mut em = self
+            .tracer
+            .enabled()
+            .then(|| PlanSpanEmitter::new(&self.tracer, self.arch, cfg.count_packing));
+        for step in steps {
+            if let Some(em) = em.as_mut() {
+                let compute_cycles = match &step {
+                    PlanStep::Compute(cs) => {
+                        self.block_schedule_p(
+                            cfg,
+                            cs.panels_b,
+                            cs.panels_a,
+                            cs.kc_eff,
+                            cs.br_panel_bytes,
+                            prec,
+                        )
+                        .total
+                    }
+                    _ => 0,
+                };
+                em.step(&step, compute_cycles);
+            }
+            match step {
+                PlanStep::Pack(p) => {
+                    if cfg.count_packing && p.charged {
+                        cycles.packing += p.cycles(self.arch);
+                    }
+                }
+                PlanStep::Compute(cs) => {
+                    for pj in 0..cs.panels_b {
+                        let t = pj % cfg.tiles;
+                        stats[t].br_copies += 1;
+                        stats[t].kernels += cs.panels_a as u64;
+                        stats[t].macs += cs.panels_a as u64 * MicroKernel::macs(cs.kc_eff);
+                    }
+                    cycles += self.block_schedule_p(
+                        cfg,
+                        cs.panels_b,
+                        cs.panels_a,
+                        cs.kc_eff,
+                        cs.br_panel_bytes,
+                        prec,
+                    );
+                }
+                PlanStep::Release(_) => {}
             }
         }
         if cfg.count_packing {
@@ -477,7 +623,7 @@ impl<'a> ParallelGemm<'a> {
 /// The B operand source of a plan execution: packed on the fly from the
 /// dense matrix (the plan's Bc pack steps), or fetched from a prepacked
 /// weight-stationary image (the steps become fetches, never charged).
-enum BOperand<'b, T: Element> {
+pub(crate) enum BOperand<'b, T: Element> {
     Dense(&'b Mat<T>),
     Prepacked(&'b PrepackedB<T>),
 }
@@ -509,11 +655,9 @@ impl<T: Element> BcSlot<'_, T> {
 }
 
 /// Numerics of one (mc, nc, kc) block: every (pi, pj) micro-kernel, at
-/// any element precision.
-///
-/// Row-panels write disjoint row bands of C, so the band slices can be
-/// handed to host threads safely; threading engages only when the block
-/// carries enough MACs to amortise spawn cost (§Perf).
+/// any element precision. Strictly sequential — this is the bit-exact
+/// reference walk the threaded engine is pinned against; parallel
+/// numerics live in [`pooled_plan_numerics`].
 fn compute_block<T: Element>(
     kernel: &ElemKernel<T>,
     ac: &super::packing::PackedA<T>,
@@ -523,15 +667,11 @@ fn compute_block<T: Element>(
     jc: usize,
     kc_eff: usize,
 ) {
-    const PARALLEL_MACS_THRESHOLD: u64 = 1 << 22;
     let c_cols = c.cols;
     let c_rows = c.rows;
     let block_rows_end = (ic + ac.mc).min(c_rows);
     let cblock = &mut c.data[ic * c_cols..block_rows_end * c_cols];
-    let total_macs = ac.n_panels as u64 * bc.n_panels as u64 * ElemKernel::<T>::macs(kc_eff);
-
-    // One row-panel's worth of work, writing into its private row band.
-    let do_panel = |pi: usize, band: &mut [T::Acc]| {
+    for (pi, band) in cblock.chunks_mut(MR * c_cols).enumerate() {
         let band_rows = band.len() / c_cols;
         let ar = ac.panel(pi);
         for pj in 0..bc.n_panels {
@@ -548,38 +688,171 @@ fn compute_block<T: Element>(
                 }
             }
         }
+    }
+}
+
+/// One (ic block, pi row-panel) band task of the threaded engine: the
+/// band's absolute row origin and its row count (clipped at the matrix
+/// edge for a ragged final panel).
+struct Band {
+    ic: usize,
+    pi: usize,
+    row0: usize,
+    rows: usize,
+}
+
+/// Execute a plan's numerics on the host [`ThreadPool`], bit-exact with
+/// the sequential walk for every precision.
+///
+/// The partition: each (ic block, pi row-panel) pair becomes one task
+/// owning an `mr`-row band of C. Bands are pairwise disjoint (ic blocks
+/// tile the rows; panels tile each block), so C is split into per-band
+/// `&mut` slices up front and each element of C is written by exactly
+/// one task. Within a task, compute steps are applied in plan order —
+/// jc outer, pc ascending — which for any fixed C element reproduces
+/// the sequential walk's ascending-pc accumulation exactly. Integer
+/// accumulation is associative anyway; for bf16 (f32 accumulators) the
+/// order pin is what makes the engines bit-identical rather than merely
+/// close.
+///
+/// Before the compute wave, every distinct Ac (and, for a dense B,
+/// every distinct Bc) pack is materialized once on the pool, keyed by
+/// its (row_off, col_off); the plan's repeated pack steps for a
+/// resident buffer dedup onto the same image, and `pack_a`/`pack_b` are
+/// deterministic, so packed bytes match the sequential walk's.
+///
+/// Shared by [`ParallelGemm`] and [`super::BlockedGemm`] (both engines
+/// execute the same plan IR, so one band executor serves both).
+pub(crate) fn pooled_plan_numerics<T: Element>(
+    pool: &ThreadPool,
+    ccp_kc: usize,
+    ccp_nc: usize,
+    steps: &[PlanStep],
+    a: &Mat<T>,
+    bop: BOperand<'_, T>,
+    c: &mut Mat<T::Acc>,
+) -> Result<()> {
+    let kernel = ElemKernel::<T>::new();
+    let c_cols = c.cols;
+    let c_rows = c.rows;
+
+    // ---- pre-pack wave: each distinct block packed once, in parallel --
+    let mut ac_keys: Vec<(usize, usize, usize, usize)> = Vec::new();
+    let mut ac_index: HashMap<(usize, usize), usize> = HashMap::new();
+    let mut bc_keys: Vec<(usize, usize, usize, usize)> = Vec::new();
+    let mut bc_index: HashMap<(usize, usize), usize> = HashMap::new();
+    for step in steps {
+        if let PlanStep::Pack(p) = step {
+            match p.buffer {
+                Buffer::Ac => {
+                    ac_index.entry((p.row_off, p.col_off)).or_insert_with(|| {
+                        ac_keys.push((p.row_off, p.col_off, p.rows, p.cols));
+                        ac_keys.len() - 1
+                    });
+                }
+                Buffer::Bc => {
+                    if matches!(bop, BOperand::Dense(_)) {
+                        bc_index.entry((p.row_off, p.col_off)).or_insert_with(|| {
+                            bc_keys.push((p.row_off, p.col_off, p.rows, p.cols));
+                            bc_keys.len() - 1
+                        });
+                    }
+                }
+            }
+        }
+    }
+    let ac_packs: Vec<PackedA<T>> = pool.run(
+        ac_keys
+            .iter()
+            .map(|&(r0, c0, rows, cols)| move || pack_a(a, r0, c0, rows, cols))
+            .collect(),
+    )?;
+    let bc_packs: Vec<PackedB<T>> = match bop {
+        BOperand::Dense(b) => pool.run(
+            bc_keys
+                .iter()
+                .map(|&(r0, c0, rows, cols)| move || pack_b(b, r0, c0, rows, cols))
+                .collect(),
+        )?,
+        BOperand::Prepacked(_) => Vec::new(),
     };
 
-    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
-    if total_macs < PARALLEL_MACS_THRESHOLD || threads < 2 || ac.n_panels < 2 {
-        for (pi, band) in cblock.chunks_mut(MR * c_cols).enumerate() {
-            do_panel(pi, band);
-        }
-    } else {
-        std::thread::scope(|s| {
-            let mut handles = Vec::new();
-            // Group row bands into `threads` contiguous chunks.
-            let bands: Vec<(usize, &mut [T::Acc])> =
-                cblock.chunks_mut(MR * c_cols).enumerate().collect();
-            let per = bands.len().div_ceil(threads);
-            let mut it = bands.into_iter();
-            loop {
-                let group: Vec<(usize, &mut [T::Acc])> = it.by_ref().take(per).collect();
-                if group.is_empty() {
-                    break;
-                }
-                let do_panel = &do_panel;
-                handles.push(s.spawn(move || {
-                    for (pi, band) in group {
-                        do_panel(pi, band);
-                    }
-                }));
-            }
-            for h in handles {
-                h.join().expect("panel worker panicked");
-            }
-        });
+    // ---- compute wave: disjoint (ic, pi) row bands --------------------
+    let computes: Vec<ComputeStep> = steps
+        .iter()
+        .filter_map(|s| match s {
+            PlanStep::Compute(cs) => Some(*cs),
+            _ => None,
+        })
+        .collect();
+    // ic blocks tile [0, m) contiguously; BTreeMap orders them by row.
+    let mut blocks: BTreeMap<usize, usize> = BTreeMap::new();
+    for cs in &computes {
+        blocks.insert(cs.ic, cs.mc_eff);
     }
+    let mut bands: Vec<Band> = Vec::new();
+    for (&ic, &mc_eff) in &blocks {
+        let mc_eff = mc_eff.min(c_rows - ic.min(c_rows));
+        for pi in 0..mc_eff.div_ceil(MR) {
+            bands.push(Band {
+                ic,
+                pi,
+                row0: ic + pi * MR,
+                rows: MR.min(mc_eff - pi * MR),
+            });
+        }
+    }
+    // Carve C into the bands' disjoint row slices, in ascending order.
+    let mut slices: Vec<&mut [T::Acc]> = Vec::with_capacity(bands.len());
+    let mut rest: &mut [T::Acc] = &mut c.data;
+    let mut row_cursor = 0usize;
+    for band in &bands {
+        debug_assert!(band.row0 >= row_cursor, "bands must ascend disjointly");
+        let skip = (band.row0 - row_cursor) * c_cols;
+        let (_, tail) = std::mem::take(&mut rest).split_at_mut(skip);
+        let (mine, tail) = tail.split_at_mut(band.rows * c_cols);
+        slices.push(mine);
+        rest = tail;
+        row_cursor = band.row0 + band.rows;
+    }
+
+    let computes = &computes;
+    let ac_index = &ac_index;
+    let ac_packs = &ac_packs;
+    let bc_index = &bc_index;
+    let bc_packs = &bc_packs;
+    let tasks: Vec<_> = bands
+        .iter()
+        .zip(slices)
+        .map(|(band, out)| {
+            let (ic, pi, rows) = (band.ic, band.pi, band.rows);
+            move || {
+                for cs in computes.iter().filter(|cs| cs.ic == ic) {
+                    let acr = &ac_packs[ac_index[&(cs.ic, cs.pc)]];
+                    let bcr: &PackedB<T> = match bop {
+                        BOperand::Dense(_) => &bc_packs[bc_index[&(cs.pc, cs.jc)]],
+                        BOperand::Prepacked(pb) => pb.block(cs.pc / ccp_kc, cs.jc / ccp_nc),
+                    };
+                    let ar = acr.panel(pi);
+                    for pj in 0..bcr.n_panels {
+                        let br = bcr.panel(pj);
+                        let mut cr = [T::Acc::zero(); MR * NR];
+                        kernel.run(cs.kc_eff, ar, br, &mut cr);
+                        let col0 = cs.jc + pj * NR;
+                        let cols = NR.min(c_cols.saturating_sub(col0));
+                        for i in 0..rows {
+                            let row = &mut out[i * c_cols + col0..i * c_cols + col0 + cols];
+                            for (j, r) in row.iter_mut().enumerate() {
+                                *r = r.acc_add(cr[i * NR + j]);
+                            }
+                        }
+                    }
+                }
+            }
+        })
+        .collect();
+    pool.run(tasks)?;
+    Ok(())
 }
 
 #[cfg(test)]
@@ -908,5 +1181,39 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn pooled_engine_matches_sequential_bit_exactly() {
+        // The threaded engine's core contract, in miniature (the full
+        // fuzzed battery lives in tests/engine_parity.rs): same C, same
+        // cycles, same stats as the sequential walk, dense and
+        // prepacked, with packing charges counted.
+        use crate::gemm::packing::prepack_b;
+        let arch = vc1902();
+        let pool = Arc::new(ThreadPool::new(4));
+        let seq = ParallelGemm::new(&arch);
+        let par = ParallelGemm::new(&arch).with_pool(pool);
+        let mut rng = Pcg32::new(0x61);
+        let (m, k, n) = (37, 70, 29);
+        let mut cfg = cfg(3, 16, 16, 32);
+        cfg.count_packing = true;
+        let a = MatU8::random(m, k, &mut rng);
+        let b = MatU8::random(k, n, &mut rng);
+        let mut c1 = MatI32::zeros(m, n);
+        let mut c2 = MatI32::zeros(m, n);
+        let (cy1, st1) = seq.run(&cfg, &a, &b, &mut c1).unwrap();
+        let (cy2, st2) = par.run(&cfg, &a, &b, &mut c2).unwrap();
+        assert_eq!(c1.max_abs_diff(&c2), 0, "pooled numerics must be bit-exact");
+        assert_eq!(cy1, cy2, "cycle accounting is engine-independent");
+        assert_eq!(st1, st2, "tile stats are engine-independent");
+        let pb = prepack_b(&b, cfg.ccp.kc, cfg.ccp.nc);
+        let plan = GemmPlan::lower(&arch, &cfg, m, n, k, Precision::U8, true).unwrap();
+        let mut c3 = MatI32::zeros(m, n);
+        let mut c4 = MatI32::zeros(m, n);
+        let (cy3, _) = seq.run_prepacked_plan_p(&plan, &a, &pb, &mut c3).unwrap();
+        let (cy4, _) = par.run_prepacked_plan_p(&plan, &a, &pb, &mut c4).unwrap();
+        assert_eq!(c3.max_abs_diff(&c4), 0, "pooled plan-handle path must be bit-exact");
+        assert_eq!(cy3, cy4);
     }
 }

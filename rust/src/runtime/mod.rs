@@ -15,11 +15,17 @@
 //! `xla` crate needs network access and a libxla install, neither of
 //! which exists in the offline build environment. The artifact registry
 //! (pure filesystem) is always available.
+//!
+//! The module also hosts the host-side execution machinery that is
+//! *not* PJRT-specific: [`pool::ThreadPool`], the vendored
+//! work-stealing thread pool behind the `--engine threads` CLI seam.
 
 mod artifact;
 #[cfg(feature = "pjrt")]
 mod pjrt;
+pub mod pool;
 
 pub use artifact::{artifacts_dir, ArtifactId, ArtifactRegistry};
 #[cfg(feature = "pjrt")]
 pub use pjrt::Engine;
+pub use pool::ThreadPool;

@@ -1,0 +1,460 @@
+//! Vendored work-stealing thread pool — the host-side execution engine
+//! behind `--engine threads`.
+//!
+//! Two surfaces, one scheduler discipline:
+//!
+//! - [`ThreadPool::run`] executes a batch of **borrowing** closures on
+//!   scoped worker threads and returns their results **in task-index
+//!   order** (never completion order). This is the GEMM drivers' entry
+//!   point: per-block numerics tasks borrow the operand matrices and
+//!   disjoint output bands, and the index-ordered return is what pins
+//!   the deterministic reduction the cross-engine parity battery
+//!   asserts (`tests/engine_parity.rs`).
+//! - [`ThreadPool::spawn`] + [`ThreadPool::shutdown`] manage a crew of
+//!   **resident** workers for `'static` fire-and-forget jobs (future
+//!   background packing / prefetch). Shutdown is graceful: jobs still
+//!   queued at shutdown time are drained, never dropped.
+//!
+//! Scheduling is work-stealing in both cases: each worker owns a deque,
+//! pops its own front, and steals from a victim's back when it runs
+//! dry, so uneven task sizes rebalance without a central dispatcher.
+//! The pool is dependency-free (`std` only — no crossbeam, no rayon)
+//! and contains no `unsafe`.
+//!
+//! A panicking task never hangs the pool: the panic is caught on the
+//! worker, recorded, and surfaced as an error from [`ThreadPool::run`]
+//! (or [`ThreadPool::shutdown`]) after every sibling task finished.
+
+use anyhow::{anyhow, Result};
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::time::Duration;
+
+/// Environment variable overriding the default worker count of
+/// [`ThreadPool::from_env`] (the CI parity matrix sets it to 1/2/8).
+pub const POOL_SIZE_ENV: &str = "PALLAS_POOL_SIZE";
+
+/// A fire-and-forget job for the resident crew.
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Lock a mutex, ignoring poisoning: every task body runs under
+/// `catch_unwind`, so a poisoned lock only means a *caught* panic
+/// happened on another worker — the protected data (a deque of indices
+/// or a result slot) is still structurally valid.
+fn lock_ignore_poison<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Render a caught panic payload for the error message.
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// Pop a task index: own deque first (front), then steal from the other
+/// workers' backs, scanning round-robin from the next worker up.
+fn grab(queues: &[Mutex<VecDeque<usize>>], me: usize) -> Option<usize> {
+    if let Some(i) = lock_ignore_poison(&queues[me]).pop_front() {
+        return Some(i);
+    }
+    let w = queues.len();
+    for d in 1..w {
+        if let Some(i) = lock_ignore_poison(&queues[(me + d) % w]).pop_back() {
+            return Some(i);
+        }
+    }
+    None
+}
+
+/// Shared state of the resident (`'static` job) crew.
+struct ResidentShared {
+    /// Single injector queue — resident jobs are fire-and-forget, so
+    /// FIFO fairness matters more than locality here.
+    queue: Mutex<VecDeque<Job>>,
+    /// Wakes idle workers on new work or shutdown.
+    cv: Condvar,
+    /// Set once by [`ThreadPool::shutdown`]; workers drain the queue and
+    /// then exit.
+    shutdown: AtomicBool,
+    /// Jobs that ran to completion (including panicked ones).
+    completed: AtomicUsize,
+    /// Jobs whose closure panicked (caught, counted, surfaced at
+    /// shutdown).
+    panicked: AtomicUsize,
+}
+
+/// The resident crew: shared state + join handles.
+struct Resident {
+    shared: Arc<ResidentShared>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+fn resident_worker(shared: Arc<ResidentShared>) {
+    loop {
+        let job = {
+            let mut q = lock_ignore_poison(&shared.queue);
+            loop {
+                if let Some(j) = q.pop_front() {
+                    break Some(j);
+                }
+                if shared.shutdown.load(Ordering::SeqCst) {
+                    break None;
+                }
+                // Timed wait: belt-and-braces against a lost wakeup —
+                // correctness never depends on the notify arriving.
+                let (guard, _) = shared
+                    .cv
+                    .wait_timeout(q, Duration::from_millis(10))
+                    .unwrap_or_else(|e| e.into_inner());
+                q = guard;
+            }
+        };
+        match job {
+            Some(j) => {
+                if catch_unwind(AssertUnwindSafe(j)).is_err() {
+                    shared.panicked.fetch_add(1, Ordering::SeqCst);
+                }
+                shared.completed.fetch_add(1, Ordering::SeqCst);
+            }
+            None => break,
+        }
+    }
+}
+
+/// A work-stealing host thread pool (see the module docs). Cheap to
+/// construct: scoped workers are spawned per [`ThreadPool::run`] call
+/// and resident workers lazily on first [`ThreadPool::spawn`].
+pub struct ThreadPool {
+    workers: usize,
+    resident: Mutex<Option<Resident>>,
+}
+
+impl std::fmt::Debug for ThreadPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ThreadPool").field("workers", &self.workers).finish()
+    }
+}
+
+impl ThreadPool {
+    /// A pool of `workers` worker threads. `0` and `1` are valid
+    /// degenerate configs: every task runs inline on the calling
+    /// thread, in task-index order — the sequential reference the
+    /// parity battery compares against.
+    pub fn new(workers: usize) -> ThreadPool {
+        ThreadPool { workers, resident: Mutex::new(None) }
+    }
+
+    /// Worker count from [`POOL_SIZE_ENV`] when set (and parseable),
+    /// otherwise the host's available parallelism.
+    pub fn from_env() -> ThreadPool {
+        let workers = std::env::var(POOL_SIZE_ENV)
+            .ok()
+            .and_then(|v| v.trim().parse::<usize>().ok())
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+            });
+        ThreadPool::new(workers)
+    }
+
+    /// The configured worker count.
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Execute every task and return the results **in task-index
+    /// order**, regardless of which worker finished when — the
+    /// deterministic reduce order the engines rely on.
+    ///
+    /// Task indices are dealt round-robin into per-worker deques;
+    /// workers pop their own front and steal from a victim's back when
+    /// they run dry, so uneven task durations rebalance. With 0 or 1
+    /// workers (or a single task) everything runs inline on the caller.
+    ///
+    /// If any task panics, the panic is caught on its worker, the
+    /// remaining tasks still run, and `run` returns an error naming the
+    /// first panicking task — it never hangs the join.
+    pub fn run<T, F>(&self, tasks: Vec<F>) -> Result<Vec<T>>
+    where
+        T: Send,
+        F: FnOnce() -> T + Send,
+    {
+        let n = tasks.len();
+        if self.workers <= 1 || n <= 1 {
+            let mut out = Vec::with_capacity(n);
+            for t in tasks {
+                out.push(t());
+            }
+            return Ok(out);
+        }
+        let w = self.workers.min(n);
+        // Deal indices round-robin so early tasks spread across workers.
+        let queues: Vec<Mutex<VecDeque<usize>>> =
+            (0..w).map(|wi| Mutex::new((wi..n).step_by(w).collect())).collect();
+        let slots: Vec<Mutex<Option<F>>> =
+            tasks.into_iter().map(|t| Mutex::new(Some(t))).collect();
+        let results: Vec<Mutex<Option<std::thread::Result<T>>>> =
+            (0..n).map(|_| Mutex::new(None)).collect();
+
+        std::thread::scope(|s| {
+            for me in 0..w {
+                let queues = &queues;
+                let slots = &slots;
+                let results = &results;
+                s.spawn(move || {
+                    while let Some(idx) = grab(queues, me) {
+                        if let Some(task) = lock_ignore_poison(&slots[idx]).take() {
+                            let r = catch_unwind(AssertUnwindSafe(task));
+                            *lock_ignore_poison(&results[idx]) = Some(r);
+                        }
+                    }
+                });
+            }
+        });
+
+        let mut out = Vec::with_capacity(n);
+        for (i, slot) in results.into_iter().enumerate() {
+            match slot.into_inner().unwrap_or_else(|e| e.into_inner()) {
+                Some(Ok(v)) => out.push(v),
+                Some(Err(p)) => {
+                    return Err(anyhow!("pool task {i} panicked: {}", panic_message(&*p)))
+                }
+                None => return Err(anyhow!("pool task {i} was never executed")),
+            }
+        }
+        Ok(out)
+    }
+
+    /// Enqueue a `'static` fire-and-forget job on the resident crew
+    /// (spawned lazily on first use). With 0 workers the job runs
+    /// inline — the degenerate config stays functional.
+    pub fn spawn(&self, job: impl FnOnce() + Send + 'static) {
+        if self.workers == 0 {
+            job();
+            return;
+        }
+        let mut guard = lock_ignore_poison(&self.resident);
+        let resident = guard.get_or_insert_with(|| {
+            let shared = Arc::new(ResidentShared {
+                queue: Mutex::new(VecDeque::new()),
+                cv: Condvar::new(),
+                shutdown: AtomicBool::new(false),
+                completed: AtomicUsize::new(0),
+                panicked: AtomicUsize::new(0),
+            });
+            let handles = (0..self.workers)
+                .map(|_| {
+                    let shared = Arc::clone(&shared);
+                    std::thread::spawn(move || resident_worker(shared))
+                })
+                .collect();
+            Resident { shared, handles }
+        });
+        lock_ignore_poison(&resident.shared.queue).push_back(Box::new(job));
+        resident.shared.cv.notify_one();
+    }
+
+    /// Gracefully stop the resident crew: jobs still queued are drained
+    /// (never dropped), workers join, and the total completed-job count
+    /// is returned. An error reports how many jobs panicked (after the
+    /// drain — a panic never hangs the join). Idempotent: with no crew
+    /// running this returns `Ok(0)`; a later [`ThreadPool::spawn`]
+    /// starts a fresh crew.
+    pub fn shutdown(&self) -> Result<usize> {
+        let resident = match lock_ignore_poison(&self.resident).take() {
+            Some(r) => r,
+            None => return Ok(0),
+        };
+        resident.shared.shutdown.store(true, Ordering::SeqCst);
+        resident.shared.cv.notify_all();
+        for h in resident.handles {
+            let _ = h.join();
+        }
+        let completed = resident.shared.completed.load(Ordering::SeqCst);
+        let panicked = resident.shared.panicked.load(Ordering::SeqCst);
+        if panicked > 0 {
+            return Err(anyhow!(
+                "{panicked} of {completed} resident pool jobs panicked"
+            ));
+        }
+        Ok(completed)
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        // Best-effort graceful drain; panics were already counted.
+        let _ = self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn results_come_back_in_task_index_order() {
+        let pool = ThreadPool::new(4);
+        // Reverse-sorted sleep times: late indices finish first, yet the
+        // result vector must be index-ordered.
+        let tasks: Vec<_> = (0..16u64)
+            .map(|i| {
+                move || {
+                    std::thread::sleep(Duration::from_micros((16 - i) * 50));
+                    i * i
+                }
+            })
+            .collect();
+        let out = pool.run(tasks).unwrap();
+        assert_eq!(out, (0..16u64).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn work_stealing_picks_up_uneven_chunk_sizes() {
+        // 2 workers, tasks dealt round-robin: worker 0 gets all the slow
+        // tasks (even indices), worker 1 all the fast ones. Without
+        // stealing the slow lane serialises; with stealing every task
+        // still completes and the busy counter proves both workers ran
+        // tasks from the slow lane's deque.
+        let pool = ThreadPool::new(2);
+        let ran = AtomicUsize::new(0);
+        let tasks: Vec<_> = (0..32)
+            .map(|i| {
+                let ran = &ran;
+                move || {
+                    if i % 2 == 0 {
+                        std::thread::sleep(Duration::from_millis(2));
+                    }
+                    ran.fetch_add(1, Ordering::SeqCst);
+                    i
+                }
+            })
+            .collect();
+        let out = pool.run(tasks).unwrap();
+        assert_eq!(ran.load(Ordering::SeqCst), 32, "every task executed exactly once");
+        assert_eq!(out, (0..32).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn panic_propagates_as_error_not_hang() {
+        let pool = ThreadPool::new(4);
+        let survivors = AtomicUsize::new(0);
+        let tasks: Vec<Box<dyn FnOnce() -> usize + Send>> = (0..8)
+            .map(|i| {
+                let survivors = &survivors;
+                let f: Box<dyn FnOnce() -> usize + Send> = Box::new(move || {
+                    if i == 3 {
+                        panic!("task {i} exploded");
+                    }
+                    survivors.fetch_add(1, Ordering::SeqCst);
+                    i
+                });
+                f
+            })
+            .collect();
+        let err = pool.run(tasks).unwrap_err().to_string();
+        assert!(err.contains("task 3"), "error names the panicking task: {err}");
+        assert!(err.contains("exploded"), "error carries the panic message: {err}");
+        // The siblings were not abandoned by the panic.
+        assert_eq!(survivors.load(Ordering::SeqCst), 7);
+    }
+
+    #[test]
+    fn zero_and_one_worker_degenerate_configs_run_inline() {
+        for workers in [0, 1] {
+            let pool = ThreadPool::new(workers);
+            assert_eq!(pool.workers(), workers);
+            let out = pool.run((0..5).map(|i| move || i + 1).collect::<Vec<_>>()).unwrap();
+            assert_eq!(out, vec![1, 2, 3, 4, 5]);
+            // Degenerate spawn runs inline / on a single worker and
+            // still drains at shutdown.
+            let hits = Arc::new(AtomicUsize::new(0));
+            for _ in 0..3 {
+                let hits = Arc::clone(&hits);
+                pool.spawn(move || {
+                    hits.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+            pool.shutdown().unwrap();
+            assert_eq!(hits.load(Ordering::SeqCst), 3, "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn empty_and_single_task_batches() {
+        let pool = ThreadPool::new(4);
+        let empty: Vec<Box<dyn FnOnce() -> u32 + Send>> = Vec::new();
+        assert_eq!(pool.run(empty).unwrap(), Vec::<u32>::new());
+        assert_eq!(pool.run(vec![|| 42]).unwrap(), vec![42]);
+    }
+
+    #[test]
+    fn graceful_shutdown_drains_queued_jobs() {
+        let pool = ThreadPool::new(2);
+        let done = Arc::new(AtomicUsize::new(0));
+        // Far more jobs than workers, each slow enough that most are
+        // still queued when shutdown is requested.
+        for _ in 0..24 {
+            let done = Arc::clone(&done);
+            pool.spawn(move || {
+                std::thread::sleep(Duration::from_millis(1));
+                done.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        let completed = pool.shutdown().unwrap();
+        assert_eq!(completed, 24, "queued jobs drained, not dropped");
+        assert_eq!(done.load(Ordering::SeqCst), 24);
+        // Idempotent; and a fresh crew can be started afterwards.
+        assert_eq!(pool.shutdown().unwrap(), 0);
+        let done2 = Arc::clone(&done);
+        pool.spawn(move || {
+            done2.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(pool.shutdown().unwrap(), 1);
+    }
+
+    #[test]
+    fn resident_panic_surfaces_at_shutdown() {
+        let pool = ThreadPool::new(2);
+        pool.spawn(|| panic!("resident job failed"));
+        pool.spawn(|| {});
+        let err = pool.shutdown().unwrap_err().to_string();
+        assert!(err.contains("panicked"), "{err}");
+    }
+
+    #[test]
+    fn from_env_honors_pool_size_variable() {
+        // Set/remove PALLAS_POOL_SIZE around the call; the test runner
+        // may run tests concurrently, so use a distinctive value and
+        // restore the previous state.
+        let prev = std::env::var(POOL_SIZE_ENV).ok();
+        std::env::set_var(POOL_SIZE_ENV, "3");
+        assert_eq!(ThreadPool::from_env().workers(), 3);
+        match prev {
+            Some(v) => std::env::set_var(POOL_SIZE_ENV, v),
+            None => std::env::remove_var(POOL_SIZE_ENV),
+        }
+        assert!(ThreadPool::from_env().workers() >= 1);
+    }
+
+    #[test]
+    fn heavy_reduction_matches_sequential_fold() {
+        // A numeric smoke in the pool's own terms: partial sums computed
+        // on workers, reduced in task-index order, equal the sequential
+        // fold exactly (integer domain).
+        let data: Vec<u64> = (0..10_000).map(|i| (i * 2654435761u64) >> 7).collect();
+        let chunks: Vec<&[u64]> = data.chunks(613).collect();
+        let pool = ThreadPool::new(8);
+        let partials = pool
+            .run(chunks.iter().map(|ch| move || ch.iter().sum::<u64>()).collect::<Vec<_>>())
+            .unwrap();
+        let total: u64 = partials.iter().sum();
+        assert_eq!(total, data.iter().sum::<u64>());
+    }
+}

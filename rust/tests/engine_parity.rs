@@ -1,0 +1,257 @@
+//! Cross-engine parity battery: the work-stealing threads engine must
+//! be **bit-identical** to the sequential reference walk — same C bits,
+//! same cycle breakdown, same per-tile stats — on every precision,
+//! every operand form (dense and prepacked), every pool size, and
+//! every shape class, including the degenerate ones.
+//!
+//! The battery is the pin that makes the pooled engine safe to ship:
+//! the deterministic-reduction invariant (each output band applies its
+//! compute steps in plan order, so even non-associative bf16/f32
+//! accumulation reproduces the sequential association exactly) is
+//! asserted here over fuzzed shapes, not just argued in comments.
+//!
+//! CI runs this file as a named gate across a `PALLAS_POOL_SIZE`
+//! matrix (1/2/8); when the variable is set the battery pins every
+//! pooled run to that worker count, otherwise it sweeps {1, 2, 4, 8}.
+
+use std::sync::Arc;
+use versal_gemm::arch::vc1902;
+use versal_gemm::gemm::precision::Bf16;
+use versal_gemm::gemm::{
+    prepack_b, BlockedGemm, Ccp, Element, GemmConfig, Mat, ParallelGemm,
+};
+use versal_gemm::plan::GemmPlan;
+use versal_gemm::runtime::pool::POOL_SIZE_ENV;
+use versal_gemm::runtime::ThreadPool;
+use versal_gemm::util::quickcheck::prop;
+use versal_gemm::util::Pcg32;
+use versal_gemm::VersalArch;
+
+/// Pool sizes under test: the CI matrix pins one via `PALLAS_POOL_SIZE`;
+/// an unset variable sweeps the default ladder.
+fn pool_sizes() -> Vec<usize> {
+    match std::env::var(POOL_SIZE_ENV).ok().and_then(|v| v.trim().parse::<usize>().ok()) {
+        Some(n) => vec![n],
+        None => vec![1, 2, 4, 8],
+    }
+}
+
+/// CCP presets the battery draws from: small blocks (many L3/L2 blocks
+/// per plan, real parallelism), ragged blocks (edge extents on every
+/// loop), and a packing-accounted variant. All are feasible for every
+/// precision (2-byte elements included) on the vc1902 hierarchy.
+fn presets() -> Vec<GemmConfig> {
+    let mut small = GemmConfig::paper_table2(4);
+    small.ccp = Ccp { mc: 32, nc: 32, kc: 64 };
+    let mut ragged = GemmConfig::paper_table2(3);
+    ragged.ccp = Ccp { mc: 24, nc: 40, kc: 48 };
+    let mut counted = GemmConfig::paper_table2(2);
+    counted.ccp = Ccp { mc: 32, nc: 32, kc: 64 };
+    counted.count_packing = true;
+    let mut isolated = GemmConfig::paper_table2(2);
+    isolated.ccp = Ccp { mc: 16, nc: 16, kc: 32 };
+    isolated.steady_stream = false;
+    vec![small, ragged, counted, isolated]
+}
+
+/// One full parity case: dense and prepacked, `ParallelGemm` and
+/// `BlockedGemm`, sequential vs a `workers`-wide pool. Every comparison
+/// is exact equality — bits, cycles, stats.
+fn parity_case<T: Element>(
+    arch: &VersalArch,
+    cfg: &GemmConfig,
+    (m, n, k): (usize, usize, usize),
+    seed: u64,
+    workers: usize,
+) -> Result<(), String> {
+    let mut rng = Pcg32::new(seed);
+    let a = Mat::<T>::random(m, k, &mut rng);
+    let b = Mat::<T>::random(k, n, &mut rng);
+    let pool = Arc::new(ThreadPool::new(workers));
+    let label = |what: &str| {
+        format!(
+            "{what} diverged: ({m}, {n}, {k}) {} {} workers={workers}",
+            T::PRECISION,
+            cfg.ccp
+        )
+    };
+
+    // --- ParallelGemm, dense ------------------------------------------
+    let seq = ParallelGemm::new(arch);
+    let pooled = ParallelGemm::new(arch).with_pool(Arc::clone(&pool));
+    let mut c_seq = Mat::<T::Acc>::zeros(m, n);
+    let (cy_seq, st_seq) = seq.run_p::<T>(cfg, &a, &b, &mut c_seq).map_err(|e| e.to_string())?;
+    let mut c_pool = Mat::<T::Acc>::zeros(m, n);
+    let (cy_pool, st_pool) =
+        pooled.run_p::<T>(cfg, &a, &b, &mut c_pool).map_err(|e| e.to_string())?;
+    if c_seq.data != c_pool.data {
+        return Err(label("dense C bits"));
+    }
+    if cy_seq != cy_pool {
+        return Err(label("dense cycle breakdown"));
+    }
+    if st_seq != st_pool {
+        return Err(label("dense tile stats"));
+    }
+
+    // --- ParallelGemm, prepacked B (weight-stationary) ----------------
+    let pb = prepack_b(&b, cfg.ccp.kc, cfg.ccp.nc);
+    let mut cp_seq = Mat::<T::Acc>::zeros(m, n);
+    let (pcy_seq, pst_seq) =
+        seq.run_prepacked_p::<T>(cfg, &a, &pb, &mut cp_seq).map_err(|e| e.to_string())?;
+    let mut cp_pool = Mat::<T::Acc>::zeros(m, n);
+    let (pcy_pool, pst_pool) =
+        pooled.run_prepacked_p::<T>(cfg, &a, &pb, &mut cp_pool).map_err(|e| e.to_string())?;
+    if cp_seq.data != cp_pool.data {
+        return Err(label("prepacked C bits"));
+    }
+    if (pcy_seq, pst_seq) != (pcy_pool, pst_pool) {
+        return Err(label("prepacked accounting"));
+    }
+    // Prepacked and dense walks share numerics by construction.
+    if cp_seq.data != c_seq.data {
+        return Err(label("prepacked-vs-dense C bits"));
+    }
+
+    // --- ParallelGemm, plan-handle prepacked (serving hot path) -------
+    let plan = GemmPlan::lower(arch, cfg, m, n, k, T::PRECISION, true)
+        .map_err(|e| e.to_string())?;
+    let mut cl_seq = Mat::<T::Acc>::zeros(m, n);
+    let (lcy_seq, lst_seq) =
+        seq.run_prepacked_plan_p::<T>(&plan, &a, &pb, &mut cl_seq).map_err(|e| e.to_string())?;
+    let mut cl_pool = Mat::<T::Acc>::zeros(m, n);
+    let (lcy_pool, lst_pool) = pooled
+        .run_prepacked_plan_p::<T>(&plan, &a, &pb, &mut cl_pool)
+        .map_err(|e| e.to_string())?;
+    if cl_seq.data != cl_pool.data {
+        return Err(label("plan-handle C bits"));
+    }
+    if (lcy_seq, lst_seq) != (lcy_pool, lst_pool) {
+        return Err(label("plan-handle accounting"));
+    }
+
+    // --- BlockedGemm (the pedagogical single-tile driver) -------------
+    let bseq = BlockedGemm::new(arch);
+    let bpooled = BlockedGemm::new(arch).with_pool(Arc::clone(&pool));
+    let mut cb_seq = Mat::<T::Acc>::zeros(m, n);
+    let bcy_seq = bseq.run_p::<T>(cfg, &a, &b, &mut cb_seq).map_err(|e| e.to_string())?;
+    let mut cb_pool = Mat::<T::Acc>::zeros(m, n);
+    let bcy_pool = bpooled.run_p::<T>(cfg, &a, &b, &mut cb_pool).map_err(|e| e.to_string())?;
+    if cb_seq.data != cb_pool.data {
+        return Err(label("blocked C bits"));
+    }
+    if bcy_seq != bcy_pool {
+        return Err(label("blocked cycle breakdown"));
+    }
+    Ok(())
+}
+
+/// Fuzzed battery over one precision: random shapes, random preset,
+/// every pool size under test.
+fn fuzz_battery<T: Element>(name: &str, seed: u64, cases: usize) {
+    let arch = vc1902();
+    let presets = presets();
+    let sizes = pool_sizes();
+    prop(name, seed, cases, |g| {
+        let m = g.dim(48);
+        let n = g.dim(48);
+        let k = g.dim(96);
+        let cfg = &presets[g.rng.range(0, presets.len())];
+        let case_seed = g.rng.next_u32() as u64;
+        for &w in &sizes {
+            parity_case::<T>(&arch, cfg, (m, n, k), case_seed, w)?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn fuzzed_parity_u8() {
+    fuzz_battery::<u8>("engine-parity-u8", 0xE1, 10);
+}
+
+#[test]
+fn fuzzed_parity_i8() {
+    fuzz_battery::<i8>("engine-parity-i8", 0xE2, 8);
+}
+
+#[test]
+fn fuzzed_parity_i16() {
+    fuzz_battery::<i16>("engine-parity-i16", 0xE3, 8);
+}
+
+#[test]
+fn fuzzed_parity_bf16() {
+    // bf16 is the reduction-order canary: f32 accumulation is
+    // non-associative, so any completion-order reduction would show
+    // up here as flipped low bits.
+    fuzz_battery::<Bf16>("engine-parity-bf16", 0xE4, 8);
+}
+
+#[test]
+fn edge_shapes_parity_all_precisions() {
+    // Shapes smaller than one block in every dimension, single-row /
+    // single-column problems, exact multiples of the micro-tile, and a
+    // single-block plan: the partitioner's clipping and the one-band
+    // degenerate chunking all have to agree with the sequential walk.
+    let arch = vc1902();
+    let mut cfg = GemmConfig::paper_table2(2);
+    cfg.ccp = Ccp { mc: 32, nc: 32, kc: 64 };
+    let shapes = [
+        (1, 1, 1),
+        (1, 7, 3),
+        (5, 1, 9),
+        (3, 5, 7),    // everything smaller than MR/NR
+        (8, 8, 16),   // exactly one micro-tile
+        (32, 32, 64), // exactly one (mc, nc, kc) block
+        (9, 33, 65),  // one past each block edge
+        (31, 2, 130),
+    ];
+    for &shape in &shapes {
+        for &w in &pool_sizes() {
+            parity_case::<u8>(&arch, &cfg, shape, 0xED6E, w).unwrap();
+            parity_case::<Bf16>(&arch, &cfg, shape, 0xED6E, w).unwrap();
+        }
+    }
+}
+
+#[test]
+fn reduction_order_is_deterministic_across_16_repeats() {
+    // The determinism half of the invariant: the same pooled GEMM,
+    // repeated, must produce the same bytes every single time — work
+    // stealing may schedule bands in any order, but the reduction
+    // order (and therefore the output) is pinned by block index. bf16
+    // makes any order wobble visible in the low mantissa bits.
+    let arch = vc1902();
+    let mut cfg = GemmConfig::paper_table2(4);
+    cfg.ccp = Ccp { mc: 24, nc: 40, kc: 48 };
+    let (m, n, k) = (70, 53, 90);
+    let mut rng = Pcg32::new(0xD37);
+    let a = Mat::<Bf16>::random(m, k, &mut rng);
+    let b = Mat::<Bf16>::random(k, n, &mut rng);
+
+    let seq = ParallelGemm::new(&arch);
+    let mut c_ref = Mat::<f32>::zeros(m, n);
+    let (cy_ref, _) = seq.run_p::<Bf16>(&cfg, &a, &b, &mut c_ref).unwrap();
+
+    let pooled = ParallelGemm::new(&arch).with_pool(Arc::new(ThreadPool::new(4)));
+    for rep in 0..16 {
+        let mut c = Mat::<f32>::zeros(m, n);
+        let (cy, _) = pooled.run_p::<Bf16>(&cfg, &a, &b, &mut c).unwrap();
+        assert_eq!(
+            c.data, c_ref.data,
+            "repeat {rep}: pooled bf16 result drifted from the sequential reference"
+        );
+        assert_eq!(cy, cy_ref, "repeat {rep}: cycle accounting drifted");
+    }
+}
+
+#[test]
+fn pool_size_env_pins_the_battery_matrix() {
+    // The CI gate relies on PALLAS_POOL_SIZE narrowing the sweep to
+    // one pinned worker count per matrix leg.
+    match std::env::var(POOL_SIZE_ENV).ok().and_then(|v| v.trim().parse::<usize>().ok()) {
+        Some(n) => assert_eq!(pool_sizes(), vec![n]),
+        None => assert_eq!(pool_sizes(), vec![1, 2, 4, 8]),
+    }
+}

@@ -18,8 +18,13 @@
 //!    within its SLO (execution backpressure keeps the execute leg
 //!    bounded);
 //! 5. **Cache-partition isolation** — a storming tenant's evictions
-//!    never touch another tenant's partition counters or residency.
+//!    never touch another tenant's partition counters or residency;
+//! 6. **Engine parity** — the pooled (threads-engine) GEMM backend
+//!    replays to a report fingerprint and a Chrome trace byte-identical
+//!    to the sequential backend on the same seeded workload.
 
+use std::sync::Arc;
+use versal_gemm::arch::vc1902;
 use versal_gemm::coordinator::{
     generate, ArrivalKind, Backend, BatchedBackend, EchoBackend, GenRequest, RustGemmBackend,
     ServingConfig, ServingRuntime, TenantClass, WorkloadSpec,
@@ -27,6 +32,7 @@ use versal_gemm::coordinator::{
 use versal_gemm::dl::MlpSpec;
 use versal_gemm::gemm::Precision;
 use versal_gemm::obs::{to_chrome_json, Tracer};
+use versal_gemm::runtime::ThreadPool;
 use versal_gemm::util::quickcheck::{prop, Gen};
 
 const IN_DIM: usize = 4;
@@ -432,4 +438,62 @@ fn cache_partition_isolation_under_storm() {
         final_steady.hits > before.hits && final_steady.misses == before.misses,
         "steady tenant still hits after the storm: {final_steady:?} vs {before:?}"
     );
+}
+
+/// Property 6: the pooled (threads-engine) GEMM backend is
+/// indistinguishable from the sequential backend at the serving
+/// surface — byte-identical report fingerprint AND byte-identical
+/// Chrome trace on the same seeded multi-tenant workload, for every
+/// pool width. Host scheduling must never leak into the cycle domain:
+/// the deterministic reduction pins the numerics, and the accounting
+/// fold replays the same step-carried costs either way.
+#[test]
+fn pooled_backend_fingerprint_and_trace_match_sequential() {
+    let spec = MlpSpec { dims: vec![64, 8] };
+    let classes = vec![
+        TenantClass::new("gold", 1.0, 3, 50_000),
+        TenantClass::new("free", 3.0, 1, 200_000),
+    ];
+    let workload = WorkloadSpec {
+        tenants: classes.clone(),
+        kind: ArrivalKind::Bursty,
+        offered_rate: 30_000.0,
+        burst: 4.0,
+        requests: 48,
+        seed: 0xF1A6,
+    };
+    let trace = generate(&workload, spec.dims[0]);
+    let run = |pool: Option<Arc<ThreadPool>>| {
+        let mut backend = RustGemmBackend::new(vc1902(), spec.clone(), 11, 4);
+        if let Some(p) = pool {
+            backend = backend.with_pool(p);
+        }
+        let tracer = Tracer::recording();
+        let mut rt = ServingRuntime::with_tenants(
+            backend,
+            ServingConfig {
+                max_batch: 4,
+                max_wait_us: 500,
+                queue_cap: 64,
+                default_slo_us: 100_000,
+                cache_budget_bytes: 8 << 20,
+                plan_cache_budget_bytes: 1 << 20,
+                pipeline_devices: 2,
+                max_backlog_us: 20_000,
+            },
+            classes.clone(),
+        )
+        .with_tracer(tracer.clone());
+        rt.replay(&trace);
+        (rt.fingerprint(), to_chrome_json(&tracer.snapshot()))
+    };
+    let (fp_seq, trace_seq) = run(None);
+    for workers in [1usize, 4, 8] {
+        let (fp, tr) = run(Some(Arc::new(ThreadPool::new(workers))));
+        assert_eq!(
+            fp, fp_seq,
+            "{workers}-worker pooled fingerprint diverged from the sequential backend"
+        );
+        assert_eq!(tr, trace_seq, "{workers}-worker pooled chrome trace diverged");
+    }
 }
