@@ -5,10 +5,11 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 
 echo "==> cargo fmt --check (advisory)"
+# Re-probed while landing the pack-arena PR: the authoring container
+# still ships no rustfmt, so the gate stays advisory (see ROADMAP
+# "Open items"); make it a hard gate in the same commit that runs
+# `cargo fmt --all`.
 if cargo fmt --version >/dev/null 2>&1; then
-    # Advisory until the tree is formatted once (the authoring container
-    # ships no rustfmt — see ROADMAP "Open items"); make it a hard gate
-    # in the same commit that runs `cargo fmt --all`.
     cargo fmt --all -- --check \
         || echo "    (format drift — advisory until the one-shot cargo fmt commit lands)"
 else
@@ -26,13 +27,22 @@ echo "==> overload invariant battery (tests/serving_overload.rs, named so a fail
 # keeps the overload invariants visible as their own gate in CI logs.
 cargo test -q --test serving_overload
 
-echo "==> cross-engine parity battery (tests/engine_parity.rs across the PALLAS_POOL_SIZE matrix)"
+echo "==> cross-engine parity battery (tests/engine_parity.rs across the PALLAS_POOL_SIZE x PALLAS_PACK_PARALLEL matrix)"
 # The threads engine must be bit-identical to the sequential walk at
-# every pool width; each leg pins one width so a failure names it.
+# every pool width, with packing serial and slice-parallel; each leg
+# pins one (width, pack mode) so a failure names it.
 for ps in 1 2 8; do
-    echo "    -- PALLAS_POOL_SIZE=${ps}"
-    PALLAS_POOL_SIZE="${ps}" cargo test -q --test engine_parity
+    for pp in 0 1; do
+        echo "    -- PALLAS_POOL_SIZE=${ps} PALLAS_PACK_PARALLEL=${pp}"
+        PALLAS_POOL_SIZE="${ps}" PALLAS_PACK_PARALLEL="${pp}" \
+            cargo test -q --test engine_parity
+    done
 done
+
+echo "==> pack-arena allocation regression (tests/serving_alloc.rs, named so a failure is attributable)"
+# Warm plan walks must allocate zero bytes and warm serving ticks must
+# be allocation-flat; the counting global allocator pins both.
+cargo test -q --test serving_alloc
 
 echo "==> cargo clippy -- -D warnings"
 if cargo clippy --version >/dev/null 2>&1; then
@@ -138,5 +148,9 @@ for artifact in BENCH_plan.json BENCH_serving.json; do
 done
 grep -q '"goodput_sweep"' rust/bench_results/BENCH_serving.json \
     || { echo "BENCH_serving.json must carry the goodput_sweep block in quick mode too" >&2; exit 1; }
+grep -q '"pack_wall_ns"' rust/bench_results/BENCH_plan.json \
+    || { echo "BENCH_plan.json must carry per-case pack_wall_ns (schema plan-v3)" >&2; exit 1; }
+grep -q '"fanout"' rust/bench_results/BENCH_serving.json \
+    || { echo "BENCH_serving.json must carry the fanout block (schema serving-v4)" >&2; exit 1; }
 
 echo "CI checks passed."

@@ -19,17 +19,21 @@
 //! Each JSON case additionally records `lower_ns` (host wall-time of
 //! the materializing lowering), `wall_ns` (host wall-time of the
 //! executed run — first-class next to model cycles, never gated by
-//! bench-trend) and `step_bytes` (the transient step vector's byte
-//! footprint — exactly what the streaming path avoids), so CI
-//! artifacts track the lowering cost the plan cache and the streaming
-//! fold exist to kill.
+//! bench-trend), `pack_wall_ns` (host wall-time of the plan's serial
+//! pack schedule alone — the slice parallel packing attacks) and
+//! `step_bytes` (the transient step vector's byte footprint — exactly
+//! what the streaming path avoids), so CI artifacts track the lowering
+//! cost the plan cache and the streaming fold exist to kill.
 //!
 //! A final `engine_speedup` block runs the same shape through the
-//! sequential reference engine and the 8-worker work-stealing pool:
-//! gate 5 asserts the pooled result is **bit-identical** (C, cycles)
-//! — the deterministic-reduction invariant — and, on machines with
-//! at least 4 hardware threads in full mode, that the pooled wall
-//! time beats sequential by >1.5×.
+//! sequential reference engine, the 8-worker work-stealing pool, and
+//! the pooled engine with a pack arena + parallel packing (the host
+//! hot path): gate 5 asserts all pooled results are **bit-identical**
+//! (C, cycles, stats) — the deterministic-reduction invariant — and,
+//! on machines with at least 4 hardware threads in full mode, that
+//! the pooled wall time beats sequential by >1.5× and the arena +
+//! pack-parallel engine is strictly faster than the plain pooled
+//! baseline (both cold, best-of-3).
 //!
 //! ```bash
 //! cargo bench --bench bench_plan            # full (incl. Table-2 shape)
@@ -40,10 +44,10 @@ use std::sync::Arc;
 use versal_gemm::arch::vc1902;
 use versal_gemm::gemm::precision::Bf16;
 use versal_gemm::gemm::{
-    BlockedGemm, Ccp, Element, GemmConfig, Mat, ParallelGemm, Precision,
+    pack_a, pack_b, BlockedGemm, Ccp, Element, GemmConfig, Mat, ParallelGemm, Precision,
 };
-use versal_gemm::plan::{GemmPlan, PlanSpec};
-use versal_gemm::runtime::ThreadPool;
+use versal_gemm::plan::{Buffer, GemmPlan, PlanSpec, PlanStep};
+use versal_gemm::runtime::{PackArena, ThreadPool};
 use versal_gemm::util::Pcg32;
 
 struct Case {
@@ -58,8 +62,30 @@ struct Case {
     macs: u64,
     lower_ns: u64,
     wall_ns: u64,
+    pack_wall_ns: u64,
     step_bytes: u64,
     footprints: String,
+}
+
+/// Host wall-time of the plan's serial pack schedule alone: replay the
+/// step stream, executing only the `Pack` steps. This is the numerator
+/// the parallel-pack slices attack; recorded per case as
+/// `pack_wall_ns`.
+fn time_pack_walk<T: Element>(spec: &PlanSpec, a: &Mat<T>, b: &Mat<T>) -> u64 {
+    let t0 = std::time::Instant::now();
+    for step in spec.walk() {
+        if let PlanStep::Pack(p) = step {
+            match p.buffer {
+                Buffer::Ac => {
+                    std::hint::black_box(pack_a(a, p.row_off, p.col_off, p.rows, p.cols));
+                }
+                Buffer::Bc => {
+                    std::hint::black_box(pack_b(b, p.row_off, p.col_off, p.rows, p.cols));
+                }
+            }
+        }
+    }
+    t0.elapsed().as_nanos() as u64
 }
 
 fn run_case<T: Element>(
@@ -98,6 +124,7 @@ fn run_case<T: Element>(
     let t1 = std::time::Instant::now();
     let (executed, _) = engine.run_p::<T>(&cfg, &a, &b, &mut c).expect("bench case runs");
     let wall_ns = t1.elapsed().as_nanos() as u64;
+    let pack_wall_ns = time_pack_walk(&spec, &a, &b);
 
     // --- gate 1: predicted == executed, bit-for-bit ------------------
     assert_eq!(
@@ -144,26 +171,38 @@ fn run_case<T: Element>(
         macs: plan.total_macs(),
         lower_ns,
         wall_ns,
+        pack_wall_ns,
         step_bytes,
         footprints,
     }
 }
 
-/// Gate 5: sequential vs 8-worker pooled engine on one shape — the
-/// pooled walk must be bit-identical in C and cycles; wall times are
-/// recorded (and, in full mode on ≥4-thread machines, gated >1.5×).
+/// Gate 5: sequential vs 8-worker pooled engine vs the pooled engine
+/// with a pack arena + parallel packing, on one shape — every pooled
+/// walk must be bit-identical in C, cycles and stats; wall times are
+/// best-of-N and recorded (in full mode on ≥4-thread machines the
+/// pool is gated >1.5× over sequential and the arena + pack-parallel
+/// path strictly faster than the plain pooled baseline).
 struct EngineSpeedup {
     m: usize,
     n: usize,
     k: usize,
     workers: usize,
+    rounds: usize,
     seq_wall_ns: u64,
     pool_wall_ns: u64,
+    arena_wall_ns: u64,
 }
 
 impl EngineSpeedup {
     fn speedup(&self) -> f64 {
         self.seq_wall_ns as f64 / self.pool_wall_ns.max(1) as f64
+    }
+
+    /// Arena + pack-parallel wall against the plain pooled baseline —
+    /// the host-hot-path win this PR ships.
+    fn arena_speedup(&self) -> f64 {
+        self.pool_wall_ns as f64 / self.arena_wall_ns.max(1) as f64
     }
 }
 
@@ -175,26 +214,50 @@ fn run_engine_speedup(
     ccp: Ccp,
     tiles: usize,
     seed: u64,
+    quick: bool,
 ) -> EngineSpeedup {
     let workers = 8;
+    // Best-of-N damps scheduler noise in the full run; quick mode is a
+    // schema smoke and takes single shots.
+    let rounds = if quick { 1 } else { 3 };
     let mut cfg = GemmConfig::paper_table2(tiles);
     cfg.ccp = ccp;
     let mut rng = Pcg32::new(seed);
     let a = Mat::<u8>::random(m, k, &mut rng);
     let b = Mat::<u8>::random(k, n, &mut rng);
 
-    let mut c_seq = Mat::<i32>::zeros(m, n);
-    let seq = ParallelGemm::new(arch);
-    let t0 = std::time::Instant::now();
-    let (cy_seq, st_seq) = seq.run_p::<u8>(&cfg, &a, &b, &mut c_seq).expect("seq runs");
-    let seq_wall_ns = t0.elapsed().as_nanos() as u64;
+    // Best wall time over `rounds` cold runs of one engine; returns the
+    // last run's full result for the bit-exactness gates.
+    let best_of = |engine: &ParallelGemm| {
+        let mut best = u64::MAX;
+        let mut out = None;
+        for _ in 0..rounds {
+            let mut c = Mat::<i32>::zeros(m, n);
+            let t0 = std::time::Instant::now();
+            let (cy, st) = engine.run_p::<u8>(&cfg, &a, &b, &mut c).expect("engine runs");
+            best = best.min(t0.elapsed().as_nanos() as u64);
+            out = Some((c, cy, st));
+        }
+        let (c, cy, st) = out.expect("at least one round");
+        (c, cy, st, best)
+    };
 
-    let mut c_pool = Mat::<i32>::zeros(m, n);
-    let pooled = ParallelGemm::new(arch).with_pool(Arc::new(ThreadPool::new(workers)));
-    let t1 = std::time::Instant::now();
-    let (cy_pool, st_pool) =
-        pooled.run_p::<u8>(&cfg, &a, &b, &mut c_pool).expect("pooled runs");
-    let pool_wall_ns = t1.elapsed().as_nanos() as u64;
+    let seq = ParallelGemm::new(arch);
+    let (c_seq, cy_seq, st_seq, seq_wall_ns) = best_of(&seq);
+
+    let pool = Arc::new(ThreadPool::new(workers));
+    let pooled = ParallelGemm::new(arch).with_pool(Arc::clone(&pool));
+    let (c_pool, cy_pool, st_pool, pool_wall_ns) = best_of(&pooled);
+
+    // The host hot path: same pool, plus recycled pack buffers and
+    // slice-parallel packing. The arena starts cold — its first run
+    // pays the fresh checkouts, later rounds run warm, exactly the
+    // serving steady state best-of-N is meant to sample.
+    let hot = ParallelGemm::new(arch)
+        .with_pool(pool)
+        .with_arena(Arc::new(PackArena::new()))
+        .with_pack_parallel(true);
+    let (c_hot, cy_hot, st_hot, arena_wall_ns) = best_of(&hot);
 
     // The deterministic-reduction invariant, asserted where the perf
     // number is produced: a speedup that changes bits is no speedup.
@@ -204,8 +267,14 @@ fn run_engine_speedup(
     );
     assert_eq!(cy_seq, cy_pool, "GATE: pooled cycle accounting must match sequential");
     assert_eq!(st_seq, st_pool, "GATE: pooled tile stats must match sequential");
+    assert_eq!(
+        c_seq.data, c_hot.data,
+        "GATE: arena + pack-parallel engine must be bit-identical to sequential on ({m}, {n}, {k})"
+    );
+    assert_eq!(cy_seq, cy_hot, "GATE: arena + pack-parallel cycle accounting must match");
+    assert_eq!(st_seq, st_hot, "GATE: arena + pack-parallel tile stats must match");
 
-    EngineSpeedup { m, n, k, workers, seq_wall_ns, pool_wall_ns }
+    EngineSpeedup { m, n, k, workers, rounds, seq_wall_ns, pool_wall_ns, arena_wall_ns }
 }
 
 fn main() {
@@ -239,12 +308,13 @@ fn main() {
     }
 
     println!(
-        "{:<28} {:>6} {:>14} {:>14} {:>12} {:>12} {:>12} {:>12}",
-        "case", "tiles", "predicted", "executed", "MACs/cycle", "lower µs", "wall µs", "step bytes"
+        "{:<28} {:>6} {:>14} {:>14} {:>12} {:>12} {:>12} {:>10} {:>12}",
+        "case", "tiles", "predicted", "executed", "MACs/cycle", "lower µs", "wall µs", "pack µs",
+        "step bytes"
     );
     for c in &cases {
         println!(
-            "{:<28} {:>6} {:>14} {:>14} {:>12.1} {:>12.1} {:>12.1} {:>12}",
+            "{:<28} {:>6} {:>14} {:>14} {:>12.1} {:>12.1} {:>12.1} {:>10.1} {:>12}",
             format!("({}, {}, {}) {}", c.m, c.n, c.k, c.precision),
             c.tiles,
             c.predicted,
@@ -252,6 +322,7 @@ fn main() {
             c.macs as f64 / c.executed as f64,
             c.lower_ns as f64 / 1e3,
             c.wall_ns as f64 / 1e3,
+            c.pack_wall_ns as f64 / 1e3,
             c.step_bytes,
         );
     }
@@ -262,21 +333,34 @@ fn main() {
     // gate only arms on the full run's Table-2 shape, and only when
     // the machine has the hardware threads to make it meaningful.
     let sp = if quick {
-        run_engine_speedup(&arch, 96, 80, 160, small, 4, 0xE5)
+        run_engine_speedup(&arch, 96, 80, 160, small, 4, 0xE5, quick)
     } else {
-        run_engine_speedup(&arch, 256, 256, 2048, Ccp { mc: 256, nc: 256, kc: 2048 }, 8, 0xE5)
+        run_engine_speedup(
+            &arch,
+            256,
+            256,
+            2048,
+            Ccp { mc: 256, nc: 256, kc: 2048 },
+            8,
+            0xE5,
+            quick,
+        )
     };
     let hw_threads = std::thread::available_parallelism().map_or(1, |p| p.get());
     println!(
         "\nengine speedup ({}, {}, {}): sequential {:.2} ms, {}-worker pool {:.2} ms \
-         — {:.2}x (bit-identical C, cycles, stats)",
+         — {:.2}x; + arena & parallel packing {:.2} ms — {:.2}x over the plain pool \
+         (best of {}, bit-identical C, cycles, stats)",
         sp.m,
         sp.n,
         sp.k,
         sp.seq_wall_ns as f64 / 1e6,
         sp.workers,
         sp.pool_wall_ns as f64 / 1e6,
-        sp.speedup()
+        sp.speedup(),
+        sp.arena_wall_ns as f64 / 1e6,
+        sp.arena_speedup(),
+        sp.rounds
     );
     if !quick && hw_threads >= 4 {
         assert!(
@@ -285,6 +369,13 @@ fn main() {
              (got {:.2}x on a {hw_threads}-thread host)",
             sp.workers,
             sp.speedup()
+        );
+        assert!(
+            sp.arena_speedup() > 1.0,
+            "GATE: arena + parallel packing must be strictly faster than the plain \
+             {}-worker pool on the Table-2 shape (got {:.2}x on a {hw_threads}-thread host)",
+            sp.workers,
+            sp.arena_speedup()
         );
     }
 
@@ -295,8 +386,8 @@ fn main() {
             format!(
                 "{{\"m\":{},\"n\":{},\"k\":{},\"precision\":\"{}\",\"mc\":{},\"nc\":{},\"kc\":{},\
                  \"tiles\":{},\"predicted_cycles\":{},\"executed_cycles\":{},\"macs\":{},\
-                 \"macs_per_cycle\":{:.4},\"lower_ns\":{},\"wall_ns\":{},\"step_bytes\":{},\
-                 \"footprints\":[{}]}}",
+                 \"macs_per_cycle\":{:.4},\"lower_ns\":{},\"wall_ns\":{},\"pack_wall_ns\":{},\
+                 \"step_bytes\":{},\"footprints\":[{}]}}",
                 c.m,
                 c.n,
                 c.k,
@@ -311,6 +402,7 @@ fn main() {
                 c.macs as f64 / c.executed as f64,
                 c.lower_ns,
                 c.wall_ns,
+                c.pack_wall_ns,
                 c.step_bytes,
                 c.footprints
             )
@@ -320,11 +412,21 @@ fn main() {
     // Wall-time fields deliberately do not end in "cycles": bench-trend
     // gates the cycle domain only, and host wall time is machine-noise.
     let json = format!(
-        "{{\"bench\":\"plan\",\"schema\":\"plan-v2\",\"quick\":{quick},\"parity\":\"exact\",\
-         \"engine_speedup\":{{\"m\":{},\"n\":{},\"k\":{},\"workers\":{},\
-         \"seq_wall_ns\":{},\"pool_wall_ns\":{},\"speedup\":{:.4},\"bit_exact\":true}},\
+        "{{\"bench\":\"plan\",\"schema\":\"plan-v3\",\"quick\":{quick},\"parity\":\"exact\",\
+         \"engine_speedup\":{{\"m\":{},\"n\":{},\"k\":{},\"workers\":{},\"rounds\":{},\
+         \"seq_wall_ns\":{},\"pool_wall_ns\":{},\"arena_wall_ns\":{},\"speedup\":{:.4},\
+         \"arena_speedup\":{:.4},\"bit_exact\":true}},\
          \"cases\":[{json_cases}]}}\n",
-        sp.m, sp.n, sp.k, sp.workers, sp.seq_wall_ns, sp.pool_wall_ns, sp.speedup()
+        sp.m,
+        sp.n,
+        sp.k,
+        sp.workers,
+        sp.rounds,
+        sp.seq_wall_ns,
+        sp.pool_wall_ns,
+        sp.arena_wall_ns,
+        sp.speedup(),
+        sp.arena_speedup()
     );
     let dir = std::path::PathBuf::from(
         std::env::var_os("VERSAL_BENCH_RESULTS").unwrap_or_else(|| "bench_results".into()),
@@ -335,6 +437,6 @@ fn main() {
     println!("\nwrote {}", path.display());
     println!(
         "all plan gates passed (predicted == executed, streaming == materialized, \
-         pooled engine bit-identical on every case)."
+         pooled / arena / pack-parallel engines bit-identical on every case)."
     );
 }

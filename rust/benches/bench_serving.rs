@@ -19,7 +19,12 @@
 //!    **gracefully**: near-unity goodput under light load, a collapsed
 //!    goodput fraction far past the saturation knee, shedding ordered
 //!    lowest-priority-first, and the gold tenant's p99 within its SLO
-//!    even at 16x the calibrated capacity.
+//!    even at 16x the calibrated capacity;
+//! 5. cross-batch **fan-out is byte-invisible**: replaying one
+//!    multi-tenant trace with distinct-tenant batches executing
+//!    concurrently on a host pool produces a report fingerprint
+//!    byte-identical to the sequential tick (both walls recorded in
+//!    the `fanout` block, never gated — host wall is machine-noise).
 //!
 //! The runtime is deterministic (logical clock + calibrated cycle
 //! models), so these gates are CI-stable; host *wall-time* (`wall_ns`
@@ -38,6 +43,7 @@
 //! cargo bench --bench bench_serving -- --quick # CI smoke (wave = 32)
 //! ```
 
+use std::sync::Arc;
 use versal_gemm::arch::vc1902;
 use versal_gemm::coordinator::{
     generate, ArrivalKind, FeatureGen, RustGemmBackend, ServingConfig, ServingReport,
@@ -46,6 +52,7 @@ use versal_gemm::coordinator::{
 use versal_gemm::dl::MlpSpec;
 use versal_gemm::gemm::Precision;
 use versal_gemm::report;
+use versal_gemm::runtime::ThreadPool;
 
 #[allow(clippy::too_many_arguments)]
 fn runtime(
@@ -182,6 +189,64 @@ fn goodput_sweep(spec: &MlpSpec, tiles: usize, quick: bool) -> (Vec<SweepPoint>,
         .map(|p| p.load_x)
         .fold(loads[0], f64::max);
     (points, knee)
+}
+
+/// Gate 5: replay one multi-tenant trace with fan-out off and with
+/// distinct-tenant batches fanned out across a 4-worker host pool.
+/// The report fingerprint must be **byte-identical** — fan-out is a
+/// host-side latency optimisation and may not move a single counter —
+/// and both host walls are recorded in the JSON `fanout` block.
+fn fanout_compare(spec: &MlpSpec, tiles: usize, quick: bool) -> (u64, u64, u64) {
+    let classes = vec![
+        TenantClass::new("gold", 1.0, 3, 1 << 40),
+        TenantClass::new("silver", 2.0, 2, 1 << 40),
+        TenantClass::new("free", 3.0, 1, 1 << 40),
+    ];
+    let requests = if quick { 64 } else { 256 };
+    let trace = generate(
+        &WorkloadSpec {
+            tenants: classes.clone(),
+            kind: ArrivalKind::Poisson,
+            offered_rate: 50_000.0,
+            burst: 1.0,
+            requests,
+            seed: 4242,
+        },
+        spec.dims[0],
+    );
+    let run = |fanout_workers: Option<usize>| -> (String, u64, u64) {
+        let backend = RustGemmBackend::new(vc1902(), spec.clone(), 9, tiles);
+        let mut rt = ServingRuntime::with_tenants(
+            backend,
+            ServingConfig {
+                max_batch: 8,
+                max_wait_us: 0,
+                queue_cap: 4 * requests,
+                default_slo_us: 1 << 40,
+                cache_budget_bytes: 256 << 20,
+                plan_cache_budget_bytes: 8 << 20,
+                pipeline_devices: 2,
+                max_backlog_us: u64::MAX,
+            },
+            classes.clone(),
+        );
+        if let Some(w) = fanout_workers {
+            rt = rt.with_fanout(Arc::new(ThreadPool::new(w)));
+        }
+        let t0 = std::time::Instant::now();
+        let (outcomes, _) = rt.replay(&trace);
+        let wall_ns = t0.elapsed().as_nanos() as u64;
+        (rt.fingerprint(), wall_ns, outcomes.len() as u64)
+    };
+    let (fp_seq, seq_wall_ns, done_seq) = run(None);
+    let (fp_fan, fanout_wall_ns, done_fan) = run(Some(4));
+    assert_eq!(done_seq, done_fan, "both replays complete the same requests");
+    assert!(done_seq > 0, "the fan-out trace must actually serve requests");
+    assert_eq!(
+        fp_seq, fp_fan,
+        "GATE: cross-batch fan-out must leave the report fingerprint byte-identical"
+    );
+    (seq_wall_ns, fanout_wall_ns, done_seq)
 }
 
 /// Drive two identical waves through a runtime; returns the outcomes'
@@ -403,6 +468,16 @@ fn main() {
         );
     }
 
+    // --- E: cross-batch fan-out parity + wall -------------------------
+    let (fanout_seq_wall_ns, fanout_wall_ns, fanout_completed) =
+        fanout_compare(&spec, tiles, quick);
+    println!(
+        "\nfan-out replay ({fanout_completed} requests, 3 tenants): sequential tick \
+         {:.2} ms, 4-worker fan-out {:.2} ms (fingerprints byte-identical)",
+        fanout_seq_wall_ns as f64 / 1e6,
+        fanout_wall_ns as f64 / 1e6
+    );
+
     // --- machine-readable artifact: BENCH_serving.json ----------------
     let sweep_rows: Vec<String> = sweep
         .iter()
@@ -430,9 +505,12 @@ fn main() {
     // Wall-time fields end in "_ns", never "cycles": bench-trend gates
     // the cycle domain only, and host wall time is machine-noise.
     let json = format!(
-        "{{\"bench\":\"serving\",\"schema\":\"serving-v3\",\"quick\":{quick},\
+        "{{\"bench\":\"serving\",\"schema\":\"serving-v4\",\"quick\":{quick},\
          \"wave_rows\":{wave},\"rows\":[{},{},{}],\
-         \"goodput_sweep\":{{\"knee_load\":{knee},\"points\":[{}]}}}}\n",
+         \"goodput_sweep\":{{\"knee_load\":{knee},\"points\":[{}]}},\
+         \"fanout\":{{\"workers\":4,\"completed\":{fanout_completed},\
+         \"seq_wall_ns\":{fanout_seq_wall_ns},\"fanout_wall_ns\":{fanout_wall_ns},\
+         \"fingerprint_identical\":true}}}}\n",
         json_row("batched_cached_plan_cache_on", &rep_a, wall_a),
         json_row("sequential_uncached", &rep_b, wall_b),
         json_row("batched_cached_plan_cache_off", &rep_c, wall_c),

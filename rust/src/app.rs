@@ -27,7 +27,7 @@ COMMANDS:
   table2   [--tiles 1,2,...]   regenerate Table 2 (strong scaling)
   table3                       regenerate Table 3 (micro-kernel ablations)
   gemm     --m M --n N --k K [--tiles T] [--seed S]
-           [--engine sequential|threads] [--workers W]
+           [--engine sequential|threads] [--workers W] [--pack-parallel]
                                run a parallel GEMM, verify vs naive,
                                report cycles + MACs/cycle. --engine
                                threads executes the plan's independent
@@ -35,7 +35,11 @@ COMMANDS:
                                (--workers W; 0 = auto) with a pinned
                                reduction order, so results and cycles
                                are bit-identical to sequential — only
-                               host wall time changes
+                               host wall time changes. --pack-parallel
+                               (or PALLAS_PACK_PARALLEL=1) additionally
+                               splits each pack step into disjoint panel
+                               slices across the pool workers — still
+                               bit-identical
   ccp      [--elem-bytes B]    derive cache configuration parameters (§4.3)
   tune     --m M --n N --k K [--tiles T]
                                auto-tune CCPs for a problem shape (model-
@@ -82,7 +86,7 @@ COMMANDS:
            [--tenants gold:1:3:20,silver:2:2:60,free:4:1:200]
            [--offered-load Q]
            [--engine runtime|threads|coordinator] [--workers W]
-           [--trace-out FILE]
+           [--pack-parallel] [--fanout] [--trace-out FILE]
                                replay a synthetic mixed-precision request
                                trace through the continuous-batching
                                runtime (admission SLOs, fused same-
@@ -103,6 +107,13 @@ COMMANDS:
                                GEMM numerics on the work-stealing host
                                pool (--workers W; 0 = auto) — reports
                                and traces are bit-identical to runtime;
+                               --pack-parallel additionally parallelises
+                               the pack steps (threads engine only);
+                               --fanout launches independent fused
+                               batches from distinct tenants
+                               concurrently on the host pool with a
+                               deterministic fixed-order merge — still
+                               bit-identical to sequential ticks;
                                --engine coordinator runs the wall-clock
                                threaded coordinator instead;
                                --trace-out writes the
@@ -193,6 +204,8 @@ fn run(argv: Vec<String>) -> Result<(), String> {
         .flag("prepacked")
         .flag("cost-only")
         .flag("fail-on-regress")
+        .flag("pack-parallel")
+        .flag("fanout")
         .parse(&argv)?;
     let cmd = args.positional().first().map(|s| s.as_str()).unwrap_or("help");
     let arch = load_arch(&args)?;
@@ -267,8 +280,13 @@ fn cmd_gemm(arch: &VersalArch, args: &Args) -> Result<(), String> {
         "sequential" => (ParallelGemm::new(arch), "sequential".to_string()),
         "threads" => {
             let pool = host_pool(args)?;
-            let desc = format!("threads ({} pool workers)", pool.workers());
-            (ParallelGemm::new(arch).with_pool(pool), desc)
+            let pp = args.has("pack-parallel") || crate::runtime::pack_parallel_from_env();
+            let desc = format!(
+                "threads ({} pool workers{})",
+                pool.workers(),
+                if pp { ", parallel packing" } else { "" }
+            );
+            (ParallelGemm::new(arch).with_pool(pool).with_pack_parallel(pp), desc)
         }
         other => {
             return Err(format!(
@@ -842,14 +860,18 @@ fn cmd_serve_runtime(arch: &VersalArch, args: &Args, pooled: bool) -> Result<(),
         println!("  tenants: {}", shares.join(", "));
     }
     let mut backend = RustGemmBackend::new(arch.clone(), spec.clone(), seed, tiles);
+    let pack_parallel = args.has("pack-parallel") || crate::runtime::pack_parallel_from_env();
     if pooled {
         let pool = host_pool(args)?;
         println!(
-            "  engine: threads ({} pool workers; deterministic reduction — results and \
+            "  engine: threads ({} pool workers{}; deterministic reduction — results and \
              cycles match --engine runtime bit for bit)",
-            pool.workers()
+            pool.workers(),
+            if pack_parallel { ", parallel packing" } else { "" }
         );
-        backend = backend.with_pool(pool);
+        backend = backend.with_pool(pool).with_pack_parallel(pack_parallel);
+    } else if pack_parallel {
+        eprintln!("note: --pack-parallel applies to --engine threads; the runtime engine packs serially");
     }
     // A disabled tracer is a no-op through the whole runtime, so the
     // wiring is unconditional and only --trace-out pays for recording.
@@ -872,6 +894,15 @@ fn cmd_serve_runtime(arch: &VersalArch, args: &Args, pooled: bool) -> Result<(),
         None => ServingRuntime::new(backend, cfg),
     }
     .with_tracer(tracer.clone());
+    if args.has("fanout") {
+        let pool = host_pool(args)?;
+        println!(
+            "  fan-out: distinct-tenant batches execute concurrently on {} workers \
+             (fixed-order merge — reports and traces bit-identical to sequential)",
+            pool.workers()
+        );
+        rt = rt.with_fanout(pool);
+    }
 
     let served = match &classes {
         // Multi-tenant: the workload generator splits the offered rate
@@ -1322,6 +1353,29 @@ mod tests {
     }
 
     #[test]
+    fn serve_pack_parallel_and_fanout_succeed() {
+        // --pack-parallel on the threads engine: parallel pack slices,
+        // same verification surface.
+        assert_eq!(
+            cli_main(argv(&[
+                "serve", "--engine", "threads", "--requests", "4", "--batch", "2",
+                "--workers", "2", "--tiles", "2", "--rate", "100000", "--pack-parallel",
+            ])),
+            0
+        );
+        // --fanout with a multi-tenant trace: distinct-tenant batches
+        // run concurrently, same report surface.
+        assert_eq!(
+            cli_main(argv(&[
+                "serve", "--requests", "12", "--batch", "2", "--tiles", "2",
+                "--offered-load", "100000", "--workers", "2", "--fanout",
+                "--tenants", "gold:1:3:200,free:3:1:200",
+            ])),
+            0
+        );
+    }
+
+    #[test]
     fn serve_coordinator_engine_succeeds() {
         // The wall-clock router + worker-pool topology demo.
         assert_eq!(
@@ -1387,6 +1441,14 @@ mod tests {
             cli_main(argv(&["gemm", "--m", "16", "--n", "16", "--k", "32", "--tiles", "2",
                             "--mc", "16", "--nc", "16", "--kc", "32",
                             "--engine", "threads", "--workers", "0"])),
+            0
+        );
+        // --pack-parallel splits pack steps across the pool; the naive
+        // oracle still requires bit-exact output for exit 0.
+        assert_eq!(
+            cli_main(argv(&["gemm", "--m", "37", "--n", "29", "--k", "70", "--tiles", "3",
+                            "--mc", "16", "--nc", "16", "--kc", "32",
+                            "--engine", "threads", "--workers", "4", "--pack-parallel"])),
             0
         );
         // Unknown engines are usage errors for gemm and plan alike.

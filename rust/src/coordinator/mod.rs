@@ -49,7 +49,7 @@ pub use server::{Coordinator, CoordinatorConfig, SubmitError};
 pub use serving::{ServeOutcome, ServingConfig, ServingReport, ServingRuntime};
 pub use tenant::{TenantClass, TenantReport};
 pub use worker::{
-    Backend, BatchedBackend, ClusterGemmBackend, EchoBackend, RustGemmBackend,
+    Backend, BatchedBackend, ClusterGemmBackend, EchoBackend, RustGemmBackend, WaveJob,
 };
 pub use workload::{
     generate, ArrivalGen, ArrivalKind, ArrivalProcess, FeatureGen, GenRequest, PrecisionMix,

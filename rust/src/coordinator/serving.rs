@@ -75,14 +75,16 @@ use super::metrics::{LatencyStats, PlanCacheStats};
 use super::pipeline::{PipelinedExecutor, StageCost};
 use super::request::RequestId;
 use super::tenant::{TenantClass, TenantReport};
-use super::worker::BatchedBackend;
+use super::worker::{BatchedBackend, WaveJob};
 use super::workload::GenRequest;
 use crate::gemm::Precision;
 use crate::obs::{
     HistogramSummary, MetricsRegistry, TrackId, Tracer, SERVING_ADMISSION_TRACK,
     SERVING_PIPELINE_PID, SERVING_REQUEST_PID,
 };
+use crate::runtime::ThreadPool;
 use std::collections::HashMap;
+use std::sync::Arc;
 
 /// Policy knobs of the serving runtime.
 #[derive(Debug, Clone, Copy)]
@@ -398,6 +400,12 @@ pub struct ServingRuntime<B: BatchedBackend> {
     failed: u64,
     batches: u64,
     batch_rows: u64,
+    /// Cross-batch fan-out pool (see [`ServingRuntime::with_fanout`]):
+    /// when set, a tick/drain collects runs of consecutively formed
+    /// batches from *distinct* tenants and hands them to the backend as
+    /// one [`WaveJob`] wave. `None` (the default) serves batches
+    /// strictly sequentially.
+    fanout: Option<Arc<ThreadPool>>,
 }
 
 impl<B: BatchedBackend> ServingRuntime<B> {
@@ -458,7 +466,27 @@ impl<B: BatchedBackend> ServingRuntime<B> {
             failed: 0,
             batches: 0,
             batch_rows: 0,
+            fanout: None,
         }
+    }
+
+    /// Builder: launch independent fused batches from different tenant
+    /// groups concurrently on `pool` (cross-batch fan-out). The
+    /// observable state is **byte-identical** to the sequential default:
+    /// waves only span distinct tenants (disjoint cache partitions), the
+    /// backend returns results in formed order, and every accounting
+    /// fold — executor stepping, counters, tracer spans, ledgers — runs
+    /// strictly in that order afterwards. Pinned by the fan-out
+    /// fingerprint parity tests in `tests/engine_parity.rs`.
+    ///
+    /// Fan-out changes which batches a *bounded-backlog* tick would
+    /// admit (the bound inspects the executor between forms), so waves
+    /// wider than one batch form only while
+    /// [`ServingConfig::max_backlog_us`] is unbounded (`u64::MAX`, the
+    /// default) — `drain` ignores the bound and always fans out.
+    pub fn with_fanout(mut self, pool: Arc<ThreadPool>) -> ServingRuntime<B> {
+        self.fanout = Some(pool);
+        self
     }
 
     /// Builder: record every serving event — admission instants,
@@ -642,6 +670,15 @@ impl<B: BatchedBackend> ServingRuntime<B> {
     /// unservable batch cannot lose the accounting of its neighbours.
     pub fn tick(&mut self, now_us: u64) -> Vec<ServeOutcome> {
         self.evict_expired(now_us);
+        // An unbounded backlog makes forming independent of execution
+        // (the bound is the only coupling between the two), so the tick
+        // may form everything ready first and fan the batches out.
+        if self.fanout.is_some() && self.cfg.max_backlog_us == u64::MAX {
+            let in_dim = self.in_dim;
+            return self.run_waves(now_us, |former, queue| {
+                former.form_ready(queue, now_us, in_dim)
+            });
+        }
         let mut out = Vec::new();
         while self.backlog_allows(now_us) {
             let Some(batch) = self.former.form_ready(&mut self.queue, now_us, self.in_dim)
@@ -658,9 +695,84 @@ impl<B: BatchedBackend> ServingRuntime<B> {
     /// end-of-trace).
     pub fn drain(&mut self, now_us: u64) -> Vec<ServeOutcome> {
         self.evict_expired(now_us);
+        if self.fanout.is_some() {
+            let in_dim = self.in_dim;
+            return self.run_waves(now_us, |former, queue| former.form(queue, in_dim));
+        }
         let mut out = Vec::new();
         while let Some(batch) = self.former.form(&mut self.queue, self.in_dim) {
             out.extend(self.execute(batch, now_us));
+        }
+        out
+    }
+
+    /// Fan-out forming loop: collect runs of consecutively formed
+    /// batches with pairwise-distinct tenants (a repeat tenant flushes
+    /// the wave — one wave may hold at most one `&mut` on each tenant's
+    /// caches), executing each run as one wave.
+    fn run_waves(
+        &mut self,
+        now_us: u64,
+        mut form: impl FnMut(&mut BatchFormer, &mut AdmissionQueue) -> Option<FusedBatch>,
+    ) -> Vec<ServeOutcome> {
+        let mut out = Vec::new();
+        let mut wave: Vec<FusedBatch> = Vec::new();
+        while let Some(batch) = form(&mut self.former, &mut self.queue) {
+            if wave.iter().any(|b| b.tenant == batch.tenant) {
+                out.extend(self.execute_wave(std::mem::take(&mut wave), now_us));
+            }
+            wave.push(batch);
+        }
+        out.extend(self.execute_wave(wave, now_us));
+        out
+    }
+
+    /// Execute one wave of distinct-tenant batches concurrently through
+    /// [`BatchedBackend::serve_fused_wave`], then account each batch
+    /// strictly in formed order — which is what keeps every observable
+    /// (executor clocks, counters, spans, tenant ledgers, and therefore
+    /// the report fingerprint) byte-identical to serving the wave
+    /// sequentially.
+    fn execute_wave(&mut self, wave: Vec<FusedBatch>, now_us: u64) -> Vec<ServeOutcome> {
+        if wave.is_empty() {
+            return Vec::new();
+        }
+        if wave.len() == 1 {
+            let batch = wave.into_iter().next().unwrap();
+            return self.execute(batch, now_us);
+        }
+        // Stats snapshots in formed order. Wave tenants are distinct and
+        // the backend only touches each job's own caches, so a snapshot
+        // taken before the wave equals one taken right before the
+        // batch's own backend call.
+        let snaps: Vec<(CacheStats, PlanCacheStats)> = wave
+            .iter()
+            .map(|b| {
+                let c = &self.tenants[b.tenant].caches;
+                (c.packed.stats(), c.plans.stats())
+            })
+            .collect();
+        let results = {
+            // Split the borrows: the backend call needs `&mut backend`
+            // while the jobs hold disjoint `&mut` handles into tenants.
+            let ServingRuntime { backend, tenants, fanout, .. } = &mut *self;
+            let mut cache_refs: HashMap<usize, &mut ServingCaches> =
+                tenants.iter_mut().enumerate().map(|(i, t)| (i, &mut t.caches)).collect();
+            let jobs: Vec<WaveJob<'_>> = wave
+                .iter()
+                .map(|b| WaveJob {
+                    rows: b.rows(),
+                    features: &b.features,
+                    precision: b.precision,
+                    caches: cache_refs.remove(&b.tenant).expect("wave tenants are distinct"),
+                })
+                .collect();
+            backend.serve_fused_wave(jobs, fanout.as_ref())
+        };
+        debug_assert_eq!(results.len(), wave.len(), "one result per wave job");
+        let mut out = Vec::new();
+        for ((batch, result), (cache0, plans0)) in wave.into_iter().zip(results).zip(snaps) {
+            out.extend(self.account(batch, now_us, cache0, plans0, result));
         }
         out
     }
@@ -686,18 +798,36 @@ impl<B: BatchedBackend> ServingRuntime<B> {
     }
 
     fn execute(&mut self, batch: FusedBatch, now_us: u64) -> Vec<ServeOutcome> {
-        let rows = batch.rows();
         let tenant = batch.tenant;
         // Stats snapshots bracket the backend call so cache activity can
         // be attributed to this batch as admission-track instants.
         let cache0 = self.tenants[tenant].caches.packed.stats();
         let plans0 = self.tenants[tenant].caches.plans.stats();
-        let (logits, cost) = match self.backend.serve_fused(
-            rows,
+        let result = self.backend.serve_fused(
+            batch.rows(),
             &batch.features,
             batch.precision,
             &mut self.tenants[tenant].caches,
-        ) {
+        );
+        self.account(batch, now_us, cache0, plans0, result)
+    }
+
+    /// Post-execution accounting for one batch: stage costs, executor
+    /// stepping on both clocks, tracer spans and per-request outcomes —
+    /// shared verbatim by the sequential path ([`Self::execute`]) and
+    /// the fan-out path ([`Self::execute_wave`]), which replays it in
+    /// formed order after the concurrent backend calls return.
+    fn account(
+        &mut self,
+        batch: FusedBatch,
+        now_us: u64,
+        cache0: CacheStats,
+        plans0: PlanCacheStats,
+        result: anyhow::Result<(Vec<f32>, StageCost)>,
+    ) -> Vec<ServeOutcome> {
+        let rows = batch.rows();
+        let tenant = batch.tenant;
+        let (logits, cost) = match result {
             Ok(r) => r,
             Err(_) => {
                 // The batch's requests were already cut from the queue;
@@ -1201,6 +1331,52 @@ mod tests {
             rt.fingerprint()
         };
         assert_eq!(run(), run(), "byte-identical metrics for identical runs");
+    }
+
+    #[test]
+    fn fanout_runtime_matches_sequential_byte_for_byte() {
+        // Three tenants, interleaved arrivals, tick + drain: the fan-out
+        // runtime must produce the sequential runtime's outcomes (order
+        // and content) and an identical report fingerprint. EchoBackend
+        // serves waves through the default (sequential) wave impl, so
+        // this pins the wave *formation + accounting* order; the
+        // concurrent backend override is pinned in worker.rs and
+        // tests/engine_parity.rs.
+        let classes = || {
+            vec![
+                TenantClass::new("a", 1.0, 1, 50_000),
+                TenantClass::new("b", 1.0, 2, 50_000),
+                TenantClass::new("c", 2.0, 1, 50_000),
+            ]
+        };
+        let cfg = ServingConfig { max_batch: 2, ..Default::default() };
+        let drive = |mut rt: ServingRuntime<EchoBackend>| {
+            for i in 0..12u64 {
+                rt.submit_for((i % 3) as usize, feat(i as f32), Precision::U8, i).unwrap();
+            }
+            let mut out = rt.tick(5_000);
+            out.extend(rt.drain(5_000));
+            let view: Vec<_> = out
+                .iter()
+                .map(|o| (o.tenant, o.logits.clone(), o.batch_size, o.latency_us))
+                .collect();
+            (view, rt.fingerprint())
+        };
+        let seq = drive(ServingRuntime::with_tenants(
+            EchoBackend { in_dim: 4, n_classes: 2 },
+            cfg,
+            classes(),
+        ));
+        let fan = drive(
+            ServingRuntime::with_tenants(
+                EchoBackend { in_dim: 4, n_classes: 2 },
+                cfg,
+                classes(),
+            )
+            .with_fanout(Arc::new(ThreadPool::new(4))),
+        );
+        assert_eq!(seq.0, fan.0, "outcomes identical in order and content");
+        assert_eq!(seq.1, fan.1, "report fingerprints byte-identical");
     }
 
     #[test]

@@ -4,11 +4,11 @@ use super::cache::{CacheKey, CachedPlan, PlanKey, ServingCaches};
 use super::pipeline::StageCost;
 use crate::arch::VersalArch;
 use crate::cluster::{Cluster, ClusterError, Collectives, DeviceId};
-use crate::dl::{Mlp, MlpSpec, PackedWeights, QuantLinear, TpMode};
+use crate::dl::{HostGemm, Mlp, MlpSpec, PackedWeights, QuantLinear, TpMode};
 use crate::gemm::{prepack_b, Ccp, GemmConfig, ParallelGemm, Precision, PrecisionPolicy, PrepackedB};
 use crate::obs::{TrackId, Tracer, CLUSTER_PID};
 use crate::plan::{Buffer, GemmPlan};
-use crate::runtime::ThreadPool;
+use crate::runtime::{PackArena, ThreadPool};
 use anyhow::Result;
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -127,6 +127,29 @@ pub trait BatchedBackend: Backend {
         Ok((logits, StageCost { pack: 0, transfer: 0, compute: cycles }))
     }
 
+    /// Serve a **wave** of independent fused batches — formed from
+    /// distinct tenants, so each job holds an exclusive `&mut` on its
+    /// own tenant's [`ServingCaches`] and no two jobs share mutable
+    /// state. Results come back in *job order* regardless of completion
+    /// order, which is what keeps the fan-out runtime's accounting (and
+    /// therefore its report fingerprint) byte-identical to serving the
+    /// wave sequentially.
+    ///
+    /// The default runs the jobs one after another through
+    /// [`BatchedBackend::serve_fused`] — correct for every backend.
+    /// Backends whose fused path is `&self`-clean override it to run
+    /// jobs concurrently on `pool` ([`RustGemmBackend`] does).
+    fn serve_fused_wave(
+        &mut self,
+        jobs: Vec<WaveJob<'_>>,
+        pool: Option<&Arc<ThreadPool>>,
+    ) -> Vec<Result<(Vec<f32>, StageCost)>> {
+        let _ = pool;
+        jobs.into_iter()
+            .map(|job| self.serve_fused(job.rows, job.features, job.precision, job.caches))
+            .collect()
+    }
+
     /// Attach a tracer so the backend can emit its own cycle-domain
     /// events (e.g. the cluster backend's collective spans). The default
     /// drops it — most backends have nothing extra to report beyond the
@@ -134,6 +157,24 @@ pub trait BatchedBackend: Backend {
     fn set_tracer(&mut self, tracer: Tracer) {
         let _ = tracer;
     }
+}
+
+/// One batch of a cross-batch fan-out wave (see
+/// [`BatchedBackend::serve_fused_wave`]): the fused rows plus an
+/// exclusive handle on the owning tenant's serving caches. Waves are
+/// formed from *distinct* tenants precisely so these `&mut` borrows are
+/// disjoint — the borrow checker then proves the jobs share no mutable
+/// state, which is what makes the concurrent override safe with zero
+/// `unsafe`.
+pub struct WaveJob<'a> {
+    /// Fused row count of the batch.
+    pub rows: usize,
+    /// `rows × in_dim` concatenated activation rows.
+    pub features: &'a [f32],
+    /// Precision class of every request in the batch.
+    pub precision: Precision,
+    /// The owning tenant's residency caches (packed weights + plans).
+    pub caches: &'a mut ServingCaches,
 }
 
 /// Trivial backend for coordinator unit tests: "logits" echo the first
@@ -178,6 +219,12 @@ pub struct RustGemmBackend {
     cfg: GemmConfig,
     policy: PrecisionPolicy,
     pool: Option<Arc<ThreadPool>>,
+    /// Recycled pack-buffer arena shared by every fused batch. Always
+    /// on: checkout zeroes the buffer before handing it out, so arena
+    /// backing is bit-invisible, and a warm serving tick allocates
+    /// nothing for Ac/Bc (pinned by `tests/serving_alloc.rs`).
+    arena: Arc<PackArena>,
+    pack_parallel: bool,
 }
 
 impl RustGemmBackend {
@@ -191,7 +238,15 @@ impl RustGemmBackend {
         let mut cfg = GemmConfig::paper_table2(tiles);
         // Serving shapes are small; a modest CCP avoids degenerate blocks.
         cfg.ccp = crate::gemm::Ccp { mc: 256, nc: 256, kc: 1024 };
-        RustGemmBackend { arch, mlp, cfg, policy: PrecisionPolicy::default(), pool: None }
+        RustGemmBackend {
+            arch,
+            mlp,
+            cfg,
+            policy: PrecisionPolicy::default(),
+            pool: None,
+            arena: Arc::new(PackArena::new()),
+            pack_parallel: false,
+        }
     }
 
     /// Builder: serve every layer under `policy` instead of fixed u8.
@@ -210,9 +265,85 @@ impl RustGemmBackend {
         self
     }
 
+    /// Builder: split each pack step into disjoint panel slices across
+    /// the pool's workers (requires [`RustGemmBackend::with_pool`] to
+    /// have any effect). Bit-identical to serial packing by destination
+    /// disjointness — pinned by `tests/engine_parity.rs`.
+    pub fn with_pack_parallel(mut self, on: bool) -> RustGemmBackend {
+        self.pack_parallel = on;
+        self
+    }
+
     /// The model being served.
     pub fn mlp(&self) -> &Mlp {
         &self.mlp
+    }
+
+    /// The shared pack arena (exposed so the allocation-regression test
+    /// can assert the warm path checks out only recycled buffers).
+    pub fn arena(&self) -> &Arc<PackArena> {
+        &self.arena
+    }
+
+    /// The host-side execution bundle every fused batch runs under.
+    fn host_exec(&self) -> HostGemm {
+        HostGemm {
+            pool: self.pool.clone(),
+            arena: Some(Arc::clone(&self.arena)),
+            pack_parallel: self.pack_parallel,
+        }
+    }
+
+    /// [`BatchedBackend::serve_fused`] body, `&self`-clean so the
+    /// fan-out wave override can run several batches concurrently (the
+    /// jobs' caches are disjoint `&mut`s; everything read from `self`
+    /// is shared immutably, and the arena is internally synchronised).
+    fn serve_fused_impl(
+        &self,
+        rows: usize,
+        x: &[f32],
+        precision: Precision,
+        caches: &mut ServingCaches,
+        exec: &HostGemm,
+    ) -> Result<(Vec<f32>, StageCost)> {
+        anyhow::ensure!(
+            x.len() == rows * self.mlp.spec.dims[0],
+            "fused batch shape mismatch: {} features for {} rows",
+            x.len(),
+            rows
+        );
+        let rate = self.arch.ic.pack_bytes_per_cycle;
+        let mut cost = StageCost::default();
+        let mut h = x.to_vec();
+        for (l, layer) in self.mlp.layers.iter().enumerate() {
+            let (transient, cached) = charge_layer_pack(
+                layer, l, rows, precision, &self.arch, &self.cfg, rate, caches, &mut cost,
+            )?;
+            let key = CacheKey { layer: l, precision };
+            let pw = transient
+                .as_ref()
+                .or_else(|| caches.packed.peek(&key))
+                .expect("miss path inserted or handed the weights back");
+            // The cached plan IS the executed schedule: the walk replays
+            // the resident handle's step stream, no per-batch spec
+            // re-validation or re-lowering.
+            let (y, cy) = layer.forward_prepacked_with_plan_exec(
+                rows,
+                &h,
+                pw,
+                &cached.plan,
+                &self.arch,
+                exec,
+            )?;
+            h = y;
+            // One mapping from the plan-executed breakdown to the
+            // pipeline stages, shared with every other backend.
+            let split = StageCost::from_breakdown(&cy);
+            cost.pack += split.pack;
+            cost.transfer += split.transfer;
+            cost.compute += split.compute;
+        }
+        Ok((h, cost))
     }
 }
 
@@ -250,44 +381,55 @@ impl BatchedBackend for RustGemmBackend {
         precision: Precision,
         caches: &mut ServingCaches,
     ) -> Result<(Vec<f32>, StageCost)> {
-        anyhow::ensure!(
-            x.len() == rows * self.mlp.spec.dims[0],
-            "fused batch shape mismatch: {} features for {} rows",
-            x.len(),
-            rows
-        );
-        let rate = self.arch.ic.pack_bytes_per_cycle;
-        let mut cost = StageCost::default();
-        let mut h = x.to_vec();
-        for (l, layer) in self.mlp.layers.iter().enumerate() {
-            let (transient, cached) = charge_layer_pack(
-                layer, l, rows, precision, &self.arch, &self.cfg, rate, caches, &mut cost,
-            )?;
-            let key = CacheKey { layer: l, precision };
-            let pw = transient
-                .as_ref()
-                .or_else(|| caches.packed.peek(&key))
-                .expect("miss path inserted or handed the weights back");
-            // The cached plan IS the executed schedule: the walk replays
-            // the resident handle's step stream, no per-batch spec
-            // re-validation or re-lowering.
-            let (y, cy) = layer.forward_prepacked_with_plan_pooled(
-                rows,
-                &h,
-                pw,
-                &cached.plan,
-                &self.arch,
-                self.pool.as_ref(),
-            )?;
-            h = y;
-            // One mapping from the plan-executed breakdown to the
-            // pipeline stages, shared with every other backend.
-            let split = StageCost::from_breakdown(&cy);
-            cost.pack += split.pack;
-            cost.transfer += split.transfer;
-            cost.compute += split.compute;
+        let exec = self.host_exec();
+        self.serve_fused_impl(rows, x, precision, caches, &exec)
+    }
+
+    /// Concurrent wave override: each job runs its whole fused batch on
+    /// one pool worker with the *inner* GEMM sequential — nesting pool
+    /// waves inside pool tasks would deadlock the fixed-size pool, and
+    /// the engines are bit-exact either way (cross-engine parity
+    /// battery), so the logits and stage costs are identical to the
+    /// sequential default. The shared arena is internally synchronised
+    /// and checkout zeroes buffers, so concurrent jobs stay
+    /// bit-invisible to each other.
+    fn serve_fused_wave(
+        &mut self,
+        jobs: Vec<WaveJob<'_>>,
+        pool: Option<&Arc<ThreadPool>>,
+    ) -> Vec<Result<(Vec<f32>, StageCost)>> {
+        let pool = match pool {
+            Some(pool) if jobs.len() > 1 && pool.workers() > 1 => pool,
+            _ => {
+                return jobs
+                    .into_iter()
+                    .map(|j| self.serve_fused(j.rows, j.features, j.precision, j.caches))
+                    .collect();
+            }
+        };
+        let n = jobs.len();
+        let inner = HostGemm {
+            pool: None,
+            arena: Some(Arc::clone(&self.arena)),
+            pack_parallel: false,
+        };
+        let this: &RustGemmBackend = self;
+        let tasks: Vec<_> = jobs
+            .into_iter()
+            .map(|job| {
+                let inner = &inner;
+                move || this.serve_fused_impl(job.rows, job.features, job.precision, job.caches, inner)
+            })
+            .collect();
+        match pool.run(tasks) {
+            Ok(results) => results,
+            // A worker-level failure loses per-job pairing; surface the
+            // same error for every slot so the runtime fails each batch.
+            Err(e) => {
+                let msg = e.to_string();
+                (0..n).map(|_| Err(anyhow::anyhow!("fan-out wave failed: {msg}"))).collect()
+            }
         }
-        Ok((h, cost))
     }
 }
 
@@ -700,6 +842,54 @@ mod tests {
         let mut single = RustGemmBackend::new(vc1902(), spec, 7, 2);
         let (single_logits, _) = single.infer_batch(3, &x).unwrap();
         assert_eq!(warm, single_logits, "cluster warm path == single device");
+    }
+
+    #[test]
+    fn serve_fused_wave_matches_sequential_serving_bit_exactly() {
+        // Two tenants, two precisions, different batch shapes: the
+        // concurrent wave must return the sequential path's logits,
+        // stage costs and cache state exactly, in job order.
+        let spec = MlpSpec { dims: vec![16, 12, 4] };
+        let x2: Vec<f32> = (0..2 * 16).map(|i| (i as f32 * 0.2).cos()).collect();
+        let x3: Vec<f32> = (0..3 * 16).map(|i| (i as f32 * 0.1).sin()).collect();
+        let mut seq = RustGemmBackend::new(vc1902(), spec.clone(), 99, 4);
+        let mut ca = ServingCaches::new(1 << 24, 1 << 20);
+        let mut cb = ServingCaches::new(1 << 24, 1 << 20);
+        let (ya, cost_a) = seq.serve_fused(2, &x2, Precision::U8, &mut ca).unwrap();
+        let (yb, cost_b) = seq.serve_fused(3, &x3, Precision::I16, &mut cb).unwrap();
+
+        let mut wave = RustGemmBackend::new(vc1902(), spec, 99, 4);
+        let mut wa = ServingCaches::new(1 << 24, 1 << 20);
+        let mut wb = ServingCaches::new(1 << 24, 1 << 20);
+        let pool = Arc::new(ThreadPool::new(4));
+        let jobs = vec![
+            WaveJob { rows: 2, features: &x2, precision: Precision::U8, caches: &mut wa },
+            WaveJob { rows: 3, features: &x3, precision: Precision::I16, caches: &mut wb },
+        ];
+        let got: Vec<_> =
+            wave.serve_fused_wave(jobs, Some(&pool)).into_iter().map(|r| r.unwrap()).collect();
+        assert_eq!(got[0].0, ya, "tenant A logits bit-exact in job order");
+        assert_eq!(got[0].1, cost_a, "tenant A stage costs identical");
+        assert_eq!(got[1].0, yb, "tenant B logits bit-exact in job order");
+        assert_eq!(got[1].1, cost_b, "tenant B stage costs identical");
+        assert_eq!(wa.packed.len(), ca.packed.len(), "residency state matches");
+        assert_eq!(wb.plans.stats().lowered, cb.plans.stats().lowered);
+        // Warm wave: every pack buffer now comes off the shared arena's
+        // free lists — no fresh allocations.
+        let fresh_before = wave.arena().stats().fresh;
+        let jobs = vec![
+            WaveJob { rows: 2, features: &x2, precision: Precision::U8, caches: &mut wa },
+            WaveJob { rows: 3, features: &x3, precision: Precision::I16, caches: &mut wb },
+        ];
+        let warm: Vec<_> =
+            wave.serve_fused_wave(jobs, Some(&pool)).into_iter().map(|r| r.unwrap()).collect();
+        assert_eq!(warm[0].0, ya, "warm wave stays bit-exact");
+        assert_eq!(warm[1].0, yb);
+        assert_eq!(
+            wave.arena().stats().fresh,
+            fresh_before,
+            "warm wave packs entirely from recycled arena buffers"
+        );
     }
 
     #[test]

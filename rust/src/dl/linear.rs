@@ -9,20 +9,46 @@ use crate::gemm::{
 };
 use crate::plan::GemmPlan;
 use crate::quant::{quantized_linear, sym_dequantize, QTensor, SymQTensor};
-use crate::runtime::ThreadPool;
+use crate::runtime::{PackArena, ThreadPool};
 use crate::sim::CycleBreakdown;
 use crate::util::split::partition;
 use anyhow::Result;
 use std::sync::Arc;
 
-/// The GEMM engine a serving forward runs on: sequential by default,
-/// pool-backed when the caller threads a host [`ThreadPool`] through
-/// (bit-exact either way — the engine contract).
-fn engine<'a>(arch: &'a VersalArch, pool: Option<&Arc<ThreadPool>>) -> ParallelGemm<'a> {
-    match pool {
-        Some(p) => ParallelGemm::new(arch).with_pool(Arc::clone(p)),
-        None => ParallelGemm::new(arch),
+/// Host execution resources a serving forward threads into its GEMM
+/// engine: an optional worker pool, an optional recycled pack arena,
+/// and the μ-panel parallel-pack switch. The default is the sequential
+/// allocating engine; every combination is bit-exact with it (the
+/// engine contract, pinned by `tests/engine_parity.rs`).
+#[derive(Clone, Default)]
+pub struct HostGemm {
+    /// Worker pool for the threaded engine (`--engine threads`).
+    pub pool: Option<Arc<ThreadPool>>,
+    /// Recycled pack-buffer arena (zero-allocation steady state).
+    pub arena: Option<Arc<PackArena>>,
+    /// Slice pack steps into μ-panel chunks across the pool's workers.
+    pub pack_parallel: bool,
+}
+
+impl HostGemm {
+    /// Just a pool (the pre-arena serving configuration).
+    pub fn from_pool(pool: Option<&Arc<ThreadPool>>) -> HostGemm {
+        HostGemm { pool: pool.map(Arc::clone), ..HostGemm::default() }
     }
+}
+
+/// The GEMM engine a serving forward runs on: sequential by default,
+/// pool/arena-backed per the caller's [`HostGemm`] (bit-exact either
+/// way — the engine contract).
+fn engine<'a>(arch: &'a VersalArch, exec: &HostGemm) -> ParallelGemm<'a> {
+    let mut e = ParallelGemm::new(arch);
+    if let Some(p) = &exec.pool {
+        e = e.with_pool(Arc::clone(p));
+    }
+    if let Some(a) = &exec.arena {
+        e = e.with_arena(Arc::clone(a));
+    }
+    e.with_pack_parallel(exec.pack_parallel)
 }
 
 /// Activation function applied after the affine transform.
@@ -242,8 +268,23 @@ impl QuantLinear {
         cfg: &GemmConfig,
         pool: Option<&Arc<ThreadPool>>,
     ) -> Result<(Vec<f32>, u64)> {
+        self.forward_prec_exec(batch, x, prec, arch, cfg, &HostGemm::from_pool(pool))
+    }
+
+    /// [`QuantLinear::forward_prec_pooled`] with the full [`HostGemm`]
+    /// resource bundle (pool + pack arena + parallel packing) — every
+    /// combination bit-exact with the sequential default.
+    pub fn forward_prec_exec(
+        &self,
+        batch: usize,
+        x: &[f32],
+        prec: Precision,
+        arch: &VersalArch,
+        cfg: &GemmConfig,
+        exec: &HostGemm,
+    ) -> Result<(Vec<f32>, u64)> {
         assert_eq!(x.len(), batch * self.in_dim, "input shape mismatch");
-        let engine = engine(arch, pool);
+        let engine = engine(arch, exec);
         let mut cfg = cfg.clone();
         cfg.ccp = Self::serving_ccp(arch, &cfg, prec);
         let mut cycles = 0u64;
@@ -376,9 +417,23 @@ impl QuantLinear {
         cfg: &GemmConfig,
         pool: Option<&Arc<ThreadPool>>,
     ) -> Result<(Vec<f32>, CycleBreakdown)> {
+        self.forward_prepacked_exec(batch, x, packed, arch, cfg, &HostGemm::from_pool(pool))
+    }
+
+    /// [`QuantLinear::forward_prepacked_pooled`] with the full
+    /// [`HostGemm`] resource bundle.
+    pub fn forward_prepacked_exec(
+        &self,
+        batch: usize,
+        x: &[f32],
+        packed: &PackedWeights,
+        arch: &VersalArch,
+        cfg: &GemmConfig,
+        exec: &HostGemm,
+    ) -> Result<(Vec<f32>, CycleBreakdown)> {
         assert_eq!(x.len(), batch * self.in_dim, "input shape mismatch");
         let prec = packed.precision();
-        let engine = engine(arch, pool);
+        let engine = engine(arch, exec);
         let mut cfg = cfg.clone();
         cfg.ccp = Self::serving_ccp(arch, &cfg, prec);
         let mut cycles = CycleBreakdown::zero();
@@ -471,8 +526,25 @@ impl QuantLinear {
         arch: &VersalArch,
         pool: Option<&Arc<ThreadPool>>,
     ) -> Result<(Vec<f32>, CycleBreakdown)> {
+        self.forward_prepacked_with_plan_exec(batch, x, packed, plan, arch, &HostGemm::from_pool(pool))
+    }
+
+    /// [`QuantLinear::forward_prepacked_with_plan_pooled`] with the full
+    /// [`HostGemm`] resource bundle — the serving runtime's warm hot
+    /// path: cached plan + resident packed B + recycled pack arena, so a
+    /// steady-state tick performs zero pack-buffer allocation (pinned in
+    /// `tests/serving_alloc.rs`).
+    pub fn forward_prepacked_with_plan_exec(
+        &self,
+        batch: usize,
+        x: &[f32],
+        packed: &PackedWeights,
+        plan: &GemmPlan,
+        arch: &VersalArch,
+        exec: &HostGemm,
+    ) -> Result<(Vec<f32>, CycleBreakdown)> {
         assert_eq!(x.len(), batch * self.in_dim, "input shape mismatch");
-        let engine = engine(arch, pool);
+        let engine = engine(arch, exec);
         let mut cycles = CycleBreakdown::zero();
         let mut y: Vec<f32> = match packed {
             PackedWeights::U8(pb) => {

@@ -24,6 +24,6 @@ pub mod traces;
 pub mod train;
 
 pub use attention::{AttentionSpec, EncoderBlock};
-pub use linear::{Activation, PackedWeights, QuantLinear, TpMode};
+pub use linear::{Activation, HostGemm, PackedWeights, QuantLinear, TpMode};
 pub use mlp::{Mlp, MlpSpec};
 pub use traces::{model_trace, GemmShape, ModelKind};

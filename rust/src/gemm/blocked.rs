@@ -12,14 +12,14 @@
 //! explicit-placement reality of the device (§4.1).
 
 use super::microkernel::{ElemKernel, MR, NR};
-use super::packing::{pack_a, pack_b, PackedA, PackedB};
-use super::parallel::{pooled_plan_numerics, BOperand};
+use super::packing::{pack_a, pack_a_in, pack_b, pack_b_in, PackedA, PackedB};
+use super::parallel::{pooled_plan_numerics, BOperand, HostExec};
 use super::precision::{Accum, Element, Precision};
 use super::types::{Mat, MatI32, MatU8};
 use super::GemmConfig;
 use crate::arch::{MemLevel, VersalArch};
 use crate::plan::{Buffer, PlanSpec, PlanStep};
-use crate::runtime::ThreadPool;
+use crate::runtime::{PackArena, ThreadPool};
 use crate::sim::{AieTileModel, CycleBreakdown, Gmio, KernelMode, MemPool, Stream};
 use anyhow::{ensure, Result};
 use std::sync::Arc;
@@ -29,6 +29,8 @@ pub struct BlockedGemm<'a> {
     arch: &'a VersalArch,
     tile: AieTileModel<'a>,
     pool: Option<Arc<ThreadPool>>,
+    arena: Option<Arc<PackArena>>,
+    pack_parallel: bool,
 }
 
 impl<'a> BlockedGemm<'a> {
@@ -36,7 +38,13 @@ impl<'a> BlockedGemm<'a> {
     /// The default engine walks the plan sequentially on the calling
     /// thread — the bit-exact reference.
     pub fn new(arch: &'a VersalArch) -> BlockedGemm<'a> {
-        BlockedGemm { arch, tile: AieTileModel::new(arch), pool: None }
+        BlockedGemm {
+            arch,
+            tile: AieTileModel::new(arch),
+            pool: None,
+            arena: None,
+            pack_parallel: false,
+        }
     }
 
     /// Attach a host [`ThreadPool`]: numerics run as disjoint row-band
@@ -48,6 +56,24 @@ impl<'a> BlockedGemm<'a> {
     /// `tests/engine_parity.rs`).
     pub fn with_pool(mut self, pool: Arc<ThreadPool>) -> BlockedGemm<'a> {
         self.pool = Some(pool);
+        self
+    }
+
+    /// Attach a [`PackArena`]: pack buffers are checked out of the
+    /// arena's recycled free lists and returned on `Release` — zero heap
+    /// allocation in the steady state, bit-identical results (see
+    /// [`super::ParallelGemm::with_arena`]).
+    pub fn with_arena(mut self, arena: Arc<PackArena>) -> BlockedGemm<'a> {
+        self.arena = Some(arena);
+        self
+    }
+
+    /// Slice each pack step of the pooled engine into disjoint μ-panel
+    /// chunks across the pool's workers (see
+    /// [`super::ParallelGemm::with_pack_parallel`]). No effect without
+    /// [`Self::with_pool`].
+    pub fn with_pack_parallel(mut self, on: bool) -> BlockedGemm<'a> {
+        self.pack_parallel = on;
         self
     }
 
@@ -104,7 +130,12 @@ impl<'a> BlockedGemm<'a> {
         if let Some(pool) = &self.pool {
             let steps: Vec<PlanStep> = spec.walk().collect();
             let cycles = self.account_steps(cfg, &steps, prec)?;
-            pooled_plan_numerics(pool, cfg.ccp.kc, cfg.ccp.nc, &steps, a, BOperand::Dense(b), c)?;
+            let exec = HostExec {
+                pool,
+                arena: self.arena.as_deref(),
+                pack_parallel: self.pack_parallel,
+            };
+            pooled_plan_numerics(&exec, cfg.ccp.kc, cfg.ccp.nc, &steps, a, BOperand::Dense(b), c)?;
             return Ok(cycles);
         }
         let stream = Stream::new(self.arch);
@@ -130,14 +161,24 @@ impl<'a> BlockedGemm<'a> {
                     match p.buffer {
                         Buffer::Bc => {
                             // Loop L2: pack Bc into Block RAM.
-                            let packed = pack_b(b, p.row_off, p.col_off, p.rows, p.cols);
+                            let packed = match &self.arena {
+                                Some(arena) => {
+                                    pack_b_in(arena, b, p.row_off, p.col_off, p.rows, p.cols)
+                                }
+                                None => pack_b(b, p.row_off, p.col_off, p.rows, p.cols),
+                            };
                             debug_assert_eq!(packed.bytes(), p.bytes);
                             bram.alloc("Bc", packed.bytes()).map_err(anyhow::Error::msg)?;
                             bc = Some(packed);
                         }
                         Buffer::Ac => {
                             // Loop L3: pack Ac into Ultra RAM.
-                            let packed = pack_a(a, p.row_off, p.col_off, p.rows, p.cols);
+                            let packed = match &self.arena {
+                                Some(arena) => {
+                                    pack_a_in(arena, a, p.row_off, p.col_off, p.rows, p.cols)
+                                }
+                                None => pack_a(a, p.row_off, p.col_off, p.rows, p.cols),
+                            };
                             debug_assert_eq!(packed.bytes(), p.bytes);
                             uram.alloc("Ac", packed.bytes()).map_err(anyhow::Error::msg)?;
                             ac = Some(packed);
@@ -184,11 +225,19 @@ impl<'a> BlockedGemm<'a> {
                 PlanStep::Release(r) => match r.buffer {
                     Buffer::Bc => {
                         bram.freea("Bc").map_err(anyhow::Error::msg)?;
-                        bc = None;
+                        if let Some(packed) = bc.take() {
+                            if let Some(arena) = &self.arena {
+                                arena.recycle(packed.data);
+                            }
+                        }
                     }
                     Buffer::Ac => {
                         uram.freea("Ac").map_err(anyhow::Error::msg)?;
-                        ac = None;
+                        if let Some(packed) = ac.take() {
+                            if let Some(arena) = &self.arena {
+                                arena.recycle(packed.data);
+                            }
+                        }
                     }
                 },
             }
@@ -458,6 +507,43 @@ mod tests {
         assert!(par
             .run(&cfg(8, 8, 8192), &MatU8::zeros(8, 8), &MatU8::zeros(8, 8), &mut c3)
             .is_err());
+    }
+
+    #[test]
+    fn arena_backed_driver_matches_plain_bit_exactly() {
+        // Arena checkout/recycle through the single-tile walk — ragged
+        // shape, packing charged, a dirty second round — must leave the
+        // result and the breakdown byte-identical; the warm round takes
+        // no fresh backing buffers.
+        let a9 = vc1902();
+        let arena = Arc::new(PackArena::new());
+        let plain = BlockedGemm::new(&a9);
+        let pooled_arena = BlockedGemm::new(&a9)
+            .with_pool(Arc::new(ThreadPool::new(4)))
+            .with_arena(arena.clone())
+            .with_pack_parallel(true);
+        let seq_arena = BlockedGemm::new(&a9).with_arena(arena.clone());
+        let mut rng = Pcg32::new(17);
+        let a = MatU8::random(37, 53, &mut rng);
+        let b = MatU8::random(53, 29, &mut rng);
+        let mut cfg_on = cfg(16, 16, 32);
+        cfg_on.count_packing = true;
+        let mut want = MatI32::zeros(37, 29);
+        let cy_want = plain.run(&cfg_on, &a, &b, &mut want).unwrap();
+        for round in 0..2 {
+            let mut c = MatI32::zeros(37, 29);
+            let cy = seq_arena.run(&cfg_on, &a, &b, &mut c).unwrap();
+            assert_eq!(c.max_abs_diff(&want), 0, "seq arena round {round}");
+            assert_eq!(cy, cy_want, "seq arena round {round}");
+            let mut c = MatI32::zeros(37, 29);
+            let cy = pooled_arena.run(&cfg_on, &a, &b, &mut c).unwrap();
+            assert_eq!(c.max_abs_diff(&want), 0, "pooled arena round {round}");
+            assert_eq!(cy, cy_want, "pooled arena round {round}");
+        }
+        let before = arena.stats().fresh;
+        let mut c = MatI32::zeros(37, 29);
+        seq_arena.run(&cfg_on, &a, &b, &mut c).unwrap();
+        assert_eq!(arena.stats().fresh, before, "warm walk must not allocate fresh buffers");
     }
 
     #[test]

@@ -54,7 +54,9 @@ pub mod types;
 pub use blocked::BlockedGemm;
 pub use ccp::Ccp;
 pub use microkernel::{ElemKernel, MicroKernel, MR, NR};
-pub use packing::{pack_a, pack_b, prepack_b, PackedA, PackedB, PrepackedB};
+pub use packing::{
+    pack_a, pack_a_in, pack_b, pack_b_in, prepack_b, prepack_b_in, PackedA, PackedB, PrepackedB,
+};
 pub use parallel::{ParallelGemm, TileStats};
 pub use precision::{
     bf16_forward_error_bound, Accum, Bf16, Element, Precision, PrecisionPolicy,

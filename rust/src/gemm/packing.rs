@@ -21,6 +21,7 @@
 
 use super::microkernel::{MR, NR};
 use super::types::Mat;
+use crate::runtime::arena::{ArenaElement, PackArena};
 
 /// A packed buffer for Ac: `ceil(mc/mr)` panels, each `mr × kc`,
 /// column-major inside the panel (element (i, p) of a panel at
@@ -98,8 +99,51 @@ pub fn pack_a<T: Copy + Default>(
     assert!(ic + mc_eff <= a.rows && pc + kc_eff <= a.cols, "block out of range");
     let n_panels = mc_eff.div_ceil(MR);
     let mut data = vec![T::default(); n_panels * MR * kc_eff];
-    for pi in 0..n_panels {
-        let base = pi * MR * kc_eff;
+    fill_a_panels(&mut data, a, ic, pc, mc_eff, kc_eff, 0);
+    PackedA { mc: mc_eff, kc: kc_eff, n_panels, data }
+}
+
+/// [`pack_a`] with the backing buffer checked out of a [`PackArena`]
+/// instead of freshly allocated: bit-identical output (the checkout is
+/// zeroed to the exact length), zero heap allocation once the arena is
+/// warm. Recycle the buffer afterwards with
+/// `arena.recycle(packed.data)`.
+pub fn pack_a_in<T: ArenaElement>(
+    arena: &PackArena,
+    a: &Mat<T>,
+    ic: usize,
+    pc: usize,
+    mc_eff: usize,
+    kc_eff: usize,
+) -> PackedA<T> {
+    assert!(ic + mc_eff <= a.rows && pc + kc_eff <= a.cols, "block out of range");
+    let n_panels = mc_eff.div_ceil(MR);
+    let mut data = arena.checkout(n_panels * MR * kc_eff);
+    fill_a_panels(&mut data, a, ic, pc, mc_eff, kc_eff, 0);
+    PackedA { mc: mc_eff, kc: kc_eff, n_panels, data }
+}
+
+/// Fill `dst` — pre-zeroed, a whole number of `MR * kc_eff` panels —
+/// with the consecutive mr-row panels `pi0 ..` of block
+/// `A(ic : ic+mc_eff, pc : pc+kc_eff)`.
+///
+/// This is the μ-panel unit of the **disjoint-slice parallel pack**:
+/// each panel writes only its own contiguous destination chunk, so any
+/// partition of the panel range across pool workers produces the byte
+/// stream [`pack_a`] produces serially. The edge panel writes only its
+/// live rows and relies on `dst` being zeroed.
+pub(crate) fn fill_a_panels<T: Copy + Default>(
+    dst: &mut [T],
+    a: &Mat<T>,
+    ic: usize,
+    pc: usize,
+    mc_eff: usize,
+    kc_eff: usize,
+    pi0: usize,
+) {
+    debug_assert_eq!(dst.len() % (MR * kc_eff), 0, "dst must hold whole panels");
+    for (off, panel) in dst.chunks_exact_mut(MR * kc_eff).enumerate() {
+        let pi = pi0 + off;
         let rows_here = MR.min(mc_eff - pi * MR);
         if rows_here == MR {
             // Full panel: 8-row gather with *sequential* writes — the
@@ -109,8 +153,7 @@ pub fn pack_a<T: Copy + Default>(
             let rows: [&[T]; MR] = std::array::from_fn(|i| {
                 &a.data[(ic + pi * MR + i) * a.cols + pc..][..kc_eff]
             });
-            let dst = &mut data[base..base + MR * kc_eff];
-            for (p, out) in dst.chunks_exact_mut(MR).enumerate() {
+            for (p, out) in panel.chunks_exact_mut(MR).enumerate() {
                 for i in 0..MR {
                     out[i] = rows[i][p];
                 }
@@ -118,14 +161,12 @@ pub fn pack_a<T: Copy + Default>(
         } else {
             for i in 0..rows_here {
                 let src_row = &a.data[(ic + pi * MR + i) * a.cols + pc..][..kc_eff];
-                let dst = &mut data[base + i..];
                 for (p, &v) in src_row.iter().enumerate() {
-                    dst[p * MR] = v;
+                    panel[p * MR + i] = v;
                 }
             }
         }
     }
-    PackedA { mc: mc_eff, kc: kc_eff, n_panels, data }
 }
 
 /// A whole B operand packed ahead of time: every (kc, nc) block of the
@@ -200,6 +241,33 @@ pub fn prepack_b<T: Copy + Default>(b: &Mat<T>, kc: usize, nc: usize) -> Prepack
     PrepackedB { rows: b.rows, cols: b.cols, kc, nc, n_pc, n_jc, blocks }
 }
 
+/// [`prepack_b`] with every block's backing buffer checked out of a
+/// [`PackArena`]: bit-identical blocks, warm-capacity reuse when the
+/// weights of a (layer, precision) are re-packed after an eviction.
+pub fn prepack_b_in<T: ArenaElement>(
+    arena: &PackArena,
+    b: &Mat<T>,
+    kc: usize,
+    nc: usize,
+) -> PrepackedB<T> {
+    assert!(kc > 0 && nc > 0, "kc/nc must be positive");
+    let n_pc = b.rows.div_ceil(kc);
+    let n_jc = b.cols.div_ceil(nc);
+    let mut blocks = Vec::with_capacity(n_pc * n_jc);
+    let mut jc = 0;
+    while jc < b.cols {
+        let nc_eff = nc.min(b.cols - jc);
+        let mut pc = 0;
+        while pc < b.rows {
+            let kc_eff = kc.min(b.rows - pc);
+            blocks.push(pack_b_in(arena, b, pc, jc, kc_eff, nc_eff));
+            pc += kc_eff;
+        }
+        jc += nc_eff;
+    }
+    PrepackedB { rows: b.rows, cols: b.cols, kc, nc, n_pc, n_jc, blocks }
+}
+
 /// Pack `B(pc : pc+kc_eff, jc : jc+nc_eff)` into nr-column panels.
 pub fn pack_b<T: Copy + Default>(
     b: &Mat<T>,
@@ -211,24 +279,60 @@ pub fn pack_b<T: Copy + Default>(
     assert!(pc + kc_eff <= b.rows && jc + nc_eff <= b.cols, "block out of range");
     let n_panels = nc_eff.div_ceil(NR);
     let mut data = vec![T::default(); n_panels * kc_eff * NR];
-    for pj in 0..n_panels {
-        let base = pj * kc_eff * NR;
+    fill_b_panels(&mut data, b, pc, jc, kc_eff, nc_eff, 0);
+    PackedB { kc: kc_eff, nc: nc_eff, n_panels, data }
+}
+
+/// [`pack_b`] with the backing buffer checked out of a [`PackArena`]:
+/// bit-identical output, zero heap allocation once the arena is warm.
+/// Recycle the buffer afterwards with `arena.recycle(packed.data)`.
+pub fn pack_b_in<T: ArenaElement>(
+    arena: &PackArena,
+    b: &Mat<T>,
+    pc: usize,
+    jc: usize,
+    kc_eff: usize,
+    nc_eff: usize,
+) -> PackedB<T> {
+    assert!(pc + kc_eff <= b.rows && jc + nc_eff <= b.cols, "block out of range");
+    let n_panels = nc_eff.div_ceil(NR);
+    let mut data = arena.checkout(n_panels * kc_eff * NR);
+    fill_b_panels(&mut data, b, pc, jc, kc_eff, nc_eff, 0);
+    PackedB { kc: kc_eff, nc: nc_eff, n_panels, data }
+}
+
+/// Fill `dst` — pre-zeroed, a whole number of `kc_eff * NR` panels —
+/// with the consecutive nr-column panels `pj0 ..` of block
+/// `B(pc : pc+kc_eff, jc : jc+nc_eff)`. The μ-panel unit of the
+/// disjoint-slice parallel pack (see [`fill_a_panels`]); the edge panel
+/// writes only its live columns and relies on `dst` being zeroed.
+pub(crate) fn fill_b_panels<T: Copy + Default>(
+    dst: &mut [T],
+    b: &Mat<T>,
+    pc: usize,
+    jc: usize,
+    kc_eff: usize,
+    nc_eff: usize,
+    pj0: usize,
+) {
+    debug_assert_eq!(dst.len() % (kc_eff * NR), 0, "dst must hold whole panels");
+    for (off, panel) in dst.chunks_exact_mut(kc_eff * NR).enumerate() {
+        let pj = pj0 + off;
         let cols_here = NR.min(nc_eff - pj * NR);
         if cols_here == NR {
             // Full panel: each destination row of NR elements is
             // contiguous in B too — straight memcpy per row (§Perf).
             for p in 0..kc_eff {
                 let src = &b.data[(pc + p) * b.cols + jc + pj * NR..][..NR];
-                data[base + p * NR..base + p * NR + NR].copy_from_slice(src);
+                panel[p * NR..p * NR + NR].copy_from_slice(src);
             }
         } else {
             for p in 0..kc_eff {
                 let src = &b.data[(pc + p) * b.cols + jc + pj * NR..][..cols_here];
-                data[base + p * NR..base + p * NR + cols_here].copy_from_slice(src);
+                panel[p * NR..p * NR + cols_here].copy_from_slice(src);
             }
         }
     }
-    PackedB { kc: kc_eff, nc: nc_eff, n_panels, data }
 }
 
 #[cfg(test)]
@@ -356,6 +460,86 @@ mod tests {
         prop("pack-roundtrip-i8", 0xA12, 50, roundtrip_case::<i8>);
         prop("pack-roundtrip-i16", 0xA13, 50, roundtrip_case::<i16>);
         prop("pack-roundtrip-bf16", 0xA14, 50, roundtrip_case::<Bf16>);
+    }
+
+    /// Arena-backed packing must be bit-identical to the allocating
+    /// path — including the re-zeroed padding lanes of a *recycled*
+    /// (previously dirty) buffer, the invariant the whole arena design
+    /// rests on.
+    fn arena_parity_case<T: Element + crate::runtime::arena::ArenaElement>(
+        g: &mut crate::util::quickcheck::Gen,
+    ) -> Result<(), String> {
+        let arena = crate::runtime::PackArena::new();
+        let rows = g.dim(40);
+        let cols = g.dim(40);
+        let a = Mat::<T>::random(rows, cols, &mut g.rng);
+        for _round in 0..3 {
+            let mc = g.rng.range(1, rows + 1);
+            let kc = g.rng.range(1, cols + 1);
+            let ic = g.rng.range(0, rows - mc + 1);
+            let pc = g.rng.range(0, cols - kc + 1);
+            let cold = pack_a(&a, ic, pc, mc, kc);
+            let warm = pack_a_in(&arena, &a, ic, pc, mc, kc);
+            if cold != warm {
+                return Err(format!("pack_a_in drifted at ({ic},{pc},{mc},{kc})"));
+            }
+            arena.recycle(warm.data);
+            let kcb = g.rng.range(1, rows + 1);
+            let nc = g.rng.range(1, cols + 1);
+            let pcb = g.rng.range(0, rows - kcb + 1);
+            let jc = g.rng.range(0, cols - nc + 1);
+            let cold_b = pack_b(&a, pcb, jc, kcb, nc);
+            let warm_b = pack_b_in(&arena, &a, pcb, jc, kcb, nc);
+            if cold_b != warm_b {
+                return Err(format!("pack_b_in drifted at ({pcb},{jc},{kcb},{nc})"));
+            }
+            arena.recycle(warm_b.data);
+        }
+        Ok(())
+    }
+
+    #[test]
+    fn prop_arena_packing_is_bit_identical() {
+        prop("arena-pack-u8", 0xA21, 40, arena_parity_case::<u8>);
+        prop("arena-pack-i8", 0xA22, 25, arena_parity_case::<i8>);
+        prop("arena-pack-i16", 0xA23, 25, arena_parity_case::<i16>);
+        prop("arena-pack-bf16", 0xA24, 25, arena_parity_case::<Bf16>);
+    }
+
+    #[test]
+    fn prepack_in_arena_matches_prepack() {
+        let mut rng = Pcg32::new(0x9E);
+        let arena = crate::runtime::PackArena::new();
+        let b = MatU8::random(37, 29, &mut rng);
+        assert_eq!(prepack_b_in(&arena, &b, 16, 12), prepack_b(&b, 16, 12));
+        assert!(arena.stats().checkouts > 0);
+    }
+
+    /// Any chunked partition of the panel range through the fill
+    /// helpers reproduces the serial pack byte-for-byte — the
+    /// disjoint-slice invariant parallel packing relies on.
+    #[test]
+    fn chunked_panel_fills_match_serial_pack() {
+        let mut rng = Pcg32::new(0x9F);
+        let a = MatU8::random(43, 31, &mut rng);
+        let (ic, pc, mc, kc) = (3, 2, 37, 25);
+        let want = pack_a(&a, ic, pc, mc, kc);
+        for chunk_panels in [1, 2, 3, want.n_panels] {
+            let mut data = vec![0u8; want.n_panels * MR * kc];
+            for (ci, chunk) in data.chunks_mut(chunk_panels * MR * kc).enumerate() {
+                fill_a_panels(chunk, &a, ic, pc, mc, kc, ci * chunk_panels);
+            }
+            assert_eq!(data, want.data, "A chunk size {chunk_panels}");
+        }
+        let (pcb, jc, kcb, nc) = (1, 4, 29, 27);
+        let want_b = pack_b(&a, pcb, jc, kcb, nc);
+        for chunk_panels in [1, 2, want_b.n_panels] {
+            let mut data = vec![0u8; want_b.n_panels * kcb * NR];
+            for (ci, chunk) in data.chunks_mut(chunk_panels * kcb * NR).enumerate() {
+                fill_b_panels(chunk, &a, pcb, jc, kcb, nc, ci * chunk_panels);
+            }
+            assert_eq!(data, want_b.data, "B chunk size {chunk_panels}");
+        }
     }
 
     #[test]

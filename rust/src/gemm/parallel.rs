@@ -25,14 +25,17 @@
 //! its Performance/tile column to the printed precision.
 
 use super::microkernel::{ElemKernel, MicroKernel, MR, NR};
-use super::packing::{pack_a, pack_b, PackedA, PackedB, PrepackedB};
+use super::packing::{
+    fill_a_panels, fill_b_panels, pack_a, pack_a_in, pack_b, pack_b_in, PackedA, PackedB,
+    PrepackedB,
+};
 use super::precision::{Accum, Element, Precision};
 use super::types::{Mat, MatI32, MatU8};
 use super::GemmConfig;
 use crate::arch::VersalArch;
 use crate::obs::{PlanSpanEmitter, Tracer};
 use crate::plan::{Buffer, ComputeStep, GemmPlan, PlanSpec, PlanStep};
-use crate::runtime::ThreadPool;
+use crate::runtime::{PackArena, ThreadPool};
 use crate::sim::{AieTileModel, CycleBreakdown, Gmio, KernelMode, Multicast, Stream};
 use anyhow::{ensure, Result};
 use std::collections::{BTreeMap, HashMap};
@@ -73,6 +76,8 @@ pub struct ParallelGemm<'a> {
     tile: AieTileModel<'a>,
     tracer: Tracer,
     pool: Option<Arc<ThreadPool>>,
+    arena: Option<Arc<PackArena>>,
+    pack_parallel: bool,
 }
 
 impl<'a> ParallelGemm<'a> {
@@ -87,6 +92,8 @@ impl<'a> ParallelGemm<'a> {
             tile: AieTileModel::new(arch),
             tracer: Tracer::disabled(),
             pool: None,
+            arena: None,
+            pack_parallel: false,
         }
     }
 
@@ -103,6 +110,33 @@ impl<'a> ParallelGemm<'a> {
     pub fn with_pool(mut self, pool: Arc<ThreadPool>) -> ParallelGemm<'a> {
         self.pool = Some(pool);
         self
+    }
+
+    /// Attach a [`PackArena`]: every Ac/Bc pack buffer of a plan walk is
+    /// then checked out of the arena's recycled free lists and returned
+    /// on the matching `Release` step, so the steady-state execution
+    /// performs zero heap allocation (pinned in `tests/serving_alloc.rs`).
+    /// Checkouts are re-zeroed to the exact length, so results are
+    /// bit-identical with the allocating path for every precision.
+    pub fn with_arena(mut self, arena: Arc<PackArena>) -> ParallelGemm<'a> {
+        self.arena = Some(arena);
+        self
+    }
+
+    /// Split each pack step of the pooled engine into disjoint μ-panel
+    /// slices executed across the pool's workers. Every slice writes
+    /// only its own contiguous destination range, so the packed bytes —
+    /// and therefore the results — are bit-identical with the serial
+    /// pack for any worker count (pinned by
+    /// `chunked_panel_fills_match_serial_pack` and
+    /// `tests/engine_parity.rs`). No effect without [`Self::with_pool`].
+    pub fn with_pack_parallel(mut self, on: bool) -> ParallelGemm<'a> {
+        self.pack_parallel = on;
+        self
+    }
+
+    fn host_exec<'e>(&'e self, pool: &'e ThreadPool) -> HostExec<'e> {
+        HostExec { pool, arena: self.arena.as_deref(), pack_parallel: self.pack_parallel }
     }
 
     /// Attach a tracer: every plan execution then emits its step span
@@ -190,7 +224,15 @@ impl<'a> ParallelGemm<'a> {
             Some(pool) => {
                 let steps: Vec<PlanStep> = spec.walk().collect();
                 let acct = self.account_plan(cfg, steps.iter().copied(), prec);
-                pooled_plan_numerics(pool, cfg.ccp.kc, cfg.ccp.nc, &steps, a, BOperand::Dense(b), c)?;
+                pooled_plan_numerics(
+                    &self.host_exec(pool),
+                    cfg.ccp.kc,
+                    cfg.ccp.nc,
+                    &steps,
+                    a,
+                    BOperand::Dense(b),
+                    c,
+                )?;
                 Ok(acct)
             }
             None => Ok(self.run_plan(cfg, spec.walk(), a, BOperand::Dense(b), c)),
@@ -267,7 +309,7 @@ impl<'a> ParallelGemm<'a> {
                 let steps: Vec<PlanStep> = spec.walk().collect();
                 let acct = self.account_plan(cfg, steps.iter().copied(), prec);
                 pooled_plan_numerics(
-                    pool,
+                    &self.host_exec(pool),
                     cfg.ccp.kc,
                     cfg.ccp.nc,
                     &steps,
@@ -326,7 +368,7 @@ impl<'a> ParallelGemm<'a> {
             Some(pool) => {
                 let acct = self.account_plan(&cfg, plan.steps_iter(), T::PRECISION);
                 pooled_plan_numerics(
-                    pool,
+                    &self.host_exec(pool),
                     cfg.ccp.kc,
                     cfg.ccp.nc,
                     plan.steps(),
@@ -405,16 +447,24 @@ impl<'a> ParallelGemm<'a> {
                     match p.buffer {
                         Buffer::Bc => {
                             bc = match bop {
-                                BOperand::Dense(b) => BcSlot::Owned(pack_b(
-                                    b, p.row_off, p.col_off, p.rows, p.cols,
-                                )),
+                                BOperand::Dense(b) => BcSlot::Owned(match &self.arena {
+                                    Some(arena) => {
+                                        pack_b_in(arena, b, p.row_off, p.col_off, p.rows, p.cols)
+                                    }
+                                    None => pack_b(b, p.row_off, p.col_off, p.rows, p.cols),
+                                }),
                                 BOperand::Prepacked(pb) => BcSlot::Resident(
                                     pb.block(p.row_off / cfg.ccp.kc, p.col_off / cfg.ccp.nc),
                                 ),
                             };
                         }
                         Buffer::Ac => {
-                            ac = Some(pack_a(a, p.row_off, p.col_off, p.rows, p.cols));
+                            ac = Some(match &self.arena {
+                                Some(arena) => {
+                                    pack_a_in(arena, a, p.row_off, p.col_off, p.rows, p.cols)
+                                }
+                                None => pack_a(a, p.row_off, p.col_off, p.rows, p.cols),
+                            });
                         }
                     }
                 }
@@ -444,8 +494,22 @@ impl<'a> ParallelGemm<'a> {
                     );
                 }
                 PlanStep::Release(r) => match r.buffer {
-                    Buffer::Bc => bc = BcSlot::Empty,
-                    Buffer::Ac => ac = None,
+                    Buffer::Bc => {
+                        if let BcSlot::Owned(packed) =
+                            std::mem::replace(&mut bc, BcSlot::Empty)
+                        {
+                            if let Some(arena) = &self.arena {
+                                arena.recycle(packed.data);
+                            }
+                        }
+                    }
+                    Buffer::Ac => {
+                        if let Some(packed) = ac.take() {
+                            if let Some(arena) = &self.arena {
+                                arena.recycle(packed.data);
+                            }
+                        }
+                    }
                 },
             }
         }
@@ -701,6 +765,30 @@ struct Band {
     rows: usize,
 }
 
+/// Host-side execution resources of a pooled plan walk: the worker
+/// pool, the optional recycled pack arena, and whether each pack step
+/// is sliced into μ-panel chunks across the workers. Shared by
+/// [`ParallelGemm`] and [`super::BlockedGemm`].
+pub(crate) struct HostExec<'e> {
+    pub pool: &'e ThreadPool,
+    pub arena: Option<&'e PackArena>,
+    pub pack_parallel: bool,
+}
+
+/// A disjoint destination slice of one pack buffer: the contiguous
+/// μ-panels `panel0 ..` of the block at (`row_off`, `col_off`). The
+/// unit of the parallel pack wave — slices never overlap, so filling
+/// them in any order on any thread reproduces the serial pack
+/// byte-for-byte.
+struct FillSlice<'s, T> {
+    dst: &'s mut [T],
+    row_off: usize,
+    col_off: usize,
+    rows: usize,
+    cols: usize,
+    panel0: usize,
+}
+
 /// Execute a plan's numerics on the host [`ThreadPool`], bit-exact with
 /// the sequential walk for every precision.
 ///
@@ -724,7 +812,7 @@ struct Band {
 /// Shared by [`ParallelGemm`] and [`super::BlockedGemm`] (both engines
 /// execute the same plan IR, so one band executor serves both).
 pub(crate) fn pooled_plan_numerics<T: Element>(
-    pool: &ThreadPool,
+    exec: &HostExec<'_>,
     ccp_kc: usize,
     ccp_nc: usize,
     steps: &[PlanStep],
@@ -732,6 +820,7 @@ pub(crate) fn pooled_plan_numerics<T: Element>(
     bop: BOperand<'_, T>,
     c: &mut Mat<T::Acc>,
 ) -> Result<()> {
+    let pool = exec.pool;
     let kernel = ElemKernel::<T>::new();
     let c_cols = c.cols;
     let c_rows = c.rows;
@@ -761,21 +850,80 @@ pub(crate) fn pooled_plan_numerics<T: Element>(
             }
         }
     }
-    let ac_packs: Vec<PackedA<T>> = pool.run(
-        ac_keys
-            .iter()
-            .map(|&(r0, c0, rows, cols)| move || pack_a(a, r0, c0, rows, cols))
-            .collect(),
-    )?;
-    let bc_packs: Vec<PackedB<T>> = match bop {
-        BOperand::Dense(b) => pool.run(
-            bc_keys
-                .iter()
-                .map(|&(r0, c0, rows, cols)| move || pack_b(b, r0, c0, rows, cols))
-                .collect(),
-        )?,
-        BOperand::Prepacked(_) => Vec::new(),
+    // Destination buffers come from the arena (zeroed to exact length)
+    // or a fresh zeroed vec — element-identical either way. The fills
+    // then run on the pool: with `pack_parallel` each pack is sliced
+    // into ~one μ-panel run per worker, and every slice writes only its
+    // own contiguous destination range, so any partition reproduces the
+    // serial pack byte-for-byte (pinned by
+    // `chunked_panel_fills_match_serial_pack`).
+    let alloc = |n: usize| -> Vec<T> {
+        match exec.arena {
+            Some(arena) => arena.checkout(n),
+            None => vec![T::default(); n],
+        }
     };
+    let mut ac_packs: Vec<PackedA<T>> = ac_keys
+        .iter()
+        .map(|&(_, _, rows, cols)| {
+            let n_panels = rows.div_ceil(MR);
+            PackedA { mc: rows, kc: cols, n_panels, data: alloc(n_panels * MR * cols) }
+        })
+        .collect();
+    let mut bc_packs: Vec<PackedB<T>> = bc_keys
+        .iter()
+        .map(|&(_, _, rows, cols)| {
+            let n_panels = cols.div_ceil(NR);
+            PackedB { kc: rows, nc: cols, n_panels, data: alloc(n_panels * rows * NR) }
+        })
+        .collect();
+    let slice_workers = if exec.pack_parallel { pool.workers().max(1) } else { 1 };
+    {
+        let mut fills: Vec<FillSlice<'_, T>> = Vec::new();
+        for (pa, &(row_off, col_off, rows, cols)) in ac_packs.iter_mut().zip(&ac_keys) {
+            let panel_elems = MR * cols;
+            let per = pa.n_panels.div_ceil(slice_workers).max(1);
+            for (ci, chunk) in pa.data.chunks_mut(per * panel_elems).enumerate() {
+                fills.push(FillSlice {
+                    dst: chunk,
+                    row_off,
+                    col_off,
+                    rows,
+                    cols,
+                    panel0: ci * per,
+                });
+            }
+        }
+        pool.run(
+            fills
+                .into_iter()
+                .map(|f| move || fill_a_panels(f.dst, a, f.row_off, f.col_off, f.rows, f.cols, f.panel0))
+                .collect(),
+        )?;
+    }
+    if let BOperand::Dense(b) = bop {
+        let mut fills: Vec<FillSlice<'_, T>> = Vec::new();
+        for (pb, &(row_off, col_off, rows, cols)) in bc_packs.iter_mut().zip(&bc_keys) {
+            let panel_elems = rows * NR;
+            let per = pb.n_panels.div_ceil(slice_workers).max(1);
+            for (ci, chunk) in pb.data.chunks_mut(per * panel_elems).enumerate() {
+                fills.push(FillSlice {
+                    dst: chunk,
+                    row_off,
+                    col_off,
+                    rows,
+                    cols,
+                    panel0: ci * per,
+                });
+            }
+        }
+        pool.run(
+            fills
+                .into_iter()
+                .map(|f| move || fill_b_panels(f.dst, b, f.row_off, f.col_off, f.rows, f.cols, f.panel0))
+                .collect(),
+        )?;
+    }
 
     // ---- compute wave: disjoint (ic, pi) row bands --------------------
     let computes: Vec<ComputeStep> = steps
@@ -816,42 +964,52 @@ pub(crate) fn pooled_plan_numerics<T: Element>(
         row_cursor = band.row0 + band.rows;
     }
 
-    let computes = &computes;
-    let ac_index = &ac_index;
-    let ac_packs = &ac_packs;
-    let bc_index = &bc_index;
-    let bc_packs = &bc_packs;
-    let tasks: Vec<_> = bands
-        .iter()
-        .zip(slices)
-        .map(|(band, out)| {
-            let (ic, pi, rows) = (band.ic, band.pi, band.rows);
-            move || {
-                for cs in computes.iter().filter(|cs| cs.ic == ic) {
-                    let acr = &ac_packs[ac_index[&(cs.ic, cs.pc)]];
-                    let bcr: &PackedB<T> = match bop {
-                        BOperand::Dense(_) => &bc_packs[bc_index[&(cs.pc, cs.jc)]],
-                        BOperand::Prepacked(pb) => pb.block(cs.pc / ccp_kc, cs.jc / ccp_nc),
-                    };
-                    let ar = acr.panel(pi);
-                    for pj in 0..bcr.n_panels {
-                        let br = bcr.panel(pj);
-                        let mut cr = [T::Acc::zero(); MR * NR];
-                        kernel.run(cs.kc_eff, ar, br, &mut cr);
-                        let col0 = cs.jc + pj * NR;
-                        let cols = NR.min(c_cols.saturating_sub(col0));
-                        for i in 0..rows {
-                            let row = &mut out[i * c_cols + col0..i * c_cols + col0 + cols];
-                            for (j, r) in row.iter_mut().enumerate() {
-                                *r = r.acc_add(cr[i * NR + j]);
+    {
+        let computes = &computes;
+        let ac_index = &ac_index;
+        let ac_packs = &ac_packs;
+        let bc_index = &bc_index;
+        let bc_packs = &bc_packs;
+        let tasks: Vec<_> = bands
+            .iter()
+            .zip(slices)
+            .map(|(band, out)| {
+                let (ic, pi, rows) = (band.ic, band.pi, band.rows);
+                move || {
+                    for cs in computes.iter().filter(|cs| cs.ic == ic) {
+                        let acr = &ac_packs[ac_index[&(cs.ic, cs.pc)]];
+                        let bcr: &PackedB<T> = match bop {
+                            BOperand::Dense(_) => &bc_packs[bc_index[&(cs.pc, cs.jc)]],
+                            BOperand::Prepacked(pb) => pb.block(cs.pc / ccp_kc, cs.jc / ccp_nc),
+                        };
+                        let ar = acr.panel(pi);
+                        for pj in 0..bcr.n_panels {
+                            let br = bcr.panel(pj);
+                            let mut cr = [T::Acc::zero(); MR * NR];
+                            kernel.run(cs.kc_eff, ar, br, &mut cr);
+                            let col0 = cs.jc + pj * NR;
+                            let cols = NR.min(c_cols.saturating_sub(col0));
+                            for i in 0..rows {
+                                let row = &mut out[i * c_cols + col0..i * c_cols + col0 + cols];
+                                for (j, r) in row.iter_mut().enumerate() {
+                                    *r = r.acc_add(cr[i * NR + j]);
+                                }
                             }
                         }
                     }
                 }
-            }
-        })
-        .collect();
-    pool.run(tasks)?;
+            })
+            .collect();
+        pool.run(tasks)?;
+    }
+    if let Some(arena) = exec.arena {
+        for pa in ac_packs {
+            arena.recycle(pa.data);
+        }
+        for pb in bc_packs {
+            arena.recycle(pb.data);
+        }
+    }
     Ok(())
 }
 
@@ -1215,5 +1373,63 @@ mod tests {
         let (cy4, _) = par.run_prepacked_plan_p(&plan, &a, &pb, &mut c4).unwrap();
         assert_eq!(c3.max_abs_diff(&c4), 0, "pooled plan-handle path must be bit-exact");
         assert_eq!(cy3, cy4);
+    }
+
+    #[test]
+    fn arena_and_pack_parallel_engines_stay_bit_exact() {
+        // The PR-9 axes in miniature (full battery in
+        // tests/engine_parity.rs): arena recycling and the μ-panel
+        // parallel pack must leave C, cycles and stats byte-identical
+        // to the plain sequential walk — dense and prepacked, across a
+        // dirty (recycled) second round.
+        use crate::gemm::packing::prepack_b;
+        let arch = vc1902();
+        let mut rng = Pcg32::new(0x62);
+        let (m, k, n) = (37, 70, 29);
+        let mut cfg = cfg(3, 16, 16, 32);
+        cfg.count_packing = true;
+        let a = MatU8::random(m, k, &mut rng);
+        let b = MatU8::random(k, n, &mut rng);
+        let mut want = MatI32::zeros(m, n);
+        let plain = ParallelGemm::new(&arch);
+        let (cy_want, st_want) = plain.run(&cfg, &a, &b, &mut want).unwrap();
+
+        let arena = Arc::new(crate::runtime::PackArena::new());
+        let seq_arena = ParallelGemm::new(&arch).with_arena(arena.clone());
+        for round in 0..2 {
+            let mut c = MatI32::zeros(m, n);
+            let (cy, st) = seq_arena.run(&cfg, &a, &b, &mut c).unwrap();
+            assert_eq!(c.max_abs_diff(&want), 0, "arena round {round}");
+            assert_eq!(cy, cy_want, "arena round {round}");
+            assert_eq!(st, st_want, "arena round {round}");
+        }
+        // The second identical walk is served entirely from recycled
+        // buffers: no fresh backing allocations.
+        let fresh_after_warmup = {
+            let mut c = MatI32::zeros(m, n);
+            let before = arena.stats().fresh;
+            seq_arena.run(&cfg, &a, &b, &mut c).unwrap();
+            arena.stats().fresh - before
+        };
+        assert_eq!(fresh_after_warmup, 0, "warm walk must not allocate fresh buffers");
+
+        let pool = Arc::new(ThreadPool::new(4));
+        let pp = ParallelGemm::new(&arch)
+            .with_pool(pool)
+            .with_arena(arena.clone())
+            .with_pack_parallel(true);
+        for round in 0..2 {
+            let mut c = MatI32::zeros(m, n);
+            let (cy, st) = pp.run(&cfg, &a, &b, &mut c).unwrap();
+            assert_eq!(c.max_abs_diff(&want), 0, "pack-parallel round {round}");
+            assert_eq!(cy, cy_want, "pack-parallel round {round}");
+            assert_eq!(st, st_want, "pack-parallel round {round}");
+        }
+        let pb = prepack_b(&b, cfg.ccp.kc, cfg.ccp.nc);
+        let mut c1 = MatI32::zeros(m, n);
+        let mut c2 = MatI32::zeros(m, n);
+        plain.run_prepacked(&cfg, &a, &pb, &mut c1).unwrap();
+        pp.run_prepacked(&cfg, &a, &pb, &mut c2).unwrap();
+        assert_eq!(c1.max_abs_diff(&c2), 0, "prepacked pack-parallel must be bit-exact");
     }
 }

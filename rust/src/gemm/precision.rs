@@ -257,9 +257,19 @@ impl Accum for f32 {
 
 /// A GEMM input element. Padding uses `Default` (which must be an additive
 /// zero so the zero-padded panel lanes of [`super::packing`] contribute
-/// nothing to the accumulation).
+/// nothing to the accumulation). Every element is also
+/// [`crate::runtime::arena::ArenaElement`], so the pack routines can draw
+/// their backing buffers from a recycled [`crate::runtime::PackArena`].
 pub trait Element:
-    Copy + Clone + Default + PartialEq + Send + Sync + std::fmt::Debug + 'static
+    Copy
+    + Clone
+    + Default
+    + PartialEq
+    + Send
+    + Sync
+    + std::fmt::Debug
+    + 'static
+    + crate::runtime::arena::ArenaElement
 {
     type Acc: Accum;
     const PRECISION: Precision;

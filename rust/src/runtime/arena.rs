@@ -1,0 +1,317 @@
+//! Pack-buffer arena: recycled backing storage for the GEMM hot loop.
+//!
+//! The blocked/parallel drivers allocate a fresh `PackedA`/`PackedB`
+//! backing `Vec` on every block iteration of the plan walk — in a
+//! serving steady state that is thousands of short-lived heap
+//! allocations per second for buffers whose sizes repeat exactly
+//! (a plan has a handful of distinct pack extents). [`PackArena`]
+//! breaks that churn: buffers are checked out per element type from
+//! power-of-two size-class free lists and recycled on `Release`, so
+//! after the first block of the first call the walk reuses warm
+//! capacity and performs **zero heap allocation** for packing
+//! (pinned by `tests/serving_alloc.rs`).
+//!
+//! Determinism is free by construction: a checkout clears and
+//! re-zeroes the buffer to the exact requested length (`resize(n,
+//! T::default())`), which is element-for-element what the cold
+//! `vec![T::default(); n]` produced — the zero-padded edge-panel
+//! invariant of [`crate::gemm::packing`] is preserved bit-for-bit.
+//!
+//! The arena is `Send + Sync` (per-type mutexed free lists, atomic
+//! counters) and shared as an `Arc` between the serving backend, the
+//! engines and — under parallel packing — the pool workers.
+
+use crate::gemm::precision::Bf16;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Environment variable enabling parallel packing (`1` turns the
+/// μ-panel-sliced pack path on wherever a host pool is attached) —
+/// the CI matrix axis next to [`super::pool::POOL_SIZE_ENV`].
+pub const PACK_PARALLEL_ENV: &str = "PALLAS_PACK_PARALLEL";
+
+/// Whether [`PACK_PARALLEL_ENV`] asks for parallel packing.
+pub fn pack_parallel_from_env() -> bool {
+    matches!(std::env::var(PACK_PARALLEL_ENV).as_deref(), Ok("1") | Ok("true") | Ok("on"))
+}
+
+/// Upper bound on free buffers retained per size class (per element
+/// type): beyond this, recycled buffers are dropped. A plan keeps at
+/// most a few packs alive at once, so the bound only matters when a
+/// caller recycles far more than it checks out.
+const MAX_FREE_PER_CLASS: usize = 32;
+
+/// Size classes cover capacities up to `2^(N_CLASSES-1)` elements;
+/// larger buffers are still served (exact capacity) but not pooled
+/// beyond the top class.
+const N_CLASSES: usize = 40;
+
+fn class_of(n: usize) -> usize {
+    // ceil(log2(n)) clamped to the class table; class c holds buffers
+    // with capacity in (2^(c-1), 2^c].
+    (usize::BITS - n.max(1).next_power_of_two().leading_zeros() - 1).min(N_CLASSES as u32 - 1)
+        as usize
+}
+
+/// One element type's free lists, bucketed by floor-log2 capacity.
+struct FreeLists<T> {
+    classes: Mutex<Vec<Vec<Vec<T>>>>,
+}
+
+impl<T> Default for FreeLists<T> {
+    fn default() -> FreeLists<T> {
+        FreeLists { classes: Mutex::new((0..N_CLASSES).map(|_| Vec::new()).collect()) }
+    }
+}
+
+impl<T: Copy + Default> FreeLists<T> {
+    /// A buffer of exactly `n` zeroed elements: recycled capacity when a
+    /// large-enough buffer is free, a fresh allocation (capacity rounded
+    /// up to the class size) otherwise. Returns `(buf, recycled?)`.
+    fn checkout(&self, n: usize) -> (Vec<T>, bool) {
+        let want = class_of(n);
+        let mut classes = lock_ignore_poison(&self.classes);
+        for c in want..N_CLASSES {
+            if let Some(mut buf) = classes[c].pop() {
+                drop(classes);
+                debug_assert!(buf.capacity() >= n, "class {c} buffer too small for {n}");
+                buf.clear();
+                buf.resize(n, T::default());
+                return (buf, true);
+            }
+        }
+        drop(classes);
+        let mut buf = Vec::with_capacity(n.max(1).next_power_of_two());
+        buf.resize(n, T::default());
+        (buf, false)
+    }
+
+    /// Return a buffer's capacity to its size class (dropped when the
+    /// class is full or the buffer has no capacity).
+    fn recycle(&self, buf: Vec<T>) -> bool {
+        if buf.capacity() == 0 {
+            return false;
+        }
+        // floor(log2(capacity)): a buffer sits in the largest class
+        // whose checkout demand it can always satisfy.
+        let c = ((usize::BITS - 1 - buf.capacity().leading_zeros()) as usize)
+            .min(N_CLASSES - 1);
+        let mut classes = lock_ignore_poison(&self.classes);
+        if classes[c].len() < MAX_FREE_PER_CLASS {
+            classes[c].push(buf);
+            true
+        } else {
+            false
+        }
+    }
+}
+
+fn lock_ignore_poison<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// An element type the arena can pool. Sealed to the four precisions of
+/// the mixed-precision suite — exactly the types [`crate::gemm::packing`]
+/// packs. The methods are routing plumbing; use [`PackArena::checkout`]
+/// and [`PackArena::recycle`].
+pub trait ArenaElement: Copy + Default + Send + 'static {
+    /// Checkout from this element type's free lists inside the arena.
+    #[doc(hidden)]
+    fn arena_checkout(arena: &PackArena, n: usize) -> (Vec<Self>, bool)
+    where
+        Self: Sized;
+
+    /// Recycle into this element type's free lists inside the arena.
+    #[doc(hidden)]
+    fn arena_recycle(arena: &PackArena, buf: Vec<Self>) -> bool
+    where
+        Self: Sized;
+}
+
+macro_rules! arena_element {
+    ($ty:ty, $field:ident) => {
+        impl ArenaElement for $ty {
+            fn arena_checkout(arena: &PackArena, n: usize) -> (Vec<$ty>, bool) {
+                arena.$field.checkout(n)
+            }
+            fn arena_recycle(arena: &PackArena, buf: Vec<$ty>) -> bool {
+                arena.$field.recycle(buf)
+            }
+        }
+    };
+}
+
+arena_element!(u8, pool_u8);
+arena_element!(i8, pool_i8);
+arena_element!(i16, pool_i16);
+arena_element!(Bf16, pool_bf16);
+
+/// Checkout/recycle counters — the warm-path witness
+/// (`fresh == 0` over a warm interval means the steady state allocated
+/// nothing for packing).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct ArenaStats {
+    /// Buffers handed out (recycled + fresh).
+    pub checkouts: u64,
+    /// Checkouts served from a free list (no heap allocation).
+    pub recycled: u64,
+    /// Checkouts that had to allocate a fresh backing buffer.
+    pub fresh: u64,
+    /// Buffers returned to a free list.
+    pub returned: u64,
+}
+
+/// Recycled pack-buffer pool: per-precision, power-of-two size-class
+/// free lists behind [`crate::gemm::packing::pack_a_in`] /
+/// [`crate::gemm::packing::pack_b_in`] and the engines' plan walks.
+/// See the module docs for the lifecycle and determinism argument.
+#[derive(Default)]
+pub struct PackArena {
+    pool_u8: FreeLists<u8>,
+    pool_i8: FreeLists<i8>,
+    pool_i16: FreeLists<i16>,
+    pool_bf16: FreeLists<Bf16>,
+    checkouts: AtomicU64,
+    recycled: AtomicU64,
+    fresh: AtomicU64,
+    returned: AtomicU64,
+}
+
+impl PackArena {
+    /// An empty arena (free lists fill as buffers are recycled).
+    pub fn new() -> PackArena {
+        PackArena::default()
+    }
+
+    /// A zeroed buffer of exactly `n` elements: warm capacity when a
+    /// free buffer of the right class exists, a fresh allocation
+    /// otherwise. Element-for-element identical to
+    /// `vec![T::default(); n]`.
+    pub fn checkout<T: ArenaElement>(&self, n: usize) -> Vec<T> {
+        let (buf, was_recycled) = T::arena_checkout(self, n);
+        self.checkouts.fetch_add(1, Ordering::Relaxed);
+        if was_recycled {
+            self.recycled.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.fresh.fetch_add(1, Ordering::Relaxed);
+        }
+        buf
+    }
+
+    /// Hand a buffer's capacity back for reuse. Dropping a buffer
+    /// instead of recycling it is always safe — the arena is an
+    /// optimisation, never an obligation.
+    pub fn recycle<T: ArenaElement>(&self, buf: Vec<T>) {
+        if T::arena_recycle(self, buf) {
+            self.returned.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Snapshot of the counters (Relaxed reads — exact once concurrent
+    /// checkouts have quiesced).
+    pub fn stats(&self) -> ArenaStats {
+        ArenaStats {
+            checkouts: self.checkouts.load(Ordering::Relaxed),
+            recycled: self.recycled.load(Ordering::Relaxed),
+            fresh: self.fresh.load(Ordering::Relaxed),
+            returned: self.returned.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn checkout_is_zeroed_and_exact_length() {
+        let arena = PackArena::new();
+        let mut v: Vec<u8> = arena.checkout(100);
+        assert_eq!(v.len(), 100);
+        assert!(v.iter().all(|&x| x == 0));
+        v.iter_mut().for_each(|x| *x = 0xAB);
+        arena.recycle(v);
+        // The recycled buffer comes back zeroed at the new length.
+        let v2: Vec<u8> = arena.checkout(64);
+        assert_eq!(v2.len(), 64);
+        assert!(v2.iter().all(|&x| x == 0), "recycled buffer must be re-zeroed");
+    }
+
+    #[test]
+    fn warm_checkout_recycles_instead_of_allocating() {
+        let arena = PackArena::new();
+        let v: Vec<i16> = arena.checkout(1000);
+        let cap = v.capacity();
+        arena.recycle(v);
+        let v2: Vec<i16> = arena.checkout(900);
+        assert_eq!(v2.capacity(), cap, "same backing buffer served again");
+        let s = arena.stats();
+        assert_eq!((s.checkouts, s.recycled, s.fresh, s.returned), (2, 1, 1, 1));
+    }
+
+    #[test]
+    fn larger_request_after_recycle_allocates_fresh() {
+        let arena = PackArena::new();
+        let v: Vec<u8> = arena.checkout(64); // capacity 64, class 6
+        arena.recycle(v);
+        // 65 needs class 7; the class-6 buffer cannot serve it.
+        let v2: Vec<u8> = arena.checkout(65);
+        assert!(v2.capacity() >= 65);
+        assert_eq!(arena.stats().fresh, 2);
+    }
+
+    #[test]
+    fn per_type_pools_are_independent() {
+        let arena = PackArena::new();
+        let v: Vec<u8> = arena.checkout(256);
+        arena.recycle(v);
+        // An i8 checkout of the same size must not see the u8 buffer.
+        let _w: Vec<i8> = arena.checkout(256);
+        assert_eq!(arena.stats().recycled, 0);
+        let _b: Vec<Bf16> = arena.checkout(8);
+        assert_eq!(arena.stats().fresh, 3);
+    }
+
+    #[test]
+    fn class_bound_drops_excess_buffers() {
+        let arena = PackArena::new();
+        let bufs: Vec<Vec<u8>> =
+            (0..MAX_FREE_PER_CLASS + 4).map(|_| arena.checkout::<u8>(128)).collect();
+        for b in bufs {
+            arena.recycle(b);
+        }
+        assert_eq!(arena.stats().returned, MAX_FREE_PER_CLASS as u64);
+    }
+
+    #[test]
+    fn zero_length_checkout_is_served() {
+        let arena = PackArena::new();
+        let v: Vec<u8> = arena.checkout(0);
+        assert!(v.is_empty());
+        arena.recycle(v);
+    }
+
+    #[test]
+    fn arena_is_shareable_across_threads() {
+        use std::sync::Arc;
+        let arena = Arc::new(PackArena::new());
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let a = Arc::clone(&arena);
+                std::thread::spawn(move || {
+                    for _ in 0..100 {
+                        let v: Vec<u8> = a.checkout(512);
+                        a.recycle(v);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(arena.stats().checkouts, 400);
+        // After the first few cold checkouts the free lists serve
+        // everything: fresh is bounded by the thread count.
+        assert!(arena.stats().fresh <= 4, "fresh = {}", arena.stats().fresh);
+    }
+}

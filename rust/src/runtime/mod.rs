@@ -18,13 +18,17 @@
 //!
 //! The module also hosts the host-side execution machinery that is
 //! *not* PJRT-specific: [`pool::ThreadPool`], the vendored
-//! work-stealing thread pool behind the `--engine threads` CLI seam.
+//! work-stealing thread pool behind the `--engine threads` CLI seam,
+//! and [`arena::PackArena`], the recycled pack-buffer pool behind the
+//! zero-allocation GEMM hot loop.
 
+pub mod arena;
 mod artifact;
 #[cfg(feature = "pjrt")]
 mod pjrt;
 pub mod pool;
 
+pub use arena::{pack_parallel_from_env, ArenaStats, PackArena, PACK_PARALLEL_ENV};
 pub use artifact::{artifacts_dir, ArtifactId, ArtifactRegistry};
 #[cfg(feature = "pjrt")]
 pub use pjrt::Engine;

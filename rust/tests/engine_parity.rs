@@ -10,19 +10,27 @@
 //! accumulation reproduces the sequential association exactly) is
 //! asserted here over fuzzed shapes, not just argued in comments.
 //!
-//! CI runs this file as a named gate across a `PALLAS_POOL_SIZE`
-//! matrix (1/2/8); when the variable is set the battery pins every
-//! pooled run to that worker count, otherwise it sweeps {1, 2, 4, 8}.
+//! CI runs this file as a named gate across a `PALLAS_POOL_SIZE` ×
+//! `PALLAS_PACK_PARALLEL` matrix (pool 1/2/8 × pack-parallel 0/1); when
+//! a variable is set the battery pins every pooled run to that value,
+//! otherwise it sweeps pool sizes {1, 2, 4, 8} with serial packing.
+//! Pooled engines always run arena-backed here, so the recycled-buffer
+//! path is pinned bit-exact across the whole battery too. The explicit
+//! axis tests below additionally cover pack-parallel on/off and serving
+//! fan-out on/off regardless of the environment.
 
 use std::sync::Arc;
 use versal_gemm::arch::vc1902;
+use versal_gemm::coordinator::{RustGemmBackend, ServingConfig, ServingRuntime, TenantClass};
+use versal_gemm::dl::MlpSpec;
 use versal_gemm::gemm::precision::Bf16;
 use versal_gemm::gemm::{
-    prepack_b, BlockedGemm, Ccp, Element, GemmConfig, Mat, ParallelGemm,
+    prepack_b, BlockedGemm, Ccp, Element, GemmConfig, Mat, ParallelGemm, Precision,
 };
+use versal_gemm::obs::{to_chrome_json, Tracer};
 use versal_gemm::plan::GemmPlan;
 use versal_gemm::runtime::pool::POOL_SIZE_ENV;
-use versal_gemm::runtime::ThreadPool;
+use versal_gemm::runtime::{pack_parallel_from_env, PackArena, ThreadPool};
 use versal_gemm::util::quickcheck::prop;
 use versal_gemm::util::Pcg32;
 use versal_gemm::VersalArch;
@@ -68,9 +76,15 @@ fn parity_case<T: Element>(
     let a = Mat::<T>::random(m, k, &mut rng);
     let b = Mat::<T>::random(k, n, &mut rng);
     let pool = Arc::new(ThreadPool::new(workers));
+    // Pooled engines run arena-backed with the pack-parallel mode the
+    // CI matrix pins (serial packing when the variable is unset) — the
+    // sequential reference stays allocator-plain, so every comparison
+    // also pins arena recycling and slice packing bit-invisible.
+    let pp = pack_parallel_from_env();
+    let arena = Arc::new(PackArena::new());
     let label = |what: &str| {
         format!(
-            "{what} diverged: ({m}, {n}, {k}) {} {} workers={workers}",
+            "{what} diverged: ({m}, {n}, {k}) {} {} workers={workers} pack_parallel={pp}",
             T::PRECISION,
             cfg.ccp
         )
@@ -78,7 +92,10 @@ fn parity_case<T: Element>(
 
     // --- ParallelGemm, dense ------------------------------------------
     let seq = ParallelGemm::new(arch);
-    let pooled = ParallelGemm::new(arch).with_pool(Arc::clone(&pool));
+    let pooled = ParallelGemm::new(arch)
+        .with_pool(Arc::clone(&pool))
+        .with_arena(Arc::clone(&arena))
+        .with_pack_parallel(pp);
     let mut c_seq = Mat::<T::Acc>::zeros(m, n);
     let (cy_seq, st_seq) = seq.run_p::<T>(cfg, &a, &b, &mut c_seq).map_err(|e| e.to_string())?;
     let mut c_pool = Mat::<T::Acc>::zeros(m, n);
@@ -132,7 +149,10 @@ fn parity_case<T: Element>(
 
     // --- BlockedGemm (the pedagogical single-tile driver) -------------
     let bseq = BlockedGemm::new(arch);
-    let bpooled = BlockedGemm::new(arch).with_pool(Arc::clone(&pool));
+    let bpooled = BlockedGemm::new(arch)
+        .with_pool(Arc::clone(&pool))
+        .with_arena(Arc::clone(&arena))
+        .with_pack_parallel(pp);
     let mut cb_seq = Mat::<T::Acc>::zeros(m, n);
     let bcy_seq = bseq.run_p::<T>(cfg, &a, &b, &mut cb_seq).map_err(|e| e.to_string())?;
     let mut cb_pool = Mat::<T::Acc>::zeros(m, n);
@@ -243,6 +263,128 @@ fn reduction_order_is_deterministic_across_16_repeats() {
             "repeat {rep}: pooled bf16 result drifted from the sequential reference"
         );
         assert_eq!(cy, cy_ref, "repeat {rep}: cycle accounting drifted");
+    }
+}
+
+/// Explicit pack-parallel axis: sequential reference vs an arena-backed
+/// pooled engine with slice packing forced on or off, two rounds each
+/// (the second round executes entirely from recycled arena buffers).
+fn pack_parallel_case<T: Element>(
+    arch: &VersalArch,
+    cfg: &GemmConfig,
+    (m, n, k): (usize, usize, usize),
+    seed: u64,
+    workers: usize,
+    pp: bool,
+) -> Result<(), String> {
+    let mut rng = Pcg32::new(seed);
+    let a = Mat::<T>::random(m, k, &mut rng);
+    let b = Mat::<T>::random(k, n, &mut rng);
+    let label = |what: &str| {
+        format!(
+            "{what} diverged: ({m}, {n}, {k}) {} workers={workers} pack_parallel={pp}",
+            T::PRECISION
+        )
+    };
+
+    let seq = ParallelGemm::new(arch);
+    let mut c_ref = Mat::<T::Acc>::zeros(m, n);
+    let (cy_ref, st_ref) = seq.run_p::<T>(cfg, &a, &b, &mut c_ref).map_err(|e| e.to_string())?;
+    let pb = prepack_b(&b, cfg.ccp.kc, cfg.ccp.nc);
+    let mut cp_ref = Mat::<T::Acc>::zeros(m, n);
+    let (pcy_ref, _) =
+        seq.run_prepacked_p::<T>(cfg, &a, &pb, &mut cp_ref).map_err(|e| e.to_string())?;
+
+    let pooled = ParallelGemm::new(arch)
+        .with_pool(Arc::new(ThreadPool::new(workers)))
+        .with_arena(Arc::new(PackArena::new()))
+        .with_pack_parallel(pp);
+    for round in 0..2 {
+        let mut c = Mat::<T::Acc>::zeros(m, n);
+        let (cy, st) = pooled.run_p::<T>(cfg, &a, &b, &mut c).map_err(|e| e.to_string())?;
+        if c.data != c_ref.data {
+            return Err(label(&format!("dense C bits (round {round})")));
+        }
+        if cy != cy_ref || st != st_ref {
+            return Err(label(&format!("dense accounting (round {round})")));
+        }
+        let mut cp = Mat::<T::Acc>::zeros(m, n);
+        let (pcy, _) =
+            pooled.run_prepacked_p::<T>(cfg, &a, &pb, &mut cp).map_err(|e| e.to_string())?;
+        if cp.data != cp_ref.data || pcy != pcy_ref {
+            return Err(label(&format!("prepacked parity (round {round})")));
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn pack_parallel_axis_parity_all_precisions() {
+    // Both pack-parallel modes, regardless of the CI environment: edge
+    // shapes (sub-panel, ragged, edge-block) across pool sizes {1, 2, 8}
+    // and all four precisions, with packing cycles counted so the
+    // engine-independent accounting fold is exercised too.
+    let arch = vc1902();
+    let mut cfg = GemmConfig::paper_table2(3);
+    cfg.ccp = Ccp { mc: 24, nc: 40, kc: 48 };
+    cfg.count_packing = true;
+    let shapes = [(3, 5, 7), (37, 29, 70), (33, 65, 9)];
+    for &pp in &[false, true] {
+        for &w in &[1usize, 2, 8] {
+            for &shape in &shapes {
+                pack_parallel_case::<u8>(&arch, &cfg, shape, 0xAA1, w, pp).unwrap();
+                pack_parallel_case::<i8>(&arch, &cfg, shape, 0xAA2, w, pp).unwrap();
+                pack_parallel_case::<i16>(&arch, &cfg, shape, 0xAA3, w, pp).unwrap();
+                pack_parallel_case::<Bf16>(&arch, &cfg, shape, 0xAA4, w, pp).unwrap();
+            }
+        }
+    }
+}
+
+#[test]
+fn fanout_serving_is_byte_identical_to_sequential() {
+    // Cross-batch fan-out axis: a three-tenant mixed-precision workload
+    // served with and without the fan-out pool must produce identical
+    // outcome streams, byte-identical report fingerprints (which fold
+    // in the per-tenant ledgers) and byte-identical Chrome traces, at
+    // every pool size.
+    let arch = vc1902();
+    let spec = MlpSpec { dims: vec![16, 12, 4] };
+    let classes = || {
+        vec![
+            TenantClass::new("gold", 1.0, 3, 50_000),
+            TenantClass::new("silver", 1.0, 2, 50_000),
+            TenantClass::new("free", 2.0, 1, 50_000),
+        ]
+    };
+    let cfg = ServingConfig { max_batch: 2, ..Default::default() };
+    let precs = [Precision::U8, Precision::I16, Precision::Bf16];
+    let drive = |fanout_workers: Option<usize>| {
+        let backend = RustGemmBackend::new(arch.clone(), spec.clone(), 42, 2);
+        let tracer = Tracer::recording();
+        let mut rt = ServingRuntime::with_tenants(backend, cfg, classes())
+            .with_tracer(tracer.clone());
+        if let Some(w) = fanout_workers {
+            rt = rt.with_fanout(Arc::new(ThreadPool::new(w)));
+        }
+        for i in 0..18u64 {
+            let x: Vec<f32> = (0..16).map(|j| ((i * 16 + j) as f32 * 0.05).sin()).collect();
+            rt.submit_for((i % 3) as usize, x, precs[(i % 3) as usize], i).unwrap();
+        }
+        let mut outs = rt.tick(5_000);
+        outs.extend(rt.drain(5_000));
+        let view: Vec<_> = outs
+            .into_iter()
+            .map(|o| (o.tenant, o.precision, o.logits, o.batch_size, o.latency_us))
+            .collect();
+        (view, rt.fingerprint(), to_chrome_json(&tracer.snapshot()))
+    };
+    let seq = drive(None);
+    for w in [1usize, 2, 8] {
+        let fan = drive(Some(w));
+        assert_eq!(fan.0, seq.0, "outcomes diverged under fan-out ({w} workers)");
+        assert_eq!(fan.1, seq.1, "report fingerprint diverged under fan-out ({w} workers)");
+        assert_eq!(fan.2, seq.2, "Chrome trace bytes diverged under fan-out ({w} workers)");
     }
 }
 
