@@ -39,6 +39,17 @@ for ps in 1 2 8; do
     done
 done
 
+echo "==> fault-tolerance chaos battery (tests/fault_tolerance.rs, named so a failure is attributable)"
+# Seeded storms replay byte-identically, the conservation ledger never
+# leaks under faults, retries respect deadlines and budgets, and
+# quarantine-and-replan is bit-exact vs the healthy pool.
+cargo test -q --test fault_tolerance
+# One leg under the threads engine: fault handling must stay
+# deterministic when the GEMM numerics run on a host pool with
+# slice-parallel packing.
+echo "    -- PALLAS_POOL_SIZE=2 PALLAS_PACK_PARALLEL=1"
+PALLAS_POOL_SIZE=2 PALLAS_PACK_PARALLEL=1 cargo test -q --test fault_tolerance
+
 echo "==> pack-arena allocation regression (tests/serving_alloc.rs, named so a failure is attributable)"
 # Warm plan walks must allocate zero bytes and warm serving ticks must
 # be allocation-flat; the counting global allocator pins both.
@@ -81,6 +92,9 @@ VERSAL_BENCH_FAST=1 cargo bench --bench bench_serving -- --quick
 echo "==> bench_plan --quick (smoke: plan predicted == executed, streaming == materialized)"
 VERSAL_BENCH_FAST=1 cargo bench --bench bench_plan -- --quick
 
+echo "==> bench_faults --quick (smoke: empty plan free, device-loss goodput floor, storm ledger, seeded determinism)"
+VERSAL_BENCH_FAST=1 cargo bench --bench bench_faults -- --quick
+
 echo "==> serve --trace-out (quick Chrome trace artifact)"
 # The serving trace rides along with the BENCH artifacts: a small
 # deterministic replay exported as Chrome trace-event JSON. The build
@@ -118,7 +132,7 @@ echo "==> bench-trend vs previous artifacts (blocking: >5% cycle growth fails)"
 # *_cycles metric fails the gate. Artifacts carry a top-level "schema"
 # tag — when it changes (metric rename / resize), bench-trend resets
 # the baseline instead of failing, so schema migrations stay one-commit.
-for artifact in BENCH_plan.json BENCH_serving.json; do
+for artifact in BENCH_plan.json BENCH_serving.json BENCH_faults.json; do
     prev="bench_baseline/${artifact}"
     if [ -s "${prev}" ]; then
         target/release/versal-gemm bench-trend --fail-on-regress \
@@ -132,7 +146,7 @@ echo "==> bench artifacts present (uploaded by the workflow for the BENCH trajec
 # cargo runs bench binaries with the package dir (rust/) as cwd, so the
 # artifacts land in rust/bench_results — the same paths the workflow
 # uploads.
-for artifact in BENCH_plan.json BENCH_serving.json TRACE_serving.json; do
+for artifact in BENCH_plan.json BENCH_serving.json BENCH_faults.json TRACE_serving.json; do
     test -s "rust/bench_results/${artifact}" \
         || { echo "missing bench artifact rust/bench_results/${artifact}" >&2; exit 1; }
     echo "    rust/bench_results/${artifact}: $(wc -c < "rust/bench_results/${artifact}") bytes"
@@ -152,5 +166,9 @@ grep -q '"pack_wall_ns"' rust/bench_results/BENCH_plan.json \
     || { echo "BENCH_plan.json must carry per-case pack_wall_ns (schema plan-v3)" >&2; exit 1; }
 grep -q '"fanout"' rust/bench_results/BENCH_serving.json \
     || { echo "BENCH_serving.json must carry the fanout block (schema serving-v4)" >&2; exit 1; }
+grep -q '"faults-v1"' rust/bench_results/BENCH_faults.json \
+    || { echo "BENCH_faults.json must carry the faults-v1 schema tag" >&2; exit 1; }
+grep -q '"goodput_after_fault"' rust/bench_results/BENCH_faults.json \
+    || { echo "BENCH_faults.json must carry the goodput_after_fault gate value" >&2; exit 1; }
 
 echo "CI checks passed."

@@ -1,0 +1,226 @@
+//! Bench: **fault injection + degraded-mode serving** — the
+//! deterministic chaos harness over the continuous-batching runtime.
+//!
+//! Acceptance gates (asserted, not just printed):
+//!
+//! 1. an **empty fault plan is observationally free**: a run with a
+//!    zero-event injector attached produces a report fingerprint
+//!    byte-identical to a run with no injector at all;
+//! 2. a seeded **single-device-loss** run completes, and its goodput
+//!    after the first fault retains at least the surviving capacity
+//!    fraction minus 10 points (half the pool dies ⇒ goodput under
+//!    fault ≥ 40% of post-fault submissions at this load);
+//! 3. the **conservation ledger never leaks under faults**: submitted
+//!    == completed + failed + expired + shed + rejected in every mode,
+//!    storms included — retries re-enter forming without re-counting
+//!    submission;
+//! 4. fault runs are **deterministic**: two identically-seeded
+//!    device-loss runs (and two identically-seeded storm runs) produce
+//!    byte-identical fingerprints.
+//!
+//! The runtime is deterministic (logical clock + calibrated cycle
+//! models), so these gates are CI-stable; host wall time is reported in
+//! `BENCH_faults.json` (`wall_ns`) but never gated.
+//!
+//! ```bash
+//! cargo bench --bench bench_faults            # full (192 requests/run)
+//! cargo bench --bench bench_faults -- --quick # CI smoke (48 requests)
+//! ```
+
+use versal_gemm::arch::vc1902;
+use versal_gemm::coordinator::{
+    ArrivalGen, ArrivalKind, FeatureGen, RustGemmBackend, ServingConfig, ServingReport,
+    ServingRuntime,
+};
+use versal_gemm::dl::MlpSpec;
+use versal_gemm::fault::{FaultInjector, FaultPlan};
+use versal_gemm::gemm::Precision;
+
+const IN_DIM: usize = 256;
+
+/// Replay one seeded open-loop trace through a runtime with the given
+/// fault plan attached (`None` = no injector at all). Returns the
+/// runtime (for report + fingerprint) and the host wall time.
+fn drive(
+    plan: Option<FaultPlan>,
+    seed: u64,
+    requests: usize,
+) -> (ServingRuntime<RustGemmBackend>, u64) {
+    let spec = MlpSpec { dims: vec![IN_DIM, 64] };
+    let backend = RustGemmBackend::new(vc1902(), spec, 9, 4);
+    let cfg = ServingConfig {
+        max_batch: 4,
+        max_wait_us: 200,
+        queue_cap: 64,
+        default_slo_us: 20_000,
+        cache_budget_bytes: 64 << 20,
+        plan_cache_budget_bytes: 8 << 20,
+        pipeline_devices: 2,
+        max_backlog_us: 5_000,
+    };
+    let mut rt = ServingRuntime::new(backend, cfg);
+    if let Some(p) = plan {
+        rt = rt.with_faults(FaultInjector::new(p));
+    }
+    let mut features = FeatureGen::new(IN_DIM, seed ^ 0xFEA7);
+    let mut arrivals = ArrivalGen::new(ArrivalKind::Poisson.process(4_000.0, 1.0), seed);
+    let t0 = std::time::Instant::now();
+    let mut last_us = 0u64;
+    for _ in 0..requests {
+        last_us = (arrivals.next_arrival() * 1e6) as u64;
+        let _ = rt.submit(features.next(), Precision::U8, last_us);
+        rt.tick(last_us);
+    }
+    rt.drain(last_us + 1_000);
+    (rt, t0.elapsed().as_nanos() as u64)
+}
+
+/// The conservation ledger of a report: (submitted, sum of terminal
+/// states). Every submission must reach exactly one terminal state.
+fn ledger(r: &ServingReport) -> (u64, u64) {
+    let submitted: u64 = r.tenants.iter().map(|t| t.submitted).sum();
+    (submitted, r.completed + r.failed + r.expired + r.shed + r.rejected)
+}
+
+fn assert_conserved(label: &str, r: &ServingReport) {
+    let (submitted, terminal) = ledger(r);
+    assert_eq!(
+        submitted, terminal,
+        "GATE ({label}): ledger leak — {submitted} submitted vs {terminal} terminal"
+    );
+}
+
+fn json_row(label: &str, r: &ServingReport, wall_ns: u64) -> String {
+    let (submitted, _) = ledger(r);
+    let f = r.faults.clone().unwrap_or_default();
+    format!(
+        "{{\"mode\":\"{label}\",\"submitted\":{submitted},\"completed\":{},\
+         \"failed\":{},\"expired\":{},\"shed\":{},\"rejected\":{},\
+         \"faults_injected\":{},\"transient_failures\":{},\"retries\":{},\
+         \"retry_exhausted\":{},\"recoveries\":{},\"mttr_cycles\":{},\
+         \"capacity_fraction\":{:.4},\"goodput_after_fault\":{:.4},\
+         \"wall_ns\":{wall_ns}}}",
+        r.completed,
+        r.failed,
+        r.expired,
+        r.shed,
+        r.rejected,
+        f.injected,
+        f.transient_failures,
+        f.retries,
+        f.retry_exhausted,
+        f.recoveries,
+        f.mttr_cycles,
+        f.capacity_fraction,
+        f.goodput_after_fault(),
+    )
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let quick = args.iter().any(|a| a == "--quick")
+        || std::env::var("VERSAL_BENCH_FAST").as_deref() == Ok("1");
+    let requests = if quick { 48 } else { 192 };
+    let seed = 1717u64;
+
+    println!("=== fault injection: degraded-mode serving under seeded faults ===");
+    println!(
+        "(MLP {IN_DIM}→64 on 4 tiles; {requests} Poisson requests @ 4 000/s, 2 pipeline \
+         devices{})\n",
+        if quick { " [quick]" } else { "" }
+    );
+
+    // --- gate 1: the empty plan is observationally free ---------------
+    let (healthy, wall_healthy) = drive(None, seed, requests);
+    let (empty, wall_empty) = drive(Some(FaultPlan::none()), seed, requests);
+    let rep_healthy = healthy.report();
+    assert!(rep_healthy.completed > 0, "baseline must serve requests");
+    assert_conserved("healthy", &rep_healthy);
+    assert_eq!(
+        healthy.fingerprint(),
+        empty.fingerprint(),
+        "GATE: an empty fault plan must be byte-invisible in the fingerprint"
+    );
+    println!(
+        "healthy baseline: {} completed; empty-plan run byte-identical",
+        rep_healthy.completed
+    );
+
+    // --- gates 2 + 4: seeded single-device loss ------------------------
+    let loss_plan = FaultPlan::single_device_loss(1, 10_000);
+    let (loss_a, wall_loss) = drive(Some(loss_plan.clone()), seed, requests);
+    let (loss_b, _) = drive(Some(loss_plan), seed, requests);
+    assert_eq!(
+        loss_a.fingerprint(),
+        loss_b.fingerprint(),
+        "GATE: identically-seeded device-loss runs must be byte-identical"
+    );
+    let rep_loss = loss_a.report();
+    assert_conserved("device_loss", &rep_loss);
+    let f = rep_loss.faults.clone().expect("injector attached");
+    assert_eq!(f.injected, 1, "exactly the scheduled device loss fired");
+    assert!(rep_loss.completed > 0, "the degraded pool must keep serving");
+    let retention = f.goodput_after_fault();
+    let floor = (f.capacity_fraction - 0.10).max(0.0);
+    println!(
+        "device loss @10ms: capacity {:.0}%, goodput after fault {:.1}% of {} \
+         post-fault submissions (floor {:.0}%)",
+        f.capacity_fraction * 100.0,
+        retention * 100.0,
+        f.submitted_after_fault,
+        floor * 100.0
+    );
+    assert!(
+        f.submitted_after_fault > 0,
+        "the trace must extend past the injected fault"
+    );
+    assert!(
+        retention >= floor,
+        "GATE: goodput under fault {retention:.3} must retain the surviving capacity \
+         fraction {:.3} minus 10 points",
+        f.capacity_fraction
+    );
+
+    // --- gates 3 + 4: seeded fault storm -------------------------------
+    let storm_plan = FaultPlan::storm(seed, 40_000, 6, 2);
+    let (storm_a, wall_storm) = drive(Some(storm_plan.clone()), seed, requests);
+    let (storm_b, _) = drive(Some(storm_plan), seed, requests);
+    assert_eq!(
+        storm_a.fingerprint(),
+        storm_b.fingerprint(),
+        "GATE: identically-seeded storm runs must be byte-identical"
+    );
+    let rep_storm = storm_a.report();
+    assert_conserved("storm", &rep_storm);
+    let fs = rep_storm.faults.clone().expect("injector attached");
+    println!(
+        "storm (6 events / 40ms horizon): {} injected, {} transient failures, {} retries \
+         ({} exhausted), ledger conserved",
+        fs.injected, fs.transient_failures, fs.retries, fs.retry_exhausted
+    );
+
+    // --- machine-readable artifact: BENCH_faults.json ------------------
+    let json = format!(
+        "{{\"bench\":\"faults\",\"schema\":\"faults-v1\",\"quick\":{quick},\
+         \"requests\":{requests},\"seed\":{seed},\
+         \"rows\":[{},{},{},{}],\
+         \"goodput_after_fault\":{:.4},\"capacity_fraction\":{:.4},\
+         \"retention_floor\":{:.4},\
+         \"empty_plan_identical\":true,\"seeded_runs_identical\":true}}\n",
+        json_row("healthy", &rep_healthy, wall_healthy),
+        json_row("empty_plan", &empty.report(), wall_empty),
+        json_row("device_loss", &rep_loss, wall_loss),
+        json_row("storm", &rep_storm, wall_storm),
+        retention,
+        f.capacity_fraction,
+        floor,
+    );
+    let dir = std::path::PathBuf::from(
+        std::env::var_os("VERSAL_BENCH_RESULTS").unwrap_or_else(|| "bench_results".into()),
+    );
+    std::fs::create_dir_all(&dir).expect("create bench results dir");
+    let path = dir.join("BENCH_faults.json");
+    std::fs::write(&path, &json).expect("write BENCH_faults.json");
+    println!("\nwrote {}", path.display());
+    println!("all fault gates passed.");
+}

@@ -76,9 +76,15 @@ COMMANDS:
                                conformance spot-check, and the adaptive
                                precision the tuner picks for budget E
   cluster  [--devices 1,2,4,8] [--tiles T] [--fabric pcie|cxl|ethernet]
-                               device-level strong scaling: the Table-2
+           [--faults SPEC]     device-level strong scaling: the Table-2
                                problem sharded SUMMA-style across a pool
-                               of simulated devices (extension)
+                               of simulated devices (extension).
+                               --faults (e.g. device:1@0,tiles:0:4@0,
+                               link:50@0) additionally quarantines the
+                               failed devices, replans the SUMMA grid
+                               over the survivors and prints the
+                               plan-IR-priced recovery cost (re-pack +
+                               band transfer cycles)
   serve    --requests R [--rate Q] [--batch B] [--tiles T] [--seed S]
            [--mix u8:8,i16:3,bf16:1] [--slo-ms M] [--cache-mb MB]
            [--plan-cache-mb MB] [--devices D]
@@ -87,6 +93,7 @@ COMMANDS:
            [--offered-load Q]
            [--engine runtime|threads|coordinator] [--workers W]
            [--pack-parallel] [--fanout] [--trace-out FILE]
+           [--faults SPEC]
                                replay a synthetic mixed-precision request
                                trace through the continuous-batching
                                runtime (admission SLOs, fused same-
@@ -119,7 +126,14 @@ COMMANDS:
                                --trace-out writes the
                                end-to-end request spans + pipeline stage
                                spans as Chrome trace-event JSON and
-                               prints the unified metrics registry
+                               prints the unified metrics registry;
+                               --faults attaches a deterministic fault
+                               injector (runtime/threads engines):
+                               comma-separated device:D@T, tiles:D:N@T,
+                               link:PCT@T, transient:N@T, flaky:N@T
+                               events fire at logical µs T, requests
+                               retry with deadline-aware backoff and the
+                               report gains fault/recovery accounting
   bench-trend PREV CURR [--threshold PCT] [--fail-on-regress]
                                diff two BENCH_*.json artifacts metric by
                                metric (flattened numeric paths): delta
@@ -200,6 +214,7 @@ fn run(argv: Vec<String>) -> Result<(), String> {
         .opt("precision")
         .opt("trace-out")
         .opt("threshold")
+        .opt("faults")
         .flag("count-packing")
         .flag("prepacked")
         .flag("cost-only")
@@ -751,6 +766,72 @@ fn cmd_cluster(arch: &VersalArch, args: &Args) -> Result<(), String> {
             last.per_device_efficiency * 100.0
         );
     }
+    if let Some(spec) = args.get("faults") {
+        cluster_fault_demo(arch, spec, tiles, &devices, &fabric)?;
+    }
+    Ok(())
+}
+
+/// The `cluster --faults` path: apply a parsed fault plan to the
+/// largest configured pool, quarantine the failed devices, replan the
+/// SUMMA grid over the survivors, and price the recovery through the
+/// plan IR.
+fn cluster_fault_demo(
+    arch: &VersalArch,
+    spec: &str,
+    tiles: usize,
+    devices: &[usize],
+    fabric: &crate::cluster::FabricSpec,
+) -> Result<(), String> {
+    use crate::cluster::{recovery, Cluster, Topology};
+    use crate::fault::{FaultKind, FaultPlan};
+    use crate::gemm::Precision;
+    let plan = FaultPlan::parse(spec)?;
+    let n = devices.iter().copied().max().unwrap_or(1);
+    let healthy = Cluster::homogeneous(n, arch.clone(), tiles, Topology::Ring(n), fabric.clone())
+        .map_err(|e| e.to_string())?;
+    let mut degraded = healthy.clone();
+    let mut failed: Vec<usize> = Vec::new();
+    for ev in &plan.events {
+        match ev.kind {
+            FaultKind::DeviceFail { device } => {
+                if device < n {
+                    failed.push(device);
+                }
+            }
+            FaultKind::TileAttrition { device, lost } => {
+                degraded =
+                    recovery::attrite_tiles(&degraded, device, lost).map_err(|e| e.to_string())?;
+            }
+            FaultKind::LinkDegrade { percent } => {
+                degraded = recovery::degrade_links(&degraded, percent);
+            }
+            // Transient/flaky faults are serving-runtime events; the
+            // static cluster view has no batch stream to perturb.
+            FaultKind::Transient { .. } | FaultKind::Flaky { .. } => {}
+        }
+    }
+    let (m, nn, k) = crate::report::TABLE2_PROBLEM;
+    let (survived, placement, kept) =
+        recovery::replan(&degraded, &failed, m, nn).map_err(|e| e.to_string())?;
+    let cfg = GemmConfig::paper_table2(tiles);
+    let cost = recovery::replan_cost(&survived, &placement, &cfg, k, Precision::U8)
+        .map_err(|e| e.to_string())?;
+    println!(
+        "\nfault recovery: {} of {n} device(s) quarantined, survivors {kept:?} \
+         ({} tiles) replan to a {}x{} grid on {}",
+        failed.len(),
+        survived.total_tiles(),
+        placement.rows,
+        placement.cols,
+        survived.fabric.name
+    );
+    println!(
+        "  recovery cost (plan-IR priced): re-pack {} + band transfer {} = {} cycles",
+        cost.repack_cycles,
+        cost.transfer_cycles,
+        cost.total()
+    );
     Ok(())
 }
 
@@ -903,6 +984,15 @@ fn cmd_serve_runtime(arch: &VersalArch, args: &Args, pooled: bool) -> Result<(),
         );
         rt = rt.with_fanout(pool);
     }
+    if let Some(spec) = args.get("faults") {
+        let plan = crate::fault::FaultPlan::parse(spec)?;
+        println!(
+            "  fault injection: {} scheduled event(s) — failed devices quarantine, \
+             transient batch failures retry with deadline-aware backoff",
+            plan.events.len()
+        );
+        rt = rt.with_faults(crate::fault::FaultInjector::new(plan));
+    }
 
     let served = match &classes {
         // Multi-tenant: the workload generator splits the offered rate
@@ -976,6 +1066,13 @@ fn cmd_serve_runtime(arch: &VersalArch, args: &Args, pooled: bool) -> Result<(),
 /// machine-dependent — it demonstrates the serving topology rather
 /// than the deterministic cycle model.
 fn cmd_serve_coordinator(arch: &VersalArch, args: &Args) -> Result<(), String> {
+    if args.get("faults").is_some() {
+        return Err(
+            "--faults applies to the deterministic engines (--engine runtime|threads); \
+             the wall-clock coordinator has its own flaky-backend tests"
+                .into(),
+        );
+    }
     let requests: usize = args.get_num("requests", 256)?;
     let rate: f64 = args.get_num("rate", 2000.0)?;
     let batch: usize = args.get_num("batch", 8)?;
@@ -1268,6 +1365,65 @@ mod tests {
         // Unknown fabric and infeasible tile budget are errors, not panics.
         assert_eq!(cli_main(argv(&["cluster", "--fabric", "smoke-signals"])), 2);
         assert_eq!(cli_main(argv(&["cluster", "--devices", "2", "--tiles", "500"])), 2);
+    }
+
+    #[test]
+    fn cluster_faults_replan_succeeds_and_validates() {
+        // Quarantine one of four devices plus tile attrition and a link
+        // degrade; the recovery summary prints after the scaling table.
+        assert_eq!(
+            cli_main(argv(&[
+                "cluster", "--devices", "1,2,4", "--tiles", "4", "--faults",
+                "device:1@0,tiles:0:2@0,link:50@0",
+            ])),
+            0
+        );
+        // Malformed specs and a fully-quarantined pool are errors.
+        assert_eq!(
+            cli_main(argv(&["cluster", "--devices", "2", "--faults", "meteor:1@0"])),
+            2
+        );
+        assert_eq!(
+            cli_main(argv(&[
+                "cluster", "--devices", "2", "--tiles", "4", "--faults",
+                "device:0@0,device:1@0",
+            ])),
+            2
+        );
+    }
+
+    #[test]
+    fn serve_faults_inject_and_validate() {
+        // A transient fault mid-trace: the run completes and reports.
+        assert_eq!(
+            cli_main(argv(&[
+                "serve", "--requests", "8", "--batch", "2", "--tiles", "2", "--rate",
+                "100000", "--slo-ms", "200", "--faults", "transient:1@0",
+            ])),
+            0
+        );
+        // A device loss on the threads engine: still deterministic.
+        assert_eq!(
+            cli_main(argv(&[
+                "serve", "--engine", "threads", "--requests", "8", "--batch", "2",
+                "--workers", "1", "--tiles", "2", "--rate", "100000", "--slo-ms", "200",
+                "--faults", "device:1@100",
+            ])),
+            0
+        );
+        // Bad specs are usage errors; the wall-clock coordinator
+        // refuses the flag outright.
+        assert_eq!(
+            cli_main(argv(&["serve", "--requests", "2", "--faults", "device:@"])),
+            2
+        );
+        assert_eq!(
+            cli_main(argv(&[
+                "serve", "--engine", "coordinator", "--requests", "2", "--faults",
+                "transient:1@0",
+            ])),
+            2
+        );
     }
 
     #[test]

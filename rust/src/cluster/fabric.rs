@@ -77,6 +77,26 @@ impl FabricSpec {
         }
     }
 
+    /// This fabric with every link's bandwidth degraded to `percent`%
+    /// of nominal — the [`crate::fault::FaultKind::LinkDegrade`] effect.
+    /// Hop latency and message setup are unchanged (the wires are the
+    /// same length; only the usable lanes shrank). `percent` is clamped
+    /// to `1..=100`: a zero-bandwidth fabric would make every transfer
+    /// infinite — model a severed device as a device failure instead.
+    pub fn degraded(&self, percent: u32) -> FabricSpec {
+        let percent = percent.clamp(1, 100);
+        FabricSpec {
+            name: if percent == 100 {
+                self.name.clone()
+            } else {
+                format!("{}-deg{percent}", self.name)
+            },
+            link_bytes_per_cycle: self.link_bytes_per_cycle * percent as f64 / 100.0,
+            link_latency_cycles: self.link_latency_cycles,
+            message_setup_cycles: self.message_setup_cycles,
+        }
+    }
+
     /// Parse a preset by name (CLI: `--fabric pcie|cxl|ethernet`).
     pub fn by_name(name: &str) -> Result<FabricSpec, String> {
         match name {
@@ -169,6 +189,23 @@ mod tests {
             3 * one
         );
         assert_eq!(f.serialized_cycles(&[], 5), 0);
+    }
+
+    #[test]
+    fn degraded_scales_bandwidth_only() {
+        let spec = FabricSpec::pcie_like();
+        let half = spec.degraded(50);
+        assert_eq!(half.link_bytes_per_cycle, 16.0);
+        assert_eq!(half.link_latency_cycles, spec.link_latency_cycles);
+        assert_eq!(half.message_setup_cycles, spec.message_setup_cycles);
+        assert_eq!(half.name, "pcie-deg50");
+        // Transfers get strictly slower; the floor survives the clamp.
+        let f = Fabric::new(&spec);
+        let g = Fabric::new(&half);
+        assert!(g.transfer_cycles(1 << 20, 1) > f.transfer_cycles(1 << 20, 1));
+        let floor = spec.degraded(0);
+        assert_eq!(floor.link_bytes_per_cycle, 0.32);
+        assert_eq!(spec.degraded(100).name, "pcie", "healthy keeps its name");
     }
 
     #[test]

@@ -29,6 +29,9 @@
 //! - [`sharded_gemm`] — the SUMMA-style 2-D partitioned GEMM driver; each
 //!                     shard runs the existing [`crate::gemm::ParallelGemm`]
 //!                     locally.
+//! - [`recovery`]    — quarantine-and-replan after injected faults:
+//!                     survivor pools, tile attrition, link degradation,
+//!                     and the plan-IR-priced cost of re-sharding.
 //!
 //! Numerics are exact everywhere (u8·u8→i32, like the single-device
 //! engine); only the *schedule* is modelled. Every sharded result is
@@ -38,12 +41,14 @@
 pub mod collectives;
 pub mod fabric;
 pub mod placement;
+pub mod recovery;
 pub mod sharded_gemm;
 pub mod topology;
 
 pub use collectives::Collectives;
 pub use fabric::{Fabric, FabricSpec};
 pub use placement::{partition, GridPlacement};
+pub use recovery::RecoveryCost;
 pub use sharded_gemm::{
     ClusterBreakdown, ClusterGemm, ClusterGemmConfig, DeviceStats,
 };

@@ -39,12 +39,43 @@ impl GridPlacement {
         m: usize,
         n: usize,
     ) -> Result<GridPlacement, ClusterError> {
+        let devices: Vec<DeviceId> = (0..cluster.n_devices()).collect();
+        Self::grid_over(cluster, &devices, rows, cols, m, n)
+    }
+
+    /// Place an explicit **subset** of the pool on a `rows × cols` grid
+    /// — the quarantine-and-replan path: after a device failure the
+    /// recovery layer re-derives the capacity-weighted grid over the
+    /// *survivors* only, so the bands re-balance to the surviving tile
+    /// counts. `devices` are grid cells in row-major order; duplicates
+    /// and out-of-range ids are rejected.
+    pub fn grid_over(
+        cluster: &Cluster,
+        devices: &[DeviceId],
+        rows: usize,
+        cols: usize,
+        m: usize,
+        n: usize,
+    ) -> Result<GridPlacement, ClusterError> {
         cluster.validate()?;
-        let nd = cluster.n_devices();
+        let nd = devices.len();
         if rows == 0 || cols == 0 || rows * cols != nd {
             return Err(ClusterError::BadGrid { rows, cols, devices: nd });
         }
-        let devices: Vec<DeviceId> = (0..nd).collect();
+        for (i, &d) in devices.iter().enumerate() {
+            if d >= cluster.n_devices() {
+                return Err(ClusterError::DeviceOutOfRange {
+                    device: d,
+                    n_devices: cluster.n_devices(),
+                });
+            }
+            if devices[..i].contains(&d) {
+                return Err(ClusterError::BadGroup(format!(
+                    "device {d} appears twice in the placement subset"
+                )));
+            }
+        }
+        let devices: Vec<DeviceId> = devices.to_vec();
         let tiles = |d: DeviceId| cluster.devices[d].tiles;
         let row_weights: Vec<usize> = (0..rows)
             .map(|i| (0..cols).map(|j| tiles(devices[i * cols + j])).sum())
@@ -65,7 +96,20 @@ impl GridPlacement {
     /// dimension is split more ways.
     pub fn auto(cluster: &Cluster, m: usize, n: usize) -> Result<GridPlacement, ClusterError> {
         cluster.validate()?;
-        let nd = cluster.n_devices();
+        let devices: Vec<DeviceId> = (0..cluster.n_devices()).collect();
+        Self::auto_over(cluster, &devices, m, n)
+    }
+
+    /// [`GridPlacement::auto`] over an explicit device subset — the
+    /// shape the recovery layer re-plans onto after quarantining
+    /// failures (a 2×2 pool losing one device re-plans as 3×1 or 1×3).
+    pub fn auto_over(
+        cluster: &Cluster,
+        devices: &[DeviceId],
+        m: usize,
+        n: usize,
+    ) -> Result<GridPlacement, ClusterError> {
+        let nd = devices.len();
         let mut small = 1;
         for r in 1..=nd {
             if r * r > nd {
@@ -75,9 +119,9 @@ impl GridPlacement {
                 small = r;
             }
         }
-        let large = nd / small;
+        let large = nd.max(1) / small;
         let (rows, cols) = if m >= n { (large, small) } else { (small, large) };
-        GridPlacement::grid(cluster, rows, cols, m, n)
+        GridPlacement::grid_over(cluster, devices, rows, cols, m, n)
     }
 
     /// Grid cells (`rows * cols`).

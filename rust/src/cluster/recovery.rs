@@ -1,0 +1,285 @@
+//! Quarantine-and-replan: rebuilding a degraded pool after injected
+//! faults and pricing the recovery through the plan IR.
+//!
+//! A fault ([`crate::fault::FaultKind`]) leaves the pool in one of three
+//! degraded shapes, each with its own rebuild:
+//!
+//! - **Device failure** — [`without_devices`] quarantines the failed
+//!   ids and re-wires the survivors (same topology family, shrunk);
+//!   [`replan`] then re-derives the capacity-weighted SUMMA grid over
+//!   the survivors only, so the bands re-balance to surviving tiles.
+//! - **Tile attrition** — [`attrite_tiles`] shrinks one device's tile
+//!   budget (never below one tile); the next placement's bands shift
+//!   toward the healthy devices automatically.
+//! - **Link degradation** — [`degrade_links`] swaps in the
+//!   [`FabricSpec::degraded`] fabric; hop latency and setup stay, only
+//!   bandwidth shrinks.
+//!
+//! Recovery is not free: the survivors must re-pack their re-sharded
+//! weight bands and the bands must cross the fabric. [`replan_cost`]
+//! charges both through the same machinery every other cost in the
+//! repository uses — per-shard `Bc` pack bytes come from the lowered
+//! [`GemmPlan`]'s step footprints (no ad-hoc byte formula), the pack
+//! rate from the interface-tile spec, and the band transfers from
+//! [`Fabric::serialized_cycles`] at the surviving topology's diameter.
+//!
+//! Bit-exactness: the rebuilt pool computes on *re-indexed* devices but
+//! identical operand bands, so a replayed GEMM on the survivors equals
+//! the healthy run's bytes exactly — pinned in
+//! `tests/fault_tolerance.rs`.
+
+use super::placement::GridPlacement;
+use super::{Cluster, ClusterError, DeviceId, Fabric, FabricSpec, Topology};
+use crate::gemm::{GemmConfig, Precision};
+use crate::plan::{Buffer, GemmPlan};
+
+/// Cycle price of one quarantine-and-replan, split by activity.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RecoveryCost {
+    /// Cycles the slowest survivor spends re-packing its new `Bc` band
+    /// (survivors re-pack concurrently, so the max is on the critical
+    /// path, not the sum).
+    pub repack_cycles: u64,
+    /// Cycles moving the re-sharded bands across the fabric (one egress
+    /// port serialises the per-shard payloads; the worst path's hop
+    /// latency is exposed once).
+    pub transfer_cycles: u64,
+}
+
+impl RecoveryCost {
+    /// Total recovery cycles (re-pack and transfer do not overlap: the
+    /// band must arrive before it can be packed).
+    pub fn total(&self) -> u64 {
+        self.repack_cycles + self.transfer_cycles
+    }
+}
+
+/// The surviving device ids of a pool after quarantining `failed`
+/// (original ids, ascending). Ids outside the pool are ignored —
+/// killing a device twice is idempotent.
+pub fn survivors(n_devices: usize, failed: &[DeviceId]) -> Vec<DeviceId> {
+    (0..n_devices).filter(|d| !failed.contains(d)).collect()
+}
+
+/// Shrink a topology to `k` survivors within the same family. A mesh
+/// with a hole is no longer a mesh, so it re-wires as the surviving
+/// ring; rings and crossbars just shrink.
+fn shrink_topology(t: &Topology, k: usize) -> Topology {
+    match *t {
+        Topology::Ring(_) | Topology::Mesh2D { .. } => Topology::Ring(k),
+        Topology::FullyConnected(_) => Topology::FullyConnected(k),
+    }
+}
+
+/// Quarantine `failed` devices: the surviving pool (devices re-indexed
+/// densely, same fabric, topology shrunk within its family) plus the
+/// survivors' *original* ids in new-id order. Quarantining every device
+/// is an error — an empty pool cannot serve.
+pub fn without_devices(
+    cluster: &Cluster,
+    failed: &[DeviceId],
+) -> Result<(Cluster, Vec<DeviceId>), ClusterError> {
+    cluster.validate()?;
+    let keep = survivors(cluster.n_devices(), failed);
+    if keep.is_empty() {
+        return Err(ClusterError::Empty);
+    }
+    let survived = Cluster {
+        devices: keep.iter().map(|&d| cluster.devices[d].clone()).collect(),
+        topology: shrink_topology(&cluster.topology, keep.len()),
+        fabric: cluster.fabric.clone(),
+    };
+    survived.validate()?;
+    Ok((survived, keep))
+}
+
+/// Tile attrition on one device: `lost` AIE tiles stop responding. The
+/// budget floors at one tile — a fully dark array is a device failure,
+/// not attrition.
+pub fn attrite_tiles(
+    cluster: &Cluster,
+    device: DeviceId,
+    lost: usize,
+) -> Result<Cluster, ClusterError> {
+    cluster.validate()?;
+    if device >= cluster.n_devices() {
+        return Err(ClusterError::DeviceOutOfRange {
+            device,
+            n_devices: cluster.n_devices(),
+        });
+    }
+    let mut degraded = cluster.clone();
+    let tiles = &mut degraded.devices[device].tiles;
+    *tiles = tiles.saturating_sub(lost).max(1);
+    Ok(degraded)
+}
+
+/// The pool with every link degraded to `percent`% of nominal
+/// bandwidth ([`FabricSpec::degraded`] semantics, clamped to 1..=100).
+pub fn degrade_links(cluster: &Cluster, percent: u32) -> Cluster {
+    Cluster {
+        devices: cluster.devices.clone(),
+        topology: cluster.topology.clone(),
+        fabric: cluster.fabric.degraded(percent),
+    }
+}
+
+/// Quarantine `failed` and re-derive the near-square capacity-weighted
+/// grid over the survivors for an `(m, n)` problem. Returns the
+/// surviving pool, its placement, and the survivors' original ids.
+pub fn replan(
+    cluster: &Cluster,
+    failed: &[DeviceId],
+    m: usize,
+    n: usize,
+) -> Result<(Cluster, GridPlacement, Vec<DeviceId>), ClusterError> {
+    let (survived, kept) = without_devices(cluster, failed)?;
+    let placement = GridPlacement::auto(&survived, m, n)?;
+    Ok((survived, placement, kept))
+}
+
+/// Price the re-shard after a replan: every surviving grid cell lowers
+/// the *prepacked* plan of its new `(row_band × col_band, k)` shard and
+/// its `Bc` step footprint is what must be re-packed and re-sent. `cfg`
+/// is the blocking template (its `tiles` field is overridden per device).
+pub fn replan_cost(
+    cluster: &Cluster,
+    placement: &GridPlacement,
+    cfg: &GemmConfig,
+    k: usize,
+    precision: Precision,
+) -> Result<RecoveryCost, ClusterError> {
+    let fabric = Fabric::new(&cluster.fabric);
+    let rate = cluster.devices[0].arch.ic.pack_bytes_per_cycle;
+    let mut payloads = Vec::with_capacity(placement.n_cells());
+    let mut repack = 0u64;
+    for i in 0..placement.rows {
+        for j in 0..placement.cols {
+            let d = placement.device_at(i, j);
+            let dspec = cluster
+                .devices
+                .get(d)
+                .ok_or(ClusterError::DeviceOutOfRange { device: d, n_devices: cluster.n_devices() })?;
+            let mut shard_cfg = cfg.clone();
+            shard_cfg.tiles = dspec.tiles;
+            let plan = GemmPlan::lower(
+                &dspec.arch,
+                &shard_cfg,
+                placement.row_bands[i],
+                placement.col_bands[j],
+                k,
+                precision,
+                true,
+            )
+            .map_err(|e| ClusterError::LocalGemm(e.to_string()))?;
+            let bytes = plan.pack_bytes(Buffer::Bc);
+            payloads.push(bytes);
+            repack = repack.max((bytes as f64 / rate) as u64);
+        }
+    }
+    Ok(RecoveryCost {
+        repack_cycles: repack,
+        transfer_cycles: fabric.serialized_cycles(&payloads, cluster.topology.diameter()),
+    })
+}
+
+/// Convenience used by tests and the CLI: `degraded`'s fabric applied
+/// to a healthy pool should cost strictly more per transfer whenever
+/// bandwidth actually shrank.
+pub fn link_slowdown(spec: &FabricSpec, percent: u32, bytes: u64, hops: u64) -> (u64, u64) {
+    let healthy = Fabric::new(spec).transfer_cycles(bytes, hops);
+    let degraded = Fabric::new(&spec.degraded(percent)).transfer_cycles(bytes, hops);
+    (healthy, degraded)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::vc1902;
+    use crate::cluster::DeviceSpec;
+
+    #[test]
+    fn quarantine_reindexes_and_shrinks_topology() {
+        let c = Cluster::vc1902_pool(4, 8).unwrap();
+        let (s, kept) = without_devices(&c, &[1]).unwrap();
+        assert_eq!(s.n_devices(), 3);
+        assert_eq!(kept, vec![0, 2, 3]);
+        assert_eq!(s.topology, Topology::Ring(3));
+        assert!(s.validate().is_ok());
+        // Idempotent and order-insensitive; empty pool rejected.
+        assert_eq!(survivors(4, &[1, 1, 9]), vec![0, 2, 3]);
+        assert!(matches!(
+            without_devices(&c, &[0, 1, 2, 3]),
+            Err(ClusterError::Empty)
+        ));
+        let mesh = Cluster {
+            devices: c.devices.clone(),
+            topology: Topology::Mesh2D { rows: 2, cols: 2 },
+            fabric: c.fabric.clone(),
+        };
+        let (s, _) = without_devices(&mesh, &[3]).unwrap();
+        assert_eq!(s.topology, Topology::Ring(3), "holed mesh re-wires as a ring");
+    }
+
+    #[test]
+    fn replan_rebalances_bands_to_survivor_tiles() {
+        let c = Cluster {
+            devices: vec![
+                DeviceSpec { arch: vc1902(), tiles: 12 },
+                DeviceSpec { arch: vc1902(), tiles: 4 },
+                DeviceSpec { arch: vc1902(), tiles: 4 },
+            ],
+            topology: Topology::Ring(3),
+            fabric: FabricSpec::pcie_like(),
+        };
+        // Healthy: 3 devices share m. Lose device 0 (the big one): the
+        // two 4-tile survivors split m evenly.
+        let (s, p, kept) = replan(&c, &[0], 256, 64).unwrap();
+        assert_eq!(kept, vec![1, 2]);
+        assert_eq!((p.rows, p.cols), (2, 1));
+        assert_eq!(p.row_bands, vec![128, 128], "equal tiles → equal bands");
+        assert_eq!(s.total_tiles(), 8);
+    }
+
+    #[test]
+    fn attrition_floors_at_one_tile_and_checks_range() {
+        let c = Cluster::vc1902_pool(2, 8).unwrap();
+        let d = attrite_tiles(&c, 1, 3).unwrap();
+        assert_eq!(d.devices[1].tiles, 5);
+        assert_eq!(d.devices[0].tiles, 8, "other devices untouched");
+        let floor = attrite_tiles(&c, 0, 99).unwrap();
+        assert_eq!(floor.devices[0].tiles, 1);
+        assert!(matches!(
+            attrite_tiles(&c, 7, 1),
+            Err(ClusterError::DeviceOutOfRange { device: 7, .. })
+        ));
+    }
+
+    #[test]
+    fn degraded_links_slow_transfers_only() {
+        let c = Cluster::vc1902_pool(2, 8).unwrap();
+        let d = degrade_links(&c, 25);
+        assert_eq!(d.fabric.link_latency_cycles, c.fabric.link_latency_cycles);
+        let (healthy, degraded) = link_slowdown(&c.fabric, 25, 1 << 20, 1);
+        assert!(degraded > healthy, "quarter bandwidth → slower: {degraded} > {healthy}");
+    }
+
+    #[test]
+    fn replan_cost_prices_through_the_plan_ir() {
+        let c = Cluster::vc1902_pool(4, 8).unwrap();
+        let cfg = GemmConfig::paper_table2(8);
+        let healthy = GridPlacement::auto(&c, 256, 256).unwrap();
+        let full = replan_cost(&c, &healthy, &cfg, 512, Precision::U8).unwrap();
+        assert!(full.repack_cycles > 0 && full.transfer_cycles > 0);
+        // Survivors hold bigger bands, so each shard's re-pack grows.
+        let (s, p, _) = replan(&c, &[3], 256, 256).unwrap();
+        let degraded = replan_cost(&s, &p, &cfg, 512, Precision::U8).unwrap();
+        assert!(
+            degraded.repack_cycles > full.repack_cycles,
+            "bigger survivor bands re-pack longer: {} > {}",
+            degraded.repack_cycles,
+            full.repack_cycles
+        );
+        assert_eq!(degraded.total(), degraded.repack_cycles + degraded.transfer_cycles);
+    }
+}

@@ -134,6 +134,24 @@ impl AdmissionQueue {
         self.queue.len()
     }
 
+    /// Current admission capacity.
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+
+    /// Tighten (or restore) the admission capacity — the serving
+    /// runtime's **degraded-capacity signal**: when injected faults
+    /// shrink the compute pool, the queue bound shrinks with it so
+    /// backpressure and priority shedding engage earlier instead of
+    /// letting requests queue toward deadlines the surviving capacity
+    /// can no longer meet. Residents above a lowered cap stay queued —
+    /// the cap gates *new* admissions (each overflow still sheds
+    /// exactly one request, so the ledger stays exact).
+    pub fn set_cap(&mut self, cap: usize) {
+        assert!(cap > 0, "queue capacity must be positive");
+        self.cap = cap;
+    }
+
     /// Whether the queue is empty.
     pub fn is_empty(&self) -> bool {
         self.queue.is_empty()

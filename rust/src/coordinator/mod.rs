@@ -46,7 +46,7 @@ pub use metrics::{LatencyStats, Metrics, PlanCacheStats};
 pub use pipeline::{PipelinedExecutor, StageCost, StageTiming};
 pub use request::{InferenceRequest, InferenceResponse, RequestId};
 pub use server::{Coordinator, CoordinatorConfig, SubmitError};
-pub use serving::{ServeOutcome, ServingConfig, ServingReport, ServingRuntime};
+pub use serving::{FaultReport, ServeOutcome, ServingConfig, ServingReport, ServingRuntime};
 pub use tenant::{TenantClass, TenantReport};
 pub use worker::{
     Backend, BatchedBackend, ClusterGemmBackend, EchoBackend, RustGemmBackend, WaveJob,

@@ -98,9 +98,35 @@ impl PipelinedExecutor {
         }
     }
 
-    /// Compute devices the executor schedules over.
+    /// Compute devices the executor schedules over (including any
+    /// disabled by [`PipelinedExecutor::disable_device`]).
     pub fn devices(&self) -> usize {
         self.devices
+    }
+
+    /// Compute devices still accepting work.
+    pub fn active_devices(&self) -> usize {
+        self.device_free.iter().filter(|&&t| t != u64::MAX).count()
+    }
+
+    /// Quarantine compute device `device`: it accepts no further
+    /// batches (its busy horizon is pinned to `u64::MAX`, so the
+    /// earliest-free scan never picks it). Work already stepped onto it
+    /// is unaffected — the model is fail-stop for *future* launches;
+    /// in-flight batches were accounted at launch. Returns `false`
+    /// without effect when the index is out of range, the device is
+    /// already disabled, or it is the last active device (the executor
+    /// never kills its last server — `step` must always have somewhere
+    /// to run).
+    pub fn disable_device(&mut self, device: usize) -> bool {
+        if device >= self.devices
+            || self.device_free[device] == u64::MAX
+            || self.active_devices() <= 1
+        {
+            return false;
+        }
+        self.device_free[device] = u64::MAX;
+        true
     }
 
     /// Advance the busy clock by one batch whose inputs are ready at
@@ -261,6 +287,35 @@ mod tests {
             assert!(t.device < 2);
         }
         assert_eq!(a.busy_until(), b_ex.busy_until());
+    }
+
+    #[test]
+    fn disabled_devices_take_no_further_work() {
+        let mut ex = PipelinedExecutor::new(2);
+        assert_eq!(ex.active_devices(), 2);
+        assert!(ex.disable_device(1));
+        assert_eq!(ex.active_devices(), 1);
+        // All compute now lands on device 0.
+        for _ in 0..3 {
+            let t = ex.step_timed(0, b(1, 1, 10));
+            assert_eq!(t.device, 0);
+        }
+        // Out of range, double-disable, and last-device kills refuse.
+        assert!(!ex.disable_device(5));
+        assert!(!ex.disable_device(1));
+        assert!(!ex.disable_device(0), "the last device must survive");
+        assert_eq!(ex.active_devices(), 1);
+        // One surviving device serialises compute: strictly slower than
+        // the healthy two-device executor on the same batches.
+        let batches = vec![b(1, 1, 100); 4];
+        let healthy = PipelinedExecutor::new(2).makespan(&batches);
+        let mut degraded = PipelinedExecutor::new(2);
+        degraded.disable_device(1);
+        let mut last = 0;
+        for batch in &batches {
+            last = last.max(degraded.step(0, *batch));
+        }
+        assert!(last > healthy, "losing a device must cost makespan: {last} !> {healthy}");
     }
 
     #[test]

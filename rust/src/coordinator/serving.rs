@@ -77,9 +77,10 @@ use super::request::RequestId;
 use super::tenant::{TenantClass, TenantReport};
 use super::worker::{BatchedBackend, WaveJob};
 use super::workload::GenRequest;
+use crate::fault::{FaultInjector, FaultKind};
 use crate::gemm::Precision;
 use crate::obs::{
-    HistogramSummary, MetricsRegistry, TrackId, Tracer, SERVING_ADMISSION_TRACK,
+    HistogramSummary, MetricsRegistry, TrackId, Tracer, FAULT_PID, SERVING_ADMISSION_TRACK,
     SERVING_PIPELINE_PID, SERVING_REQUEST_PID,
 };
 use crate::runtime::ThreadPool;
@@ -129,6 +130,61 @@ impl Default for ServingConfig {
             plan_cache_budget_bytes: 8 << 20,
             pipeline_devices: 2,
             max_backlog_us: u64::MAX,
+        }
+    }
+}
+
+/// The single shared fault-injection track (pid [`FAULT_PID`], tid 0):
+/// injected fault instants, transient batch failures, and the degraded
+/// windows between a fault and the first recovered completion.
+const FAULT_TRACK: TrackId = TrackId::new(FAULT_PID, 0);
+
+/// Fault + recovery accounting of one runtime lifetime. Present in the
+/// report only when a [`FaultInjector`] was attached
+/// ([`ServingRuntime::with_faults`]); a run whose plan never fires
+/// reports all-zero activity and emits **no** extra metric rows, so its
+/// fingerprint is byte-identical to a run without any injector.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultReport {
+    /// Fault events fired by the injector.
+    pub injected: u64,
+    /// Batch executions lost to injected transient faults.
+    pub transient_failures: u64,
+    /// Retry attempts scheduled (each re-entered batch forming).
+    pub retries: u64,
+    /// Requests failed after exhausting their retry allowance (attempt
+    /// cap, tenant budget, or a deadline the backoff could not beat).
+    pub retry_exhausted: u64,
+    /// Degraded windows closed by a successful batch completion.
+    pub recoveries: u64,
+    /// Mean time-to-recovery in AIE cycles (fault → first recovered
+    /// completion, converted at 1 000 cycles per logical µs).
+    pub mttr_cycles: u64,
+    /// When the first fault struck (logical µs), if any fired.
+    pub first_fault_us: Option<u64>,
+    /// Surviving fraction of the pipeline devices (1.0 = healthy).
+    pub capacity_fraction: f64,
+    /// Requests submitted at or after the first fault.
+    pub submitted_after_fault: u64,
+    /// Of those, requests completed within their SLO.
+    pub completed_in_slo_after_fault: u64,
+}
+
+impl FaultReport {
+    /// Whether any fault activity occurred (the gate for emitting the
+    /// fault metric rows — all-zero reports stay invisible).
+    pub fn activity(&self) -> bool {
+        self.injected > 0 || self.transient_failures > 0 || self.retries > 0
+    }
+
+    /// Goodput under fault: the in-SLO completion rate of traffic
+    /// submitted after the first fault (the `bench_faults` gate compares
+    /// this against the surviving capacity fraction).
+    pub fn goodput_after_fault(&self) -> f64 {
+        if self.submitted_after_fault == 0 {
+            0.0
+        } else {
+            self.completed_in_slo_after_fault as f64 / self.submitted_after_fault as f64
         }
     }
 }
@@ -207,6 +263,8 @@ pub struct ServingReport {
     /// Per-tenant accounting rows, in tenant-index order (one row, named
     /// "default", in single-tenant configurations).
     pub tenants: Vec<TenantReport>,
+    /// Fault + recovery accounting; `None` when no injector is attached.
+    pub faults: Option<FaultReport>,
 }
 
 /// Map a µs-domain percentile summary into the registry's histogram
@@ -300,12 +358,31 @@ impl ServingReport {
                 m.set_counter(&format!("{p}_expired"), t.expired);
                 m.set_counter(&format!("{p}_rejected"), t.rejected);
                 m.set_counter(&format!("{p}_failed"), t.failed);
+                m.set_counter(&format!("{p}_retries"), t.retries);
                 m.set_counter(&format!("{p}_slo_us"), t.slo_us);
                 m.set_gauge(&format!("{p}_goodput_rate"), t.goodput_rate());
                 m.set_gauge(&format!("{p}_shed_rate"), t.shed_rate());
                 if let Some(s) = &t.latency {
                     m.set_histogram(&format!("{p}_latency_us"), histo(s));
                 }
+            }
+        }
+        // Fault rows appear ONLY when fault activity occurred: a run
+        // whose plan never fires keeps its metrics (and therefore its
+        // fingerprint) byte-identical to a run without any injector.
+        if let Some(f) = &self.faults {
+            if f.activity() {
+                m.set_counter("faults_injected", f.injected);
+                m.set_counter("fault_transient_failures", f.transient_failures);
+                m.set_counter("fault_retries", f.retries);
+                m.set_counter("fault_retry_exhausted", f.retry_exhausted);
+                m.set_counter("fault_recoveries", f.recoveries);
+                m.set_counter("fault_mttr_cycles", f.mttr_cycles);
+                m.set_counter("fault_first_us", f.first_fault_us.unwrap_or(0));
+                m.set_counter("fault_submitted_after", f.submitted_after_fault);
+                m.set_counter("fault_completed_in_slo_after", f.completed_in_slo_after_fault);
+                m.set_gauge("fault_capacity_fraction", f.capacity_fraction);
+                m.set_gauge("goodput_after_fault", f.goodput_after_fault());
             }
         }
         m
@@ -324,6 +401,7 @@ struct TenantState {
     expired: u64,
     rejected: u64,
     failed: u64,
+    retries: u64,
     latencies_us: Vec<f64>,
 }
 
@@ -339,6 +417,7 @@ impl TenantState {
             expired: 0,
             rejected: 0,
             failed: 0,
+            retries: 0,
             latencies_us: Vec::new(),
         }
     }
@@ -355,6 +434,7 @@ impl TenantState {
             expired: self.expired,
             rejected: self.rejected,
             failed: self.failed,
+            retries: self.retries,
             latency: LatencyStats::from_us_samples(&self.latencies_us),
             cache: self.caches.packed.stats(),
             plan_cache: self.caches.plans.stats(),
@@ -406,6 +486,36 @@ pub struct ServingRuntime<B: BatchedBackend> {
     /// one [`WaveJob`] wave. `None` (the default) serves batches
     /// strictly sequentially.
     fanout: Option<Arc<ThreadPool>>,
+    /// Seeded fault injector ([`ServingRuntime::with_faults`]); `None`
+    /// serves the healthy path with zero overhead.
+    faults: Option<FaultInjector>,
+    /// Transiently failed requests awaiting their backoff, with the
+    /// logical instant each may re-enter admission.
+    retry_pending: Vec<(ServeRequest, u64)>,
+    /// Attempts consumed per in-flight retried request.
+    retry_attempts: HashMap<RequestId, u32>,
+    retries: u64,
+    transient_failures: u64,
+    retry_exhausted: u64,
+    recoveries: u64,
+    mttr_total_cycles: u64,
+    /// Open degraded window: the instant of the fault that has not yet
+    /// been followed by a successful batch completion.
+    open_fault_at: Option<u64>,
+    /// When the first fault struck (drives the after-fault goodput
+    /// accounting and the report's `first_fault_us`).
+    first_fault_us: Option<u64>,
+    submitted_after_fault: u64,
+    completed_in_slo_after_fault: u64,
+    /// The backlog bound actually enforced: starts at
+    /// [`ServingConfig::max_backlog_us`] and shrinks with the surviving
+    /// capacity fraction when pipeline devices fail — the
+    /// degraded-capacity signal into admission.
+    degraded_backlog_us: u64,
+    /// Whether the fault track/process names were emitted (lazy: a run
+    /// with no fault activity keeps its trace byte-identical to a
+    /// fault-free run).
+    fault_track_named: bool,
 }
 
 impl<B: BatchedBackend> ServingRuntime<B> {
@@ -467,6 +577,20 @@ impl<B: BatchedBackend> ServingRuntime<B> {
             batches: 0,
             batch_rows: 0,
             fanout: None,
+            faults: None,
+            retry_pending: Vec::new(),
+            retry_attempts: HashMap::new(),
+            retries: 0,
+            transient_failures: 0,
+            retry_exhausted: 0,
+            recoveries: 0,
+            mttr_total_cycles: 0,
+            open_fault_at: None,
+            first_fault_us: None,
+            submitted_after_fault: 0,
+            completed_in_slo_after_fault: 0,
+            degraded_backlog_us: cfg.max_backlog_us,
+            fault_track_named: false,
         }
     }
 
@@ -487,6 +611,28 @@ impl<B: BatchedBackend> ServingRuntime<B> {
     pub fn with_fanout(mut self, pool: Arc<ThreadPool>) -> ServingRuntime<B> {
         self.fanout = Some(pool);
         self
+    }
+
+    /// Builder: attach a seeded [`FaultInjector`]. Each tick first fires
+    /// the plan's due events (a [`FaultKind::DeviceFail`] quarantines a
+    /// pipeline device and shrinks the admission queue + backlog bound
+    /// to the surviving capacity fraction), then readmits any retried
+    /// requests whose backoff elapsed; each batch launch may be lost to
+    /// an injected transient fault, entering the bounded-retry path
+    /// ([`crate::fault::RetryPolicy`]). An injector whose plan never
+    /// fires is observationally free: reports, fingerprints and traces
+    /// stay byte-identical to a run without any injector (pinned in
+    /// `tests/fault_tolerance.rs`). With an injector attached, batches
+    /// serve strictly sequentially — the cross-batch fan-out wave path
+    /// is bypassed (the two are byte-identical anyway).
+    pub fn with_faults(mut self, injector: FaultInjector) -> ServingRuntime<B> {
+        self.faults = Some(injector);
+        self
+    }
+
+    /// The attached fault injector, if any.
+    pub fn faults(&self) -> Option<&FaultInjector> {
+        self.faults.as_ref()
     }
 
     /// Builder: record every serving event — admission instants,
@@ -571,6 +717,9 @@ impl<B: BatchedBackend> ServingRuntime<B> {
         deadline_us: u64,
     ) -> Result<RequestId, AdmitError> {
         self.tenants[tenant].submitted += 1;
+        if self.first_fault_us.is_some_and(|f0| now_us >= f0) {
+            self.submitted_after_fault += 1;
+        }
         if features.len() != self.in_dim {
             self.rejected += 1;
             self.tenants[tenant].rejected += 1;
@@ -655,25 +804,235 @@ impl<B: BatchedBackend> ServingRuntime<B> {
         }
     }
 
-    /// Whether the executor backlog permits cutting another batch now
-    /// (see [`ServingConfig::max_backlog_us`]).
+    /// Whether the executor backlog permits cutting another batch now.
+    /// The bound is [`ServingConfig::max_backlog_us`] while healthy,
+    /// scaled down with the surviving capacity fraction after a
+    /// pipeline-device failure (the degraded-capacity admission signal).
     fn backlog_allows(&self, now_us: u64) -> bool {
-        self.busy_us.busy_until().saturating_sub(now_us) <= self.cfg.max_backlog_us
+        self.busy_us.busy_until().saturating_sub(now_us) <= self.degraded_backlog_us
     }
 
-    /// Advance the runtime to `now_us`: evict SLO-expired requests, then
-    /// cut and execute ready groups — highest priority first — while the
-    /// executor backlog stays under `max_backlog_us`. An empty queue
-    /// ticks to an empty outcome list — ticking is always safe.
-    /// A batch whose backend execution fails is dropped and counted in
-    /// [`ServingReport::failed`] rather than aborting the tick, so one
-    /// unservable batch cannot lose the accounting of its neighbours.
+    /// The fault timeline's track, naming it (and its process) on first
+    /// use only — so a run with zero fault activity exports a trace
+    /// byte-identical to a fault-free run.
+    fn fault_track(&mut self) -> TrackId {
+        if !self.fault_track_named && self.tracer.enabled() {
+            self.tracer.name_process(FAULT_PID, "fault injection (µs)");
+            self.tracer.name_track(FAULT_TRACK, "faults");
+            self.fault_track_named = true;
+        }
+        FAULT_TRACK
+    }
+
+    /// Fire the injector's due events and apply their serving-side
+    /// effects: a failed pipeline device is quarantined on both executor
+    /// clocks (never the last active one) and the admission queue +
+    /// backlog bound shrink to the surviving capacity fraction. Every
+    /// fired event opens a degraded window (closed by the next
+    /// successful completion — that interval is the MTTR sample).
+    fn advance_faults(&mut self, now_us: u64) {
+        let fired = match self.faults.as_mut() {
+            Some(inj) => inj.advance(now_us),
+            None => return,
+        };
+        if fired.is_empty() {
+            return;
+        }
+        if self.first_fault_us.is_none() {
+            self.first_fault_us = Some(fired[0].at_us);
+        }
+        let track = self.fault_track();
+        for ev in &fired {
+            self.open_fault_at.get_or_insert(ev.at_us);
+            let (name, arg) = match ev.kind {
+                FaultKind::DeviceFail { device } => {
+                    if device < self.cfg.pipeline_devices {
+                        self.busy_us.disable_device(device);
+                        self.busy_cycles.disable_device(device);
+                    }
+                    let frac = self
+                        .faults
+                        .as_ref()
+                        .expect("advance_faults only fires with an injector")
+                        .capacity_fraction(self.cfg.pipeline_devices);
+                    let cap = ((self.cfg.queue_cap as f64 * frac) as usize).max(1);
+                    self.queue.set_cap(cap);
+                    if self.cfg.max_backlog_us != u64::MAX {
+                        self.degraded_backlog_us =
+                            ((self.cfg.max_backlog_us as f64 * frac) as u64).max(1);
+                    }
+                    ("device fail", device as i64)
+                }
+                FaultKind::TileAttrition { device, .. } => ("tile attrition", device as i64),
+                FaultKind::LinkDegrade { percent } => ("link degrade", percent as i64),
+                FaultKind::Transient { count } => ("transient", count as i64),
+                FaultKind::Flaky { every } => ("flaky", every as i64),
+            };
+            self.tracer.instant_args(track, name, ev.at_us, &[("arg", arg)]);
+        }
+    }
+
+    /// Readmit retried requests whose backoff elapsed (`all` ignores the
+    /// backoff — the drain path). No `submitted` re-increment: a retry
+    /// is the *same* request taking another lap, so the conservation
+    /// ledger stays balanced whatever its eventual terminal state.
+    fn flush_retries(&mut self, now_us: u64, all: bool) {
+        if self.retry_pending.is_empty() {
+            return;
+        }
+        let pending = std::mem::take(&mut self.retry_pending);
+        for (req, ready_at) in pending {
+            if !all && ready_at > now_us {
+                self.retry_pending.push((req, ready_at));
+                continue;
+            }
+            self.readmit(req, now_us);
+        }
+    }
+
+    /// Admission for a retried request: mirrors [`Self::submit_inner`]'s
+    /// accounting except that `submitted` is not re-incremented and the
+    /// request keeps its original trace track. A queue-full refusal
+    /// sheds it; a lapsed deadline expires it.
+    fn readmit(&mut self, req: ServeRequest, now_us: u64) {
+        let tenant = req.tenant;
+        let id = req.id;
+        match self.queue.admit(req, now_us) {
+            Ok(displaced) => {
+                if self.tracer.enabled() {
+                    if let Some(&tid) = self.track_ids.get(&id) {
+                        self.tracer.instant(
+                            TrackId::new(SERVING_REQUEST_PID, tid),
+                            "readmitted",
+                            now_us,
+                        );
+                    }
+                }
+                if let Some(victim) = displaced {
+                    self.shed += 1;
+                    self.tenants[victim.tenant].shed += 1;
+                    if let Some(tid) = self.track_ids.remove(&victim.id) {
+                        self.tracer.instant(
+                            TrackId::new(SERVING_REQUEST_PID, tid),
+                            "shed",
+                            now_us,
+                        );
+                    }
+                }
+                if self.tracer.enabled() {
+                    self.tracer.counter(
+                        SERVING_ADMISSION_TRACK,
+                        "queue depth",
+                        now_us,
+                        self.queue.len() as i64,
+                    );
+                }
+            }
+            Err(AdmitError::QueueFull) => {
+                self.shed += 1;
+                self.tenants[tenant].shed += 1;
+                self.retry_attempts.remove(&id);
+                if let Some(tid) = self.track_ids.remove(&id) {
+                    self.tracer.instant(TrackId::new(SERVING_REQUEST_PID, tid), "shed", now_us);
+                }
+            }
+            Err(_) => {
+                // DeadlinePassed: the SLO lapsed during the backoff.
+                self.expired += 1;
+                self.tenants[tenant].expired += 1;
+                self.retry_attempts.remove(&id);
+                if let Some(tid) = self.track_ids.remove(&id) {
+                    self.tracer.instant(
+                        TrackId::new(SERVING_REQUEST_PID, tid),
+                        "expired",
+                        now_us,
+                    );
+                }
+            }
+        }
+    }
+
+    /// A batch launch lost to an injected transient fault: each of its
+    /// requests either re-enters forming after a deadline-aware backoff
+    /// (attempt cap and tenant retry budget permitting) or is counted
+    /// `failed` — exactly one terminal state per request, so the
+    /// conservation ledger never leaks.
+    fn handle_transient_failure(&mut self, batch: FusedBatch, now_us: u64) -> Vec<ServeOutcome> {
+        self.transient_failures += 1;
+        self.open_fault_at.get_or_insert(now_us);
+        if self.first_fault_us.is_none() {
+            self.first_fault_us = Some(now_us);
+        }
+        let track = self.fault_track();
+        self.tracer.instant_args(
+            track,
+            "transient batch failure",
+            now_us,
+            &[("rows", batch.requests.len() as i64)],
+        );
+        let policy = self
+            .faults
+            .as_ref()
+            .expect("transient failures only fire with an injector")
+            .policy();
+        let tenant = batch.tenant;
+        for req in batch.requests {
+            let attempt = self.retry_attempts.get(&req.id).copied().unwrap_or(0) + 1;
+            // Exponential backoff, capped well under overflow.
+            let backoff = policy.backoff_us.saturating_mul(1u64 << (attempt - 1).min(16));
+            let ready_at = now_us + backoff;
+            let allowed = attempt <= policy.max_retries
+                && self.tenants[tenant].retries < policy.tenant_retry_budget
+                && ready_at < req.deadline_us;
+            if allowed {
+                self.retry_attempts.insert(req.id, attempt);
+                self.retries += 1;
+                self.tenants[tenant].retries += 1;
+                if self.tracer.enabled() {
+                    if let Some(&tid) = self.track_ids.get(&req.id) {
+                        self.tracer.instant_args(
+                            TrackId::new(SERVING_REQUEST_PID, tid),
+                            "retry scheduled",
+                            now_us,
+                            &[("attempt", attempt as i64)],
+                        );
+                    }
+                }
+                self.retry_pending.push((req, ready_at));
+            } else {
+                self.failed += 1;
+                self.tenants[tenant].failed += 1;
+                self.retry_exhausted += 1;
+                self.retry_attempts.remove(&req.id);
+                if let Some(tid) = self.track_ids.remove(&req.id) {
+                    self.tracer.instant(TrackId::new(SERVING_REQUEST_PID, tid), "failed", now_us);
+                }
+            }
+        }
+        Vec::new()
+    }
+
+    /// Advance the runtime to `now_us`: fire due fault events, readmit
+    /// elapsed retries, evict SLO-expired requests, then cut and execute
+    /// ready groups — highest priority first — while the executor
+    /// backlog stays under the (possibly degraded) backlog bound. An
+    /// empty queue ticks to an empty outcome list — ticking is always
+    /// safe. A batch whose backend execution fails is dropped and
+    /// counted in [`ServingReport::failed`] rather than aborting the
+    /// tick, so one unservable batch cannot lose the accounting of its
+    /// neighbours.
     pub fn tick(&mut self, now_us: u64) -> Vec<ServeOutcome> {
+        self.advance_faults(now_us);
+        self.flush_retries(now_us, false);
         self.evict_expired(now_us);
         // An unbounded backlog makes forming independent of execution
         // (the bound is the only coupling between the two), so the tick
-        // may form everything ready first and fan the batches out.
-        if self.fanout.is_some() && self.cfg.max_backlog_us == u64::MAX {
+        // may form everything ready first and fan the batches out. An
+        // attached injector forces the sequential path (byte-identical
+        // by the fan-out parity pin) so every launch passes the
+        // transient-fault check.
+        if self.fanout.is_some() && self.faults.is_none() && self.cfg.max_backlog_us == u64::MAX
+        {
             let in_dim = self.in_dim;
             return self.run_waves(now_us, |former, queue| {
                 former.form_ready(queue, now_us, in_dim)
@@ -690,18 +1049,29 @@ impl<B: BatchedBackend> ServingRuntime<B> {
         out
     }
 
-    /// Evict expired requests, then serve everything left regardless of
-    /// batch-forming deadlines or the backlog bound (shutdown /
-    /// end-of-trace).
+    /// Fire due fault events and evict expired requests, then serve
+    /// everything left regardless of batch-forming deadlines or the
+    /// backlog bound (shutdown / end-of-trace) — including retried
+    /// requests, which loop back into forming until each reaches a
+    /// terminal state (completed, failed, shed or expired).
     pub fn drain(&mut self, now_us: u64) -> Vec<ServeOutcome> {
+        self.advance_faults(now_us);
         self.evict_expired(now_us);
-        if self.fanout.is_some() {
+        if self.fanout.is_some() && self.faults.is_none() {
             let in_dim = self.in_dim;
             return self.run_waves(now_us, |former, queue| former.form(queue, in_dim));
         }
         let mut out = Vec::new();
-        while let Some(batch) = self.former.form(&mut self.queue, self.in_dim) {
-            out.extend(self.execute(batch, now_us));
+        loop {
+            self.flush_retries(now_us, true);
+            while let Some(batch) = self.former.form(&mut self.queue, self.in_dim) {
+                out.extend(self.execute(batch, now_us));
+            }
+            // Retries scheduled during this pass loop back; the attempt
+            // cap guarantees termination.
+            if self.retry_pending.is_empty() {
+                break;
+            }
         }
         out
     }
@@ -798,6 +1168,11 @@ impl<B: BatchedBackend> ServingRuntime<B> {
     }
 
     fn execute(&mut self, batch: FusedBatch, now_us: u64) -> Vec<ServeOutcome> {
+        if let Some(inj) = self.faults.as_mut() {
+            if inj.batch_fails() {
+                return self.handle_transient_failure(batch, now_us);
+            }
+        }
         let tenant = batch.tenant;
         // Stats snapshots bracket the backend call so cache activity can
         // be attributed to this batch as admission-track instants.
@@ -886,10 +1261,22 @@ impl<B: BatchedBackend> ServingRuntime<B> {
             compute: cost.compute.div_ceil(1_000).max(1),
         };
         let completion_us = self.busy_us.step(now_us, cost_us);
+        // A successful completion closes any open degraded window; the
+        // window's span on the µs clock (converted to AIE cycles) is one
+        // MTTR sample.
+        if let Some(open) = self.open_fault_at.take() {
+            self.recoveries += 1;
+            self.mttr_total_cycles +=
+                completion_us.saturating_sub(open).saturating_mul(1_000);
+            let track = self.fault_track();
+            self.tracer.span(track, "degraded", open, completion_us.max(open));
+        }
         // The batch formed when its *last* member arrived; that instant
         // splits each request's wait into a queue-wait leg (waiting for
         // company) and a batch-wait leg (the former's cut policy).
         let last_arrival = batch.requests.iter().map(|r| r.arrival_us).max().unwrap_or(now_us);
+        let first_fault = self.first_fault_us;
+        let mut in_slo_after = 0u64;
         let mut outcomes = Vec::with_capacity(rows);
         for (i, req) in batch.requests.into_iter().enumerate() {
             let row = logits[i * self.n_classes..(i + 1) * self.n_classes].to_vec();
@@ -920,11 +1307,15 @@ impl<B: BatchedBackend> ServingRuntime<B> {
             }
             self.latencies_us.push(latency_us as f64);
             self.completed += 1;
+            self.retry_attempts.remove(&req.id);
             let t = &mut self.tenants[tenant];
             t.completed += 1;
             t.latencies_us.push(latency_us as f64);
             if completion_us <= req.deadline_us {
                 t.completed_in_slo += 1;
+                if first_fault.is_some_and(|f0| req.arrival_us >= f0) {
+                    in_slo_after += 1;
+                }
             }
             outcomes.push(ServeOutcome {
                 id: req.id,
@@ -936,6 +1327,7 @@ impl<B: BatchedBackend> ServingRuntime<B> {
                 latency_us,
             });
         }
+        self.completed_in_slo_after_fault += in_slo_after;
         outcomes
     }
 
@@ -1034,6 +1426,22 @@ impl<B: BatchedBackend> ServingRuntime<B> {
             batch_wait: LatencyStats::from_us_samples(&self.batch_waits),
             execute: LatencyStats::from_us_samples(&self.executes),
             tenants: self.tenants.iter().map(TenantState::report).collect(),
+            faults: self.faults.as_ref().map(|inj| FaultReport {
+                injected: inj.injected(),
+                transient_failures: self.transient_failures,
+                retries: self.retries,
+                retry_exhausted: self.retry_exhausted,
+                recoveries: self.recoveries,
+                mttr_cycles: if self.recoveries == 0 {
+                    0
+                } else {
+                    self.mttr_total_cycles / self.recoveries
+                },
+                first_fault_us: self.first_fault_us,
+                capacity_fraction: inj.capacity_fraction(self.cfg.pipeline_devices),
+                submitted_after_fault: self.submitted_after_fault,
+                completed_in_slo_after_fault: self.completed_in_slo_after_fault,
+            }),
         }
     }
 
@@ -1564,5 +1972,109 @@ mod tests {
         let l = r.latency.unwrap();
         assert_eq!(l.count, 3);
         assert!(l.max_us >= l.p50_us);
+    }
+
+    #[test]
+    fn transient_fault_retries_to_completion() {
+        use crate::fault::{FaultEvent, FaultInjector, FaultKind, FaultPlan};
+        let plan = FaultPlan::new(vec![FaultEvent {
+            at_us: 0,
+            kind: FaultKind::Transient { count: 1 },
+        }]);
+        let mut rt = runtime(ServingConfig { max_batch: 1, ..Default::default() })
+            .with_faults(FaultInjector::new(plan));
+        rt.submit(feat(1.0), Precision::U8, 0).unwrap();
+        // First launch eats the transient; the drain loops the retry
+        // back through forming until it completes.
+        let out = rt.drain(10);
+        assert_eq!(out.len(), 1, "the retried request still completes");
+        let r = rt.report();
+        assert_eq!(r.completed, 1);
+        assert_eq!(r.failed, 0);
+        let f = r.faults.expect("injector attached → fault report present");
+        assert_eq!(f.injected, 1);
+        assert_eq!(f.transient_failures, 1);
+        assert_eq!(f.retries, 1);
+        assert_eq!(f.retry_exhausted, 0);
+        assert_eq!(r.tenants[0].retries, 1);
+        assert!(f.recoveries >= 1, "completion closed the degraded window");
+    }
+
+    #[test]
+    fn exhausted_retries_fail_without_leaking_the_ledger() {
+        use crate::fault::{FaultEvent, FaultInjector, FaultKind, FaultPlan, RetryPolicy};
+        // Every launch fails, so the lone request burns its retry
+        // budget and lands in `failed` — never double-counted.
+        let plan = FaultPlan::new(vec![FaultEvent {
+            at_us: 0,
+            kind: FaultKind::Flaky { every: 1 },
+        }]);
+        let inj = FaultInjector::new(plan).with_policy(RetryPolicy {
+            max_retries: 2,
+            backoff_us: 10,
+            tenant_retry_budget: 1024,
+        });
+        let mut rt =
+            runtime(ServingConfig { max_batch: 1, ..Default::default() }).with_faults(inj);
+        rt.submit(feat(1.0), Precision::U8, 0).unwrap();
+        let out = rt.drain(10);
+        assert!(out.is_empty());
+        let r = rt.report();
+        let f = r.faults.unwrap();
+        assert_eq!(r.failed, 1, "one terminal failure for one request");
+        assert_eq!(f.retries, 2, "both retry attempts were spent");
+        assert_eq!(f.retry_exhausted, 1);
+        assert_eq!(r.tenants[0].submitted, 1, "retries never re-count submission");
+        assert_eq!(
+            r.tenants[0].submitted,
+            r.completed + r.failed + r.expired + r.shed + r.rejected,
+            "conservation ledger balances under retry"
+        );
+    }
+
+    #[test]
+    fn device_failure_shrinks_admission_capacity() {
+        use crate::fault::{FaultInjector, FaultPlan};
+        let cfg = ServingConfig {
+            max_batch: 1,
+            queue_cap: 8,
+            pipeline_devices: 2,
+            max_backlog_us: 1_000,
+            ..Default::default()
+        };
+        let mut rt = runtime(cfg)
+            .with_faults(FaultInjector::new(FaultPlan::single_device_loss(1, 5)));
+        rt.submit(feat(1.0), Precision::U8, 0).unwrap();
+        rt.tick(0);
+        rt.tick(5); // fires the device loss
+        let r = rt.report();
+        let f = r.faults.unwrap();
+        assert_eq!(f.injected, 1);
+        assert_eq!(f.first_fault_us, Some(5));
+        assert!((f.capacity_fraction - 0.5).abs() < 1e-9, "1 of 2 devices survives");
+        // Queue capacity halved with the surviving fraction.
+        assert_eq!(rt.queue.cap(), 4);
+    }
+
+    #[test]
+    fn empty_fault_plan_is_observationally_free() {
+        use crate::fault::{FaultInjector, FaultPlan};
+        let drive = |rt: &mut ServingRuntime<EchoBackend>| {
+            for i in 0..6 {
+                rt.submit(feat(i as f32), Precision::U8, i * 10).unwrap();
+                rt.tick(i * 10);
+            }
+            rt.drain(100);
+        };
+        let mut plain = runtime(ServingConfig { max_batch: 2, ..Default::default() });
+        drive(&mut plain);
+        let mut faulted = runtime(ServingConfig { max_batch: 2, ..Default::default() })
+            .with_faults(FaultInjector::new(FaultPlan::none()));
+        drive(&mut faulted);
+        assert_eq!(
+            plain.fingerprint(),
+            faulted.fingerprint(),
+            "an empty plan must be byte-invisible in the fingerprint"
+        );
     }
 }

@@ -125,6 +125,10 @@ pub struct TenantReport {
     pub rejected: u64,
     /// Requests lost to backend execution failures.
     pub failed: u64,
+    /// Retry attempts charged against this tenant's retry budget after
+    /// injected transient faults (a retry is the same request re-queued,
+    /// so it never re-counts in `submitted`).
+    pub retries: u64,
     /// Latency distribution of this tenant's completions (logical µs).
     pub latency: Option<LatencyStats>,
     /// This tenant's packed-operand cache partition counters.
@@ -209,6 +213,7 @@ mod tests {
             expired: 0,
             rejected: 0,
             failed: 0,
+            retries: 0,
             latency: None,
             cache: CacheStats::default(),
             plan_cache: PlanCacheStats::default(),

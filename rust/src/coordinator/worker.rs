@@ -3,7 +3,7 @@
 use super::cache::{CacheKey, CachedPlan, PlanKey, ServingCaches};
 use super::pipeline::StageCost;
 use crate::arch::VersalArch;
-use crate::cluster::{Cluster, ClusterError, Collectives, DeviceId};
+use crate::cluster::{recovery, Cluster, ClusterError, Collectives, DeviceId, RecoveryCost};
 use crate::dl::{HostGemm, Mlp, MlpSpec, PackedWeights, QuantLinear, TpMode};
 use crate::gemm::{prepack_b, Ccp, GemmConfig, ParallelGemm, Precision, PrecisionPolicy, PrepackedB};
 use crate::obs::{TrackId, Tracer, CLUSTER_PID};
@@ -497,6 +497,64 @@ impl ClusterGemmBackend {
         &self.cluster
     }
 
+    /// Quarantine one failed device and re-plan serving onto the
+    /// survivors: the pool is rebuilt without it
+    /// ([`recovery::without_devices`] — re-indexed devices, topology
+    /// shrunk within its family), the resident shard blocks are dropped
+    /// (the weights are immutable, so the lazy re-pack on the next batch
+    /// produces bit-identical blocks for the *new* sharding — pinned in
+    /// `tests/fault_tolerance.rs`), and the returned [`RecoveryCost`]
+    /// prices the re-shard through the plan IR: per layer, each
+    /// survivor's new weight band lowers its prepacked shard plan
+    /// (Megatron alternation — even layers column-split `out_dim`, odd
+    /// layers row-split `in_dim`, exactly the bands
+    /// [`crate::dl::Mlp::forward_tp`] will execute) and the `Bc` step
+    /// footprint is what must cross the fabric and be re-packed.
+    pub fn quarantine_device(&mut self, device: DeviceId) -> Result<RecoveryCost, ClusterError> {
+        let (survived, _kept) = recovery::without_devices(&self.cluster, &[device])?;
+        let fabric = crate::cluster::Fabric::new(&survived.fabric);
+        let weights: Vec<usize> = survived.devices.iter().map(|d| d.tiles).collect();
+        let mut cost = RecoveryCost::default();
+        for l in 0..self.mlp.spec.n_layers() {
+            let (in_dim, out_dim) = (self.mlp.spec.dims[l], self.mlp.spec.dims[l + 1]);
+            let bands = if l % 2 == 0 {
+                crate::cluster::partition(out_dim, &weights)
+            } else {
+                crate::cluster::partition(in_dim, &weights)
+            };
+            let mut payloads = Vec::with_capacity(bands.len());
+            let mut repack = 0u64;
+            for (s, &band) in bands.iter().enumerate() {
+                if band == 0 {
+                    continue;
+                }
+                // Shard B shapes per mode: column-split is (in_dim × band),
+                // row-split is (band × out_dim). Bc footprints are
+                // row-count independent, so m=1 prices the resident blocks.
+                let (n, k) = if l % 2 == 0 { (band, in_dim) } else { (out_dim, band) };
+                let dspec = &survived.devices[s];
+                let cfg = GemmConfig {
+                    ccp: self.ccp,
+                    tiles: dspec.tiles,
+                    count_packing: false,
+                    steady_stream: true,
+                };
+                let plan = GemmPlan::lower(&dspec.arch, &cfg, 1, n, k, Precision::U8, true)
+                    .map_err(|e| ClusterError::LocalGemm(e.to_string()))?;
+                let bytes = plan.pack_bytes(Buffer::Bc);
+                payloads.push(bytes);
+                repack =
+                    repack.max((bytes as f64 / dspec.arch.ic.pack_bytes_per_cycle) as u64);
+            }
+            cost.repack_cycles += repack;
+            cost.transfer_cycles +=
+                fabric.serialized_cycles(&payloads, survived.topology.diameter());
+        }
+        self.cluster = survived;
+        self.shard_packs.clear();
+        Ok(cost)
+    }
+
     /// The tensor-parallel forward shared by [`Backend::infer_batch`]
     /// (dense shards: each device packs its Bc blocks inside the loop
     /// nest) and [`BatchedBackend::serve_fused`] (`prepacked` — each
@@ -890,6 +948,31 @@ mod tests {
             fresh_before,
             "warm wave packs entirely from recycled arena buffers"
         );
+    }
+
+    #[test]
+    fn quarantine_replans_bit_exactly_onto_survivors() {
+        let spec = MlpSpec { dims: vec![16, 12, 4] };
+        let cluster = Cluster::vc1902_pool(3, 4).unwrap();
+        let mut tp = ClusterGemmBackend::new(cluster, spec.clone(), 99).unwrap();
+        let x: Vec<f32> = (0..2 * 16).map(|i| (i as f32 * 0.17).cos()).collect();
+        let (healthy, _) = tp.infer_batch(2, &x).unwrap();
+        let cost = tp.quarantine_device(1).unwrap();
+        assert!(cost.repack_cycles > 0, "re-sharded bands pay their re-pack");
+        assert!(cost.transfer_cycles > 0, "bands cross the fabric");
+        assert_eq!(tp.cluster().n_devices(), 2);
+        let (degraded, degraded_cycles) = tp.infer_batch(2, &x).unwrap();
+        assert_eq!(degraded, healthy, "survivor pool computes identical bits");
+        // The quarantined backend is indistinguishable from one built
+        // fresh on the surviving pool — logits and schedule both.
+        let mut fresh =
+            ClusterGemmBackend::new(Cluster::vc1902_pool(2, 4).unwrap(), spec, 99).unwrap();
+        let (fresh_logits, fresh_cycles) = fresh.infer_batch(2, &x).unwrap();
+        assert_eq!(degraded, fresh_logits);
+        assert_eq!(degraded_cycles, fresh_cycles, "identical survivor schedule");
+        // Killing the last devices is refused, not a panic.
+        tp.quarantine_device(0).unwrap();
+        assert!(matches!(tp.quarantine_device(0), Err(ClusterError::Empty)));
     }
 
     #[test]

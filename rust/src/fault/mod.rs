@@ -1,0 +1,500 @@
+//! Deterministic, seeded fault injection for the cycle-domain stack.
+//!
+//! A production fleet is defined by how it behaves when a device drops,
+//! a NoC link degrades, or a batch execution throws — not by its healthy
+//! steady state. This module is the **one fault vocabulary** shared by
+//! the serving runtime, the cluster layer and the test batteries:
+//!
+//! - [`FaultKind`] — the typed fault taxonomy: whole-device failure,
+//!   AIE-tile attrition (the device keeps running with fewer tiles),
+//!   fabric link degradation (bandwidth scaled down, outage at the
+//!   floor), transient batch-execution errors, and the every-Nth-batch
+//!   flaky schedule the legacy wall-clock coordinator tests exercised.
+//! - [`FaultPlan`] — a cycle-domain **schedule** of fault events on the
+//!   same logical-µs clock the serving runtime advances on. Plans come
+//!   from an explicit list, the CLI grammar ([`FaultPlan::parse`]), or a
+//!   seeded storm generator ([`FaultPlan::storm`]) built on the exact
+//!   `splitmix64`-chained [`Pcg32`] discipline of
+//!   [`crate::coordinator::workload`] — same seed, same storm, byte for
+//!   byte.
+//! - [`FaultInjector`] — the runtime-side state machine: fires due
+//!   events as the clock advances, tracks surviving capacity, and
+//!   decides which batch launches fail transiently. An injector built
+//!   from [`FaultPlan::none`] is **observationally free**: it fires
+//!   nothing, fails nothing, and the serving runtime's reports, metric
+//!   fingerprints and Chrome traces are byte-identical to a run without
+//!   any injector at all (pinned by `tests/fault_tolerance.rs`).
+//! - [`RetryPolicy`] — bounded retry with deadline-aware exponential
+//!   backoff and a per-tenant retry budget, consumed by
+//!   [`crate::coordinator::ServingRuntime`].
+//!
+//! Everything here is deterministic: no wall-clock reads, no hash-map
+//! iteration, integer arithmetic in the schedule domain.
+
+use crate::util::rng::{splitmix64, Pcg32};
+
+/// One typed fault. Times live on the caller's logical clock (the
+/// serving runtime's microseconds); device indices are interpreted by
+/// the consumer — the serving runtime maps them onto its pipeline
+/// devices, the cluster layer onto pool [`crate::cluster::DeviceId`]s.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Whole-device failure: the device accepts no further work and is
+    /// quarantined out of the placement.
+    DeviceFail {
+        /// Index of the failed device.
+        device: usize,
+    },
+    /// AIE-tile attrition: `device` keeps running but `lost` of its
+    /// tiles are gone — its capacity (and therefore its share of a
+    /// capacity-weighted placement) shrinks.
+    TileAttrition {
+        /// Index of the degraded device.
+        device: usize,
+        /// Tiles lost (clamped so at least one tile survives).
+        lost: usize,
+    },
+    /// Fabric link degradation: every link's bandwidth drops to
+    /// `percent`% of nominal (clamped to `1..=100`; 1% models a
+    /// near-outage — a fabric with zero bandwidth would divide by zero,
+    /// and a true outage is a [`FaultKind::DeviceFail`] of the
+    /// unreachable device).
+    LinkDegrade {
+        /// Surviving bandwidth, percent of nominal.
+        percent: u32,
+    },
+    /// The next `count` batch executions fail transiently (retryable:
+    /// the work itself is fine, the execution attempt was lost).
+    Transient {
+        /// Batch executions to fail.
+        count: u32,
+    },
+    /// Every `every`-th batch launch fails transiently from this event
+    /// on — the deterministic schedule behind the legacy
+    /// `FlakyBackend` scenarios (`tests/coordinator_faults.rs`), now
+    /// shared by both runtimes.
+    Flaky {
+        /// Failure period in batches (0 disables).
+        every: u32,
+    },
+}
+
+/// A fault at a point on the logical clock.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaultEvent {
+    /// When the fault strikes (logical µs).
+    pub at_us: u64,
+    /// What breaks.
+    pub kind: FaultKind,
+}
+
+/// A deterministic schedule of faults, sorted by time (stable — equal
+/// times keep declaration order).
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct FaultPlan {
+    /// The events, ascending by [`FaultEvent::at_us`].
+    pub events: Vec<FaultEvent>,
+}
+
+impl FaultPlan {
+    /// The empty plan: injects nothing, observationally free.
+    pub fn none() -> FaultPlan {
+        FaultPlan { events: Vec::new() }
+    }
+
+    /// A plan from explicit events (sorted stably by time).
+    pub fn new(mut events: Vec<FaultEvent>) -> FaultPlan {
+        events.sort_by_key(|e| e.at_us);
+        FaultPlan { events }
+    }
+
+    /// Whether the plan schedules anything.
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// The canonical single-device-loss scenario: `device` fails at
+    /// `at_us` (the acceptance gate of `bench_faults`).
+    pub fn single_device_loss(device: usize, at_us: u64) -> FaultPlan {
+        FaultPlan::new(vec![FaultEvent { at_us, kind: FaultKind::DeviceFail { device } }])
+    }
+
+    /// Parse the CLI grammar: comma-separated events, each
+    /// `<kind>@<t_us>` (`@0` if omitted):
+    ///
+    /// - `device:<d>@<t>` — device `d` fails at `t` µs;
+    /// - `tiles:<d>:<lost>@<t>` — device `d` loses `lost` tiles;
+    /// - `link:<percent>@<t>` — links degrade to `percent`% bandwidth;
+    /// - `transient:<count>@<t>` — the next `count` batches fail;
+    /// - `flaky:<every>@<t>` — every `every`-th batch fails from `t` on.
+    ///
+    /// Example: `--faults device:1@5000,transient:2@2000,link:50@8000`.
+    pub fn parse(spec: &str) -> Result<FaultPlan, String> {
+        let mut events = Vec::new();
+        for part in spec.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (body, at_us) = match part.rsplit_once('@') {
+                Some((b, t)) => {
+                    let t: u64 =
+                        t.trim().parse().map_err(|_| format!("bad time in fault {part:?}"))?;
+                    (b.trim(), t)
+                }
+                None => (part, 0),
+            };
+            let fields: Vec<&str> = body.split(':').map(str::trim).collect();
+            let int = |s: &str, what: &str| -> Result<u64, String> {
+                s.parse().map_err(|_| format!("bad {what} in fault {part:?}"))
+            };
+            let kind = match fields.as_slice() {
+                ["device", d] => FaultKind::DeviceFail { device: int(d, "device")? as usize },
+                ["tiles", d, l] => FaultKind::TileAttrition {
+                    device: int(d, "device")? as usize,
+                    lost: int(l, "tile count")? as usize,
+                },
+                ["link", p] => {
+                    let percent = int(p, "percent")? as u32;
+                    if percent > 100 {
+                        return Err(format!("link percent must be <= 100 in {part:?}"));
+                    }
+                    FaultKind::LinkDegrade { percent: percent.max(1) }
+                }
+                ["transient", c] => FaultKind::Transient { count: int(c, "count")? as u32 },
+                ["flaky", e] => FaultKind::Flaky { every: int(e, "period")? as u32 },
+                _ => {
+                    return Err(format!(
+                        "unknown fault {part:?} (device:<d>|tiles:<d>:<lost>|link:<pct>|\
+                         transient:<n>|flaky:<n>, each @<t_us>)"
+                    ))
+                }
+            };
+            events.push(FaultEvent { at_us, kind });
+        }
+        Ok(FaultPlan::new(events))
+    }
+
+    /// A seeded random fault storm: `n_events` faults drawn uniformly
+    /// over `[0, horizon_us)` against a pool of `devices` devices. Uses
+    /// the workload generator's seeding discipline — one `splitmix64`
+    /// chain forks a per-stream [`Pcg32`] — so the same seed yields the
+    /// same storm on every platform, independent of any other RNG use
+    /// in the process.
+    pub fn storm(seed: u64, horizon_us: u64, n_events: usize, devices: usize) -> FaultPlan {
+        let mut chain = seed;
+        let mut rng = Pcg32::new(splitmix64(&mut chain));
+        let mut events = Vec::with_capacity(n_events);
+        for _ in 0..n_events {
+            let at_us = (rng.f64() * horizon_us.max(1) as f64) as u64;
+            let kind = match rng.below(4) {
+                0 => FaultKind::DeviceFail { device: rng.range(0, devices.max(1)) },
+                1 => FaultKind::TileAttrition {
+                    device: rng.range(0, devices.max(1)),
+                    lost: 1 + rng.range(0, 4),
+                },
+                2 => FaultKind::LinkDegrade { percent: 10 + rng.below(90) },
+                _ => FaultKind::Transient { count: 1 + rng.below(3) },
+            };
+            events.push(FaultEvent { at_us, kind });
+        }
+        FaultPlan::new(events)
+    }
+}
+
+/// Bounded-retry policy for transiently failed batches: a failed
+/// request re-enters batch forming only while its attempt count, its
+/// tenant's retry budget **and its SLO deadline** all admit the retry;
+/// otherwise it is counted `failed` in the conservation ledger.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RetryPolicy {
+    /// Retries allowed per request (0 = fail on first transient error,
+    /// the legacy drop-cleanly behaviour).
+    pub max_retries: u32,
+    /// Base backoff before the first retry (logical µs); doubles per
+    /// subsequent attempt. A retry whose backoff lands at or past the
+    /// request's deadline is never launched — the request fails instead.
+    pub backoff_us: u64,
+    /// Retries one tenant may consume over the runtime's lifetime, so a
+    /// fault storm in one tenant's traffic cannot starve the others'
+    /// forming capacity with retry churn.
+    pub tenant_retry_budget: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy { max_retries: 2, backoff_us: 500, tenant_retry_budget: 1_024 }
+    }
+}
+
+/// Runtime-side fault state machine: feed it the logical clock
+/// ([`FaultInjector::advance`]) and ask it, per batch launch, whether
+/// the execution attempt is lost ([`FaultInjector::batch_fails`]).
+#[derive(Debug, Clone)]
+pub struct FaultInjector {
+    plan: FaultPlan,
+    next_event: usize,
+    policy: RetryPolicy,
+    failed_devices: Vec<usize>,
+    tiles_lost: Vec<(usize, usize)>,
+    link_percent: u32,
+    transient_pending: u32,
+    flaky_every: u32,
+    batch_seq: u64,
+    injected: u64,
+    first_fault_us: Option<u64>,
+}
+
+impl FaultInjector {
+    /// An injector for `plan` with the default [`RetryPolicy`].
+    pub fn new(plan: FaultPlan) -> FaultInjector {
+        FaultInjector {
+            plan,
+            next_event: 0,
+            policy: RetryPolicy::default(),
+            failed_devices: Vec::new(),
+            tiles_lost: Vec::new(),
+            link_percent: 100,
+            transient_pending: 0,
+            flaky_every: 0,
+            batch_seq: 0,
+            injected: 0,
+            first_fault_us: None,
+        }
+    }
+
+    /// Builder: override the retry policy.
+    pub fn with_policy(mut self, policy: RetryPolicy) -> FaultInjector {
+        self.policy = policy;
+        self
+    }
+
+    /// The retry policy in force.
+    pub fn policy(&self) -> RetryPolicy {
+        self.policy
+    }
+
+    /// The schedule this injector replays.
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+
+    /// Fire every event due at or before `now_us`, in schedule order,
+    /// and return them so the caller can apply layer-specific effects
+    /// (quarantine a pipeline device, tighten admission). Idempotent
+    /// per event: each fires exactly once.
+    pub fn advance(&mut self, now_us: u64) -> Vec<FaultEvent> {
+        let mut fired = Vec::new();
+        while self.next_event < self.plan.events.len()
+            && self.plan.events[self.next_event].at_us <= now_us
+        {
+            let ev = self.plan.events[self.next_event];
+            self.next_event += 1;
+            self.injected += 1;
+            self.first_fault_us.get_or_insert(ev.at_us);
+            match ev.kind {
+                FaultKind::DeviceFail { device } => {
+                    if !self.failed_devices.contains(&device) {
+                        self.failed_devices.push(device);
+                        self.failed_devices.sort_unstable();
+                    }
+                }
+                FaultKind::TileAttrition { device, lost } => {
+                    match self.tiles_lost.iter_mut().find(|(d, _)| *d == device) {
+                        Some((_, l)) => *l += lost,
+                        None => {
+                            self.tiles_lost.push((device, lost));
+                            self.tiles_lost.sort_unstable();
+                        }
+                    }
+                }
+                FaultKind::LinkDegrade { percent } => {
+                    self.link_percent = percent.clamp(1, 100);
+                }
+                FaultKind::Transient { count } => {
+                    self.transient_pending = self.transient_pending.saturating_add(count);
+                }
+                FaultKind::Flaky { every } => {
+                    self.flaky_every = every;
+                }
+            }
+            fired.push(ev);
+        }
+        fired
+    }
+
+    /// Account one batch launch; `true` means this execution attempt is
+    /// lost to an injected transient fault (a pending
+    /// [`FaultKind::Transient`] count, consumed one per batch, or the
+    /// [`FaultKind::Flaky`] period striking). Deterministic in the
+    /// launch sequence.
+    pub fn batch_fails(&mut self) -> bool {
+        self.batch_seq += 1;
+        if self.transient_pending > 0 {
+            self.transient_pending -= 1;
+            return true;
+        }
+        self.flaky_every > 0 && self.batch_seq % self.flaky_every as u64 == 0
+    }
+
+    /// Devices failed so far (sorted, deduplicated).
+    pub fn failed_devices(&self) -> &[usize] {
+        &self.failed_devices
+    }
+
+    /// Tiles lost to attrition so far, per device (sorted by device).
+    pub fn tiles_lost(&self) -> &[(usize, usize)] {
+        &self.tiles_lost
+    }
+
+    /// Current fabric bandwidth, percent of nominal (100 = healthy).
+    pub fn link_percent(&self) -> u32 {
+        self.link_percent
+    }
+
+    /// Events fired so far.
+    pub fn injected(&self) -> u64 {
+        self.injected
+    }
+
+    /// When the first fault struck, if any has.
+    pub fn first_fault_us(&self) -> Option<u64> {
+        self.first_fault_us
+    }
+
+    /// Surviving fraction of a `devices`-device pool under the
+    /// device-loss faults fired so far (tile attrition and link
+    /// degradation are *not* folded in — they degrade throughput, not
+    /// device count). Never returns 0: at least one device survives
+    /// (the consumers refuse to kill the last device).
+    pub fn capacity_fraction(&self, devices: usize) -> f64 {
+        if devices == 0 {
+            return 1.0;
+        }
+        let dead = self.failed_devices.iter().filter(|&&d| d < devices).count();
+        let alive = devices.saturating_sub(dead).max(1);
+        alive as f64 / devices as f64
+    }
+}
+
+/// The shared every-Nth decision of the flaky schedule: batch `n`
+/// (1-based) fails iff `every > 0` and `n` is a multiple of `every`.
+/// Both the legacy wall-clock `FlakyBackend` tests and the injector's
+/// [`FaultKind::Flaky`] path delegate here, so the two runtimes cannot
+/// drift apart on what "every 3rd batch fails" means.
+pub fn flaky_fails(n: u64, every: u64) -> bool {
+    every > 0 && n % every == 0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrips_every_kind() {
+        let p = FaultPlan::parse("device:1@5000, tiles:0:4@2000, link:50@8000, transient:2, flaky:3@1")
+            .unwrap();
+        assert_eq!(p.events.len(), 5);
+        // Sorted by time, stably.
+        assert_eq!(p.events[0], FaultEvent { at_us: 0, kind: FaultKind::Transient { count: 2 } });
+        assert_eq!(p.events[1].kind, FaultKind::Flaky { every: 3 });
+        assert_eq!(p.events[2], FaultEvent {
+            at_us: 2000,
+            kind: FaultKind::TileAttrition { device: 0, lost: 4 },
+        });
+        assert_eq!(p.events[3], FaultEvent {
+            at_us: 5000,
+            kind: FaultKind::DeviceFail { device: 1 },
+        });
+        assert_eq!(p.events[4], FaultEvent {
+            at_us: 8000,
+            kind: FaultKind::LinkDegrade { percent: 50 },
+        });
+    }
+
+    #[test]
+    fn parse_rejects_malformed_specs() {
+        assert!(FaultPlan::parse("device").is_err());
+        assert!(FaultPlan::parse("device:x").is_err());
+        assert!(FaultPlan::parse("link:200").is_err(), "percent > 100");
+        assert!(FaultPlan::parse("meteor:1").is_err());
+        assert!(FaultPlan::parse("device:1@soon").is_err());
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+    }
+
+    #[test]
+    fn storm_is_seed_deterministic_and_in_horizon() {
+        let a = FaultPlan::storm(42, 10_000, 16, 4);
+        let b = FaultPlan::storm(42, 10_000, 16, 4);
+        assert_eq!(a, b, "same seed, same storm");
+        let c = FaultPlan::storm(43, 10_000, 16, 4);
+        assert_ne!(a, c, "different seed, different storm");
+        assert_eq!(a.events.len(), 16);
+        assert!(a.events.iter().all(|e| e.at_us < 10_000));
+        assert!(a.events.windows(2).all(|w| w[0].at_us <= w[1].at_us), "sorted");
+    }
+
+    #[test]
+    fn injector_fires_each_event_once_in_order() {
+        let plan = FaultPlan::parse("transient:1@100,device:0@200,device:1@300").unwrap();
+        let mut inj = FaultInjector::new(plan);
+        assert!(inj.advance(50).is_empty());
+        assert_eq!(inj.first_fault_us(), None);
+        let fired = inj.advance(250);
+        assert_eq!(fired.len(), 2);
+        assert_eq!(inj.injected(), 2);
+        assert_eq!(inj.first_fault_us(), Some(100));
+        assert_eq!(inj.failed_devices(), &[0]);
+        // Re-advancing past the same point fires nothing new.
+        assert!(inj.advance(250).is_empty());
+        let fired = inj.advance(1_000);
+        assert_eq!(fired.len(), 1);
+        assert_eq!(inj.failed_devices(), &[0, 1]);
+    }
+
+    #[test]
+    fn capacity_fraction_counts_device_losses_only() {
+        let mut inj = FaultInjector::new(FaultPlan::parse(
+            "device:1@0,tiles:0:2@0,link:10@0,device:7@0",
+        )
+        .unwrap());
+        inj.advance(0);
+        // Device 7 is outside a 2-device pool; tile/link faults don't
+        // change the device count.
+        assert_eq!(inj.capacity_fraction(2), 0.5);
+        assert_eq!(inj.link_percent(), 10);
+        assert_eq!(inj.tiles_lost(), &[(0, 2)]);
+        // The last device never "fails" capacity to zero.
+        let mut all = FaultInjector::new(FaultPlan::parse("device:0@0,device:1@0").unwrap());
+        all.advance(0);
+        assert_eq!(all.capacity_fraction(2), 0.5);
+    }
+
+    #[test]
+    fn transient_counts_and_flaky_period_drive_batch_failures() {
+        let plan = FaultPlan::parse("transient:2@0").unwrap();
+        let mut inj = FaultInjector::new(plan);
+        inj.advance(0);
+        assert!(inj.batch_fails());
+        assert!(inj.batch_fails());
+        assert!(!inj.batch_fails(), "count exhausted");
+        let mut flaky = FaultInjector::new(FaultPlan::parse("flaky:3@0").unwrap());
+        flaky.advance(0);
+        let fails: Vec<bool> = (0..9).map(|_| flaky.batch_fails()).collect();
+        assert_eq!(fails.iter().filter(|&&f| f).count(), 3, "every 3rd of 9");
+        assert!(fails[2] && fails[5] && fails[8]);
+        // The helper the legacy tests share.
+        assert!(flaky_fails(3, 3) && flaky_fails(6, 3));
+        assert!(!flaky_fails(4, 3) && !flaky_fails(5, 0));
+    }
+
+    #[test]
+    fn empty_plan_is_observationally_free() {
+        let mut inj = FaultInjector::new(FaultPlan::none());
+        assert!(inj.advance(u64::MAX).is_empty());
+        assert!(!inj.batch_fails());
+        assert_eq!(inj.injected(), 0);
+        assert_eq!(inj.capacity_fraction(4), 1.0);
+        assert_eq!(inj.link_percent(), 100);
+    }
+}

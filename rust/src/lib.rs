@@ -90,6 +90,7 @@ pub mod arch;
 pub mod cluster;
 pub mod coordinator;
 pub mod dl;
+pub mod fault;
 pub mod gemm;
 pub mod obs;
 pub mod plan;

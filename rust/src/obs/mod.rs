@@ -30,6 +30,7 @@
 //! | [`SERVING_REQUEST_PID`] | per-request span trees + admission/cache events | logical µs |
 //! | [`SERVING_PIPELINE_PID`] | pack/transfer/per-device compute stages | cycles |
 //! | [`CLUSTER_PID`] | per-link collective transfers | cycles |
+//! | [`FAULT_PID`] | injected faults, degraded windows, retries | logical µs |
 
 mod chrome;
 mod gantt;
@@ -54,6 +55,12 @@ pub const SERVING_REQUEST_PID: u64 = 10;
 pub const SERVING_PIPELINE_PID: u64 = 11;
 /// Process id of the cluster collective timeline (cycles).
 pub const CLUSTER_PID: u64 = 12;
+/// Process id of the fault-injection timeline (logical µs): injected
+/// fault instants, degraded-capacity windows (fault → first recovered
+/// completion) and per-batch retry events. Named lazily — a run whose
+/// [`crate::fault::FaultPlan`] never fires keeps its trace byte-identical
+/// to a fault-free run.
+pub const FAULT_PID: u64 = 13;
 
 /// The shared admission/former/cache track of
 /// [`SERVING_REQUEST_PID`] (tid 0; request tracks start at 1).

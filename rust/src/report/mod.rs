@@ -395,6 +395,38 @@ pub fn serving_table(r: &ServingReport) -> Table {
         );
         kv("requests / Mcycle", format!("{:.1}", r.requests_per_mcycle()));
     }
+    // Fault accounting renders only when an injector actually did
+    // something, so fault-free reports stay byte-identical to the
+    // pre-fault format.
+    if let Some(f) = &r.faults {
+        if f.activity() {
+            kv("faults injected", f.injected.to_string());
+            kv("transient batch failures", f.transient_failures.to_string());
+            kv(
+                "retries (exhausted)",
+                format!("{} ({})", f.retries, f.retry_exhausted),
+            );
+            kv(
+                "recoveries / MTTR",
+                format!("{} / {}", f.recoveries, fmt_kcycles(f.mttr_cycles)),
+            );
+            if let Some(first) = f.first_fault_us {
+                kv("first fault at µs", first.to_string());
+            }
+            kv(
+                "surviving capacity",
+                format!("{:.0}%", f.capacity_fraction * 100.0),
+            );
+            kv(
+                "goodput after first fault",
+                format!(
+                    "{:.1}% of {} submitted",
+                    f.goodput_after_fault() * 100.0,
+                    f.submitted_after_fault
+                ),
+            );
+        }
+    }
     // The end-to-end latency decomposition (tracer-independent: the
     // runtime always records the three legs; per request they sum to
     // the latency exactly).
@@ -424,6 +456,7 @@ pub fn tenant_table(r: &ServingReport) -> Table {
         "in-SLO %",
         "shed %",
         "expired",
+        "retries",
         "p50 µs",
         "p99 µs",
     ])
@@ -442,6 +475,7 @@ pub fn tenant_table(r: &ServingReport) -> Table {
             format!("{:.1}", tr.goodput_rate() * 100.0),
             format!("{:.1}", tr.shed_rate() * 100.0),
             tr.expired.to_string(),
+            tr.retries.to_string(),
             p50,
             p99,
         ]);
@@ -628,6 +662,7 @@ mod tests {
                     expired: 0,
                     rejected: 0,
                     failed: 0,
+                    retries: 0,
                     latency: Some(LatencyStats {
                         count: 7,
                         mean_us: 100.0,
@@ -641,6 +676,7 @@ mod tests {
                 },
                 TenantReport {
                     name: "free".into(),
+                    retries: 0,
                     priority: 1,
                     slo_us: 200_000,
                     submitted: 6,
@@ -655,6 +691,7 @@ mod tests {
                     plan_cache: PlanCacheStats::default(),
                 },
             ],
+            faults: None,
         };
         let txt = serving_table(&report).to_text();
         assert!(txt.contains("requests completed"), "{txt}");

@@ -1,14 +1,23 @@
 //! Failure-injection tests for the serving coordinator: flaky backends,
-//! panicking-workload shapes, saturation, and shutdown races.
+//! panicking-workload shapes, saturation, and shutdown races — plus the
+//! same scenarios replayed on the deterministic [`ServingRuntime`]
+//! through the seeded fault injector, so both runtimes share one fault
+//! vocabulary (`versal_gemm::fault`).
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 use versal_gemm::coordinator::{
-    Backend, BatcherConfig, Coordinator, CoordinatorConfig,
+    Backend, BatcherConfig, Coordinator, CoordinatorConfig, EchoBackend, ServingConfig,
+    ServingRuntime,
 };
+use versal_gemm::fault::{flaky_fails, FaultEvent, FaultInjector, FaultKind, FaultPlan, RetryPolicy};
+use versal_gemm::gemm::Precision;
 
-/// Backend that errors on every Nth batch.
+/// Backend that errors on every Nth batch. The decision delegates to
+/// [`flaky_fails`] — the same schedule [`FaultKind::Flaky`] uses inside
+/// the cycle-domain injector — so the threaded and deterministic
+/// runtimes cannot drift apart on what "every 3rd batch fails" means.
 struct FlakyBackend {
     counter: Arc<AtomicUsize>,
     fail_every: usize,
@@ -23,7 +32,7 @@ impl Backend for FlakyBackend {
     }
     fn infer_batch(&mut self, batch: usize, x: &[f32]) -> anyhow::Result<(Vec<f32>, u64)> {
         let n = self.counter.fetch_add(1, Ordering::SeqCst) + 1;
-        if n % self.fail_every == 0 {
+        if flaky_fails(n as u64, self.fail_every as u64) {
             anyhow::bail!("injected failure on batch {n}");
         }
         let mut logits = vec![0.0f32; batch * 2];
@@ -126,4 +135,123 @@ fn zero_feature_vectors_are_valid() {
     let r = c.infer(vec![0.0, 0.0]).unwrap();
     assert_eq!(r.logits, vec![0.0, 0.0]);
     c.shutdown();
+}
+
+// ---------------------------------------------------------------------
+// The same fault scenarios, replayed on the deterministic cycle-domain
+// runtime through the seeded injector. One fault vocabulary, two
+// runtimes: `FaultKind::Flaky { every }` is the injector spelling of
+// the `FlakyBackend` above (both delegate to `flaky_fails`).
+// ---------------------------------------------------------------------
+
+fn runtime_cfg(max_batch: usize, queue_cap: usize) -> ServingConfig {
+    ServingConfig {
+        max_batch,
+        max_wait_us: 200,
+        queue_cap,
+        default_slo_us: 50_000,
+        cache_budget_bytes: 1 << 20,
+        plan_cache_budget_bytes: 1 << 20,
+        pipeline_devices: 2,
+        max_backlog_us: u64::MAX,
+    }
+}
+
+fn flaky_runtime(every: u32, policy: RetryPolicy, max_batch: usize) -> ServingRuntime<EchoBackend> {
+    let plan =
+        FaultPlan::new(vec![FaultEvent { at_us: 0, kind: FaultKind::Flaky { every } }]);
+    ServingRuntime::new(EchoBackend { in_dim: 2, n_classes: 2 }, runtime_cfg(max_batch, 64))
+        .with_faults(FaultInjector::new(plan).with_policy(policy))
+}
+
+/// Port of `failed_batches_drop_cleanly_and_service_continues`: with
+/// retries disabled and one request per batch, every 3rd batch fails —
+/// the exact 20/10 split of the threaded coordinator — and the service
+/// keeps running through all ten failures.
+#[test]
+fn runtime_failed_batches_drop_cleanly_and_service_continues() {
+    let policy = RetryPolicy { max_retries: 0, backoff_us: 100, tenant_retry_budget: 1_024 };
+    let mut rt = flaky_runtime(3, policy, 1);
+    for i in 0..30u64 {
+        rt.submit(vec![i as f32, 0.0], Precision::U8, i * 300).unwrap();
+        rt.tick(i * 300);
+    }
+    rt.drain(30 * 300);
+    let r = rt.report();
+    assert_eq!(r.failed, 10, "every third batch fails, exactly as in the threaded port");
+    assert_eq!(r.completed, 20);
+    let f = r.faults.expect("injector attached");
+    assert_eq!(f.retries, 0, "max_retries = 0 is the legacy drop-cleanly behaviour");
+    assert_eq!(f.retry_exhausted, 10);
+}
+
+/// Port of `saturation_recovers_after_burst`: a burst far beyond the
+/// queue cap with a transient fault in the middle sheds the overflow,
+/// then subsequent sequential traffic is healthy — and unlike the
+/// threaded runtime, the ledger proves nothing vanished.
+#[test]
+fn runtime_saturation_recovers_after_faulty_burst() {
+    let plan = FaultPlan::new(vec![FaultEvent {
+        at_us: 0,
+        kind: FaultKind::Transient { count: 1 },
+    }]);
+    let mut rt =
+        ServingRuntime::new(EchoBackend { in_dim: 2, n_classes: 2 }, runtime_cfg(4, 16))
+            .with_faults(FaultInjector::new(plan));
+    // Burst: 100 requests in one instant against a 16-deep queue.
+    for i in 0..100u64 {
+        let _ = rt.submit(vec![i as f32, 0.0], Precision::U8, 0);
+    }
+    rt.tick(0);
+    rt.drain(1_000);
+    let burst_report = rt.report();
+    assert!(burst_report.completed > 0, "the queue's worth of work completes");
+    // Post-burst sequential traffic is healthy: every request completes.
+    let before = rt.report().completed;
+    for i in 0..20u64 {
+        let now = 10_000 + i * 500;
+        rt.submit(vec![i as f32, 0.0], Precision::U8, now).unwrap();
+        rt.tick(now);
+    }
+    rt.drain(30_000);
+    let r = rt.report();
+    assert_eq!(r.completed, before + 20, "post-burst traffic must be fault-free");
+    let submitted: u64 = r.tenants.iter().map(|t| t.submitted).sum();
+    assert_eq!(
+        submitted,
+        r.completed + r.failed + r.expired + r.shed + r.rejected,
+        "burst + fault + recovery must conserve the ledger"
+    );
+}
+
+/// Port of `interleaved_shapes_are_isolated_per_request`, hardened with
+/// retries: even when every 2nd batch fails and its requests re-enter
+/// forming (re-batched with *different* neighbours), each completed
+/// request still gets its own logits back.
+#[test]
+fn runtime_retries_preserve_per_request_isolation() {
+    let policy = RetryPolicy { max_retries: 3, backoff_us: 100, tenant_retry_budget: 1_024 };
+    let mut rt = flaky_runtime(2, policy, 8);
+    let mut expected = std::collections::HashMap::new();
+    let mut outcomes = Vec::new();
+    for i in 0..200u64 {
+        let now = i * 50;
+        let id = rt.submit(vec![i as f32 * 10.0, 0.0], Precision::U8, now).unwrap();
+        expected.insert(id, i as f32 * 10.0);
+        outcomes.extend(rt.tick(now));
+    }
+    outcomes.extend(rt.drain(200 * 50 + 1_000));
+    assert!(!outcomes.is_empty(), "flaky-every-2nd must still complete work via retries");
+    for o in &outcomes {
+        let want = expected[&o.id];
+        assert_eq!(
+            o.logits[0], want,
+            "request {:?} got someone else's result after a retry",
+            o.id
+        );
+    }
+    let r = rt.report();
+    let f = r.faults.expect("injector attached");
+    assert!(f.retries > 0, "the flaky schedule must have forced re-batching");
+    assert_eq!(r.completed, outcomes.len() as u64);
 }

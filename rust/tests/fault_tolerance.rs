@@ -1,0 +1,375 @@
+//! Chaos battery for the deterministic fault-injection subsystem.
+//!
+//! Every robustness invariant the degraded-mode serving path depends on
+//! is pinned here, mostly as randomized properties over the mini
+//! harness (`versal_gemm::util::quickcheck`):
+//!
+//! 1. **Seeded determinism** — identically-seeded fault storms replay
+//!    to byte-identical report fingerprints *and* byte-identical Chrome
+//!    traces (fault instants, degraded spans and retry events
+//!    included);
+//! 2. **Observational freeness** — a runtime with a zero-event
+//!    [`FaultPlan`] attached is byte-identical (fingerprint and trace)
+//!    to a runtime with no injector at all;
+//! 3. **Conservation under storms** — per tenant and in aggregate,
+//!    submitted = completed + failed + expired + shed + rejected, and a
+//!    retry is the same request re-queued: it never re-counts a
+//!    submission (the aggregate retry counter equals the per-tenant
+//!    sum);
+//! 4. **Deadline-aware retry** — a retry whose backoff lands at or past
+//!    the request's deadline is never launched; with backoff ≥ SLO
+//!    nothing ever completes, with a sane backoff service recovers;
+//! 5. **Recovery accounting** — a transient batch fault opens a
+//!    degraded window that closes on the next successful completion,
+//!    with a non-zero MTTR in the cycle domain;
+//! 6. **Goodput floor under device loss** — losing one of two devices
+//!    mid-run still retains goodput of at least the surviving capacity
+//!    fraction minus 10 points over post-fault submissions;
+//! 7. **Replan bit-exactness** — quarantining a cluster device and
+//!    re-planning onto the survivors reproduces the healthy pool's
+//!    logits bit-for-bit, and matches a pool built on the survivor
+//!    count from scratch.
+
+use versal_gemm::cluster::Cluster;
+use versal_gemm::coordinator::{
+    generate, ArrivalKind, Backend, BatchedBackend, ClusterGemmBackend, EchoBackend,
+    ServingConfig, ServingReport, ServingRuntime, TenantClass, WorkloadSpec,
+};
+use versal_gemm::dl::MlpSpec;
+use versal_gemm::fault::{FaultEvent, FaultInjector, FaultKind, FaultPlan, RetryPolicy};
+use versal_gemm::gemm::Precision;
+use versal_gemm::obs::{to_chrome_json, Tracer};
+use versal_gemm::util::quickcheck::{prop, Gen};
+
+const IN_DIM: usize = 4;
+
+/// Deterministic backend with a tunable per-row service time — enough
+/// load to make a device loss actually hurt, without real GEMM work.
+struct SlowBackend {
+    cycles_per_row: u64,
+}
+
+impl Backend for SlowBackend {
+    fn in_dim(&self) -> usize {
+        IN_DIM
+    }
+    fn n_classes(&self) -> usize {
+        2
+    }
+    fn infer_batch(&mut self, batch: usize, x: &[f32]) -> anyhow::Result<(Vec<f32>, u64)> {
+        let mut logits = vec![0.0f32; batch * 2];
+        for i in 0..batch {
+            logits[i * 2] = x[i * IN_DIM];
+        }
+        Ok((logits, self.cycles_per_row * batch as u64))
+    }
+}
+
+impl BatchedBackend for SlowBackend {}
+
+fn echo() -> EchoBackend {
+    EchoBackend { in_dim: IN_DIM, n_classes: 2 }
+}
+
+fn cfg() -> ServingConfig {
+    ServingConfig {
+        max_batch: 4,
+        max_wait_us: 500,
+        queue_cap: 32,
+        default_slo_us: 50_000,
+        cache_budget_bytes: 1 << 20,
+        plan_cache_budget_bytes: 1 << 20,
+        pipeline_devices: 2,
+        max_backlog_us: 10_000,
+    }
+}
+
+/// (submitted, sum of terminal states) — both per-tenant sums.
+fn ledger(r: &ServingReport) -> (u64, u64) {
+    let submitted: u64 = r.tenants.iter().map(|t| t.submitted).sum();
+    (submitted, r.completed + r.failed + r.expired + r.shed + r.rejected)
+}
+
+/// Drive `n` requests at a fixed inter-arrival gap through a runtime,
+/// then drain. Returns the runtime for report inspection.
+fn drive<B: BatchedBackend>(
+    mut rt: ServingRuntime<B>,
+    n: usize,
+    gap_us: u64,
+) -> ServingRuntime<B> {
+    let mut now = 0u64;
+    for i in 0..n {
+        now = i as u64 * gap_us;
+        let _ = rt.submit(vec![i as f32, 0.0, 0.0, 0.0], Precision::U8, now);
+        rt.tick(now);
+    }
+    rt.drain(now + 5_000);
+    rt
+}
+
+/// Property 1: identically-seeded storms replay byte-identically —
+/// fingerprint (full metrics registry, wall taint zeroed) and Chrome
+/// trace both, across randomized multi-tenant overload workloads.
+#[test]
+fn seeded_fault_storms_replay_byte_identical() {
+    prop("fault-storm-determinism", 0xFA_17_5EED, 4, |g: &mut Gen| {
+        let storm_seed = g.rng.next_u64();
+        let spec = WorkloadSpec {
+            tenants: vec![
+                TenantClass::new("gold", 1.0, 3, 10_000 + g.rng.range(0, 20_000) as u64),
+                TenantClass::new("free", 2.0, 1, 30_000 + g.rng.range(0, 40_000) as u64),
+            ],
+            kind: ArrivalKind::Bursty,
+            offered_rate: 1_000.0 + g.rng.f64() * 10_000.0,
+            burst: 4.0,
+            requests: 100,
+            seed: g.rng.next_u64(),
+        };
+        let trace = generate(&spec, IN_DIM);
+        let horizon = trace.last().map(|r| r.arrival_us).unwrap_or(1).max(1);
+        let plan = FaultPlan::storm(storm_seed, horizon, 2 + g.rng.range(0, 5), 2);
+        let run = || {
+            let tracer = Tracer::recording();
+            let mut rt = ServingRuntime::with_tenants(echo(), cfg(), spec.tenants.clone())
+                .with_faults(FaultInjector::new(plan.clone()))
+                .with_tracer(tracer.clone());
+            rt.replay(&trace);
+            (rt.fingerprint(), to_chrome_json(&tracer.snapshot()))
+        };
+        let (fp_a, tr_a) = run();
+        let (fp_b, tr_b) = run();
+        if fp_a != fp_b {
+            return Err(format!("storm fingerprints diverged:\n{fp_a}\nvs\n{fp_b}"));
+        }
+        if tr_a != tr_b {
+            return Err("storm chrome traces diverged".into());
+        }
+        Ok(())
+    });
+}
+
+/// Property 2: an empty fault plan is observationally free — same
+/// fingerprint AND same Chrome trace as no injector at all. No fault
+/// track is named, no fault metric rows appear, no instants fire.
+#[test]
+fn zero_fault_plan_is_byte_identical_to_a_fault_free_run() {
+    let run = |plan: Option<FaultPlan>| {
+        let tracer = Tracer::recording();
+        let mut rt = ServingRuntime::new(echo(), cfg()).with_tracer(tracer.clone());
+        if let Some(p) = plan {
+            rt = rt.with_faults(FaultInjector::new(p));
+        }
+        let rt = drive(rt, 40, 200);
+        (rt.fingerprint(), to_chrome_json(&tracer.snapshot()), rt.report())
+    };
+    let (fp_plain, tr_plain, rep) = run(None);
+    let (fp_empty, tr_empty, rep_empty) = run(Some(FaultPlan::none()));
+    assert!(rep.completed > 0, "baseline must serve");
+    assert_eq!(fp_plain, fp_empty, "empty plan leaked into the fingerprint");
+    assert_eq!(tr_plain, tr_empty, "empty plan leaked into the trace");
+    // The report carries the (inactive) injector, but no activity.
+    let f = rep_empty.faults.expect("injector attached");
+    assert!(!f.activity(), "zero-event plan must report zero activity");
+}
+
+/// Property 3: conservation under randomized storms — per tenant and in
+/// aggregate, every submission reaches exactly one terminal state, and
+/// the aggregate retry counter equals the per-tenant sum (a retry never
+/// re-counts a submission).
+#[test]
+fn conservation_holds_and_retries_never_double_count_under_storms() {
+    prop("fault-storm-conservation", 0xC0_4_5EED, 6, |g: &mut Gen| {
+        let n_tenants = g.rng.range(1, 4);
+        let classes: Vec<TenantClass> = (0..n_tenants)
+            .map(|i| {
+                TenantClass::new(
+                    &format!("t{i}"),
+                    0.5 + g.rng.f64() * 3.0,
+                    g.rng.range(1, 4) as u8,
+                    1_000 + g.rng.range(0, 30_000) as u64,
+                )
+            })
+            .collect();
+        let spec = WorkloadSpec {
+            tenants: classes.clone(),
+            kind: [ArrivalKind::Poisson, ArrivalKind::Bursty, ArrivalKind::Pareto]
+                [g.rng.range(0, 3)],
+            offered_rate: 500.0 + g.rng.f64() * 30_000.0,
+            burst: 4.0,
+            requests: 80 + g.rng.range(0, 80),
+            seed: g.rng.next_u64(),
+        };
+        let trace = generate(&spec, IN_DIM);
+        let horizon = trace.last().map(|r| r.arrival_us).unwrap_or(1).max(1);
+        let plan = FaultPlan::storm(g.rng.next_u64(), horizon, 1 + g.rng.range(0, 6), 2);
+        let policy = RetryPolicy {
+            max_retries: g.rng.range(0, 4) as u32,
+            backoff_us: 100 + g.rng.range(0, 2_000) as u64,
+            tenant_retry_budget: g.rng.range(1, 64) as u64,
+        };
+        let mut rt = ServingRuntime::with_tenants(echo(), cfg(), classes)
+            .with_faults(FaultInjector::new(plan).with_policy(policy));
+        rt.replay(&trace);
+        let r = rt.report();
+        let (submitted, terminal) = ledger(&r);
+        if submitted != terminal {
+            return Err(format!("aggregate leak: {submitted} submitted vs {terminal} terminal"));
+        }
+        for t in &r.tenants {
+            let term = t.completed + t.failed + t.expired + t.shed + t.rejected;
+            if t.submitted != term {
+                return Err(format!(
+                    "tenant {} leak: {} submitted vs {term} terminal",
+                    t.name, t.submitted
+                ));
+            }
+        }
+        let f = r.faults.expect("injector attached");
+        let tenant_retries: u64 = r.tenants.iter().map(|t| t.retries).sum();
+        if f.retries != tenant_retries {
+            return Err(format!(
+                "retry double-count: aggregate {} vs tenant sum {tenant_retries}",
+                f.retries
+            ));
+        }
+        if f.retry_exhausted > 0 && r.failed == 0 {
+            return Err("exhausted retries must land in `failed`".into());
+        }
+        Ok(())
+    });
+}
+
+/// Property 4a: with backoff ≥ SLO every retry would land past the
+/// deadline, so none is ever launched — nothing completes, every
+/// executed request fails on its first attempt, zero retries fire.
+#[test]
+fn retry_never_launches_past_the_deadline() {
+    let plan = FaultPlan::new(vec![FaultEvent {
+        at_us: 0,
+        kind: FaultKind::Flaky { every: 1 },
+    }]);
+    let policy = RetryPolicy { max_retries: 3, backoff_us: 60_000, tenant_retry_budget: 1_024 };
+    let rt = drive(
+        ServingRuntime::new(echo(), cfg())
+            .with_faults(FaultInjector::new(plan).with_policy(policy)),
+        24,
+        200,
+    );
+    let r = rt.report();
+    assert_eq!(r.completed, 0, "a retry past the deadline must never launch");
+    let (submitted, terminal) = ledger(&r);
+    assert_eq!(submitted, terminal, "ledger must balance even when everything fails");
+    let f = r.faults.expect("injector attached");
+    assert_eq!(f.retries, 0, "backoff ≥ SLO admits no retry");
+    assert_eq!(f.retry_exhausted, r.failed, "every failure exhausted its (empty) retry room");
+}
+
+/// Property 4b: the same all-batches-fail plan with a sane backoff and
+/// only every-2nd-batch failing recovers: completions resume, retries
+/// fire, and the ledger still balances.
+#[test]
+fn bounded_retry_recovers_when_backoff_fits_the_deadline() {
+    let plan = FaultPlan::new(vec![FaultEvent {
+        at_us: 0,
+        kind: FaultKind::Flaky { every: 2 },
+    }]);
+    let policy = RetryPolicy { max_retries: 3, backoff_us: 400, tenant_retry_budget: 1_024 };
+    let rt = drive(
+        ServingRuntime::new(echo(), cfg())
+            .with_faults(FaultInjector::new(plan).with_policy(policy)),
+        24,
+        200,
+    );
+    let r = rt.report();
+    assert!(r.completed > 0, "service must recover between flaky batches");
+    let (submitted, terminal) = ledger(&r);
+    assert_eq!(submitted, terminal);
+    let f = r.faults.expect("injector attached");
+    assert!(f.retries > 0, "failed batches must re-enter forming");
+    assert!(f.transient_failures > 0);
+}
+
+/// Property 5: a transient batch fault opens a degraded window that the
+/// next successful completion closes — recoveries and a cycle-domain
+/// MTTR are accounted, and every request still completes.
+#[test]
+fn transient_fault_recovers_and_accounts_mttr() {
+    let plan = FaultPlan::new(vec![FaultEvent {
+        at_us: 0,
+        kind: FaultKind::Transient { count: 1 },
+    }]);
+    let rt = drive(
+        ServingRuntime::new(echo(), cfg()).with_faults(FaultInjector::new(plan)),
+        16,
+        200,
+    );
+    let r = rt.report();
+    assert_eq!(r.completed, 16, "one transient fault must not lose requests");
+    assert_eq!(r.failed, 0);
+    let f = r.faults.expect("injector attached");
+    assert_eq!(f.transient_failures, 1);
+    assert!(f.retries >= 1, "the failed batch's requests re-entered forming");
+    assert!(f.recoveries >= 1, "the degraded window must close");
+    assert!(f.mttr_cycles > 0, "recovery takes at least the retry backoff, in cycles");
+}
+
+/// Property 6: losing one of two devices mid-run keeps goodput over
+/// post-fault submissions at or above the surviving capacity fraction
+/// minus 10 points, and the degraded-capacity admission signal fires
+/// (the report records the shrunken capacity).
+#[test]
+fn device_loss_keeps_goodput_above_the_capacity_floor() {
+    // ~200 µs of work per request on 2 devices, offered every 150 µs:
+    // busy but below the knee while healthy, so the fault is what hurts.
+    let rt = drive(
+        ServingRuntime::new(SlowBackend { cycles_per_row: 200_000 }, cfg())
+            .with_faults(FaultInjector::new(FaultPlan::single_device_loss(1, 2_000))),
+        64,
+        150,
+    );
+    let r = rt.report();
+    let (submitted, terminal) = ledger(&r);
+    assert_eq!(submitted, terminal, "ledger must balance under device loss");
+    assert!(r.completed > 0, "the surviving device must keep serving");
+    let f = r.faults.expect("injector attached");
+    assert_eq!(f.injected, 1);
+    assert_eq!(f.first_fault_us, Some(2_000));
+    assert!((f.capacity_fraction - 0.5).abs() < 1e-9, "1 of 2 devices survives");
+    assert!(f.submitted_after_fault > 0, "the trace extends past the fault");
+    let floor = (f.capacity_fraction - 0.10).max(0.0);
+    let goodput = f.goodput_after_fault();
+    assert!(
+        goodput >= floor,
+        "goodput after fault {goodput:.3} fell below the capacity floor {floor:.3}"
+    );
+}
+
+/// Property 7: quarantining a device re-plans bit-exactly — the
+/// survivor pool reproduces the healthy logits, and matches a pool of
+/// the survivor count built from scratch (same model seed).
+#[test]
+fn quarantine_replans_bit_exactly_against_the_healthy_pool() {
+    let spec = MlpSpec { dims: vec![16, 12, 4] };
+    let x: Vec<f32> = (0..3 * 16).map(|i| (i as f32 * 0.31).sin()).collect();
+
+    let mut pool3 = ClusterGemmBackend::new(
+        Cluster::vc1902_pool(3, 4).unwrap(),
+        spec.clone(),
+        7,
+    )
+    .unwrap();
+    let (healthy, _) = pool3.infer_batch(3, &x).unwrap();
+
+    let cost = pool3.quarantine_device(1).unwrap();
+    assert!(cost.total() > 0, "recovery is priced in cycles, not free");
+    let (degraded, _) = pool3.infer_batch(3, &x).unwrap();
+    assert_eq!(healthy, degraded, "replanned logits must be bit-identical to healthy");
+    assert_eq!(pool3.cluster().devices.len(), 2, "the failed device left the pool");
+
+    // Same weights served on 2 devices from scratch — the quarantined
+    // pool must be indistinguishable from a pool that never saw device 1.
+    let mut pool2 =
+        ClusterGemmBackend::new(Cluster::vc1902_pool(2, 4).unwrap(), spec, 7).unwrap();
+    let (fresh, _) = pool2.infer_batch(3, &x).unwrap();
+    assert_eq!(degraded, fresh, "quarantine must converge to the from-scratch plan");
+}

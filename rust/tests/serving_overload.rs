@@ -497,3 +497,85 @@ fn pooled_backend_fingerprint_and_trace_match_sequential() {
         assert_eq!(tr, trace_seq, "{workers}-worker pooled chrome trace diverged");
     }
 }
+
+/// Property 7: overload invariants survive a concurrent fault storm.
+/// Faults compose with priority shedding — the conservation ledger
+/// still balances per tenant (retries never re-count a submission),
+/// identically-seeded runs stay byte-identical, and no tenant ever
+/// exceeds its lifetime retry budget, however the storm lands.
+#[test]
+fn fault_storm_composes_with_overload_shedding() {
+    use versal_gemm::fault::{FaultInjector, FaultPlan, RetryPolicy};
+    prop("overload-x-faults", 0x0F_F10AD, 4, |g: &mut Gen| {
+        let classes = vec![
+            TenantClass::new("gold", 1.0, 3, 20_000),
+            TenantClass::new("free", 1.0, 1, 20_000),
+        ];
+        let spec = WorkloadSpec {
+            tenants: classes.clone(),
+            kind: all_kinds()[g.rng.range(0, 5)],
+            // Past the knee for the slow backend: shedding is active.
+            offered_rate: 3_000.0 + g.rng.f64() * 9_000.0,
+            burst: 4.0,
+            requests: 150,
+            seed: g.rng.next_u64(),
+        };
+        let trace = generate(&spec, IN_DIM);
+        let horizon = trace.last().map(|r| r.arrival_us).unwrap_or(1).max(1);
+        let plan = FaultPlan::storm(g.rng.next_u64(), horizon, 3, 2);
+        let run = || {
+            let mut rt = ServingRuntime::with_tenants(
+                SlowBackend { cycles_per_row: 400_000 },
+                ServingConfig {
+                    max_batch: 4,
+                    max_wait_us: 500,
+                    queue_cap: 16,
+                    default_slo_us: 20_000,
+                    cache_budget_bytes: 1 << 20,
+                    plan_cache_budget_bytes: 1 << 20,
+                    pipeline_devices: 2,
+                    max_backlog_us: 10_000,
+                },
+                classes.clone(),
+            )
+            .with_faults(FaultInjector::new(plan.clone()).with_policy(RetryPolicy {
+                max_retries: 2,
+                backoff_us: 300,
+                tenant_retry_budget: 32,
+            }));
+            rt.replay(&trace);
+            (rt.fingerprint(), rt.report())
+        };
+        let (fp_a, r) = run();
+        let (fp_b, _) = run();
+        if fp_a != fp_b {
+            return Err("storm-under-overload fingerprints diverged".into());
+        }
+        let submitted: u64 = r.tenants.iter().map(|t| t.submitted).sum();
+        let terminal = r.completed + r.failed + r.expired + r.shed + r.rejected;
+        if submitted != terminal {
+            return Err(format!("ledger leak: {submitted} submitted vs {terminal} terminal"));
+        }
+        for t in &r.tenants {
+            let term = t.completed + t.failed + t.expired + t.shed + t.rejected;
+            if t.submitted != term {
+                return Err(format!("tenant {} leak under storm+overload", t.name));
+            }
+        }
+        let f = r.faults.expect("injector attached");
+        let tenant_retries: u64 = r.tenants.iter().map(|t| t.retries).sum();
+        if f.retries != tenant_retries {
+            return Err(format!(
+                "retries double-counted under overload: {} vs {tenant_retries}",
+                f.retries
+            ));
+        }
+        // The retry budget is a hard cap per tenant, storm or not.
+        for t in &r.tenants {
+            if t.retries > 32 {
+                return Err(format!("tenant {} blew its retry budget: {}", t.name, t.retries));
+            }
+        }
+        Ok(())
+    });
+}
